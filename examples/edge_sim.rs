@@ -1,0 +1,79 @@
+//! Edge-vs-cloud exploration on the calibrated hwsim (the paper's
+//! motivating trade-off: serving across "mobile edge devices to cloud
+//! GPU clusters").
+//!
+//! Sweeps batch size and sequence length on every rig, reporting where
+//! each device saturates, the energy-per-token gap, and the batch size
+//! at which the A6000's throughput/watt overtakes the Jetsons.
+//!
+//! Run: `cargo run --release --example edge_sim`
+
+use anyhow::Result;
+
+use elana::hwsim::{self, device, Workload};
+use elana::models;
+
+fn main() -> Result<()> {
+    let llama8b = models::lookup("llama-3.1-8b").unwrap();
+    let llama1b = models::lookup("llama-3.2-1b").unwrap();
+
+    // ---- 1. same model across devices ---------------------------------
+    println!("== Llama-3.1-8B, bsize=1, L=512+512 across devices ==");
+    println!("{:<12} {:>10} {:>10} {:>10} {:>12} {:>10}",
+             "device", "TTFT ms", "TPOT ms", "J/tok", "tok/s", "tok/s/W");
+    for rig in device::all_rigs() {
+        let sim = hwsim::simulate(&llama8b, &rig,
+                                  &Workload::new(1, 512, 512));
+        let tps = 1.0 / sim.tpot.seconds;
+        println!("{:<12} {:>10.2} {:>10.2} {:>10.3} {:>12.1} {:>10.3}",
+                 rig.name(), sim.ttft.seconds * 1e3,
+                 sim.tpot.seconds * 1e3, sim.tpot.joules, tps,
+                 tps / sim.tpot.watts);
+    }
+
+    // ---- 2. batch sweep: throughput scaling per device -----------------
+    println!("\n== batch sweep (L=512+512): tokens/s ==");
+    let batches = [1usize, 2, 4, 8, 16, 32, 64];
+    print!("{:<12}", "device");
+    for b in batches {
+        print!(" {:>9}", format!("b={b}"));
+    }
+    println!();
+    for rig in device::all_rigs() {
+        print!("{:<12}", rig.name());
+        for b in batches {
+            let sim = hwsim::simulate(&llama8b, &rig,
+                                      &Workload::new(b, 512, 512));
+            print!(" {:>9.0}", b as f64 / sim.tpot.seconds);
+        }
+        println!();
+    }
+
+    // ---- 3. energy crossover: J per 1k generated tokens ---------------
+    println!("\n== energy per 1k tokens (Llama-3.1-8B vs Llama-3.2-1B) ==");
+    println!("{:<12} {:>14} {:>14}", "device", "8B J/1k-tok", "1B J/1k-tok");
+    for rig in device::all_rigs() {
+        let j8 = hwsim::simulate(&llama8b, &rig,
+                                 &Workload::new(1, 256, 256))
+            .tpot.joules * 1000.0;
+        let j1 = hwsim::simulate(&llama1b, &rig,
+                                 &Workload::new(1, 256, 256))
+            .tpot.joules * 1000.0;
+        println!("{:<12} {:>14.1} {:>14.1}", rig.name(), j8, j1);
+    }
+
+    // ---- 4. memory feasibility on the 8 GB edge board ------------------
+    println!("\n== Orin Nano 8GB feasibility (weights + cache <= 8 GB) ==");
+    for name in ["llama-3.2-1b", "qwen2.5-1.5b", "llama-3.1-8b"] {
+        let arch = models::lookup(name).unwrap();
+        let need = models::size::model_bytes(&arch)
+            + models::cache_bytes(&arch, 1, 4096);
+        let fits = need <= 8_000_000_000;
+        println!("  {:<16} needs {:>7.2} GB at L=4096  -> {}",
+                 arch.display_name, need as f64 / 1e9,
+                 if fits { "fits" } else { "DOES NOT FIT" });
+    }
+
+    println!("\nedge_sim OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Regenerate every paper table in one run (Tables 2, 3, 4).
+//!
+//! Prints each table in the paper's layout next to the paper's reported
+//! numbers so the deltas are visible; EXPERIMENTS.md records a captured
+//! run. Run: `cargo run --release --example profile_suite`
+
+use anyhow::Result;
+
+use elana::config;
+use elana::profiler::{self, report};
+use elana::util::units::MemUnit;
+
+/// Paper values for Table 3 (same row order as config::table3_suite).
+const PAPER_TABLE3: [[f64; 6]; 9] = [
+    [94.30, 25.91, 24.84, 6.80, 12859.85, 3533.09],
+    [88.41, 24.29, 23.15, 6.44, 12073.26, 3343.91],
+    [87.72, 24.00, 24.33, 6.67, 12593.76, 3437.56],
+    [1325.05, 476.50, 31.29, 10.94, 17329.35, 6131.45],
+    [1192.98, 248.89, 26.48, 7.73, 14823.56, 5255.14],
+    [1337.83, 478.82, 39.33, 13.86, 21300.36, 7499.34],
+    [2788.39, 1044.31, 36.16, 12.72, 39935.79, 14219.00],
+    [2454.50, 887.11, 28.66, 10.03, 32031.05, 11432.51],
+    [2752.54, 1007.14, 39.40, 13.94, 42658.35, 15001.54],
+];
+
+/// Paper values for Table 4 (same row order as config::table4_suite).
+const PAPER_TABLE4: [[f64; 6]; 13] = [
+    [142.92, 0.42, 48.73, 0.06, 11601.61, 47.30],
+    [249.89, 0.80, 60.66, 0.08, 14930.47, 60.21],
+    [278.0, 1.12, 48.69, 0.06, 23590.22, 98.61],
+    [359.30, 1.53, 61.43, 0.08, 30177.97, 123.94],
+    [147.49, 7.40, 97.60, 1.27, 32105.50, 633.19],
+    [115.27, 6.39, 61.22, 0.88, 30875.60, 610.49],
+    [147.29, 7.08, 101.73, 1.29, 33671.79, 655.17],
+    [2154.89, 140.83, 115.51, 1.87, 42317.18, 1176.06],
+    [1879.78, 127.62, 109.18, 1.63, 35599.98, 930.34],
+    [2008.94, 127.15, 140.08, 2.26, 53096.56, 1287.82],
+    [4611.26, 296.29, 128.50, 2.37, 100605.99, 3041.79],
+    [3848.15, 261.63, 117.19, 1.84, 78470.34, 2168.19],
+    [4388.04, 266.26, 141.01, 2.35, 104250.55, 2617.65],
+];
+
+const METRICS: [&str; 6] = ["TTFT", "J/Prom.", "TPOT", "J/Tok.", "TTLT",
+                            "J/Req."];
+
+fn run_suite(suite: &config::Suite, paper: &[[f64; 6]]) -> Result<()> {
+    println!("\n================ {} ================", suite.name);
+    let mut ratios: Vec<f64> = Vec::new();
+    for (spec, want) in suite.specs.iter().zip(paper) {
+        let o = profiler::profile_simulated(spec)?;
+        println!("\n{} on {}  [{}]", o.model, o.device, o.workload.label());
+        let got = o.row();
+        for i in 0..6 {
+            let ratio = got[i] / want[i];
+            ratios.push(ratio);
+            println!("  {:<8} ours {:>10.2}   paper {:>10.2}   ratio {:>5.2}x",
+                     METRICS[i], got[i], want[i], ratio);
+        }
+    }
+    let gm = geomean(&ratios);
+    println!("\ngeometric-mean ours/paper ratio over {} cells: {:.2}x",
+             ratios.len(), gm);
+    Ok(())
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+fn main() -> Result<()> {
+    // ---- Table 2 ------------------------------------------------------
+    println!("================ Table 2 (size) ================");
+    let rows = profiler::size_report(&profiler::size::TABLE2_MODELS,
+                                     &profiler::size::TABLE2_POINTS)?;
+    print!("{}", report::render_size_table(
+        &rows, &profiler::size::TABLE2_POINTS, MemUnit::Si));
+    println!("(paper: Llama 16.06/0.13/17.18/34.36, \
+              Qwen 15.23/0.06/7.52/15.03, Nemotron 16.20/0.05/3.32/6.64)");
+
+    // ---- Tables 3 & 4 --------------------------------------------------
+    run_suite(&config::table3_suite(), &PAPER_TABLE3)?;
+    run_suite(&config::table4_suite(), &PAPER_TABLE4)?;
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Batched-request serving on the real engine (the TTLT workload of
+//! §2.3: "measure the end-to-end latency of processing a batch of
+//! requests"), driven through the coordinator's queue + dynamic batcher.
+//!
+//! A Poisson request trace feeds the bounded queue from a producer
+//! thread while the serving loop forms compiled-shape batches and runs
+//! them on the PJRT engine; the report decomposes latency into queue
+//! wait / TTFT / TTLT and shows the batching efficiency.
+//!
+//! Run: `cargo run --release --example serve_profile [n_requests] [rps]`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use elana::coordinator::{self, BatchPolicy, RequestQueue};
+use elana::engine::InferenceEngine;
+use elana::runtime::Manifest;
+use elana::util::stats::Summary;
+use elana::workload::RequestTrace;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().map(|s| s.parse()).transpose()?
+        .unwrap_or(24);
+    let rate: f64 = args.get(1).map(|s| s.parse()).transpose()?
+        .unwrap_or(20.0);
+
+    let manifest = Manifest::load_default()?;
+    let model = "elana-tiny";
+    let mut engine = InferenceEngine::load_precompiled(&manifest, model)?;
+    let mm = manifest.model(model)?;
+
+    let policy = BatchPolicy {
+        allowed_batches: mm.batch_sizes(),
+        prompt_buckets: mm.prompt_buckets(1),
+        max_seq_len: mm.max_seq_len,
+        max_wait_s: 0.02,
+    };
+    println!("== serve_profile: {n_requests} requests @ ~{rate} rps ==");
+    println!("model {model}: batches {:?}, prompt buckets {:?}",
+             policy.allowed_batches, policy.prompt_buckets);
+
+    let queue = Arc::new(RequestQueue::new(128));
+    let trace = RequestTrace::poisson(n_requests, rate, 8, 32, 8,
+                                      mm.vocab_size, 123);
+    let feeder = coordinator::server::feed_trace(queue.clone(), trace, 1.0);
+    let metrics = coordinator::serve(&mut engine, &queue, &policy)?;
+    let accepted = feeder.join().expect("feeder thread");
+
+    println!("\naccepted {accepted}, completed {}",
+             metrics.completions.len());
+    assert_eq!(accepted, metrics.completions.len(),
+               "every accepted request must complete");
+
+    let ms = |xs: Vec<f64>| Summary::from_samples(&xs).unwrap();
+    let waits = ms(metrics.completions.iter().map(|c| c.queue_wait_s * 1e3)
+                   .collect());
+    let ttfts = ms(metrics.completions.iter().map(|c| c.ttft_s * 1e3)
+                   .collect());
+    let ttlts = ms(metrics.completions.iter().map(|c| c.ttlt_s * 1e3)
+                   .collect());
+
+    println!("\nper-request latency decomposition (ms):");
+    println!("  {:<12} {:>9} {:>9} {:>9} {:>9}", "phase", "mean", "p50",
+             "p90", "max");
+    for (name, s) in [("queue wait", &waits), ("TTFT", &ttfts),
+                      ("TTLT", &ttlts)] {
+        println!("  {:<12} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+                 name, s.mean, s.p50, s.p90, s.max);
+    }
+
+    println!("\nserver totals:");
+    println!("  batches formed:     {}", metrics.batches_formed);
+    println!("  throughput:         {:.2} req/s   {:.1} tok/s",
+             metrics.throughput_rps(), metrics.tokens_per_s());
+    println!("  engine busy:        {:.1}%",
+             metrics.busy_s / metrics.wall_s * 100.0);
+    println!("  mean padding waste: {:.1}%",
+             metrics.mean_padding_waste * 100.0);
+    println!("\nserve_profile OK");
+    Ok(())
+}

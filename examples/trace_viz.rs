@@ -1,0 +1,88 @@
+//! Figure 1 reproduction: kernel-level traces exported for Perfetto.
+//!
+//! Produces two Chrome-trace JSON files:
+//!   * `trace_real.json` — real engine phases measured on the PJRT CPU
+//!     runtime (prefill + decode steps of elana-tiny);
+//!   * `trace_sim.json` — the simulated Llama-3.1-8B/A6000 decode
+//!     timeline with per-kernel spans (the paper's Figure 1 view).
+//! Both load in https://ui.perfetto.dev; the HTA-style summary that the
+//! paper pairs with the trace is printed for each.
+//!
+//! Run: `cargo run --release --example trace_viz [out_dir]`
+
+use anyhow::Result;
+
+use elana::engine::InferenceEngine;
+use elana::hwsim::{self, device, Workload};
+use elana::models;
+use elana::runtime::Manifest;
+use elana::trace::{self, TraceRecorder};
+use elana::workload::PromptGen;
+
+fn main() -> Result<()> {
+    let out_dir = std::env::args().nth(1)
+        .unwrap_or_else(|| "target".to_string());
+    std::fs::create_dir_all(&out_dir)?;
+
+    // ---- real engine trace -------------------------------------------
+    let manifest = Manifest::load_default()?;
+    let mut engine = InferenceEngine::load_precompiled(&manifest,
+                                                       "elana-tiny")?;
+    let recorder = TraceRecorder::new();
+    let mut gen = PromptGen::new(engine.model().vocab_size(), 3);
+    let prompt = gen.batch(1, 16);
+    {
+        let _span = recorder.span("generate[16+8]", "request", 0);
+        // phase spans come from the engine's own timings
+        let r = engine.generate(&prompt, 8)?;
+        let mut t_us = 0.0;
+        recorder.record("prefill", "phase", 1, t_us,
+                        r.ttft.as_secs_f64() * 1e6);
+        t_us += r.ttft.as_secs_f64() * 1e6;
+        for (i, st) in r.step_times.iter().enumerate() {
+            recorder.record(format!("decode[{i}]"), "phase", 1, t_us,
+                            st.as_secs_f64() * 1e6);
+            t_us += st.as_secs_f64() * 1e6;
+        }
+    }
+    let real_path = format!("{out_dir}/trace_real.json");
+    trace::perfetto::write_chrome_trace(
+        &recorder, "ELANA real engine (elana-tiny, PJRT CPU)", &real_path)?;
+    println!("wrote {real_path} ({} events)", recorder.len());
+    print!("{}", trace::analyze(&recorder).render(5));
+
+    // ---- simulated paper-scale kernel trace ---------------------------
+    let arch = models::lookup("llama-3.1-8b").unwrap();
+    let rig = device::Rig::single(device::a6000());
+    let w = Workload::new(1, 512, 512);
+    let sim = hwsim::simulate(&arch, &rig, &w);
+
+    let recorder = TraceRecorder::new();
+    recorder.record("prefill", "phase", 0, 0.0, sim.ttft.seconds * 1e6);
+    recorder.import_kernels(
+        &hwsim::synthesize_kernels(
+            &arch, &rig,
+            hwsim::prefill_cost(&arch, w.batch, w.prompt_len),
+            sim.ttft.seconds),
+        0.0, 1);
+    let mut t = sim.ttft.seconds;
+    for (i, &step) in sim.step_seconds.iter().enumerate().take(4) {
+        recorder.record(format!("decode[{i}]"), "phase", 0, t * 1e6,
+                        step * 1e6);
+        recorder.import_kernels(
+            &hwsim::synthesize_kernels(
+                &arch, &rig,
+                hwsim::decode_cost(&arch, w.batch, w.prompt_len + i),
+                step),
+            t * 1e6, 1);
+        t += step;
+    }
+    let sim_path = format!("{out_dir}/trace_sim.json");
+    trace::perfetto::write_chrome_trace(
+        &recorder, "ELANA sim (Llama-3.1-8B, A6000)", &sim_path)?;
+    println!("\nwrote {sim_path} ({} events)", recorder.len());
+    print!("{}", trace::analyze(&recorder).render(8));
+
+    println!("\ntrace_viz OK — open the JSON files in ui.perfetto.dev");
+    Ok(())
+}

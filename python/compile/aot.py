@@ -1,0 +1,304 @@
+"""AOT pipeline: lower the L2 model to HLO *text* + weight sidecars.
+
+Run once by ``make artifacts`` (python is never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces, per model config and per (kind, batch, prompt_len) point:
+
+* ``<model>.<kind>.b<batch>[.l<len>].hlo.txt`` — HLO text of the jitted
+  function. Text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto
+  with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+  published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``);
+  the text parser reassigns ids and round-trips cleanly.
+* ``<model>.weights.bin`` — all weights concatenated, little-endian f32,
+  in ``model.weight_specs`` order (the Rust runtime feeds them back
+  positionally as the leading executable arguments).
+* ``manifest.json`` — the contract consumed by ``rust/src/runtime``:
+  configs, weight table (name/shape/offset), executable table
+  (file/inputs/outputs), cache specs.
+
+Argument convention for every executable:
+    [w_0 .. w_{n-1}, *inputs]  ->  tuple(outputs)
+where inputs/outputs are listed (name, shape, dtype) in the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+MANIFEST_VERSION = 2
+
+# (batch, prompt_len) grid per model; decode is compiled per batch.
+DEFAULT_GRID = {
+    "elana-tiny": {"batches": [1, 4], "prompt_lens": [16, 64]},
+    "elana-tiny-hybrid": {"batches": [1, 4], "prompt_lens": [16, 64]},
+    "elana-small": {"batches": [1, 4], "prompt_lens": [16, 64]},
+}
+# Dev configs cap sequences at 128 (prompt<=64 + gen<=64), the scaled-down
+# analogue of the paper's 512+512 workload.
+DEV_MAX_SEQ_LEN = 128
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    return_tuple=False is used for the flat-state executables: their
+    single-array root lets the Rust runtime execute at the PJRT buffer
+    level (tuple-rooted executables cannot be consumed by execute_b in
+    xla_extension 0.5.1 — see EXPERIMENTS.md §Perf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {jnp.dtype(jnp.float32): "f32", jnp.dtype(jnp.int32): "i32",
+            jnp.dtype(jnp.bfloat16): "bf16"}[jnp.dtype(dt)]
+
+
+def _io_entry(name: str, shape, dtype) -> dict:
+    return {"name": name, "shape": [int(x) for x in shape],
+            "dtype": _dtype_tag(dtype)}
+
+
+def dev_config(base: M.ModelConfig) -> M.ModelConfig:
+    return dataclasses.replace(base, max_seq_len=DEV_MAX_SEQ_LEN)
+
+
+def output_entries(cfg: M.ModelConfig, batch: int) -> list[dict]:
+    outs = [_io_entry("logits", (batch, cfg.vocab_size), jnp.float32)]
+    for name, shape, dt in M.cache_specs(cfg, batch):
+        outs.append(_io_entry(name, shape, dt))
+    return outs
+
+
+def lower_prefill(cfg: M.ModelConfig, weights, batch: int,
+                  prompt_len: int) -> str:
+    wspecs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+    tok = jax.ShapeDtypeStruct((batch, prompt_len), jnp.int32)
+
+    def fn(ws, tokens):
+        return M.prefill(cfg, ws, tokens)
+
+    return to_hlo_text(jax.jit(fn).lower(wspecs, tok))
+
+
+def lower_prefill_flat(cfg: M.ModelConfig, weights, batch: int,
+                       prompt_len: int) -> str:
+    wspecs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+    tok = jax.ShapeDtypeStruct((batch, prompt_len), jnp.int32)
+
+    def fn(ws, tokens):
+        return M.prefill_flat(cfg, ws, tokens)
+
+    return to_hlo_text(jax.jit(fn).lower(wspecs, tok), return_tuple=False)
+
+
+def lower_decode_flat(cfg: M.ModelConfig, weights, batch: int) -> str:
+    wspecs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    state = jax.ShapeDtypeStruct((M.flat_state_len(cfg, batch),),
+                                 jnp.float32)
+
+    def fn(ws, token, p, st):
+        return M.decode_flat(cfg, ws, token, p, st)
+
+    return to_hlo_text(jax.jit(fn).lower(wspecs, tok, pos, state),
+                       return_tuple=False)
+
+
+def lower_decode(cfg: M.ModelConfig, weights, batch: int) -> str:
+    wspecs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    cspecs = [jax.ShapeDtypeStruct(s, d) for _, s, d in
+              M.cache_specs(cfg, batch)]
+
+    def fn(ws, token, p, *caches):
+        return M.decode_step(cfg, ws, token, p, *caches)
+
+    return to_hlo_text(jax.jit(fn).lower(wspecs, tok, pos, *cspecs))
+
+
+def write_weights(path: str, cfg: M.ModelConfig, weights) -> list[dict]:
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for (name, shape), w in zip(M.weight_specs(cfg), weights):
+            arr = np.asarray(w, dtype=np.float32)
+            assert arr.shape == tuple(shape), (name, arr.shape, shape)
+            raw = arr.tobytes()  # C-order little-endian f32
+            f.write(raw)
+            table.append({"name": name, "shape": list(shape),
+                          "dtype": "f32", "offset": offset,
+                          "nbytes": len(raw)})
+            offset += len(raw)
+    return table
+
+
+def _sources_digest() -> str:
+    """Digest of the compile-path sources; lets `make artifacts` no-op."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for rel in sorted(["model.py", "aot.py", "kernels/attention.py",
+                       "kernels/ssm.py", "kernels/ref.py"]):
+        with open(os.path.join(base, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def golden_outputs(cfg: M.ModelConfig, weights) -> dict:
+    """Reference numerics for the Rust runtime's cross-check test.
+
+    Runs prefill on a fixed token sequence and one decode step, recording
+    the first GOLDEN_N logits of each. The Rust integration test executes
+    the compiled artifacts with the same inputs and asserts allclose —
+    the end-to-end numerical contract between python-jax and rust-PJRT.
+    """
+    golden_n = 8
+    prompt_len = 16
+    tokens = jnp.arange(prompt_len, dtype=jnp.int32)[None, :] % cfg.vocab_size
+    out = M.prefill(cfg, weights, tokens)
+    logits_p = np.asarray(out[0][0, :golden_n], np.float64)
+    next_tok = jnp.array([7], dtype=jnp.int32)
+    dout = M.decode_step(cfg, weights, next_tok, jnp.int32(prompt_len),
+                         *out[1:])
+    logits_d = np.asarray(dout[0][0, :golden_n], np.float64)
+    return {
+        "prompt_len": prompt_len,
+        "prompt_tokens": [int(t) for t in np.asarray(tokens[0])],
+        "decode_token": 7,
+        "prefill_logits": [float(x) for x in logits_p],
+        "decode_logits": [float(x) for x in logits_d],
+    }
+
+
+def build_model(cfg: M.ModelConfig, out_dir: str, grid: dict,
+                seed: int = 0) -> dict:
+    weights = M.init_weights(cfg, seed=seed)
+    wfile = f"{cfg.name}.weights.bin"
+    wtable = write_weights(os.path.join(out_dir, wfile), cfg, weights)
+
+    executables = []
+    for batch in grid["batches"]:
+        for lp in grid["prompt_lens"]:
+            fname = f"{cfg.name}.prefill.b{batch}.l{lp}.hlo.txt"
+            print(f"  lowering {fname}", flush=True)
+            hlo = lower_prefill(cfg, weights, batch, lp)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            executables.append({
+                "kind": "prefill", "batch": batch, "prompt_len": lp,
+                "file": fname,
+                "inputs": [_io_entry("tokens", (batch, lp), jnp.int32)],
+                "outputs": output_entries(cfg, batch),
+            })
+        fname = f"{cfg.name}.decode.b{batch}.hlo.txt"
+        print(f"  lowering {fname}", flush=True)
+        hlo = lower_decode(cfg, weights, batch)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        executables.append({
+            "kind": "decode", "batch": batch, "prompt_len": None,
+            "file": fname,
+            "inputs": ([_io_entry("token", (batch,), jnp.int32),
+                        _io_entry("pos", (), jnp.int32)] +
+                       [_io_entry(n, s, d)
+                        for n, s, d in M.cache_specs(cfg, batch)]),
+            "outputs": output_entries(cfg, batch),
+        })
+        # flat-state fast-path executables (single-array I/O; the Rust
+        # runtime threads one persistent device buffer through decode)
+        n_flat = M.flat_state_len(cfg, batch)
+        for lp in grid["prompt_lens"]:
+            fname = f"{cfg.name}.prefill_flat.b{batch}.l{lp}.hlo.txt"
+            print(f"  lowering {fname}", flush=True)
+            hlo = lower_prefill_flat(cfg, weights, batch, lp)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            executables.append({
+                "kind": "prefill_flat", "batch": batch, "prompt_len": lp,
+                "file": fname,
+                "inputs": [_io_entry("tokens", (batch, lp), jnp.int32)],
+                "outputs": [_io_entry("state", (n_flat,), jnp.float32)],
+            })
+        fname = f"{cfg.name}.decode_flat.b{batch}.hlo.txt"
+        print(f"  lowering {fname}", flush=True)
+        hlo = lower_decode_flat(cfg, weights, batch)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        executables.append({
+            "kind": "decode_flat", "batch": batch, "prompt_len": None,
+            "file": fname,
+            "inputs": [_io_entry("token", (batch,), jnp.int32),
+                       _io_entry("pos", (), jnp.int32),
+                       _io_entry("state", (n_flat,), jnp.float32)],
+            "outputs": [_io_entry("state", (n_flat,), jnp.float32)],
+        })
+
+    print("  computing golden outputs", flush=True)
+    return {
+        "config": {**dataclasses.asdict(cfg)},
+        "param_count": M.param_count(cfg),
+        "param_bytes_f32": M.param_count(cfg) * 4,
+        "weights_file": wfile,
+        "weights": wtable,
+        "cache": [_io_entry(n, s, d) for n, s, d in M.cache_specs(
+            cfg, grid["batches"][0])],
+        "executables": executables,
+        "golden": golden_outputs(cfg, weights),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(DEFAULT_GRID))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    digest = _sources_digest()
+
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if (old.get("sources_digest") == digest and
+                old.get("version") == MANIFEST_VERSION and
+                set(old.get("models", {})) >= set(args.models)):
+            print(f"artifacts up-to-date ({manifest_path}); nothing to do")
+            return
+
+    manifest = {"version": MANIFEST_VERSION, "sources_digest": digest,
+                "seed": args.seed, "models": {}}
+    for name in args.models:
+        cfg = dev_config(M.CONFIGS[name])
+        print(f"building {name} "
+              f"({M.param_count(cfg)/1e6:.2f}M params)", flush=True)
+        manifest["models"][name] = build_model(
+            cfg, args.out, DEFAULT_GRID[name], seed=args.seed)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""L1: tiled flash-attention Pallas kernel (TPU-style, interpret=True).
+
+The paper (ELANA) profiles CUDA LLMs whose prefill hot-spot is
+flash-attention. Per DESIGN.md §Hardware-Adaptation we do not port the
+CUDA threadblock structure; the kernel is organized around the TPU memory
+hierarchy instead:
+
+* grid = (batch*heads, q_tiles, k_tiles) — one program instance owns a
+  (block_q, head_dim) query tile resident in VMEM; k_tiles is the
+  innermost grid axis so the VMEM scratch accumulator carries across the
+  K/V stream of a fixed query tile.
+* K/V are streamed HBM→VMEM in (block_k, head_dim) tiles via BlockSpec —
+  the schedule CUDA flash-attention expressed with threadblocks + shared
+  memory staging.
+* the online-softmax running statistics (m, l) and the fp32 output
+  accumulator live in VMEM scratch (`pltpu.VMEM`), the analogue of
+  registers/shared memory in the CUDA kernel.
+* tiles default to 128×128 so the score contraction maps onto the MXU
+  systolic array; bf16 inputs are upcast to fp32 per-tile (bf16 matmul,
+  fp32 accumulate — MXU-native, not tensor-core WMMA).
+
+`interpret=True` is mandatory: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Correctness is asserted
+against `ref.naive_attention` by python/tests (hypothesis sweeps shapes
+and dtypes).
+
+Interpret-mode gotcha encoded below: out-of-range BlockSpec tiles are
+padded with *uninitialized* memory, so padded V rows must be zeroed
+explicitly — a masked probability of 0.0 times a NaN pad is still NaN.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+# Large-but-finite mask value. -inf breaks the online-softmax rescale when
+# an entire tile is masked (exp(-inf - -inf) = NaN); production kernels use
+# a finite sentinel and so do we.
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  sm_scale: float, causal: bool, seq_q: int, seq_k: int,
+                  block_q: int, block_k: int, num_k_tiles: int):
+    """One grid step: (block_q, d) query tile × (block_k, d) K/V tile."""
+    q_tile = pl.program_id(1)
+    k_tile = pl.program_id(2)
+
+    @pl.when(k_tile == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    # Scores on the MXU: (block_q, d) @ (d, block_k).
+    s = jnp.dot(q, k.T) * sm_scale
+
+    q_pos = q_tile * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = k_tile * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (k_pos < seq_k) & (q_pos < seq_q)
+    if causal:
+        # Aligned to the END of the K axis: a decode query (seq_q=1) at the
+        # head of a seq_k-long cache sees every key.
+        mask = mask & (k_pos <= q_pos + (seq_k - seq_q))
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+
+    # Zero padded V rows: interpret-mode pads OOB tiles with uninitialized
+    # memory and 0.0 * NaN = NaN would poison the accumulator.
+    kv_valid = (k_tile * block_k + jax.lax.iota(jnp.int32, block_k)) < seq_k
+    v = jnp.where(kv_valid[:, None], v, 0.0)
+
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(k_tile == num_k_tiles - 1)
+    def _finalize():
+        l = l_ref[...]
+        # Rows that never saw an unmasked key emit zeros, not NaN.
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K) -> jax.Array:
+    """Tiled flash attention.
+
+    Args:
+      q: (batch, heads, seq_q, head_dim).
+      k, v: (batch, heads, seq_k, head_dim) — GQA head repetition happens
+        in L2 (`model.py`); a real TPU kernel would index kv_head = qh//G
+        instead of materializing the repeat.
+      causal: apply a causal mask aligned to the end of the K axis.
+      sm_scale: softmax scale; default 1/sqrt(head_dim).
+      block_q, block_k: VMEM tile sizes (clamped to the sequence lengths).
+
+    Returns:
+      (batch, heads, seq_q, head_dim) in q.dtype.
+    """
+    batch, heads, seq_q, head_dim = q.shape
+    _, _, seq_k, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    block_q = max(1, min(block_q, seq_q))
+    block_k = max(1, min(block_k, seq_k))
+    num_q_tiles = _ceil_div(seq_q, block_q)
+    num_k_tiles = _ceil_div(seq_k, block_k)
+
+    bh = batch * heads
+    qr = q.reshape(bh, seq_q, head_dim)
+    kr = k.reshape(bh, seq_k, head_dim)
+    vr = v.reshape(bh, seq_k, head_dim)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=float(sm_scale), causal=causal,
+        seq_q=seq_q, seq_k=seq_k,
+        block_q=block_q, block_k=block_k, num_k_tiles=num_k_tiles,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, num_q_tiles, num_k_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim),
+                               lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),           # running max m
+            pltpu.VMEM((block_q,), jnp.float32),           # running sum l
+            pltpu.VMEM((block_q, head_dim), jnp.float32),  # fp32 accumulator
+        ],
+        interpret=True,
+    )(qr, kr, vr)
+
+    return out.reshape(batch, heads, seq_q, head_dim)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int,
+                         in_dtype_bytes: int = 2) -> int:
+    """Estimated per-core VMEM residency of one grid step.
+
+    q tile + k tile + v tile (input dtype) + fp32 scratch (m, l, acc) +
+    fp32 score tile. Feeds the block-shape sweep in EXPERIMENTS.md §Perf —
+    real-TPU perf is *estimated* from this footprint + MXU occupancy, never
+    measured (interpret=True wallclock is CPU-numpy, not a TPU proxy).
+    """
+    tile_in = (block_q + 2 * block_k) * head_dim * in_dtype_bytes
+    scratch = (2 * block_q + block_q * head_dim) * 4
+    scores = block_q * block_k * 4
+    return tile_in + scratch + scores
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int,
+                             head_dim: int) -> float:
+    """Fraction of a 128×128×128 MXU pass occupied by one score matmul."""
+    return (min(block_q, 128) / 128.0) * (min(block_k, 128) / 128.0) * \
+        (min(head_dim, 128) / 128.0)

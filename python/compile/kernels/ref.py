@@ -1,0 +1,137 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal of the build path: pytest (with
+hypothesis shape/dtype sweeps) asserts `attention.flash_attention` against
+`naive_attention` and `ssm.ssd_chunked` against `naive_ssm_scan` before
+any artifact is considered valid. They are deliberately written in the
+most obvious O(L^2)/O(L) sequential style — no tiling, no online softmax,
+no chunking — so a disagreement always indicts the kernel.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    sm_scale: float | None = None) -> jax.Array:
+    """Materialized-softmax attention.
+
+    q: (b, h, seq_q, d); k, v: (b, h, seq_k, d). The causal mask is aligned
+    to the end of the K axis (a decode query attends to the whole cache),
+    matching the kernel's convention.
+    """
+    *_, head_dim = q.shape
+    seq_q = q.shape[-2]
+    seq_k = k.shape[-2]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        q_pos = jnp.arange(seq_q)[:, None]
+        k_pos = jnp.arange(seq_k)[None, :]
+        s = jnp.where(k_pos <= q_pos + (seq_k - seq_q), s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def naive_ssm_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                   b: jax.Array, c: jax.Array, d_skip: jax.Array,
+                   h0: jax.Array | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective-state-space scan (Mamba2-style SSD semantics).
+
+    Recurrence per head (state h: (head_dim, d_state)):
+        h_t = exp(-exp(a_log) * dt_t) * h_{t-1} + dt_t * (x_t ⊗ b_t)
+        y_t = h_t @ c_t + d_skip * x_t
+
+    Args:
+      x: (batch, L, heads, head_dim).
+      dt: (batch, L, heads) — positive step sizes (post-softplus).
+      a_log: (heads,) — log of the positive decay rate (A = -exp(a_log)).
+      b, c: (batch, L, heads, d_state) — input/output projections, already
+        expanded per-head (group sharing happens in L2).
+      d_skip: (heads,) — skip connection.
+      h0: optional initial state (batch, heads, head_dim, d_state).
+
+    Returns:
+      y: (batch, L, heads, head_dim);
+      h_final: (batch, heads, head_dim, d_state) in fp32.
+    """
+    batch, _, heads, head_dim = x.shape
+    d_state = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (heads,), negative
+
+    if h0 is None:
+        h0 = jnp.zeros((batch, heads, head_dim, d_state), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs  # (b,h,hd), (b,h), (b,h,ds), (b,h,ds)
+        decay = jnp.exp(a[None, :] * dt_t)  # (b, h)
+        h = h * decay[..., None, None] + \
+            (dt_t[..., None] * x_t)[..., None] * b_t[..., None, :]
+        y_t = jnp.einsum("bhds,bhs->bhd", h, c_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + \
+        xf * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_decode_step(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                    b: jax.Array, c: jax.Array, d_skip: jax.Array,
+                    h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSM state update (the decode path, also used in L2).
+
+    x: (batch, heads, head_dim); dt: (batch, heads);
+    b, c: (batch, heads, d_state); h: (batch, heads, head_dim, d_state).
+    Returns (y, h_new) with y: (batch, heads, head_dim).
+    """
+    xf = x.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(a[None, :] * dt.astype(jnp.float32))  # (batch, heads)
+    h_new = h * decay[..., None, None] + \
+        (dt.astype(jnp.float32)[..., None] * xf)[..., None] * \
+        b.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhds,bhs->bhd", h_new, c.astype(jnp.float32))
+    y = y + xf * d_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+def naive_causal_conv1d(x: jax.Array, w: jax.Array,
+                        bias: jax.Array | None = None,
+                        state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal 1-D convolution, the Mamba short-conv substrate.
+
+    x: (batch, L, channels); w: (channels, width); state: optional
+    (batch, width-1, channels) left context (decode carries this between
+    steps). Returns (batch, L, channels).
+    """
+    batch, seq_len, channels = x.shape
+    width = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((batch, width - 1, channels), x.dtype)
+    xp = jnp.concatenate([state.astype(jnp.float32),
+                          x.astype(jnp.float32)], axis=1)
+    wf = w.astype(jnp.float32)
+    out = sum(xp[:, i:i + seq_len, :] * wf[:, i][None, None, :]
+              for i in range(width))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, None, :]
+    return out.astype(x.dtype)

@@ -1,0 +1,177 @@
+"""L1: chunked selective-state-space (SSD / Mamba2-style) Pallas kernel.
+
+The Nemotron-H analogue in our model zoo is a hybrid attention/SSM
+architecture; its prefill hot-spot is the chunked selective scan. The CUDA
+implementations (mamba_ssm) split the sequence across warps with a
+block-parallel scan; per DESIGN.md §Hardware-Adaptation the TPU rethink
+is:
+
+* grid = (batch*heads, num_chunks) with the chunk axis innermost — the
+  running state h (head_dim × d_state, fp32) lives in the *output ref*
+  and is revisited across chunk steps, which is the TPU analogue of the
+  CUDA inter-block state carry.
+* intra-chunk work is three dense matmuls on the MXU —
+  (C×ds)@(ds×C) score-like decay-weighted Gram matrix, (C×C)@(C×hd)
+  output contraction, (hd×C)@(C×ds) state update — instead of a
+  warp-level sequential scan. chunk=128 keeps the tiles MXU-shaped.
+* the only sequential dependency is the O(num_chunks) state carry,
+  exactly the SSD formulation of Mamba2.
+
+Recurrence implemented (see kernels/ref.py for the sequential oracle):
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · (x_t ⊗ b_t),   A = -exp(a_log)
+    y_t = h_t @ c_t + d_skip · x_t
+
+`interpret=True` is mandatory (Mosaic custom-calls cannot run on the CPU
+PJRT plugin). Interpret-mode pads OOB tiles with uninitialized memory, so
+every padded row is explicitly zeroed (dt=0 makes padded steps identity
+transitions, letting the final-chunk state survive ragged lengths).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int, seq_len: int):
+    """One grid step: one (chunk, head_dim) slab of one (batch, head)."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = -jnp.exp(a_ref[0].astype(jnp.float32))   # scalar decay rate, < 0
+    x = x_ref[0].astype(jnp.float32)             # (C, head_dim)
+    dt = dt_ref[0].astype(jnp.float32)           # (C,)
+    b = b_ref[0].astype(jnp.float32)             # (C, d_state)
+    c = c_ref[0].astype(jnp.float32)             # (C, d_state)
+
+    # Zero padded rows (uninitialized in interpret mode). dt=0 turns padded
+    # steps into identity transitions so the state carry is unaffected.
+    valid = (ci * chunk + jax.lax.iota(jnp.int32, chunk)) < seq_len
+    x = jnp.where(valid[:, None], x, 0.0)
+    dt = jnp.where(valid, dt, 0.0)
+    b = jnp.where(valid[:, None], b, 0.0)
+    c = jnp.where(valid[:, None], c, 0.0)
+
+    la = a * dt                       # per-step log decay (<= 0)
+    cum = jnp.cumsum(la)
+
+    # Intra-chunk: W_ts = (c_t · b_s) * exp(cum_t - cum_s) * dt_s for s<=t.
+    sidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    decay = jnp.where(sidx <= tidx,
+                      jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    w = jnp.dot(c, b.T) * decay * dt[None, :]    # MXU: (C,ds)@(ds,C)
+    y = jnp.dot(w, x)                            # MXU: (C,C)@(C,hd)
+
+    # Inter-chunk: contribution of the carried state.
+    h_prev = h_ref[0]                            # (head_dim, d_state) fp32
+    y = y + jnp.exp(cum)[:, None] * jnp.dot(c, h_prev.T)
+    y_ref[0] = (y + d_ref[0].astype(jnp.float32) * x).astype(y_ref.dtype)
+
+    # State carry to the next chunk: decay the old state across the whole
+    # chunk and add each step's outer-product contribution.
+    coef = jnp.exp(cum[-1] - cum) * dt           # (C,)
+    h_ref[0] = jnp.exp(cum[-1]) * h_prev + \
+        jnp.dot((x * coef[:, None]).T, b)        # MXU: (hd,C)@(C,ds)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, d_skip: jax.Array, *,
+                chunk: int = DEFAULT_CHUNK
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked selective scan over a full prefill sequence.
+
+    Args:
+      x: (batch, L, heads, head_dim).
+      dt: (batch, L, heads) — positive step sizes.
+      a_log: (heads,) — log decay rates (A = -exp(a_log)).
+      b, c: (batch, L, heads, d_state) — per-head-expanded projections.
+      d_skip: (heads,) — skip connection scale.
+      chunk: sequence tile length (clamped to L).
+
+    Returns:
+      y: (batch, L, heads, head_dim) in x.dtype;
+      h_final: (batch, heads, head_dim, d_state) fp32 — the SSM cache the
+        decode path carries (this is the "state cache" ELANA sizes for SSM
+        models in Table 2).
+    """
+    batch, seq_len, heads, head_dim = x.shape
+    d_state = b.shape[-1]
+    bh = batch * heads
+
+    xr = jnp.moveaxis(x, 2, 1).reshape(bh, seq_len, head_dim)
+    dtr = jnp.moveaxis(dt, 2, 1).reshape(bh, seq_len)
+    br = jnp.moveaxis(b, 2, 1).reshape(bh, seq_len, d_state)
+    cr = jnp.moveaxis(c, 2, 1).reshape(bh, seq_len, d_state)
+    ar = jnp.tile(a_log, batch)
+    dr = jnp.tile(d_skip, batch)
+
+    ch = max(1, min(chunk, seq_len))
+    num_chunks = _ceil_div(seq_len, ch)
+    kernel = functools.partial(_ssd_kernel, chunk=ch, seq_len=seq_len)
+
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(bh, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, c_: (b_,)),
+            pl.BlockSpec((1,), lambda b_, c_: (b_,)),
+            pl.BlockSpec((1, ch, head_dim), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, ch), lambda b_, c_: (b_, c_)),
+            pl.BlockSpec((1, ch, d_state), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, ch, d_state), lambda b_, c_: (b_, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ch, head_dim), lambda b_, c_: (b_, c_, 0)),
+            # The state block is revisited by every chunk step — it doubles
+            # as the carry register (see module docstring).
+            pl.BlockSpec((1, head_dim, d_state), lambda b_, c_: (b_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq_len, head_dim), x.dtype),
+            jax.ShapeDtypeStruct((bh, head_dim, d_state), jnp.float32),
+        ],
+        interpret=True,
+    )(ar, dr, xr, dtr, br, cr)
+
+    y = jnp.moveaxis(y.reshape(batch, heads, seq_len, head_dim), 1, 2)
+    h = h.reshape(batch, heads, head_dim, d_state)
+    return y, h
+
+
+def vmem_footprint_bytes(chunk: int, head_dim: int, d_state: int,
+                         in_dtype_bytes: int = 2) -> int:
+    """Estimated per-core VMEM residency of one grid step (DESIGN §Perf)."""
+    tiles_in = chunk * (head_dim + 2 * d_state + 1) * in_dtype_bytes
+    state = head_dim * d_state * 4
+    decay_mat = chunk * chunk * 4
+    out_tile = chunk * head_dim * 4
+    return tiles_in + state + decay_mat + out_tile
+
+
+def mxu_utilization_estimate(chunk: int, head_dim: int,
+                             d_state: int) -> float:
+    """Weighted MXU-tile occupancy of the three chunk matmuls."""
+    def occ(m, n, k):
+        return (min(m, 128) / 128.0) * (min(n, 128) / 128.0) * \
+            (min(k, 128) / 128.0)
+    # flops-weighted across gram / output / state-update contractions
+    f1 = chunk * chunk * d_state
+    f2 = chunk * chunk * head_dim
+    f3 = head_dim * chunk * d_state
+    tot = f1 + f2 + f3
+    return (occ(chunk, chunk, d_state) * f1 + occ(chunk, head_dim, chunk) * f2
+            + occ(head_dim, d_state, chunk) * f3) / tot

@@ -1,0 +1,542 @@
+"""L2: JAX model definitions (build-time only — never on the request path).
+
+A GQA decoder transformer (RMSNorm, RoPE, SwiGLU) with an optional
+Mamba2-style SSM mixer per layer, covering both the attention models
+(Llama/Qwen analogues) and the hybrid model (Nemotron-H analogue) that the
+ELANA paper profiles. The attention prefill hot-spot runs through the L1
+Pallas flash-attention kernel (`kernels.attention`) and the SSM prefill
+hot-spot through the chunked SSD kernel (`kernels.ssm`), so both lower
+into the same HLO module that the Rust runtime executes.
+
+Two entry points are AOT-lowered per (config, batch, length) point:
+
+* ``prefill(weights, tokens)`` — processes the whole prompt, returns the
+  last-position logits plus fully materialized KV / SSM / conv caches
+  padded to ``max_seq_len`` (this is what ELANA's TTFT isolates).
+* ``decode_step(weights, token, pos, *caches)`` — one autoregressive step
+  reading and updating the caches (ELANA's TPOT path; the Rust engine
+  re-uses one compiled executable per shape — the CUDA-graph analogue).
+
+Weights are *runtime parameters*, not HLO constants: ``weight_specs``
+defines a deterministic flat ordering that ``aot.py`` serializes to a
+sidecar binary and the Rust runtime feeds back positionally. This keeps
+HLO text small and mirrors production engines (weights loaded once,
+graph compiled once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_kernel
+from compile.kernels import ref as kref
+from compile.kernels import ssm as ssm_kernel
+
+ATTN = "A"
+MAMBA = "M"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (mirrored by rust/src/models)."""
+
+    name: str
+    vocab_size: int
+    d_model: int
+    layer_pattern: str  # one char per layer: 'A' attention, 'M' mamba
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    ffn_dim: int
+    # SSM mixer params (ignored when the pattern has no 'M')
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    d_state: int = 0
+    conv_width: int = 4
+    rope_theta: float = 10000.0
+    max_seq_len: int = 256
+    # L1 kernel tile sizes (the block-shape sweep in §Perf tunes these)
+    block_q: int = 128
+    block_k: int = 128
+    ssm_chunk: int = 128
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_attn_layers(self) -> int:
+        return self.layer_pattern.count(ATTN)
+
+    @property
+    def n_mamba_layers(self) -> int:
+        return self.layer_pattern.count(MAMBA)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_heads * self.ssm_head_dim
+
+    def validate(self) -> None:
+        assert set(self.layer_pattern) <= {ATTN, MAMBA}, self.layer_pattern
+        assert self.n_heads % self.n_kv_heads == 0
+        if MAMBA in self.layer_pattern:
+            assert self.ssm_heads > 0 and self.ssm_head_dim > 0
+            assert self.d_state > 0
+
+
+# Development configs actually compiled + executed on the CPU PJRT runtime.
+# (The paper-scale architectures live in the Rust registry for analytic
+# size/latency modelling; these are their laptop-scale stand-ins.)
+TINY = ModelConfig(
+    name="elana-tiny", vocab_size=512, d_model=128,
+    layer_pattern="AAAA", n_heads=4, n_kv_heads=2, head_dim=32,
+    ffn_dim=384, max_seq_len=256,
+)
+TINY_HYBRID = ModelConfig(
+    name="elana-tiny-hybrid", vocab_size=512, d_model=128,
+    layer_pattern="MAMM", n_heads=4, n_kv_heads=2, head_dim=32,
+    ffn_dim=384, ssm_heads=4, ssm_head_dim=64, d_state=16,
+    max_seq_len=256,
+)
+SMALL = ModelConfig(
+    name="elana-small", vocab_size=4096, d_model=512,
+    layer_pattern="AAAAAAAA", n_heads=8, n_kv_heads=4, head_dim=64,
+    ffn_dim=1536, max_seq_len=256,
+)
+
+CONFIGS = {c.name: c for c in (TINY, TINY_HYBRID, SMALL)}
+
+
+# --------------------------------------------------------------------------
+# Weight layout
+# --------------------------------------------------------------------------
+
+def weight_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic flat weight ordering shared with the Rust runtime."""
+    cfg.validate()
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embedding", (cfg.vocab_size, cfg.d_model)),
+    ]
+    for i, kind in enumerate(cfg.layer_pattern):
+        p = f"layer{i:02d}."
+        specs.append((p + "ln_mixer", (cfg.d_model,)))
+        if kind == ATTN:
+            specs += [
+                (p + "wq", (cfg.d_model, cfg.n_heads * cfg.head_dim)),
+                (p + "wk", (cfg.d_model, cfg.n_kv_heads * cfg.head_dim)),
+                (p + "wv", (cfg.d_model, cfg.n_kv_heads * cfg.head_dim)),
+                (p + "wo", (cfg.n_heads * cfg.head_dim, cfg.d_model)),
+            ]
+        else:
+            proj_out = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.ssm_heads
+            specs += [
+                (p + "in_proj", (cfg.d_model, proj_out)),
+                (p + "conv_w", (cfg.d_inner, cfg.conv_width)),
+                (p + "conv_b", (cfg.d_inner,)),
+                (p + "a_log", (cfg.ssm_heads,)),
+                (p + "d_skip", (cfg.ssm_heads,)),
+                (p + "out_proj", (cfg.d_inner, cfg.d_model)),
+            ]
+        specs += [
+            (p + "ln_mlp", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.ffn_dim)),
+            (p + "w_up", (cfg.d_model, cfg.ffn_dim)),
+            (p + "w_down", (cfg.ffn_dim, cfg.d_model)),
+        ]
+    specs += [
+        ("final_ln", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab_size)),
+    ]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in weight_specs(cfg))
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> list[jax.Array]:
+    """Deterministic initialization (scaled normal; norms at 1)."""
+    key = jax.random.PRNGKey(seed)
+    out: list[jax.Array] = []
+    for name, shape in weight_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln_mixer", "ln_mlp")) or name == "final_ln":
+            w = jnp.ones(shape, jnp.float32)
+        elif name.endswith("conv_b"):
+            w = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("a_log"):
+            # decay rates in a stable range: A in ~[-4, -0.3]
+            w = jnp.log(jax.random.uniform(sub, shape, minval=0.3, maxval=4.0))
+        elif name.endswith("d_skip"):
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            w = jax.random.normal(sub, shape, jnp.float32) / math.sqrt(fan_in)
+        out.append(w)
+    return out
+
+
+class _W:
+    """Name-addressed view over the flat weight list."""
+
+    def __init__(self, cfg: ModelConfig, flat):
+        names = [n for n, _ in weight_specs(cfg)]
+        assert len(names) == len(flat), (len(names), len(flat))
+        self._d = dict(zip(names, flat))
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self._d[name]
+
+
+# --------------------------------------------------------------------------
+# Cache layout (mirrored by rust/src/models/cache.rs)
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int
+                ) -> list[tuple[str, tuple[int, ...], Any]]:
+    """(name, shape, dtype) of every cache tensor, in argument order."""
+    specs: list[tuple[str, tuple[int, ...], Any]] = []
+    if cfg.n_attn_layers:
+        kv = (cfg.n_attn_layers, batch, cfg.n_kv_heads, cfg.max_seq_len,
+              cfg.head_dim)
+        specs += [("kv_k", kv, jnp.float32), ("kv_v", kv, jnp.float32)]
+    if cfg.n_mamba_layers:
+        specs += [
+            ("ssm_h", (cfg.n_mamba_layers, batch, cfg.ssm_heads,
+                       cfg.ssm_head_dim, cfg.d_state), jnp.float32),
+            ("conv_state", (cfg.n_mamba_layers, batch, cfg.conv_width - 1,
+                            cfg.d_inner), jnp.float32),
+        ]
+    return specs
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> int:
+    """Analytic cache footprint at fp32 — cross-checked against the Rust
+    registry (`models::cache`) by a golden-file test."""
+    total = 0
+    if cfg.n_attn_layers:
+        total += 2 * cfg.n_attn_layers * batch * cfg.n_kv_heads * \
+            seq_len * cfg.head_dim * 4
+    if cfg.n_mamba_layers:
+        total += cfg.n_mamba_layers * batch * cfg.ssm_heads * \
+            cfg.ssm_head_dim * cfg.d_state * 4
+        total += cfg.n_mamba_layers * batch * (cfg.conv_width - 1) * \
+            cfg.d_inner * 4
+    return total
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def _rope_freqs(cfg: ModelConfig, positions: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the given positions: (len(positions), head_dim/2)."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta **
+                 (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (b, h, s, d); cos/sin: (s, d/2), broadcast over (b, h)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(b, kvh, s, d) -> (b, kvh*groups, s, d) — GQA head expansion."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=1)
+
+
+def _split_heads(x: jax.Array, heads: int, head_dim: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def attn_prefill_block(cfg: ModelConfig, w: _W, i: int, x: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence attention; returns (out, k_heads, v_heads)."""
+    p = f"layer{i:02d}."
+    _, s, _ = x.shape
+    q = _split_heads(x @ w[p + "wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ w[p + "wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ w[p + "wv"], cfg.n_kv_heads, cfg.head_dim)
+
+    cos, sin = _rope_freqs(cfg, jnp.arange(s))
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    o = attn_kernel.flash_attention(
+        q, _repeat_kv(k, groups), _repeat_kv(v, groups),
+        causal=True, block_q=cfg.block_q, block_k=cfg.block_k)
+    return _merge_heads(o) @ w[p + "wo"], k, v
+
+
+def attn_decode_block(cfg: ModelConfig, w: _W, i: int, x: jax.Array,
+                      pos: jax.Array, k_cache: jax.Array, v_cache: jax.Array
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention over the cache (GEMV-shaped, pure XLA).
+
+    x: (b, 1, d); k_cache/v_cache: (b, kvh, max_len, hd); pos: scalar i32.
+    """
+    p = f"layer{i:02d}."
+    q = _split_heads(x @ w[p + "wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ w[p + "wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ w[p + "wv"], cfg.n_kv_heads, cfg.head_dim)
+
+    cos, sin = _rope_freqs(cfg, pos[None])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=2)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(k_cache, groups)
+    vv = _repeat_kv(v_cache, groups)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+    k_pos = jnp.arange(cfg.max_seq_len)
+    s = jnp.where((k_pos <= pos)[None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", pattn,
+                   vv.astype(jnp.float32)).astype(x.dtype)
+    return _merge_heads(o) @ w[p + "wo"], k_cache, v_cache
+
+
+def _mamba_proj(cfg: ModelConfig, w: _W, i: int, x: jax.Array):
+    """in_proj split: x_in (d_inner), z (d_inner), B (ds), C (ds), dt (H)."""
+    p = f"layer{i:02d}."
+    proj = x @ w[p + "in_proj"]
+    di, ds, h = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    x_in = proj[..., :di]
+    z = proj[..., di:2 * di]
+    b_in = proj[..., 2 * di:2 * di + ds]
+    c_in = proj[..., 2 * di + ds:2 * di + 2 * ds]
+    dt = jax.nn.softplus(proj[..., 2 * di + 2 * ds:2 * di + 2 * ds + h])
+    return x_in, z, b_in, c_in, dt
+
+
+def mamba_prefill_block(cfg: ModelConfig, w: _W, i: int, x: jax.Array
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence SSM mixer; returns (out, h_final, conv_state)."""
+    p = f"layer{i:02d}."
+    b, s, _ = x.shape
+    x_in, z, b_in, c_in, dt = _mamba_proj(cfg, w, i, x)
+
+    x_conv = kref.naive_causal_conv1d(x_in, w[p + "conv_w"], w[p + "conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+
+    xh = x_conv.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+    bh = jnp.broadcast_to(b_in[:, :, None, :],
+                          (b, s, cfg.ssm_heads, cfg.d_state))
+    ch = jnp.broadcast_to(c_in[:, :, None, :],
+                          (b, s, cfg.ssm_heads, cfg.d_state))
+    y, h_final = ssm_kernel.ssd_chunked(
+        xh, dt, w[p + "a_log"], bh, ch, w[p + "d_skip"],
+        chunk=cfg.ssm_chunk)
+    y = y.reshape(b, s, cfg.d_inner) * jax.nn.silu(z)
+    out = y @ w[p + "out_proj"]
+
+    # conv state = last (width-1) pre-conv inputs, zero-padded on the left
+    pad = jnp.zeros((b, cfg.conv_width - 1, cfg.d_inner), x_in.dtype)
+    xp = jnp.concatenate([pad, x_in], axis=1)
+    conv_state = jax.lax.dynamic_slice_in_dim(
+        xp, xp.shape[1] - (cfg.conv_width - 1), cfg.conv_width - 1, axis=1)
+    return out, h_final, conv_state
+
+
+def mamba_decode_block(cfg: ModelConfig, w: _W, i: int, x: jax.Array,
+                       h: jax.Array, conv_state: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token SSM step. x: (b, 1, d); h: (b, H, hd, ds);
+    conv_state: (b, width-1, d_inner)."""
+    p = f"layer{i:02d}."
+    b = x.shape[0]
+    x_in, z, b_in, c_in, dt = _mamba_proj(cfg, w, i, x)
+    x_in = x_in[:, 0]       # (b, d_inner)
+    z = z[:, 0]
+    b_in = b_in[:, 0]
+    c_in = c_in[:, 0]
+    dt = dt[:, 0]           # (b, H)
+
+    # conv window = [conv_state, x_in]
+    win = jnp.concatenate([conv_state, x_in[:, None, :]], axis=1)
+    cw = w[p + "conv_w"].astype(jnp.float32)  # (d_inner, width)
+    x_conv = jnp.einsum("bwc,cw->bc", win.astype(jnp.float32), cw)
+    x_conv = jax.nn.silu(x_conv + w[p + "conv_b"].astype(jnp.float32))
+    new_conv_state = win[:, 1:, :].astype(conv_state.dtype)
+
+    xh = x_conv.reshape(b, cfg.ssm_heads, cfg.ssm_head_dim)
+    bh = jnp.broadcast_to(b_in[:, None, :], (b, cfg.ssm_heads, cfg.d_state))
+    ch = jnp.broadcast_to(c_in[:, None, :], (b, cfg.ssm_heads, cfg.d_state))
+    y, h_new = kref.ssm_decode_step(
+        xh.astype(x.dtype), dt, w[p + "a_log"], bh.astype(x.dtype),
+        ch.astype(x.dtype), w[p + "d_skip"], h)
+    y = y.reshape(b, cfg.d_inner) * jax.nn.silu(z)
+    return (y @ w[p + "out_proj"])[:, None, :], h_new, new_conv_state
+
+
+def mlp_block(cfg: ModelConfig, w: _W, i: int, x: jax.Array) -> jax.Array:
+    p = f"layer{i:02d}."
+    return (jax.nn.silu(x @ w[p + "w_gate"]) * (x @ w[p + "w_up"])) @ \
+        w[p + "w_down"]
+
+
+# --------------------------------------------------------------------------
+# Entry points (AOT-lowered by aot.py)
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, weights, tokens: jax.Array):
+    """Process a whole prompt. tokens: (b, Lp) i32.
+
+    Returns (logits_last (b, vocab), *caches) with caches in
+    `cache_specs` order, padded to cfg.max_seq_len.
+    """
+    w = _W(cfg, weights)
+    _, lp = tokens.shape
+    x = w["embedding"][tokens]
+
+    ks, vs, hs, convs = [], [], [], []
+    for i, kind in enumerate(cfg.layer_pattern):
+        pre = f"layer{i:02d}."
+        xin = rms_norm(x, w[pre + "ln_mixer"])
+        if kind == ATTN:
+            o, k, v = attn_prefill_block(cfg, w, i, xin)
+            ks.append(k)
+            vs.append(v)
+        else:
+            o, h, cs = mamba_prefill_block(cfg, w, i, xin)
+            hs.append(h)
+            convs.append(cs)
+        x = x + o
+        x = x + mlp_block(cfg, w, i, rms_norm(x, w[pre + "ln_mlp"]))
+
+    logits = rms_norm(x, w["final_ln"])[:, -1, :] @ w["lm_head"]
+
+    outs = [logits]
+    if ks:
+        pad = cfg.max_seq_len - lp
+        kcat = jnp.stack(ks)  # (nA, b, kvh, Lp, hd)
+        vcat = jnp.stack(vs)
+        padspec = [(0, 0)] * 3 + [(0, pad), (0, 0)]
+        outs += [jnp.pad(kcat, padspec).astype(jnp.float32),
+                 jnp.pad(vcat, padspec).astype(jnp.float32)]
+    if hs:
+        outs += [jnp.stack(hs).astype(jnp.float32),
+                 jnp.stack(convs).astype(jnp.float32)]
+    return tuple(outs)
+
+
+def decode_step(cfg: ModelConfig, weights, token: jax.Array,
+                pos: jax.Array, *caches: jax.Array):
+    """One autoregressive step. token: (b,) i32; pos: scalar i32 (the
+    position the new token occupies). Returns (logits, *updated caches)."""
+    w = _W(cfg, weights)
+    names = [n for n, _, _ in cache_specs(cfg, token.shape[0])]
+    cache = dict(zip(names, caches))
+
+    x = w["embedding"][token][:, None, :]  # (b, 1, d)
+
+    ai = mi = 0
+    for i, kind in enumerate(cfg.layer_pattern):
+        pre = f"layer{i:02d}."
+        xin = rms_norm(x, w[pre + "ln_mixer"])
+        if kind == ATTN:
+            o, knew, vnew = attn_decode_block(
+                cfg, w, i, xin, pos, cache["kv_k"][ai], cache["kv_v"][ai])
+            cache["kv_k"] = cache["kv_k"].at[ai].set(knew)
+            cache["kv_v"] = cache["kv_v"].at[ai].set(vnew)
+            ai += 1
+        else:
+            o, hnew, csnew = mamba_decode_block(
+                cfg, w, i, xin, cache["ssm_h"][mi], cache["conv_state"][mi])
+            cache["ssm_h"] = cache["ssm_h"].at[mi].set(hnew)
+            cache["conv_state"] = cache["conv_state"].at[mi].set(csnew)
+            mi += 1
+        x = x + o
+        x = x + mlp_block(cfg, w, i, rms_norm(x, w[pre + "ln_mlp"]))
+
+    logits = rms_norm(x, w["final_ln"])[:, 0, :] @ w["lm_head"]
+    return (logits, *[cache[n] for n in names])
+
+
+# --------------------------------------------------------------------------
+# Flat-state entry points (single-array I/O for the Rust fast path)
+# --------------------------------------------------------------------------
+#
+# PJRT buffer-level execution in the Rust runtime requires a single
+# (non-tuple) output array, and threading one persistent device buffer
+# between decode steps eliminates all host<->device cache traffic (see
+# EXPERIMENTS.md §Perf). The flat state layout is
+#
+#     [ logits (batch*vocab) | cache_0.flat | cache_1.flat | ... ]
+#
+# with logits first so the Rust side reads them with one ranged
+# device->host copy at offset 0. decode_flat takes the *same* layout as
+# input (its logits region is ignored), so the step's output buffer is
+# fed straight back in.
+
+def flat_state_len(cfg: ModelConfig, batch: int) -> int:
+    """Elements of the flat state vector."""
+    n = batch * cfg.vocab_size
+    for _, shape, _ in cache_specs(cfg, batch):
+        n += math.prod(shape)
+    return n
+
+
+def _pack_flat(cfg: ModelConfig, batch: int, logits: jax.Array,
+               caches) -> jax.Array:
+    parts = [logits.reshape(-1).astype(jnp.float32)]
+    parts += [c.reshape(-1).astype(jnp.float32) for c in caches]
+    return jnp.concatenate(parts)
+
+
+def _unpack_caches(cfg: ModelConfig, batch: int, state: jax.Array):
+    offset = batch * cfg.vocab_size
+    caches = []
+    for _, shape, dt in cache_specs(cfg, batch):
+        n = math.prod(shape)
+        caches.append(jax.lax.dynamic_slice_in_dim(state, offset, n)
+                      .reshape(shape).astype(dt))
+        offset += n
+    return caches
+
+
+def prefill_flat(cfg: ModelConfig, weights, tokens: jax.Array) -> jax.Array:
+    """Prefill returning the packed flat state (single f32 array)."""
+    out = prefill(cfg, weights, tokens)
+    return _pack_flat(cfg, tokens.shape[0], out[0], out[1:])
+
+
+def decode_flat(cfg: ModelConfig, weights, token: jax.Array,
+                pos: jax.Array, state: jax.Array) -> jax.Array:
+    """One decode step over the packed flat state (logits region of the
+    input is ignored; the output's logits region holds this step's)."""
+    batch = token.shape[0]
+    caches = _unpack_caches(cfg, batch, state)
+    out = decode_step(cfg, weights, token, pos, *caches)
+    return _pack_flat(cfg, batch, out[0], out[1:])

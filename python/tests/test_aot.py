@@ -1,0 +1,135 @@
+"""AOT pipeline tests: manifest contract, weight sidecar, HLO lowering."""
+
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ARTIFACTS, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts/ not built (run `make artifacts`)")
+
+
+def test_hlo_text_lowering_tiny():
+    """Smoke: a tiny prefill lowers to parseable HLO text with the expected
+    parameter count (weights first, then inputs)."""
+    cfg = aot.dev_config(M.TINY)
+    ws = M.init_weights(cfg)
+    hlo = aot.lower_prefill(cfg, ws, batch=1, prompt_len=16)
+    n_weights = len(M.weight_specs(cfg))
+    assert f"parameter({n_weights})" in hlo  # tokens come after all weights
+    assert f"parameter({n_weights + 1})" not in hlo
+    assert "ENTRY" in hlo
+    # HLO text stays small because weights are parameters, not constants
+    assert len(hlo) < 2_000_000
+
+
+def test_hlo_decode_has_cache_params():
+    cfg = aot.dev_config(M.TINY)
+    ws = M.init_weights(cfg)
+    hlo = aot.lower_decode(cfg, ws, batch=1)
+    n = len(M.weight_specs(cfg))
+    # weights + token + pos + kv_k + kv_v
+    assert f"parameter({n + 3})" in hlo
+    assert f"parameter({n + 4})" not in hlo
+
+
+def test_weight_file_roundtrip(tmp_path):
+    cfg = aot.dev_config(M.TINY)
+    ws = M.init_weights(cfg)
+    path = tmp_path / "w.bin"
+    table = aot.write_weights(str(path), cfg, ws)
+    raw = path.read_bytes()
+    assert len(raw) == sum(e["nbytes"] for e in table)
+    # spot-check first weight round-trips exactly
+    e = table[0]
+    arr = np.frombuffer(raw[e["offset"]:e["offset"] + e["nbytes"]],
+                        dtype="<f4").reshape(e["shape"])
+    np.testing.assert_array_equal(arr, np.asarray(ws[0], np.float32))
+    # offsets are contiguous and sorted
+    off = 0
+    for e in table:
+        assert e["offset"] == off
+        off += e["nbytes"]
+
+
+def test_sources_digest_stable():
+    assert aot._sources_digest() == aot._sources_digest()
+    assert len(aot._sources_digest()) == 64
+
+
+def test_io_entry_dtype_tags():
+    e = aot._io_entry("x", (1, 2), jnp.float32)
+    assert e == {"name": "x", "shape": [1, 2], "dtype": "f32"}
+    assert aot._io_entry("t", (3,), jnp.int32)["dtype"] == "i32"
+
+
+@needs_artifacts
+class TestBuiltManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(MANIFEST) as f:
+            return json.load(f)
+
+    def test_version_and_digest(self, manifest):
+        assert manifest["version"] == aot.MANIFEST_VERSION
+        assert manifest["sources_digest"] == aot._sources_digest(), \
+            "artifacts stale relative to python sources — run make artifacts"
+
+    def test_models_present(self, manifest):
+        assert set(manifest["models"]) >= {"elana-tiny"}
+
+    def test_executable_files_exist(self, manifest):
+        for m in manifest["models"].values():
+            for exe in m["executables"]:
+                path = os.path.join(ARTIFACTS, exe["file"])
+                assert os.path.exists(path), exe["file"]
+                assert os.path.getsize(path) > 0
+
+    def test_weight_file_sizes(self, manifest):
+        for m in manifest["models"].values():
+            path = os.path.join(ARTIFACTS, m["weights_file"])
+            want = sum(e["nbytes"] for e in m["weights"])
+            assert os.path.getsize(path) == want
+            assert want == m["param_count"] * 4
+
+    def test_prefill_outputs_match_cache_specs(self, manifest):
+        for name, m in manifest["models"].items():
+            cfg = M.ModelConfig(**m["config"])
+            for exe in m["executables"]:
+                b = exe["batch"]
+                if exe["kind"] in ("prefill_flat", "decode_flat"):
+                    # flat fast path: one packed f32 state vector
+                    got = [(o["name"], o["shape"]) for o in exe["outputs"]]
+                    assert got == [("state",
+                                    [M.flat_state_len(cfg, b)])], \
+                        (name, exe["file"])
+                    continue
+                want = [("logits", [b, cfg.vocab_size])] + \
+                    [(n, list(s)) for n, s, _ in M.cache_specs(cfg, b)]
+                got = [(o["name"], o["shape"]) for o in exe["outputs"]]
+                assert got == want, (name, exe["file"])
+
+    def test_decode_inputs_include_pos_scalar(self, manifest):
+        for m in manifest["models"].values():
+            for exe in m["executables"]:
+                if exe["kind"] != "decode":
+                    continue
+                names = [i["name"] for i in exe["inputs"]]
+                assert names[0] == "token" and names[1] == "pos"
+                pos = exe["inputs"][1]
+                assert pos["shape"] == [] and pos["dtype"] == "i32"
+
+    def test_param_counts_match_python(self, manifest):
+        for name, m in manifest["models"].items():
+            cfg = M.ModelConfig(**m["config"])
+            assert m["param_count"] == M.param_count(cfg), name

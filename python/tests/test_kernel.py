@@ -1,0 +1,143 @@
+"""L1 flash-attention Pallas kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the attention hot-spot: hypothesis
+sweeps shapes/dtypes and asserts allclose against `ref.naive_attention`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _check(batch, heads, seq_q, seq_k, head_dim, dtype, causal,
+           block_q=32, block_k=32):
+    ks = jax.random.split(jax.random.PRNGKey(seq_q * 7 + seq_k), 3)
+    q = _rand(ks[0], (batch, heads, seq_q, head_dim), dtype)
+    k = _rand(ks[1], (batch, heads, seq_k, head_dim), dtype)
+    v = _rand(ks[2], (batch, heads, seq_k, head_dim), dtype)
+    got = A.flash_attention(q, k, v, causal=causal,
+                            block_q=block_q, block_k=block_k)
+    want = R.naive_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+class TestFlashAttentionBasics:
+    def test_square_causal(self):
+        _check(2, 3, 48, 48, 16, jnp.float32, True)
+
+    def test_square_non_causal(self):
+        _check(2, 3, 48, 48, 16, jnp.float32, False)
+
+    def test_decode_shape_seq_q_1(self):
+        """TPOT path: one query over a long K axis sees every key."""
+        _check(2, 4, 1, 40, 16, jnp.float32, True)
+
+    def test_ragged_lengths(self):
+        """Sequence lengths not divisible by the block sizes."""
+        _check(1, 2, 33, 65, 16, jnp.float32, True)
+
+    def test_block_larger_than_seq(self):
+        _check(1, 1, 5, 5, 8, jnp.float32, True, block_q=128, block_k=128)
+
+    def test_block_one(self):
+        _check(1, 1, 7, 7, 8, jnp.float32, True, block_q=1, block_k=1)
+
+    def test_bfloat16(self):
+        _check(1, 2, 32, 32, 16, jnp.bfloat16, True)
+
+    def test_single_head_single_batch(self):
+        _check(1, 1, 16, 16, 32, jnp.float32, True)
+
+    def test_prefix_longer_k_axis(self):
+        """Chunked-prefill shape: queries for the tail of a longer K axis."""
+        _check(1, 2, 16, 48, 16, jnp.float32, True)
+
+    def test_custom_scale(self):
+        q = _rand(jax.random.PRNGKey(0), (1, 1, 16, 8), jnp.float32)
+        k = _rand(jax.random.PRNGKey(1), (1, 1, 16, 8), jnp.float32)
+        v = _rand(jax.random.PRNGKey(2), (1, 1, 16, 8), jnp.float32)
+        got = A.flash_attention(q, k, v, causal=True, sm_scale=0.5,
+                                block_q=8, block_k=8)
+        want = R.naive_attention(q, k, v, causal=True, sm_scale=0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_first_token_attends_only_itself(self):
+        """Causal row 0 must equal v[0] exactly (softmax of one logit)."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = _rand(ks[0], (1, 1, 8, 8), jnp.float32)
+        k = _rand(ks[1], (1, 1, 8, 8), jnp.float32)
+        v = _rand(ks[2], (1, 1, 8, 8), jnp.float32)
+        out = A.flash_attention(q, k, v, causal=True, block_q=4, block_k=4)
+        np.testing.assert_allclose(np.asarray(out)[0, 0, 0],
+                                   np.asarray(v)[0, 0, 0], atol=1e-6)
+
+    def test_uniform_scores_average_values(self):
+        """Identical K rows => non-causal output is the mean of V."""
+        q = jnp.ones((1, 1, 8, 8), jnp.float32)
+        k = jnp.ones((1, 1, 8, 8), jnp.float32)
+        v = jnp.arange(64, dtype=jnp.float32).reshape(1, 1, 8, 8)
+        out = A.flash_attention(q, k, v, causal=False, block_q=4, block_k=4)
+        want = np.broadcast_to(np.asarray(v)[0, 0].mean(0), (8, 8))
+        np.testing.assert_allclose(np.asarray(out)[0, 0], want, rtol=1e-5)
+
+    def test_no_nan_on_large_logits(self):
+        q = 30.0 * jnp.ones((1, 1, 16, 8), jnp.float32)
+        k = 30.0 * jnp.ones((1, 1, 16, 8), jnp.float32)
+        v = _rand(jax.random.PRNGKey(5), (1, 1, 16, 8), jnp.float32)
+        out = A.flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+        assert not np.isnan(np.asarray(out)).any()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    heads=st.integers(1, 4),
+    seq_q=st.integers(1, 70),
+    extra_k=st.integers(0, 70),
+    head_dim=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    block=st.sampled_from([8, 16, 32, 128]),
+)
+def test_flash_attention_hypothesis(batch, heads, seq_q, extra_k, head_dim,
+                                    causal, block):
+    """Property: the kernel matches the oracle for any shape/tile combo.
+
+    seq_k >= seq_q so the end-aligned causal mask never produces an
+    all-masked query row (which the oracle would turn into NaN).
+    """
+    _check(batch, heads, seq_q, seq_q + extra_k, head_dim, jnp.float32,
+           causal, block_q=block, block_k=block)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.integers(2, 48),
+    head_dim=st.sampled_from([8, 16]),
+)
+def test_flash_attention_bf16_hypothesis(seq, head_dim):
+    _check(1, 2, seq, seq, head_dim, jnp.bfloat16, True)
+
+
+def test_vmem_footprint_monotonic():
+    """Bigger tiles => strictly more VMEM."""
+    a = A.vmem_footprint_bytes(64, 64, 64)
+    b = A.vmem_footprint_bytes(128, 128, 64)
+    assert b > a
+
+
+def test_mxu_estimate_bounds():
+    assert A.mxu_utilization_estimate(128, 128, 128) == pytest.approx(1.0)
+    assert 0.0 < A.mxu_utilization_estimate(8, 8, 8) < 0.01

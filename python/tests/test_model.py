@@ -1,0 +1,229 @@
+"""L2 model tests: shapes, weight layout, prefill/decode consistency."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _shrunk(cfg: M.ModelConfig, **over) -> M.ModelConfig:
+    """Test-size variant: short max_seq_len, small kernel tiles."""
+    return dataclasses.replace(cfg, max_seq_len=32, block_q=16, block_k=16,
+                               ssm_chunk=8, **over)
+
+
+CASES = [_shrunk(M.TINY), _shrunk(M.TINY_HYBRID)]
+
+
+@pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+class TestModelShapes:
+    def test_weight_specs_match_init(self, cfg):
+        specs = M.weight_specs(cfg)
+        ws = M.init_weights(cfg)
+        assert len(specs) == len(ws)
+        for (name, shape), w in zip(specs, ws):
+            assert w.shape == tuple(shape), name
+
+    def test_param_count_is_spec_sum(self, cfg):
+        assert M.param_count(cfg) == sum(
+            math.prod(s) for _, s in M.weight_specs(cfg))
+
+    def test_prefill_output_shapes(self, cfg):
+        ws = M.init_weights(cfg)
+        b, lp = 2, 8
+        toks = jnp.zeros((b, lp), jnp.int32)
+        out = M.prefill(cfg, ws, toks)
+        assert out[0].shape == (b, cfg.vocab_size)
+        specs = M.cache_specs(cfg, b)
+        assert len(out) == 1 + len(specs)
+        for (name, shape, _), arr in zip(specs, out[1:]):
+            assert arr.shape == tuple(shape), name
+
+    def test_decode_output_shapes(self, cfg):
+        ws = M.init_weights(cfg)
+        b = 2
+        caches = [jnp.zeros(s, d) for _, s, d in M.cache_specs(cfg, b)]
+        out = M.decode_step(cfg, ws, jnp.zeros((b,), jnp.int32),
+                            jnp.int32(0), *caches)
+        assert out[0].shape == (b, cfg.vocab_size)
+        for got, want in zip(out[1:], caches):
+            assert got.shape == want.shape
+
+    def test_prefill_then_decode_matches_longer_prefill(self, cfg):
+        """prefill(L) + decode(token_L) == prefill(L+1) — the invariant the
+        Rust engine's TTLT loop rests on."""
+        ws = M.init_weights(cfg)
+        b, lp = 2, 10
+        toks = jax.random.randint(jax.random.PRNGKey(7), (b, lp + 1), 0,
+                                  cfg.vocab_size)
+        out = M.prefill(cfg, ws, toks[:, :lp])
+        logits_d, *_ = M.decode_step(cfg, ws, toks[:, lp], jnp.int32(lp),
+                                     *out[1:])
+        logits_full = M.prefill(cfg, ws, toks[:, :lp + 1])[0]
+        ref = np.abs(np.asarray(logits_full)).max()
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(logits_full),
+                                   atol=2e-3 * ref, rtol=2e-3)
+
+    def test_multi_step_decode_chain(self, cfg):
+        """Three chained decode steps == one longer prefill."""
+        ws = M.init_weights(cfg)
+        b, lp, gen = 1, 6, 3
+        toks = jax.random.randint(jax.random.PRNGKey(3), (b, lp + gen), 0,
+                                  cfg.vocab_size)
+        out = M.prefill(cfg, ws, toks[:, :lp])
+        caches = list(out[1:])
+        for t in range(gen):
+            logits, *caches = M.decode_step(cfg, ws, toks[:, lp + t],
+                                            jnp.int32(lp + t), *caches)
+        logits_full = M.prefill(cfg, ws, toks)[0]
+        ref = np.abs(np.asarray(logits_full)).max()
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_full),
+                                   atol=5e-3 * ref, rtol=5e-3)
+
+    def test_prefill_determinism(self, cfg):
+        ws = M.init_weights(cfg)
+        toks = jnp.ones((1, 8), jnp.int32)
+        a = M.prefill(cfg, ws, toks)[0]
+        b = M.prefill(cfg, ws, toks)[0]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cache_bytes_positive_and_monotonic(self, cfg):
+        assert M.kv_cache_bytes(cfg, 1, 16) > 0
+        assert M.kv_cache_bytes(cfg, 2, 16) > M.kv_cache_bytes(cfg, 1, 16)
+
+
+class TestConfigValidation:
+    def test_bad_pattern_rejected(self):
+        cfg = dataclasses.replace(M.TINY, layer_pattern="AXA")
+        with pytest.raises(AssertionError):
+            cfg.validate()
+
+    def test_bad_gqa_rejected(self):
+        cfg = dataclasses.replace(M.TINY, n_heads=4, n_kv_heads=3)
+        with pytest.raises(AssertionError):
+            cfg.validate()
+
+    def test_mamba_without_ssm_dims_rejected(self):
+        cfg = dataclasses.replace(M.TINY, layer_pattern="MA")
+        with pytest.raises(AssertionError):
+            cfg.validate()
+
+    def test_registry_configs_valid(self):
+        for cfg in M.CONFIGS.values():
+            cfg.validate()
+
+    def test_hybrid_layer_counts(self):
+        cfg = M.TINY_HYBRID
+        assert cfg.n_attn_layers + cfg.n_mamba_layers == cfg.n_layers
+        assert cfg.n_mamba_layers == 3
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        cfg = M.TINY
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 8, cfg.head_dim))
+        cos, sin = M._rope_freqs(cfg, jnp.arange(8))
+        y = M.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_rope_position_zero_is_identity(self):
+        cfg = M.TINY
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, cfg.head_dim))
+        cos, sin = M._rope_freqs(cfg, jnp.arange(1))
+        y = M.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+    def test_rope_relative_shift_invariance(self):
+        """q·k after RoPE depends only on relative distance."""
+        cfg = M.TINY
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, cfg.head_dim))
+        k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, cfg.head_dim))
+
+        def dot_at(pq, pk):
+            cq, sq = M._rope_freqs(cfg, jnp.array([pq]))
+            ck, sk = M._rope_freqs(cfg, jnp.array([pk]))
+            qq = M.apply_rope(q, cq, sq)
+            kk = M.apply_rope(k, ck, sk)
+            return float(jnp.sum(qq * kk))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+
+
+class TestRmsNorm:
+    def test_unit_output_scale(self):
+        x = 100.0 * jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64))
+        y = M.rms_norm(x, jnp.ones((64,)))
+        rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_weight_scales_output(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 16))
+        y1 = M.rms_norm(x, jnp.ones((16,)))
+        y2 = M.rms_norm(x, 2.0 * jnp.ones((16,)))
+        np.testing.assert_allclose(2.0 * np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-6)
+
+
+class TestFlatStatePath:
+    """The flat-state fast-path functions (single-array I/O for the Rust
+    PJRT buffer runtime) must be numerically identical to the tuple
+    path."""
+
+    @pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+    def test_prefill_flat_matches_tuple(self, cfg):
+        ws = M.init_weights(cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                  cfg.vocab_size)
+        flat = M.prefill_flat(cfg, ws, toks)
+        assert flat.shape == (M.flat_state_len(cfg, 2),)
+        ref = M.prefill(cfg, ws, toks)
+        np.testing.assert_allclose(
+            np.asarray(flat[:2 * cfg.vocab_size]),
+            np.asarray(ref[0]).ravel(), atol=1e-6)
+        # cache regions round-trip through pack/unpack
+        caches = M._unpack_caches(cfg, 2, flat)
+        for got, want in zip(caches, ref[1:]):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-6)
+
+    @pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+    def test_decode_flat_matches_tuple(self, cfg):
+        ws = M.init_weights(cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                                  cfg.vocab_size)
+        ref = M.prefill(cfg, ws, toks)
+        flat = M.prefill_flat(cfg, ws, toks)
+        tok = jnp.array([3], jnp.int32)
+        ref_d = M.decode_step(cfg, ws, tok, jnp.int32(8), *ref[1:])
+        flat_d = M.decode_flat(cfg, ws, tok, jnp.int32(8), flat)
+        np.testing.assert_allclose(
+            np.asarray(flat_d[:cfg.vocab_size]),
+            np.asarray(ref_d[0]).ravel(), atol=1e-5, rtol=1e-5)
+
+    def test_flat_state_len_layout(self):
+        cfg = CASES[0]
+        n = M.flat_state_len(cfg, 4)
+        expect = 4 * cfg.vocab_size + sum(
+            int(np.prod(s)) for _, s, _ in M.cache_specs(cfg, 4))
+        assert n == expect
+
+    def test_decode_flat_ignores_logits_region(self):
+        """The input logits region must not affect the step's output."""
+        cfg = CASES[0]
+        ws = M.init_weights(cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                                  cfg.vocab_size)
+        flat = M.prefill_flat(cfg, ws, toks)
+        poisoned = flat.at[:cfg.vocab_size].set(1e9)
+        tok = jnp.array([3], jnp.int32)
+        a = M.decode_flat(cfg, ws, tok, jnp.int32(8), flat)
+        b = M.decode_flat(cfg, ws, tok, jnp.int32(8), poisoned)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,67 @@
+//! Bench + regeneration of paper Figure 1 (Perfetto kernel trace).
+//!
+//! Writes the Figure 1 artifact (Chrome-trace JSON of a decode timeline
+//! with per-kernel spans) to `target/figure1_trace.json` and benches the
+//! trace pipeline: synthesis, recording, JSON export, HTA analysis.
+
+use elana::benchkit::{bench, section};
+use elana::hwsim::{self, device, Workload};
+use elana::models;
+use elana::trace::{self, TraceRecorder};
+
+fn build_recorder() -> TraceRecorder {
+    let arch = models::lookup("llama-3.1-8b").unwrap();
+    let rig = device::Rig::single(device::a6000());
+    let w = Workload::new(1, 512, 512);
+    let sim = hwsim::simulate(&arch, &rig, &w);
+
+    let recorder = TraceRecorder::new();
+    recorder.record("prefill", "phase", 0, 0.0, sim.ttft.seconds * 1e6);
+    recorder.import_kernels(
+        &hwsim::synthesize_kernels(
+            &arch, &rig,
+            hwsim::prefill_cost(&arch, w.batch, w.prompt_len),
+            sim.ttft.seconds),
+        0.0, 1);
+    let mut t = sim.ttft.seconds;
+    for (i, &step) in sim.step_seconds.iter().enumerate().take(4) {
+        recorder.record(format!("decode[{i}]"), "phase", 0, t * 1e6,
+                        step * 1e6);
+        recorder.import_kernels(
+            &hwsim::synthesize_kernels(
+                &arch, &rig,
+                hwsim::decode_cost(&arch, w.batch, w.prompt_len + i),
+                step),
+            t * 1e6, 1);
+        t += step;
+    }
+    recorder
+}
+
+fn main() {
+    section("Figure 1 — Perfetto kernel trace (regenerated)");
+    let recorder = build_recorder();
+    let path = "target/figure1_trace.json";
+    trace::perfetto::write_chrome_trace(
+        &recorder, "ELANA Llama-3.1-8B on A6000", path)
+        .expect("write trace");
+    println!("wrote {path} ({} events) — open in https://ui.perfetto.dev",
+             recorder.len());
+    print!("{}", trace::analyze(&recorder).render(8));
+
+    section("trace pipeline hot path");
+    let arch = models::lookup("llama-3.1-8b").unwrap();
+    let rig = device::Rig::single(device::a6000());
+    let cost = hwsim::prefill_cost(&arch, 1, 512);
+    bench("synthesize_kernels(32-layer prefill)", || {
+        std::hint::black_box(hwsim::synthesize_kernels(&arch, &rig, cost,
+                                                       0.094));
+    });
+    bench("chrome trace JSON export (~1.2k events)", || {
+        std::hint::black_box(trace::to_chrome_trace_json(&recorder,
+                                                         "bench"));
+    });
+    bench("HTA analyze (~1.2k events)", || {
+        std::hint::black_box(trace::analyze(&recorder));
+    });
+}

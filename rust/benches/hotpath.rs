@@ -1,0 +1,130 @@
+//! End-to-end + micro hot-path benches for the §Perf pass.
+//!
+//! Covers the request-path costs the profiler adds around the engine
+//! (these must stay negligible vs the measured phases) and — when
+//! artifacts are present — the real engine's prefill/decode steps on the
+//! PJRT CPU runtime.
+
+use elana::benchkit::{bench, section, BenchConfig};
+use elana::coordinator::batcher::{plan_batch, BatchPolicy};
+use elana::coordinator::request::ServingRequest;
+use elana::engine::{GreedySampler, InferenceEngine, Sampler, TokenBatch};
+use elana::runtime::{weights, Manifest};
+use elana::util::json::Json;
+use elana::util::stats::Summary;
+use elana::util::Rng;
+use elana::workload::PromptGen;
+
+fn main() {
+    section("profiler-side hot paths (overhead around the engine)");
+
+    let mut rng = Rng::new(1);
+    let samples: Vec<f64> = (0..100).map(|_| rng.f64_in(0.02, 0.03)).collect();
+    bench("Summary::from_samples(100)", || {
+        std::hint::black_box(Summary::from_samples(&samples));
+    });
+
+    let mut gen = PromptGen::new(4096, 2);
+    bench("PromptGen 512-token prompt", || {
+        std::hint::black_box(gen.prompt(512));
+    });
+
+    let logits: Vec<f32> = (0..4096).map(|i| (i % 97) as f32 * 0.01).collect();
+    bench("GreedySampler over 4k vocab", || {
+        std::hint::black_box(GreedySampler.sample(&logits, 1, 4096));
+    });
+
+    let policy = BatchPolicy {
+        allowed_batches: vec![1, 4],
+        prompt_buckets: vec![16, 64],
+        max_seq_len: 128,
+        max_wait_s: 0.02,
+    };
+    bench("plan_batch(4 requests)", || {
+        let reqs: Vec<_> = (0..4)
+            .map(|i| ServingRequest::new(i, vec![1; 24], 8, 0.0))
+            .collect();
+        std::hint::black_box(plan_batch(&policy, reqs).unwrap());
+    });
+
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json")
+        .ok();
+    if let Some(text) = &manifest_text {
+        bench("parse manifest.json", || {
+            std::hint::black_box(Json::parse(text).unwrap());
+        });
+    }
+
+    bench("i32 literal (1x64 tokens)", || {
+        let toks = vec![7i32; 64];
+        std::hint::black_box(weights::i32_literal(&[1, 64], &toks).unwrap());
+    });
+    bench("f32 zeros literal (tiny KV cache 128KB)", || {
+        std::hint::black_box(
+            weights::zeros_literal(&[4, 1, 2, 128, 32]).unwrap());
+    });
+
+    // ---- real engine (needs artifacts) --------------------------------
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("\n(artifacts missing — engine benches skipped; run \
+                  `make artifacts`)");
+        return;
+    };
+    section("real engine on PJRT CPU (elana-tiny)");
+    let mut engine = InferenceEngine::load_precompiled(&manifest,
+                                                       "elana-tiny")
+        .expect("engine");
+    let mut pg = PromptGen::new(engine.model().vocab_size(), 3);
+
+    let slow = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 40,
+        target_cv: 0.10,
+        max_time: std::time::Duration::from_secs(10),
+    };
+    let p16 = pg.batch(1, 16);
+    elana::benchkit::bench_with("prefill b=1 L=16", slow, &mut || {
+        std::hint::black_box(engine.prefill_once(&p16).unwrap());
+    });
+    let p64 = pg.batch(1, 64);
+    elana::benchkit::bench_with("prefill b=1 L=64", slow, &mut || {
+        std::hint::black_box(engine.prefill_once(&p64).unwrap());
+    });
+    let p4 = pg.batch(4, 16);
+    elana::benchkit::bench_with("prefill b=4 L=16", slow, &mut || {
+        std::hint::black_box(engine.prefill_once(&p4).unwrap());
+    });
+    elana::benchkit::bench_with("decode step b=1 (incl cache thread)", slow,
+                                &mut || {
+        std::hint::black_box(engine.decode_probe(&p16, 1).unwrap());
+    });
+    elana::benchkit::bench_with("generate b=1 16+8 (TTLT loop)", slow,
+                                &mut || {
+        std::hint::black_box(engine.generate(&p16, 8).unwrap());
+    });
+
+    let hybrid = InferenceEngine::load_precompiled(&manifest,
+                                                   "elana-tiny-hybrid");
+    if let Ok(mut engine) = hybrid {
+        let p = PromptGen::new(engine.model().vocab_size(), 5).batch(1, 16);
+        elana::benchkit::bench_with("hybrid prefill b=1 L=16", slow,
+                                    &mut || {
+            std::hint::black_box(engine.prefill_once(&p).unwrap());
+        });
+    }
+
+    let small = InferenceEngine::load_precompiled(&manifest, "elana-small");
+    if let Ok(mut engine) = small {
+        let p = PromptGen::new(engine.model().vocab_size(), 5).batch(1, 64);
+        elana::benchkit::bench_with("elana-small prefill b=1 L=64", slow,
+                                    &mut || {
+            std::hint::black_box(engine.prefill_once(&p).unwrap());
+        });
+        elana::benchkit::bench_with("elana-small decode step b=1", slow,
+                                    &mut || {
+            std::hint::black_box(engine.decode_probe(&p, 1).unwrap());
+        });
+    }
+    let _ = TokenBatch::new(1, 1, vec![0]).unwrap();
+}

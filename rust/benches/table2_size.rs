@@ -1,0 +1,42 @@
+//! Bench + regeneration of paper Table 2 (model & cache size).
+//!
+//! Prints the table (exact SI-GB cells for Llama/Qwen; derived for
+//! Nemotron) and micro-benches the analytic size paths that `elana size`
+//! exercises.
+
+use elana::benchkit::{bench, section};
+use elana::models::{self, registry};
+use elana::profiler::{self, report};
+use elana::util::units::MemUnit;
+
+fn main() {
+    section("Table 2 — model & cache size (regenerated)");
+    let rows = profiler::size_report(&profiler::size::TABLE2_MODELS,
+                                     &profiler::size::TABLE2_POINTS)
+        .expect("size report");
+    print!("{}", report::render_size_table(
+        &rows, &profiler::size::TABLE2_POINTS, MemUnit::Si));
+    println!("paper:   Llama-3.1-8B   16.06  0.13  17.18  34.36");
+    println!("paper:   Qwen-2.5-7B    15.23  0.06   7.52  15.03");
+    println!("paper:   Nemotron-H-8B  16.20  0.05   3.32   6.64  \
+              (cache cells underivable from public configs; see \
+              EXPERIMENTS.md)");
+
+    section("size analytics hot path");
+    let llama = registry::llama31_8b();
+    let nh = registry::nemotron_h_8b();
+    bench("param_breakdown(llama-3.1-8b)", || {
+        std::hint::black_box(models::param_breakdown(&llama));
+    });
+    bench("param_breakdown(nemotron-h-8b)", || {
+        std::hint::black_box(models::param_breakdown(&nh));
+    });
+    bench("cache_bytes(llama, 128, 2048)", || {
+        std::hint::black_box(models::cache_bytes(&llama, 128, 2048));
+    });
+    bench("full table2 report (3 models x 3 points)", || {
+        std::hint::black_box(profiler::size_report(
+            &profiler::size::TABLE2_MODELS,
+            &profiler::size::TABLE2_POINTS).unwrap());
+    });
+}

@@ -1,0 +1,62 @@
+//! Bench + regeneration of paper Table 3 (A6000 latency & energy).
+//!
+//! Regenerates all 9 rows with the calibrated hwsim (energy measured
+//! through the sensor-playback pipeline), prints ours-vs-paper deltas,
+//! and micro-benches the simulation + playback paths.
+
+use elana::benchkit::{bench, section};
+use elana::config;
+use elana::hwsim::{self, device, Workload};
+use elana::models;
+use elana::profiler;
+
+const PAPER: [[f64; 6]; 9] = [
+    [94.30, 25.91, 24.84, 6.80, 12859.85, 3533.09],
+    [88.41, 24.29, 23.15, 6.44, 12073.26, 3343.91],
+    [87.72, 24.00, 24.33, 6.67, 12593.76, 3437.56],
+    [1325.05, 476.50, 31.29, 10.94, 17329.35, 6131.45],
+    [1192.98, 248.89, 26.48, 7.73, 14823.56, 5255.14],
+    [1337.83, 478.82, 39.33, 13.86, 21300.36, 7499.34],
+    [2788.39, 1044.31, 36.16, 12.72, 39935.79, 14219.00],
+    [2454.50, 887.11, 28.66, 10.03, 32031.05, 11432.51],
+    [2752.54, 1007.14, 39.40, 13.94, 42658.35, 15001.54],
+];
+
+fn main() {
+    section("Table 3 — A6000 latency & energy (regenerated)");
+    println!("{:<16} {:<22} {:>9} {:>9} {:>8} {:>8} {:>10} {:>9}  ratio-range",
+             "model", "workload", "TTFT", "J/Prom", "TPOT", "J/Tok",
+             "TTLT", "J/Req");
+    let suite = config::table3_suite();
+    for (spec, want) in suite.specs.iter().zip(&PAPER) {
+        let o = profiler::profile_simulated(spec).expect("profile");
+        let got = o.row();
+        let ratios: Vec<f64> =
+            got.iter().zip(want).map(|(g, w)| g / w).collect();
+        let lo = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ratios.iter().cloned().fold(0.0, f64::max);
+        println!("{:<16} {:<22} {:>9.2} {:>9.2} {:>8.2} {:>8.2} {:>10.1} \
+                  {:>9.1}  [{lo:.2}x..{hi:.2}x]",
+                 o.model, o.workload.label(), got[0], got[1], got[2],
+                 got[3], got[4], got[5]);
+    }
+    println!("(paper row 1: 94.30  25.91  24.84  6.80  12859.85  3533.09)");
+
+    section("simulation hot path");
+    let arch = models::lookup("llama-3.1-8b").unwrap();
+    let rig1 = device::Rig::single(device::a6000());
+    let rig4 = device::a6000_x4();
+    bench("simulate(llama-8b, a6000, 512+512)", || {
+        std::hint::black_box(hwsim::simulate(&arch, &rig1,
+                                             &Workload::new(1, 512, 512)));
+    });
+    bench("simulate(llama-8b, 4xa6000, b64 1024+1024)", || {
+        std::hint::black_box(hwsim::simulate(
+            &arch, &rig4, &Workload::new(64, 1024, 1024)));
+    });
+    bench("profile_simulated incl. sensor playback", || {
+        let spec = profiler::ProfileSpec::new(
+            "llama-3.1-8b", "a6000", Workload::new(1, 512, 512));
+        std::hint::black_box(profiler::profile_simulated(&spec).unwrap());
+    });
+}

@@ -1,0 +1,58 @@
+//! Bench + regeneration of paper Table 4 (Jetson AGX Thor / Orin Nano).
+
+use elana::benchkit::{bench, section};
+use elana::config;
+use elana::hwsim::{self, device, Workload};
+use elana::models;
+use elana::profiler;
+
+const PAPER: [[f64; 6]; 13] = [
+    [142.92, 0.42, 48.73, 0.06, 11601.61, 47.30],
+    [249.89, 0.80, 60.66, 0.08, 14930.47, 60.21],
+    [278.0, 1.12, 48.69, 0.06, 23590.22, 98.61],
+    [359.30, 1.53, 61.43, 0.08, 30177.97, 123.94],
+    [147.49, 7.40, 97.60, 1.27, 32105.50, 633.19],
+    [115.27, 6.39, 61.22, 0.88, 30875.60, 610.49],
+    [147.29, 7.08, 101.73, 1.29, 33671.79, 655.17],
+    [2154.89, 140.83, 115.51, 1.87, 42317.18, 1176.06],
+    [1879.78, 127.62, 109.18, 1.63, 35599.98, 930.34],
+    [2008.94, 127.15, 140.08, 2.26, 53096.56, 1287.82],
+    [4611.26, 296.29, 128.50, 2.37, 100605.99, 3041.79],
+    [3848.15, 261.63, 117.19, 1.84, 78470.34, 2168.19],
+    [4388.04, 266.26, 141.01, 2.35, 104250.55, 2617.65],
+];
+
+fn main() {
+    section("Table 4 — Jetson latency & energy (regenerated)");
+    println!("{:<16} {:<12} {:<20} {:>9} {:>8} {:>8} {:>7} {:>10} {:>8}  \
+              ratio-range",
+             "model", "device", "workload", "TTFT", "J/Prom", "TPOT",
+             "J/Tok", "TTLT", "J/Req");
+    let suite = config::table4_suite();
+    for (spec, want) in suite.specs.iter().zip(&PAPER) {
+        let o = profiler::profile_simulated(spec).expect("profile");
+        let got = o.row();
+        let ratios: Vec<f64> =
+            got.iter().zip(want).map(|(g, w)| g / w).collect();
+        let lo = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ratios.iter().cloned().fold(0.0, f64::max);
+        println!("{:<16} {:<12} {:<20} {:>9.2} {:>8.2} {:>8.2} {:>7.2} \
+                  {:>10.1} {:>8.1}  [{lo:.2}x..{hi:.2}x]",
+                 o.model, o.device, o.workload.label(), got[0], got[1],
+                 got[2], got[3], got[4], got[5]);
+    }
+
+    section("edge simulation hot path");
+    let llama1b = models::lookup("llama-3.2-1b").unwrap();
+    let orin = device::Rig::single(device::orin_nano());
+    let thor = device::Rig::single(device::agx_thor());
+    bench("simulate(llama-1b, orin-nano, 256+256)", || {
+        std::hint::black_box(hwsim::simulate(&llama1b, &orin,
+                                             &Workload::new(1, 256, 256)));
+    });
+    let llama8b = models::lookup("llama-3.1-8b").unwrap();
+    bench("simulate(llama-8b, thor, b16 1024+1024)", || {
+        std::hint::black_box(hwsim::simulate(
+            &llama8b, &thor, &Workload::new(16, 1024, 1024)));
+    });
+}

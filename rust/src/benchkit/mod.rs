@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `cargo bench` targets (`harness = false` binaries): each
+//! bench warms up, then runs adaptive batches of iterations until the
+//! coefficient of variation stabilizes or a time budget is hit, and
+//! prints a criterion-style summary line. Also provides `Table`
+//! rendering so every paper-table bench prints the rows it regenerates.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn render(&self) -> String {
+        let m = self.summary.mean;
+        let (scale, unit) = scale_for(m);
+        format!(
+            "{:<44} time: [{:.3} {unit} ± {:.3} {unit}]  (n={}, p50 {:.3} {unit})",
+            self.name,
+            m * scale,
+            self.summary.std * scale,
+            self.iters,
+            self.summary.p50 * scale,
+        )
+    }
+}
+
+fn scale_for(seconds: f64) -> (f64, &'static str) {
+    if seconds >= 1.0 {
+        (1.0, "s")
+    } else if seconds >= 1e-3 {
+        (1e3, "ms")
+    } else if seconds >= 1e-6 {
+        (1e6, "µs")
+    } else {
+        (1e9, "ns")
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop early once CV drops below this.
+    pub target_cv: f64,
+    /// Hard wall-clock budget for one benchmark.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target_cv: 0.05,
+            max_time: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Run one benchmark and print its summary line.
+pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
+    bench_with(name, BenchConfig::default(), &mut f)
+}
+
+/// Run with explicit config.
+pub fn bench_with(name: &str, cfg: BenchConfig, f: &mut dyn FnMut())
+                  -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < cfg.max_iters && start.elapsed() < cfg.max_time {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= cfg.min_iters {
+            let s = Summary::from_samples(&samples).unwrap();
+            if s.cv() < cfg.target_cv {
+                break;
+            }
+        }
+    }
+    let summary = Summary::from_samples(&samples).expect("at least 1 iter");
+    let r = BenchResult { name: name.to_string(), iters: samples.len(),
+                          summary };
+    println!("{}", r.render());
+    r
+}
+
+/// Section header for bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 50,
+            target_cv: 10.0, // converge immediately after min_iters
+            max_time: Duration::from_secs(1),
+        };
+        let r = bench_with("noop", cfg, &mut || {
+            count += 1;
+        });
+        assert!(r.iters >= 5);
+        assert_eq!(count, r.iters + 2);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn time_budget_respected() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1_000_000,
+            target_cv: 0.0, // never converges
+            max_time: Duration::from_millis(50),
+        };
+        let start = Instant::now();
+        bench_with("sleepy", cfg, &mut || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(start.elapsed() < Duration::from_millis(300));
+    }
+
+    #[test]
+    fn render_picks_sensible_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            summary: Summary::from_samples(&[0.002, 0.002, 0.002]).unwrap(),
+        };
+        assert!(r.render().contains("ms"));
+    }
+}

@@ -1,0 +1,285 @@
+//! Command-line interface for the `elana` binary (hand-rolled: clap is
+//! unavailable offline).
+//!
+//! Mirrors the paper's "run a command from the terminal (elana)" design:
+//!
+//! ```text
+//! elana size   [--models a,b] [--unit si|gib] [--points 1x1024,...]
+//! elana latency --model M --device D --batch B --len P+G [--no-energy]
+//! elana suite  (table2|table3|table4|<file.json>)
+//! elana trace  --model M --device D --batch B --len P+G --out trace.json
+//! elana serve  --model M [--requests N] [--rate R]
+//! elana models
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::hwsim::Workload;
+use crate::util::units::{parse_workload_len, MemUnit};
+
+/// Parsed command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// Table 2: size + cache report.
+    Size {
+        models: Vec<String>,
+        unit: MemUnit,
+        points: Vec<(usize, usize)>,
+    },
+    /// Tables 3/4: one latency/energy row.
+    Latency {
+        model: String,
+        device: String,
+        workload: Workload,
+        energy: bool,
+        runs: Option<usize>,
+    },
+    /// A whole suite (built-in name or JSON path).
+    Suite { name: String },
+    /// Figure 1: record a trace and export Perfetto JSON.
+    Trace {
+        model: String,
+        device: String,
+        workload: Workload,
+        out: String,
+    },
+    /// Batched serving demo over the real engine.
+    Serve {
+        model: String,
+        requests: usize,
+        rate_rps: f64,
+    },
+    /// List registry models.
+    Models,
+    /// Print usage.
+    Help,
+    /// Print version.
+    Version,
+}
+
+/// Parse argv (without the program name).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let mut it = args.iter().peekable();
+    let Some(cmd) = it.next() else { return Ok(Command::Help) };
+
+    // collect --flag value / --flag pairs
+    let mut flags: Vec<(String, Option<String>)> = Vec::new();
+    let mut positional: Vec<String> = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let takes_value = it
+                .peek()
+                .map(|v| !v.starts_with("--"))
+                .unwrap_or(false);
+            let value = if takes_value {
+                Some(it.next().unwrap().clone())
+            } else {
+                None
+            };
+            flags.push((name.to_string(), value));
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    let get = |name: &str| -> Option<&str> {
+        flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    };
+    let has = |name: &str| flags.iter().any(|(n, _)| n == name);
+    let req = |name: &str| -> Result<String> {
+        get(name)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    };
+
+    let workload = || -> Result<Workload> {
+        let batch: usize = get("batch").unwrap_or("1").parse()
+            .map_err(|_| anyhow!("bad --batch"))?;
+        let len = get("len").unwrap_or("512+512");
+        let (p, g) = parse_workload_len(len)
+            .ok_or_else(|| anyhow!("bad --len `{len}` (want P+G)"))?;
+        Ok(Workload::new(batch, p, g))
+    };
+
+    match cmd.as_str() {
+        "size" => {
+            let models = get("models")
+                .map(|m| m.split(',').map(str::to_string).collect())
+                .unwrap_or_else(|| {
+                    crate::profiler::size::TABLE2_MODELS
+                        .iter()
+                        .map(|s| s.to_string())
+                        .collect()
+                });
+            let unit = MemUnit::parse(get("unit").unwrap_or("si"))
+                .ok_or_else(|| anyhow!("bad --unit (si|gib)"))?;
+            let points = match get("points") {
+                None => crate::profiler::size::TABLE2_POINTS.to_vec(),
+                Some(s) => s
+                    .split(',')
+                    .map(|p| {
+                        let (b, l) = p
+                            .split_once('x')
+                            .ok_or_else(|| anyhow!("bad point `{p}` (BxL)"))?;
+                        Ok((b.parse()?, l.parse()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            Ok(Command::Size { models, unit, points })
+        }
+        "latency" | "energy" => Ok(Command::Latency {
+            model: req("model")?,
+            device: get("device").unwrap_or("a6000").to_string(),
+            workload: workload()?,
+            energy: cmd == "energy" || !has("no-energy"),
+            runs: get("runs").map(|r| r.parse()).transpose()
+                .map_err(|_| anyhow!("bad --runs"))?,
+        }),
+        "suite" => Ok(Command::Suite {
+            name: positional
+                .first()
+                .cloned()
+                .ok_or_else(|| anyhow!("suite needs a name or file"))?,
+        }),
+        "trace" => Ok(Command::Trace {
+            model: req("model")?,
+            device: get("device").unwrap_or("a6000").to_string(),
+            workload: workload()?,
+            out: get("out").unwrap_or("trace.json").to_string(),
+        }),
+        "serve" => Ok(Command::Serve {
+            model: get("model").unwrap_or("elana-tiny").to_string(),
+            requests: get("requests").unwrap_or("16").parse()
+                .map_err(|_| anyhow!("bad --requests"))?,
+            rate_rps: get("rate").unwrap_or("50").parse()
+                .map_err(|_| anyhow!("bad --rate"))?,
+        }),
+        "models" => Ok(Command::Models),
+        "help" | "-h" | "--help" => Ok(Command::Help),
+        "version" | "-V" | "--version" => Ok(Command::Version),
+        other => bail!("unknown command `{other}` (try `elana help`)"),
+    }
+}
+
+pub const USAGE: &str = "\
+ELANA — energy and latency analyzer for LLMs (reproduction)
+
+USAGE:
+  elana size    [--models m1,m2] [--unit si|gib] [--points 1x1024,128x1024]
+  elana latency --model MODEL --device a6000|4xa6000|thor|orin|a100|h100|cpu
+                [--batch B] [--len P+G] [--runs N] [--no-energy]
+  elana energy  (latency with energy always on)
+  elana suite   table2|table3|table4|path/to/suite.json
+  elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
+                [--out trace.json]
+  elana serve   [--model elana-tiny] [--requests N] [--rate RPS]
+  elana models
+  elana help | version
+
+Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parse_size_defaults() {
+        let c = parse(&argv("size")).unwrap();
+        match c {
+            Command::Size { models, unit, points } => {
+                assert_eq!(models.len(), 3);
+                assert_eq!(unit, MemUnit::Si);
+                assert_eq!(points.len(), 3);
+            }
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_size_custom() {
+        let c = parse(&argv(
+            "size --models llama-3.1-8b --unit gib --points 1x1024,8x2048"))
+            .unwrap();
+        match c {
+            Command::Size { models, unit, points } => {
+                assert_eq!(models, vec!["llama-3.1-8b"]);
+                assert_eq!(unit, MemUnit::Binary);
+                assert_eq!(points, vec![(1, 1024), (8, 2048)]);
+            }
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_latency() {
+        let c = parse(&argv(
+            "latency --model llama-3.1-8b --device a6000 --batch 1 \
+             --len 512+512 --runs 100")).unwrap();
+        match c {
+            Command::Latency { model, device, workload, energy, runs } => {
+                assert_eq!(model, "llama-3.1-8b");
+                assert_eq!(device, "a6000");
+                assert_eq!(workload.batch, 1);
+                assert_eq!(workload.prompt_len, 512);
+                assert_eq!(workload.gen_len, 512);
+                assert!(energy);
+                assert_eq!(runs, Some(100));
+            }
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_no_energy_flag() {
+        let c = parse(&argv("latency --model m --no-energy")).unwrap();
+        match c {
+            Command::Latency { energy, .. } => assert!(!energy),
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        assert!(parse(&argv("latency --device a6000")).is_err());
+    }
+
+    #[test]
+    fn bad_len_is_error() {
+        assert!(parse(&argv("latency --model m --len 512")).is_err());
+    }
+
+    #[test]
+    fn parse_suite_trace_serve() {
+        assert_eq!(parse(&argv("suite table3")).unwrap(),
+                   Command::Suite { name: "table3".into() });
+        match parse(&argv("trace --model m --out /tmp/t.json")).unwrap() {
+            Command::Trace { out, .. } => assert_eq!(out, "/tmp/t.json"),
+            c => panic!("{c:?}"),
+        }
+        match parse(&argv("serve --requests 8 --rate 10")).unwrap() {
+            Command::Serve { model, requests, rate_rps } => {
+                assert_eq!(model, "elana-tiny");
+                assert_eq!(requests, 8);
+                assert_eq!(rate_rps, 10.0);
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(parse(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn empty_args_is_help() {
+        assert_eq!(parse(&[]).unwrap(), Command::Help);
+    }
+}

@@ -1,0 +1,185 @@
+//! Profile-suite configuration files (JSON, parsed with `util::json`).
+//!
+//! A suite file describes a list of profiling rows to run — the way the
+//! paper's tables batch many (model, device, workload) points:
+//!
+//! ```json
+//! {
+//!   "suite": "table3",
+//!   "rows": [
+//!     {"model": "llama-3.1-8b", "device": "a6000",
+//!      "batch": 1, "prompt_len": 512, "gen_len": 512}
+//!   ],
+//!   "energy": true,
+//!   "unit": "si"
+//! }
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::hwsim::Workload;
+use crate::profiler::ProfileSpec;
+use crate::util::json::Json;
+use crate::util::units::MemUnit;
+
+/// A parsed suite.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: String,
+    pub specs: Vec<ProfileSpec>,
+}
+
+impl Suite {
+    pub fn parse(text: &str) -> Result<Suite> {
+        let root = Json::parse(text).context("parsing suite JSON")?;
+        let name = root
+            .get("suite")
+            .and_then(|s| s.as_str())
+            .unwrap_or("unnamed")
+            .to_string();
+        let energy = root
+            .get("energy")
+            .and_then(|b| b.as_bool())
+            .unwrap_or(true);
+        let unit = root
+            .get("unit")
+            .and_then(|u| u.as_str())
+            .map(|u| MemUnit::parse(u)
+                 .ok_or_else(|| anyhow!("bad unit `{u}`")))
+            .transpose()?
+            .unwrap_or(MemUnit::Si);
+        let seed = root.get("seed").and_then(|s| s.as_u64()).unwrap_or(0);
+
+        let rows = root
+            .req("rows")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("rows must be an array"))?;
+        let specs = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let field = |k: &str| -> Result<usize> {
+                    r.req(k)?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("row {i}: bad `{k}`"))
+                };
+                let mut spec = ProfileSpec::new(
+                    r.req("model")?.as_str()
+                        .ok_or_else(|| anyhow!("row {i}: bad model"))?,
+                    r.req("device")?.as_str()
+                        .ok_or_else(|| anyhow!("row {i}: bad device"))?,
+                    Workload::new(field("batch")?, field("prompt_len")?,
+                                  field("gen_len")?),
+                );
+                spec.energy = energy;
+                spec.mem_unit = unit;
+                spec.seed = seed;
+                if let Some(n) = r.get("runs").and_then(|v| v.as_usize()) {
+                    spec.latency_runs = n;
+                }
+                Ok(spec)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Suite { name, specs })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Suite> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading suite {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// The paper's Table 3 as a built-in suite.
+pub fn table3_suite() -> Suite {
+    let rows: Vec<(&str, &str, usize, usize, usize)> = vec![
+        ("llama-3.1-8b", "a6000", 1, 512, 512),
+        ("qwen-2.5-7b", "a6000", 1, 512, 512),
+        ("nemotron-h-8b", "a6000", 1, 512, 512),
+        ("llama-3.1-8b", "4xa6000", 64, 512, 512),
+        ("qwen-2.5-7b", "4xa6000", 64, 512, 512),
+        ("nemotron-h-8b", "4xa6000", 64, 512, 512),
+        ("llama-3.1-8b", "4xa6000", 64, 1024, 1024),
+        ("qwen-2.5-7b", "4xa6000", 64, 1024, 1024),
+        ("nemotron-h-8b", "4xa6000", 64, 1024, 1024),
+    ];
+    suite_from_rows("table3 (A6000)", rows)
+}
+
+/// The paper's Table 4 as a built-in suite.
+pub fn table4_suite() -> Suite {
+    let rows: Vec<(&str, &str, usize, usize, usize)> = vec![
+        ("llama-3.2-1b", "orin", 1, 256, 256),
+        ("qwen2.5-1.5b", "orin", 1, 256, 256),
+        ("llama-3.2-1b", "orin", 1, 512, 512),
+        ("qwen2.5-1.5b", "orin", 1, 512, 512),
+        ("llama-3.1-8b", "thor", 1, 512, 512),
+        ("qwen-2.5-7b", "thor", 1, 512, 512),
+        ("nemotron-h-8b", "thor", 1, 512, 512),
+        ("llama-3.1-8b", "thor", 16, 512, 512),
+        ("qwen-2.5-7b", "thor", 16, 512, 512),
+        ("nemotron-h-8b", "thor", 16, 512, 512),
+        ("llama-3.1-8b", "thor", 16, 1024, 1024),
+        ("qwen-2.5-7b", "thor", 16, 1024, 1024),
+        ("nemotron-h-8b", "thor", 16, 1024, 1024),
+    ];
+    suite_from_rows("table4 (Jetson)", rows)
+}
+
+fn suite_from_rows(name: &str,
+                   rows: Vec<(&str, &str, usize, usize, usize)>) -> Suite {
+    Suite {
+        name: name.to_string(),
+        specs: rows
+            .into_iter()
+            .map(|(m, d, b, p, g)| {
+                ProfileSpec::new(m, d, Workload::new(b, p, g))
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_suite() {
+        let s = Suite::parse(
+            r#"{"suite": "t", "rows": [
+                {"model": "llama-3.1-8b", "device": "a6000",
+                 "batch": 1, "prompt_len": 512, "gen_len": 512}]}"#)
+            .unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.specs.len(), 1);
+        assert_eq!(s.specs[0].workload.batch, 1);
+        assert!(s.specs[0].energy);
+    }
+
+    #[test]
+    fn parse_options() {
+        let s = Suite::parse(
+            r#"{"rows": [{"model": "m", "device": "d", "batch": 2,
+                          "prompt_len": 64, "gen_len": 32, "runs": 7}],
+                "energy": false, "unit": "gib", "seed": 5}"#)
+            .unwrap();
+        let spec = &s.specs[0];
+        assert!(!spec.energy);
+        assert_eq!(spec.mem_unit, MemUnit::Binary);
+        assert_eq!(spec.seed, 5);
+        assert_eq!(spec.latency_runs, 7);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Suite::parse(r#"{"rows": [{"model": "m"}]}"#).is_err());
+        assert!(Suite::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn builtin_suites_match_paper_row_counts() {
+        assert_eq!(table3_suite().specs.len(), 9);  // 3 models x 3 blocks
+        assert_eq!(table4_suite().specs.len(), 13); // 4 + 9 Jetson rows
+    }
+}

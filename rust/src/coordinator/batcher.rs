@@ -1,0 +1,224 @@
+//! Dynamic batching policy constrained to AOT-compiled shapes.
+//!
+//! The runtime only has executables for discrete batch sizes and prompt
+//! buckets (the fixed-shape analogue of CUDA-graph bucketing), so the
+//! batcher must (a) pick a compiled batch size ≥ the number of waiting
+//! requests (padding with dummy rows it later discards), (b) pad every
+//! prompt to the batch's longest prompt, and (c) cap generation length
+//! so the longest (prompt + gen) fits the model's max_seq_len.
+
+use anyhow::{ensure, Result};
+
+use super::request::ServingRequest;
+
+/// Batching policy parameters.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Batch sizes with compiled executables (ascending).
+    pub allowed_batches: Vec<usize>,
+    /// Prompt buckets with compiled prefill executables (ascending).
+    pub prompt_buckets: Vec<usize>,
+    /// Model context limit.
+    pub max_seq_len: usize,
+    /// Max time the head-of-line request may wait for co-batching.
+    pub max_wait_s: f64,
+}
+
+impl BatchPolicy {
+    pub fn max_batch(&self) -> usize {
+        self.allowed_batches.last().copied().unwrap_or(1)
+    }
+
+    /// Smallest allowed batch size ≥ n.
+    pub fn fit_batch(&self, n: usize) -> Option<usize> {
+        self.allowed_batches.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest prompt bucket ≥ len.
+    pub fn fit_bucket(&self, len: usize) -> Option<usize> {
+        self.prompt_buckets.iter().copied().find(|&b| b >= len)
+    }
+}
+
+/// A formed batch, ready for the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPlan {
+    /// Requests included (in queue order).
+    pub requests: Vec<ServingRequest>,
+    /// Compiled batch size actually used (>= requests.len()).
+    pub exec_batch: usize,
+    /// Prompt bucket: every row padded to this length.
+    pub padded_prompt_len: usize,
+    /// Generation length (min over requests, capped by max_seq_len).
+    pub gen_len: usize,
+    /// Row-major (exec_batch, padded_prompt_len) tokens, dummy rows = 0.
+    pub tokens: Vec<i32>,
+}
+
+impl BatchPlan {
+    /// Number of real (non-padding) rows.
+    pub fn real_rows(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Fraction of compute wasted on batch/length padding — the batching
+    /// efficiency metric the server reports.
+    pub fn padding_waste(&self) -> f64 {
+        let used: usize = self.requests.iter().map(|r| r.prompt.len()).sum();
+        let total = self.exec_batch * self.padded_prompt_len;
+        1.0 - used as f64 / total as f64
+    }
+}
+
+/// Form a batch plan from waiting requests (truncates to the policy's
+/// max batch; callers re-queue the remainder).
+pub fn plan_batch(policy: &BatchPolicy, mut waiting: Vec<ServingRequest>)
+                  -> Result<(BatchPlan, Vec<ServingRequest>)> {
+    ensure!(!waiting.is_empty(), "cannot plan an empty batch");
+    let take = waiting.len().min(policy.max_batch());
+    let rest = waiting.split_off(take);
+    let requests = waiting;
+
+    let exec_batch = policy
+        .fit_batch(requests.len())
+        .ok_or_else(|| anyhow::anyhow!(
+            "no compiled batch size fits {} requests (allowed: {:?})",
+            requests.len(), policy.allowed_batches))?;
+
+    let longest = requests.iter().map(|r| r.prompt.len()).max().unwrap();
+    let padded_prompt_len = policy
+        .fit_bucket(longest)
+        .ok_or_else(|| anyhow::anyhow!(
+            "prompt of {longest} tokens exceeds buckets {:?}",
+            policy.prompt_buckets))?;
+
+    // generation budget: shortest request gen, capped by context space
+    let space = policy.max_seq_len - padded_prompt_len;
+    let gen_len = requests
+        .iter()
+        .map(|r| r.gen_len)
+        .min()
+        .unwrap()
+        .min(space)
+        .max(1);
+
+    let mut tokens = vec![0i32; exec_batch * padded_prompt_len];
+    for (row, r) in requests.iter().enumerate() {
+        let dst = &mut tokens[row * padded_prompt_len..];
+        dst[..r.prompt.len()].copy_from_slice(&r.prompt);
+    }
+
+    Ok((BatchPlan { requests, exec_batch, padded_prompt_len, gen_len,
+                    tokens },
+        rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::property;
+    use crate::util::Rng;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            allowed_batches: vec![1, 4],
+            prompt_buckets: vec![16, 64],
+            max_seq_len: 128,
+            max_wait_s: 0.02,
+        }
+    }
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> ServingRequest {
+        ServingRequest::new(id, vec![1; prompt_len], gen, 0.0)
+    }
+
+    #[test]
+    fn single_request_uses_batch_1() {
+        let (plan, rest) = plan_batch(&policy(), vec![req(0, 10, 8)]).unwrap();
+        assert_eq!(plan.exec_batch, 1);
+        assert_eq!(plan.padded_prompt_len, 16);
+        assert_eq!(plan.gen_len, 8);
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn three_requests_pad_to_batch_4() {
+        let reqs = vec![req(0, 10, 8), req(1, 12, 8), req(2, 16, 8)];
+        let (plan, _) = plan_batch(&policy(), reqs).unwrap();
+        assert_eq!(plan.exec_batch, 4);
+        assert_eq!(plan.real_rows(), 3);
+        // dummy row is all zeros
+        let last = &plan.tokens[3 * 16..4 * 16];
+        assert!(last.iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn overflow_requeued() {
+        let reqs: Vec<_> = (0..6).map(|i| req(i, 8, 4)).collect();
+        let (plan, rest) = plan_batch(&policy(), reqs).unwrap();
+        assert_eq!(plan.real_rows(), 4);
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].id, 4, "remainder keeps queue order");
+    }
+
+    #[test]
+    fn prompts_padded_to_common_bucket() {
+        let reqs = vec![req(0, 10, 4), req(1, 30, 4)];
+        let (plan, _) = plan_batch(&policy(), reqs).unwrap();
+        assert_eq!(plan.padded_prompt_len, 64); // 30 needs the 64 bucket
+        // row 0's tail is padding zeros
+        assert_eq!(plan.tokens[10], 0);
+        assert_eq!(plan.tokens[64 + 29], 1);
+    }
+
+    #[test]
+    fn gen_len_capped_by_context_space() {
+        let reqs = vec![req(0, 60, 1000)];
+        let (plan, _) = plan_batch(&policy(), reqs).unwrap();
+        assert_eq!(plan.padded_prompt_len, 64);
+        assert_eq!(plan.gen_len, 64); // 128 - 64
+    }
+
+    #[test]
+    fn oversized_prompt_rejected() {
+        assert!(plan_batch(&policy(), vec![req(0, 100, 4)]).is_err());
+    }
+
+    #[test]
+    fn padding_waste_computed() {
+        let (plan, _) = plan_batch(&policy(), vec![req(0, 16, 4)]).unwrap();
+        assert_eq!(plan.padding_waste(), 0.0);
+        let (plan, _) = plan_batch(&policy(), vec![req(0, 8, 4)]).unwrap();
+        assert!((plan.padding_waste() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_plan_invariants() {
+        property(300, |rng: &mut Rng| {
+            let p = policy();
+            let n = rng.usize_in(1, 10);
+            let reqs: Vec<_> = (0..n)
+                .map(|i| req(i as u64, rng.usize_in(1, 64),
+                             rng.usize_in(1, 32)))
+                .collect();
+            let (plan, rest) = plan_batch(&p, reqs).unwrap();
+            // compiled-shape invariants
+            assert!(p.allowed_batches.contains(&plan.exec_batch));
+            assert!(p.prompt_buckets.contains(&plan.padded_prompt_len));
+            assert!(plan.exec_batch >= plan.real_rows());
+            assert_eq!(plan.tokens.len(),
+                       plan.exec_batch * plan.padded_prompt_len);
+            // every real prompt fits its row and survives verbatim
+            for (row, r) in plan.requests.iter().enumerate() {
+                assert!(r.prompt.len() <= plan.padded_prompt_len);
+                let got = &plan.tokens[row * plan.padded_prompt_len..]
+                    [..r.prompt.len()];
+                assert_eq!(got, &r.prompt[..]);
+            }
+            // context never overflows
+            assert!(plan.padded_prompt_len + plan.gen_len <= p.max_seq_len);
+            // conservation: taken + rest == submitted
+            assert_eq!(plan.real_rows() + rest.len(), n);
+        });
+    }
+}

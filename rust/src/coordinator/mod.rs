@@ -1,0 +1,19 @@
+//! Request coordinator: queue, dynamic batcher, serving loop.
+//!
+//! ELANA's TTLT workload "profiles the end-to-end latency of processing
+//! a batch of requests"; this module is the serving substrate that forms
+//! those batches the way an inference server would: a bounded request
+//! queue (backpressure), a dynamic batching policy constrained to the
+//! AOT-compiled batch sizes (the fixed-shape analogue of CUDA-graph
+//! bucketing), and a worker loop that drives the engine and reports
+//! per-request latency metrics.
+
+pub mod batcher;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use batcher::{BatchPlan, BatchPolicy};
+pub use queue::RequestQueue;
+pub use request::{Completion, ServingRequest};
+pub use server::{serve, ServerMetrics};

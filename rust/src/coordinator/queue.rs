@@ -1,0 +1,175 @@
+//! Bounded MPSC request queue with backpressure.
+//!
+//! Producers block (or fail fast with `try_push`) once `capacity`
+//! requests are waiting — the standard admission-control behaviour a
+//! serving front-end needs so a load spike degrades latency instead of
+//! memory.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::request::ServingRequest;
+
+/// Thread-safe bounded FIFO.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    q: VecDeque<ServingRequest>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        assert!(capacity > 0);
+        RequestQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, req: ServingRequest) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.q.push_back(req);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking push; Err(req) when full or closed.
+    pub fn try_push(&self, req: ServingRequest)
+                    -> Result<(), ServingRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.q.len() >= self.capacity {
+            return Err(req);
+        }
+        g.q.push_back(req);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` requests, waiting up to `wait` for the first one.
+    /// Returns an empty vec on timeout or when closed-and-drained.
+    pub fn pop_up_to(&self, max: usize, wait: Duration)
+                     -> Vec<ServingRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.q.is_empty() && !g.closed {
+            let (guard, _timeout) =
+                self.not_empty.wait_timeout(g, wait).unwrap();
+            g = guard;
+        }
+        let n = g.q.len().min(max);
+        let out: Vec<_> = g.q.drain(..n).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Close the queue: pushes fail, pops drain what remains.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> ServingRequest {
+        ServingRequest::new(id, vec![0; 4], 4, 0.0)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(10);
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        let got = q.pop_up_to(10, Duration::from_millis(1));
+        let ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pop_respects_max() {
+        let q = RequestQueue::new(10);
+        for i in 0..6 {
+            q.push(req(i));
+        }
+        assert_eq!(q.pop_up_to(4, Duration::from_millis(1)).len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn try_push_backpressure() {
+        let q = RequestQueue::new(2);
+        assert!(q.try_push(req(0)).is_ok());
+        assert!(q.try_push(req(1)).is_ok());
+        let rejected = q.try_push(req(2));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().id, 2);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_after_pop() {
+        let q = Arc::new(RequestQueue::new(1));
+        q.push(req(0));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(req(1)));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop_up_to(1, Duration::from_millis(1)).len(), 1);
+        assert!(h.join().unwrap());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_fails_pushes_and_drains() {
+        let q = RequestQueue::new(4);
+        q.push(req(0));
+        q.close();
+        assert!(!q.push(req(1)));
+        assert!(q.try_push(req(2)).is_err());
+        // leftover drains
+        assert_eq!(q.pop_up_to(4, Duration::from_millis(1)).len(), 1);
+        assert!(q.pop_up_to(4, Duration::from_millis(1)).is_empty());
+    }
+
+    #[test]
+    fn pop_times_out_empty() {
+        let q = RequestQueue::new(4);
+        let sw = crate::util::Stopwatch::start();
+        let got = q.pop_up_to(4, Duration::from_millis(20));
+        assert!(got.is_empty());
+        assert!(sw.elapsed_ms() >= 15.0);
+    }
+}

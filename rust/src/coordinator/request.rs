@@ -1,0 +1,44 @@
+//! Serving request / completion types.
+
+/// A queued generation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+    /// Queue-entry timestamp, seconds (coordinator clock).
+    pub enqueued_at: f64,
+}
+
+impl ServingRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, gen_len: usize,
+               enqueued_at: f64) -> ServingRequest {
+        ServingRequest { id, prompt, gen_len, enqueued_at }
+    }
+}
+
+/// A finished request with its latency decomposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time spent waiting in the queue before the batch formed, seconds.
+    pub queue_wait_s: f64,
+    /// Prefill latency of the batch that served this request.
+    pub ttft_s: f64,
+    /// End-to-end latency from dequeue to last token.
+    pub ttlt_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_fields() {
+        let r = ServingRequest::new(3, vec![1, 2, 3], 8, 1.5);
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt.len(), 3);
+        assert_eq!(r.gen_len, 8);
+    }
+}

@@ -1,0 +1,208 @@
+//! The serving loop: queue → batcher → engine → completions.
+//!
+//! Single-worker synchronous loop (the engine owns one PJRT client and
+//! the dev models are small): pull up to max-batch requests, plan a
+//! compiled-shape batch, run prefill + decode, emit per-request
+//! completions with the latency decomposition ELANA reports. Used by
+//! `examples/serve_profile.rs` to reproduce the paper's batched-request
+//! TTLT workloads on the real engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engine::{InferenceEngine, TokenBatch};
+use crate::util::timer::{Clock, SystemClock};
+
+use super::batcher::{plan_batch, BatchPolicy};
+use super::queue::RequestQueue;
+use super::request::{Completion, ServingRequest};
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub completions: Vec<Completion>,
+    pub batches_formed: usize,
+    /// Mean padding waste across batches (compiled-shape overhead).
+    pub mean_padding_waste: f64,
+    /// Total busy time of the engine, seconds.
+    pub busy_s: f64,
+    /// Wall time of the serving run, seconds.
+    pub wall_s: f64,
+}
+
+impl ServerMetrics {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        self.completions.len() as f64 / self.wall_s
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        let toks: usize = self.completions.iter()
+            .map(|c| c.tokens.len()).sum();
+        toks as f64 / self.wall_s
+    }
+
+    pub fn mean_ttlt_s(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().map(|c| c.ttlt_s).sum::<f64>()
+            / self.completions.len() as f64
+    }
+}
+
+/// Drain the queue until it is closed and empty, serving batches on the
+/// calling thread. Returns when every accepted request has completed.
+pub fn serve(engine: &mut InferenceEngine, queue: &RequestQueue,
+             policy: &BatchPolicy) -> Result<ServerMetrics> {
+    serve_with_clock(engine, queue, policy, &SystemClock)
+}
+
+pub fn serve_with_clock(engine: &mut InferenceEngine, queue: &RequestQueue,
+                        policy: &BatchPolicy, clock: &dyn Clock)
+                        -> Result<ServerMetrics> {
+    let mut metrics = ServerMetrics::default();
+    let t_start = clock.now();
+    let mut waste_sum = 0.0;
+    let mut carry: Vec<ServingRequest> = Vec::new();
+
+    loop {
+        // gather: carry-over first, then whatever is queued
+        let mut waiting = std::mem::take(&mut carry);
+        if waiting.len() < policy.max_batch() {
+            let more = queue.pop_up_to(
+                policy.max_batch() - waiting.len(),
+                Duration::from_secs_f64(policy.max_wait_s));
+            waiting.extend(more);
+        }
+        if waiting.is_empty() {
+            if queue.is_closed() && queue.is_empty() {
+                break;
+            }
+            continue;
+        }
+
+        let (plan, rest) = plan_batch(policy, waiting)?;
+        carry = rest;
+
+        let dequeue_t = clock.now();
+        let tb = TokenBatch::new(plan.exec_batch, plan.padded_prompt_len,
+                                 plan.tokens.clone())?;
+        let run = engine.generate(&tb, plan.gen_len)?;
+        let done_t = clock.now();
+
+        metrics.batches_formed += 1;
+        waste_sum += plan.padding_waste();
+        metrics.busy_s += done_t - dequeue_t;
+
+        for (row, req) in plan.requests.iter().enumerate() {
+            metrics.completions.push(Completion {
+                id: req.id,
+                tokens: run.tokens[row].clone(),
+                queue_wait_s: (dequeue_t - req.enqueued_at).max(0.0),
+                ttft_s: run.ttft.as_secs_f64(),
+                ttlt_s: done_t - dequeue_t,
+            });
+        }
+    }
+
+    metrics.wall_s = clock.now() - t_start;
+    if metrics.batches_formed > 0 {
+        metrics.mean_padding_waste = waste_sum / metrics.batches_formed as f64;
+    }
+    Ok(metrics)
+}
+
+/// Feed a request trace into the queue from a producer thread at its
+/// recorded arrival times (accelerated by `time_scale` < 1).
+pub fn feed_trace(queue: Arc<RequestQueue>,
+                  trace: crate::workload::RequestTrace, time_scale: f64)
+                  -> std::thread::JoinHandle<usize> {
+    std::thread::spawn(move || {
+        let clock = SystemClock;
+        let t0 = clock.now();
+        let mut accepted = 0;
+        for r in trace.requests {
+            let due = t0 + r.arrival_s * time_scale;
+            let now = clock.now();
+            if due > now {
+                std::thread::sleep(Duration::from_secs_f64(due - now));
+            }
+            let req = ServingRequest::new(r.id, r.prompt, r.gen_len,
+                                          clock.now());
+            if queue.push(req) {
+                accepted += 1;
+            }
+        }
+        queue.close();
+        accepted
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            allowed_batches: vec![1, 4],
+            prompt_buckets: vec![16, 64],
+            max_seq_len: 128,
+            max_wait_s: 0.01,
+        }
+    }
+
+    fn engine() -> Option<InferenceEngine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(dir).unwrap();
+        Some(InferenceEngine::load_precompiled(&m, "elana-tiny").unwrap())
+    }
+
+    #[test]
+    fn serves_all_queued_requests() {
+        let Some(mut e) = engine() else { return };
+        let q = RequestQueue::new(64);
+        let mut gen = crate::workload::PromptGen::new(512, 1);
+        for i in 0..6 {
+            q.push(ServingRequest::new(i, gen.prompt(12), 4, 0.0));
+        }
+        q.close();
+        let m = serve(&mut e, &q, &policy()).unwrap();
+        assert_eq!(m.completions.len(), 6);
+        let mut ids: Vec<u64> = m.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        assert!(m.batches_formed >= 2, "6 reqs / max 4 => >= 2 batches");
+        for c in &m.completions {
+            assert_eq!(c.tokens.len(), 4);
+            assert!(c.ttlt_s >= c.ttft_s);
+        }
+        assert!(m.throughput_rps() > 0.0);
+        assert!(m.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn trace_feeding_end_to_end() {
+        let Some(mut e) = engine() else { return };
+        let q = Arc::new(RequestQueue::new(16));
+        let trace = crate::workload::RequestTrace::poisson(
+            8, 200.0, 8, 16, 3, 512, 42);
+        let feeder = feed_trace(q.clone(), trace, 1.0);
+        let m = serve(&mut e, &q, &policy()).unwrap();
+        assert_eq!(feeder.join().unwrap(), 8);
+        assert_eq!(m.completions.len(), 8);
+        assert!(m.mean_ttlt_s() > 0.0);
+        assert!(m.wall_s >= m.busy_s);
+    }
+}

@@ -1,0 +1,80 @@
+//! Token batch layout: row-major (batch, prompt_len) prompts.
+
+use anyhow::{ensure, Result};
+
+/// A rectangular batch of prompts (ELANA profiles fixed-length random
+/// prompts per workload point, so ragged batches are padded upstream by
+//  the coordinator's batcher).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TokenBatch {
+    batch: usize,
+    prompt_len: usize,
+    tokens: Vec<i32>,
+}
+
+impl TokenBatch {
+    pub fn new(batch: usize, prompt_len: usize, tokens: Vec<i32>)
+               -> Result<TokenBatch> {
+        ensure!(batch > 0 && prompt_len > 0, "degenerate batch");
+        ensure!(tokens.len() == batch * prompt_len,
+                "token count {} != batch {batch} * prompt_len {prompt_len}",
+                tokens.len());
+        Ok(TokenBatch { batch, prompt_len, tokens })
+    }
+
+    /// Stack equal-length rows.
+    pub fn from_rows(rows: &[Vec<i32>]) -> Result<TokenBatch> {
+        ensure!(!rows.is_empty(), "empty batch");
+        let len = rows[0].len();
+        ensure!(rows.iter().all(|r| r.len() == len),
+                "ragged rows (pad upstream)");
+        let mut tokens = Vec::with_capacity(rows.len() * len);
+        for r in rows {
+            tokens.extend_from_slice(r);
+        }
+        TokenBatch::new(rows.len(), len, tokens)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn row(&self, b: usize) -> &[i32] {
+        &self.tokens[b * self.prompt_len..(b + 1) * self.prompt_len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_dimensions() {
+        assert!(TokenBatch::new(2, 3, vec![0; 6]).is_ok());
+        assert!(TokenBatch::new(2, 3, vec![0; 5]).is_err());
+        assert!(TokenBatch::new(0, 3, vec![]).is_err());
+    }
+
+    #[test]
+    fn from_rows_stacks() {
+        let tb = TokenBatch::from_rows(&[vec![1, 2], vec![3, 4]]).unwrap();
+        assert_eq!(tb.batch(), 2);
+        assert_eq!(tb.prompt_len(), 2);
+        assert_eq!(tb.row(1), &[3, 4]);
+        assert_eq!(tb.tokens(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn from_rows_rejects_ragged() {
+        assert!(TokenBatch::from_rows(&[vec![1], vec![2, 3]]).is_err());
+        assert!(TokenBatch::from_rows(&[]).is_err());
+    }
+}

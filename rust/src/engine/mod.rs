@@ -1,0 +1,15 @@
+//! Inference engine: prefill + autoregressive decode over the runtime.
+//!
+//! The measured substrate of ELANA's latency metrics: `InferenceEngine`
+//! drives `runtime::CompiledModel` through the paper's two phases —
+//! a whole-prompt prefill (TTFT) and a sequence of cached decode steps
+//! (TPOT) — threading KV/SSM cache literals between calls and recording
+//! per-phase timings that the profiler layer aggregates.
+
+pub mod batch;
+pub mod sampler;
+pub mod session;
+
+pub use batch::TokenBatch;
+pub use sampler::{GreedySampler, Sampler, TopKSampler};
+pub use session::{GenerationResult, InferenceEngine};

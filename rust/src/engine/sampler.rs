@@ -1,0 +1,147 @@
+//! Token samplers over last-position logits.
+//!
+//! Profiling uses greedy decoding by default (deterministic, like the
+//! paper's CUDA-graph-cached generation loop); top-k is provided for the
+//! serving example so generated streams differ across requests.
+
+use crate::util::Rng;
+
+/// Picks the next token per row of a (batch, vocab) logits matrix.
+pub trait Sampler: Send {
+    fn sample(&mut self, logits: &[f32], batch: usize, vocab: usize)
+              -> Vec<i32>;
+}
+
+/// Argmax per row.
+#[derive(Debug, Default, Clone)]
+pub struct GreedySampler;
+
+impl Sampler for GreedySampler {
+    fn sample(&mut self, logits: &[f32], batch: usize, vocab: usize)
+              -> Vec<i32> {
+        assert_eq!(logits.len(), batch * vocab);
+        (0..batch)
+            .map(|b| {
+                let row = &logits[b * vocab..(b + 1) * vocab];
+                argmax(row) as i32
+            })
+            .collect()
+    }
+}
+
+/// Temperature + top-k sampling with the in-tree RNG.
+#[derive(Debug, Clone)]
+pub struct TopKSampler {
+    pub k: usize,
+    pub temperature: f32,
+    rng: Rng,
+}
+
+impl TopKSampler {
+    pub fn new(k: usize, temperature: f32, seed: u64) -> TopKSampler {
+        assert!(k >= 1);
+        assert!(temperature > 0.0);
+        TopKSampler { k, temperature, rng: Rng::new(seed) }
+    }
+}
+
+impl Sampler for TopKSampler {
+    fn sample(&mut self, logits: &[f32], batch: usize, vocab: usize)
+              -> Vec<i32> {
+        assert_eq!(logits.len(), batch * vocab);
+        (0..batch)
+            .map(|b| {
+                let row = &logits[b * vocab..(b + 1) * vocab];
+                let k = self.k.min(vocab);
+                // indices of the top-k logits
+                let mut idx: Vec<usize> = (0..vocab).collect();
+                idx.select_nth_unstable_by(k - 1, |&i, &j| {
+                    row[j].partial_cmp(&row[i]).unwrap()
+                });
+                idx.truncate(k);
+                // softmax over the top-k at the given temperature
+                let m = idx.iter().map(|&i| row[i]).fold(f32::MIN, f32::max);
+                let weights: Vec<f64> = idx
+                    .iter()
+                    .map(|&i| (((row[i] - m) / self.temperature) as f64).exp())
+                    .collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = self.rng.f64() * total;
+                for (&i, w) in idx.iter().zip(&weights) {
+                    if u < *w {
+                        return i as i32;
+                    }
+                    u -= w;
+                }
+                idx[k - 1] as i32
+            })
+            .collect()
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::property;
+
+    #[test]
+    fn greedy_picks_argmax_per_row() {
+        let logits = vec![0.1, 0.9, 0.0, /* row 2 */ 5.0, -1.0, 2.0];
+        let mut s = GreedySampler;
+        assert_eq!(s.sample(&logits, 2, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn greedy_deterministic() {
+        let logits = vec![0.3, 0.3, 0.4];
+        let mut s = GreedySampler;
+        assert_eq!(s.sample(&logits, 1, 3), s.sample(&logits, 1, 3));
+    }
+
+    #[test]
+    fn topk_k1_equals_greedy() {
+        let logits = vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0];
+        let mut tk = TopKSampler::new(1, 1.0, 42);
+        let mut g = GreedySampler;
+        assert_eq!(tk.sample(&logits, 2, 3), g.sample(&logits, 2, 3));
+    }
+
+    #[test]
+    fn topk_stays_within_top_k() {
+        property(200, |rng| {
+            let vocab = 32;
+            let logits: Vec<f32> =
+                (0..vocab).map(|_| rng.f64_in(-3.0, 3.0) as f32).collect();
+            let k = rng.usize_in(1, 8);
+            let mut s = TopKSampler::new(k, 0.8, rng.next_u64());
+            let pick = s.sample(&logits, 1, vocab)[0] as usize;
+            // pick must be among the k largest logits
+            let mut sorted: Vec<f32> = logits.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kth = sorted[k - 1];
+            assert!(logits[pick] >= kth, "picked {pick} below top-{k}");
+        });
+    }
+
+    #[test]
+    fn topk_low_temperature_concentrates() {
+        // with tiny temperature, top-k behaves like greedy
+        let logits = vec![1.0, 3.0, 2.0, -1.0];
+        let mut s = TopKSampler::new(4, 1e-4, 7);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits, 1, 4), vec![1]);
+        }
+    }
+}

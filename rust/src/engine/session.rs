@@ -1,0 +1,332 @@
+//! The generation loop: prefill once, decode N times, record per-phase
+//! timings.
+//!
+//! This is the request path the paper instruments: TTFT = the prefill
+//! call, TPOT = each cached decode step, TTLT = the whole loop. The
+//! engine owns the PJRT runtime and the compiled model and returns a
+//! `GenerationResult` carrying every phase duration so the profiler can
+//! aggregate without re-measuring.
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{CompiledModel, Manifest, Runtime};
+
+use super::batch::TokenBatch;
+use super::sampler::{GreedySampler, Sampler};
+
+/// Timings and tokens from one generation run.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    /// Generated token ids, one row per sequence: (batch, gen_len).
+    pub tokens: Vec<Vec<i32>>,
+    /// Prefill latency (ELANA's TTFT).
+    pub ttft: Duration,
+    /// Per-decode-step latencies (ELANA's TPOT samples).
+    pub step_times: Vec<Duration>,
+    /// End-to-end latency (ELANA's TTLT): prefill + all decode steps,
+    /// including sampling and cache threading overhead.
+    pub ttlt: Duration,
+}
+
+impl GenerationResult {
+    /// Mean decode latency in seconds (the TPOT statistic).
+    pub fn tpot_mean(&self) -> f64 {
+        if self.step_times.is_empty() {
+            return 0.0;
+        }
+        self.step_times.iter().map(|d| d.as_secs_f64()).sum::<f64>()
+            / self.step_times.len() as f64
+    }
+}
+
+/// A loaded model + PJRT runtime, ready to serve generation requests.
+pub struct InferenceEngine {
+    rt: Runtime,
+    model: CompiledModel,
+}
+
+impl InferenceEngine {
+    /// Load `model_name` from the artifacts manifest.
+    pub fn load(manifest: &Manifest, model_name: &str)
+                -> Result<InferenceEngine> {
+        let rt = Runtime::cpu()?;
+        let model = CompiledModel::load(&rt, manifest, model_name)?;
+        Ok(InferenceEngine { rt, model })
+    }
+
+    /// Load and eagerly compile every artifact (nothing compiles on the
+    /// request path afterwards — the serving configuration).
+    pub fn load_precompiled(manifest: &Manifest, model_name: &str)
+                            -> Result<InferenceEngine> {
+        let mut e = Self::load(manifest, model_name)?;
+        e.model.precompile_all(&e.rt)?;
+        Ok(e)
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    pub fn model_mut(&mut self) -> &mut CompiledModel {
+        &mut self.model
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn max_new_tokens(&self, prompt_len: usize) -> usize {
+        self.model.max_seq_len().saturating_sub(prompt_len)
+    }
+
+    /// Generate `gen_len` tokens greedily (the profiling default).
+    pub fn generate(&mut self, prompts: &TokenBatch, gen_len: usize)
+                    -> Result<GenerationResult> {
+        self.generate_with(prompts, gen_len, &mut GreedySampler)
+    }
+
+    /// Full generation loop with a caller-supplied sampler. Uses the
+    /// flat-state fast path (one device-resident buffer threaded through
+    /// the decode — EXPERIMENTS.md §Perf: 17x on elana-small) when the
+    /// artifacts provide it, falling back to the tuple path otherwise.
+    pub fn generate_with(&mut self, prompts: &TokenBatch, gen_len: usize,
+                         sampler: &mut dyn Sampler)
+                         -> Result<GenerationResult> {
+        let batch = prompts.batch();
+        let prompt_len = prompts.prompt_len();
+        ensure!(gen_len >= 1, "gen_len must be >= 1");
+        ensure!(prompt_len + gen_len <= self.model.max_seq_len(),
+                "prompt {prompt_len} + gen {gen_len} exceeds max_seq_len {}",
+                self.model.max_seq_len());
+        if self.model.has_flat_path(batch) {
+            self.generate_flat(prompts, gen_len, sampler)
+        } else {
+            self.generate_tuple(prompts, gen_len, sampler)
+        }
+    }
+
+    fn generate_flat(&mut self, prompts: &TokenBatch, gen_len: usize,
+                     sampler: &mut dyn Sampler) -> Result<GenerationResult> {
+        let batch = prompts.batch();
+        let prompt_len = prompts.prompt_len();
+        let vocab = self.model.vocab_size();
+        let total_sw = crate::util::Stopwatch::start();
+
+        let sw = crate::util::Stopwatch::start();
+        let (mut state, _) =
+            self.model.prefill_flat(&self.rt, batch, prompts.tokens())?;
+        let logits = state.read_logits(vocab)?;
+        let ttft = sw.elapsed();
+
+        let mut next = sampler.sample(&logits, batch, vocab);
+        let mut rows: Vec<Vec<i32>> =
+            (0..batch).map(|b| vec![next[b]]).collect();
+
+        let mut step_times = Vec::with_capacity(gen_len.saturating_sub(1));
+        for t in 0..gen_len.saturating_sub(1) {
+            let pos = (prompt_len + t) as i32;
+            let sw = crate::util::Stopwatch::start();
+            let (s2, _) = self.model.decode_flat(&self.rt, &next, pos,
+                                                 &state)?;
+            let logits = s2.read_logits(vocab)?;
+            step_times.push(sw.elapsed());
+            state = s2;
+            next = sampler.sample(&logits, batch, vocab);
+            for b in 0..batch {
+                rows[b].push(next[b]);
+            }
+        }
+        Ok(GenerationResult {
+            tokens: rows,
+            ttft,
+            step_times,
+            ttlt: total_sw.elapsed(),
+        })
+    }
+
+    fn generate_tuple(&mut self, prompts: &TokenBatch, gen_len: usize,
+                      sampler: &mut dyn Sampler) -> Result<GenerationResult> {
+        let batch = prompts.batch();
+        let prompt_len = prompts.prompt_len();
+        let vocab = self.model.vocab_size();
+        let total_sw = crate::util::Stopwatch::start();
+
+        // ---- phase 1: prefill (TTFT) --------------------------------
+        let sw = crate::util::Stopwatch::start();
+        let out = self.model.prefill(&self.rt, batch, prompts.tokens())?;
+        let ttft = sw.elapsed();
+
+        let mut caches = out.caches;
+        let mut next = sampler.sample(&out.logits, batch, vocab);
+        let mut rows: Vec<Vec<i32>> = (0..batch)
+            .map(|b| vec![next[b]])
+            .collect();
+
+        // ---- phase 2: decode steps (TPOT) ---------------------------
+        let mut step_times = Vec::with_capacity(gen_len.saturating_sub(1));
+        for t in 0..gen_len.saturating_sub(1) {
+            let pos = (prompt_len + t) as i32;
+            let sw = crate::util::Stopwatch::start();
+            let step = self.model.decode(&self.rt, batch, &next, pos,
+                                         &caches)?;
+            step_times.push(sw.elapsed());
+            caches = step.caches;
+            next = sampler.sample(&step.logits, batch, vocab);
+            for b in 0..batch {
+                rows[b].push(next[b]);
+            }
+        }
+
+        Ok(GenerationResult {
+            tokens: rows,
+            ttft,
+            step_times,
+            ttlt: total_sw.elapsed(),
+        })
+    }
+
+    /// Prefill only — the isolated TTFT probe (paper §2.3 measures TTFT
+    /// by isolating the prefill stage).
+    pub fn prefill_once(&mut self, prompts: &TokenBatch) -> Result<Duration> {
+        let batch = prompts.batch();
+        let sw = crate::util::Stopwatch::start();
+        if self.model.has_flat_path(batch) {
+            let (state, _) =
+                self.model.prefill_flat(&self.rt, batch, prompts.tokens())?;
+            state.read_logits(self.model.vocab_size())?;
+        } else {
+            self.model.prefill(&self.rt, batch, prompts.tokens())?;
+        }
+        Ok(sw.elapsed())
+    }
+
+    /// Decode-only probe: prefill once to warm a cache, then run `steps`
+    /// decode steps and return their individual latencies (the TPOT
+    /// sample stream; the prefill is excluded, matching the paper).
+    pub fn decode_probe(&mut self, prompts: &TokenBatch, steps: usize)
+                        -> Result<Vec<Duration>> {
+        let batch = prompts.batch();
+        let vocab = self.model.vocab_size();
+        let avail = self.max_new_tokens(prompts.prompt_len());
+        ensure!(steps <= avail,
+                "steps {steps} exceed available positions {avail}");
+        let mut times = Vec::with_capacity(steps);
+        if self.model.has_flat_path(batch) {
+            let (mut state, _) =
+                self.model.prefill_flat(&self.rt, batch, prompts.tokens())?;
+            let mut next =
+                GreedySampler.sample(&state.read_logits(vocab)?, batch,
+                                     vocab);
+            for t in 0..steps {
+                let pos = (prompts.prompt_len() + t) as i32;
+                let sw = crate::util::Stopwatch::start();
+                let (s2, _) = self.model.decode_flat(&self.rt, &next, pos,
+                                                     &state)?;
+                let logits = s2.read_logits(vocab)?;
+                times.push(sw.elapsed());
+                state = s2;
+                next = GreedySampler.sample(&logits, batch, vocab);
+            }
+            return Ok(times);
+        }
+        let out = self.model.prefill(&self.rt, batch, prompts.tokens())?;
+        let mut caches = out.caches;
+        let mut next = GreedySampler.sample(&out.logits, batch, vocab);
+        for t in 0..steps {
+            let pos = (prompts.prompt_len() + t) as i32;
+            let sw = crate::util::Stopwatch::start();
+            let step = self.model.decode(&self.rt, batch, &next, pos,
+                                         &caches)?;
+            times.push(sw.elapsed());
+            caches = step.caches;
+            next = GreedySampler.sample(&step.logits, batch, vocab);
+        }
+        Ok(times)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(name: &str) -> Option<InferenceEngine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(dir).unwrap();
+        Some(InferenceEngine::load(&m, name).unwrap())
+    }
+
+    fn prompts(batch: usize, len: usize) -> TokenBatch {
+        let mut rng = crate::util::Rng::new(1);
+        let toks: Vec<i32> = (0..batch * len).map(|_| rng.token(512)).collect();
+        TokenBatch::new(batch, len, toks).unwrap()
+    }
+
+    #[test]
+    fn generate_produces_requested_tokens() {
+        let Some(mut e) = engine("elana-tiny") else { return };
+        let r = e.generate(&prompts(1, 16), 8).unwrap();
+        assert_eq!(r.tokens.len(), 1);
+        assert_eq!(r.tokens[0].len(), 8);
+        assert_eq!(r.step_times.len(), 7); // first token comes from prefill
+        assert!(r.ttft.as_nanos() > 0);
+        assert!(r.ttlt >= r.ttft);
+        let vocab = e.model().vocab_size() as i32;
+        assert!(r.tokens[0].iter().all(|&t| (0..vocab).contains(&t)));
+    }
+
+    #[test]
+    fn generate_greedy_is_deterministic() {
+        let Some(mut e) = engine("elana-tiny") else { return };
+        let p = prompts(1, 16);
+        let a = e.generate(&p, 6).unwrap();
+        let b = e.generate(&p, 6).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn generate_batch4() {
+        let Some(mut e) = engine("elana-tiny") else { return };
+        let r = e.generate(&prompts(4, 16), 4).unwrap();
+        assert_eq!(r.tokens.len(), 4);
+        assert!(r.tokens.iter().all(|row| row.len() == 4));
+    }
+
+    #[test]
+    fn generate_rejects_overflow() {
+        let Some(mut e) = engine("elana-tiny") else { return };
+        // max_seq_len is 128 for dev configs: 64 + 80 > 128
+        assert!(e.generate(&prompts(1, 64), 80).is_err());
+    }
+
+    #[test]
+    fn decode_probe_returns_per_step_times() {
+        let Some(mut e) = engine("elana-tiny") else { return };
+        let times = e.decode_probe(&prompts(1, 16), 5).unwrap();
+        assert_eq!(times.len(), 5);
+        assert!(times.iter().all(|t| t.as_nanos() > 0));
+    }
+
+    #[test]
+    fn hybrid_generates() {
+        let Some(mut e) = engine("elana-tiny-hybrid") else { return };
+        let r = e.generate(&prompts(1, 16), 4).unwrap();
+        assert_eq!(r.tokens[0].len(), 4);
+    }
+
+    #[test]
+    fn tpot_mean_matches_step_times() {
+        let r = GenerationResult {
+            tokens: vec![],
+            ttft: Duration::from_millis(10),
+            step_times: vec![Duration::from_millis(2),
+                             Duration::from_millis(4)],
+            ttlt: Duration::from_millis(20),
+        };
+        assert!((r.tpot_mean() - 0.003).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,268 @@
+//! Per-phase FLOP / byte cost model for an architecture.
+//!
+//! Standard inference accounting:
+//!
+//! * matmul FLOPs = 2 · params_in_matmuls · tokens, plus the attention
+//!   score/value contractions (4 · heads · head_dim · Σ context per
+//!   query token — halved for the causal prefill triangle);
+//! * decode bytes = weight bytes (read once per step, *amortized over
+//!   the batch* — the whole point of batching) + per-sequence KV reads +
+//!   SSM state read/write;
+//! * SSM layers are linear in sequence length (the hybrid's advantage
+//!   the paper's Nemotron rows showcase).
+
+use crate::models::arch::{LayerKind, ModelArch};
+use crate::models::{cache, size};
+
+/// FLOPs and DRAM bytes of one phase execution (whole batch, all layers).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl PhaseCost {
+    pub fn add(&mut self, other: PhaseCost) {
+        self.flops += other.flops;
+        self.bytes += other.bytes;
+    }
+
+    /// Arithmetic intensity (FLOP/byte) — which roofline regime a phase
+    /// sits in.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0.0 { 0.0 } else { self.flops / self.bytes }
+    }
+}
+
+/// Parameters participating in matmuls (embedding lookups excluded; the
+/// LM head counts even when tied).
+fn matmul_params(arch: &ModelArch) -> f64 {
+    let b = size::param_breakdown(arch);
+    let lm = if arch.tied_embeddings {
+        (arch.vocab_size * arch.d_model) as u64
+    } else {
+        b.lm_head
+    };
+    (b.attention + b.ssm + b.mlp + lm) as f64
+}
+
+/// Attention score+value FLOPs for `q_tokens` queries, each attending to
+/// an average context of `avg_ctx` keys.
+fn attn_flops(arch: &ModelArch, batch: usize, q_tokens: f64, avg_ctx: f64)
+              -> f64 {
+    let h = arch.attn.n_heads as f64;
+    let hd = arch.attn.head_dim as f64;
+    let layers = arch.n_attn_layers() as f64;
+    // QK^T and PV: 2 matmuls, 2 FLOPs each per (query, key, dim)
+    4.0 * batch as f64 * layers * h * hd * q_tokens * avg_ctx
+}
+
+/// SSM scan FLOPs per token (state update + output contraction).
+fn ssm_flops_per_token(arch: &ModelArch) -> f64 {
+    match &arch.ssm {
+        None => 0.0,
+        Some(s) => {
+            let per_layer =
+                // h_t update: decay + outer product ≈ 3 ops per state elem
+                3.0 * (s.heads * s.head_dim * s.d_state) as f64
+                // y_t = C·h_t: 2 ops per state elem
+                + 2.0 * (s.heads * s.head_dim * s.d_state) as f64
+                // depthwise conv
+                + 2.0 * (s.d_inner() * s.conv_width) as f64;
+            per_layer * arch.n_mamba_layers() as f64
+        }
+    }
+}
+
+/// Whole-prompt prefill cost (ELANA's TTFT phase).
+pub fn prefill_cost(arch: &ModelArch, batch: usize, prompt_len: usize)
+                    -> PhaseCost {
+    let tokens = (batch * prompt_len) as f64;
+    let mut c = PhaseCost::default();
+    // dense matmuls over every prompt token
+    c.flops += 2.0 * matmul_params(arch) * tokens;
+    // causal attention triangle: average context = (L+1)/2
+    c.flops += attn_flops(arch, batch, prompt_len as f64,
+                          (prompt_len as f64 + 1.0) / 2.0);
+    c.flops += ssm_flops_per_token(arch) * tokens;
+
+    // bytes: weights streamed once + KV/state cache written once +
+    // activations (one residual stream read+write per layer)
+    let dt = arch.dtype.bytes() as f64;
+    c.bytes += size::model_bytes(arch) as f64;
+    c.bytes += cache::cache_bytes(arch, batch, prompt_len) as f64;
+    c.bytes += 2.0 * arch.n_layers() as f64 * tokens
+        * arch.d_model as f64 * dt;
+    c
+}
+
+/// One decode step at context length `ctx` (ELANA's TPOT phase).
+pub fn decode_cost(arch: &ModelArch, batch: usize, ctx: usize) -> PhaseCost {
+    let tokens = batch as f64;
+    let mut c = PhaseCost::default();
+    c.flops += 2.0 * matmul_params(arch) * tokens;
+    c.flops += attn_flops(arch, batch, 1.0, ctx as f64);
+    c.flops += ssm_flops_per_token(arch) * tokens;
+
+    // bytes: weights once per step (batch-amortized), KV read per
+    // sequence, SSM state read+write per sequence
+    c.bytes += size::model_bytes(arch) as f64;
+    c.bytes += cache::kv_bytes_per_token(arch) as f64
+        * batch as f64 * ctx as f64;
+    c.bytes += 2.0 * (cache::ssm_state_bytes_per_seq(arch)
+                      + cache::conv_state_bytes_per_seq(arch)) as f64
+        * batch as f64;
+    c
+}
+
+/// Per-layer share of a phase's cost, used by the kernel-timeline
+/// synthesizer. Returns (layer_kind, flops, bytes) triples.
+pub fn layer_costs(arch: &ModelArch, phase: PhaseCost)
+                   -> Vec<(LayerKind, f64, f64)> {
+    // distribute proportionally to each layer's parameter share
+    let per_layer: Vec<(LayerKind, u64)> = arch
+        .layers
+        .iter()
+        .map(|k| {
+            let params = match k {
+                LayerKind::Attention => {
+                    let mut p = attn_layer_params(arch);
+                    if arch.fused_mlp {
+                        p += mlp_layer_params(arch);
+                    }
+                    p
+                }
+                LayerKind::Mamba => {
+                    let mut p = ssm_layer_params(arch);
+                    if arch.fused_mlp {
+                        p += mlp_layer_params(arch);
+                    }
+                    p
+                }
+                LayerKind::MlpOnly => mlp_layer_params(arch),
+            };
+            (*k, params)
+        })
+        .collect();
+    let total: f64 = per_layer.iter().map(|(_, p)| *p as f64).sum();
+    per_layer
+        .into_iter()
+        .map(|(k, p)| {
+            let share = p as f64 / total;
+            (k, phase.flops * share, phase.bytes * share)
+        })
+        .collect()
+}
+
+fn attn_layer_params(arch: &ModelArch) -> u64 {
+    let d = arch.d_model as u64;
+    let a = &arch.attn;
+    d * (a.n_heads * a.head_dim) as u64 * 2
+        + 2 * d * (a.n_kv_heads * a.head_dim) as u64
+}
+
+fn ssm_layer_params(arch: &ModelArch) -> u64 {
+    let s = arch.ssm.as_ref().expect("ssm spec");
+    let d = arch.d_model as u64;
+    let di = s.d_inner() as u64;
+    d * (2 * di + 2 * (s.ngroups * s.d_state) as u64 + s.heads as u64)
+        + di * d
+}
+
+fn mlp_layer_params(arch: &ModelArch) -> u64 {
+    let mats = if arch.mlp_gated { 3 } else { 2 };
+    mats * (arch.d_model * arch.ffn_dim) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::*;
+    use crate::testkit::property;
+
+    #[test]
+    fn prefill_flops_magnitude_llama8b() {
+        // 2 * 7.5B matmul-params * 512 tokens ≈ 7.7 TFLOP + attention
+        let c = prefill_cost(&llama31_8b(), 1, 512);
+        assert!((7.5e12..9.0e12).contains(&c.flops), "{:.3e}", c.flops);
+    }
+
+    #[test]
+    fn decode_bytes_magnitude_llama8b() {
+        // dominated by the 16.06 GB weight stream at batch 1
+        let c = decode_cost(&llama31_8b(), 1, 512);
+        assert!((16.0e9..17.5e9).contains(&c.bytes), "{:.3e}", c.bytes);
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_decode_is_memory_bound() {
+        let arch = llama31_8b();
+        let p = prefill_cost(&arch, 1, 512);
+        let d = decode_cost(&arch, 1, 512);
+        // A6000 ridge point ≈ 88 TFLOPS / 645 GB/s ≈ 137 FLOP/B
+        assert!(p.intensity() > 137.0, "prefill intensity {}", p.intensity());
+        assert!(d.intensity() < 137.0, "decode intensity {}", d.intensity());
+    }
+
+    #[test]
+    fn batching_amortizes_weight_reads() {
+        let arch = llama31_8b();
+        let b1 = decode_cost(&arch, 1, 512);
+        let b64 = decode_cost(&arch, 64, 512);
+        // bytes grow far less than 64x (weights read once)...
+        assert!(b64.bytes < 3.0 * b1.bytes, "{} vs {}", b64.bytes, b1.bytes);
+        // ...while flops grow ~64x
+        assert!(b64.flops > 50.0 * b1.flops);
+    }
+
+    #[test]
+    fn hybrid_decode_cheaper_at_long_context() {
+        let nh = nemotron_h_8b();
+        let llama = llama31_8b();
+        // at 4k context the dense model's KV reads dominate
+        let d_nh = decode_cost(&nh, 64, 4096);
+        let d_ll = decode_cost(&llama, 64, 4096);
+        assert!(d_nh.bytes < d_ll.bytes,
+                "hybrid should move fewer bytes at long ctx");
+    }
+
+    #[test]
+    fn tied_embeddings_still_pay_lm_head_flops() {
+        let tied = llama32_1b();
+        let c = decode_cost(&tied, 1, 64);
+        // matmul params must include the tied LM head (~260M on top of
+        // ~0.97B layer params)
+        let min_flops = 2.0 * (0.97e9 + 0.26e9);
+        assert!(c.flops > min_flops, "{:.3e}", c.flops);
+    }
+
+    #[test]
+    fn layer_costs_partition_phase() {
+        for arch in [llama31_8b(), nemotron_h_8b()] {
+            let p = prefill_cost(&arch, 1, 256);
+            let per = layer_costs(&arch, p);
+            assert_eq!(per.len(), arch.n_layers());
+            let fsum: f64 = per.iter().map(|(_, f, _)| f).sum();
+            let bsum: f64 = per.iter().map(|(_, _, b)| b).sum();
+            assert!((fsum - p.flops).abs() / p.flops < 1e-9);
+            assert!((bsum - p.bytes).abs() / p.bytes < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_costs_monotone_in_workload() {
+        property(200, |rng| {
+            let arch = llama31_8b();
+            let b = rng.usize_in(1, 32);
+            let l = rng.usize_in(1, 1024);
+            let p1 = prefill_cost(&arch, b, l);
+            let p2 = prefill_cost(&arch, b + 1, l);
+            let p3 = prefill_cost(&arch, b, l + 16);
+            assert!(p2.flops > p1.flops && p3.flops > p1.flops);
+            assert!(p2.bytes >= p1.bytes && p3.bytes >= p1.bytes);
+            let d1 = decode_cost(&arch, b, l);
+            let d2 = decode_cost(&arch, b, l + 16);
+            assert!(d2.bytes > d1.bytes); // KV reads grow with context
+        });
+    }
+}

@@ -1,0 +1,342 @@
+//! The roofline evaluator: workload → simulated TTFT / TPOT / TTLT +
+//! per-phase power.
+//!
+//! phase_time = max(flops / achieved_flops, bytes / achieved_bw)
+//!              + collective cost (TP rigs) + fixed overhead
+//!
+//! TTLT is composed exactly the way ELANA measures it: one prefill plus
+//! `gen_len` decode steps whose KV context grows step by step. Phase
+//! power comes from the device's energy coefficients
+//! (P = idle + pJ/FLOP·FLOP/s + pJ/B·B/s), which is what the simulated
+//! NVML sensor replays during wall-clock profiling.
+
+use crate::models::arch::ModelArch;
+
+use super::cost::{decode_cost, prefill_cost, PhaseCost};
+use super::device::Rig;
+
+/// A Table 3/4 workload point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+impl Workload {
+    pub fn new(batch: usize, prompt_len: usize, gen_len: usize) -> Workload {
+        Workload { batch, prompt_len, gen_len }
+    }
+
+    /// Paper notation: `bsize=B, L=P+G`.
+    pub fn label(&self) -> String {
+        format!("bsize={}, L={}+{}", self.batch, self.prompt_len,
+                self.gen_len)
+    }
+}
+
+/// One simulated phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseSim {
+    pub seconds: f64,
+    /// Average power during the phase, watts (whole rig).
+    pub watts: f64,
+    /// Energy of the phase, joules.
+    pub joules: f64,
+    /// Utilization of the binding resource in [0, 1] (drives the
+    /// simulated sensor's LoadHandle).
+    pub utilization: f64,
+    /// true if compute-bound, false if memory-bound.
+    pub compute_bound: bool,
+}
+
+/// Full simulation of one workload.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub ttft: PhaseSim,
+    /// Mean decode step (the paper's TPOT).
+    pub tpot: PhaseSim,
+    /// Per-step times for the whole generation (context grows).
+    pub step_seconds: Vec<f64>,
+    /// End-to-end: TTFT + all decode steps.
+    pub ttlt_seconds: f64,
+    pub ttlt_joules: f64,
+}
+
+impl SimResult {
+    /// The paper's six columns: TTFT ms, J/Prompt, TPOT ms, J/Token,
+    /// TTLT ms, J/Request.
+    pub fn table_row(&self) -> [f64; 6] {
+        [
+            self.ttft.seconds * 1e3,
+            self.ttft.joules,
+            self.tpot.seconds * 1e3,
+            self.tpot.joules,
+            self.ttlt_seconds * 1e3,
+            self.ttlt_joules,
+        ]
+    }
+}
+
+/// Time one phase on a rig: roofline + collectives + overhead.
+fn phase_time(rig: &Rig, cost: PhaseCost, tokens_for_collective: f64,
+              n_collectives: usize, overhead_s: f64, is_decode: bool)
+              -> (f64, bool) {
+    let n = rig.n_devices as f64;
+    let d = &rig.device;
+    // TP splits both the matmul work and the weight/KV stream N ways.
+    let flops_rate = if is_decode {
+        d.achieved_flops_decode()
+    } else {
+        d.achieved_flops()
+    };
+    let t_compute = cost.flops / n / flops_rate;
+    let t_bytes = cost.bytes / n / d.achieved_bw();
+    let mut t = t_compute.max(t_bytes) + overhead_s;
+    if rig.n_devices > 1 {
+        // 2 all-reduces per layer over the activations of all tokens in
+        // flight (bytes = 2 * layers * tokens * d_model * dtype); each
+        // call pays the interconnect's fixed latency.
+        t += rig.allreduce_s(tokens_for_collective, n_collectives);
+    }
+    (t, t_compute >= t_bytes)
+}
+
+/// Average power of a phase from the device energy coefficients.
+fn phase_power(rig: &Rig, cost: PhaseCost, seconds: f64) -> f64 {
+    let d = &rig.device;
+    let n = rig.n_devices as f64;
+    let dynamic = (cost.flops * d.pj_per_flop + cost.bytes * d.pj_per_byte)
+        * 1e-12
+        / seconds;
+    d.power.idle_w * n + dynamic
+}
+
+fn phase_sim(rig: &Rig, cost: PhaseCost, collective_bytes: f64,
+             n_collectives: usize, overhead_s: f64, is_decode: bool)
+             -> PhaseSim {
+    let (seconds, compute_bound) =
+        phase_time(rig, cost, collective_bytes, n_collectives, overhead_s,
+                   is_decode);
+    let watts = phase_power(rig, cost, seconds);
+    let n = rig.n_devices as f64;
+    let idle = rig.device.power.idle_w * n;
+    let sustain = rig.device.power.sustain_w * n;
+    // Invert the sensor's power curve (P = idle + (sustain-idle)·u^α) so
+    // that replaying this utilization through the simulated NVML sensor
+    // reproduces the phase's average power.
+    let ratio = ((watts - idle) / (sustain - idle)).clamp(0.0, 1.0);
+    let utilization = ratio.powf(1.0 / rig.device.power.alpha);
+    PhaseSim {
+        seconds,
+        watts,
+        joules: watts * seconds,
+        utilization,
+        compute_bound,
+    }
+}
+
+/// Bytes all-reduced per phase on a TP rig.
+fn collective_bytes(arch: &ModelArch, batch: usize, tokens: usize) -> f64 {
+    2.0 * arch.n_layers() as f64
+        * (batch * tokens * arch.d_model) as f64
+        * arch.dtype.bytes() as f64
+}
+
+/// Simulate one workload end-to-end.
+pub fn simulate(arch: &ModelArch, rig: &Rig, w: &Workload) -> SimResult {
+    // ---- TTFT: whole-prompt prefill ---------------------------------
+    let pc = prefill_cost(arch, w.batch, w.prompt_len);
+    let n_coll = 2 * arch.n_layers();
+    let ttft = phase_sim(rig, pc,
+                         collective_bytes(arch, w.batch, w.prompt_len),
+                         n_coll, rig.device.prefill_overhead_s, false);
+
+    // ---- decode steps with growing context --------------------------
+    let mut step_seconds = Vec::with_capacity(w.gen_len);
+    let mut decode_joules_total = 0.0;
+    let mut mid_sim: Option<PhaseSim> = None;
+    for t in 0..w.gen_len {
+        let ctx = w.prompt_len + t;
+        let dc = decode_cost(arch, w.batch, ctx);
+        let sim = phase_sim(rig, dc, collective_bytes(arch, w.batch, 1),
+                            n_coll, rig.device.decode_overhead_s, true);
+        step_seconds.push(sim.seconds);
+        decode_joules_total += sim.joules;
+        if t == w.gen_len / 2 {
+            mid_sim = Some(sim);
+        }
+    }
+    let tpot_mean = step_seconds.iter().sum::<f64>()
+        / step_seconds.len().max(1) as f64;
+    // TPOT row: mean latency, with bound/power taken at the mid step.
+    let mid = mid_sim.unwrap_or(ttft);
+    let tpot = PhaseSim {
+        seconds: tpot_mean,
+        watts: mid.watts,
+        joules: mid.watts * tpot_mean,
+        utilization: mid.utilization,
+        compute_bound: mid.compute_bound,
+    };
+
+    let ttlt_seconds = ttft.seconds + step_seconds.iter().sum::<f64>();
+    SimResult {
+        ttft,
+        tpot,
+        step_seconds,
+        ttlt_seconds,
+        ttlt_joules: ttft.joules + decode_joules_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::device::{a6000, a6000_x4, agx_thor, orin_nano, Rig};
+    use crate::models::registry::*;
+
+    fn pct(got: f64, want: f64) -> f64 {
+        ((got - want) / want * 100.0).abs()
+    }
+
+    /// Table 3, row 1 (nGPU=1, bsize=1, L=512+512, Llama-3.1-8B):
+    /// TTFT 94.30 ms, J/Prompt 25.91, TPOT 24.84 ms, J/Token 6.80,
+    /// TTLT 12859.85 ms, J/Req 3533.09. Single-GPU rows calibrated the
+    /// device, so they must land within 15%.
+    #[test]
+    fn table3_row1_llama_single_gpu() {
+        let r = simulate(&llama31_8b(), &Rig::single(a6000()),
+                         &Workload::new(1, 512, 512));
+        let row = r.table_row();
+        assert!(pct(row[0], 94.30) < 15.0, "TTFT {:.2}", row[0]);
+        assert!(pct(row[1], 25.91) < 15.0, "J/Prompt {:.2}", row[1]);
+        assert!(pct(row[2], 24.84) < 15.0, "TPOT {:.2}", row[2]);
+        assert!(pct(row[3], 6.80) < 15.0, "J/Token {:.2}", row[3]);
+        assert!(pct(row[4], 12859.85) < 15.0, "TTLT {:.2}", row[4]);
+        assert!(pct(row[5], 3533.09) < 20.0, "J/Req {:.2}", row[5]);
+    }
+
+    /// Table 3 shape: Qwen-2.5-7B is consistently faster than
+    /// Llama-3.1-8B (smaller model), Nemotron close to Llama at short
+    /// context.
+    #[test]
+    fn table3_model_ordering() {
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 512, 512);
+        let ll = simulate(&llama31_8b(), &rig, &w);
+        let qw = simulate(&qwen25_7b(), &rig, &w);
+        assert!(qw.ttft.seconds < ll.ttft.seconds);
+        assert!(qw.tpot.seconds < ll.tpot.seconds);
+        assert!(qw.ttlt_seconds < ll.ttlt_seconds);
+    }
+
+    /// Table 3 shape, 4×A6000 bsize=64: TTFT grows ~14x over the b=1
+    /// row (64x work on 4 GPUs), decode stays in the tens of ms.
+    #[test]
+    fn table3_multi_gpu_scaling_shape() {
+        let w1 = Workload::new(1, 512, 512);
+        let w64 = Workload::new(64, 512, 512);
+        let single = simulate(&llama31_8b(), &Rig::single(a6000()), &w1);
+        let multi = simulate(&llama31_8b(), &a6000_x4(), &w64);
+        let ttft_ratio = multi.ttft.seconds / single.ttft.seconds;
+        // paper: 1325.05 / 94.30 ≈ 14.1
+        assert!((8.0..22.0).contains(&ttft_ratio), "ratio {ttft_ratio}");
+        // batched TP decode is NOT 64x slower — batching amortizes.
+        // (paper measures 1.26x; an ideal roofline lands below it — the
+        // gap is the HF stack's exposed per-step collective cost, see
+        // EXPERIMENTS.md §Table 3)
+        let tpot_ratio = multi.tpot.seconds / single.tpot.seconds;
+        assert!((0.4..3.0).contains(&tpot_ratio), "tpot ratio {tpot_ratio}");
+    }
+
+    /// Table 3: doubling L roughly doubles TTFT and TTLT (compute/bytes
+    /// linear in tokens at these lengths).
+    #[test]
+    fn table3_length_scaling() {
+        let rig = a6000_x4();
+        let a = simulate(&llama31_8b(), &rig, &Workload::new(64, 512, 512));
+        let b = simulate(&llama31_8b(), &rig, &Workload::new(64, 1024, 1024));
+        let r = b.ttft.seconds / a.ttft.seconds;
+        assert!((1.7..2.6).contains(&r), "TTFT ratio {r}");
+        let r = b.ttlt_seconds / a.ttlt_seconds;
+        assert!((1.8..2.8).contains(&r), "TTLT ratio {r}");
+    }
+
+    /// Table 4 (AGX Thor, bsize=1, 512+512, Llama-3.1-8B): TTFT 147.49,
+    /// TPOT 97.60 — the calibration rows, within 15%.
+    #[test]
+    fn table4_thor_llama_calibrated() {
+        let r = simulate(&llama31_8b(), &Rig::single(agx_thor()),
+                         &Workload::new(1, 512, 512));
+        let row = r.table_row();
+        assert!(pct(row[0], 147.49) < 15.0, "TTFT {:.2}", row[0]);
+        assert!(pct(row[2], 97.60) < 15.0, "TPOT {:.2}", row[2]);
+        assert!(pct(row[3], 1.27) < 25.0, "J/Token {:.2}", row[3]);
+    }
+
+    /// Table 4 (Orin Nano, bsize=1, 256+256, Llama-3.2-1B): TTFT 142.92,
+    /// TPOT 48.73, J/Token 0.06.
+    #[test]
+    fn table4_orin_llama1b_calibrated() {
+        let r = simulate(&llama32_1b(), &Rig::single(orin_nano()),
+                         &Workload::new(1, 256, 256));
+        let row = r.table_row();
+        assert!(pct(row[0], 142.92) < 25.0, "TTFT {:.2}", row[0]);
+        assert!(pct(row[2], 48.73) < 15.0, "TPOT {:.2}", row[2]);
+        assert!((0.03..0.10).contains(&row[3]), "J/Token {:.3}", row[3]);
+    }
+
+    /// Table 4 shape: Orin Nano 512+512 TPOT ≈ 256+256 TPOT (decode is
+    /// weight-bound for a 1B model; KV is negligible) while TTFT ~2x.
+    #[test]
+    fn table4_orin_length_shape() {
+        let rig = Rig::single(orin_nano());
+        let a = simulate(&llama32_1b(), &rig, &Workload::new(1, 256, 256));
+        let b = simulate(&llama32_1b(), &rig, &Workload::new(1, 512, 512));
+        assert!(pct(b.tpot.seconds, a.tpot.seconds) < 10.0);
+        let r = b.ttft.seconds / a.ttft.seconds;
+        assert!((1.5..2.5).contains(&r), "{r}");
+    }
+
+    /// Cloud vs edge: the same model decodes ~4x slower on Thor than on
+    /// an A6000 (273 vs 768 GB/s), but each token costs ~5x less energy
+    /// — the paper's core cloud/edge trade-off.
+    #[test]
+    fn cloud_vs_edge_tradeoff() {
+        let w = Workload::new(1, 512, 512);
+        let cloud = simulate(&llama31_8b(), &Rig::single(a6000()), &w);
+        let edge = simulate(&llama31_8b(), &Rig::single(agx_thor()), &w);
+        let slower = edge.tpot.seconds / cloud.tpot.seconds;
+        assert!((2.5..6.0).contains(&slower), "{slower}");
+        let cheaper = cloud.tpot.joules / edge.tpot.joules;
+        assert!(cheaper > 3.0, "{cheaper}");
+    }
+
+    #[test]
+    fn phase_bound_classification() {
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 512, 512);
+        let r = simulate(&llama31_8b(), &rig, &w);
+        assert!(r.ttft.compute_bound, "prefill must be compute-bound");
+        assert!(!r.tpot.compute_bound, "decode must be memory-bound");
+    }
+
+    #[test]
+    fn ttlt_is_sum_of_phases() {
+        let r = simulate(&qwen25_7b(), &Rig::single(a6000()),
+                         &Workload::new(1, 128, 64));
+        let sum: f64 = r.ttft.seconds + r.step_seconds.iter().sum::<f64>();
+        assert!((r.ttlt_seconds - sum).abs() < 1e-12);
+        assert_eq!(r.step_seconds.len(), 64);
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        for rig in crate::hwsim::device::all_rigs() {
+            let r = simulate(&llama31_8b(), &rig,
+                             &Workload::new(1, 256, 64));
+            assert!((0.0..=1.0).contains(&r.ttft.utilization));
+            assert!((0.0..=1.0).contains(&r.tpot.utilization));
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Roofline hardware simulator: projects paper-scale latency/energy.
+//!
+//! This testbed has no A6000 or Jetson; per DESIGN.md we substitute a
+//! calibrated analytic device model. TTFT at the paper's prompt lengths
+//! is compute-bound and TPOT is weight/KV-bandwidth-bound on all three
+//! devices, so a roofline with per-device efficiency factors reproduces
+//! the *shape* of Tables 3–4 (who wins, by what factor, where scaling
+//! bends). Efficiencies and energy-per-op constants are calibrated once
+//! against the paper's single-GPU rows and then held fixed for every
+//! other row — batch/length/device scaling is prediction, not fitting.
+//!
+//! * [`device`] — device presets (A6000, 4×A6000 TP rig, AGX Thor,
+//!   Orin Nano) with peak compute/bandwidth, efficiency factors, launch
+//!   overheads, interconnect, and energy coefficients.
+//! * [`cost`] — per-phase FLOP/byte counts for a `ModelArch`.
+//! * [`latency`] — the roofline evaluator: workload → TTFT/TPOT/TTLT +
+//!   per-phase power (drives the simulated NVML sensor).
+//! * [`kernels`] — synthesizes a per-kernel timeline for the trace
+//!   recorder (Figure 1).
+
+pub mod cost;
+pub mod device;
+pub mod kernels;
+pub mod latency;
+
+pub use cost::{decode_cost, prefill_cost, PhaseCost};
+pub use device::{DeviceSpec, Rig};
+pub use kernels::synthesize_kernels;
+pub use latency::{simulate, PhaseSim, SimResult, Workload};

@@ -1,0 +1,54 @@
+//! # ELANA — Energy and Latency Analyzer for LLMs
+//!
+//! A reproduction of *ELANA: A Simple Energy and Latency Analyzer for
+//! LLMs* (Chiang, Wang, Marculescu; CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system. This crate is the L3 layer: the profiler
+//! itself plus every substrate it depends on. Python (L2 JAX model, L1
+//! Pallas kernels) runs only at build time (`make artifacts`); the
+//! binary profiles real inference by executing the AOT-compiled HLO on a
+//! PJRT CPU client, and projects paper-scale numbers with a calibrated
+//! roofline hardware simulator.
+//!
+//! ## Layout (see DESIGN.md for the full inventory)
+//!
+//! * [`util`] — units (SI GB vs GiB), statistics, RNG, JSON, timing.
+//! * [`models`] — architecture registry + analytic size/cache math
+//!   (reproduces the paper's Table 2).
+//! * [`runtime`] — PJRT wrapper: manifest, weights, executables.
+//! * [`engine`] — prefill/decode inference engine over the runtime.
+//! * [`coordinator`] — request queue, dynamic batcher, serving loop.
+//! * [`power`] — simulated NVML / jtop sensors + background sampler
+//!   (0.1 s period, the paper's §2.4 methodology).
+//! * [`hwsim`] — roofline device simulator (A6000, Jetson) for
+//!   Tables 3–4.
+//! * [`profiler`] — the paper's contribution: TTFT/TPOT/TTLT + energy
+//!   measurement sessions and report tables.
+//! * [`trace`] — kernel-span recorder + Perfetto (Chrome trace) export
+//!   (Figure 1) and HTA-style summaries.
+//! * [`zeus`] — the Zeus (`ZeusMonitor`) baseline for Table 1.
+//! * [`workload`] — random-prompt and request-trace generators.
+//! * [`cli`] — argument parsing for the `elana` binary.
+//! * [`benchkit`] — micro-benchmark harness used by `cargo bench`.
+//! * [`testkit`] — property-testing support used by unit tests.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod hwsim;
+pub mod models;
+pub mod power;
+pub mod profiler;
+pub mod runtime;
+pub mod testkit;
+pub mod trace;
+pub mod util;
+pub mod workload;
+pub mod zeus;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,191 @@
+//! `elana` — the command-line profiler (paper §1: "a simple command-line
+//! interface").
+//!
+//! See `elana help` / `cli::USAGE` for the commands. Python never runs
+//! here: artifacts were AOT-compiled by `make artifacts`, and everything
+//! on this path is Rust + PJRT.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use elana::cli::{self, Command};
+use elana::config;
+use elana::coordinator::{self, BatchPolicy, RequestQueue};
+use elana::engine::InferenceEngine;
+use elana::hwsim;
+use elana::models;
+use elana::profiler::{self, report, ProfileSpec};
+use elana::runtime::Manifest;
+use elana::trace::{self, TraceRecorder};
+use elana::workload::RequestTrace;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = match cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(cmd) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: Command) -> Result<()> {
+    match cmd {
+        Command::Help => print!("{}", cli::USAGE),
+        Command::Version => println!("elana {}", elana::VERSION),
+        Command::Models => cmd_models(),
+        Command::Size { models, unit, points } => {
+            let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            let rows = profiler::size_report(&names, &points)?;
+            print!("{}", report::render_size_table(&rows, &points, unit));
+        }
+        Command::Latency { model, device, workload, energy, runs } => {
+            let mut spec = ProfileSpec::new(&model, &device, workload);
+            spec.energy = energy;
+            if let Some(r) = runs {
+                spec.latency_runs = r;
+            }
+            let outcome = if spec.is_simulated() {
+                profiler::profile_simulated(&spec)?
+            } else {
+                let manifest = Manifest::load_default()?;
+                profiler::session::profile_engine(&manifest, &spec.quick())?
+            };
+            let title = format!("{} on {}  [{}]", outcome.model,
+                                outcome.device, outcome.workload.label());
+            print!("{}", report::render_latency_table(&title, &[outcome]));
+        }
+        Command::Suite { name } => cmd_suite(&name)?,
+        Command::Trace { model, device, workload, out } => {
+            cmd_trace(&model, &device, &workload, &out)?;
+        }
+        Command::Serve { model, requests, rate_rps } => {
+            cmd_serve(&model, requests, rate_rps)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_models() {
+    println!("{:<20} {:<20} {:>9}  {:>8}  kind", "name", "display",
+             "params", "runnable");
+    for m in models::all_models() {
+        let params = models::param_count(&m) as f64;
+        println!("{:<20} {:<20} {:>8.2}M  {:>8}  {}",
+                 m.name, m.display_name, params / 1e6,
+                 if m.executable { "yes" } else { "sim" },
+                 if m.is_hybrid() { "hybrid" }
+                 else if m.n_mamba_layers() > 0 { "ssm" }
+                 else { "attention" });
+    }
+}
+
+fn cmd_suite(name: &str) -> Result<()> {
+    if name == "table2" {
+        let rows = profiler::size_report(
+            &profiler::size::TABLE2_MODELS,
+            &profiler::size::TABLE2_POINTS)?;
+        print!("{}", report::render_size_table(
+            &rows, &profiler::size::TABLE2_POINTS,
+            elana::util::units::MemUnit::Si));
+        return Ok(());
+    }
+    let suite = match name {
+        "table3" => config::table3_suite(),
+        "table4" => config::table4_suite(),
+        path => config::Suite::load(path)?,
+    };
+    println!("suite: {}", suite.name);
+    // group rows that share (device, workload) into one paper-style block
+    let mut blocks: Vec<(String, Vec<profiler::ProfileOutcome>)> = Vec::new();
+    for spec in &suite.specs {
+        let outcome = profiler::profile_simulated(spec)?;
+        let key = format!("{}  [{}]", outcome.device,
+                          outcome.workload.label());
+        match blocks.last_mut() {
+            Some((k, rows)) if *k == key => rows.push(outcome),
+            _ => blocks.push((key, vec![outcome])),
+        }
+    }
+    for (title, rows) in blocks {
+        println!();
+        print!("{}", report::render_latency_table(&title, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_trace(model: &str, device: &str, workload: &hwsim::Workload,
+             out: &str) -> Result<()> {
+    let arch = models::lookup(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
+    let rig = hwsim::device::rig_by_name(device)
+        .ok_or_else(|| anyhow::anyhow!("unknown device `{device}`"))?;
+    let sim = hwsim::simulate(&arch, &rig, workload);
+
+    let recorder = TraceRecorder::new();
+    // track 0: phases; track 1: kernels
+    recorder.record("prefill", "phase", 0, 0.0, sim.ttft.seconds * 1e6);
+    let pk = hwsim::synthesize_kernels(
+        &arch, &rig,
+        hwsim::prefill_cost(&arch, workload.batch, workload.prompt_len),
+        sim.ttft.seconds);
+    recorder.import_kernels(&pk, 0.0, 1);
+
+    let mut t = sim.ttft.seconds;
+    for (i, &step) in sim.step_seconds.iter().enumerate().take(8) {
+        recorder.record(format!("decode[{i}]"), "phase", 0, t * 1e6,
+                        step * 1e6);
+        let dk = hwsim::synthesize_kernels(
+            &arch, &rig,
+            hwsim::decode_cost(&arch, workload.batch,
+                               workload.prompt_len + i),
+            step);
+        recorder.import_kernels(&dk, t * 1e6, 1);
+        t += step;
+    }
+
+    let title = format!("ELANA {} on {} [{}]", arch.display_name,
+                        rig.name(), workload.label());
+    trace::perfetto::write_chrome_trace(&recorder, &title, out)?;
+    println!("wrote {out} ({} events) — open in https://ui.perfetto.dev",
+             recorder.len());
+    print!("{}", trace::analyze(&recorder).render(10));
+    Ok(())
+}
+
+fn cmd_serve(model: &str, requests: usize, rate_rps: f64) -> Result<()> {
+    let manifest = Manifest::load_default()?;
+    let mut engine = InferenceEngine::load_precompiled(&manifest, model)?;
+    let mm = manifest.model(model)?;
+    let policy = BatchPolicy {
+        allowed_batches: mm.batch_sizes(),
+        prompt_buckets: mm.prompt_buckets(1),
+        max_seq_len: mm.max_seq_len,
+        max_wait_s: 0.02,
+    };
+    let queue = Arc::new(RequestQueue::new(256));
+    let max_prompt = policy.prompt_buckets.last().copied().unwrap_or(16)
+        .min(32);
+    let trace = RequestTrace::poisson(requests, rate_rps, 8, max_prompt, 8,
+                                      mm.vocab_size, 7);
+    println!("serving {requests} requests at ~{rate_rps} rps on `{model}`…");
+    let feeder = coordinator::server::feed_trace(queue.clone(), trace, 1.0);
+    let metrics = coordinator::serve(&mut engine, &queue, &policy)?;
+    feeder.join().ok();
+
+    println!("completed {} requests in {:.2} s", metrics.completions.len(),
+             metrics.wall_s);
+    println!("  batches formed:     {}", metrics.batches_formed);
+    println!("  throughput:         {:.2} req/s, {:.1} tok/s",
+             metrics.throughput_rps(), metrics.tokens_per_s());
+    println!("  mean TTLT:          {:.2} ms", metrics.mean_ttlt_s() * 1e3);
+    println!("  mean padding waste: {:.1}%",
+             metrics.mean_padding_waste * 100.0);
+    Ok(())
+}

@@ -1,0 +1,215 @@
+//! Architecture descriptions.
+//!
+//! `ModelArch` is the Rust mirror of the python `ModelConfig` plus what is
+//! needed to describe the paper-scale models: tied embeddings, attention
+//! projection biases (Qwen), separate MLP blocks (Nemotron-H's block
+//! pattern is one of {Mamba2, Attention, FFN} per block, unlike the
+//! fused mixer+MLP Llama layer).
+
+/// Parameter / cache element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    F16,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::F16 => "f16",
+        }
+    }
+}
+
+/// One block of the network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Self-attention mixer (GQA).
+    Attention,
+    /// Mamba2-style selective-SSM mixer.
+    Mamba,
+    /// Standalone FFN block (Nemotron-H style).
+    MlpOnly,
+}
+
+/// SSM mixer hyper-parameters (Mamba2 conventions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SsmSpec {
+    pub heads: usize,
+    pub head_dim: usize,
+    pub d_state: usize,
+    pub conv_width: usize,
+    /// B/C projection groups (shared across heads within a group).
+    pub ngroups: usize,
+}
+
+impl SsmSpec {
+    pub fn d_inner(&self) -> usize {
+        self.heads * self.head_dim
+    }
+}
+
+/// Attention mixer hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnSpec {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// Q/K/V projection biases (Qwen-2.5 uses them).
+    pub qkv_bias: bool,
+}
+
+/// A full architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArch {
+    /// Registry key, e.g. `llama-3.1-8b`.
+    pub name: &'static str,
+    /// Paper-table display name, e.g. `Llama-3.1-8B`.
+    pub display_name: &'static str,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub layers: Vec<LayerKind>,
+    pub attn: AttnSpec,
+    pub ffn_dim: usize,
+    /// true (Llama-style): every Attention/Mamba block carries its own MLP.
+    /// false (Nemotron-style): MLP appears only as `MlpOnly` blocks.
+    pub fused_mlp: bool,
+    /// true: gated SwiGLU MLP (3 matrices); false: plain 2-matrix FFN
+    /// (Nemotron-H's squared-ReLU FFN).
+    pub mlp_gated: bool,
+    pub ssm: Option<SsmSpec>,
+    pub dtype: Dtype,
+    /// Input embedding and LM head share weights (Llama-3.2-1B, Qwen-1.5B).
+    pub tied_embeddings: bool,
+    /// True for the laptop-scale configs that have AOT artifacts and can
+    /// actually run on the PJRT engine.
+    pub executable: bool,
+}
+
+impl ModelArch {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn n_attn_layers(&self) -> usize {
+        self.layers.iter().filter(|l| **l == LayerKind::Attention).count()
+    }
+
+    pub fn n_mamba_layers(&self) -> usize {
+        self.layers.iter().filter(|l| **l == LayerKind::Mamba).count()
+    }
+
+    pub fn n_mlp_blocks(&self) -> usize {
+        if self.fused_mlp {
+            self.layers
+                .iter()
+                .filter(|l| !matches!(l, LayerKind::MlpOnly))
+                .count()
+                + self.layers.iter().filter(|l| **l == LayerKind::MlpOnly).count()
+        } else {
+            self.layers.iter().filter(|l| **l == LayerKind::MlpOnly).count()
+        }
+    }
+
+    pub fn is_hybrid(&self) -> bool {
+        self.n_mamba_layers() > 0 && self.n_attn_layers() > 0
+    }
+
+    /// Sanity checks; every registry entry is validated by a unit test.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "{}: no layers", self.name);
+        anyhow::ensure!(
+            self.attn.n_heads % self.attn.n_kv_heads.max(1) == 0,
+            "{}: n_heads must be a multiple of n_kv_heads", self.name
+        );
+        if self.n_mamba_layers() > 0 {
+            anyhow::ensure!(self.ssm.is_some(), "{}: mamba layers need SsmSpec",
+                            self.name);
+        }
+        if let Some(ssm) = &self.ssm {
+            anyhow::ensure!(ssm.heads > 0 && ssm.head_dim > 0 && ssm.d_state > 0,
+                            "{}: degenerate SsmSpec", self.name);
+            anyhow::ensure!(ssm.conv_width >= 1, "{}: conv_width", self.name);
+        }
+        Ok(())
+    }
+
+    /// Layer pattern as a compact string (`AAMA…`), matching the python
+    /// `layer_pattern` for executable configs.
+    pub fn pattern(&self) -> String {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerKind::Attention => 'A',
+                LayerKind::Mamba => 'M',
+                LayerKind::MlpOnly => 'F',
+            })
+            .collect()
+    }
+}
+
+/// Helper: a Llama-style uniform attention stack.
+pub fn uniform_attention(n: usize) -> Vec<LayerKind> {
+    vec![LayerKind::Attention; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::F16.bytes(), 2);
+    }
+
+    #[test]
+    fn all_registry_archs_validate() {
+        for arch in registry::all_models() {
+            arch.validate().unwrap_or_else(|e| panic!("{}: {e}", arch.name));
+        }
+    }
+
+    #[test]
+    fn pattern_roundtrip_kinds() {
+        let arch = registry::lookup("nemotron-h-8b").unwrap();
+        let p = arch.pattern();
+        assert_eq!(p.matches('A').count(), arch.n_attn_layers());
+        assert_eq!(p.matches('M').count(), arch.n_mamba_layers());
+        assert!(p.contains('F')); // standalone FFN blocks
+    }
+
+    #[test]
+    fn hybrid_detection() {
+        assert!(registry::lookup("nemotron-h-8b").unwrap().is_hybrid());
+        assert!(!registry::lookup("llama-3.1-8b").unwrap().is_hybrid());
+        assert!(registry::lookup("elana-tiny-hybrid").unwrap().is_hybrid());
+    }
+
+    #[test]
+    fn mlp_block_counts() {
+        let llama = registry::lookup("llama-3.1-8b").unwrap();
+        assert_eq!(llama.n_mlp_blocks(), 32); // fused: one per layer
+        let nh = registry::lookup("nemotron-h-8b").unwrap();
+        assert_eq!(nh.n_mlp_blocks(), 24); // standalone FFN blocks only
+    }
+
+    #[test]
+    fn uniform_attention_builder() {
+        let layers = uniform_attention(5);
+        assert_eq!(layers.len(), 5);
+        assert!(layers.iter().all(|l| *l == LayerKind::Attention));
+    }
+}

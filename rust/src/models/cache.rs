@@ -1,0 +1,208 @@
+//! KV / SSM cache size accounting (ELANA §2.2, Table 2 right columns).
+//!
+//! During autoregressive generation attention layers grow a per-token KV
+//! cache while SSM layers keep a constant-size recurrent state; both are
+//! sized here analytically for any (batch, seq_len) workload, using the
+//! paper's convention (cache elements at the model dtype, SI units for
+//! reporting).
+
+use super::arch::ModelArch;
+
+/// Cache footprint decomposition for one workload point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheBreakdown {
+    /// Attention KV cache: grows with batch * seq_len.
+    pub kv_bytes: u64,
+    /// SSM recurrent state (heads * head_dim * d_state): per sequence.
+    pub ssm_state_bytes: u64,
+    /// Short-conv rolling window state: per sequence.
+    pub conv_state_bytes: u64,
+}
+
+impl CacheBreakdown {
+    pub fn total(&self) -> u64 {
+        self.kv_bytes + self.ssm_state_bytes + self.conv_state_bytes
+    }
+}
+
+/// Per-token KV bytes across all attention layers.
+pub fn kv_bytes_per_token(arch: &ModelArch) -> u64 {
+    let a = &arch.attn;
+    let per_layer = 2 * a.n_kv_heads as u64 * a.head_dim as u64
+        * arch.dtype.bytes() as u64;
+    arch.n_attn_layers() as u64 * per_layer
+}
+
+/// Per-sequence SSM state bytes across all mamba layers (SSD state).
+pub fn ssm_state_bytes_per_seq(arch: &ModelArch) -> u64 {
+    match &arch.ssm {
+        None => 0,
+        Some(ssm) => {
+            let per_layer = ssm.heads as u64 * ssm.head_dim as u64
+                * ssm.d_state as u64 * arch.dtype.bytes() as u64;
+            arch.n_mamba_layers() as u64 * per_layer
+        }
+    }
+}
+
+/// Per-sequence conv window state bytes across all mamba layers.
+pub fn conv_state_bytes_per_seq(arch: &ModelArch) -> u64 {
+    match &arch.ssm {
+        None => 0,
+        Some(ssm) => {
+            // Mamba2 convs over [x, B, C]: d_inner + 2 * ngroups * d_state
+            // channels, (width - 1) taps of history each.
+            let channels = ssm.d_inner() as u64
+                + 2 * ssm.ngroups as u64 * ssm.d_state as u64;
+            let per_layer = channels * (ssm.conv_width as u64 - 1)
+                * arch.dtype.bytes() as u64;
+            arch.n_mamba_layers() as u64 * per_layer
+        }
+    }
+}
+
+/// Full cache breakdown at a workload point.
+pub fn cache_breakdown(arch: &ModelArch, batch: usize, seq_len: usize)
+                       -> CacheBreakdown {
+    CacheBreakdown {
+        kv_bytes: kv_bytes_per_token(arch) * batch as u64 * seq_len as u64,
+        ssm_state_bytes: ssm_state_bytes_per_seq(arch) * batch as u64,
+        conv_state_bytes: conv_state_bytes_per_seq(arch) * batch as u64,
+    }
+}
+
+/// Total cache bytes at a workload point (the Table 2 cell).
+pub fn cache_bytes(arch: &ModelArch, batch: usize, seq_len: usize) -> u64 {
+    cache_breakdown(arch, batch, seq_len).total()
+}
+
+/// Dev-config cross-check against the python engine's physical cache
+/// (f32, padded to max_seq_len): bytes of the actual runtime cache
+/// tensors. Distinct from the *analytic* `cache_bytes`, which sizes at
+/// the logical seq_len like the paper.
+pub fn physical_cache_bytes(arch: &ModelArch, batch: usize,
+                            max_seq_len: usize) -> u64 {
+    let mut total = 0u64;
+    let elem = 4u64; // engine caches are f32
+    if arch.n_attn_layers() > 0 {
+        total += 2 * arch.n_attn_layers() as u64 * batch as u64
+            * arch.attn.n_kv_heads as u64 * max_seq_len as u64
+            * arch.attn.head_dim as u64 * elem;
+    }
+    if let Some(ssm) = &arch.ssm {
+        let n = arch.n_mamba_layers() as u64;
+        total += n * batch as u64 * ssm.heads as u64 * ssm.head_dim as u64
+            * ssm.d_state as u64 * elem;
+        total += n * batch as u64 * (ssm.conv_width as u64 - 1)
+            * ssm.d_inner() as u64 * elem;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::*;
+    use crate::testkit::property;
+    use crate::util::units::MemUnit;
+
+    /// Table 2: Llama-3.1-8B cache = 0.13 / 17.18 / 34.36 GB.
+    #[test]
+    fn table2_llama31_8b_cache_cells() {
+        let arch = llama31_8b();
+        assert_eq!(MemUnit::Si.format(cache_bytes(&arch, 1, 1024)), "0.13 GB");
+        assert_eq!(MemUnit::Si.format(cache_bytes(&arch, 128, 1024)),
+                   "17.18 GB");
+        assert_eq!(MemUnit::Si.format(cache_bytes(&arch, 128, 2048)),
+                   "34.36 GB");
+    }
+
+    /// Table 2: Qwen-2.5-7B cache = 0.06 / 7.52 / 15.03 GB.
+    #[test]
+    fn table2_qwen25_7b_cache_cells() {
+        let arch = qwen25_7b();
+        assert_eq!(MemUnit::Si.format(cache_bytes(&arch, 1, 1024)), "0.06 GB");
+        assert_eq!(MemUnit::Si.format(cache_bytes(&arch, 128, 1024)),
+                   "7.52 GB");
+        assert_eq!(MemUnit::Si.format(cache_bytes(&arch, 128, 2048)),
+                   "15.03 GB");
+    }
+
+    /// Nemotron-H-8B: our analytic number from the public config. The
+    /// paper's cells (0.05 / 3.32 / 6.64 GB) do not decompose from any
+    /// public config (see EXPERIMENTS.md §Table 2); we assert the *shape*
+    /// claims instead: far smaller than Llama at large batch, and nearly
+    /// L-independent per the SSM-dominated design.
+    #[test]
+    fn table2_nemotron_cache_shape() {
+        let nh = nemotron_h_8b();
+        let llama = llama31_8b();
+        let nh_128_1024 = cache_bytes(&nh, 128, 1024);
+        assert!(nh_128_1024 < cache_bytes(&llama, 128, 1024),
+                "hybrid must cache less than dense attention");
+        // ... and the gap widens with sequence length (KV grows, SSM
+        // state does not).
+        assert!(cache_bytes(&nh, 128, 4096) <
+                cache_bytes(&llama, 128, 4096) / 2);
+        // KV part grows with L, SSM part doesn't: growth factor < 2x.
+        let growth = cache_bytes(&nh, 128, 2048) as f64 / nh_128_1024 as f64;
+        assert!(growth < 1.5, "growth {growth}");
+    }
+
+    #[test]
+    fn kv_per_token_llama() {
+        // 32 layers * 2 (K,V) * 8 kv heads * 128 head_dim * 2 bytes
+        assert_eq!(kv_bytes_per_token(&llama31_8b()), 131_072);
+    }
+
+    #[test]
+    fn attention_only_has_no_ssm_state() {
+        let arch = qwen25_7b();
+        let b = cache_breakdown(&arch, 4, 512);
+        assert_eq!(b.ssm_state_bytes, 0);
+        assert_eq!(b.conv_state_bytes, 0);
+        assert!(b.kv_bytes > 0);
+    }
+
+    #[test]
+    fn dev_physical_cache_matches_manifest_shapes() {
+        // elana-tiny: kv = 4 layers * 2 * b * 2 kvh * 128 maxlen * 32 hd * 4B
+        let arch = elana_tiny();
+        let b = physical_cache_bytes(&arch, 1, 128);
+        assert_eq!(b, 2 * 4 * 1 * 2 * 128 * 32 * 4);
+    }
+
+    #[test]
+    fn prop_cache_linear_in_batch() {
+        property(200, |rng| {
+            let models = all_models();
+            let arch = &models[rng.usize_in(0, models.len() - 1)];
+            let b = rng.usize_in(1, 64);
+            let l = rng.usize_in(1, 4096);
+            assert_eq!(cache_bytes(arch, b, l),
+                       b as u64 * cache_bytes(arch, 1, l));
+        });
+    }
+
+    #[test]
+    fn prop_cache_monotone_in_seq_len() {
+        property(200, |rng| {
+            let models = all_models();
+            let arch = &models[rng.usize_in(0, models.len() - 1)];
+            let b = rng.usize_in(1, 8);
+            let l1 = rng.usize_in(1, 2048);
+            let l2 = l1 + rng.usize_in(1, 2048);
+            assert!(cache_bytes(arch, b, l2) >= cache_bytes(arch, b, l1));
+        });
+    }
+
+    #[test]
+    fn prop_kv_part_exactly_linear_in_seq_len() {
+        property(100, |rng| {
+            let arch = llama31_8b();
+            let l = rng.usize_in(1, 4096);
+            assert_eq!(cache_bytes(&arch, 1, 2 * l),
+                       2 * cache_bytes(&arch, 1, l));
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Model registry + analytic architecture math.
+//!
+//! ELANA §2.2 profiles model size (parameters + buffers) and KV/SSM cache
+//! size analytically from the architecture; this module carries the
+//! published architectures the paper profiles (Llama-3.1-8B, Qwen-2.5-7B,
+//! Nemotron-H-8B, Llama-3.2-1B, Qwen2.5-1.5B) plus the laptop-scale dev
+//! configs that are actually executed on the PJRT runtime, and reproduces
+//! Table 2 exactly where configs are public.
+
+pub mod arch;
+pub mod cache;
+pub mod quant;
+pub mod registry;
+pub mod size;
+
+pub use arch::{Dtype, LayerKind, ModelArch, SsmSpec};
+pub use cache::{cache_bytes, CacheBreakdown};
+pub use registry::{all_models, dev_models, lookup, paper_models};
+pub use quant::QuantScheme;
+pub use size::{param_breakdown, param_count, SizeBreakdown};

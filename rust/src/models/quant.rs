@@ -1,0 +1,167 @@
+//! Quantization / low-bit-width modeling (paper §1: ELANA "can be easily
+//! customized or adapted to compressed or low bit-width models").
+//!
+//! A `QuantScheme` rescales the analytic size/cache/latency model the
+//! way weight-only and weight+activation quantization rescale a real
+//! deployment: weight bytes shrink by the weight width (plus per-group
+//! scale overhead), KV cache bytes by the cache width, and the decode
+//! phase — weight-bandwidth-bound — speeds up proportionally, which is
+//! exactly the effect schemes like AWQ (w4) and QServe (w4a8kv4) sell.
+
+use super::arch::ModelArch;
+use super::{cache, size};
+
+/// A weight/activation/cache bit-width scheme.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantScheme {
+    pub name: &'static str,
+    /// Weight bits (e.g. 4 for AWQ-style weight-only int4).
+    pub weight_bits: u32,
+    /// KV/state cache bits.
+    pub cache_bits: u32,
+    /// Per-group scale/zero-point overhead in bits per weight
+    /// (e.g. group size 128 with fp16 scales ≈ 0.25 extra bits/weight).
+    pub overhead_bits_per_weight: f64,
+}
+
+/// Reference schemes from the efficient-LLM literature the paper cites.
+pub fn bf16() -> QuantScheme {
+    QuantScheme { name: "bf16", weight_bits: 16, cache_bits: 16,
+                  overhead_bits_per_weight: 0.0 }
+}
+
+/// Weight-only int8 (LLM.int8-style).
+pub fn w8a16() -> QuantScheme {
+    QuantScheme { name: "w8a16", weight_bits: 8, cache_bits: 16,
+                  overhead_bits_per_weight: 0.125 }
+}
+
+/// AWQ-style weight-only int4 (group size 128, fp16 scales).
+pub fn w4a16() -> QuantScheme {
+    QuantScheme { name: "w4a16 (AWQ)", weight_bits: 4, cache_bits: 16,
+                  overhead_bits_per_weight: 0.25 }
+}
+
+/// QServe-style W4A8KV4.
+pub fn w4a8kv4() -> QuantScheme {
+    QuantScheme { name: "w4a8kv4 (QServe)", weight_bits: 4, cache_bits: 4,
+                  overhead_bits_per_weight: 0.25 }
+}
+
+pub fn all_schemes() -> Vec<QuantScheme> {
+    vec![bf16(), w8a16(), w4a16(), w4a8kv4()]
+}
+
+impl QuantScheme {
+    /// Quantized model size in bytes.
+    pub fn model_bytes(&self, arch: &ModelArch) -> u64 {
+        let params = size::param_count(arch) as f64;
+        let bits = self.weight_bits as f64 + self.overhead_bits_per_weight;
+        // norms (and buffers like RoPE tables) stay high precision;
+        // approximate by keeping them at 16 bits.
+        let b = size::param_breakdown(arch);
+        let hi = (b.norms + b.buffers) as f64 * 16.0;
+        let lo = (params - b.norms as f64) * bits;
+        ((hi + lo) / 8.0).ceil() as u64
+    }
+
+    /// Quantized cache bytes at a workload point.
+    pub fn cache_bytes(&self, arch: &ModelArch, batch: usize,
+                       seq_len: usize) -> u64 {
+        let full = cache::cache_bytes(arch, batch, seq_len) as f64;
+        let elem_bits = (arch.dtype.bytes() * 8) as f64;
+        (full * self.cache_bits as f64 / elem_bits).ceil() as u64
+    }
+
+    /// Decode speedup over the base dtype on a bandwidth-bound device:
+    /// bytes moved shrink by the weight/cache ratio.
+    pub fn decode_speedup(&self, arch: &ModelArch, batch: usize,
+                          ctx: usize) -> f64 {
+        let w_full = size::model_bytes(arch) as f64;
+        let kv_full = (cache::kv_bytes_per_token(arch) * batch as u64
+                       * ctx as u64) as f64;
+        let w_q = self.model_bytes(arch) as f64;
+        let kv_q = kv_full * self.cache_bits as f64
+            / (arch.dtype.bytes() * 8) as f64;
+        (w_full + kv_full) / (w_q + kv_q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::*;
+    use crate::testkit::property;
+    use crate::util::units::MemUnit;
+
+    #[test]
+    fn bf16_is_identity() {
+        let arch = llama31_8b();
+        assert_eq!(bf16().model_bytes(&arch), size::model_bytes(&arch));
+        assert_eq!(bf16().cache_bytes(&arch, 128, 1024),
+                   cache::cache_bytes(&arch, 128, 1024));
+        assert!((bf16().decode_speedup(&arch, 1, 512) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn awq_w4_shrinks_llama_to_about_4gb() {
+        // AWQ int4 Llama-3.1-8B checkpoints are ~4.3 GB on disk
+        let gb = MemUnit::Si.giga(w4a16().model_bytes(&llama31_8b()));
+        assert!((4.0..4.8).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn kv4_shrinks_cache_4x() {
+        let arch = llama31_8b();
+        let full = cache::cache_bytes(&arch, 128, 1024) as f64;
+        let q = w4a8kv4().cache_bytes(&arch, 128, 1024) as f64;
+        assert!((full / q - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn weight_only_quant_leaves_cache_alone() {
+        let arch = qwen25_7b();
+        assert_eq!(w4a16().cache_bytes(&arch, 64, 512),
+                   cache::cache_bytes(&arch, 64, 512));
+    }
+
+    #[test]
+    fn decode_speedup_ordering() {
+        // deeper quantization => faster bandwidth-bound decode
+        let arch = llama31_8b();
+        let s8 = w8a16().decode_speedup(&arch, 1, 512);
+        let s4 = w4a16().decode_speedup(&arch, 1, 512);
+        let s4kv = w4a8kv4().decode_speedup(&arch, 1, 512);
+        assert!(1.0 < s8 && s8 < s4 && s4 <= s4kv, "{s8} {s4} {s4kv}");
+        // w4 weight-only on an 8B model: ~3.5-4x fewer bytes at short ctx
+        assert!((3.0..4.1).contains(&s4), "{s4}");
+    }
+
+    #[test]
+    fn kv4_matters_more_at_long_context_large_batch() {
+        let arch = llama31_8b();
+        let short = w4a8kv4().decode_speedup(&arch, 1, 128)
+            / w4a16().decode_speedup(&arch, 1, 128);
+        let long = w4a8kv4().decode_speedup(&arch, 64, 4096)
+            / w4a16().decode_speedup(&arch, 64, 4096);
+        assert!(long > short * 1.5,
+                "KV quantization should dominate at long ctx: {short} {long}");
+    }
+
+    #[test]
+    fn prop_quant_sizes_monotone_in_bits() {
+        property(100, |rng| {
+            let arch = llama31_8b();
+            let b = rng.usize_in(1, 32);
+            let l = rng.usize_in(64, 2048);
+            let mut last = 0u64;
+            for s in [w4a8kv4(), w4a16(), w8a16(), bf16()] {
+                let total = s.model_bytes(&arch)
+                    + s.cache_bytes(&arch, b, l);
+                assert!(total >= last,
+                        "{}: {total} < {last}", s.name);
+                last = total;
+            }
+        });
+    }
+}

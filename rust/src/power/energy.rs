@@ -1,0 +1,179 @@
+//! Energy computation: (power log, measurement window) → joules.
+//!
+//! The paper: "We sample the power usage every 0.1 second … we compute
+//! the average power over the corresponding measurement window. We
+//! combine this average power with the measured latency to obtain the
+//! energy consumption." `WindowEnergy::average_power_method` is exactly
+//! that; a trapezoidal integral is provided as a cross-check (they agree
+//! for steady loads, and the delta is reported by tests as a sanity
+//! bound).
+
+use crate::util::stats::trapezoid_integrate;
+
+use super::sampler::PowerLog;
+
+/// Energy over one measurement window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowEnergy {
+    /// Window-average power, watts.
+    pub avg_power_w: f64,
+    /// Window duration, seconds.
+    pub duration_s: f64,
+    /// Energy = avg power × duration (paper's method), joules.
+    pub joules: f64,
+    /// Number of samples in the window.
+    pub samples: usize,
+}
+
+impl WindowEnergy {
+    /// The paper's method: mean of in-window samples × window duration.
+    /// Falls back to the nearest sample before the window when the window
+    /// is shorter than the sampling period (fast phases at 0.1 s cadence:
+    /// exactly the situation ELANA hits for single decode steps).
+    pub fn average_power_method(log: &PowerLog, t0: f64, t1: f64)
+                                -> WindowEnergy {
+        assert!(t1 >= t0, "inverted window");
+        let in_window = log.window(t0, t1);
+        let (avg, n) = if in_window.is_empty() {
+            (nearest_before(log, t0).unwrap_or(0.0), 0)
+        } else {
+            let sum: f64 = in_window.iter().map(|(_, w)| w).sum();
+            (sum / in_window.len() as f64, in_window.len())
+        };
+        let duration = t1 - t0;
+        WindowEnergy {
+            avg_power_w: avg,
+            duration_s: duration,
+            joules: avg * duration,
+            samples: n,
+        }
+    }
+
+    /// Trapezoidal cross-check (integrates the actual sample trace,
+    /// clamping to the window edges with boundary interpolation).
+    pub fn trapezoid_method(log: &PowerLog, t0: f64, t1: f64) -> f64 {
+        let mut pts = log.window(t0, t1);
+        // extend to the window edges using the boundary samples
+        if let Some(w0) = nearest_before(log, t0) {
+            pts.insert(0, (t0, w0));
+        }
+        if let Some(w1) = pts.last().map(|&(_, w)| w) {
+            pts.push((t1, w1));
+        }
+        trapezoid_integrate(&pts)
+    }
+}
+
+fn nearest_before(log: &PowerLog, t: f64) -> Option<f64> {
+    log.snapshot()
+        .iter()
+        .filter(|(ts, _)| *ts <= t)
+        .last()
+        .map(|&(_, w)| w)
+}
+
+/// Energy metrics for one profiled workload, in the units of Table 3/4.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyReport {
+    /// J/Prompt: energy of one prefill (per batch — the paper reports the
+    /// whole batch's prefill energy as one prompt event).
+    pub joules_per_prompt: f64,
+    /// J/Token: energy of one decode step.
+    pub joules_per_token: f64,
+    /// J/Request: energy of the whole request (TTLT window).
+    pub joules_per_request: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::property;
+
+    fn constant_log(watts: f64, until: f64) -> PowerLog {
+        let log = PowerLog::new();
+        let mut t = 0.0;
+        while t <= until {
+            log.push(t, watts);
+            t += 0.1;
+        }
+        log
+    }
+
+    #[test]
+    fn constant_power_energy_is_p_times_t() {
+        let log = constant_log(275.0, 10.0);
+        let e = WindowEnergy::average_power_method(&log, 1.0, 3.0);
+        assert!((e.joules - 550.0).abs() < 1e-9, "{e:?}");
+        assert!((e.avg_power_w - 275.0).abs() < 1e-9);
+        assert_eq!(e.duration_s, 2.0);
+    }
+
+    #[test]
+    fn short_window_uses_nearest_sample() {
+        // decode step of 25 ms — shorter than the 0.1 s period
+        let log = constant_log(274.0, 5.0);
+        let e = WindowEnergy::average_power_method(&log, 2.03, 2.055);
+        assert_eq!(e.samples, 0);
+        assert!((e.avg_power_w - 274.0).abs() < 1e-9);
+        // 274 W * 25 ms = 6.85 J — the paper's J/token magnitude
+        assert!((e.joules - 6.85).abs() < 1e-6, "{e:?}");
+    }
+
+    #[test]
+    fn empty_log_yields_zero() {
+        let log = PowerLog::new();
+        let e = WindowEnergy::average_power_method(&log, 0.0, 1.0);
+        assert_eq!(e.joules, 0.0);
+        assert_eq!(e.samples, 0);
+    }
+
+    #[test]
+    fn trapezoid_agrees_on_constant_load() {
+        let log = constant_log(100.0, 10.0);
+        let avg = WindowEnergy::average_power_method(&log, 1.0, 4.0).joules;
+        let trap = WindowEnergy::trapezoid_method(&log, 1.0, 4.0);
+        assert!((avg - trap).abs() < 1e-6, "avg {avg} trap {trap}");
+    }
+
+    #[test]
+    fn ramp_load_methods_close() {
+        // power ramps 0..100 W over 10 s
+        let log = PowerLog::new();
+        let mut t = 0.0;
+        while t <= 10.0 {
+            log.push(t, 10.0 * t);
+            t += 0.1;
+        }
+        let avg = WindowEnergy::average_power_method(&log, 2.0, 8.0).joules;
+        let trap = WindowEnergy::trapezoid_method(&log, 2.0, 8.0);
+        // both ≈ ∫ 10t dt over [2,8] = 5*(64-4) = 300 J
+        assert!((avg - 300.0).abs() < 5.0, "{avg}");
+        assert!((trap - 300.0).abs() < 5.0, "{trap}");
+    }
+
+    #[test]
+    fn prop_energy_scales_linearly_with_power() {
+        property(100, |rng| {
+            let w = rng.f64_in(1.0, 400.0);
+            let log1 = constant_log(w, 5.0);
+            let log2 = constant_log(2.0 * w, 5.0);
+            let e1 = WindowEnergy::average_power_method(&log1, 0.5, 4.5);
+            let e2 = WindowEnergy::average_power_method(&log2, 0.5, 4.5);
+            assert!((e2.joules - 2.0 * e1.joules).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_energy_additive_over_subwindows() {
+        property(100, |rng| {
+            let w = rng.f64_in(10.0, 300.0);
+            let log = constant_log(w, 10.0);
+            let tm = rng.f64_in(2.0, 8.0);
+            let a = WindowEnergy::average_power_method(&log, 1.0, tm).joules;
+            let b = WindowEnergy::average_power_method(&log, tm, 9.0).joules;
+            let whole = WindowEnergy::average_power_method(&log, 1.0, 9.0)
+                .joules;
+            assert!((a + b - whole).abs() < 1e-6);
+        });
+    }
+}

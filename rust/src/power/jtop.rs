@@ -1,0 +1,117 @@
+//! jtop-simulating sensor (jetson-stats): per-rail power on a Jetson SoC.
+//!
+//! On Jetson devices ELANA reads the on-board INA3221 sensors through
+//! jtop, which exposes per-rail milliwatt readings (GPU, CPU, SoC, …).
+//! The paper uses the GPU rail; we model the GPU rail with the device
+//! power model and add small constant CPU/SoC rails so the rail-summing
+//! code path is exercised.
+
+use std::sync::Mutex;
+
+use super::model::{DevicePowerModel, LoadHandle};
+use super::sampler::PowerReader;
+use crate::util::Rng;
+
+/// Power rails exposed by the simulated board.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rail {
+    Gpu,
+    Cpu,
+    Soc,
+}
+
+/// A simulated Jetson board.
+pub struct JtopSim {
+    gpu_model: DevicePowerModel,
+    load: LoadHandle,
+    cpu_w: f64,
+    soc_w: f64,
+    rng: Mutex<Rng>,
+}
+
+impl JtopSim {
+    pub fn new(gpu_model: DevicePowerModel, load: LoadHandle) -> JtopSim {
+        JtopSim {
+            gpu_model,
+            load,
+            cpu_w: 1.2,
+            soc_w: 0.8,
+            rng: Mutex::new(Rng::new(0x4A54)),
+        }
+    }
+
+    /// Per-rail instantaneous power, milliwatts (jtop convention).
+    pub fn rail_power_mw(&self, rail: Rail) -> u64 {
+        let w = match rail {
+            Rail::Gpu => {
+                let mut rng = self.rng.lock().unwrap();
+                self.gpu_model.watts_noisy(self.load.get(), &mut rng)
+            }
+            Rail::Cpu => self.cpu_w,
+            Rail::Soc => self.soc_w,
+        };
+        (w * 1000.0) as u64
+    }
+
+    /// Total board power (all rails), watts.
+    pub fn total_board_w(&self) -> f64 {
+        [Rail::Gpu, Rail::Cpu, Rail::Soc]
+            .iter()
+            .map(|r| self.rail_power_mw(*r) as f64 / 1000.0)
+            .sum()
+    }
+}
+
+impl PowerReader for JtopSim {
+    /// The paper's Jetson energy numbers use the GPU rail.
+    fn read_watts(&self) -> f64 {
+        self.rail_power_mw(Rail::Gpu) as f64 / 1000.0
+    }
+
+    fn name(&self) -> String {
+        "jtop-sim (GPU rail)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ORIN_NANO: DevicePowerModel = DevicePowerModel {
+        idle_w: 0.4, sustain_w: 1.4, alpha: 0.7, noise_w: 0.0,
+    };
+
+    #[test]
+    fn gpu_rail_follows_load() {
+        let load = LoadHandle::new();
+        let j = JtopSim::new(ORIN_NANO, load.clone());
+        let idle = j.rail_power_mw(Rail::Gpu);
+        load.set(1.0);
+        let busy = j.rail_power_mw(Rail::Gpu);
+        assert!(idle < 500, "{idle}");
+        assert!((1300..=1500).contains(&busy), "{busy}");
+    }
+
+    #[test]
+    fn other_rails_constant() {
+        let j = JtopSim::new(ORIN_NANO, LoadHandle::new());
+        assert_eq!(j.rail_power_mw(Rail::Cpu), 1200);
+        assert_eq!(j.rail_power_mw(Rail::Soc), 800);
+    }
+
+    #[test]
+    fn board_total_sums_rails() {
+        let j = JtopSim::new(ORIN_NANO, LoadHandle::new());
+        let total = j.total_board_w();
+        assert!((total - (0.4 + 1.2 + 0.8)).abs() < 0.01, "{total}");
+    }
+
+    #[test]
+    fn reader_uses_gpu_rail_only() {
+        let load = LoadHandle::new();
+        let j = JtopSim::new(ORIN_NANO, load.clone());
+        load.set(1.0);
+        let w = j.read_watts();
+        assert!((w - 1.4).abs() < 0.1, "{w}");
+    }
+}

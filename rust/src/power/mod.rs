@@ -1,0 +1,22 @@
+//! Power sensor substrate: simulated NVML / jtop + background sampler.
+//!
+//! The paper (§2.4) measures energy by running a *separate process* that
+//! polls instantaneous GPU power every 0.1 s (pynvml on discrete GPUs,
+//! jtop's on-board sensors on Jetson), then multiplies the window-average
+//! power by the measured latency. This module reproduces that pipeline
+//! exactly, substituting only the sensor reading itself with a
+//! utilization-driven device power model (this testbed has no NVIDIA
+//! GPU): the sampler thread, 0.1 s cadence, window averaging, and
+//! multi-GPU summation are all faithful.
+
+pub mod energy;
+pub mod jtop;
+pub mod model;
+pub mod nvml;
+pub mod sampler;
+
+pub use energy::{EnergyReport, WindowEnergy};
+pub use jtop::JtopSim;
+pub use model::{DevicePowerModel, LoadHandle};
+pub use nvml::NvmlSim;
+pub use sampler::{PowerLog, PowerReader, PowerSampler, SAMPLE_PERIOD_S};

@@ -1,0 +1,143 @@
+//! NVML-simulating sensor: the pynvml surface ELANA queries, backed by
+//! `DevicePowerModel` + `LoadHandle` instead of real silicon.
+//!
+//! API mirrors the NVML calls the paper uses (`nvmlDeviceGetCount`,
+//! `nvmlDeviceGetPowerUsage` — milliwatts!) so the profiler code reads
+//! like the original tool. Multi-GPU rigs (the paper's 4×A6000 rows)
+//! are N devices sharing one load handle (tensor-parallel ranks run in
+//! lock-step) unless per-device handles are installed.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use super::model::{DevicePowerModel, LoadHandle};
+use super::sampler::PowerReader;
+use crate::util::Rng;
+
+struct Gpu {
+    model: DevicePowerModel,
+    load: LoadHandle,
+}
+
+/// A simulated NVML context over N homogeneous GPUs.
+pub struct NvmlSim {
+    gpus: Vec<Gpu>,
+    rng: Mutex<Rng>,
+}
+
+impl NvmlSim {
+    /// N identical devices driven by one shared load handle.
+    pub fn new_shared(n: usize, model: DevicePowerModel, load: LoadHandle)
+                      -> NvmlSim {
+        NvmlSim {
+            gpus: (0..n)
+                .map(|_| Gpu { model, load: load.clone() })
+                .collect(),
+            rng: Mutex::new(Rng::new(0x4E56)),
+        }
+    }
+
+    /// Heterogeneous / independently loaded devices.
+    pub fn new_per_device(devs: Vec<(DevicePowerModel, LoadHandle)>)
+                          -> NvmlSim {
+        NvmlSim {
+            gpus: devs
+                .into_iter()
+                .map(|(model, load)| Gpu { model, load })
+                .collect(),
+            rng: Mutex::new(Rng::new(0x4E56)),
+        }
+    }
+
+    /// `nvmlDeviceGetCount_v2` analogue.
+    pub fn device_count(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// `nvmlDeviceGetPowerUsage` analogue: instantaneous draw in
+    /// **milliwatts** (NVML convention).
+    pub fn power_usage_mw(&self, device: usize) -> Result<u64> {
+        ensure!(device < self.gpus.len(),
+                "device index {device} out of range ({} devices)",
+                self.gpus.len());
+        let gpu = &self.gpus[device];
+        let mut rng = self.rng.lock().unwrap();
+        let w = gpu.model.watts_noisy(gpu.load.get(), &mut rng);
+        Ok((w * 1000.0) as u64)
+    }
+
+    /// Sum of instantaneous draw across all devices, watts (the paper
+    /// sums participating GPUs in multi-GPU settings).
+    pub fn total_power_w(&self) -> f64 {
+        (0..self.gpus.len())
+            .map(|i| self.power_usage_mw(i).unwrap() as f64 / 1000.0)
+            .sum()
+    }
+}
+
+impl PowerReader for NvmlSim {
+    fn read_watts(&self) -> f64 {
+        self.total_power_w()
+    }
+
+    fn name(&self) -> String {
+        format!("nvml-sim x{}", self.gpus.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MODEL: DevicePowerModel = DevicePowerModel {
+        idle_w: 22.0, sustain_w: 278.0, alpha: 0.6, noise_w: 0.0,
+    };
+
+    #[test]
+    fn device_count_and_bounds() {
+        let nv = NvmlSim::new_shared(4, MODEL, LoadHandle::new());
+        assert_eq!(nv.device_count(), 4);
+        assert!(nv.power_usage_mw(3).is_ok());
+        assert!(nv.power_usage_mw(4).is_err());
+    }
+
+    #[test]
+    fn reports_milliwatts_at_idle() {
+        let nv = NvmlSim::new_shared(1, MODEL, LoadHandle::new());
+        assert_eq!(nv.power_usage_mw(0).unwrap(), 22_000);
+    }
+
+    #[test]
+    fn load_raises_power_on_all_shared_devices() {
+        let load = LoadHandle::new();
+        let nv = NvmlSim::new_shared(4, MODEL, load.clone());
+        let idle = nv.total_power_w();
+        load.set(1.0);
+        let busy = nv.total_power_w();
+        assert!((idle - 88.0).abs() < 1.0, "{idle}");
+        assert!((busy - 4.0 * 278.0).abs() < 4.0, "{busy}");
+    }
+
+    #[test]
+    fn per_device_loads_independent() {
+        let l0 = LoadHandle::new();
+        let l1 = LoadHandle::new();
+        let nv = NvmlSim::new_per_device(vec![(MODEL, l0.clone()),
+                                              (MODEL, l1.clone())]);
+        l0.set(1.0);
+        let p0 = nv.power_usage_mw(0).unwrap();
+        let p1 = nv.power_usage_mw(1).unwrap();
+        assert!(p0 > 270_000 && p1 < 25_000, "{p0} {p1}");
+    }
+
+    #[test]
+    fn reader_trait_reports_total() {
+        let load = LoadHandle::new();
+        let nv = NvmlSim::new_shared(2, MODEL, load.clone());
+        load.set(1.0);
+        let w = nv.read_watts();
+        assert!((w - 556.0).abs() < 2.0, "{w}");
+        assert!(nv.name().contains("x2"));
+    }
+}

@@ -1,0 +1,29 @@
+//! The ELANA profiler core — the paper's contribution.
+//!
+//! Orchestrates everything the substrates provide into the paper's
+//! workflow: pick a model and a device, run the TTFT / TPOT / TTLT
+//! harnesses with warmup and repetition (§2.3), sample power concurrently
+//! and window it into J/Prompt, J/Token, J/Request (§2.4), and render
+//! the size (§2.2, Table 2) and latency/energy (Tables 3–4) reports.
+//!
+//! Two execution backends:
+//! * **real engine** — the AOT-compiled dev models actually executing on
+//!   the PJRT CPU runtime (laptop-scale ground truth for the measurement
+//!   pipeline);
+//! * **hwsim** — the calibrated roofline simulator projecting the
+//!   paper-scale devices (A6000, 4×A6000, Jetson), with energy measured
+//!   by *replaying* each phase against the simulated NVML/jtop sensor at
+//!   the paper's 0.1 s sampling cadence.
+
+pub mod latency;
+pub mod playback;
+pub mod report;
+pub mod session;
+pub mod size;
+pub mod spec;
+
+pub use latency::{LatencyStats, RunStats};
+pub use report::{render_latency_table, render_size_table, Row};
+pub use session::{profile_simulated, ProfileOutcome};
+pub use size::{size_report, SizeRow};
+pub use spec::ProfileSpec;

@@ -1,0 +1,122 @@
+//! Report rendering: the paper's table layouts as plain text / markdown.
+
+use crate::util::units::MemUnit;
+
+use super::session::ProfileOutcome;
+use super::size::SizeRow;
+
+/// A generic table row (already formatted cells).
+#[derive(Debug, Clone)]
+pub struct Row(pub Vec<String>);
+
+/// Render an aligned plain-text table.
+pub fn render_table(headers: &[&str], rows: &[Row]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, cell) in r.0.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = line(&headers.iter().map(|s| s.to_string())
+                       .collect::<Vec<_>>());
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&line(&r.0));
+        out.push('\n');
+    }
+    out
+}
+
+/// Table 2 layout.
+pub fn render_size_table(rows: &[SizeRow], points: &[(usize, usize)],
+                         unit: MemUnit) -> String {
+    let mut headers = vec!["Model".to_string(), "Param.".to_string()];
+    headers.extend(points.iter().map(|(b, l)| format!("bsize={b}, L={l}")));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let table_rows: Vec<Row> =
+        rows.iter().map(|r| Row(r.formatted(unit))).collect();
+    render_table(&hdr_refs, &table_rows)
+}
+
+/// Tables 3/4 layout: the paper's six metric columns.
+pub fn render_latency_table(title: &str, rows: &[ProfileOutcome]) -> String {
+    let headers = ["Model", "TTFT", "J/Prom.", "TPOT", "J/Tok.", "TTLT",
+                   "J/Req."];
+    let table_rows: Vec<Row> = rows
+        .iter()
+        .map(|o| {
+            Row(vec![
+                o.model.clone(),
+                format!("{:.2}", o.ttft_ms),
+                format!("{:.2}", o.j_prompt),
+                format!("{:.2}", o.tpot_ms),
+                format!("{:.2}", o.j_token),
+                format!("{:.2}", o.ttlt_ms),
+                format!("{:.2}", o.j_request),
+            ])
+        })
+        .collect();
+    format!("{title}\n{}", render_table(&headers, &table_rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::Workload;
+    use crate::profiler::size::{size_report, TABLE2_MODELS, TABLE2_POINTS};
+
+    #[test]
+    fn size_table_contains_paper_cells() {
+        let rows = size_report(&TABLE2_MODELS, &TABLE2_POINTS).unwrap();
+        let text = render_size_table(&rows, &TABLE2_POINTS, MemUnit::Si);
+        assert!(text.contains("Llama-3.1-8B"));
+        assert!(text.contains("16.06 GB"));
+        assert!(text.contains("17.18 GB"));
+        assert!(text.contains("bsize=128, L=2048"));
+    }
+
+    #[test]
+    fn latency_table_renders_columns() {
+        let o = ProfileOutcome {
+            model: "Llama-3.1-8B".into(),
+            device: "A6000".into(),
+            workload: Workload::new(1, 512, 512),
+            ttft_ms: 94.30,
+            j_prompt: 25.91,
+            tpot_ms: 24.84,
+            j_token: 6.80,
+            ttlt_ms: 12859.85,
+            j_request: 3533.09,
+            ttft_std_ms: 1.0,
+            simulated: true,
+        };
+        let text = render_latency_table("nGPU=1, bsize=1, L=512+512",
+                                        &[o]);
+        assert!(text.contains("TTFT"));
+        assert!(text.contains("94.30"));
+        assert!(text.contains("J/Req."));
+        assert!(text.contains("12859.85"));
+    }
+
+    #[test]
+    fn alignment_pads_columns() {
+        let rows = vec![Row(vec!["a".into(), "longcell".into()]),
+                        Row(vec!["longer".into(), "b".into()])];
+        let text = render_table(&["H1", "H2"], &rows);
+        let lines: Vec<&str> = text.lines().collect();
+        // all lines equal width
+        assert_eq!(lines[0].trim_end().len() <= lines[2].len(), true);
+        assert!(lines[2].starts_with("a     "));
+    }
+}

@@ -1,0 +1,102 @@
+//! Size reports (§2.2, Table 2): parameter size + cache size per
+//! workload point, in SI GB (default) or GiB.
+
+use anyhow::{anyhow, Result};
+
+use crate::models::{self, arch::ModelArch};
+use crate::util::units::MemUnit;
+
+/// One Table 2 row.
+#[derive(Debug, Clone)]
+pub struct SizeRow {
+    pub model: String,
+    pub param_bytes: u64,
+    /// Cache bytes at each requested (batch, seq_len) point.
+    pub cache_bytes: Vec<u64>,
+}
+
+impl SizeRow {
+    pub fn formatted(&self, unit: MemUnit) -> Vec<String> {
+        let mut cells = vec![self.model.clone(),
+                             unit.format(self.param_bytes)];
+        cells.extend(self.cache_bytes.iter().map(|&b| unit.format(b)));
+        cells
+    }
+}
+
+/// Build Table 2 rows for `model_names` at `points` = [(batch, seq_len)].
+pub fn size_report(model_names: &[&str], points: &[(usize, usize)])
+                   -> Result<Vec<SizeRow>> {
+    model_names
+        .iter()
+        .map(|name| {
+            let arch = models::lookup(name)
+                .ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+            Ok(size_row(&arch, points))
+        })
+        .collect()
+}
+
+/// One model's row.
+pub fn size_row(arch: &ModelArch, points: &[(usize, usize)]) -> SizeRow {
+    SizeRow {
+        model: arch.display_name.to_string(),
+        param_bytes: models::size::model_bytes(arch),
+        cache_bytes: points
+            .iter()
+            .map(|&(b, l)| models::cache_bytes(arch, b, l))
+            .collect(),
+    }
+}
+
+/// The paper's Table 2 workload points.
+pub const TABLE2_POINTS: [(usize, usize); 3] =
+    [(1, 1024), (128, 1024), (128, 2048)];
+
+/// The paper's Table 2 models.
+pub const TABLE2_MODELS: [&str; 3] =
+    ["llama-3.1-8b", "qwen-2.5-7b", "nemotron-h-8b"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full Table 2 reproduction for the two models with public
+    /// configs — exact string match against the paper's cells.
+    #[test]
+    fn table2_exact_cells() {
+        let rows = size_report(&TABLE2_MODELS, &TABLE2_POINTS).unwrap();
+        let llama = rows[0].formatted(MemUnit::Si);
+        assert_eq!(llama, vec!["Llama-3.1-8B", "16.06 GB", "0.13 GB",
+                               "17.18 GB", "34.36 GB"]);
+        let qwen = rows[1].formatted(MemUnit::Si);
+        assert_eq!(qwen, vec!["Qwen-2.5-7B", "15.23 GB", "0.06 GB",
+                              "7.52 GB", "15.03 GB"]);
+        // Nemotron: param column matches; cache cells are derived from
+        // the public config (paper's cells unexplainable — EXPERIMENTS.md)
+        let nh = rows[2].formatted(MemUnit::Si);
+        assert_eq!(nh[0], "Nemotron-H-8B");
+        assert_eq!(nh[1], "16.20 GB");
+    }
+
+    #[test]
+    fn binary_units_differ() {
+        let rows = size_report(&["llama-3.1-8b"], &[(1, 1024)]).unwrap();
+        let si = rows[0].formatted(MemUnit::Si);
+        let bin = rows[0].formatted(MemUnit::Binary);
+        assert_ne!(si[1], bin[1]);
+        assert!(bin[1].ends_with("GiB"));
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        assert!(size_report(&["nope"], &[(1, 1)]).is_err());
+    }
+
+    #[test]
+    fn dev_models_also_report() {
+        let rows = size_report(&["elana-tiny"], &[(1, 128)]).unwrap();
+        // params + 16 rope-buffer elements, f32 dev weights
+        assert_eq!(rows[0].param_bytes, (918_656 + 16) * 4);
+    }
+}

@@ -1,0 +1,81 @@
+//! Profiling run specification (what the CLI builds from its flags).
+
+use crate::hwsim::Workload;
+use crate::util::units::MemUnit;
+
+/// How many runs each metric averages over — the paper's §2.3/§2.4
+/// defaults: 100 runs for TTFT/TPOT, 20 for TTLT.
+pub const DEFAULT_LATENCY_RUNS: usize = 100;
+pub const DEFAULT_TTLT_RUNS: usize = 20;
+pub const DEFAULT_WARMUP: usize = 3;
+
+/// One profiling request.
+#[derive(Debug, Clone)]
+pub struct ProfileSpec {
+    /// Registry/manifest model name.
+    pub model: String,
+    /// hwsim rig name (`a6000`, `4xa6000`, `thor`, `orin`), or `cpu` for
+    /// the real engine.
+    pub device: String,
+    pub workload: Workload,
+    pub latency_runs: usize,
+    pub ttlt_runs: usize,
+    pub warmup: usize,
+    /// Enable the concurrent power sampler (paper: optional).
+    pub energy: bool,
+    pub mem_unit: MemUnit,
+    pub seed: u64,
+}
+
+impl ProfileSpec {
+    pub fn new(model: &str, device: &str, workload: Workload) -> ProfileSpec {
+        ProfileSpec {
+            model: model.to_string(),
+            device: device.to_string(),
+            workload,
+            latency_runs: DEFAULT_LATENCY_RUNS,
+            ttlt_runs: DEFAULT_TTLT_RUNS,
+            warmup: DEFAULT_WARMUP,
+            energy: true,
+            mem_unit: MemUnit::Si,
+            seed: 0,
+        }
+    }
+
+    /// Scaled-down run counts for the CPU engine (interpret-lowered dev
+    /// models are slow; the pipeline is identical).
+    pub fn quick(mut self) -> ProfileSpec {
+        self.latency_runs = 5;
+        self.ttlt_runs = 2;
+        self.warmup = 1;
+        self
+    }
+
+    pub fn is_simulated(&self) -> bool {
+        self.device != "cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let s = ProfileSpec::new("llama-3.1-8b", "a6000",
+                                 Workload::new(1, 512, 512));
+        assert_eq!(s.latency_runs, 100);
+        assert_eq!(s.ttlt_runs, 20);
+        assert!(s.energy);
+        assert_eq!(s.mem_unit, MemUnit::Si);
+    }
+
+    #[test]
+    fn quick_scales_down() {
+        let s = ProfileSpec::new("elana-tiny", "cpu",
+                                 Workload::new(1, 16, 8)).quick();
+        assert_eq!(s.latency_runs, 5);
+        assert_eq!(s.ttlt_runs, 2);
+        assert!(!s.is_simulated());
+    }
+}

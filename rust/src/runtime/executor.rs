@@ -1,0 +1,201 @@
+//! PJRT client wrapper: compile HLO text, execute, untuple results.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (`HloModuleProto::from_text_file` reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits that xla_extension 0.5.1 would
+//! otherwise reject). One `Runtime` per process; one compiled
+//! `Executable` per (model, kind, batch, prompt-bucket) — the
+//! CUDA-graph-cache analogue the paper uses for decode (§2.3).
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::ExecutableSpec;
+
+/// Process-wide PJRT client.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Access the underlying PJRT client (device-buffer uploads).
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load HLO text and compile it. Returns the executable plus the
+    /// compile wall-time (reported by `elana trace` and the quickstart).
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>)
+                            -> Result<(Executable, Duration)> {
+        let path = path.as_ref();
+        let sw = crate::util::Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok((Executable { exe }, sw.elapsed()))
+    }
+}
+
+/// One compiled entry point.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Access the underlying loaded executable (buffer-level execution).
+    pub fn raw(&self) -> &PjRtLoadedExecutable {
+        &self.exe
+    }
+
+    /// Execute with literal arguments; returns the flattened output
+    /// literals (the AOT pipeline lowers with `return_tuple=True`, so the
+    /// single result buffer is a tuple that we decompose). Accepts owned
+    /// literals or references — the engine passes `&Literal` for the
+    /// weights so they are never copied per step.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L])
+                                                -> Result<Vec<Literal>> {
+        let mut replicas = self.exe.execute::<L>(args)?;
+        ensure!(!replicas.is_empty() && !replicas[0].is_empty(),
+                "executable produced no outputs");
+        let first = replicas.remove(0).remove(0);
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and also report the on-device execution wall-time as seen
+    /// from the host (what ELANA's latency probes measure).
+    pub fn run_timed<L: std::borrow::Borrow<Literal>>(
+        &self, args: &[L]) -> Result<(Vec<Literal>, Duration)> {
+        let sw = crate::util::Stopwatch::start();
+        let out = self.run(args)?;
+        Ok((out, sw.elapsed()))
+    }
+
+    /// Execute with device-resident buffer arguments and return the
+    /// single output buffer (the flat fast path: executables lowered
+    /// with `return_tuple=False` so the root is a bare array — tuple
+    /// roots cannot be consumed at the buffer level in xla_extension
+    /// 0.5.1). Execution is asynchronous; callers synchronize via a
+    /// ranged `copy_raw_to_host_sync` read.
+    pub fn run_buffers_raw(&self, args: &[&xla::PjRtBuffer])
+                           -> Result<xla::PjRtBuffer> {
+        let mut replicas = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        ensure!(!replicas.is_empty() && !replicas[0].is_empty(),
+                "executable produced no outputs");
+        Ok(replicas.remove(0).remove(0))
+    }
+
+    /// Validate literal argument count against a spec (weights + inputs).
+    pub fn check_arg_count(&self, spec: &ExecutableSpec, n_weights: usize,
+                           n_args: usize) -> Result<()> {
+        let expected = n_weights + spec.inputs.len();
+        ensure!(n_args == expected,
+                "{}: expected {expected} args ({n_weights} weights + {} inputs), got {n_args}",
+                spec.file, spec.inputs.len());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::weights;
+
+    fn artifacts() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn cpu_runtime_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform_name(), "cpu");
+        assert!(rt.device_count() >= 1);
+    }
+
+    /// End-to-end round trip: compile the tiny prefill artifact, run it
+    /// with the real weights, and check output arity + shapes + sanity.
+    #[test]
+    fn tiny_prefill_executes() {
+        let Some(m) = artifacts() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mm = m.model("elana-tiny").unwrap();
+        let spec = mm.find_prefill(1, 16).unwrap();
+        let (exe, compile_time) = rt.compile_hlo_file(m.path(&spec.file)).unwrap();
+        assert!(compile_time.as_secs_f64() > 0.0);
+
+        let mut args = weights::load_weight_literals(&m, mm).unwrap();
+        let tokens: Vec<i32> = (0..16).collect();
+        args.push(weights::i32_literal(&[1, 16], &tokens).unwrap());
+        exe.check_arg_count(spec, mm.weights.len(), args.len()).unwrap();
+
+        let out = exe.run(&args).unwrap();
+        assert_eq!(out.len(), spec.outputs.len()); // logits, kv_k, kv_v
+        assert_eq!(out[0].element_count(), mm.vocab_size);
+        let logits = out[0].to_vec::<f32>().unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()),
+                "non-finite logits from prefill");
+        // KV cache padded to (layers, 1, kvh, max_seq_len, hd)
+        assert_eq!(out[1].element_count(),
+                   4 * 1 * 2 * mm.max_seq_len * 32);
+    }
+
+    /// Decode over a prefillled cache: logits finite, caches round-trip.
+    #[test]
+    fn tiny_decode_executes_over_prefill_cache() {
+        let Some(m) = artifacts() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mm = m.model("elana-tiny").unwrap();
+        let ws = weights::load_weight_literals(&m, mm).unwrap();
+
+        let pspec = mm.find_prefill(1, 16).unwrap();
+        let (pexe, _) = rt.compile_hlo_file(m.path(&pspec.file)).unwrap();
+        let tokens = weights::i32_literal(&[1, 16],
+                                          &(0..16).collect::<Vec<_>>())
+            .unwrap();
+        let mut args: Vec<&Literal> = ws.iter().collect();
+        args.push(&tokens);
+        let mut out = pexe.run(&args).unwrap();
+
+        let dspec = mm.find_decode(1).unwrap();
+        let (dexe, _) = rt.compile_hlo_file(m.path(&dspec.file)).unwrap();
+        let token = weights::i32_literal(&[1], &[7]).unwrap();
+        let pos = weights::i32_scalar(16);
+        let caches: Vec<Literal> = out.drain(1..).collect();
+        let mut dargs: Vec<&Literal> = ws.iter().collect();
+        dargs.push(&token);
+        dargs.push(&pos);
+        dargs.extend(caches.iter());
+        let dout = dexe.run(&dargs).unwrap();
+        assert_eq!(dout.len(), dspec.outputs.len());
+        let logits = dout[0].to_vec::<f32>().unwrap();
+        assert_eq!(logits.len(), mm.vocab_size);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,468 @@
+//! The AOT contract: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`.
+//!
+//! Argument convention for every executable (enforced here and by
+//! `python/tests/test_aot.py` on the other side):
+//!     [w_0 .. w_{n-1}, *inputs]  ->  tuple(outputs)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor element type tags used in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DtypeTag {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DtypeTag {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DtypeTag::F32),
+            "i32" => Ok(DtypeTag::I32),
+            "bf16" => Ok(DtypeTag::Bf16),
+            other => bail!("unknown dtype tag `{other}`"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            DtypeTag::F32 | DtypeTag::I32 => 4,
+            DtypeTag::Bf16 => 2,
+        }
+    }
+}
+
+/// (name, shape, dtype) of one executable input/output or cache tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DtypeTag,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.elements() * self.dtype.bytes()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()
+                .ok_or_else(|| anyhow!("name not a string"))?.to_string(),
+            shape: v.req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: DtypeTag::parse(
+                v.req("dtype")?.as_str().unwrap_or_default())?,
+        })
+    }
+}
+
+/// One weight tensor's location in the sidecar binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightEntry {
+    pub spec: TensorSpec,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Which entry point an HLO file implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExeKind {
+    /// Whole-prompt pass (ELANA's TTFT phase).
+    Prefill { prompt_len: usize },
+    /// Single autoregressive step (ELANA's TPOT phase).
+    Decode,
+    /// Flat-state prefill: single f32[N] output [logits | caches] for
+    /// PJRT buffer-level execution (the fast path, EXPERIMENTS.md §Perf).
+    PrefillFlat { prompt_len: usize },
+    /// Flat-state decode step: f32[N] in, f32[N] out; the Rust engine
+    /// threads one persistent device buffer through the generation.
+    DecodeFlat,
+}
+
+/// One AOT-lowered executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutableSpec {
+    pub kind: ExeKind,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Everything the runtime knows about one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub param_count: u64,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+    pub cache: Vec<TensorSpec>,
+    pub executables: Vec<ExecutableSpec>,
+    pub max_seq_len: usize,
+    pub vocab_size: usize,
+    pub layer_pattern: String,
+}
+
+impl ModelManifest {
+    /// Prefill executable for an exact (batch, prompt_len) point.
+    pub fn find_prefill(&self, batch: usize, prompt_len: usize)
+                        -> Option<&ExecutableSpec> {
+        self.executables.iter().find(|e| {
+            e.batch == batch
+                && matches!(e.kind,
+                            ExeKind::Prefill { prompt_len: l } if l == prompt_len)
+        })
+    }
+
+    /// Smallest compiled prompt bucket that fits `prompt_len` (prompts are
+    /// right-padded into the bucket, the standard fixed-shape strategy).
+    pub fn find_prefill_bucket(&self, batch: usize, prompt_len: usize)
+                               -> Option<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .filter(|e| e.batch == batch)
+            .filter_map(|e| match e.kind {
+                ExeKind::Prefill { prompt_len: l } if l >= prompt_len => {
+                    Some((l, e))
+                }
+                _ => None,
+            })
+            .min_by_key(|(l, _)| *l)
+            .map(|(_, e)| e)
+    }
+
+    pub fn find_decode(&self, batch: usize) -> Option<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.batch == batch && e.kind == ExeKind::Decode)
+    }
+
+    /// Smallest flat prefill bucket that fits `prompt_len`.
+    pub fn find_prefill_flat_bucket(&self, batch: usize, prompt_len: usize)
+                                    -> Option<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .filter(|e| e.batch == batch)
+            .filter_map(|e| match e.kind {
+                ExeKind::PrefillFlat { prompt_len: l } if l >= prompt_len => {
+                    Some((l, e))
+                }
+                _ => None,
+            })
+            .min_by_key(|(l, _)| *l)
+            .map(|(_, e)| e)
+    }
+
+    pub fn find_decode_flat(&self, batch: usize) -> Option<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.batch == batch && e.kind == ExeKind::DecodeFlat)
+    }
+
+    /// Flat-state vector length for a batch (from the decode_flat spec).
+    pub fn flat_state_len(&self, batch: usize) -> Option<usize> {
+        self.find_decode_flat(batch)
+            .map(|e| e.outputs[0].elements())
+    }
+
+    /// All compiled batch sizes (sorted, deduplicated).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.executables.iter().map(|e| e.batch).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// All compiled prefill prompt lengths for a batch size.
+    pub fn prompt_buckets(&self, batch: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter(|e| e.batch == batch)
+            .filter_map(|e| match e.kind {
+                ExeKind::Prefill { prompt_len } => Some(prompt_len),
+                _ => None,
+            })
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// The whole artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub seed: u64,
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)",
+                                     path.display()))?;
+        let root = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&root, dir)
+    }
+
+    /// Default artifacts location: `$ELANA_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("ELANA_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    fn from_json(root: &Json, dir: PathBuf) -> Result<Manifest> {
+        let version = root.req("version")?.as_u64()
+            .ok_or_else(|| anyhow!("bad version"))?;
+        if version != 2 {
+            bail!("manifest version {version} unsupported (expected 2); \
+                   re-run `make artifacts`");
+        }
+        let seed = root.req("seed")?.as_u64().unwrap_or(0);
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), Self::model_from_json(name, m)
+                          .with_context(|| format!("model `{name}`"))?);
+        }
+        Ok(Manifest { version, seed, dir, models })
+    }
+
+    fn model_from_json(name: &str, m: &Json) -> Result<ModelManifest> {
+        let cfg = m.req("config")?;
+        let weights = m.req("weights")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("weights not an array"))?
+            .iter()
+            .map(|w| {
+                Ok(WeightEntry {
+                    spec: TensorSpec::from_json(w)?,
+                    offset: w.req("offset")?.as_usize()
+                        .ok_or_else(|| anyhow!("bad offset"))?,
+                    nbytes: w.req("nbytes")?.as_usize()
+                        .ok_or_else(|| anyhow!("bad nbytes"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let executables = m.req("executables")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("executables not an array"))?
+            .iter()
+            .map(|e| {
+                let kind_str = e.req("kind")?.as_str().unwrap_or_default();
+                let batch = e.req("batch")?.as_usize()
+                    .ok_or_else(|| anyhow!("bad batch"))?;
+                let kind = match kind_str {
+                    "prefill" => ExeKind::Prefill {
+                        prompt_len: e.req("prompt_len")?.as_usize()
+                            .ok_or_else(|| anyhow!("bad prompt_len"))?,
+                    },
+                    "decode" => ExeKind::Decode,
+                    "prefill_flat" => ExeKind::PrefillFlat {
+                        prompt_len: e.req("prompt_len")?.as_usize()
+                            .ok_or_else(|| anyhow!("bad prompt_len"))?,
+                    },
+                    "decode_flat" => ExeKind::DecodeFlat,
+                    other => bail!("unknown executable kind `{other}`"),
+                };
+                let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                    e.req(key)?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("{key} not an array"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                Ok(ExecutableSpec {
+                    kind,
+                    batch,
+                    file: e.req("file")?.as_str()
+                        .ok_or_else(|| anyhow!("bad file"))?.to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let cache = m.req("cache")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("cache not an array"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(ModelManifest {
+            name: name.to_string(),
+            param_count: m.req("param_count")?.as_u64()
+                .ok_or_else(|| anyhow!("bad param_count"))?,
+            weights_file: m.req("weights_file")?.as_str()
+                .ok_or_else(|| anyhow!("bad weights_file"))?.to_string(),
+            weights,
+            cache,
+            executables,
+            max_seq_len: cfg.req("max_seq_len")?.as_usize()
+                .ok_or_else(|| anyhow!("bad max_seq_len"))?,
+            vocab_size: cfg.req("vocab_size")?.as_usize()
+                .ok_or_else(|| anyhow!("bad vocab_size"))?,
+            layer_pattern: cfg.req("layer_pattern")?.as_str()
+                .unwrap_or_default().to_string(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model `{name}` not in manifest (have: {:?})",
+                    self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn parse_minimal_synthetic_manifest() {
+        let text = r#"{
+            "version": 2, "seed": 0, "sources_digest": "x",
+            "models": {"m": {
+                "config": {"max_seq_len": 128, "vocab_size": 512,
+                           "layer_pattern": "AA"},
+                "param_count": 10,
+                "weights_file": "m.weights.bin",
+                "weights": [{"name": "w", "shape": [2, 5], "dtype": "f32",
+                              "offset": 0, "nbytes": 40}],
+                "cache": [{"name": "kv_k", "shape": [2,1,2,128,32],
+                            "dtype": "f32"}],
+                "executables": [
+                  {"kind": "prefill", "batch": 1, "prompt_len": 16,
+                   "file": "p.hlo.txt",
+                   "inputs": [{"name": "tokens", "shape": [1,16],
+                                "dtype": "i32"}],
+                   "outputs": [{"name": "logits", "shape": [1,512],
+                                 "dtype": "f32"}]},
+                  {"kind": "decode", "batch": 1, "prompt_len": null,
+                   "file": "d.hlo.txt",
+                   "inputs": [{"name": "token", "shape": [1], "dtype": "i32"},
+                               {"name": "pos", "shape": [], "dtype": "i32"}],
+                   "outputs": [{"name": "logits", "shape": [1,512],
+                                 "dtype": "f32"}]}
+                ]
+            }}}"#;
+        let root = Json::parse(text).unwrap();
+        let m = Manifest::from_json(&root, PathBuf::from("/tmp")).unwrap();
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.param_count, 10);
+        assert_eq!(mm.max_seq_len, 128);
+        assert!(mm.find_prefill(1, 16).is_some());
+        assert!(mm.find_prefill(1, 32).is_none());
+        assert!(mm.find_decode(1).is_some());
+        assert!(mm.find_decode(4).is_none());
+        assert_eq!(mm.batch_sizes(), vec![1]);
+        assert_eq!(mm.prompt_buckets(1), vec![16]);
+        // pos input is a scalar
+        let d = mm.find_decode(1).unwrap();
+        assert_eq!(d.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(d.inputs[1].elements(), 1);
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let text = r#"{"version": 1, "seed": 0, "models": {}}"#;
+        let root = Json::parse(text).unwrap();
+        let err = Manifest::from_json(&root, PathBuf::from("/tmp"))
+            .unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let mm = m.model("elana-tiny").unwrap();
+        // buckets are 16 and 64: a 10-token prompt fits the 16 bucket
+        let e = mm.find_prefill_bucket(1, 10).unwrap();
+        assert_eq!(e.kind, ExeKind::Prefill { prompt_len: 16 });
+        let e = mm.find_prefill_bucket(1, 17).unwrap();
+        assert_eq!(e.kind, ExeKind::Prefill { prompt_len: 64 });
+        assert!(mm.find_prefill_bucket(1, 65).is_none());
+    }
+
+    #[test]
+    fn real_manifest_loads_and_crosschecks_registry() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        for (name, mm) in &m.models {
+            // param_count matches the Rust registry's analytic count
+            let arch = crate::models::lookup(name).expect(name);
+            assert_eq!(mm.param_count, crate::models::param_count(&arch),
+                       "{name}: manifest vs registry param count");
+            assert_eq!(mm.layer_pattern, arch.pattern(), "{name}");
+            // every executable file exists
+            for e in &mm.executables {
+                assert!(m.path(&e.file).exists(), "{}", e.file);
+            }
+            // weight table is contiguous
+            let mut off = 0;
+            for w in &mm.weights {
+                assert_eq!(w.offset, off, "{name}/{}", w.spec.name);
+                assert_eq!(w.nbytes, w.spec.nbytes());
+                off += w.nbytes;
+            }
+            assert_eq!(off as u64, mm.param_count * 4, "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_model_error_lists_available() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let err = m.model("nonexistent").unwrap_err().to_string();
+        assert!(err.contains("elana-tiny"), "{err}");
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load + execute AOT artifacts (`artifacts/*.hlo.txt`).
+//!
+//! The bridge between the build-time python world and the Rust request
+//! path: `manifest` parses the AOT contract, `weights` maps the weight
+//! sidecars into `xla::Literal`s, `executor` compiles HLO text on the
+//! PJRT CPU client and runs it, and `model` assembles the three into a
+//! `CompiledModel` the engine drives. Python is never invoked here.
+
+pub mod executor;
+pub mod manifest;
+pub mod model;
+pub mod weights;
+
+pub use executor::{Executable, Runtime};
+pub use manifest::{DtypeTag, ExeKind, ExecutableSpec, Manifest,
+                   ModelManifest, TensorSpec, WeightEntry};
+pub use model::CompiledModel;

@@ -1,0 +1,507 @@
+//! `CompiledModel`: weights + compiled executables for one model.
+//!
+//! Owns the weight literals (loaded once) and a cache of compiled
+//! executables keyed by (kind, batch, prompt bucket). The decode
+//! executable cache is the paper's CUDA-graph analogue: ELANA §2.3 caches
+//! CUDA graphs for generation but *not* for prefill; we mirror that by
+//! letting callers choose between `prefill_cached` (pre-compiled) and
+//! `prefill_fresh` (compile per call, modelling the uncached prefill
+//! launch path).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtBuffer};
+
+use super::executor::{Executable, Runtime};
+use super::manifest::{ExeKind, Manifest, ModelManifest, TensorSpec};
+use super::weights;
+
+/// Key for the executable cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum ExeKey {
+    Prefill { batch: usize, prompt_len: usize },
+    Decode { batch: usize },
+    PrefillFlat { batch: usize, prompt_len: usize },
+    DecodeFlat { batch: usize },
+}
+
+/// Device-resident generation state for the flat fast path: one f32[N]
+/// buffer laid out as [logits | caches], threaded between decode steps
+/// without ever touching the host.
+pub struct FlatState {
+    buf: PjRtBuffer,
+    batch: usize,
+    state_len: usize,
+}
+
+impl FlatState {
+    /// Read the logits region (the first batch*vocab elements) and
+    /// synchronize with the asynchronous execution. The CPU PJRT plugin
+    /// does not implement ranged raw reads (`CopyRawToHost not
+    /// implemented`), so this downloads the state literal and slices —
+    /// still a single host copy, with the device buffer staying resident
+    /// for the next step.
+    pub fn read_logits(&self, vocab: usize) -> Result<Vec<f32>> {
+        // NB: Literal::copy_raw_to in xla 0.1.6 always copies the FULL
+        // literal (heap overflow on shorter destinations), so download
+        // the state and truncate.
+        let lit = self.buf.to_literal_sync()?;
+        let mut full = lit.to_vec::<f32>()?;
+        full.truncate(self.batch * vocab);
+        Ok(full)
+    }
+
+    /// Force completion of the producing execution (download one step's
+    /// state and drop it).
+    pub fn synchronize(&self) -> Result<()> {
+        let _ = self.buf.to_literal_sync()?;
+        Ok(())
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+}
+
+/// Result of one forward pass.
+pub struct StepOutput {
+    /// Flattened (batch * vocab) last-position logits.
+    pub logits: Vec<f32>,
+    /// Cache tensors, ready to feed to the next decode step.
+    pub caches: Vec<Literal>,
+    /// Host-observed execution time of the PJRT call.
+    pub exec_time: Duration,
+}
+
+/// A model ready to run: weights resident **on device** (uploaded once —
+/// the per-step host→device weight copy was the dominant decode cost
+/// before this; see EXPERIMENTS.md §Perf), executables compiled on
+/// demand.
+pub struct CompiledModel {
+    name: String,
+    manifest: ModelManifest,
+    dir_manifest: Manifest,
+    weights: Vec<Literal>,
+    weight_bufs: Vec<PjRtBuffer>,
+    exes: HashMap<ExeKey, Executable>,
+    /// Cumulative compile time (reported by the quickstart / trace).
+    pub total_compile_time: Duration,
+    /// One-time weight upload time.
+    pub weight_upload_time: Duration,
+}
+
+impl CompiledModel {
+    /// Load weights for `name` from the manifest and upload them to the
+    /// device once; compiles nothing yet.
+    ///
+    /// Weights live in two forms: host `Literal`s for the tuple-output
+    /// executables (whose execution path converts literals internally)
+    /// and device `PjRtBuffer`s for the flat fast path (execute_b).
+    /// Uploads go through `buffer_from_host_buffer` (raw host slices) —
+    /// `buffer_from_host_literal`-produced buffers wedge execute_b in
+    /// xla_extension 0.5.1.
+    pub fn load(rt: &Runtime, manifest: &Manifest, name: &str)
+                -> Result<CompiledModel> {
+        let mm = manifest.model(name)?.clone();
+        let w = weights::load_weight_literals(manifest, &mm)?;
+        let sw = crate::util::Stopwatch::start();
+        let mut weight_bufs = Vec::with_capacity(w.len());
+        for (lit, entry) in w.iter().zip(&mm.weights) {
+            let mut data = vec![0f32; lit.element_count()];
+            lit.copy_raw_to::<f32>(&mut data)?;
+            weight_bufs.push(rt.client().buffer_from_host_buffer::<f32>(
+                &data, &entry.spec.shape, None)?);
+        }
+        Ok(CompiledModel {
+            name: name.to_string(),
+            manifest: mm,
+            dir_manifest: manifest.clone(),
+            weights: w,
+            weight_bufs,
+            exes: HashMap::new(),
+            total_compile_time: Duration::ZERO,
+            weight_upload_time: sw.elapsed(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn spec(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.manifest.vocab_size
+    }
+
+    pub fn max_seq_len(&self) -> usize {
+        self.manifest.max_seq_len
+    }
+
+    pub fn cache_specs(&self) -> &[TensorSpec] {
+        &self.manifest.cache
+    }
+
+    /// Pre-compile every executable in the manifest (used by the serving
+    /// example so no compile happens on the request path).
+    pub fn precompile_all(&mut self, rt: &Runtime) -> Result<()> {
+        let specs: Vec<(ExeKey, String)> = self
+            .manifest
+            .executables
+            .iter()
+            .map(|e| {
+                let key = match e.kind {
+                    ExeKind::Prefill { prompt_len } => ExeKey::Prefill {
+                        batch: e.batch,
+                        prompt_len,
+                    },
+                    ExeKind::Decode => ExeKey::Decode { batch: e.batch },
+                    ExeKind::PrefillFlat { prompt_len } => {
+                        ExeKey::PrefillFlat { batch: e.batch, prompt_len }
+                    }
+                    ExeKind::DecodeFlat => {
+                        ExeKey::DecodeFlat { batch: e.batch }
+                    }
+                };
+                (key, e.file.clone())
+            })
+            .collect();
+        for (key, file) in specs {
+            self.compile_if_needed(rt, key, &file)?;
+        }
+        Ok(())
+    }
+
+    fn compile_if_needed(&mut self, rt: &Runtime, key: ExeKey, file: &str)
+                         -> Result<()> {
+        if !self.exes.contains_key(&key) {
+            let (exe, dt) = rt.compile_hlo_file(self.dir_manifest.path(file))?;
+            self.total_compile_time += dt;
+            self.exes.insert(key, exe);
+        }
+        Ok(())
+    }
+
+    /// Prefill through the cached executable for the smallest fitting
+    /// prompt bucket. `tokens` is row-major (batch, prompt_len); it is
+    /// right-padded with 0 into the bucket.
+    pub fn prefill(&mut self, rt: &Runtime, batch: usize, tokens: &[i32])
+                   -> Result<StepOutput> {
+        anyhow::ensure!(batch > 0 && tokens.len() % batch == 0,
+                        "tokens not divisible by batch");
+        let prompt_len = tokens.len() / batch;
+        let spec = self
+            .manifest
+            .find_prefill_bucket(batch, prompt_len)
+            .ok_or_else(|| anyhow!(
+                "{}: no prefill bucket for batch={batch} len={prompt_len} \
+                 (buckets: {:?})",
+                self.name, self.manifest.prompt_buckets(batch)))?
+            .clone();
+        let bucket = match spec.kind {
+            ExeKind::Prefill { prompt_len } => prompt_len,
+            _ => unreachable!(),
+        };
+        let key = ExeKey::Prefill { batch, prompt_len: bucket };
+        self.compile_if_needed(rt, key, &spec.file)?;
+
+        // right-pad each row into the bucket
+        let mut padded = vec![0i32; batch * bucket];
+        for b in 0..batch {
+            let src = &tokens[b * prompt_len..(b + 1) * prompt_len];
+            padded[b * bucket..b * bucket + prompt_len].copy_from_slice(src);
+        }
+        let tok_lit = weights::i32_literal(&[batch, bucket], &padded)?;
+
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok_lit);
+        let exe = self.exes.get(&key).expect("just compiled");
+        let sw = crate::util::Stopwatch::start();
+        let mut out = exe.run(&args)?;
+        let exec_time = sw.elapsed();
+        let logits = out[0].to_vec::<f32>()?;
+        Ok(StepOutput { logits, caches: out.drain(1..).collect(), exec_time })
+    }
+
+    /// One decode step at `pos`, threading the cache literals through.
+    pub fn decode(&mut self, rt: &Runtime, batch: usize, token: &[i32],
+                  pos: i32, caches: &[Literal]) -> Result<StepOutput> {
+        anyhow::ensure!(token.len() == batch, "one token per sequence");
+        anyhow::ensure!((pos as usize) < self.manifest.max_seq_len,
+                        "{}: pos {pos} beyond max_seq_len {}",
+                        self.name, self.manifest.max_seq_len);
+        let spec = self
+            .manifest
+            .find_decode(batch)
+            .ok_or_else(|| anyhow!(
+                "{}: no decode executable for batch={batch} (batches: {:?})",
+                self.name, self.manifest.batch_sizes()))?
+            .clone();
+        let key = ExeKey::Decode { batch };
+        self.compile_if_needed(rt, key, &spec.file)?;
+
+        let tok_lit = weights::i32_literal(&[batch], token)?;
+        let pos_lit = weights::i32_scalar(pos);
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        args.extend(caches.iter());
+
+        let exe = self.exes.get(&key).expect("just compiled");
+        let sw = crate::util::Stopwatch::start();
+        let mut out = exe.run(&args)?;
+        let exec_time = sw.elapsed();
+        let logits = out[0].to_vec::<f32>()?;
+        Ok(StepOutput { logits, caches: out.drain(1..).collect(), exec_time })
+    }
+
+    /// Whether the flat fast path is available for this batch size.
+    pub fn has_flat_path(&self, batch: usize) -> bool {
+        self.manifest.find_decode_flat(batch).is_some()
+    }
+
+    /// Flat-path prefill: returns the device-resident generation state.
+    pub fn prefill_flat(&mut self, rt: &Runtime, batch: usize,
+                        tokens: &[i32]) -> Result<(FlatState, Duration)> {
+        anyhow::ensure!(batch > 0 && tokens.len() % batch == 0,
+                        "tokens not divisible by batch");
+        let prompt_len = tokens.len() / batch;
+        let spec = self
+            .manifest
+            .find_prefill_flat_bucket(batch, prompt_len)
+            .ok_or_else(|| anyhow!(
+                "{}: no flat prefill bucket for batch={batch}                  len={prompt_len}", self.name))?
+            .clone();
+        let bucket = match spec.kind {
+            ExeKind::PrefillFlat { prompt_len } => prompt_len,
+            _ => unreachable!(),
+        };
+        let key = ExeKey::PrefillFlat { batch, prompt_len: bucket };
+        self.compile_if_needed(rt, key, &spec.file)?;
+
+        let mut padded = vec![0i32; batch * bucket];
+        for b in 0..batch {
+            let src = &tokens[b * prompt_len..(b + 1) * prompt_len];
+            padded[b * bucket..b * bucket + prompt_len].copy_from_slice(src);
+        }
+        let tok_buf = rt.client().buffer_from_host_buffer::<i32>(
+            &padded, &[batch, bucket], None)?;
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+
+        let state_len = spec.outputs[0].elements();
+        let exe = self.exes.get(&key).expect("just compiled");
+        let sw = crate::util::Stopwatch::start();
+        let buf = exe.run_buffers_raw(&args)?;
+        let state = FlatState { buf, batch, state_len };
+        state.synchronize()?; // timing covers the (async) execution
+        Ok((state, sw.elapsed()))
+    }
+
+    /// Flat-path decode step: consumes the previous state buffer and
+    /// returns the next one. No cache bytes cross the host boundary.
+    pub fn decode_flat(&mut self, rt: &Runtime, token: &[i32], pos: i32,
+                       state: &FlatState)
+                       -> Result<(FlatState, Duration)> {
+        let batch = state.batch;
+        anyhow::ensure!(token.len() == batch, "one token per sequence");
+        anyhow::ensure!((pos as usize) < self.manifest.max_seq_len,
+                        "{}: pos {pos} beyond max_seq_len {}",
+                        self.name, self.manifest.max_seq_len);
+        let spec = self
+            .manifest
+            .find_decode_flat(batch)
+            .ok_or_else(|| anyhow!(
+                "{}: no flat decode executable for batch={batch}",
+                self.name))?
+            .clone();
+        let key = ExeKey::DecodeFlat { batch };
+        self.compile_if_needed(rt, key, &spec.file)?;
+
+        let client = rt.client();
+        let tok_buf =
+            client.buffer_from_host_buffer::<i32>(token, &[batch], None)?;
+        let pos_buf =
+            client.buffer_from_host_buffer::<i32>(&[pos], &[], None)?;
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&state.buf);
+
+        let exe = self.exes.get(&key).expect("just compiled");
+        let sw = crate::util::Stopwatch::start();
+        let buf = exe.run_buffers_raw(&args)?;
+        let next = FlatState { buf, batch, state_len: state.state_len };
+        next.synchronize()?; // timing covers the (async) execution
+        Ok((next, sw.elapsed()))
+    }
+
+    /// Zero-initialized cache literals (a fresh sequence with no prefill).
+    pub fn empty_caches(&self, batch: usize) -> Result<Vec<Literal>> {
+        self.manifest
+            .cache
+            .iter()
+            .map(|c| {
+                // cache specs are recorded at the smallest batch; rescale
+                // the batch axis (dimension 1 by construction).
+                let mut shape = c.shape.clone();
+                if shape.len() > 1 {
+                    shape[1] = batch;
+                }
+                weights::zeros_literal(&shape)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn prefill_pads_into_bucket() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny").unwrap();
+        // 10-token prompt -> 16 bucket
+        let toks: Vec<i32> = (1..=10).collect();
+        let out = model.prefill(&rt, 1, &toks).unwrap();
+        assert_eq!(out.logits.len(), model.vocab_size());
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(out.caches.len(), model.cache_specs().len());
+        assert!(out.exec_time.as_nanos() > 0);
+    }
+
+    #[test]
+    fn decode_chain_produces_finite_logits() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny").unwrap();
+        let toks: Vec<i32> = (0..16).collect();
+        let out = model.prefill(&rt, 1, &toks).unwrap();
+        let mut caches = out.caches;
+        for t in 0..4 {
+            let step = model
+                .decode(&rt, 1, &[(t % 11) as i32], 16 + t, &caches)
+                .unwrap();
+            assert!(step.logits.iter().all(|x| x.is_finite()), "step {t}");
+            caches = step.caches;
+        }
+    }
+
+    #[test]
+    fn decode_beyond_max_seq_len_rejected() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny").unwrap();
+        let caches = model.empty_caches(1).unwrap();
+        let max = model.max_seq_len();
+        let err = model.decode(&rt, 1, &[0], max as i32, &caches);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn missing_batch_size_rejected_with_listing() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny").unwrap();
+        let caches = model.empty_caches(3).unwrap();
+        let err = match model.decode(&rt, 3, &[0, 0, 0], 0, &caches) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-batch error"),
+        };
+        assert!(err.to_string().contains("batches"), "{err}");
+    }
+
+    #[test]
+    fn executable_cache_reused_across_calls() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny").unwrap();
+        let toks: Vec<i32> = (0..16).collect();
+        model.prefill(&rt, 1, &toks).unwrap();
+        let t1 = model.total_compile_time;
+        model.prefill(&rt, 1, &toks).unwrap();
+        assert_eq!(model.total_compile_time, t1,
+                   "second call must not recompile");
+    }
+
+    /// Flat fast path: bit-identical logits vs the tuple path, and the
+    /// state buffer threads through decode steps.
+    #[test]
+    fn flat_path_matches_tuple_path() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        for name in ["elana-tiny", "elana-tiny-hybrid"] {
+            if m.models.get(name).is_none() {
+                continue;
+            }
+            let mut model = CompiledModel::load(&rt, &m, name).unwrap();
+            if !model.has_flat_path(1) {
+                continue;
+            }
+            let toks: Vec<i32> = (0..16).map(|i| i * 5 % 512).collect();
+            let tuple_out = model.prefill(&rt, 1, &toks).unwrap();
+            let (state, _) = model.prefill_flat(&rt, 1, &toks).unwrap();
+            let flat_logits = state.read_logits(model.vocab_size()).unwrap();
+            assert_eq!(tuple_out.logits, flat_logits, "{name}: prefill");
+
+            let dstep = model.decode(&rt, 1, &[9], 16, &tuple_out.caches)
+                .unwrap();
+            let (s2, _) = model.decode_flat(&rt, &[9], 16, &state).unwrap();
+            let flat_d = s2.read_logits(model.vocab_size()).unwrap();
+            assert_eq!(dstep.logits, flat_d, "{name}: decode");
+        }
+    }
+
+    #[test]
+    fn flat_decode_chain_runs() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny").unwrap();
+        let toks: Vec<i32> = (0..16).collect();
+        let (mut state, _) = model.prefill_flat(&rt, 1, &toks).unwrap();
+        for t in 0..8 {
+            let (s2, d) = model.decode_flat(&rt, &[(t % 7) as i32],
+                                            16 + t, &state).unwrap();
+            assert!(d.as_nanos() > 0);
+            let logits = s2.read_logits(model.vocab_size()).unwrap();
+            assert!(logits.iter().all(|x| x.is_finite()));
+            state = s2;
+        }
+    }
+
+    /// The engine-level consistency check: hybrid model runs too.
+    #[test]
+    fn hybrid_model_prefill_and_decode() {
+        let Some(m) = manifest() else { return };
+        if m.models.get("elana-tiny-hybrid").is_none() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut model = CompiledModel::load(&rt, &m, "elana-tiny-hybrid").unwrap();
+        let toks: Vec<i32> = (0..16).map(|i| i * 3 % 512).collect();
+        let out = model.prefill(&rt, 1, &toks).unwrap();
+        // hybrid has 4 cache tensors: kv_k, kv_v, ssm_h, conv_state
+        assert_eq!(out.caches.len(), 4);
+        let step = model.decode(&rt, 1, &[5], 16, &out.caches).unwrap();
+        assert!(step.logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,118 @@
+//! Weight sidecar loading: `<model>.weights.bin` → `xla::Literal`s.
+//!
+//! The sidecar is a flat little-endian f32 blob in `weight_specs` order
+//! (see `python/compile/aot.py`); each tensor becomes one literal that is
+//! passed as a leading positional argument to every executable. Loaded
+//! once per model — never on the per-request path.
+
+use anyhow::{ensure, Context, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::{Manifest, ModelManifest};
+
+/// Load every weight literal of a model, in manifest order.
+pub fn load_weight_literals(manifest: &Manifest, model: &ModelManifest)
+                            -> Result<Vec<Literal>> {
+    let path = manifest.path(&model.weights_file);
+    let raw = std::fs::read(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let expected: usize = model.weights.iter().map(|w| w.nbytes).sum();
+    ensure!(raw.len() == expected,
+            "{}: sidecar is {} bytes, manifest expects {expected}",
+            path.display(), raw.len());
+
+    let mut out = Vec::with_capacity(model.weights.len());
+    for w in &model.weights {
+        let bytes = &raw[w.offset..w.offset + w.nbytes];
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &w.spec.shape, bytes)
+            .with_context(|| format!("literal for weight `{}`", w.spec.name))?;
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+/// Build an i32 literal from host data with a shape.
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32, shape, bytes)?)
+}
+
+/// Build an f32 literal from host data with a shape.
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32, shape, bytes)?)
+}
+
+/// Scalar i32 literal (the decode `pos` argument).
+pub fn i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Zero-filled f32 literal for a tensor spec (initial cache state).
+pub fn zeros_literal(shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    f32_literal(shape, &vec![0.0f32; n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let lit = i32_literal(&[2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let lit = f32_literal(&[4], &[0.5, -1.0, 2.0, 3.5]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0.5, -1.0, 2.0, 3.5]);
+    }
+
+    #[test]
+    fn zeros_literal_shape_and_content() {
+        let lit = zeros_literal(&[2, 2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 8);
+        assert!(lit.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = i32_scalar(42);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 42);
+        assert_eq!(lit.element_count(), 1);
+    }
+
+    #[test]
+    fn wrong_byte_count_rejected() {
+        assert!(f32_literal(&[3], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn real_weights_load_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let mm = m.model("elana-tiny").unwrap();
+        let ws = load_weight_literals(&m, mm).unwrap();
+        assert_eq!(ws.len(), mm.weights.len());
+        // embedding is (512, 128)
+        assert_eq!(ws[0].element_count(), 512 * 128);
+        // total elements match param count
+        let total: usize = ws.iter().map(|w| w.element_count()).sum();
+        assert_eq!(total as u64, mm.param_count);
+    }
+}

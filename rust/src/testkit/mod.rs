@@ -1,0 +1,85 @@
+//! In-tree property-testing kit (proptest is unavailable offline).
+//!
+//! `property(n, f)` runs `f` against `n` deterministic RNG streams and, on
+//! failure, reports the failing case's seed so it can be replayed with
+//! `property_seeded`. Not a shrinker — cases are kept small by
+//! construction instead (generators draw bounded sizes).
+
+use crate::util::Rng;
+
+/// Run `f` on `n` deterministically seeded RNGs. Panics (re-raising the
+/// inner assertion) with the failing seed in the message.
+pub fn property(n: u64, mut f: impl FnMut(&mut Rng)) {
+    let base = base_seed();
+    for i in 0..n {
+        let seed = base.wrapping_add(i);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = panic_message(&e);
+            panic!("property failed at seed {seed} (replay with \
+                    ELANA_PROP_SEED={seed}): {msg}");
+        }
+    }
+}
+
+/// Replay a single property case with an explicit seed.
+pub fn property_seeded(seed: u64, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+fn base_seed() -> u64 {
+    std::env::var("ELANA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE1A7A)
+}
+
+fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property(25, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(10, |rng| {
+                // fails on some case
+                assert!(rng.f64() < 0.5, "coin came up tails");
+            });
+        }));
+        let msg = panic_message(&r.unwrap_err());
+        assert!(msg.contains("ELANA_PROP_SEED="), "{msg}");
+        assert!(msg.contains("tails"), "{msg}");
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut a = Vec::new();
+        property_seeded(99, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        property_seeded(99, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,184 @@
+//! HTA-style trace analysis (Holistic Trace Analysis).
+//!
+//! The paper pairs the PyTorch profiler with HTA for "operator runtimes
+//! and kernel-level statistics"; this module computes the equivalent
+//! summaries over our traces: top kernels by total time, per-category
+//! breakdown, and the busy/idle split of each track.
+
+use std::collections::BTreeMap;
+
+use super::recorder::TraceRecorder;
+
+/// Aggregate statistics for one kernel name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelStat {
+    pub name: String,
+    pub calls: usize,
+    pub total_us: f64,
+    pub mean_us: f64,
+    /// Share of the summed span time.
+    pub fraction: f64,
+}
+
+/// The full analysis result.
+#[derive(Debug, Clone)]
+pub struct HtaSummary {
+    /// Kernels sorted by total time, descending.
+    pub top_kernels: Vec<KernelStat>,
+    /// (category, total_us) sorted descending.
+    pub by_category: Vec<(String, f64)>,
+    /// Busy fraction per track: span time / track wall extent.
+    pub track_busy: BTreeMap<u32, f64>,
+    /// Sum of all span durations.
+    pub total_span_us: f64,
+}
+
+impl HtaSummary {
+    /// Render the text report the CLI prints.
+    pub fn render(&self, top_n: usize) -> String {
+        let mut out = String::new();
+        out.push_str("== HTA summary ==\n");
+        out.push_str(&format!("total kernel time: {:.3} ms\n",
+                              self.total_span_us / 1e3));
+        out.push_str("-- by category --\n");
+        for (cat, us) in &self.by_category {
+            out.push_str(&format!("  {:<12} {:>10.3} ms ({:>5.1}%)\n",
+                                  cat, us / 1e3,
+                                  us / self.total_span_us * 100.0));
+        }
+        out.push_str(&format!("-- top {top_n} kernels --\n"));
+        for k in self.top_kernels.iter().take(top_n) {
+            out.push_str(&format!(
+                "  {:<28} {:>6} calls {:>10.3} ms total ({:>5.1}%)\n",
+                k.name, k.calls, k.total_us / 1e3, k.fraction * 100.0));
+        }
+        for (track, busy) in &self.track_busy {
+            out.push_str(&format!("track {track}: {:.1}% busy\n",
+                                  busy * 100.0));
+        }
+        out
+    }
+}
+
+/// Aggregate kernel names across layers: `layer07/qkv_proj` → `qkv_proj`.
+fn base_name(name: &str) -> String {
+    name.rsplit('/').next().unwrap_or(name).to_string()
+}
+
+/// Analyze a recorder's events.
+pub fn analyze(recorder: &TraceRecorder) -> HtaSummary {
+    let events = recorder.events();
+    let total: f64 = events.iter().map(|e| e.duration_us).sum();
+
+    let mut kernels: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+    let mut cats: BTreeMap<String, f64> = BTreeMap::new();
+    let mut track_span: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut track_extent: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+
+    for e in &events {
+        let k = kernels.entry(base_name(&e.name)).or_insert((0, 0.0));
+        k.0 += 1;
+        k.1 += e.duration_us;
+        *cats.entry(e.category.clone()).or_insert(0.0) += e.duration_us;
+        *track_span.entry(e.track).or_insert(0.0) += e.duration_us;
+        let ext = track_extent
+            .entry(e.track)
+            .or_insert((f64::INFINITY, f64::NEG_INFINITY));
+        ext.0 = ext.0.min(e.start_us);
+        ext.1 = ext.1.max(e.start_us + e.duration_us);
+    }
+
+    let mut top_kernels: Vec<KernelStat> = kernels
+        .into_iter()
+        .map(|(name, (calls, total_us))| KernelStat {
+            name,
+            calls,
+            mean_us: total_us / calls as f64,
+            fraction: if total > 0.0 { total_us / total } else { 0.0 },
+            total_us,
+        })
+        .collect();
+    top_kernels.sort_by(|a, b| b.total_us.partial_cmp(&a.total_us).unwrap());
+
+    let mut by_category: Vec<(String, f64)> = cats.into_iter().collect();
+    by_category.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    let track_busy = track_span
+        .into_iter()
+        .map(|(t, span)| {
+            let (lo, hi) = track_extent[&t];
+            let extent = (hi - lo).max(f64::MIN_POSITIVE);
+            (t, (span / extent).min(1.0))
+        })
+        .collect();
+
+    HtaSummary { top_kernels, by_category, track_busy, total_span_us: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::recorder::TraceRecorder;
+
+    fn recorder() -> TraceRecorder {
+        let r = TraceRecorder::new();
+        // two layers of the same kernel mix on track 1
+        r.record("layer00/qkv_proj", "gemm", 1, 0.0, 100.0);
+        r.record("layer00/flash_attn", "attention", 1, 100.0, 60.0);
+        r.record("layer01/qkv_proj", "gemm", 1, 160.0, 100.0);
+        r.record("layer01/flash_attn", "attention", 1, 260.0, 40.0);
+        r
+    }
+
+    #[test]
+    fn kernels_aggregate_across_layers() {
+        let s = analyze(&recorder());
+        assert_eq!(s.top_kernels.len(), 2);
+        let qkv = &s.top_kernels[0];
+        assert_eq!(qkv.name, "qkv_proj");
+        assert_eq!(qkv.calls, 2);
+        assert_eq!(qkv.total_us, 200.0);
+        assert_eq!(qkv.mean_us, 100.0);
+        assert!((qkv.fraction - 200.0 / 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn categories_sorted_descending() {
+        let s = analyze(&recorder());
+        assert_eq!(s.by_category[0].0, "gemm");
+        assert_eq!(s.by_category[0].1, 200.0);
+        assert_eq!(s.by_category[1].0, "attention");
+    }
+
+    #[test]
+    fn track_busy_fraction() {
+        let s = analyze(&recorder());
+        // track 1: 300 us of spans across a [0, 300] extent => 100% busy
+        assert!((s.track_busy[&1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_gap_lowers_busy_fraction() {
+        let r = TraceRecorder::new();
+        r.record("a", "gemm", 0, 0.0, 100.0);
+        r.record("b", "gemm", 0, 900.0, 100.0); // long gap
+        let s = analyze(&r);
+        assert!((s.track_busy[&0] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_key_lines() {
+        let text = analyze(&recorder()).render(5);
+        assert!(text.contains("HTA summary"));
+        assert!(text.contains("qkv_proj"));
+        assert!(text.contains("gemm"));
+        assert!(text.contains("track 1"));
+    }
+
+    #[test]
+    fn empty_trace_analyzes_cleanly() {
+        let s = analyze(&TraceRecorder::new());
+        assert_eq!(s.total_span_us, 0.0);
+        assert!(s.top_kernels.is_empty());
+    }
+}

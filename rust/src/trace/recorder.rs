@@ -1,0 +1,178 @@
+//! Span recorder: collects complete events (name, category, track,
+//! start, duration) from profiling runs.
+
+use std::sync::{Arc, Mutex};
+
+use crate::hwsim::kernels::KernelSpan;
+use crate::util::timer::{Clock, SystemClock};
+
+/// One complete span ("X" phase event in Chrome trace terms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    pub category: String,
+    /// Track id (rendered as a tid row in Perfetto; e.g. one per GPU
+    /// stream or engine phase lane).
+    pub track: u32,
+    /// Microseconds from trace epoch.
+    pub start_us: f64,
+    pub duration_us: f64,
+}
+
+/// Thread-safe trace collector.
+#[derive(Clone)]
+pub struct TraceRecorder {
+    inner: Arc<Mutex<Vec<TraceEvent>>>,
+    clock: Arc<dyn Clock>,
+    epoch: f64,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        Self::with_clock(Arc::new(SystemClock))
+    }
+
+    pub fn with_clock(clock: Arc<dyn Clock>) -> TraceRecorder {
+        let epoch = clock.now();
+        TraceRecorder { inner: Arc::new(Mutex::new(Vec::new())), clock, epoch }
+    }
+
+    fn now_us(&self) -> f64 {
+        (self.clock.now() - self.epoch) * 1e6
+    }
+
+    /// Record a complete span directly.
+    pub fn record(&self, name: impl Into<String>, category: impl Into<String>,
+                  track: u32, start_us: f64, duration_us: f64) {
+        self.inner.lock().unwrap().push(TraceEvent {
+            name: name.into(),
+            category: category.into(),
+            track,
+            start_us,
+            duration_us,
+        });
+    }
+
+    /// RAII span: records on drop with wall-clock duration.
+    pub fn span(&self, name: impl Into<String>, category: impl Into<String>,
+                track: u32) -> SpanGuard {
+        SpanGuard {
+            recorder: self.clone(),
+            name: name.into(),
+            category: category.into(),
+            track,
+            start_us: self.now_us(),
+        }
+    }
+
+    /// Import an hwsim-synthesized kernel timeline, offset to
+    /// `phase_start_us` on `track`.
+    pub fn import_kernels(&self, spans: &[KernelSpan], phase_start_us: f64,
+                          track: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        for s in spans {
+            inner.push(TraceEvent {
+                name: s.name.clone(),
+                category: s.category.to_string(),
+                track,
+                start_us: phase_start_us + s.start_s * 1e6,
+                duration_us: s.duration_s * 1e6,
+            });
+        }
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Records its span when dropped.
+pub struct SpanGuard {
+    recorder: TraceRecorder,
+    name: String,
+    category: String,
+    track: u32,
+    start_us: f64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = self.recorder.now_us();
+        self.recorder.record(
+            std::mem::take(&mut self.name),
+            std::mem::take(&mut self.category),
+            self.track,
+            self.start_us,
+            end - self.start_us,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timer::FakeClock;
+
+    #[test]
+    fn record_and_read_back() {
+        let r = TraceRecorder::new();
+        r.record("prefill", "phase", 0, 0.0, 1000.0);
+        r.record("decode", "phase", 0, 1000.0, 100.0);
+        let ev = r.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].name, "prefill");
+        assert_eq!(ev[1].start_us, 1000.0);
+    }
+
+    #[test]
+    fn span_guard_measures_duration() {
+        let clock = Arc::new(FakeClock::new());
+        let r = TraceRecorder::with_clock(clock.clone());
+        {
+            let _g = r.span("work", "phase", 3);
+            clock.advance(0.0025); // 2.5 ms
+        }
+        let ev = r.events();
+        assert_eq!(ev.len(), 1);
+        assert!((ev[0].duration_us - 2500.0).abs() < 1e-6);
+        assert_eq!(ev[0].track, 3);
+    }
+
+    #[test]
+    fn import_kernels_offsets_into_timeline() {
+        let r = TraceRecorder::new();
+        let spans = vec![
+            KernelSpan { name: "k0".into(), start_s: 0.0,
+                         duration_s: 0.001, category: "gemm" },
+            KernelSpan { name: "k1".into(), start_s: 0.001,
+                         duration_s: 0.002, category: "attention" },
+        ];
+        r.import_kernels(&spans, 500.0, 1);
+        let ev = r.events();
+        assert_eq!(ev[0].start_us, 500.0);
+        assert_eq!(ev[1].start_us, 1500.0);
+        assert_eq!(ev[1].duration_us, 2000.0);
+    }
+
+    #[test]
+    fn recorder_shared_across_clones() {
+        let r = TraceRecorder::new();
+        let r2 = r.clone();
+        r.record("a", "c", 0, 0.0, 1.0);
+        assert_eq!(r2.len(), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates: units, statistics, RNG, JSON, timing.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod units;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Stopwatch;

@@ -1,0 +1,226 @@
+//! Descriptive statistics for latency/energy samples.
+//!
+//! ELANA reports averages over 100 runs (20 for TTLT); this module is the
+//! accumulation substrate behind those numbers: streaming mean/variance
+//! (Welford), percentiles, and a compact `Summary` used by every profiler
+//! report and by the bench harness.
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Full-sample summary with percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a sample set. Returns `None` for an empty slice.
+    pub fn from_samples(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let mut w = Welford::new();
+        for &x in samples {
+            w.push(x);
+        }
+        Some(Summary {
+            count: samples.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: *sorted.last().unwrap(),
+        })
+    }
+
+    /// 95% confidence half-width of the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        1.96 * self.std / (self.count as f64).sqrt()
+    }
+
+    /// Relative std (coefficient of variation); used by the bench harness
+    /// to decide convergence.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.std / self.mean.abs() }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice. `p` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Trapezoidal integration of irregularly-sampled (t, y) points — used to
+/// turn the power sampler's (timestamp, watts) log into joules.
+pub fn trapezoid_integrate(points: &[(f64, f64)]) -> f64 {
+    points
+        .windows(2)
+        .map(|w| {
+            let (t0, y0) = w[0];
+            let (t1, y1) = w[1];
+            (t1 - t0) * (y0 + y1) * 0.5
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::property;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // naive sample variance
+        let var: f64 = xs.iter().map(|x| (x - 5.0) * (x - 5.0)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn welford_empty_and_single() {
+        let w = Welford::new();
+        assert!(w.mean().is_nan());
+        let mut w = Welford::new();
+        w.push(3.0);
+        assert_eq!(w.mean(), 3.0);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&xs).unwrap();
+        assert_eq!(s.p50, 50.5);
+        assert!((s.p90 - 90.1).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile_sorted(&[42.0], 99.0), 42.0);
+    }
+
+    #[test]
+    fn trapezoid_constant_power() {
+        // 100 W for 2 s sampled at 0.1 s -> 200 J exactly.
+        let pts: Vec<(f64, f64)> = (0..=20).map(|i| (i as f64 * 0.1, 100.0)).collect();
+        assert!((trapezoid_integrate(&pts) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trapezoid_ramp() {
+        // power ramps 0->100 W over 1 s -> 50 J.
+        let pts = vec![(0.0, 0.0), (1.0, 100.0)];
+        assert!((trapezoid_integrate(&pts) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_welford_mean_bounded_by_min_max() {
+        property(1000, |rng| {
+            let n = rng.usize_in(1, 50);
+            let xs: Vec<f64> = (0..n).map(|_| rng.f64_in(-100.0, 100.0)).collect();
+            let s = Summary::from_samples(&xs).unwrap();
+            assert!(s.min <= s.mean + 1e-9 && s.mean <= s.max + 1e-9);
+            assert!(s.p50 >= s.min && s.p50 <= s.max);
+            assert!(s.std >= 0.0);
+        });
+    }
+
+    #[test]
+    fn prop_percentiles_monotone() {
+        property(500, |rng| {
+            let n = rng.usize_in(2, 64);
+            let mut xs: Vec<f64> = (0..n).map(|_| rng.f64_in(0.0, 10.0)).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let p1 = rng.f64_in(0.0, 100.0);
+            let p2 = rng.f64_in(0.0, 100.0);
+            let (lo, hi) = if p1 <= p2 { (p1, p2) } else { (p2, p1) };
+            assert!(percentile_sorted(&xs, lo) <= percentile_sorted(&xs, hi) + 1e-12);
+        });
+    }
+}

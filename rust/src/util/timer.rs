@@ -1,0 +1,145 @@
+//! Monotonic timing helpers.
+//!
+//! ELANA isolates prefill and decode phases with explicit timing windows;
+//! `Stopwatch` is the primitive every profiler harness uses, and
+//! `Clock` abstracts time for the power sampler so tests can inject a
+//! fake clock and run deterministically.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Simple monotonic stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time source abstraction: real monotonic time in production, a manually
+/// advanced fake in tests (the power sampler and serving loop are tested
+/// against `FakeClock`).
+pub trait Clock: Send + Sync {
+    /// Seconds since an arbitrary epoch (monotonic).
+    fn now(&self) -> f64;
+    /// Sleep for the given duration (no-op advance on the fake).
+    fn sleep(&self, d: Duration);
+}
+
+/// Production clock.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SystemClock;
+
+static EPOCH: once_cell::sync::Lazy<Instant> =
+    once_cell::sync::Lazy::new(Instant::now);
+
+impl Clock for SystemClock {
+    fn now(&self) -> f64 {
+        EPOCH.elapsed().as_secs_f64()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Deterministic, manually advanced clock for tests. `sleep` advances the
+/// clock instead of blocking, so sampler loops run at full speed.
+#[derive(Debug, Clone, Default)]
+pub struct FakeClock {
+    t: Arc<Mutex<f64>>,
+}
+
+impl FakeClock {
+    pub fn new() -> Self {
+        FakeClock { t: Arc::new(Mutex::new(0.0)) }
+    }
+
+    pub fn advance(&self, secs: f64) {
+        *self.t.lock().unwrap() += secs;
+    }
+
+    pub fn set(&self, secs: f64) {
+        *self.t.lock().unwrap() = secs;
+    }
+}
+
+impl Clock for FakeClock {
+    fn now(&self) -> f64 {
+        *self.t.lock().unwrap()
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d.as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn stopwatch_restart_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(3));
+        let first = sw.restart();
+        assert!(first.as_secs_f64() > 0.0);
+        assert!(sw.elapsed_secs() < first.as_secs_f64() + 0.002);
+    }
+
+    #[test]
+    fn system_clock_monotonic() {
+        let c = SystemClock;
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now() > a);
+    }
+
+    #[test]
+    fn fake_clock_sleep_advances_without_blocking() {
+        let c = FakeClock::new();
+        let sw = Stopwatch::start();
+        c.sleep(Duration::from_secs(3600));
+        assert!(sw.elapsed_secs() < 1.0, "fake sleep must not block");
+        assert_eq!(c.now(), 3600.0);
+        c.advance(0.1);
+        assert!((c.now() - 3600.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fake_clock_shared_across_clones() {
+        let c = FakeClock::new();
+        let c2 = c.clone();
+        c.advance(5.0);
+        assert_eq!(c2.now(), 5.0);
+    }
+}

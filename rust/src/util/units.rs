@@ -1,0 +1,136 @@
+//! Memory / time / energy units and formatting.
+//!
+//! The paper (§2.2) defaults to the SI (base-10) definition used by
+//! storage manufacturers — 1 GB = 1000³ bytes — and offers the binary
+//! unit (1 GiB = 1024³ bytes) as an option. Both are first-class here so
+//! every size report can be printed either way.
+
+/// Memory unit convention for size reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemUnit {
+    /// SI, base-10: 1 GB = 1000^3 bytes (paper default).
+    #[default]
+    Si,
+    /// Binary: 1 GiB = 1024^3 bytes.
+    Binary,
+}
+
+impl MemUnit {
+    pub fn divisor(self) -> f64 {
+        match self {
+            MemUnit::Si => 1e9,
+            MemUnit::Binary => (1u64 << 30) as f64,
+        }
+    }
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            MemUnit::Si => "GB",
+            MemUnit::Binary => "GiB",
+        }
+    }
+
+    /// Bytes → unit value (GB or GiB).
+    pub fn giga(self, bytes: u64) -> f64 {
+        bytes as f64 / self.divisor()
+    }
+
+    /// Format like the paper's tables: `16.06 GB`.
+    pub fn format(self, bytes: u64) -> String {
+        format!("{:.2} {}", self.giga(bytes), self.suffix())
+    }
+
+    pub fn parse(s: &str) -> Option<MemUnit> {
+        match s.to_ascii_lowercase().as_str() {
+            "si" | "gb" => Some(MemUnit::Si),
+            "binary" | "gib" => Some(MemUnit::Binary),
+            _ => None,
+        }
+    }
+}
+
+/// Seconds → a human latency string using the paper's convention (ms).
+pub fn fmt_ms(seconds: f64) -> String {
+    format!("{:.2}", seconds * 1e3)
+}
+
+/// Joules with the paper's 2-decimal convention.
+pub fn fmt_joules(j: f64) -> String {
+    format!("{j:.2}")
+}
+
+/// Bytes with an adaptive suffix, for logs (not report tables).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut i = 0;
+    while v >= 1000.0 && i < UNITS.len() - 1 {
+        v /= 1000.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[i])
+    }
+}
+
+/// Parse workload shorthand `"512+512"` into (prompt_len, gen_len).
+pub fn parse_workload_len(s: &str) -> Option<(usize, usize)> {
+    let (p, g) = s.split_once('+')?;
+    Some((p.trim().parse().ok()?, g.trim().parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_vs_binary_divisors() {
+        assert_eq!(MemUnit::Si.divisor(), 1e9);
+        assert_eq!(MemUnit::Binary.divisor(), 1073741824.0);
+    }
+
+    #[test]
+    fn paper_table2_llama_param_formatting() {
+        // Llama-3.1-8B: 8.03B params * 2 bytes = 16.06 GB in SI units.
+        let bytes = 8_030_261_248u64 * 2;
+        assert_eq!(MemUnit::Si.format(bytes), "16.06 GB");
+        // The same bytes in GiB are smaller numerically.
+        assert!(MemUnit::Binary.giga(bytes) < MemUnit::Si.giga(bytes));
+    }
+
+    #[test]
+    fn format_small_cache() {
+        // Llama KV cache at bsize=1, L=1024: 0.134 GB -> "0.13 GB".
+        assert_eq!(MemUnit::Si.format(134_217_728), "0.13 GB");
+    }
+
+    #[test]
+    fn parse_unit_aliases() {
+        assert_eq!(MemUnit::parse("SI"), Some(MemUnit::Si));
+        assert_eq!(MemUnit::parse("gib"), Some(MemUnit::Binary));
+        assert_eq!(MemUnit::parse("bogus"), None);
+    }
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(999), "999 B");
+        assert_eq!(human_bytes(1_500), "1.50 KB");
+        assert_eq!(human_bytes(17_180_000_000), "17.18 GB");
+    }
+
+    #[test]
+    fn workload_shorthand() {
+        assert_eq!(parse_workload_len("512+512"), Some((512, 512)));
+        assert_eq!(parse_workload_len("1024 + 256"), Some((1024, 256)));
+        assert_eq!(parse_workload_len("512"), None);
+        assert_eq!(parse_workload_len("a+b"), None);
+    }
+
+    #[test]
+    fn ms_and_joule_formatting() {
+        assert_eq!(fmt_ms(0.09430), "94.30");
+        assert_eq!(fmt_joules(25.912), "25.91");
+    }
+}

@@ -1,0 +1,169 @@
+//! Workload generation: random prompts and request traces.
+//!
+//! ELANA profiles with *random input prompts* at user-specified lengths
+//! (§2.3); `PromptGen` reproduces that. `RequestTrace` adds Poisson
+//! request arrivals for the serving example (exercising the
+//! coordinator's dynamic batcher the way a trace-driven load generator
+//! would).
+
+use crate::engine::TokenBatch;
+use crate::util::Rng;
+
+/// Deterministic random-prompt generator.
+#[derive(Debug, Clone)]
+pub struct PromptGen {
+    vocab_size: usize,
+    rng: Rng,
+}
+
+impl PromptGen {
+    pub fn new(vocab_size: usize, seed: u64) -> PromptGen {
+        assert!(vocab_size > 0);
+        PromptGen { vocab_size, rng: Rng::new(seed) }
+    }
+
+    /// One random prompt of `len` tokens.
+    pub fn prompt(&mut self, len: usize) -> Vec<i32> {
+        (0..len).map(|_| self.rng.token(self.vocab_size)).collect()
+    }
+
+    /// A rectangular (batch, len) batch — the paper's workload unit.
+    pub fn batch(&mut self, batch: usize, len: usize) -> TokenBatch {
+        let tokens: Vec<i32> =
+            (0..batch * len).map(|_| self.rng.token(self.vocab_size)).collect();
+        TokenBatch::new(batch, len, tokens).expect("rectangular by construction")
+    }
+
+    /// Prompt lengths varying uniformly in [lo, hi] — "input prompt
+    /// lengths vary in real applications" (the reason the paper skips
+    /// CUDA-graph caching for prefill).
+    pub fn varied_lengths(&mut self, n: usize, lo: usize, hi: usize)
+                          -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|_| {
+                let len = self.rng.usize_in(lo, hi);
+                self.prompt(len)
+            })
+            .collect()
+    }
+}
+
+/// One serving request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset, seconds from trace start.
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+}
+
+/// A Poisson-arrival request trace for the serving example.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub requests: Vec<Request>,
+}
+
+impl RequestTrace {
+    /// `n` requests at `rate_rps` mean arrival rate, prompt lengths in
+    /// [len_lo, len_hi], fixed gen_len.
+    pub fn poisson(n: usize, rate_rps: f64, len_lo: usize, len_hi: usize,
+                   gen_len: usize, vocab_size: usize, seed: u64)
+                   -> RequestTrace {
+        let mut rng = Rng::new(seed);
+        let mut gen = PromptGen::new(vocab_size, seed.wrapping_add(1));
+        let mut t = 0.0;
+        let requests = (0..n)
+            .map(|i| {
+                t += rng.exponential(rate_rps);
+                Request {
+                    id: i as u64,
+                    arrival_s: t,
+                    prompt: gen.prompt(rng.usize_in(len_lo, len_hi)),
+                    gen_len,
+                }
+            })
+            .collect();
+        RequestTrace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total span of the trace, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::property;
+
+    #[test]
+    fn prompts_in_vocab_and_deterministic() {
+        let mut a = PromptGen::new(512, 7);
+        let mut b = PromptGen::new(512, 7);
+        let pa = a.prompt(64);
+        let pb = b.prompt(64);
+        assert_eq!(pa, pb);
+        assert!(pa.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = PromptGen::new(512, 1);
+        let mut b = PromptGen::new(512, 2);
+        assert_ne!(a.prompt(64), b.prompt(64));
+    }
+
+    #[test]
+    fn batch_shape() {
+        let mut g = PromptGen::new(512, 3);
+        let tb = g.batch(4, 16);
+        assert_eq!(tb.batch(), 4);
+        assert_eq!(tb.prompt_len(), 16);
+    }
+
+    #[test]
+    fn varied_lengths_within_bounds() {
+        let mut g = PromptGen::new(512, 5);
+        let prompts = g.varied_lengths(50, 8, 32);
+        assert!(prompts.iter().all(|p| (8..=32).contains(&p.len())));
+        // lengths actually vary
+        let min = prompts.iter().map(|p| p.len()).min().unwrap();
+        let max = prompts.iter().map(|p| p.len()).max().unwrap();
+        assert!(min < max);
+    }
+
+    #[test]
+    fn poisson_trace_sorted_and_rate_sane() {
+        let tr = RequestTrace::poisson(200, 10.0, 16, 32, 8, 512, 9);
+        assert_eq!(tr.len(), 200);
+        for w in tr.requests.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // 200 requests at 10 rps ≈ 20 s span (loose bound)
+        assert!((10.0..40.0).contains(&tr.duration_s()),
+                "{}", tr.duration_s());
+    }
+
+    #[test]
+    fn prop_request_ids_unique_and_ordered() {
+        property(20, |rng| {
+            let n = rng.usize_in(1, 50);
+            let tr = RequestTrace::poisson(n, 5.0, 4, 8, 4, 128,
+                                           rng.next_u64());
+            for (i, r) in tr.requests.iter().enumerate() {
+                assert_eq!(r.id, i as u64);
+                assert!(!r.prompt.is_empty());
+            }
+        });
+    }
+}

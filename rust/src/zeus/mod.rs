@@ -1,0 +1,156 @@
+//! Zeus baseline: the `ZeusMonitor` programming model (Table 1's
+//! comparator).
+//!
+//! Zeus [You et al., NSDI'23] asks the *user* to insert
+//! `begin_window(name)` / `end_window(name)` calls around code blocks and
+//! reports coarse totals (energy, time) per window — no phase isolation,
+//! no per-token stream, no kernel view. Implementing the baseline lets
+//! `benches/table1_zeus.rs` print the actual side-by-side outputs that
+//! Table 1 contrasts qualitatively.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::power::energy::WindowEnergy;
+use crate::power::sampler::PowerSampler;
+
+/// Result of one measurement window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub time_s: f64,
+    pub total_energy_j: f64,
+}
+
+/// Zeus-style monitor over the (simulated) power sampler.
+pub struct ZeusMonitor {
+    sampler: PowerSampler,
+    open: BTreeMap<String, f64>,
+}
+
+impl ZeusMonitor {
+    /// Wrap an already-running power sampler (Zeus owns its own polling
+    /// process; we share the substrate).
+    pub fn new(sampler: PowerSampler) -> ZeusMonitor {
+        ZeusMonitor { sampler, open: BTreeMap::new() }
+    }
+
+    /// `ZeusMonitor.begin_window(name)` analogue.
+    pub fn begin_window(&mut self, name: &str) -> Result<()> {
+        if self.open.contains_key(name) {
+            bail!("window `{name}` already open");
+        }
+        self.open.insert(name.to_string(), self.sampler.now());
+        Ok(())
+    }
+
+    /// `ZeusMonitor.end_window(name)` analogue: coarse totals only.
+    pub fn end_window(&mut self, name: &str) -> Result<Measurement> {
+        let Some(t0) = self.open.remove(name) else {
+            bail!("window `{name}` was never opened");
+        };
+        let t1 = self.sampler.now();
+        let e = WindowEnergy::average_power_method(&self.sampler.log(), t0, t1);
+        Ok(Measurement { time_s: t1 - t0, total_energy_j: e.joules })
+    }
+
+    /// Number of currently open windows (diagnostic).
+    pub fn open_windows(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Tear down, returning the sampler for reuse.
+    pub fn into_sampler(self) -> PowerSampler {
+        self.sampler
+    }
+}
+
+/// Render a Zeus-style report line (what the Zeus CLI prints: totals for
+/// the monitored block, nothing finer).
+pub fn render_measurement(name: &str, m: &Measurement) -> String {
+    format!("[zeus] window `{name}`: time {:.3} s, energy {:.2} J",
+            m.time_s, m.total_energy_j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::model::{DevicePowerModel, LoadHandle};
+    use crate::power::nvml::NvmlSim;
+    use crate::power::sampler::PowerSampler;
+    use crate::util::timer::FakeClock;
+    use std::sync::Arc;
+
+    const MODEL: DevicePowerModel = DevicePowerModel {
+        idle_w: 20.0, sustain_w: 270.0, alpha: 0.6, noise_w: 0.0,
+    };
+
+    fn setup() -> (ZeusMonitor, LoadHandle, Arc<FakeClock>) {
+        let load = LoadHandle::new();
+        let nvml = Arc::new(NvmlSim::new_shared(1, MODEL, load.clone()));
+        let clock = Arc::new(FakeClock::new());
+        let sampler = PowerSampler::start_with(nvml, clock.clone(), 0.1);
+        (ZeusMonitor::new(sampler), load, clock)
+    }
+
+    fn wait_samples(z: &ZeusMonitor, n: usize) {
+        while z.sampler.log().len() < n {
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn window_measures_time_and_energy() {
+        let (mut z, load, _clock) = setup();
+        wait_samples(&z, 5);
+        let t0 = z.sampler.now();
+        load.set(1.0);
+        z.begin_window("generate").unwrap();
+        // let simulated time pass under load
+        while z.sampler.now() < t0 + 2.0 {
+            std::thread::yield_now();
+        }
+        let m = z.end_window("generate").unwrap();
+        load.set(0.0);
+        assert!(m.time_s >= 2.0);
+        // ~270 W * time
+        let expected = 270.0 * m.time_s;
+        assert!((m.total_energy_j - expected).abs() / expected < 0.05,
+                "{m:?} vs {expected}");
+    }
+
+    #[test]
+    fn double_begin_rejected() {
+        let (mut z, _, _) = setup();
+        z.begin_window("w").unwrap();
+        assert!(z.begin_window("w").is_err());
+        assert_eq!(z.open_windows(), 1);
+    }
+
+    #[test]
+    fn end_without_begin_rejected() {
+        let (mut z, _, _) = setup();
+        assert!(z.end_window("nope").is_err());
+    }
+
+    #[test]
+    fn nested_windows_supported() {
+        let (mut z, _, clock) = setup();
+        z.begin_window("outer").unwrap();
+        clock.advance(0.5);
+        z.begin_window("inner").unwrap();
+        clock.advance(0.5);
+        let inner = z.end_window("inner").unwrap();
+        let outer = z.end_window("outer").unwrap();
+        assert!(outer.time_s >= inner.time_s);
+        assert!(outer.time_s >= 1.0);
+    }
+
+    #[test]
+    fn render_line_format() {
+        let m = Measurement { time_s: 12.859, total_energy_j: 3533.09 };
+        let line = render_measurement("e2e", &m);
+        assert!(line.contains("12.859 s"));
+        assert!(line.contains("3533.09 J"));
+    }
+}

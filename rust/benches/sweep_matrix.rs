@@ -1,0 +1,63 @@
+//! Bench: sweep-matrix throughput — the scenario grid `elana sweep`
+//! runs, measured at 1 worker vs all cores, plus the expansion and
+//! reporting hot paths.
+
+use std::time::Duration;
+
+use elana::benchkit::{bench_with, section, BenchConfig};
+use elana::sweep::{self, grid, report, SweepSpec};
+
+fn matrix_spec() -> SweepSpec {
+    let mut spec = SweepSpec::default();
+    spec.models = vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()];
+    spec.devices = vec!["a6000".into(), "thor".into()];
+    spec.batches = vec![1];
+    spec.lens = vec![(128, 64), (256, 128), (512, 256)];
+    spec
+}
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 20,
+        target_cv: 0.10,
+        max_time: Duration::from_secs(5),
+    };
+
+    section("sweep matrix — 12 cells (2 models x 2 devices x 3 lens)");
+    let mut s1 = matrix_spec();
+    s1.threads = 1;
+    bench_with("sweep::run, 1 thread", cfg, &mut || {
+        std::hint::black_box(sweep::run(&s1).unwrap());
+    });
+    let mut sn = matrix_spec();
+    sn.threads = 0; // all cores
+    let cores = sweep::pool::effective_threads(0);
+    bench_with(&format!("sweep::run, {cores} threads"), cfg, &mut || {
+        std::hint::black_box(sweep::run(&sn).unwrap());
+    });
+
+    section("grid expansion + reporting hot paths");
+    let mut big = matrix_spec();
+    big.models = elana::models::registry::model_names()
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+    big.devices = vec!["a6000".into(), "4xa6000".into(), "thor".into(),
+                       "orin".into(), "a100".into(), "h100".into()];
+    big.batches = vec![1, 8, 64];
+    big.lens = vec![(256, 256), (512, 512), (1024, 1024), (2048, 2048)];
+    bench_with(
+        &format!("grid::expand ({} cells)", big.n_cells()), cfg, &mut || {
+            std::hint::black_box(grid::expand(&big));
+        });
+
+    let results = sweep::run(&s1).unwrap();
+    bench_with("report::render_markdown (12 cells)", cfg, &mut || {
+        std::hint::black_box(report::render_markdown(&results));
+    });
+    bench_with("report::to_json(..).to_string() (12 cells)", cfg, &mut || {
+        std::hint::black_box(report::to_json(&results).to_string());
+    });
+}

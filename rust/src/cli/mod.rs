@@ -7,6 +7,8 @@
 //! elana size   [--models a,b] [--unit si|gib] [--points 1x1024,...]
 //! elana latency --model M --device D --batch B --len P+G [--no-energy]
 //! elana suite  (table2|table3|table4|<file.json>)
+//! elana sweep  [--spec f.json] [--models a,b] [--devices d1,d2]
+//!              [--batches 1,8] [--lens 256+256,512+512] [--threads N]
 //! elana trace  --model M --device D --batch B --len P+G --out trace.json
 //! elana serve  --model M [--requests N] [--rate R]
 //! elana models
@@ -15,6 +17,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::hwsim::Workload;
+use crate::sweep::spec::SweepOverrides;
 use crate::util::units::{parse_workload_len, MemUnit};
 
 /// Parsed command.
@@ -36,6 +39,18 @@ pub enum Command {
     },
     /// A whole suite (built-in name or JSON path).
     Suite { name: String },
+    /// Parallel scenario matrix over the worker pool.
+    Sweep {
+        /// JSON spec file providing the base grid (defaults otherwise).
+        spec_path: Option<String>,
+        /// Explicitly-given flags, layered over the base grid — so
+        /// `--spec grid.json --no-energy` honors both.
+        overrides: SweepOverrides,
+        /// Write the JSON report here.
+        out: Option<String>,
+        /// Print JSON to stdout instead of the markdown report.
+        json: bool,
+    },
     /// Figure 1: record a trace and export Perfetto JSON.
     Trace {
         model: String,
@@ -94,6 +109,52 @@ pub fn parse(args: &[String]) -> Result<Command> {
             .ok_or_else(|| anyhow!("missing required flag --{name}"))
     };
 
+    // reject unknown flags for known commands (typo safety; previously
+    // they were silently ignored)
+    let known: Option<&[&str]> = match cmd.as_str() {
+        "size" => Some(&["models", "unit", "points"]),
+        "latency" | "energy" => {
+            Some(&["model", "device", "batch", "len", "runs", "no-energy"])
+        }
+        "suite" => Some(&[]),
+        "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
+                          "threads", "seed", "unit", "no-energy", "out",
+                          "json"]),
+        "trace" => Some(&["model", "device", "batch", "len", "out"]),
+        "serve" => Some(&["model", "requests", "rate"]),
+        "models" | "help" | "-h" | "--help" | "version" | "-V"
+        | "--version" => Some(&[]),
+        _ => None, // unknown command: reported by the match below
+    };
+    const BOOLEAN_FLAGS: [&str; 2] = ["no-energy", "json"];
+    if let Some(known) = known {
+        // only `suite` takes a positional argument; anywhere else a bare
+        // word is a mistake (e.g. a forgotten --spec)
+        if cmd != "suite" {
+            if let Some(arg) = positional.first() {
+                if cmd == "sweep" {
+                    bail!("unexpected argument `{arg}` for `sweep` \
+                           (did you mean --spec {arg}?)");
+                }
+                bail!("unexpected argument `{arg}` for `{cmd}` \
+                       (see `elana help`)");
+            }
+        }
+        for (name, value) in &flags {
+            if !known.contains(&name.as_str()) {
+                bail!("unknown flag --{name} for `{cmd}` \
+                       (see `elana help`)");
+            }
+            let boolean = BOOLEAN_FLAGS.contains(&name.as_str());
+            if value.is_none() && !boolean {
+                bail!("flag --{name} requires a value");
+            }
+            if value.is_some() && boolean {
+                bail!("flag --{name} takes no value");
+            }
+        }
+    }
+
     let workload = || -> Result<Workload> {
         let batch: usize = get("batch").unwrap_or("1").parse()
             .map_err(|_| anyhow!("bad --batch"))?;
@@ -143,6 +204,60 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .cloned()
                 .ok_or_else(|| anyhow!("suite needs a name or file"))?,
         }),
+        "sweep" => {
+            let overrides = SweepOverrides {
+                models: get("models").map(|ms| {
+                    ms.split(',').map(str::to_string).collect()
+                }),
+                devices: get("devices").map(|ds| {
+                    ds.split(',').map(str::to_string).collect()
+                }),
+                batches: get("batches")
+                    .map(|bs| {
+                        bs.split(',')
+                            .map(|b| {
+                                b.trim().parse().map_err(|_| {
+                                    anyhow!("bad --batches entry `{b}`")
+                                })
+                            })
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .transpose()?,
+                lens: get("lens")
+                    .map(|ls| {
+                        ls.split(',')
+                            .map(|l| {
+                                parse_workload_len(l).ok_or_else(|| {
+                                    anyhow!("bad --lens entry `{l}` \
+                                             (want P+G)")
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()
+                    })
+                    .transpose()?,
+                energy: if has("no-energy") { Some(false) } else { None },
+                unit: get("unit")
+                    .map(|u| {
+                        MemUnit::parse(u)
+                            .ok_or_else(|| anyhow!("bad --unit (si|gib)"))
+                    })
+                    .transpose()?,
+                seed: get("seed")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --seed"))?,
+                threads: get("threads")
+                    .map(|t| t.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --threads"))?,
+            };
+            Ok(Command::Sweep {
+                spec_path: get("spec").map(str::to_string),
+                overrides,
+                out: get("out").map(str::to_string),
+                json: has("json"),
+            })
+        }
         "trace" => Ok(Command::Trace {
             model: req("model")?,
             device: get("device").unwrap_or("a6000").to_string(),
@@ -172,6 +287,10 @@ USAGE:
                 [--batch B] [--len P+G] [--runs N] [--no-energy]
   elana energy  (latency with energy always on)
   elana suite   table2|table3|table4|path/to/suite.json
+  elana sweep   [--spec sweep.json] [--models m1,m2] [--devices d1,d2]
+                [--batches 1,8] [--lens 256+256,512+512] [--threads N]
+                [--seed S] [--unit si|gib] [--no-energy]
+                [--out sweep.json] [--json]
   elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
                 [--out trace.json]
   elana serve   [--model elana-tiny] [--requests N] [--rate RPS]
@@ -275,11 +394,166 @@ mod tests {
 
     #[test]
     fn unknown_command_rejected() {
-        assert!(parse(&argv("frobnicate")).is_err());
+        let err = parse(&argv("frobnicate")).unwrap_err().to_string();
+        assert!(err.contains("unknown command"), "{err}");
     }
 
     #[test]
     fn empty_args_is_help() {
         assert_eq!(parse(&[]).unwrap(), Command::Help);
+    }
+
+    #[test]
+    fn parse_help_and_version_aliases() {
+        for a in ["help", "-h", "--help"] {
+            assert_eq!(parse(&argv(a)).unwrap(), Command::Help);
+        }
+        for a in ["version", "-V", "--version"] {
+            assert_eq!(parse(&argv(a)).unwrap(), Command::Version);
+        }
+    }
+
+    #[test]
+    fn parse_sweep_defaults() {
+        let c = parse(&argv("sweep")).unwrap();
+        match c {
+            Command::Sweep { spec_path, overrides, out, json } => {
+                assert!(spec_path.is_none());
+                // no flags given -> no overrides -> the default grid runs
+                assert_eq!(overrides, SweepOverrides::default());
+                let mut spec = crate::sweep::SweepSpec::default();
+                overrides.apply(&mut spec);
+                assert_eq!(spec, crate::sweep::SweepSpec::default());
+                assert_eq!(spec.n_cells(), 16);
+                assert!(out.is_none());
+                assert!(!json);
+            }
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_sweep_custom_grid() {
+        let c = parse(&argv(
+            "sweep --models llama-3.1-8b,qwen-2.5-7b --devices a6000,thor \
+             --batches 1,8,64 --lens 256+256,512+512 --threads 4 --seed 7 \
+             --unit gib --no-energy --out /tmp/s.json --json")).unwrap();
+        match c {
+            Command::Sweep { spec_path, overrides, out, json } => {
+                assert!(spec_path.is_none());
+                let mut spec = crate::sweep::SweepSpec::default();
+                overrides.apply(&mut spec);
+                assert_eq!(spec.models.len(), 2);
+                assert_eq!(spec.devices, vec!["a6000", "thor"]);
+                assert_eq!(spec.batches, vec![1, 8, 64]);
+                assert_eq!(spec.lens, vec![(256, 256), (512, 512)]);
+                assert_eq!(spec.seed, 7);
+                assert_eq!(spec.unit, MemUnit::Binary);
+                assert!(!spec.energy);
+                assert_eq!(spec.threads, 4);
+                assert_eq!(out.as_deref(), Some("/tmp/s.json"));
+                assert!(json);
+                assert_eq!(spec.n_cells(), 24);
+            }
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_sweep_spec_file_keeps_explicit_flags_as_overrides() {
+        let c = parse(&argv(
+            "sweep --spec grid.json --threads 2 --no-energy")).unwrap();
+        match c {
+            Command::Sweep { spec_path, overrides, .. } => {
+                assert_eq!(spec_path.as_deref(), Some("grid.json"));
+                // flags given alongside --spec survive as overrides...
+                assert_eq!(overrides.threads, Some(2));
+                assert_eq!(overrides.energy, Some(false));
+                // ...and flags NOT given stay None (file values win)
+                assert!(overrides.models.is_none());
+                assert!(overrides.seed.is_none());
+                assert!(overrides.unit.is_none());
+            }
+            _ => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_malformed_lens_rejected() {
+        let err =
+            parse(&argv("sweep --lens 512")).unwrap_err().to_string();
+        assert!(err.contains("--lens") && err.contains("P+G"), "{err}");
+        assert!(parse(&argv("sweep --lens 512+512,bogus")).is_err());
+    }
+
+    #[test]
+    fn sweep_malformed_batches_and_threads_rejected() {
+        let err =
+            parse(&argv("sweep --batches 1,two")).unwrap_err().to_string();
+        assert!(err.contains("--batches"), "{err}");
+        assert!(parse(&argv("sweep --threads many")).is_err());
+        assert!(parse(&argv("sweep --seed minus-one")).is_err());
+        assert!(parse(&argv("sweep --unit parsecs")).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected_with_command_context() {
+        let err = parse(&argv("latency --model m --frobnicate 3"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag --frobnicate"), "{err}");
+        assert!(err.contains("latency"), "{err}");
+
+        let err =
+            parse(&argv("sweep --model m")).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --model"), "{err}");
+
+        assert!(parse(&argv("size --points 1x8 --bogus")).is_err());
+        assert!(parse(&argv("models --verbose")).is_err());
+    }
+
+    #[test]
+    fn suite_requires_a_name() {
+        let err = parse(&argv("suite")).unwrap_err().to_string();
+        assert!(err.contains("suite needs a name"), "{err}");
+    }
+
+    #[test]
+    fn stray_positionals_rejected_with_spec_hint() {
+        // a forgotten --spec must not silently run the default grid
+        let err =
+            parse(&argv("sweep my-sweep.json")).unwrap_err().to_string();
+        assert!(err.contains("unexpected argument `my-sweep.json`"),
+                "{err}");
+        assert!(err.contains("--spec my-sweep.json"), "{err}");
+        assert!(parse(&argv("size extra")).is_err());
+        assert!(parse(&argv("latency --model m stray")).is_err());
+        // suite legitimately takes a positional
+        assert!(parse(&argv("suite table3")).is_ok());
+    }
+
+    #[test]
+    fn value_flags_require_values_and_boolean_flags_reject_them() {
+        // a value flag followed by another flag must not silently act
+        // as "not given"
+        let err = parse(&argv("sweep --models --no-energy"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--models") && err.contains("requires a value"),
+                "{err}");
+        assert!(parse(&argv("sweep --threads")).is_err());
+        assert!(parse(&argv("trace --model m --out")).is_err());
+        // boolean flags must not swallow a following bare word
+        let err =
+            parse(&argv("sweep --json out.json")).unwrap_err().to_string();
+        assert!(err.contains("--json") && err.contains("takes no value"),
+                "{err}");
+    }
+
+    #[test]
+    fn size_malformed_points_rejected() {
+        assert!(parse(&argv("size --points 1024")).is_err());
+        assert!(parse(&argv("size --points 1xlots")).is_err());
+        assert!(parse(&argv("size --unit parsecs")).is_err());
     }
 }

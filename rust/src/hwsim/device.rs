@@ -246,6 +246,12 @@ pub fn rig_by_name(name: &str) -> Option<Rig> {
     }
 }
 
+/// Canonical CLI names of every rig `rig_by_name` accepts (one spelling
+/// per rig). Sweep-spec validation lists these in its error messages.
+pub fn all_rig_names() -> &'static [&'static str] {
+    &["a6000", "4xa6000", "thor", "orin", "a100", "h100"]
+}
+
 /// All rigs the benches sweep.
 pub fn all_rigs() -> Vec<Rig> {
     vec![Rig::single(a6000()), a6000_x4(), Rig::single(agx_thor()),
@@ -297,6 +303,14 @@ mod tests {
         assert!(rig_by_name("h100").is_some());
         assert!(rig_by_name("a100").is_some());
         assert!(rig_by_name("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn all_rig_names_resolve() {
+        for name in all_rig_names() {
+            assert!(rig_by_name(name).is_some(), "{name}");
+        }
+        assert_eq!(all_rig_names().len(), 6);
     }
 
     #[test]

@@ -27,6 +27,8 @@
 //!   (Figure 1) and HTA-style summaries.
 //! * [`zeus`] — the Zeus (`ZeusMonitor`) baseline for Table 1.
 //! * [`workload`] — random-prompt and request-trace generators.
+//! * [`sweep`] — parallel scenario matrix (`elana sweep`): grid
+//!   expansion, worker pool, comparison reports.
 //! * [`cli`] — argument parsing for the `elana` binary.
 //! * [`benchkit`] — micro-benchmark harness used by `cargo bench`.
 //! * [`testkit`] — property-testing support used by unit tests.
@@ -41,6 +43,7 @@ pub mod models;
 pub mod power;
 pub mod profiler;
 pub mod runtime;
+pub mod sweep;
 pub mod testkit;
 pub mod trace;
 pub mod util;

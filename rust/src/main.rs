@@ -17,6 +17,7 @@ use elana::hwsim;
 use elana::models;
 use elana::profiler::{self, report, ProfileSpec};
 use elana::runtime::Manifest;
+use elana::sweep;
 use elana::trace::{self, TraceRecorder};
 use elana::workload::RequestTrace;
 
@@ -62,6 +63,9 @@ fn run(cmd: Command) -> Result<()> {
             print!("{}", report::render_latency_table(&title, &[outcome]));
         }
         Command::Suite { name } => cmd_suite(&name)?,
+        Command::Sweep { spec_path, overrides, out, json } => {
+            cmd_sweep(spec_path, overrides, out, json)?;
+        }
         Command::Trace { model, device, workload, out } => {
             cmd_trace(&model, &device, &workload, &out)?;
         }
@@ -116,6 +120,32 @@ fn cmd_suite(name: &str) -> Result<()> {
     for (title, rows) in blocks {
         println!();
         print!("{}", report::render_latency_table(&title, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(spec_path: Option<String>,
+             overrides: sweep::spec::SweepOverrides, out: Option<String>,
+             json: bool) -> Result<()> {
+    // base grid: the spec file if given, the defaults otherwise; every
+    // explicitly-passed flag then overrides the base value
+    let mut spec = match spec_path {
+        Some(p) => sweep::SweepSpec::load(&p)?,
+        None => sweep::SweepSpec::default(),
+    };
+    overrides.apply(&mut spec);
+    let results = sweep::run(&spec)?;
+    let rendered = sweep::report::to_json(&results).to_string();
+    if let Some(path) = &out {
+        std::fs::write(path, &rendered)?;
+    }
+    if json {
+        println!("{rendered}");
+    } else {
+        print!("{}", sweep::report::render_markdown(&results));
+    }
+    if let Some(path) = &out {
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

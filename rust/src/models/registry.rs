@@ -208,6 +208,12 @@ pub fn all_models() -> Vec<ModelArch> {
     v
 }
 
+/// Registry keys of every model (paper + dev), in registry order. Sweep
+/// validation lists these in its error messages.
+pub fn model_names() -> Vec<&'static str> {
+    all_models().iter().map(|m| m.name).collect()
+}
+
 /// Case-insensitive lookup by registry key or display name.
 pub fn lookup(name: &str) -> Option<ModelArch> {
     let needle = name.to_ascii_lowercase();
@@ -227,6 +233,15 @@ mod tests {
         assert!(lookup("Llama-3.1-8B").is_some());
         assert!(lookup("LLAMA-3.1-8B").is_some());
         assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn model_names_all_resolve() {
+        let names = model_names();
+        assert_eq!(names.len(), all_models().len());
+        for n in names {
+            assert!(lookup(n).is_some(), "{n}");
+        }
     }
 
     #[test]

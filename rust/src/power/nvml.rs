@@ -27,14 +27,25 @@ pub struct NvmlSim {
 }
 
 impl NvmlSim {
+    /// Default sensor-noise RNG seed ("NV" in ASCII).
+    pub const DEFAULT_SEED: u64 = 0x4E56;
+
     /// N identical devices driven by one shared load handle.
     pub fn new_shared(n: usize, model: DevicePowerModel, load: LoadHandle)
                       -> NvmlSim {
+        Self::new_shared_seeded(n, model, load, Self::DEFAULT_SEED)
+    }
+
+    /// `new_shared` with an explicit sensor-noise seed — sweep cells seed
+    /// their sensors independently so every cell is deterministic no
+    /// matter which worker thread runs it.
+    pub fn new_shared_seeded(n: usize, model: DevicePowerModel,
+                             load: LoadHandle, seed: u64) -> NvmlSim {
         NvmlSim {
             gpus: (0..n)
                 .map(|_| Gpu { model, load: load.clone() })
                 .collect(),
-            rng: Mutex::new(Rng::new(0x4E56)),
+            rng: Mutex::new(Rng::new(seed)),
         }
     }
 
@@ -46,7 +57,7 @@ impl NvmlSim {
                 .into_iter()
                 .map(|(model, load)| Gpu { model, load })
                 .collect(),
-            rng: Mutex::new(Rng::new(0x4E56)),
+            rng: Mutex::new(Rng::new(Self::DEFAULT_SEED)),
         }
     }
 

@@ -1,0 +1,147 @@
+//! Grid expansion: spec axes → ordered cells with per-cell seeds.
+//!
+//! Expansion order is model-major (model, device, batch, len) — the
+//! paper's table ordering — and the cell index is the identity the rest
+//! of the subsystem keys on: per-cell seeds derive from it, the worker
+//! pool writes results by it, and reports sort by it. That makes every
+//! downstream artifact independent of worker-thread scheduling.
+
+use crate::hwsim::Workload;
+use crate::profiler::ProfileSpec;
+use crate::util::rng::Rng;
+use crate::util::units::MemUnit;
+use crate::workload::PromptGen;
+
+use super::spec::SweepSpec;
+
+/// One point of the sweep matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepCell {
+    /// Position in the expanded grid (stable across thread counts).
+    pub index: usize,
+    pub model: String,
+    pub device: String,
+    pub workload: Workload,
+    /// Deterministic per-cell seed: `Rng::mix(spec.seed, index)`.
+    pub seed: u64,
+}
+
+impl SweepCell {
+    /// The profiler spec this cell runs (`profiler::profile_simulated`'s
+    /// input), carrying the cell seed into the measurement pipeline.
+    pub fn profile_spec(&self, energy: bool, unit: MemUnit) -> ProfileSpec {
+        let mut s = ProfileSpec::new(&self.model, &self.device,
+                                     self.workload.clone());
+        s.energy = energy;
+        s.mem_unit = unit;
+        s.seed = self.seed;
+        s
+    }
+
+    /// This cell's deterministic workload generator — what an
+    /// engine-backed cell draws its random prompts from (§2.3). The
+    /// hwsim path is analytic and never calls it, but the stream is
+    /// part of the cell's identity: it depends only on the cell seed,
+    /// never on worker scheduling.
+    pub fn prompt_gen(&self, vocab_size: usize) -> PromptGen {
+        PromptGen::for_cell(vocab_size, self.seed, self.index as u64)
+    }
+}
+
+/// Expand a spec into its full cell list.
+pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
+    let mut cells = Vec::with_capacity(spec.n_cells());
+    for m in &spec.models {
+        for d in &spec.devices {
+            for &b in &spec.batches {
+                for &(p, g) in &spec.lens {
+                    let index = cells.len();
+                    cells.push(SweepCell {
+                        index,
+                        model: m.clone(),
+                        device: d.clone(),
+                        workload: Workload::new(b, p, g),
+                        seed: Rng::mix(spec.seed, index as u64),
+                    });
+                }
+            }
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SweepSpec {
+        let mut s = SweepSpec::default();
+        s.models = vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()];
+        s.devices = vec!["a6000".into(), "thor".into()];
+        s.batches = vec![1, 8];
+        s.lens = vec![(256, 256)];
+        s
+    }
+
+    #[test]
+    fn expansion_is_model_major_and_indexed() {
+        let cells = expand(&small_spec());
+        assert_eq!(cells.len(), 8);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // model-major: first half llama, second half qwen
+        assert!(cells[..4].iter().all(|c| c.model == "llama-3.1-8b"));
+        assert!(cells[4..].iter().all(|c| c.model == "qwen-2.5-7b"));
+        // within a model: device-major, then batch
+        assert_eq!(cells[0].device, "a6000");
+        assert_eq!(cells[0].workload.batch, 1);
+        assert_eq!(cells[1].workload.batch, 8);
+        assert_eq!(cells[2].device, "thor");
+    }
+
+    #[test]
+    fn cell_seeds_deterministic_and_unique() {
+        let a = expand(&small_spec());
+        let b = expand(&small_spec());
+        assert_eq!(a, b, "expansion must be deterministic");
+        let mut seeds: Vec<u64> = a.iter().map(|c| c.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 8, "cell seeds must not collide");
+    }
+
+    #[test]
+    fn base_seed_shifts_every_cell_seed() {
+        let mut s2 = small_spec();
+        s2.seed = 1;
+        let a = expand(&small_spec());
+        let b = expand(&s2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_ne!(x.seed, y.seed, "cell {}", x.index);
+        }
+    }
+
+    #[test]
+    fn cell_prompt_streams_deterministic_and_distinct() {
+        let cells = expand(&small_spec());
+        let a: Vec<i32> = cells[2].prompt_gen(512).prompt(32);
+        let b: Vec<i32> = cells[2].prompt_gen(512).prompt(32);
+        assert_eq!(a, b, "a cell's workload stream must replay exactly");
+        let c: Vec<i32> = cells[3].prompt_gen(512).prompt(32);
+        assert_ne!(a, c, "different cells draw different workloads");
+    }
+
+    #[test]
+    fn profile_spec_carries_cell_identity() {
+        let cells = expand(&small_spec());
+        let ps = cells[3].profile_spec(false, MemUnit::Binary);
+        assert_eq!(ps.model, cells[3].model);
+        assert_eq!(ps.device, cells[3].device);
+        assert_eq!(ps.workload, cells[3].workload);
+        assert_eq!(ps.seed, cells[3].seed);
+        assert!(!ps.energy);
+        assert_eq!(ps.mem_unit, MemUnit::Binary);
+        assert!(ps.is_simulated());
+    }
+}

@@ -1,0 +1,34 @@
+//! Parallel scenario sweeps: the full profile matrix behind
+//! `elana sweep`.
+//!
+//! ELANA's value is profiling TTFT/TPOT/TTLT and energy across a
+//! *spectrum* of models, devices and workload shapes (Tables 2–4); this
+//! subsystem replaces the one-row-at-a-time workflow with a grid
+//! expander + worker pool that profiles every
+//! (model, device, batch, P+G) cell concurrently:
+//!
+//! * [`spec`] — the sweep grid (CLI flags or JSON file) and its
+//!   validation against the model registry / device table.
+//! * [`grid`] — expansion into indexed cells with per-cell seeds
+//!   (`Rng::mix(seed, index)`), the determinism anchor.
+//! * [`pool`] — hand-rolled std-only worker pool; results land in
+//!   index-addressed slots, so output order never depends on scheduling.
+//! * [`runner`] — per-cell `profiler::profile_simulated` execution and
+//!   the aggregated [`SweepResults`].
+//! * [`report`] — markdown comparison tables (grouped by device, with
+//!   best/worst highlighting and J/Token deltas) + deterministic JSON.
+//!
+//! Results are byte-identical at any worker-thread count: cells share no
+//! mutable state, seeds derive from grid position, and both reports omit
+//! execution details.
+
+pub mod grid;
+pub mod pool;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use grid::SweepCell;
+pub use report::{render_markdown, to_json};
+pub use runner::{run, run_cell, CellResult, SweepResults};
+pub use spec::{SweepOverrides, SweepSpec};

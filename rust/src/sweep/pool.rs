@@ -1,0 +1,117 @@
+//! Hand-rolled worker-thread pool (std-only; rayon is unavailable
+//! offline).
+//!
+//! A work-claiming pool over an atomic cursor: N scoped workers pull job
+//! indices until the range is drained and write each result into its
+//! index-addressed slot. Output order is therefore the *job* order, not
+//! the completion order — with per-job deterministic inputs (the sweep's
+//! per-cell seeds) the combined result is byte-identical at any thread
+//! count. A panicking job propagates out of `run_indexed` once the scope
+//! joins, so failures are loud rather than silently dropped cells.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every `i in 0..n_jobs` on up to `threads` workers
+/// (0 = one per available core) and return the results in job order.
+pub fn run_indexed<T, F>(threads: usize, n_jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n_jobs == 0 {
+        return Vec::new();
+    }
+    let workers = effective_threads(threads).min(n_jobs);
+    let slots: Vec<Mutex<Option<T>>> =
+        (0..n_jobs).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_jobs {
+                    break;
+                }
+                let out = f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap()
+                .expect("worker completed every claimed job")
+        })
+        .collect()
+}
+
+/// Resolve a requested thread count: 0 means one worker per available
+/// core (at least 1).
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_arrive_in_job_order() {
+        let out = run_indexed(4, 100, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let work = |i: usize| {
+            // order-sensitive-looking computation that is actually pure
+            let mut acc = 0u64;
+            for k in 0..=(i as u64) {
+                acc = acc.wrapping_mul(31).wrapping_add(k);
+            }
+            acc
+        };
+        let a = run_indexed(1, 64, work);
+        let b = run_indexed(7, 64, work);
+        let c = run_indexed(64, 64, work);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let out = run_indexed(8, 50, |i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 50);
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn more_threads_than_jobs_and_empty_input() {
+        assert_eq!(run_indexed(16, 2, |i| i), vec![0, 1]);
+        assert_eq!(run_indexed(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(0, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert_eq!(effective_threads(3), 3);
+        assert!(effective_threads(0) >= 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Sweep reports: markdown comparison tables grouped by device, with
+//! best/worst-cell highlighting and J/Token deltas, plus the
+//! machine-readable JSON form.
+//!
+//! Both renderings are pure functions of the results and deliberately
+//! omit execution details (thread count, wall time), so outputs are
+//! byte-identical however the sweep was parallelized.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+use crate::util::units::MemUnit;
+
+use super::runner::{CellResult, SweepResults};
+
+fn unit_name(u: MemUnit) -> &'static str {
+    match u {
+        MemUnit::Si => "si",
+        MemUnit::Binary => "gib",
+    }
+}
+
+/// Markdown comparison report: one table per device (grid order within),
+/// the overall best/worst J/Token cells bolded/italicized, and per-device
+/// J/Token deltas against the device's best cell.
+pub fn render_markdown(r: &SweepResults) -> String {
+    let s = &r.spec;
+    let best = r.best_j_token();
+    let worst = r.worst_j_token();
+    let mut out = String::new();
+    let _ = writeln!(out, "# elana sweep — {}", s.name);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "{} cells = {} models x {} devices x {} batch sizes x {} \
+         workloads (seed {})",
+        r.cells.len(), s.models.len(), s.devices.len(), s.batches.len(),
+        s.lens.len(), s.seed
+    );
+
+    for dev in &s.devices {
+        let group: Vec<&CellResult> =
+            r.cells.iter().filter(|c| &c.cell.device == dev).collect();
+        if group.is_empty() {
+            continue;
+        }
+        let _ = writeln!(out, "\n## {}", group[0].outcome.device);
+        let _ = writeln!(
+            out,
+            "| Model | Workload | TTFT ms | J/Prompt | TPOT ms | J/Token \
+             | dJ/Token | TTLT ms | J/Request |"
+        );
+        let _ = writeln!(
+            out,
+            "|---|---|---:|---:|---:|---:|---:|---:|---:|"
+        );
+        let group_best = group
+            .iter()
+            .map(|c| c.outcome.j_token)
+            .fold(f64::INFINITY, f64::min);
+        for c in &group {
+            let o = &c.outcome;
+            let model = if best == Some(c.cell.index) {
+                format!("**{}**", o.model)
+            } else if worst == Some(c.cell.index) {
+                format!("_{}_", o.model)
+            } else {
+                o.model.clone()
+            };
+            let delta = if o.j_token <= group_best {
+                "best".to_string()
+            } else {
+                format!("+{:.1}%", (o.j_token / group_best - 1.0) * 100.0)
+            };
+            let _ = writeln!(
+                out,
+                "| {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {} | {:.2} \
+                 | {:.2} |",
+                model, c.cell.workload.label(), o.ttft_ms, o.j_prompt,
+                o.tpot_ms, o.j_token, delta, o.ttlt_ms, o.j_request
+            );
+        }
+    }
+
+    if let (Some(b), Some(w)) = (best, worst) {
+        let b = &r.cells[b];
+        let w = &r.cells[w];
+        let _ = writeln!(out);
+        let _ = writeln!(
+            out,
+            "**Best J/Token:** {} on {} ({}) — {:.3} J",
+            b.outcome.model, b.outcome.device, b.cell.workload.label(),
+            b.outcome.j_token
+        );
+        let _ = writeln!(
+            out,
+            "**Worst J/Token:** {} on {} ({}) — {:.3} J",
+            w.outcome.model, w.outcome.device, w.cell.workload.label(),
+            w.outcome.j_token
+        );
+        if b.outcome.j_token > 0.0 {
+            let _ = writeln!(
+                out,
+                "**Spread:** worst/best = {:.1}x",
+                w.outcome.j_token / b.outcome.j_token
+            );
+        }
+    }
+    out
+}
+
+/// Machine-readable JSON (via `util::json`, whose BTreeMap objects make
+/// serialization deterministic). Seeds are emitted as strings so 64-bit
+/// values survive the f64 number model intact.
+pub fn to_json(r: &SweepResults) -> Json {
+    let s = &r.spec;
+    let cells: Vec<Json> = r
+        .cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("index", Json::num(c.cell.index as f64)),
+                ("seed", Json::str(c.cell.seed.to_string())),
+                ("outcome", c.outcome.to_json()),
+            ])
+        })
+        .collect();
+    let opt_idx = |v: Option<usize>| match v {
+        Some(i) => Json::num(i as f64),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("sweep", Json::str(s.name.clone())),
+        ("seed", Json::str(s.seed.to_string())),
+        ("energy", Json::Bool(s.energy)),
+        ("unit", Json::str(unit_name(s.unit))),
+        ("models",
+         Json::Arr(s.models.iter().map(|m| Json::str(m.clone())).collect())),
+        ("devices",
+         Json::Arr(s.devices.iter().map(|d| Json::str(d.clone())).collect())),
+        ("batches",
+         Json::Arr(s.batches.iter().map(|&b| Json::num(b as f64)).collect())),
+        ("lens",
+         Json::Arr(s.lens.iter()
+                   .map(|&(p, g)| Json::str(format!("{p}+{g}")))
+                   .collect())),
+        ("n_cells", Json::num(r.cells.len() as f64)),
+        ("best_j_token_index", opt_idx(r.best_j_token())),
+        ("worst_j_token_index", opt_idx(r.worst_j_token())),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{runner, SweepSpec};
+
+    fn results() -> SweepResults {
+        let mut s = SweepSpec::default();
+        s.models = vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()];
+        s.devices = vec!["a6000".into(), "thor".into()];
+        s.batches = vec![1];
+        s.lens = vec![(64, 32)];
+        runner::run(&s).unwrap()
+    }
+
+    #[test]
+    fn markdown_groups_by_device_and_highlights() {
+        let text = render_markdown(&results());
+        assert!(text.contains("## A6000"), "{text}");
+        assert!(text.contains("## AGX-Thor"), "{text}");
+        assert!(text.contains("| best |"), "{text}");
+        assert!(text.contains("**Best J/Token:**"), "{text}");
+        assert!(text.contains("**Worst J/Token:**"), "{text}");
+        // overall best cell's model is bolded somewhere in a table row
+        assert!(text.contains("| **") && text.contains("| _"), "{text}");
+        // every cell rendered: 4 rows + 2 headers + 2 separators
+        assert_eq!(text.matches("bsize=1, L=64+32").count(), 6, "{text}");
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let r = results();
+        let j = to_json(&r).to_string();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("n_cells").unwrap().as_usize(), Some(4));
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.get("index").unwrap().as_usize(), Some(i));
+            let o = c.get("outcome").unwrap();
+            assert!(o.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(o.get("simulated").unwrap().as_bool(), Some(true));
+        }
+        assert!(v.get("best_j_token_index").unwrap().as_usize().is_some());
+        // execution details must not leak into the artifact
+        assert!(v.get("threads").is_none());
+    }
+
+    #[test]
+    fn seeds_survive_as_strings() {
+        let r = results();
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        let s0 = cells[0].get("seed").unwrap().as_str().unwrap();
+        assert_eq!(s0, r.cells[0].cell.seed.to_string());
+    }
+}

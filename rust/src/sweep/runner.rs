@@ -1,0 +1,140 @@
+//! Sweep execution: expand the grid, farm cells out to the worker pool,
+//! and reuse `profiler::profile_simulated` per cell.
+//!
+//! Each cell builds its own `ProfileSpec` (with its derived seed) and its
+//! own sensor/playback state, so cells share nothing mutable: the matrix
+//! is embarrassingly parallel and its results depend only on the spec,
+//! never on the thread count or scheduling order.
+
+use anyhow::{Context, Result};
+
+use crate::profiler::{self, ProfileOutcome};
+use crate::util::units::MemUnit;
+
+use super::grid::{self, SweepCell};
+use super::pool;
+use super::spec::SweepSpec;
+
+/// One finished cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub outcome: ProfileOutcome,
+}
+
+/// The whole profiled matrix, cells in grid order.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub spec: SweepSpec,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepResults {
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Grid index of the most energy-efficient cell (lowest J/Token).
+    pub fn best_j_token(&self) -> Option<usize> {
+        self.cells
+            .iter()
+            .min_by(|a, b| {
+                a.outcome.j_token.partial_cmp(&b.outcome.j_token).unwrap()
+            })
+            .map(|c| c.cell.index)
+    }
+
+    /// Grid index of the least energy-efficient cell (highest J/Token).
+    pub fn worst_j_token(&self) -> Option<usize> {
+        self.cells
+            .iter()
+            .max_by(|a, b| {
+                a.outcome.j_token.partial_cmp(&b.outcome.j_token).unwrap()
+            })
+            .map(|c| c.cell.index)
+    }
+}
+
+/// Profile one cell — the sweep's unit of work.
+pub fn run_cell(cell: &SweepCell, energy: bool, unit: MemUnit)
+                -> Result<ProfileOutcome> {
+    profiler::profile_simulated(&cell.profile_spec(energy, unit))
+        .with_context(|| {
+            format!("sweep cell #{} ({} on {}, {})", cell.index, cell.model,
+                    cell.device, cell.workload.label())
+        })
+}
+
+/// Run the full sweep matrix on the worker pool.
+pub fn run(spec: &SweepSpec) -> Result<SweepResults> {
+    spec.validate()?;
+    let cells = grid::expand(spec);
+    let outcomes = pool::run_indexed(spec.threads, cells.len(), |i| {
+        run_cell(&cells[i], spec.energy, spec.unit)
+    });
+    let mut done = Vec::with_capacity(cells.len());
+    for (cell, outcome) in cells.into_iter().zip(outcomes) {
+        done.push(CellResult { cell, outcome: outcome? });
+    }
+    Ok(SweepResults { spec: spec.clone(), cells: done })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        let mut s = SweepSpec::default();
+        s.models = vec!["llama-3.1-8b".into()];
+        s.devices = vec!["a6000".into()];
+        s.batches = vec![1];
+        s.lens = vec![(64, 32)];
+        s
+    }
+
+    #[test]
+    fn pool_cell_matches_direct_profile_bitwise() {
+        let r = run(&tiny_spec()).unwrap();
+        assert_eq!(r.len(), 1);
+        let c = &r.cells[0];
+        let direct = profiler::profile_simulated(
+            &c.cell.profile_spec(true, MemUnit::Si)).unwrap();
+        assert_eq!(c.outcome.row(), direct.row(),
+                   "pool execution must not perturb the measurement");
+    }
+
+    #[test]
+    fn invalid_spec_fails_before_running() {
+        let mut s = tiny_spec();
+        s.devices = vec!["cpu".into()]; // the real engine is not sweepable
+        assert!(run(&s).is_err());
+    }
+
+    #[test]
+    fn best_and_worst_cells_identified() {
+        let mut s = tiny_spec();
+        s.devices = vec!["a6000".into(), "thor".into()];
+        let r = run(&s).unwrap();
+        assert_eq!(r.len(), 2);
+        let best = r.best_j_token().unwrap();
+        let worst = r.worst_j_token().unwrap();
+        assert_ne!(best, worst);
+        // the paper's cloud/edge trade-off: Thor tokens cost less energy
+        let thor = r.cells.iter().find(|c| c.cell.device == "thor").unwrap();
+        assert_eq!(best, thor.cell.index);
+    }
+
+    #[test]
+    fn outcomes_are_sane_rows() {
+        let r = run(&tiny_spec()).unwrap();
+        let o = &r.cells[0].outcome;
+        assert!(o.simulated);
+        assert!(o.ttft_ms > 0.0 && o.tpot_ms > 0.0);
+        assert!(o.ttlt_ms > o.ttft_ms);
+        assert!(o.j_request > o.j_prompt);
+    }
+}

@@ -1,0 +1,405 @@
+//! Sweep specification: the grid axes `elana sweep` expands.
+//!
+//! A spec comes from CLI flags (`--models`, `--devices`, `--batches`,
+//! `--lens`) or from a JSON file:
+//!
+//! ```json
+//! {
+//!   "sweep": "edge-vs-cloud",
+//!   "models": ["llama-3.1-8b", "qwen-2.5-7b"],
+//!   "devices": ["a6000", "thor"],
+//!   "batches": [1, 8],
+//!   "lens": ["256+256", "512+512"],
+//!   "energy": true,
+//!   "unit": "si",
+//!   "seed": 0,
+//!   "threads": 0
+//! }
+//! ```
+//!
+//! Every axis is validated against the model registry / device table
+//! before any worker starts, so a typo fails fast with the known names.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::hwsim::device;
+use crate::models;
+use crate::util::json::Json;
+use crate::util::units::{parse_workload_len, MemUnit};
+
+/// Default grid: the paper's two headline 8B-class models on one cloud
+/// and one edge device, two batch sizes, two workload shapes — 16 cells.
+pub const DEFAULT_MODELS: [&str; 2] = ["llama-3.1-8b", "qwen-2.5-7b"];
+pub const DEFAULT_DEVICES: [&str; 2] = ["a6000", "thor"];
+pub const DEFAULT_BATCHES: [usize; 2] = [1, 8];
+pub const DEFAULT_LENS: [(usize, usize); 2] = [(256, 256), (512, 512)];
+
+/// The sweep grid: models × devices × batches × lens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Registry model names.
+    pub models: Vec<String>,
+    /// hwsim rig names (`device::all_rig_names()`).
+    pub devices: Vec<String>,
+    pub batches: Vec<usize>,
+    /// (prompt_len, gen_len) pairs — the paper's `L=P+G` notation.
+    pub lens: Vec<(usize, usize)>,
+    /// Measure energy through the sensor-playback pipeline (§2.4).
+    pub energy: bool,
+    pub unit: MemUnit,
+    /// Base seed; each cell derives its own via `Rng::mix(seed, index)`.
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core. Never affects results,
+    /// only wall-clock.
+    pub threads: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> SweepSpec {
+        SweepSpec {
+            name: "sweep".to_string(),
+            models: DEFAULT_MODELS.iter().map(|s| s.to_string()).collect(),
+            devices: DEFAULT_DEVICES.iter().map(|s| s.to_string()).collect(),
+            batches: DEFAULT_BATCHES.to_vec(),
+            lens: DEFAULT_LENS.to_vec(),
+            energy: true,
+            unit: MemUnit::Si,
+            seed: 0,
+            threads: 0,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// Number of cells the grid expands to.
+    pub fn n_cells(&self) -> usize {
+        self.models.len() * self.devices.len() * self.batches.len()
+            * self.lens.len()
+    }
+
+    /// Validate every axis against the registries before spawning
+    /// workers, listing the known names on a miss.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.models.is_empty(), "sweep needs at least one model");
+        ensure!(!self.devices.is_empty(), "sweep needs at least one device");
+        ensure!(!self.batches.is_empty(),
+                "sweep needs at least one batch size");
+        ensure!(!self.lens.is_empty(),
+                "sweep needs at least one P+G workload length");
+        for m in &self.models {
+            if models::lookup(m).is_none() {
+                bail!("unknown model `{m}` (known: {})",
+                      models::registry::model_names().join(", "));
+            }
+        }
+        for d in &self.devices {
+            if device::rig_by_name(d).is_none() {
+                bail!("unknown device `{d}` (known: {})",
+                      device::all_rig_names().join(", "));
+            }
+        }
+        for &b in &self.batches {
+            ensure!(b >= 1, "batch sizes must be >= 1");
+        }
+        for &(p, g) in &self.lens {
+            ensure!(p >= 1 && g >= 1,
+                    "workload lengths must be >= 1 (got {p}+{g})");
+        }
+        Ok(())
+    }
+
+    /// Parse the JSON schema documented in the module header. Missing
+    /// keys fall back to the defaults; present keys must have the right
+    /// type (a typo'd or wrong-typed key errors instead of silently
+    /// running a different grid).
+    pub fn parse(text: &str) -> Result<SweepSpec> {
+        const KNOWN_KEYS: [&str; 9] =
+            ["sweep", "models", "devices", "batches", "lens", "energy",
+             "unit", "seed", "threads"];
+        let root = Json::parse(text).context("parsing sweep spec JSON")?;
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
+        for key in obj.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                bail!("unknown key `{key}` in sweep spec (known: {})",
+                      KNOWN_KEYS.join(", "));
+            }
+        }
+        let mut spec = SweepSpec::default();
+        if let Some(v) = root.get("sweep") {
+            spec.name = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`sweep` must be a string"))?
+                .to_string();
+        }
+        let strings = |key: &str| -> Result<Option<Vec<String>>> {
+            match root.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("`{key}` must be an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow!("`{key}` entries must be strings")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .map(Some),
+            }
+        };
+        if let Some(v) = strings("models")? {
+            spec.models = v;
+        }
+        if let Some(v) = strings("devices")? {
+            spec.devices = v;
+        }
+        if let Some(v) = root.get("batches") {
+            spec.batches = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("`batches` must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize().ok_or_else(|| {
+                        anyhow!("`batches` entries must be integers")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = strings("lens")? {
+            spec.lens = v
+                .iter()
+                .map(|l| {
+                    parse_workload_len(l).ok_or_else(|| {
+                        anyhow!("bad lens entry `{l}` (want \"P+G\")")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = root.get("energy") {
+            spec.energy = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("`energy` must be a boolean"))?;
+        }
+        if let Some(v) = root.get("unit") {
+            let u = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`unit` must be a string"))?;
+            spec.unit = MemUnit::parse(u)
+                .ok_or_else(|| anyhow!("bad unit `{u}` (si|gib)"))?;
+        }
+        // seeds may be numbers or strings — report::to_json emits strings
+        // so 64-bit seeds survive the f64 number model
+        if let Some(v) = root.get("seed") {
+            spec.seed = match v {
+                Json::Str(s) => s.parse().map_err(|_| {
+                    anyhow!("bad `seed` string `{s}` (want an integer)")
+                })?,
+                _ => v.as_u64().ok_or_else(|| {
+                    anyhow!("`seed` must be a non-negative integer \
+                             (use a string for values above 2^53)")
+                })?,
+            };
+        }
+        if let Some(v) = root.get("threads") {
+            spec.threads = v.as_usize().ok_or_else(|| {
+                anyhow!("`threads` must be a non-negative integer")
+            })?;
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading sweep spec {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// Explicitly-given CLI flags, layered over a base spec (the defaults,
+/// or a `--spec` file) — so `elana sweep --spec grid.json --no-energy`
+/// honors both. `None` means "flag not given; keep the base value".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SweepOverrides {
+    pub models: Option<Vec<String>>,
+    pub devices: Option<Vec<String>>,
+    pub batches: Option<Vec<usize>>,
+    pub lens: Option<Vec<(usize, usize)>>,
+    pub energy: Option<bool>,
+    pub unit: Option<MemUnit>,
+    pub seed: Option<u64>,
+    pub threads: Option<usize>,
+}
+
+impl SweepOverrides {
+    /// Apply every explicitly-given flag onto `spec`.
+    pub fn apply(self, spec: &mut SweepSpec) {
+        if let Some(v) = self.models {
+            spec.models = v;
+        }
+        if let Some(v) = self.devices {
+            spec.devices = v;
+        }
+        if let Some(v) = self.batches {
+            spec.batches = v;
+        }
+        if let Some(v) = self.lens {
+            spec.lens = v;
+        }
+        if let Some(v) = self.energy {
+            spec.energy = v;
+        }
+        if let Some(v) = self.unit {
+            spec.unit = v;
+        }
+        if let Some(v) = self.seed {
+            spec.seed = v;
+        }
+        if let Some(v) = self.threads {
+            spec.threads = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_valid_16_cell_grid() {
+        let s = SweepSpec::default();
+        s.validate().unwrap();
+        assert_eq!(s.n_cells(), 16);
+        assert!(s.energy);
+        assert_eq!(s.threads, 0);
+    }
+
+    #[test]
+    fn parse_full_schema() {
+        let s = SweepSpec::parse(
+            r#"{"sweep": "edge-vs-cloud",
+                "models": ["llama-3.2-1b"],
+                "devices": ["orin", "thor", "a6000"],
+                "batches": [1, 4],
+                "lens": ["128+128", "256+256"],
+                "energy": false, "unit": "gib", "seed": 9, "threads": 3}"#)
+            .unwrap();
+        assert_eq!(s.name, "edge-vs-cloud");
+        assert_eq!(s.models, vec!["llama-3.2-1b"]);
+        assert_eq!(s.devices.len(), 3);
+        assert_eq!(s.batches, vec![1, 4]);
+        assert_eq!(s.lens, vec![(128, 128), (256, 256)]);
+        assert!(!s.energy);
+        assert_eq!(s.unit, MemUnit::Binary);
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.threads, 3);
+        assert_eq!(s.n_cells(), 12);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_missing_keys_fall_back_to_defaults() {
+        let s = SweepSpec::parse(r#"{"models": ["qwen-2.5-7b"]}"#).unwrap();
+        assert_eq!(s.models, vec!["qwen-2.5-7b"]);
+        assert_eq!(s.devices.len(), DEFAULT_DEVICES.len());
+        assert_eq!(s.lens.len(), DEFAULT_LENS.len());
+        assert!(s.energy);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_axes() {
+        assert!(SweepSpec::parse(r#"{"lens": ["512"]}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"lens": "512+512"}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"batches": ["one"]}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"unit": "parsecs"}"#).is_err());
+        assert!(SweepSpec::parse("not json").is_err());
+        assert!(SweepSpec::parse(r#"[1, 2]"#).is_err());
+    }
+
+    #[test]
+    fn parse_is_strict_about_key_names_and_types() {
+        // a typo'd key must not silently run the default grid
+        let err = SweepSpec::parse(r#"{"model": ["llama-3.1-8b"]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key `model`"), "{err}");
+        // wrong-typed knobs error instead of falling back to defaults
+        assert!(SweepSpec::parse(r#"{"energy": "yes"}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"threads": "4"}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"seed": true}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"seed": -3}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"sweep": 7}"#).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_string_seeds_for_full_u64_range() {
+        // report::to_json emits seeds as strings; they must round-trip
+        let s = SweepSpec::parse(
+            r#"{"seed": "18446744073709551615"}"#).unwrap();
+        assert_eq!(s.seed, u64::MAX);
+        let s = SweepSpec::parse(r#"{"seed": 42}"#).unwrap();
+        assert_eq!(s.seed, 42);
+        assert!(SweepSpec::parse(r#"{"seed": "forty-two"}"#).is_err());
+    }
+
+    #[test]
+    fn overrides_layer_over_a_base_spec() {
+        let base = SweepSpec::parse(
+            r#"{"sweep": "file", "models": ["llama-3.2-1b"],
+                "energy": true, "threads": 8, "seed": 5}"#)
+            .unwrap();
+        let ov = SweepOverrides {
+            energy: Some(false),
+            threads: Some(2),
+            batches: Some(vec![4]),
+            ..SweepOverrides::default()
+        };
+        let mut spec = base.clone();
+        ov.apply(&mut spec);
+        // overridden knobs take the CLI values...
+        assert!(!spec.energy);
+        assert_eq!(spec.threads, 2);
+        assert_eq!(spec.batches, vec![4]);
+        // ...everything else keeps the file's values
+        assert_eq!(spec.name, "file");
+        assert_eq!(spec.models, base.models);
+        assert_eq!(spec.seed, 5);
+        // empty overrides are the identity
+        let mut same = base.clone();
+        SweepOverrides::default().apply(&mut same);
+        assert_eq!(same, base);
+    }
+
+    #[test]
+    fn validate_rejects_unknown_axes_with_listing() {
+        let mut s = SweepSpec::default();
+        s.models = vec!["gpt-17".to_string()];
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("gpt-17") && err.contains("llama-3.1-8b"),
+                "{err}");
+
+        let mut s = SweepSpec::default();
+        s.devices = vec!["tpu-v9".to_string()];
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("tpu-v9") && err.contains("4xa6000"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_axes() {
+        let mut s = SweepSpec::default();
+        s.batches = vec![0];
+        assert!(s.validate().is_err());
+
+        let mut s = SweepSpec::default();
+        s.lens = vec![(0, 16)];
+        assert!(s.validate().is_err());
+
+        let mut s = SweepSpec::default();
+        s.models.clear();
+        assert!(s.validate().is_err());
+    }
+}

@@ -5,7 +5,7 @@
 //! `Clock` abstracts time for the power sampler so tests can inject a
 //! fake clock and run deterministically.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Simple monotonic stopwatch.
@@ -52,12 +52,11 @@ pub trait Clock: Send + Sync {
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SystemClock;
 
-static EPOCH: once_cell::sync::Lazy<Instant> =
-    once_cell::sync::Lazy::new(Instant::now);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
 
 impl Clock for SystemClock {
     fn now(&self) -> f64 {
-        EPOCH.elapsed().as_secs_f64()
+        EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
     }
 
     fn sleep(&self, d: Duration) {

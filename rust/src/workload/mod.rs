@@ -22,6 +22,16 @@ impl PromptGen {
         PromptGen { vocab_size, rng: Rng::new(seed) }
     }
 
+    /// An independent deterministic stream per `(base_seed, cell_index)`
+    /// — the workload hook for engine-backed sweep cells
+    /// (`sweep::SweepCell::prompt_gen`), whose prompts must replay
+    /// identically no matter which worker thread runs the cell. The
+    /// hwsim-backed `elana sweep` path is analytic and draws no prompts.
+    pub fn for_cell(vocab_size: usize, base_seed: u64, cell_index: u64)
+                    -> PromptGen {
+        PromptGen::new(vocab_size, Rng::mix(base_seed, cell_index))
+    }
+
     /// One random prompt of `len` tokens.
     pub fn prompt(&mut self, len: usize) -> Vec<i32> {
         (0..len).map(|_| self.rng.token(self.vocab_size)).collect()
@@ -114,6 +124,15 @@ mod tests {
         let pb = b.prompt(64);
         assert_eq!(pa, pb);
         assert!(pa.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn for_cell_deterministic_per_cell_and_distinct_across_cells() {
+        let mut a = PromptGen::for_cell(512, 9, 3);
+        let mut b = PromptGen::for_cell(512, 9, 3);
+        assert_eq!(a.prompt(32), b.prompt(32));
+        let mut c = PromptGen::for_cell(512, 9, 4);
+        assert_ne!(a.prompt(32), c.prompt(32));
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Golden regression tests pinning the paper-table numerics.
+//!
+//! Table 2 (model/cache size) is pure integer math, pinned *exactly*.
+//! The hwsim rows (Tables 3–4 anchors) are analytic f64 math, pinned to
+//! an independently computed reference at 1e-6 relative tolerance —
+//! loose enough for last-ulp libm differences, tight enough that any
+//! perf refactor that changes the cost model, the device calibration, or
+//! the summation order trips these tests instead of silently shifting
+//! paper numbers.
+
+use elana::hwsim::device::{a6000, agx_thor, orin_nano, Rig};
+use elana::hwsim::{self, Workload};
+use elana::models::registry::{llama31_8b, llama32_1b, nemotron_h_8b,
+                              qwen25_15b, qwen25_7b};
+use elana::models::{self, cache};
+use elana::profiler::ProfileSpec;
+use elana::util::units::MemUnit;
+
+const TOL: f64 = 1e-6;
+
+fn assert_close(got: f64, want: f64, what: &str) {
+    let rel = ((got - want) / want).abs();
+    assert!(rel < TOL, "{what}: got {got:.9}, golden {want:.9} \
+                        (rel err {rel:.3e})");
+}
+
+// ---------------- Table 2: exact integer pins ----------------
+
+#[test]
+fn golden_table2_param_counts() {
+    assert_eq!(models::param_count(&llama31_8b()), 8_030_261_248);
+    assert_eq!(models::param_count(&qwen25_7b()), 7_615_616_512);
+    assert_eq!(models::param_count(&nemotron_h_8b()), 8_100_407_296);
+    assert_eq!(models::param_count(&llama32_1b()), 1_235_814_400);
+    assert_eq!(models::param_count(&qwen25_15b()), 1_543_714_304);
+}
+
+#[test]
+fn golden_table2_model_bytes() {
+    assert_eq!(models::size::model_bytes(&llama31_8b()), 16_060_522_624);
+    assert_eq!(models::size::model_bytes(&qwen25_7b()), 15_231_233_152);
+    assert_eq!(models::size::model_bytes(&nemotron_h_8b()),
+               16_200_814_720);
+    assert_eq!(models::size::model_bytes(&llama32_1b()), 2_471_628_864);
+    assert_eq!(models::size::model_bytes(&qwen25_15b()), 3_087_428_736);
+}
+
+#[test]
+fn golden_table2_param_breakdown_llama() {
+    let b = models::param_breakdown(&llama31_8b());
+    assert_eq!(b.embedding, 525_336_576);
+    assert_eq!(b.attention, 1_342_177_280);
+    assert_eq!(b.mlp, 5_637_144_576);
+    assert_eq!(b.norms, 266_240);
+    assert_eq!(b.lm_head, 525_336_576);
+    assert_eq!(b.buffers, 64);
+}
+
+#[test]
+fn golden_table2_param_breakdown_nemotron() {
+    let b = models::param_breakdown(&nemotron_h_8b());
+    assert_eq!(b.embedding, 536_870_912);
+    assert_eq!(b.attention, 167_772_160);
+    assert_eq!(b.ssm, 2_630_817_792);
+    assert_eq!(b.mlp, 4_227_858_432);
+    assert_eq!(b.norms, 217_088);
+    assert_eq!(b.lm_head, 536_870_912);
+}
+
+#[test]
+fn golden_table2_kv_bytes_per_token() {
+    assert_eq!(cache::kv_bytes_per_token(&llama31_8b()), 131_072);
+    assert_eq!(cache::kv_bytes_per_token(&qwen25_7b()), 57_344);
+    assert_eq!(cache::kv_bytes_per_token(&nemotron_h_8b()), 16_384);
+    assert_eq!(cache::kv_bytes_per_token(&llama32_1b()), 32_768);
+    assert_eq!(cache::kv_bytes_per_token(&qwen25_15b()), 28_672);
+}
+
+#[test]
+fn golden_table2_cache_cells() {
+    let pts = [(1usize, 1024usize), (128, 1024), (128, 2048)];
+    let golden: [(&str, [u64; 3]); 5] = [
+        ("llama-3.1-8b",
+         [134_217_728, 17_179_869_184, 34_359_738_368]),
+        ("qwen-2.5-7b", [58_720_256, 7_516_192_768, 15_032_385_536]),
+        ("nemotron-h-8b",
+         [68_583_424, 8_778_678_272, 10_926_161_920]),
+        ("llama-3.2-1b", [33_554_432, 4_294_967_296, 8_589_934_592]),
+        ("qwen2.5-1.5b", [29_360_128, 3_758_096_384, 7_516_192_768]),
+    ];
+    for (name, cells) in golden {
+        let arch = models::lookup(name).unwrap();
+        for (&(b, l), &want) in pts.iter().zip(cells.iter()) {
+            assert_eq!(models::cache_bytes(&arch, b, l), want,
+                       "{name} cache at ({b}, {l})");
+        }
+    }
+}
+
+#[test]
+fn golden_table2_formatted_cells() {
+    // the exact strings the paper prints
+    assert_eq!(MemUnit::Si.format(models::size::model_bytes(&llama31_8b())),
+               "16.06 GB");
+    assert_eq!(MemUnit::Si.format(models::size::model_bytes(&qwen25_7b())),
+               "15.23 GB");
+    assert_eq!(
+        MemUnit::Si.format(models::size::model_bytes(&nemotron_h_8b())),
+        "16.20 GB");
+    assert_eq!(
+        MemUnit::Si.format(models::cache_bytes(&llama31_8b(), 128, 1024)),
+        "17.18 GB");
+}
+
+// ---------------- hwsim rows: one per device ----------------
+
+/// Table 3 anchor: Llama-3.1-8B on a single A6000, bsize=1, L=512+512.
+#[test]
+fn golden_hwsim_a6000_row() {
+    let r = hwsim::simulate(&llama31_8b(), &Rig::single(a6000()),
+                            &Workload::new(1, 512, 512));
+    assert_close(r.ttft.seconds * 1e3, 90.873_701_537_150_37, "TTFT ms");
+    assert_close(r.ttft.joules, 24.418_404_816_852_185, "J/Prompt");
+    assert_close(r.tpot.seconds * 1e3, 25.851_339_880_952_38, "TPOT ms");
+    assert_close(r.tpot.joules, 6.726_005_762_381_463, "J/Token");
+    assert_close(r.ttlt_seconds * 1e3, 13_326.759_720_584_77, "TTLT ms");
+    assert_close(r.ttlt_joules, 3_468.132_745_904_244_5, "J/Request");
+}
+
+/// Table 4 anchor (Jetson AGX Thor): Llama-3.1-8B, bsize=1, L=512+512.
+#[test]
+fn golden_hwsim_thor_row() {
+    let r = hwsim::simulate(&llama31_8b(), &Rig::single(agx_thor()),
+                            &Workload::new(1, 512, 512));
+    assert_close(r.ttft.seconds * 1e3, 142.842_203_179_235_58, "TTFT ms");
+    assert_close(r.ttft.joules, 7.458_035_613_849_884, "J/Prompt");
+    assert_close(r.tpot.seconds * 1e3, 100.163_738_608_058_51, "TPOT ms");
+    assert_close(r.tpot.joules, 1.305_783_041_874_639_2, "J/Token");
+    assert_close(r.ttlt_seconds * 1e3, 51_426.676_370_505_19, "TTLT ms");
+    assert_close(r.ttlt_joules, 676.018_860_704_132_7, "J/Request");
+}
+
+/// Table 4 anchor (Jetson Orin Nano): Llama-3.2-1B, bsize=1, L=256+256.
+#[test]
+fn golden_hwsim_orin_row() {
+    let r = hwsim::simulate(&llama32_1b(), &Rig::single(orin_nano()),
+                            &Workload::new(1, 256, 256));
+    assert_close(r.ttft.seconds * 1e3, 152.775_935_069_090_93, "TTFT ms");
+    assert_close(r.ttft.joules, 0.465_430_998_406_516_3, "J/Prompt");
+    assert_close(r.tpot.seconds * 1e3, 50.709_713_568_627_47, "TPOT ms");
+    assert_close(r.tpot.joules, 0.062_462_131_756_885_704, "J/Token");
+    assert_close(r.ttlt_seconds * 1e3, 13_134.462_608_637_723, "TTLT ms");
+    assert_close(r.ttlt_joules, 16.455_726_783_451_25, "J/Request");
+}
+
+/// The profiler's analytic path (energy=false) must report exactly the
+/// simulator's table row — the golden rows above therefore pin the whole
+/// `elana latency --no-energy` pipeline, not just `hwsim::simulate`.
+#[test]
+fn golden_profile_simulated_analytic_path_matches_sim() {
+    let mut spec = ProfileSpec::new("llama-3.1-8b", "a6000",
+                                    Workload::new(1, 512, 512));
+    spec.energy = false;
+    let o = elana::profiler::profile_simulated(&spec).unwrap();
+    let r = hwsim::simulate(&llama31_8b(), &Rig::single(a6000()),
+                            &Workload::new(1, 512, 512));
+    assert_eq!(o.row(), r.table_row());
+}

@@ -1,0 +1,187 @@
+//! Property tests (via `testkit::property`) for the workload generators
+//! and the coordinator's dynamic batcher — the two substrates every
+//! profiling run and sweep cell leans on.
+
+use elana::coordinator::batcher::{plan_batch, BatchPolicy};
+use elana::coordinator::ServingRequest;
+use elana::testkit::property;
+use elana::util::Rng;
+use elana::workload::PromptGen;
+
+// ---------------- PromptGen ----------------
+
+#[test]
+fn prop_prompt_tokens_always_in_vocab() {
+    property(200, |rng: &mut Rng| {
+        let vocab = rng.usize_in(1, 50_000);
+        let len = rng.usize_in(1, 256);
+        let mut gen = PromptGen::new(vocab, rng.next_u64());
+        let p = gen.prompt(len);
+        assert_eq!(p.len(), len);
+        assert!(p.iter().all(|&t| (0..vocab as i32).contains(&t)),
+                "token out of [0, {vocab})");
+    });
+}
+
+#[test]
+fn prop_batches_are_rectangular_and_in_vocab() {
+    property(200, |rng: &mut Rng| {
+        let vocab = rng.usize_in(2, 8192);
+        let batch = rng.usize_in(1, 32);
+        let len = rng.usize_in(1, 128);
+        let mut gen = PromptGen::new(vocab, rng.next_u64());
+        let tb = gen.batch(batch, len);
+        assert_eq!(tb.batch(), batch);
+        assert_eq!(tb.prompt_len(), len);
+        assert_eq!(tb.tokens().len(), batch * len);
+        for b in 0..batch {
+            assert_eq!(tb.row(b).len(), len);
+        }
+        assert!(tb.tokens().iter().all(|&t| (0..vocab as i32).contains(&t)));
+    });
+}
+
+#[test]
+fn prop_varied_lengths_stay_in_bounds() {
+    property(200, |rng: &mut Rng| {
+        let lo = rng.usize_in(1, 64);
+        let hi = lo + rng.usize_in(0, 64);
+        let n = rng.usize_in(1, 40);
+        let mut gen = PromptGen::new(512, rng.next_u64());
+        let prompts = gen.varied_lengths(n, lo, hi);
+        assert_eq!(prompts.len(), n);
+        assert!(prompts.iter().all(|p| (lo..=hi).contains(&p.len())));
+    });
+}
+
+#[test]
+fn prop_per_cell_generators_deterministic_across_replays() {
+    property(100, |rng: &mut Rng| {
+        let base = rng.next_u64();
+        let cell = rng.u64_below(1 << 20);
+        let len = rng.usize_in(1, 64);
+        let a = PromptGen::for_cell(512, base, cell).prompt(len);
+        let b = PromptGen::for_cell(512, base, cell).prompt(len);
+        assert_eq!(a, b, "cell stream must replay identically");
+        let c = PromptGen::for_cell(512, base, cell + 1).prompt(len);
+        assert_ne!(a, c, "adjacent cells must decorrelate");
+    });
+}
+
+// ---------------- coordinator batcher ----------------
+
+fn random_policy(rng: &mut Rng) -> BatchPolicy {
+    // ascending compiled batch sizes / prompt buckets
+    let mut batches = vec![1usize];
+    let mut b = 1;
+    for _ in 0..rng.usize_in(0, 3) {
+        b *= 2;
+        batches.push(b);
+    }
+    let bucket_lo = rng.usize_in(8, 32);
+    BatchPolicy {
+        allowed_batches: batches,
+        prompt_buckets: vec![bucket_lo, bucket_lo * 4],
+        max_seq_len: bucket_lo * 4 + rng.usize_in(8, 64),
+        max_wait_s: 0.01,
+    }
+}
+
+#[test]
+fn prop_batcher_never_drops_requests() {
+    property(300, |rng: &mut Rng| {
+        let policy = random_policy(rng);
+        let max_prompt = *policy.prompt_buckets.last().unwrap();
+        let n = rng.usize_in(1, 24);
+        let reqs: Vec<ServingRequest> = (0..n)
+            .map(|i| {
+                ServingRequest::new(i as u64,
+                                    vec![1; rng.usize_in(1, max_prompt)],
+                                    rng.usize_in(1, 32), 0.0)
+            })
+            .collect();
+        let (plan, rest) = plan_batch(&policy, reqs).unwrap();
+        // conservation: every submitted request is either in the batch or
+        // re-queued, never dropped or duplicated
+        assert_eq!(plan.real_rows() + rest.len(), n);
+        let mut ids: Vec<u64> = plan.requests.iter().map(|r| r.id).collect();
+        ids.extend(rest.iter().map(|r| r.id));
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_batcher_respects_policy_cap_and_compiled_shapes() {
+    property(300, |rng: &mut Rng| {
+        let policy = random_policy(rng);
+        let max_prompt = *policy.prompt_buckets.last().unwrap();
+        let n = rng.usize_in(1, 24);
+        let reqs: Vec<ServingRequest> = (0..n)
+            .map(|i| {
+                ServingRequest::new(i as u64,
+                                    vec![1; rng.usize_in(1, max_prompt)],
+                                    rng.usize_in(1, 32), 0.0)
+            })
+            .collect();
+        let (plan, _) = plan_batch(&policy, reqs).unwrap();
+        // batch size never exceeds the policy cap, and is a compiled size
+        assert!(plan.real_rows() <= policy.max_batch());
+        assert!(policy.allowed_batches.contains(&plan.exec_batch));
+        assert!(plan.exec_batch >= plan.real_rows());
+        assert!(policy.prompt_buckets.contains(&plan.padded_prompt_len));
+        // the batch's token buffer matches the compiled shape exactly
+        assert_eq!(plan.tokens.len(),
+                   plan.exec_batch * plan.padded_prompt_len);
+        // context never overflows the model limit
+        assert!(plan.padded_prompt_len + plan.gen_len <= policy.max_seq_len);
+    });
+}
+
+#[test]
+fn prop_batcher_is_fifo_within_and_across_batches() {
+    property(300, |rng: &mut Rng| {
+        let policy = random_policy(rng);
+        let max_prompt = *policy.prompt_buckets.last().unwrap();
+        let n = rng.usize_in(1, 24);
+        let reqs: Vec<ServingRequest> = (0..n)
+            .map(|i| {
+                ServingRequest::new(i as u64,
+                                    vec![1; rng.usize_in(1, max_prompt)],
+                                    4, 0.0)
+            })
+            .collect();
+        let (plan, rest) = plan_batch(&policy, reqs).unwrap();
+        // FIFO within the batch: ids 0..k in submission order
+        let taken: Vec<u64> = plan.requests.iter().map(|r| r.id).collect();
+        assert_eq!(taken,
+                   (0..plan.real_rows() as u64).collect::<Vec<_>>());
+        // the remainder continues the queue order
+        let left: Vec<u64> = rest.iter().map(|r| r.id).collect();
+        assert_eq!(left,
+                   (plan.real_rows() as u64..n as u64).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_batcher_preserves_prompts_verbatim() {
+    property(200, |rng: &mut Rng| {
+        let policy = random_policy(rng);
+        let max_prompt = *policy.prompt_buckets.last().unwrap();
+        let n = rng.usize_in(1, 12);
+        let reqs: Vec<ServingRequest> = (0..n)
+            .map(|i| {
+                let len = rng.usize_in(1, max_prompt);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| rng.token(512)).collect();
+                ServingRequest::new(i as u64, prompt, 4, 0.0)
+            })
+            .collect();
+        let (plan, _) = plan_batch(&policy, reqs).unwrap();
+        for (row, r) in plan.requests.iter().enumerate() {
+            let got = &plan.tokens
+                [row * plan.padded_prompt_len..][..r.prompt.len()];
+            assert_eq!(got, &r.prompt[..], "row {row} corrupted");
+        }
+    });
+}

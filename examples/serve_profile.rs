@@ -1,11 +1,15 @@
 //! Batched-request serving on the real engine (the TTLT workload of
 //! §2.3: "measure the end-to-end latency of processing a batch of
-//! requests"), driven through the coordinator's queue + dynamic batcher.
+//! requests"), driven through the coordinator's queue + dynamic batcher
+//! and the `ExecutionBackend` trait.
 //!
 //! A Poisson request trace feeds the bounded queue from a producer
 //! thread while the serving loop forms compiled-shape batches and runs
 //! them on the PJRT engine; the report decomposes latency into queue
 //! wait / TTFT / TTLT and shows the batching efficiency.
+//!
+//! For the virtual-time, multi-replica serving simulator on the
+//! paper-scale devices, use the CLI instead: `elana serve`.
 //!
 //! Run: `cargo run --release --example serve_profile [n_requests] [rps]`
 
@@ -13,8 +17,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use elana::backend::EngineBackend;
 use elana::coordinator::{self, BatchPolicy, RequestQueue};
-use elana::engine::InferenceEngine;
 use elana::runtime::Manifest;
 use elana::util::stats::Summary;
 use elana::workload::RequestTrace;
@@ -28,7 +32,7 @@ fn main() -> Result<()> {
 
     let manifest = Manifest::load_default()?;
     let model = "elana-tiny";
-    let mut engine = InferenceEngine::load_precompiled(&manifest, model)?;
+    let mut backend = EngineBackend::new(&manifest, model)?;
     let mm = manifest.model(model)?;
 
     let policy = BatchPolicy {
@@ -45,7 +49,7 @@ fn main() -> Result<()> {
     let trace = RequestTrace::poisson(n_requests, rate, 8, 32, 8,
                                       mm.vocab_size, 123);
     let feeder = coordinator::server::feed_trace(queue.clone(), trace, 1.0);
-    let metrics = coordinator::serve(&mut engine, &queue, &policy)?;
+    let metrics = coordinator::serve(&mut backend, &queue, &policy)?;
     let accepted = feeder.join().expect("feeder thread");
 
     println!("\naccepted {accepted}, completed {}",
@@ -71,13 +75,13 @@ fn main() -> Result<()> {
     }
 
     println!("\nserver totals:");
-    println!("  batches formed:     {}", metrics.batches_formed);
+    println!("  batches formed:     {}", metrics.batches_formed());
     println!("  throughput:         {:.2} req/s   {:.1} tok/s",
              metrics.throughput_rps(), metrics.tokens_per_s());
     println!("  engine busy:        {:.1}%",
              metrics.busy_s / metrics.wall_s * 100.0);
     println!("  mean padding waste: {:.1}%",
-             metrics.mean_padding_waste * 100.0);
+             metrics.mean_padding_waste() * 100.0);
     println!("\nserve_profile OK");
     Ok(())
 }

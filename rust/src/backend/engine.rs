@@ -1,0 +1,201 @@
+//! `EngineBackend` — real PJRT execution behind the `ExecutionBackend`
+//! trait, with the concurrent 0.1 s power sampler attached to the
+//! dev-device sensor (the full §2.3 + §2.4 measurement pipeline on real
+//! execution).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::engine::{InferenceEngine, TokenBatch};
+use crate::power::energy::WindowEnergy;
+use crate::power::model::{DevicePowerModel, LoadHandle};
+use crate::power::nvml::NvmlSim;
+use crate::power::sampler::PowerSampler;
+use crate::runtime::Manifest;
+
+use super::{ExecRun, ExecutionBackend};
+
+/// Dev-device sensor the real-engine pipeline samples: a laptop-class
+/// CPU package power curve (the substitution for NVML on this testbed).
+pub fn dev_cpu_power() -> DevicePowerModel {
+    DevicePowerModel { idle_w: 10.0, sustain_w: 65.0, alpha: 0.8,
+                       noise_w: 1.5 }
+}
+
+/// Utilizations the engine adapter reports per phase (prefill saturates
+/// compute; decode is dominated by cache/memory traffic).
+pub const PREFILL_UTILIZATION: f64 = 0.9;
+pub const DECODE_UTILIZATION: f64 = 0.65;
+
+/// Real-execution backend: PJRT engine + background power sampler. The
+/// sampler runs for the backend's whole lifetime; probe and generate
+/// calls hold the per-phase load so the sensor sees the same
+/// utilization profile the pre-trait session produced.
+pub struct EngineBackend {
+    engine: InferenceEngine,
+    model: String,
+    load: LoadHandle,
+    sampler: PowerSampler,
+}
+
+impl EngineBackend {
+    /// Load `model` precompiled (nothing compiles on the request path
+    /// afterwards) and start the background sampler.
+    pub fn new(manifest: &Manifest, model: &str) -> Result<EngineBackend> {
+        let engine = InferenceEngine::load_precompiled(manifest, model)?;
+        let load = LoadHandle::new();
+        let nvml = Arc::new(NvmlSim::new_shared(1, dev_cpu_power(),
+                                                load.clone()));
+        let sampler = PowerSampler::start(nvml);
+        Ok(EngineBackend {
+            engine,
+            model: model.to_string(),
+            load,
+            sampler,
+        })
+    }
+
+    /// Direct access for callers that need engine-only features.
+    pub fn engine_mut(&mut self) -> &mut InferenceEngine {
+        &mut self.engine
+    }
+}
+
+impl ExecutionBackend for EngineBackend {
+    fn device_name(&self) -> String {
+        "cpu (PJRT)".to_string()
+    }
+
+    fn model_name(&self) -> String {
+        self.model.clone()
+    }
+
+    fn deterministic(&self) -> bool {
+        false
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.engine.model().vocab_size()
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.engine.model().max_seq_len()
+    }
+
+    fn generate(&mut self, prompts: &TokenBatch, gen_len: usize)
+                -> Result<ExecRun> {
+        // decode dominates a full request; report the decode-phase load
+        // for the span (the pre-trait TTLT harness did the same). The
+        // level is *left set* rather than guard-dropped so the 0.1 s
+        // sampler never records idle power between harness repetitions
+        // — the pre-trait session held the load across the whole loop.
+        self.load.set(DECODE_UTILIZATION);
+        let t0 = self.sampler.now();
+        let r = self.engine.generate(prompts, gen_len)?;
+        let ttft_s = r.ttft.as_secs_f64();
+        let step_s: Vec<f64> =
+            r.step_times.iter().map(|d| d.as_secs_f64()).collect();
+        // phase windows on the sampler clock, reconstructed from the
+        // measured duration decomposition
+        let mut t = t0 + ttft_s;
+        let prefill_window = (t0, t);
+        let step_windows = step_s
+            .iter()
+            .map(|&d| {
+                let w = (t, t + d);
+                t += d;
+                w
+            })
+            .collect();
+        Ok(ExecRun {
+            ttft_s,
+            step_s,
+            ttlt_s: r.ttlt.as_secs_f64(),
+            prefill_window,
+            step_windows,
+            tokens: r.tokens,
+            analytic_joules: None,
+        })
+    }
+
+    fn prefill_probe(&mut self, prompts: &TokenBatch)
+                     -> Result<(f64, (f64, f64))> {
+        self.load.set(PREFILL_UTILIZATION);
+        let t0 = self.sampler.now();
+        let d = self.engine.prefill_once(prompts)?;
+        Ok((d.as_secs_f64(), (t0, self.sampler.now())))
+    }
+
+    fn decode_probe(&mut self, prompts: &TokenBatch, steps: usize)
+                    -> Result<(Vec<f64>, (f64, f64))> {
+        self.load.set(DECODE_UTILIZATION);
+        let t0 = self.sampler.now();
+        let times = self.engine.decode_probe(prompts, steps)?;
+        let t1 = self.sampler.now();
+        Ok((times.iter().map(|d| d.as_secs_f64()).collect(), (t0, t1)))
+    }
+
+    fn run_energy(&mut self, run: &ExecRun) -> Result<(f64, f64, f64)> {
+        // the whole-request window ends at span() (prefill start +
+        // measured TTLT), which includes sampling/cache overhead the
+        // step windows alone miss
+        Ok(super::window_attribution(&self.sampler.log(), run,
+                                     run.span().1))
+    }
+
+    fn window_energy(&self, t0: f64, t1: f64) -> f64 {
+        WindowEnergy::average_power_method(&self.sampler.log(), t0, t1)
+            .joules
+    }
+
+    fn reseed(&mut self, _seed: u64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> Option<EngineBackend> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(dir).unwrap();
+        Some(EngineBackend::new(&m, "elana-tiny").unwrap())
+    }
+
+    fn prompts(batch: usize, len: usize) -> TokenBatch {
+        let mut rng = crate::util::Rng::new(1);
+        let toks: Vec<i32> =
+            (0..batch * len).map(|_| rng.token(512)).collect();
+        TokenBatch::new(batch, len, toks).unwrap()
+    }
+
+    #[test]
+    fn generate_through_trait() {
+        let Some(mut b) = backend() else { return };
+        assert!(!b.deterministic());
+        assert_eq!(b.device_name(), "cpu (PJRT)");
+        let run = b.generate(&prompts(1, 16), 8).unwrap();
+        assert_eq!(run.tokens.len(), 1);
+        assert_eq!(run.tokens[0].len(), 8);
+        assert_eq!(run.step_s.len(), 7); // first token from prefill
+        assert!(run.ttft_s > 0.0);
+        assert!(run.ttlt_s >= run.ttft_s);
+        let (jp, jt, jr) = b.run_energy(&run).unwrap();
+        assert!(jp >= 0.0 && jt >= 0.0 && jr >= 0.0);
+    }
+
+    #[test]
+    fn probes_through_trait() {
+        let Some(mut b) = backend() else { return };
+        let (ttft, (t0, t1)) = b.prefill_probe(&prompts(1, 16)).unwrap();
+        assert!(ttft > 0.0);
+        assert!(t1 > t0);
+        let (steps, (d0, d1)) = b.decode_probe(&prompts(1, 16), 5).unwrap();
+        assert_eq!(steps.len(), 5);
+        assert!(steps.iter().all(|&s| s > 0.0));
+        assert!(d1 > d0);
+    }
+}

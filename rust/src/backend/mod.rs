@@ -1,0 +1,218 @@
+//! Execution backends: one trait in front of every way ELANA can run a
+//! request.
+//!
+//! The paper's pipeline is backend-agnostic — pick a model and a
+//! workload, time prefill and decode, attribute energy to the phases —
+//! but the seed code hard-forked it: `profiler::session` branched
+//! between hwsim and the PJRT engine, the sweep only knew the simulated
+//! path, and the coordinator only the real engine. [`ExecutionBackend`]
+//! is the shared substrate:
+//!
+//! * [`SimBackend`] — the calibrated roofline + seeded sensor playback
+//!   (virtual time);
+//! * [`EngineBackend`] — `engine::InferenceEngine` + the concurrent
+//!   0.1 s power sampler (wall-clock time).
+//!
+//! The profiler session, the sweep runner, and both serving loops
+//! (`coordinator::server` wall-clock, `coordinator::simulate` virtual
+//! time) all run against the trait; nothing outside this module picks a
+//! concrete execution substrate.
+
+pub mod engine;
+pub mod sim;
+
+pub use engine::EngineBackend;
+pub use sim::SimBackend;
+
+use anyhow::Result;
+
+use crate::engine::TokenBatch;
+use crate::profiler::spec::ProfileSpec;
+
+/// One executed (or simulated) generation: per-phase timings in seconds
+/// plus the (t0, t1) marks of each phase on the backend's energy clock
+/// — wall-clock for the engine, the virtual playback clock for hwsim.
+/// This is the backend-neutral form of `engine::GenerationResult`.
+#[derive(Debug, Clone)]
+pub struct ExecRun {
+    /// Prefill latency, seconds (ELANA's TTFT).
+    pub ttft_s: f64,
+    /// Per-decode-step latencies, seconds (ELANA's TPOT samples).
+    pub step_s: Vec<f64>,
+    /// End-to-end latency, seconds (ELANA's TTLT). Carried explicitly
+    /// rather than derived: the engine's wall TTLT includes sampling
+    /// and cache-threading overhead beyond the phase sum.
+    pub ttlt_s: f64,
+    /// (t0, t1) of the prefill on the energy clock.
+    pub prefill_window: (f64, f64),
+    /// (t0, t1) of each decode step on the energy clock.
+    pub step_windows: Vec<(f64, f64)>,
+    /// Generated token ids, one row per sequence (real engine only;
+    /// analytic backends draw no tokens and leave this empty).
+    pub tokens: Vec<Vec<i32>>,
+    /// Closed-form (J/Prompt, J/Token, J/Request) when the backend
+    /// knows them analytically (hwsim with playback disabled).
+    pub analytic_joules: Option<(f64, f64, f64)>,
+}
+
+impl ExecRun {
+    /// Mean decode-step latency, seconds (the TPOT statistic). The
+    /// summation order matches `hwsim::simulate` so simulated rows
+    /// reproduce the golden table values bit-for-bit.
+    pub fn tpot_mean_s(&self) -> f64 {
+        self.step_s.iter().sum::<f64>() / self.step_s.len().max(1) as f64
+    }
+
+    /// (start, end) of the whole request on the energy clock.
+    pub fn span(&self) -> (f64, f64) {
+        (self.prefill_window.0, self.prefill_window.0 + self.ttlt_s)
+    }
+}
+
+/// A way to execute one generation request and account its energy.
+/// Object-safe: every consuming subsystem takes
+/// `&mut dyn ExecutionBackend`.
+pub trait ExecutionBackend {
+    /// Device name as the reports print it (e.g. `A6000`, `cpu (PJRT)`).
+    fn device_name(&self) -> String;
+
+    /// Model display name as the reports print it.
+    fn model_name(&self) -> String;
+
+    /// True when timings are analytic: one run supplies every phase and
+    /// repetition adds no statistical information. The profiler session
+    /// collapses the §2.3 repetition harness to a single run for such
+    /// backends, and the virtual-time serving simulator requires one.
+    fn deterministic(&self) -> bool;
+
+    fn vocab_size(&self) -> usize;
+
+    /// Context limit (prompt + generation) the batcher must respect.
+    fn max_seq_len(&self) -> usize;
+
+    /// Execute one full request: prefill + decode to `gen_len` tokens.
+    fn generate(&mut self, prompts: &TokenBatch, gen_len: usize)
+                -> Result<ExecRun>;
+
+    /// Isolated prefill (the paper's TTFT probe): latency in seconds
+    /// plus its (t0, t1) window on the energy clock.
+    fn prefill_probe(&mut self, prompts: &TokenBatch)
+                     -> Result<(f64, (f64, f64))>;
+
+    /// Warm-cache decode probe (the TPOT sample stream): per-step
+    /// latencies in seconds plus one aggregate (t0, t1) window.
+    fn decode_probe(&mut self, prompts: &TokenBatch, steps: usize)
+                    -> Result<(Vec<f64>, (f64, f64))>;
+
+    /// Joules of one completed `generate` run, decomposed as
+    /// (J/Prompt, J/Token, J/Request) through the backend's §2.4
+    /// pipeline: sensor playback in virtual time for hwsim, the
+    /// concurrent sampler log for the engine.
+    fn run_energy(&mut self, run: &ExecRun) -> Result<(f64, f64, f64)>;
+
+    /// Integrate the backend's energy log over an arbitrary window
+    /// (average-power method), joules. Returns 0 when no samples cover
+    /// the window.
+    fn window_energy(&self, t0: f64, t1: f64) -> f64;
+
+    /// Re-key the backend's stochastic sensor stream. Serving uses this
+    /// to give batch `i` the `Rng::mix(seed, i)` stream discipline the
+    /// sweep gives its cells; backends without a seeded sensor ignore
+    /// it.
+    fn reseed(&mut self, seed: u64);
+}
+
+/// Shared §2.4 window attribution over an energy log: J/Prompt from
+/// the prefill window, J/Token as the mean over the decode-step
+/// windows, J/Request over [prefill start, `t_end`]. Callers pick
+/// `t_end`: the sim backend ends at the last replayed step window
+/// (bit-compat with the pre-trait playback path), the engine at the
+/// measured TTLT span.
+pub(crate) fn window_attribution(log: &crate::power::sampler::PowerLog,
+                                 run: &ExecRun, t_end: f64)
+                                 -> (f64, f64, f64) {
+    use crate::power::energy::WindowEnergy;
+    let (p0, p1) = run.prefill_window;
+    let j_prompt = WindowEnergy::average_power_method(log, p0, p1).joules;
+    let mut tok_sum = 0.0;
+    for &(t0, t1) in &run.step_windows {
+        tok_sum += WindowEnergy::average_power_method(log, t0, t1).joules;
+    }
+    let j_token = tok_sum / run.step_windows.len().max(1) as f64;
+    let j_request =
+        WindowEnergy::average_power_method(log, p0, t_end).joules;
+    (j_prompt, j_token, j_request)
+}
+
+/// Build the backend a `ProfileSpec` names: `cpu` → the PJRT engine
+/// (AOT artifacts required), anything else → the hwsim rig of that
+/// name. This is the single place the simulated-vs-engine decision
+/// lives.
+pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
+    if spec.is_simulated() {
+        Ok(Box::new(SimBackend::new(&spec.model, &spec.device,
+                                    spec.energy, spec.seed)?))
+    } else {
+        let manifest = crate::runtime::Manifest::load_default()?;
+        Ok(Box::new(EngineBackend::new(&manifest, &spec.model)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::Workload;
+
+    #[test]
+    fn from_spec_builds_sim_backend_for_rigs() {
+        let spec = ProfileSpec::new("llama-3.1-8b", "a6000",
+                                    Workload::new(1, 64, 32));
+        let b = from_spec(&spec).unwrap();
+        assert!(b.deterministic());
+        assert_eq!(b.device_name(), "A6000");
+        assert_eq!(b.model_name(), "Llama-3.1-8B");
+        assert!(b.vocab_size() > 0);
+    }
+
+    #[test]
+    fn from_spec_rejects_unknown_names() {
+        let spec = ProfileSpec::new("gpt-17", "a6000",
+                                    Workload::new(1, 8, 8));
+        assert!(from_spec(&spec).is_err());
+        let spec = ProfileSpec::new("llama-3.1-8b", "tpu-v9",
+                                    Workload::new(1, 8, 8));
+        assert!(from_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn exec_run_statistics() {
+        let run = ExecRun {
+            ttft_s: 0.010,
+            step_s: vec![0.002, 0.004],
+            ttlt_s: 0.016,
+            prefill_window: (1.0, 1.010),
+            step_windows: vec![(1.010, 1.012), (1.012, 1.016)],
+            tokens: Vec::new(),
+            analytic_joules: None,
+        };
+        assert!((run.tpot_mean_s() - 0.003).abs() < 1e-12);
+        let (s0, s1) = run.span();
+        assert_eq!(s0, 1.0);
+        assert!((s1 - 1.016).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exec_run_empty_steps_safe() {
+        let run = ExecRun {
+            ttft_s: 0.010,
+            step_s: Vec::new(),
+            ttlt_s: 0.010,
+            prefill_window: (0.0, 0.010),
+            step_windows: Vec::new(),
+            tokens: Vec::new(),
+            analytic_joules: None,
+        };
+        assert_eq!(run.tpot_mean_s(), 0.0);
+        assert_eq!(run.span(), (0.0, 0.010));
+    }
+}

@@ -10,12 +10,15 @@
 //! elana sweep  [--spec f.json] [--models a,b] [--devices d1,d2]
 //!              [--batches 1,8] [--lens 256+256,512+512] [--threads N]
 //! elana trace  --model M --device D --batch B --len P+G --out trace.json
-//! elana serve  --model M [--requests N] [--rate R]
+//! elana serve  [--model M] [--device D] [--requests N] [--rate R]
+//!              [--trace t.json] [--prompts LO..HI] [--gen G]
+//!              [--replicas R] [--workers W] [--seed S]
 //! elana models
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::spec::{Arrivals, ServeSpec};
 use crate::hwsim::Workload;
 use crate::sweep::spec::SweepOverrides;
 use crate::util::units::{parse_workload_len, MemUnit};
@@ -58,11 +61,14 @@ pub enum Command {
         workload: Workload,
         out: String,
     },
-    /// Batched serving demo over the real engine.
+    /// The serving subsystem: virtual-time trace-replay simulator on
+    /// hwsim rigs, wall-clock serving on `--device cpu`.
     Serve {
-        model: String,
-        requests: usize,
-        rate_rps: f64,
+        spec: ServeSpec,
+        /// Print JSON to stdout instead of the markdown report.
+        json: bool,
+        /// Write the JSON report here.
+        out: Option<String>,
     },
     /// List registry models.
     Models,
@@ -121,7 +127,10 @@ pub fn parse(args: &[String]) -> Result<Command> {
                           "threads", "seed", "unit", "no-energy", "out",
                           "json"]),
         "trace" => Some(&["model", "device", "batch", "len", "out"]),
-        "serve" => Some(&["model", "requests", "rate"]),
+        "serve" => Some(&["model", "device", "requests", "rate", "trace",
+                          "prompts", "gen", "replicas", "workers", "seed",
+                          "max-wait", "max-seq-len", "no-energy", "json",
+                          "out"]),
         "models" | "help" | "-h" | "--help" | "version" | "-V"
         | "--version" => Some(&[]),
         _ => None, // unknown command: reported by the match below
@@ -264,13 +273,92 @@ pub fn parse(args: &[String]) -> Result<Command> {
             workload: workload()?,
             out: get("out").unwrap_or("trace.json").to_string(),
         }),
-        "serve" => Ok(Command::Serve {
-            model: get("model").unwrap_or("elana-tiny").to_string(),
-            requests: get("requests").unwrap_or("16").parse()
-                .map_err(|_| anyhow!("bad --requests"))?,
-            rate_rps: get("rate").unwrap_or("50").parse()
-                .map_err(|_| anyhow!("bad --rate"))?,
-        }),
+        "serve" => {
+            let mut spec = ServeSpec::default();
+            if let Some(m) = get("model") {
+                spec.model = m.to_string();
+            }
+            if let Some(d) = get("device") {
+                spec.device = d.to_string();
+            }
+            if let Some(n) = get("requests") {
+                spec.requests =
+                    n.parse().map_err(|_| anyhow!("bad --requests"))?;
+            }
+            match (get("rate"), get("trace")) {
+                (Some(_), Some(_)) => {
+                    bail!("pass either --rate or --trace, not both")
+                }
+                (Some(r), None) => {
+                    spec.arrivals = Arrivals::Poisson {
+                        rate_rps: r.parse()
+                            .map_err(|_| anyhow!("bad --rate"))?,
+                    };
+                }
+                (None, Some(t)) => {
+                    spec.arrivals = Arrivals::Trace {
+                        path: t.to_string(),
+                    };
+                }
+                (None, None) => {}
+            }
+            if let Some(p) = get("prompts") {
+                let (lo, hi) = match p.split_once("..") {
+                    Some((lo, hi)) => (
+                        lo.parse().map_err(|_| {
+                            anyhow!("bad --prompts `{p}` (want LO..HI)")
+                        })?,
+                        hi.parse().map_err(|_| {
+                            anyhow!("bad --prompts `{p}` (want LO..HI)")
+                        })?,
+                    ),
+                    None => {
+                        let n: usize = p.parse().map_err(|_| {
+                            anyhow!("bad --prompts `{p}` (want LO..HI)")
+                        })?;
+                        (n, n)
+                    }
+                };
+                spec.prompt_lo = lo;
+                spec.prompt_hi = hi;
+            }
+            if let Some(g) = get("gen") {
+                spec.gen_len =
+                    g.parse().map_err(|_| anyhow!("bad --gen"))?;
+            }
+            if let Some(r) = get("replicas") {
+                spec.replicas =
+                    r.parse().map_err(|_| anyhow!("bad --replicas"))?;
+            }
+            if let Some(w) = get("workers") {
+                spec.workers =
+                    w.parse().map_err(|_| anyhow!("bad --workers"))?;
+            }
+            if let Some(s) = get("seed") {
+                spec.seed =
+                    s.parse().map_err(|_| anyhow!("bad --seed"))?;
+            }
+            if let Some(w) = get("max-wait") {
+                let ms: f64 =
+                    w.parse().map_err(|_| anyhow!("bad --max-wait"))?;
+                if ms.is_nan() || ms < 0.0 {
+                    bail!("bad --max-wait (want milliseconds >= 0)");
+                }
+                spec.max_wait_s = ms / 1e3;
+            }
+            if let Some(m) = get("max-seq-len") {
+                spec.max_seq_len =
+                    m.parse().map_err(|_| anyhow!("bad --max-seq-len"))?;
+            }
+            if has("no-energy") {
+                spec.energy = false;
+            }
+            Ok(Command::Serve {
+                spec,
+                json: has("json"),
+                out: get("out").map(str::to_string),
+            })
+        }
         "models" => Ok(Command::Models),
         "help" | "-h" | "--help" => Ok(Command::Help),
         "version" | "-V" | "--version" => Ok(Command::Version),
@@ -293,7 +381,11 @@ USAGE:
                 [--out sweep.json] [--json]
   elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
                 [--out trace.json]
-  elana serve   [--model elana-tiny] [--requests N] [--rate RPS]
+  elana serve   [--model MODEL] [--device RIG|cpu] [--requests N]
+                [--rate RPS | --trace trace.json] [--prompts LO..HI]
+                [--gen G] [--replicas R] [--workers W] [--seed S]
+                [--max-wait MS] [--max-seq-len L] [--no-energy]
+                [--out serve.json] [--json]
   elana models
   elana help | version
 
@@ -383,13 +475,100 @@ mod tests {
             c => panic!("{c:?}"),
         }
         match parse(&argv("serve --requests 8 --rate 10")).unwrap() {
-            Command::Serve { model, requests, rate_rps } => {
-                assert_eq!(model, "elana-tiny");
-                assert_eq!(requests, 8);
-                assert_eq!(rate_rps, 10.0);
+            Command::Serve { spec, json, out } => {
+                assert_eq!(spec.model, "llama-3.1-8b");
+                assert_eq!(spec.device, "a6000");
+                assert_eq!(spec.requests, 8);
+                assert_eq!(spec.arrivals,
+                           Arrivals::Poisson { rate_rps: 10.0 });
+                assert!(!json);
+                assert!(out.is_none());
             }
             c => panic!("{c:?}"),
         }
+    }
+
+    #[test]
+    fn parse_serve_defaults() {
+        match parse(&argv("serve")).unwrap() {
+            Command::Serve { spec, json, out } => {
+                assert_eq!(spec, ServeSpec::default());
+                assert!(!json);
+                assert!(out.is_none());
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_serve_full_flag_set() {
+        let c = parse(&argv(
+            "serve --model qwen-2.5-7b --device thor --requests 40 \
+             --rate 12.5 --prompts 32..128 --gen 48 --replicas 3 \
+             --workers 4 --seed 9 --max-wait 20 --max-seq-len 2048 \
+             --no-energy --out /tmp/s.json --json")).unwrap();
+        match c {
+            Command::Serve { spec, json, out } => {
+                assert_eq!(spec.model, "qwen-2.5-7b");
+                assert_eq!(spec.device, "thor");
+                assert_eq!(spec.requests, 40);
+                assert_eq!(spec.arrivals,
+                           Arrivals::Poisson { rate_rps: 12.5 });
+                assert_eq!((spec.prompt_lo, spec.prompt_hi), (32, 128));
+                assert_eq!(spec.gen_len, 48);
+                assert_eq!(spec.replicas, 3);
+                assert_eq!(spec.workers, 4);
+                assert_eq!(spec.seed, 9);
+                assert!((spec.max_wait_s - 0.020).abs() < 1e-12);
+                assert_eq!(spec.max_seq_len, 2048);
+                assert!(!spec.energy);
+                assert!(json);
+                assert_eq!(out.as_deref(), Some("/tmp/s.json"));
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_serve_trace_and_single_prompt_len() {
+        match parse(&argv("serve --trace /tmp/t.json --prompts 64"))
+            .unwrap()
+        {
+            Command::Serve { spec, .. } => {
+                assert_eq!(spec.arrivals, Arrivals::Trace {
+                    path: "/tmp/t.json".into(),
+                });
+                assert_eq!((spec.prompt_lo, spec.prompt_hi), (64, 64));
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_rejects_conflicting_and_malformed_flags() {
+        // --rate and --trace are mutually exclusive
+        let err = parse(&argv("serve --rate 5 --trace t.json"))
+            .unwrap_err().to_string();
+        assert!(err.contains("either --rate or --trace"), "{err}");
+        assert!(parse(&argv("serve --requests many")).is_err());
+        assert!(parse(&argv("serve --rate fast")).is_err());
+        assert!(parse(&argv("serve --prompts 12..x")).is_err());
+        assert!(parse(&argv("serve --prompts lots")).is_err());
+        assert!(parse(&argv("serve --replicas zero")).is_err());
+        assert!(parse(&argv("serve --max-wait -5")).is_err());
+        assert!(parse(&argv("serve --seed minus-one")).is_err());
+        // unknown flag and missing value, with command context
+        let err = parse(&argv("serve --frobnicate 3"))
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown flag --frobnicate"), "{err}");
+        assert!(err.contains("serve"), "{err}");
+        let err = parse(&argv("serve --requests --json"))
+            .unwrap_err().to_string();
+        assert!(err.contains("--requests")
+                && err.contains("requires a value"), "{err}");
+        // boolean flags must not swallow a following bare word
+        assert!(parse(&argv("serve --json out.json")).is_err());
+        assert!(parse(&argv("serve stray")).is_err());
     }
 
     #[test]

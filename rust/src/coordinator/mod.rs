@@ -1,19 +1,34 @@
-//! Request coordinator: queue, dynamic batcher, serving loop.
+//! Request coordinator: queue, dynamic batcher, serving loops, serve
+//! reports — the `elana serve` subsystem.
 //!
 //! ELANA's TTLT workload "profiles the end-to-end latency of processing
 //! a batch of requests"; this module is the serving substrate that forms
-//! those batches the way an inference server would: a bounded request
-//! queue (backpressure), a dynamic batching policy constrained to the
-//! AOT-compiled batch sizes (the fixed-shape analogue of CUDA-graph
-//! bucketing), and a worker loop that drives the engine and reports
-//! per-request latency metrics.
+//! those batches the way an inference server would, and runs them
+//! through the `backend::ExecutionBackend` trait:
+//!
+//! * [`queue`] — bounded request queue with backpressure;
+//! * [`batcher`] — dynamic batching constrained to the AOT-compiled
+//!   batch sizes (the fixed-shape analogue of CUDA-graph bucketing);
+//! * [`server`] — the wall-clock serving loop (`--device cpu`);
+//! * [`simulate`] — the virtual-time, multi-replica, open-loop serving
+//!   simulator (hwsim rigs): deterministic trace replay with per-batch
+//!   energy attribution, byte-identical at any worker count;
+//! * [`spec`] — the `elana serve` specification (arrivals, replicas,
+//!   batching, seeds);
+//! * [`report`] — per-request latency decomposition (p50/p90/p99),
+//!   throughput, padding waste, and J/token reports.
 
 pub mod batcher;
 pub mod queue;
+pub mod report;
 pub mod request;
 pub mod server;
+pub mod simulate;
+pub mod spec;
 
 pub use batcher::{BatchPlan, BatchPolicy};
 pub use queue::RequestQueue;
 pub use request::{Completion, ServingRequest};
 pub use server::{serve, ServerMetrics};
+pub use simulate::{ServeOutcome, ServedBatch, ServedRequest};
+pub use spec::{Arrivals, ServeSpec};

@@ -1,0 +1,264 @@
+//! Serve reports: the per-request latency decomposition table
+//! (p50/p90/p99), throughput, batching efficiency, and J/token
+//! attribution — markdown for humans, deterministic JSON for machines.
+//!
+//! Both renderings are pure functions of the outcome and omit execution
+//! details (worker-thread count, host wall time of the simulation), so
+//! simulated outputs are byte-identical however the energy pass was
+//! parallelized — the sweep-report discipline.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::simulate::{ServeOutcome, ServedRequest};
+use super::spec::Arrivals;
+
+/// The four latency series the report summarizes, in render order.
+fn latency_series(o: &ServeOutcome)
+                  -> [(&'static str, Vec<f64>); 4] {
+    let ms = |f: fn(&ServedRequest) -> f64| -> Vec<f64> {
+        o.requests.iter().map(|r| f(r) * 1e3).collect()
+    };
+    [
+        ("queue wait ms", ms(|r| r.queue_wait_s)),
+        ("TTFT ms", ms(|r| r.ttft_s)),
+        ("TPOT ms", ms(|r| r.tpot_s)),
+        ("TTLT ms", ms(|r| r.ttlt_s)),
+    ]
+}
+
+fn arrivals_line(o: &ServeOutcome) -> String {
+    match &o.spec.arrivals {
+        Arrivals::Poisson { rate_rps } => format!(
+            "open-loop Poisson arrivals: {} requests at {rate_rps} req/s \
+             (seed {})",
+            o.requests.len(), o.spec.seed),
+        Arrivals::Trace { path } => format!(
+            "trace replay: {} requests from {path} (seed {})",
+            o.requests.len(), o.spec.seed),
+    }
+}
+
+/// Markdown serve report.
+pub fn render_markdown(o: &ServeOutcome) -> String {
+    let s = &o.spec;
+    let mut out = String::new();
+    let _ = writeln!(out, "# elana serve — {} on {}", s.model, s.device);
+    let _ = writeln!(out);
+    let _ = writeln!(out, "{}", arrivals_line(o));
+    if o.wall_clock {
+        let _ = writeln!(
+            out,
+            "wall-clock serving on the PJRT engine (manifest-compiled \
+             shapes), max wait {:.0} ms", s.max_wait_s * 1e3);
+    } else {
+        let _ = writeln!(
+            out,
+            "replicas {}, continuous batching: batches {:?}, buckets \
+             {:?}, max wait {:.0} ms",
+            s.replicas, s.sim_policy().allowed_batches, s.sim_buckets(),
+            s.max_wait_s * 1e3);
+    }
+    let _ = writeln!(out);
+    let _ = writeln!(out, "| metric | mean | p50 | p90 | p99 | max |");
+    let _ = writeln!(out, "|---|---:|---:|---:|---:|---:|");
+    for (name, samples) in latency_series(o) {
+        if let Some(sum) = Summary::from_samples(&samples) {
+            let _ = writeln!(
+                out,
+                "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |",
+                name, sum.mean, sum.p50, sum.p90, sum.p99, sum.max);
+        }
+    }
+    let _ = writeln!(out);
+    let clock = if o.wall_clock { "wall" } else { "virtual" };
+    let _ = writeln!(
+        out,
+        "served {} requests in {:.2} s ({clock}): {:.2} req/s, \
+         {:.1} tok/s",
+        o.requests.len(), o.makespan_s, o.throughput_rps(),
+        o.tokens_per_s());
+    let _ = writeln!(
+        out,
+        "batches formed: {} (mean real rows {:.1}, padding waste {:.1}%)",
+        o.batches.len(),
+        if o.batches.is_empty() { 0.0 } else {
+            o.batches.iter().map(|b| b.real_rows as f64).sum::<f64>()
+                / o.batches.len() as f64
+        },
+        o.mean_padding_waste() * 100.0);
+    let _ = writeln!(out, "replica busy: {:.1}%", o.replica_busy() * 100.0);
+    if let Some(total) = o.total_joules {
+        let toks = o.generated_tokens().max(1) as f64;
+        let n_req = o.requests.len().max(1) as f64;
+        let _ = writeln!(
+            out,
+            "energy: {:.1} J total, {:.3} J/token, {:.2} J/request",
+            total, total / toks, total / n_req);
+    }
+    out
+}
+
+/// Deterministic JSON (via `util::json`, whose BTreeMap objects make
+/// serialization key-ordered). Seeds are emitted as strings so 64-bit
+/// values survive the f64 number model intact.
+pub fn to_json(o: &ServeOutcome) -> Json {
+    let s = &o.spec;
+    let arrivals = match &s.arrivals {
+        Arrivals::Poisson { rate_rps } => Json::obj(vec![
+            ("kind", Json::str("poisson")),
+            ("rate_rps", Json::num(*rate_rps)),
+        ]),
+        Arrivals::Trace { path } => Json::obj(vec![
+            ("kind", Json::str("trace")),
+            ("path", Json::str(path.clone())),
+        ]),
+    };
+    let requests: Vec<Json> = o
+        .requests
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", Json::num(r.id as f64)),
+                ("arrival_s", Json::num(r.arrival_s)),
+                ("queue_wait_s", Json::num(r.queue_wait_s)),
+                ("ttft_s", Json::num(r.ttft_s)),
+                ("tpot_s", Json::num(r.tpot_s)),
+                ("ttlt_s", Json::num(r.ttlt_s)),
+                ("batch", Json::num(r.batch as f64)),
+                ("prompt_len", Json::num(r.prompt_len as f64)),
+                ("gen_len", Json::num(r.gen_len as f64)),
+            ])
+        })
+        .collect();
+    let batches: Vec<Json> = o
+        .batches
+        .iter()
+        .map(|b| {
+            let mut fields = vec![
+                ("index", Json::num(b.index as f64)),
+                ("replica", Json::num(b.replica as f64)),
+                ("dequeue_s", Json::num(b.dequeue_s)),
+                ("exec_batch", Json::num(b.exec_batch as f64)),
+                ("padded_prompt_len",
+                 Json::num(b.padded_prompt_len as f64)),
+                ("gen_len", Json::num(b.gen_len as f64)),
+                ("real_rows", Json::num(b.real_rows as f64)),
+                ("padding_waste", Json::num(b.padding_waste)),
+                ("service_s", Json::num(b.service_s)),
+            ];
+            if let Some((jp, jt, jr)) = b.joules {
+                fields.push(("j_prompt", Json::num(jp)));
+                fields.push(("j_token", Json::num(jt)));
+                fields.push(("j_request", Json::num(jr)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let mut summaries = Vec::new();
+    for (name, samples) in latency_series(o) {
+        if let Some(sum) = Summary::from_samples(&samples) {
+            summaries.push((name, Json::obj(vec![
+                ("mean", Json::num(sum.mean)),
+                ("p50", Json::num(sum.p50)),
+                ("p90", Json::num(sum.p90)),
+                ("p99", Json::num(sum.p99)),
+                ("max", Json::num(sum.max)),
+            ])));
+        }
+    }
+    let mut root = vec![
+        ("model", Json::str(s.model.clone())),
+        ("device", Json::str(s.device.clone())),
+        ("arrivals", arrivals),
+        ("replicas", Json::num(s.replicas as f64)),
+        ("seed", Json::str(s.seed.to_string())),
+        ("wall_clock", Json::Bool(o.wall_clock)),
+        ("n_requests", Json::num(o.requests.len() as f64)),
+        ("n_batches", Json::num(o.batches.len() as f64)),
+        ("makespan_s", Json::num(o.makespan_s)),
+        ("busy_s", Json::num(o.busy_s)),
+        ("throughput_rps", Json::num(o.throughput_rps())),
+        ("tokens_per_s", Json::num(o.tokens_per_s())),
+        ("mean_padding_waste", Json::num(o.mean_padding_waste())),
+        ("latency_ms", Json::obj(summaries)),
+        ("requests", Json::Arr(requests)),
+        ("batches", Json::Arr(batches)),
+    ];
+    if let Some(total) = o.total_joules {
+        let toks = o.generated_tokens().max(1) as f64;
+        root.push(("total_joules", Json::num(total)));
+        root.push(("j_per_token", Json::num(total / toks)));
+    }
+    Json::obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::simulate;
+    use crate::coordinator::spec::ServeSpec;
+
+    fn outcome(energy: bool) -> ServeOutcome {
+        let spec = ServeSpec {
+            requests: 16,
+            arrivals: Arrivals::Poisson { rate_rps: 30.0 },
+            prompt_lo: 16,
+            prompt_hi: 64,
+            gen_len: 8,
+            energy,
+            seed: 3,
+            ..ServeSpec::default()
+        };
+        simulate::run(&spec).unwrap()
+    }
+
+    #[test]
+    fn markdown_has_decomposition_and_totals() {
+        let text = render_markdown(&outcome(true));
+        assert!(text.contains("# elana serve — llama-3.1-8b on a6000"),
+                "{text}");
+        assert!(text.contains("| queue wait ms |"), "{text}");
+        assert!(text.contains("| TTFT ms |"), "{text}");
+        assert!(text.contains("| TPOT ms |"), "{text}");
+        assert!(text.contains("| TTLT ms |"), "{text}");
+        assert!(text.contains("served 16 requests"), "{text}");
+        assert!(text.contains("(virtual)"), "{text}");
+        assert!(text.contains("J/token"), "{text}");
+        assert!(text.contains("replica busy:"), "{text}");
+    }
+
+    #[test]
+    fn markdown_omits_energy_when_disabled() {
+        let text = render_markdown(&outcome(false));
+        assert!(!text.contains("J/token"), "{text}");
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let o = outcome(true);
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        assert_eq!(v.get("n_requests").unwrap().as_usize(), Some(16));
+        assert_eq!(v.get("wall_clock").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("seed").unwrap().as_str(), Some("3"));
+        let reqs = v.get("requests").unwrap().as_arr().unwrap();
+        assert_eq!(reqs.len(), 16);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.get("id").unwrap().as_usize(), Some(i));
+            let ttft = r.get("ttft_s").unwrap().as_f64().unwrap();
+            let ttlt = r.get("ttlt_s").unwrap().as_f64().unwrap();
+            assert!(ttlt >= ttft);
+        }
+        let batches = v.get("batches").unwrap().as_arr().unwrap();
+        assert!(!batches.is_empty());
+        for b in batches {
+            assert!(b.get("j_request").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert!(v.get("total_joules").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("latency_ms").unwrap().get("TTLT ms").is_some());
+        // execution details must not leak into the artifact
+        assert!(v.get("workers").is_none());
+    }
+}

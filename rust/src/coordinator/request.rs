@@ -22,12 +22,20 @@ impl ServingRequest {
 pub struct Completion {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// Queue-entry timestamp on the coordinator clock, seconds.
+    pub arrival_s: f64,
     /// Time spent waiting in the queue before the batch formed, seconds.
     pub queue_wait_s: f64,
     /// Prefill latency of the batch that served this request.
     pub ttft_s: f64,
+    /// Mean decode-step latency of the serving batch.
+    pub tpot_s: f64,
     /// End-to-end latency from dequeue to last token.
     pub ttlt_s: f64,
+    /// Prompt length before padding.
+    pub prompt_len: usize,
+    /// Index of the batch that served this request.
+    pub batch: usize,
 }
 
 #[cfg(test)]

@@ -1,38 +1,54 @@
-//! The serving loop: queue → batcher → engine → completions.
+//! The wall-clock serving loop: queue → batcher → backend → completions.
 //!
-//! Single-worker synchronous loop (the engine owns one PJRT client and
-//! the dev models are small): pull up to max-batch requests, plan a
-//! compiled-shape batch, run prefill + decode, emit per-request
-//! completions with the latency decomposition ELANA reports. Used by
-//! `examples/serve_profile.rs` to reproduce the paper's batched-request
-//! TTLT workloads on the real engine.
+//! Single-worker synchronous loop over any `ExecutionBackend` (the real
+//! engine owns one PJRT client and the dev models are small): pull up
+//! to max-batch requests, plan a compiled-shape batch, run prefill +
+//! decode through the trait, emit per-request completions with the
+//! latency decomposition ELANA reports. `elana serve --device cpu`
+//! drives it via `coordinator::simulate::run`; the virtual-time
+//! simulator in `coordinator::simulate` is the multi-replica,
+//! deterministic counterpart.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::engine::{InferenceEngine, TokenBatch};
+use crate::backend::ExecutionBackend;
+use crate::engine::TokenBatch;
+use crate::util::stats::Summary;
 use crate::util::timer::{Clock, SystemClock};
 
 use super::batcher::{plan_batch, BatchPolicy};
 use super::queue::RequestQueue;
 use super::request::{Completion, ServingRequest};
+use super::simulate::ServedBatch;
 
 /// Aggregate serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
     pub completions: Vec<Completion>,
-    pub batches_formed: usize,
-    /// Mean padding waste across batches (compiled-shape overhead).
-    pub mean_padding_waste: f64,
-    /// Total busy time of the engine, seconds.
+    /// Executed batches, in dequeue order (clock-absolute timestamps).
+    pub batches: Vec<ServedBatch>,
+    /// Total busy time of the backend, seconds.
     pub busy_s: f64,
     /// Wall time of the serving run, seconds.
     pub wall_s: f64,
+    /// (start, end) of the run on the coordinator clock — the energy
+    /// window for the backend's sampler log.
+    pub span: (f64, f64),
 }
 
 impl ServerMetrics {
+    pub fn batches_formed(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Mean padding waste across batches (compiled-shape overhead).
+    pub fn mean_padding_waste(&self) -> f64 {
+        super::simulate::mean_padding_waste(&self.batches)
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         if self.wall_s == 0.0 {
             return 0.0;
@@ -49,28 +65,31 @@ impl ServerMetrics {
         toks as f64 / self.wall_s
     }
 
+    /// TTLT summary over completions (dequeue → last token), via the
+    /// shared `util::stats::Summary` percentile math.
+    pub fn ttlt_summary(&self) -> Option<Summary> {
+        let samples: Vec<f64> =
+            self.completions.iter().map(|c| c.ttlt_s).collect();
+        Summary::from_samples(&samples)
+    }
+
     pub fn mean_ttlt_s(&self) -> f64 {
-        if self.completions.is_empty() {
-            return 0.0;
-        }
-        self.completions.iter().map(|c| c.ttlt_s).sum::<f64>()
-            / self.completions.len() as f64
+        self.ttlt_summary().map(|s| s.mean).unwrap_or(0.0)
     }
 }
 
 /// Drain the queue until it is closed and empty, serving batches on the
 /// calling thread. Returns when every accepted request has completed.
-pub fn serve(engine: &mut InferenceEngine, queue: &RequestQueue,
+pub fn serve(backend: &mut dyn ExecutionBackend, queue: &RequestQueue,
              policy: &BatchPolicy) -> Result<ServerMetrics> {
-    serve_with_clock(engine, queue, policy, &SystemClock)
+    serve_with_clock(backend, queue, policy, &SystemClock)
 }
 
-pub fn serve_with_clock(engine: &mut InferenceEngine, queue: &RequestQueue,
-                        policy: &BatchPolicy, clock: &dyn Clock)
-                        -> Result<ServerMetrics> {
+pub fn serve_with_clock(backend: &mut dyn ExecutionBackend,
+                        queue: &RequestQueue, policy: &BatchPolicy,
+                        clock: &dyn Clock) -> Result<ServerMetrics> {
     let mut metrics = ServerMetrics::default();
     let t_start = clock.now();
-    let mut waste_sum = 0.0;
     let mut carry: Vec<ServingRequest> = Vec::new();
 
     loop {
@@ -95,28 +114,42 @@ pub fn serve_with_clock(engine: &mut InferenceEngine, queue: &RequestQueue,
         let dequeue_t = clock.now();
         let tb = TokenBatch::new(plan.exec_batch, plan.padded_prompt_len,
                                  plan.tokens.clone())?;
-        let run = engine.generate(&tb, plan.gen_len)?;
+        let run = backend.generate(&tb, plan.gen_len)?;
         let done_t = clock.now();
 
-        metrics.batches_formed += 1;
-        waste_sum += plan.padding_waste();
+        let b_index = metrics.batches.len();
         metrics.busy_s += done_t - dequeue_t;
 
         for (row, req) in plan.requests.iter().enumerate() {
             metrics.completions.push(Completion {
                 id: req.id,
-                tokens: run.tokens[row].clone(),
+                tokens: run.tokens.get(row).cloned().unwrap_or_default(),
+                arrival_s: req.enqueued_at,
                 queue_wait_s: (dequeue_t - req.enqueued_at).max(0.0),
-                ttft_s: run.ttft.as_secs_f64(),
+                ttft_s: run.ttft_s,
+                tpot_s: run.tpot_mean_s(),
                 ttlt_s: done_t - dequeue_t,
+                prompt_len: req.prompt.len(),
+                batch: b_index,
             });
         }
+        metrics.batches.push(ServedBatch {
+            index: b_index,
+            replica: 0,
+            dequeue_s: dequeue_t,
+            exec_batch: plan.exec_batch,
+            padded_prompt_len: plan.padded_prompt_len,
+            gen_len: plan.gen_len,
+            real_rows: plan.real_rows(),
+            padding_waste: plan.padding_waste(),
+            service_s: done_t - dequeue_t,
+            joules: None,
+        });
     }
 
-    metrics.wall_s = clock.now() - t_start;
-    if metrics.batches_formed > 0 {
-        metrics.mean_padding_waste = waste_sum / metrics.batches_formed as f64;
-    }
+    let t_end = clock.now();
+    metrics.span = (t_start, t_end);
+    metrics.wall_s = t_end - t_start;
     Ok(metrics)
 }
 
@@ -149,6 +182,7 @@ pub fn feed_trace(queue: Arc<RequestQueue>,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::EngineBackend;
     use crate::runtime::Manifest;
 
     fn policy() -> BatchPolicy {
@@ -160,49 +194,55 @@ mod tests {
         }
     }
 
-    fn engine() -> Option<InferenceEngine> {
+    fn backend() -> Option<EngineBackend> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
         if !std::path::Path::new(dir).join("manifest.json").exists() {
             return None;
         }
         let m = Manifest::load(dir).unwrap();
-        Some(InferenceEngine::load_precompiled(&m, "elana-tiny").unwrap())
+        Some(EngineBackend::new(&m, "elana-tiny").unwrap())
     }
 
     #[test]
     fn serves_all_queued_requests() {
-        let Some(mut e) = engine() else { return };
+        let Some(mut b) = backend() else { return };
         let q = RequestQueue::new(64);
         let mut gen = crate::workload::PromptGen::new(512, 1);
         for i in 0..6 {
             q.push(ServingRequest::new(i, gen.prompt(12), 4, 0.0));
         }
         q.close();
-        let m = serve(&mut e, &q, &policy()).unwrap();
+        let m = serve(&mut b, &q, &policy()).unwrap();
         assert_eq!(m.completions.len(), 6);
         let mut ids: Vec<u64> = m.completions.iter().map(|c| c.id).collect();
         ids.sort();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
-        assert!(m.batches_formed >= 2, "6 reqs / max 4 => >= 2 batches");
+        assert!(m.batches_formed() >= 2, "6 reqs / max 4 => >= 2 batches");
         for c in &m.completions {
             assert_eq!(c.tokens.len(), 4);
             assert!(c.ttlt_s >= c.ttft_s);
+            assert!(c.tpot_s > 0.0);
+            assert!(c.batch < m.batches.len());
+            assert_eq!(c.prompt_len, 12);
         }
         assert!(m.throughput_rps() > 0.0);
         assert!(m.tokens_per_s() > 0.0);
+        assert!(m.mean_padding_waste() > 0.0, "12-token prompts pad");
+        assert!(m.span.1 >= m.span.0);
     }
 
     #[test]
     fn trace_feeding_end_to_end() {
-        let Some(mut e) = engine() else { return };
+        let Some(mut b) = backend() else { return };
         let q = Arc::new(RequestQueue::new(16));
         let trace = crate::workload::RequestTrace::poisson(
             8, 200.0, 8, 16, 3, 512, 42);
         let feeder = feed_trace(q.clone(), trace, 1.0);
-        let m = serve(&mut e, &q, &policy()).unwrap();
+        let m = serve(&mut b, &q, &policy()).unwrap();
         assert_eq!(feeder.join().unwrap(), 8);
         assert_eq!(m.completions.len(), 8);
         assert!(m.mean_ttlt_s() > 0.0);
+        assert!(m.ttlt_summary().unwrap().p99 >= m.mean_ttlt_s() * 0.5);
         assert!(m.wall_s >= m.busy_s);
     }
 }

@@ -1,0 +1,541 @@
+//! Virtual-time, multi-replica, open-loop serving simulator — the
+//! trace-replay subsystem behind `elana serve`.
+//!
+//! A discrete-event loop advances virtual time over the request trace:
+//! each free replica forms a compiled-shape batch through the existing
+//! `BatchPolicy`/`plan_batch` (head-of-line co-batching wait, carry-over
+//! of overflow), executes it on an [`ExecutionBackend`] (analytic
+//! timings for hwsim rigs), and completes every request in the batch
+//! with the full latency decomposition ELANA reports: queue wait, TTFT,
+//! TPOT, TTLT.
+//!
+//! Energy is attributed per batch in a second, embarrassingly parallel
+//! pass: batch `i` replays the sensor with a stream derived from
+//! `Rng::mix` — the sweep's per-cell discipline — so the report is
+//! byte-identical at any `--workers` count; workers change wall-clock
+//! time, never results.
+//!
+//! `run` also covers `--device cpu`: the same spec then drives the
+//! wall-clock serving loop (`coordinator::server`) on the real PJRT
+//! engine, so callers never branch on the backend kind.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::backend::{EngineBackend, ExecutionBackend, SimBackend};
+use crate::engine::TokenBatch;
+use crate::runtime::Manifest;
+use crate::sweep::pool;
+use crate::util::Rng;
+use crate::workload::{streams, RequestTrace};
+
+use super::batcher::{plan_batch, BatchPolicy};
+use super::queue::RequestQueue;
+use super::request::ServingRequest;
+use super::server;
+use super::spec::{Arrivals, ServeSpec};
+
+/// One served request with its latency decomposition (virtual seconds
+/// for simulated devices, wall seconds for `cpu`). All latencies are
+/// measured from the request's *arrival*, the way a client sees them.
+#[derive(Debug, Clone)]
+pub struct ServedRequest {
+    pub id: u64,
+    /// Arrival offset from serving start, seconds.
+    pub arrival_s: f64,
+    /// Waiting for batch formation (arrival → dequeue).
+    pub queue_wait_s: f64,
+    /// Arrival → first token.
+    pub ttft_s: f64,
+    /// Mean decode-step latency of the serving batch.
+    pub tpot_s: f64,
+    /// Arrival → last token.
+    pub ttlt_s: f64,
+    /// Index of the batch that served it.
+    pub batch: usize,
+    pub prompt_len: usize,
+    /// Tokens actually generated for this request.
+    pub gen_len: usize,
+}
+
+/// One executed batch.
+#[derive(Debug, Clone)]
+pub struct ServedBatch {
+    pub index: usize,
+    /// Replica that executed it (always 0 on the wall-clock path).
+    pub replica: usize,
+    /// Dequeue time, seconds from serving start.
+    pub dequeue_s: f64,
+    pub exec_batch: usize,
+    pub padded_prompt_len: usize,
+    pub gen_len: usize,
+    /// Real (non-padding) rows.
+    pub real_rows: usize,
+    /// Fraction of compute wasted on batch/length padding.
+    pub padding_waste: f64,
+    /// Execution time of the batch, seconds.
+    pub service_s: f64,
+    /// (J/Prompt, J/Token, J/Request) of the batch execution, when the
+    /// energy pass ran.
+    pub joules: Option<(f64, f64, f64)>,
+}
+
+/// Everything the serve report renders.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub spec: ServeSpec,
+    /// Served requests, sorted by id.
+    pub requests: Vec<ServedRequest>,
+    /// Executed batches, in dequeue order.
+    pub batches: Vec<ServedBatch>,
+    /// Last completion time, seconds from serving start.
+    pub makespan_s: f64,
+    /// Total execution time across replicas, seconds.
+    pub busy_s: f64,
+    /// Whether times are wall-clock (`cpu`) or virtual (rigs).
+    pub wall_clock: bool,
+    /// Total measured energy over the run, joules (sum of batch
+    /// J/Request on the simulated path, sampler integral on `cpu`).
+    pub total_joules: Option<f64>,
+}
+
+impl ServeOutcome {
+    /// Total tokens generated for real requests (padding rows excluded).
+    pub fn generated_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.gen_len).sum()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_s == 0.0 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / self.makespan_s
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.makespan_s == 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens() as f64 / self.makespan_s
+    }
+
+    /// Fraction of replica-time spent executing batches.
+    pub fn replica_busy(&self) -> f64 {
+        let denom = self.spec.replicas as f64 * self.makespan_s;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        self.busy_s / denom
+    }
+
+    /// Mean padding waste across batches.
+    pub fn mean_padding_waste(&self) -> f64 {
+        mean_padding_waste(&self.batches)
+    }
+}
+
+/// Mean padding waste over executed batches — shared by the simulator
+/// outcome and the wall-clock `ServerMetrics` so the two reports can
+/// never disagree on the definition.
+pub fn mean_padding_waste(batches: &[ServedBatch]) -> f64 {
+    if batches.is_empty() {
+        return 0.0;
+    }
+    batches.iter().map(|b| b.padding_waste).sum::<f64>()
+        / batches.len() as f64
+}
+
+/// Run `elana serve` for a spec: virtual-time simulation on hwsim rigs,
+/// wall-clock serving on `cpu`. The single entry point the CLI uses —
+/// no backend branching outside this function.
+pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
+    spec.validate()?;
+    if spec.is_simulated() {
+        // the event loop runs with playback off (timings are analytic);
+        // energy replays per batch in the parallel pass below
+        let mut backend =
+            SimBackend::new(&spec.model, &spec.device, false, spec.seed)?
+                .with_max_seq_len(spec.max_seq_len);
+        let mut outcome = simulate(spec, &mut backend)?;
+        if spec.energy {
+            attribute_energy(spec, &mut outcome)?;
+        }
+        Ok(outcome)
+    } else {
+        serve_wall_clock(spec)
+    }
+}
+
+/// Build the request trace a spec describes. The trace stream is
+/// domain-separated from every other consumer of the seed.
+pub fn build_trace(spec: &ServeSpec, vocab_size: usize)
+                   -> Result<RequestTrace> {
+    match &spec.arrivals {
+        Arrivals::Poisson { rate_rps } => {
+            Ok(RequestTrace::poisson_for_cell(
+                spec.seed, streams::SERVE_TRACE, spec.requests, *rate_rps,
+                spec.prompt_lo, spec.prompt_hi, spec.gen_len, vocab_size))
+        }
+        Arrivals::Trace { path } => RequestTrace::load(
+            path, vocab_size, Rng::mix(spec.seed, streams::SERVE_TRACE)),
+    }
+}
+
+/// Drive the discrete-event loop against a deterministic backend.
+/// Virtual time means the loop itself is single-threaded and exactly
+/// reproducible; all heavy lifting (sensor playback) happens in the
+/// energy pass.
+pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
+                -> Result<ServeOutcome> {
+    ensure!(backend.deterministic(),
+            "the virtual-time serving simulator needs an analytic \
+             backend (wall-clock serving handles the rest)");
+    let trace = build_trace(spec, backend.vocab_size())?;
+    let policy = spec.sim_policy();
+    let reqs = trace.requests;
+    let max_b = policy.max_batch();
+
+    let mut next = 0usize; // first trace request not yet admitted
+    let mut carry: Vec<ServingRequest> = Vec::new();
+    let mut free_at = vec![0.0f64; spec.replicas];
+    let mut served: Vec<ServedRequest> = Vec::new();
+    let mut batches: Vec<ServedBatch> = Vec::new();
+    let mut busy_s = 0.0;
+    let mut makespan_s = 0.0f64;
+
+    while !carry.is_empty() || next < reqs.len() {
+        // earliest-free replica; ties broken by index for determinism
+        let replica = (0..free_at.len())
+            .min_by(|&a, &b| {
+                free_at[a].partial_cmp(&free_at[b]).expect("finite times")
+                    .then(a.cmp(&b))
+            })
+            .expect("replicas >= 1");
+        let free = free_at[replica];
+
+        let head_arrival = carry.first().map(|r| r.enqueued_at)
+            .unwrap_or_else(|| reqs[next].arrival_s);
+        let t0 = free.max(head_arrival);
+
+        // the head waits at most max_wait_s for co-batching, but the
+        // batch closes as soon as a full compiled batch is waiting
+        let need = max_b.saturating_sub(carry.len());
+        let t_fill = if need == 0 {
+            f64::NEG_INFINITY // carry alone already fills a batch
+        } else if next + need <= reqs.len() {
+            reqs[next + need - 1].arrival_s
+        } else {
+            f64::INFINITY // the trace can never fill this batch
+        };
+        let close = (head_arrival + policy.max_wait_s).max(t0);
+        let dequeue_s = close.min(t_fill.max(t0));
+
+        // admit everything that has arrived by the dequeue instant
+        let mut waiting = std::mem::take(&mut carry);
+        while next < reqs.len() && reqs[next].arrival_s <= dequeue_s {
+            let r = &reqs[next];
+            waiting.push(ServingRequest::new(r.id, r.prompt.clone(),
+                                             r.gen_len, r.arrival_s));
+            next += 1;
+        }
+
+        let b_index = batches.len();
+        let (plan, rest) = plan_batch(&policy, waiting)
+            .with_context(|| format!("forming serve batch #{b_index}"))?;
+        carry = rest;
+
+        let tb = TokenBatch::new(plan.exec_batch, plan.padded_prompt_len,
+                                 plan.tokens.clone())?;
+        let run = backend.generate(&tb, plan.gen_len)
+            .with_context(|| format!("executing serve batch #{b_index}"))?;
+
+        let service_s = run.ttlt_s;
+        let done = dequeue_s + service_s;
+        free_at[replica] = done;
+        busy_s += service_s;
+        makespan_s = makespan_s.max(done);
+
+        for req in &plan.requests {
+            let wait = (dequeue_s - req.enqueued_at).max(0.0);
+            served.push(ServedRequest {
+                id: req.id,
+                arrival_s: req.enqueued_at,
+                queue_wait_s: wait,
+                ttft_s: wait + run.ttft_s,
+                tpot_s: run.tpot_mean_s(),
+                ttlt_s: wait + run.ttlt_s,
+                batch: b_index,
+                prompt_len: req.prompt.len(),
+                gen_len: plan.gen_len,
+            });
+        }
+        batches.push(ServedBatch {
+            index: b_index,
+            replica,
+            dequeue_s,
+            exec_batch: plan.exec_batch,
+            padded_prompt_len: plan.padded_prompt_len,
+            gen_len: plan.gen_len,
+            real_rows: plan.real_rows(),
+            padding_waste: plan.padding_waste(),
+            service_s,
+            joules: None,
+        });
+    }
+
+    served.sort_by_key(|r| r.id);
+    Ok(ServeOutcome {
+        spec: spec.clone(),
+        requests: served,
+        batches,
+        makespan_s,
+        busy_s,
+        wall_clock: false,
+        total_joules: None,
+    })
+}
+
+/// Parallel per-batch energy attribution. Batch `i` gets its own
+/// backend with the sensor re-keyed to the
+/// `mix(mix(seed, SERVE_ENERGY), i)` stream, so results depend only on
+/// the batch index — never on which worker thread replays it.
+fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
+                    -> Result<()> {
+    let shapes: Vec<(usize, usize, usize)> = outcome
+        .batches
+        .iter()
+        .map(|b| (b.exec_batch, b.padded_prompt_len, b.gen_len))
+        .collect();
+    let base = Rng::mix(spec.seed, streams::SERVE_ENERGY);
+    let results = pool::run_indexed(
+        spec.workers, shapes.len(),
+        |i| -> Result<(f64, f64, f64)> {
+            let (batch, prompt, gen) = shapes[i];
+            let mut b = SimBackend::new(&spec.model, &spec.device, true,
+                                        Rng::mix(base, i as u64))?
+                .with_max_seq_len(spec.max_seq_len);
+            let tb = TokenBatch::new(batch, prompt,
+                                     vec![0; batch * prompt])?;
+            let run = b.generate(&tb, gen)?;
+            b.run_energy(&run)
+        });
+    let mut total = 0.0;
+    for (b, r) in outcome.batches.iter_mut().zip(results) {
+        let joules = r.with_context(|| {
+            format!("energy attribution for serve batch #{}", b.index)
+        })?;
+        total += joules.2;
+        b.joules = Some(joules);
+    }
+    outcome.total_joules = Some(total);
+    Ok(())
+}
+
+/// Wall-clock serving on the real engine: feed the trace into the
+/// bounded queue at its recorded arrival times and drain it through
+/// the `coordinator::server` loop (which itself runs against the
+/// `ExecutionBackend` trait).
+fn serve_wall_clock(spec: &ServeSpec) -> Result<ServeOutcome> {
+    let manifest = Manifest::load_default()?;
+    let mut backend = EngineBackend::new(&manifest, &spec.model)?;
+    let mm = manifest.model(&spec.model)?;
+    let policy = BatchPolicy {
+        allowed_batches: mm.batch_sizes(),
+        prompt_buckets: mm.prompt_buckets(1),
+        max_seq_len: mm.max_seq_len,
+        max_wait_s: spec.max_wait_s,
+    };
+    // clamp the prompt range into the compiled buckets (dev models have
+    // small contexts; the report shows the lengths actually used)
+    let top_bucket = policy.prompt_buckets.last().copied().unwrap_or(16);
+    let mut clamped = spec.clone();
+    clamped.prompt_hi = spec.prompt_hi.min(top_bucket);
+    clamped.prompt_lo = spec.prompt_lo.min(clamped.prompt_hi);
+    let trace = build_trace(&clamped, mm.vocab_size)?;
+
+    let queue = Arc::new(RequestQueue::new(256));
+    let feeder = server::feed_trace(queue.clone(), trace, 1.0);
+    let metrics = server::serve(&mut backend, &queue, &policy)?;
+    feeder.join().ok();
+
+    let mut outcome = outcome_from_metrics(spec, &metrics);
+    if spec.energy {
+        outcome.total_joules =
+            Some(backend.window_energy(metrics.span.0, metrics.span.1));
+    }
+    Ok(outcome)
+}
+
+/// Convert wall-clock `ServerMetrics` into the common report form,
+/// normalizing clock timestamps to offsets from serving start.
+pub fn outcome_from_metrics(spec: &ServeSpec,
+                            m: &server::ServerMetrics) -> ServeOutcome {
+    let t0 = m.span.0;
+    let mut requests: Vec<ServedRequest> = m
+        .completions
+        .iter()
+        .map(|c| ServedRequest {
+            id: c.id,
+            arrival_s: (c.arrival_s - t0).max(0.0),
+            queue_wait_s: c.queue_wait_s,
+            ttft_s: c.queue_wait_s + c.ttft_s,
+            tpot_s: c.tpot_s,
+            ttlt_s: c.queue_wait_s + c.ttlt_s,
+            batch: c.batch,
+            prompt_len: c.prompt_len,
+            gen_len: c.tokens.len(),
+        })
+        .collect();
+    requests.sort_by_key(|r| r.id);
+    let batches: Vec<ServedBatch> = m
+        .batches
+        .iter()
+        .map(|b| ServedBatch {
+            dequeue_s: (b.dequeue_s - t0).max(0.0),
+            joules: None,
+            ..b.clone()
+        })
+        .collect();
+    ServeOutcome {
+        spec: spec.clone(),
+        requests,
+        batches,
+        makespan_s: m.wall_s,
+        busy_s: m.busy_s,
+        wall_clock: true,
+        total_joules: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec() -> ServeSpec {
+        ServeSpec {
+            requests: 24,
+            arrivals: Arrivals::Poisson { rate_rps: 20.0 },
+            prompt_lo: 16,
+            prompt_hi: 64,
+            gen_len: 16,
+            energy: false,
+            seed: 7,
+            ..ServeSpec::default()
+        }
+    }
+
+    #[test]
+    fn serves_every_request_exactly_once() {
+        let o = run(&quick_spec()).unwrap();
+        assert_eq!(o.requests.len(), 24);
+        let mut ids: Vec<u64> = o.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        // conservation across batches
+        let rows: usize = o.batches.iter().map(|b| b.real_rows).sum();
+        assert_eq!(rows, 24);
+        assert!(o.makespan_s > 0.0);
+        assert!(o.busy_s > 0.0);
+        assert!(o.throughput_rps() > 0.0);
+        assert!(o.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn latency_decomposition_is_ordered() {
+        let o = run(&quick_spec()).unwrap();
+        for r in &o.requests {
+            assert!(r.queue_wait_s >= 0.0, "{r:?}");
+            assert!(r.ttft_s >= r.queue_wait_s, "{r:?}");
+            assert!(r.ttlt_s >= r.ttft_s, "{r:?}");
+            assert!(r.tpot_s > 0.0, "{r:?}");
+            assert!(r.gen_len >= 1, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let a = run(&quick_spec()).unwrap();
+        let b = run(&quick_spec()).unwrap();
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.ttlt_s, y.ttlt_s);
+            assert_eq!(x.queue_wait_s, y.queue_wait_s);
+        }
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn more_replicas_cut_queueing_under_overload() {
+        // 60 requests arriving at ~200 rps overwhelm one replica
+        let mut s1 = quick_spec();
+        s1.requests = 60;
+        s1.arrivals = Arrivals::Poisson { rate_rps: 200.0 };
+        let mut s4 = s1.clone();
+        s4.replicas = 4;
+        let o1 = run(&s1).unwrap();
+        let o4 = run(&s4).unwrap();
+        let mean_wait = |o: &ServeOutcome| {
+            o.requests.iter().map(|r| r.queue_wait_s).sum::<f64>()
+                / o.requests.len() as f64
+        };
+        assert!(mean_wait(&o4) <= mean_wait(&o1),
+                "4 replicas must not queue worse than 1 ({} vs {})",
+                mean_wait(&o4), mean_wait(&o1));
+        assert!(o4.makespan_s <= o1.makespan_s);
+    }
+
+    #[test]
+    fn energy_attribution_covers_every_batch() {
+        let mut s = quick_spec();
+        s.energy = true;
+        let o = run(&s).unwrap();
+        assert!(o.batches.iter().all(|b| b.joules.is_some()));
+        let total: f64 = o.batches.iter()
+            .map(|b| b.joules.unwrap().2).sum();
+        assert_eq!(o.total_joules, Some(total));
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn energy_pass_thread_count_never_changes_joules() {
+        let mut base = quick_spec();
+        base.energy = true;
+        let runs: Vec<Vec<(f64, f64, f64)>> = [1usize, 3, 8]
+            .iter()
+            .map(|&workers| {
+                let mut s = base.clone();
+                s.workers = workers;
+                run(&s).unwrap().batches.iter()
+                    .map(|b| b.joules.unwrap()).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+    }
+
+    #[test]
+    fn trace_file_arrivals_replay() {
+        let dir = std::env::temp_dir().join(format!(
+            "elana_serve_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        std::fs::write(&path, r#"{"requests": [
+            {"arrival_s": 0.0, "prompt_len": 32, "gen_len": 8},
+            {"arrival_s": 0.0, "prompt": [5, 6, 7, 8], "gen_len": 8},
+            {"arrival_s": 2.0, "prompt_len": 16, "gen_len": 4}
+        ]}"#).unwrap();
+        let mut s = quick_spec();
+        s.arrivals = Arrivals::Trace {
+            path: path.to_string_lossy().into_owned(),
+        };
+        let o = run(&s).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(o.requests.len(), 3);
+        assert_eq!(o.requests[1].prompt_len, 4);
+        // the late request cannot be served before it arrives
+        assert!(o.requests[2].arrival_s >= 2.0 - 1e-9);
+        let late_batch = &o.batches[o.requests[2].batch];
+        assert!(late_batch.dequeue_s >= 2.0 - 1e-9);
+    }
+}

@@ -1,0 +1,243 @@
+//! `elana serve` specification: arrival process, backend, batching
+//! policy, and execution knobs.
+//!
+//! Two kinds of knob live here and the distinction matters for
+//! determinism:
+//!
+//! * **semantic** — model, device, arrivals, `replicas` (simulated
+//!   engine replicas serving in parallel virtual time), batching
+//!   parameters. These change the report.
+//! * **execution** — `workers`, the thread count of the per-batch
+//!   energy-attribution pass. Like the sweep's `threads`, it never
+//!   changes a byte of output, only wall-clock time.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::hwsim::device;
+use crate::models;
+
+use super::batcher::BatchPolicy;
+
+/// Arrival process of the open-loop load generator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrivals {
+    /// Poisson arrivals at a mean rate (requests/s).
+    Poisson { rate_rps: f64 },
+    /// Replay a recorded JSON trace file (see
+    /// `workload::RequestTrace::from_json` for the schema).
+    Trace { path: String },
+}
+
+/// Everything `elana serve` needs to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Registry model name.
+    pub model: String,
+    /// hwsim rig name (virtual-time simulator) or `cpu` (wall-clock
+    /// serving on the PJRT engine).
+    pub device: String,
+    pub arrivals: Arrivals,
+    /// Number of requests the Poisson generator emits (trace files
+    /// carry their own length).
+    pub requests: usize,
+    /// Prompt lengths drawn uniformly in [lo, hi].
+    pub prompt_lo: usize,
+    pub prompt_hi: usize,
+    pub gen_len: usize,
+    /// Simulated engine replicas serving in parallel (virtual time).
+    pub replicas: usize,
+    /// Worker threads for the energy-attribution pass (0 = one per
+    /// core). Never affects results, only wall-clock.
+    pub workers: usize,
+    /// Base seed; arrivals, prompts, and per-batch sensor streams all
+    /// derive from it through domain-separated `Rng::mix` streams.
+    pub seed: u64,
+    /// Attribute per-batch energy through the sensor playback pipeline.
+    pub energy: bool,
+    /// Head-of-line co-batching wait, seconds: a dequeued batch closes
+    /// early once a full compiled batch is waiting.
+    pub max_wait_s: f64,
+    /// Context cap the batcher enforces (padded prompt + generation).
+    pub max_seq_len: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> ServeSpec {
+        ServeSpec {
+            model: "llama-3.1-8b".to_string(),
+            device: "a6000".to_string(),
+            arrivals: Arrivals::Poisson { rate_rps: 8.0 },
+            requests: 64,
+            prompt_lo: 64,
+            prompt_hi: 256,
+            gen_len: 64,
+            replicas: 1,
+            workers: 0,
+            seed: 0,
+            energy: true,
+            max_wait_s: 0.05,
+            max_seq_len: 4096,
+        }
+    }
+}
+
+/// Compiled batch shapes the virtual-time simulator assumes — the
+/// fixed-shape discipline the engine's manifest imposes on real
+/// serving, applied to the sim.
+pub const SIM_BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+impl ServeSpec {
+    pub fn is_simulated(&self) -> bool {
+        self.device != "cpu"
+    }
+
+    /// Smallest power-of-two prompt bucket ≥ `len` (min 16).
+    fn bucket_ceil(len: usize) -> usize {
+        let mut b = 16usize;
+        while b < len {
+            b *= 2;
+        }
+        b
+    }
+
+    /// Prompt buckets the simulator pretends to have compiled: powers
+    /// of two from 16 up to the workload's largest prompt.
+    pub fn sim_buckets(&self) -> Vec<usize> {
+        let top = Self::bucket_ceil(self.prompt_hi);
+        let mut buckets = Vec::new();
+        let mut b = 16usize;
+        while b <= top {
+            buckets.push(b);
+            b *= 2;
+        }
+        buckets
+    }
+
+    /// Batching policy for the virtual-time simulator.
+    pub fn sim_policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            allowed_batches: SIM_BATCHES.to_vec(),
+            prompt_buckets: self.sim_buckets(),
+            max_seq_len: self.max_seq_len,
+            max_wait_s: self.max_wait_s,
+        }
+    }
+
+    /// Validate every knob before any work starts, listing known names
+    /// on a miss (the sweep-spec discipline).
+    pub fn validate(&self) -> Result<()> {
+        if models::lookup(&self.model).is_none() {
+            bail!("unknown model `{}` (known: {})", self.model,
+                  models::registry::model_names().join(", "));
+        }
+        if self.device != "cpu"
+            && device::rig_by_name(&self.device).is_none()
+        {
+            bail!("unknown device `{}` (known: cpu, {})", self.device,
+                  device::all_rig_names().join(", "));
+        }
+        ensure!(self.replicas >= 1, "serve needs at least one replica");
+        ensure!(self.is_simulated() || self.replicas == 1,
+                "--replicas only applies to the virtual-time simulator; \
+                 wall-clock serving on `cpu` runs one engine");
+        ensure!(self.prompt_lo >= 1,
+                "prompt lengths must be >= 1 (got lo {})", self.prompt_lo);
+        ensure!(self.prompt_lo <= self.prompt_hi,
+                "prompt range is inverted ({}..{})", self.prompt_lo,
+                self.prompt_hi);
+        ensure!(self.gen_len >= 1, "gen length must be >= 1");
+        ensure!(self.max_wait_s >= 0.0, "max wait must be >= 0");
+        match &self.arrivals {
+            Arrivals::Poisson { rate_rps } => {
+                ensure!(*rate_rps > 0.0,
+                        "arrival rate must be positive (got {rate_rps})");
+                ensure!(self.requests >= 1,
+                        "serve needs at least one request");
+            }
+            Arrivals::Trace { path } => {
+                ensure!(!path.is_empty(), "trace path is empty");
+            }
+        }
+        if self.is_simulated() {
+            let top = Self::bucket_ceil(self.prompt_hi);
+            ensure!(self.max_seq_len > top,
+                    "max_seq_len {} leaves no room to generate past the \
+                     {top}-token prompt bucket", self.max_seq_len);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_valid() {
+        let s = ServeSpec::default();
+        s.validate().unwrap();
+        assert!(s.is_simulated());
+        assert_eq!(s.replicas, 1);
+        assert!(s.energy);
+    }
+
+    #[test]
+    fn sim_policy_covers_the_prompt_range() {
+        let s = ServeSpec::default(); // prompts 64..256
+        let p = s.sim_policy();
+        assert_eq!(p.prompt_buckets, vec![16, 32, 64, 128, 256]);
+        assert_eq!(p.max_batch(), 32);
+        assert!(p.fit_bucket(s.prompt_hi).is_some());
+        // every bucket leaves generation room
+        assert!(p.prompt_buckets.iter()
+                .all(|&b| b + 1 <= p.max_seq_len));
+    }
+
+    #[test]
+    fn bucket_ceil_is_a_power_of_two_cover() {
+        assert_eq!(ServeSpec::bucket_ceil(1), 16);
+        assert_eq!(ServeSpec::bucket_ceil(16), 16);
+        assert_eq!(ServeSpec::bucket_ceil(17), 32);
+        assert_eq!(ServeSpec::bucket_ceil(1000), 1024);
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let bad = [
+            ServeSpec { model: "gpt-17".into(), ..ServeSpec::default() },
+            ServeSpec { device: "tpu-v9".into(), ..ServeSpec::default() },
+            ServeSpec { replicas: 0, ..ServeSpec::default() },
+            ServeSpec { prompt_lo: 100, prompt_hi: 50,
+                        ..ServeSpec::default() },
+            ServeSpec {
+                arrivals: Arrivals::Poisson { rate_rps: 0.0 },
+                ..ServeSpec::default()
+            },
+            ServeSpec { requests: 0, ..ServeSpec::default() },
+            // max_seq_len equal to the top bucket: no gen room
+            ServeSpec { max_seq_len: 256, ..ServeSpec::default() },
+            // replicas are a simulator concept; cpu runs one engine
+            ServeSpec {
+                device: "cpu".into(),
+                model: "elana-tiny".into(),
+                replicas: 2,
+                ..ServeSpec::default()
+            },
+        ];
+        for s in bad {
+            assert!(s.validate().is_err(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn cpu_device_is_accepted() {
+        // elana-tiny is in the registry (executable dev model)
+        let s = ServeSpec {
+            device: "cpu".into(),
+            model: "elana-tiny".into(),
+            ..ServeSpec::default()
+        };
+        s.validate().unwrap();
+        assert!(!s.is_simulated());
+    }
+}

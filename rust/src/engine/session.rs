@@ -31,13 +31,23 @@ pub struct GenerationResult {
 }
 
 impl GenerationResult {
-    /// Mean decode latency in seconds (the TPOT statistic).
+    /// Mean decode latency in seconds (the TPOT statistic), accumulated
+    /// through `util::stats::Welford` so every path shares one
+    /// aggregation implementation.
     pub fn tpot_mean(&self) -> f64 {
-        if self.step_times.is_empty() {
-            return 0.0;
+        let mut w = crate::util::stats::Welford::new();
+        for d in &self.step_times {
+            w.push(d.as_secs_f64());
         }
-        self.step_times.iter().map(|d| d.as_secs_f64()).sum::<f64>()
-            / self.step_times.len() as f64
+        if w.count() == 0 { 0.0 } else { w.mean() }
+    }
+
+    /// Full decode-step summary (mean/std/percentiles) over the step
+    /// stream; `None` when no decode step ran.
+    pub fn step_summary(&self) -> Option<crate::util::stats::Summary> {
+        let samples: Vec<f64> =
+            self.step_times.iter().map(|d| d.as_secs_f64()).collect();
+        crate::util::stats::Summary::from_samples(&samples)
     }
 }
 
@@ -328,5 +338,10 @@ mod tests {
             ttlt: Duration::from_millis(20),
         };
         assert!((r.tpot_mean() - 0.003).abs() < 1e-9);
+        let s = r.step_summary().unwrap();
+        assert!((s.mean - r.tpot_mean()).abs() < 1e-12,
+                "Summary and Welford must agree on the mean");
+        assert_eq!(s.min, 0.002);
+        assert_eq!(s.max, 0.004);
     }
 }

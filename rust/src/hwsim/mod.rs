@@ -17,6 +17,10 @@
 //!   per-phase power (drives the simulated NVML sensor).
 //! * [`kernels`] — synthesizes a per-kernel timeline for the trace
 //!   recorder (Figure 1).
+//!
+//! Consumers reach the simulator through `backend::SimBackend` (the
+//! `ExecutionBackend` implementation wrapping [`simulate`]); only the
+//! trace exporter and the golden tests call [`simulate`] directly.
 
 pub mod cost;
 pub mod device;

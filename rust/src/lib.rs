@@ -16,7 +16,11 @@
 //!   (reproduces the paper's Table 2).
 //! * [`runtime`] — PJRT wrapper: manifest, weights, executables.
 //! * [`engine`] — prefill/decode inference engine over the runtime.
-//! * [`coordinator`] — request queue, dynamic batcher, serving loop.
+//! * [`backend`] — the `ExecutionBackend` trait: hwsim and the real
+//!   engine behind one execution + energy interface.
+//! * [`coordinator`] — request queue, dynamic batcher, and the
+//!   `elana serve` subsystem (wall-clock loop + virtual-time
+//!   multi-replica serving simulator).
 //! * [`power`] — simulated NVML / jtop sensors + background sampler
 //!   (0.1 s period, the paper's §2.4 methodology).
 //! * [`hwsim`] — roofline device simulator (A6000, Jetson) for
@@ -33,6 +37,7 @@
 //! * [`benchkit`] — micro-benchmark harness used by `cargo bench`.
 //! * [`testkit`] — property-testing support used by unit tests.
 
+pub mod backend;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

@@ -3,23 +3,20 @@
 //!
 //! See `elana help` / `cli::USAGE` for the commands. Python never runs
 //! here: artifacts were AOT-compiled by `make artifacts`, and everything
-//! on this path is Rust + PJRT.
-
-use std::sync::Arc;
+//! on this path is Rust + PJRT. Execution always flows through the
+//! `backend::ExecutionBackend` trait — this file never branches on
+//! simulated-vs-engine.
 
 use anyhow::Result;
 
 use elana::cli::{self, Command};
 use elana::config;
-use elana::coordinator::{self, BatchPolicy, RequestQueue};
-use elana::engine::InferenceEngine;
+use elana::coordinator::{self, ServeSpec};
 use elana::hwsim;
 use elana::models;
 use elana::profiler::{self, report, ProfileSpec};
-use elana::runtime::Manifest;
 use elana::sweep;
 use elana::trace::{self, TraceRecorder};
-use elana::workload::RequestTrace;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -52,12 +49,7 @@ fn run(cmd: Command) -> Result<()> {
             if let Some(r) = runs {
                 spec.latency_runs = r;
             }
-            let outcome = if spec.is_simulated() {
-                profiler::profile_simulated(&spec)?
-            } else {
-                let manifest = Manifest::load_default()?;
-                profiler::session::profile_engine(&manifest, &spec.quick())?
-            };
+            let outcome = profiler::profile(&spec)?;
             let title = format!("{} on {}  [{}]", outcome.model,
                                 outcome.device, outcome.workload.label());
             print!("{}", report::render_latency_table(&title, &[outcome]));
@@ -69,8 +61,8 @@ fn run(cmd: Command) -> Result<()> {
         Command::Trace { model, device, workload, out } => {
             cmd_trace(&model, &device, &workload, &out)?;
         }
-        Command::Serve { model, requests, rate_rps } => {
-            cmd_serve(&model, requests, rate_rps)?;
+        Command::Serve { spec, json, out } => {
+            cmd_serve(spec, json, out)?;
         }
     }
     Ok(())
@@ -109,7 +101,7 @@ fn cmd_suite(name: &str) -> Result<()> {
     // group rows that share (device, workload) into one paper-style block
     let mut blocks: Vec<(String, Vec<profiler::ProfileOutcome>)> = Vec::new();
     for spec in &suite.specs {
-        let outcome = profiler::profile_simulated(spec)?;
+        let outcome = profiler::profile(spec)?;
         let key = format!("{}  [{}]", outcome.device,
                           outcome.workload.label());
         match blocks.last_mut() {
@@ -189,33 +181,20 @@ fn cmd_trace(model: &str, device: &str, workload: &hwsim::Workload,
     Ok(())
 }
 
-fn cmd_serve(model: &str, requests: usize, rate_rps: f64) -> Result<()> {
-    let manifest = Manifest::load_default()?;
-    let mut engine = InferenceEngine::load_precompiled(&manifest, model)?;
-    let mm = manifest.model(model)?;
-    let policy = BatchPolicy {
-        allowed_batches: mm.batch_sizes(),
-        prompt_buckets: mm.prompt_buckets(1),
-        max_seq_len: mm.max_seq_len,
-        max_wait_s: 0.02,
-    };
-    let queue = Arc::new(RequestQueue::new(256));
-    let max_prompt = policy.prompt_buckets.last().copied().unwrap_or(16)
-        .min(32);
-    let trace = RequestTrace::poisson(requests, rate_rps, 8, max_prompt, 8,
-                                      mm.vocab_size, 7);
-    println!("serving {requests} requests at ~{rate_rps} rps on `{model}`…");
-    let feeder = coordinator::server::feed_trace(queue.clone(), trace, 1.0);
-    let metrics = coordinator::serve(&mut engine, &queue, &policy)?;
-    feeder.join().ok();
-
-    println!("completed {} requests in {:.2} s", metrics.completions.len(),
-             metrics.wall_s);
-    println!("  batches formed:     {}", metrics.batches_formed);
-    println!("  throughput:         {:.2} req/s, {:.1} tok/s",
-             metrics.throughput_rps(), metrics.tokens_per_s());
-    println!("  mean TTLT:          {:.2} ms", metrics.mean_ttlt_s() * 1e3);
-    println!("  mean padding waste: {:.1}%",
-             metrics.mean_padding_waste * 100.0);
+fn cmd_serve(spec: ServeSpec, json: bool, out: Option<String>)
+             -> Result<()> {
+    let outcome = coordinator::simulate::run(&spec)?;
+    if json || out.is_some() {
+        let rendered = coordinator::report::to_json(&outcome).to_string();
+        if let Some(path) = &out {
+            std::fs::write(path, &rendered)?;
+            eprintln!("wrote {path}");
+        }
+        if json {
+            println!("{rendered}");
+            return Ok(());
+        }
+    }
+    print!("{}", coordinator::report::render_markdown(&outcome));
     Ok(())
 }

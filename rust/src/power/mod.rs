@@ -8,6 +8,12 @@
 //! utilization-driven device power model (this testbed has no NVIDIA
 //! GPU): the sampler thread, 0.1 s cadence, window averaging, and
 //! multi-GPU summation are all faithful.
+//!
+//! Both `ExecutionBackend` implementations drive this pipeline:
+//! `backend::EngineBackend` attaches the live [`sampler::PowerSampler`]
+//! to wall-clock runs, while `backend::SimBackend` replays phase
+//! schedules against a seeded [`nvml::NvmlSim`] in virtual time
+//! (`profiler::playback`).
 
 pub mod energy;
 pub mod jtop;

@@ -1,6 +1,7 @@
-//! Latency measurement harnesses: warmup + repetition + statistics.
+//! Latency measurement harnesses: warmup + repetition + statistics,
+//! over any `ExecutionBackend`.
 //!
-//! Reproduces the paper's §2.3 methodology on the real engine:
+//! Reproduces the paper's §2.3 methodology:
 //!
 //! * **TTFT** — isolate the prefill stage, fresh random prompts per run
 //!   (prompt lengths vary in practice, so prefill is *not* shape-cached
@@ -12,10 +13,14 @@
 //!   the CUDA-graph analogue).
 //! * **TTLT** — the full request loop, fewer repetitions (paper: 20 vs
 //!   100), reported alongside its TTFT/TPOT decomposition.
+//!
+//! Each probe also returns its (t0, t1) window on the backend's energy
+//! clock, so the session can window the sampler/playback log into
+//! J/Prompt, J/Token and J/Request (§2.4).
 
 use anyhow::Result;
 
-use crate::engine::InferenceEngine;
+use crate::backend::ExecutionBackend;
 use crate::util::stats::Summary;
 use crate::workload::PromptGen;
 
@@ -38,19 +43,18 @@ impl LatencyStats {
     }
 }
 
-/// All three metrics for one workload on the real engine.
+/// All three metrics for one workload on a stochastic backend.
 #[derive(Debug, Clone)]
 pub struct RunStats {
     pub ttft: LatencyStats,
     pub tpot: LatencyStats,
     pub ttlt: LatencyStats,
-    /// (start, end) timestamps of each phase window on the caller's
-    /// clock, for energy windowing: (ttft windows, tpot windows, ttlt
-    /// windows).
+    /// (start, end) timestamps of each phase window on the backend's
+    /// energy clock: (ttft windows, tpot windows, ttlt windows).
     pub windows: PhaseWindows,
 }
 
-/// Measurement windows (seconds on the shared profiling clock).
+/// Measurement windows (seconds on the backend's energy clock).
 #[derive(Debug, Clone, Default)]
 pub struct PhaseWindows {
     pub ttft: Vec<(f64, f64)>,
@@ -68,66 +72,59 @@ pub struct HarnessConfig {
 }
 
 /// Measure TTFT: `runs` isolated prefills with fresh random prompts.
-pub fn measure_ttft(engine: &mut InferenceEngine, batch: usize,
-                    prompt_len: usize, cfg: &HarnessConfig,
-                    now: &dyn Fn() -> f64)
+pub fn measure_ttft(backend: &mut dyn ExecutionBackend, batch: usize,
+                    prompt_len: usize, cfg: &HarnessConfig)
                     -> Result<(LatencyStats, Vec<(f64, f64)>)> {
-    let vocab = engine.model().vocab_size();
+    let vocab = backend.vocab_size();
     let mut gen = PromptGen::new(vocab, cfg.seed);
     for _ in 0..cfg.warmup {
-        engine.prefill_once(&gen.batch(batch, prompt_len))?;
+        backend.prefill_probe(&gen.batch(batch, prompt_len))?;
     }
     let mut samples = Vec::with_capacity(cfg.latency_runs);
     let mut windows = Vec::with_capacity(cfg.latency_runs);
     for _ in 0..cfg.latency_runs {
         let tb = gen.batch(batch, prompt_len);
-        let t0 = now();
-        let d = engine.prefill_once(&tb)?;
-        windows.push((t0, now()));
-        samples.push(d.as_secs_f64());
+        let (d, win) = backend.prefill_probe(&tb)?;
+        windows.push(win);
+        samples.push(d);
     }
     Ok((LatencyStats::from_samples(samples).expect("runs >= 1"), windows))
 }
 
 /// Measure TPOT: prefill once, then time `runs` decode steps.
-pub fn measure_tpot(engine: &mut InferenceEngine, batch: usize,
-                    prompt_len: usize, cfg: &HarnessConfig,
-                    now: &dyn Fn() -> f64)
+pub fn measure_tpot(backend: &mut dyn ExecutionBackend, batch: usize,
+                    prompt_len: usize, cfg: &HarnessConfig)
                     -> Result<(LatencyStats, Vec<(f64, f64)>)> {
-    let vocab = engine.model().vocab_size();
+    let vocab = backend.vocab_size();
     let mut gen = PromptGen::new(vocab, cfg.seed.wrapping_add(1));
-    let avail = engine.max_new_tokens(prompt_len);
+    let avail = backend.max_seq_len().saturating_sub(prompt_len);
     let steps = cfg.latency_runs.min(avail);
     // warmup: a couple of decode steps on a fresh cache
     let warm = cfg.warmup.min(avail);
     if warm > 0 {
-        engine.decode_probe(&gen.batch(batch, prompt_len), warm)?;
+        backend.decode_probe(&gen.batch(batch, prompt_len), warm)?;
     }
-    let t0 = now();
-    let times = engine.decode_probe(&gen.batch(batch, prompt_len), steps)?;
-    let t1 = now();
-    let samples: Vec<f64> = times.iter().map(|d| d.as_secs_f64()).collect();
+    let (samples, window) =
+        backend.decode_probe(&gen.batch(batch, prompt_len), steps)?;
     // one aggregate window across the decode stream (steps are shorter
     // than the 0.1 s sampling period; the paper averages the window too)
     Ok((LatencyStats::from_samples(samples).expect("steps >= 1"),
-        vec![(t0, t1)]))
+        vec![window]))
 }
 
-/// Measure TTLT: full generate() loops.
-pub fn measure_ttlt(engine: &mut InferenceEngine, batch: usize,
-                    prompt_len: usize, gen_len: usize, cfg: &HarnessConfig,
-                    now: &dyn Fn() -> f64)
+/// Measure TTLT: full generation loops.
+pub fn measure_ttlt(backend: &mut dyn ExecutionBackend, batch: usize,
+                    prompt_len: usize, gen_len: usize, cfg: &HarnessConfig)
                     -> Result<(LatencyStats, Vec<(f64, f64)>)> {
-    let vocab = engine.model().vocab_size();
+    let vocab = backend.vocab_size();
     let mut gen = PromptGen::new(vocab, cfg.seed.wrapping_add(2));
     let mut samples = Vec::with_capacity(cfg.ttlt_runs);
     let mut windows = Vec::with_capacity(cfg.ttlt_runs);
     for _ in 0..cfg.ttlt_runs {
         let tb = gen.batch(batch, prompt_len);
-        let t0 = now();
-        let r = engine.generate(&tb, gen_len)?;
-        windows.push((t0, now()));
-        samples.push(r.ttlt.as_secs_f64());
+        let run = backend.generate(&tb, gen_len)?;
+        windows.push(run.span());
+        samples.push(run.ttlt_s);
     }
     Ok((LatencyStats::from_samples(samples).expect("runs >= 1"), windows))
 }
@@ -135,16 +132,16 @@ pub fn measure_ttlt(engine: &mut InferenceEngine, batch: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::EngineBackend;
     use crate::runtime::Manifest;
-    use crate::util::timer::{Clock, SystemClock};
 
-    fn engine() -> Option<InferenceEngine> {
+    fn backend() -> Option<EngineBackend> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
         if !std::path::Path::new(dir).join("manifest.json").exists() {
             return None;
         }
         let m = Manifest::load(dir).unwrap();
-        Some(InferenceEngine::load_precompiled(&m, "elana-tiny").unwrap())
+        Some(EngineBackend::new(&m, "elana-tiny").unwrap())
     }
 
     fn cfg() -> HarnessConfig {
@@ -153,10 +150,8 @@ mod tests {
 
     #[test]
     fn ttft_harness_runs_and_windows_align() {
-        let Some(mut e) = engine() else { return };
-        let clock = SystemClock;
-        let (stats, windows) =
-            measure_ttft(&mut e, 1, 16, &cfg(), &|| clock.now()).unwrap();
+        let Some(mut b) = backend() else { return };
+        let (stats, windows) = measure_ttft(&mut b, 1, 16, &cfg()).unwrap();
         assert_eq!(stats.samples.len(), 4);
         assert_eq!(windows.len(), 4);
         for ((t0, t1), s) in windows.iter().zip(&stats.samples) {
@@ -169,10 +164,8 @@ mod tests {
 
     #[test]
     fn tpot_harness_counts_steps() {
-        let Some(mut e) = engine() else { return };
-        let clock = SystemClock;
-        let (stats, windows) =
-            measure_tpot(&mut e, 1, 16, &cfg(), &|| clock.now()).unwrap();
+        let Some(mut b) = backend() else { return };
+        let (stats, windows) = measure_tpot(&mut b, 1, 16, &cfg()).unwrap();
         assert_eq!(stats.samples.len(), 4);
         assert_eq!(windows.len(), 1);
         assert!(stats.summary.mean > 0.0);
@@ -180,26 +173,22 @@ mod tests {
 
     #[test]
     fn tpot_respects_context_limit() {
-        let Some(mut e) = engine() else { return };
-        let clock = SystemClock;
+        let Some(mut b) = backend() else { return };
         let big = HarnessConfig { latency_runs: 10_000, ..cfg() };
         // prompt 64 on max_seq_len 128 leaves 64 decode positions
-        let (stats, _) =
-            measure_tpot(&mut e, 1, 64, &big, &|| clock.now()).unwrap();
+        let (stats, _) = measure_tpot(&mut b, 1, 64, &big).unwrap();
         assert!(stats.samples.len() <= 64);
     }
 
     #[test]
     fn ttlt_harness() {
-        let Some(mut e) = engine() else { return };
-        let clock = SystemClock;
+        let Some(mut b) = backend() else { return };
         let (stats, windows) =
-            measure_ttlt(&mut e, 1, 16, 8, &cfg(), &|| clock.now()).unwrap();
+            measure_ttlt(&mut b, 1, 16, 8, &cfg()).unwrap();
         assert_eq!(stats.samples.len(), 2);
         assert_eq!(windows.len(), 2);
         // TTLT must exceed a single prefill
-        let (ttft, _) =
-            measure_ttft(&mut e, 1, 16, &cfg(), &|| clock.now()).unwrap();
+        let (ttft, _) = measure_ttft(&mut b, 1, 16, &cfg()).unwrap();
         assert!(stats.summary.mean > ttft.summary.mean);
     }
 

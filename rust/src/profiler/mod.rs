@@ -6,14 +6,13 @@
 //! and window it into J/Prompt, J/Token, J/Request (§2.4), and render
 //! the size (§2.2, Table 2) and latency/energy (Tables 3–4) reports.
 //!
-//! Two execution backends:
-//! * **real engine** — the AOT-compiled dev models actually executing on
-//!   the PJRT CPU runtime (laptop-scale ground truth for the measurement
-//!   pipeline);
-//! * **hwsim** — the calibrated roofline simulator projecting the
-//!   paper-scale devices (A6000, 4×A6000, Jetson), with energy measured
-//!   by *replaying* each phase against the simulated NVML/jtop sensor at
-//!   the paper's 0.1 s sampling cadence.
+//! Execution is delegated to `crate::backend::ExecutionBackend`: the
+//! real PJRT engine (laptop-scale ground truth for the measurement
+//! pipeline) or the calibrated roofline simulator projecting the
+//! paper-scale devices (A6000, 4×A6000, Jetson), with energy measured
+//! by *replaying* each phase against the simulated NVML/jtop sensor at
+//! the paper's 0.1 s sampling cadence. [`session::profile`] is the
+//! single entry point; nothing here branches on the backend kind.
 
 pub mod latency;
 pub mod playback;
@@ -24,6 +23,7 @@ pub mod spec;
 
 pub use latency::{LatencyStats, RunStats};
 pub use report::{render_latency_table, render_size_table, Row};
-pub use session::{profile_simulated, ProfileOutcome};
+pub use session::{profile, profile_backend, profile_simulated,
+                  ProfileOutcome};
 pub use size::{size_report, SizeRow};
 pub use spec::ProfileSpec;

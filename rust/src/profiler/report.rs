@@ -99,6 +99,8 @@ mod tests {
             ttlt_ms: 12859.85,
             j_request: 3533.09,
             ttft_std_ms: 1.0,
+            tpot_p50_ms: 24.80,
+            tpot_p99_ms: 25.10,
             simulated: true,
         };
         let text = render_latency_table("nGPU=1, bsize=1, L=512+512",

@@ -1,29 +1,29 @@
-//! Profiling sessions: spec → measured row.
+//! Profiling sessions: spec → measured row, over any
+//! `backend::ExecutionBackend`.
 //!
-//! * `profile_simulated` — hwsim latency + sensor-playback energy for the
-//!   paper-scale devices (Tables 3–4 rows).
-//! * `profile_engine` — real PJRT engine latency with the concurrent
-//!   power sampler attached to a dev-device sensor (the full measurement
-//!   pipeline on real execution).
+//! The pre-trait code kept two parallel pipelines (`profile_simulated`
+//! for hwsim, `profile_engine` for PJRT) and made every caller pick.
+//! Now there is a single entry point, [`profile`], that builds the
+//! backend the spec names and runs one measurement protocol against the
+//! trait:
+//!
+//! * **deterministic backends** (hwsim) — one `generate` supplies every
+//!   phase; repetition would produce identical samples, so the §2.3
+//!   harness collapses to a single analytic run + §2.4 sensor playback.
+//! * **stochastic backends** (the real engine) — the full warmup +
+//!   repetition harness with the concurrent power sampler.
 
-use std::sync::Arc;
+use anyhow::{ensure, Result};
 
-use anyhow::{anyhow, Result};
-
-use crate::engine::InferenceEngine;
-use crate::hwsim::{self, Rig, Workload};
-use crate::models;
-use crate::power::energy::WindowEnergy;
-use crate::power::model::{DevicePowerModel, LoadHandle};
-use crate::power::nvml::NvmlSim;
-use crate::power::sampler::PowerSampler;
+use crate::backend::{self, ExecutionBackend};
+use crate::engine::TokenBatch;
+use crate::hwsim::Workload;
 use crate::runtime::Manifest;
 use crate::util::json::Json;
-use crate::util::timer::{Clock, SystemClock};
+use crate::util::stats::Summary;
 
-use super::latency::{measure_ttft, measure_tpot, measure_ttlt,
+use super::latency::{measure_tpot, measure_ttft, measure_ttlt,
                      HarnessConfig};
-use super::playback::{replay_default, PhaseSchedule};
 use super::spec::ProfileSpec;
 
 /// One profiled workload row (the paper's six columns), plus run
@@ -41,6 +41,11 @@ pub struct ProfileOutcome {
     pub j_request: f64,
     /// Standard deviation of the TTFT samples (real-engine runs).
     pub ttft_std_ms: f64,
+    /// p50 / p99 of the decode-step latency stream, ms — per-step
+    /// latencies (context growth skews the tail) for analytic backends,
+    /// per-run TPOT samples for the engine.
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
     /// Whether the row came from hwsim or the real engine.
     pub simulated: bool,
 }
@@ -65,6 +70,8 @@ impl ProfileOutcome {
             ("ttft_ms", Json::num(self.ttft_ms)),
             ("j_prompt", Json::num(self.j_prompt)),
             ("tpot_ms", Json::num(self.tpot_ms)),
+            ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
+            ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
             ("j_token", Json::num(self.j_token)),
             ("ttlt_ms", Json::num(self.ttlt_ms)),
             ("j_request", Json::num(self.j_request)),
@@ -73,96 +80,80 @@ impl ProfileOutcome {
     }
 }
 
-/// Profile a paper-scale model on a simulated rig. Latency comes from
-/// the roofline; energy is measured by replaying the phase schedule
-/// against the simulated NVML sensor at the 0.1 s cadence (§2.4).
-pub fn profile_simulated(spec: &ProfileSpec) -> Result<ProfileOutcome> {
-    let arch = models::lookup(&spec.model)
-        .ok_or_else(|| anyhow!("unknown model `{}`", spec.model))?;
-    let rig = hwsim::device::rig_by_name(&spec.device)
-        .ok_or_else(|| anyhow!("unknown device `{}`", spec.device))?;
-    let sim = hwsim::simulate(&arch, &rig, &spec.workload);
-
-    let (j_prompt, j_token, j_request) = if spec.energy {
-        playback_energy(&rig, &sim, spec.seed)
+/// Profile `spec` on the backend it names — the single entry point the
+/// CLI, the suites, and the sweep share. Engine-backed runs get the
+/// scaled-down `quick()` repetition counts (interpret-lowered dev
+/// models are slow; the pipeline is identical), exactly as the
+/// pre-trait CLI did.
+pub fn profile(spec: &ProfileSpec) -> Result<ProfileOutcome> {
+    let mut b = backend::from_spec(spec)?;
+    if b.deterministic() {
+        profile_backend(b.as_mut(), spec)
     } else {
-        (sim.ttft.joules, sim.tpot.joules, sim.ttlt_joules)
-    };
+        profile_backend(b.as_mut(), &spec.clone().quick())
+    }
+}
 
+/// Run the measurement protocol against an already-built backend.
+pub fn profile_backend(backend: &mut dyn ExecutionBackend,
+                       spec: &ProfileSpec) -> Result<ProfileOutcome> {
+    if backend.deterministic() {
+        profile_deterministic(backend, spec)
+    } else {
+        profile_statistical(backend, spec)
+    }
+}
+
+/// Profile a paper-scale model on a simulated rig (compat shim over
+/// [`profile`] for callers that already know the split).
+pub fn profile_simulated(spec: &ProfileSpec) -> Result<ProfileOutcome> {
+    ensure!(spec.is_simulated(),
+            "device `{}` is the real engine, not a simulated rig",
+            spec.device);
+    profile(spec)
+}
+
+/// Profile an executable dev model on the real PJRT engine (compat shim
+/// over [`profile_backend`] with a caller-supplied manifest).
+pub fn profile_engine(manifest: &Manifest, spec: &ProfileSpec)
+                      -> Result<ProfileOutcome> {
+    let mut b = backend::EngineBackend::new(manifest, &spec.model)?;
+    profile_backend(&mut b, spec)
+}
+
+/// Deterministic protocol: one generate supplies every phase; energy
+/// comes from the backend's own §2.4 pipeline (sensor playback seeded
+/// by the spec, or closed-form joules with energy off).
+fn profile_deterministic(backend: &mut dyn ExecutionBackend,
+                         spec: &ProfileSpec) -> Result<ProfileOutcome> {
+    let w = &spec.workload;
+    backend.reseed(spec.seed);
+    let tb = TokenBatch::new(w.batch, w.prompt_len,
+                             vec![0; w.batch * w.prompt_len])?;
+    let run = backend.generate(&tb, w.gen_len)?;
+    let (j_prompt, j_token, j_request) = backend.run_energy(&run)?;
+    let steps = Summary::from_samples(&run.step_s);
     Ok(ProfileOutcome {
-        model: arch.display_name.to_string(),
-        device: rig.name(),
-        workload: spec.workload.clone(),
-        ttft_ms: sim.ttft.seconds * 1e3,
+        model: backend.model_name(),
+        device: backend.device_name(),
+        workload: w.clone(),
+        ttft_ms: run.ttft_s * 1e3,
         j_prompt,
-        tpot_ms: sim.tpot.seconds * 1e3,
+        tpot_ms: run.tpot_mean_s() * 1e3,
         j_token,
-        ttlt_ms: sim.ttlt_seconds * 1e3,
+        ttlt_ms: run.ttlt_s * 1e3,
         j_request,
         ttft_std_ms: 0.0,
+        tpot_p50_ms: steps.as_ref().map(|s| s.p50 * 1e3).unwrap_or(0.0),
+        tpot_p99_ms: steps.as_ref().map(|s| s.p99 * 1e3).unwrap_or(0.0),
         simulated: true,
     })
 }
 
-/// Replay (prefill, decode…) through the sensor pipeline and window the
-/// energies the way the harness does. `seed` perturbs only the simulated
-/// sensor's noise stream (seed 0 reproduces the default sensor), giving
-/// sweep cells deterministic, decorrelated measurements regardless of
-/// which worker thread executes them.
-fn playback_energy(rig: &Rig, sim: &hwsim::SimResult, seed: u64)
-                   -> (f64, f64, f64) {
-    let load = LoadHandle::new();
-    let nvml = NvmlSim::new_shared_seeded(rig.n_devices, rig.device.power,
-                                          load.clone(),
-                                          NvmlSim::DEFAULT_SEED ^ seed);
-    // schedule: prefill then every decode step
-    let mut phases = vec![PhaseSchedule {
-        duration_s: sim.ttft.seconds,
-        utilization: sim.ttft.utilization,
-    }];
-    phases.extend(sim.step_seconds.iter().map(|&d| PhaseSchedule {
-        duration_s: d,
-        utilization: sim.tpot.utilization,
-    }));
-    let pb = replay_default(&nvml, &load, &phases);
-
-    let (p0, p1) = pb.windows[0];
-    let j_prompt = WindowEnergy::average_power_method(&pb.log, p0, p1).joules;
-
-    // J/token: average over the decode-step windows
-    let mut tok_sum = 0.0;
-    for w in &pb.windows[1..] {
-        tok_sum += WindowEnergy::average_power_method(&pb.log, w.0, w.1)
-            .joules;
-    }
-    let n_steps = (pb.windows.len() - 1).max(1) as f64;
-    let j_token = tok_sum / n_steps;
-
-    // J/request: the whole span
-    let t_end = pb.windows.last().unwrap().1;
-    let j_request =
-        WindowEnergy::average_power_method(&pb.log, p0, t_end).joules;
-    (j_prompt, j_token, j_request)
-}
-
-/// Dev-device sensor the real-engine pipeline samples: a laptop-class
-/// CPU package power curve (the substitution for NVML on this testbed).
-pub fn dev_cpu_power() -> DevicePowerModel {
-    DevicePowerModel { idle_w: 10.0, sustain_w: 65.0, alpha: 0.8,
-                       noise_w: 1.5 }
-}
-
-/// Utilizations the engine adapter reports per phase (prefill saturates
-/// compute; decode is dominated by cache/memory traffic).
-pub const PREFILL_UTILIZATION: f64 = 0.9;
-pub const DECODE_UTILIZATION: f64 = 0.65;
-
-/// Profile an executable dev model on the real PJRT engine, with the
-/// background 0.1 s power sampler attached for the energy columns.
-pub fn profile_engine(manifest: &Manifest, spec: &ProfileSpec)
-                      -> Result<ProfileOutcome> {
-    let mut engine = InferenceEngine::load_precompiled(manifest,
-                                                       &spec.model)?;
+/// Statistical protocol: the paper's warmup + repetition harness, with
+/// energy windowed out of the backend's concurrent sampler log.
+fn profile_statistical(backend: &mut dyn ExecutionBackend,
+                       spec: &ProfileSpec) -> Result<ProfileOutcome> {
     let cfg = HarnessConfig {
         warmup: spec.warmup,
         latency_runs: spec.latency_runs,
@@ -171,40 +162,21 @@ pub fn profile_engine(manifest: &Manifest, spec: &ProfileSpec)
     };
     let w = &spec.workload;
 
-    let load = LoadHandle::new();
-    let nvml = Arc::new(NvmlSim::new_shared(1, dev_cpu_power(),
-                                            load.clone()));
-    let sampler = PowerSampler::start(nvml);
-    let clock = SystemClock;
-    let now = move || clock.now();
+    let (ttft, ttft_windows) =
+        measure_ttft(backend, w.batch, w.prompt_len, &cfg)?;
+    let (tpot, tpot_windows) =
+        measure_tpot(backend, w.batch, w.prompt_len, &cfg)?;
+    let (ttlt, ttlt_windows) =
+        measure_ttlt(backend, w.batch, w.prompt_len, w.gen_len, &cfg)?;
 
-    // TTFT under prefill-phase load
-    let (ttft, ttft_windows) = {
-        let _g = load.phase(PREFILL_UTILIZATION);
-        measure_ttft(&mut engine, w.batch, w.prompt_len, &cfg, &now)?
-    };
-    // TPOT under decode-phase load
-    let (tpot, tpot_windows) = {
-        let _g = load.phase(DECODE_UTILIZATION);
-        measure_tpot(&mut engine, w.batch, w.prompt_len, &cfg, &now)?
-    };
-    // TTLT under mixed load (decode dominates the request)
-    let (ttlt, ttlt_windows) = {
-        let _g = load.phase(DECODE_UTILIZATION);
-        measure_ttlt(&mut engine, w.batch, w.prompt_len, w.gen_len, &cfg,
-                     &now)?
-    };
-
-    let log = sampler.stop();
+    let b: &dyn ExecutionBackend = backend;
     let mean_window_energy = |windows: &[(f64, f64)]| -> f64 {
         if windows.is_empty() {
             return 0.0;
         }
         windows
             .iter()
-            .map(|&(t0, t1)| {
-                WindowEnergy::average_power_method(&log, t0, t1).joules
-            })
+            .map(|&(t0, t1)| b.window_energy(t0, t1))
             .sum::<f64>()
             / windows.len() as f64
     };
@@ -216,8 +188,8 @@ pub fn profile_engine(manifest: &Manifest, spec: &ProfileSpec)
     let j_request = mean_window_energy(&ttlt_windows);
 
     Ok(ProfileOutcome {
-        model: spec.model.clone(),
-        device: "cpu (PJRT)".to_string(),
+        model: b.model_name(),
+        device: b.device_name(),
         workload: w.clone(),
         ttft_ms: ttft.mean_ms(),
         j_prompt,
@@ -226,6 +198,8 @@ pub fn profile_engine(manifest: &Manifest, spec: &ProfileSpec)
         ttlt_ms: ttlt.mean_ms(),
         j_request,
         ttft_std_ms: ttft.summary.std * 1e3,
+        tpot_p50_ms: tpot.summary.p50 * 1e3,
+        tpot_p99_ms: tpot.summary.p99 * 1e3,
         simulated: false,
     })
 }
@@ -277,11 +251,29 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_path_reports_step_percentiles() {
+        let spec = ProfileSpec::new("llama-3.1-8b", "a6000",
+                                    Workload::new(1, 256, 128));
+        let o = profile_simulated(&spec).unwrap();
+        // context grows over decode, so the step stream is monotone:
+        // p50 < p99, and both bracket nothing outside the stream
+        assert!(o.tpot_p50_ms > 0.0);
+        assert!(o.tpot_p99_ms >= o.tpot_p50_ms);
+        // the mean lies within the percentile envelope
+        assert!(o.tpot_ms >= o.tpot_p50_ms * 0.5);
+        assert!(o.tpot_ms <= o.tpot_p99_ms * 1.5);
+    }
+
+    #[test]
     fn unknown_model_and_device_rejected() {
         let spec = ProfileSpec::new("gpt-17", "a6000",
                                     Workload::new(1, 8, 8));
         assert!(profile_simulated(&spec).is_err());
         let spec = ProfileSpec::new("llama-3.1-8b", "tpu-v9",
+                                    Workload::new(1, 8, 8));
+        assert!(profile_simulated(&spec).is_err());
+        // the shim itself rejects engine specs
+        let spec = ProfileSpec::new("elana-tiny", "cpu",
                                     Workload::new(1, 8, 8));
         assert!(profile_simulated(&spec).is_err());
     }

@@ -27,8 +27,9 @@ pub struct SweepCell {
 }
 
 impl SweepCell {
-    /// The profiler spec this cell runs (`profiler::profile_simulated`'s
-    /// input), carrying the cell seed into the measurement pipeline.
+    /// The profiler spec this cell runs (what `backend::from_spec` and
+    /// the session consume), carrying the cell seed into the
+    /// measurement pipeline.
     pub fn profile_spec(&self, energy: bool, unit: MemUnit) -> ProfileSpec {
         let mut s = ProfileSpec::new(&self.model, &self.device,
                                      self.workload.clone());
@@ -75,12 +76,13 @@ mod tests {
     use super::*;
 
     fn small_spec() -> SweepSpec {
-        let mut s = SweepSpec::default();
-        s.models = vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()];
-        s.devices = vec!["a6000".into(), "thor".into()];
-        s.batches = vec![1, 8];
-        s.lens = vec![(256, 256)];
-        s
+        SweepSpec {
+            models: vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()],
+            devices: vec!["a6000".into(), "thor".into()],
+            batches: vec![1, 8],
+            lens: vec![(256, 256)],
+            ..SweepSpec::default()
+        }
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //!   (`Rng::mix(seed, index)`), the determinism anchor.
 //! * [`pool`] — hand-rolled std-only worker pool; results land in
 //!   index-addressed slots, so output order never depends on scheduling.
-//! * [`runner`] — per-cell `profiler::profile_simulated` execution and
-//!   the aggregated [`SweepResults`].
+//! * [`runner`] — per-cell execution through the
+//!   `backend::ExecutionBackend` trait and the aggregated
+//!   [`SweepResults`].
 //! * [`report`] — markdown comparison tables (grouped by device, with
 //!   best/worst highlighting and J/Token deltas) + deterministic JSON.
 //!

@@ -47,12 +47,12 @@ pub fn render_markdown(r: &SweepResults) -> String {
         let _ = writeln!(out, "\n## {}", group[0].outcome.device);
         let _ = writeln!(
             out,
-            "| Model | Workload | TTFT ms | J/Prompt | TPOT ms | J/Token \
-             | dJ/Token | TTLT ms | J/Request |"
+            "| Model | Workload | TTFT ms | J/Prompt | TPOT ms | p50 \
+             | p99 | J/Token | dJ/Token | TTLT ms | J/Request |"
         );
         let _ = writeln!(
             out,
-            "|---|---|---:|---:|---:|---:|---:|---:|---:|"
+            "|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|"
         );
         let group_best = group
             .iter()
@@ -74,10 +74,11 @@ pub fn render_markdown(r: &SweepResults) -> String {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {} | {:.2} \
-                 | {:.2} |",
+                "| {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} \
+                 | {:.2} | {} | {:.2} | {:.2} |",
                 model, c.cell.workload.label(), o.ttft_ms, o.j_prompt,
-                o.tpot_ms, o.j_token, delta, o.ttlt_ms, o.j_request
+                o.tpot_ms, o.tpot_p50_ms, o.tpot_p99_ms, o.j_token, delta,
+                o.ttlt_ms, o.j_request
             );
         }
     }
@@ -157,11 +158,13 @@ mod tests {
     use crate::sweep::{runner, SweepSpec};
 
     fn results() -> SweepResults {
-        let mut s = SweepSpec::default();
-        s.models = vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()];
-        s.devices = vec!["a6000".into(), "thor".into()];
-        s.batches = vec![1];
-        s.lens = vec![(64, 32)];
+        let s = SweepSpec {
+            models: vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()],
+            devices: vec!["a6000".into(), "thor".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            ..SweepSpec::default()
+        };
         runner::run(&s).unwrap()
     }
 
@@ -171,6 +174,9 @@ mod tests {
         assert!(text.contains("## A6000"), "{text}");
         assert!(text.contains("## AGX-Thor"), "{text}");
         assert!(text.contains("| best |"), "{text}");
+        // the decode-step percentile columns are rendered
+        assert!(text.contains("| p50 "), "{text}");
+        assert!(text.contains("| p99 "), "{text}");
         assert!(text.contains("**Best J/Token:**"), "{text}");
         assert!(text.contains("**Worst J/Token:**"), "{text}");
         // overall best cell's model is bolded somewhere in a table row
@@ -191,6 +197,9 @@ mod tests {
             assert_eq!(c.get("index").unwrap().as_usize(), Some(i));
             let o = c.get("outcome").unwrap();
             assert!(o.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+            let p50 = o.get("tpot_p50_ms").unwrap().as_f64().unwrap();
+            let p99 = o.get("tpot_p99_ms").unwrap().as_f64().unwrap();
+            assert!(p50 > 0.0 && p99 >= p50);
             assert_eq!(o.get("simulated").unwrap().as_bool(), Some(true));
         }
         assert!(v.get("best_j_token_index").unwrap().as_usize().is_some());

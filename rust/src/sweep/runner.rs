@@ -1,5 +1,5 @@
 //! Sweep execution: expand the grid, farm cells out to the worker pool,
-//! and reuse `profiler::profile_simulated` per cell.
+//! and run each cell through the `ExecutionBackend` trait.
 //!
 //! Each cell builds its own `ProfileSpec` (with its derived seed) and its
 //! own sensor/playback state, so cells share nothing mutable: the matrix
@@ -59,14 +59,21 @@ impl SweepResults {
     }
 }
 
-/// Profile one cell — the sweep's unit of work.
+/// Profile one cell — the sweep's unit of work. Each cell builds its
+/// own backend from its spec (carrying the per-cell seed into the
+/// sensor stream) and runs the shared session protocol against the
+/// `ExecutionBackend` trait.
 pub fn run_cell(cell: &SweepCell, energy: bool, unit: MemUnit)
                 -> Result<ProfileOutcome> {
-    profiler::profile_simulated(&cell.profile_spec(energy, unit))
-        .with_context(|| {
-            format!("sweep cell #{} ({} on {}, {})", cell.index, cell.model,
-                    cell.device, cell.workload.label())
-        })
+    let spec = cell.profile_spec(energy, unit);
+    let run = || -> Result<ProfileOutcome> {
+        let mut backend = crate::backend::from_spec(&spec)?;
+        profiler::session::profile_backend(backend.as_mut(), &spec)
+    };
+    run().with_context(|| {
+        format!("sweep cell #{} ({} on {}, {})", cell.index, cell.model,
+                cell.device, cell.workload.label())
+    })
 }
 
 /// Run the full sweep matrix on the worker pool.
@@ -88,12 +95,13 @@ mod tests {
     use super::*;
 
     fn tiny_spec() -> SweepSpec {
-        let mut s = SweepSpec::default();
-        s.models = vec!["llama-3.1-8b".into()];
-        s.devices = vec!["a6000".into()];
-        s.batches = vec![1];
-        s.lens = vec![(64, 32)];
-        s
+        SweepSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            ..SweepSpec::default()
+        }
     }
 
     #[test]

@@ -376,30 +376,31 @@ mod tests {
 
     #[test]
     fn validate_rejects_unknown_axes_with_listing() {
-        let mut s = SweepSpec::default();
-        s.models = vec!["gpt-17".to_string()];
+        let s = SweepSpec {
+            models: vec!["gpt-17".to_string()],
+            ..SweepSpec::default()
+        };
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("gpt-17") && err.contains("llama-3.1-8b"),
                 "{err}");
 
-        let mut s = SweepSpec::default();
-        s.devices = vec!["tpu-v9".to_string()];
+        let s = SweepSpec {
+            devices: vec!["tpu-v9".to_string()],
+            ..SweepSpec::default()
+        };
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("tpu-v9") && err.contains("4xa6000"), "{err}");
     }
 
     #[test]
     fn validate_rejects_degenerate_axes() {
-        let mut s = SweepSpec::default();
-        s.batches = vec![0];
+        let s = SweepSpec { batches: vec![0], ..SweepSpec::default() };
         assert!(s.validate().is_err());
 
-        let mut s = SweepSpec::default();
-        s.lens = vec![(0, 16)];
+        let s = SweepSpec { lens: vec![(0, 16)], ..SweepSpec::default() };
         assert!(s.validate().is_err());
 
-        let mut s = SweepSpec::default();
-        s.models.clear();
+        let s = SweepSpec { models: Vec::new(), ..SweepSpec::default() };
         assert!(s.validate().is_err());
     }
 }

@@ -1,13 +1,37 @@
 //! Workload generation: random prompts and request traces.
 //!
 //! ELANA profiles with *random input prompts* at user-specified lengths
-//! (§2.3); `PromptGen` reproduces that. `RequestTrace` adds Poisson
-//! request arrivals for the serving example (exercising the
-//! coordinator's dynamic batcher the way a trace-driven load generator
-//! would).
+//! (§2.3); `PromptGen` reproduces that. `RequestTrace` provides the
+//! serving load: Poisson arrivals (`elana serve --rate`) or a recorded
+//! JSON trace (`elana serve --trace`), feeding the coordinator's
+//! dynamic batcher the way a trace-driven load generator would.
+//!
+//! Every generator follows one seeding discipline: independent streams
+//! derive from a base seed via `Rng::mix(base, stream)` with
+//! domain-separated stream tags (see [`streams`]), so the sweep's
+//! per-cell prompt streams, a trace's arrival draws, and its prompt
+//! draws can never collide — even for equal base seeds.
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::engine::TokenBatch;
+use crate::util::json::Json;
 use crate::util::Rng;
+
+/// Stream-domain tags mixed into seeds (`Rng::mix(seed, TAG)`) so that
+/// subsystems sharing a base seed still draw from decorrelated RNG
+/// streams. Tags are arbitrary distinct constants; what matters is that
+/// no two domains share one.
+pub mod streams {
+    /// Poisson inter-arrival (and length) draws of a request trace.
+    pub const TRACE_ARRIVALS: u64 = 0x454C_414E_4101;
+    /// Prompt-token draws of a request trace.
+    pub const TRACE_PROMPTS: u64 = 0x454C_414E_4102;
+    /// The serving simulator's whole-trace stream.
+    pub const SERVE_TRACE: u64 = 0x454C_414E_4103;
+    /// The serving simulator's per-batch energy-attribution streams.
+    pub const SERVE_ENERGY: u64 = 0x454C_414E_4104;
+}
 
 /// Deterministic random-prompt generator.
 #[derive(Debug, Clone)]
@@ -68,7 +92,8 @@ pub struct Request {
     pub gen_len: usize,
 }
 
-/// A Poisson-arrival request trace for the serving example.
+/// A request trace for the serving subsystem: Poisson-generated or
+/// loaded from a JSON file.
 #[derive(Debug, Clone)]
 pub struct RequestTrace {
     pub requests: Vec<Request>,
@@ -76,12 +101,15 @@ pub struct RequestTrace {
 
 impl RequestTrace {
     /// `n` requests at `rate_rps` mean arrival rate, prompt lengths in
-    /// [len_lo, len_hi], fixed gen_len.
+    /// [len_lo, len_hi], fixed gen_len. The arrival and prompt streams
+    /// are domain-separated off `seed` (see [`streams`]), so a trace
+    /// never shares draws with any other seeded subsystem.
     pub fn poisson(n: usize, rate_rps: f64, len_lo: usize, len_hi: usize,
                    gen_len: usize, vocab_size: usize, seed: u64)
                    -> RequestTrace {
-        let mut rng = Rng::new(seed);
-        let mut gen = PromptGen::new(vocab_size, seed.wrapping_add(1));
+        let mut rng = Rng::new(Rng::mix(seed, streams::TRACE_ARRIVALS));
+        let mut gen = PromptGen::new(vocab_size,
+                                     Rng::mix(seed, streams::TRACE_PROMPTS));
         let mut t = 0.0;
         let requests = (0..n)
             .map(|i| {
@@ -95,6 +123,120 @@ impl RequestTrace {
             })
             .collect();
         RequestTrace { requests }
+    }
+
+    /// An independent deterministic trace per `(base_seed, index)` —
+    /// the same `for_cell` constructor discipline as
+    /// [`PromptGen::for_cell`]: the per-index seed is
+    /// `Rng::mix(base_seed, index)`, then further domain-separated
+    /// internally, so serving and sweep streams can never collide.
+    #[allow(clippy::too_many_arguments)]
+    pub fn poisson_for_cell(base_seed: u64, index: u64, n: usize,
+                            rate_rps: f64, len_lo: usize, len_hi: usize,
+                            gen_len: usize, vocab_size: usize)
+                            -> RequestTrace {
+        Self::poisson(n, rate_rps, len_lo, len_hi, gen_len, vocab_size,
+                      Rng::mix(base_seed, index))
+    }
+
+    /// Parse the `elana serve --trace` JSON schema:
+    ///
+    /// ```json
+    /// {"requests": [
+    ///   {"arrival_s": 0.00, "prompt_len": 32, "gen_len": 8},
+    ///   {"arrival_s": 0.05, "prompt": [17, 4, 99], "gen_len": 16}
+    /// ]}
+    /// ```
+    ///
+    /// Each entry gives its arrival offset (seconds from trace start)
+    /// and either explicit `prompt` tokens or a `prompt_len` whose
+    /// tokens are drawn from the trace's seeded prompt stream. Ids are
+    /// assigned in arrival order after a stable sort on `arrival_s`.
+    pub fn from_json(text: &str, vocab_size: usize, seed: u64)
+                     -> Result<RequestTrace> {
+        let root = Json::parse(text).context("parsing request trace")?;
+        let entries = root
+            .get("requests")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| {
+                anyhow!("trace must be an object with a `requests` array")
+            })?;
+        let mut gen = PromptGen::new(vocab_size,
+                                     Rng::mix(seed, streams::TRACE_PROMPTS));
+        let mut requests = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let arrival_s = e
+                .get("arrival_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| {
+                    anyhow!("trace request #{i}: missing `arrival_s`")
+                })?;
+            if arrival_s < 0.0 || !arrival_s.is_finite() {
+                bail!("trace request #{i}: bad arrival_s {arrival_s}");
+            }
+            let gen_len = e
+                .get("gen_len")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| {
+                    anyhow!("trace request #{i}: missing `gen_len`")
+                })?;
+            if gen_len == 0 {
+                bail!("trace request #{i}: gen_len must be >= 1");
+            }
+            let prompt: Vec<i32> = match e.get("prompt") {
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| {
+                        anyhow!("trace request #{i}: `prompt` must be an \
+                                 array of token ids")
+                    })?
+                    .iter()
+                    .map(|t| {
+                        t.as_f64().map(|x| x as i32).ok_or_else(|| {
+                            anyhow!("trace request #{i}: non-numeric \
+                                     prompt token")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => {
+                    let len = e
+                        .get("prompt_len")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| {
+                            anyhow!("trace request #{i}: needs `prompt` \
+                                     tokens or a `prompt_len`")
+                        })?;
+                    if len == 0 {
+                        bail!("trace request #{i}: prompt_len must be \
+                               >= 1");
+                    }
+                    gen.prompt(len)
+                }
+            };
+            if prompt.is_empty() {
+                bail!("trace request #{i}: empty prompt");
+            }
+            requests.push(Request { id: 0, arrival_s, prompt, gen_len });
+        }
+        // stable sort keeps file order among equal arrivals; ids then
+        // reflect serving order
+        requests.sort_by(|a, b| {
+            a.arrival_s.partial_cmp(&b.arrival_s).expect("finite arrivals")
+        });
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Ok(RequestTrace { requests })
+    }
+
+    /// Load a trace file (see [`RequestTrace::from_json`] for the
+    /// schema).
+    pub fn load(path: impl AsRef<std::path::Path>, vocab_size: usize,
+                seed: u64) -> Result<RequestTrace> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading request trace {}", path.as_ref().display())
+        })?;
+        Self::from_json(&text, vocab_size, seed)
     }
 
     pub fn len(&self) -> usize {
@@ -171,6 +313,86 @@ mod tests {
         // 200 requests at 10 rps ≈ 20 s span (loose bound)
         assert!((10.0..40.0).contains(&tr.duration_s()),
                 "{}", tr.duration_s());
+    }
+
+    #[test]
+    fn poisson_for_cell_deterministic_and_distinct() {
+        let a = RequestTrace::poisson_for_cell(9, 3, 20, 10.0, 8, 16, 4,
+                                               512);
+        let b = RequestTrace::poisson_for_cell(9, 3, 20, 10.0, 8, 16, 4,
+                                               512);
+        assert_eq!(a.requests, b.requests,
+                   "a cell's trace must replay exactly");
+        let c = RequestTrace::poisson_for_cell(9, 4, 20, 10.0, 8, 16, 4,
+                                               512);
+        assert_ne!(a.requests, c.requests,
+                   "different cells draw different traces");
+        let d = RequestTrace::poisson_for_cell(10, 3, 20, 10.0, 8, 16, 4,
+                                               512);
+        assert_ne!(a.requests, d.requests,
+                   "the base seed shifts every cell's trace");
+    }
+
+    #[test]
+    fn adjacent_seeds_share_no_streams() {
+        // the pre-fix seeding used `seed` and `seed + 1` for the two
+        // internal streams, so trace(seed=8)'s arrivals equalled
+        // trace(seed=7)'s prompt stream seed; domain separation makes
+        // adjacent-seed traces fully independent
+        let a = RequestTrace::poisson(20, 10.0, 16, 16, 4, 512, 7);
+        let b = RequestTrace::poisson(20, 10.0, 16, 16, 4, 512, 8);
+        assert!(a.requests.iter().zip(&b.requests)
+                .all(|(x, y)| x.prompt != y.prompt));
+        assert!(a.requests.iter().zip(&b.requests)
+                .all(|(x, y)| x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let text = r#"{"requests": [
+            {"arrival_s": 0.5, "prompt_len": 8, "gen_len": 4},
+            {"arrival_s": 0.0, "prompt": [1, 2, 3], "gen_len": 2}
+        ]}"#;
+        let tr = RequestTrace::from_json(text, 512, 0).unwrap();
+        assert_eq!(tr.len(), 2);
+        // sorted by arrival, ids reassigned in serving order
+        assert_eq!(tr.requests[0].arrival_s, 0.0);
+        assert_eq!(tr.requests[0].id, 0);
+        assert_eq!(tr.requests[0].prompt, vec![1, 2, 3]);
+        assert_eq!(tr.requests[0].gen_len, 2);
+        assert_eq!(tr.requests[1].id, 1);
+        assert_eq!(tr.requests[1].prompt.len(), 8);
+        assert!(tr.requests[1].prompt.iter()
+                .all(|&t| (0..512).contains(&t)));
+        // drawn prompts are seed-deterministic
+        let tr2 = RequestTrace::from_json(text, 512, 0).unwrap();
+        assert_eq!(tr.requests, tr2.requests);
+        let tr3 = RequestTrace::from_json(text, 512, 1).unwrap();
+        assert_ne!(tr.requests[1].prompt, tr3.requests[1].prompt);
+    }
+
+    #[test]
+    fn trace_json_rejects_malformed_entries() {
+        let bad = [
+            r#"[1, 2]"#,
+            r#"{"requests": [{"prompt_len": 8, "gen_len": 4}]}"#,
+            r#"{"requests": [{"arrival_s": -1.0, "prompt_len": 8,
+                              "gen_len": 4}]}"#,
+            r#"{"requests": [{"arrival_s": 0.0, "gen_len": 4}]}"#,
+            r#"{"requests": [{"arrival_s": 0.0, "prompt_len": 0,
+                              "gen_len": 4}]}"#,
+            r#"{"requests": [{"arrival_s": 0.0, "prompt_len": 8,
+                              "gen_len": 0}]}"#,
+            r#"{"requests": [{"arrival_s": 0.0, "prompt": [],
+                              "gen_len": 4}]}"#,
+            r#"{"requests": [{"arrival_s": 0.0, "prompt": "abc",
+                              "gen_len": 4}]}"#,
+            "not json",
+        ];
+        for text in bad {
+            assert!(RequestTrace::from_json(text, 512, 0).is_err(),
+                    "must reject: {text}");
+        }
     }
 
     #[test]

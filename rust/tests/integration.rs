@@ -7,6 +7,7 @@
 
 use std::path::Path;
 
+use elana::backend::EngineBackend;
 use elana::coordinator::{self, BatchPolicy, RequestQueue};
 use elana::engine::{InferenceEngine, TokenBatch};
 use elana::hwsim::Workload;
@@ -111,9 +112,8 @@ fn engine_profile_and_serve_compose() {
     let outcome = profiler::session::profile_engine(&m, &spec).unwrap();
     assert!(outcome.ttlt_ms > outcome.ttft_ms);
 
-    // coordinator over the same artifacts
-    let mut engine = InferenceEngine::load_precompiled(&m, "elana-tiny")
-        .unwrap();
+    // coordinator over the same artifacts, through the backend trait
+    let mut backend = EngineBackend::new(&m, "elana-tiny").unwrap();
     let mm = m.model("elana-tiny").unwrap();
     let policy = BatchPolicy {
         allowed_batches: mm.batch_sizes(),
@@ -128,8 +128,10 @@ fn engine_profile_and_serve_compose() {
                                                     0.0));
     }
     queue.close();
-    let metrics = coordinator::serve(&mut engine, &queue, &policy).unwrap();
+    let metrics = coordinator::serve(&mut backend, &queue, &policy)
+        .unwrap();
     assert_eq!(metrics.completions.len(), 5);
+    assert_eq!(metrics.batches_formed(), metrics.batches.len());
 }
 
 /// Failure injection: corrupt artifacts must fail loudly, not crash.

@@ -1,0 +1,201 @@
+//! `elana serve` acceptance: the virtual-time serving simulator must
+//! produce byte-identical reports at any `--workers` count (the sweep's
+//! thread-invariance contract), uphold every `plan_batch` invariant
+//! under backend-driven serving, and replay JSON traces exactly.
+
+use elana::coordinator::{report, simulate, Arrivals, ServeSpec};
+use elana::testkit::property;
+use elana::util::json::Json;
+
+fn base_spec() -> ServeSpec {
+    ServeSpec {
+        requests: 40,
+        arrivals: Arrivals::Poisson { rate_rps: 25.0 },
+        prompt_lo: 16,
+        prompt_hi: 128,
+        gen_len: 32,
+        replicas: 2,
+        seed: 42,
+        ..ServeSpec::default()
+    }
+}
+
+#[test]
+fn serve_reports_byte_identical_across_worker_counts() {
+    let runs: Vec<(String, String)> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&workers| {
+            let mut spec = base_spec();
+            spec.workers = workers;
+            let o = simulate::run(&spec).unwrap();
+            (report::to_json(&o).to_string(), report::render_markdown(&o))
+        })
+        .collect();
+    for (json, md) in &runs[1..] {
+        assert_eq!(json, &runs[0].0,
+                   "JSON must not depend on the worker count");
+        assert_eq!(md, &runs[0].1,
+                   "markdown must not depend on the worker count");
+    }
+    // and the artifact is real: parse it back and spot-check
+    let v = Json::parse(&runs[0].0).unwrap();
+    assert_eq!(v.get("n_requests").unwrap().as_usize(), Some(40));
+    assert_eq!(v.get("replicas").unwrap().as_usize(), Some(2));
+    assert!(v.get("total_joules").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn serve_seed_is_reproducible_and_decorrelating() {
+    let a = simulate::run(&base_spec()).unwrap();
+    let b = simulate::run(&base_spec()).unwrap();
+    assert_eq!(report::to_json(&a).to_string(),
+               report::to_json(&b).to_string(),
+               "a fixed seed must replay byte-identically");
+    let mut other = base_spec();
+    other.seed = 43;
+    let c = simulate::run(&other).unwrap();
+    assert_ne!(report::to_json(&a).to_string(),
+               report::to_json(&c).to_string(),
+               "a different seed must draw a different trace");
+}
+
+#[test]
+fn plan_invariants_hold_under_backend_driven_serving() {
+    property(12, |rng| {
+        let spec = ServeSpec {
+            requests: rng.usize_in(1, 30),
+            arrivals: Arrivals::Poisson {
+                rate_rps: rng.f64_in(2.0, 400.0),
+            },
+            prompt_lo: rng.usize_in(1, 64),
+            prompt_hi: rng.usize_in(64, 300),
+            gen_len: rng.usize_in(1, 48),
+            replicas: rng.usize_in(1, 4),
+            seed: rng.next_u64(),
+            energy: false,
+            ..ServeSpec::default()
+        };
+        let policy = spec.sim_policy();
+        let o = simulate::run(&spec).unwrap();
+
+        // every request served exactly once
+        let mut ids: Vec<u64> = o.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), spec.requests);
+        // conservation across batches
+        let rows: usize = o.batches.iter().map(|b| b.real_rows).sum();
+        assert_eq!(rows, spec.requests);
+
+        for b in &o.batches {
+            // compiled-shape invariants
+            assert!(policy.allowed_batches.contains(&b.exec_batch),
+                    "{b:?}");
+            assert!(policy.prompt_buckets.contains(&b.padded_prompt_len),
+                    "{b:?}");
+            assert!(b.real_rows >= 1 && b.real_rows <= b.exec_batch,
+                    "{b:?}");
+            // padding accounting
+            assert!((0.0..1.0).contains(&b.padding_waste), "{b:?}");
+            // gen-len cap: context never overflows
+            assert!(b.gen_len >= 1, "{b:?}");
+            assert!(b.padded_prompt_len + b.gen_len <= policy.max_seq_len,
+                    "{b:?}");
+            assert!(b.replica < spec.replicas, "{b:?}");
+            assert!(b.service_s > 0.0, "{b:?}");
+        }
+        for r in &o.requests {
+            assert!(r.queue_wait_s >= 0.0, "{r:?}");
+            assert!(r.ttft_s >= r.queue_wait_s, "{r:?}");
+            assert!(r.ttlt_s >= r.ttft_s, "{r:?}");
+            let b = &o.batches[r.batch];
+            assert_eq!(r.gen_len, b.gen_len, "{r:?}");
+            assert!(r.prompt_len <= b.padded_prompt_len, "{r:?}");
+            // a request is never dequeued before it arrives
+            assert!(b.dequeue_s >= r.arrival_s - 1e-9, "{r:?} vs {b:?}");
+        }
+        assert!(o.makespan_s > 0.0);
+        assert!(o.busy_s <= o.makespan_s * spec.replicas as f64 + 1e-9);
+    });
+}
+
+#[test]
+fn trace_replay_and_poisson_agree_on_schema() {
+    // a trace written from poisson parameters serves the same number of
+    // requests with the same prompt-length envelope
+    let dir = std::env::temp_dir()
+        .join(format!("elana_serve_accept_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    std::fs::write(&path, r#"{"requests": [
+        {"arrival_s": 0.00, "prompt_len": 24, "gen_len": 8},
+        {"arrival_s": 0.01, "prompt_len": 48, "gen_len": 8},
+        {"arrival_s": 0.02, "prompt": [9, 9, 9, 9, 9, 9], "gen_len": 4},
+        {"arrival_s": 5.00, "prompt_len": 16, "gen_len": 2}
+    ]}"#).unwrap();
+    let mut spec = base_spec();
+    spec.arrivals = Arrivals::Trace {
+        path: path.to_string_lossy().into_owned(),
+    };
+    let o = simulate::run(&spec).unwrap();
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir(&dir).ok();
+
+    assert_eq!(o.requests.len(), 4);
+    assert_eq!(o.requests[2].prompt_len, 6, "explicit tokens win");
+    // the straggler at t=5 is served alone, after it arrives
+    let last = &o.requests[3];
+    assert!(last.arrival_s >= 5.0 - 1e-9);
+    assert_eq!(o.batches[last.batch].real_rows, 1);
+    // trace replay is deterministic too
+    let mut spec2 = spec.clone();
+    spec2.workers = 7;
+    std::fs::create_dir_all(&dir).unwrap();
+    let path2 = dir.join("trace.json");
+    std::fs::write(&path2, r#"{"requests": [
+        {"arrival_s": 0.00, "prompt_len": 24, "gen_len": 8},
+        {"arrival_s": 0.01, "prompt_len": 48, "gen_len": 8},
+        {"arrival_s": 0.02, "prompt": [9, 9, 9, 9, 9, 9], "gen_len": 4},
+        {"arrival_s": 5.00, "prompt_len": 16, "gen_len": 2}
+    ]}"#).unwrap();
+    let o2 = simulate::run(&spec2).unwrap();
+    std::fs::remove_file(&path2).ok();
+    std::fs::remove_dir(&dir).ok();
+    assert_eq!(report::to_json(&o).to_string(),
+               report::to_json(&o2).to_string());
+}
+
+#[test]
+fn energy_accounting_is_consistent() {
+    let o = simulate::run(&base_spec()).unwrap();
+    // every batch carries its playback joules
+    assert!(o.batches.iter().all(|b| b.joules.is_some()));
+    for b in &o.batches {
+        let (jp, jt, jr) = b.joules.unwrap();
+        assert!(jp > 0.0 && jt > 0.0, "{b:?}");
+        assert!(jr > jp, "request energy covers prefill + decode: {b:?}");
+    }
+    let total: f64 =
+        o.batches.iter().map(|b| b.joules.unwrap().2).sum();
+    assert_eq!(o.total_joules, Some(total));
+    // J/token is power-scale sane for an A6000-class device
+    let j_per_token = total / o.generated_tokens() as f64;
+    assert!(j_per_token > 0.1 && j_per_token < 1000.0, "{j_per_token}");
+}
+
+#[test]
+fn more_replicas_never_hurt_the_makespan() {
+    let mut overload = base_spec();
+    overload.requests = 48;
+    overload.arrivals = Arrivals::Poisson { rate_rps: 300.0 };
+    overload.energy = false;
+    let makespan = |replicas: usize| {
+        let mut s = overload.clone();
+        s.replicas = replicas;
+        simulate::run(&s).unwrap().makespan_s
+    };
+    let m1 = makespan(1);
+    let m4 = makespan(4);
+    assert!(m4 <= m1,
+            "4 replicas must not serve slower than 1 ({m4} vs {m1})");
+}

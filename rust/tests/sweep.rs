@@ -7,14 +7,15 @@ use elana::util::json::Json;
 
 /// 2 models x 2 devices x 3 workloads = 12 cells.
 fn grid_12() -> SweepSpec {
-    let mut s = SweepSpec::default();
-    s.name = "acceptance-12".to_string();
-    s.models = vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()];
-    s.devices = vec!["a6000".into(), "thor".into()];
-    s.batches = vec![1];
-    s.lens = vec![(64, 32), (128, 64), (256, 128)];
-    s.seed = 42;
-    s
+    SweepSpec {
+        name: "acceptance-12".to_string(),
+        models: vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()],
+        devices: vec!["a6000".into(), "thor".into()],
+        batches: vec![1],
+        lens: vec![(64, 32), (128, 64), (256, 128)],
+        seed: 42,
+        ..SweepSpec::default()
+    }
 }
 
 #[test]

@@ -106,6 +106,7 @@ fn batch_policy_ablation() {
             prompt_buckets: vec![16, 64],
             max_seq_len: 128,
             max_wait_s: 0.02,
+            kv_budget: None,
         };
         let mut pending: Vec<ServingRequest> = trace
             .requests

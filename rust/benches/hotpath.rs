@@ -39,6 +39,7 @@ fn main() {
         prompt_buckets: vec![16, 64],
         max_seq_len: 128,
         max_wait_s: 0.02,
+        kv_budget: None,
     };
     bench("plan_batch(4 requests)", || {
         let reqs: Vec<_> = (0..4)

@@ -150,9 +150,17 @@ pub(crate) fn window_attribution(log: &crate::power::sampler::PowerLog,
 /// lives.
 pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
     if spec.is_simulated() {
-        Ok(Box::new(SimBackend::new(&spec.model, &spec.device,
-                                    spec.energy, spec.seed)?))
+        let mut b = SimBackend::new(&spec.model, &spec.device,
+                                    spec.energy, spec.seed)?;
+        if let Some(q) = spec.quant {
+            b = b.with_quant(q);
+        }
+        Ok(Box::new(b))
     } else {
+        anyhow::ensure!(
+            spec.quant.is_none(),
+            "quantization modeling applies to simulated rigs only; the \
+             `cpu` engine executes unquantized artifacts");
         let manifest = crate::runtime::Manifest::load_default()?;
         Ok(Box::new(EngineBackend::new(&manifest, &spec.model)?))
     }
@@ -172,6 +180,27 @@ mod tests {
         assert_eq!(b.device_name(), "A6000");
         assert_eq!(b.model_name(), "Llama-3.1-8B");
         assert!(b.vocab_size() > 0);
+    }
+
+    #[test]
+    fn from_spec_honors_quant_and_rejects_it_on_the_engine() {
+        let mut spec = ProfileSpec::new("llama-3.1-8b", "a6000",
+                                        Workload::new(1, 64, 32));
+        spec.quant = Some(crate::models::quant::w4a16());
+        let mut b = from_spec(&spec).unwrap();
+        let tb = crate::engine::TokenBatch::new(1, 64, vec![0; 64])
+            .unwrap();
+        let q = b.generate(&tb, 16).unwrap();
+        spec.quant = None;
+        let mut base = from_spec(&spec).unwrap();
+        let run = base.generate(&tb, 16).unwrap();
+        assert!(q.tpot_mean_s() < run.tpot_mean_s());
+        // the engine executes unquantized artifacts: reject early
+        let mut cpu = ProfileSpec::new("elana-tiny", "cpu",
+                                       Workload::new(1, 8, 8));
+        cpu.quant = Some(crate::models::quant::w4a16());
+        let err = from_spec(&cpu).unwrap_err().to_string();
+        assert!(err.contains("simulated rigs only"), "{err}");
     }
 
     #[test]

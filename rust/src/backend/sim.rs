@@ -13,7 +13,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::TokenBatch;
 use crate::hwsim::{self, Rig, Workload};
-use crate::models::{self, arch::ModelArch};
+use crate::models::{self, arch::ModelArch, QuantScheme};
 use crate::power::energy::WindowEnergy;
 use crate::power::model::LoadHandle;
 use crate::power::nvml::NvmlSim;
@@ -26,6 +26,10 @@ use super::{ExecRun, ExecutionBackend};
 pub struct SimBackend {
     arch: ModelArch,
     rig: Rig,
+    /// Active quantization scheme; defaults to the arch's native dtype
+    /// (the identity), under which timings match the pre-quant model
+    /// bit-for-bit.
+    scheme: QuantScheme,
     energy: bool,
     seed: u64,
     /// Virtual-time sensor log of the most recent replayed `generate`,
@@ -51,9 +55,11 @@ impl SimBackend {
             .ok_or_else(|| anyhow!("unknown model `{model}`"))?;
         let rig = hwsim::device::rig_by_name(device)
             .ok_or_else(|| anyhow!("unknown device `{device}`"))?;
+        let scheme = QuantScheme::native(arch.dtype);
         Ok(SimBackend {
             arch,
             rig,
+            scheme,
             energy,
             seed,
             log: None,
@@ -63,6 +69,14 @@ impl SimBackend {
 
     pub fn with_max_seq_len(mut self, max_seq_len: usize) -> SimBackend {
         self.max_seq_len = max_seq_len;
+        self
+    }
+
+    /// Switch the roofline onto a quantization scheme: every
+    /// `generate`/probe call then prices its byte streams (and thus its
+    /// memory-bound latencies and DRAM energy) at the scheme's widths.
+    pub fn with_quant(mut self, scheme: QuantScheme) -> SimBackend {
+        self.scheme = scheme;
         self
     }
 }
@@ -92,7 +106,8 @@ impl ExecutionBackend for SimBackend {
                 -> Result<ExecRun> {
         let w = Workload::new(prompts.batch(), prompts.prompt_len(),
                               gen_len);
-        let sim = hwsim::simulate(&self.arch, &self.rig, &w);
+        let sim = hwsim::simulate_quant(&self.arch, &self.rig, &w,
+                                        &self.scheme);
 
         let (prefill_window, step_windows) = if self.energy {
             // replay prefill + every decode step through the seeded
@@ -146,7 +161,8 @@ impl ExecutionBackend for SimBackend {
     fn prefill_probe(&mut self, prompts: &TokenBatch)
                      -> Result<(f64, (f64, f64))> {
         let w = Workload::new(prompts.batch(), prompts.prompt_len(), 1);
-        let sim = hwsim::simulate(&self.arch, &self.rig, &w);
+        let sim = hwsim::simulate_quant(&self.arch, &self.rig, &w,
+                                        &self.scheme);
         Ok((sim.ttft.seconds, (0.0, sim.ttft.seconds)))
     }
 
@@ -154,7 +170,8 @@ impl ExecutionBackend for SimBackend {
                     -> Result<(Vec<f64>, (f64, f64))> {
         let w = Workload::new(prompts.batch(), prompts.prompt_len(),
                               steps.max(1));
-        let sim = hwsim::simulate(&self.arch, &self.rig, &w);
+        let sim = hwsim::simulate_quant(&self.arch, &self.rig, &w,
+                                        &self.scheme);
         let total: f64 = sim.step_seconds.iter().sum();
         Ok((sim.step_seconds, (0.0, total)))
     }
@@ -283,6 +300,28 @@ mod tests {
         let _new = b.generate(&zeros(1, 64), 8).unwrap();
         let err = b.run_energy(&old).unwrap_err().to_string();
         assert!(err.contains("stale run"), "{err}");
+    }
+
+    #[test]
+    fn quant_scheme_speeds_up_simulated_decode() {
+        let mut base = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap();
+        let mut q4 = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap()
+            .with_quant(crate::models::quant::w4a16());
+        let b = base.generate(&zeros(1, 256), 64).unwrap();
+        let q = q4.generate(&zeros(1, 256), 64).unwrap();
+        assert!(q.tpot_mean_s() < b.tpot_mean_s() / 2.0,
+                "{} vs {}", q.tpot_mean_s(), b.tpot_mean_s());
+        assert!(q.ttlt_s < b.ttlt_s);
+        // the explicit native scheme is the identity
+        let mut native = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap()
+            .with_quant(crate::models::QuantScheme::native(
+                crate::models::Dtype::Bf16));
+        let n = native.generate(&zeros(1, 256), 64).unwrap();
+        assert_eq!(n.ttft_s, b.ttft_s);
+        assert_eq!(n.step_s, b.step_s);
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! elana latency --model M --device D --batch B --len P+G [--no-energy]
 //! elana suite  (table2|table3|table4|<file.json>)
 //! elana sweep  [--spec f.json] [--models a,b] [--devices d1,d2]
-//!              [--batches 1,8] [--lens 256+256,512+512] [--threads N]
+//!              [--batches 1,8] [--lens 256+256,512+512] [--quant q1,q2]
+//!              [--threads N]
+//! elana plan   [--models a,b] [--devices d1,d2] [--quant q1,q2]
+//!              [--lens 512+512] [--rate RPS] [--workers N]
 //! elana trace  --model M --device D --batch B --len P+G --out trace.json
 //! elana serve  [--model M] [--device D] [--requests N] [--rate R]
 //!              [--trace t.json] [--prompts LO..HI] [--gen G]
@@ -20,6 +23,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::spec::{Arrivals, ServeSpec};
 use crate::hwsim::Workload;
+use crate::models::quant;
+use crate::planner::PlanSpec;
 use crate::sweep::spec::SweepOverrides;
 use crate::util::units::{parse_workload_len, MemUnit};
 
@@ -39,6 +44,8 @@ pub enum Command {
         workload: Workload,
         energy: bool,
         runs: Option<usize>,
+        /// Quantization scheme (simulated rigs only).
+        quant: Option<crate::models::QuantScheme>,
     },
     /// A whole suite (built-in name or JSON path).
     Suite { name: String },
@@ -60,6 +67,15 @@ pub enum Command {
         device: String,
         workload: Workload,
         out: String,
+    },
+    /// Quantization-aware capacity planner: max-fit operating points,
+    /// Pareto frontier, per-device recommendations, fleet sizing.
+    Plan {
+        spec: PlanSpec,
+        /// Print JSON to stdout instead of the markdown report.
+        json: bool,
+        /// Write the JSON report here.
+        out: Option<String>,
     },
     /// The serving subsystem: virtual-time trace-replay simulator on
     /// hwsim rigs, wall-clock serving on `--device cpu`.
@@ -120,17 +136,21 @@ pub fn parse(args: &[String]) -> Result<Command> {
     let known: Option<&[&str]> = match cmd.as_str() {
         "size" => Some(&["models", "unit", "points"]),
         "latency" | "energy" => {
-            Some(&["model", "device", "batch", "len", "runs", "no-energy"])
+            Some(&["model", "device", "batch", "len", "runs", "quant",
+                   "no-energy"])
         }
         "suite" => Some(&[]),
         "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
-                          "threads", "seed", "unit", "no-energy", "out",
-                          "json"]),
+                          "quant", "threads", "seed", "unit", "no-energy",
+                          "out", "json"]),
+        "plan" => Some(&["models", "devices", "quant", "lens", "rate",
+                         "workers", "seed", "unit", "no-energy", "out",
+                         "json"]),
         "trace" => Some(&["model", "device", "batch", "len", "out"]),
         "serve" => Some(&["model", "device", "requests", "rate", "trace",
                           "prompts", "gen", "replicas", "workers", "seed",
-                          "max-wait", "max-seq-len", "no-energy", "json",
-                          "out"]),
+                          "max-wait", "max-seq-len", "quant", "no-energy",
+                          "json", "out"]),
         "models" | "help" | "-h" | "--help" | "version" | "-V"
         | "--version" => Some(&[]),
         _ => None, // unknown command: reported by the match below
@@ -163,6 +183,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
             }
         }
     }
+
+    // a comma list of quant tokens, validated eagerly so a typo'd
+    // scheme fails at parse time with the known names
+    let quant_list = |list: &str| -> Result<Vec<String>> {
+        list.split(',')
+            .map(|t| {
+                quant::parse_token(t)?;
+                Ok(t.trim().to_ascii_lowercase())
+            })
+            .collect()
+    };
 
     let workload = || -> Result<Workload> {
         let batch: usize = get("batch").unwrap_or("1").parse()
@@ -206,6 +237,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
             energy: cmd == "energy" || !has("no-energy"),
             runs: get("runs").map(|r| r.parse()).transpose()
                 .map_err(|_| anyhow!("bad --runs"))?,
+            quant: get("quant").map(quant::parse_token).transpose()?
+                .flatten(),
         }),
         "suite" => Ok(Command::Suite {
             name: positional
@@ -244,6 +277,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                             .collect::<Result<Vec<_>>>()
                     })
                     .transpose()?,
+                quants: get("quant").map(quant_list).transpose()?,
                 energy: if has("no-energy") { Some(false) } else { None },
                 unit: get("unit")
                     .map(|u| {
@@ -265,6 +299,52 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 overrides,
                 out: get("out").map(str::to_string),
                 json: has("json"),
+            })
+        }
+        "plan" => {
+            let mut spec = PlanSpec::default();
+            if let Some(ms) = get("models") {
+                spec.models = ms.split(',').map(str::to_string).collect();
+            }
+            if let Some(ds) = get("devices") {
+                spec.devices = ds.split(',').map(str::to_string).collect();
+            }
+            if let Some(qs) = get("quant") {
+                spec.quants = quant_list(qs)?;
+            }
+            if let Some(ls) = get("lens") {
+                spec.lens = ls
+                    .split(',')
+                    .map(|l| {
+                        parse_workload_len(l).ok_or_else(|| {
+                            anyhow!("bad --lens entry `{l}` (want P+G)")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(r) = get("rate") {
+                spec.target_rps =
+                    r.parse().map_err(|_| anyhow!("bad --rate"))?;
+            }
+            if let Some(w) = get("workers") {
+                spec.workers =
+                    w.parse().map_err(|_| anyhow!("bad --workers"))?;
+            }
+            if let Some(sd) = get("seed") {
+                spec.seed =
+                    sd.parse().map_err(|_| anyhow!("bad --seed"))?;
+            }
+            if let Some(u) = get("unit") {
+                spec.unit = MemUnit::parse(u)
+                    .ok_or_else(|| anyhow!("bad --unit (si|gib)"))?;
+            }
+            if has("no-energy") {
+                spec.energy = false;
+            }
+            Ok(Command::Plan {
+                spec,
+                json: has("json"),
+                out: get("out").map(str::to_string),
             })
         }
         "trace" => Ok(Command::Trace {
@@ -350,6 +430,10 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 spec.max_seq_len =
                     m.parse().map_err(|_| anyhow!("bad --max-seq-len"))?;
             }
+            if let Some(q) = get("quant") {
+                quant::parse_token(q)?;
+                spec.quant = q.trim().to_ascii_lowercase();
+            }
             if has("no-energy") {
                 spec.energy = false;
             }
@@ -372,23 +456,31 @@ ELANA — energy and latency analyzer for LLMs (reproduction)
 USAGE:
   elana size    [--models m1,m2] [--unit si|gib] [--points 1x1024,128x1024]
   elana latency --model MODEL --device a6000|4xa6000|thor|orin|a100|h100|cpu
-                [--batch B] [--len P+G] [--runs N] [--no-energy]
+                [--batch B] [--len P+G] [--runs N] [--quant SCHEME]
+                [--no-energy]
   elana energy  (latency with energy always on)
   elana suite   table2|table3|table4|path/to/suite.json
   elana sweep   [--spec sweep.json] [--models m1,m2] [--devices d1,d2]
-                [--batches 1,8] [--lens 256+256,512+512] [--threads N]
+                [--batches 1,8] [--lens 256+256,512+512]
+                [--quant native,w4a16] [--threads N] [--seed S]
+                [--unit si|gib] [--no-energy] [--out sweep.json] [--json]
+  elana plan    [--models m1,m2] [--devices d1,d2]
+                [--quant bf16,w8a16,w4a16,w4a8kv4]
+                [--lens 512+512,2048+2048] [--rate RPS] [--workers W]
                 [--seed S] [--unit si|gib] [--no-energy]
-                [--out sweep.json] [--json]
+                [--out plan.json] [--json]
   elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
                 [--out trace.json]
   elana serve   [--model MODEL] [--device RIG|cpu] [--requests N]
                 [--rate RPS | --trace trace.json] [--prompts LO..HI]
                 [--gen G] [--replicas R] [--workers W] [--seed S]
-                [--max-wait MS] [--max-seq-len L] [--no-energy]
-                [--out serve.json] [--json]
+                [--max-wait MS] [--max-seq-len L] [--quant SCHEME]
+                [--no-energy] [--out serve.json] [--json]
   elana models
   elana help | version
 
+Quant schemes: native (the model's own dtype), bf16, w8a16, w4a16
+(AWQ-style), w4a8kv4 (QServe-style).
 Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
 ";
 
@@ -434,7 +526,8 @@ mod tests {
             "latency --model llama-3.1-8b --device a6000 --batch 1 \
              --len 512+512 --runs 100")).unwrap();
         match c {
-            Command::Latency { model, device, workload, energy, runs } => {
+            Command::Latency { model, device, workload, energy, runs,
+                               quant } => {
                 assert_eq!(model, "llama-3.1-8b");
                 assert_eq!(device, "a6000");
                 assert_eq!(workload.batch, 1);
@@ -442,6 +535,7 @@ mod tests {
                 assert_eq!(workload.gen_len, 512);
                 assert!(energy);
                 assert_eq!(runs, Some(100));
+                assert!(quant.is_none());
             }
             _ => panic!("{c:?}"),
         }
@@ -655,6 +749,87 @@ mod tests {
             }
             _ => panic!("{c:?}"),
         }
+    }
+
+    #[test]
+    fn parse_plan_defaults() {
+        match parse(&argv("plan")).unwrap() {
+            Command::Plan { spec, json, out } => {
+                assert_eq!(spec, crate::planner::PlanSpec::default());
+                assert_eq!(spec.n_points(), 3 * 6 * 4 * 2);
+                assert!(!json);
+                assert!(out.is_none());
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_plan_full_flag_set() {
+        let c = parse(&argv(
+            "plan --models llama-3.1-8b,qwen-2.5-7b --devices a6000,orin              --quant bf16,w4a16 --lens 512+512 --rate 25.5 --workers 4              --seed 9 --unit gib --no-energy --out /tmp/p.json --json"))
+            .unwrap();
+        match c {
+            Command::Plan { spec, json, out } => {
+                assert_eq!(spec.models,
+                           vec!["llama-3.1-8b", "qwen-2.5-7b"]);
+                assert_eq!(spec.devices, vec!["a6000", "orin"]);
+                assert_eq!(spec.quants, vec!["bf16", "w4a16"]);
+                assert_eq!(spec.lens, vec![(512, 512)]);
+                assert_eq!(spec.target_rps, 25.5);
+                assert_eq!(spec.workers, 4);
+                assert_eq!(spec.seed, 9);
+                assert_eq!(spec.unit, MemUnit::Binary);
+                assert!(!spec.energy);
+                assert!(json);
+                assert_eq!(out.as_deref(), Some("/tmp/p.json"));
+                spec.validate().unwrap();
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn quant_flags_parse_and_reject_unknown_schemes() {
+        // sweep: list flag, case-insensitive, `native` allowed
+        match parse(&argv("sweep --quant Native,W4A16")).unwrap() {
+            Command::Sweep { overrides, .. } => {
+                assert_eq!(overrides.quants.as_deref(),
+                           Some(&["native".to_string(),
+                                  "w4a16".to_string()][..]));
+            }
+            c => panic!("{c:?}"),
+        }
+        let err =
+            parse(&argv("sweep --quant int3")).unwrap_err().to_string();
+        assert!(err.contains("unknown quant scheme `int3`"), "{err}");
+        assert!(err.contains("w4a8kv4"), "{err}");
+        // plan
+        assert!(parse(&argv("plan --quant bf16,int3")).is_err());
+        assert!(parse(&argv("plan --rate fast")).is_err());
+        assert!(parse(&argv("plan --lens 512")).is_err());
+        assert!(parse(&argv("plan --workers many")).is_err());
+        // latency: single-token flag resolves to a scheme
+        match parse(&argv("latency --model m --quant w4a8kv4")).unwrap() {
+            Command::Latency { quant, .. } => {
+                assert_eq!(quant.unwrap().key, "w4a8kv4");
+            }
+            c => panic!("{c:?}"),
+        }
+        // `native` on latency means the model's own dtype (no override)
+        match parse(&argv("latency --model m --quant native")).unwrap() {
+            Command::Latency { quant, .. } => assert!(quant.is_none()),
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("latency --model m --quant int3")).is_err());
+        // serve: token is normalized and validated
+        match parse(&argv("serve --quant W8A16")).unwrap() {
+            Command::Serve { spec, .. } => {
+                assert_eq!(spec.quant, "w8a16");
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("serve --quant int3")).is_err());
     }
 
     #[test]

@@ -4,10 +4,15 @@
 //! buckets (the fixed-shape analogue of CUDA-graph bucketing), so the
 //! batcher must (a) pick a compiled batch size ≥ the number of waiting
 //! requests (padding with dummy rows it later discards), (b) pad every
-//! prompt to the batch's longest prompt, and (c) cap generation length
-//! so the longest (prompt + gen) fits the model's max_seq_len.
+//! prompt to the batch's longest prompt, (c) cap generation length so
+//! the longest (prompt + gen) fits the model's max_seq_len, and (d) —
+//! when the policy carries a KV budget — keep the *quantized* cache
+//! bytes of the executing shape inside device memory, shedding tail
+//! requests back to the queue when a shape would not fit.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
+
+use crate::planner::solve::FitModel;
 
 use super::request::ServingRequest;
 
@@ -22,6 +27,10 @@ pub struct BatchPolicy {
     pub max_seq_len: usize,
     /// Max time the head-of-line request may wait for co-batching.
     pub max_wait_s: f64,
+    /// Scheme-aware memory admission: a batch shape is only executed if
+    /// its quantized weights + cache + activations fit device memory
+    /// (`None` = unconstrained, e.g. the laptop-scale dev engine).
+    pub kv_budget: Option<FitModel>,
 }
 
 impl BatchPolicy {
@@ -37,6 +46,24 @@ impl BatchPolicy {
     /// Smallest prompt bucket ≥ len.
     pub fn fit_bucket(&self, len: usize) -> Option<usize> {
         self.prompt_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Whether an executing shape (batch rows at `seq_len` = padded
+    /// prompt + generation) fits the KV budget.
+    pub fn shape_fits(&self, batch: usize, seq_len: usize) -> bool {
+        match &self.kv_budget {
+            Some(fm) => fm.fits(batch, seq_len),
+            None => true,
+        }
+    }
+
+    /// Longest context the KV budget allows at `batch` rows (unbounded
+    /// policies return `max_seq_len`).
+    fn budget_seq_cap(&self, batch: usize) -> usize {
+        match &self.kv_budget {
+            Some(fm) => fm.max_ctx(batch).min(self.max_seq_len),
+            None => self.max_seq_len,
+        }
     }
 }
 
@@ -71,29 +98,52 @@ impl BatchPlan {
 }
 
 /// Form a batch plan from waiting requests (truncates to the policy's
-/// max batch; callers re-queue the remainder).
+/// max batch; callers re-queue the remainder). Shapes that would blow
+/// the KV budget shed tail requests back onto the queue until the
+/// quantized cache of the executing shape fits device memory.
 pub fn plan_batch(policy: &BatchPolicy, mut waiting: Vec<ServingRequest>)
                   -> Result<(BatchPlan, Vec<ServingRequest>)> {
     ensure!(!waiting.is_empty(), "cannot plan an empty batch");
-    let take = waiting.len().min(policy.max_batch());
+    let mut take = waiting.len().min(policy.max_batch());
+    let (exec_batch, padded_prompt_len) = loop {
+        let exec_batch = policy
+            .fit_batch(take)
+            .ok_or_else(|| anyhow::anyhow!(
+                "no compiled batch size fits {take} requests \
+                 (allowed: {:?})",
+                policy.allowed_batches))?;
+
+        let longest = waiting[..take]
+            .iter()
+            .map(|r| r.prompt.len())
+            .max()
+            .unwrap();
+        let padded_prompt_len = policy
+            .fit_bucket(longest)
+            .ok_or_else(|| anyhow::anyhow!(
+                "prompt of {longest} tokens exceeds buckets {:?}",
+                policy.prompt_buckets))?;
+
+        // KV-budget admission: the shape must leave room for at least
+        // one generated token past the padded prompt
+        if policy.shape_fits(exec_batch, padded_prompt_len + 1) {
+            break (exec_batch, padded_prompt_len);
+        }
+        if take == 1 {
+            bail!(
+                "a single {padded_prompt_len}-token request exceeds the \
+                 device KV budget (quantized cache does not fit; use a \
+                 deeper cache scheme or a smaller context)");
+        }
+        take -= 1; // shed the newest request back to the queue
+    };
     let rest = waiting.split_off(take);
     let requests = waiting;
 
-    let exec_batch = policy
-        .fit_batch(requests.len())
-        .ok_or_else(|| anyhow::anyhow!(
-            "no compiled batch size fits {} requests (allowed: {:?})",
-            requests.len(), policy.allowed_batches))?;
-
-    let longest = requests.iter().map(|r| r.prompt.len()).max().unwrap();
-    let padded_prompt_len = policy
-        .fit_bucket(longest)
-        .ok_or_else(|| anyhow::anyhow!(
-            "prompt of {longest} tokens exceeds buckets {:?}",
-            policy.prompt_buckets))?;
-
     // generation budget: shortest request gen, capped by context space
-    let space = policy.max_seq_len - padded_prompt_len;
+    // (model limit and, when present, the KV budget at this batch)
+    let space = policy.budget_seq_cap(exec_batch).max(padded_prompt_len + 1)
+        - padded_prompt_len;
     let gen_len = requests
         .iter()
         .map(|r| r.gen_len)
@@ -125,6 +175,7 @@ mod tests {
             prompt_buckets: vec![16, 64],
             max_seq_len: 128,
             max_wait_s: 0.02,
+            kv_budget: None,
         }
     }
 
@@ -190,6 +241,71 @@ mod tests {
         assert_eq!(plan.padding_waste(), 0.0);
         let (plan, _) = plan_batch(&policy(), vec![req(0, 8, 4)]).unwrap();
         assert!((plan.padding_waste() - 0.5).abs() < 1e-12);
+    }
+
+    fn tight_budget_policy() -> BatchPolicy {
+        // llama-3.1-8b bf16 on an 8 GB Orin: the weights alone blow the
+        // budget — w4a16 fits with room for a couple of short sequences
+        use crate::hwsim::device::{orin_nano, Rig};
+        use crate::models::quant::w4a16;
+        use crate::models::registry::llama31_8b;
+        BatchPolicy {
+            allowed_batches: vec![1, 4, 16, 32],
+            prompt_buckets: vec![16, 64, 1024, 4096],
+            max_seq_len: 8192,
+            max_wait_s: 0.02,
+            kv_budget: Some(FitModel::new(&llama31_8b(), Some(w4a16()),
+                                          &Rig::single(orin_nano()))),
+        }
+    }
+
+    #[test]
+    fn kv_budget_sheds_tail_requests_until_the_shape_fits() {
+        let p = tight_budget_policy();
+        // 32 rows at a 4096-token bucket want ~19 GB of bf16-KV cache;
+        // the ~2.7 GB budget only admits a few
+        let reqs: Vec<_> = (0..32).map(|i| req(i, 4000, 64)).collect();
+        let (plan, rest) = plan_batch(&p, reqs).unwrap();
+        assert!(plan.real_rows() < 32, "must shed: {}", plan.real_rows());
+        assert_eq!(plan.real_rows() + rest.len(), 32, "conservation");
+        let fm = p.kv_budget.as_ref().unwrap();
+        // the executing shape fits, at the full generated length
+        assert!(fm.fits(plan.exec_batch,
+                        plan.padded_prompt_len + plan.gen_len),
+                "{plan:?}");
+        // shed requests keep queue order
+        assert_eq!(rest[0].id, plan.real_rows() as u64);
+    }
+
+    #[test]
+    fn kv_budget_caps_generation_length() {
+        let p = tight_budget_policy();
+        let fm = p.kv_budget.as_ref().unwrap();
+        // 16 rows at the 1024 bucket fit, but not out to max_seq_len
+        let reqs: Vec<_> = (0..16).map(|i| req(i, 1000, 100_000)).collect();
+        let (plan, _) = plan_batch(&p, reqs).unwrap();
+        assert!(fm.fits(plan.exec_batch,
+                        plan.padded_prompt_len + plan.gen_len),
+                "{plan:?}");
+        assert!(plan.padded_prompt_len + plan.gen_len <= p.max_seq_len);
+        // the cap binds strictly below the request's ask
+        assert!(plan.gen_len < 100_000);
+    }
+
+    #[test]
+    fn kv_budget_rejects_a_request_that_can_never_fit() {
+        use crate::hwsim::device::{orin_nano, Rig};
+        use crate::models::quant::bf16;
+        use crate::models::registry::llama31_8b;
+        let p = BatchPolicy {
+            kv_budget: Some(FitModel::new(&llama31_8b(), Some(bf16()),
+                                          &Rig::single(orin_nano()))),
+            ..tight_budget_policy()
+        };
+        let err = plan_batch(&p, vec![req(0, 32, 8)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("KV budget"), "{err}");
     }
 
     #[test]

@@ -45,7 +45,14 @@ fn arrivals_line(o: &ServeOutcome) -> String {
 pub fn render_markdown(o: &ServeOutcome) -> String {
     let s = &o.spec;
     let mut out = String::new();
-    let _ = writeln!(out, "# elana serve — {} on {}", s.model, s.device);
+    let quant = s.quant_canonical();
+    if quant == "native" {
+        let _ = writeln!(out, "# elana serve — {} on {}", s.model,
+                         s.device);
+    } else {
+        let _ = writeln!(out, "# elana serve — {} on {} [quant {quant}]",
+                         s.model, s.device);
+    }
     let _ = writeln!(out);
     let _ = writeln!(out, "{}", arrivals_line(o));
     if o.wall_clock {
@@ -174,6 +181,7 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         ("device", Json::str(s.device.clone())),
         ("arrivals", arrivals),
         ("replicas", Json::num(s.replicas as f64)),
+        ("quant", Json::str(s.quant_canonical())),
         ("seed", Json::str(s.seed.to_string())),
         ("wall_clock", Json::Bool(o.wall_clock)),
         ("n_requests", Json::num(o.requests.len() as f64)),

@@ -191,6 +191,7 @@ mod tests {
             prompt_buckets: vec![16, 64],
             max_seq_len: 128,
             max_wait_s: 0.01,
+            kv_budget: None,
         }
     }
 

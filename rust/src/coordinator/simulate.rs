@@ -157,6 +157,9 @@ pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
         let mut backend =
             SimBackend::new(&spec.model, &spec.device, false, spec.seed)?
                 .with_max_seq_len(spec.max_seq_len);
+        if let Some(q) = spec.scheme()? {
+            backend = backend.with_quant(q);
+        }
         let mut outcome = simulate(spec, &mut backend)?;
         if spec.energy {
             attribute_energy(spec, &mut outcome)?;
@@ -308,6 +311,7 @@ fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
         .map(|b| (b.exec_batch, b.padded_prompt_len, b.gen_len))
         .collect();
     let base = Rng::mix(spec.seed, streams::SERVE_ENERGY);
+    let scheme = spec.scheme()?;
     let results = pool::run_indexed(
         spec.workers, shapes.len(),
         |i| -> Result<(f64, f64, f64)> {
@@ -315,6 +319,9 @@ fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
             let mut b = SimBackend::new(&spec.model, &spec.device, true,
                                         Rng::mix(base, i as u64))?
                 .with_max_seq_len(spec.max_seq_len);
+            if let Some(q) = scheme {
+                b = b.with_quant(q);
+            }
             let tb = TokenBatch::new(batch, prompt,
                                      vec![0; batch * prompt])?;
             let run = b.generate(&tb, gen)?;
@@ -345,6 +352,8 @@ fn serve_wall_clock(spec: &ServeSpec) -> Result<ServeOutcome> {
         prompt_buckets: mm.prompt_buckets(1),
         max_seq_len: mm.max_seq_len,
         max_wait_s: spec.max_wait_s,
+        // dev engine caches are tiny relative to host memory
+        kv_budget: None,
     };
     // clamp the prompt range into the compiled buckets (dev models have
     // small contexts; the report shows the lengths actually used)
@@ -512,6 +521,30 @@ mod tests {
             .collect();
         assert_eq!(runs[0], runs[1]);
         assert_eq!(runs[0], runs[2]);
+    }
+
+    #[test]
+    fn quantized_serving_is_faster_and_cheaper() {
+        let mut base = quick_spec();
+        base.energy = true;
+        let mut q = base.clone();
+        q.quant = "w4a8kv4".to_string();
+        let ob = run(&base).unwrap();
+        let oq = run(&q).unwrap();
+        // same trace (quant does not touch the arrival stream)
+        assert_eq!(ob.requests.len(), oq.requests.len());
+        for (a, b) in ob.requests.iter().zip(&oq.requests) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+        // 4-bit weights on a bandwidth-bound rig: the run finishes
+        // sooner and each token costs less energy
+        assert!(oq.makespan_s < ob.makespan_s,
+                "{} vs {}", oq.makespan_s, ob.makespan_s);
+        let jt = |o: &ServeOutcome| {
+            o.total_joules.unwrap() / o.generated_tokens() as f64
+        };
+        assert!(jt(&oq) < jt(&ob), "{} vs {}", jt(&oq), jt(&ob));
     }
 
     #[test]

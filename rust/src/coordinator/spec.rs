@@ -14,7 +14,8 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::hwsim::device;
-use crate::models;
+use crate::models::{self, quant, QuantScheme};
+use crate::planner::solve::FitModel;
 
 use super::batcher::BatchPolicy;
 
@@ -59,6 +60,10 @@ pub struct ServeSpec {
     pub max_wait_s: f64,
     /// Context cap the batcher enforces (padded prompt + generation).
     pub max_seq_len: usize,
+    /// Quantization-scheme token (`native`, `bf16`, `w8a16`, `w4a16`,
+    /// `w4a8kv4`). Simulated rigs price execution *and* the KV-budget
+    /// admission at the scheme's widths; `native` is the identity.
+    pub quant: String,
 }
 
 impl Default for ServeSpec {
@@ -77,6 +82,7 @@ impl Default for ServeSpec {
             energy: true,
             max_wait_s: 0.05,
             max_seq_len: 4096,
+            quant: "native".to_string(),
         }
     }
 }
@@ -89,6 +95,25 @@ pub const SIM_BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
 impl ServeSpec {
     pub fn is_simulated(&self) -> bool {
         self.device != "cpu"
+    }
+
+    /// Resolve the quant token (`None` = the model's native dtype).
+    /// Unknown tokens error with the known list — `validate` calls this.
+    pub fn scheme(&self) -> Result<Option<QuantScheme>> {
+        quant::parse_token(&self.quant)
+    }
+
+    /// Canonical form of the quant token (`native` or a scheme key),
+    /// however the caller spelled it — reports key on this so two
+    /// identical deployments can never render different artifacts.
+    /// Unparseable tokens return verbatim (`validate` rejects them
+    /// before any report is rendered).
+    pub fn quant_canonical(&self) -> String {
+        match self.scheme() {
+            Ok(None) => "native".to_string(),
+            Ok(Some(q)) => q.key.to_string(),
+            Err(_) => self.quant.clone(),
+        }
     }
 
     /// Smallest power-of-two prompt bucket ≥ `len` (min 16).
@@ -113,13 +138,25 @@ impl ServeSpec {
         buckets
     }
 
-    /// Batching policy for the virtual-time simulator.
+    /// Batching policy for the virtual-time simulator, carrying the
+    /// scheme-aware KV-budget admission for the named model/device
+    /// (absent only when the names are unknown, which `validate`
+    /// rejects before any serving starts).
     pub fn sim_policy(&self) -> BatchPolicy {
+        let kv_budget = match (models::lookup(&self.model),
+                               device::rig_by_name(&self.device),
+                               self.scheme()) {
+            (Some(arch), Some(rig), Ok(scheme)) => {
+                Some(FitModel::new(&arch, scheme, &rig))
+            }
+            _ => None,
+        };
         BatchPolicy {
             allowed_batches: SIM_BATCHES.to_vec(),
             prompt_buckets: self.sim_buckets(),
             max_seq_len: self.max_seq_len,
             max_wait_s: self.max_wait_s,
+            kv_budget,
         }
     }
 
@@ -158,11 +195,30 @@ impl ServeSpec {
                 ensure!(!path.is_empty(), "trace path is empty");
             }
         }
+        self.scheme()?;
+        ensure!(self.is_simulated() || self.scheme()?.is_none(),
+                "--quant applies to simulated rigs only; the `cpu` \
+                 engine executes unquantized artifacts");
         if self.is_simulated() {
             let top = Self::bucket_ceil(self.prompt_hi);
             ensure!(self.max_seq_len > top,
                     "max_seq_len {} leaves no room to generate past the \
                      {top}-token prompt bucket", self.max_seq_len);
+            // a deployment that cannot hold even one request at the
+            // workload's top prompt bucket must fail loudly before
+            // serving starts (plan_batch would bail mid-run otherwise)
+            let arch = models::lookup(&self.model).expect("checked above");
+            let rig = device::rig_by_name(&self.device)
+                .expect("checked above");
+            let fm = FitModel::new(&arch, self.scheme()?, &rig);
+            ensure!(fm.fits(1, top + 1),
+                    "{} under scheme `{}` does not fit {}: one \
+                     {top}-token request needs {:.1} GB ({:.1} GB of \
+                     weights) vs a {:.1} GB budget",
+                    self.model, self.quant, self.device,
+                    fm.required_bytes(1, top + 1) as f64 / 1e9,
+                    fm.weight_bytes as f64 / 1e9,
+                    fm.budget_bytes as f64 / 1e9);
         }
         Ok(())
     }
@@ -227,6 +283,71 @@ mod tests {
         for s in bad {
             assert!(s.validate().is_err(), "{s:?}");
         }
+    }
+
+    #[test]
+    fn quant_token_validates_and_feeds_the_kv_budget() {
+        let mut s = ServeSpec::default();
+        assert_eq!(s.scheme().unwrap(), None);
+        s.quant = "w4a8kv4".to_string();
+        s.validate().unwrap();
+        assert_eq!(s.scheme().unwrap().unwrap().key, "w4a8kv4");
+        // the policy carries a scheme-aware admission budget...
+        let p = s.sim_policy();
+        let fm = p.kv_budget.as_ref().expect("budget for known rig");
+        // ...at the quantized widths: kv4 is 4x smaller than bf16
+        let native = ServeSpec::default().sim_policy();
+        let nfm = native.kv_budget.as_ref().unwrap();
+        assert_eq!(nfm.kv_bytes_per_token, 4 * fm.kv_bytes_per_token);
+        assert!(fm.weight_bytes < nfm.weight_bytes / 3);
+
+        s.quant = "int3".to_string();
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown quant scheme"), "{err}");
+        // the engine executes unquantized artifacts
+        let mut cpu = ServeSpec {
+            device: "cpu".to_string(),
+            model: "elana-tiny".to_string(),
+            quant: "w4a16".to_string(),
+            ..ServeSpec::default()
+        };
+        let err = cpu.validate().unwrap_err().to_string();
+        assert!(err.contains("simulated rigs only"), "{err}");
+        // ...but any spelling of the identity token is fine there
+        cpu.quant = "NATIVE".to_string();
+        cpu.validate().unwrap();
+    }
+
+    #[test]
+    fn quant_token_spelling_canonicalizes() {
+        let mut s = ServeSpec::default();
+        assert_eq!(s.quant_canonical(), "native");
+        s.quant = " NATIVE ".to_string();
+        assert_eq!(s.quant_canonical(), "native");
+        s.quant = "W4A8KV4".to_string();
+        s.validate().unwrap();
+        assert_eq!(s.quant_canonical(), "w4a8kv4");
+    }
+
+    #[test]
+    fn oversized_model_rejected_before_serving() {
+        // bf16 Llama-8B cannot fit an 8 GB Orin Nano; w4a16 can
+        let mut s = ServeSpec {
+            device: "orin".to_string(),
+            ..ServeSpec::default()
+        };
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("does not fit"), "{err}");
+        s.quant = "w4a16".to_string();
+        s.validate().unwrap();
+        // weights that fit but a prompt range whose top bucket cannot:
+        // rejected at validate, not mid-simulation in plan_batch
+        s.prompt_lo = 20_000;
+        s.prompt_hi = 30_000;
+        s.max_seq_len = 40_000;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("does not fit"), "{err}");
+        assert!(err.contains("32768-token request"), "{err}");
     }
 
     #[test]

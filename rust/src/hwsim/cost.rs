@@ -12,7 +12,8 @@
 //!   the paper's Nemotron rows showcase).
 
 use crate::models::arch::{LayerKind, ModelArch};
-use crate::models::{cache, size};
+use crate::models::quant::EffectiveBytes;
+use crate::models::size;
 
 /// FLOPs and DRAM bytes of one phase execution (whole batch, all layers).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -74,9 +75,19 @@ fn ssm_flops_per_token(arch: &ModelArch) -> f64 {
     }
 }
 
-/// Whole-prompt prefill cost (ELANA's TTFT phase).
+/// Whole-prompt prefill cost (ELANA's TTFT phase) at the native dtype.
 pub fn prefill_cost(arch: &ModelArch, batch: usize, prompt_len: usize)
                     -> PhaseCost {
+    prefill_cost_quant(&EffectiveBytes::native(arch), batch, prompt_len)
+}
+
+/// Prefill cost under a quantization scheme: FLOPs are unchanged
+/// (dequant rides inside the GEMMs), but the weight stream and the
+/// cache write shrink to the scheme's widths. Activations (the residual
+/// stream) stay at the compute dtype.
+pub fn prefill_cost_quant(eb: &EffectiveBytes, batch: usize,
+                          prompt_len: usize) -> PhaseCost {
+    let arch = eb.arch();
     let tokens = (batch * prompt_len) as f64;
     let mut c = PhaseCost::default();
     // dense matmuls over every prompt token
@@ -89,15 +100,25 @@ pub fn prefill_cost(arch: &ModelArch, batch: usize, prompt_len: usize)
     // bytes: weights streamed once + KV/state cache written once +
     // activations (one residual stream read+write per layer)
     let dt = arch.dtype.bytes() as f64;
-    c.bytes += size::model_bytes(arch) as f64;
-    c.bytes += cache::cache_bytes(arch, batch, prompt_len) as f64;
+    c.bytes += eb.weight_bytes() as f64;
+    c.bytes += eb.cache_bytes(batch, prompt_len) as f64;
     c.bytes += 2.0 * arch.n_layers() as f64 * tokens
         * arch.d_model as f64 * dt;
     c
 }
 
-/// One decode step at context length `ctx` (ELANA's TPOT phase).
+/// One decode step at context length `ctx` (ELANA's TPOT phase) at the
+/// native dtype.
 pub fn decode_cost(arch: &ModelArch, batch: usize, ctx: usize) -> PhaseCost {
+    decode_cost_quant(&EffectiveBytes::native(arch), batch, ctx)
+}
+
+/// One decode step under a quantization scheme — the bandwidth-bound
+/// byte stream (weights + KV reads + state) shrinks to the scheme's
+/// widths, which is exactly how low-bit schemes speed up decode.
+pub fn decode_cost_quant(eb: &EffectiveBytes, batch: usize, ctx: usize)
+                         -> PhaseCost {
+    let arch = eb.arch();
     let tokens = batch as f64;
     let mut c = PhaseCost::default();
     c.flops += 2.0 * matmul_params(arch) * tokens;
@@ -106,11 +127,10 @@ pub fn decode_cost(arch: &ModelArch, batch: usize, ctx: usize) -> PhaseCost {
 
     // bytes: weights once per step (batch-amortized), KV read per
     // sequence, SSM state read+write per sequence
-    c.bytes += size::model_bytes(arch) as f64;
-    c.bytes += cache::kv_bytes_per_token(arch) as f64
+    c.bytes += eb.weight_bytes() as f64;
+    c.bytes += eb.kv_bytes_per_token() as f64
         * batch as f64 * ctx as f64;
-    c.bytes += 2.0 * (cache::ssm_state_bytes_per_seq(arch)
-                      + cache::conv_state_bytes_per_seq(arch)) as f64
+    c.bytes += 2.0 * eb.state_bytes_per_seq() as f64
         * batch as f64;
     c
 }

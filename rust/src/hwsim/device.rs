@@ -17,6 +17,8 @@ use crate::power::DevicePowerModel;
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSpec {
     pub name: &'static str,
+    /// Device memory capacity, SI GB (the capacity planner's budget).
+    pub mem_gb: f64,
     /// Peak dense bf16/fp16 throughput, TFLOPS.
     pub peak_tflops: f64,
     /// Peak memory bandwidth, GB/s.
@@ -93,6 +95,13 @@ impl Rig {
         }
     }
 
+    /// Total device memory across the rig, bytes (SI). TP shards
+    /// weights and cache roughly evenly, so the planner's fit math
+    /// compares whole-rig requirements against whole-rig capacity.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.n_devices as f64 * self.device.mem_gb * 1e9) as u64
+    }
+
     /// Ring all-reduce cost for `bytes` per rank spread over `count`
     /// collective calls (2(N-1)/N transfer volume; every call pays the
     /// fixed latency — on PCIe rigs this dominates small decode-step
@@ -113,6 +122,7 @@ impl Rig {
 pub fn a6000() -> DeviceSpec {
     DeviceSpec {
         name: "A6000",
+        mem_gb: 48.0,
         peak_tflops: 154.8,
         peak_bw_gbs: 768.0,
         eta_compute: 0.57,
@@ -147,6 +157,7 @@ pub fn a6000_x4() -> Rig {
 pub fn agx_thor() -> DeviceSpec {
     DeviceSpec {
         name: "AGX-Thor",
+        mem_gb: 128.0,
         peak_tflops: 125.0,
         peak_bw_gbs: 273.0,
         eta_compute: 0.45,
@@ -169,6 +180,7 @@ pub fn agx_thor() -> DeviceSpec {
 pub fn orin_nano() -> DeviceSpec {
     DeviceSpec {
         name: "Orin-Nano",
+        mem_gb: 8.0,
         peak_tflops: 10.0,
         peak_bw_gbs: 68.0,
         eta_compute: 0.44,
@@ -193,6 +205,7 @@ pub fn orin_nano() -> DeviceSpec {
 pub fn a100() -> DeviceSpec {
     DeviceSpec {
         name: "A100",
+        mem_gb: 80.0,
         peak_tflops: 312.0,
         peak_bw_gbs: 2039.0,
         eta_compute: 0.60,
@@ -215,6 +228,7 @@ pub fn a100() -> DeviceSpec {
 pub fn h100() -> DeviceSpec {
     DeviceSpec {
         name: "H100",
+        mem_gb: 80.0,
         peak_tflops: 989.0,
         peak_bw_gbs: 3352.0,
         eta_compute: 0.55,
@@ -274,6 +288,17 @@ mod tests {
     fn rig_names() {
         assert_eq!(Rig::single(a6000()).name(), "A6000");
         assert_eq!(a6000_x4().name(), "4xA6000");
+    }
+
+    #[test]
+    fn rig_memory_capacities() {
+        assert_eq!(Rig::single(a6000()).mem_bytes(), 48_000_000_000);
+        assert_eq!(a6000_x4().mem_bytes(), 192_000_000_000);
+        assert_eq!(Rig::single(orin_nano()).mem_bytes(), 8_000_000_000);
+        // every rig has a positive capacity for the planner to budget
+        for name in all_rig_names() {
+            assert!(rig_by_name(name).unwrap().mem_bytes() > 0, "{name}");
+        }
     }
 
     #[test]

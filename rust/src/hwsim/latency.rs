@@ -11,8 +11,9 @@
 //! NVML sensor replays during wall-clock profiling.
 
 use crate::models::arch::ModelArch;
+use crate::models::quant::{EffectiveBytes, QuantScheme};
 
-use super::cost::{decode_cost, prefill_cost, PhaseCost};
+use super::cost::{decode_cost_quant, prefill_cost_quant, PhaseCost};
 use super::device::Rig;
 
 /// A Table 3/4 workload point.
@@ -143,10 +144,21 @@ fn collective_bytes(arch: &ModelArch, batch: usize, tokens: usize) -> f64 {
         * arch.dtype.bytes() as f64
 }
 
-/// Simulate one workload end-to-end.
+/// Simulate one workload end-to-end at the architecture's native dtype.
 pub fn simulate(arch: &ModelArch, rig: &Rig, w: &Workload) -> SimResult {
+    simulate_quant(arch, rig, w, &QuantScheme::native(arch.dtype))
+}
+
+/// Simulate one workload under a quantization scheme: the phase byte
+/// streams shrink to the scheme's widths (`cost::*_quant`), so decode —
+/// weight/KV-bandwidth-bound — speeds up and its DRAM energy drops,
+/// while FLOPs (and thus compute-bound prefill) are unchanged. The
+/// native scheme reproduces [`simulate`] bit-for-bit.
+pub fn simulate_quant(arch: &ModelArch, rig: &Rig, w: &Workload,
+                      scheme: &QuantScheme) -> SimResult {
+    let eb = EffectiveBytes::new(arch, *scheme);
     // ---- TTFT: whole-prompt prefill ---------------------------------
-    let pc = prefill_cost(arch, w.batch, w.prompt_len);
+    let pc = prefill_cost_quant(&eb, w.batch, w.prompt_len);
     let n_coll = 2 * arch.n_layers();
     let ttft = phase_sim(rig, pc,
                          collective_bytes(arch, w.batch, w.prompt_len),
@@ -158,7 +170,7 @@ pub fn simulate(arch: &ModelArch, rig: &Rig, w: &Workload) -> SimResult {
     let mut mid_sim: Option<PhaseSim> = None;
     for t in 0..w.gen_len {
         let ctx = w.prompt_len + t;
-        let dc = decode_cost(arch, w.batch, ctx);
+        let dc = decode_cost_quant(&eb, w.batch, ctx);
         let sim = phase_sim(rig, dc, collective_bytes(arch, w.batch, 1),
                             n_coll, rig.device.decode_overhead_s, true);
         step_seconds.push(sim.seconds);
@@ -328,6 +340,50 @@ mod tests {
         let sum: f64 = r.ttft.seconds + r.step_seconds.iter().sum::<f64>();
         assert!((r.ttlt_seconds - sum).abs() < 1e-12);
         assert_eq!(r.step_seconds.len(), 64);
+    }
+
+    #[test]
+    fn native_scheme_reproduces_simulate_bitwise() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(2, 256, 64);
+        let native = crate::models::quant::QuantScheme::native(arch.dtype);
+        let a = simulate(&arch, &rig, &w);
+        let b = simulate_quant(&arch, &rig, &w, &native);
+        assert_eq!(a.table_row(), b.table_row());
+        assert_eq!(a.step_seconds, b.step_seconds);
+    }
+
+    #[test]
+    fn quantization_speeds_up_decode_and_cuts_token_energy() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 512, 512);
+        let base = simulate(&arch, &rig, &w);
+        let q4 = simulate_quant(&arch, &rig, &w,
+                                &crate::models::quant::w4a16());
+        // memory-bound decode: ~4x fewer weight bytes → much faster step
+        assert!(q4.tpot.seconds < base.tpot.seconds / 2.0,
+                "{} vs {}", q4.tpot.seconds, base.tpot.seconds);
+        // fewer DRAM bytes → less energy per token
+        assert!(q4.tpot.joules < base.tpot.joules);
+        // compute-bound prefill barely moves (same FLOPs)
+        assert!(q4.ttft.seconds <= base.ttft.seconds);
+        assert!(q4.ttft.seconds > base.ttft.seconds * 0.8);
+    }
+
+    #[test]
+    fn kv4_beats_weight_only_at_long_context() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(32, 2048, 256);
+        let w4 = simulate_quant(&arch, &rig, &w,
+                                &crate::models::quant::w4a16());
+        let kv4 = simulate_quant(&arch, &rig, &w,
+                                 &crate::models::quant::w4a8kv4());
+        // at long context + large batch the KV stream dominates decode
+        assert!(kv4.tpot.seconds < w4.tpot.seconds,
+                "{} vs {}", kv4.tpot.seconds, w4.tpot.seconds);
     }
 
     #[test]

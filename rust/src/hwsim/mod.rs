@@ -27,7 +27,8 @@ pub mod device;
 pub mod kernels;
 pub mod latency;
 
-pub use cost::{decode_cost, prefill_cost, PhaseCost};
+pub use cost::{decode_cost, decode_cost_quant, prefill_cost,
+               prefill_cost_quant, PhaseCost};
 pub use device::{DeviceSpec, Rig};
 pub use kernels::synthesize_kernels;
-pub use latency::{simulate, PhaseSim, SimResult, Workload};
+pub use latency::{simulate, simulate_quant, PhaseSim, SimResult, Workload};

@@ -33,6 +33,8 @@
 //! * [`workload`] — random-prompt and request-trace generators.
 //! * [`sweep`] — parallel scenario matrix (`elana sweep`): grid
 //!   expansion, worker pool, comparison reports.
+//! * [`planner`] — quantization-aware capacity planner (`elana plan`):
+//!   max-fit solver, Pareto deployment recommendations, fleet sizing.
 //! * [`cli`] — argument parsing for the `elana` binary.
 //! * [`benchkit`] — micro-benchmark harness used by `cargo bench`.
 //! * [`testkit`] — property-testing support used by unit tests.
@@ -45,6 +47,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod hwsim;
 pub mod models;
+pub mod planner;
 pub mod power;
 pub mod profiler;
 pub mod runtime;

@@ -14,6 +14,7 @@ use elana::config;
 use elana::coordinator::{self, ServeSpec};
 use elana::hwsim;
 use elana::models;
+use elana::planner;
 use elana::profiler::{self, report, ProfileSpec};
 use elana::sweep;
 use elana::trace::{self, TraceRecorder};
@@ -43,9 +44,11 @@ fn run(cmd: Command) -> Result<()> {
             let rows = profiler::size_report(&names, &points)?;
             print!("{}", report::render_size_table(&rows, &points, unit));
         }
-        Command::Latency { model, device, workload, energy, runs } => {
+        Command::Latency { model, device, workload, energy, runs,
+                           quant } => {
             let mut spec = ProfileSpec::new(&model, &device, workload);
             spec.energy = energy;
+            spec.quant = quant;
             if let Some(r) = runs {
                 spec.latency_runs = r;
             }
@@ -57,6 +60,9 @@ fn run(cmd: Command) -> Result<()> {
         Command::Suite { name } => cmd_suite(&name)?,
         Command::Sweep { spec_path, overrides, out, json } => {
             cmd_sweep(spec_path, overrides, out, json)?;
+        }
+        Command::Plan { spec, json, out } => {
+            cmd_plan(&spec, json, out)?;
         }
         Command::Trace { model, device, workload, out } => {
             cmd_trace(&model, &device, &workload, &out)?;
@@ -135,6 +141,24 @@ fn cmd_sweep(spec_path: Option<String>,
         println!("{rendered}");
     } else {
         print!("{}", sweep::report::render_markdown(&results));
+    }
+    if let Some(path) = &out {
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>)
+            -> Result<()> {
+    let results = planner::run(spec)?;
+    let rendered = planner::report::to_json(&results).to_string();
+    if let Some(path) = &out {
+        std::fs::write(path, &rendered)?;
+    }
+    if json {
+        println!("{rendered}");
+    } else {
+        print!("{}", planner::report::render_markdown(&results));
     }
     if let Some(path) = &out {
         eprintln!("wrote {path}");

@@ -5,6 +5,13 @@
 //! sized here analytically for any (batch, seq_len) workload, using the
 //! paper's convention (cache elements at the model dtype, SI units for
 //! reporting).
+//!
+//! The *_elems functions count cache elements independent of any
+//! bit-width; the byte functions here price them at the architecture's
+//! native dtype. Everything scheme-aware (quantized KV caches, planner
+//! fit math, serve admission) prices the same element counts through
+//! `models::quant::EffectiveBytes` instead of reading `arch.dtype`
+//! directly, so a `cache_bits` override shrinks the cache everywhere.
 
 use super::arch::ModelArch;
 
@@ -25,28 +32,28 @@ impl CacheBreakdown {
     }
 }
 
-/// Per-token KV bytes across all attention layers.
-pub fn kv_bytes_per_token(arch: &ModelArch) -> u64 {
+/// Per-token KV cache *elements* across all attention layers
+/// (bit-width-independent).
+pub fn kv_elems_per_token(arch: &ModelArch) -> u64 {
     let a = &arch.attn;
-    let per_layer = 2 * a.n_kv_heads as u64 * a.head_dim as u64
-        * arch.dtype.bytes() as u64;
+    let per_layer = 2 * a.n_kv_heads as u64 * a.head_dim as u64;
     arch.n_attn_layers() as u64 * per_layer
 }
 
-/// Per-sequence SSM state bytes across all mamba layers (SSD state).
-pub fn ssm_state_bytes_per_seq(arch: &ModelArch) -> u64 {
+/// Per-sequence SSM state *elements* across all mamba layers (SSD state).
+pub fn ssm_state_elems_per_seq(arch: &ModelArch) -> u64 {
     match &arch.ssm {
         None => 0,
         Some(ssm) => {
             let per_layer = ssm.heads as u64 * ssm.head_dim as u64
-                * ssm.d_state as u64 * arch.dtype.bytes() as u64;
+                * ssm.d_state as u64;
             arch.n_mamba_layers() as u64 * per_layer
         }
     }
 }
 
-/// Per-sequence conv window state bytes across all mamba layers.
-pub fn conv_state_bytes_per_seq(arch: &ModelArch) -> u64 {
+/// Per-sequence conv window state *elements* across all mamba layers.
+pub fn conv_state_elems_per_seq(arch: &ModelArch) -> u64 {
     match &arch.ssm {
         None => 0,
         Some(ssm) => {
@@ -54,11 +61,27 @@ pub fn conv_state_bytes_per_seq(arch: &ModelArch) -> u64 {
             // channels, (width - 1) taps of history each.
             let channels = ssm.d_inner() as u64
                 + 2 * ssm.ngroups as u64 * ssm.d_state as u64;
-            let per_layer = channels * (ssm.conv_width as u64 - 1)
-                * arch.dtype.bytes() as u64;
+            let per_layer = channels * (ssm.conv_width as u64 - 1);
             arch.n_mamba_layers() as u64 * per_layer
         }
     }
+}
+
+/// Per-token KV bytes across all attention layers, at the native dtype.
+pub fn kv_bytes_per_token(arch: &ModelArch) -> u64 {
+    kv_elems_per_token(arch) * arch.dtype.bytes() as u64
+}
+
+/// Per-sequence SSM state bytes across all mamba layers, at the native
+/// dtype.
+pub fn ssm_state_bytes_per_seq(arch: &ModelArch) -> u64 {
+    ssm_state_elems_per_seq(arch) * arch.dtype.bytes() as u64
+}
+
+/// Per-sequence conv window state bytes across all mamba layers, at the
+/// native dtype.
+pub fn conv_state_bytes_per_seq(arch: &ModelArch) -> u64 {
+    conv_state_elems_per_seq(arch) * arch.dtype.bytes() as u64
 }
 
 /// Full cache breakdown at a workload point.
@@ -153,6 +176,21 @@ mod tests {
     fn kv_per_token_llama() {
         // 32 layers * 2 (K,V) * 8 kv heads * 128 head_dim * 2 bytes
         assert_eq!(kv_bytes_per_token(&llama31_8b()), 131_072);
+    }
+
+    #[test]
+    fn element_counts_price_back_to_native_bytes() {
+        for arch in all_models() {
+            let dt = arch.dtype.bytes() as u64;
+            assert_eq!(kv_elems_per_token(&arch) * dt,
+                       kv_bytes_per_token(&arch), "{}", arch.name);
+            assert_eq!(ssm_state_elems_per_seq(&arch) * dt,
+                       ssm_state_bytes_per_seq(&arch), "{}", arch.name);
+            assert_eq!(conv_state_elems_per_seq(&arch) * dt,
+                       conv_state_bytes_per_seq(&arch), "{}", arch.name);
+        }
+        // 32 layers * 2 (K,V) * 8 kv heads * 128 head_dim elements
+        assert_eq!(kv_elems_per_token(&llama31_8b()), 65_536);
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod size;
 pub use arch::{Dtype, LayerKind, ModelArch, SsmSpec};
 pub use cache::{cache_bytes, CacheBreakdown};
 pub use registry::{all_models, dev_models, lookup, paper_models};
-pub use quant::QuantScheme;
+pub use quant::{EffectiveBytes, QuantScheme};
 pub use size::{param_breakdown, param_count, SizeBreakdown};

@@ -7,13 +7,23 @@
 //! scale overhead), KV cache bytes by the cache width, and the decode
 //! phase — weight-bandwidth-bound — speeds up proportionally, which is
 //! exactly the effect schemes like AWQ (w4) and QServe (w4a8kv4) sell.
+//!
+//! [`EffectiveBytes`] is the single scheme-aware byte model: every
+//! subsystem that needs "how many bytes do weights / cache occupy under
+//! the active scheme" (hwsim phase costs, the capacity planner's fit
+//! solver, the serve coordinator's KV-budget admission) prices the
+//! element counts from `models::{size, cache}` through it instead of
+//! reading `arch.dtype` ad hoc.
 
-use super::arch::ModelArch;
+use super::arch::{Dtype, ModelArch};
 use super::{cache, size};
 
 /// A weight/activation/cache bit-width scheme.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantScheme {
+    /// CLI/JSON token (`bf16`, `w8a16`, `w4a16`, `w4a8kv4`).
+    pub key: &'static str,
+    /// Display name for reports (may carry the algorithm, e.g. AWQ).
     pub name: &'static str,
     /// Weight bits (e.g. 4 for AWQ-style weight-only int4).
     pub weight_bits: u32,
@@ -26,64 +36,188 @@ pub struct QuantScheme {
 
 /// Reference schemes from the efficient-LLM literature the paper cites.
 pub fn bf16() -> QuantScheme {
-    QuantScheme { name: "bf16", weight_bits: 16, cache_bits: 16,
-                  overhead_bits_per_weight: 0.0 }
+    QuantScheme { key: "bf16", name: "bf16", weight_bits: 16,
+                  cache_bits: 16, overhead_bits_per_weight: 0.0 }
 }
 
 /// Weight-only int8 (LLM.int8-style).
 pub fn w8a16() -> QuantScheme {
-    QuantScheme { name: "w8a16", weight_bits: 8, cache_bits: 16,
-                  overhead_bits_per_weight: 0.125 }
+    QuantScheme { key: "w8a16", name: "w8a16", weight_bits: 8,
+                  cache_bits: 16, overhead_bits_per_weight: 0.125 }
 }
 
 /// AWQ-style weight-only int4 (group size 128, fp16 scales).
 pub fn w4a16() -> QuantScheme {
-    QuantScheme { name: "w4a16 (AWQ)", weight_bits: 4, cache_bits: 16,
-                  overhead_bits_per_weight: 0.25 }
+    QuantScheme { key: "w4a16", name: "w4a16 (AWQ)", weight_bits: 4,
+                  cache_bits: 16, overhead_bits_per_weight: 0.25 }
 }
 
 /// QServe-style W4A8KV4.
 pub fn w4a8kv4() -> QuantScheme {
-    QuantScheme { name: "w4a8kv4 (QServe)", weight_bits: 4, cache_bits: 4,
-                  overhead_bits_per_weight: 0.25 }
+    QuantScheme { key: "w4a8kv4", name: "w4a8kv4 (QServe)", weight_bits: 4,
+                  cache_bits: 4, overhead_bits_per_weight: 0.25 }
 }
 
 pub fn all_schemes() -> Vec<QuantScheme> {
     vec![bf16(), w8a16(), w4a16(), w4a8kv4()]
 }
 
+/// CLI/JSON tokens of every named scheme, in report order.
+pub fn all_scheme_keys() -> &'static [&'static str] {
+    &["bf16", "w8a16", "w4a16", "w4a8kv4"]
+}
+
+/// Parse a CLI/JSON quant token: `"native"` resolves to `None` (the
+/// model's own dtype), anything else must be a named scheme. The error
+/// lists every known token — the sweep-spec validation discipline.
+pub fn parse_token(token: &str) -> anyhow::Result<Option<QuantScheme>> {
+    let t = token.trim().to_ascii_lowercase();
+    if t == "native" {
+        return Ok(None);
+    }
+    QuantScheme::parse(&t).map(Some).ok_or_else(|| {
+        anyhow::anyhow!("unknown quant scheme `{token}` (known: native, {})",
+                        all_scheme_keys().join(", "))
+    })
+}
+
 impl QuantScheme {
+    /// Look a scheme up by its CLI/JSON token (case-insensitive).
+    pub fn parse(token: &str) -> Option<QuantScheme> {
+        let t = token.to_ascii_lowercase();
+        all_schemes().into_iter().find(|s| s.key == t)
+    }
+
+    /// The identity scheme of a native dtype: every tensor stays at the
+    /// architecture's own width, no overhead.
+    pub fn native(dtype: Dtype) -> QuantScheme {
+        let bits = (dtype.bytes() * 8) as u32;
+        QuantScheme { key: dtype.name(), name: dtype.name(),
+                      weight_bits: bits, cache_bits: bits,
+                      overhead_bits_per_weight: 0.0 }
+    }
+
     /// Quantized model size in bytes.
     pub fn model_bytes(&self, arch: &ModelArch) -> u64 {
-        let params = size::param_count(arch) as f64;
-        let bits = self.weight_bits as f64 + self.overhead_bits_per_weight;
-        // norms (and buffers like RoPE tables) stay high precision;
-        // approximate by keeping them at 16 bits.
-        let b = size::param_breakdown(arch);
-        let hi = (b.norms + b.buffers) as f64 * 16.0;
-        let lo = (params - b.norms as f64) * bits;
-        ((hi + lo) / 8.0).ceil() as u64
+        EffectiveBytes::new(arch, *self).weight_bytes()
     }
 
     /// Quantized cache bytes at a workload point.
     pub fn cache_bytes(&self, arch: &ModelArch, batch: usize,
                        seq_len: usize) -> u64 {
-        let full = cache::cache_bytes(arch, batch, seq_len) as f64;
-        let elem_bits = (arch.dtype.bytes() * 8) as f64;
-        (full * self.cache_bits as f64 / elem_bits).ceil() as u64
+        EffectiveBytes::new(arch, *self).cache_bytes(batch, seq_len)
     }
 
     /// Decode speedup over the base dtype on a bandwidth-bound device:
     /// bytes moved shrink by the weight/cache ratio.
     pub fn decode_speedup(&self, arch: &ModelArch, batch: usize,
                           ctx: usize) -> f64 {
-        let w_full = size::model_bytes(arch) as f64;
-        let kv_full = (cache::kv_bytes_per_token(arch) * batch as u64
-                       * ctx as u64) as f64;
-        let w_q = self.model_bytes(arch) as f64;
-        let kv_q = kv_full * self.cache_bits as f64
-            / (arch.dtype.bytes() * 8) as f64;
+        let full = EffectiveBytes::native(arch);
+        let q = EffectiveBytes::new(arch, *self);
+        let tokens = batch as u64 * ctx as u64;
+        let w_full = full.weight_bytes() as f64;
+        let kv_full = (full.kv_bytes_per_token() * tokens) as f64;
+        let w_q = q.weight_bytes() as f64;
+        let kv_q = (q.kv_bytes_per_token() * tokens) as f64;
         (w_full + kv_full) / (w_q + kv_q)
+    }
+}
+
+/// Scheme-aware byte accounting for one (architecture, scheme) pair —
+/// the one place bit-widths turn into bytes. Norms and buffers (RoPE
+/// tables) stay at the native dtype like real low-bit checkpoints;
+/// quantized widths are clamped at the native width, so the native
+/// scheme reproduces `size::model_bytes` / `cache::cache_bytes` exactly.
+#[derive(Debug, Clone)]
+pub struct EffectiveBytes<'a> {
+    arch: &'a ModelArch,
+    scheme: QuantScheme,
+}
+
+impl<'a> EffectiveBytes<'a> {
+    pub fn new(arch: &'a ModelArch, scheme: QuantScheme)
+               -> EffectiveBytes<'a> {
+        EffectiveBytes { arch, scheme }
+    }
+
+    /// The identity accounting at the architecture's own dtype.
+    pub fn native(arch: &'a ModelArch) -> EffectiveBytes<'a> {
+        EffectiveBytes::new(arch, QuantScheme::native(arch.dtype))
+    }
+
+    /// Resolve an optional scheme: `None` means the native dtype.
+    pub fn resolve(arch: &'a ModelArch, scheme: Option<QuantScheme>)
+                   -> EffectiveBytes<'a> {
+        match scheme {
+            Some(s) => EffectiveBytes::new(arch, s),
+            None => EffectiveBytes::native(arch),
+        }
+    }
+
+    pub fn scheme(&self) -> &QuantScheme {
+        &self.scheme
+    }
+
+    pub fn arch(&self) -> &ModelArch {
+        self.arch
+    }
+
+    fn native_bits(&self) -> f64 {
+        (self.arch.dtype.bytes() * 8) as f64
+    }
+
+    /// Bits per quantized weight (incl. group-scale overhead), clamped
+    /// at the native width.
+    fn lo_bits(&self) -> f64 {
+        (self.scheme.weight_bits as f64
+         + self.scheme.overhead_bits_per_weight)
+            .min(self.native_bits())
+    }
+
+    /// Bits per cache element, clamped at the native width.
+    fn cache_elem_bits(&self) -> f64 {
+        (self.scheme.cache_bits as f64).min(self.native_bits())
+    }
+
+    /// Price `elems` cache elements at the scheme's cache width.
+    fn cache_elems_to_bytes(&self, elems: u64) -> u64 {
+        (elems as f64 * self.cache_elem_bits() / 8.0).ceil() as u64
+    }
+
+    /// Quantized model size in bytes: norms and buffers at the native
+    /// width, everything else at the scheme's weight width.
+    pub fn weight_bytes(&self) -> u64 {
+        let b = size::param_breakdown(self.arch);
+        let hi = (b.norms + b.buffers) as f64 * self.native_bits();
+        let lo = (b.total_params() - b.norms) as f64 * self.lo_bits();
+        ((hi + lo) / 8.0).ceil() as u64
+    }
+
+    /// Mean stored bits per weight (the planner's accuracy-proxy axis):
+    /// `weight_bytes * 8 / (params + buffers)`.
+    pub fn effective_weight_bits(&self) -> f64 {
+        let b = size::param_breakdown(self.arch);
+        let elems = (b.total_params() + b.buffers) as f64;
+        self.weight_bytes() as f64 * 8.0 / elems
+    }
+
+    /// Per-token KV bytes across all attention layers at `cache_bits`.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.cache_elems_to_bytes(cache::kv_elems_per_token(self.arch))
+    }
+
+    /// Per-sequence SSM + conv state bytes at `cache_bits`.
+    pub fn state_bytes_per_seq(&self) -> u64 {
+        self.cache_elems_to_bytes(
+            cache::ssm_state_elems_per_seq(self.arch)
+                + cache::conv_state_elems_per_seq(self.arch))
+    }
+
+    /// Total quantized cache bytes at a workload point (the Table 2
+    /// cell under the active scheme).
+    pub fn cache_bytes(&self, batch: usize, seq_len: usize) -> u64 {
+        self.kv_bytes_per_token() * batch as u64 * seq_len as u64
+            + self.state_bytes_per_seq() * batch as u64
     }
 }
 
@@ -104,10 +238,65 @@ mod tests {
     }
 
     #[test]
+    fn native_effective_bytes_match_unquantized_model() {
+        for arch in all_models() {
+            let eb = EffectiveBytes::native(&arch);
+            assert_eq!(eb.weight_bytes(), size::model_bytes(&arch),
+                       "{} weights", arch.name);
+            assert_eq!(eb.kv_bytes_per_token(),
+                       cache::kv_bytes_per_token(&arch),
+                       "{} kv", arch.name);
+            assert_eq!(eb.state_bytes_per_seq(),
+                       cache::ssm_state_bytes_per_seq(&arch)
+                           + cache::conv_state_bytes_per_seq(&arch),
+                       "{} state", arch.name);
+            assert_eq!(eb.cache_bytes(16, 777),
+                       cache::cache_bytes(&arch, 16, 777),
+                       "{} cache", arch.name);
+            let bits = (arch.dtype.bytes() * 8) as f64;
+            assert!((eb.effective_weight_bits() - bits).abs() < 1e-6,
+                    "{} bits", arch.name);
+        }
+    }
+
+    #[test]
+    fn parse_tokens_and_keys_roundtrip() {
+        for key in all_scheme_keys() {
+            let s = QuantScheme::parse(key).unwrap();
+            assert_eq!(s.key, *key);
+        }
+        assert_eq!(QuantScheme::parse("W4A16").unwrap().key, "w4a16");
+        assert!(QuantScheme::parse("int3").is_none());
+        assert!(QuantScheme::parse("").is_none());
+        assert_eq!(all_scheme_keys().len(), all_schemes().len());
+    }
+
+    #[test]
+    fn parse_token_resolves_native_and_rejects_unknown() {
+        assert_eq!(parse_token("native").unwrap(), None);
+        assert_eq!(parse_token(" NATIVE ").unwrap(), None);
+        assert_eq!(parse_token("w8a16").unwrap().unwrap().key, "w8a16");
+        let err = parse_token("int3").unwrap_err().to_string();
+        assert!(err.contains("unknown quant scheme `int3`"), "{err}");
+        assert!(err.contains("w4a8kv4"), "{err}");
+    }
+
+    #[test]
     fn awq_w4_shrinks_llama_to_about_4gb() {
         // AWQ int4 Llama-3.1-8B checkpoints are ~4.3 GB on disk
         let gb = MemUnit::Si.giga(w4a16().model_bytes(&llama31_8b()));
         assert!((4.0..4.8).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn golden_w4a16_llama_weight_bytes() {
+        // exact integer pin (the plan-report golden leans on this):
+        // hi = (266_240 norms + 64 buffers) * 16 bits
+        // lo = (8_030_261_248 - 266_240) * 4.25 bits
+        // (hi + lo) / 8 = 4_266_467_456 bytes
+        assert_eq!(w4a16().model_bytes(&llama31_8b()), 4_266_467_456);
+        assert_eq!(MemUnit::Si.format(w4a16().model_bytes(&llama31_8b())),
+                   "4.27 GB");
     }
 
     #[test]
@@ -146,6 +335,20 @@ mod tests {
             / w4a16().decode_speedup(&arch, 64, 4096);
         assert!(long > short * 1.5,
                 "KV quantization should dominate at long ctx: {short} {long}");
+    }
+
+    #[test]
+    fn effective_bits_track_scheme_depth() {
+        let arch = llama31_8b();
+        let bits: Vec<f64> = all_schemes()
+            .iter()
+            .map(|s| EffectiveBytes::new(&arch, *s).effective_weight_bits())
+            .collect();
+        // bf16 = 16 exactly; w8a16 ~8.1; w4a16/w4a8kv4 ~4.25 (+norms)
+        assert!((bits[0] - 16.0).abs() < 1e-9, "{bits:?}");
+        assert!((8.0..8.6).contains(&bits[1]), "{bits:?}");
+        assert!((4.2..4.8).contains(&bits[2]), "{bits:?}");
+        assert_eq!(bits[2], bits[3], "same weight width, same bits");
     }
 
     #[test]

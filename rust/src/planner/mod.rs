@@ -1,0 +1,39 @@
+//! Quantization-aware capacity planner: the subsystem behind
+//! `elana plan`.
+//!
+//! The paper pitches ELANA as "easily customized or adapted to
+//! compressed or low bit-width models"; this module turns that into the
+//! questions practitioners actually ask of an analyzer — *what fits on
+//! this device, at what batch, and at what J/token?* For every
+//! (model × device × QuantScheme × workload):
+//!
+//! * [`solve`] — the max-fit solver: quantized weights + KV/state cache
+//!   (at `cache_bits`) + activations against device memory, yielding
+//!   the max batch at a context and the max context at a batch. The
+//!   same `FitModel` drives the serve coordinator's KV-budget
+//!   admission, so planning and serving can never disagree about what
+//!   fits.
+//! * [`runner`] — expands the spec, evaluates every feasible operating
+//!   point through the `backend::ExecutionBackend` trait (SimBackend at
+//!   the scheme's widths) on the sweep's worker pool, with per-point
+//!   `Rng::mix` seeds.
+//! * [`pareto`] — the (TPOT, J/token, effective weight bits) frontier
+//!   and the energy-delay recommendation rule.
+//! * [`fleet`] — replicas needed for a target request rate, from the
+//!   workload generator's Poisson arrivals and the coordinator's
+//!   earliest-free-replica discipline.
+//! * [`report`] — markdown / JSON plan artifacts, byte-identical at any
+//!   `--workers` count.
+
+pub mod fleet;
+pub mod pareto;
+pub mod report;
+pub mod runner;
+pub mod solve;
+pub mod spec;
+
+pub use fleet::FleetEstimate;
+pub use report::{render_markdown, to_json};
+pub use runner::{run, PlanPoint, PlanResults};
+pub use solve::FitModel;
+pub use spec::PlanSpec;

@@ -1,0 +1,277 @@
+//! Plan reports: per-(model, device) capacity tables with the Pareto
+//! frontier and deployment recommendation — markdown for humans,
+//! deterministic JSON for machines.
+//!
+//! Both renderings are pure functions of the results and omit execution
+//! details (worker count, host wall time), so plan artifacts are
+//! byte-identical however the evaluation pass was parallelized — the
+//! sweep/serve report discipline.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+use crate::util::units::MemUnit;
+
+use super::runner::{PlanPoint, PlanResults};
+use super::solve;
+
+fn unit_name(u: MemUnit) -> &'static str {
+    match u {
+        MemUnit::Si => "si",
+        MemUnit::Binary => "gib",
+    }
+}
+
+/// Markdown capacity/recommendation report.
+pub fn render_markdown(r: &PlanResults) -> String {
+    let s = &r.spec;
+    let unit = s.unit;
+    let mut out = String::new();
+    let _ = writeln!(out, "# elana plan — {}", s.name);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "{} operating points = {} models x {} devices x {} schemes x \
+         {} workloads (seed {}, target {} req/s)",
+        r.points.len(), s.models.len(), s.devices.len(), s.quants.len(),
+        s.lens.len(), s.seed, s.target_rps
+    );
+    let _ = writeln!(
+        out,
+        "memory model: quantized weights + KV/state cache + activations \
+         <= mem x {:.2} - {:.2} GB/GPU; batch cap {}",
+        1.0 - solve::HEADROOM_FRAC,
+        solve::RUNTIME_RESERVE_BYTES as f64 / 1e9,
+        solve::MAX_BATCH
+    );
+
+    for m in &s.models {
+        for d in &s.devices {
+            let group = r.group(m, d);
+            if group.is_empty() {
+                continue;
+            }
+            let first = group[0];
+            let _ = writeln!(
+                out,
+                "\n## {} on {} ({})",
+                first.model_display, first.device_display,
+                unit.format(first.fit.mem_bytes)
+            );
+            let _ = writeln!(
+                out,
+                "| Quant | Bits | Weights | Workload | Max batch \
+                 | Max ctx@b1 | Req. mem | TTFT ms | TPOT ms | TTLT ms \
+                 | J/Token | Pareto |"
+            );
+            let _ = writeln!(
+                out,
+                "|---|---:|---:|---|---:|---:|---:|---:|---:|---:\
+                 |---:|---:|"
+            );
+            for &p in &group {
+                let _ = writeln!(out, "{}", point_row(p, unit));
+            }
+            match group.iter().find(|p| p.recommended) {
+                Some(rec) => {
+                    let o = rec.outcome.as_ref().expect("evaluated");
+                    let _ = writeln!(
+                        out,
+                        "\n**Recommended:** {} @ {} — TPOT {:.2} ms, \
+                         {:.3} J/token, fits in {}",
+                        rec.quant, rec.workload().label(), o.tpot_ms,
+                        o.j_token, unit.format(rec.required_bytes())
+                    );
+                    if let Some(f) = rec.fleet {
+                        let sat = if f.saturated {
+                            " [saturated: raise the cap or shrink the \
+                             workload]"
+                        } else {
+                            ""
+                        };
+                        let _ = writeln!(
+                            out,
+                            "fleet @ {} req/s: {} replica(s) \
+                             ({:.1} req/s per replica, {:.0}% utilized, \
+                             p90 queue wait {:.2} s){sat}",
+                            f.target_rps, f.replicas, f.per_replica_rps,
+                            f.utilization * 100.0, f.p90_queue_wait_s
+                        );
+                    }
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "\n**No feasible operating point** — nothing \
+                         fits this device under the requested schemes."
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One markdown table row.
+fn point_row(p: &PlanPoint, unit: MemUnit) -> String {
+    let quant = if p.recommended {
+        format!("**{}**", p.quant)
+    } else {
+        p.quant.clone()
+    };
+    match &p.outcome {
+        Some(o) => format!(
+            "| {} | {:.2} | {} | {} | {} | {} | {} | {:.2} | {:.2} \
+             | {:.2} | {:.2} | {} |",
+            quant, p.fit.eff_weight_bits,
+            unit.format(p.fit.weight_bytes), p.workload().label(),
+            p.batch, p.max_ctx_b1, unit.format(p.required_bytes()),
+            o.ttft_ms, o.tpot_ms, o.ttlt_ms, o.j_token,
+            if p.pareto { "*" } else { "" }
+        ),
+        None => format!(
+            "| {} | {:.2} | {} | L={}+{} | does not fit | {} | — | — \
+             | — | — | — | |",
+            quant, p.fit.eff_weight_bits,
+            unit.format(p.fit.weight_bytes), p.prompt_len, p.gen_len,
+            p.max_ctx_b1
+        ),
+    }
+}
+
+/// Deterministic JSON (BTreeMap-ordered objects; seeds as strings so
+/// 64-bit values survive the f64 number model).
+pub fn to_json(r: &PlanResults) -> Json {
+    let s = &r.spec;
+    let points: Vec<Json> = r.points.iter().map(point_json).collect();
+    Json::obj(vec![
+        ("plan", Json::str(s.name.clone())),
+        ("seed", Json::str(s.seed.to_string())),
+        ("target_rps", Json::num(s.target_rps)),
+        ("energy", Json::Bool(s.energy)),
+        ("unit", Json::str(unit_name(s.unit))),
+        ("mem_model", Json::obj(vec![
+            ("headroom_frac", Json::num(solve::HEADROOM_FRAC)),
+            ("runtime_reserve_bytes_per_gpu",
+             Json::num(solve::RUNTIME_RESERVE_BYTES as f64)),
+            ("max_batch", Json::num(solve::MAX_BATCH as f64)),
+        ])),
+        ("models",
+         Json::Arr(s.models.iter().map(|m| Json::str(m.clone())).collect())),
+        ("devices",
+         Json::Arr(s.devices.iter().map(|d| Json::str(d.clone())).collect())),
+        ("quants",
+         Json::Arr(s.quants.iter().map(|q| Json::str(q.clone())).collect())),
+        ("lens",
+         Json::Arr(s.lens.iter()
+                   .map(|&(p, g)| Json::str(format!("{p}+{g}")))
+                   .collect())),
+        ("n_points", Json::num(r.points.len() as f64)),
+        ("points", Json::Arr(points)),
+    ])
+}
+
+fn point_json(p: &PlanPoint) -> Json {
+    let mut fields = vec![
+        ("index", Json::num(p.index as f64)),
+        ("model", Json::str(p.model.clone())),
+        ("device", Json::str(p.device.clone())),
+        ("quant", Json::str(p.quant.clone())),
+        ("prompt_len", Json::num(p.prompt_len as f64)),
+        ("gen_len", Json::num(p.gen_len as f64)),
+        ("mem_bytes", Json::num(p.fit.mem_bytes as f64)),
+        ("budget_bytes", Json::num(p.fit.budget_bytes as f64)),
+        ("weight_bytes", Json::num(p.fit.weight_bytes as f64)),
+        ("eff_weight_bits", Json::num(p.fit.eff_weight_bits)),
+        ("fits", Json::Bool(p.fits())),
+        ("max_batch", Json::num(p.batch as f64)),
+        ("max_ctx_b1", Json::num(p.max_ctx_b1 as f64)),
+        ("required_bytes", Json::num(p.required_bytes() as f64)),
+        ("seed", Json::str(p.seed.to_string())),
+        ("pareto", Json::Bool(p.pareto)),
+        ("recommended", Json::Bool(p.recommended)),
+        ("outcome", match &p.outcome {
+            Some(o) => o.to_json(),
+            None => Json::Null,
+        }),
+    ];
+    if let Some(f) = p.fleet {
+        fields.push(("fleet", Json::obj(vec![
+            ("target_rps", Json::num(f.target_rps)),
+            ("per_replica_rps", Json::num(f.per_replica_rps)),
+            ("replicas", Json::num(f.replicas as f64)),
+            ("utilization", Json::num(f.utilization)),
+            ("p90_queue_wait_s", Json::num(f.p90_queue_wait_s)),
+            ("saturated", Json::Bool(f.saturated)),
+        ])));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::runner;
+    use crate::planner::spec::PlanSpec;
+
+    fn results() -> PlanResults {
+        let spec = PlanSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into(), "orin".into()],
+            quants: vec!["bf16".into(), "w4a16".into()],
+            lens: vec![(512, 512)],
+            ..PlanSpec::default()
+        };
+        runner::run(&spec).unwrap()
+    }
+
+    #[test]
+    fn markdown_shows_fit_frontier_and_recommendation() {
+        let text = render_markdown(&results());
+        assert!(text.contains("## Llama-3.1-8B on A6000 (48.00 GB)"),
+                "{text}");
+        assert!(text.contains("## Llama-3.1-8B on Orin-Nano (8.00 GB)"),
+                "{text}");
+        // bf16 weights on the paper's numbers; w4a16 at the AWQ size
+        assert!(text.contains("16.06 GB"), "{text}");
+        assert!(text.contains("4.27 GB"), "{text}");
+        // the 8B bf16 model cannot fit the 8 GB edge board
+        assert!(text.contains("does not fit"), "{text}");
+        // one bolded recommendation per device group
+        assert_eq!(text.matches("**Recommended:**").count(), 2, "{text}");
+        assert!(text.contains("fleet @ 10 req/s:"), "{text}");
+        assert!(text.contains("| Pareto |"), "{text}");
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let r = results();
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        assert_eq!(v.get("n_points").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("plan").unwrap().as_str(), Some("plan"));
+        let pts = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 4);
+        let mut recommended = 0;
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.get("index").unwrap().as_usize(), Some(i));
+            let fits = p.get("fits").unwrap().as_bool().unwrap();
+            assert_eq!(p.get("outcome").unwrap().is_null(), !fits);
+            if fits {
+                // every feasible point verifiably fits device memory
+                let req =
+                    p.get("required_bytes").unwrap().as_f64().unwrap();
+                let mem = p.get("mem_bytes").unwrap().as_f64().unwrap();
+                assert!(req <= mem, "point {i}: {req} > {mem}");
+            }
+            if p.get("recommended").unwrap().as_bool().unwrap() {
+                recommended += 1;
+                let f = p.get("fleet").expect("fleet on recommendation");
+                assert!(f.get("replicas").unwrap().as_usize().unwrap()
+                        >= 1);
+            }
+        }
+        assert_eq!(recommended, 2, "one per (model, device) group");
+        // execution details must not leak into the artifact
+        assert!(v.get("workers").is_none());
+    }
+}

@@ -1,0 +1,314 @@
+//! Plan execution: expand (model × device × scheme × workload), solve
+//! each point's max-fit batch, evaluate every feasible point through
+//! the `ExecutionBackend` trait on the worker pool, then mark the
+//! per-(model, device) Pareto frontier, recommendation, and fleet size.
+//!
+//! The sweep's determinism contract holds: points are index-addressed,
+//! per-point seeds derive from `Rng::mix(spec.seed, index)`, the fit
+//! solver and the fleet recurrence are closed-form, and reports omit
+//! execution details — so output is byte-identical at any `--workers`
+//! count.
+
+use anyhow::{Context, Result};
+
+use crate::hwsim::{device, Workload};
+use crate::models::{self, quant};
+use crate::profiler::{self, ProfileOutcome, ProfileSpec};
+use crate::sweep::pool;
+use crate::util::rng::Rng;
+
+use super::fleet::{self, FleetEstimate};
+use super::pareto::{self, Objective};
+use super::solve::FitModel;
+use super::spec::PlanSpec;
+
+/// One solved (and, when feasible, evaluated) operating point.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    /// Position in the expanded plan (stable across worker counts).
+    pub index: usize,
+    /// Registry model name.
+    pub model: String,
+    /// Report display name.
+    pub model_display: String,
+    /// CLI device name.
+    pub device: String,
+    /// Report display name (rig).
+    pub device_display: String,
+    /// Quant token (`native` or a scheme key).
+    pub quant: String,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// The memory model the point was solved under.
+    pub fit: FitModel,
+    /// Solved max batch at context `prompt_len + gen_len` (0 = the
+    /// point does not fit at all).
+    pub batch: usize,
+    /// Max context at batch 1 under this scheme (0 = weights alone
+    /// blow the budget).
+    pub max_ctx_b1: usize,
+    /// Deterministic per-point seed: `Rng::mix(spec.seed, index)`.
+    pub seed: u64,
+    /// Profiled row at (batch, P+G); `None` for infeasible points.
+    pub outcome: Option<ProfileOutcome>,
+    /// On the per-(model, device) Pareto frontier over
+    /// (TPOT, J/token, effective bits).
+    pub pareto: bool,
+    /// The per-(model, device) recommended operating point.
+    pub recommended: bool,
+    /// Fleet sizing for the recommended point at `spec.target_rps`.
+    pub fleet: Option<FleetEstimate>,
+}
+
+impl PlanPoint {
+    pub fn fits(&self) -> bool {
+        self.batch >= 1
+    }
+
+    /// The executing workload of a feasible point.
+    pub fn workload(&self) -> Workload {
+        Workload::new(self.batch.max(1), self.prompt_len, self.gen_len)
+    }
+
+    /// Bytes the point needs resident (weights + cache + activations).
+    pub fn required_bytes(&self) -> u64 {
+        self.fit
+            .required_bytes(self.batch, self.prompt_len + self.gen_len)
+    }
+}
+
+/// The whole solved plan, points in expansion order.
+#[derive(Debug, Clone)]
+pub struct PlanResults {
+    pub spec: PlanSpec,
+    pub points: Vec<PlanPoint>,
+}
+
+impl PlanResults {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Points of one (model, device) group, in expansion order.
+    pub fn group(&self, model: &str, dev: &str) -> Vec<&PlanPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.model == model && p.device == dev)
+            .collect()
+    }
+}
+
+/// Expand the spec into solved (but not yet evaluated) points.
+fn expand(spec: &PlanSpec) -> Vec<PlanPoint> {
+    let mut points = Vec::with_capacity(spec.n_points());
+    for m in &spec.models {
+        let arch = models::lookup(m).expect("validated model");
+        for d in &spec.devices {
+            let rig = device::rig_by_name(d).expect("validated device");
+            for q in &spec.quants {
+                let scheme = quant::parse_token(q)
+                    .expect("validated quant token");
+                let fit = FitModel::new(&arch, scheme, &rig);
+                for &(p, g) in &spec.lens {
+                    let index = points.len();
+                    points.push(PlanPoint {
+                        index,
+                        model: m.clone(),
+                        model_display: arch.display_name.to_string(),
+                        device: d.clone(),
+                        device_display: rig.name(),
+                        quant: q.clone(),
+                        prompt_len: p,
+                        gen_len: g,
+                        batch: fit.max_batch(p + g),
+                        max_ctx_b1: fit.max_ctx(1),
+                        fit: fit.clone(),
+                        seed: Rng::mix(spec.seed, index as u64),
+                        outcome: None,
+                        pareto: false,
+                        recommended: false,
+                        fleet: None,
+                    });
+                }
+            }
+        }
+    }
+    points
+}
+
+/// Evaluate one feasible point through the backend trait.
+fn evaluate(point: &PlanPoint, spec: &PlanSpec)
+            -> Result<Option<ProfileOutcome>> {
+    if !point.fits() {
+        return Ok(None);
+    }
+    let mut ps = ProfileSpec::new(&point.model, &point.device,
+                                  point.workload());
+    ps.energy = spec.energy;
+    ps.mem_unit = spec.unit;
+    ps.seed = point.seed;
+    ps.quant = quant::parse_token(&point.quant)?;
+    let mut backend = crate::backend::from_spec(&ps)?;
+    profiler::session::profile_backend(backend.as_mut(), &ps)
+        .map(Some)
+        .with_context(|| {
+            format!("plan point #{} ({} on {}, {}, quant {})",
+                    point.index, point.model, point.device,
+                    point.workload().label(), point.quant)
+        })
+}
+
+/// Mark the Pareto frontier, the recommendation, and the fleet size of
+/// every (model, device) group.
+fn annotate(spec: &PlanSpec, points: &mut [PlanPoint]) {
+    for m in &spec.models {
+        for d in &spec.devices {
+            let objectives: Vec<Objective> = points
+                .iter()
+                .filter(|p| {
+                    &p.model == m && &p.device == d && p.outcome.is_some()
+                })
+                .map(|p| {
+                    let o = p.outcome.as_ref().expect("filtered");
+                    Objective {
+                        id: p.index,
+                        tpot_ms: o.tpot_ms,
+                        j_token: o.j_token,
+                        eff_bits: p.fit.eff_weight_bits,
+                    }
+                })
+                .collect();
+            let front = pareto::frontier(&objectives);
+            let rec = pareto::recommend(&objectives);
+            for p in points.iter_mut() {
+                if &p.model != m || &p.device != d {
+                    continue;
+                }
+                p.pareto = front.contains(&p.index);
+                p.recommended = rec == Some(p.index);
+                if p.recommended {
+                    let o = p.outcome.as_ref().expect("recommended => \
+                                                       evaluated");
+                    p.fleet = Some(fleet::size_fleet(
+                        spec.target_rps, p.batch, o.ttlt_ms / 1e3,
+                        p.seed));
+                }
+            }
+        }
+    }
+}
+
+/// Run the full plan.
+pub fn run(spec: &PlanSpec) -> Result<PlanResults> {
+    spec.validate()?;
+    let mut points = expand(spec);
+    let outcomes = pool::run_indexed(spec.workers, points.len(), |i| {
+        evaluate(&points[i], spec)
+    });
+    for (p, o) in points.iter_mut().zip(outcomes) {
+        p.outcome = o?;
+    }
+    annotate(spec, &mut points);
+    Ok(PlanResults { spec: spec.clone(), points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> PlanSpec {
+        PlanSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into(), "orin".into()],
+            quants: vec!["bf16".into(), "w4a16".into()],
+            lens: vec![(512, 512)],
+            ..PlanSpec::default()
+        }
+    }
+
+    #[test]
+    fn solves_evaluates_and_annotates() {
+        let r = run(&tiny_spec()).unwrap();
+        assert_eq!(r.len(), 4);
+        for (i, p) in r.points.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+        // bf16 on the A6000 fits at a healthy batch and is evaluated
+        let cloud16 = &r.points[0];
+        assert_eq!((cloud16.quant.as_str(), cloud16.device.as_str()),
+                   ("bf16", "a6000"));
+        assert!(cloud16.batch > 32);
+        assert!(cloud16.outcome.is_some());
+        // bf16 on the Orin does not fit; w4a16 does
+        let edge16 = r.group("llama-3.1-8b", "orin")[0];
+        assert!(!edge16.fits());
+        assert!(edge16.outcome.is_none());
+        assert!(!edge16.pareto && !edge16.recommended);
+        let edge4 = r.group("llama-3.1-8b", "orin")[1];
+        assert!(edge4.fits());
+        assert!(edge4.outcome.is_some());
+        // every feasible point fits device memory — the acceptance bar
+        for p in &r.points {
+            if p.fits() {
+                assert!(p.required_bytes() <= p.fit.mem_bytes, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn each_group_recommends_exactly_one_feasible_point() {
+        let r = run(&tiny_spec()).unwrap();
+        for (m, d) in [("llama-3.1-8b", "a6000"), ("llama-3.1-8b", "orin")] {
+            let group = r.group(m, d);
+            let recs: Vec<_> =
+                group.iter().filter(|p| p.recommended).collect();
+            assert_eq!(recs.len(), 1, "{m} on {d}");
+            let rec = recs[0];
+            assert!(rec.fits());
+            assert!(rec.pareto, "recommendation must be on the frontier");
+            let f = rec.fleet.expect("recommended point gets a fleet");
+            assert!(f.replicas >= 1);
+            assert!(f.per_replica_rps > 0.0);
+        }
+    }
+
+    #[test]
+    fn evaluation_threads_quant_through_the_backend() {
+        let r = run(&tiny_spec()).unwrap();
+        let group = r.group("llama-3.1-8b", "a6000");
+        let (b16, w4) = (group[0], group[1]);
+        // the quantized point decodes faster per token at ITS batch —
+        // compare per-row service: w4 fits a larger batch AND a lower
+        // tpot at batch parity is already covered by hwsim tests; here
+        // just check the outcome carries the scheme
+        assert_eq!(b16.outcome.as_ref().unwrap().quant.as_deref(),
+                   Some("bf16"));
+        assert_eq!(w4.outcome.as_ref().unwrap().quant.as_deref(),
+                   Some("w4a16"));
+        assert!(w4.batch > b16.batch, "4-bit weights free cache room");
+    }
+
+    #[test]
+    fn results_do_not_depend_on_worker_count() {
+        let mut a_spec = tiny_spec();
+        a_spec.workers = 1;
+        let mut b_spec = tiny_spec();
+        b_spec.workers = 7;
+        let a = run(&a_spec).unwrap();
+        let b = run(&b_spec).unwrap();
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.batch, y.batch);
+            assert_eq!(x.pareto, y.pareto);
+            assert_eq!(x.recommended, y.recommended);
+            match (&x.outcome, &y.outcome) {
+                (Some(ox), Some(oy)) => assert_eq!(ox.row(), oy.row()),
+                (None, None) => {}
+                _ => panic!("feasibility must not depend on workers"),
+            }
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! The max-fit solver: which (batch, context) operating points fit a
+//! device's memory under a quantization scheme.
+//!
+//! One explicit memory model, shared by `elana plan` and the serve
+//! coordinator's KV-budget admission so the two can never disagree:
+//!
+//! ```text
+//! required(b, L) = weights_q + b * L * (kv_q/token + act/token)
+//!                  + b * state_q/seq
+//! budget         = rig_mem * (1 - HEADROOM_FRAC)
+//!                  - n_devices * RUNTIME_RESERVE_BYTES
+//! fits(b, L)    := required(b, L) <= budget
+//! ```
+//!
+//! where `weights_q`, `kv_q` and `state_q` come from the scheme-aware
+//! [`EffectiveBytes`] model, activations stay at the compute dtype (two
+//! resident copies of the residual stream), `HEADROOM_FRAC` covers
+//! allocator fragmentation and `RUNTIME_RESERVE_BYTES` the CUDA/driver
+//! workspace per device. Everything is integer/closed-form — no search
+//! inside the hot path — and deterministic.
+
+use crate::hwsim::Rig;
+use crate::models::arch::ModelArch;
+use crate::models::{EffectiveBytes, QuantScheme};
+
+/// Allocator-fragmentation headroom withheld from device memory.
+pub const HEADROOM_FRAC: f64 = 0.03;
+
+/// Runtime/driver workspace reserved per device, bytes (SI).
+pub const RUNTIME_RESERVE_BYTES: u64 = 750_000_000;
+
+/// Batch sizes beyond this are not realistic serving configurations;
+/// the solver caps `max_batch` here (reported as-is, never silently).
+pub const MAX_BATCH: usize = 1024;
+
+/// Context lengths beyond this exceed every profiled model's window;
+/// the solver caps `max_ctx` here.
+pub const MAX_CTX: usize = 131_072;
+
+/// The memory-fit model of one (model, scheme, rig) triple.
+#[derive(Debug, Clone)]
+pub struct FitModel {
+    /// Whole-rig capacity, bytes.
+    pub mem_bytes: u64,
+    /// Capacity available to the model after headroom + runtime
+    /// reserve, bytes.
+    pub budget_bytes: u64,
+    /// Quantized weight bytes (norms/buffers at the native width).
+    pub weight_bytes: u64,
+    /// Quantized KV cache bytes per token per sequence.
+    pub kv_bytes_per_token: u64,
+    /// Quantized SSM/conv state bytes per sequence.
+    pub state_bytes_per_seq: u64,
+    /// Activation bytes per token per sequence (residual stream at the
+    /// compute dtype, two resident copies).
+    pub act_bytes_per_token: u64,
+    /// Mean stored bits per weight under the scheme.
+    pub eff_weight_bits: f64,
+}
+
+impl FitModel {
+    /// Build the fit model; `scheme = None` means the native dtype.
+    pub fn new(arch: &ModelArch, scheme: Option<QuantScheme>, rig: &Rig)
+               -> FitModel {
+        let eb = EffectiveBytes::resolve(arch, scheme);
+        let mem_bytes = rig.mem_bytes();
+        let headroom = (mem_bytes as f64 * HEADROOM_FRAC) as u64;
+        let reserve = rig.n_devices as u64 * RUNTIME_RESERVE_BYTES;
+        let budget_bytes = mem_bytes
+            .saturating_sub(headroom)
+            .saturating_sub(reserve);
+        FitModel {
+            mem_bytes,
+            budget_bytes,
+            weight_bytes: eb.weight_bytes(),
+            kv_bytes_per_token: eb.kv_bytes_per_token(),
+            state_bytes_per_seq: eb.state_bytes_per_seq(),
+            act_bytes_per_token: 2 * arch.d_model as u64
+                * arch.dtype.bytes() as u64,
+            eff_weight_bits: eb.effective_weight_bits(),
+        }
+    }
+
+    /// Bytes one (batch, seq_len) operating point needs resident.
+    pub fn required_bytes(&self, batch: usize, seq_len: usize) -> u64 {
+        let b = batch as u64;
+        self.weight_bytes
+            + b * seq_len as u64
+                * (self.kv_bytes_per_token + self.act_bytes_per_token)
+            + b * self.state_bytes_per_seq
+    }
+
+    /// Whether the operating point fits the budget.
+    pub fn fits(&self, batch: usize, seq_len: usize) -> bool {
+        batch >= 1
+            && seq_len >= 1
+            && self.required_bytes(batch, seq_len) <= self.budget_bytes
+    }
+
+    /// Bytes left for cache/activations after the weights (0 when the
+    /// weights alone exceed the budget).
+    pub fn cache_budget_bytes(&self) -> u64 {
+        self.budget_bytes.saturating_sub(self.weight_bytes)
+    }
+
+    /// Largest batch that fits at context `seq_len`, capped at
+    /// [`MAX_BATCH`]; 0 when nothing fits (weights alone blow the
+    /// budget, or one sequence at this context does).
+    pub fn max_batch(&self, seq_len: usize) -> usize {
+        let per_seq = seq_len as u64
+            * (self.kv_bytes_per_token + self.act_bytes_per_token)
+            + self.state_bytes_per_seq;
+        let spare = self.cache_budget_bytes();
+        if self.weight_bytes > self.budget_bytes {
+            return 0;
+        }
+        let b = if per_seq == 0 {
+            MAX_BATCH as u64
+        } else {
+            spare / per_seq
+        };
+        (b.min(MAX_BATCH as u64)) as usize
+    }
+
+    /// Largest context that fits at `batch` sequences, capped at
+    /// [`MAX_CTX`]; 0 when nothing fits.
+    pub fn max_ctx(&self, batch: usize) -> usize {
+        if batch == 0 || self.weight_bytes > self.budget_bytes {
+            return 0;
+        }
+        let b = batch as u64;
+        let spare = self
+            .cache_budget_bytes()
+            .saturating_sub(b * self.state_bytes_per_seq);
+        let per_tok = b * (self.kv_bytes_per_token + self.act_bytes_per_token);
+        let l = if per_tok == 0 {
+            MAX_CTX as u64
+        } else {
+            spare / per_tok
+        };
+        (l.min(MAX_CTX as u64)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::device::{self, a6000, orin_nano};
+    use crate::models::quant::{bf16, w4a16};
+    use crate::models::registry::{llama31_8b, nemotron_h_8b};
+    use crate::testkit::property;
+
+    #[test]
+    fn llama_8b_bf16_fits_a6000_not_orin() {
+        let arch = llama31_8b();
+        let cloud = FitModel::new(&arch, Some(bf16()), &Rig::single(a6000()));
+        assert!(cloud.fits(1, 1024));
+        assert!(cloud.max_batch(1024) > 32, "{}", cloud.max_batch(1024));
+        // 16.06 GB of weights cannot fit an 8 GB Orin Nano
+        let edge =
+            FitModel::new(&arch, Some(bf16()), &Rig::single(orin_nano()));
+        assert_eq!(edge.max_batch(1024), 0);
+        assert!(!edge.fits(1, 128));
+        // ... but AWQ int4 weights (~4.27 GB) do fit
+        let edge4 =
+            FitModel::new(&arch, Some(w4a16()), &Rig::single(orin_nano()));
+        assert!(edge4.fits(1, 1024));
+        assert!(edge4.max_batch(1024) >= 8, "{}", edge4.max_batch(1024));
+    }
+
+    #[test]
+    fn max_batch_is_exactly_the_fit_boundary() {
+        let arch = llama31_8b();
+        for (scheme, rig) in [
+            (bf16(), Rig::single(a6000())),
+            (w4a16(), Rig::single(orin_nano())),
+            (w4a16(), device::a6000_x4()),
+        ] {
+            let fm = FitModel::new(&arch, Some(scheme), &rig);
+            for ctx in [256usize, 1024, 4096] {
+                let b = fm.max_batch(ctx);
+                if b == 0 {
+                    assert!(!fm.fits(1, ctx));
+                    continue;
+                }
+                assert!(fm.fits(b, ctx), "b={b} ctx={ctx}");
+                if b < MAX_BATCH {
+                    assert!(!fm.fits(b + 1, ctx), "b={b} ctx={ctx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_ctx_is_exactly_the_fit_boundary() {
+        let fm = FitModel::new(&llama31_8b(), Some(bf16()),
+                               &Rig::single(a6000()));
+        for batch in [1usize, 8, 64] {
+            let l = fm.max_ctx(batch);
+            assert!(l > 0);
+            assert!(fm.fits(batch, l), "batch={batch} l={l}");
+            if l < MAX_CTX {
+                assert!(!fm.fits(batch, l + 1), "batch={batch} l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_fits_longer_contexts_than_dense() {
+        // SSM state doesn't grow with L: Nemotron's max context at a
+        // fixed batch dwarfs Llama's
+        let rig = Rig::single(a6000());
+        let dense = FitModel::new(&llama31_8b(), Some(bf16()), &rig);
+        let hybrid = FitModel::new(&nemotron_h_8b(), Some(bf16()), &rig);
+        assert!(hybrid.max_ctx(16) > 2 * dense.max_ctx(16),
+                "{} vs {}", hybrid.max_ctx(16), dense.max_ctx(16));
+    }
+
+    #[test]
+    fn quantization_grows_the_feasible_region() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let b16 = FitModel::new(&arch, Some(bf16()), &rig);
+        let q4 = FitModel::new(&arch, Some(crate::models::quant::w4a8kv4()),
+                               &rig);
+        assert!(q4.max_batch(2048) > 2 * b16.max_batch(2048));
+        assert!(q4.max_ctx(8) > 2 * b16.max_ctx(8));
+        assert!(q4.eff_weight_bits < b16.eff_weight_bits);
+    }
+
+    #[test]
+    fn prop_max_batch_monotone_nonincreasing_in_context() {
+        property(100, |rng| {
+            let arch = llama31_8b();
+            let schemes = crate::models::quant::all_schemes();
+            let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+            let fm = FitModel::new(&arch, Some(scheme),
+                                   &Rig::single(a6000()));
+            let l1 = rng.usize_in(16, 8192);
+            let l2 = l1 + rng.usize_in(1, 8192);
+            assert!(fm.max_batch(l2) <= fm.max_batch(l1),
+                    "{}: ctx {l1}->{l2}", scheme.name);
+        });
+    }
+}

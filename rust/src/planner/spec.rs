@@ -1,0 +1,164 @@
+//! `elana plan` specification: which (model × device × scheme ×
+//! workload) space the capacity planner solves, plus the fleet-sizing
+//! target.
+//!
+//! Follows the sweep-spec discipline: every axis is validated against
+//! the registries before any solver or worker starts, so a typo fails
+//! fast with the known names listed.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::hwsim::device;
+use crate::models::{self, quant};
+use crate::util::units::MemUnit;
+
+/// Default workloads the planner evaluates at each solved max-batch
+/// point: the paper's headline shape and a long-context shape where KV
+/// quantization dominates.
+pub const DEFAULT_LENS: [(usize, usize); 2] = [(512, 512), (2048, 2048)];
+
+/// Default fleet-sizing target, requests/s.
+pub const DEFAULT_TARGET_RPS: f64 = 10.0;
+
+/// Everything `elana plan` needs to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSpec {
+    pub name: String,
+    /// Registry model names.
+    pub models: Vec<String>,
+    /// hwsim rig names.
+    pub devices: Vec<String>,
+    /// Quant tokens (`native` or a named scheme key).
+    pub quants: Vec<String>,
+    /// (prompt_len, gen_len) operating contexts — the solver finds the
+    /// max batch that fits each.
+    pub lens: Vec<(usize, usize)>,
+    /// Fleet-sizing target request rate, requests/s.
+    pub target_rps: f64,
+    /// Measure energy through the seeded sensor-playback pipeline
+    /// (§2.4); off = closed-form phase joules.
+    pub energy: bool,
+    pub unit: MemUnit,
+    /// Base seed; each point derives its own via `Rng::mix(seed, index)`.
+    pub seed: u64,
+    /// Worker threads for point evaluation (0 = one per core). Never
+    /// affects results, only wall-clock.
+    pub workers: usize,
+}
+
+impl Default for PlanSpec {
+    fn default() -> PlanSpec {
+        PlanSpec {
+            name: "plan".to_string(),
+            models: crate::profiler::size::TABLE2_MODELS
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            devices: device::all_rig_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            quants: models::quant::all_scheme_keys()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            lens: DEFAULT_LENS.to_vec(),
+            target_rps: DEFAULT_TARGET_RPS,
+            energy: true,
+            unit: MemUnit::Si,
+            seed: 0,
+            workers: 0,
+        }
+    }
+}
+
+impl PlanSpec {
+    /// Number of operating points the plan expands to.
+    pub fn n_points(&self) -> usize {
+        self.models.len() * self.devices.len() * self.quants.len()
+            * self.lens.len()
+    }
+
+    /// Validate every axis against the registries before solving.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.models.is_empty(), "plan needs at least one model");
+        ensure!(!self.devices.is_empty(), "plan needs at least one device");
+        ensure!(!self.quants.is_empty(),
+                "plan needs at least one quant scheme");
+        ensure!(!self.lens.is_empty(),
+                "plan needs at least one P+G workload length");
+        for m in &self.models {
+            if models::lookup(m).is_none() {
+                bail!("unknown model `{m}` (known: {})",
+                      models::registry::model_names().join(", "));
+            }
+        }
+        for d in &self.devices {
+            if device::rig_by_name(d).is_none() {
+                bail!("unknown device `{d}` (known: {})",
+                      device::all_rig_names().join(", "));
+            }
+        }
+        for q in &self.quants {
+            quant::parse_token(q)?;
+        }
+        for &(p, g) in &self.lens {
+            ensure!(p >= 1 && g >= 1,
+                    "workload lengths must be >= 1 (got {p}+{g})");
+        }
+        ensure!(self.target_rps > 0.0 && self.target_rps.is_finite(),
+                "target rate must be positive (got {})", self.target_rps);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_covers_table2_times_all_rigs_and_schemes() {
+        let s = PlanSpec::default();
+        s.validate().unwrap();
+        assert_eq!(s.models.len(), 3);
+        assert_eq!(s.devices.len(), 6);
+        assert_eq!(s.quants.len(), 4);
+        assert_eq!(s.n_points(), 3 * 6 * 4 * 2);
+        assert!(s.energy);
+        assert_eq!(s.workers, 0);
+    }
+
+    #[test]
+    fn validate_rejects_unknown_axes_with_listing() {
+        let bad = PlanSpec {
+            models: vec!["gpt-17".to_string()],
+            ..PlanSpec::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("gpt-17") && err.contains("llama-3.1-8b"),
+                "{err}");
+
+        let bad = PlanSpec {
+            devices: vec!["tpu-v9".to_string()],
+            ..PlanSpec::default()
+        };
+        assert!(bad.validate().is_err());
+
+        let bad = PlanSpec {
+            quants: vec!["int3".to_string()],
+            ..PlanSpec::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown quant scheme `int3`"), "{err}");
+
+        for spec in [
+            PlanSpec { models: Vec::new(), ..PlanSpec::default() },
+            PlanSpec { quants: Vec::new(), ..PlanSpec::default() },
+            PlanSpec { lens: vec![(0, 8)], ..PlanSpec::default() },
+            PlanSpec { target_rps: 0.0, ..PlanSpec::default() },
+            PlanSpec { target_rps: f64::NAN, ..PlanSpec::default() },
+        ] {
+            assert!(spec.validate().is_err(), "{spec:?}");
+        }
+    }
+}

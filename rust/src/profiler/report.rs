@@ -49,15 +49,21 @@ pub fn render_size_table(rows: &[SizeRow], points: &[(usize, usize)],
     render_table(&hdr_refs, &table_rows)
 }
 
-/// Tables 3/4 layout: the paper's six metric columns.
+/// Tables 3/4 layout: the paper's six metric columns. Rows measured
+/// under a quantization scheme carry it in the model cell — two saved
+/// tables must never be indistinguishable across schemes.
 pub fn render_latency_table(title: &str, rows: &[ProfileOutcome]) -> String {
     let headers = ["Model", "TTFT", "J/Prom.", "TPOT", "J/Tok.", "TTLT",
                    "J/Req."];
     let table_rows: Vec<Row> = rows
         .iter()
         .map(|o| {
+            let model = match &o.quant {
+                Some(q) => format!("{} [{q}]", o.model),
+                None => o.model.clone(),
+            };
             Row(vec![
-                o.model.clone(),
+                model,
                 format!("{:.2}", o.ttft_ms),
                 format!("{:.2}", o.j_prompt),
                 format!("{:.2}", o.tpot_ms),
@@ -102,13 +108,20 @@ mod tests {
             tpot_p50_ms: 24.80,
             tpot_p99_ms: 25.10,
             simulated: true,
+            quant: None,
         };
         let text = render_latency_table("nGPU=1, bsize=1, L=512+512",
-                                        &[o]);
+                                        &[o.clone()]);
         assert!(text.contains("TTFT"));
         assert!(text.contains("94.30"));
         assert!(text.contains("J/Req."));
         assert!(text.contains("12859.85"));
+        // native rows carry no scheme tag...
+        assert!(!text.contains('['), "{text}");
+        // ...quantized rows announce theirs in the model cell
+        let q = ProfileOutcome { quant: Some("w4a16".into()), ..o };
+        let text = render_latency_table("t", &[q]);
+        assert!(text.contains("Llama-3.1-8B [w4a16]"), "{text}");
     }
 
     #[test]

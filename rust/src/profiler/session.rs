@@ -48,6 +48,9 @@ pub struct ProfileOutcome {
     pub tpot_p99_ms: f64,
     /// Whether the row came from hwsim or the real engine.
     pub simulated: bool,
+    /// Quantization scheme key the row was simulated under (`None` =
+    /// the model's native dtype).
+    pub quant: Option<String>,
 }
 
 impl ProfileOutcome {
@@ -76,6 +79,10 @@ impl ProfileOutcome {
             ("ttlt_ms", Json::num(self.ttlt_ms)),
             ("j_request", Json::num(self.j_request)),
             ("simulated", Json::Bool(self.simulated)),
+            ("quant", match &self.quant {
+                Some(q) => Json::str(q.clone()),
+                None => Json::Null,
+            }),
         ])
     }
 }
@@ -147,6 +154,7 @@ fn profile_deterministic(backend: &mut dyn ExecutionBackend,
         tpot_p50_ms: steps.as_ref().map(|s| s.p50 * 1e3).unwrap_or(0.0),
         tpot_p99_ms: steps.as_ref().map(|s| s.p99 * 1e3).unwrap_or(0.0),
         simulated: true,
+        quant: spec.quant.map(|q| q.key.to_string()),
     })
 }
 
@@ -201,6 +209,7 @@ fn profile_statistical(backend: &mut dyn ExecutionBackend,
         tpot_p50_ms: tpot.summary.p50 * 1e3,
         tpot_p99_ms: tpot.summary.p99 * 1e3,
         simulated: false,
+        quant: None,
     })
 }
 

@@ -1,6 +1,7 @@
 //! Profiling run specification (what the CLI builds from its flags).
 
 use crate::hwsim::Workload;
+use crate::models::QuantScheme;
 use crate::util::units::MemUnit;
 
 /// How many runs each metric averages over — the paper's §2.3/§2.4
@@ -25,6 +26,10 @@ pub struct ProfileSpec {
     pub energy: bool,
     pub mem_unit: MemUnit,
     pub seed: u64,
+    /// Quantization scheme for simulated rigs; `None` = the model's
+    /// native dtype. The real engine executes unquantized artifacts, so
+    /// `backend::from_spec` rejects a scheme on the `cpu` device.
+    pub quant: Option<QuantScheme>,
 }
 
 impl ProfileSpec {
@@ -39,6 +44,7 @@ impl ProfileSpec {
             energy: true,
             mem_unit: MemUnit::Si,
             seed: 0,
+            quant: None,
         }
     }
 

@@ -7,6 +7,7 @@
 //! downstream artifact independent of worker-thread scheduling.
 
 use crate::hwsim::Workload;
+use crate::models::{quant, QuantScheme};
 use crate::profiler::ProfileSpec;
 use crate::util::rng::Rng;
 use crate::util::units::MemUnit;
@@ -22,6 +23,9 @@ pub struct SweepCell {
     pub model: String,
     pub device: String,
     pub workload: Workload,
+    /// Quantization scheme of the cell; `None` = the model's native
+    /// dtype (the `native` spec token).
+    pub quant: Option<QuantScheme>,
     /// Deterministic per-cell seed: `Rng::mix(spec.seed, index)`.
     pub seed: u64,
 }
@@ -36,7 +40,13 @@ impl SweepCell {
         s.energy = energy;
         s.mem_unit = unit;
         s.seed = self.seed;
+        s.quant = self.quant;
         s
+    }
+
+    /// Report token of the cell's quant axis (`native` or a scheme key).
+    pub fn quant_token(&self) -> &'static str {
+        self.quant.map(|q| q.key).unwrap_or("native")
     }
 
     /// This cell's deterministic workload generator — what an
@@ -49,21 +59,34 @@ impl SweepCell {
     }
 }
 
-/// Expand a spec into its full cell list.
+/// Expand a spec into its full cell list. The quant axis is innermost,
+/// so single-quant grids keep the exact cell indices (and thus per-cell
+/// seeds) of the pre-quant expansion.
 pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
+    let schemes: Vec<Option<QuantScheme>> = spec
+        .quants
+        .iter()
+        .map(|t| {
+            quant::parse_token(t)
+                .expect("quant tokens are checked by SweepSpec::validate")
+        })
+        .collect();
     let mut cells = Vec::with_capacity(spec.n_cells());
     for m in &spec.models {
         for d in &spec.devices {
             for &b in &spec.batches {
                 for &(p, g) in &spec.lens {
-                    let index = cells.len();
-                    cells.push(SweepCell {
-                        index,
-                        model: m.clone(),
-                        device: d.clone(),
-                        workload: Workload::new(b, p, g),
-                        seed: Rng::mix(spec.seed, index as u64),
-                    });
+                    for &q in &schemes {
+                        let index = cells.len();
+                        cells.push(SweepCell {
+                            index,
+                            model: m.clone(),
+                            device: d.clone(),
+                            workload: Workload::new(b, p, g),
+                            quant: q,
+                            seed: Rng::mix(spec.seed, index as u64),
+                        });
+                    }
                 }
             }
         }
@@ -145,5 +168,26 @@ mod tests {
         assert!(!ps.energy);
         assert_eq!(ps.mem_unit, MemUnit::Binary);
         assert!(ps.is_simulated());
+        // default grid: native dtype cells
+        assert_eq!(cells[3].quant, None);
+        assert_eq!(cells[3].quant_token(), "native");
+        assert_eq!(ps.quant, None);
+    }
+
+    #[test]
+    fn quant_axis_expands_innermost_and_carries_schemes() {
+        let mut spec = small_spec();
+        spec.quants = vec!["native".into(), "w4a16".into()];
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 16);
+        // innermost axis: adjacent cells alternate schemes
+        assert_eq!(cells[0].quant, None);
+        assert_eq!(cells[1].quant.unwrap().key, "w4a16");
+        assert_eq!(cells[0].model, cells[1].model);
+        assert_eq!(cells[0].workload, cells[1].workload);
+        // quant token flows into the cell's ProfileSpec
+        let ps = cells[1].profile_spec(true, MemUnit::Si);
+        assert_eq!(ps.quant.unwrap().key, "w4a16");
+        assert_eq!(cells[1].quant_token(), "w4a16");
     }
 }

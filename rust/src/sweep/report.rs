@@ -33,9 +33,9 @@ pub fn render_markdown(r: &SweepResults) -> String {
     let _ = writeln!(
         out,
         "{} cells = {} models x {} devices x {} batch sizes x {} \
-         workloads (seed {})",
+         workloads x {} quant schemes (seed {})",
         r.cells.len(), s.models.len(), s.devices.len(), s.batches.len(),
-        s.lens.len(), s.seed
+        s.lens.len(), s.quants.len(), s.seed
     );
 
     for dev in &s.devices {
@@ -47,12 +47,12 @@ pub fn render_markdown(r: &SweepResults) -> String {
         let _ = writeln!(out, "\n## {}", group[0].outcome.device);
         let _ = writeln!(
             out,
-            "| Model | Workload | TTFT ms | J/Prompt | TPOT ms | p50 \
-             | p99 | J/Token | dJ/Token | TTLT ms | J/Request |"
+            "| Model | Quant | Workload | TTFT ms | J/Prompt | TPOT ms \
+             | p50 | p99 | J/Token | dJ/Token | TTLT ms | J/Request |"
         );
         let _ = writeln!(
             out,
-            "|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|"
+            "|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|"
         );
         let group_best = group
             .iter()
@@ -74,11 +74,11 @@ pub fn render_markdown(r: &SweepResults) -> String {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} \
+                "| {} | {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} \
                  | {:.2} | {} | {:.2} | {:.2} |",
-                model, c.cell.workload.label(), o.ttft_ms, o.j_prompt,
-                o.tpot_ms, o.tpot_p50_ms, o.tpot_p99_ms, o.j_token, delta,
-                o.ttlt_ms, o.j_request
+                model, c.cell.quant_token(), c.cell.workload.label(),
+                o.ttft_ms, o.j_prompt, o.tpot_ms, o.tpot_p50_ms,
+                o.tpot_p99_ms, o.j_token, delta, o.ttlt_ms, o.j_request
             );
         }
     }
@@ -122,6 +122,7 @@ pub fn to_json(r: &SweepResults) -> Json {
             Json::obj(vec![
                 ("index", Json::num(c.cell.index as f64)),
                 ("seed", Json::str(c.cell.seed.to_string())),
+                ("quant", Json::str(c.cell.quant_token())),
                 ("outcome", c.outcome.to_json()),
             ])
         })
@@ -145,6 +146,8 @@ pub fn to_json(r: &SweepResults) -> Json {
          Json::Arr(s.lens.iter()
                    .map(|&(p, g)| Json::str(format!("{p}+{g}")))
                    .collect())),
+        ("quants",
+         Json::Arr(s.quants.iter().map(|q| Json::str(q.clone())).collect())),
         ("n_cells", Json::num(r.cells.len() as f64)),
         ("best_j_token_index", opt_idx(r.best_j_token())),
         ("worst_j_token_index", opt_idx(r.worst_j_token())),
@@ -205,6 +208,35 @@ mod tests {
         assert!(v.get("best_j_token_index").unwrap().as_usize().is_some());
         // execution details must not leak into the artifact
         assert!(v.get("threads").is_none());
+    }
+
+    #[test]
+    fn quant_column_renders_in_markdown_and_json() {
+        let s = SweepSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            quants: vec!["native".into(), "w4a16".into()],
+            ..SweepSpec::default()
+        };
+        let r = runner::run(&s).unwrap();
+        let text = render_markdown(&r);
+        assert!(text.contains("| Quant |"), "{text}");
+        assert!(text.contains("| native |"), "{text}");
+        assert!(text.contains("| w4a16 |"), "{text}");
+        assert!(text.contains("x 2 quant schemes"), "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("quant").unwrap().as_str(), Some("native"));
+        assert_eq!(cells[1].get("quant").unwrap().as_str(), Some("w4a16"));
+        let quants = v.get("quants").unwrap().as_arr().unwrap();
+        assert_eq!(quants.len(), 2);
+        // the quantized cell decodes faster and cheaper than native
+        let t = |i: usize, k: &str| cells[i].get("outcome").unwrap()
+            .get(k).unwrap().as_f64().unwrap();
+        assert!(t(1, "tpot_ms") < t(0, "tpot_ms"));
+        assert!(t(1, "j_token") < t(0, "j_token"));
     }
 
     #[test]

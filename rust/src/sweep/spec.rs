@@ -10,6 +10,7 @@
 //!   "devices": ["a6000", "thor"],
 //!   "batches": [1, 8],
 //!   "lens": ["256+256", "512+512"],
+//!   "quants": ["native", "w4a16"],
 //!   "energy": true,
 //!   "unit": "si",
 //!   "seed": 0,
@@ -33,8 +34,10 @@ pub const DEFAULT_MODELS: [&str; 2] = ["llama-3.1-8b", "qwen-2.5-7b"];
 pub const DEFAULT_DEVICES: [&str; 2] = ["a6000", "thor"];
 pub const DEFAULT_BATCHES: [usize; 2] = [1, 8];
 pub const DEFAULT_LENS: [(usize, usize); 2] = [(256, 256), (512, 512)];
+/// Default quant axis: the model's own dtype only (the pre-quant grid).
+pub const DEFAULT_QUANTS: [&str; 1] = ["native"];
 
-/// The sweep grid: models × devices × batches × lens.
+/// The sweep grid: models × devices × batches × lens × quants.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
     pub name: String,
@@ -45,6 +48,9 @@ pub struct SweepSpec {
     pub batches: Vec<usize>,
     /// (prompt_len, gen_len) pairs — the paper's `L=P+G` notation.
     pub lens: Vec<(usize, usize)>,
+    /// Quantization-scheme tokens (`native` or a
+    /// `models::quant::all_scheme_keys` entry) — the low-bit grid axis.
+    pub quants: Vec<String>,
     /// Measure energy through the sensor-playback pipeline (§2.4).
     pub energy: bool,
     pub unit: MemUnit,
@@ -63,6 +69,7 @@ impl Default for SweepSpec {
             devices: DEFAULT_DEVICES.iter().map(|s| s.to_string()).collect(),
             batches: DEFAULT_BATCHES.to_vec(),
             lens: DEFAULT_LENS.to_vec(),
+            quants: DEFAULT_QUANTS.iter().map(|s| s.to_string()).collect(),
             energy: true,
             unit: MemUnit::Si,
             seed: 0,
@@ -75,7 +82,7 @@ impl SweepSpec {
     /// Number of cells the grid expands to.
     pub fn n_cells(&self) -> usize {
         self.models.len() * self.devices.len() * self.batches.len()
-            * self.lens.len()
+            * self.lens.len() * self.quants.len()
     }
 
     /// Validate every axis against the registries before spawning
@@ -106,6 +113,11 @@ impl SweepSpec {
             ensure!(p >= 1 && g >= 1,
                     "workload lengths must be >= 1 (got {p}+{g})");
         }
+        ensure!(!self.quants.is_empty(),
+                "sweep needs at least one quant scheme");
+        for q in &self.quants {
+            models::quant::parse_token(q)?;
+        }
         Ok(())
     }
 
@@ -114,9 +126,9 @@ impl SweepSpec {
     /// type (a typo'd or wrong-typed key errors instead of silently
     /// running a different grid).
     pub fn parse(text: &str) -> Result<SweepSpec> {
-        const KNOWN_KEYS: [&str; 9] =
-            ["sweep", "models", "devices", "batches", "lens", "energy",
-             "unit", "seed", "threads"];
+        const KNOWN_KEYS: [&str; 10] =
+            ["sweep", "models", "devices", "batches", "lens", "quants",
+             "energy", "unit", "seed", "threads"];
         let root = Json::parse(text).context("parsing sweep spec JSON")?;
         let obj = root
             .as_obj()
@@ -178,6 +190,9 @@ impl SweepSpec {
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(v) = strings("quants")? {
+            spec.quants = v;
+        }
         if let Some(v) = root.get("energy") {
             spec.energy = v
                 .as_bool()
@@ -229,6 +244,7 @@ pub struct SweepOverrides {
     pub devices: Option<Vec<String>>,
     pub batches: Option<Vec<usize>>,
     pub lens: Option<Vec<(usize, usize)>>,
+    pub quants: Option<Vec<String>>,
     pub energy: Option<bool>,
     pub unit: Option<MemUnit>,
     pub seed: Option<u64>,
@@ -249,6 +265,9 @@ impl SweepOverrides {
         }
         if let Some(v) = self.lens {
             spec.lens = v;
+        }
+        if let Some(v) = self.quants {
+            spec.quants = v;
         }
         if let Some(v) = self.energy {
             spec.energy = v;
@@ -333,6 +352,32 @@ mod tests {
         assert!(SweepSpec::parse(r#"{"seed": true}"#).is_err());
         assert!(SweepSpec::parse(r#"{"seed": -3}"#).is_err());
         assert!(SweepSpec::parse(r#"{"sweep": 7}"#).is_err());
+    }
+
+    #[test]
+    fn quants_axis_parses_validates_and_multiplies_the_grid() {
+        let s = SweepSpec::parse(
+            r#"{"models": ["llama-3.1-8b"], "devices": ["a6000"],
+                "batches": [1], "lens": ["64+32"],
+                "quants": ["bf16", "w4a16", "w4a8kv4"]}"#)
+            .unwrap();
+        assert_eq!(s.quants, vec!["bf16", "w4a16", "w4a8kv4"]);
+        assert_eq!(s.n_cells(), 3);
+        s.validate().unwrap();
+        // default axis is the native dtype only
+        assert_eq!(SweepSpec::default().quants, vec!["native"]);
+        // unknown schemes are rejected with the known tokens listed
+        let bad = SweepSpec {
+            quants: vec!["int3".to_string()],
+            ..SweepSpec::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("int3") && err.contains("w4a8kv4"), "{err}");
+        let empty = SweepSpec { quants: Vec::new(), ..SweepSpec::default() };
+        assert!(empty.validate().is_err());
+        // wrong-typed key errors instead of silently running defaults
+        assert!(SweepSpec::parse(r#"{"quants": "bf16"}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"quants": [4]}"#).is_err());
     }
 
     #[test]

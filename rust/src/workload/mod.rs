@@ -31,6 +31,8 @@ pub mod streams {
     pub const SERVE_TRACE: u64 = 0x454C_414E_4103;
     /// The serving simulator's per-batch energy-attribution streams.
     pub const SERVE_ENERGY: u64 = 0x454C_414E_4104;
+    /// The capacity planner's fleet-sizing arrival draws.
+    pub const PLAN_FLEET: u64 = 0x454C_414E_4105;
 }
 
 /// Deterministic random-prompt generator.

@@ -120,6 +120,7 @@ fn engine_profile_and_serve_compose() {
         prompt_buckets: mm.prompt_buckets(1),
         max_seq_len: mm.max_seq_len,
         max_wait_s: 0.005,
+        kv_budget: None,
     };
     let queue = RequestQueue::new(16);
     let mut gen = PromptGen::new(mm.vocab_size, 9);

@@ -1,0 +1,133 @@
+//! `elana plan` acceptance: the golden capacity report (bf16 vs w4a16
+//! on one edge and one datacenter device), byte-identical artifacts at
+//! any `--workers` count, and the memory-fit guarantee on every
+//! feasible/recommended operating point.
+
+use elana::planner::{self, report, PlanSpec};
+use elana::util::json::Json;
+
+/// Llama-3.1-8B, bf16 vs AWQ-int4, on an 8 GB edge board and an 80 GB
+/// datacenter part — the "what fits where" story in four points.
+fn golden_spec() -> PlanSpec {
+    PlanSpec {
+        models: vec!["llama-3.1-8b".into()],
+        devices: vec!["orin".into(), "a100".into()],
+        quants: vec!["bf16".into(), "w4a16".into()],
+        lens: vec![(512, 512)],
+        seed: 0,
+        ..PlanSpec::default()
+    }
+}
+
+#[test]
+fn golden_plan_markdown_report() {
+    let r = planner::run(&golden_spec()).unwrap();
+    let text = report::render_markdown(&r);
+
+    // headers carry the device capacities
+    assert!(text.contains("## Llama-3.1-8B on Orin-Nano (8.00 GB)"),
+            "{text}");
+    assert!(text.contains("## Llama-3.1-8B on A100 (80.00 GB)"), "{text}");
+
+    // golden fit columns (bits | weights | workload | max batch |
+    // max ctx@b1 | required), pinned exactly — integer solver math:
+    //
+    // Orin (8 GB): bf16 weights (16.06 GB) cannot fit; w4a16
+    // (4.27 GB) admits batch 18 at L=1024 and ~18.6k tokens at b=1.
+    assert!(text.contains(
+        "| 16.00 | 16.06 GB | L=512+512 | does not fit | 0 |"), "{text}");
+    assert!(text.contains(
+        "| 4.25 | 4.27 GB | bsize=18, L=512+512 | 18 | 18605 | 6.98 GB |"),
+        "{text}");
+    // A100 (80 GB): both fit; int4 frees room for 78 more sequences.
+    assert!(text.contains(
+        "| 16.00 | 16.06 GB | bsize=402, L=512+512 | 402 | 131072 \
+         | 76.76 GB |"), "{text}");
+    assert!(text.contains(
+        "| 4.25 | 4.27 GB | bsize=480, L=512+512 | 480 | 131072 \
+         | 76.74 GB |"), "{text}");
+
+    // one recommendation per device group, with a fleet estimate
+    assert_eq!(text.matches("**Recommended:**").count(), 2, "{text}");
+    assert_eq!(text.matches("fleet @ 10 req/s:").count(), 2, "{text}");
+    // the only feasible Orin scheme is the recommended one
+    assert!(text.contains("**w4a16**"), "{text}");
+}
+
+#[test]
+fn plan_artifacts_byte_identical_across_worker_counts() {
+    let runs: Vec<(String, String)> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&workers| {
+            let mut spec = golden_spec();
+            spec.workers = workers;
+            let r = planner::run(&spec).unwrap();
+            (report::to_json(&r).to_string(), report::render_markdown(&r))
+        })
+        .collect();
+    for (json, md) in &runs[1..] {
+        assert_eq!(json, &runs[0].0,
+                   "JSON must not depend on the worker count");
+        assert_eq!(md, &runs[0].1,
+                   "markdown must not depend on the worker count");
+    }
+    // and the artifact is real: parse it back and spot-check
+    let v = Json::parse(&runs[0].0).unwrap();
+    assert_eq!(v.get("n_points").unwrap().as_usize(), Some(4));
+    assert_eq!(v.get("seed").unwrap().as_str(), Some("0"));
+}
+
+#[test]
+fn every_feasible_point_fits_device_memory() {
+    // the acceptance grid: Table 2 models x cloud+edge x all schemes
+    let spec = PlanSpec {
+        devices: vec!["a6000".into(), "thor".into()],
+        lens: vec![(512, 512)],
+        ..PlanSpec::default()
+    };
+    assert_eq!(spec.n_points(), 3 * 2 * 4);
+    let r = planner::run(&spec).unwrap();
+    let mut feasible = 0;
+    let mut recommended = 0;
+    for p in &r.points {
+        if p.fits() {
+            feasible += 1;
+            assert!(p.required_bytes() <= p.fit.budget_bytes,
+                    "inside the budget: {p:?}");
+            assert!(p.required_bytes() <= p.fit.mem_bytes,
+                    "inside device memory: {p:?}");
+            let o = p.outcome.as_ref().expect("feasible => evaluated");
+            assert!(o.ttft_ms > 0.0 && o.tpot_ms > 0.0
+                    && o.j_token > 0.0);
+        } else {
+            assert!(p.outcome.is_none());
+        }
+        if p.recommended {
+            recommended += 1;
+            assert!(p.fits() && p.pareto);
+        }
+    }
+    // every 8B-class model fits both 48 GB and 128 GB devices at every
+    // scheme in this grid
+    assert_eq!(feasible, 24);
+    assert_eq!(recommended, 6, "one per (model, device) group");
+}
+
+#[test]
+fn quantization_opens_the_edge_device() {
+    let r = planner::run(&golden_spec()).unwrap();
+    let orin = r.group("llama-3.1-8b", "orin");
+    assert!(!orin[0].fits(), "bf16 must not fit 8 GB");
+    assert!(orin[1].fits(), "w4a16 must fit 8 GB");
+    // deeper weights buy batch on the datacenter part too
+    let a100 = r.group("llama-3.1-8b", "a100");
+    assert!(a100[1].batch > a100[0].batch);
+    // and the evaluated quantized point decodes faster per step than
+    // bf16 at a LARGER batch — the planner surfaces the win, not just
+    // the fit
+    let o16 = a100[0].outcome.as_ref().unwrap();
+    let o4 = a100[1].outcome.as_ref().unwrap();
+    assert!(o4.j_token < o16.j_token * 1.5,
+            "int4 at +20% batch must not cost more energy per step: \
+             {} vs {}", o4.j_token, o16.j_token);
+}

@@ -1,9 +1,12 @@
-//! Property tests (via `testkit::property`) for the workload generators
-//! and the coordinator's dynamic batcher — the two substrates every
-//! profiling run and sweep cell leans on.
+//! Property tests (via `testkit::property`) for the workload generators,
+//! the coordinator's dynamic batcher, and the quantization/capacity
+//! math every plan and KV-budget admission leans on.
 
 use elana::coordinator::batcher::{plan_batch, BatchPolicy};
 use elana::coordinator::ServingRequest;
+use elana::hwsim::device;
+use elana::models::{self, quant, EffectiveBytes, QuantScheme};
+use elana::planner::solve::FitModel;
 use elana::testkit::property;
 use elana::util::Rng;
 use elana::workload::PromptGen;
@@ -84,6 +87,7 @@ fn random_policy(rng: &mut Rng) -> BatchPolicy {
         prompt_buckets: vec![bucket_lo, bucket_lo * 4],
         max_seq_len: bucket_lo * 4 + rng.usize_in(8, 64),
         max_wait_s: 0.01,
+        kv_budget: None,
     }
 }
 
@@ -183,5 +187,152 @@ fn prop_batcher_preserves_prompts_verbatim() {
                 [row * plan.padded_prompt_len..][..r.prompt.len()];
             assert_eq!(got, &r.prompt[..], "row {row} corrupted");
         }
+    });
+}
+
+// ---------------- quantization & capacity planning ----------------
+
+/// Random paper-scale arch + a random scheme pair ordered by width.
+fn random_arch(rng: &mut Rng) -> elana::models::ModelArch {
+    let all = models::paper_models();
+    all[rng.usize_in(0, all.len() - 1)].clone()
+}
+
+#[test]
+fn prop_weight_bytes_monotone_in_weight_bits() {
+    property(200, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        // all_schemes() is ordered deepest-precision-first; any pair
+        // with more weight bits must weigh at least as much
+        let schemes = quant::all_schemes();
+        let a = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let b = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let (lo, hi) = if a.weight_bits <= b.weight_bits {
+            (a, b)
+        } else {
+            (b, a)
+        };
+        let lo_bytes = EffectiveBytes::new(&arch, lo).weight_bytes();
+        let hi_bytes = EffectiveBytes::new(&arch, hi).weight_bytes();
+        if lo.weight_bits == hi.weight_bits {
+            assert_eq!(lo_bytes, hi_bytes, "{}", arch.name);
+        } else {
+            assert!(lo_bytes < hi_bytes,
+                    "{}: {} bits -> {lo_bytes} B vs {} bits -> {hi_bytes} B",
+                    arch.name, lo.weight_bits, hi.weight_bits);
+        }
+        // and nothing ever exceeds the native checkpoint size
+        assert!(hi_bytes <= models::size::model_bytes(&arch));
+    });
+}
+
+#[test]
+fn prop_planner_max_batch_monotone_nonincreasing_in_context() {
+    property(200, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let schemes = quant::all_schemes();
+        let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let names = device::all_rig_names();
+        let rig = device::rig_by_name(names[rng.usize_in(0, names.len() - 1)])
+            .unwrap();
+        let fm = FitModel::new(&arch, Some(scheme), &rig);
+        let l1 = rng.usize_in(16, 16_384);
+        let l2 = l1 + rng.usize_in(1, 16_384);
+        assert!(fm.max_batch(l2) <= fm.max_batch(l1),
+                "{} {} on {}: max_batch({l2}) > max_batch({l1})",
+                arch.name, scheme.name, rig.name());
+    });
+}
+
+#[test]
+fn prop_fitted_points_never_exceed_device_memory() {
+    property(300, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        // include the native token: admission must hold for it too
+        let token = ["native", "bf16", "w8a16", "w4a16", "w4a8kv4"]
+            [rng.usize_in(0, 4)];
+        let scheme = quant::parse_token(token).unwrap();
+        let names = device::all_rig_names();
+        let rig = device::rig_by_name(names[rng.usize_in(0, names.len() - 1)])
+            .unwrap();
+        let fm = FitModel::new(&arch, scheme, &rig);
+        let ctx = rng.usize_in(16, 32_768);
+        let b = fm.max_batch(ctx);
+        if b == 0 {
+            // nothing fits: even one sequence must overflow the budget
+            assert!(!fm.fits(1, ctx));
+            return;
+        }
+        // the solved point fits the budget, and the budget is inside
+        // physical memory
+        assert!(fm.fits(b, ctx), "{} on {} at ctx {ctx}", arch.name,
+                rig.name());
+        assert!(fm.required_bytes(b, ctx) <= fm.budget_bytes);
+        assert!(fm.budget_bytes <= fm.mem_bytes);
+        // the boundary is tight: one more sequence must not fit
+        if b < elana::planner::solve::MAX_BATCH {
+            assert!(!fm.fits(b + 1, ctx));
+        }
+        // the same math drives serve admission
+        let policy = BatchPolicy {
+            allowed_batches: vec![1, 2, 4, 8, 16, 32],
+            prompt_buckets: vec![16, 64, 256, 1024],
+            max_seq_len: 4096,
+            max_wait_s: 0.0,
+            kv_budget: Some(fm.clone()),
+        };
+        let n = rng.usize_in(1, 16);
+        let reqs: Vec<ServingRequest> = (0..n)
+            .map(|i| ServingRequest::new(i as u64,
+                                         vec![1; rng.usize_in(1, 1024)],
+                                         rng.usize_in(1, 64), 0.0))
+            .collect();
+        match plan_batch(&policy, reqs) {
+            Ok((plan, _)) => {
+                assert!(fm.fits(plan.exec_batch,
+                                plan.padded_prompt_len + plan.gen_len),
+                        "served shape must fit: {plan:?}");
+            }
+            Err(e) => {
+                // only legal when one request at the largest bucket
+                // (1024) plus a generated token cannot fit this device
+                // (fits is monotone in seq_len, so this covers every
+                // smaller head bucket too)
+                assert!(!fm.fits(1, 1025), "spurious rejection: {e}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quant_never_grows_latency_or_energy_at_fixed_shape() {
+    property(60, |rng: &mut Rng| {
+        use elana::hwsim::{self, Workload};
+        let arch = random_arch(rng);
+        let rig = device::rig_by_name("a6000").unwrap();
+        let w = Workload::new(rng.usize_in(1, 16), rng.usize_in(16, 512),
+                              rng.usize_in(1, 32));
+        let base = hwsim::simulate(&arch, &rig, &w);
+        let schemes = quant::all_schemes();
+        let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let q = hwsim::simulate_quant(&arch, &rig, &w, &scheme);
+        // fewer (or equal) bytes can only help a roofline
+        assert!(q.tpot.seconds <= base.tpot.seconds + 1e-12,
+                "{} {}", arch.name, scheme.name);
+        assert!(q.ttlt_seconds <= base.ttlt_seconds + 1e-9);
+        assert!(q.ttlt_joules <= base.ttlt_joules * (1.0 + 1e-9));
+    });
+}
+
+#[test]
+fn prop_native_token_is_identity_everywhere() {
+    property(50, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let native = QuantScheme::native(arch.dtype);
+        let eb = EffectiveBytes::new(&arch, native);
+        assert_eq!(eb.weight_bytes(), models::size::model_bytes(&arch));
+        let b = rng.usize_in(1, 64);
+        let l = rng.usize_in(1, 4096);
+        assert_eq!(eb.cache_bytes(b, l), models::cache_bytes(&arch, b, l));
     });
 }

@@ -116,6 +116,7 @@ impl ExecutionBackend for EngineBackend {
             step_windows,
             tokens: r.tokens,
             analytic_joules: None,
+            interconnect_joules: 0.0,
         })
     }
 

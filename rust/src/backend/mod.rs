@@ -53,6 +53,11 @@ pub struct ExecRun {
     /// Closed-form (J/Prompt, J/Token, J/Request) when the backend
     /// knows them analytically (hwsim with playback disabled).
     pub analytic_joules: Option<(f64, f64, f64)>,
+    /// Joules spent on the device-to-device link over the whole request
+    /// (TP all-reduces + PP activation hops). 0 on unsharded runs and
+    /// on the real engine — the serve coordinator uses this to split
+    /// J/token into compute vs interconnect.
+    pub interconnect_joules: f64,
 }
 
 impl ExecRun {
@@ -155,12 +160,19 @@ pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
         if let Some(q) = spec.quant {
             b = b.with_quant(q);
         }
+        if let Some(p) = spec.parallel {
+            b = b.with_parallel(p)?;
+        }
         Ok(Box::new(b))
     } else {
         anyhow::ensure!(
             spec.quant.is_none(),
             "quantization modeling applies to simulated rigs only; the \
              `cpu` engine executes unquantized artifacts");
+        anyhow::ensure!(
+            spec.parallel.map(|p| p.n_ranks()).unwrap_or(1) <= 1,
+            "the `cpu` engine runs on a single device; tp·pp must be 1 \
+             (sharding applies to simulated rigs)");
         let manifest = crate::runtime::Manifest::load_default()?;
         Ok(Box::new(EngineBackend::new(&manifest, &spec.model)?))
     }
@@ -204,6 +216,35 @@ mod tests {
     }
 
     #[test]
+    fn from_spec_threads_parallelism_and_rejects_it_on_the_engine() {
+        let mut spec = ProfileSpec::new("llama-3.1-8b", "4xa6000",
+                                        Workload::new(1, 64, 32));
+        spec.parallel = Some(crate::hwsim::ParallelSpec::new(4, 1));
+        let tb = crate::engine::TokenBatch::new(1, 64, vec![0; 64])
+            .unwrap();
+        let mut tp4 = from_spec(&spec).unwrap();
+        let run4 = tp4.generate(&tb, 16).unwrap();
+        assert!(run4.interconnect_joules > 0.0);
+        // oversubscribed mapping fails at construction
+        spec.parallel = Some(crate::hwsim::ParallelSpec::new(8, 2));
+        let err = from_spec(&spec).unwrap_err().to_string();
+        assert!(err.contains("needs 16 device(s)"), "{err}");
+        // the engine runs on one device
+        let mut cpu = ProfileSpec::new("elana-tiny", "cpu",
+                                       Workload::new(1, 8, 8));
+        cpu.parallel = Some(crate::hwsim::ParallelSpec::new(2, 1));
+        let err = from_spec(&cpu).unwrap_err().to_string();
+        assert!(err.contains("single device"), "{err}");
+        // the explicit trivial mapping is fine on cpu
+        cpu.parallel = Some(crate::hwsim::ParallelSpec::single());
+        // (construction may still fail on missing artifacts in minimal
+        // checkouts, but never on the parallelism guard)
+        if let Err(e) = from_spec(&cpu) {
+            assert!(!e.to_string().contains("single device"), "{e}");
+        }
+    }
+
+    #[test]
     fn from_spec_rejects_unknown_names() {
         let spec = ProfileSpec::new("gpt-17", "a6000",
                                     Workload::new(1, 8, 8));
@@ -223,6 +264,7 @@ mod tests {
             step_windows: vec![(1.010, 1.012), (1.012, 1.016)],
             tokens: Vec::new(),
             analytic_joules: None,
+            interconnect_joules: 0.0,
         };
         assert!((run.tpot_mean_s() - 0.003).abs() < 1e-12);
         let (s0, s1) = run.span();
@@ -240,6 +282,7 @@ mod tests {
             step_windows: Vec::new(),
             tokens: Vec::new(),
             analytic_joules: None,
+            interconnect_joules: 0.0,
         };
         assert_eq!(run.tpot_mean_s(), 0.0);
         assert_eq!(run.span(), (0.0, 0.010));

@@ -12,7 +12,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::engine::TokenBatch;
-use crate::hwsim::{self, Rig, Workload};
+use crate::hwsim::{self, ParallelSpec, Rig, SimResult, Workload};
 use crate::models::{self, arch::ModelArch, QuantScheme};
 use crate::power::energy::WindowEnergy;
 use crate::power::model::LoadHandle;
@@ -30,6 +30,9 @@ pub struct SimBackend {
     /// (the identity), under which timings match the pre-quant model
     /// bit-for-bit.
     scheme: QuantScheme,
+    /// Explicit TP×PP mapping; `None` = the legacy whole-rig roofline
+    /// (bit-identical to the pre-parallelism path).
+    parallel: Option<ParallelSpec>,
     energy: bool,
     seed: u64,
     /// Virtual-time sensor log of the most recent replayed `generate`,
@@ -60,6 +63,7 @@ impl SimBackend {
             arch,
             rig,
             scheme,
+            parallel: None,
             energy,
             seed,
             log: None,
@@ -78,6 +82,27 @@ impl SimBackend {
     pub fn with_quant(mut self, scheme: QuantScheme) -> SimBackend {
         self.scheme = scheme;
         self
+    }
+
+    /// Map the model onto the rig with an explicit TP×PP sharding:
+    /// every `generate`/probe call then runs the sharded cost model
+    /// (per-rank roofline + interconnect). Fails fast when the mapping
+    /// oversubscribes the rig or the layer stack.
+    pub fn with_parallel(mut self, par: ParallelSpec)
+                         -> Result<SimBackend> {
+        par.validate_for(&self.arch, &self.rig)?;
+        self.parallel = Some(par);
+        Ok(self)
+    }
+
+    /// Simulate through the active (scheme, parallelism) configuration.
+    fn sim(&self, w: &Workload) -> SimResult {
+        match &self.parallel {
+            Some(par) => hwsim::simulate_parallel(
+                &self.arch, &self.rig, w, &self.scheme, par),
+            None => hwsim::simulate_quant(&self.arch, &self.rig, w,
+                                          &self.scheme),
+        }
     }
 }
 
@@ -106,8 +131,7 @@ impl ExecutionBackend for SimBackend {
                 -> Result<ExecRun> {
         let w = Workload::new(prompts.batch(), prompts.prompt_len(),
                               gen_len);
-        let sim = hwsim::simulate_quant(&self.arch, &self.rig, &w,
-                                        &self.scheme);
+        let sim = self.sim(&w);
 
         let (prefill_window, step_windows) = if self.energy {
             // replay prefill + every decode step through the seeded
@@ -155,14 +179,14 @@ impl ExecutionBackend for SimBackend {
             tokens: Vec::new(),
             analytic_joules: Some((sim.ttft.joules, sim.tpot.joules,
                                    sim.ttlt_joules)),
+            interconnect_joules: sim.interconnect_joules,
         })
     }
 
     fn prefill_probe(&mut self, prompts: &TokenBatch)
                      -> Result<(f64, (f64, f64))> {
         let w = Workload::new(prompts.batch(), prompts.prompt_len(), 1);
-        let sim = hwsim::simulate_quant(&self.arch, &self.rig, &w,
-                                        &self.scheme);
+        let sim = self.sim(&w);
         Ok((sim.ttft.seconds, (0.0, sim.ttft.seconds)))
     }
 
@@ -170,8 +194,7 @@ impl ExecutionBackend for SimBackend {
                     -> Result<(Vec<f64>, (f64, f64))> {
         let w = Workload::new(prompts.batch(), prompts.prompt_len(),
                               steps.max(1));
-        let sim = hwsim::simulate_quant(&self.arch, &self.rig, &w,
-                                        &self.scheme);
+        let sim = self.sim(&w);
         let total: f64 = sim.step_seconds.iter().sum();
         Ok((sim.step_seconds, (0.0, total)))
     }
@@ -322,6 +345,42 @@ mod tests {
         let n = native.generate(&zeros(1, 256), 64).unwrap();
         assert_eq!(n.ttft_s, b.ttft_s);
         assert_eq!(n.step_s, b.step_s);
+    }
+
+    #[test]
+    fn parallel_mapping_shards_the_simulated_run() {
+        let mut tp1 = SimBackend::new("llama-3.1-8b", "4xa6000", false, 0)
+            .unwrap()
+            .with_parallel(ParallelSpec::single())
+            .unwrap();
+        let mut tp4 = SimBackend::new("llama-3.1-8b", "4xa6000", false, 0)
+            .unwrap()
+            .with_parallel(ParallelSpec::new(4, 1))
+            .unwrap();
+        let r1 = tp1.generate(&zeros(1, 256), 32).unwrap();
+        let r4 = tp4.generate(&zeros(1, 256), 32).unwrap();
+        assert!(r4.tpot_mean_s() < r1.tpot_mean_s());
+        assert!(r4.interconnect_joules > 0.0);
+        assert_eq!(r1.interconnect_joules, 0.0);
+        // probes agree with generate under the mapping
+        let (steps, _) = tp4.decode_probe(&zeros(1, 256), 32).unwrap();
+        assert_eq!(steps, r4.step_s);
+        // explicit tp1·pp1 on a single-card rig is the identity
+        let mut plain = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap();
+        let mut triv = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap()
+            .with_parallel(ParallelSpec::single())
+            .unwrap();
+        let a = plain.generate(&zeros(1, 128), 16).unwrap();
+        let b = triv.generate(&zeros(1, 128), 16).unwrap();
+        assert_eq!(a.ttft_s, b.ttft_s);
+        assert_eq!(a.step_s, b.step_s);
+        // oversubscription fails at construction
+        assert!(SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+                    .unwrap()
+                    .with_parallel(ParallelSpec::new(2, 1))
+                    .is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::spec::{Arrivals, ServeSpec};
-use crate::hwsim::Workload;
+use crate::hwsim::{ParallelSpec, Workload};
 use crate::models::quant;
 use crate::planner::PlanSpec;
 use crate::sweep::spec::SweepOverrides;
@@ -46,6 +46,8 @@ pub enum Command {
         runs: Option<usize>,
         /// Quantization scheme (simulated rigs only).
         quant: Option<crate::models::QuantScheme>,
+        /// Explicit TP×PP mapping (simulated rigs only).
+        parallel: Option<ParallelSpec>,
     },
     /// A whole suite (built-in name or JSON path).
     Suite { name: String },
@@ -76,6 +78,9 @@ pub enum Command {
         json: bool,
         /// Write the JSON report here.
         out: Option<String>,
+        /// Exit non-zero when no feasible recommended point exists
+        /// (replaces brittle grep assertions in CI smoke jobs).
+        assert_recommendation: bool,
     },
     /// The serving subsystem: virtual-time trace-replay simulator on
     /// hwsim rigs, wall-clock serving on `--device cpu`.
@@ -137,25 +142,26 @@ pub fn parse(args: &[String]) -> Result<Command> {
         "size" => Some(&["models", "unit", "points"]),
         "latency" | "energy" => {
             Some(&["model", "device", "batch", "len", "runs", "quant",
-                   "no-energy"])
+                   "tp", "pp", "no-energy"])
         }
         "suite" => Some(&[]),
         "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
-                          "quant", "threads", "seed", "unit", "no-energy",
-                          "out", "json"]),
-        "plan" => Some(&["models", "devices", "quant", "lens", "rate",
-                         "workers", "seed", "unit", "no-energy", "out",
-                         "json"]),
+                          "quant", "tp", "pp", "threads", "seed", "unit",
+                          "no-energy", "out", "json"]),
+        "plan" => Some(&["models", "devices", "quant", "lens", "tp", "pp",
+                         "rate", "workers", "seed", "unit", "no-energy",
+                         "out", "json", "assert-recommendation"]),
         "trace" => Some(&["model", "device", "batch", "len", "out"]),
         "serve" => Some(&["model", "device", "requests", "rate", "trace",
                           "prompts", "gen", "replicas", "workers", "seed",
-                          "max-wait", "max-seq-len", "quant", "no-energy",
-                          "json", "out"]),
+                          "max-wait", "max-seq-len", "quant", "tp", "pp",
+                          "no-energy", "json", "out"]),
         "models" | "help" | "-h" | "--help" | "version" | "-V"
         | "--version" => Some(&[]),
         _ => None, // unknown command: reported by the match below
     };
-    const BOOLEAN_FLAGS: [&str; 2] = ["no-energy", "json"];
+    const BOOLEAN_FLAGS: [&str; 3] =
+        ["no-energy", "json", "assert-recommendation"];
     if let Some(known) = known {
         // only `suite` takes a positional argument; anywhere else a bare
         // word is a mistake (e.g. a forgotten --spec)
@@ -204,6 +210,42 @@ pub fn parse(args: &[String]) -> Result<Command> {
         Ok(Workload::new(batch, p, g))
     };
 
+    // one --tp/--pp degree (latency, serve)
+    let par_degree = |name: &str| -> Result<Option<usize>> {
+        get(name)
+            .map(|v| match v.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(anyhow!("bad --{name} (want an integer >= 1)")),
+            })
+            .transpose()
+    };
+    // the single TP×PP mapping latency/serve take
+    let parallel_single = || -> Result<Option<ParallelSpec>> {
+        let tp = par_degree("tp")?;
+        let pp = par_degree("pp")?;
+        Ok(match (tp, pp) {
+            (None, None) => None,
+            (tp, pp) => {
+                Some(ParallelSpec::new(tp.unwrap_or(1), pp.unwrap_or(1)))
+            }
+        })
+    };
+    // comma-separated degree lists (the sweep/plan grid axes)
+    let par_list = |name: &str| -> Result<Option<Vec<usize>>> {
+        get(name)
+            .map(|list| {
+                list.split(',')
+                    .map(|t| match t.trim().parse::<usize>() {
+                        Ok(n) if n >= 1 => Ok(n),
+                        _ => Err(anyhow!(
+                            "bad --{name} entry `{t}` (want integers \
+                             >= 1)")),
+                    })
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .transpose()
+    };
+
     match cmd.as_str() {
         "size" => {
             let models = get("models")
@@ -239,6 +281,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .map_err(|_| anyhow!("bad --runs"))?,
             quant: get("quant").map(quant::parse_token).transpose()?
                 .flatten(),
+            parallel: parallel_single()?,
         }),
         "suite" => Ok(Command::Suite {
             name: positional
@@ -278,6 +321,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     })
                     .transpose()?,
                 quants: get("quant").map(quant_list).transpose()?,
+                tps: par_list("tp")?,
+                pps: par_list("pp")?,
                 energy: if has("no-energy") { Some(false) } else { None },
                 unit: get("unit")
                     .map(|u| {
@@ -322,6 +367,12 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     })
                     .collect::<Result<Vec<_>>>()?;
             }
+            if let Some(v) = par_list("tp")? {
+                spec.tps = v;
+            }
+            if let Some(v) = par_list("pp")? {
+                spec.pps = v;
+            }
             if let Some(r) = get("rate") {
                 spec.target_rps =
                     r.parse().map_err(|_| anyhow!("bad --rate"))?;
@@ -345,6 +396,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 spec,
                 json: has("json"),
                 out: get("out").map(str::to_string),
+                assert_recommendation: has("assert-recommendation"),
             })
         }
         "trace" => Ok(Command::Trace {
@@ -434,6 +486,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 quant::parse_token(q)?;
                 spec.quant = q.trim().to_ascii_lowercase();
             }
+            spec.parallel = parallel_single()?;
             if has("no-energy") {
                 spec.energy = false;
             }
@@ -455,32 +508,40 @@ ELANA — energy and latency analyzer for LLMs (reproduction)
 
 USAGE:
   elana size    [--models m1,m2] [--unit si|gib] [--points 1x1024,128x1024]
-  elana latency --model MODEL --device a6000|4xa6000|thor|orin|a100|h100|cpu
+  elana latency --model MODEL --device RIG|cpu
                 [--batch B] [--len P+G] [--runs N] [--quant SCHEME]
-                [--no-energy]
+                [--tp N] [--pp N] [--no-energy]
   elana energy  (latency with energy always on)
   elana suite   table2|table3|table4|path/to/suite.json
   elana sweep   [--spec sweep.json] [--models m1,m2] [--devices d1,d2]
                 [--batches 1,8] [--lens 256+256,512+512]
-                [--quant native,w4a16] [--threads N] [--seed S]
-                [--unit si|gib] [--no-energy] [--out sweep.json] [--json]
+                [--quant native,w4a16] [--tp 1,2,4] [--pp 1,2]
+                [--threads N] [--seed S] [--unit si|gib] [--no-energy]
+                [--out sweep.json] [--json]
   elana plan    [--models m1,m2] [--devices d1,d2]
                 [--quant bf16,w8a16,w4a16,w4a8kv4]
-                [--lens 512+512,2048+2048] [--rate RPS] [--workers W]
-                [--seed S] [--unit si|gib] [--no-energy]
-                [--out plan.json] [--json]
+                [--lens 512+512,2048+2048] [--tp 1,2,4] [--pp 1,2]
+                [--rate RPS] [--workers W] [--seed S] [--unit si|gib]
+                [--no-energy] [--out plan.json] [--json]
+                [--assert-recommendation]
   elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
                 [--out trace.json]
   elana serve   [--model MODEL] [--device RIG|cpu] [--requests N]
                 [--rate RPS | --trace trace.json] [--prompts LO..HI]
                 [--gen G] [--replicas R] [--workers W] [--seed S]
                 [--max-wait MS] [--max-seq-len L] [--quant SCHEME]
-                [--no-energy] [--out serve.json] [--json]
+                [--tp N] [--pp N] [--no-energy] [--out serve.json]
+                [--json]
   elana models
   elana help | version
 
+Rigs: a6000, 4xa6000 (PCIe), 4xa6000-nvlink, thor, orin, a100, 4xa100
+(NVLink), h100, 8xh100 (NVLink) — or cpu for the real engine.
 Quant schemes: native (the model's own dtype), bf16, w8a16, w4a16
 (AWQ-style), w4a8kv4 (QServe-style).
+Parallelism: --tp shards tensors across ranks (all-reduce over the
+rig's link), --pp pipelines layer stages; tp x pp must fit the rig's
+device count. Without the flags the legacy whole-rig model runs.
 Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
 ";
 
@@ -527,7 +588,7 @@ mod tests {
              --len 512+512 --runs 100")).unwrap();
         match c {
             Command::Latency { model, device, workload, energy, runs,
-                               quant } => {
+                               quant, parallel } => {
                 assert_eq!(model, "llama-3.1-8b");
                 assert_eq!(device, "a6000");
                 assert_eq!(workload.batch, 1);
@@ -536,9 +597,76 @@ mod tests {
                 assert!(energy);
                 assert_eq!(runs, Some(100));
                 assert!(quant.is_none());
+                assert!(parallel.is_none());
             }
             _ => panic!("{c:?}"),
         }
+    }
+
+    #[test]
+    fn parallel_flags_parse_and_reject_bad_degrees() {
+        // latency: one mapping; an omitted axis defaults to 1
+        match parse(&argv(
+            "latency --model m --device 4xa6000 --tp 4 --pp 1")).unwrap()
+        {
+            Command::Latency { parallel, .. } => {
+                assert_eq!(parallel, Some(ParallelSpec::new(4, 1)));
+            }
+            c => panic!("{c:?}"),
+        }
+        match parse(&argv("latency --model m --pp 2")).unwrap() {
+            Command::Latency { parallel, .. } => {
+                assert_eq!(parallel, Some(ParallelSpec::new(1, 2)));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("latency --model m --tp 0")).is_err());
+        assert!(parse(&argv("latency --model m --tp four")).is_err());
+        // sweep/plan: comma lists
+        match parse(&argv("sweep --devices 4xa6000 --tp 1,2,4")).unwrap() {
+            Command::Sweep { overrides, .. } => {
+                assert_eq!(overrides.tps.as_deref(), Some(&[1, 2, 4][..]));
+                assert!(overrides.pps.is_none());
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("sweep --tp 1,zero")).is_err());
+        match parse(&argv("plan --tp 1,4 --pp 1,2")).unwrap() {
+            Command::Plan { spec, .. } => {
+                assert_eq!(spec.tps, vec![1, 4]);
+                assert_eq!(spec.pps, vec![1, 2]);
+                assert_eq!(spec.parallelisms().len(), 4);
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("plan --tp 0,1")).is_err());
+        // serve: one mapping
+        match parse(&argv("serve --tp 2")).unwrap() {
+            Command::Serve { spec, .. } => {
+                assert_eq!(spec.parallel, Some(ParallelSpec::new(2, 1)));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("serve --pp minus")).is_err());
+    }
+
+    #[test]
+    fn assert_recommendation_flag_parses() {
+        match parse(&argv("plan --assert-recommendation")).unwrap() {
+            Command::Plan { assert_recommendation, .. } => {
+                assert!(assert_recommendation);
+            }
+            c => panic!("{c:?}"),
+        }
+        match parse(&argv("plan")).unwrap() {
+            Command::Plan { assert_recommendation, .. } => {
+                assert!(!assert_recommendation);
+            }
+            c => panic!("{c:?}"),
+        }
+        // boolean: must not swallow a following bare word
+        assert!(parse(&argv("plan --assert-recommendation stray"))
+                    .is_err());
     }
 
     #[test]
@@ -754,11 +882,12 @@ mod tests {
     #[test]
     fn parse_plan_defaults() {
         match parse(&argv("plan")).unwrap() {
-            Command::Plan { spec, json, out } => {
+            Command::Plan { spec, json, out, assert_recommendation } => {
                 assert_eq!(spec, crate::planner::PlanSpec::default());
-                assert_eq!(spec.n_points(), 3 * 6 * 4 * 2);
+                assert_eq!(spec.n_points(), 4 * 9 * 4 * 2);
                 assert!(!json);
                 assert!(out.is_none());
+                assert!(!assert_recommendation);
             }
             c => panic!("{c:?}"),
         }
@@ -770,7 +899,7 @@ mod tests {
             "plan --models llama-3.1-8b,qwen-2.5-7b --devices a6000,orin              --quant bf16,w4a16 --lens 512+512 --rate 25.5 --workers 4              --seed 9 --unit gib --no-energy --out /tmp/p.json --json"))
             .unwrap();
         match c {
-            Command::Plan { spec, json, out } => {
+            Command::Plan { spec, json, out, .. } => {
                 assert_eq!(spec.models,
                            vec!["llama-3.1-8b", "qwen-2.5-7b"]);
                 assert_eq!(spec.devices, vec!["a6000", "orin"]);

@@ -55,6 +55,12 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
     }
     let _ = writeln!(out);
     let _ = writeln!(out, "{}", arrivals_line(o));
+    if let Some(p) = s.parallel {
+        let _ = writeln!(
+            out,
+            "parallelism: tp={} x pp={} ({} rank(s) per replica)",
+            p.tp, p.pp, p.n_ranks());
+    }
     if o.wall_clock {
         let _ = writeln!(
             out,
@@ -104,6 +110,14 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
             out,
             "energy: {:.1} J total, {:.3} J/token, {:.2} J/request",
             total, total / toks, total / n_req);
+        if let Some(link) = o.interconnect_joules {
+            let _ = writeln!(
+                out,
+                "J/token split: {:.3} compute + {:.3} interconnect \
+                 ({:.1}% on the link)",
+                (total - link) / toks, link / toks,
+                link / total.max(f64::MIN_POSITIVE) * 100.0);
+        }
     }
     out
 }
@@ -161,6 +175,9 @@ pub fn to_json(o: &ServeOutcome) -> Json {
                 fields.push(("j_token", Json::num(jt)));
                 fields.push(("j_request", Json::num(jr)));
             }
+            if let Some(link) = b.interconnect_j {
+                fields.push(("j_interconnect", Json::num(link)));
+            }
             Json::obj(fields)
         })
         .collect();
@@ -195,10 +212,19 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         ("requests", Json::Arr(requests)),
         ("batches", Json::Arr(batches)),
     ];
+    if let Some(p) = s.parallel {
+        root.push(("tp", Json::num(p.tp as f64)));
+        root.push(("pp", Json::num(p.pp as f64)));
+    }
     if let Some(total) = o.total_joules {
         let toks = o.generated_tokens().max(1) as f64;
         root.push(("total_joules", Json::num(total)));
         root.push(("j_per_token", Json::num(total / toks)));
+        if let Some(link) = o.interconnect_joules {
+            root.push(("interconnect_joules", Json::num(link)));
+            root.push(("j_per_token_interconnect",
+                       Json::num(link / toks)));
+        }
     }
     Json::obj(root)
 }

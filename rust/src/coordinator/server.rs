@@ -144,6 +144,7 @@ pub fn serve_with_clock(backend: &mut dyn ExecutionBackend,
             padding_waste: plan.padding_waste(),
             service_s: done_t - dequeue_t,
             joules: None,
+            interconnect_j: None,
         });
     }
 

@@ -79,6 +79,11 @@ pub struct ServedBatch {
     /// (J/Prompt, J/Token, J/Request) of the batch execution, when the
     /// energy pass ran.
     pub joules: Option<(f64, f64, f64)>,
+    /// Joules the batch spent on the device-to-device link (TP
+    /// all-reduces + PP hops), when the energy pass ran under an
+    /// explicit parallel mapping. The compute share is
+    /// `joules.2 - interconnect_j`.
+    pub interconnect_j: Option<f64>,
 }
 
 /// Everything the serve report renders.
@@ -98,6 +103,9 @@ pub struct ServeOutcome {
     /// Total measured energy over the run, joules (sum of batch
     /// J/Request on the simulated path, sampler integral on `cpu`).
     pub total_joules: Option<f64>,
+    /// Interconnect share of the run's energy, joules (analytic; only
+    /// under an explicit parallel mapping).
+    pub interconnect_joules: Option<f64>,
 }
 
 impl ServeOutcome {
@@ -159,6 +167,9 @@ pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
                 .with_max_seq_len(spec.max_seq_len);
         if let Some(q) = spec.scheme()? {
             backend = backend.with_quant(q);
+        }
+        if let Some(p) = spec.parallel {
+            backend = backend.with_parallel(p)?;
         }
         let mut outcome = simulate(spec, &mut backend)?;
         if spec.energy {
@@ -284,6 +295,7 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
             padding_waste: plan.padding_waste(),
             service_s,
             joules: None,
+            interconnect_j: None,
         });
     }
 
@@ -296,6 +308,7 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
         busy_s,
         wall_clock: false,
         total_joules: None,
+        interconnect_joules: None,
     })
 }
 
@@ -314,7 +327,7 @@ fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
     let scheme = spec.scheme()?;
     let results = pool::run_indexed(
         spec.workers, shapes.len(),
-        |i| -> Result<(f64, f64, f64)> {
+        |i| -> Result<((f64, f64, f64), f64)> {
             let (batch, prompt, gen) = shapes[i];
             let mut b = SimBackend::new(&spec.model, &spec.device, true,
                                         Rng::mix(base, i as u64))?
@@ -322,20 +335,31 @@ fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
             if let Some(q) = scheme {
                 b = b.with_quant(q);
             }
+            if let Some(p) = spec.parallel {
+                b = b.with_parallel(p)?;
+            }
             let tb = TokenBatch::new(batch, prompt,
                                      vec![0; batch * prompt])?;
             let run = b.generate(&tb, gen)?;
-            b.run_energy(&run)
+            Ok((b.run_energy(&run)?, run.interconnect_joules))
         });
     let mut total = 0.0;
+    let mut link_total = 0.0;
     for (b, r) in outcome.batches.iter_mut().zip(results) {
-        let joules = r.with_context(|| {
+        let (joules, link_j) = r.with_context(|| {
             format!("energy attribution for serve batch #{}", b.index)
         })?;
         total += joules.2;
         b.joules = Some(joules);
+        if spec.parallel.is_some() {
+            link_total += link_j;
+            b.interconnect_j = Some(link_j);
+        }
     }
     outcome.total_joules = Some(total);
+    if spec.parallel.is_some() {
+        outcome.interconnect_joules = Some(link_total);
+    }
     Ok(())
 }
 
@@ -414,6 +438,7 @@ pub fn outcome_from_metrics(spec: &ServeSpec,
         busy_s: m.busy_s,
         wall_clock: true,
         total_joules: None,
+        interconnect_joules: None,
     }
 }
 
@@ -545,6 +570,32 @@ mod tests {
             o.total_joules.unwrap() / o.generated_tokens() as f64
         };
         assert!(jt(&oq) < jt(&ob), "{} vs {}", jt(&oq), jt(&ob));
+    }
+
+    #[test]
+    fn parallel_serving_splits_compute_and_interconnect_energy() {
+        let mut s = quick_spec();
+        s.device = "4xa6000".to_string();
+        s.energy = true;
+        s.parallel = Some(crate::hwsim::ParallelSpec::new(4, 1));
+        let o = run(&s).unwrap();
+        assert_eq!(o.requests.len(), 24);
+        let link = o.interconnect_joules
+            .expect("parallel + energy => link share");
+        assert!(link > 0.0);
+        assert!(link < o.total_joules.unwrap(),
+                "the link is a share, not the whole bill");
+        for b in &o.batches {
+            let bj = b.interconnect_j.expect("per-batch link share");
+            assert!(bj >= 0.0);
+            assert!(bj < b.joules.unwrap().2);
+        }
+        // legacy serving carries no link attribution
+        let mut legacy = quick_spec();
+        legacy.energy = true;
+        let ol = run(&legacy).unwrap();
+        assert!(ol.interconnect_joules.is_none());
+        assert!(ol.batches.iter().all(|b| b.interconnect_j.is_none()));
     }
 
     #[test]

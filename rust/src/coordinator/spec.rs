@@ -13,7 +13,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::hwsim::device;
+use crate::hwsim::{device, ParallelSpec};
 use crate::models::{self, quant, QuantScheme};
 use crate::planner::solve::FitModel;
 
@@ -64,6 +64,11 @@ pub struct ServeSpec {
     /// `w4a8kv4`). Simulated rigs price execution *and* the KV-budget
     /// admission at the scheme's widths; `native` is the identity.
     pub quant: String,
+    /// Explicit TP×PP mapping per replica (`--tp`/`--pp`). `None` =
+    /// the legacy whole-rig roofline. Simulated rigs shard execution
+    /// *and* the per-rank KV-budget admission; the `cpu` engine runs
+    /// on one device.
+    pub parallel: Option<ParallelSpec>,
 }
 
 impl Default for ServeSpec {
@@ -83,6 +88,7 @@ impl Default for ServeSpec {
             max_wait_s: 0.05,
             max_seq_len: 4096,
             quant: "native".to_string(),
+            parallel: None,
         }
     }
 }
@@ -147,7 +153,8 @@ impl ServeSpec {
                                device::rig_by_name(&self.device),
                                self.scheme()) {
             (Some(arch), Some(rig), Ok(scheme)) => {
-                Some(FitModel::new(&arch, scheme, &rig))
+                Some(FitModel::with_parallel(&arch, scheme, &rig,
+                                             self.parallel))
             }
             _ => None,
         };
@@ -199,26 +206,39 @@ impl ServeSpec {
         ensure!(self.is_simulated() || self.scheme()?.is_none(),
                 "--quant applies to simulated rigs only; the `cpu` \
                  engine executes unquantized artifacts");
+        ensure!(self.is_simulated()
+                    || self.parallel.map(|p| p.n_ranks()).unwrap_or(1)
+                        <= 1,
+                "--tp/--pp apply to simulated rigs only; the `cpu` \
+                 engine runs on a single device");
         if self.is_simulated() {
             let top = Self::bucket_ceil(self.prompt_hi);
             ensure!(self.max_seq_len > top,
                     "max_seq_len {} leaves no room to generate past the \
                      {top}-token prompt bucket", self.max_seq_len);
-            // a deployment that cannot hold even one request at the
-            // workload's top prompt bucket must fail loudly before
-            // serving starts (plan_batch would bail mid-run otherwise)
             let arch = models::lookup(&self.model).expect("checked above");
             let rig = device::rig_by_name(&self.device)
                 .expect("checked above");
-            let fm = FitModel::new(&arch, self.scheme()?, &rig);
+            if let Some(par) = self.parallel {
+                par.validate_for(&arch, &rig)?;
+            }
+            // a deployment that cannot hold even one request at the
+            // workload's top prompt bucket must fail loudly before
+            // serving starts (plan_batch would bail mid-run otherwise)
+            let fm = FitModel::with_parallel(&arch, self.scheme()?, &rig,
+                                             self.parallel);
             ensure!(fm.fits(1, top + 1),
                     "{} under scheme `{}` does not fit {}: one \
                      {top}-token request needs {:.1} GB ({:.1} GB of \
-                     weights) vs a {:.1} GB budget",
+                     weights) vs a {:.1} GB budget{}",
                     self.model, self.quant, self.device,
                     fm.required_bytes(1, top + 1) as f64 / 1e9,
                     fm.weight_bytes as f64 / 1e9,
-                    fm.budget_bytes as f64 / 1e9);
+                    fm.budget_bytes as f64 / 1e9,
+                    match self.parallel {
+                        Some(p) => format!(" per rank at {}", p.label()),
+                        None => String::new(),
+                    });
         }
         Ok(())
     }
@@ -348,6 +368,39 @@ mod tests {
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("does not fit"), "{err}");
         assert!(err.contains("32768-token request"), "{err}");
+    }
+
+    #[test]
+    fn parallel_serving_validates_and_shards_the_admission_budget() {
+        // the 70B cannot serve on 4xa6000 at tp=1...
+        let mut s = ServeSpec {
+            model: "llama-3.1-70b".to_string(),
+            device: "4xa6000".to_string(),
+            parallel: Some(ParallelSpec::new(1, 1)),
+            ..ServeSpec::default()
+        };
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("does not fit"), "{err}");
+        assert!(err.contains("per rank at tp1·pp1"), "{err}");
+        // ...but does at tp=4, with a per-rank KV budget
+        s.parallel = Some(ParallelSpec::new(4, 1));
+        s.validate().unwrap();
+        let fm = s.sim_policy().kv_budget.unwrap();
+        assert_eq!(fm.ranks, 4);
+        assert_eq!(fm.mem_bytes, 48_000_000_000);
+        // oversubscribed mappings are rejected up front
+        s.parallel = Some(ParallelSpec::new(8, 1));
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("needs 8 device(s)"), "{err}");
+        // the engine runs on one device
+        let cpu = ServeSpec {
+            device: "cpu".into(),
+            model: "elana-tiny".into(),
+            parallel: Some(ParallelSpec::new(2, 1)),
+            ..ServeSpec::default()
+        };
+        let err = cpu.validate().unwrap_err().to_string();
+        assert!(err.contains("single device"), "{err}");
     }
 
     #[test]

@@ -60,20 +60,74 @@ impl DeviceSpec {
     }
 }
 
+/// The device-to-device link of a rig: what TP all-reduces and PP
+/// activation sends pay per byte and per call. Three families cover the
+/// paper's platforms: NVLink-bridged datacenter parts, PCIe-attached
+/// workstation cards (the paper's 4×A6000), and unified-memory edge
+/// SoCs where "the link" is the same DRAM the compute reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interconnect {
+    pub name: &'static str,
+    /// Effective per-link bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// Fixed latency per collective call / hop, seconds.
+    pub latency_s: f64,
+    /// Energy per byte crossing the link, picojoules.
+    pub pj_per_byte: f64,
+}
+
+impl Interconnect {
+    /// PCIe gen4 x16 peer-to-peer (no switch): the paper's A6000 rig.
+    pub fn pcie4() -> Interconnect {
+        Interconnect { name: "pcie4", bw_gbs: 32.0, latency_s: 200.0e-6,
+                       pj_per_byte: 500.0 }
+    }
+
+    /// NVLink 3 bridge (A100-class): an order of magnitude more
+    /// bandwidth and far lower launch latency than PCIe.
+    pub fn nvlink3() -> Interconnect {
+        Interconnect { name: "nvlink3", bw_gbs: 300.0, latency_s: 25.0e-6,
+                       pj_per_byte: 350.0 }
+    }
+
+    /// NVLink 4 (H100-class).
+    pub fn nvlink4() -> Interconnect {
+        Interconnect { name: "nvlink4", bw_gbs: 450.0, latency_s: 15.0e-6,
+                       pj_per_byte: 300.0 }
+    }
+
+    /// Unified-memory edge boards (Jetson-class) and single-card rigs:
+    /// there is no discrete link, so collectives are free — the guard in
+    /// `Rig::allreduce_s` never charges them anyway.
+    pub fn unified() -> Interconnect {
+        Interconnect { name: "unified", bw_gbs: f64::INFINITY,
+                       latency_s: 0.0, pj_per_byte: 0.0 }
+    }
+
+    /// Wire time of moving `bytes` in `calls` separate transfers over
+    /// this link (before any compute overlap) — the one formula behind
+    /// legacy all-reduces, TP rings, and PP hops.
+    pub fn transfer_s(&self, bytes: f64, calls: f64) -> f64 {
+        bytes / (self.bw_gbs * 1e9) + calls * self.latency_s
+    }
+}
+
 /// A (possibly multi-device) execution rig.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Rig {
     pub device: DeviceSpec,
-    /// Tensor-parallel degree.
+    /// Devices in the rig (the legacy implicit-TP degree; explicit
+    /// `ParallelSpec` mappings may use any subset of them).
     pub n_devices: usize,
-    /// Effective all-reduce bandwidth between ranks, GB/s (PCIe-class for
-    /// the paper's A6000 rig).
-    pub interconnect_gbs: f64,
-    /// Per-all-reduce fixed latency, seconds.
-    pub allreduce_latency_s: f64,
+    /// Device-to-device link the collectives run over.
+    pub link: Interconnect,
     /// Fraction of collective time hidden under compute (0 = fully
     /// exposed, 1 = fully overlapped).
     pub overlap: f64,
+    /// Display suffix distinguishing same-silicon link variants
+    /// (`"-nvlink"` for the A6000 ablation twin; empty for canonical
+    /// rigs) so the two never render identically in reports.
+    pub variant: &'static str,
 }
 
 impl Rig {
@@ -81,9 +135,9 @@ impl Rig {
         Rig {
             device,
             n_devices: 1,
-            interconnect_gbs: 0.0,
-            allreduce_latency_s: 0.0,
+            link: Interconnect::unified(),
             overlap: 0.0,
+            variant: "",
         }
     }
 
@@ -91,7 +145,8 @@ impl Rig {
         if self.n_devices == 1 {
             self.device.name.to_string()
         } else {
-            format!("{}x{}", self.n_devices, self.device.name)
+            format!("{}x{}{}", self.n_devices, self.device.name,
+                    self.variant)
         }
     }
 
@@ -112,9 +167,7 @@ impl Rig {
         }
         let n = self.n_devices as f64;
         let vol = 2.0 * (n - 1.0) / n * bytes;
-        let t = vol / (self.interconnect_gbs * 1e9)
-            + count as f64 * self.allreduce_latency_s;
-        t * (1.0 - self.overlap)
+        self.link.transfer_s(vol, count as f64) * (1.0 - self.overlap)
     }
 }
 
@@ -147,9 +200,44 @@ pub fn a6000_x4() -> Rig {
     Rig {
         device: a6000(),
         n_devices: 4,
-        interconnect_gbs: 32.0,
-        allreduce_latency_s: 200.0e-6,
+        link: Interconnect::pcie4(),
         overlap: 0.5,
+        variant: "",
+    }
+}
+
+/// 4×A6000 with NVLink bridges instead of PCIe — the link-ablation twin
+/// of [`a6000_x4`] (same silicon, ~10x the collective bandwidth), so
+/// `--tp` sweeps can isolate the interconnect's share of TPOT.
+pub fn a6000_x4_nvlink() -> Rig {
+    Rig {
+        device: a6000(),
+        n_devices: 4,
+        link: Interconnect::nvlink3(),
+        overlap: 0.5,
+        variant: "-nvlink",
+    }
+}
+
+/// 4×A100-SXM4 (NVLink 3) — the "From Words to Watts" testbed class.
+pub fn a100_x4() -> Rig {
+    Rig {
+        device: a100(),
+        n_devices: 4,
+        link: Interconnect::nvlink3(),
+        overlap: 0.5,
+        variant: "",
+    }
+}
+
+/// 8×H100-SXM5 (NVLink 4) — the frontier serving pod.
+pub fn h100_x8() -> Rig {
+    Rig {
+        device: h100(),
+        n_devices: 8,
+        link: Interconnect::nvlink4(),
+        overlap: 0.5,
+        variant: "",
     }
 }
 
@@ -252,10 +340,13 @@ pub fn rig_by_name(name: &str) -> Option<Rig> {
     match name.to_ascii_lowercase().as_str() {
         "a6000" => Some(Rig::single(a6000())),
         "a6000x4" | "4xa6000" => Some(a6000_x4()),
+        "a6000x4-nvlink" | "4xa6000-nvlink" => Some(a6000_x4_nvlink()),
         "thor" | "agx-thor" | "agx_thor" => Some(Rig::single(agx_thor())),
         "orin-nano" | "orin_nano" | "orin" => Some(Rig::single(orin_nano())),
         "a100" => Some(Rig::single(a100())),
+        "a100x4" | "4xa100" => Some(a100_x4()),
         "h100" => Some(Rig::single(h100())),
+        "h100x8" | "8xh100" => Some(h100_x8()),
         _ => None,
     }
 }
@@ -263,7 +354,8 @@ pub fn rig_by_name(name: &str) -> Option<Rig> {
 /// Canonical CLI names of every rig `rig_by_name` accepts (one spelling
 /// per rig). Sweep-spec validation lists these in its error messages.
 pub fn all_rig_names() -> &'static [&'static str] {
-    &["a6000", "4xa6000", "thor", "orin", "a100", "h100"]
+    &["a6000", "4xa6000", "4xa6000-nvlink", "thor", "orin", "a100",
+      "4xa100", "h100", "8xh100"]
 }
 
 /// All rigs the benches sweep.
@@ -288,6 +380,11 @@ mod tests {
     fn rig_names() {
         assert_eq!(Rig::single(a6000()).name(), "A6000");
         assert_eq!(a6000_x4().name(), "4xA6000");
+        // the link-ablation twin must never render identically to the
+        // PCIe rig in reports
+        assert_eq!(a6000_x4_nvlink().name(), "4xA6000-nvlink");
+        assert_eq!(a100_x4().name(), "4xA100");
+        assert_eq!(h100_x8().name(), "8xH100");
     }
 
     #[test]
@@ -314,9 +411,37 @@ mod tests {
         let big = r.allreduce_s(1e9, 1);
         assert!(big > small);
         // tiny payload still pays the fixed latency (minus overlap)
-        assert!(small >= r.allreduce_latency_s * (1.0 - r.overlap) * 0.99);
+        assert!(small >= r.link.latency_s * (1.0 - r.overlap) * 0.99);
         // per-call latency scales with the call count
         assert!(r.allreduce_s(1e3, 64) > 32.0 * r.allreduce_s(1e3, 1));
+    }
+
+    #[test]
+    fn nvlink_collectives_beat_pcie_on_the_same_silicon() {
+        let pcie = a6000_x4();
+        let nv = a6000_x4_nvlink();
+        assert_eq!(pcie.device, nv.device);
+        for (bytes, count) in [(1e6, 1usize), (1e9, 64), (1e3, 128)] {
+            assert!(nv.allreduce_s(bytes, count)
+                        < pcie.allreduce_s(bytes, count),
+                    "bytes {bytes} count {count}");
+        }
+        // link presets keep the physical ordering
+        assert!(Interconnect::nvlink4().bw_gbs
+                    > Interconnect::nvlink3().bw_gbs);
+        assert!(Interconnect::nvlink3().bw_gbs
+                    > Interconnect::pcie4().bw_gbs);
+        assert!(Interconnect::nvlink3().latency_s
+                    < Interconnect::pcie4().latency_s);
+    }
+
+    #[test]
+    fn unified_memory_link_is_free() {
+        let r = Rig::single(agx_thor());
+        assert_eq!(r.link, Interconnect::unified());
+        // even if a collective were charged, the unified link costs 0 s
+        let nonsense = Rig { n_devices: 2, ..r };
+        assert_eq!(nonsense.allreduce_s(1e9, 8), 0.0);
     }
 
     #[test]
@@ -327,6 +452,10 @@ mod tests {
         assert!(rig_by_name("orin").is_some());
         assert!(rig_by_name("h100").is_some());
         assert!(rig_by_name("a100").is_some());
+        assert_eq!(rig_by_name("4xa6000-nvlink").unwrap().link,
+                   Interconnect::nvlink3());
+        assert_eq!(rig_by_name("4xa100").unwrap().n_devices, 4);
+        assert_eq!(rig_by_name("8xh100").unwrap().n_devices, 8);
         assert!(rig_by_name("tpu-v9").is_none());
     }
 
@@ -335,7 +464,7 @@ mod tests {
         for name in all_rig_names() {
             assert!(rig_by_name(name).is_some(), "{name}");
         }
-        assert_eq!(all_rig_names().len(), 6);
+        assert_eq!(all_rig_names().len(), 9);
     }
 
     #[test]

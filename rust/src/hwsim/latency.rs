@@ -62,6 +62,12 @@ pub struct SimResult {
     /// End-to-end: TTFT + all decode steps.
     pub ttlt_seconds: f64,
     pub ttlt_joules: f64,
+    /// Exposed interconnect time over the whole request, seconds (TP
+    /// all-reduces + PP activation sends; 0 on the unsharded path).
+    pub interconnect_seconds: f64,
+    /// Energy spent moving bytes across the device-to-device link over
+    /// the whole request, joules (0 on the unsharded path).
+    pub interconnect_joules: f64,
 }
 
 impl SimResult {
@@ -138,7 +144,8 @@ fn phase_sim(rig: &Rig, cost: PhaseCost, collective_bytes: f64,
 }
 
 /// Bytes all-reduced per phase on a TP rig.
-fn collective_bytes(arch: &ModelArch, batch: usize, tokens: usize) -> f64 {
+pub(crate) fn collective_bytes(arch: &ModelArch, batch: usize,
+                               tokens: usize) -> f64 {
     2.0 * arch.n_layers() as f64
         * (batch * tokens * arch.d_model) as f64
         * arch.dtype.bytes() as f64
@@ -198,6 +205,30 @@ pub fn simulate_quant(arch: &ModelArch, rig: &Rig, w: &Workload,
         step_seconds,
         ttlt_seconds,
         ttlt_joules: ttft.joules + decode_joules_total,
+        interconnect_seconds: 0.0,
+        interconnect_joules: 0.0,
+    }
+}
+
+/// Build a [`PhaseSim`] from a phase's wall time and its total dynamic
+/// energy — the explicit-parallelism path's counterpart of `phase_sim`,
+/// sharing the sensor-curve inversion so replaying a sharded phase
+/// through the simulated NVML sensor reproduces its average power.
+pub(crate) fn phase_from_energy(rig: &Rig, seconds: f64,
+                                dynamic_joules: f64, compute_bound: bool)
+                                -> PhaseSim {
+    let n = rig.n_devices as f64;
+    let idle = rig.device.power.idle_w * n;
+    let sustain = rig.device.power.sustain_w * n;
+    let watts = idle + dynamic_joules / seconds;
+    let ratio = ((watts - idle) / (sustain - idle)).clamp(0.0, 1.0);
+    let utilization = ratio.powf(1.0 / rig.device.power.alpha);
+    PhaseSim {
+        seconds,
+        watts,
+        joules: watts * seconds,
+        utilization,
+        compute_bound,
     }
 }
 

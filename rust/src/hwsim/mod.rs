@@ -17,6 +17,9 @@
 //!   per-phase power (drives the simulated NVML sensor).
 //! * [`kernels`] — synthesizes a per-kernel timeline for the trace
 //!   recorder (Figure 1).
+//! * [`parallel`] — explicit TP×PP sharding: per-rank roofline, ring
+//!   all-reduces over the rig's interconnect, pipelined prefill with
+//!   bubble overhead.
 //!
 //! Consumers reach the simulator through `backend::SimBackend` (the
 //! `ExecutionBackend` implementation wrapping [`simulate`]); only the
@@ -26,9 +29,11 @@ pub mod cost;
 pub mod device;
 pub mod kernels;
 pub mod latency;
+pub mod parallel;
 
 pub use cost::{decode_cost, decode_cost_quant, prefill_cost,
                prefill_cost_quant, PhaseCost};
-pub use device::{DeviceSpec, Rig};
+pub use device::{DeviceSpec, Interconnect, Rig};
 pub use kernels::synthesize_kernels;
 pub use latency::{simulate, simulate_quant, PhaseSim, SimResult, Workload};
+pub use parallel::{simulate_parallel, ParallelSpec};

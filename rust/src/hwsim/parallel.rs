@@ -1,0 +1,391 @@
+//! Explicit tensor/pipeline parallelism: how a model is *sharded* onto
+//! a rig, and what the sharding costs on the wire.
+//!
+//! The legacy path (`latency::simulate*`) treats a multi-device rig as
+//! one opaque accelerator with `n_devices`× the compute and bandwidth —
+//! the paper's "nGPU=4" rows. [`ParallelSpec`] makes the mapping
+//! first-class instead:
+//!
+//! * **TP (tensor parallel)** splits every matmul and the weight/KV
+//!   stream across `tp` ranks, and pays two ring all-reduces per layer
+//!   over the activations: `2·(tp−1)/tp · bytes / link_bw` plus a fixed
+//!   per-call latency — on PCIe rigs the latency term dominates the
+//!   small decode-step collectives, which is exactly why "From Words to
+//!   Watts" sees multi-GPU TPOT regress on PCIe boxes.
+//! * **PP (pipeline parallel)** splits the layer stack into `pp`
+//!   stages. Prefill pipelines microbatches (one per sequence) with the
+//!   classic `(m + pp − 1)/m` bubble factor; decode gains nothing — a
+//!   single token still traverses every stage in series and pays
+//!   `pp − 1` activation hops per step. Each stage holds only its own
+//!   layers' weights and KV (per-stage KV residency), which is what
+//!   the capacity planner's per-rank fit model prices.
+//!
+//! `tp = 1, pp = 1` on a single-device rig delegates to the unsharded
+//! [`simulate_quant`] path bit-for-bit; on a multi-device rig it means
+//! "run on one of the devices" — *latency* is honest single-GPU
+//! (flops/1, no collectives), while *energy* still bills the whole
+//! powered rig: idle watts for every installed device, matching the
+//! simulated NVML sensor, which always samples all `n_devices`. The
+//! unused devices idle, they do not unplug.
+
+use anyhow::{ensure, Result};
+
+use crate::models::arch::ModelArch;
+use crate::models::quant::{EffectiveBytes, QuantScheme};
+
+use super::cost::{decode_cost_quant, prefill_cost_quant};
+use super::device::Rig;
+use super::latency::{collective_bytes, phase_from_energy, simulate_quant,
+                     PhaseSim, SimResult, Workload};
+
+/// A tensor/pipeline mapping of one model onto a rig.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelSpec {
+    /// Tensor-parallel degree (ranks per pipeline stage).
+    pub tp: usize,
+    /// Pipeline-parallel degree (stages).
+    pub pp: usize,
+}
+
+impl Default for ParallelSpec {
+    fn default() -> ParallelSpec {
+        ParallelSpec::single()
+    }
+}
+
+impl ParallelSpec {
+    pub fn new(tp: usize, pp: usize) -> ParallelSpec {
+        ParallelSpec { tp, pp }
+    }
+
+    /// The unsharded mapping.
+    pub fn single() -> ParallelSpec {
+        ParallelSpec { tp: 1, pp: 1 }
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.tp == 1 && self.pp == 1
+    }
+
+    /// Devices the mapping occupies.
+    pub fn n_ranks(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// Report/CLI label, e.g. `tp2·pp1`.
+    pub fn label(&self) -> String {
+        format!("tp{}·pp{}", self.tp, self.pp)
+    }
+
+    /// Can this mapping run this (model, rig) pair at all?
+    pub fn validate_for(&self, arch: &ModelArch, rig: &Rig) -> Result<()> {
+        ensure!(self.tp >= 1 && self.pp >= 1,
+                "parallel degrees must be >= 1 (got tp={} pp={})",
+                self.tp, self.pp);
+        ensure!(self.n_ranks() <= rig.n_devices,
+                "tp{} x pp{} needs {} device(s) but rig `{}` has {}",
+                self.tp, self.pp, self.n_ranks(), rig.name(),
+                rig.n_devices);
+        ensure!(self.pp <= arch.n_layers(),
+                "pp={} exceeds the {} layers of {}", self.pp,
+                arch.n_layers(), arch.name);
+        Ok(())
+    }
+}
+
+/// Shared `--tp`/`--pp` axis expansion (plan and sweep grids): `[None]`
+/// when both lists are empty (the legacy, unsharded cell), otherwise
+/// `Some` mappings with pp major and tp minor (tp innermost) and an
+/// omitted axis defaulting to degree 1.
+pub fn expand_parallelisms(tps: &[usize], pps: &[usize])
+                           -> Vec<Option<ParallelSpec>> {
+    if tps.is_empty() && pps.is_empty() {
+        return vec![None];
+    }
+    let tps = if tps.is_empty() { vec![1] } else { tps.to_vec() };
+    let pps = if pps.is_empty() { vec![1] } else { pps.to_vec() };
+    let mut out = Vec::with_capacity(tps.len() * pps.len());
+    for &pp in &pps {
+        for &tp in &tps {
+            out.push(Some(ParallelSpec::new(tp, pp)));
+        }
+    }
+    out
+}
+
+/// One phase's sharded timing decomposition.
+struct ShardedPhase {
+    seconds: f64,
+    compute_bound: bool,
+    /// Exposed link time inside `seconds`.
+    link_s: f64,
+    /// Bytes that crossed the device-to-device link.
+    link_bytes: f64,
+}
+
+/// Time one phase under a TP×PP mapping.
+///
+/// `flops`/`bytes` are the full (unsharded) phase cost; `act_bytes` the
+/// activation share of `bytes` (replicated across TP ranks, split
+/// across PP stages); `coll_bytes` the per-layer all-reduce payload;
+/// `microbatches` the PP pipelining granularity (1 = no overlap).
+#[allow(clippy::too_many_arguments)]
+fn sharded_phase(rig: &Rig, par: &ParallelSpec, flops: f64, bytes: f64,
+                 act_bytes: f64, coll_bytes: f64, n_collectives: usize,
+                 boundary_bytes_per_hop: f64, microbatches: usize,
+                 flops_rate: f64, overhead_s: f64, pipelined: bool)
+                 -> ShardedPhase {
+    let tp = par.tp as f64;
+    let pp = par.pp as f64;
+    let ranks = par.n_ranks() as f64;
+    let d = &rig.device;
+
+    // roofline work of one rank
+    let (rank_flops, rank_bytes, bubble) = if pipelined {
+        // each stage streams all microbatches through its layer slice
+        let m = microbatches.max(1) as f64;
+        (flops / ranks,
+         (bytes - act_bytes) / ranks + act_bytes / pp,
+         (m + pp - 1.0) / m)
+    } else {
+        // decode: stages run in series, so pp does not shrink the
+        // per-token critical path — only tp does
+        (flops / tp, (bytes - act_bytes) / tp + act_bytes, 1.0)
+    };
+    let t_compute = rank_flops / flops_rate;
+    let t_bytes = rank_bytes / d.achieved_bw();
+    let t_work = t_compute.max(t_bytes) * bubble;
+
+    // TP ring all-reduce per layer over the activations
+    let mut link_s = 0.0;
+    let mut link_bytes = 0.0;
+    if par.tp > 1 {
+        let vol = 2.0 * (tp - 1.0) / tp * coll_bytes;
+        link_s += rig.link.transfer_s(vol, n_collectives as f64)
+            * (1.0 - rig.overlap);
+        link_bytes += vol;
+    }
+    // PP stage-boundary activation sends
+    if par.pp > 1 {
+        let hops = pp - 1.0;
+        let vol = hops * boundary_bytes_per_hop;
+        let calls = hops * microbatches.max(1) as f64;
+        link_s += rig.link.transfer_s(vol, calls) * (1.0 - rig.overlap);
+        link_bytes += vol;
+    }
+
+    // every stage pays its own launch overhead on the critical path
+    let seconds = t_work + link_s + pp * overhead_s;
+    ShardedPhase {
+        seconds,
+        compute_bound: t_compute >= t_bytes,
+        link_s,
+        link_bytes,
+    }
+}
+
+/// Simulate one workload under an explicit TP×PP mapping. The trivial
+/// mapping on a single-device rig reproduces [`simulate_quant`]
+/// bit-for-bit; everything else runs the sharded cost model.
+pub fn simulate_parallel(arch: &ModelArch, rig: &Rig, w: &Workload,
+                         scheme: &QuantScheme, par: &ParallelSpec)
+                         -> SimResult {
+    if par.is_single() && rig.n_devices == 1 {
+        return simulate_quant(arch, rig, w, scheme);
+    }
+
+    let eb = EffectiveBytes::new(arch, *scheme);
+    let d = &rig.device;
+    let dt = arch.dtype.bytes() as f64;
+    let layers = arch.n_layers() as f64;
+    let n_coll = 2 * arch.n_layers();
+
+    let dyn_joules = |flops: f64, bytes: f64, link_bytes: f64| -> f64 {
+        (flops * d.pj_per_flop + bytes * d.pj_per_byte
+         + link_bytes * rig.link.pj_per_byte)
+            * 1e-12
+    };
+
+    // ---- TTFT: pipelined, TP-sharded prefill ------------------------
+    let pc = prefill_cost_quant(&eb, w.batch, w.prompt_len);
+    let prompt_tokens = (w.batch * w.prompt_len) as f64;
+    // the activation share of the prefill byte stream (same formula as
+    // cost::prefill_cost_quant's residual-stream term)
+    let act_bytes = 2.0 * layers * prompt_tokens * arch.d_model as f64 * dt;
+    let sp = sharded_phase(
+        rig, par, pc.flops, pc.bytes, act_bytes,
+        collective_bytes(arch, w.batch, w.prompt_len), n_coll,
+        prompt_tokens * arch.d_model as f64 * dt, w.batch.max(1),
+        d.achieved_flops(), d.prefill_overhead_s, true);
+    let ttft = phase_from_energy(
+        rig, sp.seconds, dyn_joules(pc.flops, pc.bytes, sp.link_bytes),
+        sp.compute_bound);
+    let mut interconnect_seconds = sp.link_s;
+    let mut interconnect_joules =
+        sp.link_bytes * rig.link.pj_per_byte * 1e-12;
+
+    // ---- decode steps with growing context --------------------------
+    let mut step_seconds = Vec::with_capacity(w.gen_len);
+    let mut decode_joules_total = 0.0;
+    let mut mid_sim: Option<PhaseSim> = None;
+    for t in 0..w.gen_len {
+        let ctx = w.prompt_len + t;
+        let dc = decode_cost_quant(&eb, w.batch, ctx);
+        let sd = sharded_phase(
+            rig, par, dc.flops, dc.bytes, 0.0,
+            collective_bytes(arch, w.batch, 1), n_coll,
+            w.batch as f64 * arch.d_model as f64 * dt, 1,
+            d.achieved_flops_decode(), d.decode_overhead_s, false);
+        let sim = phase_from_energy(
+            rig, sd.seconds, dyn_joules(dc.flops, dc.bytes, sd.link_bytes),
+            sd.compute_bound);
+        step_seconds.push(sim.seconds);
+        decode_joules_total += sim.joules;
+        interconnect_seconds += sd.link_s;
+        interconnect_joules += sd.link_bytes * rig.link.pj_per_byte * 1e-12;
+        if t == w.gen_len / 2 {
+            mid_sim = Some(sim);
+        }
+    }
+    let tpot_mean = step_seconds.iter().sum::<f64>()
+        / step_seconds.len().max(1) as f64;
+    let mid = mid_sim.unwrap_or(ttft);
+    let tpot = PhaseSim {
+        seconds: tpot_mean,
+        watts: mid.watts,
+        joules: mid.watts * tpot_mean,
+        utilization: mid.utilization,
+        compute_bound: mid.compute_bound,
+    };
+
+    let ttlt_seconds = ttft.seconds + step_seconds.iter().sum::<f64>();
+    SimResult {
+        ttft,
+        tpot,
+        step_seconds,
+        ttlt_seconds,
+        ttlt_joules: ttft.joules + decode_joules_total,
+        interconnect_seconds,
+        interconnect_joules,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::device::{a6000, a6000_x4, a6000_x4_nvlink, Rig};
+    use crate::models::registry::{llama31_8b, llama31_70b};
+
+    fn native(arch: &ModelArch) -> QuantScheme {
+        QuantScheme::native(arch.dtype)
+    }
+
+    #[test]
+    fn trivial_mapping_is_bit_identical_to_unsharded() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(2, 256, 64);
+        let a = simulate_quant(&arch, &rig, &w, &native(&arch));
+        let b = simulate_parallel(&arch, &rig, &w, &native(&arch),
+                                  &ParallelSpec::single());
+        assert_eq!(a.table_row(), b.table_row());
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(b.interconnect_seconds, 0.0);
+        assert_eq!(b.interconnect_joules, 0.0);
+    }
+
+    #[test]
+    fn tp_shards_decode_and_pays_collectives() {
+        let arch = llama31_8b();
+        let rig = a6000_x4();
+        let w = Workload::new(1, 512, 64);
+        let s = native(&arch);
+        let tp1 = simulate_parallel(&arch, &rig, &w, &s,
+                                    &ParallelSpec::new(1, 1));
+        let tp4 = simulate_parallel(&arch, &rig, &w, &s,
+                                    &ParallelSpec::new(4, 1));
+        // 4-way sharded weight stream: decode speeds up despite the
+        // PCIe collectives...
+        assert!(tp4.tpot.seconds < tp1.tpot.seconds,
+                "{} vs {}", tp4.tpot.seconds, tp1.tpot.seconds);
+        // ...but not by 4x — the exposed all-reduce time is real
+        assert!(tp4.tpot.seconds > tp1.tpot.seconds / 4.0);
+        assert!(tp4.interconnect_seconds > 0.0);
+        assert!(tp4.interconnect_joules > 0.0);
+        assert_eq!(tp1.interconnect_seconds, 0.0, "tp1 has no collectives");
+    }
+
+    #[test]
+    fn nvlink_never_slower_than_pcie_at_fixed_tp() {
+        let arch = llama31_8b();
+        let w = Workload::new(4, 512, 32);
+        let s = native(&arch);
+        for tp in [2usize, 4] {
+            let par = ParallelSpec::new(tp, 1);
+            let pcie = simulate_parallel(&arch, &a6000_x4(), &w, &s, &par);
+            let nv = simulate_parallel(&arch, &a6000_x4_nvlink(), &w, &s,
+                                       &par);
+            assert!(nv.tpot.seconds <= pcie.tpot.seconds, "tp={tp}");
+            assert!(nv.ttft.seconds <= pcie.ttft.seconds, "tp={tp}");
+        }
+    }
+
+    #[test]
+    fn pp_pipelines_prefill_but_not_decode() {
+        let arch = llama31_70b();
+        let rig = a6000_x4();
+        let s = native(&arch);
+        // a deep batch gives the pipeline microbatches to fill with
+        let w = Workload::new(16, 512, 16);
+        let pp1 = simulate_parallel(&arch, &rig, &w, &s,
+                                    &ParallelSpec::new(1, 1));
+        let pp4 = simulate_parallel(&arch, &rig, &w, &s,
+                                    &ParallelSpec::new(1, 4));
+        // 4 stages, 16 microbatches: bubble factor 19/16, so prefill
+        // lands well under the single-device time
+        assert!(pp4.ttft.seconds < pp1.ttft.seconds / 2.0,
+                "{} vs {}", pp4.ttft.seconds, pp1.ttft.seconds);
+        // decode gains nothing from pipelining (stages in series, plus
+        // boundary hops and per-stage launches)
+        assert!(pp4.tpot.seconds >= pp1.tpot.seconds * 0.95,
+                "{} vs {}", pp4.tpot.seconds, pp1.tpot.seconds);
+    }
+
+    #[test]
+    fn validate_for_rejects_oversubscribed_mappings() {
+        let arch = llama31_8b();
+        ParallelSpec::new(4, 1).validate_for(&arch, &a6000_x4()).unwrap();
+        ParallelSpec::new(2, 2).validate_for(&arch, &a6000_x4()).unwrap();
+        let err = ParallelSpec::new(4, 2)
+            .validate_for(&arch, &a6000_x4())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("needs 8 device(s)"), "{err}");
+        assert!(ParallelSpec::new(2, 1)
+                    .validate_for(&arch, &Rig::single(a6000()))
+                    .is_err());
+        assert!(ParallelSpec::new(0, 1)
+                    .validate_for(&arch, &a6000_x4())
+                    .is_err());
+        // pp cannot exceed the layer stack
+        assert!(ParallelSpec::new(1, 33)
+                    .validate_for(&arch, &a6000_x4())
+                    .is_err());
+    }
+
+    #[test]
+    fn sharded_energy_includes_the_link() {
+        let arch = llama31_8b();
+        let rig = a6000_x4();
+        let w = Workload::new(8, 256, 32);
+        let s = native(&arch);
+        let tp2 = simulate_parallel(&arch, &rig, &w, &s,
+                                    &ParallelSpec::new(2, 1));
+        let tp4 = simulate_parallel(&arch, &rig, &w, &s,
+                                    &ParallelSpec::new(4, 1));
+        // a wider ring moves more bytes over the link per all-reduce
+        assert!(tp4.interconnect_joules > tp2.interconnect_joules);
+        // and the link's share is part of the request's energy story
+        assert!(tp4.interconnect_joules < tp4.ttlt_joules);
+    }
+}

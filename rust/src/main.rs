@@ -45,24 +45,30 @@ fn run(cmd: Command) -> Result<()> {
             print!("{}", report::render_size_table(&rows, &points, unit));
         }
         Command::Latency { model, device, workload, energy, runs,
-                           quant } => {
+                           quant, parallel } => {
             let mut spec = ProfileSpec::new(&model, &device, workload);
             spec.energy = energy;
             spec.quant = quant;
+            spec.parallel = parallel;
             if let Some(r) = runs {
                 spec.latency_runs = r;
             }
             let outcome = profiler::profile(&spec)?;
-            let title = format!("{} on {}  [{}]", outcome.model,
-                                outcome.device, outcome.workload.label());
+            let par = match parallel {
+                Some(p) => format!("  [{}]", p.label()),
+                None => String::new(),
+            };
+            let title = format!("{} on {}{}  [{}]", outcome.model,
+                                outcome.device, par,
+                                outcome.workload.label());
             print!("{}", report::render_latency_table(&title, &[outcome]));
         }
         Command::Suite { name } => cmd_suite(&name)?,
         Command::Sweep { spec_path, overrides, out, json } => {
             cmd_sweep(spec_path, overrides, out, json)?;
         }
-        Command::Plan { spec, json, out } => {
-            cmd_plan(&spec, json, out)?;
+        Command::Plan { spec, json, out, assert_recommendation } => {
+            cmd_plan(&spec, json, out, assert_recommendation)?;
         }
         Command::Trace { model, device, workload, out } => {
             cmd_trace(&model, &device, &workload, &out)?;
@@ -148,8 +154,8 @@ fn cmd_sweep(spec_path: Option<String>,
     Ok(())
 }
 
-fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>)
-            -> Result<()> {
+fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>,
+            assert_recommendation: bool) -> Result<()> {
     let results = planner::run(spec)?;
     let rendered = planner::report::to_json(&results).to_string();
     if let Some(path) = &out {
@@ -162,6 +168,17 @@ fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>)
     }
     if let Some(path) = &out {
         eprintln!("wrote {path}");
+    }
+    if assert_recommendation {
+        let recommended =
+            results.points.iter().filter(|p| p.recommended).count();
+        anyhow::ensure!(
+            recommended > 0,
+            "--assert-recommendation: no feasible recommended operating \
+             point exists in this plan ({} points, all infeasible)",
+            results.points.len());
+        eprintln!("assert-recommendation: {recommended} recommended \
+                   point(s)");
     }
     Ok(())
 }

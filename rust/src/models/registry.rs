@@ -27,6 +27,29 @@ pub fn llama31_8b() -> ModelArch {
     }
 }
 
+/// Llama-3.1-70B (HF: meta-llama/Llama-3.1-70B) — the sharding
+/// workload: ~141 GB of bf16 weights fit no single profiled device, so
+/// it only runs under an explicit `--tp`/`--pp` mapping (or deep
+/// weight quantization on the 128 GB Thor).
+pub fn llama31_70b() -> ModelArch {
+    ModelArch {
+        name: "llama-3.1-70b",
+        display_name: "Llama-3.1-70B",
+        vocab_size: 128_256,
+        d_model: 8192,
+        layers: uniform_attention(80),
+        attn: AttnSpec { n_heads: 64, n_kv_heads: 8, head_dim: 128,
+                         qkv_bias: false },
+        ffn_dim: 28_672,
+        fused_mlp: true,
+        mlp_gated: true,
+        ssm: None,
+        dtype: Dtype::Bf16,
+        tied_embeddings: false,
+        executable: false,
+    }
+}
+
 /// Qwen-2.5-7B (HF: Qwen/Qwen2.5-7B).
 pub fn qwen25_7b() -> ModelArch {
     ModelArch {
@@ -191,10 +214,10 @@ pub fn elana_small() -> ModelArch {
 
 // ---------------- registry API ----------------
 
-/// Paper-scale models (Tables 2–4).
+/// Paper-scale models (Tables 2–4, plus the 70B sharding workload).
 pub fn paper_models() -> Vec<ModelArch> {
-    vec![llama31_8b(), qwen25_7b(), nemotron_h_8b(), llama32_1b(),
-         qwen25_15b()]
+    vec![llama31_8b(), llama31_70b(), qwen25_7b(), nemotron_h_8b(),
+         llama32_1b(), qwen25_15b()]
 }
 
 /// Executable dev configs (AOT artifacts exist for these).
@@ -251,6 +274,20 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn llama_70b_is_multi_gpu_scale() {
+        let m = llama31_70b();
+        assert_eq!(m.n_layers(), 80);
+        // ~70.6B params, ~141 GB of bf16 weights — bigger than any
+        // single profiled device's memory
+        let params = crate::models::param_count(&m);
+        assert!((70_000_000_000..71_500_000_000).contains(&params),
+                "{params}");
+        let bytes = crate::models::size::model_bytes(&m);
+        assert!(bytes > 140_000_000_000, "{bytes}");
+        assert!(bytes as f64 > 128.0e9, "exceeds even the 128 GB Thor");
     }
 
     #[test]

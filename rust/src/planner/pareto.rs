@@ -1,13 +1,15 @@
-//! Pareto frontier over (latency, energy, effective weight bits).
+//! Pareto frontier over (latency, energy, effective weight bits,
+//! device count).
 //!
-//! The planner's three objectives: minimize decode latency (TPOT),
-//! minimize J/token, and *maximize* effective weight bits — bits serve
-//! as the accuracy proxy, since deeper quantization trades model
-//! quality for speed and energy. A point is on the frontier when no
-//! other point is at least as good on all three axes and strictly
-//! better on one.
+//! The planner's objectives: minimize decode latency (TPOT), minimize
+//! J/token, *maximize* effective weight bits — bits serve as the
+//! accuracy proxy, since deeper quantization trades model quality for
+//! speed and energy — and minimize the devices the mapping occupies
+//! (the parallelism axis: a tp=4 point must buy real latency or energy
+//! to justify 4 GPUs over 1). A point is on the frontier when no other
+//! point is at least as good on all axes and strictly better on one.
 
-/// One candidate operating point, projected onto the three objectives.
+/// One candidate operating point, projected onto the objectives.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Objective {
     /// Caller-side identity (index into the point list).
@@ -18,6 +20,9 @@ pub struct Objective {
     pub j_token: f64,
     /// Mean stored bits per weight (maximize — accuracy proxy).
     pub eff_bits: f64,
+    /// Devices the mapping occupies, tp·pp (minimize — the cost axis;
+    /// 1 for legacy whole-rig points).
+    pub ranks: usize,
 }
 
 /// Does `a` dominate `b`? (at least as good everywhere, strictly better
@@ -25,10 +30,12 @@ pub struct Objective {
 pub fn dominates(a: &Objective, b: &Objective) -> bool {
     let ge = a.tpot_ms <= b.tpot_ms
         && a.j_token <= b.j_token
-        && a.eff_bits >= b.eff_bits;
+        && a.eff_bits >= b.eff_bits
+        && a.ranks <= b.ranks;
     let strict = a.tpot_ms < b.tpot_ms
         || a.j_token < b.j_token
-        || a.eff_bits > b.eff_bits;
+        || a.eff_bits > b.eff_bits
+        || a.ranks < b.ranks;
     ge && strict
 }
 
@@ -44,7 +51,8 @@ pub fn frontier(points: &[Objective]) -> Vec<usize> {
 
 /// The recommendation rule: among frontier points, the lowest
 /// energy-delay product (J/token × TPOT); ties break toward more bits
-/// (less accuracy risk), then the lower id — fully deterministic.
+/// (less accuracy risk), then fewer devices (less cost), then the
+/// lower id — fully deterministic.
 pub fn recommend(points: &[Objective]) -> Option<usize> {
     let front = frontier(points);
     points
@@ -57,6 +65,7 @@ pub fn recommend(points: &[Objective]) -> Option<usize> {
                 .expect("finite objectives")
                 .then(b.eff_bits.partial_cmp(&a.eff_bits)
                           .expect("finite bits"))
+                .then(a.ranks.cmp(&b.ranks))
                 .then(a.id.cmp(&b.id))
         })
         .map(|p| p.id)
@@ -67,7 +76,8 @@ mod tests {
     use super::*;
 
     fn o(id: usize, tpot: f64, j: f64, bits: f64) -> Objective {
-        Objective { id, tpot_ms: tpot, j_token: j, eff_bits: bits }
+        Objective { id, tpot_ms: tpot, j_token: j, eff_bits: bits,
+                    ranks: 1 }
     }
 
     #[test]
@@ -115,6 +125,23 @@ mod tests {
         let pts = [o(3, 10.0, 2.0, 8.0), o(7, 10.0, 2.0, 8.0)];
         assert_eq!(recommend(&pts), Some(3));
         assert_eq!(recommend(&[]), None);
+    }
+
+    #[test]
+    fn more_gpus_must_buy_something() {
+        // identical latency/energy/bits at tp=4 is dominated by tp=1
+        let one = o(0, 10.0, 2.0, 16.0);
+        let four = Objective { id: 1, ranks: 4, ..one };
+        assert!(dominates(&one, &four));
+        assert_eq!(frontier(&[one, four]), vec![0]);
+        // but a tp=4 point that is faster survives alongside tp=1
+        let fast4 = Objective { id: 2, tpot_ms: 4.0, ranks: 4, ..one };
+        assert_eq!(frontier(&[one, fast4]), vec![0, 2]);
+        // EDP tie at equal bits: fewer devices recommended
+        let tie1 = o(0, 10.0, 2.0, 8.0);
+        let tie4 = Objective { id: 1, tpot_ms: 5.0, j_token: 4.0,
+                               ranks: 4, ..tie1 };
+        assert_eq!(recommend(&[tie1, tie4]), Some(0));
     }
 
     #[test]

@@ -27,15 +27,27 @@ pub fn render_markdown(r: &PlanResults) -> String {
     let s = &r.spec;
     let unit = s.unit;
     let mut out = String::new();
+    let has_par = r.points.iter().any(|p| p.parallel.is_some());
     let _ = writeln!(out, "# elana plan — {}", s.name);
     let _ = writeln!(out);
-    let _ = writeln!(
-        out,
-        "{} operating points = {} models x {} devices x {} schemes x \
-         {} workloads (seed {}, target {} req/s)",
-        r.points.len(), s.models.len(), s.devices.len(), s.quants.len(),
-        s.lens.len(), s.seed, s.target_rps
-    );
+    if has_par {
+        let _ = writeln!(
+            out,
+            "{} operating points = {} models x {} devices x {} schemes \
+             x {} workloads x {} parallelisms (seed {}, target {} req/s)",
+            r.points.len(), s.models.len(), s.devices.len(),
+            s.quants.len(), s.lens.len(), s.parallelisms().len(), s.seed,
+            s.target_rps
+        );
+    } else {
+        let _ = writeln!(
+            out,
+            "{} operating points = {} models x {} devices x {} schemes x \
+             {} workloads (seed {}, target {} req/s)",
+            r.points.len(), s.models.len(), s.devices.len(), s.quants.len(),
+            s.lens.len(), s.seed, s.target_rps
+        );
+    }
     let _ = writeln!(
         out,
         "memory model: quantized weights + KV/state cache + activations \
@@ -58,28 +70,46 @@ pub fn render_markdown(r: &PlanResults) -> String {
                 first.model_display, first.device_display,
                 unit.format(first.fit.mem_bytes)
             );
-            let _ = writeln!(
-                out,
-                "| Quant | Bits | Weights | Workload | Max batch \
-                 | Max ctx@b1 | Req. mem | TTFT ms | TPOT ms | TTLT ms \
-                 | J/Token | Pareto |"
-            );
-            let _ = writeln!(
-                out,
-                "|---|---:|---:|---|---:|---:|---:|---:|---:|---:\
-                 |---:|---:|"
-            );
+            if has_par {
+                let _ = writeln!(
+                    out,
+                    "| Quant | Par | Bits | Weights | Workload \
+                     | Max batch | Max ctx@b1 | Req. mem/GPU | TTFT ms \
+                     | TPOT ms | TTLT ms | J/Token | Pareto |"
+                );
+                let _ = writeln!(
+                    out,
+                    "|---|---|---:|---:|---|---:|---:|---:|---:|---:\
+                     |---:|---:|---:|"
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "| Quant | Bits | Weights | Workload | Max batch \
+                     | Max ctx@b1 | Req. mem | TTFT ms | TPOT ms \
+                     | TTLT ms | J/Token | Pareto |"
+                );
+                let _ = writeln!(
+                    out,
+                    "|---|---:|---:|---|---:|---:|---:|---:|---:|---:\
+                     |---:|---:|"
+                );
+            }
             for &p in &group {
-                let _ = writeln!(out, "{}", point_row(p, unit));
+                let _ = writeln!(out, "{}", point_row(p, unit, has_par));
             }
             match group.iter().find(|p| p.recommended) {
                 Some(rec) => {
                     let o = rec.outcome.as_ref().expect("evaluated");
+                    let par = match rec.parallel {
+                        Some(pr) => format!(" {}", pr.label()),
+                        None => String::new(),
+                    };
                     let _ = writeln!(
                         out,
-                        "\n**Recommended:** {} @ {} — TPOT {:.2} ms, \
+                        "\n**Recommended:** {}{} @ {} — TPOT {:.2} ms, \
                          {:.3} J/token, fits in {}",
-                        rec.quant, rec.workload().label(), o.tpot_ms,
+                        rec.quant, par, rec.workload().label(), o.tpot_ms,
                         o.j_token, unit.format(rec.required_bytes())
                     );
                     if let Some(f) = rec.fleet {
@@ -112,27 +142,37 @@ pub fn render_markdown(r: &PlanResults) -> String {
     out
 }
 
-/// One markdown table row.
-fn point_row(p: &PlanPoint, unit: MemUnit) -> String {
+/// One markdown table row. `with_par` adds the TP×PP column (only
+/// rendered when the plan has a parallelism axis, so legacy reports
+/// stay byte-identical).
+fn point_row(p: &PlanPoint, unit: MemUnit, with_par: bool) -> String {
     let quant = if p.recommended {
         format!("**{}**", p.quant)
     } else {
         p.quant.clone()
     };
+    let par = if with_par {
+        format!(" {} |", match p.parallel {
+            Some(pr) => pr.label(),
+            None => "—".to_string(),
+        })
+    } else {
+        String::new()
+    };
     match &p.outcome {
         Some(o) => format!(
-            "| {} | {:.2} | {} | {} | {} | {} | {} | {:.2} | {:.2} \
+            "| {} |{} {:.2} | {} | {} | {} | {} | {} | {:.2} | {:.2} \
              | {:.2} | {:.2} | {} |",
-            quant, p.fit.eff_weight_bits,
+            quant, par, p.fit.eff_weight_bits,
             unit.format(p.fit.weight_bytes), p.workload().label(),
             p.batch, p.max_ctx_b1, unit.format(p.required_bytes()),
             o.ttft_ms, o.tpot_ms, o.ttlt_ms, o.j_token,
             if p.pareto { "*" } else { "" }
         ),
         None => format!(
-            "| {} | {:.2} | {} | L={}+{} | does not fit | {} | — | — \
+            "| {} |{} {:.2} | {} | L={}+{} | does not fit | {} | — | — \
              | — | — | — | |",
-            quant, p.fit.eff_weight_bits,
+            quant, par, p.fit.eff_weight_bits,
             unit.format(p.fit.weight_bytes), p.prompt_len, p.gen_len,
             p.max_ctx_b1
         ),
@@ -144,7 +184,7 @@ fn point_row(p: &PlanPoint, unit: MemUnit) -> String {
 pub fn to_json(r: &PlanResults) -> Json {
     let s = &r.spec;
     let points: Vec<Json> = r.points.iter().map(point_json).collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("plan", Json::str(s.name.clone())),
         ("seed", Json::str(s.seed.to_string())),
         ("target_rps", Json::num(s.target_rps)),
@@ -168,7 +208,16 @@ pub fn to_json(r: &PlanResults) -> Json {
                    .collect())),
         ("n_points", Json::num(r.points.len() as f64)),
         ("points", Json::Arr(points)),
-    ])
+    ];
+    // the parallel axis appears only when requested, so legacy
+    // artifacts stay byte-identical
+    if !s.tps.is_empty() || !s.pps.is_empty() {
+        fields.push(("tps", Json::Arr(
+            s.tps.iter().map(|&t| Json::num(t as f64)).collect())));
+        fields.push(("pps", Json::Arr(
+            s.pps.iter().map(|&p| Json::num(p as f64)).collect())));
+    }
+    Json::obj(fields)
 }
 
 fn point_json(p: &PlanPoint) -> Json {
@@ -195,6 +244,11 @@ fn point_json(p: &PlanPoint) -> Json {
             None => Json::Null,
         }),
     ];
+    if let Some(pr) = p.parallel {
+        fields.push(("tp", Json::num(pr.tp as f64)));
+        fields.push(("pp", Json::num(pr.pp as f64)));
+        fields.push(("ranks", Json::num(pr.n_ranks() as f64)));
+    }
     if let Some(f) = p.fleet {
         fields.push(("fleet", Json::obj(vec![
             ("target_rps", Json::num(f.target_rps)),
@@ -241,6 +295,48 @@ mod tests {
         assert_eq!(text.matches("**Recommended:**").count(), 2, "{text}");
         assert!(text.contains("fleet @ 10 req/s:"), "{text}");
         assert!(text.contains("| Pareto |"), "{text}");
+    }
+
+    #[test]
+    fn parallel_axis_renders_in_markdown_and_json() {
+        let spec = PlanSpec {
+            models: vec!["llama-3.1-70b".into()],
+            devices: vec!["4xa6000".into()],
+            quants: vec!["bf16".into()],
+            lens: vec![(512, 512)],
+            tps: vec![1, 4],
+            ..PlanSpec::default()
+        };
+        let r = runner::run(&spec).unwrap();
+        let text = render_markdown(&r);
+        assert!(text.contains("| Par |"), "{text}");
+        assert!(text.contains("tp1·pp1"), "{text}");
+        assert!(text.contains("tp4·pp1"), "{text}");
+        assert!(text.contains("x 2 parallelisms"), "{text}");
+        assert!(text.contains("does not fit"), "{text}");
+        assert!(text.contains("**Recommended:** bf16 tp4·pp1 @"),
+                "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        assert_eq!(v.get("tps").unwrap().as_arr().unwrap().len(), 2);
+        let pts = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts[0].get("tp").unwrap().as_usize(), Some(1));
+        assert_eq!(pts[1].get("tp").unwrap().as_usize(), Some(4));
+        assert_eq!(pts[1].get("ranks").unwrap().as_usize(), Some(4));
+        assert_eq!(pts[0].get("fits").unwrap().as_bool(), Some(false));
+        assert_eq!(pts[1].get("fits").unwrap().as_bool(), Some(true));
+        // legacy plans carry no parallel keys at all
+        let legacy = runner::run(&PlanSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into()],
+            quants: vec!["bf16".into()],
+            lens: vec![(512, 512)],
+            ..PlanSpec::default()
+        }).unwrap();
+        let lv = Json::parse(&to_json(&legacy).to_string()).unwrap();
+        assert!(lv.get("tps").is_none());
+        let lp = lv.get("points").unwrap().as_arr().unwrap();
+        assert!(lp[0].get("tp").is_none());
+        assert!(!render_markdown(&legacy).contains("| Par |"));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::hwsim::{device, Workload};
+use crate::hwsim::{device, ParallelSpec, Workload};
 use crate::models::{self, quant};
 use crate::profiler::{self, ProfileOutcome, ProfileSpec};
 use crate::sweep::pool;
@@ -39,7 +39,10 @@ pub struct PlanPoint {
     pub quant: String,
     pub prompt_len: usize,
     pub gen_len: usize,
-    /// The memory model the point was solved under.
+    /// Explicit TP×PP mapping of the point (`None` = legacy whole-rig).
+    pub parallel: Option<ParallelSpec>,
+    /// The memory model the point was solved under (per-rank when
+    /// `parallel` is set).
     pub fit: FitModel,
     /// Solved max batch at context `prompt_len + gen_len` (0 = the
     /// point does not fit at all).
@@ -102,8 +105,14 @@ impl PlanResults {
     }
 }
 
-/// Expand the spec into solved (but not yet evaluated) points.
+/// Expand the spec into solved (but not yet evaluated) points. The
+/// parallelism axis is innermost so parallel-free specs keep the exact
+/// point indices (and per-point seeds) of the pre-parallelism planner.
+/// A mapping the rig cannot host (tp·pp > devices) solves to an
+/// infeasible point rather than an error, so rectangular grids over
+/// mixed device lists stay runnable.
 fn expand(spec: &PlanSpec) -> Vec<PlanPoint> {
+    let pars = spec.parallelisms();
     let mut points = Vec::with_capacity(spec.n_points());
     for m in &spec.models {
         let arch = models::lookup(m).expect("validated model");
@@ -112,27 +121,45 @@ fn expand(spec: &PlanSpec) -> Vec<PlanPoint> {
             for q in &spec.quants {
                 let scheme = quant::parse_token(q)
                     .expect("validated quant token");
-                let fit = FitModel::new(&arch, scheme, &rig);
                 for &(p, g) in &spec.lens {
-                    let index = points.len();
-                    points.push(PlanPoint {
-                        index,
-                        model: m.clone(),
-                        model_display: arch.display_name.to_string(),
-                        device: d.clone(),
-                        device_display: rig.name(),
-                        quant: q.clone(),
-                        prompt_len: p,
-                        gen_len: g,
-                        batch: fit.max_batch(p + g),
-                        max_ctx_b1: fit.max_ctx(1),
-                        fit: fit.clone(),
-                        seed: Rng::mix(spec.seed, index as u64),
-                        outcome: None,
-                        pareto: false,
-                        recommended: false,
-                        fleet: None,
-                    });
+                    for &par in &pars {
+                        let fit = FitModel::with_parallel(&arch, scheme,
+                                                          &rig, par);
+                        let hostable = match par {
+                            None => true,
+                            Some(pr) => {
+                                pr.validate_for(&arch, &rig).is_ok()
+                            }
+                        };
+                        let index = points.len();
+                        points.push(PlanPoint {
+                            index,
+                            model: m.clone(),
+                            model_display: arch.display_name.to_string(),
+                            device: d.clone(),
+                            device_display: rig.name(),
+                            quant: q.clone(),
+                            prompt_len: p,
+                            gen_len: g,
+                            parallel: par,
+                            batch: if hostable {
+                                fit.max_batch(p + g)
+                            } else {
+                                0
+                            },
+                            max_ctx_b1: if hostable {
+                                fit.max_ctx(1)
+                            } else {
+                                0
+                            },
+                            fit,
+                            seed: Rng::mix(spec.seed, index as u64),
+                            outcome: None,
+                            pareto: false,
+                            recommended: false,
+                            fleet: None,
+                        });
+                    }
                 }
             }
         }
@@ -152,13 +179,18 @@ fn evaluate(point: &PlanPoint, spec: &PlanSpec)
     ps.mem_unit = spec.unit;
     ps.seed = point.seed;
     ps.quant = quant::parse_token(&point.quant)?;
+    ps.parallel = point.parallel;
     let mut backend = crate::backend::from_spec(&ps)?;
     profiler::session::profile_backend(backend.as_mut(), &ps)
         .map(Some)
         .with_context(|| {
-            format!("plan point #{} ({} on {}, {}, quant {})",
+            format!("plan point #{} ({} on {}, {}, quant {}{})",
                     point.index, point.model, point.device,
-                    point.workload().label(), point.quant)
+                    point.workload().label(), point.quant,
+                    match point.parallel {
+                        Some(p) => format!(", {}", p.label()),
+                        None => String::new(),
+                    })
         })
 }
 
@@ -179,6 +211,9 @@ fn annotate(spec: &PlanSpec, points: &mut [PlanPoint]) {
                         tpot_ms: o.tpot_ms,
                         j_token: o.j_token,
                         eff_bits: p.fit.eff_weight_bits,
+                        ranks: p.parallel
+                            .map(|pr| pr.n_ranks())
+                            .unwrap_or(1),
                     }
                 })
                 .collect();
@@ -290,6 +325,38 @@ mod tests {
         assert_eq!(w4.outcome.as_ref().unwrap().quant.as_deref(),
                    Some("w4a16"));
         assert!(w4.batch > b16.batch, "4-bit weights free cache room");
+    }
+
+    #[test]
+    fn tp_axis_opens_the_70b_and_marks_unhostable_mappings() {
+        let spec = PlanSpec {
+            models: vec!["llama-3.1-70b".into()],
+            devices: vec!["4xa6000".into(), "a6000".into()],
+            quants: vec!["bf16".into()],
+            lens: vec![(512, 512)],
+            tps: vec![1, 2, 4],
+            ..PlanSpec::default()
+        };
+        let r = run(&spec).unwrap();
+        assert_eq!(r.len(), 6);
+        let rig4 = r.group("llama-3.1-70b", "4xa6000");
+        let (tp1, tp2, tp4) = (rig4[0], rig4[1], rig4[2]);
+        assert_eq!(tp1.parallel.unwrap().tp, 1);
+        assert_eq!(tp4.parallel.unwrap().tp, 4);
+        // the acceptance story: infeasible at tp=1, feasible at tp=4
+        assert!(!tp1.fits(), "141 GB of weights on one 48 GB card");
+        assert!(tp1.outcome.is_none());
+        assert!(!tp2.fits(), "70 GB per rank still does not fit");
+        assert!(tp4.fits(), "35 GB per rank fits");
+        let o = tp4.outcome.as_ref().expect("feasible => evaluated");
+        assert!(o.tpot_ms > 0.0 && o.j_token > 0.0);
+        assert!(tp4.recommended, "only feasible point in the group");
+        // per-rank residency respects one device's memory
+        assert!(tp4.required_bytes() <= tp4.fit.mem_bytes);
+        // a single-card rig cannot host tp>1 at all: marked infeasible,
+        // not an error
+        let single = r.group("llama-3.1-70b", "a6000");
+        assert!(single.iter().all(|p| !p.fits()));
     }
 
     #[test]

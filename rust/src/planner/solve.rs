@@ -19,7 +19,7 @@
 //! workspace per device. Everything is integer/closed-form — no search
 //! inside the hot path — and deterministic.
 
-use crate::hwsim::Rig;
+use crate::hwsim::{ParallelSpec, Rig};
 use crate::models::arch::ModelArch;
 use crate::models::{EffectiveBytes, QuantScheme};
 
@@ -56,28 +56,60 @@ pub struct FitModel {
     pub act_bytes_per_token: u64,
     /// Mean stored bits per weight under the scheme.
     pub eff_weight_bits: f64,
+    /// Devices this fit is solved per (1 for the legacy whole-rig
+    /// aggregate; `tp·pp` for an explicit sharding, where every byte
+    /// field above is *per rank* and the budget is one device's).
+    pub ranks: usize,
 }
 
 impl FitModel {
-    /// Build the fit model; `scheme = None` means the native dtype.
+    /// Build the legacy whole-rig fit model; `scheme = None` means the
+    /// native dtype.
     pub fn new(arch: &ModelArch, scheme: Option<QuantScheme>, rig: &Rig)
                -> FitModel {
+        FitModel::with_parallel(arch, scheme, rig, None)
+    }
+
+    /// Build the fit model under an optional explicit TP×PP mapping.
+    ///
+    /// * `None` — the legacy aggregate: whole-rig capacity vs the full
+    ///   model (the paper's opaque `4xa6000` accounting), unchanged.
+    /// * `Some(p)` — per-rank: one device's capacity (minus headroom
+    ///   and one runtime reserve) vs a `1/(tp·pp)` shard of the weights
+    ///   and KV/state cache. Activations stay whole — the residual
+    ///   stream is replicated across TP ranks.
+    pub fn with_parallel(arch: &ModelArch, scheme: Option<QuantScheme>,
+                         rig: &Rig, par: Option<ParallelSpec>)
+                         -> FitModel {
         let eb = EffectiveBytes::resolve(arch, scheme);
-        let mem_bytes = rig.mem_bytes();
+        let ranks = par.map(|p| p.n_ranks()).unwrap_or(1).max(1);
+        let (mem_bytes, reserve_devices) = match par {
+            None => (rig.mem_bytes(), rig.n_devices as u64),
+            Some(_) => ((rig.device.mem_gb * 1e9) as u64, 1),
+        };
         let headroom = (mem_bytes as f64 * HEADROOM_FRAC) as u64;
-        let reserve = rig.n_devices as u64 * RUNTIME_RESERVE_BYTES;
+        let reserve = reserve_devices * RUNTIME_RESERVE_BYTES;
         let budget_bytes = mem_bytes
             .saturating_sub(headroom)
             .saturating_sub(reserve);
+        let shard = |bytes: u64| -> u64 {
+            if par.is_some() {
+                bytes.div_euclid(ranks as u64)
+                    + u64::from(bytes % ranks as u64 != 0)
+            } else {
+                bytes
+            }
+        };
         FitModel {
             mem_bytes,
             budget_bytes,
-            weight_bytes: eb.weight_bytes(),
-            kv_bytes_per_token: eb.kv_bytes_per_token(),
-            state_bytes_per_seq: eb.state_bytes_per_seq(),
+            weight_bytes: shard(eb.weight_bytes()),
+            kv_bytes_per_token: shard(eb.kv_bytes_per_token()),
+            state_bytes_per_seq: shard(eb.state_bytes_per_seq()),
             act_bytes_per_token: 2 * arch.d_model as u64
                 * arch.dtype.bytes() as u64,
             eff_weight_bits: eb.effective_weight_bits(),
+            ranks,
         }
     }
 
@@ -226,6 +258,46 @@ mod tests {
         assert!(q4.max_batch(2048) > 2 * b16.max_batch(2048));
         assert!(q4.max_ctx(8) > 2 * b16.max_ctx(8));
         assert!(q4.eff_weight_bits < b16.eff_weight_bits);
+    }
+
+    #[test]
+    fn per_rank_fit_opens_the_70b_on_4xa6000() {
+        let arch = crate::models::registry::llama31_70b();
+        let rig = device::a6000_x4();
+        // tp=1: one 48 GB card cannot hold 141 GB of bf16 weights
+        let tp1 = FitModel::with_parallel(
+            &arch, Some(bf16()), &rig,
+            Some(crate::hwsim::ParallelSpec::new(1, 1)));
+        assert_eq!(tp1.max_batch(1024), 0);
+        assert!(!tp1.fits(1, 128));
+        // tp=4: ~35 GB of weights per rank + sharded KV fit comfortably
+        let tp4 = FitModel::with_parallel(
+            &arch, Some(bf16()), &rig,
+            Some(crate::hwsim::ParallelSpec::new(4, 1)));
+        assert!(tp4.fits(1, 1024));
+        assert!(tp4.max_batch(1024) >= 1, "{}", tp4.max_batch(1024));
+        assert_eq!(tp4.ranks, 4);
+        // per-rank capacity is one device's, not the rig aggregate
+        assert_eq!(tp4.mem_bytes, 48_000_000_000);
+        // legacy aggregate accounting is untouched
+        let legacy = FitModel::new(&arch, Some(bf16()), &rig);
+        assert_eq!(legacy.mem_bytes, 192_000_000_000);
+        assert_eq!(legacy.ranks, 1);
+    }
+
+    #[test]
+    fn per_rank_bytes_monotone_nonincreasing_in_tp() {
+        let arch = llama31_8b();
+        let rig = device::h100_x8();
+        let mut last = u64::MAX;
+        for tp in [1usize, 2, 4, 8] {
+            let fm = FitModel::with_parallel(
+                &arch, Some(bf16()), &rig,
+                Some(crate::hwsim::ParallelSpec::new(tp, 1)));
+            let req = fm.required_bytes(4, 2048);
+            assert!(req <= last, "tp={tp}: {req} > {last}");
+            last = req;
+        }
     }
 
     #[test]

@@ -8,7 +8,8 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::hwsim::device;
+pub use crate::hwsim::parallel::expand_parallelisms;
+use crate::hwsim::{device, ParallelSpec};
 use crate::models::{self, quant};
 use crate::util::units::MemUnit;
 
@@ -33,6 +34,12 @@ pub struct PlanSpec {
     /// (prompt_len, gen_len) operating contexts — the solver finds the
     /// max batch that fits each.
     pub lens: Vec<(usize, usize)>,
+    /// Tensor-parallel degrees to plan (`--tp 1,2,4`). Empty = the
+    /// legacy whole-rig accounting, bit-identical to the
+    /// pre-parallelism planner.
+    pub tps: Vec<usize>,
+    /// Pipeline-parallel degrees to plan (`--pp 1,2`). Empty = legacy.
+    pub pps: Vec<usize>,
     /// Fleet-sizing target request rate, requests/s.
     pub target_rps: f64,
     /// Measure energy through the seeded sensor-playback pipeline
@@ -50,9 +57,13 @@ impl Default for PlanSpec {
     fn default() -> PlanSpec {
         PlanSpec {
             name: "plan".to_string(),
+            // Table 2 models plus the 70B sharding workload — the model
+            // that makes `--tp` matter on `4xa6000`.
             models: crate::profiler::size::TABLE2_MODELS
                 .iter()
-                .map(|s| s.to_string())
+                .copied()
+                .chain(["llama-3.1-70b"])
+                .map(str::to_string)
                 .collect(),
             devices: device::all_rig_names()
                 .iter()
@@ -63,6 +74,8 @@ impl Default for PlanSpec {
                 .map(|s| s.to_string())
                 .collect(),
             lens: DEFAULT_LENS.to_vec(),
+            tps: Vec::new(),
+            pps: Vec::new(),
             target_rps: DEFAULT_TARGET_RPS,
             energy: true,
             unit: MemUnit::Si,
@@ -73,10 +86,19 @@ impl Default for PlanSpec {
 }
 
 impl PlanSpec {
+    /// The TP×PP mappings every (model, device, quant, len) cell
+    /// expands over: `[None]` (legacy whole-rig) when no parallel axis
+    /// was given, the pp-major cross product otherwise. The axis is
+    /// innermost, so parallel-free specs keep the exact point indices
+    /// (and thus per-point seeds) of the pre-parallelism planner.
+    pub fn parallelisms(&self) -> Vec<Option<ParallelSpec>> {
+        expand_parallelisms(&self.tps, &self.pps)
+    }
+
     /// Number of operating points the plan expands to.
     pub fn n_points(&self) -> usize {
         self.models.len() * self.devices.len() * self.quants.len()
-            * self.lens.len()
+            * self.lens.len() * self.parallelisms().len()
     }
 
     /// Validate every axis against the registries before solving.
@@ -106,6 +128,12 @@ impl PlanSpec {
             ensure!(p >= 1 && g >= 1,
                     "workload lengths must be >= 1 (got {p}+{g})");
         }
+        for &tp in &self.tps {
+            ensure!(tp >= 1, "tensor-parallel degrees must be >= 1");
+        }
+        for &pp in &self.pps {
+            ensure!(pp >= 1, "pipeline-parallel degrees must be >= 1");
+        }
         ensure!(self.target_rps > 0.0 && self.target_rps.is_finite(),
                 "target rate must be positive (got {})", self.target_rps);
         Ok(())
@@ -120,12 +148,40 @@ mod tests {
     fn default_spec_covers_table2_times_all_rigs_and_schemes() {
         let s = PlanSpec::default();
         s.validate().unwrap();
-        assert_eq!(s.models.len(), 3);
-        assert_eq!(s.devices.len(), 6);
+        assert_eq!(s.models.len(), 4, "Table 2 trio + the 70B");
+        assert_eq!(s.models[3], "llama-3.1-70b");
+        assert_eq!(s.devices.len(), 9);
         assert_eq!(s.quants.len(), 4);
-        assert_eq!(s.n_points(), 3 * 6 * 4 * 2);
+        assert_eq!(s.n_points(), 4 * 9 * 4 * 2);
+        assert!(s.tps.is_empty() && s.pps.is_empty());
+        assert_eq!(s.parallelisms(), vec![None]);
         assert!(s.energy);
         assert_eq!(s.workers, 0);
+    }
+
+    #[test]
+    fn parallel_axis_expands_tp_innermost() {
+        let pars = expand_parallelisms(&[1, 2, 4], &[]);
+        assert_eq!(pars.len(), 3);
+        assert_eq!(pars[0], Some(ParallelSpec::new(1, 1)));
+        assert_eq!(pars[2], Some(ParallelSpec::new(4, 1)));
+        let pars = expand_parallelisms(&[1, 2], &[1, 2]);
+        assert_eq!(pars.len(), 4);
+        // pp major, tp minor
+        assert_eq!(pars[1], Some(ParallelSpec::new(2, 1)));
+        assert_eq!(pars[2], Some(ParallelSpec::new(1, 2)));
+        // --pp alone defaults tp to 1
+        let pars = expand_parallelisms(&[], &[2]);
+        assert_eq!(pars, vec![Some(ParallelSpec::new(1, 2))]);
+        // the axis multiplies the point count
+        let s = PlanSpec { tps: vec![1, 2, 4], ..PlanSpec::default() };
+        s.validate().unwrap();
+        assert_eq!(s.n_points(), 4 * 9 * 4 * 2 * 3);
+        // degenerate degrees are rejected
+        let bad = PlanSpec { tps: vec![0], ..PlanSpec::default() };
+        assert!(bad.validate().is_err());
+        let bad = PlanSpec { pps: vec![0], ..PlanSpec::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

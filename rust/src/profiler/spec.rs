@@ -1,6 +1,6 @@
 //! Profiling run specification (what the CLI builds from its flags).
 
-use crate::hwsim::Workload;
+use crate::hwsim::{ParallelSpec, Workload};
 use crate::models::QuantScheme;
 use crate::util::units::MemUnit;
 
@@ -30,6 +30,11 @@ pub struct ProfileSpec {
     /// native dtype. The real engine executes unquantized artifacts, so
     /// `backend::from_spec` rejects a scheme on the `cpu` device.
     pub quant: Option<QuantScheme>,
+    /// Explicit TP×PP mapping; `None` = the legacy whole-rig behavior
+    /// (bit-identical to the pre-parallelism outputs). The engine runs
+    /// on one device, so `backend::from_spec` rejects `tp·pp > 1` on
+    /// `cpu`.
+    pub parallel: Option<ParallelSpec>,
 }
 
 impl ProfileSpec {
@@ -45,6 +50,7 @@ impl ProfileSpec {
             mem_unit: MemUnit::Si,
             seed: 0,
             quant: None,
+            parallel: None,
         }
     }
 

@@ -6,7 +6,7 @@
 //! pool writes results by it, and reports sort by it. That makes every
 //! downstream artifact independent of worker-thread scheduling.
 
-use crate::hwsim::Workload;
+use crate::hwsim::{ParallelSpec, Workload};
 use crate::models::{quant, QuantScheme};
 use crate::profiler::ProfileSpec;
 use crate::util::rng::Rng;
@@ -26,6 +26,9 @@ pub struct SweepCell {
     /// Quantization scheme of the cell; `None` = the model's native
     /// dtype (the `native` spec token).
     pub quant: Option<QuantScheme>,
+    /// Explicit TP×PP mapping of the cell; `None` = the legacy
+    /// whole-rig roofline.
+    pub parallel: Option<ParallelSpec>,
     /// Deterministic per-cell seed: `Rng::mix(spec.seed, index)`.
     pub seed: u64,
 }
@@ -41,12 +44,22 @@ impl SweepCell {
         s.mem_unit = unit;
         s.seed = self.seed;
         s.quant = self.quant;
+        s.parallel = self.parallel;
         s
     }
 
     /// Report token of the cell's quant axis (`native` or a scheme key).
     pub fn quant_token(&self) -> &'static str {
         self.quant.map(|q| q.key).unwrap_or("native")
+    }
+
+    /// Report label of the cell's parallelism axis (`tp2·pp1`, or `—`
+    /// for legacy cells).
+    pub fn parallel_label(&self) -> String {
+        match self.parallel {
+            Some(p) => p.label(),
+            None => "—".to_string(),
+        }
     }
 
     /// This cell's deterministic workload generator — what an
@@ -59,9 +72,10 @@ impl SweepCell {
     }
 }
 
-/// Expand a spec into its full cell list. The quant axis is innermost,
-/// so single-quant grids keep the exact cell indices (and thus per-cell
-/// seeds) of the pre-quant expansion.
+/// Expand a spec into its full cell list. The quant axis sits inside
+/// the workload axes and the parallelism axis is innermost of all, so
+/// grids without the newer axes keep the exact cell indices (and thus
+/// per-cell seeds) of the earlier expansions.
 pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
     let schemes: Vec<Option<QuantScheme>> = spec
         .quants
@@ -71,21 +85,25 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
                 .expect("quant tokens are checked by SweepSpec::validate")
         })
         .collect();
+    let pars = spec.parallelisms();
     let mut cells = Vec::with_capacity(spec.n_cells());
     for m in &spec.models {
         for d in &spec.devices {
             for &b in &spec.batches {
                 for &(p, g) in &spec.lens {
                     for &q in &schemes {
-                        let index = cells.len();
-                        cells.push(SweepCell {
-                            index,
-                            model: m.clone(),
-                            device: d.clone(),
-                            workload: Workload::new(b, p, g),
-                            quant: q,
-                            seed: Rng::mix(spec.seed, index as u64),
-                        });
+                        for &par in &pars {
+                            let index = cells.len();
+                            cells.push(SweepCell {
+                                index,
+                                model: m.clone(),
+                                device: d.clone(),
+                                workload: Workload::new(b, p, g),
+                                quant: q,
+                                parallel: par,
+                                seed: Rng::mix(spec.seed, index as u64),
+                            });
+                        }
                     }
                 }
             }
@@ -168,10 +186,31 @@ mod tests {
         assert!(!ps.energy);
         assert_eq!(ps.mem_unit, MemUnit::Binary);
         assert!(ps.is_simulated());
-        // default grid: native dtype cells
+        // default grid: native dtype cells, no explicit parallelism
         assert_eq!(cells[3].quant, None);
         assert_eq!(cells[3].quant_token(), "native");
         assert_eq!(ps.quant, None);
+        assert_eq!(cells[3].parallel, None);
+        assert_eq!(cells[3].parallel_label(), "—");
+        assert_eq!(ps.parallel, None);
+    }
+
+    #[test]
+    fn parallel_axis_expands_innermost_and_carries_mappings() {
+        let mut spec = small_spec();
+        spec.devices = vec!["4xa6000".into()];
+        spec.tps = vec![1, 4];
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 8); // 2 models x 1 device x 2 batches x 2 tp
+        // innermost axis: adjacent cells alternate mappings
+        assert_eq!(cells[0].parallel, Some(ParallelSpec::new(1, 1)));
+        assert_eq!(cells[1].parallel, Some(ParallelSpec::new(4, 1)));
+        assert_eq!(cells[0].model, cells[1].model);
+        assert_eq!(cells[0].workload, cells[1].workload);
+        assert_eq!(cells[1].parallel_label(), "tp4·pp1");
+        // the mapping flows into the cell's ProfileSpec
+        let ps = cells[1].profile_spec(true, MemUnit::Si);
+        assert_eq!(ps.parallel, Some(ParallelSpec::new(4, 1)));
     }
 
     #[test]

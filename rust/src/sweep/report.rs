@@ -27,16 +27,28 @@ pub fn render_markdown(r: &SweepResults) -> String {
     let s = &r.spec;
     let best = r.best_j_token();
     let worst = r.worst_j_token();
+    let has_par = r.cells.iter().any(|c| c.cell.parallel.is_some());
     let mut out = String::new();
     let _ = writeln!(out, "# elana sweep — {}", s.name);
     let _ = writeln!(out);
-    let _ = writeln!(
-        out,
-        "{} cells = {} models x {} devices x {} batch sizes x {} \
-         workloads x {} quant schemes (seed {})",
-        r.cells.len(), s.models.len(), s.devices.len(), s.batches.len(),
-        s.lens.len(), s.quants.len(), s.seed
-    );
+    if has_par {
+        let _ = writeln!(
+            out,
+            "{} cells = {} models x {} devices x {} batch sizes x {} \
+             workloads x {} quant schemes x {} parallelisms (seed {})",
+            r.cells.len(), s.models.len(), s.devices.len(),
+            s.batches.len(), s.lens.len(), s.quants.len(),
+            s.parallelisms().len(), s.seed
+        );
+    } else {
+        let _ = writeln!(
+            out,
+            "{} cells = {} models x {} devices x {} batch sizes x {} \
+             workloads x {} quant schemes (seed {})",
+            r.cells.len(), s.models.len(), s.devices.len(), s.batches.len(),
+            s.lens.len(), s.quants.len(), s.seed
+        );
+    }
 
     for dev in &s.devices {
         let group: Vec<&CellResult> =
@@ -45,15 +57,31 @@ pub fn render_markdown(r: &SweepResults) -> String {
             continue;
         }
         let _ = writeln!(out, "\n## {}", group[0].outcome.device);
-        let _ = writeln!(
-            out,
-            "| Model | Quant | Workload | TTFT ms | J/Prompt | TPOT ms \
-             | p50 | p99 | J/Token | dJ/Token | TTLT ms | J/Request |"
-        );
-        let _ = writeln!(
-            out,
-            "|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|"
-        );
+        if has_par {
+            let _ = writeln!(
+                out,
+                "| Model | Quant | Par | Workload | TTFT ms | J/Prompt \
+                 | TPOT ms | p50 | p99 | J/Token | dJ/Token | TTLT ms \
+                 | J/Request |"
+            );
+            let _ = writeln!(
+                out,
+                "|---|---|---|---|---:|---:|---:|---:|---:|---:|---:\
+                 |---:|---:|"
+            );
+        } else {
+            let _ = writeln!(
+                out,
+                "| Model | Quant | Workload | TTFT ms | J/Prompt \
+                 | TPOT ms | p50 | p99 | J/Token | dJ/Token | TTLT ms \
+                 | J/Request |"
+            );
+            let _ = writeln!(
+                out,
+                "|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:\
+                 |---:|"
+            );
+        }
         let group_best = group
             .iter()
             .map(|c| c.outcome.j_token)
@@ -72,11 +100,16 @@ pub fn render_markdown(r: &SweepResults) -> String {
             } else {
                 format!("+{:.1}%", (o.j_token / group_best - 1.0) * 100.0)
             };
+            let par = if has_par {
+                format!(" {} |", c.cell.parallel_label())
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} \
+                "| {} | {} |{} {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} \
                  | {:.2} | {} | {:.2} | {:.2} |",
-                model, c.cell.quant_token(), c.cell.workload.label(),
+                model, c.cell.quant_token(), par, c.cell.workload.label(),
                 o.ttft_ms, o.j_prompt, o.tpot_ms, o.tpot_p50_ms,
                 o.tpot_p99_ms, o.j_token, delta, o.ttlt_ms, o.j_request
             );
@@ -119,19 +152,24 @@ pub fn to_json(r: &SweepResults) -> Json {
         .cells
         .iter()
         .map(|c| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("index", Json::num(c.cell.index as f64)),
                 ("seed", Json::str(c.cell.seed.to_string())),
                 ("quant", Json::str(c.cell.quant_token())),
                 ("outcome", c.outcome.to_json()),
-            ])
+            ];
+            if let Some(p) = c.cell.parallel {
+                fields.push(("tp", Json::num(p.tp as f64)));
+                fields.push(("pp", Json::num(p.pp as f64)));
+            }
+            Json::obj(fields)
         })
         .collect();
     let opt_idx = |v: Option<usize>| match v {
         Some(i) => Json::num(i as f64),
         None => Json::Null,
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("sweep", Json::str(s.name.clone())),
         ("seed", Json::str(s.seed.to_string())),
         ("energy", Json::Bool(s.energy)),
@@ -152,7 +190,16 @@ pub fn to_json(r: &SweepResults) -> Json {
         ("best_j_token_index", opt_idx(r.best_j_token())),
         ("worst_j_token_index", opt_idx(r.worst_j_token())),
         ("cells", Json::Arr(cells)),
-    ])
+    ];
+    // the parallel axis appears only when requested, so legacy
+    // artifacts stay byte-identical
+    if !s.tps.is_empty() || !s.pps.is_empty() {
+        fields.push(("tps", Json::Arr(
+            s.tps.iter().map(|&t| Json::num(t as f64)).collect())));
+        fields.push(("pps", Json::Arr(
+            s.pps.iter().map(|&p| Json::num(p as f64)).collect())));
+    }
+    Json::obj(fields)
 }
 
 #[cfg(test)]
@@ -237,6 +284,42 @@ mod tests {
             .get(k).unwrap().as_f64().unwrap();
         assert!(t(1, "tpot_ms") < t(0, "tpot_ms"));
         assert!(t(1, "j_token") < t(0, "j_token"));
+    }
+
+    #[test]
+    fn parallel_column_renders_in_markdown_and_json() {
+        let s = SweepSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["4xa6000".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            tps: vec![1, 4],
+            ..SweepSpec::default()
+        };
+        let r = runner::run(&s).unwrap();
+        assert_eq!(r.len(), 2);
+        let text = render_markdown(&r);
+        assert!(text.contains("| Par |"), "{text}");
+        assert!(text.contains("| tp1·pp1 |"), "{text}");
+        assert!(text.contains("| tp4·pp1 |"), "{text}");
+        assert!(text.contains("x 2 parallelisms"), "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("tp").unwrap().as_usize(), Some(1));
+        assert_eq!(cells[1].get("tp").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("tps").unwrap().as_arr().unwrap().len(), 2);
+        // sharded decode beats the honest single-card run on a
+        // bandwidth-bound workload
+        let t = |i: usize, k: &str| cells[i].get("outcome").unwrap()
+            .get(k).unwrap().as_f64().unwrap();
+        assert!(t(1, "tpot_ms") < t(0, "tpot_ms"));
+        // legacy sweeps carry no parallel keys
+        let legacy = results();
+        let lv = Json::parse(&to_json(&legacy).to_string()).unwrap();
+        assert!(lv.get("tps").is_none());
+        let lc = lv.get("cells").unwrap().as_arr().unwrap();
+        assert!(lc[0].get("tp").is_none());
+        assert!(!render_markdown(&legacy).contains("| Par |"));
     }
 
     #[test]

@@ -23,7 +23,8 @@
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::hwsim::device;
+use crate::hwsim::parallel::expand_parallelisms;
+use crate::hwsim::{device, ParallelSpec};
 use crate::models;
 use crate::util::json::Json;
 use crate::util::units::{parse_workload_len, MemUnit};
@@ -51,6 +52,11 @@ pub struct SweepSpec {
     /// Quantization-scheme tokens (`native` or a
     /// `models::quant::all_scheme_keys` entry) — the low-bit grid axis.
     pub quants: Vec<String>,
+    /// Tensor-parallel degrees (`--tp 1,2,4`). Empty = the legacy
+    /// whole-rig cells, bit-identical to the pre-parallelism sweep.
+    pub tps: Vec<usize>,
+    /// Pipeline-parallel degrees (`--pp 1,2`). Empty = legacy.
+    pub pps: Vec<usize>,
     /// Measure energy through the sensor-playback pipeline (§2.4).
     pub energy: bool,
     pub unit: MemUnit,
@@ -70,6 +76,8 @@ impl Default for SweepSpec {
             batches: DEFAULT_BATCHES.to_vec(),
             lens: DEFAULT_LENS.to_vec(),
             quants: DEFAULT_QUANTS.iter().map(|s| s.to_string()).collect(),
+            tps: Vec::new(),
+            pps: Vec::new(),
             energy: true,
             unit: MemUnit::Si,
             seed: 0,
@@ -79,10 +87,18 @@ impl Default for SweepSpec {
 }
 
 impl SweepSpec {
+    /// The TP×PP mappings every cell expands over (`[None]` when no
+    /// parallel axis was given — grid indices and per-cell seeds then
+    /// match the pre-parallelism sweep exactly).
+    pub fn parallelisms(&self) -> Vec<Option<ParallelSpec>> {
+        expand_parallelisms(&self.tps, &self.pps)
+    }
+
     /// Number of cells the grid expands to.
     pub fn n_cells(&self) -> usize {
         self.models.len() * self.devices.len() * self.batches.len()
             * self.lens.len() * self.quants.len()
+            * self.parallelisms().len()
     }
 
     /// Validate every axis against the registries before spawning
@@ -118,6 +134,28 @@ impl SweepSpec {
         for q in &self.quants {
             models::quant::parse_token(q)?;
         }
+        // every requested mapping must be hostable on every device —
+        // sweep cells all run, so an impossible cell is a spec error,
+        // not a skipped row (the planner, by contrast, reports it as
+        // infeasible)
+        for par in self.parallelisms().into_iter().flatten() {
+            ensure!(par.tp >= 1 && par.pp >= 1,
+                    "parallel degrees must be >= 1");
+            for d in &self.devices {
+                let rig = device::rig_by_name(d).expect("validated above");
+                ensure!(par.n_ranks() <= rig.n_devices,
+                        "tp{} x pp{} needs {} device(s) but rig `{d}` \
+                         has {}; drop it from --devices or lower the \
+                         degree", par.tp, par.pp, par.n_ranks(),
+                        rig.n_devices);
+            }
+            for m in &self.models {
+                let arch = models::lookup(m).expect("validated above");
+                ensure!(par.pp <= arch.n_layers(),
+                        "pp={} exceeds the {} layers of {m}", par.pp,
+                        arch.n_layers());
+            }
+        }
         Ok(())
     }
 
@@ -126,9 +164,9 @@ impl SweepSpec {
     /// type (a typo'd or wrong-typed key errors instead of silently
     /// running a different grid).
     pub fn parse(text: &str) -> Result<SweepSpec> {
-        const KNOWN_KEYS: [&str; 10] =
+        const KNOWN_KEYS: [&str; 12] =
             ["sweep", "models", "devices", "batches", "lens", "quants",
-             "energy", "unit", "seed", "threads"];
+             "tps", "pps", "energy", "unit", "seed", "threads"];
         let root = Json::parse(text).context("parsing sweep spec JSON")?;
         let obj = root
             .as_obj()
@@ -193,6 +231,28 @@ impl SweepSpec {
         if let Some(v) = strings("quants")? {
             spec.quants = v;
         }
+        let usizes = |key: &str| -> Result<Option<Vec<usize>>> {
+            match root.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("`{key}` must be an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_usize().ok_or_else(|| {
+                            anyhow!("`{key}` entries must be integers")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .map(Some),
+            }
+        };
+        if let Some(v) = usizes("tps")? {
+            spec.tps = v;
+        }
+        if let Some(v) = usizes("pps")? {
+            spec.pps = v;
+        }
         if let Some(v) = root.get("energy") {
             spec.energy = v
                 .as_bool()
@@ -245,6 +305,8 @@ pub struct SweepOverrides {
     pub batches: Option<Vec<usize>>,
     pub lens: Option<Vec<(usize, usize)>>,
     pub quants: Option<Vec<String>>,
+    pub tps: Option<Vec<usize>>,
+    pub pps: Option<Vec<usize>>,
     pub energy: Option<bool>,
     pub unit: Option<MemUnit>,
     pub seed: Option<u64>,
@@ -268,6 +330,12 @@ impl SweepOverrides {
         }
         if let Some(v) = self.quants {
             spec.quants = v;
+        }
+        if let Some(v) = self.tps {
+            spec.tps = v;
+        }
+        if let Some(v) = self.pps {
+            spec.pps = v;
         }
         if let Some(v) = self.energy {
             spec.energy = v;
@@ -378,6 +446,38 @@ mod tests {
         // wrong-typed key errors instead of silently running defaults
         assert!(SweepSpec::parse(r#"{"quants": "bf16"}"#).is_err());
         assert!(SweepSpec::parse(r#"{"quants": [4]}"#).is_err());
+    }
+
+    #[test]
+    fn parallel_axes_parse_validate_and_multiply_the_grid() {
+        let s = SweepSpec::parse(
+            r#"{"models": ["llama-3.1-8b"], "devices": ["4xa6000"],
+                "batches": [1], "lens": ["64+32"],
+                "tps": [1, 2, 4], "pps": [1]}"#)
+            .unwrap();
+        assert_eq!(s.tps, vec![1, 2, 4]);
+        assert_eq!(s.pps, vec![1]);
+        assert_eq!(s.n_cells(), 3);
+        s.validate().unwrap();
+        // default grids carry no parallel axis
+        assert!(SweepSpec::default().tps.is_empty());
+        assert_eq!(SweepSpec::default().parallelisms(), vec![None]);
+        // a single-card device cannot host tp=2
+        let bad = SweepSpec {
+            tps: vec![2],
+            ..SweepSpec::default() // devices a6000, thor
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("needs 2 device(s)"), "{err}");
+        // degenerate degrees and wrong-typed keys rejected
+        let bad = SweepSpec {
+            devices: vec!["4xa6000".into()],
+            tps: vec![0],
+            ..SweepSpec::default()
+        };
+        assert!(bad.validate().is_err());
+        assert!(SweepSpec::parse(r#"{"tps": "2"}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"pps": ["two"]}"#).is_err());
     }
 
     #[test]

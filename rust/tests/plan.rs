@@ -80,7 +80,11 @@ fn plan_artifacts_byte_identical_across_worker_counts() {
 #[test]
 fn every_feasible_point_fits_device_memory() {
     // the acceptance grid: Table 2 models x cloud+edge x all schemes
+    // (models pinned: the default list now also carries the 70B
+    // sharding workload)
     let spec = PlanSpec {
+        models: vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into(),
+                     "nemotron-h-8b".into()],
         devices: vec!["a6000".into(), "thor".into()],
         lens: vec![(512, 512)],
         ..PlanSpec::default()
@@ -130,4 +134,54 @@ fn quantization_opens_the_edge_device() {
     assert!(o4.j_token < o16.j_token * 1.5,
             "int4 at +20% batch must not cost more energy per step: \
              {} vs {}", o4.j_token, o16.j_token);
+}
+
+/// The parallelism acceptance: `elana plan --devices 4xa6000 --tp 1,2,4`
+/// (default models) must surface a model that is infeasible at tp=1 but
+/// feasible at tp=4, with byte-identical artifacts at any worker count.
+#[test]
+fn tp_axis_acceptance_on_4xa6000() {
+    let spec = PlanSpec {
+        devices: vec!["4xa6000".into()],
+        lens: vec![(512, 512)],
+        tps: vec![1, 2, 4],
+        ..PlanSpec::default()
+    };
+    let r = planner::run(&spec).unwrap();
+    // at least one (model, quant) is infeasible at tp=1 yet feasible at
+    // tp=4 — the 70B at bf16 is the canonical case
+    let flips = r.points.iter().filter(|p| {
+        p.parallel.map(|pr| (pr.tp, pr.pp)) == Some((4, 1))
+            && p.fits()
+            && r.points.iter().any(|q| {
+                q.model == p.model
+                    && q.device == p.device
+                    && q.quant == p.quant
+                    && (q.prompt_len, q.gen_len)
+                        == (p.prompt_len, p.gen_len)
+                    && q.parallel.map(|pr| (pr.tp, pr.pp))
+                        == Some((1, 1))
+                    && !q.fits()
+            })
+    }).count();
+    assert!(flips >= 1, "no model flips from infeasible@tp1 to \
+                         feasible@tp4");
+    let b70 = r.points.iter().find(|p| {
+        p.model == "llama-3.1-70b" && p.quant == "bf16"
+    }).unwrap();
+    assert_eq!(b70.parallel.map(|pr| pr.tp), Some(1));
+    assert!(!b70.fits(), "141 GB of bf16 weights on one 48 GB card");
+
+    // worker-count invariance of the parallel plan artifact
+    let runs: Vec<(String, String)> = [1usize, 8]
+        .iter()
+        .map(|&workers| {
+            let mut s = spec.clone();
+            s.workers = workers;
+            let r = planner::run(&s).unwrap();
+            (report::to_json(&r).to_string(), report::render_markdown(&r))
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1],
+               "parallel plan artifacts must not depend on workers");
 }

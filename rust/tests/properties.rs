@@ -5,6 +5,8 @@
 use elana::coordinator::batcher::{plan_batch, BatchPolicy};
 use elana::coordinator::ServingRequest;
 use elana::hwsim::device;
+use elana::hwsim::{simulate_parallel, simulate_quant, ParallelSpec,
+                   Workload};
 use elana::models::{self, quant, EffectiveBytes, QuantScheme};
 use elana::planner::solve::FitModel;
 use elana::testkit::property;
@@ -334,5 +336,110 @@ fn prop_native_token_is_identity_everywhere() {
         let b = rng.usize_in(1, 64);
         let l = rng.usize_in(1, 4096);
         assert_eq!(eb.cache_bytes(b, l), models::cache_bytes(&arch, b, l));
+    });
+}
+
+// ---------------- tensor/pipeline parallelism ----------------
+
+/// tp=1/pp=1 on a single-device rig IS the unsharded path, bit for bit
+/// — the contract that keeps every golden test valid under the default.
+#[test]
+fn prop_trivial_parallelism_is_bit_identical_to_unsharded() {
+    property(60, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let names = ["a6000", "thor", "orin", "a100", "h100"];
+        let rig = device::rig_by_name(names[rng.usize_in(0, 4)]).unwrap();
+        let w = Workload::new(rng.usize_in(1, 16), rng.usize_in(16, 512),
+                              rng.usize_in(1, 32));
+        let schemes = quant::all_schemes();
+        let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let a = simulate_quant(&arch, &rig, &w, &scheme);
+        let b = simulate_parallel(&arch, &rig, &w, &scheme,
+                                  &ParallelSpec::single());
+        assert_eq!(a.table_row(), b.table_row(), "{} on {}", arch.name,
+                   rig.name());
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(b.interconnect_seconds, 0.0);
+        assert_eq!(b.interconnect_joules, 0.0);
+    });
+}
+
+/// Per-rank memory is monotonically non-increasing in tp: sharding
+/// wider can never make one rank's residency grow.
+#[test]
+fn prop_per_rank_memory_monotone_in_tp() {
+    property(100, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let rig = device::rig_by_name("8xh100").unwrap();
+        let schemes = quant::all_schemes();
+        let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let pp = [1usize, 2][rng.usize_in(0, 1)];
+        let batch = rng.usize_in(1, 32);
+        let ctx = rng.usize_in(64, 8192);
+        let mut last_req = u64::MAX;
+        let mut last_w = u64::MAX;
+        for tp in [1usize, 2, 4] {
+            let fm = FitModel::with_parallel(
+                &arch, Some(scheme), &rig,
+                Some(ParallelSpec::new(tp, pp)));
+            let req = fm.required_bytes(batch, ctx);
+            assert!(req <= last_req,
+                    "{} {} tp{tp} pp{pp}: {req} > {last_req}",
+                    arch.name, scheme.name);
+            assert!(fm.weight_bytes <= last_w);
+            last_req = req;
+            last_w = fm.weight_bytes;
+        }
+    });
+}
+
+/// TPOT never improves when the same tp mapping moves from NVLink to
+/// PCIe: a slower link can only expose more collective time.
+#[test]
+fn prop_tpot_never_improves_from_nvlink_to_pcie() {
+    property(60, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let nv = device::rig_by_name("4xa6000-nvlink").unwrap();
+        let pcie = device::rig_by_name("4xa6000").unwrap();
+        let w = Workload::new(rng.usize_in(1, 32), rng.usize_in(16, 1024),
+                              rng.usize_in(1, 16));
+        let tp = [2usize, 4][rng.usize_in(0, 1)];
+        let pp = if tp == 2 { [1usize, 2][rng.usize_in(0, 1)] } else { 1 };
+        let par = ParallelSpec::new(tp, pp);
+        if par.validate_for(&arch, &pcie).is_err() {
+            return; // pp can exceed tiny dev-model layer stacks
+        }
+        let scheme = QuantScheme::native(arch.dtype);
+        let fast = simulate_parallel(&arch, &nv, &w, &scheme, &par);
+        let slow = simulate_parallel(&arch, &pcie, &w, &scheme, &par);
+        assert!(slow.tpot.seconds >= fast.tpot.seconds - 1e-15,
+                "{} tp{tp} pp{pp}: PCIe {} < NVLink {}", arch.name,
+                slow.tpot.seconds, fast.tpot.seconds);
+        assert!(slow.ttft.seconds >= fast.ttft.seconds - 1e-15);
+    });
+}
+
+/// The planner's sharding acceptance, as a property over schemes: any
+/// (model, quant) that fits `4xa6000` at tp=4 but not tp=1 must show
+/// weights as the reason, and tp=4 must never fit *less* than tp=1.
+#[test]
+fn prop_tp4_fit_region_contains_tp1_on_4xa6000() {
+    property(100, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let rig = device::rig_by_name("4xa6000").unwrap();
+        let schemes = quant::all_schemes();
+        let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+        let ctx = rng.usize_in(64, 4096);
+        let tp1 = FitModel::with_parallel(&arch, Some(scheme), &rig,
+                                          Some(ParallelSpec::new(1, 1)));
+        let tp4 = FitModel::with_parallel(&arch, Some(scheme), &rig,
+                                          Some(ParallelSpec::new(4, 1)));
+        assert!(tp4.max_batch(ctx) >= tp1.max_batch(ctx),
+                "{} {}: tp4 fits less than tp1", arch.name, scheme.name);
+        if tp1.max_batch(ctx) == 0 && tp4.max_batch(ctx) > 0 {
+            assert!(tp1.weight_bytes > tp1.budget_bytes
+                        || !tp1.fits(1, ctx),
+                    "tp1 infeasibility must be a memory fact");
+        }
     });
 }

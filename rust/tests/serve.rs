@@ -45,6 +45,29 @@ fn serve_reports_byte_identical_across_worker_counts() {
 }
 
 #[test]
+fn sharded_serve_is_worker_invariant_and_splits_energy() {
+    let mk = |workers: usize| {
+        let mut spec = base_spec();
+        spec.device = "4xa6000".to_string();
+        spec.parallel = Some(elana::hwsim::ParallelSpec::new(4, 1));
+        spec.workers = workers;
+        let o = simulate::run(&spec).unwrap();
+        (report::to_json(&o).to_string(), report::render_markdown(&o))
+    };
+    let a = mk(1);
+    let b = mk(8);
+    assert_eq!(a, b, "sharded serve must not depend on workers");
+    let v = Json::parse(&a.0).unwrap();
+    assert_eq!(v.get("tp").unwrap().as_usize(), Some(4));
+    assert_eq!(v.get("pp").unwrap().as_usize(), Some(1));
+    let link = v.get("interconnect_joules").unwrap().as_f64().unwrap();
+    let total = v.get("total_joules").unwrap().as_f64().unwrap();
+    assert!(link > 0.0 && link < total);
+    assert!(a.1.contains("parallelism: tp=4 x pp=1"), "{}", a.1);
+    assert!(a.1.contains("J/token split:"), "{}", a.1);
+}
+
+#[test]
 fn serve_seed_is_reproducible_and_decorrelating() {
     let a = simulate::run(&base_spec()).unwrap();
     let b = simulate::run(&base_spec()).unwrap();

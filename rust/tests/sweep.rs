@@ -113,6 +113,49 @@ fn sweep_spec_file_roundtrip_runs() {
 }
 
 #[test]
+fn sweep_tp_axis_is_deterministic_and_preserves_legacy_seeds() {
+    // a --tp grid on the multi-GPU rigs, byte-identical across threads
+    let mk = |threads: usize| {
+        let mut s = SweepSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["4xa6000".into(), "4xa6000-nvlink".into()],
+            batches: vec![1, 8],
+            lens: vec![(128, 32)],
+            tps: vec![1, 2, 4],
+            seed: 5,
+            ..SweepSpec::default()
+        };
+        s.threads = threads;
+        sweep::run(&s).unwrap()
+    };
+    let a = mk(1);
+    let b = mk(4);
+    assert_eq!(a.len(), 12);
+    assert_eq!(sweep::report::to_json(&a).to_string(),
+               sweep::report::to_json(&b).to_string());
+    // NVLink cells never decode slower than the PCIe twin at equal tp
+    for (p, n) in a.cells[..6].iter().zip(&a.cells[6..]) {
+        assert_eq!(p.cell.parallel, n.cell.parallel);
+        assert!(n.outcome.tpot_ms <= p.outcome.tpot_ms + 1e-12,
+                "{:?}", p.cell.parallel);
+    }
+    // the tp axis is innermost: a no-axis grid keeps the cell seeds of
+    // the same grid before the axis existed
+    let legacy = SweepSpec {
+        models: vec!["llama-3.1-8b".into()],
+        devices: vec!["4xa6000".into()],
+        batches: vec![1],
+        lens: vec![(128, 32)],
+        seed: 5,
+        ..SweepSpec::default()
+    };
+    let r = sweep::run(&legacy).unwrap();
+    assert_eq!(r.cells[0].cell.seed,
+               elana::util::Rng::mix(5, 0));
+    assert_eq!(r.cells[0].cell.parallel, None);
+}
+
+#[test]
 fn sweep_reports_cloud_edge_tradeoff() {
     // the paper's qualitative claim must fall out of the matrix: Thor
     // decodes slower but each token costs less energy than on the A6000

@@ -4,8 +4,15 @@
 //! (these must stay negligible vs the measured phases) and — when
 //! artifacts are present — the real engine's prefill/decode steps on the
 //! PJRT CPU runtime.
+//!
+//! CI runs this binary as the bench-regression gate: the profiler-side
+//! benches are compared against `benches/baselines/hotpath.json` with a
+//! machine-speed-normalized threshold (see `benchkit::gate`), and a
+//! machine-readable `BENCH_hotpath.json` artifact is emitted. Both are
+//! driven by env vars (`ELANA_BENCH_BASELINE`, `ELANA_BENCH_JSON`), so
+//! a plain `cargo bench` is unchanged.
 
-use elana::benchkit::{bench, section, BenchConfig};
+use elana::benchkit::{bench, gate, section, BenchConfig, BenchResult};
 use elana::coordinator::batcher::{plan_batch, BatchPolicy};
 use elana::coordinator::request::ServingRequest;
 use elana::engine::{GreedySampler, InferenceEngine, Sampler, TokenBatch};
@@ -17,22 +24,23 @@ use elana::workload::PromptGen;
 
 fn main() {
     section("profiler-side hot paths (overhead around the engine)");
+    let mut gated: Vec<BenchResult> = Vec::new();
 
     let mut rng = Rng::new(1);
     let samples: Vec<f64> = (0..100).map(|_| rng.f64_in(0.02, 0.03)).collect();
-    bench("Summary::from_samples(100)", || {
+    gated.push(bench("Summary::from_samples(100)", || {
         std::hint::black_box(Summary::from_samples(&samples));
-    });
+    }));
 
     let mut gen = PromptGen::new(4096, 2);
-    bench("PromptGen 512-token prompt", || {
+    gated.push(bench("PromptGen 512-token prompt", || {
         std::hint::black_box(gen.prompt(512));
-    });
+    }));
 
     let logits: Vec<f32> = (0..4096).map(|i| (i % 97) as f32 * 0.01).collect();
-    bench("GreedySampler over 4k vocab", || {
+    gated.push(bench("GreedySampler over 4k vocab", || {
         std::hint::black_box(GreedySampler.sample(&logits, 1, 4096));
-    });
+    }));
 
     let policy = BatchPolicy {
         allowed_batches: vec![1, 4],
@@ -41,12 +49,19 @@ fn main() {
         max_wait_s: 0.02,
         kv_budget: None,
     };
-    bench("plan_batch(4 requests)", || {
+    gated.push(bench("plan_batch(4 requests)", || {
         let reqs: Vec<_> = (0..4)
             .map(|i| ServingRequest::new(i, vec![1; 24], 8, 0.0))
             .collect();
         std::hint::black_box(plan_batch(&policy, reqs).unwrap());
-    });
+    }));
+
+    let arch = elana::models::lookup("llama-3.1-8b").unwrap();
+    let rig = elana::hwsim::device::rig_by_name("a6000").unwrap();
+    let w = elana::hwsim::Workload::new(1, 512, 64);
+    gated.push(bench("hwsim simulate 512+64", || {
+        std::hint::black_box(elana::hwsim::simulate(&arch, &rig, &w));
+    }));
 
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json")
         .ok();
@@ -56,14 +71,19 @@ fn main() {
         });
     }
 
-    bench("i32 literal (1x64 tokens)", || {
+    gated.push(bench("i32 literal (1x64 tokens)", || {
         let toks = vec![7i32; 64];
         std::hint::black_box(weights::i32_literal(&[1, 64], &toks).unwrap());
-    });
-    bench("f32 zeros literal (tiny KV cache 128KB)", || {
+    }));
+    gated.push(bench("f32 zeros literal (tiny KV cache 128KB)", || {
         std::hint::black_box(
             weights::zeros_literal(&[4, 1, 2, 128, 32]).unwrap());
-    });
+    }));
+
+    // ---- bench-regression gate (env-driven; no-op for plain runs) -----
+    if !gate::run_from_env(&gated) {
+        std::process::exit(1);
+    }
 
     // ---- real engine (needs artifacts) --------------------------------
     let Ok(manifest) = Manifest::load_default() else {

@@ -137,7 +137,8 @@ impl ExecutionBackend for EngineBackend {
         Ok((times.iter().map(|d| d.as_secs_f64()).collect(), (t0, t1)))
     }
 
-    fn run_energy(&mut self, run: &ExecRun) -> Result<(f64, f64, f64)> {
+    fn run_energy(&mut self, run: &ExecRun)
+                  -> Result<crate::power::EnergyReport> {
         // the whole-request window ends at span() (prefill start +
         // measured TTLT), which includes sampling/cache overhead the
         // step windows alone miss
@@ -184,7 +185,7 @@ mod tests {
         assert_eq!(run.step_s.len(), 7); // first token from prefill
         assert!(run.ttft_s > 0.0);
         assert!(run.ttlt_s >= run.ttft_s);
-        let (jp, jt, jr) = b.run_energy(&run).unwrap();
+        let (jp, jt, jr) = b.run_energy(&run).unwrap().triple();
         assert!(jp >= 0.0 && jt >= 0.0 && jr >= 0.0);
     }
 

@@ -110,10 +110,14 @@ pub trait ExecutionBackend {
                     -> Result<(Vec<f64>, (f64, f64))>;
 
     /// Joules of one completed `generate` run, decomposed as
-    /// (J/Prompt, J/Token, J/Request) through the backend's §2.4
+    /// J/Prompt, J/Token, J/Request through the backend's §2.4
     /// pipeline: sensor playback in virtual time for hwsim, the
-    /// concurrent sampler log for the engine.
-    fn run_energy(&mut self, run: &ExecRun) -> Result<(f64, f64, f64)>;
+    /// concurrent sampler log for the engine. The report also says how
+    /// many windows were sub-sampling-period fallbacks, so consumers
+    /// can distinguish "no samples, held up by the nearest one" from
+    /// "zero power".
+    fn run_energy(&mut self, run: &ExecRun)
+                  -> Result<crate::power::EnergyReport>;
 
     /// Integrate the backend's energy log over an arbitrary window
     /// (average-power method), joules. Returns 0 when no samples cover
@@ -135,18 +139,30 @@ pub trait ExecutionBackend {
 /// measured TTLT span.
 pub(crate) fn window_attribution(log: &crate::power::sampler::PowerLog,
                                  run: &ExecRun, t_end: f64)
-                                 -> (f64, f64, f64) {
+                                 -> crate::power::EnergyReport {
     use crate::power::energy::WindowEnergy;
     let (p0, p1) = run.prefill_window;
-    let j_prompt = WindowEnergy::average_power_method(log, p0, p1).joules;
+    let prefill = WindowEnergy::average_power_method(log, p0, p1);
     let mut tok_sum = 0.0;
+    let mut fallbacks = 0usize;
     for &(t0, t1) in &run.step_windows {
-        tok_sum += WindowEnergy::average_power_method(log, t0, t1).joules;
+        let w = WindowEnergy::average_power_method(log, t0, t1);
+        tok_sum += w.joules;
+        if w.fallback {
+            fallbacks += 1;
+        }
     }
     let j_token = tok_sum / run.step_windows.len().max(1) as f64;
     let j_request =
         WindowEnergy::average_power_method(log, p0, t_end).joules;
-    (j_prompt, j_token, j_request)
+    crate::power::EnergyReport {
+        joules_per_prompt: prefill.joules,
+        joules_per_token: j_token,
+        joules_per_request: j_request,
+        prefill_fallback: prefill.fallback,
+        fallback_step_windows: fallbacks,
+        step_windows: run.step_windows.len(),
+    }
 }
 
 /// Build the backend a `ProfileSpec` names: `cpu` → the PJRT engine
@@ -163,6 +179,9 @@ pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
         if let Some(p) = spec.parallel {
             b = b.with_parallel(p)?;
         }
+        if let Some(op) = spec.op {
+            b = b.with_operating_point(op);
+        }
         Ok(Box::new(b))
     } else {
         anyhow::ensure!(
@@ -173,6 +192,10 @@ pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
             spec.parallel.map(|p| p.n_ranks()).unwrap_or(1) <= 1,
             "the `cpu` engine runs on a single device; tp·pp must be 1 \
              (sharding applies to simulated rigs)");
+        anyhow::ensure!(
+            spec.op.map(|o| o.is_identity()).unwrap_or(true),
+            "clock/power-cap operating points apply to simulated rigs \
+             only; the `cpu` engine has no modeled DVFS governor");
         let manifest = crate::runtime::Manifest::load_default()?;
         Ok(Box::new(EngineBackend::new(&manifest, &spec.model)?))
     }

@@ -12,9 +12,10 @@
 use anyhow::{anyhow, Result};
 
 use crate::engine::TokenBatch;
-use crate::hwsim::{self, ParallelSpec, Rig, SimResult, Workload};
+use crate::hwsim::{self, OperatingPoint, ParallelSpec, Rig, SimResult,
+                   Workload};
 use crate::models::{self, arch::ModelArch, QuantScheme};
-use crate::power::energy::WindowEnergy;
+use crate::power::energy::{EnergyReport, WindowEnergy};
 use crate::power::model::LoadHandle;
 use crate::power::nvml::NvmlSim;
 use crate::power::sampler::PowerLog;
@@ -33,6 +34,10 @@ pub struct SimBackend {
     /// Explicit TP×PP mapping; `None` = the legacy whole-rig roofline
     /// (bit-identical to the pre-parallelism path).
     parallel: Option<ParallelSpec>,
+    /// DVFS operating points as (prefill, decode); `None` = stock
+    /// clocks, uncapped (bit-identical to the pre-DVFS path). Serve's
+    /// phase-aware downclock sets the two differently.
+    ops: Option<(OperatingPoint, OperatingPoint)>,
     energy: bool,
     seed: u64,
     /// Virtual-time sensor log of the most recent replayed `generate`,
@@ -64,6 +69,7 @@ impl SimBackend {
             rig,
             scheme,
             parallel: None,
+            ops: None,
             energy,
             seed,
             log: None,
@@ -95,8 +101,50 @@ impl SimBackend {
         Ok(self)
     }
 
-    /// Simulate through the active (scheme, parallelism) configuration.
+    /// Run the whole request at one DVFS operating point (clock and/or
+    /// power cap). The identity point is a no-op; legacy runs stay
+    /// bit-identical.
+    pub fn with_operating_point(mut self, op: OperatingPoint)
+                                -> SimBackend {
+        self.ops = if op.is_identity() { None } else { Some((op, op)) };
+        self
+    }
+
+    /// Phase-split DVFS: prefill at one operating point, every decode
+    /// step at another — serve's phase-aware downclock policy. Two
+    /// identity points are a no-op.
+    pub fn with_phase_ops(mut self, prefill: OperatingPoint,
+                          decode: OperatingPoint) -> SimBackend {
+        self.ops = if prefill.is_identity() && decode.is_identity() {
+            None
+        } else {
+            Some((prefill, decode))
+        };
+        self
+    }
+
+    /// Power curve the simulated sensor replays: under DVFS, the
+    /// higher-plateau derivation of the two phase operating points (the
+    /// phased simulator inverts every phase's utilization against this
+    /// same curve, so playback reproduces both phases' watts); the
+    /// stock curve otherwise.
+    fn sensor_power(&self) -> crate::power::DevicePowerModel {
+        match &self.ops {
+            Some((p_op, d_op)) => {
+                self.rig.device.sensor_power_at(p_op, d_op)
+            }
+            None => self.rig.device.power,
+        }
+    }
+
+    /// Simulate through the active (scheme, parallelism, operating
+    /// point) configuration.
     fn sim(&self, w: &Workload) -> SimResult {
+        if let Some((p_op, d_op)) = &self.ops {
+            return hwsim::simulate_at(&self.arch, &self.rig, w,
+                                      &self.scheme,
+                                      self.parallel.as_ref(), p_op, d_op);
+        }
         match &self.parallel {
             Some(par) => hwsim::simulate_parallel(
                 &self.arch, &self.rig, w, &self.scheme, par),
@@ -140,7 +188,7 @@ impl ExecutionBackend for SimBackend {
             // measured joules) is bit-identical
             let load = LoadHandle::new();
             let nvml = NvmlSim::new_shared_seeded(
-                self.rig.n_devices, self.rig.device.power, load.clone(),
+                self.rig.n_devices, self.sensor_power(), load.clone(),
                 NvmlSim::DEFAULT_SEED ^ self.seed);
             let mut phases = vec![PhaseSchedule {
                 duration_s: sim.ttft.seconds,
@@ -199,12 +247,13 @@ impl ExecutionBackend for SimBackend {
         Ok((sim.step_seconds, (0.0, total)))
     }
 
-    fn run_energy(&mut self, run: &ExecRun) -> Result<(f64, f64, f64)> {
+    fn run_energy(&mut self, run: &ExecRun) -> Result<EnergyReport> {
         if !self.energy {
-            return run.analytic_joules.ok_or_else(|| {
+            let (jp, jt, jr) = run.analytic_joules.ok_or_else(|| {
                 anyhow!("run carries no analytic joules (was it produced \
                          by this backend?)")
-            });
+            })?;
+            return Ok(EnergyReport::analytic(jp, jt, jr));
         }
         let (log, key) = self.log.as_ref().ok_or_else(|| {
             anyhow!("no playback log: run_energy must follow generate()")
@@ -267,8 +316,12 @@ mod tests {
         let mut b = SimBackend::new("llama-3.1-8b", "thor", false, 0)
             .unwrap();
         let run = b.generate(&zeros(1, 64), 32).unwrap();
-        let (jp, jt, jr) = b.run_energy(&run).unwrap();
+        let report = b.run_energy(&run).unwrap();
+        let (jp, jt, jr) = report.triple();
         assert!(jp > 0.0 && jt > 0.0 && jr > jp);
+        // closed-form joules window nothing, so nothing falls back
+        assert!(!report.prefill_fallback);
+        assert_eq!(report.fallback_step_windows, 0);
         // no sensor log was produced
         assert_eq!(b.window_energy(0.0, 1.0), 0.0);
     }
@@ -279,7 +332,7 @@ mod tests {
             let mut b = SimBackend::new("llama-3.1-8b", "a6000", true,
                                         seed).unwrap();
             let run = b.generate(&zeros(1, 64), 32).unwrap();
-            b.run_energy(&run).unwrap()
+            b.run_energy(&run).unwrap().triple()
         };
         let a = mk(1);
         assert_eq!(a, mk(1), "same seed must be bit-identical");
@@ -294,7 +347,12 @@ mod tests {
         let mut b = SimBackend::new("llama-3.1-8b", "a6000", true, 0)
             .unwrap();
         let run = b.generate(&zeros(1, 512), 512).unwrap();
-        let (jp, jt, jr) = b.run_energy(&run).unwrap();
+        let report = b.run_energy(&run).unwrap();
+        let (jp, jt, jr) = report.triple();
+        // ms-scale decode steps at the 0.1 s cadence: the fallback path
+        // carries most J/token windows, and the report says so
+        assert!(report.fallback_step_windows > 0);
+        assert_eq!(report.step_windows, 512);
         let (ap, at, ar) = run.analytic_joules.unwrap();
         assert!((jp - ap).abs() / ap < 0.05, "playback {jp} analytic {ap}");
         assert!((jt - at).abs() / at < 0.10, "playback {jt} analytic {at}");
@@ -381,6 +439,62 @@ mod tests {
                     .unwrap()
                     .with_parallel(ParallelSpec::new(2, 1))
                     .is_err());
+    }
+
+    #[test]
+    fn operating_point_throttles_the_simulated_run() {
+        let zeros_b = zeros(1, 256);
+        let mut base = SimBackend::new("llama-2-7b", "a6000", false, 0)
+            .unwrap();
+        let b = base.generate(&zeros_b, 32).unwrap();
+        // the identity point is a no-op, bit for bit
+        let mut id = SimBackend::new("llama-2-7b", "a6000", false, 0)
+            .unwrap()
+            .with_operating_point(OperatingPoint::uncapped());
+        let i = id.generate(&zeros_b, 32).unwrap();
+        assert_eq!(b.ttft_s, i.ttft_s);
+        assert_eq!(b.step_s, i.step_s);
+        // a 200 W cap slows compute-bound prefill, leaves memory-bound
+        // decode alone, and cuts J/token
+        let mut capped = SimBackend::new("llama-2-7b", "a6000", false, 0)
+            .unwrap()
+            .with_operating_point(OperatingPoint::cap(200.0));
+        let c = capped.generate(&zeros_b, 32).unwrap();
+        assert!(c.ttft_s > b.ttft_s, "{} vs {}", c.ttft_s, b.ttft_s);
+        // b=1 decode stays memory-bound under the cap: TPOT unchanged
+        assert!((c.tpot_mean_s() - b.tpot_mean_s()).abs()
+                    < b.tpot_mean_s() * 1e-9,
+                "{} vs {}", c.tpot_mean_s(), b.tpot_mean_s());
+        let cj = capped.run_energy(&c).unwrap();
+        let bj = base.run_energy(&b).unwrap();
+        assert!(cj.joules_per_token < bj.joules_per_token);
+        // phase-split: downclocked decode only — prefill latency is
+        // untouched while J/token still drops
+        let mut split = SimBackend::new("llama-2-7b", "a6000", false, 0)
+            .unwrap()
+            .with_phase_ops(OperatingPoint::uncapped(),
+                            OperatingPoint::clock(0.5));
+        let s = split.generate(&zeros_b, 32).unwrap();
+        assert_eq!(s.ttft_s, b.ttft_s);
+        let sj = split.run_energy(&s).unwrap();
+        assert!(sj.joules_per_token < bj.joules_per_token);
+    }
+
+    #[test]
+    fn playback_tracks_analytic_energy_under_dvfs() {
+        // the throttled sensor plateau + reinverted utilizations must
+        // still reproduce the analytic joules within the noise envelope
+        let op = OperatingPoint::cap(180.0);
+        let mut pb = SimBackend::new("llama-3.1-8b", "a6000", true, 0)
+            .unwrap()
+            .with_phase_ops(OperatingPoint::uncapped(), op);
+        let run = pb.generate(&zeros(1, 256), 64).unwrap();
+        let measured = pb.run_energy(&run).unwrap();
+        let (ap, _at, ar) = run.analytic_joules.unwrap();
+        assert!((measured.joules_per_prompt - ap).abs() / ap < 0.05,
+                "playback {} analytic {ap}", measured.joules_per_prompt);
+        assert!((measured.joules_per_request - ar).abs() / ar < 0.05,
+                "playback {} analytic {ar}", measured.joules_per_request);
     }
 
     #[test]

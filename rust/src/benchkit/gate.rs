@@ -1,0 +1,337 @@
+//! Bench-regression gate: machine-readable bench artifacts + a
+//! noise-tolerant comparison against a committed baseline.
+//!
+//! Raw microbenchmark times differ wildly across machines, so the gate
+//! never compares absolute seconds. It computes each bench's ratio to
+//! its baseline p50, takes the **median ratio as the machine-speed
+//! scale**, and flags only benches whose ratio exceeds
+//! `scale × (1 + tolerance)` — a bench that slowed down *relative to
+//! its peers*. Uniform slowness (a colder CI runner) divides out;
+//! sampling noise is absorbed by the tolerance (default 25%).
+//!
+//! Baselines whose JSON carries `"seeded": "estimate"` (the initial
+//! hand-seeded numbers — this repo has no profiled runner of record
+//! yet) are held to an 8× wider tolerance: they still catch
+//! order-of-magnitude regressions while a measured refresh
+//! (`ELANA_BENCH_WRITE_BASELINE=benches/baselines/hotpath.json`)
+//! tightens the gate to the real threshold.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::BenchResult;
+
+/// Relative regression threshold the gate applies after machine-speed
+/// normalization.
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// Widening factor applied when the baseline is a hand-seeded estimate
+/// rather than a measured run.
+pub const ESTIMATE_SLACK: f64 = 8.0;
+
+/// A parsed baseline: bench name → p50 seconds, plus whether the file
+/// is marked as a hand-seeded estimate.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub p50s: BTreeMap<String, f64>,
+    pub estimate: bool,
+}
+
+/// Serialize bench results into the artifact/baseline schema.
+pub fn to_json(results: &[BenchResult]) -> Json {
+    let benches: BTreeMap<String, Json> = results
+        .iter()
+        .map(|r| {
+            (r.name.clone(), Json::obj(vec![
+                ("p50_s", Json::num(r.summary.p50)),
+                ("mean_s", Json::num(r.summary.mean)),
+                ("std_s", Json::num(r.summary.std)),
+                ("iters", Json::num(r.iters as f64)),
+            ]))
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str("elana-bench-v1")),
+        ("benches", Json::Obj(benches)),
+    ])
+}
+
+/// Parse a baseline file.
+pub fn parse_baseline(text: &str) -> Result<Baseline> {
+    let root = Json::parse(text).context("parsing bench baseline")?;
+    let benches = root
+        .get("benches")
+        .and_then(|b| b.as_obj())
+        .ok_or_else(|| anyhow!("baseline has no `benches` object"))?;
+    let mut p50s = BTreeMap::new();
+    for (name, v) in benches {
+        let p50 = v.get("p50_s").and_then(|x| x.as_f64()).ok_or_else(
+            || anyhow!("baseline bench `{name}` has no numeric p50_s"))?;
+        if !(p50.is_finite() && p50 > 0.0) {
+            return Err(anyhow!(
+                "baseline bench `{name}` has non-positive p50_s {p50}"));
+        }
+        p50s.insert(name.clone(), p50);
+    }
+    let estimate = root.get("seeded").and_then(|s| s.as_str())
+        == Some("estimate");
+    Ok(Baseline { p50s, estimate })
+}
+
+/// Outcome of one gate comparison.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    /// Median measured/baseline ratio — the machine-speed factor.
+    pub scale: f64,
+    /// Benches compared (present in both sets).
+    pub compared: usize,
+    /// The threshold actually applied (after any estimate slack).
+    pub threshold: f64,
+    /// Baseline benches missing from the run (a silently deleted bench
+    /// can hide a regression, so this fails the gate).
+    pub missing: Vec<String>,
+    /// (name, normalized ratio) of benches beyond the threshold.
+    pub regressions: Vec<(String, f64)>,
+}
+
+impl GateReport {
+    pub fn pass(&self) -> bool {
+        self.missing.is_empty() && self.regressions.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "bench gate: {} bench(es) compared, machine-speed scale \
+             {:.2}x, threshold {:.0}%\n",
+            self.compared, self.scale, self.threshold * 100.0);
+        for name in &self.missing {
+            out.push_str(&format!(
+                "  MISSING  {name} (in baseline, not in this run)\n"));
+        }
+        for (name, ratio) in &self.regressions {
+            out.push_str(&format!(
+                "  REGRESSED  {name}: {:.0}% over the machine-normalized \
+                 baseline\n",
+                (ratio - 1.0) * 100.0));
+        }
+        if self.pass() {
+            out.push_str("  PASS\n");
+        }
+        out
+    }
+}
+
+/// Compare a run against a baseline at a relative tolerance.
+pub fn compare(results: &[BenchResult], baseline: &Baseline,
+               tolerance: f64) -> GateReport {
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    let mut missing = Vec::new();
+    for (name, &base_p50) in &baseline.p50s {
+        match results.iter().find(|r| &r.name == name) {
+            Some(r) => {
+                ratios.push((name.clone(), r.summary.p50 / base_p50));
+            }
+            None => missing.push(name.clone()),
+        }
+    }
+    let scale = median(ratios.iter().map(|(_, r)| *r));
+    let threshold = if baseline.estimate {
+        tolerance * ESTIMATE_SLACK
+    } else {
+        tolerance
+    };
+    let regressions = ratios
+        .iter()
+        .filter(|(_, r)| *r > scale * (1.0 + threshold))
+        .map(|(n, r)| (n.clone(), r / scale))
+        .collect();
+    GateReport {
+        scale,
+        compared: ratios.len(),
+        threshold,
+        missing,
+        regressions,
+    }
+}
+
+fn median(iter: impl Iterator<Item = f64>) -> f64 {
+    let mut v: Vec<f64> = iter.collect();
+    if v.is_empty() {
+        return 1.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        (v[n / 2 - 1] + v[n / 2]) / 2.0
+    }
+}
+
+/// The bench binaries' exit hook: honors
+///
+/// * `ELANA_BENCH_JSON=path` — write the machine-readable artifact,
+/// * `ELANA_BENCH_WRITE_BASELINE=path` — (re)seed a measured baseline,
+/// * `ELANA_BENCH_BASELINE=path` — compare and return whether the gate
+///   passed (tolerance via `ELANA_BENCH_TOLERANCE`, default 0.25).
+///
+/// Returns `false` only when a requested comparison failed; absent env
+/// vars are no-ops so plain `cargo bench` keeps its behavior.
+pub fn run_from_env(results: &[BenchResult]) -> bool {
+    if let Ok(path) = std::env::var("ELANA_BENCH_JSON") {
+        if let Err(e) = std::fs::write(&path, to_json(results).to_string())
+        {
+            eprintln!("bench gate: cannot write {path}: {e}");
+            return false;
+        }
+        println!("bench gate: wrote {path}");
+    }
+    if let Ok(path) = std::env::var("ELANA_BENCH_WRITE_BASELINE") {
+        if let Err(e) = std::fs::write(&path, to_json(results).to_string())
+        {
+            eprintln!("bench gate: cannot write baseline {path}: {e}");
+            return false;
+        }
+        println!("bench gate: seeded measured baseline {path}");
+    }
+    let Ok(path) = std::env::var("ELANA_BENCH_BASELINE") else {
+        return true;
+    };
+    let tolerance = std::env::var("ELANA_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|t| t.parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t > 0.0)
+        .unwrap_or(DEFAULT_TOLERANCE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench gate: cannot read baseline {path}: {e}");
+            return false;
+        }
+    };
+    let baseline = match parse_baseline(&text) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("bench gate: {e:#}");
+            return false;
+        }
+    };
+    let report = compare(results, &baseline, tolerance);
+    print!("{}", report.render());
+    if baseline.estimate {
+        println!(
+            "bench gate: baseline is a hand-seeded estimate (threshold \
+             widened {ESTIMATE_SLACK}x); refresh it on a quiet machine \
+             with ELANA_BENCH_WRITE_BASELINE={path}");
+    }
+    report.pass()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn result(name: &str, p50: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 10,
+            summary: Summary::from_samples(&[p50, p50, p50]).unwrap(),
+        }
+    }
+
+    fn baseline(pairs: &[(&str, f64)], estimate: bool) -> Baseline {
+        Baseline {
+            p50s: pairs
+                .iter()
+                .map(|(n, v)| (n.to_string(), *v))
+                .collect(),
+            estimate,
+        }
+    }
+
+    #[test]
+    fn uniform_machine_slowdown_passes() {
+        // every bench 3x slower than baseline: a slower machine, not a
+        // regression
+        let results =
+            vec![result("a", 3e-6), result("b", 6e-6), result("c", 9e-6)];
+        let base = baseline(&[("a", 1e-6), ("b", 2e-6), ("c", 3e-6)],
+                            false);
+        let r = compare(&results, &base, DEFAULT_TOLERANCE);
+        assert!((r.scale - 3.0).abs() < 1e-9, "{r:?}");
+        assert!(r.pass(), "{}", r.render());
+        assert_eq!(r.compared, 3);
+    }
+
+    #[test]
+    fn single_bench_regression_is_flagged() {
+        // b regressed 2x relative to its peers
+        let results =
+            vec![result("a", 1e-6), result("b", 4e-6), result("c", 3e-6)];
+        let base = baseline(&[("a", 1e-6), ("b", 2e-6), ("c", 3e-6)],
+                            false);
+        let r = compare(&results, &base, DEFAULT_TOLERANCE);
+        assert!(!r.pass());
+        assert_eq!(r.regressions.len(), 1, "{r:?}");
+        assert_eq!(r.regressions[0].0, "b");
+        assert!(r.render().contains("REGRESSED  b"), "{}", r.render());
+        // within-noise wobble does not trip the 25% tolerance
+        let noisy =
+            vec![result("a", 1.1e-6), result("b", 2.2e-6),
+                 result("c", 3.3e-6)];
+        assert!(compare(&noisy, &base, DEFAULT_TOLERANCE).pass());
+    }
+
+    #[test]
+    fn missing_bench_fails_the_gate() {
+        let results = vec![result("a", 1e-6)];
+        let base = baseline(&[("a", 1e-6), ("gone", 1e-6)], false);
+        let r = compare(&results, &base, DEFAULT_TOLERANCE);
+        assert!(!r.pass());
+        assert_eq!(r.missing, vec!["gone".to_string()]);
+        // extra benches in the run (engine benches on machines with
+        // artifacts) are simply ignored
+        let extra = vec![result("a", 1e-6), result("extra", 1e-3)];
+        assert!(compare(&extra, &baseline(&[("a", 1e-6)], false),
+                        DEFAULT_TOLERANCE)
+                    .pass());
+    }
+
+    #[test]
+    fn estimate_baselines_get_the_wide_threshold() {
+        // 3x off a hand-seeded estimate passes (threshold 200%)...
+        let results = vec![result("a", 1e-6), result("b", 6e-6)];
+        let base = baseline(&[("a", 1e-6), ("b", 2e-6)], true);
+        let r = compare(&results, &base, DEFAULT_TOLERANCE);
+        assert_eq!(r.threshold, DEFAULT_TOLERANCE * ESTIMATE_SLACK);
+        assert!(r.pass(), "{}", r.render());
+        // ...but an order-of-magnitude regression still fails
+        let bad = vec![result("a", 1e-6), result("b", 40e-6)];
+        assert!(!compare(&bad, &base, DEFAULT_TOLERANCE).pass());
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let results = vec![result("x", 2e-6), result("y", 5e-6)];
+        let text = to_json(&results).to_string();
+        let b = parse_baseline(&text).unwrap();
+        assert!(!b.estimate);
+        assert_eq!(b.p50s.len(), 2);
+        assert!((b.p50s["x"] - 2e-6).abs() < 1e-12);
+        // the estimate marker is honored
+        let seeded = r#"{"schema": "elana-bench-v1",
+                         "seeded": "estimate",
+                         "benches": {"a": {"p50_s": 1e-6}}}"#;
+        assert!(parse_baseline(seeded).unwrap().estimate);
+        // malformed baselines are loud
+        assert!(parse_baseline("{}").is_err());
+        assert!(parse_baseline(
+            r#"{"benches": {"a": {"p50_s": 0}}}"#).is_err());
+        assert!(parse_baseline(
+            r#"{"benches": {"a": {}}}"#).is_err());
+    }
+}

@@ -10,6 +10,8 @@ use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
 
+pub mod gate;
+
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {

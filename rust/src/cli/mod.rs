@@ -22,10 +22,11 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::spec::{Arrivals, ServeSpec};
-use crate::hwsim::{ParallelSpec, Workload};
+use crate::hwsim::{OperatingPoint, ParallelSpec, Workload};
 use crate::models::quant;
 use crate::planner::PlanSpec;
 use crate::sweep::spec::SweepOverrides;
+use crate::tune::TuneSpec;
 use crate::util::units::{parse_workload_len, MemUnit};
 
 /// Parsed command.
@@ -48,6 +49,9 @@ pub enum Command {
         quant: Option<crate::models::QuantScheme>,
         /// Explicit TP×PP mapping (simulated rigs only).
         parallel: Option<ParallelSpec>,
+        /// DVFS operating point from `--clock`/`--power-cap`
+        /// (simulated rigs only).
+        op: Option<OperatingPoint>,
     },
     /// A whole suite (built-in name or JSON path).
     Suite { name: String },
@@ -80,6 +84,17 @@ pub enum Command {
         out: Option<String>,
         /// Exit non-zero when no feasible recommended point exists
         /// (replaces brittle grep assertions in CI smoke jobs).
+        assert_recommendation: bool,
+    },
+    /// Power-cap/DVFS operating-point tuner: sweep a clock × cap grid
+    /// and recommend per-phase energy-optimal points under SLOs.
+    Tune {
+        spec: TuneSpec,
+        /// Print JSON to stdout instead of the markdown report.
+        json: bool,
+        /// Write the JSON report here.
+        out: Option<String>,
+        /// Exit non-zero when no SLO-feasible operating point exists.
         assert_recommendation: bool,
     },
     /// The serving subsystem: virtual-time trace-replay simulator on
@@ -142,26 +157,33 @@ pub fn parse(args: &[String]) -> Result<Command> {
         "size" => Some(&["models", "unit", "points"]),
         "latency" | "energy" => {
             Some(&["model", "device", "batch", "len", "runs", "quant",
-                   "tp", "pp", "no-energy"])
+                   "tp", "pp", "clock", "power-cap", "no-energy"])
         }
         "suite" => Some(&[]),
         "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
-                          "quant", "tp", "pp", "threads", "seed", "unit",
-                          "no-energy", "out", "json"]),
+                          "quant", "tp", "pp", "power-cap", "threads",
+                          "seed", "unit", "no-energy", "out", "json"]),
         "plan" => Some(&["models", "devices", "quant", "lens", "tp", "pp",
-                         "rate", "workers", "seed", "unit", "no-energy",
+                         "power-cap", "rate", "workers", "seed", "unit",
+                         "no-energy", "out", "json",
+                         "assert-recommendation"]),
+        "tune" => Some(&["model", "device", "batch", "len", "quant",
+                         "tp", "pp", "clocks", "power-cap", "slo-ttft",
+                         "slo-tpot", "seed", "workers", "with-energy",
                          "out", "json", "assert-recommendation"]),
         "trace" => Some(&["model", "device", "batch", "len", "out"]),
         "serve" => Some(&["model", "device", "requests", "rate", "trace",
                           "prompts", "gen", "replicas", "workers", "seed",
                           "max-wait", "max-seq-len", "quant", "tp", "pp",
-                          "no-energy", "json", "out"]),
+                          "power-cap", "phase-dvfs", "no-energy", "json",
+                          "out"]),
         "models" | "help" | "-h" | "--help" | "version" | "-V"
         | "--version" => Some(&[]),
         _ => None, // unknown command: reported by the match below
     };
-    const BOOLEAN_FLAGS: [&str; 3] =
-        ["no-energy", "json", "assert-recommendation"];
+    const BOOLEAN_FLAGS: [&str; 5] =
+        ["no-energy", "json", "assert-recommendation", "phase-dvfs",
+         "with-energy"];
     if let Some(known) = known {
         // only `suite` takes a positional argument; anywhere else a bare
         // word is a mistake (e.g. a forgotten --spec)
@@ -246,6 +268,41 @@ pub fn parse(args: &[String]) -> Result<Command> {
             .transpose()
     };
 
+    // one power cap in watts (latency, serve)
+    let cap_single = |name: &str| -> Result<Option<f64>> {
+        get(name)
+            .map(|v| match v.parse::<f64>() {
+                Ok(c) if c.is_finite() && c > 0.0 => Ok(c),
+                _ => Err(anyhow!("bad --{name} (want watts > 0)")),
+            })
+            .transpose()
+    };
+    // comma-separated cap lists (the sweep/plan/tune grid axis)
+    let cap_list = |name: &str| -> Result<Option<Vec<f64>>> {
+        get(name)
+            .map(|list| {
+                list.split(',')
+                    .map(|t| match t.trim().parse::<f64>() {
+                        Ok(c) if c.is_finite() && c > 0.0 => Ok(c),
+                        _ => Err(anyhow!(
+                            "bad --{name} entry `{t}` (want watts \
+                             > 0)")),
+                    })
+                    .collect::<Result<Vec<f64>>>()
+            })
+            .transpose()
+    };
+    // one clock fraction in (0, 1]
+    let clock_single = |name: &str| -> Result<Option<f64>> {
+        get(name)
+            .map(|v| match v.parse::<f64>() {
+                Ok(f) if f.is_finite() && f > 0.0 && f <= 1.0 => Ok(f),
+                _ => Err(anyhow!(
+                    "bad --{name} (want a clock fraction in (0, 1])")),
+            })
+            .transpose()
+    };
+
     match cmd.as_str() {
         "size" => {
             let models = get("models")
@@ -282,6 +339,13 @@ pub fn parse(args: &[String]) -> Result<Command> {
             quant: get("quant").map(quant::parse_token).transpose()?
                 .flatten(),
             parallel: parallel_single()?,
+            op: match (clock_single("clock")?, cap_single("power-cap")?) {
+                (None, None) => None,
+                (clock, cap) => Some(OperatingPoint {
+                    clock_frac: clock.unwrap_or(1.0),
+                    power_cap_w: cap,
+                }),
+            },
         }),
         "suite" => Ok(Command::Suite {
             name: positional
@@ -323,6 +387,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 quants: get("quant").map(quant_list).transpose()?,
                 tps: par_list("tp")?,
                 pps: par_list("pp")?,
+                power_caps: cap_list("power-cap")?,
                 energy: if has("no-energy") { Some(false) } else { None },
                 unit: get("unit")
                     .map(|u| {
@@ -373,6 +438,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
             if let Some(v) = par_list("pp")? {
                 spec.pps = v;
             }
+            if let Some(v) = cap_list("power-cap")? {
+                spec.power_caps = v;
+            }
             if let Some(r) = get("rate") {
                 spec.target_rps =
                     r.parse().map_err(|_| anyhow!("bad --rate"))?;
@@ -393,6 +461,75 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 spec.energy = false;
             }
             Ok(Command::Plan {
+                spec,
+                json: has("json"),
+                out: get("out").map(str::to_string),
+                assert_recommendation: has("assert-recommendation"),
+            })
+        }
+        "tune" => {
+            let mut spec = TuneSpec::default();
+            if let Some(m) = get("model") {
+                spec.model = m.to_string();
+            }
+            if let Some(d) = get("device") {
+                spec.device = d.to_string();
+            }
+            if let Some(b) = get("batch") {
+                spec.batch =
+                    b.parse().map_err(|_| anyhow!("bad --batch"))?;
+            }
+            if let Some(l) = get("len") {
+                let (p, g) = parse_workload_len(l).ok_or_else(|| {
+                    anyhow!("bad --len `{l}` (want P+G)")
+                })?;
+                spec.prompt_len = p;
+                spec.gen_len = g;
+            }
+            if let Some(q) = get("quant") {
+                quant::parse_token(q)?;
+                spec.quant = q.trim().to_ascii_lowercase();
+            }
+            spec.parallel = parallel_single()?;
+            if let Some(cs) = get("clocks") {
+                spec.clocks = cs
+                    .split(',')
+                    .map(|t| match t.trim().parse::<f64>() {
+                        Ok(f) if f.is_finite() && f > 0.0 && f <= 1.0 => {
+                            Ok(f)
+                        }
+                        _ => Err(anyhow!(
+                            "bad --clocks entry `{t}` (want fractions \
+                             in (0, 1])")),
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+            }
+            if let Some(v) = cap_list("power-cap")? {
+                spec.power_caps = v;
+            }
+            let slo = |name: &str| -> Result<Option<f64>> {
+                get(name)
+                    .map(|v| match v.parse::<f64>() {
+                        Ok(ms) if ms.is_finite() && ms > 0.0 => Ok(ms),
+                        _ => Err(anyhow!(
+                            "bad --{name} (want milliseconds > 0)")),
+                    })
+                    .transpose()
+            };
+            spec.slo_ttft_ms = slo("slo-ttft")?;
+            spec.slo_tpot_ms = slo("slo-tpot")?;
+            if let Some(s) = get("seed") {
+                spec.seed =
+                    s.parse().map_err(|_| anyhow!("bad --seed"))?;
+            }
+            if let Some(w) = get("workers") {
+                spec.workers =
+                    w.parse().map_err(|_| anyhow!("bad --workers"))?;
+            }
+            if has("with-energy") {
+                spec.energy = true;
+            }
+            Ok(Command::Tune {
                 spec,
                 json: has("json"),
                 out: get("out").map(str::to_string),
@@ -487,6 +624,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 spec.quant = q.trim().to_ascii_lowercase();
             }
             spec.parallel = parallel_single()?;
+            spec.power_cap = cap_single("power-cap")?;
+            spec.phase_dvfs = has("phase-dvfs");
             if has("no-energy") {
                 spec.energy = false;
             }
@@ -510,19 +649,26 @@ USAGE:
   elana size    [--models m1,m2] [--unit si|gib] [--points 1x1024,128x1024]
   elana latency --model MODEL --device RIG|cpu
                 [--batch B] [--len P+G] [--runs N] [--quant SCHEME]
-                [--tp N] [--pp N] [--no-energy]
+                [--tp N] [--pp N] [--clock F] [--power-cap W]
+                [--no-energy]
   elana energy  (latency with energy always on)
   elana suite   table2|table3|table4|path/to/suite.json
   elana sweep   [--spec sweep.json] [--models m1,m2] [--devices d1,d2]
                 [--batches 1,8] [--lens 256+256,512+512]
                 [--quant native,w4a16] [--tp 1,2,4] [--pp 1,2]
-                [--threads N] [--seed S] [--unit si|gib] [--no-energy]
-                [--out sweep.json] [--json]
+                [--power-cap 150,220] [--threads N] [--seed S]
+                [--unit si|gib] [--no-energy] [--out sweep.json] [--json]
   elana plan    [--models m1,m2] [--devices d1,d2]
                 [--quant bf16,w8a16,w4a16,w4a8kv4]
                 [--lens 512+512,2048+2048] [--tp 1,2,4] [--pp 1,2]
-                [--rate RPS] [--workers W] [--seed S] [--unit si|gib]
-                [--no-energy] [--out plan.json] [--json]
+                [--power-cap 150,220] [--rate RPS] [--workers W]
+                [--seed S] [--unit si|gib] [--no-energy]
+                [--out plan.json] [--json] [--assert-recommendation]
+  elana tune    [--model MODEL] [--device RIG] [--batch B] [--len P+G]
+                [--quant SCHEME] [--tp N] [--pp N]
+                [--clocks 0.4,0.6,0.8,1.0] [--power-cap 150,220]
+                [--slo-ttft MS] [--slo-tpot MS] [--seed S] [--workers W]
+                [--with-energy] [--out tune.json] [--json]
                 [--assert-recommendation]
   elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
                 [--out trace.json]
@@ -530,8 +676,8 @@ USAGE:
                 [--rate RPS | --trace trace.json] [--prompts LO..HI]
                 [--gen G] [--replicas R] [--workers W] [--seed S]
                 [--max-wait MS] [--max-seq-len L] [--quant SCHEME]
-                [--tp N] [--pp N] [--no-energy] [--out serve.json]
-                [--json]
+                [--tp N] [--pp N] [--power-cap W] [--phase-dvfs]
+                [--no-energy] [--out serve.json] [--json]
   elana models
   elana help | version
 
@@ -542,6 +688,11 @@ Quant schemes: native (the model's own dtype), bf16, w8a16, w4a16
 Parallelism: --tp shards tensors across ranks (all-reduce over the
 rig's link), --pp pipelines layer stages; tp x pp must fit the rig's
 device count. Without the flags the legacy whole-rig model runs.
+DVFS: --clock runs at a fraction of the nominal SM clock, --power-cap
+throttles until the worst-case sustained watts fit (per device); `tune`
+sweeps a clock x cap grid and recommends per-phase operating points
+under TTFT/TPOT SLOs; `serve --phase-dvfs` downclocks decode to the
+memory-bound crossover. Without the flags stock clocks run.
 Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
 ";
 
@@ -588,7 +739,7 @@ mod tests {
              --len 512+512 --runs 100")).unwrap();
         match c {
             Command::Latency { model, device, workload, energy, runs,
-                               quant, parallel } => {
+                               quant, parallel, op } => {
                 assert_eq!(model, "llama-3.1-8b");
                 assert_eq!(device, "a6000");
                 assert_eq!(workload.batch, 1);
@@ -598,9 +749,119 @@ mod tests {
                 assert_eq!(runs, Some(100));
                 assert!(quant.is_none());
                 assert!(parallel.is_none());
+                assert!(op.is_none());
             }
             _ => panic!("{c:?}"),
         }
+    }
+
+    #[test]
+    fn dvfs_flags_parse_and_reject_bad_values() {
+        // latency: --clock and --power-cap build one operating point
+        match parse(&argv("latency --model m --clock 0.7 --power-cap 200"))
+            .unwrap()
+        {
+            Command::Latency { op, .. } => {
+                let op = op.unwrap();
+                assert_eq!(op.clock_frac, 0.7);
+                assert_eq!(op.power_cap_w, Some(200.0));
+            }
+            c => panic!("{c:?}"),
+        }
+        match parse(&argv("latency --model m --power-cap 150")).unwrap() {
+            Command::Latency { op, .. } => {
+                assert_eq!(op, Some(OperatingPoint::cap(150.0)));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("latency --model m --clock 0")).is_err());
+        assert!(parse(&argv("latency --model m --clock 1.5")).is_err());
+        assert!(parse(&argv("latency --model m --power-cap -5")).is_err());
+        assert!(parse(&argv("latency --model m --power-cap fast"))
+                    .is_err());
+        // sweep/plan: comma lists
+        match parse(&argv("sweep --power-cap 150,220.5")).unwrap() {
+            Command::Sweep { overrides, .. } => {
+                assert_eq!(overrides.power_caps,
+                           Some(vec![150.0, 220.5]));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("sweep --power-cap 150,zero")).is_err());
+        match parse(&argv("plan --power-cap 200")).unwrap() {
+            Command::Plan { spec, .. } => {
+                assert_eq!(spec.power_caps, vec![200.0]);
+            }
+            c => panic!("{c:?}"),
+        }
+        // serve: single cap + the phase policy flag
+        match parse(&argv("serve --power-cap 220 --phase-dvfs")).unwrap()
+        {
+            Command::Serve { spec, .. } => {
+                assert_eq!(spec.power_cap, Some(220.0));
+                assert!(spec.phase_dvfs);
+            }
+            c => panic!("{c:?}"),
+        }
+        match parse(&argv("serve")).unwrap() {
+            Command::Serve { spec, .. } => {
+                assert_eq!(spec.power_cap, None);
+                assert!(!spec.phase_dvfs);
+            }
+            c => panic!("{c:?}"),
+        }
+        // boolean: must not swallow a following bare word
+        assert!(parse(&argv("serve --phase-dvfs stray")).is_err());
+    }
+
+    #[test]
+    fn parse_tune_defaults_and_full_flag_set() {
+        match parse(&argv("tune")).unwrap() {
+            Command::Tune { spec, json, out, assert_recommendation } => {
+                assert_eq!(spec, TuneSpec::default());
+                assert!(!json && out.is_none());
+                assert!(!assert_recommendation);
+            }
+            c => panic!("{c:?}"),
+        }
+        let c = parse(&argv(
+            "tune --model llama-3.2-1b --device orin --batch 2 \
+             --len 256+128 --quant w4a16 --clocks 0.5,0.75,1.0 \
+             --power-cap 10,15 --slo-ttft 400 --slo-tpot 60 --seed 7 \
+             --workers 4 --with-energy --out /tmp/t.json --json \
+             --assert-recommendation")).unwrap();
+        match c {
+            Command::Tune { spec, json, out, assert_recommendation } => {
+                assert_eq!(spec.model, "llama-3.2-1b");
+                assert_eq!(spec.device, "orin");
+                assert_eq!(spec.batch, 2);
+                assert_eq!((spec.prompt_len, spec.gen_len), (256, 128));
+                assert_eq!(spec.quant, "w4a16");
+                assert_eq!(spec.clocks, vec![0.5, 0.75, 1.0]);
+                assert_eq!(spec.power_caps, vec![10.0, 15.0]);
+                assert_eq!(spec.slo_ttft_ms, Some(400.0));
+                assert_eq!(spec.slo_tpot_ms, Some(60.0));
+                assert_eq!(spec.seed, 7);
+                assert_eq!(spec.workers, 4);
+                assert!(spec.energy);
+                assert!(json);
+                assert_eq!(out.as_deref(), Some("/tmp/t.json"));
+                assert!(assert_recommendation);
+                spec.validate().unwrap();
+            }
+            c => panic!("{c:?}"),
+        }
+        // malformed knobs rejected at parse time
+        assert!(parse(&argv("tune --clocks 0.5,nope")).is_err());
+        assert!(parse(&argv("tune --clocks 2.0")).is_err());
+        assert!(parse(&argv("tune --slo-tpot -3")).is_err());
+        assert!(parse(&argv("tune --power-cap 0")).is_err());
+        assert!(parse(&argv("tune --quant int3")).is_err());
+        assert!(parse(&argv("tune --len 512")).is_err());
+        assert!(parse(&argv("tune stray")).is_err());
+        let err = parse(&argv("tune --frobnicate 3"))
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown flag --frobnicate"), "{err}");
     }
 
     #[test]

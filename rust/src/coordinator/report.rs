@@ -61,6 +61,16 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
             "parallelism: tp={} x pp={} ({} rank(s) per replica)",
             p.tp, p.pp, p.n_ranks());
     }
+    if let Some(d) = o.dvfs {
+        let cap = match d.cap_w {
+            Some(c) => format!("cap {c} W per device — "),
+            None => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "dvfs: {cap}prefill @ {:.0} MHz, decode @ {:.0} MHz",
+            d.prefill_mhz, d.decode_mhz);
+    }
     if o.wall_clock {
         let _ = writeln!(
             out,
@@ -117,6 +127,16 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
                  ({:.1}% on the link)",
                 (total - link) / toks, link / toks,
                 link / total.max(f64::MIN_POSITIVE) * 100.0);
+        }
+        if let Some(d) = o.dvfs {
+            let j_prefill = o.prefill_joules();
+            let j_decode = (total - j_prefill).max(0.0);
+            let _ = writeln!(
+                out,
+                "J/token by operating point: {:.3} prefill @ {:.0} MHz \
+                 + {:.3} decode @ {:.0} MHz",
+                j_prefill / toks, d.prefill_mhz, j_decode / toks,
+                d.decode_mhz);
         }
     }
     out
@@ -216,6 +236,18 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         root.push(("tp", Json::num(p.tp as f64)));
         root.push(("pp", Json::num(p.pp as f64)));
     }
+    if let Some(d) = o.dvfs {
+        root.push(("dvfs", Json::obj(vec![
+            ("cap_w", match d.cap_w {
+                Some(c) => Json::num(c),
+                None => Json::Null,
+            }),
+            ("prefill_frac", Json::num(d.prefill_frac)),
+            ("decode_frac", Json::num(d.decode_frac)),
+            ("prefill_mhz", Json::num(d.prefill_mhz)),
+            ("decode_mhz", Json::num(d.decode_mhz)),
+        ])));
+    }
     if let Some(total) = o.total_joules {
         let toks = o.generated_tokens().max(1) as f64;
         root.push(("total_joules", Json::num(total)));
@@ -224,6 +256,12 @@ pub fn to_json(o: &ServeOutcome) -> Json {
             root.push(("interconnect_joules", Json::num(link)));
             root.push(("j_per_token_interconnect",
                        Json::num(link / toks)));
+        }
+        if o.dvfs.is_some() {
+            let j_prefill = o.prefill_joules();
+            root.push(("j_prefill_joules", Json::num(j_prefill)));
+            root.push(("j_decode_joules",
+                       Json::num((total - j_prefill).max(0.0))));
         }
     }
     Json::obj(root)
@@ -268,6 +306,42 @@ mod tests {
     fn markdown_omits_energy_when_disabled() {
         let text = render_markdown(&outcome(false));
         assert!(!text.contains("J/token"), "{text}");
+    }
+
+    #[test]
+    fn dvfs_run_renders_operating_points_and_phase_split() {
+        let spec = ServeSpec {
+            requests: 16,
+            arrivals: Arrivals::Poisson { rate_rps: 30.0 },
+            prompt_lo: 16,
+            prompt_hi: 64,
+            gen_len: 8,
+            seed: 3,
+            power_cap: Some(220.0),
+            phase_dvfs: true,
+            ..ServeSpec::default()
+        };
+        let o = simulate::run(&spec).unwrap();
+        let text = render_markdown(&o);
+        assert!(text.contains("dvfs: cap 220 W per device"), "{text}");
+        assert!(text.contains("J/token by operating point:"), "{text}");
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        let d = v.get("dvfs").expect("dvfs block");
+        assert_eq!(d.get("cap_w").unwrap().as_f64(), Some(220.0));
+        let pm = d.get("prefill_mhz").unwrap().as_f64().unwrap();
+        let dm = d.get("decode_mhz").unwrap().as_f64().unwrap();
+        assert!(dm < pm, "decode {dm} must downclock below prefill {pm}");
+        let jp = v.get("j_prefill_joules").unwrap().as_f64().unwrap();
+        let jd = v.get("j_decode_joules").unwrap().as_f64().unwrap();
+        let total = v.get("total_joules").unwrap().as_f64().unwrap();
+        assert!(jp > 0.0 && jd > 0.0);
+        assert!((jp + jd - total).abs() < total * 1e-9);
+        // legacy artifacts carry none of the dvfs keys
+        let lv = Json::parse(&to_json(&outcome(true)).to_string())
+            .unwrap();
+        assert!(lv.get("dvfs").is_none());
+        assert!(lv.get("j_prefill_joules").is_none());
+        assert!(!render_markdown(&outcome(true)).contains("dvfs:"));
     }
 
     #[test]

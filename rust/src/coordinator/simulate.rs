@@ -25,6 +25,8 @@ use anyhow::{ensure, Context, Result};
 
 use crate::backend::{EngineBackend, ExecutionBackend, SimBackend};
 use crate::engine::TokenBatch;
+use crate::hwsim::{self, OperatingPoint};
+use crate::models;
 use crate::runtime::Manifest;
 use crate::sweep::pool;
 use crate::util::Rng;
@@ -106,6 +108,77 @@ pub struct ServeOutcome {
     /// Interconnect share of the run's energy, joules (analytic; only
     /// under an explicit parallel mapping).
     pub interconnect_joules: Option<f64>,
+    /// Resolved DVFS policy (present when `--power-cap` or
+    /// `--phase-dvfs` was given): what each phase actually ran at.
+    pub dvfs: Option<DvfsResolved>,
+}
+
+/// The per-phase operating points a DVFS-enabled serve run resolved to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DvfsResolved {
+    /// The requested per-device cap, watts (`None` = clock policy only).
+    pub cap_w: Option<f64>,
+    /// Effective clock fraction of each phase after clamp + throttle.
+    pub prefill_frac: f64,
+    pub decode_frac: f64,
+    /// The same, in MHz.
+    pub prefill_mhz: f64,
+    pub decode_mhz: f64,
+}
+
+/// The (prefill, decode) operating points a spec's DVFS knobs resolve
+/// to: prefill at the highest clock the cap allows; decode additionally
+/// downclocked to the memory-bound crossover of the deployment's
+/// largest compiled shape when `--phase-dvfs` is on. `None` when
+/// neither knob was given — the legacy, bit-identical path.
+pub fn resolve_ops(spec: &ServeSpec)
+                   -> Result<Option<(OperatingPoint, OperatingPoint)>> {
+    if spec.power_cap.is_none() && !spec.phase_dvfs {
+        return Ok(None);
+    }
+    let prefill = OperatingPoint {
+        clock_frac: 1.0,
+        power_cap_w: spec.power_cap,
+    };
+    let decode = if spec.phase_dvfs {
+        let arch = models::lookup(&spec.model).ok_or_else(|| {
+            anyhow::anyhow!("unknown model `{}`", spec.model)
+        })?;
+        let rig = hwsim::device::rig_by_name(&spec.device)
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown device `{}`", spec.device)
+            })?;
+        let scheme = spec.scheme()?.unwrap_or_else(|| {
+            crate::models::QuantScheme::native(arch.dtype)
+        });
+        let policy = spec.sim_policy();
+        let top_bucket =
+            policy.prompt_buckets.last().copied().unwrap_or(16);
+        let frac = hwsim::decode_memory_bound_frac(
+            &arch, &rig, &scheme, policy.max_batch(),
+            top_bucket + spec.gen_len);
+        OperatingPoint { clock_frac: frac, power_cap_w: spec.power_cap }
+    } else {
+        prefill
+    };
+    Ok(Some((prefill, decode)))
+}
+
+/// Project resolved operating points onto the report form (effective
+/// clocks after the device's clamp and cap throttle).
+fn resolve_dvfs(spec: &ServeSpec, ops: &(OperatingPoint, OperatingPoint))
+                -> Option<DvfsResolved> {
+    let rig = hwsim::device::rig_by_name(&spec.device)?;
+    let d = &rig.device;
+    let pf = d.effective_frac(&ops.0);
+    let df = d.effective_frac(&ops.1);
+    Some(DvfsResolved {
+        cap_w: spec.power_cap,
+        prefill_frac: pf,
+        decode_frac: df,
+        prefill_mhz: pf * d.freq.base_mhz,
+        decode_mhz: df * d.freq.base_mhz,
+    })
 }
 
 impl ServeOutcome {
@@ -141,6 +214,16 @@ impl ServeOutcome {
     pub fn mean_padding_waste(&self) -> f64 {
         mean_padding_waste(&self.batches)
     }
+
+    /// Total prefill-phase joules across energy-attributed batches —
+    /// the prefill side of the phase split both the markdown and JSON
+    /// reports render (the decode side is `total_joules` minus this).
+    pub fn prefill_joules(&self) -> f64 {
+        self.batches
+            .iter()
+            .filter_map(|b| b.joules.map(|j| j.0))
+            .sum()
+    }
 }
 
 /// Mean padding waste over executed batches — shared by the simulator
@@ -162,6 +245,7 @@ pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
     if spec.is_simulated() {
         // the event loop runs with playback off (timings are analytic);
         // energy replays per batch in the parallel pass below
+        let ops = resolve_ops(spec)?;
         let mut backend =
             SimBackend::new(&spec.model, &spec.device, false, spec.seed)?
                 .with_max_seq_len(spec.max_seq_len);
@@ -171,9 +255,15 @@ pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
         if let Some(p) = spec.parallel {
             backend = backend.with_parallel(p)?;
         }
+        if let Some((p_op, d_op)) = &ops {
+            backend = backend.with_phase_ops(*p_op, *d_op);
+        }
         let mut outcome = simulate(spec, &mut backend)?;
+        if let Some(o) = &ops {
+            outcome.dvfs = resolve_dvfs(spec, o);
+        }
         if spec.energy {
-            attribute_energy(spec, &mut outcome)?;
+            attribute_energy(spec, &ops, &mut outcome)?;
         }
         Ok(outcome)
     } else {
@@ -309,6 +399,7 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
         wall_clock: false,
         total_joules: None,
         interconnect_joules: None,
+        dvfs: None,
     })
 }
 
@@ -316,8 +407,9 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
 /// backend with the sensor re-keyed to the
 /// `mix(mix(seed, SERVE_ENERGY), i)` stream, so results depend only on
 /// the batch index — never on which worker thread replays it.
-fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
-                    -> Result<()> {
+fn attribute_energy(spec: &ServeSpec,
+                    ops: &Option<(OperatingPoint, OperatingPoint)>,
+                    outcome: &mut ServeOutcome) -> Result<()> {
     let shapes: Vec<(usize, usize, usize)> = outcome
         .batches
         .iter()
@@ -338,10 +430,13 @@ fn attribute_energy(spec: &ServeSpec, outcome: &mut ServeOutcome)
             if let Some(p) = spec.parallel {
                 b = b.with_parallel(p)?;
             }
+            if let Some((p_op, d_op)) = ops {
+                b = b.with_phase_ops(*p_op, *d_op);
+            }
             let tb = TokenBatch::new(batch, prompt,
                                      vec![0; batch * prompt])?;
             let run = b.generate(&tb, gen)?;
-            Ok((b.run_energy(&run)?, run.interconnect_joules))
+            Ok((b.run_energy(&run)?.triple(), run.interconnect_joules))
         });
     let mut total = 0.0;
     let mut link_total = 0.0;
@@ -439,6 +534,7 @@ pub fn outcome_from_metrics(spec: &ServeSpec,
         wall_clock: true,
         total_joules: None,
         interconnect_joules: None,
+        dvfs: None,
     }
 }
 
@@ -596,6 +692,61 @@ mod tests {
         let ol = run(&legacy).unwrap();
         assert!(ol.interconnect_joules.is_none());
         assert!(ol.batches.iter().all(|b| b.interconnect_j.is_none()));
+    }
+
+    #[test]
+    fn phase_dvfs_serving_downclocks_decode_and_saves_energy() {
+        let mut base = quick_spec();
+        base.energy = true;
+        let mut dvfs = base.clone();
+        dvfs.phase_dvfs = true;
+        dvfs.power_cap = Some(250.0);
+        let ob = run(&base).unwrap();
+        let od = run(&dvfs).unwrap();
+        // legacy runs carry no dvfs block
+        assert!(ob.dvfs.is_none());
+        let d = od.dvfs.expect("dvfs block on a phase-dvfs run");
+        assert_eq!(d.cap_w, Some(250.0));
+        assert!(d.decode_frac < d.prefill_frac,
+                "decode must downclock below prefill: {d:?}");
+        assert!(d.decode_mhz < d.prefill_mhz);
+        // every request still gets served off the same trace
+        assert_eq!(ob.requests.len(), od.requests.len());
+        // decode stays memory-bound by construction, so the mean TPOT
+        // holds (weight-stream-dominated steps are ~batch-independent,
+        // absorbing any batch-composition shift from the slower capped
+        // prefill) while J/token drops hard
+        let mean_tpot = |o: &ServeOutcome| {
+            o.requests.iter().map(|r| r.tpot_s).sum::<f64>()
+                / o.requests.len() as f64
+        };
+        assert!(mean_tpot(&od) <= mean_tpot(&ob) * 1.02,
+                "{} vs {}", mean_tpot(&od), mean_tpot(&ob));
+        let jt = |o: &ServeOutcome| {
+            o.total_joules.unwrap() / o.generated_tokens() as f64
+        };
+        assert!(jt(&od) < jt(&ob) * 0.8, "{} vs {}", jt(&od), jt(&ob));
+    }
+
+    #[test]
+    fn capped_serving_without_phase_policy_caps_both_phases() {
+        let mut s = quick_spec();
+        s.energy = true;
+        s.power_cap = Some(180.0);
+        let o = run(&s).unwrap();
+        let d = o.dvfs.expect("dvfs block on a capped run");
+        assert_eq!(d.prefill_frac, d.decode_frac,
+                   "no phase split without --phase-dvfs");
+        assert!(d.prefill_frac < 1.0, "180 W must throttle an A6000");
+        // worker count still never changes a joule
+        let mut s8 = s.clone();
+        s8.workers = 8;
+        let o8 = run(&s8).unwrap();
+        let js: Vec<_> =
+            o.batches.iter().map(|b| b.joules.unwrap()).collect();
+        let js8: Vec<_> =
+            o8.batches.iter().map(|b| b.joules.unwrap()).collect();
+        assert_eq!(js, js8);
     }
 
     #[test]

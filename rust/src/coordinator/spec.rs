@@ -69,6 +69,15 @@ pub struct ServeSpec {
     /// *and* the per-rank KV-budget admission; the `cpu` engine runs
     /// on one device.
     pub parallel: Option<ParallelSpec>,
+    /// Per-device power cap, watts (`--power-cap`). `None` = uncapped.
+    /// Simulated rigs only.
+    pub power_cap: Option<f64>,
+    /// Phase-aware downclock policy (`--phase-dvfs`): prefill runs at
+    /// the highest clock the cap allows, decode at the lowest clock
+    /// that keeps the step memory-bound for the deployment's largest
+    /// compiled shape — "TokenPowerBench"'s per-phase power story.
+    /// Simulated rigs only.
+    pub phase_dvfs: bool,
 }
 
 impl Default for ServeSpec {
@@ -89,6 +98,8 @@ impl Default for ServeSpec {
             max_seq_len: 4096,
             quant: "native".to_string(),
             parallel: None,
+            power_cap: None,
+            phase_dvfs: false,
         }
     }
 }
@@ -203,6 +214,14 @@ impl ServeSpec {
             }
         }
         self.scheme()?;
+        if let Some(cap) = self.power_cap {
+            ensure!(cap.is_finite() && cap > 0.0,
+                    "power cap must be positive watts (got {cap})");
+        }
+        ensure!(self.is_simulated()
+                    || (self.power_cap.is_none() && !self.phase_dvfs),
+                "--power-cap/--phase-dvfs apply to simulated rigs only; \
+                 the `cpu` engine has no modeled DVFS governor");
         ensure!(self.is_simulated() || self.scheme()?.is_none(),
                 "--quant applies to simulated rigs only; the `cpu` \
                  engine executes unquantized artifacts");
@@ -401,6 +420,35 @@ mod tests {
         };
         let err = cpu.validate().unwrap_err().to_string();
         assert!(err.contains("single device"), "{err}");
+    }
+
+    #[test]
+    fn dvfs_knobs_validate_and_are_simulated_only() {
+        let mut s = ServeSpec { power_cap: Some(200.0),
+                                ..ServeSpec::default() };
+        s.validate().unwrap();
+        s.phase_dvfs = true;
+        s.validate().unwrap();
+        s.power_cap = Some(0.0);
+        assert!(s.validate().is_err());
+        s.power_cap = Some(f64::NAN);
+        assert!(s.validate().is_err());
+        // the engine has no modeled governor
+        let cpu = ServeSpec {
+            device: "cpu".into(),
+            model: "elana-tiny".into(),
+            power_cap: Some(30.0),
+            ..ServeSpec::default()
+        };
+        let err = cpu.validate().unwrap_err().to_string();
+        assert!(err.contains("simulated rigs only"), "{err}");
+        let cpu = ServeSpec {
+            device: "cpu".into(),
+            model: "elana-tiny".into(),
+            phase_dvfs: true,
+            ..ServeSpec::default()
+        };
+        assert!(cpu.validate().is_err());
     }
 
     #[test]

@@ -13,6 +13,101 @@
 
 use crate::power::DevicePowerModel;
 
+/// DVFS characteristics of one device: how the SM clock scales the
+/// roofline and the power envelope.
+///
+/// The model is the standard voltage/frequency story: compute
+/// throughput scales ~linearly with the SM clock while DRAM bandwidth
+/// stays ~flat (its own clock domain), and dynamic power scales
+/// superlinearly (`P_dyn ∝ f^gamma`, gamma > 1, because voltage drops
+/// with frequency). Equivalently, energy *per operation* scales as
+/// `f^(gamma-1)` — the reason power capping saves J/token on
+/// bandwidth-bound decode at almost no latency cost ("From Words to
+/// Watts", Samsi et al.).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FreqModel {
+    /// Nominal (max sustained boost) SM clock, MHz — the 1.0 point of
+    /// an [`OperatingPoint`]'s `clock_frac`.
+    pub base_mhz: f64,
+    /// DVFS floor as a fraction of the nominal clock: requests and cap
+    /// throttles clamp here, they never stop the clock.
+    pub min_frac: f64,
+    /// Dynamic-power superlinearity: sustained dynamic power at clock
+    /// fraction `f` under a *compute-bound* load scales as `f^gamma`.
+    pub gamma: f64,
+}
+
+impl FreqModel {
+    /// Worst-case sustained device power at clock fraction `f`, watts:
+    /// `idle + (sustain - idle) · f^(gamma-1)`. The exponent is
+    /// `gamma - 1` (not `gamma`) because the governor must assume a
+    /// memory-bound load — ops/s stay flat when DRAM binds, so power
+    /// falls only by the per-op energy factor. Capping against this
+    /// curve guarantees the cap holds for *every* workload.
+    pub fn sustain_watts(&self, power: &DevicePowerModel, f: f64) -> f64 {
+        let f = f.clamp(self.min_frac, 1.0);
+        power.idle_w
+            + (power.sustain_w - power.idle_w) * f.powf(self.gamma - 1.0)
+    }
+
+    /// Largest clock fraction whose worst-case sustained power fits
+    /// under `cap_w`, clamped to `[min_frac, 1]`. Caps below the
+    /// DVFS-floor plateau are unreachable: the clock pins at the floor
+    /// (real governors do the same — they cannot halt the card).
+    pub fn cap_frac(&self, power: &DevicePowerModel, cap_w: f64) -> f64 {
+        let span = power.sustain_w - power.idle_w;
+        if span <= 0.0 {
+            return 1.0;
+        }
+        let ratio = ((cap_w - power.idle_w) / span).max(0.0);
+        ratio.powf(1.0 / (self.gamma - 1.0)).clamp(self.min_frac, 1.0)
+    }
+}
+
+/// One DVFS operating point: a requested SM-clock fraction plus an
+/// optional per-device power cap that may throttle it further.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    /// Requested SM clock as a fraction of the nominal clock (1.0 =
+    /// stock). Clamped to the device's `[min_frac, 1]` range.
+    pub clock_frac: f64,
+    /// Per-device power cap, watts (`None` = uncapped). The effective
+    /// clock is the requested one throttled until the worst-case
+    /// sustained power fits under the cap.
+    pub power_cap_w: Option<f64>,
+}
+
+impl Default for OperatingPoint {
+    fn default() -> OperatingPoint {
+        OperatingPoint::uncapped()
+    }
+}
+
+impl OperatingPoint {
+    /// Stock clocks, no cap — the identity point.
+    pub fn uncapped() -> OperatingPoint {
+        OperatingPoint { clock_frac: 1.0, power_cap_w: None }
+    }
+
+    /// Stock clocks under a power cap.
+    pub fn cap(watts: f64) -> OperatingPoint {
+        OperatingPoint { clock_frac: 1.0, power_cap_w: Some(watts) }
+    }
+
+    /// An explicit clock fraction, uncapped.
+    pub fn clock(frac: f64) -> OperatingPoint {
+        OperatingPoint { clock_frac: frac, power_cap_w: None }
+    }
+
+    /// True for the stock point — `DeviceSpec::at` then returns the
+    /// device untouched (no arithmetic), keeping legacy paths
+    /// bit-identical.
+    pub fn is_identity(&self) -> bool {
+        self.clock_frac == 1.0 && self.power_cap_w.is_none()
+    }
+
+}
+
 /// One accelerator's static characteristics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSpec {
@@ -41,6 +136,8 @@ pub struct DeviceSpec {
     pub pj_per_byte: f64,
     /// Sensor-level power curve (idle/sustain) for the NVML/jtop sims.
     pub power: DevicePowerModel,
+    /// DVFS model: clock range and dynamic-power superlinearity.
+    pub freq: FreqModel,
 }
 
 impl DeviceSpec {
@@ -57,6 +154,76 @@ impl DeviceSpec {
     /// Achieved memory bandwidth, B/s.
     pub fn achieved_bw(&self) -> f64 {
         self.peak_bw_gbs * 1e9 * self.eta_bw
+    }
+
+    /// The clock fraction this device actually runs at an operating
+    /// point: the requested fraction clamped to the DVFS range, then
+    /// throttled until the worst-case sustained power fits the cap.
+    pub fn effective_frac(&self, op: &OperatingPoint) -> f64 {
+        let f = op.clock_frac.clamp(self.freq.min_frac, 1.0);
+        match op.power_cap_w {
+            Some(cap) => f.min(self.freq.cap_frac(&self.power, cap)),
+            None => f,
+        }
+    }
+
+    /// Derive the device as it behaves at an operating point:
+    ///
+    /// * compute roofline scales linearly with the effective clock
+    ///   (`peak_tflops · f` — both prefill- and decode-shaped GEMMs),
+    /// * DRAM bandwidth stays flat (its own clock domain),
+    /// * energy per FLOP and per byte scale as `f^(gamma-1)` (the V·f
+    ///   story; the byte coefficient lumps SM streaming power, which is
+    ///   what downclocking actually saves on memory-bound decode),
+    /// * the sensor plateau drops to the worst-case sustained power at
+    ///   `f`, so playback never exceeds the cap,
+    /// * fixed launch overheads stay put (host-side work).
+    ///
+    /// The identity point returns the device untouched — zero
+    /// arithmetic, so every legacy path stays bit-identical.
+    pub fn at(&self, op: &OperatingPoint) -> DeviceSpec {
+        if op.is_identity() {
+            return self.clone();
+        }
+        let f = self.effective_frac(op);
+        let per_op = f.powf(self.freq.gamma - 1.0);
+        let mut d = self.clone();
+        d.peak_tflops = self.peak_tflops * f;
+        d.pj_per_flop = self.pj_per_flop * per_op;
+        d.pj_per_byte = self.pj_per_byte * per_op;
+        d.power = DevicePowerModel {
+            sustain_w: self.freq.sustain_watts(&self.power, f),
+            ..self.power
+        };
+        d
+    }
+
+    /// Report label of an operating point *as this device actually runs
+    /// it*: the cap-throttled effective clock, e.g. `900 MHz @ 120 W` —
+    /// never the requested clock, so a throttling cap is visible in
+    /// every surface that prints it.
+    pub fn op_label(&self, op: &OperatingPoint) -> String {
+        let mhz = self.effective_frac(op) * self.freq.base_mhz;
+        match op.power_cap_w {
+            Some(c) => format!("{mhz:.0} MHz @ {c:.0} W"),
+            None => format!("{mhz:.0} MHz"),
+        }
+    }
+
+    /// Power curve the simulated sensor replays for a phase-split run
+    /// at (prefill, decode) operating points: the higher plateau of the
+    /// two derivations, so *both* phases' watts stay representable by
+    /// one curve (the phased simulator inverts utilizations against
+    /// this same selection).
+    pub fn sensor_power_at(&self, prefill: &OperatingPoint,
+                           decode: &OperatingPoint) -> DevicePowerModel {
+        let p = self.at(prefill).power;
+        let d = self.at(decode).power;
+        if p.sustain_w >= d.sustain_w {
+            p
+        } else {
+            d
+        }
     }
 }
 
@@ -157,6 +324,18 @@ impl Rig {
         (self.n_devices as f64 * self.device.mem_gb * 1e9) as u64
     }
 
+    /// The rig as it behaves at a DVFS operating point: every device
+    /// derives through [`DeviceSpec::at`] (caps are per-device, so TP
+    /// ranks each respect the cap); the interconnect is its own clock
+    /// domain and stays put. The identity point returns the rig
+    /// untouched.
+    pub fn at(&self, op: &OperatingPoint) -> Rig {
+        if op.is_identity() {
+            return self.clone();
+        }
+        Rig { device: self.device.at(op), ..self.clone() }
+    }
+
     /// Ring all-reduce cost for `bytes` per rank spread over `count`
     /// collective calls (2(N-1)/N transfer volume; every call pays the
     /// fixed latency — on PCIe rigs this dominates small decode-step
@@ -191,6 +370,7 @@ pub fn a6000() -> DeviceSpec {
             alpha: 0.6,
             noise_w: 4.0,
         },
+        freq: FreqModel { base_mhz: 1800.0, min_frac: 0.35, gamma: 2.4 },
     }
 }
 
@@ -261,6 +441,7 @@ pub fn agx_thor() -> DeviceSpec {
             alpha: 0.7,
             noise_w: 1.0,
         },
+        freq: FreqModel { base_mhz: 1575.0, min_frac: 0.40, gamma: 2.2 },
     }
 }
 
@@ -284,6 +465,7 @@ pub fn orin_nano() -> DeviceSpec {
             alpha: 0.7,
             noise_w: 0.05,
         },
+        freq: FreqModel { base_mhz: 625.0, min_frac: 0.40, gamma: 2.2 },
     }
 }
 
@@ -309,6 +491,7 @@ pub fn a100() -> DeviceSpec {
             alpha: 0.6,
             noise_w: 5.0,
         },
+        freq: FreqModel { base_mhz: 1410.0, min_frac: 0.35, gamma: 2.4 },
     }
 }
 
@@ -332,6 +515,7 @@ pub fn h100() -> DeviceSpec {
             alpha: 0.6,
             noise_w: 8.0,
         },
+        freq: FreqModel { base_mhz: 1980.0, min_frac: 0.35, gamma: 2.4 },
     }
 }
 
@@ -465,6 +649,95 @@ mod tests {
             assert!(rig_by_name(name).is_some(), "{name}");
         }
         assert_eq!(all_rig_names().len(), 9);
+    }
+
+    #[test]
+    fn identity_operating_point_is_a_noop() {
+        let d = a6000();
+        let op = OperatingPoint::uncapped();
+        assert!(op.is_identity());
+        assert_eq!(d.at(&op), d);
+        let rig = a6000_x4();
+        assert_eq!(rig.at(&op), rig);
+        // clock 1.0 with no cap spelled explicitly is still the identity
+        assert!(OperatingPoint::clock(1.0).is_identity());
+        assert!(!OperatingPoint::cap(250.0).is_identity());
+        assert!(!OperatingPoint::clock(0.8).is_identity());
+    }
+
+    #[test]
+    fn downclock_scales_compute_not_bandwidth() {
+        let d = a6000();
+        let half = d.at(&OperatingPoint::clock(0.5));
+        assert!((half.achieved_flops() - 0.5 * d.achieved_flops()).abs()
+                    < 1e-3 * d.achieved_flops());
+        assert_eq!(half.achieved_bw(), d.achieved_bw());
+        // per-op energy drops superlinearly-derived f^(gamma-1)
+        assert!(half.pj_per_flop < d.pj_per_flop);
+        assert!(half.pj_per_byte < d.pj_per_byte);
+        assert!(half.pj_per_flop > d.pj_per_flop * 0.5 * 0.5,
+                "per-op energy cannot drop faster than f^2 here");
+        // overheads and idle power are untouched
+        assert_eq!(half.prefill_overhead_s, d.prefill_overhead_s);
+        assert_eq!(half.power.idle_w, d.power.idle_w);
+        // the sustained plateau drops with the clock
+        assert!(half.power.sustain_w < d.power.sustain_w);
+    }
+
+    #[test]
+    fn cap_throttles_the_effective_clock() {
+        let d = a6000();
+        // a generous cap does not throttle stock clocks
+        assert_eq!(d.effective_frac(&OperatingPoint::cap(1000.0)), 1.0);
+        // a tight cap does, monotonically
+        let f200 = d.effective_frac(&OperatingPoint::cap(200.0));
+        let f120 = d.effective_frac(&OperatingPoint::cap(120.0));
+        assert!(f200 < 1.0, "{f200}");
+        assert!(f120 < f200, "{f120} vs {f200}");
+        // an absurd cap clamps at the DVFS floor, never halts the card
+        assert_eq!(d.effective_frac(&OperatingPoint::cap(1.0)),
+                   d.freq.min_frac);
+        // the worst-case sustained power at the throttled clock fits
+        // under the cap (the governor's guarantee)
+        assert!(d.freq.sustain_watts(&d.power, f200) <= 200.0 + 1e-9);
+        assert!(d.freq.sustain_watts(&d.power, f120) <= 120.0 + 1e-9);
+        // cap + explicit downclock compose: the lower one wins
+        let both = OperatingPoint { clock_frac: 0.5,
+                                    power_cap_w: Some(200.0) };
+        assert_eq!(d.effective_frac(&both), f200.min(0.5));
+    }
+
+    #[test]
+    fn operating_point_labels_render_the_effective_clock() {
+        let d = a6000();
+        assert_eq!(d.op_label(&OperatingPoint::uncapped()), "1800 MHz");
+        assert_eq!(d.op_label(&OperatingPoint::clock(0.5)), "900 MHz");
+        // a throttling cap shows the clock it actually forces, not the
+        // requested one
+        let f = d.effective_frac(&OperatingPoint::cap(120.0));
+        assert!(f < 0.6, "{f}");
+        assert_eq!(d.op_label(&OperatingPoint::cap(120.0)),
+                   format!("{:.0} MHz @ 120 W", f * d.freq.base_mhz));
+        // a generous cap leaves stock clocks in the label
+        assert_eq!(d.op_label(&OperatingPoint::cap(1000.0)),
+                   "1800 MHz @ 1000 W");
+    }
+
+    #[test]
+    fn every_device_has_a_sane_freq_model() {
+        for name in all_rig_names() {
+            let d = rig_by_name(name).unwrap().device;
+            assert!(d.freq.base_mhz > 0.0, "{name}");
+            assert!((0.0..1.0).contains(&d.freq.min_frac), "{name}");
+            assert!(d.freq.gamma > 1.0, "{name}");
+            // the cap curve inverts its own sustain curve on [floor, 1]
+            for f in [d.freq.min_frac, 0.6, 0.85, 1.0] {
+                let w = d.freq.sustain_watts(&d.power, f);
+                let back = d.freq.cap_frac(&d.power, w);
+                assert!((back - f.max(d.freq.min_frac)).abs() < 1e-9,
+                        "{name} f={f} w={w} back={back}");
+            }
+        }
     }
 
     #[test]

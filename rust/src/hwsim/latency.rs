@@ -163,13 +163,64 @@ pub fn simulate(arch: &ModelArch, rig: &Rig, w: &Workload) -> SimResult {
 /// native scheme reproduces [`simulate`] bit-for-bit.
 pub fn simulate_quant(arch: &ModelArch, rig: &Rig, w: &Workload,
                       scheme: &QuantScheme) -> SimResult {
+    simulate_quant_phased(arch, rig, rig, w, scheme)
+}
+
+/// Recompute a phase's sensor utilization against another rig's power
+/// curve. Phase-split DVFS times prefill and decode on differently
+/// clocked derivations of the same silicon, but the simulated NVML
+/// sensor replays *one* curve for the whole request — the
+/// higher-plateau derivation ([`sensor_rig`]), so every phase's watts
+/// stay representable. Whichever phase ran on the other derivation
+/// must invert the sensor's curve instead of its own for playback to
+/// reproduce its average power.
+pub(crate) fn reinvert_utilization(sensor_rig: &Rig, sim: PhaseSim)
+                                   -> PhaseSim {
+    let n = sensor_rig.n_devices as f64;
+    let idle = sensor_rig.device.power.idle_w * n;
+    let sustain = sensor_rig.device.power.sustain_w * n;
+    let ratio = ((sim.watts - idle) / (sustain - idle)).clamp(0.0, 1.0);
+    PhaseSim {
+        utilization: ratio.powf(1.0 / sensor_rig.device.power.alpha),
+        ..sim
+    }
+}
+
+/// Of a phase-split pair, the rig whose power curve the simulated
+/// sensor replays: the higher sustained plateau (mirrors
+/// `DeviceSpec::sensor_power_at`).
+pub(crate) fn sensor_rig<'a>(prefill_rig: &'a Rig, decode_rig: &'a Rig)
+                             -> &'a Rig {
+    if prefill_rig.device.power.sustain_w
+        >= decode_rig.device.power.sustain_w
+    {
+        prefill_rig
+    } else {
+        decode_rig
+    }
+}
+
+/// The phase-split core behind [`simulate_quant`]: prefill runs on
+/// `prefill_rig`, every decode step on `decode_rig`. The two are DVFS
+/// derivations of the same silicon (`Rig::at`); passing the same rig
+/// twice is exactly the legacy single-rig path, bit for bit.
+pub(crate) fn simulate_quant_phased(arch: &ModelArch, prefill_rig: &Rig,
+                                    decode_rig: &Rig, w: &Workload,
+                                    scheme: &QuantScheme) -> SimResult {
     let eb = EffectiveBytes::new(arch, *scheme);
     // ---- TTFT: whole-prompt prefill ---------------------------------
     let pc = prefill_cost_quant(&eb, w.batch, w.prompt_len);
     let n_coll = 2 * arch.n_layers();
-    let ttft = phase_sim(rig, pc,
+    let ttft = phase_sim(prefill_rig, pc,
                          collective_bytes(arch, w.batch, w.prompt_len),
-                         n_coll, rig.device.prefill_overhead_s, false);
+                         n_coll, prefill_rig.device.prefill_overhead_s,
+                         false);
+    let sensor = sensor_rig(prefill_rig, decode_rig);
+    let ttft = if prefill_rig.device.power == sensor.device.power {
+        ttft
+    } else {
+        reinvert_utilization(sensor, ttft)
+    };
 
     // ---- decode steps with growing context --------------------------
     let mut step_seconds = Vec::with_capacity(w.gen_len);
@@ -178,8 +229,9 @@ pub fn simulate_quant(arch: &ModelArch, rig: &Rig, w: &Workload,
     for t in 0..w.gen_len {
         let ctx = w.prompt_len + t;
         let dc = decode_cost_quant(&eb, w.batch, ctx);
-        let sim = phase_sim(rig, dc, collective_bytes(arch, w.batch, 1),
-                            n_coll, rig.device.decode_overhead_s, true);
+        let sim = phase_sim(decode_rig, dc,
+                            collective_bytes(arch, w.batch, 1), n_coll,
+                            decode_rig.device.decode_overhead_s, true);
         step_seconds.push(sim.seconds);
         decode_joules_total += sim.joules;
         if t == w.gen_len / 2 {
@@ -196,6 +248,11 @@ pub fn simulate_quant(arch: &ModelArch, rig: &Rig, w: &Workload,
         joules: mid.watts * tpot_mean,
         utilization: mid.utilization,
         compute_bound: mid.compute_bound,
+    };
+    let tpot = if decode_rig.device.power == sensor.device.power {
+        tpot
+    } else {
+        reinvert_utilization(sensor, tpot)
     };
 
     let ttlt_seconds = ttft.seconds + step_seconds.iter().sum::<f64>();
@@ -232,10 +289,30 @@ pub(crate) fn phase_from_energy(rig: &Rig, seconds: f64,
     }
 }
 
+/// Lowest clock fraction at which a decode step stays memory-bound:
+/// below it the downclocked compute roofline starts to bind and TPOT
+/// rises. The rank split cancels (both rooflines shard the same way),
+/// so the crossover depends only on the device and the workload shape —
+/// this is the decode target of serve's phase-aware downclock policy.
+pub fn decode_memory_bound_frac(arch: &ModelArch, rig: &Rig,
+                                scheme: &QuantScheme, batch: usize,
+                                ctx: usize) -> f64 {
+    let eb = EffectiveBytes::new(arch, *scheme);
+    let dc = decode_cost_quant(&eb, batch, ctx.max(1));
+    let d = &rig.device;
+    let t_compute = dc.flops / d.achieved_flops_decode();
+    let t_bytes = dc.bytes / d.achieved_bw();
+    if t_bytes <= 0.0 {
+        return 1.0;
+    }
+    (t_compute / t_bytes).clamp(d.freq.min_frac, 1.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hwsim::device::{a6000, a6000_x4, agx_thor, orin_nano, Rig};
+    use crate::hwsim::device::{a6000, a6000_x4, agx_thor, orin_nano,
+                               OperatingPoint, Rig};
     use crate::models::registry::*;
 
     fn pct(got: f64, want: f64) -> f64 {
@@ -415,6 +492,58 @@ mod tests {
         // at long context + large batch the KV stream dominates decode
         assert!(kv4.tpot.seconds < w4.tpot.seconds,
                 "{} vs {}", kv4.tpot.seconds, w4.tpot.seconds);
+    }
+
+    #[test]
+    fn downclocked_decode_keeps_tpot_but_cuts_energy() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 512, 64);
+        let scheme = crate::models::quant::QuantScheme::native(arch.dtype);
+        let base = simulate_quant(&arch, &rig, &w, &scheme);
+        // decode at 60% clock is still far above the memory-bound
+        // crossover for b=1, so TPOT stays put while J/token drops
+        let slow = rig.at(&OperatingPoint::clock(0.6));
+        let tuned = simulate_quant_phased(&arch, &rig, &slow, &w, &scheme);
+        assert_eq!(tuned.ttft.seconds, base.ttft.seconds,
+                   "prefill rig untouched");
+        assert!((tuned.tpot.seconds - base.tpot.seconds).abs()
+                    < 1e-12 + base.tpot.seconds * 1e-9,
+                "memory-bound decode must not slow down");
+        assert!(tuned.tpot.joules < base.tpot.joules * 0.8,
+                "{} vs {}", tuned.tpot.joules, base.tpot.joules);
+        // uniform downclock slows prefill instead
+        let uni = simulate_quant_phased(&arch, &slow, &slow, &w, &scheme);
+        assert!(uni.ttft.seconds > base.ttft.seconds * 1.3);
+    }
+
+    #[test]
+    fn phased_same_rig_is_bit_identical() {
+        let arch = qwen25_7b();
+        let rig = Rig::single(agx_thor());
+        let w = Workload::new(2, 128, 32);
+        let scheme = crate::models::quant::QuantScheme::native(arch.dtype);
+        let a = simulate_quant(&arch, &rig, &w, &scheme);
+        let b = simulate_quant_phased(&arch, &rig, &rig, &w, &scheme);
+        assert_eq!(a.table_row(), b.table_row());
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(a.ttft.utilization, b.ttft.utilization);
+    }
+
+    #[test]
+    fn decode_crossover_frac_is_low_for_small_batches() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let scheme = crate::models::quant::QuantScheme::native(arch.dtype);
+        let f1 = decode_memory_bound_frac(&arch, &rig, &scheme, 1, 512);
+        // b=1 decode is overwhelmingly bandwidth-bound: the crossover
+        // pins at the DVFS floor
+        assert_eq!(f1, rig.device.freq.min_frac, "{f1}");
+        // bigger batches amortize the weight stream -> more compute per
+        // byte -> the crossover rises
+        let f32b = decode_memory_bound_frac(&arch, &rig, &scheme, 32, 512);
+        assert!(f32b >= f1, "{f32b} vs {f1}");
+        assert!(f32b <= 1.0);
     }
 
     #[test]

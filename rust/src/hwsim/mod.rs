@@ -33,7 +33,8 @@ pub mod parallel;
 
 pub use cost::{decode_cost, decode_cost_quant, prefill_cost,
                prefill_cost_quant, PhaseCost};
-pub use device::{DeviceSpec, Interconnect, Rig};
+pub use device::{DeviceSpec, FreqModel, Interconnect, OperatingPoint, Rig};
 pub use kernels::synthesize_kernels;
-pub use latency::{simulate, simulate_quant, PhaseSim, SimResult, Workload};
-pub use parallel::{simulate_parallel, ParallelSpec};
+pub use latency::{decode_memory_bound_frac, simulate, simulate_quant,
+                  PhaseSim, SimResult, Workload};
+pub use parallel::{simulate_at, simulate_parallel, ParallelSpec};

@@ -34,9 +34,9 @@ use crate::models::arch::ModelArch;
 use crate::models::quant::{EffectiveBytes, QuantScheme};
 
 use super::cost::{decode_cost_quant, prefill_cost_quant};
-use super::device::Rig;
+use super::device::{DeviceSpec, OperatingPoint, Rig};
 use super::latency::{collective_bytes, phase_from_energy, simulate_quant,
-                     PhaseSim, SimResult, Workload};
+                     simulate_quant_phased, PhaseSim, SimResult, Workload};
 
 /// A tensor/pipeline mapping of one model onto a rig.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -193,38 +193,79 @@ pub fn simulate_parallel(arch: &ModelArch, rig: &Rig, w: &Workload,
     if par.is_single() && rig.n_devices == 1 {
         return simulate_quant(arch, rig, w, scheme);
     }
+    simulate_parallel_phased(arch, rig, rig, w, scheme, par)
+}
 
+/// Simulate one workload at explicit DVFS operating points — the single
+/// entry every operating-point consumer (the tuner, `--power-cap`
+/// sweeps, serve's phase-aware downclock) dispatches through. Prefill
+/// runs on the prefill point's derived rig, decode on the decode
+/// point's; identity points derive to the untouched rig, so passing two
+/// identity points reproduces the legacy paths bit-for-bit.
+pub fn simulate_at(arch: &ModelArch, rig: &Rig, w: &Workload,
+                   scheme: &QuantScheme, par: Option<&ParallelSpec>,
+                   prefill_op: &OperatingPoint, decode_op: &OperatingPoint)
+                   -> SimResult {
+    let pr = rig.at(prefill_op);
+    let dr = rig.at(decode_op);
+    match par {
+        Some(p) if !(p.is_single() && rig.n_devices == 1) => {
+            simulate_parallel_phased(arch, &pr, &dr, w, scheme, p)
+        }
+        _ => simulate_quant_phased(arch, &pr, &dr, w, scheme),
+    }
+}
+
+/// The phase-split core behind [`simulate_parallel`]: prefill on
+/// `prefill_rig`, decode steps on `decode_rig` (DVFS derivations of the
+/// same silicon — the link and mapping are shared). Passing the same
+/// rig twice is exactly the legacy path, bit for bit.
+pub(crate) fn simulate_parallel_phased(arch: &ModelArch, prefill_rig: &Rig,
+                                       decode_rig: &Rig, w: &Workload,
+                                       scheme: &QuantScheme,
+                                       par: &ParallelSpec) -> SimResult {
     let eb = EffectiveBytes::new(arch, *scheme);
-    let d = &rig.device;
     let dt = arch.dtype.bytes() as f64;
     let layers = arch.n_layers() as f64;
     let n_coll = 2 * arch.n_layers();
 
-    let dyn_joules = |flops: f64, bytes: f64, link_bytes: f64| -> f64 {
-        (flops * d.pj_per_flop + bytes * d.pj_per_byte
-         + link_bytes * rig.link.pj_per_byte)
-            * 1e-12
-    };
+    let dyn_joules =
+        |d: &DeviceSpec, link_pj: f64, flops: f64, bytes: f64,
+         link_bytes: f64| -> f64 {
+            (flops * d.pj_per_flop + bytes * d.pj_per_byte
+             + link_bytes * link_pj)
+                * 1e-12
+        };
 
     // ---- TTFT: pipelined, TP-sharded prefill ------------------------
+    let d = &prefill_rig.device;
     let pc = prefill_cost_quant(&eb, w.batch, w.prompt_len);
     let prompt_tokens = (w.batch * w.prompt_len) as f64;
     // the activation share of the prefill byte stream (same formula as
     // cost::prefill_cost_quant's residual-stream term)
     let act_bytes = 2.0 * layers * prompt_tokens * arch.d_model as f64 * dt;
     let sp = sharded_phase(
-        rig, par, pc.flops, pc.bytes, act_bytes,
+        prefill_rig, par, pc.flops, pc.bytes, act_bytes,
         collective_bytes(arch, w.batch, w.prompt_len), n_coll,
         prompt_tokens * arch.d_model as f64 * dt, w.batch.max(1),
         d.achieved_flops(), d.prefill_overhead_s, true);
     let ttft = phase_from_energy(
-        rig, sp.seconds, dyn_joules(pc.flops, pc.bytes, sp.link_bytes),
+        prefill_rig, sp.seconds,
+        dyn_joules(d, prefill_rig.link.pj_per_byte, pc.flops, pc.bytes,
+                   sp.link_bytes),
         sp.compute_bound);
+    let sensor = super::latency::sensor_rig(prefill_rig, decode_rig);
+    let ttft = if prefill_rig.device.power == sensor.device.power {
+        ttft
+    } else {
+        super::latency::reinvert_utilization(sensor, ttft)
+    };
     let mut interconnect_seconds = sp.link_s;
     let mut interconnect_joules =
-        sp.link_bytes * rig.link.pj_per_byte * 1e-12;
+        sp.link_bytes * prefill_rig.link.pj_per_byte * 1e-12;
 
     // ---- decode steps with growing context --------------------------
+    let d = &decode_rig.device;
     let mut step_seconds = Vec::with_capacity(w.gen_len);
     let mut decode_joules_total = 0.0;
     let mut mid_sim: Option<PhaseSim> = None;
@@ -232,17 +273,20 @@ pub fn simulate_parallel(arch: &ModelArch, rig: &Rig, w: &Workload,
         let ctx = w.prompt_len + t;
         let dc = decode_cost_quant(&eb, w.batch, ctx);
         let sd = sharded_phase(
-            rig, par, dc.flops, dc.bytes, 0.0,
+            decode_rig, par, dc.flops, dc.bytes, 0.0,
             collective_bytes(arch, w.batch, 1), n_coll,
             w.batch as f64 * arch.d_model as f64 * dt, 1,
             d.achieved_flops_decode(), d.decode_overhead_s, false);
         let sim = phase_from_energy(
-            rig, sd.seconds, dyn_joules(dc.flops, dc.bytes, sd.link_bytes),
+            decode_rig, sd.seconds,
+            dyn_joules(d, decode_rig.link.pj_per_byte, dc.flops, dc.bytes,
+                       sd.link_bytes),
             sd.compute_bound);
         step_seconds.push(sim.seconds);
         decode_joules_total += sim.joules;
         interconnect_seconds += sd.link_s;
-        interconnect_joules += sd.link_bytes * rig.link.pj_per_byte * 1e-12;
+        interconnect_joules +=
+            sd.link_bytes * decode_rig.link.pj_per_byte * 1e-12;
         if t == w.gen_len / 2 {
             mid_sim = Some(sim);
         }
@@ -256,6 +300,11 @@ pub fn simulate_parallel(arch: &ModelArch, rig: &Rig, w: &Workload,
         joules: mid.watts * tpot_mean,
         utilization: mid.utilization,
         compute_bound: mid.compute_bound,
+    };
+    let tpot = if decode_rig.device.power == sensor.device.power {
+        tpot
+    } else {
+        super::latency::reinvert_utilization(sensor, tpot)
     };
 
     let ttlt_seconds = ttft.seconds + step_seconds.iter().sum::<f64>();
@@ -371,6 +420,50 @@ mod tests {
         assert!(ParallelSpec::new(1, 33)
                     .validate_for(&arch, &a6000_x4())
                     .is_err());
+    }
+
+    #[test]
+    fn simulate_at_identity_points_reproduce_legacy_paths() {
+        let arch = llama31_8b();
+        let id = OperatingPoint::uncapped();
+        // unsharded
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 256, 32);
+        let s = native(&arch);
+        let a = simulate_quant(&arch, &rig, &w, &s);
+        let b = simulate_at(&arch, &rig, &w, &s, None, &id, &id);
+        assert_eq!(a.table_row(), b.table_row());
+        assert_eq!(a.step_seconds, b.step_seconds);
+        // sharded
+        let rig4 = a6000_x4();
+        let par = ParallelSpec::new(4, 1);
+        let a = simulate_parallel(&arch, &rig4, &w, &s, &par);
+        let b = simulate_at(&arch, &rig4, &w, &s, Some(&par), &id, &id);
+        assert_eq!(a.table_row(), b.table_row());
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(a.interconnect_joules, b.interconnect_joules);
+    }
+
+    #[test]
+    fn capped_sharded_run_never_speeds_up_and_saves_link_nothing() {
+        let arch = llama31_8b();
+        let rig = a6000_x4();
+        let par = ParallelSpec::new(4, 1);
+        let w = Workload::new(4, 256, 32);
+        let s = native(&arch);
+        let id = OperatingPoint::uncapped();
+        let cap = OperatingPoint::cap(150.0);
+        let base = simulate_at(&arch, &rig, &w, &s, Some(&par), &id, &id);
+        let capped = simulate_at(&arch, &rig, &w, &s, Some(&par), &cap,
+                                 &cap);
+        // capping throttles per-rank compute: nothing gets faster
+        assert!(capped.ttft.seconds >= base.ttft.seconds);
+        assert!(capped.tpot.seconds >= base.tpot.seconds);
+        // the link is its own clock domain: wire time is unchanged
+        assert_eq!(capped.interconnect_seconds, base.interconnect_seconds);
+        assert_eq!(capped.interconnect_joules, base.interconnect_joules);
+        // and the capped run spends less total energy per token
+        assert!(capped.tpot.joules < base.tpot.joules);
     }
 
     #[test]

@@ -35,6 +35,8 @@
 //!   expansion, worker pool, comparison reports.
 //! * [`planner`] — quantization-aware capacity planner (`elana plan`):
 //!   max-fit solver, Pareto deployment recommendations, fleet sizing.
+//! * [`tune`] — power-cap/DVFS operating-point tuner (`elana tune`):
+//!   per-phase energy-optimal clocks under latency SLOs.
 //! * [`cli`] — argument parsing for the `elana` binary.
 //! * [`benchkit`] — micro-benchmark harness used by `cargo bench`.
 //! * [`testkit`] — property-testing support used by unit tests.
@@ -54,6 +56,7 @@ pub mod runtime;
 pub mod sweep;
 pub mod testkit;
 pub mod trace;
+pub mod tune;
 pub mod util;
 pub mod workload;
 pub mod zeus;

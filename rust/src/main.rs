@@ -18,6 +18,7 @@ use elana::planner;
 use elana::profiler::{self, report, ProfileSpec};
 use elana::sweep;
 use elana::trace::{self, TraceRecorder};
+use elana::tune;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,19 +46,25 @@ fn run(cmd: Command) -> Result<()> {
             print!("{}", report::render_size_table(&rows, &points, unit));
         }
         Command::Latency { model, device, workload, energy, runs,
-                           quant, parallel } => {
+                           quant, parallel, op } => {
             let mut spec = ProfileSpec::new(&model, &device, workload);
             spec.energy = energy;
             spec.quant = quant;
             spec.parallel = parallel;
+            spec.op = op;
             if let Some(r) = runs {
                 spec.latency_runs = r;
             }
             let outcome = profiler::profile(&spec)?;
-            let par = match parallel {
+            let mut par = match parallel {
                 Some(p) => format!("  [{}]", p.label()),
                 None => String::new(),
             };
+            if let (Some(o), Some(rig)) =
+                (op, hwsim::device::rig_by_name(&device))
+            {
+                par.push_str(&format!("  [{}]", rig.device.op_label(&o)));
+            }
             let title = format!("{} on {}{}  [{}]", outcome.model,
                                 outcome.device, par,
                                 outcome.workload.label());
@@ -69,6 +76,9 @@ fn run(cmd: Command) -> Result<()> {
         }
         Command::Plan { spec, json, out, assert_recommendation } => {
             cmd_plan(&spec, json, out, assert_recommendation)?;
+        }
+        Command::Tune { spec, json, out, assert_recommendation } => {
+            cmd_tune(&spec, json, out, assert_recommendation)?;
         }
         Command::Trace { model, device, workload, out } => {
             cmd_trace(&model, &device, &workload, &out)?;
@@ -179,6 +189,36 @@ fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>,
             results.points.len());
         eprintln!("assert-recommendation: {recommended} recommended \
                    point(s)");
+    }
+    Ok(())
+}
+
+fn cmd_tune(spec: &tune::TuneSpec, json: bool, out: Option<String>,
+            assert_recommendation: bool) -> Result<()> {
+    let results = tune::run(spec)?;
+    let rendered = tune::report::to_json(&results).to_string();
+    if let Some(path) = &out {
+        std::fs::write(path, &rendered)?;
+    }
+    if json {
+        println!("{rendered}");
+    } else {
+        print!("{}", tune::report::render_markdown(&results));
+    }
+    if let Some(path) = &out {
+        eprintln!("wrote {path}");
+    }
+    if assert_recommendation {
+        anyhow::ensure!(
+            results.combined.is_some(),
+            "--assert-recommendation: no operating point meets the SLOs \
+             (TTFT <= {:.2} ms, TPOT <= {:.2} ms) over {} grid points",
+            results.slo_ttft_ms, results.slo_tpot_ms,
+            results.points.len());
+        let pre = results.point(results.prefill_rec).expect("combined");
+        let dec = results.point(results.decode_rec).expect("combined");
+        eprintln!("assert-recommendation: prefill @ {:.0} MHz, decode @ \
+                   {:.0} MHz", pre.eff_mhz, dec.eff_mhz);
     }
     Ok(())
 }

@@ -50,6 +50,29 @@ pub fn llama31_70b() -> ModelArch {
     }
 }
 
+/// Llama-2-7B (HF: meta-llama/Llama-2-7b) — the "From Words to Watts"
+/// (Samsi et al.) power-capping testbed model, which is what
+/// `elana tune` reproduces the operating-point story for. Full MHA
+/// (no GQA), fp16.
+pub fn llama2_7b() -> ModelArch {
+    ModelArch {
+        name: "llama-2-7b",
+        display_name: "Llama-2-7B",
+        vocab_size: 32_000,
+        d_model: 4096,
+        layers: uniform_attention(32),
+        attn: AttnSpec { n_heads: 32, n_kv_heads: 32, head_dim: 128,
+                         qkv_bias: false },
+        ffn_dim: 11_008,
+        fused_mlp: true,
+        mlp_gated: true,
+        ssm: None,
+        dtype: Dtype::F16,
+        tied_embeddings: false,
+        executable: false,
+    }
+}
+
 /// Qwen-2.5-7B (HF: Qwen/Qwen2.5-7B).
 pub fn qwen25_7b() -> ModelArch {
     ModelArch {
@@ -216,8 +239,8 @@ pub fn elana_small() -> ModelArch {
 
 /// Paper-scale models (Tables 2–4, plus the 70B sharding workload).
 pub fn paper_models() -> Vec<ModelArch> {
-    vec![llama31_8b(), llama31_70b(), qwen25_7b(), nemotron_h_8b(),
-         llama32_1b(), qwen25_15b()]
+    vec![llama31_8b(), llama31_70b(), llama2_7b(), qwen25_7b(),
+         nemotron_h_8b(), llama32_1b(), qwen25_15b()]
 }
 
 /// Executable dev configs (AOT artifacts exist for these).

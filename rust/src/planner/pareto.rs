@@ -1,13 +1,16 @@
 //! Pareto frontier over (latency, energy, effective weight bits,
-//! device count).
+//! device count, provisioned power).
 //!
 //! The planner's objectives: minimize decode latency (TPOT), minimize
 //! J/token, *maximize* effective weight bits — bits serve as the
 //! accuracy proxy, since deeper quantization trades model quality for
-//! speed and energy — and minimize the devices the mapping occupies
-//! (the parallelism axis: a tp=4 point must buy real latency or energy
-//! to justify 4 GPUs over 1). A point is on the frontier when no other
-//! point is at least as good on all axes and strictly better on one.
+//! speed and energy — minimize the devices the mapping occupies (the
+//! parallelism axis: a tp=4 point must buy real latency or energy to
+//! justify 4 GPUs over 1), and minimize the provisioned per-device
+//! power (the `--power-cap` axis: a capped point that holds its TPOT
+//! is strictly better rack economics — this is the energy-optimal-cap
+//! objective). A point is on the frontier when no other point is at
+//! least as good on all axes and strictly better on one.
 
 /// One candidate operating point, projected onto the objectives.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,6 +26,11 @@ pub struct Objective {
     /// Devices the mapping occupies, tp·pp (minimize — the cost axis;
     /// 1 for legacy whole-rig points).
     pub ranks: usize,
+    /// Provisioned per-device power, watts (minimize): the power cap,
+    /// or the device's stock sustained draw for uncapped points — so a
+    /// cap-free plan has every point equal on this axis and the
+    /// frontier is exactly the pre-DVFS one.
+    pub cap_w: f64,
 }
 
 /// Does `a` dominate `b`? (at least as good everywhere, strictly better
@@ -31,11 +39,13 @@ pub fn dominates(a: &Objective, b: &Objective) -> bool {
     let ge = a.tpot_ms <= b.tpot_ms
         && a.j_token <= b.j_token
         && a.eff_bits >= b.eff_bits
-        && a.ranks <= b.ranks;
+        && a.ranks <= b.ranks
+        && a.cap_w <= b.cap_w;
     let strict = a.tpot_ms < b.tpot_ms
         || a.j_token < b.j_token
         || a.eff_bits > b.eff_bits
-        || a.ranks < b.ranks;
+        || a.ranks < b.ranks
+        || a.cap_w < b.cap_w;
     ge && strict
 }
 
@@ -52,7 +62,8 @@ pub fn frontier(points: &[Objective]) -> Vec<usize> {
 /// The recommendation rule: among frontier points, the lowest
 /// energy-delay product (J/token × TPOT); ties break toward more bits
 /// (less accuracy risk), then fewer devices (less cost), then the
-/// lower id — fully deterministic.
+/// lower provisioned power (cheaper rack), then the lower id — fully
+/// deterministic.
 pub fn recommend(points: &[Objective]) -> Option<usize> {
     let front = frontier(points);
     points
@@ -66,6 +77,8 @@ pub fn recommend(points: &[Objective]) -> Option<usize> {
                 .then(b.eff_bits.partial_cmp(&a.eff_bits)
                           .expect("finite bits"))
                 .then(a.ranks.cmp(&b.ranks))
+                .then(a.cap_w.partial_cmp(&b.cap_w)
+                          .expect("finite caps"))
                 .then(a.id.cmp(&b.id))
         })
         .map(|p| p.id)
@@ -77,7 +90,7 @@ mod tests {
 
     fn o(id: usize, tpot: f64, j: f64, bits: f64) -> Objective {
         Objective { id, tpot_ms: tpot, j_token: j, eff_bits: bits,
-                    ranks: 1 }
+                    ranks: 1, cap_w: 278.0 }
     }
 
     #[test]
@@ -142,6 +155,24 @@ mod tests {
         let tie4 = Objective { id: 1, tpot_ms: 5.0, j_token: 4.0,
                                ranks: 4, ..tie1 };
         assert_eq!(recommend(&[tie1, tie4]), Some(0));
+    }
+
+    #[test]
+    fn a_cap_must_buy_something_and_wins_power_ties() {
+        // identical latency/energy/bits at a higher provisioned power is
+        // dominated: the capped point is strictly better rack economics
+        let capped = Objective { cap_w: 200.0, ..o(0, 10.0, 2.0, 16.0) };
+        let stock = o(1, 10.0, 2.0, 16.0); // 278 W
+        assert!(dominates(&capped, &stock));
+        assert_eq!(frontier(&[capped, stock]), vec![0]);
+        // a stock point that is faster survives alongside the cap
+        let fast = Objective { tpot_ms: 8.0, ..stock };
+        assert_eq!(frontier(&[capped, fast]), vec![0, 1]);
+        // full EDP/bits/ranks tie: the lower cap is recommended
+        let tie_hi = o(0, 10.0, 2.0, 8.0);
+        let tie_lo = Objective { id: 1, cap_w: 150.0,
+                                 ..o(1, 10.0, 2.0, 8.0) };
+        assert_eq!(recommend(&[tie_hi, tie_lo]), Some(1));
     }
 
     #[test]

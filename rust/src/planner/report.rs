@@ -28,26 +28,23 @@ pub fn render_markdown(r: &PlanResults) -> String {
     let unit = s.unit;
     let mut out = String::new();
     let has_par = r.points.iter().any(|p| p.parallel.is_some());
+    let has_cap = r.points.iter().any(|p| p.power_cap.is_some());
     let _ = writeln!(out, "# elana plan — {}", s.name);
     let _ = writeln!(out);
+    let mut axes = format!(
+        "{} operating points = {} models x {} devices x {} schemes x {} \
+         workloads",
+        r.points.len(), s.models.len(), s.devices.len(), s.quants.len(),
+        s.lens.len());
     if has_par {
-        let _ = writeln!(
-            out,
-            "{} operating points = {} models x {} devices x {} schemes \
-             x {} workloads x {} parallelisms (seed {}, target {} req/s)",
-            r.points.len(), s.models.len(), s.devices.len(),
-            s.quants.len(), s.lens.len(), s.parallelisms().len(), s.seed,
-            s.target_rps
-        );
-    } else {
-        let _ = writeln!(
-            out,
-            "{} operating points = {} models x {} devices x {} schemes x \
-             {} workloads (seed {}, target {} req/s)",
-            r.points.len(), s.models.len(), s.devices.len(), s.quants.len(),
-            s.lens.len(), s.seed, s.target_rps
-        );
+        axes.push_str(&format!(" x {} parallelisms",
+                               s.parallelisms().len()));
     }
+    if has_cap {
+        axes.push_str(&format!(" x {} power caps", s.power_caps.len()));
+    }
+    let _ = writeln!(out, "{axes} (seed {}, target {} req/s)", s.seed,
+                     s.target_rps);
     let _ = writeln!(
         out,
         "memory model: quantized weights + KV/state cache + activations \
@@ -70,41 +67,43 @@ pub fn render_markdown(r: &PlanResults) -> String {
                 first.model_display, first.device_display,
                 unit.format(first.fit.mem_bytes)
             );
+            let mut hdr = String::from("| Quant |");
+            let mut sep = String::from("|---|");
             if has_par {
-                let _ = writeln!(
-                    out,
-                    "| Quant | Par | Bits | Weights | Workload \
-                     | Max batch | Max ctx@b1 | Req. mem/GPU | TTFT ms \
-                     | TPOT ms | TTLT ms | J/Token | Pareto |"
-                );
-                let _ = writeln!(
-                    out,
-                    "|---|---|---:|---:|---|---:|---:|---:|---:|---:\
-                     |---:|---:|---:|"
-                );
-            } else {
-                let _ = writeln!(
-                    out,
-                    "| Quant | Bits | Weights | Workload | Max batch \
-                     | Max ctx@b1 | Req. mem | TTFT ms | TPOT ms \
-                     | TTLT ms | J/Token | Pareto |"
-                );
-                let _ = writeln!(
-                    out,
-                    "|---|---:|---:|---|---:|---:|---:|---:|---:|---:\
-                     |---:|---:|"
-                );
+                hdr.push_str(" Par |");
+                sep.push_str("---|");
             }
+            if has_cap {
+                hdr.push_str(" Cap |");
+                sep.push_str("---|");
+            }
+            if has_par {
+                hdr.push_str(" Bits | Weights | Workload | Max batch \
+                              | Max ctx@b1 | Req. mem/GPU | TTFT ms \
+                              | TPOT ms | TTLT ms | J/Token | Pareto |");
+            } else {
+                hdr.push_str(" Bits | Weights | Workload | Max batch \
+                              | Max ctx@b1 | Req. mem | TTFT ms \
+                              | TPOT ms | TTLT ms | J/Token | Pareto |");
+            }
+            sep.push_str("---:|---:|---|---:|---:|---:|---:|---:|---:\
+                          |---:|---:|");
+            let _ = writeln!(out, "{hdr}");
+            let _ = writeln!(out, "{sep}");
             for &p in &group {
-                let _ = writeln!(out, "{}", point_row(p, unit, has_par));
+                let _ = writeln!(out, "{}", point_row(p, unit, has_par,
+                                                      has_cap));
             }
             match group.iter().find(|p| p.recommended) {
                 Some(rec) => {
                     let o = rec.outcome.as_ref().expect("evaluated");
-                    let par = match rec.parallel {
+                    let mut par = match rec.parallel {
                         Some(pr) => format!(" {}", pr.label()),
                         None => String::new(),
                     };
+                    if let Some(c) = rec.power_cap {
+                        par.push_str(&format!(" [cap {c} W]"));
+                    }
                     let _ = writeln!(
                         out,
                         "\n**Recommended:** {}{} @ {} — TPOT {:.2} ms, \
@@ -142,16 +141,17 @@ pub fn render_markdown(r: &PlanResults) -> String {
     out
 }
 
-/// One markdown table row. `with_par` adds the TP×PP column (only
-/// rendered when the plan has a parallelism axis, so legacy reports
-/// stay byte-identical).
-fn point_row(p: &PlanPoint, unit: MemUnit, with_par: bool) -> String {
+/// One markdown table row. `with_par` adds the TP×PP column and
+/// `with_cap` the power-cap column (each rendered only when the plan
+/// has that axis, so legacy reports stay byte-identical).
+fn point_row(p: &PlanPoint, unit: MemUnit, with_par: bool,
+             with_cap: bool) -> String {
     let quant = if p.recommended {
         format!("**{}**", p.quant)
     } else {
         p.quant.clone()
     };
-    let par = if with_par {
+    let mut par = if with_par {
         format!(" {} |", match p.parallel {
             Some(pr) => pr.label(),
             None => "—".to_string(),
@@ -159,6 +159,12 @@ fn point_row(p: &PlanPoint, unit: MemUnit, with_par: bool) -> String {
     } else {
         String::new()
     };
+    if with_cap {
+        par.push_str(&format!(" {} |", match p.power_cap {
+            Some(c) => format!("{c} W"),
+            None => "—".to_string(),
+        }));
+    }
     match &p.outcome {
         Some(o) => format!(
             "| {} |{} {:.2} | {} | {} | {} | {} | {} | {:.2} | {:.2} \
@@ -209,13 +215,17 @@ pub fn to_json(r: &PlanResults) -> Json {
         ("n_points", Json::num(r.points.len() as f64)),
         ("points", Json::Arr(points)),
     ];
-    // the parallel axis appears only when requested, so legacy
-    // artifacts stay byte-identical
+    // the parallel and power-cap axes appear only when requested, so
+    // legacy artifacts stay byte-identical
     if !s.tps.is_empty() || !s.pps.is_empty() {
         fields.push(("tps", Json::Arr(
             s.tps.iter().map(|&t| Json::num(t as f64)).collect())));
         fields.push(("pps", Json::Arr(
             s.pps.iter().map(|&p| Json::num(p as f64)).collect())));
+    }
+    if !s.power_caps.is_empty() {
+        fields.push(("power_caps", Json::Arr(
+            s.power_caps.iter().map(|&c| Json::num(c)).collect())));
     }
     Json::obj(fields)
 }
@@ -248,6 +258,9 @@ fn point_json(p: &PlanPoint) -> Json {
         fields.push(("tp", Json::num(pr.tp as f64)));
         fields.push(("pp", Json::num(pr.pp as f64)));
         fields.push(("ranks", Json::num(pr.n_ranks() as f64)));
+    }
+    if let Some(c) = p.power_cap {
+        fields.push(("power_cap_w", Json::num(c)));
     }
     if let Some(f) = p.fleet {
         fields.push(("fleet", Json::obj(vec![
@@ -337,6 +350,37 @@ mod tests {
         let lp = lv.get("points").unwrap().as_arr().unwrap();
         assert!(lp[0].get("tp").is_none());
         assert!(!render_markdown(&legacy).contains("| Par |"));
+    }
+
+    #[test]
+    fn power_cap_axis_renders_in_markdown_and_json() {
+        let spec = PlanSpec {
+            models: vec!["llama-2-7b".into()],
+            devices: vec!["a6000".into()],
+            quants: vec!["bf16".into()],
+            lens: vec![(512, 512)],
+            power_caps: vec![200.0],
+            ..PlanSpec::default()
+        };
+        let r = runner::run(&spec).unwrap();
+        let text = render_markdown(&r);
+        assert!(text.contains("| Cap |"), "{text}");
+        assert!(text.contains("| 200 W |"), "{text}");
+        assert!(text.contains("x 1 power caps"), "{text}");
+        assert!(text.contains("[cap 200 W]"), "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        assert_eq!(v.get("power_caps").unwrap().as_arr().unwrap().len(),
+                   1);
+        let pts = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts[0].get("power_cap_w").unwrap().as_f64(),
+                   Some(200.0));
+        // legacy plans carry no cap keys at all
+        let legacy = results();
+        let lv = Json::parse(&to_json(&legacy).to_string()).unwrap();
+        assert!(lv.get("power_caps").is_none());
+        let lp = lv.get("points").unwrap().as_arr().unwrap();
+        assert!(lp[0].get("power_cap_w").is_none());
+        assert!(!render_markdown(&legacy).contains("| Cap |"));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::hwsim::{device, ParallelSpec, Workload};
+use crate::hwsim::{device, OperatingPoint, ParallelSpec, Workload};
 use crate::models::{self, quant};
 use crate::profiler::{self, ProfileOutcome, ProfileSpec};
 use crate::sweep::pool;
@@ -41,6 +41,8 @@ pub struct PlanPoint {
     pub gen_len: usize,
     /// Explicit TP×PP mapping of the point (`None` = legacy whole-rig).
     pub parallel: Option<ParallelSpec>,
+    /// Per-device power cap of the point, watts (`None` = uncapped).
+    pub power_cap: Option<f64>,
     /// The memory model the point was solved under (per-rank when
     /// `parallel` is set).
     pub fit: FitModel,
@@ -113,6 +115,7 @@ impl PlanResults {
 /// mixed device lists stay runnable.
 fn expand(spec: &PlanSpec) -> Vec<PlanPoint> {
     let pars = spec.parallelisms();
+    let caps = spec.power_cap_axis();
     let mut points = Vec::with_capacity(spec.n_points());
     for m in &spec.models {
         let arch = models::lookup(m).expect("validated model");
@@ -123,6 +126,8 @@ fn expand(spec: &PlanSpec) -> Vec<PlanPoint> {
                     .expect("validated quant token");
                 for &(p, g) in &spec.lens {
                     for &par in &pars {
+                        // memory is cap-independent: solve the fit once
+                        // per mapping, share it across the cap axis
                         let fit = FitModel::with_parallel(&arch, scheme,
                                                           &rig, par);
                         let hostable = match par {
@@ -131,34 +136,39 @@ fn expand(spec: &PlanSpec) -> Vec<PlanPoint> {
                                 pr.validate_for(&arch, &rig).is_ok()
                             }
                         };
-                        let index = points.len();
-                        points.push(PlanPoint {
-                            index,
-                            model: m.clone(),
-                            model_display: arch.display_name.to_string(),
-                            device: d.clone(),
-                            device_display: rig.name(),
-                            quant: q.clone(),
-                            prompt_len: p,
-                            gen_len: g,
-                            parallel: par,
-                            batch: if hostable {
-                                fit.max_batch(p + g)
-                            } else {
-                                0
-                            },
-                            max_ctx_b1: if hostable {
-                                fit.max_ctx(1)
-                            } else {
-                                0
-                            },
-                            fit,
-                            seed: Rng::mix(spec.seed, index as u64),
-                            outcome: None,
-                            pareto: false,
-                            recommended: false,
-                            fleet: None,
-                        });
+                        for &cap in &caps {
+                            let index = points.len();
+                            points.push(PlanPoint {
+                                index,
+                                model: m.clone(),
+                                model_display: arch
+                                    .display_name
+                                    .to_string(),
+                                device: d.clone(),
+                                device_display: rig.name(),
+                                quant: q.clone(),
+                                prompt_len: p,
+                                gen_len: g,
+                                parallel: par,
+                                power_cap: cap,
+                                batch: if hostable {
+                                    fit.max_batch(p + g)
+                                } else {
+                                    0
+                                },
+                                max_ctx_b1: if hostable {
+                                    fit.max_ctx(1)
+                                } else {
+                                    0
+                                },
+                                fit: fit.clone(),
+                                seed: Rng::mix(spec.seed, index as u64),
+                                outcome: None,
+                                pareto: false,
+                                recommended: false,
+                                fleet: None,
+                            });
+                        }
                     }
                 }
             }
@@ -180,15 +190,20 @@ fn evaluate(point: &PlanPoint, spec: &PlanSpec)
     ps.seed = point.seed;
     ps.quant = quant::parse_token(&point.quant)?;
     ps.parallel = point.parallel;
+    ps.op = point.power_cap.map(OperatingPoint::cap);
     let mut backend = crate::backend::from_spec(&ps)?;
     profiler::session::profile_backend(backend.as_mut(), &ps)
         .map(Some)
         .with_context(|| {
-            format!("plan point #{} ({} on {}, {}, quant {}{})",
+            format!("plan point #{} ({} on {}, {}, quant {}{}{})",
                     point.index, point.model, point.device,
                     point.workload().label(), point.quant,
                     match point.parallel {
                         Some(p) => format!(", {}", p.label()),
+                        None => String::new(),
+                    },
+                    match point.power_cap {
+                        Some(c) => format!(", cap {c} W"),
                         None => String::new(),
                     })
         })
@@ -199,6 +214,11 @@ fn evaluate(point: &PlanPoint, spec: &PlanSpec)
 fn annotate(spec: &PlanSpec, points: &mut [PlanPoint]) {
     for m in &spec.models {
         for d in &spec.devices {
+            // uncapped points provision the device's stock sustained
+            // draw on the power objective
+            let stock_w = device::rig_by_name(d)
+                .map(|r| r.device.power.sustain_w)
+                .unwrap_or(0.0);
             let objectives: Vec<Objective> = points
                 .iter()
                 .filter(|p| {
@@ -214,6 +234,9 @@ fn annotate(spec: &PlanSpec, points: &mut [PlanPoint]) {
                         ranks: p.parallel
                             .map(|pr| pr.n_ranks())
                             .unwrap_or(1),
+                        cap_w: p.power_cap
+                            .map(|c| c.min(stock_w))
+                            .unwrap_or(stock_w),
                     }
                 })
                 .collect();
@@ -357,6 +380,36 @@ mod tests {
         // not an error
         let single = r.group("llama-3.1-70b", "a6000");
         assert!(single.iter().all(|p| !p.fits()));
+    }
+
+    #[test]
+    fn power_cap_axis_adds_points_and_can_win_the_recommendation() {
+        let spec = PlanSpec {
+            models: vec!["llama-2-7b".into()],
+            devices: vec!["a6000".into()],
+            quants: vec!["bf16".into()],
+            lens: vec![(512, 512)],
+            power_caps: vec![200.0],
+            ..PlanSpec::default()
+        };
+        let r = run(&spec).unwrap();
+        assert_eq!(r.len(), 1);
+        let p = &r.points[0];
+        assert_eq!(p.power_cap, Some(200.0));
+        assert!(p.fits(), "memory is cap-independent");
+        let o = p.outcome.as_ref().expect("feasible => evaluated");
+        assert!(o.tpot_ms > 0.0);
+        assert!(p.recommended, "only point in the group");
+        // against an uncapped twin the capped point keeps its batch and
+        // memory numbers: the fit solver never sees the cap
+        let legacy = run(&PlanSpec { power_caps: Vec::new(),
+                                     ..spec.clone() }).unwrap();
+        assert_eq!(legacy.points[0].batch, p.batch);
+        assert_eq!(legacy.points[0].max_ctx_b1, p.max_ctx_b1);
+        // the capped point burns fewer joules per token at its batch
+        let lo = legacy.points[0].outcome.as_ref().unwrap();
+        assert!(o.j_token < lo.j_token,
+                "{} vs {}", o.j_token, lo.j_token);
     }
 
     #[test]

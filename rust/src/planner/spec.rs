@@ -40,6 +40,11 @@ pub struct PlanSpec {
     pub tps: Vec<usize>,
     /// Pipeline-parallel degrees to plan (`--pp 1,2`). Empty = legacy.
     pub pps: Vec<usize>,
+    /// Per-device power caps in watts (`--power-cap 150,220`): each cap
+    /// becomes an extra operating-point axis entry and a provisioned-
+    /// power objective on the Pareto frontier. Empty = uncapped only,
+    /// bit-identical to the pre-DVFS planner.
+    pub power_caps: Vec<f64>,
     /// Fleet-sizing target request rate, requests/s.
     pub target_rps: f64,
     /// Measure energy through the seeded sensor-playback pipeline
@@ -76,6 +81,7 @@ impl Default for PlanSpec {
             lens: DEFAULT_LENS.to_vec(),
             tps: Vec::new(),
             pps: Vec::new(),
+            power_caps: Vec::new(),
             target_rps: DEFAULT_TARGET_RPS,
             energy: true,
             unit: MemUnit::Si,
@@ -95,10 +101,23 @@ impl PlanSpec {
         expand_parallelisms(&self.tps, &self.pps)
     }
 
+    /// The power-cap axis every point expands over: `[None]` (uncapped,
+    /// the legacy point) when no caps were given. Innermost of all
+    /// axes, so cap-free specs keep the exact point indices (and thus
+    /// per-point seeds) of the pre-DVFS planner.
+    pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
+        if self.power_caps.is_empty() {
+            vec![None]
+        } else {
+            self.power_caps.iter().map(|&c| Some(c)).collect()
+        }
+    }
+
     /// Number of operating points the plan expands to.
     pub fn n_points(&self) -> usize {
         self.models.len() * self.devices.len() * self.quants.len()
             * self.lens.len() * self.parallelisms().len()
+            * self.power_cap_axis().len()
     }
 
     /// Validate every axis against the registries before solving.
@@ -133,6 +152,10 @@ impl PlanSpec {
         }
         for &pp in &self.pps {
             ensure!(pp >= 1, "pipeline-parallel degrees must be >= 1");
+        }
+        for &cap in &self.power_caps {
+            ensure!(cap.is_finite() && cap > 0.0,
+                    "power caps must be positive watts (got {cap})");
         }
         ensure!(self.target_rps > 0.0 && self.target_rps.is_finite(),
                 "target rate must be positive (got {})", self.target_rps);
@@ -182,6 +205,26 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = PlanSpec { pps: vec![0], ..PlanSpec::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn power_cap_axis_expands_innermost_and_validates() {
+        let s = PlanSpec { power_caps: vec![150.0, 250.0],
+                           ..PlanSpec::default() };
+        s.validate().unwrap();
+        assert_eq!(s.power_cap_axis(),
+                   vec![Some(150.0), Some(250.0)]);
+        assert_eq!(s.n_points(), 4 * 9 * 4 * 2 * 2);
+        // legacy specs expand to the single uncapped point
+        assert_eq!(PlanSpec::default().power_cap_axis(), vec![None]);
+        for bad in [
+            PlanSpec { power_caps: vec![0.0], ..PlanSpec::default() },
+            PlanSpec { power_caps: vec![f64::NAN],
+                       ..PlanSpec::default() },
+            PlanSpec { power_caps: vec![-10.0], ..PlanSpec::default() },
+        ] {
+            assert!(bad.validate().is_err());
+        }
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub struct WindowEnergy {
     pub joules: f64,
     /// Number of samples in the window.
     pub samples: usize,
+    /// True when the window held no samples and the average came from
+    /// the nearest sample *before* it (sub-sampling-period windows —
+    /// single decode steps at the 0.1 s cadence). `samples == 0` alone
+    /// cannot distinguish this from "no data at all, power is 0".
+    pub fallback: bool,
 }
 
 impl WindowEnergy {
@@ -34,11 +39,14 @@ impl WindowEnergy {
                                 -> WindowEnergy {
         assert!(t1 >= t0, "inverted window");
         let in_window = log.window(t0, t1);
-        let (avg, n) = if in_window.is_empty() {
-            (nearest_before(log, t0).unwrap_or(0.0), 0)
+        let (avg, n, fallback) = if in_window.is_empty() {
+            match nearest_before(log, t0) {
+                Some(w) => (w, 0, true),
+                None => (0.0, 0, false),
+            }
         } else {
             let sum: f64 = in_window.iter().map(|(_, w)| w).sum();
-            (sum / in_window.len() as f64, in_window.len())
+            (sum / in_window.len() as f64, in_window.len(), false)
         };
         let duration = t1 - t0;
         WindowEnergy {
@@ -46,6 +54,7 @@ impl WindowEnergy {
             duration_s: duration,
             joules: avg * duration,
             samples: n,
+            fallback,
         }
     }
 
@@ -73,6 +82,11 @@ fn nearest_before(log: &PowerLog, t: f64) -> Option<f64> {
 }
 
 /// Energy metrics for one profiled workload, in the units of Table 3/4.
+/// This is what `ExecutionBackend::run_energy` returns: the three
+/// attributed joules plus how many of the windows behind them were
+/// sub-sampling-period fallbacks — so consumers can tell "measured over
+/// samples" from "held up by the nearest-before fallback" (and both
+/// from a genuinely dead sensor reporting zero).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyReport {
     /// J/Prompt: energy of one prefill (per batch — the paper reports the
@@ -82,6 +96,37 @@ pub struct EnergyReport {
     pub joules_per_token: f64,
     /// J/Request: energy of the whole request (TTLT window).
     pub joules_per_request: f64,
+    /// Whether the prefill window used the nearest-before fallback.
+    pub prefill_fallback: bool,
+    /// Decode-step windows (out of `step_windows`) that used the
+    /// fallback — at the paper's 0.1 s cadence this is *most* of them
+    /// for ms-scale decode steps, which is worth surfacing rather than
+    /// silently folding into the mean.
+    pub fallback_step_windows: usize,
+    /// Total decode-step windows attributed.
+    pub step_windows: usize,
+}
+
+impl EnergyReport {
+    /// Closed-form joules (no sensor windows at all — the analytic
+    /// path): nothing fell back because nothing was windowed.
+    pub fn analytic(j_prompt: f64, j_token: f64, j_request: f64)
+                    -> EnergyReport {
+        EnergyReport {
+            joules_per_prompt: j_prompt,
+            joules_per_token: j_token,
+            joules_per_request: j_request,
+            prefill_fallback: false,
+            fallback_step_windows: 0,
+            step_windows: 0,
+        }
+    }
+
+    /// The (J/Prompt, J/Token, J/Request) triple.
+    pub fn triple(&self) -> (f64, f64, f64) {
+        (self.joules_per_prompt, self.joules_per_token,
+         self.joules_per_request)
+    }
 }
 
 #[cfg(test)]
@@ -114,9 +159,14 @@ mod tests {
         let log = constant_log(274.0, 5.0);
         let e = WindowEnergy::average_power_method(&log, 2.03, 2.055);
         assert_eq!(e.samples, 0);
+        assert!(e.fallback, "sub-period window must be marked: {e:?}");
         assert!((e.avg_power_w - 274.0).abs() < 1e-9);
         // 274 W * 25 ms = 6.85 J — the paper's J/token magnitude
         assert!((e.joules - 6.85).abs() < 1e-6, "{e:?}");
+        // a window wide enough to hold samples is NOT a fallback
+        let wide = WindowEnergy::average_power_method(&log, 1.0, 2.0);
+        assert!(wide.samples > 0);
+        assert!(!wide.fallback);
     }
 
     #[test]
@@ -125,6 +175,28 @@ mod tests {
         let e = WindowEnergy::average_power_method(&log, 0.0, 1.0);
         assert_eq!(e.joules, 0.0);
         assert_eq!(e.samples, 0);
+        // no data at all is NOT the nearest-before fallback: consumers
+        // must be able to tell a dead sensor from a fast phase
+        assert!(!e.fallback);
+    }
+
+    #[test]
+    fn window_before_first_sample_is_not_a_fallback() {
+        let log = PowerLog::new();
+        log.push(5.0, 100.0);
+        let e = WindowEnergy::average_power_method(&log, 1.0, 1.01);
+        assert_eq!(e.samples, 0);
+        assert!(!e.fallback, "nothing before the window to fall back to");
+        assert_eq!(e.joules, 0.0);
+    }
+
+    #[test]
+    fn energy_report_analytic_and_triple() {
+        let r = EnergyReport::analytic(25.9, 6.8, 3533.0);
+        assert_eq!(r.triple(), (25.9, 6.8, 3533.0));
+        assert!(!r.prefill_fallback);
+        assert_eq!(r.fallback_step_windows, 0);
+        assert_eq!(r.step_windows, 0);
     }
 
     #[test]

@@ -51,17 +51,25 @@ pub fn render_size_table(rows: &[SizeRow], points: &[(usize, usize)],
 
 /// Tables 3/4 layout: the paper's six metric columns. Rows measured
 /// under a quantization scheme carry it in the model cell — two saved
-/// tables must never be indistinguishable across schemes.
+/// tables must never be indistinguishable across schemes. Rows whose
+/// J/Token windows were shorter than the sampling period get a
+/// footnote: those joules came from the nearest-before sensor sample
+/// (§2.4's fast-phase path), not from in-window averaging.
 pub fn render_latency_table(title: &str, rows: &[ProfileOutcome]) -> String {
     let headers = ["Model", "TTFT", "J/Prom.", "TPOT", "J/Tok.", "TTLT",
                    "J/Req."];
+    let mut any_fallback = false;
     let table_rows: Vec<Row> = rows
         .iter()
         .map(|o| {
-            let model = match &o.quant {
+            let mut model = match &o.quant {
                 Some(q) => format!("{} [{q}]", o.model),
                 None => o.model.clone(),
             };
+            if o.energy_fallback_steps > 0 {
+                any_fallback = true;
+                model.push_str(" *");
+            }
             Row(vec![
                 model,
                 format!("{:.2}", o.ttft_ms),
@@ -73,7 +81,20 @@ pub fn render_latency_table(title: &str, rows: &[ProfileOutcome]) -> String {
             ])
         })
         .collect();
-    format!("{title}\n{}", render_table(&headers, &table_rows))
+    let mut out = format!("{title}\n{}", render_table(&headers, &table_rows));
+    if any_fallback {
+        let counts: Vec<String> = rows
+            .iter()
+            .filter(|o| o.energy_fallback_steps > 0)
+            .map(|o| format!("{}/{}", o.energy_fallback_steps,
+                             o.energy_windows))
+            .collect();
+        out.push_str(&format!(
+            "* J/Token windows shorter than the sampling period used the \
+             nearest-before sensor sample ({} of the decode windows)\n",
+            counts.join(", ")));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -109,6 +130,8 @@ mod tests {
             tpot_p99_ms: 25.10,
             simulated: true,
             quant: None,
+            energy_fallback_steps: 0,
+            energy_windows: 0,
         };
         let text = render_latency_table("nGPU=1, bsize=1, L=512+512",
                                         &[o.clone()]);
@@ -118,10 +141,19 @@ mod tests {
         assert!(text.contains("12859.85"));
         // native rows carry no scheme tag...
         assert!(!text.contains('['), "{text}");
-        // ...quantized rows announce theirs in the model cell
-        let q = ProfileOutcome { quant: Some("w4a16".into()), ..o };
+        // ...and no fallback footnote when nothing fell back
+        assert!(!text.contains("nearest-before"), "{text}");
+        // quantized rows announce theirs in the model cell
+        let q = ProfileOutcome { quant: Some("w4a16".into()), ..o.clone() };
         let text = render_latency_table("t", &[q]);
         assert!(text.contains("Llama-3.1-8B [w4a16]"), "{text}");
+        // sub-sampling-period J/Token windows get the footnote
+        let f = ProfileOutcome { energy_fallback_steps: 500,
+                                 energy_windows: 512, ..o };
+        let text = render_latency_table("t", &[f]);
+        assert!(text.contains("Llama-3.1-8B *"), "{text}");
+        assert!(text.contains("nearest-before"), "{text}");
+        assert!(text.contains("500/512"), "{text}");
     }
 
     #[test]

@@ -51,6 +51,14 @@ pub struct ProfileOutcome {
     /// Quantization scheme key the row was simulated under (`None` =
     /// the model's native dtype).
     pub quant: Option<String>,
+    /// Decode-step energy windows that were shorter than the sampling
+    /// period and fell back to the nearest-before sensor sample, out of
+    /// `energy_windows` total (0/0 on closed-form and statistical
+    /// paths). Surfaced as a footnote in the human tables; deliberately
+    /// NOT serialized in `to_json`, which must stay byte-identical to
+    /// earlier artifacts.
+    pub energy_fallback_steps: usize,
+    pub energy_windows: usize,
 }
 
 impl ProfileOutcome {
@@ -138,7 +146,8 @@ fn profile_deterministic(backend: &mut dyn ExecutionBackend,
     let tb = TokenBatch::new(w.batch, w.prompt_len,
                              vec![0; w.batch * w.prompt_len])?;
     let run = backend.generate(&tb, w.gen_len)?;
-    let (j_prompt, j_token, j_request) = backend.run_energy(&run)?;
+    let energy = backend.run_energy(&run)?;
+    let (j_prompt, j_token, j_request) = energy.triple();
     let steps = Summary::from_samples(&run.step_s);
     Ok(ProfileOutcome {
         model: backend.model_name(),
@@ -155,6 +164,8 @@ fn profile_deterministic(backend: &mut dyn ExecutionBackend,
         tpot_p99_ms: steps.as_ref().map(|s| s.p99 * 1e3).unwrap_or(0.0),
         simulated: true,
         quant: spec.quant.map(|q| q.key.to_string()),
+        energy_fallback_steps: energy.fallback_step_windows,
+        energy_windows: energy.step_windows,
     })
 }
 
@@ -210,6 +221,10 @@ fn profile_statistical(backend: &mut dyn ExecutionBackend,
         tpot_p99_ms: tpot.summary.p99 * 1e3,
         simulated: false,
         quant: None,
+        // the statistical path windows the sampler log directly and
+        // carries no per-window fallback counts
+        energy_fallback_steps: 0,
+        energy_windows: 0,
     })
 }
 

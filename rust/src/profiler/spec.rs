@@ -1,6 +1,6 @@
 //! Profiling run specification (what the CLI builds from its flags).
 
-use crate::hwsim::{ParallelSpec, Workload};
+use crate::hwsim::{OperatingPoint, ParallelSpec, Workload};
 use crate::models::QuantScheme;
 use crate::util::units::MemUnit;
 
@@ -35,6 +35,11 @@ pub struct ProfileSpec {
     /// on one device, so `backend::from_spec` rejects `tp·pp > 1` on
     /// `cpu`.
     pub parallel: Option<ParallelSpec>,
+    /// DVFS operating point (clock fraction and/or power cap) for
+    /// simulated rigs; `None` = stock clocks, uncapped — bit-identical
+    /// to the pre-DVFS outputs. The engine has no modeled governor, so
+    /// `backend::from_spec` rejects a point on `cpu`.
+    pub op: Option<OperatingPoint>,
 }
 
 impl ProfileSpec {
@@ -51,6 +56,7 @@ impl ProfileSpec {
             seed: 0,
             quant: None,
             parallel: None,
+            op: None,
         }
     }
 

@@ -6,7 +6,7 @@
 //! pool writes results by it, and reports sort by it. That makes every
 //! downstream artifact independent of worker-thread scheduling.
 
-use crate::hwsim::{ParallelSpec, Workload};
+use crate::hwsim::{OperatingPoint, ParallelSpec, Workload};
 use crate::models::{quant, QuantScheme};
 use crate::profiler::ProfileSpec;
 use crate::util::rng::Rng;
@@ -29,6 +29,9 @@ pub struct SweepCell {
     /// Explicit TP×PP mapping of the cell; `None` = the legacy
     /// whole-rig roofline.
     pub parallel: Option<ParallelSpec>,
+    /// Per-device power cap of the cell, watts; `None` = uncapped (the
+    /// legacy cell).
+    pub power_cap: Option<f64>,
     /// Deterministic per-cell seed: `Rng::mix(spec.seed, index)`.
     pub seed: u64,
 }
@@ -45,6 +48,7 @@ impl SweepCell {
         s.seed = self.seed;
         s.quant = self.quant;
         s.parallel = self.parallel;
+        s.op = self.power_cap.map(OperatingPoint::cap);
         s
     }
 
@@ -62,6 +66,15 @@ impl SweepCell {
         }
     }
 
+    /// Report label of the cell's power-cap axis (`200 W`, or `—` for
+    /// uncapped cells).
+    pub fn cap_label(&self) -> String {
+        match self.power_cap {
+            Some(c) => format!("{c} W"),
+            None => "—".to_string(),
+        }
+    }
+
     /// This cell's deterministic workload generator — what an
     /// engine-backed cell draws its random prompts from (§2.3). The
     /// hwsim path is analytic and never calls it, but the stream is
@@ -73,9 +86,10 @@ impl SweepCell {
 }
 
 /// Expand a spec into its full cell list. The quant axis sits inside
-/// the workload axes and the parallelism axis is innermost of all, so
-/// grids without the newer axes keep the exact cell indices (and thus
-/// per-cell seeds) of the earlier expansions.
+/// the workload axes, the parallelism axis inside that, and the
+/// power-cap axis is innermost of all — so grids without the newer
+/// axes keep the exact cell indices (and thus per-cell seeds) of the
+/// earlier expansions.
 pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
     let schemes: Vec<Option<QuantScheme>> = spec
         .quants
@@ -86,6 +100,7 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
         })
         .collect();
     let pars = spec.parallelisms();
+    let caps = spec.power_cap_axis();
     let mut cells = Vec::with_capacity(spec.n_cells());
     for m in &spec.models {
         for d in &spec.devices {
@@ -93,16 +108,20 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
                 for &(p, g) in &spec.lens {
                     for &q in &schemes {
                         for &par in &pars {
-                            let index = cells.len();
-                            cells.push(SweepCell {
-                                index,
-                                model: m.clone(),
-                                device: d.clone(),
-                                workload: Workload::new(b, p, g),
-                                quant: q,
-                                parallel: par,
-                                seed: Rng::mix(spec.seed, index as u64),
-                            });
+                            for &cap in &caps {
+                                let index = cells.len();
+                                cells.push(SweepCell {
+                                    index,
+                                    model: m.clone(),
+                                    device: d.clone(),
+                                    workload: Workload::new(b, p, g),
+                                    quant: q,
+                                    parallel: par,
+                                    power_cap: cap,
+                                    seed: Rng::mix(spec.seed,
+                                                   index as u64),
+                                });
+                            }
                         }
                     }
                 }
@@ -211,6 +230,28 @@ mod tests {
         // the mapping flows into the cell's ProfileSpec
         let ps = cells[1].profile_spec(true, MemUnit::Si);
         assert_eq!(ps.parallel, Some(ParallelSpec::new(4, 1)));
+    }
+
+    #[test]
+    fn power_cap_axis_expands_innermost_and_carries_caps() {
+        let mut spec = small_spec();
+        spec.power_caps = vec![150.0, 250.0];
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 16); // 2 models x 2 devices x 2 batches x 2 caps
+        // innermost axis: adjacent cells alternate caps
+        assert_eq!(cells[0].power_cap, Some(150.0));
+        assert_eq!(cells[1].power_cap, Some(250.0));
+        assert_eq!(cells[0].model, cells[1].model);
+        assert_eq!(cells[0].workload, cells[1].workload);
+        assert_eq!(cells[0].cap_label(), "150 W");
+        // the cap flows into the cell's ProfileSpec as an operating point
+        let ps = cells[1].profile_spec(true, MemUnit::Si);
+        assert_eq!(ps.op, Some(OperatingPoint::cap(250.0)));
+        // legacy grids carry no cap
+        let legacy = expand(&small_spec());
+        assert_eq!(legacy[0].power_cap, None);
+        assert_eq!(legacy[0].cap_label(), "—");
+        assert_eq!(legacy[0].profile_spec(true, MemUnit::Si).op, None);
     }
 
     #[test]

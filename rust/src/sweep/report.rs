@@ -28,27 +28,23 @@ pub fn render_markdown(r: &SweepResults) -> String {
     let best = r.best_j_token();
     let worst = r.worst_j_token();
     let has_par = r.cells.iter().any(|c| c.cell.parallel.is_some());
+    let has_cap = r.cells.iter().any(|c| c.cell.power_cap.is_some());
     let mut out = String::new();
     let _ = writeln!(out, "# elana sweep — {}", s.name);
     let _ = writeln!(out);
+    let mut axes = format!(
+        "{} cells = {} models x {} devices x {} batch sizes x {} \
+         workloads x {} quant schemes",
+        r.cells.len(), s.models.len(), s.devices.len(), s.batches.len(),
+        s.lens.len(), s.quants.len());
     if has_par {
-        let _ = writeln!(
-            out,
-            "{} cells = {} models x {} devices x {} batch sizes x {} \
-             workloads x {} quant schemes x {} parallelisms (seed {})",
-            r.cells.len(), s.models.len(), s.devices.len(),
-            s.batches.len(), s.lens.len(), s.quants.len(),
-            s.parallelisms().len(), s.seed
-        );
-    } else {
-        let _ = writeln!(
-            out,
-            "{} cells = {} models x {} devices x {} batch sizes x {} \
-             workloads x {} quant schemes (seed {})",
-            r.cells.len(), s.models.len(), s.devices.len(), s.batches.len(),
-            s.lens.len(), s.quants.len(), s.seed
-        );
+        axes.push_str(&format!(" x {} parallelisms",
+                               s.parallelisms().len()));
     }
+    if has_cap {
+        axes.push_str(&format!(" x {} power caps", s.power_caps.len()));
+    }
+    let _ = writeln!(out, "{axes} (seed {})", s.seed);
 
     for dev in &s.devices {
         let group: Vec<&CellResult> =
@@ -57,31 +53,21 @@ pub fn render_markdown(r: &SweepResults) -> String {
             continue;
         }
         let _ = writeln!(out, "\n## {}", group[0].outcome.device);
+        let mut hdr = String::from("| Model | Quant |");
+        let mut sep = String::from("|---|---|");
         if has_par {
-            let _ = writeln!(
-                out,
-                "| Model | Quant | Par | Workload | TTFT ms | J/Prompt \
-                 | TPOT ms | p50 | p99 | J/Token | dJ/Token | TTLT ms \
-                 | J/Request |"
-            );
-            let _ = writeln!(
-                out,
-                "|---|---|---|---|---:|---:|---:|---:|---:|---:|---:\
-                 |---:|---:|"
-            );
-        } else {
-            let _ = writeln!(
-                out,
-                "| Model | Quant | Workload | TTFT ms | J/Prompt \
-                 | TPOT ms | p50 | p99 | J/Token | dJ/Token | TTLT ms \
-                 | J/Request |"
-            );
-            let _ = writeln!(
-                out,
-                "|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:\
-                 |---:|"
-            );
+            hdr.push_str(" Par |");
+            sep.push_str("---|");
         }
+        if has_cap {
+            hdr.push_str(" Cap |");
+            sep.push_str("---|");
+        }
+        hdr.push_str(" Workload | TTFT ms | J/Prompt | TPOT ms | p50 \
+                      | p99 | J/Token | dJ/Token | TTLT ms | J/Request |");
+        sep.push_str("---|---:|---:|---:|---:|---:|---:|---:|---:|---:|");
+        let _ = writeln!(out, "{hdr}");
+        let _ = writeln!(out, "{sep}");
         let group_best = group
             .iter()
             .map(|c| c.outcome.j_token)
@@ -100,18 +86,22 @@ pub fn render_markdown(r: &SweepResults) -> String {
             } else {
                 format!("+{:.1}%", (o.j_token / group_best - 1.0) * 100.0)
             };
-            let par = if has_par {
-                format!(" {} |", c.cell.parallel_label())
-            } else {
-                String::new()
-            };
+            let mut axis_cells = String::new();
+            if has_par {
+                axis_cells.push_str(
+                    &format!(" {} |", c.cell.parallel_label()));
+            }
+            if has_cap {
+                axis_cells.push_str(&format!(" {} |", c.cell.cap_label()));
+            }
             let _ = writeln!(
                 out,
                 "| {} | {} |{} {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} \
                  | {:.2} | {} | {:.2} | {:.2} |",
-                model, c.cell.quant_token(), par, c.cell.workload.label(),
-                o.ttft_ms, o.j_prompt, o.tpot_ms, o.tpot_p50_ms,
-                o.tpot_p99_ms, o.j_token, delta, o.ttlt_ms, o.j_request
+                model, c.cell.quant_token(), axis_cells,
+                c.cell.workload.label(), o.ttft_ms, o.j_prompt, o.tpot_ms,
+                o.tpot_p50_ms, o.tpot_p99_ms, o.j_token, delta, o.ttlt_ms,
+                o.j_request
             );
         }
     }
@@ -162,6 +152,9 @@ pub fn to_json(r: &SweepResults) -> Json {
                 fields.push(("tp", Json::num(p.tp as f64)));
                 fields.push(("pp", Json::num(p.pp as f64)));
             }
+            if let Some(cap) = c.cell.power_cap {
+                fields.push(("power_cap_w", Json::num(cap)));
+            }
             Json::obj(fields)
         })
         .collect();
@@ -191,13 +184,17 @@ pub fn to_json(r: &SweepResults) -> Json {
         ("worst_j_token_index", opt_idx(r.worst_j_token())),
         ("cells", Json::Arr(cells)),
     ];
-    // the parallel axis appears only when requested, so legacy
-    // artifacts stay byte-identical
+    // the parallel and power-cap axes appear only when requested, so
+    // legacy artifacts stay byte-identical
     if !s.tps.is_empty() || !s.pps.is_empty() {
         fields.push(("tps", Json::Arr(
             s.tps.iter().map(|&t| Json::num(t as f64)).collect())));
         fields.push(("pps", Json::Arr(
             s.pps.iter().map(|&p| Json::num(p as f64)).collect())));
+    }
+    if !s.power_caps.is_empty() {
+        fields.push(("power_caps", Json::Arr(
+            s.power_caps.iter().map(|&c| Json::num(c)).collect())));
     }
     Json::obj(fields)
 }
@@ -320,6 +317,46 @@ mod tests {
         let lc = lv.get("cells").unwrap().as_arr().unwrap();
         assert!(lc[0].get("tp").is_none());
         assert!(!render_markdown(&legacy).contains("| Par |"));
+    }
+
+    #[test]
+    fn power_cap_column_renders_in_markdown_and_json() {
+        let s = SweepSpec {
+            models: vec!["llama-2-7b".into()],
+            devices: vec!["a6000".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            power_caps: vec![150.0, 300.0],
+            ..SweepSpec::default()
+        };
+        let r = runner::run(&s).unwrap();
+        assert_eq!(r.len(), 2);
+        let text = render_markdown(&r);
+        assert!(text.contains("| Cap |"), "{text}");
+        assert!(text.contains("| 150 W |"), "{text}");
+        assert!(text.contains("| 300 W |"), "{text}");
+        assert!(text.contains("x 2 power caps"), "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("power_cap_w").unwrap().as_f64(),
+                   Some(150.0));
+        assert_eq!(cells[1].get("power_cap_w").unwrap().as_f64(),
+                   Some(300.0));
+        assert_eq!(v.get("power_caps").unwrap().as_arr().unwrap().len(),
+                   2);
+        // the tight cap slows compute-bound prefill but not the
+        // bandwidth-bound decode, and costs less energy per token
+        let t = |i: usize, k: &str| cells[i].get("outcome").unwrap()
+            .get(k).unwrap().as_f64().unwrap();
+        assert!(t(0, "ttft_ms") > t(1, "ttft_ms"));
+        assert!(t(0, "j_token") < t(1, "j_token"));
+        // legacy sweeps carry no cap keys anywhere
+        let legacy = results();
+        let lv = Json::parse(&to_json(&legacy).to_string()).unwrap();
+        assert!(lv.get("power_caps").is_none());
+        let lc = lv.get("cells").unwrap().as_arr().unwrap();
+        assert!(lc[0].get("power_cap_w").is_none());
+        assert!(!render_markdown(&legacy).contains("| Cap |"));
     }
 
     #[test]

@@ -57,6 +57,11 @@ pub struct SweepSpec {
     pub tps: Vec<usize>,
     /// Pipeline-parallel degrees (`--pp 1,2`). Empty = legacy.
     pub pps: Vec<usize>,
+    /// Per-device power caps in watts (`--power-cap 150,220`). Empty =
+    /// uncapped only — bit-identical to the pre-DVFS sweep. The axis is
+    /// innermost of all, so legacy grids keep their cell indices and
+    /// per-cell seeds.
+    pub power_caps: Vec<f64>,
     /// Measure energy through the sensor-playback pipeline (§2.4).
     pub energy: bool,
     pub unit: MemUnit,
@@ -78,6 +83,7 @@ impl Default for SweepSpec {
             quants: DEFAULT_QUANTS.iter().map(|s| s.to_string()).collect(),
             tps: Vec::new(),
             pps: Vec::new(),
+            power_caps: Vec::new(),
             energy: true,
             unit: MemUnit::Si,
             seed: 0,
@@ -94,11 +100,22 @@ impl SweepSpec {
         expand_parallelisms(&self.tps, &self.pps)
     }
 
+    /// The power-cap axis every cell expands over: `[None]` (uncapped,
+    /// the legacy cell) when no caps were given, the given caps
+    /// otherwise.
+    pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
+        if self.power_caps.is_empty() {
+            vec![None]
+        } else {
+            self.power_caps.iter().map(|&c| Some(c)).collect()
+        }
+    }
+
     /// Number of cells the grid expands to.
     pub fn n_cells(&self) -> usize {
         self.models.len() * self.devices.len() * self.batches.len()
             * self.lens.len() * self.quants.len()
-            * self.parallelisms().len()
+            * self.parallelisms().len() * self.power_cap_axis().len()
     }
 
     /// Validate every axis against the registries before spawning
@@ -156,6 +173,10 @@ impl SweepSpec {
                         arch.n_layers());
             }
         }
+        for &cap in &self.power_caps {
+            ensure!(cap.is_finite() && cap > 0.0,
+                    "power caps must be positive watts (got {cap})");
+        }
         Ok(())
     }
 
@@ -164,9 +185,10 @@ impl SweepSpec {
     /// type (a typo'd or wrong-typed key errors instead of silently
     /// running a different grid).
     pub fn parse(text: &str) -> Result<SweepSpec> {
-        const KNOWN_KEYS: [&str; 12] =
+        const KNOWN_KEYS: [&str; 13] =
             ["sweep", "models", "devices", "batches", "lens", "quants",
-             "tps", "pps", "energy", "unit", "seed", "threads"];
+             "tps", "pps", "power_caps", "energy", "unit", "seed",
+             "threads"];
         let root = Json::parse(text).context("parsing sweep spec JSON")?;
         let obj = root
             .as_obj()
@@ -253,6 +275,19 @@ impl SweepSpec {
         if let Some(v) = usizes("pps")? {
             spec.pps = v;
         }
+        if let Some(v) = root.get("power_caps") {
+            spec.power_caps = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("`power_caps` must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        anyhow!("`power_caps` entries must be numbers \
+                                 (watts)")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
         if let Some(v) = root.get("energy") {
             spec.energy = v
                 .as_bool()
@@ -307,6 +342,7 @@ pub struct SweepOverrides {
     pub quants: Option<Vec<String>>,
     pub tps: Option<Vec<usize>>,
     pub pps: Option<Vec<usize>>,
+    pub power_caps: Option<Vec<f64>>,
     pub energy: Option<bool>,
     pub unit: Option<MemUnit>,
     pub seed: Option<u64>,
@@ -336,6 +372,9 @@ impl SweepOverrides {
         }
         if let Some(v) = self.pps {
             spec.pps = v;
+        }
+        if let Some(v) = self.power_caps {
+            spec.power_caps = v;
         }
         if let Some(v) = self.energy {
             spec.energy = v;
@@ -478,6 +517,43 @@ mod tests {
         assert!(bad.validate().is_err());
         assert!(SweepSpec::parse(r#"{"tps": "2"}"#).is_err());
         assert!(SweepSpec::parse(r#"{"pps": ["two"]}"#).is_err());
+    }
+
+    #[test]
+    fn power_cap_axis_parses_validates_and_multiplies_the_grid() {
+        let s = SweepSpec::parse(
+            r#"{"models": ["llama-3.1-8b"], "devices": ["a6000"],
+                "batches": [1], "lens": ["64+32"],
+                "power_caps": [150, 220.5]}"#)
+            .unwrap();
+        assert_eq!(s.power_caps, vec![150.0, 220.5]);
+        assert_eq!(s.n_cells(), 2);
+        s.validate().unwrap();
+        // legacy grids carry no cap axis and expand to the uncapped cell
+        assert!(SweepSpec::default().power_caps.is_empty());
+        assert_eq!(SweepSpec::default().power_cap_axis(), vec![None]);
+        // degenerate caps rejected
+        let bad = SweepSpec {
+            power_caps: vec![0.0],
+            ..SweepSpec::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = SweepSpec {
+            power_caps: vec![-50.0],
+            ..SweepSpec::default()
+        };
+        assert!(bad.validate().is_err());
+        // wrong-typed key errors instead of silently running defaults
+        assert!(SweepSpec::parse(r#"{"power_caps": "200"}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"power_caps": ["200"]}"#).is_err());
+        // overrides layer the axis like every other flag
+        let ov = SweepOverrides {
+            power_caps: Some(vec![180.0]),
+            ..SweepOverrides::default()
+        };
+        let mut spec = SweepSpec::default();
+        ov.apply(&mut spec);
+        assert_eq!(spec.power_caps, vec![180.0]);
     }
 
     #[test]

@@ -1,0 +1,26 @@
+//! `elana tune` — the power-cap/DVFS operating-point tuner.
+//!
+//! ELANA's headline is *energy* and latency, but a fixed-clock device
+//! model can only trade them across hardware. This subsystem adds the
+//! operating-point axis: it sweeps a (clock fraction × power cap) grid
+//! for one (model, device, workload), measures each point through the
+//! DVFS-aware roofline (`hwsim::simulate_at`), and recommends the
+//! *per-phase* energy optimum under latency SLOs — prefill is
+//! compute-bound and wants high clocks for its TTFT bound, decode is
+//! bandwidth-bound and rides the clock down to the DVFS floor at
+//! almost no TPOT cost ("From Words to Watts", Samsi et al.;
+//! "TokenPowerBench"'s per-phase power argument).
+//!
+//! * [`spec`] — the grid, workload, and SLO knobs (`TuneSpec`).
+//! * [`runner`] — point evaluation on the sweep worker pool with
+//!   `Rng::mix` per-point seeds; per-phase optima; the combined
+//!   phase-split recommendation.
+//! * [`report`] — markdown operating-point table + deterministic JSON,
+//!   byte-identical at any `--workers` count.
+
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use runner::{run, CombinedRec, TunePoint, TuneResults};
+pub use spec::TuneSpec;

@@ -1,0 +1,311 @@
+//! Tune reports: the operating-point table (clock/cap → latency and
+//! energy per phase), the per-phase optima, and the phase-split
+//! recommendation — markdown for humans, deterministic JSON for
+//! machines.
+//!
+//! Both renderings are pure functions of the results and omit execution
+//! details (worker count, host wall time), so tune artifacts are
+//! byte-identical however the grid was parallelized — the sweep report
+//! discipline.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+use super::runner::{TunePoint, TuneResults};
+
+fn pct_delta(x: f64, base: f64) -> String {
+    if base <= 0.0 {
+        return "—".to_string();
+    }
+    let d = (x / base - 1.0) * 100.0;
+    format!("{}{:.1}%", if d >= 0.0 { "+" } else { "" }, d)
+}
+
+fn slo_cell(p: &TunePoint) -> &'static str {
+    match (p.ttft_ok, p.tpot_ok) {
+        (true, true) => "ok",
+        (false, true) => "ttft!",
+        (true, false) => "tpot!",
+        (false, false) => "ttft!tpot!",
+    }
+}
+
+fn cap_cell(p: &TunePoint) -> String {
+    match p.power_cap_w {
+        Some(c) => format!("{c} W"),
+        None => "—".to_string(),
+    }
+}
+
+/// Markdown operating-point report.
+pub fn render_markdown(r: &TuneResults) -> String {
+    let s = &r.spec;
+    let mut out = String::new();
+    let quant = if s.quant == "native" {
+        String::new()
+    } else {
+        format!(" [quant {}]", s.quant)
+    };
+    let par = match s.parallel {
+        Some(p) => format!(" [{}]", p.label()),
+        None => String::new(),
+    };
+    let _ = writeln!(out, "# elana tune — {} on {}{}{}", s.model,
+                     s.device, quant, par);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "{} operating points = {} clocks x {} cap level(s), workload \
+         {} (seed {})",
+        r.points.len(), s.clocks.len(), s.power_cap_axis().len(),
+        s.workload().label(), s.seed);
+    let _ = writeln!(
+        out,
+        "SLOs: TTFT <= {:.2} ms, TPOT <= {:.2} ms{}",
+        r.slo_ttft_ms, r.slo_tpot_ms,
+        if s.slo_ttft_ms.is_none() && s.slo_tpot_ms.is_none() {
+            " (defaults: 1.25x / 1.10x the stock point)"
+        } else {
+            ""
+        });
+    let _ = writeln!(
+        out,
+        "stock point: {:.0} MHz uncapped — TTFT {:.2} ms, TPOT {:.2} \
+         ms, {:.3} J/token",
+        r.baseline.eff_mhz, r.baseline.ttft_ms, r.baseline.tpot_ms,
+        r.baseline.j_token);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "| Clock | Cap | Eff MHz | TTFT ms | J/Prompt | TPOT ms \
+         | J/Token | dJ/Token | TTLT ms | J/Request | W avg | SLO |");
+    let _ = writeln!(
+        out,
+        "|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|---|");
+    for p in &r.points {
+        let mut clock = format!("{:.2}", p.clock_frac);
+        if p.throttled {
+            clock.push('~');
+        }
+        let _ = writeln!(
+            out,
+            "| {} | {} | {:.0} | {:.2} | {:.2} | {:.2} | {:.3} | {} \
+             | {:.2} | {:.2} | {:.0} | {} |",
+            clock, cap_cell(p), p.eff_mhz, p.ttft_ms, p.j_prompt,
+            p.tpot_ms, p.j_token, pct_delta(p.j_token,
+                                            r.baseline.j_token),
+            p.ttlt_ms, p.j_request, p.avg_watts, slo_cell(p));
+    }
+    let _ = writeln!(out);
+    match (r.point(r.prefill_rec), r.point(r.decode_rec)) {
+        (Some(pre), Some(dec)) => {
+            let _ = writeln!(
+                out,
+                "**Prefill optimum:** {:.0} MHz{} — {:.2} J/prompt \
+                 ({} vs stock), TTFT {:.2} ms",
+                pre.eff_mhz,
+                match pre.power_cap_w {
+                    Some(c) => format!(" @ {c} W"),
+                    None => String::new(),
+                },
+                pre.j_prompt, pct_delta(pre.j_prompt,
+                                        r.baseline.j_prompt),
+                pre.ttft_ms);
+            let _ = writeln!(
+                out,
+                "**Decode optimum:** {:.0} MHz{} — {:.3} J/token \
+                 ({} vs stock), TPOT {:.2} ms",
+                dec.eff_mhz,
+                match dec.power_cap_w {
+                    Some(c) => format!(" @ {c} W"),
+                    None => String::new(),
+                },
+                dec.j_token, pct_delta(dec.j_token, r.baseline.j_token),
+                dec.tpot_ms);
+            if let Some(c) = &r.combined {
+                let _ = writeln!(
+                    out,
+                    "**Recommendation (phase-aware):** prefill @ {:.0} \
+                     MHz, decode @ {:.0} MHz — TTFT {:.2} ms, TPOT \
+                     {:.2} ms, {:.3} J/token ({} vs stock), {:.1} \
+                     J/request ({} vs stock)",
+                    pre.eff_mhz, dec.eff_mhz, c.ttft_ms, c.tpot_ms,
+                    c.j_token, pct_delta(c.j_token, r.baseline.j_token),
+                    c.j_request,
+                    pct_delta(c.j_request, r.baseline.j_request));
+            }
+        }
+        _ => {
+            let _ = writeln!(
+                out,
+                "**No feasible operating point** — no grid point meets \
+                 the SLOs; relax --slo-ttft/--slo-tpot or widen the \
+                 clock grid.");
+        }
+    }
+    out
+}
+
+fn point_json(p: &TunePoint) -> Json {
+    Json::obj(vec![
+        ("index", Json::num(p.index as f64)),
+        ("clock_frac", Json::num(p.clock_frac)),
+        ("power_cap_w", match p.power_cap_w {
+            Some(c) => Json::num(c),
+            None => Json::Null,
+        }),
+        ("eff_frac", Json::num(p.eff_frac)),
+        ("eff_mhz", Json::num(p.eff_mhz)),
+        ("throttled", Json::Bool(p.throttled)),
+        ("ttft_ms", Json::num(p.ttft_ms)),
+        ("j_prompt", Json::num(p.j_prompt)),
+        ("tpot_ms", Json::num(p.tpot_ms)),
+        ("j_token", Json::num(p.j_token)),
+        ("ttlt_ms", Json::num(p.ttlt_ms)),
+        ("j_request", Json::num(p.j_request)),
+        ("avg_watts", Json::num(p.avg_watts)),
+        ("seed", Json::str(p.seed.to_string())),
+        ("ttft_ok", Json::Bool(p.ttft_ok)),
+        ("tpot_ok", Json::Bool(p.tpot_ok)),
+    ])
+}
+
+/// Deterministic JSON (BTreeMap-ordered objects; seeds as strings so
+/// 64-bit values survive the f64 number model).
+pub fn to_json(r: &TuneResults) -> Json {
+    let s = &r.spec;
+    let opt_idx = |v: Option<usize>| match v {
+        Some(i) => Json::num(i as f64),
+        None => Json::Null,
+    };
+    let mut fields = vec![
+        ("tune", Json::str(s.name.clone())),
+        ("model", Json::str(s.model.clone())),
+        ("device", Json::str(s.device.clone())),
+        ("quant", Json::str(s.quant.clone())),
+        ("batch", Json::num(s.batch as f64)),
+        ("prompt_len", Json::num(s.prompt_len as f64)),
+        ("gen_len", Json::num(s.gen_len as f64)),
+        ("seed", Json::str(s.seed.to_string())),
+        ("energy", Json::Bool(s.energy)),
+        ("clocks", Json::Arr(
+            s.clocks.iter().map(|&c| Json::num(c)).collect())),
+        ("slo_ttft_ms", Json::num(r.slo_ttft_ms)),
+        ("slo_tpot_ms", Json::num(r.slo_tpot_ms)),
+        ("n_points", Json::num(r.points.len() as f64)),
+        ("baseline", {
+            // the stock reference has no grid index
+            let mut b = r.baseline.clone();
+            b.index = 0;
+            let Json::Obj(mut o) = point_json(&b) else {
+                unreachable!("point_json returns an object")
+            };
+            o.remove("index");
+            Json::Obj(o)
+        }),
+        ("prefill_recommendation", opt_idx(r.prefill_rec)),
+        ("decode_recommendation", opt_idx(r.decode_rec)),
+        ("combined", match &r.combined {
+            Some(c) => Json::obj(vec![
+                ("ttft_ms", Json::num(c.ttft_ms)),
+                ("j_prompt", Json::num(c.j_prompt)),
+                ("tpot_ms", Json::num(c.tpot_ms)),
+                ("j_token", Json::num(c.j_token)),
+                ("ttlt_ms", Json::num(c.ttlt_ms)),
+                ("j_request", Json::num(c.j_request)),
+            ]),
+            None => Json::Null,
+        }),
+        ("points", Json::Arr(r.points.iter().map(point_json).collect())),
+    ];
+    if !s.power_caps.is_empty() {
+        fields.push(("power_caps", Json::Arr(
+            s.power_caps.iter().map(|&c| Json::num(c)).collect())));
+    }
+    if let Some(p) = s.parallel {
+        fields.push(("tp", Json::num(p.tp as f64)));
+        fields.push(("pp", Json::num(p.pp as f64)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::runner;
+    use crate::tune::spec::TuneSpec;
+
+    fn results() -> TuneResults {
+        runner::run(&TuneSpec { gen_len: 64, ..TuneSpec::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn markdown_has_table_optima_and_recommendation() {
+        let r = results();
+        let text = render_markdown(&r);
+        assert!(text.contains("# elana tune — llama-2-7b on a6000"),
+                "{text}");
+        assert!(text.contains("| Clock | Cap | Eff MHz |"), "{text}");
+        assert!(text.contains("SLOs: TTFT <="), "{text}");
+        assert!(text.contains("stock point: 1800 MHz uncapped"),
+                "{text}");
+        assert!(text.contains("**Prefill optimum:**"), "{text}");
+        assert!(text.contains("**Decode optimum:**"), "{text}");
+        assert!(text.contains("**Recommendation (phase-aware):**"),
+                "{text}");
+        // every grid point rendered
+        assert_eq!(text.matches("| 0.").count()
+                       + text.matches("| 1.00").count(),
+                   r.points.len(), "{text}");
+    }
+
+    #[test]
+    fn infeasible_slos_render_the_no_point_block() {
+        let r = runner::run(&TuneSpec {
+            slo_ttft_ms: Some(1e-6),
+            slo_tpot_ms: Some(1e-6),
+            gen_len: 16,
+            ..TuneSpec::default()
+        })
+        .unwrap();
+        let text = render_markdown(&r);
+        assert!(text.contains("**No feasible operating point**"),
+                "{text}");
+        assert!(text.contains("ttft!tpot!"), "{text}");
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let r = results();
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("llama-2-7b"));
+        assert_eq!(v.get("n_points").unwrap().as_usize(), Some(7));
+        let pts = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 7);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.get("index").unwrap().as_usize(), Some(i));
+            assert!(p.get("j_token").unwrap().as_f64().unwrap() > 0.0);
+            assert!(p.get("eff_mhz").unwrap().as_f64().unwrap() > 0.0);
+        }
+        let pre = v.get("prefill_recommendation").unwrap();
+        let dec = v.get("decode_recommendation").unwrap();
+        assert!(pre.as_usize().is_some());
+        assert!(dec.as_usize().is_some());
+        // the decode optimum's clock sits below the prefill optimum's
+        let mhz = |j: &Json| j.get("eff_mhz").unwrap().as_f64().unwrap();
+        assert!(mhz(&pts[dec.as_usize().unwrap()])
+                    < mhz(&pts[pre.as_usize().unwrap()]));
+        assert!(v.get("combined").unwrap().get("j_token").is_some());
+        // baseline is the stock point, without a grid index
+        let b = v.get("baseline").unwrap();
+        assert!(b.get("index").is_none());
+        assert_eq!(b.get("clock_frac").unwrap().as_f64(), Some(1.0));
+        // uncapped grids carry no cap key; execution details never leak
+        assert!(v.get("power_caps").is_none());
+        assert!(v.get("workers").is_none());
+        // seeds as strings
+        assert!(pts[0].get("seed").unwrap().as_str().is_some());
+    }
+}

@@ -1,0 +1,352 @@
+//! Tune execution: evaluate every (clock, cap) operating point of the
+//! grid through `SimBackend`, resolve the latency SLOs against the
+//! stock point, pick the per-phase energy optima, and evaluate the
+//! combined phase-split recommendation.
+//!
+//! The sweep's determinism contract holds: points are index-addressed,
+//! per-point seeds derive from `Rng::mix(spec.seed, index)` (the
+//! baseline and the combined run use dedicated stream tags), and the
+//! reports omit execution details — so output is byte-identical at any
+//! `--workers` count.
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{ExecutionBackend, SimBackend};
+use crate::engine::TokenBatch;
+use crate::hwsim::{device, OperatingPoint};
+use crate::models::quant;
+use crate::sweep::pool;
+use crate::util::Rng;
+use crate::workload::streams;
+
+use super::spec::{TuneSpec, DEFAULT_TPOT_SLACK, DEFAULT_TTFT_SLACK};
+
+/// One evaluated operating point.
+#[derive(Debug, Clone)]
+pub struct TunePoint {
+    /// Position in the grid (caps major, clocks minor; stable across
+    /// worker counts).
+    pub index: usize,
+    /// Requested clock fraction.
+    pub clock_frac: f64,
+    /// Power-cap level, watts (`None` = uncapped).
+    pub power_cap_w: Option<f64>,
+    /// Clock fraction the device actually ran (clamp + cap throttle).
+    pub eff_frac: f64,
+    /// The same, in MHz.
+    pub eff_mhz: f64,
+    /// True when the cap throttled below the requested clock.
+    pub throttled: bool,
+    pub ttft_ms: f64,
+    pub j_prompt: f64,
+    pub tpot_ms: f64,
+    pub j_token: f64,
+    pub ttlt_ms: f64,
+    pub j_request: f64,
+    /// Whole-request average power, watts.
+    pub avg_watts: f64,
+    /// Deterministic per-point seed.
+    pub seed: u64,
+    /// SLO feasibility (filled after the SLOs are resolved).
+    pub ttft_ok: bool,
+    pub tpot_ok: bool,
+}
+
+/// The phase-split recommendation, evaluated end to end (prefill at the
+/// prefill optimum's operating point, decode at the decode optimum's).
+#[derive(Debug, Clone)]
+pub struct CombinedRec {
+    pub ttft_ms: f64,
+    pub j_prompt: f64,
+    pub tpot_ms: f64,
+    pub j_token: f64,
+    pub ttlt_ms: f64,
+    pub j_request: f64,
+}
+
+/// Everything the tune report renders.
+#[derive(Debug, Clone)]
+pub struct TuneResults {
+    pub spec: TuneSpec,
+    /// Grid points in index order.
+    pub points: Vec<TunePoint>,
+    /// The stock reference: clock 1.0, uncapped (always evaluated, even
+    /// when the grid omits it — SLO defaults derive from it).
+    pub baseline: TunePoint,
+    /// Resolved SLOs, ms.
+    pub slo_ttft_ms: f64,
+    pub slo_tpot_ms: f64,
+    /// Index of the prefill optimum: min J/Prompt s.t. TTFT SLO.
+    pub prefill_rec: Option<usize>,
+    /// Index of the decode optimum: min J/Token s.t. TPOT SLO.
+    pub decode_rec: Option<usize>,
+    /// The phase-split run at (prefill optimum, decode optimum).
+    pub combined: Option<CombinedRec>,
+}
+
+impl TuneResults {
+    pub fn point(&self, idx: Option<usize>) -> Option<&TunePoint> {
+        idx.and_then(|i| self.points.get(i))
+    }
+}
+
+/// Build the backend for one operating point (or, with `ops`, a
+/// phase-split pair) and run the tuned workload through it.
+fn evaluate(spec: &TuneSpec, seed: u64,
+            ops: (OperatingPoint, OperatingPoint))
+            -> Result<(f64, f64, f64, f64, f64, f64)> {
+    let mut b = SimBackend::new(&spec.model, &spec.device, spec.energy,
+                                seed)?;
+    if let Some(q) = quant::parse_token(&spec.quant)? {
+        b = b.with_quant(q);
+    }
+    if let Some(p) = spec.parallel {
+        b = b.with_parallel(p)?;
+    }
+    b = b.with_phase_ops(ops.0, ops.1);
+    let w = spec.workload();
+    let tb = TokenBatch::new(w.batch, w.prompt_len,
+                             vec![0; w.batch * w.prompt_len])?;
+    let run = b.generate(&tb, w.gen_len)?;
+    let (j_prompt, j_token, j_request) = b.run_energy(&run)?.triple();
+    Ok((run.ttft_s * 1e3, j_prompt, run.tpot_mean_s() * 1e3, j_token,
+        run.ttlt_s * 1e3, j_request))
+}
+
+/// Evaluate a *uniform* operating point into a report row. The SLO
+/// flags start false — `run` resolves the SLOs and fills them for grid
+/// points and the baseline alike.
+fn evaluate_uniform(spec: &TuneSpec, index: usize, op: OperatingPoint,
+                    seed: u64) -> Result<TunePoint> {
+    let (ttft_ms, j_prompt, tpot_ms, j_token, ttlt_ms, j_request) =
+        evaluate(spec, seed, (op, op))?;
+    let d = device::rig_by_name(&spec.device)
+        .ok_or_else(|| anyhow!("unknown device `{}`", spec.device))?
+        .device;
+    let requested = op.clock_frac.clamp(d.freq.min_frac, 1.0);
+    let eff = d.effective_frac(&op);
+    Ok(TunePoint {
+        index,
+        clock_frac: op.clock_frac,
+        power_cap_w: op.power_cap_w,
+        eff_frac: eff,
+        eff_mhz: eff * d.freq.base_mhz,
+        throttled: eff < requested,
+        ttft_ms,
+        j_prompt,
+        tpot_ms,
+        j_token,
+        ttlt_ms,
+        j_request,
+        avg_watts: if ttlt_ms > 0.0 {
+            j_request / (ttlt_ms / 1e3)
+        } else {
+            0.0
+        },
+        seed,
+        ttft_ok: false,
+        tpot_ok: false,
+    })
+}
+
+/// Run the full tuner.
+pub fn run(spec: &TuneSpec) -> Result<TuneResults> {
+    spec.validate()?;
+    // grid: caps major, clocks minor
+    let mut grid = Vec::with_capacity(spec.n_points());
+    for &cap in &spec.power_cap_axis() {
+        for &clock in &spec.clocks {
+            grid.push((clock, cap));
+        }
+    }
+    let evaluated = pool::run_indexed(spec.workers, grid.len(), |i| {
+        let op = OperatingPoint { clock_frac: grid[i].0,
+                                  power_cap_w: grid[i].1 };
+        evaluate_uniform(spec, i, op, Rng::mix(spec.seed, i as u64))
+    });
+    let mut points = Vec::with_capacity(grid.len());
+    for p in evaluated {
+        points.push(p?);
+    }
+
+    // the stock reference the SLO defaults (and "vs uncapped" deltas)
+    // anchor on — no grid index, its own seed stream
+    let mut baseline = evaluate_uniform(
+        spec, usize::MAX, OperatingPoint::uncapped(),
+        Rng::mix(spec.seed, streams::TUNE_BASELINE))?;
+
+    let slo_ttft_ms = spec
+        .slo_ttft_ms
+        .unwrap_or(baseline.ttft_ms * DEFAULT_TTFT_SLACK);
+    let slo_tpot_ms = spec
+        .slo_tpot_ms
+        .unwrap_or(baseline.tpot_ms * DEFAULT_TPOT_SLACK);
+    let resolve_slo = |p: &mut TunePoint| {
+        p.ttft_ok = p.ttft_ms <= slo_ttft_ms * (1.0 + 1e-12);
+        p.tpot_ok = p.tpot_ms <= slo_tpot_ms * (1.0 + 1e-12);
+    };
+    for p in &mut points {
+        resolve_slo(p);
+    }
+    resolve_slo(&mut baseline);
+
+    // per-phase optima: prefill is compute-bound and pays for downclock
+    // in TTFT, so the SLO binds it high; decode is bandwidth-bound and
+    // rides the clock down almost for free
+    let argmin = |ok: &dyn Fn(&TunePoint) -> bool,
+                  key: &dyn Fn(&TunePoint) -> f64|
+     -> Option<usize> {
+        points
+            .iter()
+            .filter(|p| ok(p))
+            .min_by(|a, b| {
+                key(a)
+                    .partial_cmp(&key(b))
+                    .expect("finite joules")
+                    .then(a.index.cmp(&b.index))
+            })
+            .map(|p| p.index)
+    };
+    let prefill_rec = argmin(&|p| p.ttft_ok, &|p| p.j_prompt);
+    let decode_rec = argmin(&|p| p.tpot_ok, &|p| p.j_token);
+
+    let combined = match (prefill_rec, decode_rec) {
+        (Some(pi), Some(di)) => {
+            let p_op = OperatingPoint {
+                clock_frac: points[pi].clock_frac,
+                power_cap_w: points[pi].power_cap_w,
+            };
+            let d_op = OperatingPoint {
+                clock_frac: points[di].clock_frac,
+                power_cap_w: points[di].power_cap_w,
+            };
+            let (ttft_ms, j_prompt, tpot_ms, j_token, ttlt_ms,
+                 j_request) = evaluate(
+                spec, Rng::mix(spec.seed, streams::TUNE_COMBINED),
+                (p_op, d_op))?;
+            Some(CombinedRec { ttft_ms, j_prompt, tpot_ms, j_token,
+                               ttlt_ms, j_request })
+        }
+        _ => None,
+    };
+
+    Ok(TuneResults {
+        spec: spec.clone(),
+        points,
+        baseline,
+        slo_ttft_ms,
+        slo_tpot_ms,
+        prefill_rec,
+        decode_rec,
+        combined,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec() -> TuneSpec {
+        TuneSpec {
+            gen_len: 64,
+            ..TuneSpec::default()
+        }
+    }
+
+    #[test]
+    fn acceptance_decode_downclocks_below_prefill_and_saves_energy() {
+        // `elana tune --model llama-2-7b --device a6000`
+        let r = run(&TuneSpec::default()).unwrap();
+        assert_eq!(r.points.len(), 7);
+        let pre = r.point(r.prefill_rec).expect("prefill optimum");
+        let dec = r.point(r.decode_rec).expect("decode optimum");
+        // decode is bandwidth-bound: its optimum sits strictly below
+        // the SLO-bound prefill clock
+        assert!(dec.eff_frac < pre.eff_frac,
+                "decode {} vs prefill {}", dec.eff_frac, pre.eff_frac);
+        // J/token at the recommendation <= the uncapped default
+        assert!(dec.j_token <= r.baseline.j_token,
+                "{} vs {}", dec.j_token, r.baseline.j_token);
+        // and well below it on this device (the headline saving)
+        assert!(dec.j_token < r.baseline.j_token * 0.7);
+        // SLOs hold at the optima
+        assert!(pre.ttft_ms <= r.slo_ttft_ms);
+        assert!(dec.tpot_ms <= r.slo_tpot_ms);
+        // the combined run inherits both phases
+        let c = r.combined.as_ref().expect("combined recommendation");
+        assert!(c.ttft_ms <= r.slo_ttft_ms * (1.0 + 1e-9));
+        assert!(c.tpot_ms <= r.slo_tpot_ms * (1.0 + 1e-9));
+        assert!(c.j_token <= r.baseline.j_token);
+        assert!(c.j_request < r.baseline.j_request);
+    }
+
+    #[test]
+    fn stock_point_matches_the_baseline_bitwise() {
+        // analytic joules (energy off): the clock-1.0 grid point and
+        // the baseline are the same arithmetic
+        let r = run(&quick_spec()).unwrap();
+        let stock = r
+            .points
+            .iter()
+            .find(|p| p.clock_frac == 1.0 && p.power_cap_w.is_none())
+            .expect("default grid includes stock");
+        assert_eq!(stock.ttft_ms, r.baseline.ttft_ms);
+        assert_eq!(stock.tpot_ms, r.baseline.tpot_ms);
+        assert_eq!(stock.j_token, r.baseline.j_token);
+        assert!(!stock.throttled);
+        assert_eq!(stock.eff_frac, 1.0);
+    }
+
+    #[test]
+    fn worker_count_never_changes_results() {
+        let mut a_spec = quick_spec();
+        a_spec.workers = 1;
+        let mut b_spec = quick_spec();
+        b_spec.workers = 8;
+        let a = run(&a_spec).unwrap();
+        let b = run(&b_spec).unwrap();
+        assert_eq!(a.prefill_rec, b.prefill_rec);
+        assert_eq!(a.decode_rec, b.decode_rec);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.j_token, y.j_token);
+            assert_eq!(x.ttft_ms, y.ttft_ms);
+            assert_eq!(x.seed, y.seed);
+        }
+    }
+
+    #[test]
+    fn caps_throttle_and_appear_in_the_grid() {
+        let spec = TuneSpec {
+            clocks: vec![1.0],
+            power_caps: vec![120.0, 250.0],
+            gen_len: 32,
+            ..TuneSpec::default()
+        };
+        let r = run(&spec).unwrap();
+        assert_eq!(r.points.len(), 2);
+        let tight = &r.points[0];
+        let loose = &r.points[1];
+        assert_eq!(tight.power_cap_w, Some(120.0));
+        assert!(tight.throttled, "120 W must throttle an A6000");
+        assert!(tight.eff_frac < loose.eff_frac);
+        // the tighter cap never speeds anything up
+        assert!(tight.ttft_ms >= loose.ttft_ms);
+        assert!(tight.tpot_ms >= loose.tpot_ms);
+        // both phases' energy drops under the tighter cap
+        assert!(tight.j_token <= loose.j_token);
+    }
+
+    #[test]
+    fn impossible_slo_yields_no_recommendation() {
+        let spec = TuneSpec {
+            slo_tpot_ms: Some(1e-6),
+            slo_ttft_ms: Some(1e-6),
+            gen_len: 16,
+            ..TuneSpec::default()
+        };
+        let r = run(&spec).unwrap();
+        assert!(r.prefill_rec.is_none());
+        assert!(r.decode_rec.is_none());
+        assert!(r.combined.is_none());
+    }
+}

@@ -1,0 +1,206 @@
+//! `elana tune` specification: which (model, device, workload) to tune,
+//! over which clock/power-cap grid, under which latency SLOs.
+//!
+//! Follows the sweep/plan spec discipline: every knob is validated
+//! against the registries before any worker starts, so a typo fails
+//! fast with the known names listed; `workers` is an execution knob
+//! that never changes a byte of output.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::hwsim::{device, ParallelSpec, Workload};
+use crate::models::{self, quant};
+
+/// Default clock grid, fractions of the nominal SM clock. Stock (1.0)
+/// is always included so "vs the uncapped default" comparisons are
+/// grid-internal.
+pub const DEFAULT_CLOCKS: [f64; 7] = [0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+
+/// Default SLO slack when no absolute bound is given: TTFT may grow to
+/// 1.25x the stock point (prefill is latency-visible), TPOT to 1.10x
+/// (streaming tolerates almost nothing).
+pub const DEFAULT_TTFT_SLACK: f64 = 1.25;
+pub const DEFAULT_TPOT_SLACK: f64 = 1.10;
+
+/// Everything `elana tune` needs to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneSpec {
+    pub name: String,
+    /// Registry model name.
+    pub model: String,
+    /// hwsim rig name (the tuner models DVFS, so `cpu` is rejected).
+    pub device: String,
+    /// Quant token (`native` or a named scheme key).
+    pub quant: String,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Explicit TP×PP mapping (`None` = legacy whole-rig).
+    pub parallel: Option<ParallelSpec>,
+    /// Clock-fraction grid (each in (0, 1]); the device clamps to its
+    /// DVFS floor.
+    pub clocks: Vec<f64>,
+    /// Power-cap levels, watts. Empty = one uncapped column.
+    pub power_caps: Vec<f64>,
+    /// Absolute TTFT SLO, ms (`None` = 1.25x the stock point).
+    pub slo_ttft_ms: Option<f64>,
+    /// Absolute TPOT SLO, ms (`None` = 1.10x the stock point).
+    pub slo_tpot_ms: Option<f64>,
+    /// Measure through the seeded sensor playback instead of the
+    /// closed-form roofline joules. Off by default: operating-point
+    /// comparisons want the noise-free analytic numbers.
+    pub energy: bool,
+    /// Base seed; each grid point derives its own via
+    /// `Rng::mix(seed, index)`.
+    pub seed: u64,
+    /// Worker threads (0 = one per core). Never affects results.
+    pub workers: usize,
+}
+
+impl Default for TuneSpec {
+    fn default() -> TuneSpec {
+        TuneSpec {
+            name: "tune".to_string(),
+            model: "llama-2-7b".to_string(),
+            device: "a6000".to_string(),
+            quant: "native".to_string(),
+            batch: 1,
+            prompt_len: 512,
+            gen_len: 512,
+            parallel: None,
+            clocks: DEFAULT_CLOCKS.to_vec(),
+            power_caps: Vec::new(),
+            slo_ttft_ms: None,
+            slo_tpot_ms: None,
+            energy: false,
+            seed: 0,
+            workers: 0,
+        }
+    }
+}
+
+impl TuneSpec {
+    /// The tuned workload.
+    pub fn workload(&self) -> Workload {
+        Workload::new(self.batch, self.prompt_len, self.gen_len)
+    }
+
+    /// The power-cap axis: `[None]` (uncapped) when no caps were given.
+    pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
+        if self.power_caps.is_empty() {
+            vec![None]
+        } else {
+            self.power_caps.iter().map(|&c| Some(c)).collect()
+        }
+    }
+
+    /// Grid size: caps major, clocks minor.
+    pub fn n_points(&self) -> usize {
+        self.clocks.len() * self.power_cap_axis().len()
+    }
+
+    /// Validate every knob before any evaluation starts.
+    pub fn validate(&self) -> Result<()> {
+        if models::lookup(&self.model).is_none() {
+            bail!("unknown model `{}` (known: {})", self.model,
+                  models::registry::model_names().join(", "));
+        }
+        ensure!(self.device != "cpu",
+                "the tuner models the DVFS governor of simulated rigs; \
+                 the `cpu` engine has none");
+        let Some(rig) = device::rig_by_name(&self.device) else {
+            bail!("unknown device `{}` (known: {})", self.device,
+                  device::all_rig_names().join(", "));
+        };
+        quant::parse_token(&self.quant)?;
+        ensure!(self.batch >= 1, "batch must be >= 1");
+        ensure!(self.prompt_len >= 1 && self.gen_len >= 1,
+                "workload lengths must be >= 1 (got {}+{})",
+                self.prompt_len, self.gen_len);
+        ensure!(!self.clocks.is_empty(),
+                "tune needs at least one clock fraction");
+        for &c in &self.clocks {
+            ensure!(c.is_finite() && c > 0.0 && c <= 1.0,
+                    "clock fractions must be in (0, 1] (got {c})");
+        }
+        for &cap in &self.power_caps {
+            ensure!(cap.is_finite() && cap > 0.0,
+                    "power caps must be positive watts (got {cap})");
+        }
+        for (name, slo) in [("slo-ttft", self.slo_ttft_ms),
+                            ("slo-tpot", self.slo_tpot_ms)] {
+            if let Some(ms) = slo {
+                ensure!(ms.is_finite() && ms > 0.0,
+                        "--{name} must be positive milliseconds \
+                         (got {ms})");
+            }
+        }
+        if let Some(par) = self.parallel {
+            let arch = models::lookup(&self.model).expect("checked");
+            par.validate_for(&arch, &rig)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_the_acceptance_workload() {
+        let s = TuneSpec::default();
+        s.validate().unwrap();
+        assert_eq!(s.model, "llama-2-7b");
+        assert_eq!(s.device, "a6000");
+        assert_eq!(s.n_points(), 7);
+        assert_eq!(s.power_cap_axis(), vec![None]);
+        assert!(!s.energy, "tuning defaults to noise-free joules");
+        // the stock point is always in the default grid
+        assert!(s.clocks.contains(&1.0));
+    }
+
+    #[test]
+    fn cap_levels_multiply_the_grid() {
+        let s = TuneSpec {
+            power_caps: vec![150.0, 250.0],
+            ..TuneSpec::default()
+        };
+        s.validate().unwrap();
+        assert_eq!(s.n_points(), 14);
+        assert_eq!(s.power_cap_axis(), vec![Some(150.0), Some(250.0)]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let bad = [
+            TuneSpec { model: "gpt-17".into(), ..TuneSpec::default() },
+            TuneSpec { device: "tpu-v9".into(), ..TuneSpec::default() },
+            TuneSpec { device: "cpu".into(), ..TuneSpec::default() },
+            TuneSpec { quant: "int3".into(), ..TuneSpec::default() },
+            TuneSpec { batch: 0, ..TuneSpec::default() },
+            TuneSpec { prompt_len: 0, ..TuneSpec::default() },
+            TuneSpec { clocks: Vec::new(), ..TuneSpec::default() },
+            TuneSpec { clocks: vec![0.0], ..TuneSpec::default() },
+            TuneSpec { clocks: vec![1.5], ..TuneSpec::default() },
+            TuneSpec { clocks: vec![f64::NAN], ..TuneSpec::default() },
+            TuneSpec { power_caps: vec![-5.0], ..TuneSpec::default() },
+            TuneSpec { slo_ttft_ms: Some(0.0), ..TuneSpec::default() },
+            TuneSpec { slo_tpot_ms: Some(f64::NAN),
+                       ..TuneSpec::default() },
+            // tp=2 cannot run on a single-card rig
+            TuneSpec { parallel: Some(ParallelSpec::new(2, 1)),
+                       ..TuneSpec::default() },
+        ];
+        for s in bad {
+            assert!(s.validate().is_err(), "{s:?}");
+        }
+        // a hostable mapping validates
+        let ok = TuneSpec {
+            device: "4xa6000".into(),
+            parallel: Some(ParallelSpec::new(4, 1)),
+            ..TuneSpec::default()
+        };
+        ok.validate().unwrap();
+    }
+}

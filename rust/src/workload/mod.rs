@@ -33,6 +33,10 @@ pub mod streams {
     pub const SERVE_ENERGY: u64 = 0x454C_414E_4104;
     /// The capacity planner's fleet-sizing arrival draws.
     pub const PLAN_FLEET: u64 = 0x454C_414E_4105;
+    /// The operating-point tuner's stock-clock baseline evaluation.
+    pub const TUNE_BASELINE: u64 = 0x454C_414E_4106;
+    /// The tuner's combined (phase-split) recommendation evaluation.
+    pub const TUNE_COMBINED: u64 = 0x454C_414E_4107;
 }
 
 /// Deterministic random-prompt generator.

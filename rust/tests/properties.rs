@@ -443,3 +443,113 @@ fn prop_tp4_fit_region_contains_tp1_on_4xa6000() {
         }
     });
 }
+
+// ---------------- DVFS / power capping ----------------
+
+use elana::hwsim::{simulate_at, OperatingPoint};
+
+fn dvfs_arch(rng: &mut Rng) -> elana::models::ModelArch {
+    let names = ["llama-2-7b", "llama-3.1-8b", "qwen-2.5-7b",
+                 "llama-3.2-1b"];
+    models::lookup(names[rng.usize_in(0, names.len() - 1)]).unwrap()
+}
+
+/// A power cap is a throttle: it can only hold or slow every latency
+/// metric, never improve one (DRAM bandwidth is unchanged, so
+/// memory-bound phases hold; compute-bound phases slow by 1/f).
+#[test]
+fn prop_capping_power_never_reduces_latency() {
+    property(60, |rng: &mut Rng| {
+        let arch = dvfs_arch(rng);
+        let devices = ["a6000", "thor", "orin", "a100", "h100"];
+        let rig = device::rig_by_name(
+            devices[rng.usize_in(0, devices.len() - 1)]).unwrap();
+        let w = Workload::new(rng.usize_in(1, 8), rng.usize_in(16, 512),
+                              rng.usize_in(1, 24));
+        let scheme = QuantScheme::native(arch.dtype);
+        let base = simulate_quant(&arch, &rig, &w, &scheme);
+        // any cap, from below the DVFS floor to above the plateau
+        let cap = OperatingPoint::cap(
+            rng.f64_in(0.1, 1.3) * rig.device.power.sustain_w);
+        let capped = simulate_at(&arch, &rig, &w, &scheme, None, &cap,
+                                 &cap);
+        assert!(capped.ttft.seconds >= base.ttft.seconds,
+                "{}: capped TTFT {} < {}", arch.name,
+                capped.ttft.seconds, base.ttft.seconds);
+        assert!(capped.tpot.seconds >= base.tpot.seconds,
+                "{}: capped TPOT {} < {}", arch.name,
+                capped.tpot.seconds, base.tpot.seconds);
+        assert!(capped.ttlt_seconds >= base.ttlt_seconds,
+                "{}: capped TTLT {} < {}", arch.name,
+                capped.ttlt_seconds, base.ttlt_seconds);
+        // and it never *increases* the energy of a request
+        assert!(capped.ttlt_joules <= base.ttlt_joules * (1.0 + 1e-9),
+                "{}: capped J/req {} > {}", arch.name,
+                capped.ttlt_joules, base.ttlt_joules);
+    });
+}
+
+/// The tuner's decode recommendation never costs more J/token than the
+/// stock point (the stock point is always a candidate), and on
+/// bandwidth-bound decode the recommended decode clock sits at or below
+/// the recommended prefill clock.
+#[test]
+fn prop_tuner_recommendation_bounds() {
+    property(8, |rng: &mut Rng| {
+        let arch = dvfs_arch(rng);
+        let devices = ["a6000", "thor", "orin"];
+        let spec = elana::tune::TuneSpec {
+            model: arch.name.to_string(),
+            device: devices[rng.usize_in(0, devices.len() - 1)]
+                .to_string(),
+            batch: rng.usize_in(1, 4),
+            prompt_len: rng.usize_in(64, 256),
+            gen_len: rng.usize_in(8, 48),
+            seed: rng.next_u64(),
+            ..elana::tune::TuneSpec::default()
+        };
+        let r = elana::tune::run(&spec).unwrap();
+        let dec = r.point(r.decode_rec).expect("stock is always feasible");
+        let pre = r.point(r.prefill_rec).expect("stock is always feasible");
+        assert!(dec.j_token <= r.baseline.j_token * (1.0 + 1e-12),
+                "{spec:?}: {} > stock {}", dec.j_token,
+                r.baseline.j_token);
+        // small batches keep decode memory-bound on all three devices
+        assert!(dec.eff_frac <= pre.eff_frac * (1.0 + 1e-12),
+                "{spec:?}: decode clock {} above prefill {}",
+                dec.eff_frac, pre.eff_frac);
+    });
+}
+
+/// Sharded (tp > 1) runs respect a per-rank power cap: during decode —
+/// the phase the cap is provisioned for — each active rank's modeled
+/// draw stays under the cap whenever the cap is reachable (at or above
+/// the DVFS-floor plateau).
+#[test]
+fn prop_sharded_decode_respects_per_rank_caps() {
+    property(40, |rng: &mut Rng| {
+        let arch = models::lookup("llama-3.1-8b").unwrap();
+        let rigs = ["4xa6000", "4xa100", "8xh100"];
+        let rig = device::rig_by_name(
+            rigs[rng.usize_in(0, rigs.len() - 1)]).unwrap();
+        let tp = if rng.usize_in(0, 1) == 0 { 2 } else { 4 };
+        let par = ParallelSpec::new(tp, 1);
+        let d = &rig.device;
+        let floor_w = d.freq.sustain_watts(&d.power, d.freq.min_frac);
+        let cap_w = rng.f64_in(floor_w, d.power.sustain_w * 0.95);
+        let op = OperatingPoint::cap(cap_w);
+        let w = Workload::new(rng.usize_in(1, 8), rng.usize_in(32, 256),
+                              rng.usize_in(1, 16));
+        let scheme = QuantScheme::native(arch.dtype);
+        let sim = simulate_at(&arch, &rig, &w, &scheme, Some(&par), &op,
+                              &op);
+        // whole-rig watts = idle of every installed device + the active
+        // ranks' dynamic draw; attribute the dynamic share per rank
+        let n = rig.n_devices as f64;
+        let per_rank = d.power.idle_w
+            + (sim.tpot.watts - d.power.idle_w * n) / tp as f64;
+        assert!(per_rank <= cap_w * (1.0 + 1e-9),
+                "{} tp{tp} cap {cap_w:.1} W: rank draws {per_rank:.1} W \
+                 ({:?})", rig.name(), w);
+    });
+}

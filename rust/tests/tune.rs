@@ -1,0 +1,111 @@
+//! Integration tests for the operating-point tuner: the acceptance
+//! workload (`elana tune --model llama-2-7b --device a6000`), artifact
+//! byte-identity across worker counts, and the DVFS axis staying
+//! invisible to legacy artifacts.
+
+use elana::sweep::{self, SweepSpec};
+use elana::tune::{self, report, TuneSpec};
+use elana::util::json::Json;
+
+/// Acceptance: the default tune recommends a decode operating point
+/// with a lower clock than prefill, and J/token at the recommendation
+/// is <= the uncapped default.
+#[test]
+fn acceptance_default_tune_recommendation() {
+    let r = tune::run(&TuneSpec::default()).unwrap();
+    let pre = r.point(r.prefill_rec).expect("prefill recommendation");
+    let dec = r.point(r.decode_rec).expect("decode recommendation");
+    assert!(dec.eff_mhz < pre.eff_mhz,
+            "decode {} MHz must sit below prefill {} MHz", dec.eff_mhz,
+            pre.eff_mhz);
+    assert!(dec.j_token <= r.baseline.j_token,
+            "{} vs uncapped {}", dec.j_token, r.baseline.j_token);
+    let c = r.combined.as_ref().expect("combined recommendation");
+    assert!(c.j_token <= r.baseline.j_token);
+    // the markdown and JSON artifacts carry the recommendation
+    let text = report::render_markdown(&r);
+    assert!(text.contains("**Recommendation (phase-aware):**"), "{text}");
+    let v = Json::parse(&report::to_json(&r).to_string()).unwrap();
+    assert!(v.get("decode_recommendation").unwrap().as_usize().is_some());
+}
+
+/// The JSON artifact is byte-identical at any `--workers` count.
+#[test]
+fn tune_artifact_byte_identical_across_workers() {
+    let mk = |workers: usize| {
+        let spec = TuneSpec {
+            gen_len: 64,
+            power_caps: vec![150.0, 250.0],
+            workers,
+            ..TuneSpec::default()
+        };
+        report::to_json(&tune::run(&spec).unwrap()).to_string()
+    };
+    let w1 = mk(1);
+    assert_eq!(w1, mk(4));
+    assert_eq!(w1, mk(8));
+    // the markdown rendering is a pure function of the same results
+    let spec = TuneSpec { gen_len: 64, power_caps: vec![150.0, 250.0],
+                          ..TuneSpec::default() };
+    let a = report::render_markdown(&tune::run(&spec).unwrap());
+    let spec8 = TuneSpec { workers: 8, ..spec };
+    let b = report::render_markdown(&tune::run(&spec8).unwrap());
+    assert_eq!(a, b);
+}
+
+/// An explicit `--power-cap` grid reaches the edge board too (the
+/// tune-smoke CI shape): watt-scale caps on the Orin still yield a
+/// feasible recommendation.
+#[test]
+fn orin_watt_scale_caps_recommend() {
+    let spec = TuneSpec {
+        model: "llama-3.2-1b".to_string(),
+        device: "orin".to_string(),
+        prompt_len: 256,
+        gen_len: 64,
+        power_caps: vec![1.0, 1.2],
+        ..TuneSpec::default()
+    };
+    let r = tune::run(&spec).unwrap();
+    assert_eq!(r.points.len(), 14);
+    assert!(r.combined.is_some(),
+            "a 1.2 W cap keeps the Orin inside its SLOs");
+    // the tight cap throttles: some point reports it
+    assert!(r.points.iter().any(|p| p.throttled));
+    let v = Json::parse(&report::to_json(&r).to_string()).unwrap();
+    assert_eq!(v.get("power_caps").unwrap().as_arr().unwrap().len(), 2);
+}
+
+/// Legacy sweep invocations (no `--power-cap`) must keep producing
+/// byte-identical artifacts: same cell seeds, same JSON, no cap keys.
+#[test]
+fn legacy_sweep_artifacts_carry_no_dvfs_traces() {
+    let spec = SweepSpec {
+        models: vec!["llama-3.1-8b".into()],
+        devices: vec!["a6000".into(), "thor".into()],
+        batches: vec![1, 8],
+        lens: vec![(64, 32)],
+        ..SweepSpec::default()
+    };
+    let text =
+        sweep::report::to_json(&sweep::run(&spec).unwrap()).to_string();
+    assert!(!text.contains("power_cap"), "{text}");
+    // and the capped variant differs ONLY by the new keys' presence,
+    // not by perturbing legacy cells' seeds: cell 0 keeps its seed
+    let legacy = Json::parse(&text).unwrap();
+    let capped_spec = SweepSpec { power_caps: vec![250.0], ..spec };
+    let capped = Json::parse(
+        &sweep::report::to_json(&sweep::run(&capped_spec).unwrap())
+            .to_string())
+        .unwrap();
+    let seed = |v: &Json, i: usize| {
+        v.get("cells").unwrap().as_arr().unwrap()[i]
+            .get("seed")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string()
+    };
+    assert_eq!(seed(&legacy, 0), seed(&capped, 0),
+               "a single-cap axis must keep legacy cell seeds");
+}

@@ -12,9 +12,12 @@
 //! driven by env vars (`ELANA_BENCH_BASELINE`, `ELANA_BENCH_JSON`), so
 //! a plain `cargo bench` is unchanged.
 
+use elana::backend::SimBackend;
 use elana::benchkit::{bench, gate, section, BenchConfig, BenchResult};
 use elana::coordinator::batcher::{plan_batch, BatchPolicy};
 use elana::coordinator::request::ServingRequest;
+use elana::coordinator::{simulate, Arrivals, ServeSpec};
+use elana::sweep::SweepSpec;
 use elana::engine::{GreedySampler, InferenceEngine, Sampler, TokenBatch};
 use elana::runtime::{weights, Manifest};
 use elana::util::json::Json;
@@ -78,6 +81,46 @@ fn main() {
     gated.push(bench("f32 zeros literal (tiny KV cache 128KB)", || {
         std::hint::black_box(
             weights::zeros_literal(&[4, 1, 2, 128, 32]).unwrap());
+    }));
+
+    // ---- macro benches: the trace-scale paths ISSUE 6 optimized -------
+    // A 2k-request Poisson serve exercises the event-heap loop end to
+    // end; after the first iteration every batch shape hits the global
+    // cost cache, so this tracks loop + cache-hit overhead, not roofline
+    // math.
+    let serve_spec = ServeSpec {
+        requests: 2000,
+        arrivals: Arrivals::Poisson { rate_rps: 200.0 },
+        prompt_lo: 16,
+        prompt_hi: 64,
+        gen_len: 16,
+        replicas: 2,
+        energy: false,
+        seed: 11,
+        ..ServeSpec::default()
+    };
+    gated.push(bench("serve-scale 2k-request trace (event loop)", || {
+        let mut backend =
+            SimBackend::new(&serve_spec.model, &serve_spec.device, false,
+                            serve_spec.seed)
+                .unwrap()
+                .with_max_seq_len(serve_spec.max_seq_len);
+        std::hint::black_box(
+            simulate::simulate(&serve_spec, &mut backend).unwrap());
+    }));
+
+    let sweep_spec = SweepSpec {
+        models: vec!["llama-3.1-8b".to_string()],
+        devices: vec!["a6000".to_string()],
+        batches: vec![1, 8],
+        lens: vec![(128, 32), (512, 64)],
+        quants: vec!["native".to_string()],
+        energy: false,
+        threads: 1,
+        ..SweepSpec::default()
+    };
+    gated.push(bench("sweep-scale 4-cell grid (no energy)", || {
+        std::hint::black_box(elana::sweep::run(&sweep_spec).unwrap());
     }));
 
     // ---- bench-regression gate (env-driven; no-op for plain runs) -----

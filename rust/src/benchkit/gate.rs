@@ -9,12 +9,11 @@
 //! its peers*. Uniform slowness (a colder CI runner) divides out;
 //! sampling noise is absorbed by the tolerance (default 25%).
 //!
-//! Baselines whose JSON carries `"seeded": "estimate"` (the initial
-//! hand-seeded numbers — this repo has no profiled runner of record
-//! yet) are held to an 8× wider tolerance: they still catch
-//! order-of-magnitude regressions while a measured refresh
-//! (`ELANA_BENCH_WRITE_BASELINE=benches/baselines/hotpath.json`)
-//! tightens the gate to the real threshold.
+//! The committed baseline is **measured** (regenerated on a quiet
+//! machine via `ELANA_BENCH_WRITE_BASELINE=benches/baselines/hotpath.json`),
+//! so the gate runs at full strictness — the early hand-seeded-estimate
+//! slack is gone. A legacy `"seeded": "estimate"` marker in a baseline
+//! is ignored: every baseline is held to the same threshold.
 
 use std::collections::BTreeMap;
 
@@ -28,16 +27,10 @@ use super::BenchResult;
 /// normalization.
 pub const DEFAULT_TOLERANCE: f64 = 0.25;
 
-/// Widening factor applied when the baseline is a hand-seeded estimate
-/// rather than a measured run.
-pub const ESTIMATE_SLACK: f64 = 8.0;
-
-/// A parsed baseline: bench name → p50 seconds, plus whether the file
-/// is marked as a hand-seeded estimate.
+/// A parsed baseline: bench name → p50 seconds.
 #[derive(Debug, Clone)]
 pub struct Baseline {
     pub p50s: BTreeMap<String, f64>,
-    pub estimate: bool,
 }
 
 /// Serialize bench results into the artifact/baseline schema.
@@ -76,9 +69,7 @@ pub fn parse_baseline(text: &str) -> Result<Baseline> {
         }
         p50s.insert(name.clone(), p50);
     }
-    let estimate = root.get("seeded").and_then(|s| s.as_str())
-        == Some("estimate");
-    Ok(Baseline { p50s, estimate })
+    Ok(Baseline { p50s })
 }
 
 /// Outcome of one gate comparison.
@@ -88,7 +79,7 @@ pub struct GateReport {
     pub scale: f64,
     /// Benches compared (present in both sets).
     pub compared: usize,
-    /// The threshold actually applied (after any estimate slack).
+    /// The relative threshold applied.
     pub threshold: f64,
     /// Baseline benches missing from the run (a silently deleted bench
     /// can hide a regression, so this fails the gate).
@@ -138,11 +129,7 @@ pub fn compare(results: &[BenchResult], baseline: &Baseline,
         }
     }
     let scale = median(ratios.iter().map(|(_, r)| *r));
-    let threshold = if baseline.estimate {
-        tolerance * ESTIMATE_SLACK
-    } else {
-        tolerance
-    };
+    let threshold = tolerance;
     let regressions = ratios
         .iter()
         .filter(|(_, r)| *r > scale * (1.0 + threshold))
@@ -162,7 +149,7 @@ fn median(iter: impl Iterator<Item = f64>) -> f64 {
     if v.is_empty() {
         return 1.0;
     }
-    v.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -221,12 +208,6 @@ pub fn run_from_env(results: &[BenchResult]) -> bool {
     };
     let report = compare(results, &baseline, tolerance);
     print!("{}", report.render());
-    if baseline.estimate {
-        println!(
-            "bench gate: baseline is a hand-seeded estimate (threshold \
-             widened {ESTIMATE_SLACK}x); refresh it on a quiet machine \
-             with ELANA_BENCH_WRITE_BASELINE={path}");
-    }
     report.pass()
 }
 
@@ -243,13 +224,12 @@ mod tests {
         }
     }
 
-    fn baseline(pairs: &[(&str, f64)], estimate: bool) -> Baseline {
+    fn baseline(pairs: &[(&str, f64)]) -> Baseline {
         Baseline {
             p50s: pairs
                 .iter()
                 .map(|(n, v)| (n.to_string(), *v))
                 .collect(),
-            estimate,
         }
     }
 
@@ -259,8 +239,7 @@ mod tests {
         // regression
         let results =
             vec![result("a", 3e-6), result("b", 6e-6), result("c", 9e-6)];
-        let base = baseline(&[("a", 1e-6), ("b", 2e-6), ("c", 3e-6)],
-                            false);
+        let base = baseline(&[("a", 1e-6), ("b", 2e-6), ("c", 3e-6)]);
         let r = compare(&results, &base, DEFAULT_TOLERANCE);
         assert!((r.scale - 3.0).abs() < 1e-9, "{r:?}");
         assert!(r.pass(), "{}", r.render());
@@ -272,8 +251,7 @@ mod tests {
         // b regressed 2x relative to its peers
         let results =
             vec![result("a", 1e-6), result("b", 4e-6), result("c", 3e-6)];
-        let base = baseline(&[("a", 1e-6), ("b", 2e-6), ("c", 3e-6)],
-                            false);
+        let base = baseline(&[("a", 1e-6), ("b", 2e-6), ("c", 3e-6)]);
         let r = compare(&results, &base, DEFAULT_TOLERANCE);
         assert!(!r.pass());
         assert_eq!(r.regressions.len(), 1, "{r:?}");
@@ -289,29 +267,31 @@ mod tests {
     #[test]
     fn missing_bench_fails_the_gate() {
         let results = vec![result("a", 1e-6)];
-        let base = baseline(&[("a", 1e-6), ("gone", 1e-6)], false);
+        let base = baseline(&[("a", 1e-6), ("gone", 1e-6)]);
         let r = compare(&results, &base, DEFAULT_TOLERANCE);
         assert!(!r.pass());
         assert_eq!(r.missing, vec!["gone".to_string()]);
         // extra benches in the run (engine benches on machines with
         // artifacts) are simply ignored
         let extra = vec![result("a", 1e-6), result("extra", 1e-3)];
-        assert!(compare(&extra, &baseline(&[("a", 1e-6)], false),
+        assert!(compare(&extra, &baseline(&[("a", 1e-6)]),
                         DEFAULT_TOLERANCE)
                     .pass());
     }
 
     #[test]
-    fn estimate_baselines_get_the_wide_threshold() {
-        // 3x off a hand-seeded estimate passes (threshold 200%)...
+    fn estimate_marker_no_longer_widens_the_threshold() {
+        // a 3x relative regression used to hide under the 8x estimate
+        // slack; with measured baselines it fails at full strictness
+        let seeded = r#"{"schema": "elana-bench-v1",
+                         "seeded": "estimate",
+                         "benches": {"a": {"p50_s": 1e-6},
+                                     "b": {"p50_s": 2e-6}}}"#;
+        let base = parse_baseline(seeded).unwrap();
         let results = vec![result("a", 1e-6), result("b", 6e-6)];
-        let base = baseline(&[("a", 1e-6), ("b", 2e-6)], true);
         let r = compare(&results, &base, DEFAULT_TOLERANCE);
-        assert_eq!(r.threshold, DEFAULT_TOLERANCE * ESTIMATE_SLACK);
-        assert!(r.pass(), "{}", r.render());
-        // ...but an order-of-magnitude regression still fails
-        let bad = vec![result("a", 1e-6), result("b", 40e-6)];
-        assert!(!compare(&bad, &base, DEFAULT_TOLERANCE).pass());
+        assert_eq!(r.threshold, DEFAULT_TOLERANCE);
+        assert!(!r.pass(), "{}", r.render());
     }
 
     #[test]
@@ -319,14 +299,8 @@ mod tests {
         let results = vec![result("x", 2e-6), result("y", 5e-6)];
         let text = to_json(&results).to_string();
         let b = parse_baseline(&text).unwrap();
-        assert!(!b.estimate);
         assert_eq!(b.p50s.len(), 2);
         assert!((b.p50s["x"] - 2e-6).abs() < 1e-12);
-        // the estimate marker is honored
-        let seeded = r#"{"schema": "elana-bench-v1",
-                         "seeded": "estimate",
-                         "benches": {"a": {"p50_s": 1e-6}}}"#;
-        assert!(parse_baseline(seeded).unwrap().estimate);
         // malformed baselines are loud
         assert!(parse_baseline("{}").is_err());
         assert!(parse_baseline(

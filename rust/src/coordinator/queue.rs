@@ -6,7 +6,7 @@
 //! memory.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 use super::request::ServingRequest;
@@ -25,6 +25,16 @@ struct Inner {
 }
 
 impl RequestQueue {
+    /// Recover the guard even when another thread panicked while
+    /// holding the lock. Every critical section below leaves `Inner`
+    /// consistent between statements, so a poisoned lock is safe to
+    /// re-enter — and recovering it lets the *original* panic surface
+    /// instead of burying it under a cascade of `PoisonError` unwraps
+    /// on every other worker.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn new(capacity: usize) -> RequestQueue {
         assert!(capacity > 0);
         RequestQueue {
@@ -37,9 +47,10 @@ impl RequestQueue {
 
     /// Blocking push; returns false if the queue was closed.
     pub fn push(&self, req: ServingRequest) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         while g.q.len() >= self.capacity && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g)
+                .unwrap_or_else(|e| e.into_inner());
         }
         if g.closed {
             return false;
@@ -52,7 +63,7 @@ impl RequestQueue {
     /// Non-blocking push; Err(req) when full or closed.
     pub fn try_push(&self, req: ServingRequest)
                     -> Result<(), ServingRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if g.closed || g.q.len() >= self.capacity {
             return Err(req);
         }
@@ -65,10 +76,12 @@ impl RequestQueue {
     /// Returns an empty vec on timeout or when closed-and-drained.
     pub fn pop_up_to(&self, max: usize, wait: Duration)
                      -> Vec<ServingRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if g.q.is_empty() && !g.closed {
-            let (guard, _timeout) =
-                self.not_empty.wait_timeout(g, wait).unwrap();
+            let (guard, _timeout) = self
+                .not_empty
+                .wait_timeout(g, wait)
+                .unwrap_or_else(|e| e.into_inner());
             g = guard;
         }
         let n = g.q.len().min(max);
@@ -81,14 +94,14 @@ impl RequestQueue {
 
     /// Close the queue: pushes fail, pops drain what remains.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        self.lock().q.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -96,7 +109,7 @@ impl RequestQueue {
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.lock().closed
     }
 }
 
@@ -162,6 +175,27 @@ mod tests {
         // leftover drains
         assert_eq!(q.pop_up_to(4, Duration::from_millis(1)).len(), 1);
         assert!(q.pop_up_to(4, Duration::from_millis(1)).is_empty());
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_and_queue_stays_usable() {
+        let q = Arc::new(RequestQueue::new(4));
+        q.push(req(0));
+        let q2 = q.clone();
+        std::thread::spawn(move || {
+            let _g = q2.inner.lock().unwrap();
+            panic!("worker dies holding the queue lock");
+        })
+        .join()
+        .unwrap_err();
+        // one worker panic must not cascade into PoisonError panics:
+        // every operation still works on the intact state
+        assert_eq!(q.len(), 1);
+        assert!(q.push(req(1)));
+        assert!(!q.is_closed());
+        assert_eq!(q.pop_up_to(4, Duration::from_millis(1)).len(), 2);
+        q.close();
+        assert!(q.is_closed());
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Per-shape cost cache in front of the roofline simulator.
+//!
+//! Serve/tune/plan/sweep all evaluate the same handful of compiled
+//! shapes thousands of times: a serve trace forms batches from a small
+//! set of `(batch, bucket, gen)` shapes, the energy pass re-prices each
+//! batch, and grid runners revisit identical cells. The analytic cost of
+//! a shape depends only on the *configuration* — model, rig, quant
+//! scheme, parallel mapping, DVFS operating points — and the workload
+//! shape, never on seeds or worker threads, so it is safe to memoize
+//! process-wide and share across backends.
+//!
+//! The cache is a pure speedup: a miss runs exactly the dispatch
+//! `SimBackend::sim` used before the cache existed
+//! ([`simulate_at`] / [`simulate_parallel`] / [`simulate_quant`]), so
+//! hit or miss, callers observe bit-identical `SimResult`s. Entries are
+//! bounded by a FIFO eviction policy; eviction only costs a recompute,
+//! never changes a result.
+//!
+//! Keys identify models and rigs by their registry names plus a
+//! fingerprint of their load-bearing numeric fields, so the named
+//! presets every CLI path resolves through can never collide.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::models::{arch::ModelArch, QuantScheme};
+
+use super::latency::simulate_quant;
+use super::parallel::{simulate_at, simulate_parallel};
+use super::{OperatingPoint, ParallelSpec, Rig, SimResult, Workload};
+
+/// Capacity of the process-wide cache. Entries hold a per-step latency
+/// vector (`gen_len` f64s), so even pathological grids stay tens of MB.
+pub const DEFAULT_CAPACITY: usize = 8192;
+
+/// One fully-resolved simulation request. Equality means "the analytic
+/// simulator is guaranteed to produce the same bits".
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CostKey {
+    model: &'static str,
+    /// Rig preset name (includes device count and link variant) plus a
+    /// fingerprint of the numeric device/link fields, so an ad-hoc rig
+    /// that happens to share a preset's name still gets its own entry.
+    rig: (String, u64),
+    /// Arch fingerprint (dims that drive the cost model).
+    arch_fp: u64,
+    quant: (&'static str, u32, u32, u64),
+    parallel: Option<(usize, usize)>,
+    /// (clock_frac bits, power-cap bits) per phase; `None` = the legacy
+    /// no-DVFS dispatch.
+    ops: Option<((u64, Option<u64>), (u64, Option<u64>))>,
+    shape: (usize, usize, usize),
+}
+
+fn arch_fingerprint(arch: &ModelArch) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    mix(arch.d_model as u64);
+    mix(arch.ffn_dim as u64);
+    mix(arch.layers.len() as u64);
+    mix(arch.vocab_size as u64);
+    mix(arch.dtype.bytes() as u64);
+    h
+}
+
+fn rig_fingerprint(rig: &Rig) -> u64 {
+    let d = &rig.device;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    mix(rig.n_devices as u64);
+    mix(d.achieved_flops().to_bits());
+    mix(d.achieved_bw().to_bits());
+    mix(d.pj_per_flop.to_bits());
+    mix(d.pj_per_byte.to_bits());
+    mix(d.prefill_overhead_s.to_bits());
+    mix(d.decode_overhead_s.to_bits());
+    mix(rig.overlap.to_bits());
+    mix(rig.link.pj_per_byte.to_bits());
+    h
+}
+
+fn op_bits(op: &OperatingPoint) -> (u64, Option<u64>) {
+    (op.clock_frac.to_bits(), op.power_cap_w.map(f64::to_bits))
+}
+
+impl CostKey {
+    fn new(arch: &ModelArch, rig: &Rig, w: &Workload, scheme: &QuantScheme,
+           parallel: Option<&ParallelSpec>,
+           ops: Option<(&OperatingPoint, &OperatingPoint)>) -> CostKey {
+        CostKey {
+            model: arch.name,
+            rig: (rig.name(), rig_fingerprint(rig)),
+            arch_fp: arch_fingerprint(arch),
+            quant: (scheme.key, scheme.weight_bits, scheme.cache_bits,
+                    scheme.overhead_bits_per_weight.to_bits()),
+            parallel: parallel.map(|p| (p.tp, p.pp)),
+            ops: ops.map(|(p, d)| (op_bits(p), op_bits(d))),
+            shape: (w.batch, w.prompt_len, w.gen_len),
+        }
+    }
+}
+
+struct Inner {
+    map: HashMap<CostKey, Arc<SimResult>>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<CostKey>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// A bounded, thread-safe memo table over the analytic simulator.
+pub struct CostCache {
+    inner: Mutex<Inner>,
+}
+
+impl CostCache {
+    pub fn new(capacity: usize) -> CostCache {
+        assert!(capacity > 0, "cache capacity must be positive");
+        CostCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                capacity,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Recover the guard even if a panicking thread poisoned the lock:
+    /// the map is always internally consistent between mutations, and
+    /// surfacing the *original* panic beats a PoisonError cascade.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Simulate `w` through the cache. The miss path runs exactly the
+    /// dispatch `SimBackend::sim` performs: `simulate_at` under DVFS
+    /// operating points, `simulate_parallel` under an explicit mapping,
+    /// `simulate_quant` otherwise — so hits are bit-identical to a
+    /// cold computation by construction.
+    pub fn simulate(&self, arch: &ModelArch, rig: &Rig, w: &Workload,
+                    scheme: &QuantScheme, parallel: Option<&ParallelSpec>,
+                    ops: Option<(&OperatingPoint, &OperatingPoint)>)
+                    -> Arc<SimResult> {
+        let key = CostKey::new(arch, rig, w, scheme, parallel, ops);
+        {
+            let mut g = self.lock();
+            if let Some(hit) = g.map.get(&key) {
+                g.hits += 1;
+                return hit.clone();
+            }
+            g.misses += 1;
+        }
+        // compute outside the lock: a racing duplicate computation is
+        // wasted work, never a wrong answer (the simulator is pure)
+        let result = Arc::new(match ops {
+            Some((p_op, d_op)) => {
+                simulate_at(arch, rig, w, scheme, parallel, p_op, d_op)
+            }
+            None => match parallel {
+                Some(par) => simulate_parallel(arch, rig, w, scheme, par),
+                None => simulate_quant(arch, rig, w, scheme),
+            },
+        });
+        let mut g = self.lock();
+        if let Some(raced) = g.map.get(&key) {
+            return raced.clone();
+        }
+        if g.map.len() >= g.capacity {
+            if let Some(oldest) = g.order.pop_front() {
+                g.map.remove(&oldest);
+            }
+        }
+        g.map.insert(key.clone(), result.clone());
+        g.order.push_back(key);
+        result
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.lock().capacity
+    }
+
+    /// (hits, misses) since construction (or the last `clear`).
+    pub fn stats(&self) -> (u64, u64) {
+        let g = self.lock();
+        (g.hits, g.misses)
+    }
+
+    pub fn clear(&self) {
+        let mut g = self.lock();
+        g.map.clear();
+        g.order.clear();
+        g.hits = 0;
+        g.misses = 0;
+    }
+}
+
+/// The process-wide cache every `SimBackend` routes through.
+pub fn global() -> &'static CostCache {
+    static CACHE: OnceLock<CostCache> = OnceLock::new();
+    CACHE.get_or_init(|| CostCache::new(DEFAULT_CAPACITY))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::device;
+    use crate::models;
+
+    fn fixture() -> (ModelArch, Rig, QuantScheme) {
+        let arch = models::lookup("llama-3.1-8b").unwrap();
+        let rig = device::rig_by_name("a6000").unwrap();
+        let scheme = QuantScheme::native(arch.dtype);
+        (arch, rig, scheme)
+    }
+
+    #[test]
+    fn hit_is_bit_identical_to_cold_compute() {
+        let (arch, rig, scheme) = fixture();
+        let cache = CostCache::new(16);
+        let w = Workload::new(2, 128, 32);
+        let cold = simulate_quant(&arch, &rig, &w, &scheme);
+        let first = cache.simulate(&arch, &rig, &w, &scheme, None, None);
+        let second = cache.simulate(&arch, &rig, &w, &scheme, None, None);
+        assert_eq!(*first, cold);
+        assert_eq!(*second, cold);
+        assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn dvfs_and_parallel_dispatch_match_direct_calls() {
+        let arch = models::lookup("llama-3.1-8b").unwrap();
+        let rig = device::rig_by_name("4xa6000").unwrap();
+        let scheme = QuantScheme::native(arch.dtype);
+        let w = Workload::new(1, 256, 16);
+        let par = ParallelSpec::new(4, 1);
+        let cache = CostCache::new(16);
+        let got = cache.simulate(&arch, &rig, &w, &scheme, Some(&par), None);
+        assert_eq!(*got, simulate_parallel(&arch, &rig, &w, &scheme, &par));
+
+        let p_op = OperatingPoint::uncapped();
+        let d_op = OperatingPoint { clock_frac: 0.6, power_cap_w: Some(220.0) };
+        let got = cache.simulate(&arch, &rig, &w, &scheme, Some(&par),
+                                 Some((&p_op, &d_op)));
+        assert_eq!(*got, simulate_at(&arch, &rig, &w, &scheme, Some(&par),
+                                     &p_op, &d_op));
+        // distinct configurations occupy distinct entries
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn capacity_bounds_and_eviction_recomputes_identically() {
+        let (arch, rig, scheme) = fixture();
+        let cache = CostCache::new(4);
+        let shapes: Vec<Workload> =
+            (1..=6).map(|i| Workload::new(1, 16 * i, 8)).collect();
+        let cold: Vec<SimResult> = shapes
+            .iter()
+            .map(|w| simulate_quant(&arch, &rig, w, &scheme))
+            .collect();
+        for w in &shapes {
+            cache.simulate(&arch, &rig, w, &scheme, None, None);
+            assert!(cache.len() <= cache.capacity(),
+                    "len {} > capacity {}", cache.len(), cache.capacity());
+        }
+        // the FIFO evicted the two oldest shapes; re-requesting every
+        // shape (evicted or cached) still returns the cold-path bits
+        for (w, want) in shapes.iter().zip(&cold) {
+            let got = cache.simulate(&arch, &rig, w, &scheme, None, None);
+            assert_eq!(*got, *want);
+        }
+        let (_, misses) = cache.stats();
+        assert!(misses > shapes.len() as u64,
+                "eviction must force recomputation (misses {misses})");
+    }
+
+    #[test]
+    fn different_quant_schemes_never_collide() {
+        let (arch, rig, _) = fixture();
+        let cache = CostCache::new(16);
+        let w = Workload::new(1, 128, 16);
+        let native = QuantScheme::native(arch.dtype);
+        let q4 = crate::models::quant::w4a16();
+        let a = cache.simulate(&arch, &rig, &w, &native, None, None);
+        let b = cache.simulate(&arch, &rig, &w, &q4, None, None);
+        assert!(a.ttlt_seconds > b.ttlt_seconds,
+                "4-bit weights must beat native on a bandwidth-bound rig");
+        assert_eq!(cache.len(), 2);
+    }
+}

@@ -20,11 +20,15 @@
 //! * [`parallel`] — explicit TP×PP sharding: per-rank roofline, ring
 //!   all-reduces over the rig's interconnect, pipelined prefill with
 //!   bubble overhead.
+//! * [`cache`] — bounded per-shape memo table over the simulator;
+//!   `SimBackend` routes every evaluation through it so serve/tune/
+//!   plan/sweep pay for each distinct (config, shape) once.
 //!
 //! Consumers reach the simulator through `backend::SimBackend` (the
 //! `ExecutionBackend` implementation wrapping [`simulate`]); only the
 //! trace exporter and the golden tests call [`simulate`] directly.
 
+pub mod cache;
 pub mod cost;
 pub mod device;
 pub mod kernels;

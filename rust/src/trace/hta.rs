@@ -98,10 +98,12 @@ pub fn analyze(recorder: &TraceRecorder) -> HtaSummary {
             total_us,
         })
         .collect();
-    top_kernels.sort_by(|a, b| b.total_us.partial_cmp(&a.total_us).unwrap());
+    // total_cmp: a NaN duration (a corrupt imported trace) must not
+    // panic the analyzer mid-report; NaNs sort last instead
+    top_kernels.sort_by(|a, b| b.total_us.total_cmp(&a.total_us));
 
     let mut by_category: Vec<(String, f64)> = cats.into_iter().collect();
-    by_category.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    by_category.sort_by(|a, b| b.1.total_cmp(&a.1));
 
     let track_busy = track_span
         .into_iter()

@@ -1,7 +1,7 @@
 //! Span recorder: collects complete events (name, category, track,
 //! start, duration) from profiling runs.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::hwsim::kernels::KernelSpan;
 use crate::util::timer::{Clock, SystemClock};
@@ -41,10 +41,18 @@ impl TraceRecorder {
         (self.clock.now() - self.epoch) * 1e6
     }
 
+    /// Recover the guard even when a recording thread panicked while
+    /// holding the lock (the event vec stays consistent between
+    /// pushes), so the original panic surfaces instead of a
+    /// `PoisonError` cascade from every later span.
+    fn lock(&self) -> MutexGuard<'_, Vec<TraceEvent>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Record a complete span directly.
     pub fn record(&self, name: impl Into<String>, category: impl Into<String>,
                   track: u32, start_us: f64, duration_us: f64) {
-        self.inner.lock().unwrap().push(TraceEvent {
+        self.lock().push(TraceEvent {
             name: name.into(),
             category: category.into(),
             track,
@@ -69,7 +77,7 @@ impl TraceRecorder {
     /// `phase_start_us` on `track`.
     pub fn import_kernels(&self, spans: &[KernelSpan], phase_start_us: f64,
                           track: u32) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         for s in spans {
             inner.push(TraceEvent {
                 name: s.name.clone(),
@@ -82,11 +90,11 @@ impl TraceRecorder {
     }
 
     pub fn events(&self) -> Vec<TraceEvent> {
-        self.inner.lock().unwrap().clone()
+        self.lock().clone()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -166,6 +174,23 @@ mod tests {
         assert_eq!(ev[0].start_us, 500.0);
         assert_eq!(ev[1].start_us, 1500.0);
         assert_eq!(ev[1].duration_us, 2000.0);
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_and_recording_continues() {
+        let r = TraceRecorder::new();
+        r.record("before", "phase", 0, 0.0, 1.0);
+        let r2 = r.clone();
+        std::thread::spawn(move || {
+            let _g = r2.inner.lock().unwrap();
+            panic!("recording thread dies holding the trace lock");
+        })
+        .join()
+        .unwrap_err();
+        // no PoisonError cascade: the collector keeps accepting spans
+        r.record("after", "phase", 0, 1.0, 1.0);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.events()[1].name, "after");
     }
 
     #[test]

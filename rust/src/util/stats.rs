@@ -66,22 +66,38 @@ pub struct Summary {
     pub p90: f64,
     pub p99: f64,
     pub max: f64,
+    /// NaN samples rejected at ingestion (excluded from every statistic
+    /// above). Non-zero means an upstream producer is broken; reports
+    /// stay renderable either way.
+    pub nan_count: usize,
 }
 
 impl Summary {
     /// Summarize a sample set. Returns `None` for an empty slice.
+    ///
+    /// NaN samples are rejected at ingestion and counted in
+    /// [`Summary::nan_count`] rather than poisoning the sort (the old
+    /// `partial_cmp().expect(..)` panicked deep inside report
+    /// rendering); a slice of *only* NaNs summarizes to `None`, the
+    /// same as an empty one.
     pub fn from_samples(samples: &[f64]) -> Option<Summary> {
-        if samples.is_empty() {
+        let mut sorted: Vec<f64> = Vec::with_capacity(samples.len());
+        let mut w = Welford::new();
+        let mut nan_count = 0usize;
+        for &x in samples {
+            if x.is_nan() {
+                nan_count += 1;
+            } else {
+                sorted.push(x);
+                w.push(x);
+            }
+        }
+        if sorted.is_empty() {
             return None;
         }
-        let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
-        let mut w = Welford::new();
-        for &x in samples {
-            w.push(x);
-        }
+        sorted.sort_by(f64::total_cmp);
         Some(Summary {
-            count: samples.len(),
+            count: sorted.len(),
             mean: w.mean(),
             std: w.std(),
             min: sorted[0],
@@ -89,6 +105,7 @@ impl Summary {
             p90: percentile_sorted(&sorted, 90.0),
             p99: percentile_sorted(&sorted, 99.0),
             max: *sorted.last().unwrap(),
+            nan_count,
         })
     }
 
@@ -178,6 +195,24 @@ mod tests {
     #[test]
     fn summary_empty_is_none() {
         assert!(Summary::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn nan_samples_are_rejected_and_flagged() {
+        let s =
+            Summary::from_samples(&[3.0, f64::NAN, 1.0, f64::NAN]).unwrap();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.nan_count, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.mean, 2.0);
+        // a slice of only NaNs has nothing to summarize
+        assert!(Summary::from_samples(&[f64::NAN, f64::NAN]).is_none());
+        // clean inputs carry no flag and infinities still sort fine
+        let clean =
+            Summary::from_samples(&[1.0, f64::INFINITY, 0.5]).unwrap();
+        assert_eq!(clean.nan_count, 0);
+        assert_eq!(clean.max, f64::INFINITY);
     }
 
     #[test]

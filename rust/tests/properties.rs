@@ -444,6 +444,57 @@ fn prop_tp4_fit_region_contains_tp1_on_4xa6000() {
     });
 }
 
+// ---------------- per-shape cost cache ----------------
+
+/// The hwsim cost cache is a pure memo: whatever the dispatch (plain
+/// roofline, explicit parallel mapping, DVFS operating points), a
+/// cached result carries the same bits a direct simulator call
+/// computes, and a repeat lookup returns those bits again.
+#[test]
+fn prop_cost_cache_bit_identical_to_uncached() {
+    use elana::hwsim::cache::CostCache;
+    let cache = CostCache::new(64);
+    property(60, |rng: &mut Rng| {
+        let arch = random_arch(rng);
+        let w = Workload::new(rng.usize_in(1, 8), rng.usize_in(16, 256),
+                              rng.usize_in(1, 16));
+        let schemes = quant::all_schemes();
+        let scheme = schemes[rng.usize_in(0, schemes.len() - 1)];
+        match rng.usize_in(0, 2) {
+            0 => {
+                let rig = device::rig_by_name("a6000").unwrap();
+                let want = simulate_quant(&arch, &rig, &w, &scheme);
+                let got =
+                    cache.simulate(&arch, &rig, &w, &scheme, None, None);
+                assert_eq!(*got, want, "{} plain", arch.name);
+                let again =
+                    cache.simulate(&arch, &rig, &w, &scheme, None, None);
+                assert_eq!(*again, want, "{} repeat", arch.name);
+            }
+            1 => {
+                let rig = device::rig_by_name("4xa6000").unwrap();
+                let par =
+                    ParallelSpec::new([2usize, 4][rng.usize_in(0, 1)], 1);
+                let want = simulate_parallel(&arch, &rig, &w, &scheme, &par);
+                let got = cache.simulate(&arch, &rig, &w, &scheme,
+                                         Some(&par), None);
+                assert_eq!(*got, want, "{} tp{}", arch.name, par.tp);
+            }
+            _ => {
+                let rig = device::rig_by_name("a6000").unwrap();
+                let p_op = elana::hwsim::OperatingPoint::uncapped();
+                let d_op = elana::hwsim::OperatingPoint::cap(
+                    rng.f64_in(120.0, 300.0));
+                let want = elana::hwsim::simulate_at(
+                    &arch, &rig, &w, &scheme, None, &p_op, &d_op);
+                let got = cache.simulate(&arch, &rig, &w, &scheme, None,
+                                         Some((&p_op, &d_op)));
+                assert_eq!(*got, want, "{} dvfs", arch.name);
+            }
+        }
+    });
+}
+
 // ---------------- DVFS / power capping ----------------
 
 use elana::hwsim::{simulate_at, OperatingPoint};

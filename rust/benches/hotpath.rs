@@ -123,6 +123,39 @@ fn main() {
         std::hint::black_box(elana::sweep::run(&sweep_spec).unwrap());
     }));
 
+    // A 100k-request serve artifact stresses the reporting layer itself
+    // (ISSUE 7): JSON streamed straight into a reusable byte sink plus
+    // the markdown summary — no intermediate `Json` tree, no giant
+    // `String`. The simulation runs once, outside the timed closure.
+    let report_spec = ServeSpec {
+        requests: 100_000,
+        arrivals: Arrivals::Poisson { rate_rps: 200.0 },
+        prompt_lo: 16,
+        prompt_hi: 64,
+        gen_len: 16,
+        replicas: 4,
+        energy: false,
+        seed: 11,
+        ..ServeSpec::default()
+    };
+    let mut report_backend =
+        SimBackend::new(&report_spec.model, &report_spec.device, false,
+                        report_spec.seed)
+            .unwrap()
+            .with_max_seq_len(report_spec.max_seq_len);
+    let report_outcome =
+        simulate::simulate(&report_spec, &mut report_backend).unwrap();
+    let mut sink: Vec<u8> = Vec::new();
+    gated.push(bench("report-scale 100k-request serve JSON+markdown",
+                     || {
+        sink.clear();
+        elana::coordinator::report::write_json(&report_outcome, &mut sink)
+            .unwrap();
+        std::hint::black_box(sink.len());
+        std::hint::black_box(
+            elana::coordinator::report::render_markdown(&report_outcome));
+    }));
+
     // ---- bench-regression gate (env-driven; no-op for plain runs) -----
     if !gate::run_from_env(&gated) {
         std::process::exit(1);

@@ -52,6 +52,10 @@ pub enum Command {
         /// DVFS operating point from `--clock`/`--power-cap`
         /// (simulated rigs only).
         op: Option<OperatingPoint>,
+        /// Print JSON to stdout instead of the latency table.
+        json: bool,
+        /// Write the JSON report here.
+        out: Option<String>,
     },
     /// A whole suite (built-in name or JSON path).
     Suite { name: String },
@@ -157,7 +161,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
         "size" => Some(&["models", "unit", "points"]),
         "latency" | "energy" => {
             Some(&["model", "device", "batch", "len", "runs", "quant",
-                   "tp", "pp", "clock", "power-cap", "no-energy"])
+                   "tp", "pp", "clock", "power-cap", "no-energy", "json",
+                   "out"])
         }
         "suite" => Some(&[]),
         "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
@@ -346,6 +351,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     power_cap_w: cap,
                 }),
             },
+            json: has("json"),
+            out: get("out").map(str::to_string),
         }),
         "suite" => Ok(Command::Suite {
             name: positional
@@ -650,7 +657,7 @@ USAGE:
   elana latency --model MODEL --device RIG|cpu
                 [--batch B] [--len P+G] [--runs N] [--quant SCHEME]
                 [--tp N] [--pp N] [--clock F] [--power-cap W]
-                [--no-energy]
+                [--no-energy] [--json] [--out report.json]
   elana energy  (latency with energy always on)
   elana suite   table2|table3|table4|path/to/suite.json
   elana sweep   [--spec sweep.json] [--models m1,m2] [--devices d1,d2]
@@ -739,7 +746,7 @@ mod tests {
              --len 512+512 --runs 100")).unwrap();
         match c {
             Command::Latency { model, device, workload, energy, runs,
-                               quant, parallel, op } => {
+                               quant, parallel, op, json, out } => {
                 assert_eq!(model, "llama-3.1-8b");
                 assert_eq!(device, "a6000");
                 assert_eq!(workload.batch, 1);
@@ -750,8 +757,19 @@ mod tests {
                 assert!(quant.is_none());
                 assert!(parallel.is_none());
                 assert!(op.is_none());
+                assert!(!json);
+                assert!(out.is_none());
             }
             _ => panic!("{c:?}"),
+        }
+        match parse(&argv("latency --model m --json --out row.json"))
+            .unwrap()
+        {
+            Command::Latency { json, out, .. } => {
+                assert!(json);
+                assert_eq!(out.as_deref(), Some("row.json"));
+            }
+            c => panic!("{c:?}"),
         }
     }
 

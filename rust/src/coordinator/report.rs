@@ -8,24 +8,35 @@
 //! parallelized — the sweep-report discipline.
 
 use std::fmt::Write as _;
+use std::io;
 
-use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::json::{Json, JsonWriter};
+use crate::util::stats::{Summary, SummaryBuilder};
 
-use super::simulate::{ServeOutcome, ServedRequest};
+use super::simulate::ServeOutcome;
 use super::spec::Arrivals;
 
-/// The four latency series the report summarizes, in render order.
-fn latency_series(o: &ServeOutcome)
-                  -> [(&'static str, Vec<f64>); 4] {
-    let ms = |f: fn(&ServedRequest) -> f64| -> Vec<f64> {
-        o.requests.iter().map(|r| f(r) * 1e3).collect()
-    };
+/// The four latency summaries the report renders, in render order,
+/// computed in one pass over the requests (no intermediate series — at
+/// trace scale four extra `Vec<f64>` over 100k+ requests were pure
+/// rendering overhead).
+fn latency_summaries(o: &ServeOutcome)
+                     -> [(&'static str, Option<Summary>); 4] {
+    let n = o.requests.len();
+    let mut b: [SummaryBuilder; 4] =
+        std::array::from_fn(|_| SummaryBuilder::with_capacity(n));
+    for r in &o.requests {
+        b[0].push(r.queue_wait_s * 1e3);
+        b[1].push(r.ttft_s * 1e3);
+        b[2].push(r.tpot_s * 1e3);
+        b[3].push(r.ttlt_s * 1e3);
+    }
+    let [b0, b1, b2, b3] = b;
     [
-        ("queue wait ms", ms(|r| r.queue_wait_s)),
-        ("TTFT ms", ms(|r| r.ttft_s)),
-        ("TPOT ms", ms(|r| r.tpot_s)),
-        ("TTLT ms", ms(|r| r.ttlt_s)),
+        ("queue wait ms", b0.finish()),
+        ("TTFT ms", b1.finish()),
+        ("TPOT ms", b2.finish()),
+        ("TTLT ms", b3.finish()),
     ]
 }
 
@@ -87,8 +98,8 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
     let _ = writeln!(out);
     let _ = writeln!(out, "| metric | mean | p50 | p90 | p99 | max |");
     let _ = writeln!(out, "|---|---:|---:|---:|---:|---:|");
-    for (name, samples) in latency_series(o) {
-        if let Some(sum) = Summary::from_samples(&samples) {
+    for (name, sum) in latency_summaries(o) {
+        if let Some(sum) = sum {
             let _ = writeln!(
                 out,
                 "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |",
@@ -202,8 +213,8 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         })
         .collect();
     let mut summaries = Vec::new();
-    for (name, samples) in latency_series(o) {
-        if let Some(sum) = Summary::from_samples(&samples) {
+    for (name, sum) in latency_summaries(o) {
+        if let Some(sum) = sum {
             summaries.push((name, Json::obj(vec![
                 ("mean", Json::num(sum.mean)),
                 ("p50", Json::num(sum.p50)),
@@ -265,6 +276,141 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         }
     }
     Json::obj(root)
+}
+
+/// Streaming serve report: byte-identical to `to_json(o).to_string()`
+/// (pinned by `prop_stream_json_matches_tree`) but written straight into
+/// the sink — no per-request/per-batch `Json` nodes, which dominate
+/// allocation at trace scale. The tree serializer iterates `BTreeMap`
+/// objects in sorted key order, so every object below hand-emits its
+/// keys in that same byte order; debug builds assert it per scope.
+pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
+                                -> io::Result<()> {
+    let s = &o.spec;
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        w.field_obj("arrivals", |w| match &s.arrivals {
+            Arrivals::Poisson { rate_rps } => {
+                w.field_str("kind", "poisson")?;
+                w.field_num("rate_rps", *rate_rps)
+            }
+            Arrivals::Trace { path } => {
+                w.field_str("kind", "trace")?;
+                w.field_str("path", path)
+            }
+        })?;
+        w.field_arr("batches", |w| {
+            for b in &o.batches {
+                w.obj(|w| {
+                    w.field_num("dequeue_s", b.dequeue_s)?;
+                    w.field_num("exec_batch", b.exec_batch as f64)?;
+                    w.field_num("gen_len", b.gen_len as f64)?;
+                    w.field_num("index", b.index as f64)?;
+                    if let Some(link) = b.interconnect_j {
+                        w.field_num("j_interconnect", link)?;
+                    }
+                    if let Some((jp, jt, jr)) = b.joules {
+                        w.field_num("j_prompt", jp)?;
+                        w.field_num("j_request", jr)?;
+                        w.field_num("j_token", jt)?;
+                    }
+                    w.field_num("padded_prompt_len",
+                                b.padded_prompt_len as f64)?;
+                    w.field_num("padding_waste", b.padding_waste)?;
+                    w.field_num("real_rows", b.real_rows as f64)?;
+                    w.field_num("replica", b.replica as f64)?;
+                    w.field_num("service_s", b.service_s)
+                })?;
+            }
+            Ok(())
+        })?;
+        w.field_num("busy_s", o.busy_s)?;
+        w.field_str("device", &s.device)?;
+        if let Some(d) = o.dvfs {
+            w.field_obj("dvfs", |w| {
+                match d.cap_w {
+                    Some(c) => w.field_num("cap_w", c)?,
+                    None => w.field_null("cap_w")?,
+                }
+                w.field_num("decode_frac", d.decode_frac)?;
+                w.field_num("decode_mhz", d.decode_mhz)?;
+                w.field_num("prefill_frac", d.prefill_frac)?;
+                w.field_num("prefill_mhz", d.prefill_mhz)
+            })?;
+        }
+        if let Some(total) = o.total_joules {
+            let toks = o.generated_tokens().max(1) as f64;
+            if let Some(link) = o.interconnect_joules {
+                w.field_num("interconnect_joules", link)?;
+            }
+            if o.dvfs.is_some() {
+                w.field_num("j_decode_joules",
+                            (total - o.prefill_joules()).max(0.0))?;
+            }
+            w.field_num("j_per_token", total / toks)?;
+            if let Some(link) = o.interconnect_joules {
+                w.field_num("j_per_token_interconnect", link / toks)?;
+            }
+            if o.dvfs.is_some() {
+                w.field_num("j_prefill_joules", o.prefill_joules())?;
+            }
+        }
+        w.field_obj("latency_ms", |w| {
+            // sorted key order, not render order: uppercase metric names
+            // sort before "queue wait ms"
+            let sums = latency_summaries(o);
+            for idx in [2usize, 1, 3, 0] {
+                let (name, sum) = &sums[idx];
+                if let Some(sum) = sum {
+                    w.field_obj(name, |w| {
+                        w.field_num("max", sum.max)?;
+                        w.field_num("mean", sum.mean)?;
+                        w.field_num("p50", sum.p50)?;
+                        w.field_num("p90", sum.p90)?;
+                        w.field_num("p99", sum.p99)
+                    })?;
+                }
+            }
+            Ok(())
+        })?;
+        w.field_num("makespan_s", o.makespan_s)?;
+        w.field_num("mean_padding_waste", o.mean_padding_waste())?;
+        w.field_str("model", &s.model)?;
+        w.field_num("n_batches", o.batches.len() as f64)?;
+        w.field_num("n_requests", o.requests.len() as f64)?;
+        if let Some(p) = s.parallel {
+            w.field_num("pp", p.pp as f64)?;
+        }
+        w.field_str("quant", &s.quant_canonical())?;
+        w.field_num("replicas", s.replicas as f64)?;
+        w.field_arr("requests", |w| {
+            for r in &o.requests {
+                w.obj(|w| {
+                    w.field_num("arrival_s", r.arrival_s)?;
+                    w.field_num("batch", r.batch as f64)?;
+                    w.field_num("gen_len", r.gen_len as f64)?;
+                    w.field_num("id", r.id as f64)?;
+                    w.field_num("prompt_len", r.prompt_len as f64)?;
+                    w.field_num("queue_wait_s", r.queue_wait_s)?;
+                    w.field_num("tpot_s", r.tpot_s)?;
+                    w.field_num("ttft_s", r.ttft_s)?;
+                    w.field_num("ttlt_s", r.ttlt_s)
+                })?;
+            }
+            Ok(())
+        })?;
+        w.field_str("seed", &s.seed.to_string())?;
+        w.field_num("throughput_rps", o.throughput_rps())?;
+        w.field_num("tokens_per_s", o.tokens_per_s())?;
+        if let Some(total) = o.total_joules {
+            w.field_num("total_joules", total)?;
+        }
+        if let Some(p) = s.parallel {
+            w.field_num("tp", p.tp as f64)?;
+        }
+        w.field_bool("wall_clock", o.wall_clock)
+    })?;
+    w.finish().map(|_| ())
 }
 
 #[cfg(test)]
@@ -342,6 +488,65 @@ mod tests {
         assert!(lv.get("dvfs").is_none());
         assert!(lv.get("j_prefill_joules").is_none());
         assert!(!render_markdown(&outcome(true)).contains("dvfs:"));
+    }
+
+    fn assert_stream_matches_tree(o: &ServeOutcome) {
+        let mut buf = Vec::new();
+        write_json(o, &mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(),
+                   to_json(o).to_string());
+    }
+
+    #[test]
+    fn prop_stream_json_matches_tree() {
+        // randomized specs across the energy / dvfs / replica axes; the
+        // debug key-order assertion inside JsonWriter makes any ordering
+        // slip a panic rather than a silent byte diff
+        crate::testkit::property(12, |rng| {
+            let mut spec = ServeSpec {
+                requests: rng.usize_in(1, 40),
+                arrivals: Arrivals::Poisson {
+                    rate_rps: rng.f64_in(5.0, 100.0),
+                },
+                prompt_lo: 8,
+                prompt_hi: 8 + rng.usize_in(0, 64),
+                gen_len: rng.usize_in(1, 16),
+                replicas: rng.usize_in(1, 3),
+                energy: rng.f64() < 0.7,
+                seed: rng.next_u64(),
+                ..ServeSpec::default()
+            };
+            if rng.f64() < 0.3 {
+                spec.power_cap = Some(rng.f64_in(200.0, 300.0));
+                spec.phase_dvfs = true;
+            }
+            let o = simulate::run(&spec).unwrap();
+            assert_stream_matches_tree(&o);
+        });
+    }
+
+    #[test]
+    fn stream_json_matches_tree_for_parallel_and_trace_arrivals() {
+        // tp/pp keys live at both ends of the sorted root order
+        let spec = ServeSpec {
+            device: "4xa6000".to_string(),
+            parallel: Some(crate::hwsim::ParallelSpec::new(2, 1)),
+            requests: 12,
+            arrivals: Arrivals::Poisson { rate_rps: 20.0 },
+            prompt_lo: 16,
+            prompt_hi: 64,
+            gen_len: 8,
+            seed: 7,
+            ..ServeSpec::default()
+        };
+        let mut o = simulate::run(&spec).unwrap();
+        assert_stream_matches_tree(&o);
+        // the trace-arrivals branch, without needing a trace file on
+        // disk: rewrite the spec's arrival block post-simulation
+        o.spec.arrivals = Arrivals::Trace {
+            path: "traces/night \"shift\".json".to_string(),
+        };
+        assert_stream_matches_tree(&o);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! `backend::ExecutionBackend` trait — this file never branches on
 //! simulated-vs-engine.
 
+use std::io;
+
 use anyhow::Result;
 
 use elana::cli::{self, Command};
@@ -46,7 +48,7 @@ fn run(cmd: Command) -> Result<()> {
             print!("{}", report::render_size_table(&rows, &points, unit));
         }
         Command::Latency { model, device, workload, energy, runs,
-                           quant, parallel, op } => {
+                           quant, parallel, op, json, out } => {
             let mut spec = ProfileSpec::new(&model, &device, workload);
             spec.energy = energy;
             spec.quant = quant;
@@ -56,6 +58,14 @@ fn run(cmd: Command) -> Result<()> {
                 spec.latency_runs = r;
             }
             let outcome = profiler::profile(&spec)?;
+            if json || out.is_some() {
+                emit_json(out.as_deref(), json, |w| {
+                    report::write_json(&outcome, w)
+                })?;
+                if json {
+                    return Ok(());
+                }
+            }
             let mut par = match parallel {
                 Some(p) => format!("  [{}]", p.label()),
                 None => String::new(),
@@ -86,6 +96,31 @@ fn run(cmd: Command) -> Result<()> {
         Command::Serve { spec, json, out } => {
             cmd_serve(spec, json, out)?;
         }
+    }
+    Ok(())
+}
+
+/// Stream a JSON artifact to `--out` and/or stdout. The emitter runs
+/// once per sink, straight through a `BufWriter` — the report is never
+/// materialized as one in-memory string (100k-request serve artifacts
+/// run to tens of MB).
+fn emit_json<F>(out: Option<&str>, json: bool, emit: F) -> Result<()>
+where
+    F: Fn(&mut dyn io::Write) -> io::Result<()>,
+{
+    if let Some(path) = out {
+        let file = std::fs::File::create(path)?;
+        let mut w = io::BufWriter::new(file);
+        emit(&mut w)?;
+        io::Write::flush(&mut w)?;
+        eprintln!("wrote {path}");
+    }
+    if json {
+        let stdout = io::stdout();
+        let mut w = io::BufWriter::new(stdout.lock());
+        emit(&mut w)?;
+        io::Write::write_all(&mut w, b"\n")?;
+        io::Write::flush(&mut w)?;
     }
     Ok(())
 }
@@ -149,17 +184,11 @@ fn cmd_sweep(spec_path: Option<String>,
     };
     overrides.apply(&mut spec);
     let results = sweep::run(&spec)?;
-    let rendered = sweep::report::to_json(&results).to_string();
-    if let Some(path) = &out {
-        std::fs::write(path, &rendered)?;
-    }
-    if json {
-        println!("{rendered}");
-    } else {
+    emit_json(out.as_deref(), json, |w| {
+        sweep::report::write_json(&results, w)
+    })?;
+    if !json {
         print!("{}", sweep::report::render_markdown(&results));
-    }
-    if let Some(path) = &out {
-        eprintln!("wrote {path}");
     }
     Ok(())
 }
@@ -167,17 +196,11 @@ fn cmd_sweep(spec_path: Option<String>,
 fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>,
             assert_recommendation: bool) -> Result<()> {
     let results = planner::run(spec)?;
-    let rendered = planner::report::to_json(&results).to_string();
-    if let Some(path) = &out {
-        std::fs::write(path, &rendered)?;
-    }
-    if json {
-        println!("{rendered}");
-    } else {
+    emit_json(out.as_deref(), json, |w| {
+        planner::report::write_json(&results, w)
+    })?;
+    if !json {
         print!("{}", planner::report::render_markdown(&results));
-    }
-    if let Some(path) = &out {
-        eprintln!("wrote {path}");
     }
     if assert_recommendation {
         let recommended =
@@ -196,17 +219,11 @@ fn cmd_plan(spec: &planner::PlanSpec, json: bool, out: Option<String>,
 fn cmd_tune(spec: &tune::TuneSpec, json: bool, out: Option<String>,
             assert_recommendation: bool) -> Result<()> {
     let results = tune::run(spec)?;
-    let rendered = tune::report::to_json(&results).to_string();
-    if let Some(path) = &out {
-        std::fs::write(path, &rendered)?;
-    }
-    if json {
-        println!("{rendered}");
-    } else {
+    emit_json(out.as_deref(), json, |w| {
+        tune::report::write_json(&results, w)
+    })?;
+    if !json {
         print!("{}", tune::report::render_markdown(&results));
-    }
-    if let Some(path) = &out {
-        eprintln!("wrote {path}");
     }
     if assert_recommendation {
         anyhow::ensure!(
@@ -265,17 +282,11 @@ fn cmd_trace(model: &str, device: &str, workload: &hwsim::Workload,
 fn cmd_serve(spec: ServeSpec, json: bool, out: Option<String>)
              -> Result<()> {
     let outcome = coordinator::simulate::run(&spec)?;
-    if json || out.is_some() {
-        let rendered = coordinator::report::to_json(&outcome).to_string();
-        if let Some(path) = &out {
-            std::fs::write(path, &rendered)?;
-            eprintln!("wrote {path}");
-        }
-        if json {
-            println!("{rendered}");
-            return Ok(());
-        }
+    emit_json(out.as_deref(), json, |w| {
+        coordinator::report::write_json(&outcome, w)
+    })?;
+    if !json {
+        print!("{}", coordinator::report::render_markdown(&outcome));
     }
-    print!("{}", coordinator::report::render_markdown(&outcome));
     Ok(())
 }

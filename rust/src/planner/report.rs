@@ -8,8 +8,9 @@
 //! sweep/serve report discipline.
 
 use std::fmt::Write as _;
+use std::io;
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 use crate::util::units::MemUnit;
 
 use super::runner::{PlanPoint, PlanResults};
@@ -275,6 +276,138 @@ fn point_json(p: &PlanPoint) -> Json {
     Json::obj(fields)
 }
 
+/// Streaming plan report: byte-identical to `to_json(r).to_string()`
+/// (pinned by `stream_json_matches_tree_across_axes`) without the
+/// per-point `Json` trees. Keys are hand-emitted in sorted order — the
+/// order `BTreeMap` serialization produces.
+pub fn write_json<W: io::Write>(r: &PlanResults, out: W)
+                                -> io::Result<()> {
+    let s = &r.spec;
+    let has_par = !s.tps.is_empty() || !s.pps.is_empty();
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        w.field_arr("devices", |w| {
+            for d in &s.devices {
+                w.str(d)?;
+            }
+            Ok(())
+        })?;
+        w.field_bool("energy", s.energy)?;
+        w.field_arr("lens", |w| {
+            for &(p, g) in &s.lens {
+                w.str(&format!("{p}+{g}"))?;
+            }
+            Ok(())
+        })?;
+        w.field_obj("mem_model", |w| {
+            w.field_num("headroom_frac", solve::HEADROOM_FRAC)?;
+            w.field_num("max_batch", solve::MAX_BATCH as f64)?;
+            w.field_num("runtime_reserve_bytes_per_gpu",
+                        solve::RUNTIME_RESERVE_BYTES as f64)
+        })?;
+        w.field_arr("models", |w| {
+            for m in &s.models {
+                w.str(m)?;
+            }
+            Ok(())
+        })?;
+        w.field_num("n_points", r.points.len() as f64)?;
+        w.field_str("plan", &s.name)?;
+        w.field_arr("points", |w| {
+            for p in &r.points {
+                write_point_json(w, p)?;
+            }
+            Ok(())
+        })?;
+        if !s.power_caps.is_empty() {
+            w.field_arr("power_caps", |w| {
+                for &c in &s.power_caps {
+                    w.num(c)?;
+                }
+                Ok(())
+            })?;
+        }
+        if has_par {
+            w.field_arr("pps", |w| {
+                for &p in &s.pps {
+                    w.num(p as f64)?;
+                }
+                Ok(())
+            })?;
+        }
+        w.field_arr("quants", |w| {
+            for q in &s.quants {
+                w.str(q)?;
+            }
+            Ok(())
+        })?;
+        w.field_str("seed", &s.seed.to_string())?;
+        w.field_num("target_rps", s.target_rps)?;
+        if has_par {
+            w.field_arr("tps", |w| {
+                for &t in &s.tps {
+                    w.num(t as f64)?;
+                }
+                Ok(())
+            })?;
+        }
+        w.field_str("unit", unit_name(s.unit))
+    })?;
+    w.finish().map(|_| ())
+}
+
+fn write_point_json<W: io::Write>(w: &mut JsonWriter<W>, p: &PlanPoint)
+                                  -> io::Result<()> {
+    w.obj(|w| {
+        w.field_num("budget_bytes", p.fit.budget_bytes as f64)?;
+        w.field_str("device", &p.device)?;
+        w.field_num("eff_weight_bits", p.fit.eff_weight_bits)?;
+        w.field_bool("fits", p.fits())?;
+        if let Some(f) = p.fleet {
+            w.field_obj("fleet", |w| {
+                w.field_num("p90_queue_wait_s", f.p90_queue_wait_s)?;
+                w.field_num("per_replica_rps", f.per_replica_rps)?;
+                w.field_num("replicas", f.replicas as f64)?;
+                w.field_bool("saturated", f.saturated)?;
+                w.field_num("target_rps", f.target_rps)?;
+                w.field_num("utilization", f.utilization)
+            })?;
+        }
+        w.field_num("gen_len", p.gen_len as f64)?;
+        w.field_num("index", p.index as f64)?;
+        w.field_num("max_batch", p.batch as f64)?;
+        w.field_num("max_ctx_b1", p.max_ctx_b1 as f64)?;
+        w.field_num("mem_bytes", p.fit.mem_bytes as f64)?;
+        w.field_str("model", &p.model)?;
+        match &p.outcome {
+            Some(o) => {
+                w.key("outcome")?;
+                o.write_json(w)?;
+            }
+            None => w.field_null("outcome")?,
+        }
+        w.field_bool("pareto", p.pareto)?;
+        if let Some(c) = p.power_cap {
+            w.field_num("power_cap_w", c)?;
+        }
+        if let Some(pr) = p.parallel {
+            w.field_num("pp", pr.pp as f64)?;
+        }
+        w.field_num("prompt_len", p.prompt_len as f64)?;
+        w.field_str("quant", &p.quant)?;
+        if let Some(pr) = p.parallel {
+            w.field_num("ranks", pr.n_ranks() as f64)?;
+        }
+        w.field_bool("recommended", p.recommended)?;
+        w.field_num("required_bytes", p.required_bytes() as f64)?;
+        w.field_str("seed", &p.seed.to_string())?;
+        if let Some(pr) = p.parallel {
+            w.field_num("tp", pr.tp as f64)?;
+        }
+        w.field_num("weight_bytes", p.fit.weight_bytes as f64)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,6 +514,44 @@ mod tests {
         let lp = lv.get("points").unwrap().as_arr().unwrap();
         assert!(lp[0].get("power_cap_w").is_none());
         assert!(!render_markdown(&legacy).contains("| Cap |"));
+    }
+
+    #[test]
+    fn stream_json_matches_tree_across_axes() {
+        // legacy (incl. does-not-fit null outcomes), parallel (tp/ranks
+        // keys straddle the sorted order), and power-cap plans
+        let specs = [
+            PlanSpec {
+                models: vec!["llama-3.1-8b".into()],
+                devices: vec!["a6000".into(), "orin".into()],
+                quants: vec!["bf16".into(), "w4a16".into()],
+                lens: vec![(512, 512)],
+                ..PlanSpec::default()
+            },
+            PlanSpec {
+                models: vec!["llama-3.1-70b".into()],
+                devices: vec!["4xa6000".into()],
+                quants: vec!["bf16".into()],
+                lens: vec![(512, 512)],
+                tps: vec![1, 4],
+                ..PlanSpec::default()
+            },
+            PlanSpec {
+                models: vec!["llama-2-7b".into()],
+                devices: vec!["a6000".into()],
+                quants: vec!["bf16".into()],
+                lens: vec![(512, 512)],
+                power_caps: vec![200.0],
+                ..PlanSpec::default()
+            },
+        ];
+        for spec in specs {
+            let r = runner::run(&spec).unwrap();
+            let mut buf = Vec::new();
+            write_json(&r, &mut buf).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(),
+                       to_json(&r).to_string());
+        }
     }
 
     #[test]

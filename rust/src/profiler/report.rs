@@ -1,9 +1,24 @@
-//! Report rendering: the paper's table layouts as plain text / markdown.
+//! Report rendering: the paper's table layouts as plain text /
+//! markdown, plus the streamed JSON form behind `elana latency
+//! --json/--out`.
 
+use std::io;
+
+use crate::util::json::JsonWriter;
 use crate::util::units::MemUnit;
 
 use super::session::ProfileOutcome;
 use super::size::SizeRow;
+
+/// Stream one profile row as a standalone JSON document — the
+/// `elana latency --json/--out` artifact. Byte-identical to
+/// `o.to_json().to_string()` (pinned by `stream_json_matches_tree`).
+pub fn write_json<W: io::Write>(o: &ProfileOutcome, out: W)
+                                -> io::Result<()> {
+    let mut w = JsonWriter::new(out);
+    o.write_json(&mut w)?;
+    w.finish().map(|_| ())
+}
 
 /// A generic table row (already formatted cells).
 #[derive(Debug, Clone)]
@@ -154,6 +169,36 @@ mod tests {
         assert!(text.contains("Llama-3.1-8B *"), "{text}");
         assert!(text.contains("nearest-before"), "{text}");
         assert!(text.contains("500/512"), "{text}");
+    }
+
+    #[test]
+    fn stream_json_matches_tree() {
+        let o = ProfileOutcome {
+            model: "Llama-3.1-8B".into(),
+            device: "A6000".into(),
+            workload: Workload::new(1, 512, 512),
+            ttft_ms: 94.30,
+            j_prompt: 25.91,
+            tpot_ms: 24.84,
+            j_token: 6.80,
+            ttlt_ms: 12859.85,
+            j_request: 3533.09,
+            ttft_std_ms: 1.0,
+            tpot_p50_ms: 24.80,
+            tpot_p99_ms: 25.10,
+            simulated: true,
+            quant: None,
+            energy_fallback_steps: 0,
+            energy_windows: 0,
+        };
+        for o in [o.clone(),
+                  ProfileOutcome { quant: Some("w4a16".into()),
+                                   simulated: false, ..o }] {
+            let mut buf = Vec::new();
+            write_json(&o, &mut buf).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(),
+                       o.to_json().to_string());
+        }
     }
 
     #[test]

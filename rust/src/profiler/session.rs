@@ -19,7 +19,7 @@ use crate::backend::{self, ExecutionBackend};
 use crate::engine::TokenBatch;
 use crate::hwsim::Workload;
 use crate::runtime::Manifest;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 use crate::util::stats::Summary;
 
 use super::latency::{measure_tpot, measure_ttft, measure_ttlt,
@@ -92,6 +92,34 @@ impl ProfileOutcome {
                 None => Json::Null,
             }),
         ])
+    }
+
+    /// Stream the same object into an open [`JsonWriter`] — byte-
+    /// identical to `to_json().to_string()` (keys hand-emitted in the
+    /// sorted order `BTreeMap` iteration produces), so the sweep/plan
+    /// report streams embed profile rows without building trees.
+    pub fn write_json<W: std::io::Write>(&self, w: &mut JsonWriter<W>)
+                                         -> std::io::Result<()> {
+        w.obj(|w| {
+            w.field_num("batch", self.workload.batch as f64)?;
+            w.field_str("device", &self.device)?;
+            w.field_num("gen_len", self.workload.gen_len as f64)?;
+            w.field_num("j_prompt", self.j_prompt)?;
+            w.field_num("j_request", self.j_request)?;
+            w.field_num("j_token", self.j_token)?;
+            w.field_str("model", &self.model)?;
+            w.field_num("prompt_len", self.workload.prompt_len as f64)?;
+            match &self.quant {
+                Some(q) => w.field_str("quant", q)?,
+                None => w.field_null("quant")?,
+            }
+            w.field_bool("simulated", self.simulated)?;
+            w.field_num("tpot_ms", self.tpot_ms)?;
+            w.field_num("tpot_p50_ms", self.tpot_p50_ms)?;
+            w.field_num("tpot_p99_ms", self.tpot_p99_ms)?;
+            w.field_num("ttft_ms", self.ttft_ms)?;
+            w.field_num("ttlt_ms", self.ttlt_ms)
+        })
     }
 }
 

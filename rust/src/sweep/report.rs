@@ -7,8 +7,9 @@
 //! byte-identical however the sweep was parallelized.
 
 use std::fmt::Write as _;
+use std::io;
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 use crate::util::units::MemUnit;
 
 use super::runner::{CellResult, SweepResults};
@@ -199,6 +200,109 @@ pub fn to_json(r: &SweepResults) -> Json {
     Json::obj(fields)
 }
 
+/// Streaming sweep report: byte-identical to `to_json(r).to_string()`
+/// (pinned by `stream_json_matches_tree_across_axes`) without building
+/// the per-cell `Json` trees. Keys are hand-emitted in sorted order —
+/// the order `BTreeMap` serialization produces.
+pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
+                                -> io::Result<()> {
+    let s = &r.spec;
+    let has_par = !s.tps.is_empty() || !s.pps.is_empty();
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        w.field_arr("batches", |w| {
+            for &b in &s.batches {
+                w.num(b as f64)?;
+            }
+            Ok(())
+        })?;
+        match r.best_j_token() {
+            Some(i) => w.field_num("best_j_token_index", i as f64)?,
+            None => w.field_null("best_j_token_index")?,
+        }
+        w.field_arr("cells", |w| {
+            for c in &r.cells {
+                w.obj(|w| {
+                    w.field_num("index", c.cell.index as f64)?;
+                    w.key("outcome")?;
+                    c.outcome.write_json(w)?;
+                    if let Some(cap) = c.cell.power_cap {
+                        w.field_num("power_cap_w", cap)?;
+                    }
+                    if let Some(p) = c.cell.parallel {
+                        w.field_num("pp", p.pp as f64)?;
+                    }
+                    w.field_str("quant", &c.cell.quant_token())?;
+                    w.field_str("seed", &c.cell.seed.to_string())?;
+                    if let Some(p) = c.cell.parallel {
+                        w.field_num("tp", p.tp as f64)?;
+                    }
+                    Ok(())
+                })?;
+            }
+            Ok(())
+        })?;
+        w.field_arr("devices", |w| {
+            for d in &s.devices {
+                w.str(d)?;
+            }
+            Ok(())
+        })?;
+        w.field_bool("energy", s.energy)?;
+        w.field_arr("lens", |w| {
+            for &(p, g) in &s.lens {
+                w.str(&format!("{p}+{g}"))?;
+            }
+            Ok(())
+        })?;
+        w.field_arr("models", |w| {
+            for m in &s.models {
+                w.str(m)?;
+            }
+            Ok(())
+        })?;
+        w.field_num("n_cells", r.cells.len() as f64)?;
+        if !s.power_caps.is_empty() {
+            w.field_arr("power_caps", |w| {
+                for &c in &s.power_caps {
+                    w.num(c)?;
+                }
+                Ok(())
+            })?;
+        }
+        if has_par {
+            w.field_arr("pps", |w| {
+                for &p in &s.pps {
+                    w.num(p as f64)?;
+                }
+                Ok(())
+            })?;
+        }
+        w.field_arr("quants", |w| {
+            for q in &s.quants {
+                w.str(q)?;
+            }
+            Ok(())
+        })?;
+        w.field_str("seed", &s.seed.to_string())?;
+        w.field_str("sweep", &s.name)?;
+        if has_par {
+            w.field_arr("tps", |w| {
+                for &t in &s.tps {
+                    w.num(t as f64)?;
+                }
+                Ok(())
+            })?;
+        }
+        w.field_str("unit", unit_name(s.unit))?;
+        match r.worst_j_token() {
+            Some(i) => w.field_num("worst_j_token_index", i as f64),
+            None => w.field_null("worst_j_token_index"),
+        }
+    })?;
+    w.finish().map(|_| ())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,6 +461,53 @@ mod tests {
         let lc = lv.get("cells").unwrap().as_arr().unwrap();
         assert!(lc[0].get("power_cap_w").is_none());
         assert!(!render_markdown(&legacy).contains("| Cap |"));
+    }
+
+    #[test]
+    fn stream_json_matches_tree_across_axes() {
+        // legacy, quant, parallel, and power-cap sweeps all hit
+        // different optional-key paths in the sorted emission order
+        let specs = [
+            SweepSpec {
+                models: vec!["llama-3.1-8b".into(), "qwen-2.5-7b".into()],
+                devices: vec!["a6000".into(), "thor".into()],
+                batches: vec![1],
+                lens: vec![(64, 32)],
+                ..SweepSpec::default()
+            },
+            SweepSpec {
+                models: vec!["llama-3.1-8b".into()],
+                devices: vec!["a6000".into()],
+                batches: vec![1],
+                lens: vec![(64, 32)],
+                quants: vec!["native".into(), "w4a16".into()],
+                energy: false,
+                ..SweepSpec::default()
+            },
+            SweepSpec {
+                models: vec!["llama-3.1-8b".into()],
+                devices: vec!["4xa6000".into()],
+                batches: vec![1],
+                lens: vec![(64, 32)],
+                tps: vec![1, 4],
+                ..SweepSpec::default()
+            },
+            SweepSpec {
+                models: vec!["llama-2-7b".into()],
+                devices: vec!["a6000".into()],
+                batches: vec![1],
+                lens: vec![(64, 32)],
+                power_caps: vec![150.0, 300.0],
+                ..SweepSpec::default()
+            },
+        ];
+        for s in specs {
+            let r = runner::run(&s).unwrap();
+            let mut buf = Vec::new();
+            write_json(&r, &mut buf).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(),
+                       to_json(&r).to_string());
+        }
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! Track ids map to `tid`, categories to `cat`; a process-name metadata
 //! event labels the trace like the paper's screenshot.
 
-use crate::util::json::Json;
+use std::io;
+
+use crate::util::json::{Json, JsonWriter};
 
 use super::recorder::{TraceEvent, TraceRecorder};
 
@@ -46,11 +48,51 @@ fn event_json(ev: &TraceEvent) -> Json {
     ])
 }
 
-/// Write the trace to a file.
+/// Stream the trace into any sink — byte-identical to
+/// [`to_chrome_trace_json`] (pinned by `stream_matches_tree`) without
+/// building a `Json` node per event; layer-level decode traces run to
+/// thousands of spans.
+pub fn write_chrome_trace_to<W: io::Write>(recorder: &TraceRecorder,
+                                           process_name: &str, out: W)
+                                           -> io::Result<()> {
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        w.field_str("displayTimeUnit", "ms")?;
+        w.field_arr("traceEvents", |w| {
+            w.obj(|w| {
+                w.field_obj("args", |w| {
+                    w.field_str("name", process_name)
+                })?;
+                w.field_str("name", "process_name")?;
+                w.field_str("ph", "M")?;
+                w.field_num("pid", 1.0)?;
+                w.field_num("tid", 0.0)
+            })?;
+            for ev in recorder.events() {
+                w.obj(|w| {
+                    w.field_str("cat", &ev.category)?;
+                    w.field_num("dur", ev.duration_us)?;
+                    w.field_str("name", &ev.name)?;
+                    w.field_str("ph", "X")?;
+                    w.field_num("pid", 1.0)?;
+                    w.field_num("tid", ev.track as f64)?;
+                    w.field_num("ts", ev.start_us)
+                })?;
+            }
+            Ok(())
+        })
+    })?;
+    w.finish().map(|_| ())
+}
+
+/// Write the trace to a file (buffered, streamed).
 pub fn write_chrome_trace(recorder: &TraceRecorder, process_name: &str,
                           path: impl AsRef<std::path::Path>)
                           -> anyhow::Result<()> {
-    std::fs::write(path, to_chrome_trace_json(recorder, process_name))?;
+    let f = std::fs::File::create(path)?;
+    let mut buf = io::BufWriter::new(f);
+    write_chrome_trace_to(recorder, process_name, &mut buf)?;
+    io::Write::flush(&mut buf)?;
     Ok(())
 }
 
@@ -99,6 +141,19 @@ mod tests {
     fn process_name_in_metadata() {
         let s = to_chrome_trace_json(&sample_recorder(), "elana decode b=1");
         assert!(s.contains("elana decode b=1"));
+    }
+
+    #[test]
+    fn stream_matches_tree() {
+        // empty recorder (metadata-only) and a populated one with an
+        // escape-needing process name
+        for (r, name) in [(TraceRecorder::new(), "elana \"q\"\n"),
+                          (sample_recorder(), "elana decode b=1")] {
+            let mut buf = Vec::new();
+            write_chrome_trace_to(&r, name, &mut buf).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(),
+                       to_chrome_trace_json(&r, name));
+        }
     }
 
     #[test]

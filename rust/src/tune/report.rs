@@ -9,8 +9,9 @@
 //! discipline.
 
 use std::fmt::Write as _;
+use std::io;
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 
 use super::runner::{TunePoint, TuneResults};
 
@@ -230,6 +231,107 @@ pub fn to_json(r: &TuneResults) -> Json {
     Json::obj(fields)
 }
 
+/// One grid point, streamed. `with_index` is false for the baseline
+/// block, which is the same object minus its grid index.
+fn write_point<W: io::Write>(w: &mut JsonWriter<W>, p: &TunePoint,
+                             with_index: bool) -> io::Result<()> {
+    w.obj(|w| {
+        w.field_num("avg_watts", p.avg_watts)?;
+        w.field_num("clock_frac", p.clock_frac)?;
+        w.field_num("eff_frac", p.eff_frac)?;
+        w.field_num("eff_mhz", p.eff_mhz)?;
+        if with_index {
+            w.field_num("index", p.index as f64)?;
+        }
+        w.field_num("j_prompt", p.j_prompt)?;
+        w.field_num("j_request", p.j_request)?;
+        w.field_num("j_token", p.j_token)?;
+        match p.power_cap_w {
+            Some(c) => w.field_num("power_cap_w", c)?,
+            None => w.field_null("power_cap_w")?,
+        }
+        w.field_str("seed", &p.seed.to_string())?;
+        w.field_bool("throttled", p.throttled)?;
+        w.field_num("tpot_ms", p.tpot_ms)?;
+        w.field_bool("tpot_ok", p.tpot_ok)?;
+        w.field_num("ttft_ms", p.ttft_ms)?;
+        w.field_bool("ttft_ok", p.ttft_ok)?;
+        w.field_num("ttlt_ms", p.ttlt_ms)
+    })
+}
+
+/// Streaming tune report: byte-identical to `to_json(r).to_string()`
+/// (pinned by `stream_json_matches_tree`) without the per-point `Json`
+/// trees. Keys are hand-emitted in sorted order — the order `BTreeMap`
+/// serialization produces.
+pub fn write_json<W: io::Write>(r: &TuneResults, out: W)
+                                -> io::Result<()> {
+    let s = &r.spec;
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        w.key("baseline")?;
+        write_point(w, &r.baseline, false)?;
+        w.field_num("batch", s.batch as f64)?;
+        w.field_arr("clocks", |w| {
+            for &c in &s.clocks {
+                w.num(c)?;
+            }
+            Ok(())
+        })?;
+        match &r.combined {
+            Some(c) => w.field_obj("combined", |w| {
+                w.field_num("j_prompt", c.j_prompt)?;
+                w.field_num("j_request", c.j_request)?;
+                w.field_num("j_token", c.j_token)?;
+                w.field_num("tpot_ms", c.tpot_ms)?;
+                w.field_num("ttft_ms", c.ttft_ms)?;
+                w.field_num("ttlt_ms", c.ttlt_ms)
+            })?,
+            None => w.field_null("combined")?,
+        }
+        match r.decode_rec {
+            Some(i) => w.field_num("decode_recommendation", i as f64)?,
+            None => w.field_null("decode_recommendation")?,
+        }
+        w.field_str("device", &s.device)?;
+        w.field_bool("energy", s.energy)?;
+        w.field_num("gen_len", s.gen_len as f64)?;
+        w.field_str("model", &s.model)?;
+        w.field_num("n_points", r.points.len() as f64)?;
+        w.field_arr("points", |w| {
+            for p in &r.points {
+                write_point(w, p, true)?;
+            }
+            Ok(())
+        })?;
+        if !s.power_caps.is_empty() {
+            w.field_arr("power_caps", |w| {
+                for &c in &s.power_caps {
+                    w.num(c)?;
+                }
+                Ok(())
+            })?;
+        }
+        if let Some(p) = s.parallel {
+            w.field_num("pp", p.pp as f64)?;
+        }
+        match r.prefill_rec {
+            Some(i) => w.field_num("prefill_recommendation", i as f64)?,
+            None => w.field_null("prefill_recommendation")?,
+        }
+        w.field_num("prompt_len", s.prompt_len as f64)?;
+        w.field_str("quant", &s.quant)?;
+        w.field_str("seed", &s.seed.to_string())?;
+        w.field_num("slo_tpot_ms", r.slo_tpot_ms)?;
+        w.field_num("slo_ttft_ms", r.slo_ttft_ms)?;
+        if let Some(p) = s.parallel {
+            w.field_num("tp", p.tp as f64)?;
+        }
+        w.field_str("tune", &s.name)
+    })?;
+    w.finish().map(|_| ())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +376,36 @@ mod tests {
         assert!(text.contains("**No feasible operating point**"),
                 "{text}");
         assert!(text.contains("ttft!tpot!"), "{text}");
+    }
+
+    #[test]
+    fn stream_json_matches_tree() {
+        // legacy grid, capped+parallel grid, and an infeasible-SLO run
+        // (null combined/recommendation branches)
+        let runs = [
+            results(),
+            runner::run(&TuneSpec {
+                device: "4xa6000".into(),
+                parallel: Some(crate::hwsim::ParallelSpec::new(2, 1)),
+                power_caps: vec![200.0, 250.0],
+                gen_len: 32,
+                ..TuneSpec::default()
+            })
+            .unwrap(),
+            runner::run(&TuneSpec {
+                slo_ttft_ms: Some(1e-6),
+                slo_tpot_ms: Some(1e-6),
+                gen_len: 16,
+                ..TuneSpec::default()
+            })
+            .unwrap(),
+        ];
+        for r in runs {
+            let mut buf = Vec::new();
+            write_json(&r, &mut buf).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(),
+                       to_json(&r).to_string());
+        }
     }
 
     #[test]

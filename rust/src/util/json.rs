@@ -1,12 +1,20 @@
 //! Minimal JSON codec (no external deps in this offline environment).
 //!
-//! Two consumers: parsing `artifacts/manifest.json` (the AOT contract
-//! written by `python/compile/aot.py`) and emitting Chrome-trace JSON for
-//! Perfetto (Figure 1). Supports the full JSON value model with the usual
-//! escapes; numbers are f64 (manifest integers fit exactly below 2^53).
+//! Two halves. The tree-based [`Json`] value handles *parsing* (the
+//! `artifacts/manifest.json` AOT contract, sweep/serve spec files, trace
+//! files) and small documents where building a `BTreeMap` per object is
+//! irrelevant. The streaming [`JsonWriter`] handles *emission* of the
+//! large report artifacts (a 100k+-request serve report used to allocate
+//! a `Json` node per request before the first byte hit disk); it reuses
+//! the same `write_num`/`write_escaped` primitives, so a stream that
+//! emits object keys in sorted order is byte-identical to
+//! `Json::to_string` by construction. Supports the full JSON value model
+//! with the usual escapes; numbers are f64 (manifest integers fit
+//! exactly below 2^53).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::io;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -181,6 +189,260 @@ fn write_escaped(s: &str, out: &mut String) {
         }
     }
     out.push('"');
+}
+
+/// Streaming JSON emitter over any [`io::Write`] sink.
+///
+/// Values are written as they are produced — no intermediate tree. Comma
+/// placement is tracked internally, so callers just nest scopes and emit:
+///
+/// ```
+/// use elana::util::json::JsonWriter;
+/// let mut w = JsonWriter::new(Vec::new());
+/// w.obj(|w| {
+///     w.field_num("n", 1.0)?;
+///     w.field_arr("xs", |w| {
+///         w.str("a")?;
+///         w.num(2.5)
+///     })
+/// })
+/// .unwrap();
+/// assert_eq!(w.finish().unwrap(), b"{\"n\":1,\"xs\":[\"a\",2.5]}".to_vec());
+/// ```
+///
+/// `Json::Obj` is a `BTreeMap`, so the tree serializer emits keys in
+/// sorted byte order; a stream is byte-identical to `Json::to_string`
+/// **iff** its keys are emitted in that same order. Debug builds assert
+/// this per object scope (see [`JsonWriter::key`]), and the report
+/// modules pin it end-to-end with stream-vs-tree property tests.
+pub struct JsonWriter<W: io::Write> {
+    out: W,
+    /// Reused buffer for number/string rendering (`write_num` and
+    /// `write_escaped` target `String`); cleared per token, so emission
+    /// allocates only when a token outgrows every previous one.
+    scratch: String,
+    need_comma: bool,
+    depth: usize,
+    /// Last key emitted in each open scope (`None` for arrays and for
+    /// objects with no key yet) — backs the debug-only sorted-key check.
+    #[cfg(debug_assertions)]
+    scopes: Vec<Option<String>>,
+}
+
+impl<W: io::Write> JsonWriter<W> {
+    pub fn new(out: W) -> Self {
+        JsonWriter {
+            out,
+            scratch: String::new(),
+            need_comma: false,
+            depth: 0,
+            #[cfg(debug_assertions)]
+            scopes: Vec::new(),
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> io::Result<()> {
+        self.out.write_all(s.as_bytes())
+    }
+
+    fn scratch_out(&mut self) -> io::Result<()> {
+        self.out.write_all(self.scratch.as_bytes())
+    }
+
+    /// Comma bookkeeping shared by every value form: separate from the
+    /// previous element unless we are the first in the scope (or follow
+    /// a key), and mark the scope non-empty.
+    fn before_value(&mut self) -> io::Result<()> {
+        if self.need_comma {
+            self.lit(",")?;
+        }
+        self.need_comma = true;
+        Ok(())
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.lit("null")
+    }
+
+    pub fn bool(&mut self, b: bool) -> io::Result<()> {
+        self.before_value()?;
+        self.lit(if b { "true" } else { "false" })
+    }
+
+    pub fn num(&mut self, n: f64) -> io::Result<()> {
+        self.before_value()?;
+        self.scratch.clear();
+        write_num(n, &mut self.scratch);
+        self.scratch_out()
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.before_value()?;
+        self.scratch.clear();
+        write_escaped(s, &mut self.scratch);
+        self.scratch_out()
+    }
+
+    /// Emit an object key. Keys within one object scope must arrive in
+    /// strictly increasing byte order — the order `BTreeMap` iteration
+    /// would produce — or streamed output diverges from the tree
+    /// serializer; debug builds panic on a violation (which also catches
+    /// duplicate keys).
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        #[cfg(debug_assertions)]
+        self.check_key_order(k);
+        if self.need_comma {
+            self.lit(",")?;
+        }
+        self.need_comma = false;
+        self.scratch.clear();
+        write_escaped(k, &mut self.scratch);
+        self.scratch.push(':');
+        self.scratch_out()
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.depth += 1;
+        #[cfg(debug_assertions)]
+        self.scopes.push(None);
+        self.need_comma = false;
+        self.lit("{")
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        debug_assert!(self.depth > 0, "end_obj with no open scope");
+        self.depth -= 1;
+        #[cfg(debug_assertions)]
+        self.scopes.pop();
+        self.need_comma = true;
+        self.lit("}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.depth += 1;
+        #[cfg(debug_assertions)]
+        self.scopes.push(None);
+        self.need_comma = false;
+        self.lit("[")
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        debug_assert!(self.depth > 0, "end_arr with no open scope");
+        self.depth -= 1;
+        #[cfg(debug_assertions)]
+        self.scopes.pop();
+        self.need_comma = true;
+        self.lit("]")
+    }
+
+    /// Scoped object: `{` … body … `}`.
+    pub fn obj<F>(&mut self, f: F) -> io::Result<()>
+    where
+        F: FnOnce(&mut Self) -> io::Result<()>,
+    {
+        self.begin_obj()?;
+        f(self)?;
+        self.end_obj()
+    }
+
+    /// Scoped array: `[` … body … `]`.
+    pub fn arr<F>(&mut self, f: F) -> io::Result<()>
+    where
+        F: FnOnce(&mut Self) -> io::Result<()>,
+    {
+        self.begin_arr()?;
+        f(self)?;
+        self.end_arr()
+    }
+
+    // key+value in one call — the dominant shape in report code.
+
+    pub fn field_null(&mut self, k: &str) -> io::Result<()> {
+        self.key(k)?;
+        self.null()
+    }
+
+    pub fn field_bool(&mut self, k: &str, b: bool) -> io::Result<()> {
+        self.key(k)?;
+        self.bool(b)
+    }
+
+    pub fn field_num(&mut self, k: &str, n: f64) -> io::Result<()> {
+        self.key(k)?;
+        self.num(n)
+    }
+
+    pub fn field_str(&mut self, k: &str, s: &str) -> io::Result<()> {
+        self.key(k)?;
+        self.str(s)
+    }
+
+    pub fn field_obj<F>(&mut self, k: &str, f: F) -> io::Result<()>
+    where
+        F: FnOnce(&mut Self) -> io::Result<()>,
+    {
+        self.key(k)?;
+        self.obj(f)
+    }
+
+    pub fn field_arr<F>(&mut self, k: &str, f: F) -> io::Result<()>
+    where
+        F: FnOnce(&mut Self) -> io::Result<()>,
+    {
+        self.key(k)?;
+        self.arr(f)
+    }
+
+    /// Stream a whole [`Json`] tree as one value — the bridge for report
+    /// fragments that are still tree-built (small, fixed-size corners).
+    /// `BTreeMap` iteration is already sorted, so this matches
+    /// `Json::to_string` byte for byte.
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        match v {
+            Json::Null => self.null(),
+            Json::Bool(b) => self.bool(*b),
+            Json::Num(n) => self.num(*n),
+            Json::Str(s) => self.str(s),
+            Json::Arr(items) => self.arr(|w| {
+                for x in items {
+                    w.value(x)?;
+                }
+                Ok(())
+            }),
+            Json::Obj(m) => self.obj(|w| {
+                for (k, x) in m {
+                    w.key(k)?;
+                    w.value(x)?;
+                }
+                Ok(())
+            }),
+        }
+    }
+
+    /// Flush and return the sink. Debug builds assert every scope was
+    /// closed.
+    pub fn finish(mut self) -> io::Result<W> {
+        debug_assert_eq!(self.depth, 0, "finish with unclosed scopes");
+        self.out.flush()?;
+        Ok(self.out)
+    }
+
+    #[cfg(debug_assertions)]
+    fn check_key_order(&mut self, k: &str) {
+        let Some(slot) = self.scopes.last_mut() else {
+            panic!("key `{k}` outside any object scope");
+        };
+        if let Some(prev) = slot {
+            assert!(
+                prev.as_str() < k,
+                "object keys out of BTreeMap order: `{prev}` then `{k}` \
+                 (streamed output would diverge from Json::to_string)");
+        }
+        *slot = Some(k.to_string());
+    }
 }
 
 struct Parser<'a> {
@@ -473,10 +735,21 @@ mod tests {
             1 => Json::Bool(rng.f64() < 0.5),
             2 => Json::Num((rng.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
             3 => {
+                // bias toward the escape-path characters so the writer
+                // property test exercises every write_escaped arm
                 let n = rng.usize_in(0, 8);
                 Json::Str((0..n).map(|_| {
-                    let c = rng.usize_in(0x20, 0x7e) as u8 as char;
-                    c
+                    match rng.usize_in(0, 11) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => '\r',
+                        4 => '\t',
+                        5 => '\u{1}', // control char -> \u00XX path
+                        6 => 'é',
+                        7 => '😀',
+                        _ => rng.usize_in(0x20, 0x7e) as u8 as char,
+                    }
                 }).collect())
             }
             4 => Json::Arr((0..rng.usize_in(0, 4))
@@ -495,6 +768,121 @@ mod tests {
             let s = v.to_string();
             let back = Json::parse(&s).unwrap();
             assert_eq!(back, v, "roundtrip failed for {s}");
+        });
+    }
+
+    // ---------------- streaming writer ----------------
+
+    #[test]
+    fn prop_writer_matches_tree_serialization() {
+        // the foundation of every report port: streaming a tree through
+        // JsonWriter::value is byte-identical to Json::to_string, over
+        // all escapes, integer-vs-fractional numbers, and deep nesting
+        property(300, |rng| {
+            let v = random_json(rng, 4);
+            let mut w = JsonWriter::new(Vec::new());
+            w.value(&v).unwrap();
+            let bytes = w.finish().unwrap();
+            assert_eq!(String::from_utf8(bytes).unwrap(), v.to_string());
+        });
+    }
+
+    #[test]
+    fn writer_scalar_forms_match_tree() {
+        // both write_num branches (i64 form below 9e15, `{n}` above),
+        // bools, null, and every escape class
+        for v in [
+            Json::num(39.0),
+            Json::num(0.5),
+            Json::num(-1234567.25),
+            Json::num(1e16),
+            Json::num(-9.25e18),
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::Null,
+            Json::str("a\nb\r\t\"q\"\\ é 😀 \u{1}"),
+            Json::str(""),
+        ] {
+            let mut w = JsonWriter::new(Vec::new());
+            w.value(&v).unwrap();
+            assert_eq!(w.finish().unwrap(), v.to_string().into_bytes());
+        }
+    }
+
+    #[test]
+    fn writer_handcrafted_scopes_match_tree() {
+        // drive the scope-guard API by hand (the shape report code uses)
+        // and check it against the tree rendering of the same document
+        let mut w = JsonWriter::new(Vec::new());
+        w.obj(|w| {
+            w.field_num("n", 3.0)?;
+            w.field_arr("xs", |w| {
+                w.num(1.0)?;
+                w.str("two")?;
+                w.obj(|w| w.field_null("z"))?;
+                w.arr(|_| Ok(()))?;
+                w.obj(|_| Ok(()))
+            })?;
+            w.field_str("zz", "end")
+        })
+        .unwrap();
+        let bytes = w.finish().unwrap();
+        let tree = Json::obj(vec![
+            ("n", Json::num(3.0)),
+            ("xs", Json::Arr(vec![
+                Json::num(1.0),
+                Json::str("two"),
+                Json::obj(vec![("z", Json::Null)]),
+                Json::Arr(vec![]),
+                Json::Obj(BTreeMap::new()),
+            ])),
+            ("zz", Json::str("end")),
+        ]);
+        assert_eq!(String::from_utf8(bytes).unwrap(), tree.to_string());
+    }
+
+    /// An `io::Write` sink that accepts `left` bytes, then errors —
+    /// exercises error propagation through scope guards and `write_all`
+    /// retry loops (it also returns short writes on the way down).
+    struct FailAfter {
+        left: usize,
+    }
+
+    impl io::Write for FailAfter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.left == 0 {
+                return Err(io::Error::other("sink full"));
+            }
+            let n = buf.len().min(self.left);
+            self.left -= n;
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writer_propagates_sink_errors() {
+        for budget in 0..16 {
+            let mut w = JsonWriter::new(FailAfter { left: budget });
+            let r = w.obj(|w| {
+                w.field_str("key", "a value long enough to overflow")?;
+                w.field_num("n", 1.0)
+            });
+            assert!(r.is_err(), "budget {budget} should not fit the doc");
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of BTreeMap order")]
+    fn writer_catches_unsorted_keys_in_debug() {
+        let mut w = JsonWriter::new(Vec::new());
+        let _ = w.obj(|w| {
+            w.field_num("b", 1.0)?;
+            w.field_num("a", 2.0)
         });
     }
 }

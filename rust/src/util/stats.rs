@@ -81,32 +81,11 @@ impl Summary {
     /// rendering); a slice of *only* NaNs summarizes to `None`, the
     /// same as an empty one.
     pub fn from_samples(samples: &[f64]) -> Option<Summary> {
-        let mut sorted: Vec<f64> = Vec::with_capacity(samples.len());
-        let mut w = Welford::new();
-        let mut nan_count = 0usize;
+        let mut b = SummaryBuilder::with_capacity(samples.len());
         for &x in samples {
-            if x.is_nan() {
-                nan_count += 1;
-            } else {
-                sorted.push(x);
-                w.push(x);
-            }
+            b.push(x);
         }
-        if sorted.is_empty() {
-            return None;
-        }
-        sorted.sort_by(f64::total_cmp);
-        Some(Summary {
-            count: sorted.len(),
-            mean: w.mean(),
-            std: w.std(),
-            min: sorted[0],
-            p50: percentile_sorted(&sorted, 50.0),
-            p90: percentile_sorted(&sorted, 90.0),
-            p99: percentile_sorted(&sorted, 99.0),
-            max: *sorted.last().unwrap(),
-            nan_count,
-        })
+        b.finish()
     }
 
     /// 95% confidence half-width of the mean (normal approximation).
@@ -121,6 +100,77 @@ impl Summary {
     /// to decide convergence.
     pub fn cv(&self) -> f64 {
         if self.mean == 0.0 { 0.0 } else { self.std / self.mean.abs() }
+    }
+}
+
+/// Streaming construction of a [`Summary`]: push samples one at a time,
+/// then [`SummaryBuilder::finish`]. Equivalent to collecting a `Vec` and
+/// calling [`Summary::from_samples`] (which now delegates here), but
+/// lets a caller build several summaries in one pass over its source
+/// rows without materializing a full series per metric — serve-report
+/// rendering pushes queue-wait/TTFT/TPOT/TTLT from a single loop over
+/// 100k+ requests.
+///
+/// Percentiles need the full sorted sample set, so the builder still
+/// buffers values internally; what it removes is the caller-side
+/// intermediate `Vec<f64>` per metric (and the NaN handling matches
+/// `from_samples` exactly: rejected at push, counted in `nan_count`).
+#[derive(Debug, Clone)]
+pub struct SummaryBuilder {
+    sorted: Vec<f64>,
+    w: Welford,
+    nan_count: usize,
+}
+
+impl SummaryBuilder {
+    pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        SummaryBuilder {
+            sorted: Vec::with_capacity(n),
+            // NOT Welford::default(): the derived Default zeroes
+            // min/max instead of seeding them with +/-infinity
+            w: Welford::new(),
+            nan_count: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan_count += 1;
+        } else {
+            self.sorted.push(x);
+            self.w.push(x);
+        }
+    }
+
+    /// Finalize. `None` when every pushed sample was NaN (or none were
+    /// pushed), mirroring [`Summary::from_samples`] on an empty slice.
+    pub fn finish(mut self) -> Option<Summary> {
+        if self.sorted.is_empty() {
+            return None;
+        }
+        self.sorted.sort_by(f64::total_cmp);
+        let sorted = &self.sorted;
+        Some(Summary {
+            count: sorted.len(),
+            mean: self.w.mean(),
+            std: self.w.std(),
+            min: sorted[0],
+            p50: percentile_sorted(sorted, 50.0),
+            p90: percentile_sorted(sorted, 90.0),
+            p99: percentile_sorted(sorted, 99.0),
+            max: *sorted.last().unwrap(),
+            nan_count: self.nan_count,
+        })
+    }
+}
+
+impl Default for SummaryBuilder {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -213,6 +263,29 @@ mod tests {
             Summary::from_samples(&[1.0, f64::INFINITY, 0.5]).unwrap();
         assert_eq!(clean.nan_count, 0);
         assert_eq!(clean.max, f64::INFINITY);
+    }
+
+    #[test]
+    fn prop_builder_matches_from_samples() {
+        // streaming construction must be indistinguishable from the
+        // collect-then-summarize path, NaNs included
+        property(300, |rng| {
+            let n = rng.usize_in(0, 40);
+            let xs: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.15 {
+                        f64::NAN
+                    } else {
+                        rng.f64_in(-5.0, 5.0)
+                    }
+                })
+                .collect();
+            let mut b = SummaryBuilder::new();
+            for &x in &xs {
+                b.push(x);
+            }
+            assert_eq!(b.finish(), Summary::from_samples(&xs));
+        });
     }
 
     #[test]

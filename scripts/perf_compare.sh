@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Before/after wall-clock comparison on the macro workloads.
+#
+# Runs each workload N times (default 5) under both binaries, reports
+# per-workload medians and the speedup ratio. Use it to validate a PGO
+# build (scripts/pgo.sh) or any perf-sensitive change:
+#
+#   cargo build --release && cp target/release/elana /tmp/elana-before
+#   ...apply change / run scripts/pgo.sh...
+#   scripts/perf_compare.sh /tmp/elana-before target/release/elana
+#
+# Wall-clock medians are coarser than the benchkit gate (bench-check in
+# CI) but measure the full binary — startup, I/O and the streamed
+# report included.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BEFORE="${1:?usage: perf_compare.sh BEFORE_BIN AFTER_BIN [runs]}"
+AFTER="${2:?usage: perf_compare.sh BEFORE_BIN AFTER_BIN [runs]}"
+RUNS="${3:-5}"
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+WORKLOADS=(
+    "serve-100k|serve --model llama-3.1-8b --device a6000 \
+     --requests 100000 --rate 200 --prompts 16..64 --gen 16 \
+     --replicas 4 --no-energy --seed 11 --out OUT"
+    "sweep-grid|sweep --models llama-3.1-8b,qwen-2.5-7b \
+     --devices a6000,thor --batches 1,8 --lens 128+64 \
+     --quant native,w4a16 --threads 1 --out OUT"
+    "plan-grid|plan --models llama-3.1-8b,llama-3.1-70b \
+     --devices a6000,4xa6000 --lens 512+512 --out OUT"
+)
+
+# median wall-clock (seconds, %.3f) of RUNS runs of "$bin $args"
+median_secs() {
+    local bin="$1" args="$2" out="$3"
+    local times=()
+    for _ in $(seq "$RUNS"); do
+        local t0 t1
+        t0=$(date +%s.%N)
+        # shellcheck disable=SC2086  # args is a flag list, split wanted
+        "$bin" ${args//OUT/$out} >/dev/null 2>&1
+        t1=$(date +%s.%N)
+        times+=("$(awk -v a="$t0" -v b="$t1" 'BEGIN{printf "%.3f", b-a}')")
+    done
+    printf '%s\n' "${times[@]}" | sort -n \
+        | awk -v n="$RUNS" 'NR == int((n + 1) / 2)'
+}
+
+printf '%-12s %12s %12s %9s\n' workload before after speedup
+for entry in "${WORKLOADS[@]}"; do
+    name="${entry%%|*}"
+    args="${entry#*|}"
+    b=$(median_secs "$BEFORE" "$args" "$TMP/$name-before.json")
+    a=$(median_secs "$AFTER" "$args" "$TMP/$name-after.json")
+    # the two binaries must still agree byte-for-byte on the artifact
+    cmp -s "$TMP/$name-before.json" "$TMP/$name-after.json" \
+        || { echo "error: $name artifacts differ between binaries" >&2
+             exit 1; }
+    printf '%-12s %11ss %11ss %8sx\n' "$name" "$b" "$a" \
+        "$(awk -v b="$b" -v a="$a" 'BEGIN{printf "%.2f", b/a}')"
+done

@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build for the elana CLI.
+#
+# Three stages:
+#   1. build with -Cprofile-generate, so every branch/call records counts
+#   2. run a representative workload mix (serve / sweep / plan / tune /
+#      latency) to populate the .profraw files
+#   3. merge the profiles with llvm-profdata and rebuild with
+#      -Cprofile-use
+#
+# The final binary lands in the usual target/release/elana. Compare it
+# against a plain release build with scripts/perf_compare.sh.
+#
+# Usage: scripts/pgo.sh [profile-dir]
+#   profile-dir defaults to target/pgo-profiles (wiped on each run).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PROFILE_DIR="${1:-$PWD/target/pgo-profiles}"
+MERGED="$PROFILE_DIR/merged.profdata"
+
+# llvm-profdata: on PATH (llvm installs), else the copy rustc ships in
+# its own sysroot (rustup component llvm-tools).
+find_profdata() {
+    if command -v llvm-profdata >/dev/null 2>&1; then
+        echo "llvm-profdata"
+        return
+    fi
+    local sysroot host tool
+    sysroot="$(rustc --print sysroot)"
+    host="$(rustc -vV | sed -n 's/^host: //p')"
+    tool="$sysroot/lib/rustlib/$host/bin/llvm-profdata"
+    if [[ -x "$tool" ]]; then
+        echo "$tool"
+        return
+    fi
+    echo "error: llvm-profdata not found (install llvm, or run" >&2
+    echo "       \`rustup component add llvm-tools\`)" >&2
+    exit 1
+}
+PROFDATA="$(find_profdata)"
+
+rm -rf "$PROFILE_DIR"
+mkdir -p "$PROFILE_DIR"
+
+echo "== stage 1: instrumented build =="
+RUSTFLAGS="-Cprofile-generate=$PROFILE_DIR" \
+    cargo build --release -p elana
+
+# The workload mix mirrors the macro benches: a trace-scale serve (the
+# event loop + streamed report), a small sweep, a plan, a tune grid and
+# a plain latency row. All simulated — no artifacts needed.
+BIN=target/release/elana
+run_workloads() {
+    echo "== stage 2: profiling workloads =="
+    "$BIN" serve --requests 20000 --rate 200 --prompts 16..64 --gen 16 \
+        --replicas 4 --no-energy --seed 11 \
+        --out "$PROFILE_DIR/serve.json" >/dev/null
+    "$BIN" sweep --models llama-3.1-8b --devices a6000 --batches 1,8 \
+        --lens 128+32,512+64 --no-energy --threads 1 \
+        --out "$PROFILE_DIR/sweep.json" >/dev/null
+    "$BIN" plan --models llama-3.1-8b --devices a6000 --rate 8 \
+        --out "$PROFILE_DIR/plan.json" >/dev/null
+    "$BIN" tune --model llama-3.1-8b --device a6000 --len 512+64 \
+        --out "$PROFILE_DIR/tune.json" >/dev/null
+    "$BIN" latency --model llama-3.1-8b --device a6000 --batch 1 \
+        --len 512+512 --json >/dev/null
+}
+run_workloads
+
+echo "== merging profiles =="
+"$PROFDATA" merge -o "$MERGED" "$PROFILE_DIR"/*.profraw
+
+echo "== stage 3: optimized rebuild =="
+RUSTFLAGS="-Cprofile-use=$MERGED" cargo build --release -p elana
+
+echo "PGO build ready: $BIN"
+echo "compare against a plain build with scripts/perf_compare.sh"

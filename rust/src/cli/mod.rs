@@ -16,12 +16,16 @@
 //! elana serve  [--model M] [--device D] [--requests N] [--rate R]
 //!              [--trace t.json] [--prompts LO..HI] [--gen G]
 //!              [--replicas R] [--workers W] [--seed S]
+//! elana cluster [--spec c.json] [--pools P] [--replicas R]
+//!              [--routing STRATEGY] [--assert-slo]
 //! elana models
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::spec::{Arrivals, ServeSpec};
+use crate::gateway::spec::ClusterOverrides;
+use crate::gateway::Routing;
 use crate::hwsim::{OperatingPoint, ParallelSpec, Workload};
 use crate::models::quant;
 use crate::planner::PlanSpec;
@@ -110,6 +114,20 @@ pub enum Command {
         /// Write the JSON report here.
         out: Option<String>,
     },
+    /// Multi-tenant cluster gateway: SLO-class admission, priority
+    /// routing, and reactive autoscaling over replica pools.
+    Cluster {
+        /// JSON spec file providing the cluster (defaults otherwise).
+        spec_path: Option<String>,
+        /// Explicitly-given flags, layered over the spec file.
+        overrides: ClusterOverrides,
+        /// Print JSON to stdout instead of the markdown report.
+        json: bool,
+        /// Write the JSON report here.
+        out: Option<String>,
+        /// Exit non-zero when any tenant misses its SLO target.
+        assert_slo: bool,
+    },
     /// List registry models.
     Models,
     /// Print usage.
@@ -182,20 +200,23 @@ pub fn parse(args: &[String]) -> Result<Command> {
                           "max-wait", "max-seq-len", "quant", "tp", "pp",
                           "power-cap", "phase-dvfs", "no-energy", "json",
                           "out"]),
+        "cluster" => Some(&["spec", "model", "device", "quant", "pools",
+                            "replicas", "routing", "workers", "seed",
+                            "no-energy", "json", "out", "assert-slo"]),
         "models" | "help" | "-h" | "--help" | "version" | "-V"
         | "--version" => Some(&[]),
         _ => None, // unknown command: reported by the match below
     };
-    const BOOLEAN_FLAGS: [&str; 5] =
+    const BOOLEAN_FLAGS: [&str; 6] =
         ["no-energy", "json", "assert-recommendation", "phase-dvfs",
-         "with-energy"];
+         "with-energy", "assert-slo"];
     if let Some(known) = known {
         // only `suite` takes a positional argument; anywhere else a bare
         // word is a mistake (e.g. a forgotten --spec)
         if cmd != "suite" {
             if let Some(arg) = positional.first() {
-                if cmd == "sweep" {
-                    bail!("unexpected argument `{arg}` for `sweep` \
+                if cmd == "sweep" || cmd == "cluster" {
+                    bail!("unexpected argument `{arg}` for `{cmd}` \
                            (did you mean --spec {arg}?)");
                 }
                 bail!("unexpected argument `{arg}` for `{cmd}` \
@@ -642,6 +663,50 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 out: get("out").map(str::to_string),
             })
         }
+        "cluster" => {
+            let overrides = ClusterOverrides {
+                model: get("model").map(str::to_string),
+                device: get("device").map(str::to_string),
+                quant: get("quant")
+                    .map(|q| -> Result<String> {
+                        quant::parse_token(q)?;
+                        Ok(q.trim().to_ascii_lowercase())
+                    })
+                    .transpose()?,
+                pools: get("pools")
+                    .map(|p| p.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --pools"))?,
+                replicas: get("replicas")
+                    .map(|r| r.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --replicas"))?,
+                routing: get("routing")
+                    .map(|r| {
+                        Routing::parse(r).ok_or_else(|| {
+                            anyhow!("bad --routing `{r}` (least-loaded \
+                                     | round-robin | session-affinity)")
+                        })
+                    })
+                    .transpose()?,
+                workers: get("workers")
+                    .map(|w| w.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --workers"))?,
+                seed: get("seed")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --seed"))?,
+                energy: if has("no-energy") { Some(false) } else { None },
+            };
+            Ok(Command::Cluster {
+                spec_path: get("spec").map(str::to_string),
+                overrides,
+                json: has("json"),
+                out: get("out").map(str::to_string),
+                assert_slo: has("assert-slo"),
+            })
+        }
         "models" => Ok(Command::Models),
         "help" | "-h" | "--help" => Ok(Command::Help),
         "version" | "-V" | "--version" => Ok(Command::Version),
@@ -685,6 +750,11 @@ USAGE:
                 [--max-wait MS] [--max-seq-len L] [--quant SCHEME]
                 [--tp N] [--pp N] [--power-cap W] [--phase-dvfs]
                 [--no-energy] [--out serve.json] [--json]
+  elana cluster [--spec cluster.json] [--model MODEL] [--device RIG]
+                [--quant SCHEME] [--pools P] [--replicas R]
+                [--routing least-loaded|round-robin|session-affinity]
+                [--workers W] [--seed S] [--no-energy]
+                [--out cluster.json] [--json] [--assert-slo]
   elana models
   elana help | version
 
@@ -700,6 +770,12 @@ throttles until the worst-case sustained watts fit (per device); `tune`
 sweeps a clock x cap grid and recommends per-phase operating points
 under TTFT/TPOT SLOs; `serve --phase-dvfs` downclocks decode to the
 memory-bound crossover. Without the flags stock clocks run.
+Cluster: `cluster` layers a multi-tenant gateway over serve's
+virtual-time core — per-tenant SLO classes (interactive TTFT/TPOT,
+batch deadline), token-bucket/budget admission with defer or reject,
+least-loaded / round-robin / session-affinity routing over replica
+pools, and a reactive autoscaler; tenants, admission, and autoscale
+live in the --spec JSON (see examples/cluster_diurnal.json).
 Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
 ";
 
@@ -1070,6 +1146,67 @@ mod tests {
         // boolean flags must not swallow a following bare word
         assert!(parse(&argv("serve --json out.json")).is_err());
         assert!(parse(&argv("serve stray")).is_err());
+    }
+
+    #[test]
+    fn parse_cluster_defaults_and_full_flag_set() {
+        match parse(&argv("cluster")).unwrap() {
+            Command::Cluster { spec_path, overrides, json, out,
+                               assert_slo } => {
+                assert!(spec_path.is_none());
+                assert_eq!(overrides, ClusterOverrides::default());
+                let mut spec = crate::gateway::ClusterSpec::default();
+                overrides.apply(&mut spec);
+                assert_eq!(spec, crate::gateway::ClusterSpec::default());
+                assert!(!json && out.is_none() && !assert_slo);
+            }
+            c => panic!("{c:?}"),
+        }
+        let c = parse(&argv(
+            "cluster --spec c.json --model qwen-2.5-7b --device thor \
+             --quant W4A16 --pools 2 --replicas 3 \
+             --routing session-affinity --workers 4 --seed 9 \
+             --no-energy --out /tmp/c.json --json --assert-slo"))
+            .unwrap();
+        match c {
+            Command::Cluster { spec_path, overrides, json, out,
+                               assert_slo } => {
+                assert_eq!(spec_path.as_deref(), Some("c.json"));
+                assert_eq!(overrides.model.as_deref(),
+                           Some("qwen-2.5-7b"));
+                assert_eq!(overrides.device.as_deref(), Some("thor"));
+                assert_eq!(overrides.quant.as_deref(), Some("w4a16"));
+                assert_eq!(overrides.pools, Some(2));
+                assert_eq!(overrides.replicas, Some(3));
+                assert_eq!(overrides.routing,
+                           Some(Routing::SessionAffinity));
+                assert_eq!(overrides.workers, Some(4));
+                assert_eq!(overrides.seed, Some(9));
+                assert_eq!(overrides.energy, Some(false));
+                assert!(json && assert_slo);
+                assert_eq!(out.as_deref(), Some("/tmp/c.json"));
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn cluster_rejects_malformed_flags() {
+        assert!(parse(&argv("cluster --pools two")).is_err());
+        assert!(parse(&argv("cluster --replicas -1")).is_err());
+        assert!(parse(&argv("cluster --routing fastest")).is_err());
+        assert!(parse(&argv("cluster --quant int3")).is_err());
+        assert!(parse(&argv("cluster --seed minus-one")).is_err());
+        // boolean flags must not swallow a following bare word
+        assert!(parse(&argv("cluster --assert-slo stray")).is_err());
+        // a forgotten --spec gets the hint, like sweep
+        let err = parse(&argv("cluster my-cluster.json"))
+            .unwrap_err().to_string();
+        assert!(err.contains("--spec my-cluster.json"), "{err}");
+        let err = parse(&argv("cluster --frobnicate 3"))
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown flag --frobnicate"), "{err}");
+        assert!(err.contains("cluster"), "{err}");
     }
 
     #[test]

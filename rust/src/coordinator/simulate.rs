@@ -32,7 +32,7 @@ use crate::models;
 use crate::runtime::Manifest;
 use crate::sweep::pool;
 use crate::util::Rng;
-use crate::workload::{streams, RequestTrace};
+use crate::workload::{streams, Request, RequestTrace};
 
 use super::batcher::{plan_batch, BatchPolicy};
 use super::queue::RequestQueue;
@@ -315,37 +315,121 @@ impl PartialOrd for ReplicaFree {
     }
 }
 
-/// Drive the event-heap discrete-event loop against a deterministic
-/// backend. Replica-free events live on a `BinaryHeap` (a min-heap via
-/// `Reverse`), so each iteration jumps straight to the next replica's
-/// free instant instead of rescanning all replicas — O(log replicas)
-/// per batch, and idle virtual time costs nothing. Virtual time means
-/// the loop itself is single-threaded and exactly reproducible; all
-/// heavy lifting (sensor playback) happens in the energy pass.
-pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
-                -> Result<ServeOutcome> {
+/// A scaling decision a [`ReplicaGovernor`] returns after a batch
+/// completes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleAction {
+    /// Bring up one more replica; it starts taking batches at
+    /// `ready_at_s` (decision time plus warm-up cost).
+    Up {
+        ready_at_s: f64,
+    },
+    /// Retire the highest-index live replica. Retirement is lazy: an
+    /// in-flight batch finishes, the replica just never picks up
+    /// another one.
+    Down,
+}
+
+/// Reactive replica-scaling hook, consulted by [`event_loop`] after
+/// every batch completion with the observable load signals: current
+/// virtual time, live replica count, queue depth (requests carried
+/// past this batch), and the worst client TTFT inside the batch.
+pub trait ReplicaGovernor {
+    fn after_batch(&mut self, now_s: f64, live_replicas: usize,
+                   queue_depth: usize, batch_max_ttft_s: f64)
+                   -> Option<ScaleAction>;
+}
+
+/// Optional policy hooks layered on the shared [`event_loop`]. Both
+/// hooks are `if let Some` branches inside the loop: with
+/// [`LoopHooks::none`] not a single float operation differs from the
+/// legacy `elana serve` loop, which is how the gateway's degenerate
+/// single-tenant case stays bitwise-identical to `serve` *by
+/// construction* rather than by test luck.
+pub struct LoopHooks<'a> {
+    /// Reactive autoscaling (the gateway's `autoscale` block).
+    pub governor: Option<&'a mut dyn ReplicaGovernor>,
+    /// Priority class per request id, lower serves first — the
+    /// gateway's interactive-over-batch ordering. Within a class,
+    /// arrival order (then id) is preserved, so equal-priority loads
+    /// keep the legacy batch composition exactly.
+    pub priority: Option<&'a dyn Fn(u64) -> u8>,
+}
+
+impl LoopHooks<'_> {
+    /// No governor, no priorities — the legacy serving loop.
+    pub fn none() -> Self {
+        LoopHooks { governor: None, priority: None }
+    }
+}
+
+/// What one [`event_loop`] run produced.
+#[derive(Debug, Clone)]
+pub struct EventLoopRun {
+    /// Served requests, sorted by id. Latencies are relative to each
+    /// request's `arrival_s` as given in the input slice.
+    pub requests: Vec<ServedRequest>,
+    /// Executed batches, in dequeue order.
+    pub batches: Vec<ServedBatch>,
+    pub makespan_s: f64,
+    pub busy_s: f64,
+    /// `(time_s, live_replicas)` after each scaling decision, starting
+    /// with `(0.0, replicas)`. Entries are in decision order, which can
+    /// deviate from strict time order by at most one batch's service
+    /// time (the heap completes batches slightly out of done-time
+    /// order). Always a single entry without a governor.
+    pub replica_timeline: Vec<(f64, usize)>,
+}
+
+/// Drive the event-heap discrete-event loop over an arrival-sorted
+/// request slice against a deterministic backend. Replica-free events
+/// live on a `BinaryHeap` (a min-heap via `Reverse`), so each
+/// iteration jumps straight to the next replica's free instant instead
+/// of rescanning all replicas — O(log replicas) per batch, and idle
+/// virtual time costs nothing. Virtual time means the loop itself is
+/// single-threaded and exactly reproducible; all heavy lifting (sensor
+/// playback) happens in the energy pass.
+///
+/// This is the shared serving core: `elana serve` calls it with
+/// [`LoopHooks::none`], the cluster gateway with a governor and a
+/// tenant-class priority function. Scaled-up replicas get fresh
+/// indices; scaled-down ones are retired lazily (their pending free
+/// events are discarded on pop), and the loop never retires the last
+/// live replica no matter what the governor asks.
+pub fn event_loop(reqs: &[Request], policy: &BatchPolicy, replicas: usize,
+                  backend: &mut dyn ExecutionBackend, mut hooks: LoopHooks)
+                  -> Result<EventLoopRun> {
     ensure!(backend.deterministic(),
             "the virtual-time serving simulator needs an analytic \
              backend (wall-clock serving handles the rest)");
-    let trace = build_trace(spec, backend.vocab_size())?;
-    let policy = spec.sim_policy();
-    let reqs = trace.requests;
+    ensure!(replicas >= 1, "the event loop needs at least one replica");
     let max_b = policy.max_batch();
 
     let mut next = 0usize; // first trace request not yet admitted
     let mut carry: Vec<ServingRequest> = Vec::new();
-    let mut idle: BinaryHeap<Reverse<ReplicaFree>> = (0..spec.replicas)
+    let mut idle: BinaryHeap<Reverse<ReplicaFree>> = (0..replicas)
         .map(|replica| Reverse(ReplicaFree { at: 0.0, replica }))
         .collect();
+    // retirement is lazy, so a replica index is never reused and a
+    // retired replica's queued free event is skipped when popped
+    let mut retired: Vec<bool> = vec![false; replicas];
+    let mut live = replicas;
+    let mut timeline: Vec<(f64, usize)> = vec![(0.0, replicas)];
     let mut served: Vec<ServedRequest> = Vec::new();
     let mut batches: Vec<ServedBatch> = Vec::new();
     let mut busy_s = 0.0;
     let mut makespan_s = 0.0f64;
 
     while !carry.is_empty() || next < reqs.len() {
-        // earliest-free replica; ties broken by index for determinism
-        let Reverse(ReplicaFree { at: free, replica }) =
-            idle.pop().expect("replicas >= 1");
+        // earliest-free live replica; ties broken by index for
+        // determinism
+        let (free, replica) = loop {
+            let Reverse(ReplicaFree { at, replica }) =
+                idle.pop().expect("every live replica has a free event");
+            if !retired[replica] {
+                break (at, replica);
+            }
+        };
 
         let head_arrival = carry.first().map(|r| r.enqueued_at)
             .unwrap_or_else(|| reqs[next].arrival_s);
@@ -373,8 +457,22 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
             next += 1;
         }
 
+        if let Some(prio) = hooks.priority {
+            // stable by (class, arrival, id): lower classes move to
+            // the head, and the tail — which `plan_batch` sheds first
+            // under overflow — is the batch-class backlog. With equal
+            // classes everywhere this is the identity permutation
+            // (`waiting` is already id-ordered).
+            waiting.sort_by(|a, b| {
+                prio(a.id)
+                    .cmp(&prio(b.id))
+                    .then(a.enqueued_at.total_cmp(&b.enqueued_at))
+                    .then(a.id.cmp(&b.id))
+            });
+        }
+
         let b_index = batches.len();
-        let (plan, rest) = plan_batch(&policy, waiting)
+        let (plan, rest) = plan_batch(policy, waiting)
             .with_context(|| format!("forming serve batch #{b_index}"))?;
         carry = rest;
 
@@ -416,15 +514,65 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
             joules: None,
             interconnect_j: None,
         });
+
+        if let Some(gov) = hooks.governor.as_deref_mut() {
+            let max_ttft = plan.requests.iter()
+                .map(|r| (dequeue_s - r.enqueued_at).max(0.0) + run.ttft_s)
+                .fold(0.0, f64::max);
+            match gov.after_batch(done, live, carry.len(), max_ttft) {
+                Some(ScaleAction::Up { ready_at_s }) => {
+                    let fresh = retired.len();
+                    retired.push(false);
+                    idle.push(Reverse(ReplicaFree {
+                        at: ready_at_s,
+                        replica: fresh,
+                    }));
+                    live += 1;
+                    timeline.push((done, live));
+                }
+                Some(ScaleAction::Down) if live > 1 => {
+                    let victim = (0..retired.len())
+                        .rev()
+                        .find(|&r| !retired[r])
+                        .expect("live > 1 implies a live replica");
+                    retired[victim] = true;
+                    live -= 1;
+                    timeline.push((done, live));
+                }
+                // the last live replica is never retired — the loop
+                // must always be able to drain the trace
+                Some(ScaleAction::Down) | None => {}
+            }
+        }
     }
 
     served.sort_by_key(|r| r.id);
-    Ok(ServeOutcome {
-        spec: spec.clone(),
+    Ok(EventLoopRun {
         requests: served,
         batches,
         makespan_s,
         busy_s,
+        replica_timeline: timeline,
+    })
+}
+
+/// Simulate a serve spec through the shared [`event_loop`] with no
+/// hooks — the legacy single-tenant, fixed-replica path.
+pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
+                -> Result<ServeOutcome> {
+    ensure!(backend.deterministic(),
+            "the virtual-time serving simulator needs an analytic \
+             backend (wall-clock serving handles the rest)");
+    let trace = build_trace(spec, backend.vocab_size())?;
+    let policy = spec.sim_policy();
+    let run = event_loop(&trace.requests, &policy, spec.replicas, backend,
+                         LoopHooks::none())?;
+    Ok(ServeOutcome {
+        spec: spec.clone(),
+        requests: run.requests,
+        batches: run.batches,
+        makespan_s: run.makespan_s,
+        busy_s: run.busy_s,
         wall_clock: false,
         total_joules: None,
         interconnect_joules: None,
@@ -739,6 +887,122 @@ mod tests {
                 simulate_reference(&s, &mut backend_for(&s)).unwrap();
             assert_outcomes_bit_identical(&heap, &reference);
         });
+    }
+
+    /// Scale up whenever anything is queued, immediately ready.
+    struct EagerUp {
+        max: usize,
+    }
+
+    impl ReplicaGovernor for EagerUp {
+        fn after_batch(&mut self, now_s: f64, live: usize, depth: usize,
+                       _ttft: f64) -> Option<ScaleAction> {
+            (depth > 0 && live < self.max)
+                .then_some(ScaleAction::Up { ready_at_s: now_s })
+        }
+    }
+
+    /// Always asks to scale down — the loop must protect the last
+    /// replica itself.
+    struct AlwaysDown;
+
+    impl ReplicaGovernor for AlwaysDown {
+        fn after_batch(&mut self, _now: f64, _live: usize, _depth: usize,
+                       _ttft: f64) -> Option<ScaleAction> {
+            Some(ScaleAction::Down)
+        }
+    }
+
+    #[test]
+    fn governed_loop_scales_up_under_overload_and_records_timeline() {
+        let mut s = quick_spec();
+        s.requests = 60;
+        s.arrivals = Arrivals::Poisson { rate_rps: 200.0 };
+        let trace =
+            build_trace(&s, backend_for(&s).vocab_size()).unwrap();
+        let policy = s.sim_policy();
+        let fixed = event_loop(&trace.requests, &policy, 1,
+                               &mut backend_for(&s), LoopHooks::none())
+            .unwrap();
+        let mut gov = EagerUp { max: 4 };
+        let scaled = event_loop(&trace.requests, &policy, 1,
+                                &mut backend_for(&s),
+                                LoopHooks {
+                                    governor: Some(&mut gov),
+                                    priority: None,
+                                })
+            .unwrap();
+        // every request still served exactly once
+        assert_eq!(scaled.requests.len(), 60);
+        let ids: Vec<u64> =
+            scaled.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..60).collect::<Vec<_>>());
+        // extra capacity must not make the overloaded run finish later
+        assert!(scaled.makespan_s <= fixed.makespan_s,
+                "{} vs {}", scaled.makespan_s, fixed.makespan_s);
+        // the timeline starts at the initial count and grew to the cap
+        assert_eq!(fixed.replica_timeline, vec![(0.0, 1)]);
+        assert_eq!(scaled.replica_timeline[0], (0.0, 1));
+        assert!(scaled.replica_timeline.len() > 1, "no scale-up event");
+        let max_live = scaled.replica_timeline.iter()
+            .map(|&(_, n)| n).max().unwrap();
+        assert!(max_live <= 4 && max_live > 1, "{max_live}");
+        // scaled-up replicas actually executed batches
+        let used: std::collections::BTreeSet<usize> =
+            scaled.batches.iter().map(|b| b.replica).collect();
+        assert!(used.len() > 1, "only {used:?} ever ran");
+    }
+
+    #[test]
+    fn governed_loop_never_retires_the_last_replica() {
+        let mut s = quick_spec();
+        s.requests = 40;
+        s.arrivals = Arrivals::Poisson { rate_rps: 100.0 };
+        let trace =
+            build_trace(&s, backend_for(&s).vocab_size()).unwrap();
+        let policy = s.sim_policy();
+        let mut gov = AlwaysDown;
+        let run = event_loop(&trace.requests, &policy, 3,
+                             &mut backend_for(&s),
+                             LoopHooks {
+                                 governor: Some(&mut gov),
+                                 priority: None,
+                             })
+            .unwrap();
+        assert_eq!(run.requests.len(), 40, "the trace must drain");
+        assert!(run.replica_timeline.iter().all(|&(_, n)| n >= 1),
+                "{:?}", run.replica_timeline);
+        assert_eq!(run.replica_timeline.last().unwrap().1, 1,
+                   "downscaling must have reached the floor");
+    }
+
+    #[test]
+    fn uniform_priority_hook_is_the_identity() {
+        // a priority function that puts every request in one class must
+        // not move a single bit relative to the hook-free loop
+        let s = quick_spec();
+        let trace =
+            build_trace(&s, backend_for(&s).vocab_size()).unwrap();
+        let policy = s.sim_policy();
+        let plain = event_loop(&trace.requests, &policy, 2,
+                               &mut backend_for(&s), LoopHooks::none())
+            .unwrap();
+        let flat = |_id: u64| 0u8;
+        let ranked = event_loop(&trace.requests, &policy, 2,
+                                &mut backend_for(&s),
+                                LoopHooks {
+                                    governor: None,
+                                    priority: Some(&flat),
+                                })
+            .unwrap();
+        assert_eq!(plain.requests.len(), ranked.requests.len());
+        for (x, y) in plain.requests.iter().zip(&ranked.requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.ttlt_s.to_bits(), y.ttlt_s.to_bits());
+            assert_eq!(x.batch, y.batch);
+        }
+        assert_eq!(plain.makespan_s.to_bits(), ranked.makespan_s.to_bits());
     }
 
     #[test]

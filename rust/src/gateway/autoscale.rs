@@ -1,0 +1,137 @@
+//! Reactive per-pool autoscaler.
+//!
+//! The scaler implements [`ReplicaGovernor`] and rides the shared
+//! event loop: after every batch it sees the virtual clock, the live
+//! replica count, the queue depth, and the batch's worst client TTFT,
+//! and may emit one scale action. Scale-ups pay a warm-up delay (the
+//! new replica's first free event lands at `now + warmup_s`);
+//! scale-downs retire a replica lazily. Cooldowns gate both
+//! directions so one burst can't thrash the fleet.
+
+use crate::coordinator::simulate::{ReplicaGovernor, ScaleAction};
+
+use super::spec::AutoscaleSpec;
+
+/// Queue-depth / SLO-violation threshold scaler with cooldowns.
+#[derive(Debug, Clone)]
+pub struct PoolScaler {
+    spec: AutoscaleSpec,
+    last_up_s: f64,
+    last_down_s: f64,
+}
+
+impl PoolScaler {
+    pub fn new(spec: AutoscaleSpec) -> PoolScaler {
+        PoolScaler {
+            spec,
+            last_up_s: f64::NEG_INFINITY,
+            last_down_s: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl ReplicaGovernor for PoolScaler {
+    fn after_batch(&mut self, now_s: f64, live_replicas: usize,
+                   queue_depth: usize, batch_max_ttft_s: f64)
+                   -> Option<ScaleAction> {
+        let s = &self.spec;
+        let slo_pressure = s
+            .up_ttft_ms
+            .is_some_and(|ms| batch_max_ttft_s * 1e3 > ms);
+        let up_wanted = queue_depth >= s.up_queue_depth || slo_pressure;
+        if up_wanted
+            && live_replicas < s.max_replicas
+            && now_s - self.last_up_s >= s.up_cooldown_s
+        {
+            self.last_up_s = now_s;
+            return Some(ScaleAction::Up {
+                ready_at_s: now_s + s.warmup_s,
+            });
+        }
+        if !up_wanted
+            && queue_depth <= s.down_queue_depth
+            && !slo_pressure
+            && live_replicas > s.min_replicas
+            && now_s - self.last_down_s >= s.down_cooldown_s
+            && now_s - self.last_up_s >= s.down_cooldown_s
+        {
+            self.last_down_s = now_s;
+            return Some(ScaleAction::Down);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> AutoscaleSpec {
+        AutoscaleSpec {
+            min_replicas: 1,
+            max_replicas: 3,
+            up_queue_depth: 10,
+            down_queue_depth: 2,
+            up_ttft_ms: Some(1000.0),
+            up_cooldown_s: 5.0,
+            down_cooldown_s: 20.0,
+            warmup_s: 2.0,
+        }
+    }
+
+    #[test]
+    fn scales_up_on_queue_pressure_with_warmup() {
+        let mut s = PoolScaler::new(spec());
+        assert_eq!(s.after_batch(10.0, 1, 50, 0.1),
+                   Some(ScaleAction::Up { ready_at_s: 12.0 }));
+    }
+
+    #[test]
+    fn scales_up_on_slo_pressure_alone() {
+        let mut s = PoolScaler::new(spec());
+        // queue is calm but TTFT blew the 1000 ms trigger
+        assert_eq!(s.after_batch(10.0, 1, 0, 1.5),
+                   Some(ScaleAction::Up { ready_at_s: 12.0 }));
+    }
+
+    #[test]
+    fn respects_max_replicas_and_up_cooldown() {
+        let mut s = PoolScaler::new(spec());
+        assert_eq!(s.after_batch(0.0, 3, 50, 0.1), None, "at max");
+        assert!(s.after_batch(0.0, 1, 50, 0.1).is_some());
+        assert_eq!(s.after_batch(3.0, 2, 50, 0.1), None,
+                   "inside up cooldown");
+        assert!(s.after_batch(5.0, 2, 50, 0.1).is_some(),
+                "cooldown elapsed");
+    }
+
+    #[test]
+    fn respects_min_replicas_and_down_cooldown() {
+        let mut s = PoolScaler::new(spec());
+        assert_eq!(s.after_batch(100.0, 1, 0, 0.1), None, "at min");
+        assert_eq!(s.after_batch(100.0, 3, 0, 0.1),
+                   Some(ScaleAction::Down));
+        assert_eq!(s.after_batch(110.0, 2, 0, 0.1), None,
+                   "inside down cooldown");
+        assert_eq!(s.after_batch(120.0, 2, 0, 0.1),
+                   Some(ScaleAction::Down));
+    }
+
+    #[test]
+    fn recent_scale_up_blocks_an_immediate_down() {
+        let mut s = PoolScaler::new(spec());
+        assert!(s.after_batch(50.0, 1, 50, 0.1).is_some());
+        // the burst drains right away, but the fresh replica must
+        // survive the down cooldown measured from the up decision
+        assert_eq!(s.after_batch(55.0, 2, 0, 0.1), None);
+        assert_eq!(s.after_batch(71.0, 2, 0, 0.1),
+                   Some(ScaleAction::Down));
+    }
+
+    #[test]
+    fn holds_between_thresholds() {
+        let mut s = PoolScaler::new(spec());
+        // depth 5 is above down (2) and below up (10): do nothing
+        assert_eq!(s.after_batch(100.0, 2, 5, 0.1), None);
+    }
+}

@@ -1,0 +1,33 @@
+//! Multi-tenant cluster gateway: SLO-class admission, priority
+//! routing, and reactive autoscaling in front of replica pools — the
+//! `elana cluster` subsystem.
+//!
+//! The pipeline is gateway-then-pools, all in virtual time:
+//!
+//! 1. each tenant's arrival process generates (or replays) a request
+//!    trace on its own domain-separated seed stream ([`spec`]);
+//! 2. per-tenant admission applies token-bucket rate limits and token
+//!    budgets with defer/reject semantics ([`admission`]);
+//! 3. the admitted streams merge and route across replica pools —
+//!    least-loaded, round-robin, or session-affinity ([`route`]);
+//! 4. every pool runs the same event-heap serving core as
+//!    `elana serve`, with interactive-before-batch priorities and an
+//!    optional reactive autoscaler injected as loop hooks
+//!    ([`autoscale`], [`simulate`]);
+//! 5. reports add per-tenant SLO attainment and latency percentiles,
+//!    admission counters, Jain fairness over normalized goodput,
+//!    replica timelines, and fleet J/token ([`report`]).
+//!
+//! A degenerate cluster — one tenant, open admission, one pool, fixed
+//! replicas — reproduces `elana serve` bit for bit on the same trace
+//! and seed; `tests/cluster.rs` pins that equivalence as a property.
+
+pub mod admission;
+pub mod autoscale;
+pub mod report;
+pub mod route;
+pub mod simulate;
+pub mod spec;
+
+pub use simulate::{run, ClusterOutcome, TenantOutcome};
+pub use spec::{ClusterSpec, Routing, SloClass, TenantSpec};

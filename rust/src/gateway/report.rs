@@ -1,0 +1,639 @@
+//! Cluster reports: per-tenant SLO attainment and latency percentiles,
+//! admission counters, Jain fairness, replica timelines, and fleet
+//! J/token — markdown for humans, deterministic JSON for machines.
+//!
+//! Both renderings follow the serve-report discipline: pure functions
+//! of the outcome, no execution details (worker count, host wall
+//! time), so artifacts are byte-identical at any `--workers`. The
+//! streaming writer hand-emits keys in sorted byte order to match the
+//! `Json` tree serializer exactly; `prop_stream_json_matches_tree`
+//! pins the equivalence and the `JsonWriter` debug assertion turns any
+//! ordering slip into a panic.
+
+use std::fmt::Write as _;
+use std::io;
+
+use crate::util::json::{Json, JsonWriter};
+use crate::util::stats::{Summary, SummaryBuilder};
+
+use super::simulate::ClusterOutcome;
+use super::spec::SloClass;
+
+/// Per-tenant latency summaries in array order: gateway wait, queue
+/// wait, TTFT, TPOT, TTLT (all milliseconds), one pass over the
+/// requests.
+fn tenant_latency_summaries(o: &ClusterOutcome)
+                            -> Vec<[(&'static str, Option<Summary>); 5]> {
+    let mut builders: Vec<[SummaryBuilder; 5]> = o
+        .tenants
+        .iter()
+        .map(|_| std::array::from_fn(|_| SummaryBuilder::with_capacity(0)))
+        .collect();
+    for r in &o.requests {
+        let b = &mut builders[r.tenant];
+        b[0].push(r.gateway_wait_s * 1e3);
+        b[1].push(r.queue_wait_s * 1e3);
+        b[2].push(r.ttft_s * 1e3);
+        b[3].push(r.tpot_s * 1e3);
+        b[4].push(r.ttlt_s * 1e3);
+    }
+    builders
+        .into_iter()
+        .map(|[b0, b1, b2, b3, b4]| {
+            [
+                ("gateway wait ms", b0.finish()),
+                ("queue wait ms", b1.finish()),
+                ("TTFT ms", b2.finish()),
+                ("TPOT ms", b3.finish()),
+                ("TTLT ms", b4.finish()),
+            ]
+        })
+        .collect()
+}
+
+fn class_line(class: &SloClass) -> String {
+    match class {
+        SloClass::Interactive { ttft_ms, tpot_ms } => {
+            format!("interactive (TTFT <= {ttft_ms} ms, TPOT <= \
+                     {tpot_ms} ms)")
+        }
+        SloClass::Batch { deadline_s } => {
+            format!("batch (TTLT <= {deadline_s} s)")
+        }
+    }
+}
+
+/// Markdown cluster report.
+pub fn render_markdown(o: &ClusterOutcome) -> String {
+    let s = &o.spec;
+    let mut out = String::new();
+    let _ = writeln!(out, "# elana cluster — {} — {} on {}", s.name,
+                     s.model, s.device);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "{} tenant(s) behind a {} gateway: {} pool(s) x {} replica(s)\
+         {} (seed {})",
+        s.tenants.len(), s.routing.label(), s.pools, s.replicas,
+        match &s.autoscale {
+            Some(a) => format!(", autoscale {}..{}", a.min_replicas,
+                               a.max_replicas),
+            None => String::new(),
+        },
+        s.seed);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "| tenant | class | offered | served | rej | def | TTFT p50 | \
+         TTFT p99 | TPOT p50 | TTLT p99 | SLO | target |");
+    let _ = writeln!(
+        out,
+        "|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|");
+    let sums = tenant_latency_summaries(o);
+    for (t, lat) in o.tenants.iter().zip(&sums) {
+        let pick = |i: usize, f: &dyn Fn(&Summary) -> f64| {
+            lat[i].1.as_ref().map(f).unwrap_or(0.0)
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {:.1} | {:.1} | {:.2} | \
+             {:.1} | {:.1}% | {:.0}% |",
+            t.name, t.class.label(), t.offered, t.served, t.rejected,
+            t.deferred, pick(2, &|s| s.p50), pick(2, &|s| s.p99),
+            pick(3, &|s| s.p50), pick(4, &|s| s.p99),
+            t.attainment() * 100.0, t.slo_target * 100.0);
+    }
+    let _ = writeln!(out);
+    for t in &o.tenants {
+        let verdict = if t.slo_met() { "met" } else { "MISSED" };
+        let _ = writeln!(
+            out,
+            "- {}: {} — SLO {verdict} at {:.1}% (normalized goodput \
+             {:.3})",
+            t.name, class_line(&t.class), t.attainment() * 100.0,
+            t.goodput_norm);
+    }
+    let _ = writeln!(out);
+    for (pi, p) in o.pools.iter().enumerate() {
+        let lo = p.replica_timeline.iter().map(|&(_, n)| n).min()
+            .unwrap_or(s.replicas);
+        let hi = p.replica_timeline.iter().map(|&(_, n)| n).max()
+            .unwrap_or(s.replicas);
+        let _ = writeln!(
+            out,
+            "pool {pi}: {} batches, replicas {lo}..{hi} ({} scale \
+             event(s)), busy {:.2} s",
+            p.batches.len(), p.replica_timeline.len() - 1, p.busy_s);
+    }
+    let served: usize = o.tenants.iter().map(|t| t.served).sum();
+    let _ = writeln!(
+        out,
+        "served {served} of {} offered requests in {:.2} s (virtual); \
+         Jain fairness {:.4}",
+        o.tenants.iter().map(|t| t.offered).sum::<usize>(),
+        o.makespan_s, o.jain_fairness);
+    if let (Some(total), Some(jt)) =
+        (o.total_joules, o.joules_per_token())
+    {
+        let _ = writeln!(
+            out,
+            "fleet energy: {:.1} J total, {:.3} J/token", total, jt);
+    }
+    out
+}
+
+fn timeline_json(timeline: &[(f64, usize)]) -> Json {
+    Json::Arr(
+        timeline
+            .iter()
+            .map(|&(t_s, live)| {
+                Json::obj(vec![
+                    ("live", Json::num(live as f64)),
+                    ("t_s", Json::num(t_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Deterministic JSON tree (BTreeMap objects serialize key-ordered).
+/// Seeds are emitted as strings so 64-bit values survive the f64
+/// number model intact.
+pub fn to_json(o: &ClusterOutcome) -> Json {
+    let s = &o.spec;
+    let sums = tenant_latency_summaries(o);
+    let tenants: Vec<Json> = o
+        .tenants
+        .iter()
+        .zip(&sums)
+        .map(|(t, lat)| {
+            let mut summaries = Vec::new();
+            for (name, sum) in lat {
+                if let Some(sum) = sum {
+                    summaries.push((*name, Json::obj(vec![
+                        ("mean", Json::num(sum.mean)),
+                        ("p50", Json::num(sum.p50)),
+                        ("p90", Json::num(sum.p90)),
+                        ("p99", Json::num(sum.p99)),
+                        ("max", Json::num(sum.max)),
+                    ])));
+                }
+            }
+            let mut fields = vec![
+                ("admitted_tokens",
+                 Json::num(t.admitted_tokens as f64)),
+                ("attained", Json::num(t.attained as f64)),
+                ("attainment", Json::num(t.attainment())),
+                ("class", Json::str(t.class.label())),
+                ("deferred", Json::num(t.deferred as f64)),
+                ("goodput_norm", Json::num(t.goodput_norm)),
+                ("latency_ms", Json::obj(summaries)),
+                ("name", Json::str(t.name.clone())),
+                ("offered", Json::num(t.offered as f64)),
+                ("offered_tokens", Json::num(t.offered_tokens as f64)),
+                ("rejected", Json::num(t.rejected as f64)),
+                ("served", Json::num(t.served as f64)),
+                ("slo_met", Json::Bool(t.slo_met())),
+                ("slo_target", Json::num(t.slo_target)),
+            ];
+            match &t.class {
+                SloClass::Interactive { ttft_ms, tpot_ms } => {
+                    fields.push(("tpot_ms", Json::num(*tpot_ms)));
+                    fields.push(("ttft_ms", Json::num(*ttft_ms)));
+                }
+                SloClass::Batch { deadline_s } => {
+                    fields.push(("deadline_s", Json::num(*deadline_s)));
+                }
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let pools: Vec<Json> = o
+        .pools
+        .iter()
+        .map(|p| {
+            let batches: Vec<Json> = p
+                .batches
+                .iter()
+                .map(|b| {
+                    let mut fields = vec![
+                        ("index", Json::num(b.index as f64)),
+                        ("replica", Json::num(b.replica as f64)),
+                        ("dequeue_s", Json::num(b.dequeue_s)),
+                        ("exec_batch", Json::num(b.exec_batch as f64)),
+                        ("padded_prompt_len",
+                         Json::num(b.padded_prompt_len as f64)),
+                        ("gen_len", Json::num(b.gen_len as f64)),
+                        ("real_rows", Json::num(b.real_rows as f64)),
+                        ("padding_waste", Json::num(b.padding_waste)),
+                        ("service_s", Json::num(b.service_s)),
+                    ];
+                    if let Some((jp, jt, jr)) = b.joules {
+                        fields.push(("j_prompt", Json::num(jp)));
+                        fields.push(("j_token", Json::num(jt)));
+                        fields.push(("j_request", Json::num(jr)));
+                    }
+                    Json::obj(fields)
+                })
+                .collect();
+            Json::obj(vec![
+                ("batches", Json::Arr(batches)),
+                ("busy_s", Json::num(p.busy_s)),
+                ("makespan_s", Json::num(p.makespan_s)),
+                ("n_batches", Json::num(p.batches.len() as f64)),
+                ("replica_timeline", timeline_json(&p.replica_timeline)),
+            ])
+        })
+        .collect();
+    let requests: Vec<Json> = o
+        .requests
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", Json::num(r.id as f64)),
+                ("tenant", Json::str(o.tenants[r.tenant].name.clone())),
+                ("pool", Json::num(r.pool as f64)),
+                ("arrival_s", Json::num(r.arrival_s)),
+                ("admit_s", Json::num(r.admit_s)),
+                ("gateway_wait_s", Json::num(r.gateway_wait_s)),
+                ("queue_wait_s", Json::num(r.queue_wait_s)),
+                ("ttft_s", Json::num(r.ttft_s)),
+                ("tpot_s", Json::num(r.tpot_s)),
+                ("ttlt_s", Json::num(r.ttlt_s)),
+                ("batch", Json::num(r.batch as f64)),
+                ("prompt_len", Json::num(r.prompt_len as f64)),
+                ("gen_len", Json::num(r.gen_len as f64)),
+                ("attained", Json::Bool(r.attained)),
+            ])
+        })
+        .collect();
+    let mut root = vec![
+        ("cluster", Json::str(s.name.clone())),
+        ("model", Json::str(s.model.clone())),
+        ("device", Json::str(s.device.clone())),
+        ("quant", Json::str(s.pool_serve_spec().quant_canonical())),
+        ("routing", Json::str(s.routing.label())),
+        ("n_pools", Json::num(s.pools as f64)),
+        ("replicas", Json::num(s.replicas as f64)),
+        ("n_tenants", Json::num(o.tenants.len() as f64)),
+        ("n_requests", Json::num(o.requests.len() as f64)),
+        ("seed", Json::str(s.seed.to_string())),
+        ("makespan_s", Json::num(o.makespan_s)),
+        ("busy_s", Json::num(o.busy_s)),
+        ("jain_fairness", Json::num(o.jain_fairness)),
+        ("tenants", Json::Arr(tenants)),
+        ("pools", Json::Arr(pools)),
+        ("requests", Json::Arr(requests)),
+    ];
+    if let Some(a) = &s.autoscale {
+        let mut fields = vec![
+            ("down_cooldown_s", Json::num(a.down_cooldown_s)),
+            ("down_queue_depth", Json::num(a.down_queue_depth as f64)),
+            ("max_replicas", Json::num(a.max_replicas as f64)),
+            ("min_replicas", Json::num(a.min_replicas as f64)),
+            ("up_cooldown_s", Json::num(a.up_cooldown_s)),
+            ("up_queue_depth", Json::num(a.up_queue_depth as f64)),
+            ("warmup_s", Json::num(a.warmup_s)),
+        ];
+        if let Some(ms) = a.up_ttft_ms {
+            fields.push(("up_ttft_ms", Json::num(ms)));
+        }
+        root.push(("autoscale", Json::obj(fields)));
+    }
+    if let Some(total) = o.total_joules {
+        root.push(("total_joules", Json::num(total)));
+        if let Some(jt) = o.joules_per_token() {
+            root.push(("j_per_token", Json::num(jt)));
+        }
+    }
+    Json::obj(root)
+}
+
+/// Streaming cluster report: byte-identical to
+/// `to_json(o).to_string()` but written straight into the sink. Every
+/// object below hand-emits its keys in sorted byte order.
+pub fn write_json<W: io::Write>(o: &ClusterOutcome, out: W)
+                                -> io::Result<()> {
+    let s = &o.spec;
+    let sums = tenant_latency_summaries(o);
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        if let Some(a) = &s.autoscale {
+            w.field_obj("autoscale", |w| {
+                w.field_num("down_cooldown_s", a.down_cooldown_s)?;
+                w.field_num("down_queue_depth",
+                            a.down_queue_depth as f64)?;
+                w.field_num("max_replicas", a.max_replicas as f64)?;
+                w.field_num("min_replicas", a.min_replicas as f64)?;
+                w.field_num("up_cooldown_s", a.up_cooldown_s)?;
+                w.field_num("up_queue_depth", a.up_queue_depth as f64)?;
+                if let Some(ms) = a.up_ttft_ms {
+                    w.field_num("up_ttft_ms", ms)?;
+                }
+                w.field_num("warmup_s", a.warmup_s)
+            })?;
+        }
+        w.field_num("busy_s", o.busy_s)?;
+        w.field_str("cluster", &s.name)?;
+        w.field_str("device", &s.device)?;
+        if let Some(jt) = o.joules_per_token() {
+            w.field_num("j_per_token", jt)?;
+        }
+        w.field_num("jain_fairness", o.jain_fairness)?;
+        w.field_num("makespan_s", o.makespan_s)?;
+        w.field_str("model", &s.model)?;
+        w.field_num("n_pools", s.pools as f64)?;
+        w.field_num("n_requests", o.requests.len() as f64)?;
+        w.field_num("n_tenants", o.tenants.len() as f64)?;
+        w.field_arr("pools", |w| {
+            for p in &o.pools {
+                w.obj(|w| {
+                    w.field_arr("batches", |w| {
+                        for b in &p.batches {
+                            w.obj(|w| {
+                                w.field_num("dequeue_s", b.dequeue_s)?;
+                                w.field_num("exec_batch",
+                                            b.exec_batch as f64)?;
+                                w.field_num("gen_len",
+                                            b.gen_len as f64)?;
+                                w.field_num("index", b.index as f64)?;
+                                if let Some((jp, jt, jr)) = b.joules {
+                                    w.field_num("j_prompt", jp)?;
+                                    w.field_num("j_request", jr)?;
+                                    w.field_num("j_token", jt)?;
+                                }
+                                w.field_num("padded_prompt_len",
+                                            b.padded_prompt_len as f64)?;
+                                w.field_num("padding_waste",
+                                            b.padding_waste)?;
+                                w.field_num("real_rows",
+                                            b.real_rows as f64)?;
+                                w.field_num("replica",
+                                            b.replica as f64)?;
+                                w.field_num("service_s", b.service_s)
+                            })?;
+                        }
+                        Ok(())
+                    })?;
+                    w.field_num("busy_s", p.busy_s)?;
+                    w.field_num("makespan_s", p.makespan_s)?;
+                    w.field_num("n_batches", p.batches.len() as f64)?;
+                    w.field_arr("replica_timeline", |w| {
+                        for &(t_s, live) in &p.replica_timeline {
+                            w.obj(|w| {
+                                w.field_num("live", live as f64)?;
+                                w.field_num("t_s", t_s)
+                            })?;
+                        }
+                        Ok(())
+                    })
+                })?;
+            }
+            Ok(())
+        })?;
+        w.field_str("quant", &s.pool_serve_spec().quant_canonical())?;
+        w.field_num("replicas", s.replicas as f64)?;
+        w.field_arr("requests", |w| {
+            for r in &o.requests {
+                w.obj(|w| {
+                    w.field_num("admit_s", r.admit_s)?;
+                    w.field_num("arrival_s", r.arrival_s)?;
+                    w.field_bool("attained", r.attained)?;
+                    w.field_num("batch", r.batch as f64)?;
+                    w.field_num("gateway_wait_s", r.gateway_wait_s)?;
+                    w.field_num("gen_len", r.gen_len as f64)?;
+                    w.field_num("id", r.id as f64)?;
+                    w.field_num("pool", r.pool as f64)?;
+                    w.field_num("prompt_len", r.prompt_len as f64)?;
+                    w.field_num("queue_wait_s", r.queue_wait_s)?;
+                    w.field_str("tenant", &o.tenants[r.tenant].name)?;
+                    w.field_num("tpot_s", r.tpot_s)?;
+                    w.field_num("ttft_s", r.ttft_s)?;
+                    w.field_num("ttlt_s", r.ttlt_s)
+                })?;
+            }
+            Ok(())
+        })?;
+        w.field_str("routing", s.routing.label())?;
+        w.field_str("seed", &s.seed.to_string())?;
+        w.field_arr("tenants", |w| {
+            for (t, lat) in o.tenants.iter().zip(&sums) {
+                w.obj(|w| {
+                    w.field_num("admitted_tokens",
+                                t.admitted_tokens as f64)?;
+                    w.field_num("attained", t.attained as f64)?;
+                    w.field_num("attainment", t.attainment())?;
+                    w.field_str("class", t.class.label())?;
+                    if let SloClass::Batch { deadline_s } = t.class {
+                        w.field_num("deadline_s", deadline_s)?;
+                    }
+                    w.field_num("deferred", t.deferred as f64)?;
+                    w.field_num("goodput_norm", t.goodput_norm)?;
+                    w.field_obj("latency_ms", |w| {
+                        // sorted key order, not array order: uppercase
+                        // metric names sort before the lowercase waits
+                        for idx in [3usize, 2, 4, 0, 1] {
+                            let (name, sum) = &lat[idx];
+                            if let Some(sum) = sum {
+                                w.field_obj(name, |w| {
+                                    w.field_num("max", sum.max)?;
+                                    w.field_num("mean", sum.mean)?;
+                                    w.field_num("p50", sum.p50)?;
+                                    w.field_num("p90", sum.p90)?;
+                                    w.field_num("p99", sum.p99)
+                                })?;
+                            }
+                        }
+                        Ok(())
+                    })?;
+                    w.field_str("name", &t.name)?;
+                    w.field_num("offered", t.offered as f64)?;
+                    w.field_num("offered_tokens",
+                                t.offered_tokens as f64)?;
+                    w.field_num("rejected", t.rejected as f64)?;
+                    w.field_num("served", t.served as f64)?;
+                    w.field_bool("slo_met", t.slo_met())?;
+                    w.field_num("slo_target", t.slo_target)?;
+                    if let SloClass::Interactive { ttft_ms, tpot_ms } =
+                        t.class
+                    {
+                        w.field_num("tpot_ms", tpot_ms)?;
+                        w.field_num("ttft_ms", ttft_ms)?;
+                    }
+                    Ok(())
+                })?;
+            }
+            Ok(())
+        })?;
+        if let Some(total) = o.total_joules {
+            w.field_num("total_joules", total)?;
+        }
+        Ok(())
+    })?;
+    w.finish().map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::simulate;
+    use crate::gateway::spec::{AdmissionSpec, AutoscaleSpec,
+                               ClusterSpec, OnLimit, RateLimit, Routing,
+                               SloClass, TenantArrivals};
+
+    fn quick_outcome(energy: bool) -> ClusterOutcome {
+        let mut s = ClusterSpec {
+            energy,
+            seed: 11,
+            ..ClusterSpec::default()
+        };
+        for t in &mut s.tenants {
+            t.requests = 12;
+            t.prompt_lo = 16;
+            t.prompt_hi = 64;
+            t.gen_len = 8;
+        }
+        simulate::run(&s).unwrap()
+    }
+
+    #[test]
+    fn markdown_lists_tenants_and_fleet() {
+        let text = render_markdown(&quick_outcome(true));
+        assert!(text.contains("# elana cluster — cluster — \
+                               llama-3.1-8b on a6000"), "{text}");
+        assert!(text.contains("| chat | interactive |"), "{text}");
+        assert!(text.contains("| batch-eval | batch |"), "{text}");
+        assert!(text.contains("Jain fairness"), "{text}");
+        assert!(text.contains("pool 0:"), "{text}");
+        assert!(text.contains("J/token"), "{text}");
+        assert!(!render_markdown(&quick_outcome(false))
+                .contains("J/token"));
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let o = quick_outcome(true);
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        assert_eq!(v.get("n_tenants").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("n_requests").unwrap().as_usize(), Some(24));
+        assert_eq!(v.get("seed").unwrap().as_str(), Some("11"));
+        assert!(v.get("jain_fairness").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("j_per_token").unwrap().as_f64().unwrap() > 0.0);
+        let tenants = v.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+        for t in tenants {
+            assert!(t.get("attainment").unwrap().as_f64().is_some());
+            assert!(t.get("rejected").unwrap().as_usize().is_some());
+            assert!(t.get("deferred").unwrap().as_usize().is_some());
+            assert!(t.get("latency_ms").unwrap().get("TTFT ms")
+                    .is_some());
+            assert!(t.get("slo_met").unwrap().as_bool().is_some());
+        }
+        assert!(tenants[0].get("ttft_ms").is_some());
+        assert!(tenants[1].get("deadline_s").is_some());
+        let pools = v.get("pools").unwrap().as_arr().unwrap();
+        assert_eq!(pools.len(), 1);
+        let tl = pools[0].get("replica_timeline").unwrap().as_arr()
+            .unwrap();
+        assert!(!tl.is_empty());
+        assert_eq!(tl[0].get("live").unwrap().as_usize(), Some(2));
+        // execution details must not leak into the artifact
+        assert!(v.get("workers").is_none());
+    }
+
+    fn assert_stream_matches_tree(o: &ClusterOutcome) {
+        let mut buf = Vec::new();
+        write_json(o, &mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(),
+                   to_json(o).to_string());
+    }
+
+    #[test]
+    fn prop_stream_json_matches_tree() {
+        // randomized clusters across the tenant-count / arrivals /
+        // admission / autoscale / energy axes
+        crate::testkit::property(8, |rng| {
+            let n_tenants = rng.usize_in(1, 3);
+            let mut s = ClusterSpec {
+                pools: rng.usize_in(1, 2),
+                energy: rng.f64() < 0.5,
+                seed: rng.next_u64(),
+                ..ClusterSpec::default()
+            };
+            s.tenants.clear();
+            for i in 0..n_tenants {
+                let mut t = ClusterSpec::default().tenants[0].clone();
+                t.name = format!("tenant-{i}");
+                t.requests = rng.usize_in(4, 20);
+                t.prompt_lo = 16;
+                t.prompt_hi = 64;
+                t.gen_len = rng.usize_in(4, 12);
+                t.class = if rng.f64() < 0.5 {
+                    SloClass::Interactive {
+                        ttft_ms: rng.f64_in(100.0, 5000.0),
+                        tpot_ms: rng.f64_in(10.0, 200.0),
+                    }
+                } else {
+                    SloClass::Batch {
+                        deadline_s: rng.f64_in(1.0, 100.0),
+                    }
+                };
+                t.arrivals = match rng.usize_in(0, 2) {
+                    0 => TenantArrivals::Poisson {
+                        rate_rps: rng.f64_in(2.0, 50.0),
+                    },
+                    1 => TenantArrivals::Diurnal {
+                        base_rps: 1.0,
+                        peak_rps: rng.f64_in(5.0, 40.0),
+                        period_s: 20.0,
+                    },
+                    _ => TenantArrivals::Bursty {
+                        base_rps: 0.5,
+                        burst_rps: rng.f64_in(10.0, 60.0),
+                        period_s: 10.0,
+                        duty: 0.3,
+                    },
+                };
+                t.admission = if rng.f64() < 0.5 {
+                    AdmissionSpec {
+                        rate_limit: Some(RateLimit {
+                            rate_rps: rng.f64_in(2.0, 20.0),
+                            burst: rng.usize_in(1, 10),
+                            on_limit: if rng.f64() < 0.5 {
+                                OnLimit::Defer
+                            } else {
+                                OnLimit::Reject
+                            },
+                        }),
+                        token_budget: None,
+                    }
+                } else {
+                    AdmissionSpec::default()
+                };
+                s.tenants.push(t);
+            }
+            if rng.f64() < 0.5 {
+                s.replicas = 1;
+                s.autoscale = Some(AutoscaleSpec {
+                    min_replicas: 1,
+                    max_replicas: 3,
+                    up_queue_depth: 8,
+                    down_queue_depth: 1,
+                    up_ttft_ms: if rng.f64() < 0.5 {
+                        Some(2000.0)
+                    } else {
+                        None
+                    },
+                    up_cooldown_s: 1.0,
+                    down_cooldown_s: 5.0,
+                    warmup_s: 0.5,
+                });
+            }
+            if rng.f64() < 0.5 {
+                s.routing = Routing::RoundRobin;
+            }
+            let o = simulate::run(&s).unwrap();
+            assert_stream_matches_tree(&o);
+        });
+    }
+}

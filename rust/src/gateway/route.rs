@@ -1,0 +1,130 @@
+//! Gateway routing: spread admitted requests across replica pools.
+//!
+//! Routing happens once, in global admission order, before any pool
+//! simulates — the gateway sees token masses (prompt + gen length),
+//! not latencies, so every strategy is deterministic and independent
+//! of worker count.
+
+use crate::workload::Request;
+
+use super::spec::Routing;
+
+/// FNV-1a — tiny, stable, good enough to spread tenant names across
+/// pools. Not a general-purpose hash; keep it private to routing.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stateful router over a fixed pool count.
+#[derive(Debug)]
+pub struct Router {
+    strategy: Routing,
+    pools: usize,
+    next: usize,
+    /// Cumulative routed token mass per pool (least-loaded state).
+    load: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(strategy: Routing, pools: usize) -> Router {
+        assert!(pools >= 1, "the router needs at least one pool");
+        Router {
+            strategy,
+            pools,
+            next: 0,
+            load: vec![0; pools],
+        }
+    }
+
+    /// Pick a pool for a request from `tenant` and account for its
+    /// token mass.
+    pub fn route(&mut self, tenant: &str, req: &Request) -> usize {
+        let pool = match self.strategy {
+            Routing::RoundRobin => {
+                let p = self.next;
+                self.next = (self.next + 1) % self.pools;
+                p
+            }
+            Routing::LeastLoaded => {
+                let mut best = 0;
+                for p in 1..self.pools {
+                    if self.load[p] < self.load[best] {
+                        best = p;
+                    }
+                }
+                best
+            }
+            Routing::SessionAffinity => {
+                (fnv1a(tenant.as_bytes()) % self.pools as u64) as usize
+            }
+        };
+        self.load[pool] += (req.prompt.len() + req.gen_len) as u64;
+        pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt_len: usize, gen_len: usize) -> Request {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt: vec![7; prompt_len],
+            gen_len,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut r = Router::new(Routing::RoundRobin, 3);
+        let picks: Vec<usize> =
+            (0..7).map(|_| r.route("t", &req(8, 8))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_loaded_balances_token_mass_with_low_index_ties() {
+        let mut r = Router::new(Routing::LeastLoaded, 2);
+        assert_eq!(r.route("t", &req(100, 0)), 0, "tie breaks low");
+        assert_eq!(r.route("t", &req(10, 0)), 1, "pool 1 is lighter");
+        assert_eq!(r.route("t", &req(10, 0)), 1, "still lighter");
+        assert_eq!(r.route("t", &req(10, 0)), 1, "20 < 100");
+        // pool 1 now at 30; a heavy request tips the balance
+        assert_eq!(r.route("t", &req(200, 0)), 1);
+        assert_eq!(r.route("t", &req(10, 0)), 0);
+    }
+
+    #[test]
+    fn session_affinity_pins_each_tenant_to_one_pool() {
+        let mut r = Router::new(Routing::SessionAffinity, 4);
+        let a: Vec<usize> =
+            (0..5).map(|_| r.route("alpha", &req(8, 8))).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "{a:?}");
+        let b = r.route("beta", &req(8, 8));
+        assert_eq!(b, (fnv1a(b"beta") % 4) as usize);
+    }
+
+    #[test]
+    fn single_pool_routes_everything_to_zero() {
+        for strategy in [Routing::LeastLoaded, Routing::RoundRobin,
+                         Routing::SessionAffinity] {
+            let mut r = Router::new(strategy, 1);
+            assert_eq!(r.route("any", &req(16, 4)), 0);
+            assert_eq!(r.route("other", &req(16, 4)), 0);
+        }
+    }
+
+    #[test]
+    fn fnv1a_reference_vector() {
+        // standard FNV-1a 64-bit test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,542 @@
+//! The `elana cluster` virtual-time simulator: admission → routing →
+//! per-pool event loops → fleet metrics.
+//!
+//! The gateway layers on top of the serving core
+//! ([`crate::coordinator::simulate::event_loop`]) rather than beside
+//! it: each replica pool runs the *same* loop `elana serve` runs, with
+//! the gateway's policies injected through [`LoopHooks`] — a
+//! tenant-class priority function (interactive before batch) and an
+//! optional reactive autoscaler. A degenerate cluster (one tenant,
+//! open admission, one pool, fixed replicas) therefore reproduces
+//! `elana serve` bit for bit; `tests/cluster.rs` pins that as a
+//! property over request/rate/replica grids.
+//!
+//! Determinism follows the repo-wide discipline: tenant traces draw
+//! from `mix(mix(seed, CLUSTER_TENANT), tenant_index)` streams, the
+//! energy pass re-keys batch `i` to `mix(mix(seed, CLUSTER_ENERGY), i)`
+//! over the fleet-wide `(pool, batch)` flattening, and `--workers`
+//! only ever changes wall-clock time.
+
+use anyhow::{Context, Result};
+
+use crate::backend::{ExecutionBackend, SimBackend};
+use crate::coordinator::simulate::{event_loop, LoopHooks,
+                                   ReplicaGovernor, ServedBatch};
+use crate::engine::TokenBatch;
+use crate::sweep::pool;
+use crate::util::{streams, Rng};
+use crate::workload::Request;
+
+use super::admission;
+use super::autoscale::PoolScaler;
+use super::route::Router;
+use super::spec::{ClusterSpec, SloClass};
+
+/// One served request as the client saw it: every latency includes the
+/// time spent held at the gateway (admission deferral).
+#[derive(Debug, Clone)]
+pub struct ClusterRequest {
+    /// Fleet-global id in admission order.
+    pub id: u64,
+    /// Index into `ClusterOutcome::tenants`.
+    pub tenant: usize,
+    pub pool: usize,
+    /// Arrival at the gateway, seconds from run start.
+    pub arrival_s: f64,
+    /// Instant admission released it to routing (`>= arrival_s`).
+    pub admit_s: f64,
+    /// Time held by admission (`admit_s - arrival_s`).
+    pub gateway_wait_s: f64,
+    /// Batch-formation wait inside the pool.
+    pub queue_wait_s: f64,
+    /// Arrival → first token, client-side.
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    /// Arrival → last token, client-side.
+    pub ttlt_s: f64,
+    /// Pool-local batch index.
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Whether the request met its tenant's SLO.
+    pub attained: bool,
+}
+
+/// One replica pool's execution record.
+#[derive(Debug, Clone)]
+pub struct PoolOutcome {
+    /// Executed batches, in dequeue order (pool-local indices).
+    pub batches: Vec<ServedBatch>,
+    /// `(time_s, live_replicas)` scaling decisions, starting at
+    /// `(0.0, replicas)`.
+    pub replica_timeline: Vec<(f64, usize)>,
+    pub makespan_s: f64,
+    pub busy_s: f64,
+}
+
+/// Per-tenant admission counters and SLO accounting.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub name: String,
+    pub class: SloClass,
+    pub slo_target: f64,
+    /// Requests the tenant's trace offered to the gateway.
+    pub offered: usize,
+    /// Requests that reached a pool (and were all served).
+    pub served: usize,
+    pub rejected: usize,
+    pub deferred: usize,
+    /// Prompt + gen tokens offered / admitted.
+    pub offered_tokens: u64,
+    pub admitted_tokens: u64,
+    /// Served requests that met the tenant's SLO.
+    pub attained: usize,
+    /// Tokens of SLO-attained requests over tokens offered — the
+    /// normalized goodput the Jain index is computed over.
+    pub goodput_norm: f64,
+}
+
+impl TenantOutcome {
+    /// SLO attainment over served requests (vacuously 1 when nothing
+    /// was served).
+    pub fn attainment(&self) -> f64 {
+        if self.served == 0 {
+            return 1.0;
+        }
+        self.attained as f64 / self.served as f64
+    }
+
+    /// Whether the tenant hit its configured attainment target.
+    pub fn slo_met(&self) -> bool {
+        self.attainment() >= self.slo_target
+    }
+}
+
+/// Everything the cluster report renders.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub spec: ClusterSpec,
+    /// Served requests, sorted by global id.
+    pub requests: Vec<ClusterRequest>,
+    pub pools: Vec<PoolOutcome>,
+    pub tenants: Vec<TenantOutcome>,
+    /// Last completion across the fleet, seconds.
+    pub makespan_s: f64,
+    /// Total batch execution time across all pools and replicas.
+    pub busy_s: f64,
+    /// Fleet energy over the run, when the energy pass ran.
+    pub total_joules: Option<f64>,
+    /// Jain fairness index over the tenants' normalized goodput:
+    /// `(Σx)² / (n·Σx²)`, 1.0 when every tenant gets the same share.
+    pub jain_fairness: f64,
+}
+
+impl ClusterOutcome {
+    /// Tokens generated for served requests, fleet-wide.
+    pub fn generated_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.gen_len).sum()
+    }
+
+    /// Fleet J/token, when the energy pass ran.
+    pub fn joules_per_token(&self) -> Option<f64> {
+        let tokens = self.generated_tokens();
+        if tokens == 0 {
+            return None;
+        }
+        self.total_joules.map(|j| j / tokens as f64)
+    }
+
+    /// Tenants that missed their attainment target (`--assert-slo`
+    /// fails when non-empty).
+    pub fn slo_misses(&self) -> Vec<&TenantOutcome> {
+        self.tenants.iter().filter(|t| !t.slo_met()).collect()
+    }
+}
+
+/// Jain's fairness index over per-tenant shares. Degenerate all-zero
+/// loads count as perfectly fair.
+pub fn jain_index(shares: &[f64]) -> f64 {
+    let sum: f64 = shares.iter().sum();
+    let sq: f64 = shares.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (shares.len() as f64 * sq)
+}
+
+/// Run `elana cluster` for a spec. Virtual time end to end: admission,
+/// routing, and every pool's event loop are single-threaded and
+/// exactly reproducible; only the energy pass fans out over
+/// `spec.workers` threads.
+pub fn run(spec: &ClusterSpec) -> Result<ClusterOutcome> {
+    spec.validate()?;
+    let pool_spec = spec.pool_serve_spec();
+    let scheme = pool_spec.scheme()?;
+    let mut backend =
+        SimBackend::new(&spec.model, &spec.device, false, spec.seed)?
+            .with_max_seq_len(spec.max_seq_len);
+    if let Some(q) = scheme {
+        backend = backend.with_quant(q);
+    }
+    let vocab = backend.vocab_size();
+
+    // 1. per-tenant traces through per-tenant admission
+    struct Gated {
+        tenant: usize,
+        local_id: u64,
+        arrival_s: f64,
+        admit_s: f64,
+        req: Request,
+    }
+    let mut gated: Vec<Gated> = Vec::new();
+    let mut tenants: Vec<TenantOutcome> = Vec::new();
+    for (ti, t) in spec.tenants.iter().enumerate() {
+        let trace = t.build_trace(spec.seed, ti, vocab)?;
+        let adm = admission::admit(&trace, &t.admission);
+        tenants.push(TenantOutcome {
+            name: t.name.clone(),
+            class: t.class.clone(),
+            slo_target: t.slo_target,
+            offered: adm.offered,
+            served: adm.admitted.len(),
+            rejected: adm.rejected,
+            deferred: adm.deferred,
+            offered_tokens: adm.offered_tokens,
+            admitted_tokens: adm.admitted_tokens,
+            attained: 0,
+            goodput_norm: 0.0,
+        });
+        for (req, admit_s) in adm.admitted {
+            gated.push(Gated {
+                tenant: ti,
+                local_id: req.id,
+                arrival_s: req.arrival_s,
+                admit_s,
+                req,
+            });
+        }
+    }
+
+    // 2. merge into one admission-ordered stream with global ids
+    gated.sort_by(|a, b| {
+        a.admit_s
+            .total_cmp(&b.admit_s)
+            .then(a.tenant.cmp(&b.tenant))
+            .then(a.local_id.cmp(&b.local_id))
+    });
+
+    // 3. route each admitted request to a pool
+    let mut router = Router::new(spec.routing, spec.pools);
+    let mut pool_reqs: Vec<Vec<Request>> = vec![Vec::new(); spec.pools];
+    // global id → (tenant, gateway arrival, admission instant, class
+    // priority)
+    let mut meta: Vec<(usize, f64, f64)> = Vec::with_capacity(gated.len());
+    let mut prio_of: Vec<u8> = Vec::with_capacity(gated.len());
+    for (gid, g) in gated.into_iter().enumerate() {
+        let tenant = &spec.tenants[g.tenant];
+        let p = router.route(&tenant.name, &g.req);
+        pool_reqs[p].push(Request {
+            id: gid as u64,
+            // the pool sees the request when admission released it
+            arrival_s: g.admit_s,
+            prompt: g.req.prompt,
+            gen_len: g.req.gen_len,
+        });
+        meta.push((g.tenant, g.arrival_s, g.admit_s));
+        prio_of.push(tenant.class.priority());
+    }
+
+    // 4. drive each pool through the shared serving core
+    let prio = |id: u64| prio_of[id as usize];
+    let policy = pool_spec.sim_policy();
+    let mut requests: Vec<ClusterRequest> = Vec::with_capacity(meta.len());
+    let mut pools: Vec<PoolOutcome> = Vec::with_capacity(spec.pools);
+    let mut makespan_s = 0.0f64;
+    let mut busy_s = 0.0;
+    for reqs in &pool_reqs {
+        let mut scaler = spec.autoscale.clone().map(PoolScaler::new);
+        let hooks = LoopHooks {
+            governor: scaler
+                .as_mut()
+                .map(|s| s as &mut dyn ReplicaGovernor),
+            priority: Some(&prio),
+        };
+        let run = event_loop(reqs, &policy, spec.replicas, &mut backend,
+                             hooks)?;
+        makespan_s = makespan_s.max(run.makespan_s);
+        busy_s += run.busy_s;
+        for r in &run.requests {
+            let (tenant, arrival_s, admit_s) = meta[r.id as usize];
+            let gateway_wait_s = admit_s - arrival_s;
+            let ttft_s = gateway_wait_s + r.ttft_s;
+            let tpot_s = r.tpot_s;
+            let ttlt_s = gateway_wait_s + r.ttlt_s;
+            requests.push(ClusterRequest {
+                id: r.id,
+                tenant,
+                pool: pools.len(),
+                arrival_s,
+                admit_s,
+                gateway_wait_s,
+                queue_wait_s: r.queue_wait_s,
+                ttft_s,
+                tpot_s,
+                ttlt_s,
+                batch: r.batch,
+                prompt_len: r.prompt_len,
+                gen_len: r.gen_len,
+                attained: spec.tenants[tenant]
+                    .class
+                    .attained(ttft_s, tpot_s, ttlt_s),
+            });
+        }
+        pools.push(PoolOutcome {
+            batches: run.batches,
+            replica_timeline: run.replica_timeline,
+            makespan_s: run.makespan_s,
+            busy_s: run.busy_s,
+        });
+    }
+    requests.sort_by_key(|r| r.id);
+
+    // 5. per-tenant SLO accounting and fairness
+    let mut attained_tokens = vec![0u64; tenants.len()];
+    for r in &requests {
+        if r.attained {
+            tenants[r.tenant].attained += 1;
+            attained_tokens[r.tenant] +=
+                (r.prompt_len + r.gen_len) as u64;
+        }
+    }
+    for (t, &tok) in tenants.iter_mut().zip(&attained_tokens) {
+        t.goodput_norm = if t.offered_tokens == 0 {
+            0.0
+        } else {
+            tok as f64 / t.offered_tokens as f64
+        };
+    }
+    let shares: Vec<f64> =
+        tenants.iter().map(|t| t.goodput_norm).collect();
+
+    let mut outcome = ClusterOutcome {
+        spec: spec.clone(),
+        requests,
+        pools,
+        tenants,
+        makespan_s,
+        busy_s,
+        total_joules: None,
+        jain_fairness: jain_index(&shares),
+    };
+
+    // 6. parallel per-batch energy attribution over the fleet
+    if spec.energy {
+        attribute_energy(spec, scheme, &mut outcome)?;
+    }
+    Ok(outcome)
+}
+
+/// Fleet energy pass: flatten batches across pools in `(pool, batch)`
+/// order and replay each with a sensor keyed to
+/// `mix(mix(seed, CLUSTER_ENERGY), i)` — the result depends only on
+/// the flattened index, never on which worker replayed it.
+fn attribute_energy(spec: &ClusterSpec,
+                    scheme: Option<crate::models::QuantScheme>,
+                    outcome: &mut ClusterOutcome) -> Result<()> {
+    let shapes: Vec<(usize, usize, usize)> = outcome
+        .pools
+        .iter()
+        .flat_map(|p| {
+            p.batches
+                .iter()
+                .map(|b| (b.exec_batch, b.padded_prompt_len, b.gen_len))
+        })
+        .collect();
+    let base = Rng::mix(spec.seed, streams::CLUSTER_ENERGY);
+    let results = pool::run_indexed(
+        spec.workers, shapes.len(),
+        |i| -> Result<(f64, f64, f64)> {
+            let (batch, prompt, gen) = shapes[i];
+            let mut b = SimBackend::new(&spec.model, &spec.device, true,
+                                        Rng::mix(base, i as u64))?
+                .with_max_seq_len(spec.max_seq_len);
+            if let Some(q) = scheme {
+                b = b.with_quant(q);
+            }
+            let tb = TokenBatch::new(batch, prompt,
+                                     vec![0; batch * prompt])?;
+            let run = b.generate(&tb, gen)?;
+            Ok(b.run_energy(&run)?.triple())
+        });
+    let mut iter = results.into_iter();
+    let mut total = 0.0;
+    for (pi, p) in outcome.pools.iter_mut().enumerate() {
+        for b in &mut p.batches {
+            let joules = iter
+                .next()
+                .expect("one energy result per batch")
+                .with_context(|| {
+                    format!("energy attribution for pool #{pi} \
+                             batch #{}", b.index)
+                })?;
+            total += joules.2;
+            b.joules = Some(joules);
+        }
+    }
+    outcome.total_joules = Some(total);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::spec::{Routing, TenantArrivals};
+
+    fn quick_spec() -> ClusterSpec {
+        let mut s = ClusterSpec {
+            energy: false,
+            seed: 7,
+            ..ClusterSpec::default()
+        };
+        for t in &mut s.tenants {
+            t.requests = 16;
+            t.prompt_lo = 16;
+            t.prompt_hi = 64;
+            t.gen_len = 8;
+        }
+        s
+    }
+
+    #[test]
+    fn serves_every_admitted_request_exactly_once() {
+        let o = run(&quick_spec()).unwrap();
+        assert_eq!(o.requests.len(), 32);
+        let ids: Vec<u64> = o.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..32).collect::<Vec<_>>());
+        assert_eq!(o.tenants.len(), 2);
+        for t in &o.tenants {
+            assert_eq!(t.offered, 16);
+            assert_eq!(t.served, 16);
+            assert_eq!(t.rejected, 0);
+            assert_eq!(t.deferred, 0);
+        }
+        let by_tenant: Vec<usize> = (0..2)
+            .map(|ti| o.requests.iter()
+                 .filter(|r| r.tenant == ti).count())
+            .collect();
+        assert_eq!(by_tenant, vec![16, 16]);
+        assert!(o.makespan_s > 0.0);
+        assert!(o.busy_s > 0.0);
+        assert!(o.total_joules.is_none());
+        // one fixed-size pool: single timeline entry at the configured
+        // replica count
+        assert_eq!(o.pools.len(), 1);
+        assert_eq!(o.pools[0].replica_timeline,
+                   vec![(0.0, quick_spec().replicas)]);
+    }
+
+    #[test]
+    fn client_latencies_compose_gateway_and_pool_waits() {
+        let o = run(&quick_spec()).unwrap();
+        for r in &o.requests {
+            assert!(r.admit_s >= r.arrival_s, "{r:?}");
+            assert!(r.gateway_wait_s >= 0.0, "{r:?}");
+            assert!(r.queue_wait_s >= 0.0, "{r:?}");
+            assert!(r.ttft_s >= r.gateway_wait_s, "{r:?}");
+            assert!(r.ttlt_s >= r.ttft_s, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn session_affinity_pins_each_tenant_to_one_pool() {
+        let mut s = quick_spec();
+        s.pools = 3;
+        s.routing = Routing::SessionAffinity;
+        let o = run(&s).unwrap();
+        for ti in 0..2 {
+            let pools: std::collections::BTreeSet<usize> = o
+                .requests
+                .iter()
+                .filter(|r| r.tenant == ti)
+                .map(|r| r.pool)
+                .collect();
+            assert_eq!(pools.len(), 1, "tenant {ti} spread: {pools:?}");
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_a_byte_of_results() {
+        let mut base = quick_spec();
+        base.energy = true;
+        let runs: Vec<ClusterOutcome> = [1usize, 4]
+            .iter()
+            .map(|&w| {
+                let mut s = base.clone();
+                s.workers = w;
+                run(&s).unwrap()
+            })
+            .collect();
+        let (a, b) = (&runs[0], &runs[1]);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.ttlt_s.to_bits(), y.ttlt_s.to_bits());
+        }
+        let joules = |o: &ClusterOutcome| -> Vec<(f64, f64, f64)> {
+            o.pools.iter()
+                .flat_map(|p| p.batches.iter().map(|b| b.joules.unwrap()))
+                .collect()
+        };
+        assert_eq!(joules(a), joules(b));
+        assert_eq!(a.total_joules.unwrap().to_bits(),
+                   b.total_joules.unwrap().to_bits());
+        assert!(a.joules_per_token().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn relaxed_slos_make_identical_tenants_perfectly_fair() {
+        // light load, generous targets: every request attains, every
+        // tenant's normalized goodput is exactly 1.0, and Jain's index
+        // computes to exactly 1.0 in f64
+        let mut s = quick_spec();
+        for t in &mut s.tenants {
+            t.class = SloClass::Batch { deadline_s: 1e6 };
+            t.arrivals = TenantArrivals::Poisson { rate_rps: 2.0 };
+        }
+        let o = run(&s).unwrap();
+        for t in &o.tenants {
+            assert_eq!(t.attainment(), 1.0);
+            assert_eq!(t.goodput_norm, 1.0);
+            assert!(t.slo_met());
+        }
+        assert_eq!(o.jain_fairness, 1.0);
+        assert!(o.slo_misses().is_empty());
+    }
+
+    #[test]
+    fn impossible_interactive_slo_is_reported_missed() {
+        let mut s = quick_spec();
+        s.tenants[0].class = SloClass::Interactive {
+            ttft_ms: 0.001,
+            tpot_ms: 0.001,
+        };
+        let o = run(&s).unwrap();
+        assert_eq!(o.tenants[0].attainment(), 0.0);
+        let misses = o.slo_misses();
+        assert_eq!(misses.len(), 1);
+        assert_eq!(misses[0].name, s.tenants[0].name);
+        assert!(o.jain_fairness < 1.0,
+                "one starved tenant must dent fairness");
+    }
+
+    #[test]
+    fn jain_index_landmarks() {
+        assert_eq!(jain_index(&[1.0, 1.0, 1.0]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        // one tenant hogging everything: 1/n
+        let j = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12, "{j}");
+        let j = jain_index(&[1.0, 0.5]);
+        assert!(j > 0.25 && j < 1.0, "{j}");
+    }
+}

@@ -1,0 +1,1062 @@
+//! Cluster specification: tenants, SLO classes, admission policies,
+//! routing, and autoscaling — everything `elana cluster` needs.
+//!
+//! A spec comes from a JSON file (`--spec cluster.json`) with a few
+//! CLI overrides layered on top:
+//!
+//! ```json
+//! {
+//!   "cluster": "two-tenant-diurnal",
+//!   "model": "llama-3.1-8b",
+//!   "device": "a6000",
+//!   "pools": 1,
+//!   "replicas": 2,
+//!   "routing": "least-loaded",
+//!   "autoscale": {"min_replicas": 1, "max_replicas": 4,
+//!                 "up_queue_depth": 48, "down_queue_depth": 4,
+//!                 "up_cooldown_s": 10, "down_cooldown_s": 30,
+//!                 "warmup_s": 5},
+//!   "tenants": [
+//!     {"tenant": "chat", "class": "interactive",
+//!      "ttft_ms": 2000, "tpot_ms": 100, "slo_target": 0.9,
+//!      "arrivals": {"kind": "diurnal", "base_rps": 2,
+//!                   "peak_rps": 12, "period_s": 60},
+//!      "requests": 300, "prompts": [16, 64], "gen_len": 16,
+//!      "admission": {"rate_rps": 10, "burst": 20,
+//!                    "on_limit": "defer"}},
+//!     {"tenant": "batch-eval", "class": "batch", "deadline_s": 120,
+//!      "arrivals": {"kind": "bursty", "base_rps": 0.5,
+//!                   "burst_rps": 20, "period_s": 30, "duty": 0.2},
+//!      "requests": 200, "prompts": [32, 128], "gen_len": 32,
+//!      "admission": {"token_budget": 40000}}
+//!   ],
+//!   "seed": 7, "energy": true
+//! }
+//! ```
+//!
+//! Parsing is built on the shared [`crate::util::spec`] field readers
+//! (the sweep-spec discipline): missing keys fall back to defaults,
+//! typo'd or wrong-typed keys error instead of silently running a
+//! different cluster.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::{Arrivals, ServeSpec};
+use crate::util::json::Json;
+use crate::util::spec as fields;
+use crate::util::{streams, Rng};
+use crate::workload::RequestTrace;
+
+/// How a tenant's requests arrive at the gateway.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TenantArrivals {
+    /// Homogeneous Poisson at a mean rate.
+    Poisson { rate_rps: f64 },
+    /// Raised-cosine diurnal rate curve: `base_rps` in the trough,
+    /// `peak_rps` at mid-period, repeating every `period_s` seconds.
+    Diurnal { base_rps: f64, peak_rps: f64, period_s: f64 },
+    /// ON/OFF bursts: `burst_rps` for the first `duty` fraction of
+    /// each period, `base_rps` for the rest.
+    Bursty { base_rps: f64, burst_rps: f64, period_s: f64, duty: f64 },
+    /// Replay a recorded JSON trace file (the `elana serve --trace`
+    /// schema).
+    Trace { path: String },
+}
+
+impl TenantArrivals {
+    /// The constant envelope rate the thinning generator proposes at.
+    pub fn peak_rps(&self) -> f64 {
+        match self {
+            TenantArrivals::Poisson { rate_rps } => *rate_rps,
+            TenantArrivals::Diurnal { peak_rps, .. } => *peak_rps,
+            TenantArrivals::Bursty { burst_rps, .. } => *burst_rps,
+            TenantArrivals::Trace { .. } => 0.0,
+        }
+    }
+
+    /// Instantaneous arrival rate at virtual time `t` (requests/s).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            TenantArrivals::Poisson { rate_rps } => *rate_rps,
+            TenantArrivals::Diurnal { base_rps, peak_rps, period_s } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos())
+            }
+            TenantArrivals::Bursty { base_rps, burst_rps, period_s,
+                                     duty } => {
+                if (t / period_s).rem_euclid(1.0) < *duty {
+                    *burst_rps
+                } else {
+                    *base_rps
+                }
+            }
+            TenantArrivals::Trace { .. } => 0.0,
+        }
+    }
+}
+
+/// A tenant's service-level objective class. Interactive tenants are
+/// served ahead of batch tenants when a batch overflows.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SloClass {
+    /// Latency-sensitive: both targets must hold for a request to
+    /// count as SLO-attained.
+    Interactive { ttft_ms: f64, tpot_ms: f64 },
+    /// Throughput-oriented: the whole request must complete within
+    /// `deadline_s` of its arrival.
+    Batch { deadline_s: f64 },
+}
+
+impl SloClass {
+    /// Scheduling priority (lower serves first).
+    pub fn priority(&self) -> u8 {
+        match self {
+            SloClass::Interactive { .. } => 0,
+            SloClass::Batch { .. } => 1,
+        }
+    }
+
+    /// Whether a served request with the given client-side latencies
+    /// (seconds from arrival) attained its SLO.
+    pub fn attained(&self, ttft_s: f64, tpot_s: f64, ttlt_s: f64) -> bool {
+        match self {
+            SloClass::Interactive { ttft_ms, tpot_ms } => {
+                ttft_s * 1e3 <= *ttft_ms && tpot_s * 1e3 <= *tpot_ms
+            }
+            SloClass::Batch { deadline_s } => ttlt_s <= *deadline_s,
+        }
+    }
+
+    /// Report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SloClass::Interactive { .. } => "interactive",
+            SloClass::Batch { .. } => "batch",
+        }
+    }
+}
+
+/// What the admission policy does with an over-limit request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OnLimit {
+    /// Hold the request at the gateway until the bucket refills (adds
+    /// gateway wait, preserves per-tenant order).
+    Defer,
+    /// Drop the request (counted, never served).
+    Reject,
+}
+
+/// Token-bucket request rate limit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateLimit {
+    /// Sustained admission rate, requests/s.
+    pub rate_rps: f64,
+    /// Bucket capacity: the burst admitted instantly from full.
+    pub burst: usize,
+    pub on_limit: OnLimit,
+}
+
+/// Per-tenant admission policy; both knobs optional and composable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdmissionSpec {
+    pub rate_limit: Option<RateLimit>,
+    /// Cumulative token budget (prompt + generated) over the run;
+    /// requests past it are rejected.
+    pub token_budget: Option<u64>,
+}
+
+impl AdmissionSpec {
+    /// No admission control at all — every request admitted at its
+    /// arrival instant.
+    pub fn is_open(&self) -> bool {
+        self.rate_limit.is_none() && self.token_budget.is_none()
+    }
+}
+
+/// One tenant behind the gateway.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub class: SloClass,
+    /// Fraction of served requests that must attain the SLO for
+    /// `--assert-slo` to pass (interactive tenants only).
+    pub slo_target: f64,
+    pub arrivals: TenantArrivals,
+    /// Requests the generator emits (trace files carry their own
+    /// length).
+    pub requests: usize,
+    /// Prompt lengths drawn uniformly in [lo, hi].
+    pub prompt_lo: usize,
+    pub prompt_hi: usize,
+    pub gen_len: usize,
+    /// Explicit trace seed. `None` derives one from the cluster seed
+    /// via the `CLUSTER_TENANT` stream mixed with the tenant index.
+    pub seed: Option<u64>,
+    pub admission: AdmissionSpec,
+}
+
+impl TenantSpec {
+    /// The seed this tenant's trace draws from.
+    pub fn trace_seed(&self, cluster_seed: u64, index: usize) -> u64 {
+        self.seed.unwrap_or_else(|| {
+            Rng::mix(Rng::mix(cluster_seed, streams::CLUSTER_TENANT),
+                     index as u64)
+        })
+    }
+
+    /// Generate (or load) this tenant's request trace. Ids are
+    /// tenant-local arrival ranks.
+    pub fn build_trace(&self, cluster_seed: u64, index: usize,
+                       vocab_size: usize) -> Result<RequestTrace> {
+        let seed = self.trace_seed(cluster_seed, index);
+        match &self.arrivals {
+            TenantArrivals::Poisson { rate_rps } => {
+                Ok(RequestTrace::poisson(self.requests, *rate_rps,
+                                         self.prompt_lo, self.prompt_hi,
+                                         self.gen_len, vocab_size, seed))
+            }
+            shaped @ (TenantArrivals::Diurnal { .. }
+                      | TenantArrivals::Bursty { .. }) => {
+                Ok(RequestTrace::poisson_thinned(
+                    self.requests, shaped.peak_rps(),
+                    |t| shaped.rate_at(t), self.prompt_lo, self.prompt_hi,
+                    self.gen_len, vocab_size, seed))
+            }
+            TenantArrivals::Trace { path } => {
+                RequestTrace::load(path, vocab_size, seed).with_context(
+                    || format!("loading trace for tenant `{}`", self.name))
+            }
+        }
+    }
+}
+
+/// How the gateway spreads admitted requests across replica pools.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Routing {
+    /// The pool with the least cumulative routed token mass (ties to
+    /// the lowest index).
+    LeastLoaded,
+    /// Strict rotation in admission order.
+    RoundRobin,
+    /// All of a tenant's requests pin to `hash(tenant) % pools` —
+    /// session/prefix-cache affinity.
+    SessionAffinity,
+}
+
+impl Routing {
+    pub fn parse(s: &str) -> Option<Routing> {
+        match s {
+            "least-loaded" => Some(Routing::LeastLoaded),
+            "round-robin" => Some(Routing::RoundRobin),
+            "session-affinity" => Some(Routing::SessionAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Routing::LeastLoaded => "least-loaded",
+            Routing::RoundRobin => "round-robin",
+            Routing::SessionAffinity => "session-affinity",
+        }
+    }
+}
+
+/// Reactive autoscaler configuration (per pool).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Scale up when the post-batch queue depth reaches this.
+    pub up_queue_depth: usize,
+    /// Scale down when the queue depth is at or below this.
+    pub down_queue_depth: usize,
+    /// Optional SLO-violation trigger: scale up when a batch's worst
+    /// client TTFT exceeds this, milliseconds.
+    pub up_ttft_ms: Option<f64>,
+    pub up_cooldown_s: f64,
+    pub down_cooldown_s: f64,
+    /// Warm-up cost: a scaled-up replica takes its first batch this
+    /// many seconds after the decision.
+    pub warmup_s: f64,
+}
+
+impl Default for AutoscaleSpec {
+    fn default() -> AutoscaleSpec {
+        AutoscaleSpec {
+            min_replicas: 1,
+            max_replicas: 4,
+            up_queue_depth: 32,
+            down_queue_depth: 2,
+            up_ttft_ms: None,
+            up_cooldown_s: 10.0,
+            down_cooldown_s: 30.0,
+            warmup_s: 5.0,
+        }
+    }
+}
+
+/// Everything `elana cluster` needs to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    /// Registry model name (one deployment artifact fleet-wide).
+    pub model: String,
+    /// hwsim rig name; the cluster simulator is virtual-time only.
+    pub device: String,
+    /// Quantization-scheme token (the `elana serve` vocabulary).
+    pub quant: String,
+    /// Replica pools behind the gateway (routing targets).
+    pub pools: usize,
+    /// Initial replicas per pool.
+    pub replicas: usize,
+    pub tenants: Vec<TenantSpec>,
+    pub routing: Routing,
+    /// Reactive per-pool autoscaling; `None` = fixed replica counts.
+    pub autoscale: Option<AutoscaleSpec>,
+    /// Worker threads for the energy-attribution pass (0 = one per
+    /// core). Never affects results, only wall-clock.
+    pub workers: usize,
+    /// Base seed; tenant traces and per-batch sensor streams derive
+    /// from it through domain-separated `Rng::mix` streams.
+    pub seed: u64,
+    pub energy: bool,
+    /// Head-of-line co-batching wait, seconds (pool batcher knob).
+    pub max_wait_s: f64,
+    pub max_seq_len: usize,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> ClusterSpec {
+        ClusterSpec {
+            name: "cluster".to_string(),
+            model: "llama-3.1-8b".to_string(),
+            device: "a6000".to_string(),
+            quant: "native".to_string(),
+            pools: 1,
+            replicas: 2,
+            tenants: vec![
+                TenantSpec {
+                    name: "chat".to_string(),
+                    class: SloClass::Interactive {
+                        ttft_ms: 2000.0,
+                        tpot_ms: 100.0,
+                    },
+                    slo_target: 0.9,
+                    arrivals: TenantArrivals::Poisson { rate_rps: 8.0 },
+                    requests: 48,
+                    prompt_lo: 32,
+                    prompt_hi: 128,
+                    gen_len: 32,
+                    seed: None,
+                    admission: AdmissionSpec::default(),
+                },
+                TenantSpec {
+                    name: "batch-eval".to_string(),
+                    class: SloClass::Batch { deadline_s: 120.0 },
+                    slo_target: 0.9,
+                    arrivals: TenantArrivals::Poisson { rate_rps: 4.0 },
+                    requests: 32,
+                    prompt_lo: 64,
+                    prompt_hi: 256,
+                    gen_len: 64,
+                    seed: None,
+                    admission: AdmissionSpec::default(),
+                },
+            ],
+            routing: Routing::LeastLoaded,
+            autoscale: None,
+            workers: 0,
+            seed: 0,
+            energy: true,
+            max_wait_s: 0.05,
+            max_seq_len: 4096,
+        }
+    }
+}
+
+impl ClusterSpec {
+    /// The per-pool serve spec the cluster's pools all share: same
+    /// model/device/quant/batching knobs, prompt range covering every
+    /// tenant. Its `sim_policy()` is what each pool's event loop runs
+    /// — for a single tenant it is exactly the policy `elana serve`
+    /// would build from the same knobs, which the degenerate-cluster
+    /// equivalence test pins bitwise.
+    pub fn pool_serve_spec(&self) -> ServeSpec {
+        let lo = self.tenants.iter().map(|t| t.prompt_lo).min()
+            .unwrap_or(16);
+        let hi = self.tenants.iter().map(|t| t.prompt_hi).max()
+            .unwrap_or(16);
+        let gen = self.tenants.iter().map(|t| t.gen_len).max()
+            .unwrap_or(1);
+        ServeSpec {
+            model: self.model.clone(),
+            device: self.device.clone(),
+            arrivals: Arrivals::Poisson { rate_rps: 1.0 },
+            requests: self.tenants.iter().map(|t| t.requests).sum::<usize>()
+                .max(1),
+            prompt_lo: lo,
+            prompt_hi: hi,
+            gen_len: gen,
+            replicas: self.replicas,
+            workers: self.workers,
+            seed: self.seed,
+            energy: self.energy,
+            max_wait_s: self.max_wait_s,
+            max_seq_len: self.max_seq_len,
+            quant: self.quant.clone(),
+            parallel: None,
+            power_cap: None,
+            phase_dvfs: false,
+        }
+    }
+
+    /// Validate every knob before any work starts (registry misses
+    /// list the known names via the serve-spec check).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.device != "cpu",
+                "elana cluster is a virtual-time simulator; pick an \
+                 hwsim rig, not `cpu`");
+        ensure!(self.pools >= 1, "a cluster needs at least one pool");
+        ensure!(self.replicas >= 1,
+                "a cluster needs at least one replica per pool");
+        ensure!(!self.tenants.is_empty(),
+                "a cluster needs at least one tenant");
+        let mut names: Vec<&str> =
+            self.tenants.iter().map(|t| t.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        ensure!(names.len() == self.tenants.len(),
+                "tenant names must be unique");
+        for t in &self.tenants {
+            self.validate_tenant(t)?;
+        }
+        if let Some(a) = &self.autoscale {
+            ensure!(a.min_replicas >= 1,
+                    "autoscale min_replicas must be >= 1");
+            ensure!(a.min_replicas <= a.max_replicas,
+                    "autoscale bounds are inverted ({}..{})",
+                    a.min_replicas, a.max_replicas);
+            ensure!((a.min_replicas..=a.max_replicas)
+                        .contains(&self.replicas),
+                    "initial replicas {} outside autoscale bounds {}..{}",
+                    self.replicas, a.min_replicas, a.max_replicas);
+            ensure!(a.down_queue_depth < a.up_queue_depth,
+                    "autoscale queue thresholds are inverted \
+                     (down {} >= up {})", a.down_queue_depth,
+                    a.up_queue_depth);
+            ensure!(a.up_cooldown_s >= 0.0 && a.down_cooldown_s >= 0.0,
+                    "autoscale cooldowns must be >= 0");
+            ensure!(a.warmup_s >= 0.0, "autoscale warmup must be >= 0");
+            if let Some(ms) = a.up_ttft_ms {
+                ensure!(ms > 0.0,
+                        "autoscale up_ttft_ms must be positive");
+            }
+        }
+        // registry names, quant token, context-fit: the shared pool
+        // spec carries them all
+        self.pool_serve_spec().validate()
+    }
+
+    fn validate_tenant(&self, t: &TenantSpec) -> Result<()> {
+        let who = &t.name;
+        ensure!(!who.is_empty(), "a tenant needs a name");
+        ensure!(t.prompt_lo >= 1,
+                "tenant `{who}`: prompt lengths must be >= 1");
+        ensure!(t.prompt_lo <= t.prompt_hi,
+                "tenant `{who}`: prompt range is inverted ({}..{})",
+                t.prompt_lo, t.prompt_hi);
+        ensure!(t.gen_len >= 1, "tenant `{who}`: gen length must be >= 1");
+        ensure!(t.slo_target > 0.0 && t.slo_target <= 1.0,
+                "tenant `{who}`: slo_target must be in (0, 1]");
+        match &t.class {
+            SloClass::Interactive { ttft_ms, tpot_ms } => {
+                ensure!(*ttft_ms > 0.0 && *tpot_ms > 0.0,
+                        "tenant `{who}`: interactive targets must be \
+                         positive");
+            }
+            SloClass::Batch { deadline_s } => {
+                ensure!(*deadline_s > 0.0,
+                        "tenant `{who}`: deadline must be positive");
+            }
+        }
+        match &t.arrivals {
+            TenantArrivals::Poisson { rate_rps } => {
+                ensure!(*rate_rps > 0.0,
+                        "tenant `{who}`: arrival rate must be positive");
+                ensure!(t.requests >= 1,
+                        "tenant `{who}`: needs at least one request");
+            }
+            TenantArrivals::Diurnal { base_rps, peak_rps, period_s } => {
+                ensure!(*peak_rps > 0.0 && *base_rps >= 0.0,
+                        "tenant `{who}`: diurnal rates must be \
+                         non-negative with a positive peak");
+                ensure!(*peak_rps >= *base_rps,
+                        "tenant `{who}`: diurnal peak below base");
+                ensure!(*period_s > 0.0,
+                        "tenant `{who}`: period must be positive");
+                ensure!(t.requests >= 1,
+                        "tenant `{who}`: needs at least one request");
+            }
+            TenantArrivals::Bursty { base_rps, burst_rps, period_s,
+                                     duty } => {
+                ensure!(*burst_rps > 0.0 && *base_rps >= 0.0,
+                        "tenant `{who}`: bursty rates must be \
+                         non-negative with a positive burst");
+                ensure!(*burst_rps >= *base_rps,
+                        "tenant `{who}`: burst rate below base");
+                ensure!(*period_s > 0.0,
+                        "tenant `{who}`: period must be positive");
+                ensure!(*duty > 0.0 && *duty <= 1.0,
+                        "tenant `{who}`: duty must be in (0, 1]");
+                ensure!(t.requests >= 1,
+                        "tenant `{who}`: needs at least one request");
+            }
+            TenantArrivals::Trace { path } => {
+                ensure!(!path.is_empty(),
+                        "tenant `{who}`: trace path is empty");
+            }
+        }
+        if let Some(rl) = &t.admission.rate_limit {
+            ensure!(rl.rate_rps > 0.0,
+                    "tenant `{who}`: admission rate must be positive");
+            ensure!(rl.burst >= 1,
+                    "tenant `{who}`: admission burst must be >= 1");
+        }
+        if let Some(b) = t.admission.token_budget {
+            ensure!(b >= 1, "tenant `{who}`: token budget must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Parse the JSON schema documented in the module header.
+    pub fn parse(text: &str) -> Result<ClusterSpec> {
+        const KNOWN_KEYS: [&str; 14] =
+            ["cluster", "model", "device", "quant", "pools", "replicas",
+             "routing", "autoscale", "tenants", "workers", "seed",
+             "energy", "max_wait_s", "max_seq_len"];
+        let root = Json::parse(text).context("parsing cluster spec JSON")?;
+        fields::require_known_keys(
+            fields::root_obj(&root, "cluster spec")?, &KNOWN_KEYS,
+            "cluster spec")?;
+        let mut spec = ClusterSpec::default();
+        if let Some(v) = fields::string_field(&root, "cluster")? {
+            spec.name = v;
+        }
+        if let Some(v) = fields::string_field(&root, "model")? {
+            spec.model = v;
+        }
+        if let Some(v) = fields::string_field(&root, "device")? {
+            spec.device = v;
+        }
+        if let Some(v) = fields::string_field(&root, "quant")? {
+            spec.quant = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "pools")? {
+            spec.pools = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "replicas")? {
+            spec.replicas = v;
+        }
+        if let Some(v) = fields::string_field(&root, "routing")? {
+            spec.routing = Routing::parse(&v).ok_or_else(|| {
+                anyhow!("bad routing `{v}` (least-loaded | round-robin \
+                         | session-affinity)")
+            })?;
+        }
+        if let Some(v) = root.get("autoscale") {
+            spec.autoscale = Some(parse_autoscale(v)?);
+        }
+        if let Some(v) = root.get("tenants") {
+            let arr = v.as_arr().ok_or_else(|| {
+                anyhow!("`tenants` must be an array")
+            })?;
+            spec.tenants = arr
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    parse_tenant(t)
+                        .with_context(|| format!("tenant #{i}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = fields::usize_field(&root, "workers")? {
+            spec.workers = v;
+        }
+        if let Some(v) = fields::seed_field(&root, "seed")? {
+            spec.seed = v;
+        }
+        if let Some(v) = fields::bool_field(&root, "energy")? {
+            spec.energy = v;
+        }
+        if let Some(v) = fields::f64_field(&root, "max_wait_s")? {
+            spec.max_wait_s = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "max_seq_len")? {
+            spec.max_seq_len = v;
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ClusterSpec> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading cluster spec {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// Explicitly-given CLI flags, layered over the spec file (or the
+/// defaults) — so `--spec cluster.json --replicas 4` honors both.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClusterOverrides {
+    pub model: Option<String>,
+    pub device: Option<String>,
+    pub quant: Option<String>,
+    pub pools: Option<usize>,
+    pub replicas: Option<usize>,
+    pub routing: Option<Routing>,
+    pub workers: Option<usize>,
+    pub seed: Option<u64>,
+    pub energy: Option<bool>,
+}
+
+impl ClusterOverrides {
+    /// Layer the given flags over `spec`; absent flags leave the spec
+    /// (file values or defaults) untouched.
+    pub fn apply(&self, spec: &mut ClusterSpec) {
+        if let Some(v) = &self.model {
+            spec.model = v.clone();
+        }
+        if let Some(v) = &self.device {
+            spec.device = v.clone();
+        }
+        if let Some(v) = &self.quant {
+            spec.quant = v.clone();
+        }
+        if let Some(v) = self.pools {
+            spec.pools = v;
+        }
+        if let Some(v) = self.replicas {
+            spec.replicas = v;
+        }
+        if let Some(v) = self.routing {
+            spec.routing = v;
+        }
+        if let Some(v) = self.workers {
+            spec.workers = v;
+        }
+        if let Some(v) = self.seed {
+            spec.seed = v;
+        }
+        if let Some(v) = self.energy {
+            spec.energy = v;
+        }
+    }
+}
+
+fn parse_autoscale(v: &Json) -> Result<AutoscaleSpec> {
+    const KNOWN: [&str; 8] =
+        ["min_replicas", "max_replicas", "up_queue_depth",
+         "down_queue_depth", "up_ttft_ms", "up_cooldown_s",
+         "down_cooldown_s", "warmup_s"];
+    fields::require_known_keys(fields::root_obj(v, "autoscale spec")?,
+                               &KNOWN, "autoscale spec")?;
+    let mut a = AutoscaleSpec::default();
+    if let Some(x) = fields::usize_field(v, "min_replicas")? {
+        a.min_replicas = x;
+    }
+    if let Some(x) = fields::usize_field(v, "max_replicas")? {
+        a.max_replicas = x;
+    }
+    if let Some(x) = fields::usize_field(v, "up_queue_depth")? {
+        a.up_queue_depth = x;
+    }
+    if let Some(x) = fields::usize_field(v, "down_queue_depth")? {
+        a.down_queue_depth = x;
+    }
+    a.up_ttft_ms = fields::f64_field(v, "up_ttft_ms")?;
+    if let Some(x) = fields::f64_field(v, "up_cooldown_s")? {
+        a.up_cooldown_s = x;
+    }
+    if let Some(x) = fields::f64_field(v, "down_cooldown_s")? {
+        a.down_cooldown_s = x;
+    }
+    if let Some(x) = fields::f64_field(v, "warmup_s")? {
+        a.warmup_s = x;
+    }
+    Ok(a)
+}
+
+fn parse_arrivals(v: &Json) -> Result<TenantArrivals> {
+    const KNOWN: [&str; 7] =
+        ["kind", "rate_rps", "base_rps", "peak_rps", "burst_rps",
+         "period_s", "duty"];
+    // the trace kind has its own key set
+    let kind = fields::string_field(v, "kind")?
+        .ok_or_else(|| anyhow!("`arrivals` needs a `kind`"))?;
+    match kind.as_str() {
+        "poisson" => {
+            fields::require_known_keys(
+                fields::root_obj(v, "arrivals spec")?, &["kind",
+                "rate_rps"], "poisson arrivals")?;
+            let rate = fields::f64_field(v, "rate_rps")?
+                .ok_or_else(|| anyhow!("poisson arrivals need \
+                                        `rate_rps`"))?;
+            Ok(TenantArrivals::Poisson { rate_rps: rate })
+        }
+        "diurnal" => {
+            fields::require_known_keys(
+                fields::root_obj(v, "arrivals spec")?, &["kind",
+                "base_rps", "peak_rps", "period_s"], "diurnal arrivals")?;
+            Ok(TenantArrivals::Diurnal {
+                base_rps: fields::f64_field(v, "base_rps")?
+                    .ok_or_else(|| anyhow!("diurnal arrivals need \
+                                            `base_rps`"))?,
+                peak_rps: fields::f64_field(v, "peak_rps")?
+                    .ok_or_else(|| anyhow!("diurnal arrivals need \
+                                            `peak_rps`"))?,
+                period_s: fields::f64_field(v, "period_s")?
+                    .ok_or_else(|| anyhow!("diurnal arrivals need \
+                                            `period_s`"))?,
+            })
+        }
+        "bursty" => {
+            fields::require_known_keys(
+                fields::root_obj(v, "arrivals spec")?, &KNOWN,
+                "bursty arrivals")?;
+            Ok(TenantArrivals::Bursty {
+                base_rps: fields::f64_field(v, "base_rps")?
+                    .unwrap_or(0.0),
+                burst_rps: fields::f64_field(v, "burst_rps")?
+                    .ok_or_else(|| anyhow!("bursty arrivals need \
+                                            `burst_rps`"))?,
+                period_s: fields::f64_field(v, "period_s")?
+                    .ok_or_else(|| anyhow!("bursty arrivals need \
+                                            `period_s`"))?,
+                duty: fields::f64_field(v, "duty")?
+                    .ok_or_else(|| anyhow!("bursty arrivals need \
+                                            `duty`"))?,
+            })
+        }
+        "trace" => {
+            fields::require_known_keys(
+                fields::root_obj(v, "arrivals spec")?, &["kind", "path"],
+                "trace arrivals")?;
+            let path = fields::string_field(v, "path")?
+                .ok_or_else(|| anyhow!("trace arrivals need `path`"))?;
+            Ok(TenantArrivals::Trace { path })
+        }
+        other => bail!("bad arrivals kind `{other}` (poisson | diurnal \
+                        | bursty | trace)"),
+    }
+}
+
+fn parse_admission(v: &Json) -> Result<AdmissionSpec> {
+    const KNOWN: [&str; 4] =
+        ["rate_rps", "burst", "on_limit", "token_budget"];
+    fields::require_known_keys(fields::root_obj(v, "admission spec")?,
+                               &KNOWN, "admission spec")?;
+    let rate = fields::f64_field(v, "rate_rps")?;
+    let burst = fields::usize_field(v, "burst")?;
+    let on_limit = match fields::string_field(v, "on_limit")?.as_deref() {
+        None => OnLimit::Defer,
+        Some("defer") => OnLimit::Defer,
+        Some("reject") => OnLimit::Reject,
+        Some(other) => bail!("bad on_limit `{other}` (defer | reject)"),
+    };
+    let rate_limit = match rate {
+        Some(rate_rps) => Some(RateLimit {
+            rate_rps,
+            burst: burst.unwrap_or(1),
+            on_limit,
+        }),
+        None => {
+            ensure!(burst.is_none(),
+                    "admission `burst` needs a `rate_rps`");
+            None
+        }
+    };
+    Ok(AdmissionSpec {
+        rate_limit,
+        token_budget: fields::seed_field(v, "token_budget")?,
+    })
+}
+
+fn parse_tenant(v: &Json) -> Result<TenantSpec> {
+    const KNOWN: [&str; 12] =
+        ["tenant", "class", "ttft_ms", "tpot_ms", "deadline_s",
+         "slo_target", "arrivals", "requests", "prompts", "gen_len",
+         "seed", "admission"];
+    fields::require_known_keys(fields::root_obj(v, "tenant spec")?,
+                               &KNOWN, "tenant spec")?;
+    let name = fields::string_field(v, "tenant")?
+        .ok_or_else(|| anyhow!("a tenant needs a `tenant` name"))?;
+    let class = match fields::string_field(v, "class")?.as_deref() {
+        Some("interactive") | None => SloClass::Interactive {
+            ttft_ms: fields::f64_field(v, "ttft_ms")?.unwrap_or(2000.0),
+            tpot_ms: fields::f64_field(v, "tpot_ms")?.unwrap_or(100.0),
+        },
+        Some("batch") => SloClass::Batch {
+            deadline_s: fields::f64_field(v, "deadline_s")?
+                .unwrap_or(120.0),
+        },
+        Some(other) => bail!("bad class `{other}` (interactive | batch)"),
+    };
+    let arrivals = match v.get("arrivals") {
+        Some(a) => parse_arrivals(a)
+            .with_context(|| format!("tenant `{name}` arrivals"))?,
+        None => TenantArrivals::Poisson { rate_rps: 8.0 },
+    };
+    let (prompt_lo, prompt_hi) = match fields::usize_list(v, "prompts")? {
+        None => (32, 128),
+        Some(pair) => {
+            ensure!(pair.len() == 2,
+                    "`prompts` must be a [lo, hi] pair");
+            (pair[0], pair[1])
+        }
+    };
+    let admission = match v.get("admission") {
+        Some(a) => parse_admission(a)
+            .with_context(|| format!("tenant `{name}` admission"))?,
+        None => AdmissionSpec::default(),
+    };
+    Ok(TenantSpec {
+        name,
+        class,
+        slo_target: fields::f64_field(v, "slo_target")?.unwrap_or(0.9),
+        arrivals,
+        requests: fields::usize_field(v, "requests")?.unwrap_or(64),
+        prompt_lo,
+        prompt_hi,
+        gen_len: fields::usize_field(v, "gen_len")?.unwrap_or(32),
+        seed: fields::seed_field(v, "seed")?,
+        admission,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_valid_two_tenant_cluster() {
+        let s = ClusterSpec::default();
+        s.validate().unwrap();
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].class.priority(), 0);
+        assert_eq!(s.tenants[1].class.priority(), 1);
+        assert!(s.tenants.iter().all(|t| t.admission.is_open()));
+    }
+
+    #[test]
+    fn parse_full_schema() {
+        let s = ClusterSpec::parse(
+            r#"{"cluster": "two-tenant", "model": "llama-3.1-8b",
+                "device": "a6000", "pools": 2, "replicas": 1,
+                "routing": "session-affinity",
+                "autoscale": {"min_replicas": 1, "max_replicas": 3,
+                              "up_queue_depth": 16, "down_queue_depth": 2,
+                              "up_cooldown_s": 5, "down_cooldown_s": 20,
+                              "warmup_s": 2, "up_ttft_ms": 4000},
+                "tenants": [
+                  {"tenant": "chat", "class": "interactive",
+                   "ttft_ms": 1500, "tpot_ms": 80, "slo_target": 0.95,
+                   "arrivals": {"kind": "diurnal", "base_rps": 2,
+                                "peak_rps": 12, "period_s": 60},
+                   "requests": 100, "prompts": [16, 64], "gen_len": 16,
+                   "admission": {"rate_rps": 10, "burst": 20,
+                                 "on_limit": "defer"}},
+                  {"tenant": "eval", "class": "batch", "deadline_s": 90,
+                   "arrivals": {"kind": "bursty", "base_rps": 0.5,
+                                "burst_rps": 20, "period_s": 30,
+                                "duty": 0.2},
+                   "requests": 50, "prompts": [32, 128], "gen_len": 32,
+                   "admission": {"token_budget": 40000, "rate_rps": 15,
+                                 "on_limit": "reject"}}
+                ],
+                "seed": 7, "energy": false, "workers": 2}"#)
+            .unwrap();
+        assert_eq!(s.name, "two-tenant");
+        assert_eq!(s.pools, 2);
+        assert_eq!(s.routing, Routing::SessionAffinity);
+        let a = s.autoscale.as_ref().unwrap();
+        assert_eq!(a.max_replicas, 3);
+        assert_eq!(a.up_ttft_ms, Some(4000.0));
+        assert_eq!(s.tenants.len(), 2);
+        let chat = &s.tenants[0];
+        assert_eq!(chat.name, "chat");
+        assert_eq!(chat.class,
+                   SloClass::Interactive { ttft_ms: 1500.0,
+                                           tpot_ms: 80.0 });
+        assert_eq!(chat.slo_target, 0.95);
+        assert!(matches!(chat.arrivals,
+                         TenantArrivals::Diurnal { .. }));
+        let rl = chat.admission.rate_limit.as_ref().unwrap();
+        assert_eq!(rl.burst, 20);
+        assert_eq!(rl.on_limit, OnLimit::Defer);
+        let eval = &s.tenants[1];
+        assert_eq!(eval.class, SloClass::Batch { deadline_s: 90.0 });
+        assert_eq!(eval.admission.token_budget, Some(40000));
+        assert_eq!(eval.admission.rate_limit.as_ref().unwrap().on_limit,
+                   OnLimit::Reject);
+        assert!(!s.energy);
+        assert_eq!(s.seed, 7);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_is_strict_about_keys_and_types() {
+        let err = ClusterSpec::parse(r#"{"tenant": []}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key `tenant` in cluster spec"),
+                "{err}");
+        assert!(ClusterSpec::parse(r#"{"tenants": {}}"#).is_err());
+        assert!(ClusterSpec::parse(r#"{"routing": "fastest"}"#).is_err());
+        assert!(ClusterSpec::parse(
+            r#"{"tenants": [{"tenant": "a", "class": "speedy"}]}"#)
+            .is_err());
+        assert!(ClusterSpec::parse(
+            r#"{"tenants": [{"tenant": "a",
+                             "arrivals": {"kind": "warp"}}]}"#)
+            .is_err());
+        assert!(ClusterSpec::parse(
+            r#"{"tenants": [{"tenant": "a", "prompts": [16]}]}"#)
+            .is_err());
+        assert!(ClusterSpec::parse(
+            r#"{"tenants": [{"tenant": "a",
+                             "admission": {"burst": 5}}]}"#)
+            .is_err());
+        assert!(ClusterSpec::parse(
+            r#"{"tenants": [{"tenant": "a",
+                             "admission": {"rate_rps": 5,
+                                           "on_limit": "drop"}}]}"#)
+            .is_err());
+        // nested unknown keys are rejected too
+        let err = ClusterSpec::parse(
+            r#"{"autoscale": {"warm_up": 3}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key `warm_up` in autoscale spec"),
+                "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_clusters() {
+        let base = ClusterSpec::default();
+        let bad = [
+            ClusterSpec { pools: 0, ..base.clone() },
+            ClusterSpec { replicas: 0, ..base.clone() },
+            ClusterSpec { tenants: Vec::new(), ..base.clone() },
+            ClusterSpec { device: "cpu".into(), ..base.clone() },
+            ClusterSpec { model: "gpt-17".into(), ..base.clone() },
+        ];
+        for s in bad {
+            assert!(s.validate().is_err(), "{s:?}");
+        }
+        // duplicate tenant names
+        let mut dup = base.clone();
+        dup.tenants[1].name = dup.tenants[0].name.clone();
+        assert!(dup.validate().is_err());
+        // autoscale bounds must bracket the initial replica count
+        let mut a = base.clone();
+        a.autoscale = Some(AutoscaleSpec {
+            min_replicas: 3,
+            max_replicas: 4,
+            ..AutoscaleSpec::default()
+        });
+        assert!(a.validate().is_err(), "replicas 2 below min 3");
+        let mut a = base.clone();
+        a.autoscale = Some(AutoscaleSpec {
+            up_queue_depth: 2,
+            down_queue_depth: 2,
+            ..AutoscaleSpec::default()
+        });
+        assert!(a.validate().is_err(), "inverted queue thresholds");
+        // tenant-level degeneracies
+        let mut t = base.clone();
+        t.tenants[0].slo_target = 0.0;
+        assert!(t.validate().is_err());
+        let mut t = base.clone();
+        t.tenants[0].arrivals = TenantArrivals::Bursty {
+            base_rps: 5.0,
+            burst_rps: 1.0,
+            period_s: 10.0,
+            duty: 0.5,
+        };
+        assert!(t.validate().is_err(), "burst below base");
+    }
+
+    #[test]
+    fn rate_curves_hit_their_landmarks() {
+        let d = TenantArrivals::Diurnal {
+            base_rps: 2.0,
+            peak_rps: 10.0,
+            period_s: 60.0,
+        };
+        assert!((d.rate_at(0.0) - 2.0).abs() < 1e-9);
+        assert!((d.rate_at(30.0) - 10.0).abs() < 1e-9);
+        assert!((d.rate_at(60.0) - 2.0).abs() < 1e-9);
+        assert_eq!(d.peak_rps(), 10.0);
+        let b = TenantArrivals::Bursty {
+            base_rps: 1.0,
+            burst_rps: 20.0,
+            period_s: 10.0,
+            duty: 0.3,
+        };
+        assert_eq!(b.rate_at(1.0), 20.0);
+        assert_eq!(b.rate_at(5.0), 1.0);
+        assert_eq!(b.rate_at(12.0), 20.0);
+        assert_eq!(b.peak_rps(), 20.0);
+    }
+
+    #[test]
+    fn slo_classes_judge_latencies() {
+        let i = SloClass::Interactive { ttft_ms: 1000.0, tpot_ms: 50.0 };
+        assert!(i.attained(0.9, 0.04, 100.0));
+        assert!(!i.attained(1.1, 0.04, 1.5));
+        assert!(!i.attained(0.9, 0.06, 1.5));
+        let b = SloClass::Batch { deadline_s: 60.0 };
+        assert!(b.attained(50.0, 1.0, 59.0));
+        assert!(!b.attained(0.1, 0.01, 61.0));
+    }
+
+    #[test]
+    fn overrides_layer_over_the_spec() {
+        let mut s = ClusterSpec::default();
+        ClusterOverrides::default().apply(&mut s);
+        assert_eq!(s, ClusterSpec::default(), "no flags, no changes");
+        let o = ClusterOverrides {
+            device: Some("thor".to_string()),
+            replicas: Some(3),
+            routing: Some(Routing::RoundRobin),
+            seed: Some(11),
+            energy: Some(false),
+            ..ClusterOverrides::default()
+        };
+        o.apply(&mut s);
+        assert_eq!(s.device, "thor");
+        assert_eq!(s.replicas, 3);
+        assert_eq!(s.routing, Routing::RoundRobin);
+        assert_eq!(s.seed, 11);
+        assert!(!s.energy);
+        // untouched knobs keep their defaults
+        assert_eq!(s.model, ClusterSpec::default().model);
+        assert_eq!(s.pools, ClusterSpec::default().pools);
+    }
+
+    #[test]
+    fn tenant_seeds_derive_or_override() {
+        let t = ClusterSpec::default().tenants[0].clone();
+        let derived = t.trace_seed(7, 0);
+        assert_eq!(derived,
+                   Rng::mix(Rng::mix(7, streams::CLUSTER_TENANT), 0));
+        assert_ne!(t.trace_seed(7, 0), t.trace_seed(7, 1),
+                   "tenants draw independent streams");
+        let mut pinned = t;
+        pinned.seed = Some(99);
+        assert_eq!(pinned.trace_seed(7, 0), 99);
+    }
+}

@@ -35,6 +35,9 @@
 //!   expansion, worker pool, comparison reports.
 //! * [`planner`] — quantization-aware capacity planner (`elana plan`):
 //!   max-fit solver, Pareto deployment recommendations, fleet sizing.
+//! * [`gateway`] — multi-tenant cluster gateway (`elana cluster`):
+//!   SLO-class admission, priority routing, reactive autoscaling over
+//!   replica pools driven by the serve event loop.
 //! * [`tune`] — power-cap/DVFS operating-point tuner (`elana tune`):
 //!   per-phase energy-optimal clocks under latency SLOs.
 //! * [`cli`] — argument parsing for the `elana` binary.
@@ -47,6 +50,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod gateway;
 pub mod hwsim;
 pub mod models;
 pub mod planner;

@@ -14,6 +14,7 @@ use anyhow::Result;
 use elana::cli::{self, Command};
 use elana::config;
 use elana::coordinator::{self, ServeSpec};
+use elana::gateway;
 use elana::hwsim;
 use elana::models;
 use elana::planner;
@@ -95,6 +96,10 @@ fn run(cmd: Command) -> Result<()> {
         }
         Command::Serve { spec, json, out } => {
             cmd_serve(spec, json, out)?;
+        }
+        Command::Cluster { spec_path, overrides, json, out,
+                           assert_slo } => {
+            cmd_cluster(spec_path, overrides, json, out, assert_slo)?;
         }
     }
     Ok(())
@@ -276,6 +281,43 @@ fn cmd_trace(model: &str, device: &str, workload: &hwsim::Workload,
     println!("wrote {out} ({} events) — open in https://ui.perfetto.dev",
              recorder.len());
     print!("{}", trace::analyze(&recorder).render(10));
+    Ok(())
+}
+
+fn cmd_cluster(spec_path: Option<String>,
+               overrides: gateway::spec::ClusterOverrides, json: bool,
+               out: Option<String>, assert_slo: bool) -> Result<()> {
+    // base cluster: the spec file if given, the two-tenant defaults
+    // otherwise; every explicitly-passed flag then overrides the base
+    let mut spec = match spec_path {
+        Some(p) => gateway::ClusterSpec::load(&p)?,
+        None => gateway::ClusterSpec::default(),
+    };
+    overrides.apply(&mut spec);
+    let outcome = gateway::run(&spec)?;
+    emit_json(out.as_deref(), json, |w| {
+        gateway::report::write_json(&outcome, w)
+    })?;
+    if !json {
+        print!("{}", gateway::report::render_markdown(&outcome));
+    }
+    if assert_slo {
+        let misses = outcome.slo_misses();
+        anyhow::ensure!(
+            misses.is_empty(),
+            "--assert-slo: {} tenant(s) missed their attainment \
+             target: {}",
+            misses.len(),
+            misses
+                .iter()
+                .map(|t| format!("{} ({:.1}% < {:.1}%)", t.name,
+                                 t.attainment() * 100.0,
+                                 t.slo_target * 100.0))
+                .collect::<Vec<_>>()
+                .join(", "));
+        eprintln!("assert-slo: all {} tenant(s) met their targets",
+                  outcome.tenants.len());
+    }
     Ok(())
 }
 

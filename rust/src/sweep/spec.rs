@@ -27,7 +27,8 @@ use crate::hwsim::parallel::expand_parallelisms;
 use crate::hwsim::{device, ParallelSpec};
 use crate::models;
 use crate::util::json::Json;
-use crate::util::units::{parse_workload_len, MemUnit};
+use crate::util::spec as fields;
+use crate::util::units::MemUnit;
 
 /// Default grid: the paper's two headline 8B-class models on one cloud
 /// and one edge device, two batch sizes, two workload shapes — 16 cells.
@@ -180,8 +181,9 @@ impl SweepSpec {
         Ok(())
     }
 
-    /// Parse the JSON schema documented in the module header. Missing
-    /// keys fall back to the defaults; present keys must have the right
+    /// Parse the JSON schema documented in the module header, built on
+    /// the shared [`crate::util::spec`] field readers. Missing keys
+    /// fall back to the defaults; present keys must have the right
     /// type (a typo'd or wrong-typed key errors instead of silently
     /// running a different grid).
     pub fn parse(text: &str) -> Result<SweepSpec> {
@@ -190,133 +192,48 @@ impl SweepSpec {
              "tps", "pps", "power_caps", "energy", "unit", "seed",
              "threads"];
         let root = Json::parse(text).context("parsing sweep spec JSON")?;
-        let obj = root
-            .as_obj()
-            .ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
-        for key in obj.keys() {
-            if !KNOWN_KEYS.contains(&key.as_str()) {
-                bail!("unknown key `{key}` in sweep spec (known: {})",
-                      KNOWN_KEYS.join(", "));
-            }
-        }
+        fields::require_known_keys(fields::root_obj(&root, "sweep spec")?,
+                                   &KNOWN_KEYS, "sweep spec")?;
         let mut spec = SweepSpec::default();
-        if let Some(v) = root.get("sweep") {
-            spec.name = v
-                .as_str()
-                .ok_or_else(|| anyhow!("`sweep` must be a string"))?
-                .to_string();
+        if let Some(v) = fields::string_field(&root, "sweep")? {
+            spec.name = v;
         }
-        let strings = |key: &str| -> Result<Option<Vec<String>>> {
-            match root.get(key) {
-                None => Ok(None),
-                Some(v) => v
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("`{key}` must be an array"))?
-                    .iter()
-                    .map(|x| {
-                        x.as_str().map(str::to_string).ok_or_else(|| {
-                            anyhow!("`{key}` entries must be strings")
-                        })
-                    })
-                    .collect::<Result<Vec<_>>>()
-                    .map(Some),
-            }
-        };
-        if let Some(v) = strings("models")? {
+        if let Some(v) = fields::string_list(&root, "models")? {
             spec.models = v;
         }
-        if let Some(v) = strings("devices")? {
+        if let Some(v) = fields::string_list(&root, "devices")? {
             spec.devices = v;
         }
-        if let Some(v) = root.get("batches") {
-            spec.batches = v
-                .as_arr()
-                .ok_or_else(|| anyhow!("`batches` must be an array"))?
-                .iter()
-                .map(|x| {
-                    x.as_usize().ok_or_else(|| {
-                        anyhow!("`batches` entries must be integers")
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?;
+        if let Some(v) = fields::usize_list(&root, "batches")? {
+            spec.batches = v;
         }
-        if let Some(v) = strings("lens")? {
-            spec.lens = v
-                .iter()
-                .map(|l| {
-                    parse_workload_len(l).ok_or_else(|| {
-                        anyhow!("bad lens entry `{l}` (want \"P+G\")")
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?;
+        if let Some(v) = fields::lens_list(&root, "lens")? {
+            spec.lens = v;
         }
-        if let Some(v) = strings("quants")? {
+        if let Some(v) = fields::string_list(&root, "quants")? {
             spec.quants = v;
         }
-        let usizes = |key: &str| -> Result<Option<Vec<usize>>> {
-            match root.get(key) {
-                None => Ok(None),
-                Some(v) => v
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("`{key}` must be an array"))?
-                    .iter()
-                    .map(|x| {
-                        x.as_usize().ok_or_else(|| {
-                            anyhow!("`{key}` entries must be integers")
-                        })
-                    })
-                    .collect::<Result<Vec<_>>>()
-                    .map(Some),
-            }
-        };
-        if let Some(v) = usizes("tps")? {
+        if let Some(v) = fields::usize_list(&root, "tps")? {
             spec.tps = v;
         }
-        if let Some(v) = usizes("pps")? {
+        if let Some(v) = fields::usize_list(&root, "pps")? {
             spec.pps = v;
         }
-        if let Some(v) = root.get("power_caps") {
-            spec.power_caps = v
-                .as_arr()
-                .ok_or_else(|| anyhow!("`power_caps` must be an array"))?
-                .iter()
-                .map(|x| {
-                    x.as_f64().ok_or_else(|| {
-                        anyhow!("`power_caps` entries must be numbers \
-                                 (watts)")
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?;
+        if let Some(v) = fields::f64_list(&root, "power_caps", "watts")? {
+            spec.power_caps = v;
         }
-        if let Some(v) = root.get("energy") {
-            spec.energy = v
-                .as_bool()
-                .ok_or_else(|| anyhow!("`energy` must be a boolean"))?;
+        if let Some(v) = fields::bool_field(&root, "energy")? {
+            spec.energy = v;
         }
-        if let Some(v) = root.get("unit") {
-            let u = v
-                .as_str()
-                .ok_or_else(|| anyhow!("`unit` must be a string"))?;
-            spec.unit = MemUnit::parse(u)
+        if let Some(u) = fields::string_field(&root, "unit")? {
+            spec.unit = MemUnit::parse(&u)
                 .ok_or_else(|| anyhow!("bad unit `{u}` (si|gib)"))?;
         }
-        // seeds may be numbers or strings — report::to_json emits strings
-        // so 64-bit seeds survive the f64 number model
-        if let Some(v) = root.get("seed") {
-            spec.seed = match v {
-                Json::Str(s) => s.parse().map_err(|_| {
-                    anyhow!("bad `seed` string `{s}` (want an integer)")
-                })?,
-                _ => v.as_u64().ok_or_else(|| {
-                    anyhow!("`seed` must be a non-negative integer \
-                             (use a string for values above 2^53)")
-                })?,
-            };
+        if let Some(v) = fields::seed_field(&root, "seed")? {
+            spec.seed = v;
         }
-        if let Some(v) = root.get("threads") {
-            spec.threads = v.as_usize().ok_or_else(|| {
-                anyhow!("`threads` must be a non-negative integer")
-            })?;
+        if let Some(v) = fields::usize_field(&root, "threads")? {
+            spec.threads = v;
         }
         Ok(spec)
     }

@@ -1,8 +1,11 @@
-//! Shared substrates: units, statistics, RNG, JSON, timing.
+//! Shared substrates: units, statistics, RNG, JSON, spec parsing,
+//! stream tags, timing.
 
 pub mod json;
 pub mod rng;
+pub mod spec;
 pub mod stats;
+pub mod streams;
 pub mod timer;
 pub mod units;
 

@@ -1,0 +1,279 @@
+//! Shared JSON spec-parsing helpers.
+//!
+//! ProfileSpec/SweepSpec/PlanSpec/ServeSpec/TuneSpec (and now
+//! ClusterSpec) all read the same shapes out of a spec file: optional
+//! typed scalar fields, list axes, `"P+G"` workload lengths, and seeds
+//! that may arrive as numbers or strings (report JSON emits seeds as
+//! strings so 64-bit values survive the f64 number model). This module
+//! is the single implementation those specs layer on — a field absent
+//! from the file returns `Ok(None)` so the caller keeps its default,
+//! while a present-but-wrong-typed field is an error, never a silent
+//! fallback.
+//!
+//! Error messages interpolate the key name (``"`threads` must be a
+//! non-negative integer"``), so two specs sharing a helper report
+//! identically for the same mistake.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::units::parse_workload_len;
+
+/// The spec root as an object, or the canonical "must be a JSON
+/// object" error (`what` names the spec kind, e.g. `"sweep spec"`).
+pub fn root_obj<'a>(root: &'a Json, what: &str)
+                    -> Result<&'a BTreeMap<String, Json>> {
+    root.as_obj()
+        .ok_or_else(|| anyhow!("{what} must be a JSON object"))
+}
+
+/// Reject typo'd keys: every key in `obj` must appear in `known`,
+/// otherwise the error lists the known names. A misspelled axis must
+/// not silently run the default grid.
+pub fn require_known_keys(obj: &BTreeMap<String, Json>, known: &[&str],
+                          what: &str) -> Result<()> {
+    for key in obj.keys() {
+        if !known.contains(&key.as_str()) {
+            bail!("unknown key `{key}` in {what} (known: {})",
+                  known.join(", "));
+        }
+    }
+    Ok(())
+}
+
+/// Optional string field.
+pub fn string_field(root: &Json, key: &str) -> Result<Option<String>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .map(Some)
+            .ok_or_else(|| anyhow!("`{key}` must be a string")),
+    }
+}
+
+/// Optional array-of-strings field (a list axis).
+pub fn string_list(root: &Json, key: &str) -> Result<Option<Vec<String>>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("`{key}` must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_str().map(str::to_string).ok_or_else(|| {
+                    anyhow!("`{key}` entries must be strings")
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+/// Optional array-of-integers field (a list axis).
+pub fn usize_list(root: &Json, key: &str) -> Result<Option<Vec<usize>>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("`{key}` must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_usize().ok_or_else(|| {
+                    anyhow!("`{key}` entries must be integers")
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+/// Optional array-of-numbers field; `unit` names the expected unit in
+/// the error (e.g. `"watts"`).
+pub fn f64_list(root: &Json, key: &str, unit: &str)
+                -> Result<Option<Vec<f64>>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("`{key}` must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_f64().ok_or_else(|| {
+                    anyhow!("`{key}` entries must be numbers ({unit})")
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+/// Optional list of `"P+G"` workload lengths (the paper's `L = P + G`
+/// notation), parsed to `(prompt_len, gen_len)` pairs.
+pub fn lens_list(root: &Json, key: &str)
+                 -> Result<Option<Vec<(usize, usize)>>> {
+    match string_list(root, key)? {
+        None => Ok(None),
+        Some(v) => v
+            .iter()
+            .map(|l| {
+                parse_workload_len(l).ok_or_else(|| {
+                    anyhow!("bad lens entry `{l}` (want \"P+G\")")
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+/// Optional boolean field.
+pub fn bool_field(root: &Json, key: &str) -> Result<Option<bool>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| anyhow!("`{key}` must be a boolean")),
+    }
+}
+
+/// Optional non-negative integer field.
+pub fn usize_field(root: &Json, key: &str) -> Result<Option<usize>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+            anyhow!("`{key}` must be a non-negative integer")
+        }),
+    }
+}
+
+/// Optional finite-number field.
+pub fn f64_field(root: &Json, key: &str) -> Result<Option<f64>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("`{key}` must be a number")),
+    }
+}
+
+/// Optional seed field: a number, or a string for the full u64 range —
+/// `report::to_json` emits seeds as strings so 64-bit seeds survive
+/// the f64 number model, and specs must round-trip them.
+pub fn seed_field(root: &Json, key: &str) -> Result<Option<u64>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => s.parse().map(Some).map_err(|_| {
+            anyhow!("bad `{key}` string `{s}` (want an integer)")
+        }),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            anyhow!("`{key}` must be a non-negative integer \
+                     (use a string for values above 2^53)")
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn absent_fields_are_none_not_errors() {
+        let root = parse(r#"{"present": 1}"#);
+        assert_eq!(string_field(&root, "absent").unwrap(), None);
+        assert_eq!(string_list(&root, "absent").unwrap(), None);
+        assert_eq!(usize_list(&root, "absent").unwrap(), None);
+        assert_eq!(f64_list(&root, "absent", "watts").unwrap(), None);
+        assert_eq!(lens_list(&root, "absent").unwrap(), None);
+        assert_eq!(bool_field(&root, "absent").unwrap(), None);
+        assert_eq!(usize_field(&root, "absent").unwrap(), None);
+        assert_eq!(f64_field(&root, "absent").unwrap(), None);
+        assert_eq!(seed_field(&root, "absent").unwrap(), None);
+    }
+
+    #[test]
+    fn present_fields_parse_with_their_types() {
+        let root = parse(
+            r#"{"name": "grid", "models": ["a", "b"], "batches": [1, 8],
+                "caps": [150, 220.5], "lens": ["128+64"],
+                "energy": false, "threads": 4, "rate": 2.5,
+                "seed": 42}"#);
+        assert_eq!(string_field(&root, "name").unwrap().unwrap(), "grid");
+        assert_eq!(string_list(&root, "models").unwrap().unwrap(),
+                   vec!["a", "b"]);
+        assert_eq!(usize_list(&root, "batches").unwrap().unwrap(),
+                   vec![1, 8]);
+        assert_eq!(f64_list(&root, "caps", "watts").unwrap().unwrap(),
+                   vec![150.0, 220.5]);
+        assert_eq!(lens_list(&root, "lens").unwrap().unwrap(),
+                   vec![(128, 64)]);
+        assert_eq!(bool_field(&root, "energy").unwrap(), Some(false));
+        assert_eq!(usize_field(&root, "threads").unwrap(), Some(4));
+        assert_eq!(f64_field(&root, "rate").unwrap(), Some(2.5));
+        assert_eq!(seed_field(&root, "seed").unwrap(), Some(42));
+    }
+
+    #[test]
+    fn wrong_types_error_with_the_key_name() {
+        let root = parse(
+            r#"{"name": 7, "models": "a", "batches": ["one"],
+                "energy": "yes", "threads": "4", "lens": ["512"],
+                "seed": true}"#);
+        let err = string_field(&root, "name").unwrap_err().to_string();
+        assert!(err.contains("`name` must be a string"), "{err}");
+        let err = string_list(&root, "models").unwrap_err().to_string();
+        assert!(err.contains("`models` must be an array"), "{err}");
+        let err = usize_list(&root, "batches").unwrap_err().to_string();
+        assert!(err.contains("`batches` entries must be integers"),
+                "{err}");
+        let err = bool_field(&root, "energy").unwrap_err().to_string();
+        assert!(err.contains("`energy` must be a boolean"), "{err}");
+        let err = usize_field(&root, "threads").unwrap_err().to_string();
+        assert!(err.contains("`threads` must be a non-negative integer"),
+                "{err}");
+        let err = lens_list(&root, "lens").unwrap_err().to_string();
+        assert!(err.contains("bad lens entry `512`"), "{err}");
+        assert!(seed_field(&root, "seed").is_err());
+    }
+
+    #[test]
+    fn seeds_round_trip_the_full_u64_range_via_strings() {
+        let root = parse(r#"{"seed": "18446744073709551615"}"#);
+        assert_eq!(seed_field(&root, "seed").unwrap(), Some(u64::MAX));
+        let root = parse(r#"{"seed": "forty-two"}"#);
+        let err = seed_field(&root, "seed").unwrap_err().to_string();
+        assert!(err.contains("bad `seed` string"), "{err}");
+        let root = parse(r#"{"seed": -3}"#);
+        assert!(seed_field(&root, "seed").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_with_the_known_listing() {
+        let root = parse(r#"{"model": ["x"]}"#);
+        let obj = root_obj(&root, "sweep spec").unwrap();
+        let err = require_known_keys(obj, &["models", "devices"],
+                                     "sweep spec")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key `model` in sweep spec"), "{err}");
+        assert!(err.contains("models, devices"), "{err}");
+        require_known_keys(obj, &["model"], "spec").unwrap();
+    }
+
+    #[test]
+    fn non_object_roots_are_rejected() {
+        let err = root_obj(&parse("[1, 2]"), "cluster spec")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cluster spec must be a JSON object"),
+                "{err}");
+    }
+}

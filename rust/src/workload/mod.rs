@@ -18,26 +18,12 @@ use crate::engine::TokenBatch;
 use crate::util::json::Json;
 use crate::util::Rng;
 
-/// Stream-domain tags mixed into seeds (`Rng::mix(seed, TAG)`) so that
-/// subsystems sharing a base seed still draw from decorrelated RNG
-/// streams. Tags are arbitrary distinct constants; what matters is that
-/// no two domains share one.
-pub mod streams {
-    /// Poisson inter-arrival (and length) draws of a request trace.
-    pub const TRACE_ARRIVALS: u64 = 0x454C_414E_4101;
-    /// Prompt-token draws of a request trace.
-    pub const TRACE_PROMPTS: u64 = 0x454C_414E_4102;
-    /// The serving simulator's whole-trace stream.
-    pub const SERVE_TRACE: u64 = 0x454C_414E_4103;
-    /// The serving simulator's per-batch energy-attribution streams.
-    pub const SERVE_ENERGY: u64 = 0x454C_414E_4104;
-    /// The capacity planner's fleet-sizing arrival draws.
-    pub const PLAN_FLEET: u64 = 0x454C_414E_4105;
-    /// The operating-point tuner's stock-clock baseline evaluation.
-    pub const TUNE_BASELINE: u64 = 0x454C_414E_4106;
-    /// The tuner's combined (phase-split) recommendation evaluation.
-    pub const TUNE_COMBINED: u64 = 0x454C_414E_4107;
-}
+// The tags themselves live in `util::streams` (one constants module,
+// compile-time uniqueness check); re-exported here because the
+// workload generators are where every stream is mixed into a seed, and
+// `workload::streams::X` is the path the rest of the crate grew up
+// using.
+pub use crate::util::streams;
 
 /// Deterministic random-prompt generator.
 #[derive(Debug, Clone)]
@@ -128,6 +114,41 @@ impl RequestTrace {
                 }
             })
             .collect();
+        RequestTrace { requests }
+    }
+
+    /// `n` requests from a *non-homogeneous* Poisson process via
+    /// thinning (Lewis–Shedler): candidate arrivals are drawn at the
+    /// constant `peak_rps` envelope and accepted with probability
+    /// `rate(t) / peak_rps` — diurnal and bursty traffic shapes for
+    /// the cluster gateway. `rate(t)` must stay within `[0, peak_rps]`
+    /// (the acceptance probability is clamped, so an excursion above
+    /// the envelope flattens rather than errors). Stream discipline is
+    /// identical to [`RequestTrace::poisson`]: arrivals (and the
+    /// accept/length draws) on the `TRACE_ARRIVALS` stream, prompt
+    /// tokens on `TRACE_PROMPTS`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn poisson_thinned(n: usize, peak_rps: f64,
+                           rate: impl Fn(f64) -> f64, len_lo: usize,
+                           len_hi: usize, gen_len: usize,
+                           vocab_size: usize, seed: u64) -> RequestTrace {
+        assert!(peak_rps > 0.0, "peak_rps must be positive");
+        let mut rng = Rng::new(Rng::mix(seed, streams::TRACE_ARRIVALS));
+        let mut gen = PromptGen::new(vocab_size,
+                                     Rng::mix(seed, streams::TRACE_PROMPTS));
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(n);
+        while requests.len() < n {
+            t += rng.exponential(peak_rps);
+            if rng.f64() * peak_rps <= rate(t).clamp(0.0, peak_rps) {
+                requests.push(Request {
+                    id: requests.len() as u64,
+                    arrival_s: t,
+                    prompt: gen.prompt(rng.usize_in(len_lo, len_hi)),
+                    gen_len,
+                });
+            }
+        }
         RequestTrace { requests }
     }
 
@@ -319,6 +340,39 @@ mod tests {
         // 200 requests at 10 rps ≈ 20 s span (loose bound)
         assert!((10.0..40.0).contains(&tr.duration_s()),
                 "{}", tr.duration_s());
+    }
+
+    #[test]
+    fn thinned_trace_sorted_deterministic_and_rate_shaped() {
+        // diurnal raised-cosine: rate 2..18 rps over a 20 s period
+        let rate = |t: f64| {
+            2.0 + 16.0 * 0.5
+                * (1.0 - (2.0 * std::f64::consts::PI * t / 20.0).cos())
+        };
+        let a = RequestTrace::poisson_thinned(400, 18.0, rate, 16, 32, 8,
+                                              512, 9);
+        let b = RequestTrace::poisson_thinned(400, 18.0, rate, 16, 32, 8,
+                                              512, 9);
+        assert_eq!(a.requests, b.requests, "thinned traces must replay");
+        assert_eq!(a.len(), 400);
+        for (i, w) in a.requests.windows(2).enumerate() {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "unsorted at {i}");
+        }
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!((16..=32).contains(&r.prompt.len()));
+        }
+        // thinning concentrates arrivals near the rate peak (t around
+        // 10 s mod 20): the busy half of each period must hold clearly
+        // more than half the arrivals
+        let peak_half = a.requests.iter()
+            .filter(|r| {
+                let phase = r.arrival_s.rem_euclid(20.0);
+                (5.0..15.0).contains(&phase)
+            })
+            .count();
+        assert!(peak_half * 3 > a.len() * 2,
+                "{peak_half}/{} arrivals in the peak half", a.len());
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! `elana cluster` acceptance: the degenerate cluster must reproduce
+//! `elana serve` bit for bit, admission must uphold its rate/order
+//! invariants end to end, the autoscaler must stay inside its bounds,
+//! and reports must be byte-identical at any `--workers` count.
+
+use elana::coordinator::{self, Arrivals, ServeSpec};
+use elana::gateway::spec::{AdmissionSpec, AutoscaleSpec, OnLimit,
+                           RateLimit, TenantArrivals, TenantSpec};
+use elana::gateway::{self, ClusterSpec, Routing, SloClass};
+use elana::util::json::Json;
+use elana::util::{streams, Rng};
+
+/// A single-tenant cluster that must match `serve` on the same trace:
+/// open admission, one pool, fixed replicas, and the tenant seed
+/// pinned to the exact stream `serve` draws its trace from.
+fn degenerate_cluster(serve: &ServeSpec) -> ClusterSpec {
+    let rate = match serve.arrivals {
+        Arrivals::Poisson { rate_rps } => rate_rps,
+        _ => unreachable!("equivalence runs on Poisson arrivals"),
+    };
+    ClusterSpec {
+        model: serve.model.clone(),
+        device: serve.device.clone(),
+        quant: serve.quant.clone(),
+        pools: 1,
+        replicas: serve.replicas,
+        tenants: vec![TenantSpec {
+            name: "solo".to_string(),
+            class: SloClass::Batch { deadline_s: 1e9 },
+            slo_target: 0.9,
+            arrivals: TenantArrivals::Poisson { rate_rps: rate },
+            requests: serve.requests,
+            prompt_lo: serve.prompt_lo,
+            prompt_hi: serve.prompt_hi,
+            gen_len: serve.gen_len,
+            seed: Some(Rng::mix(serve.seed, streams::SERVE_TRACE)),
+            admission: AdmissionSpec::default(),
+        }],
+        routing: Routing::LeastLoaded,
+        autoscale: None,
+        workers: serve.workers,
+        seed: serve.seed,
+        energy: false,
+        max_wait_s: serve.max_wait_s,
+        max_seq_len: serve.max_seq_len,
+        ..ClusterSpec::default()
+    }
+}
+
+#[test]
+fn degenerate_cluster_reproduces_serve_bitwise() {
+    for (i, &(requests, rate, replicas)) in [
+        (1usize, 2.0f64, 1usize),
+        (7, 2.0, 3),
+        (7, 50.0, 1),
+        (32, 50.0, 3),
+        (32, 200.0, 1),
+        (40, 25.0, 2),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let serve = ServeSpec {
+            requests,
+            arrivals: Arrivals::Poisson { rate_rps: rate },
+            prompt_lo: 16,
+            prompt_hi: 96,
+            gen_len: 24,
+            replicas,
+            seed: 42 + i as u64,
+            energy: false,
+            ..ServeSpec::default()
+        };
+        let s = coordinator::simulate::run(&serve).unwrap();
+        let c = gateway::run(&degenerate_cluster(&serve)).unwrap();
+        let grid = format!("requests={requests} rate={rate} \
+                            replicas={replicas}");
+        assert_eq!(s.requests.len(), c.requests.len(), "{grid}");
+        for (a, b) in s.requests.iter().zip(&c.requests) {
+            assert_eq!(a.id, b.id, "{grid}");
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(),
+                       "{grid}");
+            assert_eq!(b.gateway_wait_s.to_bits(), 0f64.to_bits(),
+                       "open admission never holds a request ({grid})");
+            assert_eq!(a.queue_wait_s.to_bits(), b.queue_wait_s.to_bits(),
+                       "{grid}");
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{grid}");
+            assert_eq!(a.tpot_s.to_bits(), b.tpot_s.to_bits(), "{grid}");
+            assert_eq!(a.ttlt_s.to_bits(), b.ttlt_s.to_bits(), "{grid}");
+            assert_eq!(a.batch, b.batch, "{grid}");
+            assert_eq!(a.prompt_len, b.prompt_len, "{grid}");
+            assert_eq!(a.gen_len, b.gen_len, "{grid}");
+        }
+        assert_eq!(c.pools.len(), 1, "{grid}");
+        assert_eq!(s.batches.len(), c.pools[0].batches.len(), "{grid}");
+        for (a, b) in s.batches.iter().zip(&c.pools[0].batches) {
+            assert_eq!(a.index, b.index, "{grid}");
+            assert_eq!(a.replica, b.replica, "{grid}");
+            assert_eq!(a.dequeue_s.to_bits(), b.dequeue_s.to_bits(),
+                       "{grid}");
+            assert_eq!(a.service_s.to_bits(), b.service_s.to_bits(),
+                       "{grid}");
+            assert_eq!(a.exec_batch, b.exec_batch, "{grid}");
+            assert_eq!(a.padded_prompt_len, b.padded_prompt_len, "{grid}");
+            assert_eq!(a.real_rows, b.real_rows, "{grid}");
+        }
+        assert_eq!(s.makespan_s.to_bits(), c.makespan_s.to_bits(),
+                   "{grid}");
+        assert_eq!(s.busy_s.to_bits(), c.busy_s.to_bits(), "{grid}");
+    }
+}
+
+#[test]
+fn cluster_report_is_byte_identical_across_worker_counts() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 4]
+        .iter()
+        .map(|&workers| {
+            let mut spec = ClusterSpec {
+                seed: 7,
+                workers,
+                ..ClusterSpec::default()
+            };
+            for t in &mut spec.tenants {
+                t.requests = 12;
+                t.gen_len = 8;
+            }
+            let o = gateway::run(&spec).unwrap();
+            let mut buf = Vec::new();
+            gateway::report::write_json(&o, &mut buf).unwrap();
+            (buf, gateway::report::to_json(&o).to_string(),
+             gateway::report::render_markdown(&o))
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    // and the artifact is real: parse it back and spot-check
+    let v = Json::parse(&runs[0].1).unwrap();
+    assert_eq!(v.get("n_requests").unwrap().as_usize(), Some(24));
+    assert_eq!(v.get("n_tenants").unwrap().as_usize(), Some(2));
+    assert_eq!(v.get("routing").unwrap().as_str(), Some("least-loaded"));
+    let jain = v.get("jain_fairness").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&jain), "{jain}");
+    assert!(v.get("total_joules").unwrap().as_f64().unwrap() > 0.0);
+    let tenants = v.get("tenants").unwrap().as_arr().unwrap();
+    assert_eq!(tenants.len(), 2);
+    for t in tenants {
+        assert!(t.get("attainment").unwrap().as_f64().is_some());
+        let ttft = t.get("latency_ms").unwrap().get("TTFT ms").unwrap();
+        assert!(ttft.get("p99").unwrap().as_f64().is_some());
+    }
+}
+
+#[test]
+fn rate_limited_tenant_never_exceeds_its_bucket_end_to_end() {
+    let (rate, burst) = (5.0f64, 3usize);
+    let spec = ClusterSpec {
+        seed: 11,
+        energy: false,
+        tenants: vec![TenantSpec {
+            name: "throttled".to_string(),
+            class: SloClass::Batch { deadline_s: 1e9 },
+            slo_target: 0.1,
+            arrivals: TenantArrivals::Poisson { rate_rps: 40.0 },
+            requests: 60,
+            prompt_lo: 16,
+            prompt_hi: 32,
+            gen_len: 4,
+            seed: None,
+            admission: AdmissionSpec {
+                rate_limit: Some(RateLimit {
+                    rate_rps: rate,
+                    burst,
+                    on_limit: OnLimit::Defer,
+                }),
+                token_budget: None,
+            },
+        }],
+        ..ClusterSpec::default()
+    };
+    let o = gateway::run(&spec).unwrap();
+    assert_eq!(o.tenants[0].served, 60, "defer never drops");
+    assert!(o.tenants[0].deferred > 0,
+            "a 40 rps offered load must trip a 5 rps bucket");
+    let admits: Vec<f64> = o.requests.iter().map(|r| r.admit_s).collect();
+    // per-tenant order is preserved: arrivals and admissions are both
+    // monotone over the id order the gateway assigned
+    for w in o.requests.windows(2) {
+        assert!(w[1].arrival_s >= w[0].arrival_s, "arrival order");
+        assert!(w[1].admit_s >= w[0].admit_s, "admission order");
+        assert!(w[1].admit_s >= w[1].arrival_s, "no time travel");
+    }
+    // bucket invariant over every 1-second window of admissions
+    for (i, &t0) in admits.iter().enumerate() {
+        let in_window =
+            admits[i..].iter().take_while(|&&t| t < t0 + 1.0).count();
+        assert!(in_window as f64 <= burst as f64 + rate + 1e-9,
+                "{in_window} admissions within 1 s of t={t0:.3}");
+    }
+}
+
+#[test]
+fn autoscaler_stays_in_bounds_and_spaces_its_scale_ups() {
+    let autoscale = AutoscaleSpec {
+        min_replicas: 1,
+        max_replicas: 3,
+        up_queue_depth: 4,
+        down_queue_depth: 1,
+        up_ttft_ms: None,
+        up_cooldown_s: 0.5,
+        down_cooldown_s: 2.0,
+        warmup_s: 0.2,
+    };
+    let spec = ClusterSpec {
+        seed: 3,
+        energy: false,
+        replicas: 1,
+        autoscale: Some(autoscale.clone()),
+        tenants: vec![TenantSpec {
+            name: "surge".to_string(),
+            class: SloClass::Batch { deadline_s: 1e9 },
+            slo_target: 0.1,
+            arrivals: TenantArrivals::Bursty {
+                base_rps: 1.0,
+                burst_rps: 150.0,
+                period_s: 4.0,
+                duty: 0.4,
+            },
+            requests: 96,
+            prompt_lo: 16,
+            prompt_hi: 64,
+            gen_len: 16,
+            seed: None,
+            admission: AdmissionSpec::default(),
+        }],
+        ..ClusterSpec::default()
+    };
+    let o = gateway::run(&spec).unwrap();
+    let timeline = &o.pools[0].replica_timeline;
+    assert_eq!(timeline[0], (0.0, 1), "starts at the configured size");
+    assert!(timeline.len() > 1, "the burst must trigger scaling");
+    let mut up_times = Vec::new();
+    for w in timeline.windows(2) {
+        let (prev, next) = (w[0].1, w[1].1);
+        assert!((autoscale.min_replicas..=autoscale.max_replicas)
+                    .contains(&next),
+                "{next} outside bounds in {timeline:?}");
+        assert!(next.abs_diff(prev) == 1,
+                "one replica per decision in {timeline:?}");
+        if next > prev {
+            up_times.push(w[1].0);
+        }
+    }
+    assert!(!up_times.is_empty(), "{timeline:?}");
+    for w in up_times.windows(2) {
+        assert!(w[1] - w[0] >= autoscale.up_cooldown_s - 1e-9,
+                "scale-ups {:.3}s apart under a {:.1}s cooldown \
+                 ({timeline:?})", w[1] - w[0], autoscale.up_cooldown_s);
+    }
+    // every served request still accounted for despite the churn
+    assert_eq!(o.requests.len(), 96);
+}
+
+#[test]
+fn example_cluster_specs_parse_validate_and_assert_slo_as_documented() {
+    let ok = ClusterSpec::load("../examples/cluster_diurnal.json").unwrap();
+    ok.validate().unwrap();
+    assert!(ok.tenants.len() >= 2, "the example is multi-tenant");
+    assert!(ok.autoscale.is_some(), "the example exercises autoscaling");
+    assert!(ok.tenants.iter().any(|t| !t.admission.is_open()),
+            "the example exercises admission control");
+
+    let miss = ClusterSpec::load("../examples/cluster_slo_miss.json")
+        .unwrap();
+    miss.validate().unwrap();
+    let o = gateway::run(&miss).unwrap();
+    assert!(!o.slo_misses().is_empty(),
+            "the negative example must miss its SLO");
+}

@@ -42,7 +42,7 @@ fn main() {
     section("Figure 1 — Perfetto kernel trace (regenerated)");
     let recorder = build_recorder();
     let path = "target/figure1_trace.json";
-    trace::perfetto::write_chrome_trace(
+    trace::chrome::write_chrome_trace(
         &recorder, "ELANA Llama-3.1-8B on A6000", path)
         .expect("write trace");
     println!("wrote {path} ({} events) — open in https://ui.perfetto.dev",

@@ -165,6 +165,31 @@ pub(crate) fn window_attribution(log: &crate::power::sampler::PowerLog,
     }
 }
 
+/// Extra seconds chunked prefill adds over the monolithic prefill of a
+/// `prompt_len`-token prompt. The telescoped per-chunk attention work
+/// sums to the monolithic prefill, so the modeled overhead is what
+/// chunking genuinely adds: one more full weight-stream pass per extra
+/// chunk, priced as a decode step at the context reached by that chunk
+/// boundary (a decode step *is* one weight pass + KV read). Returns
+/// 0.0 when chunking is off (`chunk == 0`) or the prompt fits one
+/// chunk, so the legacy path stays bit-identical.
+pub fn chunked_prefill_extra_s(backend: &mut dyn ExecutionBackend,
+                               batch: usize, prompt_len: usize,
+                               chunk: usize) -> Result<f64> {
+    if chunk == 0 || chunk >= prompt_len {
+        return Ok(0.0);
+    }
+    let mut extra = 0.0;
+    let mut ctx = chunk;
+    while ctx < prompt_len {
+        let tb = TokenBatch::new(batch, ctx, vec![0; batch * ctx])?;
+        let (steps, _) = backend.decode_probe(&tb, 1)?;
+        extra += steps.first().copied().unwrap_or(0.0);
+        ctx += chunk;
+    }
+    Ok(extra)
+}
+
 /// Build the backend a `ProfileSpec` names: `cpu` → the PJRT engine
 /// (AOT artifacts required), anything else → the hwsim rig of that
 /// name. This is the single place the simulated-vs-engine decision
@@ -196,6 +221,10 @@ pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
             spec.op.map(|o| o.is_identity()).unwrap_or(true),
             "clock/power-cap operating points apply to simulated rigs \
              only; the `cpu` engine has no modeled DVFS governor");
+        anyhow::ensure!(
+            spec.kv_reuse.is_none() && spec.prefill_chunk.is_none(),
+            "kv_reuse / prefill_chunk modeling applies to simulated \
+             rigs only; the `cpu` engine executes the full prefill");
         let manifest = crate::runtime::Manifest::load_default()?;
         Ok(Box::new(EngineBackend::new(&manifest, &spec.model)?))
     }

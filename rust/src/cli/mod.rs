@@ -13,9 +13,10 @@
 //! elana plan   [--models a,b] [--devices d1,d2] [--quant q1,q2]
 //!              [--lens 512+512] [--rate RPS] [--workers N]
 //! elana trace  --model M --device D --batch B --len P+G --out trace.json
-//! elana serve  [--model M] [--device D] [--requests N] [--rate R]
-//!              [--trace t.json] [--prompts LO..HI] [--gen G]
+//! elana serve  [--spec s.json] [--model M] [--device D] [--requests N]
+//!              [--rate R] [--trace t.json] [--prompts LO..HI] [--gen G]
 //!              [--replicas R] [--workers W] [--seed S]
+//!              [--kv-reuse H] [--prefill-chunk T]
 //! elana cluster [--spec c.json] [--pools P] [--replicas R]
 //!              [--routing STRATEGY] [--assert-slo]
 //! elana models
@@ -23,7 +24,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::spec::{Arrivals, ServeSpec};
+use crate::coordinator::spec::{Arrivals, ServeOverrides};
 use crate::gateway::spec::ClusterOverrides;
 use crate::gateway::Routing;
 use crate::hwsim::{OperatingPoint, ParallelSpec, Workload};
@@ -108,7 +109,11 @@ pub enum Command {
     /// The serving subsystem: virtual-time trace-replay simulator on
     /// hwsim rigs, wall-clock serving on `--device cpu`.
     Serve {
-        spec: ServeSpec,
+        /// JSON spec file providing the scenario (defaults otherwise);
+        /// `disagg` pools are declared here.
+        spec_path: Option<String>,
+        /// Explicitly-given flags, layered over the spec file.
+        overrides: ServeOverrides,
         /// Print JSON to stdout instead of the markdown report.
         json: bool,
         /// Write the JSON report here.
@@ -184,8 +189,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
         }
         "suite" => Some(&[]),
         "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
-                          "quant", "tp", "pp", "power-cap", "threads",
-                          "seed", "unit", "no-energy", "out", "json"]),
+                          "quant", "tp", "pp", "power-cap", "kv-reuse",
+                          "prefill-chunks", "threads", "seed", "unit",
+                          "no-energy", "out", "json"]),
         "plan" => Some(&["models", "devices", "quant", "lens", "tp", "pp",
                          "power-cap", "rate", "workers", "seed", "unit",
                          "no-energy", "out", "json",
@@ -195,11 +201,11 @@ pub fn parse(args: &[String]) -> Result<Command> {
                          "slo-tpot", "seed", "workers", "with-energy",
                          "out", "json", "assert-recommendation"]),
         "trace" => Some(&["model", "device", "batch", "len", "out"]),
-        "serve" => Some(&["model", "device", "requests", "rate", "trace",
-                          "prompts", "gen", "replicas", "workers", "seed",
-                          "max-wait", "max-seq-len", "quant", "tp", "pp",
-                          "power-cap", "phase-dvfs", "no-energy", "json",
-                          "out"]),
+        "serve" => Some(&["spec", "model", "device", "requests", "rate",
+                          "trace", "prompts", "gen", "replicas", "workers",
+                          "seed", "max-wait", "max-seq-len", "quant", "tp",
+                          "pp", "power-cap", "phase-dvfs", "kv-reuse",
+                          "prefill-chunk", "no-energy", "json", "out"]),
         "cluster" => Some(&["spec", "model", "device", "quant", "pools",
                             "replicas", "routing", "workers", "seed",
                             "no-energy", "json", "out", "assert-slo"]),
@@ -215,7 +221,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
         // word is a mistake (e.g. a forgotten --spec)
         if cmd != "suite" {
             if let Some(arg) = positional.first() {
-                if cmd == "sweep" || cmd == "cluster" {
+                if cmd == "sweep" || cmd == "cluster" || cmd == "serve" {
                     bail!("unexpected argument `{arg}` for `{cmd}` \
                            (did you mean --spec {arg}?)");
                 }
@@ -416,6 +422,31 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 tps: par_list("tp")?,
                 pps: par_list("pp")?,
                 power_caps: cap_list("power-cap")?,
+                kv_reuse: get("kv-reuse")
+                    .map(|hs| {
+                        hs.split(',')
+                            .map(|h| match h.trim().parse::<f64>() {
+                                Ok(v) if v.is_finite()
+                                    && (0.0..1.0).contains(&v) => Ok(v),
+                                _ => Err(anyhow!(
+                                    "bad --kv-reuse entry `{h}` (want \
+                                     hit-rates in [0, 1))")),
+                            })
+                            .collect::<Result<Vec<f64>>>()
+                    })
+                    .transpose()?,
+                prefill_chunks: get("prefill-chunks")
+                    .map(|cs| {
+                        cs.split(',')
+                            .map(|c| match c.trim().parse::<usize>() {
+                                Ok(n) if n >= 1 => Ok(n),
+                                _ => Err(anyhow!(
+                                    "bad --prefill-chunks entry `{c}` \
+                                     (want tokens >= 1)")),
+                            })
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .transpose()?,
                 energy: if has("no-energy") { Some(false) } else { None },
                 unit: get("unit")
                     .map(|u| {
@@ -571,94 +602,119 @@ pub fn parse(args: &[String]) -> Result<Command> {
             out: get("out").unwrap_or("trace.json").to_string(),
         }),
         "serve" => {
-            let mut spec = ServeSpec::default();
-            if let Some(m) = get("model") {
-                spec.model = m.to_string();
-            }
-            if let Some(d) = get("device") {
-                spec.device = d.to_string();
-            }
-            if let Some(n) = get("requests") {
-                spec.requests =
-                    n.parse().map_err(|_| anyhow!("bad --requests"))?;
-            }
-            match (get("rate"), get("trace")) {
+            let arrivals = match (get("rate"), get("trace")) {
                 (Some(_), Some(_)) => {
                     bail!("pass either --rate or --trace, not both")
                 }
-                (Some(r), None) => {
-                    spec.arrivals = Arrivals::Poisson {
-                        rate_rps: r.parse()
-                            .map_err(|_| anyhow!("bad --rate"))?,
+                (Some(r), None) => Some(Arrivals::Poisson {
+                    rate_rps: r.parse()
+                        .map_err(|_| anyhow!("bad --rate"))?,
+                }),
+                (None, Some(t)) => Some(Arrivals::Trace {
+                    path: t.to_string(),
+                }),
+                (None, None) => None,
+            };
+            let (prompt_lo, prompt_hi) = match get("prompts") {
+                None => (None, None),
+                Some(p) => {
+                    let (lo, hi) = match p.split_once("..") {
+                        Some((lo, hi)) => (
+                            lo.parse().map_err(|_| {
+                                anyhow!("bad --prompts `{p}` \
+                                         (want LO..HI)")
+                            })?,
+                            hi.parse().map_err(|_| {
+                                anyhow!("bad --prompts `{p}` \
+                                         (want LO..HI)")
+                            })?,
+                        ),
+                        None => {
+                            let n: usize = p.parse().map_err(|_| {
+                                anyhow!("bad --prompts `{p}` \
+                                         (want LO..HI)")
+                            })?;
+                            (n, n)
+                        }
                     };
+                    (Some(lo), Some(hi))
                 }
-                (None, Some(t)) => {
-                    spec.arrivals = Arrivals::Trace {
-                        path: t.to_string(),
-                    };
-                }
-                (None, None) => {}
-            }
-            if let Some(p) = get("prompts") {
-                let (lo, hi) = match p.split_once("..") {
-                    Some((lo, hi)) => (
-                        lo.parse().map_err(|_| {
-                            anyhow!("bad --prompts `{p}` (want LO..HI)")
-                        })?,
-                        hi.parse().map_err(|_| {
-                            anyhow!("bad --prompts `{p}` (want LO..HI)")
-                        })?,
-                    ),
-                    None => {
-                        let n: usize = p.parse().map_err(|_| {
-                            anyhow!("bad --prompts `{p}` (want LO..HI)")
-                        })?;
-                        (n, n)
-                    }
-                };
-                spec.prompt_lo = lo;
-                spec.prompt_hi = hi;
-            }
-            if let Some(g) = get("gen") {
-                spec.gen_len =
-                    g.parse().map_err(|_| anyhow!("bad --gen"))?;
-            }
-            if let Some(r) = get("replicas") {
-                spec.replicas =
-                    r.parse().map_err(|_| anyhow!("bad --replicas"))?;
-            }
-            if let Some(w) = get("workers") {
-                spec.workers =
-                    w.parse().map_err(|_| anyhow!("bad --workers"))?;
-            }
-            if let Some(s) = get("seed") {
-                spec.seed =
-                    s.parse().map_err(|_| anyhow!("bad --seed"))?;
-            }
-            if let Some(w) = get("max-wait") {
-                let ms: f64 =
-                    w.parse().map_err(|_| anyhow!("bad --max-wait"))?;
-                if ms.is_nan() || ms < 0.0 {
-                    bail!("bad --max-wait (want milliseconds >= 0)");
-                }
-                spec.max_wait_s = ms / 1e3;
-            }
-            if let Some(m) = get("max-seq-len") {
-                spec.max_seq_len =
-                    m.parse().map_err(|_| anyhow!("bad --max-seq-len"))?;
-            }
-            if let Some(q) = get("quant") {
-                quant::parse_token(q)?;
-                spec.quant = q.trim().to_ascii_lowercase();
-            }
-            spec.parallel = parallel_single()?;
-            spec.power_cap = cap_single("power-cap")?;
-            spec.phase_dvfs = has("phase-dvfs");
-            if has("no-energy") {
-                spec.energy = false;
-            }
+            };
+            let overrides = ServeOverrides {
+                model: get("model").map(str::to_string),
+                device: get("device").map(str::to_string),
+                arrivals,
+                requests: get("requests")
+                    .map(|n| n.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --requests"))?,
+                prompt_lo,
+                prompt_hi,
+                gen_len: get("gen")
+                    .map(|g| g.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --gen"))?,
+                replicas: get("replicas")
+                    .map(|r| r.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --replicas"))?,
+                workers: get("workers")
+                    .map(|w| w.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --workers"))?,
+                seed: get("seed")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --seed"))?,
+                energy: if has("no-energy") { Some(false) } else { None },
+                max_wait_s: get("max-wait")
+                    .map(|w| -> Result<f64> {
+                        let ms: f64 = w.parse()
+                            .map_err(|_| anyhow!("bad --max-wait"))?;
+                        if ms.is_nan() || ms < 0.0 {
+                            bail!("bad --max-wait (want milliseconds \
+                                   >= 0)");
+                        }
+                        Ok(ms / 1e3)
+                    })
+                    .transpose()?,
+                max_seq_len: get("max-seq-len")
+                    .map(|m| m.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --max-seq-len"))?,
+                quant: get("quant")
+                    .map(|q| -> Result<String> {
+                        quant::parse_token(q)?;
+                        Ok(q.trim().to_ascii_lowercase())
+                    })
+                    .transpose()?,
+                parallel: parallel_single()?,
+                power_cap: cap_single("power-cap")?,
+                phase_dvfs: if has("phase-dvfs") {
+                    Some(true)
+                } else {
+                    None
+                },
+                kv_reuse: get("kv-reuse")
+                    .map(|h| match h.parse::<f64>() {
+                        Ok(v) if v.is_finite()
+                            && (0.0..1.0).contains(&v) => Ok(v),
+                        _ => Err(anyhow!(
+                            "bad --kv-reuse (want a hit-rate in \
+                             [0, 1))")),
+                    })
+                    .transpose()?,
+                prefill_chunk: get("prefill-chunk")
+                    .map(|c| match c.parse::<usize>() {
+                        Ok(n) if n >= 1 => Ok(n),
+                        _ => Err(anyhow!(
+                            "bad --prefill-chunk (want tokens >= 1)")),
+                    })
+                    .transpose()?,
+            };
             Ok(Command::Serve {
-                spec,
+                spec_path: get("spec").map(str::to_string),
+                overrides,
                 json: has("json"),
                 out: get("out").map(str::to_string),
             })
@@ -728,7 +784,8 @@ USAGE:
   elana sweep   [--spec sweep.json] [--models m1,m2] [--devices d1,d2]
                 [--batches 1,8] [--lens 256+256,512+512]
                 [--quant native,w4a16] [--tp 1,2,4] [--pp 1,2]
-                [--power-cap 150,220] [--threads N] [--seed S]
+                [--power-cap 150,220] [--kv-reuse 0.0,0.5]
+                [--prefill-chunks 64,128] [--threads N] [--seed S]
                 [--unit si|gib] [--no-energy] [--out sweep.json] [--json]
   elana plan    [--models m1,m2] [--devices d1,d2]
                 [--quant bf16,w8a16,w4a16,w4a8kv4]
@@ -744,11 +801,12 @@ USAGE:
                 [--assert-recommendation]
   elana trace   --model MODEL --device DEV [--batch B] [--len P+G]
                 [--out trace.json]
-  elana serve   [--model MODEL] [--device RIG|cpu] [--requests N]
-                [--rate RPS | --trace trace.json] [--prompts LO..HI]
-                [--gen G] [--replicas R] [--workers W] [--seed S]
-                [--max-wait MS] [--max-seq-len L] [--quant SCHEME]
-                [--tp N] [--pp N] [--power-cap W] [--phase-dvfs]
+  elana serve   [--spec serve.json] [--model MODEL] [--device RIG|cpu]
+                [--requests N] [--rate RPS | --trace trace.json]
+                [--prompts LO..HI] [--gen G] [--replicas R] [--workers W]
+                [--seed S] [--max-wait MS] [--max-seq-len L]
+                [--quant SCHEME] [--tp N] [--pp N] [--power-cap W]
+                [--phase-dvfs] [--kv-reuse H] [--prefill-chunk T]
                 [--no-energy] [--out serve.json] [--json]
   elana cluster [--spec cluster.json] [--model MODEL] [--device RIG]
                 [--quant SCHEME] [--pools P] [--replicas R]
@@ -776,12 +834,20 @@ batch deadline), token-bucket/budget admission with defer or reject,
 least-loaded / round-robin / session-affinity routing over replica
 pools, and a reactive autoscaler; tenants, admission, and autoscale
 live in the --spec JSON (see examples/cluster_diurnal.json).
+Disaggregation: a `disagg` block in the serve/cluster --spec JSON
+splits prefill and decode onto separate rank pools (each with its own
+device, replicas, tp/pp, power cap) and costs the prefill->decode KV
+handoff through the named interconnect (pcie4 | nvlink3 | nvlink4 |
+unified); --kv-reuse H skips the resident prefix fraction of prefill
+compute and KV-transfer bytes, --prefill-chunk T interleaves prefill
+in fixed token chunks (see examples/disagg_split.json).
 Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
 ";
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::spec::ServeSpec;
 
     fn argv(s: &str) -> Vec<String> {
         s.split_whitespace().map(str::to_string).collect()
@@ -891,16 +957,16 @@ mod tests {
         // serve: single cap + the phase policy flag
         match parse(&argv("serve --power-cap 220 --phase-dvfs")).unwrap()
         {
-            Command::Serve { spec, .. } => {
-                assert_eq!(spec.power_cap, Some(220.0));
-                assert!(spec.phase_dvfs);
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.power_cap, Some(220.0));
+                assert_eq!(overrides.phase_dvfs, Some(true));
             }
             c => panic!("{c:?}"),
         }
         match parse(&argv("serve")).unwrap() {
-            Command::Serve { spec, .. } => {
-                assert_eq!(spec.power_cap, None);
-                assert!(!spec.phase_dvfs);
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.power_cap, None);
+                assert_eq!(overrides.phase_dvfs, None);
             }
             c => panic!("{c:?}"),
         }
@@ -997,8 +1063,9 @@ mod tests {
         assert!(parse(&argv("plan --tp 0,1")).is_err());
         // serve: one mapping
         match parse(&argv("serve --tp 2")).unwrap() {
-            Command::Serve { spec, .. } => {
-                assert_eq!(spec.parallel, Some(ParallelSpec::new(2, 1)));
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.parallel,
+                           Some(ParallelSpec::new(2, 1)));
             }
             c => panic!("{c:?}"),
         }
@@ -1052,7 +1119,9 @@ mod tests {
             c => panic!("{c:?}"),
         }
         match parse(&argv("serve --requests 8 --rate 10")).unwrap() {
-            Command::Serve { spec, json, out } => {
+            Command::Serve { overrides, json, out, .. } => {
+                let mut spec = ServeSpec::default();
+                overrides.apply(&mut spec);
                 assert_eq!(spec.model, "llama-3.1-8b");
                 assert_eq!(spec.device, "a6000");
                 assert_eq!(spec.requests, 8);
@@ -1068,7 +1137,11 @@ mod tests {
     #[test]
     fn parse_serve_defaults() {
         match parse(&argv("serve")).unwrap() {
-            Command::Serve { spec, json, out } => {
+            Command::Serve { spec_path, overrides, json, out } => {
+                assert!(spec_path.is_none());
+                assert_eq!(overrides, ServeOverrides::default());
+                let mut spec = ServeSpec::default();
+                overrides.apply(&mut spec);
                 assert_eq!(spec, ServeSpec::default());
                 assert!(!json);
                 assert!(out.is_none());
@@ -1080,12 +1153,16 @@ mod tests {
     #[test]
     fn parse_serve_full_flag_set() {
         let c = parse(&argv(
-            "serve --model qwen-2.5-7b --device thor --requests 40 \
-             --rate 12.5 --prompts 32..128 --gen 48 --replicas 3 \
-             --workers 4 --seed 9 --max-wait 20 --max-seq-len 2048 \
+            "serve --spec s.json --model qwen-2.5-7b --device thor \
+             --requests 40 --rate 12.5 --prompts 32..128 --gen 48 \
+             --replicas 3 --workers 4 --seed 9 --max-wait 20 \
+             --max-seq-len 2048 --kv-reuse 0.5 --prefill-chunk 128 \
              --no-energy --out /tmp/s.json --json")).unwrap();
         match c {
-            Command::Serve { spec, json, out } => {
+            Command::Serve { spec_path, overrides, json, out } => {
+                assert_eq!(spec_path.as_deref(), Some("s.json"));
+                let mut spec = ServeSpec::default();
+                overrides.apply(&mut spec);
                 assert_eq!(spec.model, "qwen-2.5-7b");
                 assert_eq!(spec.device, "thor");
                 assert_eq!(spec.requests, 40);
@@ -1098,12 +1175,22 @@ mod tests {
                 assert_eq!(spec.seed, 9);
                 assert!((spec.max_wait_s - 0.020).abs() < 1e-12);
                 assert_eq!(spec.max_seq_len, 2048);
+                assert_eq!(spec.kv_reuse, Some(0.5));
+                assert_eq!(spec.prefill_chunk, Some(128));
                 assert!(!spec.energy);
                 assert!(json);
                 assert_eq!(out.as_deref(), Some("/tmp/s.json"));
             }
             c => panic!("{c:?}"),
         }
+        // shaping knobs are validated at parse time
+        assert!(parse(&argv("serve --kv-reuse 1.0")).is_err());
+        assert!(parse(&argv("serve --kv-reuse lots")).is_err());
+        assert!(parse(&argv("serve --prefill-chunk 0")).is_err());
+        // a forgotten --spec gets the hint, like sweep and cluster
+        let err = parse(&argv("serve my-serve.json"))
+            .unwrap_err().to_string();
+        assert!(err.contains("--spec my-serve.json"), "{err}");
     }
 
     #[test]
@@ -1111,11 +1198,12 @@ mod tests {
         match parse(&argv("serve --trace /tmp/t.json --prompts 64"))
             .unwrap()
         {
-            Command::Serve { spec, .. } => {
-                assert_eq!(spec.arrivals, Arrivals::Trace {
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.arrivals, Some(Arrivals::Trace {
                     path: "/tmp/t.json".into(),
-                });
-                assert_eq!((spec.prompt_lo, spec.prompt_hi), (64, 64));
+                }));
+                assert_eq!((overrides.prompt_lo, overrides.prompt_hi),
+                           (Some(64), Some(64)));
             }
             c => panic!("{c:?}"),
         }
@@ -1369,12 +1457,28 @@ mod tests {
         assert!(parse(&argv("latency --model m --quant int3")).is_err());
         // serve: token is normalized and validated
         match parse(&argv("serve --quant W8A16")).unwrap() {
-            Command::Serve { spec, .. } => {
-                assert_eq!(spec.quant, "w8a16");
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.quant.as_deref(), Some("w8a16"));
             }
             c => panic!("{c:?}"),
         }
         assert!(parse(&argv("serve --quant int3")).is_err());
+    }
+
+    #[test]
+    fn sweep_shaping_axis_flags_parse() {
+        match parse(&argv("sweep --kv-reuse 0.0,0.5 --prefill-chunks 64"))
+            .unwrap()
+        {
+            Command::Sweep { overrides, .. } => {
+                assert_eq!(overrides.kv_reuse, Some(vec![0.0, 0.5]));
+                assert_eq!(overrides.prefill_chunks, Some(vec![64]));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("sweep --kv-reuse 0.5,1.0")).is_err());
+        assert!(parse(&argv("sweep --kv-reuse lots")).is_err());
+        assert!(parse(&argv("sweep --prefill-chunks 64,0")).is_err());
     }
 
     #[test]

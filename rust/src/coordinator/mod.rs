@@ -31,4 +31,4 @@ pub use queue::RequestQueue;
 pub use request::{Completion, ServingRequest};
 pub use server::{serve, ServerMetrics};
 pub use simulate::{ServeOutcome, ServedBatch, ServedRequest};
-pub use spec::{Arrivals, ServeSpec};
+pub use spec::{Arrivals, DisaggSpec, PhasePool, ServeSpec};

@@ -14,7 +14,7 @@ use crate::util::json::{Json, JsonWriter};
 use crate::util::stats::{Summary, SummaryBuilder};
 
 use super::simulate::ServeOutcome;
-use super::spec::Arrivals;
+use super::spec::{Arrivals, PhasePool};
 
 /// The four latency summaries the report renders, in render order,
 /// computed in one pass over the requests (no intermediate series — at
@@ -38,6 +38,26 @@ fn latency_summaries(o: &ServeOutcome)
         ("TPOT ms", b2.finish()),
         ("TTLT ms", b3.finish()),
     ]
+}
+
+/// The extra TTFT-decomposition summaries disaggregated serving adds
+/// (prefill execution, KV handoff). `None` on unified serving, so
+/// legacy artifacts keep their exact key set.
+fn phase_summaries(o: &ServeOutcome)
+                   -> Option<[(&'static str, Option<Summary>); 2]> {
+    if o.spec.disagg.is_none() {
+        return None;
+    }
+    let n = o.requests.len();
+    let mut p = SummaryBuilder::with_capacity(n);
+    let mut t = SummaryBuilder::with_capacity(n);
+    for r in &o.requests {
+        if let Some(ph) = r.phases {
+            p.push(ph.prefill_s * 1e3);
+            t.push(ph.kv_transfer_s * 1e3);
+        }
+    }
+    Some([("prefill ms", p.finish()), ("KV transfer ms", t.finish())])
 }
 
 fn arrivals_line(o: &ServeOutcome) -> String {
@@ -71,6 +91,32 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
             out,
             "parallelism: tp={} x pp={} ({} rank(s) per replica)",
             p.tp, p.pp, p.n_ranks());
+    }
+    if let Some(d) = &s.disagg {
+        let pool_line = |p: &PhasePool| {
+            let dev = p.device.as_deref().unwrap_or(&s.device);
+            let mut line = format!("{} x {dev}", p.replicas);
+            if let Some(par) = p.parallel {
+                let _ = write!(line, " ({})", par.label());
+            }
+            if let Some(c) = p.power_cap {
+                let _ = write!(line, " capped {c} W");
+            }
+            line
+        };
+        let _ = writeln!(
+            out,
+            "disaggregated: prefill {} -> decode {} over {} (KV handoff)",
+            pool_line(&d.prefill), pool_line(&d.decode), d.link);
+    }
+    if let Some(h) = s.kv_reuse {
+        let _ = writeln!(
+            out,
+            "kv prefix reuse: h={h} of each prompt's cache is already \
+             resident");
+    }
+    if let Some(c) = s.prefill_chunk {
+        let _ = writeln!(out, "chunked prefill: {c}-token chunks");
     }
     if let Some(d) = o.dvfs {
         let cap = match d.cap_w {
@@ -106,6 +152,16 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
                 name, sum.mean, sum.p50, sum.p90, sum.p99, sum.max);
         }
     }
+    if let Some(phase) = phase_summaries(o) {
+        for (name, sum) in phase {
+            if let Some(sum) = sum {
+                let _ = writeln!(
+                    out,
+                    "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |",
+                    name, sum.mean, sum.p50, sum.p90, sum.p99, sum.max);
+            }
+        }
+    }
     let _ = writeln!(out);
     let clock = if o.wall_clock { "wall" } else { "virtual" };
     let _ = writeln!(
@@ -138,6 +194,13 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
                  ({:.1}% on the link)",
                 (total - link) / toks, link / toks,
                 link / total.max(f64::MIN_POSITIVE) * 100.0);
+        }
+        if let (Some(kv), Some(d)) = (o.kv_transfer_joules, &s.disagg) {
+            let bytes = o.kv_transfer_bytes.unwrap_or(0);
+            let _ = writeln!(
+                out,
+                "KV handoff: {:.1} MB over {}, {:.3} J ({:.4} J/token)",
+                bytes as f64 / 1e6, d.link, kv, kv / toks);
         }
         if let Some(d) = o.dvfs {
             let j_prefill = o.prefill_joules();
@@ -172,7 +235,7 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         .requests
         .iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("id", Json::num(r.id as f64)),
                 ("arrival_s", Json::num(r.arrival_s)),
                 ("queue_wait_s", Json::num(r.queue_wait_s)),
@@ -182,7 +245,15 @@ pub fn to_json(o: &ServeOutcome) -> Json {
                 ("batch", Json::num(r.batch as f64)),
                 ("prompt_len", Json::num(r.prompt_len as f64)),
                 ("gen_len", Json::num(r.gen_len as f64)),
-            ])
+            ];
+            if let Some(ph) = r.phases {
+                fields.push(("prefill_s", Json::num(ph.prefill_s)));
+                fields.push(("kv_transfer_s",
+                             Json::num(ph.kv_transfer_s)));
+                fields.push(("decode_wait_s",
+                             Json::num(ph.decode_wait_s)));
+            }
+            Json::obj(fields)
         })
         .collect();
     let batches: Vec<Json> = o
@@ -209,6 +280,9 @@ pub fn to_json(o: &ServeOutcome) -> Json {
             if let Some(link) = b.interconnect_j {
                 fields.push(("j_interconnect", Json::num(link)));
             }
+            if let Some(st) = b.stage {
+                fields.push(("stage", Json::str(st)));
+            }
             Json::obj(fields)
         })
         .collect();
@@ -222,6 +296,19 @@ pub fn to_json(o: &ServeOutcome) -> Json {
                 ("p99", Json::num(sum.p99)),
                 ("max", Json::num(sum.max)),
             ])));
+        }
+    }
+    if let Some(phase) = phase_summaries(o) {
+        for (name, sum) in phase {
+            if let Some(sum) = sum {
+                summaries.push((name, Json::obj(vec![
+                    ("mean", Json::num(sum.mean)),
+                    ("p50", Json::num(sum.p50)),
+                    ("p90", Json::num(sum.p90)),
+                    ("p99", Json::num(sum.p99)),
+                    ("max", Json::num(sum.max)),
+                ])));
+            }
         }
     }
     let mut root = vec![
@@ -247,6 +334,40 @@ pub fn to_json(o: &ServeOutcome) -> Json {
         root.push(("tp", Json::num(p.tp as f64)));
         root.push(("pp", Json::num(p.pp as f64)));
     }
+    if let Some(d) = &s.disagg {
+        let pool = |p: &PhasePool| {
+            let mut fields = vec![
+                ("device", Json::str(
+                    p.device.clone().unwrap_or_else(|| s.device.clone()))),
+                ("replicas", Json::num(p.replicas as f64)),
+            ];
+            if let Some(par) = p.parallel {
+                fields.push(("tp", Json::num(par.tp as f64)));
+                fields.push(("pp", Json::num(par.pp as f64)));
+            }
+            if let Some(c) = p.power_cap {
+                fields.push(("power_cap", Json::num(c)));
+            }
+            Json::obj(fields)
+        };
+        root.push(("disagg", Json::obj(vec![
+            ("prefill", pool(&d.prefill)),
+            ("decode", pool(&d.decode)),
+            ("link", Json::str(d.link.clone())),
+        ])));
+    }
+    if let Some(h) = s.kv_reuse {
+        root.push(("kv_reuse", Json::num(h)));
+    }
+    if let Some(c) = s.prefill_chunk {
+        root.push(("prefill_chunk", Json::num(c as f64)));
+    }
+    if let Some(bytes) = o.kv_transfer_bytes {
+        root.push(("kv_transfer_bytes", Json::num(bytes as f64)));
+    }
+    if let Some(kv) = o.kv_transfer_joules {
+        root.push(("kv_transfer_joules", Json::num(kv)));
+    }
     if let Some(d) = o.dvfs {
         root.push(("dvfs", Json::obj(vec![
             ("cap_w", match d.cap_w {
@@ -267,6 +388,10 @@ pub fn to_json(o: &ServeOutcome) -> Json {
             root.push(("interconnect_joules", Json::num(link)));
             root.push(("j_per_token_interconnect",
                        Json::num(link / toks)));
+        }
+        if let Some(kv) = o.kv_transfer_joules {
+            root.push(("j_per_token_kv_transfer",
+                       Json::num(kv / toks)));
         }
         if o.dvfs.is_some() {
             let j_prefill = o.prefill_joules();
@@ -319,13 +444,40 @@ pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
                     w.field_num("padding_waste", b.padding_waste)?;
                     w.field_num("real_rows", b.real_rows as f64)?;
                     w.field_num("replica", b.replica as f64)?;
-                    w.field_num("service_s", b.service_s)
+                    w.field_num("service_s", b.service_s)?;
+                    if let Some(st) = b.stage {
+                        w.field_str("stage", st)?;
+                    }
+                    Ok(())
                 })?;
             }
             Ok(())
         })?;
         w.field_num("busy_s", o.busy_s)?;
         w.field_str("device", &s.device)?;
+        if let Some(d) = &s.disagg {
+            let pool = |w: &mut JsonWriter<W>, p: &PhasePool|
+                       -> io::Result<()> {
+                w.field_str(
+                    "device", p.device.as_deref().unwrap_or(&s.device))?;
+                if let Some(c) = p.power_cap {
+                    w.field_num("power_cap", c)?;
+                }
+                if let Some(par) = p.parallel {
+                    w.field_num("pp", par.pp as f64)?;
+                }
+                w.field_num("replicas", p.replicas as f64)?;
+                if let Some(par) = p.parallel {
+                    w.field_num("tp", par.tp as f64)?;
+                }
+                Ok(())
+            };
+            w.field_obj("disagg", |w| {
+                w.field_obj("decode", |w| pool(w, &d.decode))?;
+                w.field_str("link", &d.link)?;
+                w.field_obj("prefill", |w| pool(w, &d.prefill))
+            })?;
+        }
         if let Some(d) = o.dvfs {
             w.field_obj("dvfs", |w| {
                 match d.cap_w {
@@ -351,25 +503,54 @@ pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
             if let Some(link) = o.interconnect_joules {
                 w.field_num("j_per_token_interconnect", link / toks)?;
             }
+            if let Some(kv) = o.kv_transfer_joules {
+                w.field_num("j_per_token_kv_transfer", kv / toks)?;
+            }
             if o.dvfs.is_some() {
                 w.field_num("j_prefill_joules", o.prefill_joules())?;
             }
         }
+        if let Some(h) = s.kv_reuse {
+            w.field_num("kv_reuse", h)?;
+        }
+        if let Some(bytes) = o.kv_transfer_bytes {
+            w.field_num("kv_transfer_bytes", bytes as f64)?;
+        }
+        if let Some(kv) = o.kv_transfer_joules {
+            w.field_num("kv_transfer_joules", kv)?;
+        }
         w.field_obj("latency_ms", |w| {
             // sorted key order, not render order: uppercase metric names
-            // sort before "queue wait ms"
+            // sort before the lowercase ones, and "KV transfer ms"
+            // leads the block
+            fn field_summary<W: io::Write>(w: &mut JsonWriter<W>,
+                                           name: &str, sum: &Summary)
+                                           -> io::Result<()> {
+                w.field_obj(name, |w| {
+                    w.field_num("max", sum.max)?;
+                    w.field_num("mean", sum.mean)?;
+                    w.field_num("p50", sum.p50)?;
+                    w.field_num("p90", sum.p90)?;
+                    w.field_num("p99", sum.p99)
+                })
+            }
             let sums = latency_summaries(o);
-            for idx in [2usize, 1, 3, 0] {
+            let phase = phase_summaries(o);
+            if let Some([_, (name, Some(sum))]) = &phase {
+                field_summary(w, name, sum)?;
+            }
+            for idx in [2usize, 1, 3] {
                 let (name, sum) = &sums[idx];
                 if let Some(sum) = sum {
-                    w.field_obj(name, |w| {
-                        w.field_num("max", sum.max)?;
-                        w.field_num("mean", sum.mean)?;
-                        w.field_num("p50", sum.p50)?;
-                        w.field_num("p90", sum.p90)?;
-                        w.field_num("p99", sum.p99)
-                    })?;
+                    field_summary(w, name, sum)?;
                 }
+            }
+            if let Some([(name, Some(sum)), _]) = &phase {
+                field_summary(w, name, sum)?;
+            }
+            let (name, sum) = &sums[0];
+            if let Some(sum) = sum {
+                field_summary(w, name, sum)?;
             }
             Ok(())
         })?;
@@ -381,6 +562,9 @@ pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
         if let Some(p) = s.parallel {
             w.field_num("pp", p.pp as f64)?;
         }
+        if let Some(c) = s.prefill_chunk {
+            w.field_num("prefill_chunk", c as f64)?;
+        }
         w.field_str("quant", &s.quant_canonical())?;
         w.field_num("replicas", s.replicas as f64)?;
         w.field_arr("requests", |w| {
@@ -388,8 +572,15 @@ pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
                 w.obj(|w| {
                     w.field_num("arrival_s", r.arrival_s)?;
                     w.field_num("batch", r.batch as f64)?;
+                    if let Some(ph) = r.phases {
+                        w.field_num("decode_wait_s", ph.decode_wait_s)?;
+                    }
                     w.field_num("gen_len", r.gen_len as f64)?;
                     w.field_num("id", r.id as f64)?;
+                    if let Some(ph) = r.phases {
+                        w.field_num("kv_transfer_s", ph.kv_transfer_s)?;
+                        w.field_num("prefill_s", ph.prefill_s)?;
+                    }
                     w.field_num("prompt_len", r.prompt_len as f64)?;
                     w.field_num("queue_wait_s", r.queue_wait_s)?;
                     w.field_num("tpot_s", r.tpot_s)?;
@@ -573,5 +764,62 @@ mod tests {
         assert!(v.get("latency_ms").unwrap().get("TTLT ms").is_some());
         // execution details must not leak into the artifact
         assert!(v.get("workers").is_none());
+    }
+
+    #[test]
+    fn disagg_report_renders_phase_split_and_streams_identically() {
+        let spec = ServeSpec::parse(
+            r#"{
+                "rate_rps": 20.0, "requests": 12, "prompt_lo": 16,
+                "prompt_hi": 64, "gen_len": 8, "seed": 7,
+                "energy": true, "kv_reuse": 0.25, "prefill_chunk": 32,
+                "disagg": {
+                    "prefill": {"replicas": 2},
+                    "decode": {"replicas": 1},
+                    "link": "nvlink4"
+                }
+            }"#).unwrap();
+        let o = simulate::run(&spec).unwrap();
+        let text = render_markdown(&o);
+        assert!(text.contains("disaggregated: prefill 2 x a6000"),
+                "{text}");
+        assert!(text.contains("over nvlink4"), "{text}");
+        assert!(text.contains("| prefill ms |"), "{text}");
+        assert!(text.contains("| KV transfer ms |"), "{text}");
+        assert!(text.contains("kv prefix reuse: h=0.25"), "{text}");
+        assert!(text.contains("chunked prefill: 32-token chunks"),
+                "{text}");
+        assert!(text.contains("KV handoff:"), "{text}");
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        let d = v.get("disagg").expect("disagg block");
+        assert_eq!(d.get("link").unwrap().as_str(), Some("nvlink4"));
+        let pf = d.get("prefill").unwrap();
+        assert_eq!(pf.get("replicas").unwrap().as_usize(), Some(2));
+        assert_eq!(pf.get("device").unwrap().as_str(), Some("a6000"));
+        assert_eq!(v.get("kv_reuse").unwrap().as_f64(), Some(0.25));
+        assert_eq!(v.get("prefill_chunk").unwrap().as_usize(), Some(32));
+        assert!(v.get("kv_transfer_bytes").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(v.get("kv_transfer_joules").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(v.get("j_per_token_kv_transfer").unwrap().as_f64()
+                .unwrap() > 0.0);
+        let r0 = &v.get("requests").unwrap().as_arr().unwrap()[0];
+        assert!(r0.get("prefill_s").is_some());
+        assert!(r0.get("kv_transfer_s").is_some());
+        assert!(r0.get("decode_wait_s").is_some());
+        let b0 = &v.get("batches").unwrap().as_arr().unwrap()[0];
+        assert_eq!(b0.get("stage").unwrap().as_str(), Some("prefill"));
+        assert!(v.get("latency_ms").unwrap().get("KV transfer ms")
+                .is_some());
+        assert_stream_matches_tree(&o);
+        // legacy artifacts carry none of the new keys
+        let lv = Json::parse(&to_json(&outcome(true)).to_string())
+            .unwrap();
+        for key in ["disagg", "kv_reuse", "prefill_chunk",
+                    "kv_transfer_bytes", "kv_transfer_joules",
+                    "j_per_token_kv_transfer"] {
+            assert!(lv.get(key).is_none(), "legacy report grew `{key}`");
+        }
     }
 }

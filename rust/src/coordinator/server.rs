@@ -145,6 +145,7 @@ pub fn serve_with_clock(backend: &mut dyn ExecutionBackend,
             service_s: done_t - dequeue_t,
             joules: None,
             interconnect_j: None,
+            stage: None,
         });
     }
 

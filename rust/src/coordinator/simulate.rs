@@ -25,7 +25,8 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::backend::{EngineBackend, ExecutionBackend, SimBackend};
+use crate::backend::{chunked_prefill_extra_s, EngineBackend, ExecRun,
+                     ExecutionBackend, SimBackend};
 use crate::engine::TokenBatch;
 use crate::hwsim::{self, OperatingPoint};
 use crate::models;
@@ -38,7 +39,7 @@ use super::batcher::{plan_batch, BatchPolicy};
 use super::queue::RequestQueue;
 use super::request::ServingRequest;
 use super::server;
-use super::spec::{Arrivals, ServeSpec};
+use super::spec::{Arrivals, DisaggSpec, ServeSpec};
 
 /// One served request with its latency decomposition (virtual seconds
 /// for simulated devices, wall seconds for `cpu`). All latencies are
@@ -61,6 +62,25 @@ pub struct ServedRequest {
     pub prompt_len: usize,
     /// Tokens actually generated for this request.
     pub gen_len: usize,
+    /// Phase decomposition of the TTFT on disaggregated deployments;
+    /// `None` on unified serving.
+    pub phases: Option<PhaseBreakdown>,
+}
+
+/// Where a disagg-served request's time to first token went, beyond the
+/// arrival→prefill-dequeue wait already in `queue_wait_s`:
+/// `ttft = prefill_wait + prefill + kv_transfer + decode_wait + step`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Prefill execution time on the prefill pool (queueing excluded).
+    pub prefill_s: f64,
+    /// KV handoff time across the disagg link.
+    pub kv_transfer_s: f64,
+    /// Queueing at the decode pool after the KV cache landed.
+    pub decode_wait_s: f64,
+    /// KV bytes shipped for this request (the reused prefix, already
+    /// resident decode-side under `kv_reuse`, is not re-sent).
+    pub kv_bytes: u64,
 }
 
 /// One executed batch.
@@ -88,6 +108,9 @@ pub struct ServedBatch {
     /// explicit parallel mapping. The compute share is
     /// `joules.2 - interconnect_j`.
     pub interconnect_j: Option<f64>,
+    /// Which disagg phase pool executed the batch (`"prefill"` /
+    /// `"decode"`); `None` on unified serving.
+    pub stage: Option<&'static str>,
 }
 
 /// Everything the serve report renders.
@@ -113,6 +136,11 @@ pub struct ServeOutcome {
     /// Resolved DVFS policy (present when `--power-cap` or
     /// `--phase-dvfs` was given): what each phase actually ran at.
     pub dvfs: Option<DvfsResolved>,
+    /// Total KV bytes shipped prefill→decode (disagg runs only).
+    pub kv_transfer_bytes: Option<u64>,
+    /// Joules those bytes cost on the disagg link (analytic:
+    /// `bytes × pj_per_byte`), included in `total_joules`.
+    pub kv_transfer_joules: Option<f64>,
 }
 
 /// The per-phase operating points a DVFS-enabled serve run resolved to.
@@ -203,9 +231,14 @@ impl ServeOutcome {
         self.generated_tokens() as f64 / self.makespan_s
     }
 
-    /// Fraction of replica-time spent executing batches.
+    /// Fraction of replica-time spent executing batches. Disaggregated
+    /// deployments count every replica across both phase pools.
     pub fn replica_busy(&self) -> f64 {
-        let denom = self.spec.replicas as f64 * self.makespan_s;
+        let replicas = match &self.spec.disagg {
+            Some(d) => d.prefill.replicas + d.decode.replicas,
+            None => self.spec.replicas,
+        };
+        let denom = replicas as f64 * self.makespan_s;
         if denom == 0.0 {
             return 0.0;
         }
@@ -244,6 +277,13 @@ pub fn mean_padding_waste(batches: &[ServedBatch]) -> f64 {
 /// no backend branching outside this function.
 pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
     spec.validate()?;
+    if let Some(d) = &spec.disagg {
+        let mut outcome = simulate_disagg(spec, d)?;
+        if spec.energy {
+            attribute_energy_disagg(spec, d, &mut outcome)?;
+        }
+        return Ok(outcome);
+    }
     if spec.is_simulated() {
         // the event loop runs with playback off (timings are analytic);
         // energy replays per batch in the parallel pass below
@@ -354,12 +394,78 @@ pub struct LoopHooks<'a> {
     /// arrival order (then id) is preserved, so equal-priority loads
     /// keep the legacy batch composition exactly.
     pub priority: Option<&'a dyn Fn(u64) -> u8>,
+    /// Prefill shaping (prefix KV reuse, chunked prefill). With
+    /// [`PhaseShaping::none`] the loop skips the shaping branch
+    /// entirely — not a float operation differs from legacy.
+    pub shaping: PhaseShaping,
 }
 
 impl LoopHooks<'_> {
-    /// No governor, no priorities — the legacy serving loop.
+    /// No governor, no priorities, no shaping — the legacy serving loop.
     pub fn none() -> Self {
-        LoopHooks { governor: None, priority: None }
+        LoopHooks {
+            governor: None,
+            priority: None,
+            shaping: PhaseShaping::none(),
+        }
+    }
+}
+
+/// Prefill-shaping knobs the event loop applies to every executed
+/// batch's timings:
+///
+/// * **`kv_reuse`** — fraction `h ∈ [0, 1)` of each prompt's KV prefix
+///   already resident in the cache (RAG preambles, system prompts,
+///   multi-turn history). The reused prefix skips its share of prefill
+///   compute, so TTFT and TTLT drop by `h · ttft` and the replica frees
+///   that much earlier.
+/// * **`prefill_chunk`** — process prompts in `chunk`-token pieces.
+///   The per-chunk attention work telescopes to the monolithic prefill;
+///   what chunking genuinely adds is one extra weight-stream pass per
+///   chunk boundary, priced via [`chunked_prefill_extra_s`]. Chunking
+///   is latency-only (the same arithmetic runs either way).
+///
+/// Chunk overhead lands first, then reuse scales the chunk-inflated
+/// prefill: the reused prefix skips its chunks too.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseShaping {
+    /// Reused KV-prefix fraction, `0.0` = off.
+    pub kv_reuse: f64,
+    /// Prefill chunk size in tokens, `0` = monolithic.
+    pub prefill_chunk: usize,
+}
+
+impl PhaseShaping {
+    /// No shaping — the legacy, bit-identical path.
+    pub fn none() -> PhaseShaping {
+        PhaseShaping { kv_reuse: 0.0, prefill_chunk: 0 }
+    }
+
+    /// The shaping a serve spec asks for (absent knobs = off).
+    pub fn from_spec(spec: &ServeSpec) -> PhaseShaping {
+        PhaseShaping {
+            kv_reuse: spec.kv_reuse.unwrap_or(0.0),
+            prefill_chunk: spec.prefill_chunk.unwrap_or(0),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.kv_reuse == 0.0 && self.prefill_chunk == 0
+    }
+
+    /// Reshape one executed batch's timings in place.
+    fn apply(&self, backend: &mut dyn ExecutionBackend, batch: usize,
+             prompt_len: usize, run: &mut ExecRun) -> Result<()> {
+        let extra = chunked_prefill_extra_s(backend, batch, prompt_len,
+                                            self.prefill_chunk)?;
+        run.ttft_s += extra;
+        run.ttlt_s += extra;
+        if self.kv_reuse > 0.0 {
+            let skipped = run.ttft_s * self.kv_reuse;
+            run.ttft_s -= skipped;
+            run.ttlt_s -= skipped;
+        }
+        Ok(())
     }
 }
 
@@ -478,8 +584,12 @@ pub fn event_loop(reqs: &[Request], policy: &BatchPolicy, replicas: usize,
 
         let tb = TokenBatch::new(plan.exec_batch, plan.padded_prompt_len,
                                  plan.tokens.clone())?;
-        let run = backend.generate(&tb, plan.gen_len)
+        let mut run = backend.generate(&tb, plan.gen_len)
             .with_context(|| format!("executing serve batch #{b_index}"))?;
+        if !hooks.shaping.is_none() {
+            hooks.shaping.apply(backend, plan.exec_batch,
+                                plan.padded_prompt_len, &mut run)?;
+        }
 
         let service_s = run.ttlt_s;
         let done = dequeue_s + service_s;
@@ -499,6 +609,7 @@ pub fn event_loop(reqs: &[Request], policy: &BatchPolicy, replicas: usize,
                 batch: b_index,
                 prompt_len: req.prompt.len(),
                 gen_len: plan.gen_len,
+                phases: None,
             });
         }
         batches.push(ServedBatch {
@@ -513,6 +624,7 @@ pub fn event_loop(reqs: &[Request], policy: &BatchPolicy, replicas: usize,
             service_s,
             joules: None,
             interconnect_j: None,
+            stage: None,
         });
 
         if let Some(gov) = hooks.governor.as_deref_mut() {
@@ -557,7 +669,10 @@ pub fn event_loop(reqs: &[Request], policy: &BatchPolicy, replicas: usize,
 }
 
 /// Simulate a serve spec through the shared [`event_loop`] with no
-/// hooks — the legacy single-tenant, fixed-replica path.
+/// governor or priorities — the single-tenant, fixed-replica path.
+/// Prefill shaping comes straight from the spec; with neither knob set
+/// the hooks are [`LoopHooks::none`] and the run is bit-identical to
+/// legacy serving.
 pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
                 -> Result<ServeOutcome> {
     ensure!(backend.deterministic(),
@@ -565,8 +680,13 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
              backend (wall-clock serving handles the rest)");
     let trace = build_trace(spec, backend.vocab_size())?;
     let policy = spec.sim_policy();
+    let hooks = LoopHooks {
+        governor: None,
+        priority: None,
+        shaping: PhaseShaping::from_spec(spec),
+    };
     let run = event_loop(&trace.requests, &policy, spec.replicas, backend,
-                         LoopHooks::none())?;
+                         hooks)?;
     Ok(ServeOutcome {
         spec: spec.clone(),
         requests: run.requests,
@@ -577,7 +697,418 @@ pub fn simulate(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
         total_joules: None,
         interconnect_joules: None,
         dvfs: None,
+        kv_transfer_bytes: None,
+        kv_transfer_joules: None,
     })
+}
+
+/// Build the analytic backend a disagg phase pool runs on (playback
+/// off — the energy pass builds its own per-batch backends).
+fn pool_backend(ps: &ServeSpec) -> Result<SimBackend> {
+    let mut b = SimBackend::new(&ps.model, &ps.device, false, ps.seed)?
+        .with_max_seq_len(ps.max_seq_len);
+    if let Some(q) = ps.scheme()? {
+        b = b.with_quant(q);
+    }
+    if let Some(p) = ps.parallel {
+        b = b.with_parallel(p)?;
+    }
+    if let Some((p_op, d_op)) = resolve_ops(ps)? {
+        b = b.with_phase_ops(p_op, d_op);
+    }
+    Ok(b)
+}
+
+/// Prefill-only view of a backend: `generate` runs just the prefill
+/// probe, so the shared [`event_loop`] batches, queues, and frees
+/// replicas on prefill service time alone. Probes still forward, which
+/// is what lets chunked-prefill shaping price its extra weight passes
+/// on the real pool device.
+struct PrefillPhase<'a>(&'a mut dyn ExecutionBackend);
+
+impl ExecutionBackend for PrefillPhase<'_> {
+    fn device_name(&self) -> String {
+        self.0.device_name()
+    }
+
+    fn model_name(&self) -> String {
+        self.0.model_name()
+    }
+
+    fn deterministic(&self) -> bool {
+        self.0.deterministic()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.0.vocab_size()
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.0.max_seq_len()
+    }
+
+    fn generate(&mut self, prompts: &TokenBatch, _gen_len: usize)
+                -> Result<ExecRun> {
+        let (ttft_s, prefill_window) = self.0.prefill_probe(prompts)?;
+        Ok(ExecRun {
+            ttft_s,
+            step_s: Vec::new(),
+            ttlt_s: ttft_s,
+            prefill_window,
+            step_windows: Vec::new(),
+            tokens: Vec::new(),
+            analytic_joules: None,
+            interconnect_joules: 0.0,
+        })
+    }
+
+    fn prefill_probe(&mut self, prompts: &TokenBatch)
+                     -> Result<(f64, (f64, f64))> {
+        self.0.prefill_probe(prompts)
+    }
+
+    fn decode_probe(&mut self, prompts: &TokenBatch, steps: usize)
+                    -> Result<(Vec<f64>, (f64, f64))> {
+        self.0.decode_probe(prompts, steps)
+    }
+
+    fn run_energy(&mut self, run: &ExecRun)
+                  -> Result<crate::power::EnergyReport> {
+        self.0.run_energy(run)
+    }
+
+    fn window_energy(&self, t0: f64, t1: f64) -> f64 {
+        self.0.window_energy(t0, t1)
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.0.reseed(seed)
+    }
+}
+
+/// Decode-only view: the prompt's KV cache already arrived over the
+/// link, so `generate` prices only the warm-cache decode steps. The
+/// first token out of this pool is the first decode step — TTFT here
+/// is queue wait plus one step.
+struct DecodePhase<'a>(&'a mut dyn ExecutionBackend);
+
+impl ExecutionBackend for DecodePhase<'_> {
+    fn device_name(&self) -> String {
+        self.0.device_name()
+    }
+
+    fn model_name(&self) -> String {
+        self.0.model_name()
+    }
+
+    fn deterministic(&self) -> bool {
+        self.0.deterministic()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.0.vocab_size()
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.0.max_seq_len()
+    }
+
+    fn generate(&mut self, prompts: &TokenBatch, gen_len: usize)
+                -> Result<ExecRun> {
+        let (step_s, window) = self.0.decode_probe(prompts,
+                                                   gen_len.max(1))?;
+        let ttft_s = step_s.first().copied().unwrap_or(0.0);
+        let ttlt_s = step_s.iter().sum();
+        Ok(ExecRun {
+            ttft_s,
+            step_s,
+            ttlt_s,
+            prefill_window: (window.0, window.0),
+            step_windows: vec![window],
+            tokens: Vec::new(),
+            analytic_joules: None,
+            interconnect_joules: 0.0,
+        })
+    }
+
+    fn prefill_probe(&mut self, prompts: &TokenBatch)
+                     -> Result<(f64, (f64, f64))> {
+        self.0.prefill_probe(prompts)
+    }
+
+    fn decode_probe(&mut self, prompts: &TokenBatch, steps: usize)
+                    -> Result<(Vec<f64>, (f64, f64))> {
+        self.0.decode_probe(prompts, steps)
+    }
+
+    fn run_energy(&mut self, run: &ExecRun)
+                  -> Result<crate::power::EnergyReport> {
+        self.0.run_energy(run)
+    }
+
+    fn window_energy(&self, t0: f64, t1: f64) -> f64 {
+        self.0.window_energy(t0, t1)
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.0.reseed(seed)
+    }
+}
+
+/// What one two-stage disaggregated run produced — the composed
+/// per-request latencies (client clock), the stage-tagged batch list,
+/// and the KV-handoff totals. Shared by `elana serve` and the cluster
+/// gateway, which layer their own hooks (priorities, per-phase
+/// autoscaling) onto each stage's event loop.
+pub(crate) struct DisaggRun {
+    /// Served requests, sorted by id, with [`PhaseBreakdown`]s.
+    pub requests: Vec<ServedRequest>,
+    /// Prefill batches first (stage `"prefill"`), then decode batches
+    /// with offset indices (stage `"decode"`).
+    pub batches: Vec<ServedBatch>,
+    pub prefill_timeline: Vec<(f64, usize)>,
+    pub decode_timeline: Vec<(f64, usize)>,
+    pub makespan_s: f64,
+    pub busy_s: f64,
+    pub kv_transfer_bytes: u64,
+    /// Analytic link energy for the handoff (bytes × pJ/B), present
+    /// whether or not the sensor-replay energy pass runs.
+    pub kv_transfer_joules: f64,
+}
+
+/// Two-stage disaggregated simulation core: the arrival-sorted request
+/// slice runs through the prefill pool's event loop, each completed
+/// prefill ships its (quant-aware, reuse-discounted) KV cache across
+/// the disagg link, and the KV-arrival instants form the decode pool's
+/// arrival trace. Both stages are the unmodified shared [`event_loop`]
+/// — the handoff between them is plain data, so every
+/// batching/queueing/autoscaling behavior the loop has applies per pool
+/// automatically. Callers pass per-stage hooks; prefill shaping
+/// (chunking, prefix reuse) belongs in `prefill_hooks`.
+pub(crate) fn disagg_event_loop(spec: &ServeSpec, d: &DisaggSpec,
+                                reqs: &[Request],
+                                prefill_hooks: LoopHooks,
+                                decode_hooks: LoopHooks)
+                                -> Result<DisaggRun> {
+    let prefill_spec = spec.pool_spec(&d.prefill);
+    let decode_spec = spec.pool_spec(&d.decode);
+    let link = d.interconnect()?;
+    let h = spec.kv_reuse.unwrap_or(0.0);
+    let arch = models::lookup(&spec.model).ok_or_else(|| {
+        anyhow::anyhow!("unknown model `{}`", spec.model)
+    })?;
+    let scheme = spec.scheme()?.unwrap_or_else(|| {
+        models::QuantScheme::native(arch.dtype)
+    });
+    let kv_bytes_per_token = models::quant::EffectiveBytes::new(
+        &arch, scheme).kv_bytes_per_token();
+
+    // stage 1: the prefill pool serves the original arrival trace
+    let mut pb = pool_backend(&prefill_spec)?;
+    let prefill_policy = prefill_spec.sim_policy();
+    let prefill = {
+        let mut phase = PrefillPhase(&mut pb);
+        event_loop(reqs, &prefill_policy, d.prefill.replicas, &mut phase,
+                   prefill_hooks)
+            .context("disagg prefill stage")?
+    };
+
+    // the KV handoff: each prompt's cache bytes (minus the reused
+    // prefix, already resident decode-side) cross the link as one
+    // transfer, and the arrival instant decode-side is when they land
+    let by_id: std::collections::BTreeMap<u64, &Request> =
+        reqs.iter().map(|r| (r.id, r)).collect();
+    let mut handoff: std::collections::BTreeMap<u64, (f64, u64)> =
+        std::collections::BTreeMap::new();
+    let mut decode_reqs: Vec<Request> =
+        Vec::with_capacity(prefill.requests.len());
+    for p in &prefill.requests {
+        let bytes = (p.prompt_len as f64 * kv_bytes_per_token as f64
+                     * (1.0 - h))
+            .round() as u64;
+        let tx = link.transfer_s(bytes as f64, 1.0);
+        handoff.insert(p.id, (tx, bytes));
+        let orig = by_id[&p.id];
+        decode_reqs.push(Request {
+            id: p.id,
+            arrival_s: p.arrival_s + p.ttlt_s + tx,
+            prompt: orig.prompt.clone(),
+            gen_len: orig.gen_len,
+        });
+    }
+    decode_reqs.sort_by(|a, b| {
+        a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
+    });
+
+    // stage 2: the decode pool serves the KV-arrival trace
+    let mut db = pool_backend(&decode_spec)?;
+    let decode_policy = decode_spec.sim_policy();
+    let decode = {
+        let mut phase = DecodePhase(&mut db);
+        event_loop(&decode_reqs, &decode_policy, d.decode.replicas,
+                   &mut phase, decode_hooks)
+            .context("disagg decode stage")?
+    };
+
+    // compose per-request latencies back onto the client clock; both
+    // stage runs are id-sorted over the same id set
+    let n_pb = prefill.batches.len();
+    let mut requests = Vec::with_capacity(prefill.requests.len());
+    for (p, q) in prefill.requests.iter().zip(&decode.requests) {
+        debug_assert_eq!(p.id, q.id);
+        let (tx, bytes) = handoff[&p.id];
+        requests.push(ServedRequest {
+            id: p.id,
+            arrival_s: p.arrival_s,
+            queue_wait_s: p.queue_wait_s + q.queue_wait_s,
+            ttft_s: p.ttlt_s + tx + q.ttft_s,
+            tpot_s: q.tpot_s,
+            ttlt_s: p.ttlt_s + tx + q.ttlt_s,
+            batch: n_pb + q.batch,
+            prompt_len: p.prompt_len,
+            gen_len: q.gen_len,
+            phases: Some(PhaseBreakdown {
+                prefill_s: p.ttlt_s - p.queue_wait_s,
+                kv_transfer_s: tx,
+                decode_wait_s: q.queue_wait_s,
+                kv_bytes: bytes,
+            }),
+        });
+    }
+
+    let mut batches = prefill.batches;
+    for b in &mut batches {
+        b.stage = Some("prefill");
+    }
+    for mut b in decode.batches {
+        b.index += n_pb;
+        b.stage = Some("decode");
+        batches.push(b);
+    }
+    let total_bytes: u64 = handoff.values().map(|&(_, b)| b).sum();
+
+    Ok(DisaggRun {
+        requests,
+        batches,
+        prefill_timeline: prefill.replica_timeline,
+        decode_timeline: decode.replica_timeline,
+        makespan_s: prefill.makespan_s.max(decode.makespan_s),
+        busy_s: prefill.busy_s + decode.busy_s,
+        kv_transfer_bytes: total_bytes,
+        kv_transfer_joules: total_bytes as f64 * link.pj_per_byte * 1e-12,
+    })
+}
+
+/// `elana serve` over a disagg spec: generate the arrival trace, run
+/// the two-stage core with the spec's prefill shaping, and wrap the
+/// result as a serve outcome.
+fn simulate_disagg(spec: &ServeSpec, d: &DisaggSpec)
+                   -> Result<ServeOutcome> {
+    let vocab =
+        pool_backend(&spec.pool_spec(&d.prefill))?.vocab_size();
+    let trace = build_trace(spec, vocab)?;
+    let run = disagg_event_loop(
+        spec, d, &trace.requests,
+        LoopHooks {
+            governor: None,
+            priority: None,
+            shaping: PhaseShaping::from_spec(spec),
+        },
+        LoopHooks::none())?;
+    Ok(ServeOutcome {
+        spec: spec.clone(),
+        requests: run.requests,
+        batches: run.batches,
+        makespan_s: run.makespan_s,
+        busy_s: run.busy_s,
+        wall_clock: false,
+        total_joules: None,
+        interconnect_joules: None,
+        dvfs: None,
+        kv_transfer_bytes: Some(run.kv_transfer_bytes),
+        kv_transfer_joules: Some(run.kv_transfer_joules),
+    })
+}
+
+/// Disagg energy attribution: prefill batches replay on the prefill
+/// pool's device and keep only their prefill joules (discounted by the
+/// reused-prefix fraction); decode batches replay on the decode pool's
+/// device and keep only their decode joules (the replayed warm-up
+/// prefill is subtracted out — its link share stays in the decode
+/// batch's `interconnect_j`, a documented approximation). The KV
+/// handoff itself is analytic — bytes × the link's pJ/B — and consumes
+/// no sensor stream. Batch `i` keeps the sweep's
+/// `mix(mix(seed, SERVE_ENERGY), i)` discipline across both pools, so
+/// the split stays byte-identical at any `--workers` count.
+fn attribute_energy_disagg(spec: &ServeSpec, d: &DisaggSpec,
+                           outcome: &mut ServeOutcome) -> Result<()> {
+    let prefill_spec = spec.pool_spec(&d.prefill);
+    let decode_spec = spec.pool_spec(&d.decode);
+    let h = spec.kv_reuse.unwrap_or(0.0);
+    let scheme = spec.scheme()?;
+    let metas: Vec<(usize, usize, usize, bool)> = outcome
+        .batches
+        .iter()
+        .map(|b| (b.exec_batch, b.padded_prompt_len, b.gen_len,
+                  b.stage == Some("prefill")))
+        .collect();
+    let base = Rng::mix(spec.seed, streams::SERVE_ENERGY);
+    let results = pool::run_indexed(
+        spec.workers, metas.len(),
+        |i| -> Result<((f64, f64, f64), f64)> {
+            let (batch, prompt, gen, is_prefill) = metas[i];
+            let ps = if is_prefill { &prefill_spec } else { &decode_spec };
+            let mut b = SimBackend::new(&ps.model, &ps.device, true,
+                                        Rng::mix(base, i as u64))?
+                .with_max_seq_len(ps.max_seq_len);
+            if let Some(q) = scheme {
+                b = b.with_quant(q);
+            }
+            if let Some(p) = ps.parallel {
+                b = b.with_parallel(p)?;
+            }
+            if let Some((p_op, d_op)) = resolve_ops(ps)? {
+                b = b.with_phase_ops(p_op, d_op);
+            }
+            let tb = TokenBatch::new(batch, prompt,
+                                     vec![0; batch * prompt])?;
+            // prefill batches only need the prompt phase priced; the
+            // single decode step is discarded below
+            let run = b.generate(&tb, if is_prefill { 1 } else { gen })?;
+            let t = b.run_energy(&run)?.triple();
+            let joules = if is_prefill {
+                let jp = t.0 * (1.0 - h);
+                (jp, 0.0, jp)
+            } else {
+                (0.0, t.1, (t.2 - t.0).max(0.0))
+            };
+            Ok((joules, run.interconnect_joules))
+        });
+    let mut total = outcome.kv_transfer_joules.unwrap_or(0.0);
+    let mut link_total = 0.0;
+    let mut any_parallel = false;
+    for (b, r) in outcome.batches.iter_mut().zip(results) {
+        let (joules, link_j) = r.with_context(|| {
+            format!("energy attribution for serve batch #{}", b.index)
+        })?;
+        total += joules.2;
+        b.joules = Some(joules);
+        let pool_parallel = if b.stage == Some("prefill") {
+            prefill_spec.parallel.is_some()
+        } else {
+            decode_spec.parallel.is_some()
+        };
+        if pool_parallel {
+            any_parallel = true;
+            link_total += link_j;
+            b.interconnect_j = Some(link_j);
+        }
+    }
+    outcome.total_joules = Some(total);
+    if any_parallel {
+        outcome.interconnect_joules = Some(link_total);
+    }
+    Ok(())
 }
 
 /// The pre-heap reference step loop (linear earliest-free-replica scan),
@@ -662,6 +1193,7 @@ fn simulate_reference(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
                 batch: b_index,
                 prompt_len: req.prompt.len(),
                 gen_len: plan.gen_len,
+                phases: None,
             });
         }
         batches.push(ServedBatch {
@@ -676,6 +1208,7 @@ fn simulate_reference(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
             service_s,
             joules: None,
             interconnect_j: None,
+            stage: None,
         });
     }
 
@@ -690,13 +1223,18 @@ fn simulate_reference(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
         total_joules: None,
         interconnect_joules: None,
         dvfs: None,
+        kv_transfer_bytes: None,
+        kv_transfer_joules: None,
     })
 }
 
 /// Parallel per-batch energy attribution. Batch `i` gets its own
 /// backend with the sensor re-keyed to the
 /// `mix(mix(seed, SERVE_ENERGY), i)` stream, so results depend only on
-/// the batch index — never on which worker thread replays it.
+/// the batch index — never on which worker thread replays it. Under
+/// `kv_reuse`, the skipped prefix's share of prefill energy comes off
+/// J/Prompt and J/Request (chunked prefill is energy-neutral: the same
+/// arithmetic runs either way).
 fn attribute_energy(spec: &ServeSpec,
                     ops: &Option<(OperatingPoint, OperatingPoint)>,
                     outcome: &mut ServeOutcome) -> Result<()> {
@@ -728,12 +1266,17 @@ fn attribute_energy(spec: &ServeSpec,
             let run = b.generate(&tb, gen)?;
             Ok((b.run_energy(&run)?.triple(), run.interconnect_joules))
         });
+    let h = spec.kv_reuse.unwrap_or(0.0);
     let mut total = 0.0;
     let mut link_total = 0.0;
     for (b, r) in outcome.batches.iter_mut().zip(results) {
-        let (joules, link_j) = r.with_context(|| {
+        let (mut joules, link_j) = r.with_context(|| {
             format!("energy attribution for serve batch #{}", b.index)
         })?;
+        if h > 0.0 {
+            joules.2 -= joules.0 * h;
+            joules.0 -= joules.0 * h;
+        }
         total += joules.2;
         b.joules = Some(joules);
         if spec.parallel.is_some() {
@@ -803,6 +1346,7 @@ pub fn outcome_from_metrics(spec: &ServeSpec,
             batch: c.batch,
             prompt_len: c.prompt_len,
             gen_len: c.tokens.len(),
+            phases: None,
         })
         .collect();
     requests.sort_by_key(|r| r.id);
@@ -825,6 +1369,8 @@ pub fn outcome_from_metrics(spec: &ServeSpec,
         total_joules: None,
         interconnect_joules: None,
         dvfs: None,
+        kv_transfer_bytes: None,
+        kv_transfer_joules: None,
     }
 }
 
@@ -930,6 +1476,7 @@ mod tests {
                                 LoopHooks {
                                     governor: Some(&mut gov),
                                     priority: None,
+                                    shaping: PhaseShaping::none(),
                                 })
             .unwrap();
         // every request still served exactly once
@@ -967,6 +1514,7 @@ mod tests {
                              LoopHooks {
                                  governor: Some(&mut gov),
                                  priority: None,
+                                 shaping: PhaseShaping::none(),
                              })
             .unwrap();
         assert_eq!(run.requests.len(), 40, "the trace must drain");
@@ -993,6 +1541,7 @@ mod tests {
                                 LoopHooks {
                                     governor: None,
                                     priority: Some(&flat),
+                                    shaping: PhaseShaping::none(),
                                 })
             .unwrap();
         assert_eq!(plain.requests.len(), ranked.requests.len());
@@ -1220,6 +1769,165 @@ mod tests {
         let js8: Vec<_> =
             o8.batches.iter().map(|b| b.joules.unwrap()).collect();
         assert_eq!(js, js8);
+    }
+
+    fn disagg_spec() -> ServeSpec {
+        ServeSpec::parse(r#"{
+            "requests": 24, "rate_rps": 20, "prompt_lo": 16,
+            "prompt_hi": 64, "gen_len": 16, "seed": 7, "energy": false,
+            "disagg": {"prefill": {"replicas": 1},
+                       "decode": {"replicas": 1}}
+        }"#).unwrap()
+    }
+
+    fn mean_ttft(o: &ServeOutcome) -> f64 {
+        o.requests.iter().map(|r| r.ttft_s).sum::<f64>()
+            / o.requests.len() as f64
+    }
+
+    #[test]
+    fn explicit_zero_kv_reuse_is_bitwise_legacy() {
+        // kv_reuse: 0.0 resolves to PhaseShaping::none(), so not a
+        // single float operation differs from the knob-free loop
+        let mut zero = quick_spec();
+        zero.kv_reuse = Some(0.0);
+        let a = run(&quick_spec()).unwrap();
+        let b = run(&zero).unwrap();
+        assert_outcomes_bit_identical(&a, &b);
+        assert!(b.requests.iter().all(|r| r.phases.is_none()));
+        assert!(b.batches.iter().all(|x| x.stage.is_none()));
+        assert!(b.kv_transfer_bytes.is_none());
+    }
+
+    #[test]
+    fn kv_reuse_monotonically_cuts_ttft_and_energy() {
+        let mut s = quick_spec();
+        s.energy = true;
+        let mut prev_ttft = f64::INFINITY;
+        let mut prev_jt = f64::INFINITY;
+        for h in [0.0, 0.3, 0.6] {
+            s.kv_reuse = (h > 0.0).then_some(h);
+            let o = run(&s).unwrap();
+            let ttft = mean_ttft(&o);
+            let jt =
+                o.total_joules.unwrap() / o.generated_tokens() as f64;
+            assert!(ttft < prev_ttft,
+                    "h={h}: {ttft} !< {prev_ttft}");
+            assert!(jt < prev_jt, "h={h}: {jt} !< {prev_jt}");
+            prev_ttft = ttft;
+            prev_jt = jt;
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_adds_latency_never_removes_it() {
+        // an unloaded trace (no queueing) isolates the per-batch effect
+        let mut base = quick_spec();
+        base.requests = 12;
+        base.arrivals = Arrivals::Poisson { rate_rps: 2.0 };
+        let mut chunked = base.clone();
+        chunked.prefill_chunk = Some(16);
+        let ob = run(&base).unwrap();
+        let oc = run(&chunked).unwrap();
+        assert_eq!(ob.requests.len(), oc.requests.len());
+        let mut strictly = 0;
+        for (a, b) in ob.requests.iter().zip(&oc.requests) {
+            assert!(b.ttft_s >= a.ttft_s - 1e-15, "{a:?} vs {b:?}");
+            if b.ttft_s > a.ttft_s {
+                strictly += 1;
+            }
+        }
+        assert!(strictly > 0,
+                "some prompt spans multiple 16-token chunks");
+        assert!(oc.makespan_s >= ob.makespan_s);
+    }
+
+    #[test]
+    fn disagg_serves_all_and_decomposes_ttft() {
+        let o = run(&disagg_spec()).unwrap();
+        assert_eq!(o.requests.len(), 24);
+        let mut ids: Vec<u64> =
+            o.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        for r in &o.requests {
+            let ph = r.phases.expect("disagg requests carry phases");
+            assert!(ph.prefill_s > 0.0, "{r:?}");
+            assert!(ph.kv_transfer_s > 0.0, "{r:?}");
+            assert!(ph.decode_wait_s >= 0.0, "{r:?}");
+            assert!(ph.kv_bytes > 0, "{r:?}");
+            // ttft = prefill wait + prefill + transfer + decode wait
+            //        + first decode step, so it strictly exceeds the
+            //        sum of everything before the step
+            let floor =
+                r.queue_wait_s + ph.prefill_s + ph.kv_transfer_s;
+            assert!(r.ttft_s > floor - 1e-12, "{r:?}");
+            assert!(r.ttlt_s >= r.ttft_s, "{r:?}");
+        }
+        // both pools executed batches, tagged by stage
+        assert!(o.batches.iter().any(|b| b.stage == Some("prefill")));
+        assert!(o.batches.iter().any(|b| b.stage == Some("decode")));
+        // shipped bytes match the quant-aware closed form exactly
+        let arch = models::lookup("llama-3.1-8b").unwrap();
+        let kv_b = models::quant::EffectiveBytes::native(&arch)
+            .kv_bytes_per_token();
+        let expect: u64 = o.requests.iter()
+            .map(|r| r.prompt_len as u64 * kv_b)
+            .sum();
+        assert_eq!(o.kv_transfer_bytes, Some(expect));
+    }
+
+    #[test]
+    fn disagg_reuse_ships_fewer_bytes_and_cuts_ttft() {
+        let base = disagg_spec();
+        let mut reuse = disagg_spec();
+        reuse.kv_reuse = Some(0.5);
+        let ob = run(&base).unwrap();
+        let orr = run(&reuse).unwrap();
+        assert!(orr.kv_transfer_bytes.unwrap()
+                    < ob.kv_transfer_bytes.unwrap());
+        assert!(mean_ttft(&orr) < mean_ttft(&ob),
+                "{} vs {}", mean_ttft(&orr), mean_ttft(&ob));
+        // half the prefix resident: each request ships half its bytes
+        let arch = models::lookup("llama-3.1-8b").unwrap();
+        let kv_b = models::quant::EffectiveBytes::native(&arch)
+            .kv_bytes_per_token();
+        let expect: u64 = orr.requests.iter()
+            .map(|r| {
+                (r.prompt_len as f64 * kv_b as f64 * 0.5).round() as u64
+            })
+            .sum();
+        assert_eq!(orr.kv_transfer_bytes, Some(expect));
+    }
+
+    #[test]
+    fn disagg_energy_splits_compute_and_kv_transfer() {
+        let mut s = disagg_spec();
+        s.energy = true;
+        let o = run(&s).unwrap();
+        let total = o.total_joules.unwrap();
+        let kv = o.kv_transfer_joules.unwrap();
+        assert!(kv > 0.0 && kv < total, "{kv} vs {total}");
+        // the handoff is analytic: bytes × the pcie4 link's 500 pJ/B
+        let expect =
+            o.kv_transfer_bytes.unwrap() as f64 * 500.0 * 1e-12;
+        assert!((kv - expect).abs() <= 1e-15 * expect, "{kv} {expect}");
+        for b in &o.batches {
+            let j = b.joules.unwrap();
+            match b.stage.unwrap() {
+                "prefill" => {
+                    assert_eq!(j.1, 0.0, "{b:?}");
+                    assert_eq!(j.0, j.2, "{b:?}");
+                }
+                "decode" => assert_eq!(j.0, 0.0, "{b:?}"),
+                other => panic!("unknown stage {other}"),
+            }
+            assert!(j.2 >= 0.0, "{b:?}");
+        }
+        let sum: f64 =
+            o.batches.iter().map(|b| b.joules.unwrap().2).sum();
+        assert!((total - (sum + kv)).abs() <= 1e-9 * total.max(1.0),
+                "{total} vs {} + {kv}", sum);
     }
 
     #[test]

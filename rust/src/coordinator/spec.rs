@@ -11,11 +11,13 @@
 //!   energy-attribution pass. Like the sweep's `threads`, it never
 //!   changes a byte of output, only wall-clock time.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::hwsim::{device, ParallelSpec};
 use crate::models::{self, quant, QuantScheme};
 use crate::planner::solve::FitModel;
+use crate::util::json::Json;
+use crate::util::spec as fields;
 
 use super::batcher::BatchPolicy;
 
@@ -27,6 +29,98 @@ pub enum Arrivals {
     /// Replay a recorded JSON trace file (see
     /// `workload::RequestTrace::from_json` for the schema).
     Trace { path: String },
+}
+
+/// One rank pool of a disaggregated deployment: the device, replica
+/// count, and per-rank knobs a phase runs on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhasePool {
+    /// hwsim rig name; `None` inherits the deployment's `device`.
+    pub device: Option<String>,
+    /// Simulated engine replicas in the pool.
+    pub replicas: usize,
+    /// Explicit TP×PP mapping per replica; `None` = whole-rig roofline.
+    pub parallel: Option<ParallelSpec>,
+    /// Per-device power cap, watts; `None` = uncapped.
+    pub power_cap: Option<f64>,
+}
+
+impl PhasePool {
+    /// A one-replica pool on the deployment's device — the smallest
+    /// valid pool, what a JSON `{}` block means.
+    pub fn inherit() -> PhasePool {
+        PhasePool {
+            device: None,
+            replicas: 1,
+            parallel: None,
+            power_cap: None,
+        }
+    }
+
+    /// Parse a pool block (`{"device": "h100", "replicas": 2, "tp": 2}`).
+    fn parse(v: &Json, what: &str) -> Result<PhasePool> {
+        const KNOWN_KEYS: [&str; 5] =
+            ["device", "replicas", "tp", "pp", "power_cap"];
+        fields::require_known_keys(fields::root_obj(v, what)?,
+                                   &KNOWN_KEYS, what)?;
+        let mut pool = PhasePool::inherit();
+        pool.device = fields::string_field(v, "device")?;
+        if let Some(r) = fields::usize_field(v, "replicas")? {
+            pool.replicas = r;
+        }
+        let tp = fields::usize_field(v, "tp")?;
+        let pp = fields::usize_field(v, "pp")?;
+        if tp.is_some() || pp.is_some() {
+            pool.parallel = Some(ParallelSpec::new(tp.unwrap_or(1),
+                                                   pp.unwrap_or(1)));
+        }
+        pool.power_cap = fields::f64_field(v, "power_cap")?;
+        Ok(pool)
+    }
+}
+
+/// Disaggregated prefill/decode serving: separate rank pools per phase,
+/// with the prompt's KV cache shipped prefill→decode over a named
+/// interconnect after each prefill completes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DisaggSpec {
+    pub prefill: PhasePool,
+    pub decode: PhasePool,
+    /// Interconnect preset the KV handoff crosses (`pcie4`, `nvlink3`,
+    /// `nvlink4`, `unified`).
+    pub link: String,
+}
+
+impl DisaggSpec {
+    /// Resolve the link token; unknown names error with the known list.
+    pub fn interconnect(&self) -> Result<device::Interconnect> {
+        device::link_by_name(&self.link).ok_or_else(|| {
+            anyhow!("unknown link `{}` (known: {})", self.link,
+                    device::all_link_names().join(", "))
+        })
+    }
+
+    /// Parse a disagg block
+    /// (`{"prefill": {...}, "decode": {...}, "link": "nvlink4"}`).
+    pub(crate) fn parse(v: &Json) -> Result<DisaggSpec> {
+        const KNOWN_KEYS: [&str; 3] = ["prefill", "decode", "link"];
+        fields::require_known_keys(fields::root_obj(v, "disagg block")?,
+                                   &KNOWN_KEYS, "disagg block")?;
+        let pool = |key: &str| -> Result<PhasePool> {
+            match v.get(key) {
+                None => Ok(PhasePool::inherit()),
+                Some(b) => {
+                    PhasePool::parse(b, &format!("disagg {key} pool"))
+                }
+            }
+        };
+        Ok(DisaggSpec {
+            prefill: pool("prefill")?,
+            decode: pool("decode")?,
+            link: fields::string_field(v, "link")?
+                .unwrap_or_else(|| "pcie4".to_string()),
+        })
+    }
 }
 
 /// Everything `elana serve` needs to run.
@@ -78,6 +172,19 @@ pub struct ServeSpec {
     /// compiled shape — "TokenPowerBench"'s per-phase power story.
     /// Simulated rigs only.
     pub phase_dvfs: bool,
+    /// Prefix-KV-cache hit rate in `[0, 1)`: that fraction of each
+    /// request's prefill compute, energy, and (under `disagg`) KV
+    /// handoff bytes is skipped. `None` = no reuse — bit-identical to
+    /// the pre-reuse serving loop. Simulated rigs only.
+    pub kv_reuse: Option<f64>,
+    /// Chunked-prefill chunk size in tokens: prompts prefill in chunks
+    /// interleaved into decode batches, adding one weight-stream pass
+    /// per extra chunk to TTFT. `None` = monolithic prefill —
+    /// bit-identical. Simulated rigs only.
+    pub prefill_chunk: Option<usize>,
+    /// Disaggregated prefill/decode pools. `None` = the legacy unified
+    /// deployment — bit-identical to the pre-disagg serving loop.
+    pub disagg: Option<DisaggSpec>,
 }
 
 impl Default for ServeSpec {
@@ -100,6 +207,9 @@ impl Default for ServeSpec {
             parallel: None,
             power_cap: None,
             phase_dvfs: false,
+            kv_reuse: None,
+            prefill_chunk: None,
+            disagg: None,
         }
     }
 }
@@ -178,6 +288,29 @@ impl ServeSpec {
         }
     }
 
+    /// The single-pool spec a disagg phase pool resolves to: this spec
+    /// with the pool's device/replicas/parallel/power-cap substituted
+    /// and the disagg knobs cleared. Both the two-stage simulator and
+    /// `validate` drive each pool through this projection, so a pool is
+    /// checked (fit, sharding, caps) exactly like a standalone
+    /// deployment on its rig.
+    pub fn pool_spec(&self, pool: &PhasePool) -> ServeSpec {
+        ServeSpec {
+            device: pool
+                .device
+                .clone()
+                .unwrap_or_else(|| self.device.clone()),
+            replicas: pool.replicas,
+            parallel: pool.parallel,
+            power_cap: pool.power_cap,
+            phase_dvfs: false,
+            kv_reuse: None,
+            prefill_chunk: None,
+            disagg: None,
+            ..self.clone()
+        }
+    }
+
     /// Validate every knob before any work starts, listing known names
     /// on a miss (the sweep-spec discipline).
     pub fn validate(&self) -> Result<()> {
@@ -230,6 +363,43 @@ impl ServeSpec {
                         <= 1,
                 "--tp/--pp apply to simulated rigs only; the `cpu` \
                  engine runs on a single device");
+        if let Some(h) = self.kv_reuse {
+            ensure!((0.0..1.0).contains(&h),
+                    "`kv_reuse` must be a fraction in [0, 1) (got {h})");
+        }
+        if let Some(c) = self.prefill_chunk {
+            ensure!(c >= 1, "prefill chunks must be >= 1 token");
+        }
+        ensure!(self.is_simulated()
+                    || (self.kv_reuse.is_none()
+                        && self.prefill_chunk.is_none()),
+                "kv_reuse / prefill_chunk modeling applies to simulated \
+                 rigs only; the `cpu` engine executes the full prefill");
+        if let Some(d) = &self.disagg {
+            ensure!(self.is_simulated(),
+                    "`disagg` applies to simulated rigs only; wall-clock \
+                     serving on `cpu` runs one unified engine");
+            ensure!(self.replicas == 1,
+                    "with `disagg`, replicas are declared per pool \
+                     (drop the top-level replicas)");
+            ensure!(self.parallel.is_none() && self.power_cap.is_none()
+                        && !self.phase_dvfs,
+                    "with `disagg`, tp/pp and power caps are declared \
+                     per pool, and the phase split replaces \
+                     --phase-dvfs");
+            d.interconnect()?;
+            for (name, pool) in [("prefill", &d.prefill),
+                                 ("decode", &d.decode)] {
+                ensure!(pool.replicas >= 1,
+                        "disagg {name} pool needs at least one replica");
+                let ps = self.pool_spec(pool);
+                ensure!(ps.is_simulated(),
+                        "disagg pools run on simulated rigs only (got \
+                         `cpu` for the {name} pool)");
+                ps.validate()
+                    .with_context(|| format!("disagg {name} pool"))?;
+            }
+        }
         if self.is_simulated() {
             let top = Self::bucket_ceil(self.prompt_hi);
             ensure!(self.max_seq_len > top,
@@ -260,6 +430,203 @@ impl ServeSpec {
                     });
         }
         Ok(())
+    }
+
+    /// Parse a serve spec from JSON, built on the shared
+    /// [`crate::util::spec`] field readers. Missing keys keep the
+    /// defaults; present keys must have the right type; unknown keys
+    /// error with the known names listed.
+    ///
+    /// ```json
+    /// {
+    ///   "model": "llama-3.1-8b",
+    ///   "rate_rps": 12,
+    ///   "requests": 128,
+    ///   "kv_reuse": 0.5,
+    ///   "disagg": {
+    ///     "prefill": {"replicas": 2},
+    ///     "decode": {"replicas": 2},
+    ///     "link": "pcie4"
+    ///   }
+    /// }
+    /// ```
+    pub fn parse(text: &str) -> Result<ServeSpec> {
+        const KNOWN_KEYS: [&str; 22] =
+            ["model", "device", "rate_rps", "trace", "requests",
+             "prompt_lo", "prompt_hi", "gen_len", "replicas", "workers",
+             "seed", "energy", "max_wait_s", "max_seq_len", "quant",
+             "tp", "pp", "power_cap", "phase_dvfs", "kv_reuse",
+             "prefill_chunk", "disagg"];
+        let root = Json::parse(text).context("parsing serve spec JSON")?;
+        fields::require_known_keys(
+            fields::root_obj(&root, "serve spec")?, &KNOWN_KEYS,
+            "serve spec")?;
+        let mut spec = ServeSpec::default();
+        if let Some(v) = fields::string_field(&root, "model")? {
+            spec.model = v;
+        }
+        if let Some(v) = fields::string_field(&root, "device")? {
+            spec.device = v;
+        }
+        let rate = fields::f64_field(&root, "rate_rps")?;
+        let trace = fields::string_field(&root, "trace")?;
+        ensure!(rate.is_none() || trace.is_none(),
+                "`rate_rps` and `trace` are mutually exclusive arrival \
+                 processes");
+        if let Some(rate_rps) = rate {
+            spec.arrivals = Arrivals::Poisson { rate_rps };
+        }
+        if let Some(path) = trace {
+            spec.arrivals = Arrivals::Trace { path };
+        }
+        if let Some(v) = fields::usize_field(&root, "requests")? {
+            spec.requests = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "prompt_lo")? {
+            spec.prompt_lo = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "prompt_hi")? {
+            spec.prompt_hi = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "gen_len")? {
+            spec.gen_len = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "replicas")? {
+            spec.replicas = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "workers")? {
+            spec.workers = v;
+        }
+        if let Some(v) = fields::seed_field(&root, "seed")? {
+            spec.seed = v;
+        }
+        if let Some(v) = fields::bool_field(&root, "energy")? {
+            spec.energy = v;
+        }
+        if let Some(v) = fields::f64_field(&root, "max_wait_s")? {
+            spec.max_wait_s = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "max_seq_len")? {
+            spec.max_seq_len = v;
+        }
+        if let Some(v) = fields::string_field(&root, "quant")? {
+            spec.quant = v;
+        }
+        let tp = fields::usize_field(&root, "tp")?;
+        let pp = fields::usize_field(&root, "pp")?;
+        if tp.is_some() || pp.is_some() {
+            spec.parallel = Some(ParallelSpec::new(tp.unwrap_or(1),
+                                                   pp.unwrap_or(1)));
+        }
+        spec.power_cap = fields::f64_field(&root, "power_cap")?;
+        if let Some(v) = fields::bool_field(&root, "phase_dvfs")? {
+            spec.phase_dvfs = v;
+        }
+        spec.kv_reuse = fields::fraction_field(&root, "kv_reuse")?;
+        if let Some(v) = fields::usize_field(&root, "prefill_chunk")? {
+            ensure!(v >= 1, "prefill chunks must be >= 1 token");
+            spec.prefill_chunk = Some(v);
+        }
+        if let Some(v) = root.get("disagg") {
+            spec.disagg = Some(DisaggSpec::parse(v)?);
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ServeSpec> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading serve spec {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// CLI-flag overrides layered on a parsed [`ServeSpec`]: every field an
+/// `Option`, applied only when the flag was given — so `--spec` files
+/// and flags compose the way sweep overrides already do.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeOverrides {
+    pub model: Option<String>,
+    pub device: Option<String>,
+    pub arrivals: Option<Arrivals>,
+    pub requests: Option<usize>,
+    pub prompt_lo: Option<usize>,
+    pub prompt_hi: Option<usize>,
+    pub gen_len: Option<usize>,
+    pub replicas: Option<usize>,
+    pub workers: Option<usize>,
+    pub seed: Option<u64>,
+    pub energy: Option<bool>,
+    pub max_wait_s: Option<f64>,
+    pub max_seq_len: Option<usize>,
+    pub quant: Option<String>,
+    pub parallel: Option<ParallelSpec>,
+    pub power_cap: Option<f64>,
+    pub phase_dvfs: Option<bool>,
+    pub kv_reuse: Option<f64>,
+    pub prefill_chunk: Option<usize>,
+}
+
+impl ServeOverrides {
+    pub fn apply(self, spec: &mut ServeSpec) {
+        if let Some(v) = self.model {
+            spec.model = v;
+        }
+        if let Some(v) = self.device {
+            spec.device = v;
+        }
+        if let Some(v) = self.arrivals {
+            spec.arrivals = v;
+        }
+        if let Some(v) = self.requests {
+            spec.requests = v;
+        }
+        if let Some(v) = self.prompt_lo {
+            spec.prompt_lo = v;
+        }
+        if let Some(v) = self.prompt_hi {
+            spec.prompt_hi = v;
+        }
+        if let Some(v) = self.gen_len {
+            spec.gen_len = v;
+        }
+        if let Some(v) = self.replicas {
+            spec.replicas = v;
+        }
+        if let Some(v) = self.workers {
+            spec.workers = v;
+        }
+        if let Some(v) = self.seed {
+            spec.seed = v;
+        }
+        if let Some(v) = self.energy {
+            spec.energy = v;
+        }
+        if let Some(v) = self.max_wait_s {
+            spec.max_wait_s = v;
+        }
+        if let Some(v) = self.max_seq_len {
+            spec.max_seq_len = v;
+        }
+        if let Some(v) = self.quant {
+            spec.quant = v;
+        }
+        if let Some(v) = self.parallel {
+            spec.parallel = Some(v);
+        }
+        if let Some(v) = self.power_cap {
+            spec.power_cap = Some(v);
+        }
+        if let Some(v) = self.phase_dvfs {
+            spec.phase_dvfs = v;
+        }
+        if let Some(v) = self.kv_reuse {
+            spec.kv_reuse = Some(v);
+        }
+        if let Some(v) = self.prefill_chunk {
+            spec.prefill_chunk = Some(v);
+        }
     }
 }
 
@@ -461,5 +828,137 @@ mod tests {
         };
         s.validate().unwrap();
         assert!(!s.is_simulated());
+    }
+
+    #[test]
+    fn parse_round_trips_fields_through_shared_readers() {
+        let s = ServeSpec::parse(r#"{
+            "model": "llama-3.1-8b", "device": "a100",
+            "rate_rps": 12.5, "requests": 64,
+            "prompt_lo": 32, "prompt_hi": 128, "gen_len": 24,
+            "replicas": 2, "workers": 3, "seed": 7, "energy": false,
+            "max_wait_s": 0.05, "max_seq_len": 2048,
+            "quant": "w4a8kv4", "tp": 2,
+            "power_cap": 250, "kv_reuse": 0.5, "prefill_chunk": 64
+        }"#).unwrap();
+        assert_eq!(s.device, "a100");
+        assert!(matches!(s.arrivals,
+                         Arrivals::Poisson { rate_rps } if rate_rps == 12.5));
+        assert_eq!((s.requests, s.prompt_lo, s.prompt_hi, s.gen_len),
+                   (64, 32, 128, 24));
+        assert_eq!((s.replicas, s.workers, s.seed), (2, 3, 7));
+        assert!(!s.energy);
+        assert_eq!(s.parallel, Some(ParallelSpec::new(2, 1)));
+        assert_eq!(s.power_cap, Some(250.0));
+        assert_eq!(s.kv_reuse, Some(0.5));
+        assert_eq!(s.prefill_chunk, Some(64));
+        assert!(s.disagg.is_none());
+        // defaults hold when keys are absent
+        let d = ServeSpec::parse("{}").unwrap();
+        assert_eq!(d, ServeSpec::default());
+        // unknown keys fail with the known list
+        let err = ServeSpec::parse(r#"{"rps": 3}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown key `rps` in serve spec"), "{err}");
+        // the two arrival processes are exclusive
+        let err = ServeSpec::parse(
+            r#"{"rate_rps": 4, "trace": "t.csv"}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn parse_reads_the_disagg_block() {
+        let s = ServeSpec::parse(r#"{
+            "disagg": {
+                "prefill": {"device": "h100", "replicas": 2, "tp": 2},
+                "decode": {"replicas": 3, "power_cap": 300},
+                "link": "nvlink4"
+            }
+        }"#).unwrap();
+        let d = s.disagg.expect("parsed disagg block");
+        assert_eq!(d.prefill.device.as_deref(), Some("h100"));
+        assert_eq!(d.prefill.replicas, 2);
+        assert_eq!(d.prefill.parallel, Some(ParallelSpec::new(2, 1)));
+        assert_eq!(d.decode.replicas, 3);
+        assert_eq!(d.decode.device, None);
+        assert_eq!(d.decode.power_cap, Some(300.0));
+        assert_eq!(d.link, "nvlink4");
+        s.validate().unwrap();
+        // absent pools inherit; link defaults to pcie4
+        let s = ServeSpec::parse(r#"{"disagg": {}}"#).unwrap();
+        let d = s.disagg.as_ref().unwrap();
+        assert_eq!(d.prefill.replicas, 1);
+        assert_eq!(d.link, "pcie4");
+        s.validate().unwrap();
+        // unknown pool keys and unknown links are rejected
+        let err = ServeSpec::parse(
+            r#"{"disagg": {"prefill": {"gpus": 2}}}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("in disagg prefill pool"), "{err}");
+        let bad_link = ServeSpec::parse(
+            r#"{"disagg": {"link": "carrier-pigeon"}}"#).unwrap();
+        let err = bad_link.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown link `carrier-pigeon`"), "{err}");
+    }
+
+    #[test]
+    fn disagg_validation_rejects_conflicting_top_level_knobs() {
+        let base = ServeSpec::parse(r#"{"disagg": {}}"#).unwrap();
+        let bad = [
+            ServeSpec { replicas: 2, ..base.clone() },
+            ServeSpec { parallel: Some(ParallelSpec::new(2, 1)),
+                        ..base.clone() },
+            ServeSpec { power_cap: Some(200.0), ..base.clone() },
+            ServeSpec { phase_dvfs: true, ..base.clone() },
+            // disagg is a simulator concept
+            ServeSpec { device: "cpu".into(), model: "elana-tiny".into(),
+                        ..base.clone() },
+        ];
+        for s in bad {
+            assert!(s.validate().is_err(), "{s:?}");
+        }
+        // a pool that cannot fit the model fails with pool context
+        let s = ServeSpec::parse(
+            r#"{"disagg": {"decode": {"device": "orin"}}}"#).unwrap();
+        let err = format!("{:#}", s.validate().unwrap_err());
+        assert!(err.contains("disagg decode pool"), "{err}");
+        assert!(err.contains("does not fit"), "{err}");
+    }
+
+    #[test]
+    fn pool_spec_projects_a_single_pool_deployment() {
+        let s = ServeSpec::parse(r#"{
+            "quant": "w4a16", "kv_reuse": 0.5, "prefill_chunk": 32,
+            "disagg": {"prefill": {"device": "h100", "replicas": 2}}
+        }"#).unwrap();
+        let d = s.disagg.clone().unwrap();
+        let ps = s.pool_spec(&d.prefill);
+        assert_eq!(ps.device, "h100");
+        assert_eq!(ps.replicas, 2);
+        assert_eq!(ps.quant, "w4a16"); // shared axes carry over
+        // phase shaping and the split itself do not recurse
+        assert!(ps.kv_reuse.is_none() && ps.prefill_chunk.is_none()
+                && ps.disagg.is_none());
+        // inherit-everything pool: top-level device, one replica
+        let ds = s.pool_spec(&d.decode);
+        assert_eq!(ds.device, s.device);
+        assert_eq!(ds.replicas, 1);
+    }
+
+    #[test]
+    fn overrides_apply_only_when_set() {
+        let mut s = ServeSpec::parse(
+            r#"{"requests": 64, "kv_reuse": 0.25}"#).unwrap();
+        ServeOverrides {
+            requests: Some(32),
+            gen_len: Some(48),
+            kv_reuse: Some(0.75),
+            ..ServeOverrides::default()
+        }.apply(&mut s);
+        assert_eq!(s.requests, 32);
+        assert_eq!(s.gen_len, 48);
+        assert_eq!(s.kv_reuse, Some(0.75));
+        assert_eq!(s.model, ServeSpec::default().model); // untouched
     }
 }

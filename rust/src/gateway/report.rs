@@ -13,6 +13,7 @@
 use std::fmt::Write as _;
 use std::io;
 
+use crate::coordinator::PhasePool;
 use crate::util::json::{Json, JsonWriter};
 use crate::util::stats::{Summary, SummaryBuilder};
 
@@ -81,6 +82,34 @@ pub fn render_markdown(o: &ClusterOutcome) -> String {
             None => String::new(),
         },
         s.seed);
+    if let Some(d) = &s.disagg {
+        let pool_line = |p: &PhasePool| {
+            let mut line = format!(
+                "{} x {}", p.replicas,
+                p.device.as_deref().unwrap_or(&s.device));
+            if let Some(par) = p.parallel {
+                let _ = write!(line, " ({})", par.label());
+            }
+            if let Some(c) = p.power_cap {
+                let _ = write!(line, " capped {c} W");
+            }
+            line
+        };
+        let _ = writeln!(
+            out,
+            "disaggregated: prefill {} -> decode {} over {} (KV \
+             handoff)",
+            pool_line(&d.prefill), pool_line(&d.decode), d.link);
+    }
+    if let Some(h) = s.kv_reuse {
+        let _ = writeln!(
+            out,
+            "kv prefix reuse: h={h} of each prompt's cache is already \
+             resident");
+    }
+    if let Some(c) = s.prefill_chunk {
+        let _ = writeln!(out, "chunked prefill: {c}-token chunks");
+    }
     let _ = writeln!(out);
     let _ = writeln!(
         out,
@@ -115,15 +144,29 @@ pub fn render_markdown(o: &ClusterOutcome) -> String {
     }
     let _ = writeln!(out);
     for (pi, p) in o.pools.iter().enumerate() {
-        let lo = p.replica_timeline.iter().map(|&(_, n)| n).min()
-            .unwrap_or(s.replicas);
-        let hi = p.replica_timeline.iter().map(|&(_, n)| n).max()
-            .unwrap_or(s.replicas);
-        let _ = writeln!(
-            out,
-            "pool {pi}: {} batches, replicas {lo}..{hi} ({} scale \
-             event(s)), busy {:.2} s",
-            p.batches.len(), p.replica_timeline.len() - 1, p.busy_s);
+        let span = |tl: &[(f64, usize)]| {
+            let lo = tl.iter().map(|&(_, n)| n).min()
+                .unwrap_or(s.replicas);
+            let hi = tl.iter().map(|&(_, n)| n).max()
+                .unwrap_or(s.replicas);
+            (lo, hi)
+        };
+        let (lo, hi) = span(&p.replica_timeline);
+        if let Some(dt) = &p.decode_replica_timeline {
+            let (dlo, dhi) = span(dt);
+            let _ = writeln!(
+                out,
+                "pool {pi}: {} batches, prefill replicas {lo}..{hi} / \
+                 decode {dlo}..{dhi} ({} scale event(s)), busy {:.2} s",
+                p.batches.len(),
+                p.replica_timeline.len() + dt.len() - 2, p.busy_s);
+        } else {
+            let _ = writeln!(
+                out,
+                "pool {pi}: {} batches, replicas {lo}..{hi} ({} scale \
+                 event(s)), busy {:.2} s",
+                p.batches.len(), p.replica_timeline.len() - 1, p.busy_s);
+        }
     }
     let served: usize = o.tenants.iter().map(|t| t.served).sum();
     let _ = writeln!(
@@ -138,6 +181,14 @@ pub fn render_markdown(o: &ClusterOutcome) -> String {
         let _ = writeln!(
             out,
             "fleet energy: {:.1} J total, {:.3} J/token", total, jt);
+    }
+    if let (Some(kv), Some(d)) = (o.kv_transfer_joules, &s.disagg) {
+        let bytes = o.kv_transfer_bytes.unwrap_or(0);
+        let _ = writeln!(
+            out,
+            "KV handoff: {:.1} MB over {}, {:.3} J ({:.4} J/token)",
+            bytes as f64 / 1e6, d.link, kv,
+            kv / o.generated_tokens() as f64);
     }
     out
 }
@@ -233,16 +284,24 @@ pub fn to_json(o: &ClusterOutcome) -> Json {
                         fields.push(("j_token", Json::num(jt)));
                         fields.push(("j_request", Json::num(jr)));
                     }
+                    if let Some(st) = b.stage {
+                        fields.push(("stage", Json::str(st)));
+                    }
                     Json::obj(fields)
                 })
                 .collect();
-            Json::obj(vec![
+            let mut fields = vec![
                 ("batches", Json::Arr(batches)),
                 ("busy_s", Json::num(p.busy_s)),
                 ("makespan_s", Json::num(p.makespan_s)),
                 ("n_batches", Json::num(p.batches.len() as f64)),
                 ("replica_timeline", timeline_json(&p.replica_timeline)),
-            ])
+            ];
+            if let Some(dt) = &p.decode_replica_timeline {
+                fields.push(("decode_replica_timeline",
+                             timeline_json(dt)));
+            }
+            Json::obj(fields)
         })
         .collect();
     let requests: Vec<Json> = o
@@ -300,10 +359,49 @@ pub fn to_json(o: &ClusterOutcome) -> Json {
         }
         root.push(("autoscale", Json::obj(fields)));
     }
+    if let Some(d) = &s.disagg {
+        let pool = |p: &PhasePool| {
+            let mut fields = vec![
+                ("device", Json::str(
+                    p.device.clone()
+                        .unwrap_or_else(|| s.device.clone()))),
+                ("replicas", Json::num(p.replicas as f64)),
+            ];
+            if let Some(par) = p.parallel {
+                fields.push(("pp", Json::num(par.pp as f64)));
+                fields.push(("tp", Json::num(par.tp as f64)));
+            }
+            if let Some(c) = p.power_cap {
+                fields.push(("power_cap", Json::num(c)));
+            }
+            Json::obj(fields)
+        };
+        root.push(("disagg", Json::obj(vec![
+            ("decode", pool(&d.decode)),
+            ("link", Json::str(d.link.clone())),
+            ("prefill", pool(&d.prefill)),
+        ])));
+    }
+    if let Some(h) = s.kv_reuse {
+        root.push(("kv_reuse", Json::num(h)));
+    }
+    if let Some(c) = s.prefill_chunk {
+        root.push(("prefill_chunk", Json::num(c as f64)));
+    }
+    if let Some(b) = o.kv_transfer_bytes {
+        root.push(("kv_transfer_bytes", Json::num(b as f64)));
+    }
+    if let Some(kv) = o.kv_transfer_joules {
+        root.push(("kv_transfer_joules", Json::num(kv)));
+    }
     if let Some(total) = o.total_joules {
         root.push(("total_joules", Json::num(total)));
         if let Some(jt) = o.joules_per_token() {
             root.push(("j_per_token", Json::num(jt)));
+            if let Some(kv) = o.kv_transfer_joules {
+                root.push(("j_per_token_kv_transfer",
+                           Json::num(kv / o.generated_tokens() as f64)));
+            }
         }
     }
     Json::obj(root)
@@ -336,10 +434,46 @@ pub fn write_json<W: io::Write>(o: &ClusterOutcome, out: W)
         w.field_num("busy_s", o.busy_s)?;
         w.field_str("cluster", &s.name)?;
         w.field_str("device", &s.device)?;
+        if let Some(d) = &s.disagg {
+            let pool = |w: &mut JsonWriter<W>, p: &PhasePool|
+                        -> io::Result<()> {
+                w.field_str("device",
+                            p.device.as_deref().unwrap_or(&s.device))?;
+                if let Some(c) = p.power_cap {
+                    w.field_num("power_cap", c)?;
+                }
+                if let Some(par) = p.parallel {
+                    w.field_num("pp", par.pp as f64)?;
+                }
+                w.field_num("replicas", p.replicas as f64)?;
+                if let Some(par) = p.parallel {
+                    w.field_num("tp", par.tp as f64)?;
+                }
+                Ok(())
+            };
+            w.field_obj("disagg", |w| {
+                w.field_obj("decode", |w| pool(w, &d.decode))?;
+                w.field_str("link", &d.link)?;
+                w.field_obj("prefill", |w| pool(w, &d.prefill))
+            })?;
+        }
         if let Some(jt) = o.joules_per_token() {
             w.field_num("j_per_token", jt)?;
+            if let Some(kv) = o.kv_transfer_joules {
+                w.field_num("j_per_token_kv_transfer",
+                            kv / o.generated_tokens() as f64)?;
+            }
         }
         w.field_num("jain_fairness", o.jain_fairness)?;
+        if let Some(h) = s.kv_reuse {
+            w.field_num("kv_reuse", h)?;
+        }
+        if let Some(b) = o.kv_transfer_bytes {
+            w.field_num("kv_transfer_bytes", b as f64)?;
+        }
+        if let Some(kv) = o.kv_transfer_joules {
+            w.field_num("kv_transfer_joules", kv)?;
+        }
         w.field_num("makespan_s", o.makespan_s)?;
         w.field_str("model", &s.model)?;
         w.field_num("n_pools", s.pools as f64)?;
@@ -370,12 +504,27 @@ pub fn write_json<W: io::Write>(o: &ClusterOutcome, out: W)
                                             b.real_rows as f64)?;
                                 w.field_num("replica",
                                             b.replica as f64)?;
-                                w.field_num("service_s", b.service_s)
+                                w.field_num("service_s", b.service_s)?;
+                                if let Some(st) = b.stage {
+                                    w.field_str("stage", st)?;
+                                }
+                                Ok(())
                             })?;
                         }
                         Ok(())
                     })?;
                     w.field_num("busy_s", p.busy_s)?;
+                    if let Some(dt) = &p.decode_replica_timeline {
+                        w.field_arr("decode_replica_timeline", |w| {
+                            for &(t_s, live) in dt {
+                                w.obj(|w| {
+                                    w.field_num("live", live as f64)?;
+                                    w.field_num("t_s", t_s)
+                                })?;
+                            }
+                            Ok(())
+                        })?;
+                    }
                     w.field_num("makespan_s", p.makespan_s)?;
                     w.field_num("n_batches", p.batches.len() as f64)?;
                     w.field_arr("replica_timeline", |w| {
@@ -391,6 +540,9 @@ pub fn write_json<W: io::Write>(o: &ClusterOutcome, out: W)
             }
             Ok(())
         })?;
+        if let Some(c) = s.prefill_chunk {
+            w.field_num("prefill_chunk", c as f64)?;
+        }
         w.field_str("quant", &s.pool_serve_spec().quant_canonical())?;
         w.field_num("replicas", s.replicas as f64)?;
         w.field_arr("requests", |w| {
@@ -539,6 +691,65 @@ mod tests {
         assert_eq!(tl[0].get("live").unwrap().as_usize(), Some(2));
         // execution details must not leak into the artifact
         assert!(v.get("workers").is_none());
+    }
+
+    #[test]
+    fn disagg_cluster_report_splits_kv_handoff() {
+        let mut s = ClusterSpec {
+            energy: true,
+            seed: 11,
+            replicas: 1,
+            ..ClusterSpec::default()
+        };
+        for t in &mut s.tenants {
+            t.requests = 12;
+            t.prompt_lo = 16;
+            t.prompt_hi = 64;
+            t.gen_len = 8;
+        }
+        s.kv_reuse = Some(0.25);
+        s.disagg = Some(crate::coordinator::DisaggSpec {
+            prefill: PhasePool {
+                replicas: 2,
+                ..PhasePool::inherit()
+            },
+            decode: PhasePool::inherit(),
+            link: "nvlink4".to_string(),
+        });
+        let o = simulate::run(&s).unwrap();
+        let text = render_markdown(&o);
+        assert!(text.contains("disaggregated: prefill 2 x a6000"),
+                "{text}");
+        assert!(text.contains("over nvlink4"), "{text}");
+        assert!(text.contains("kv prefix reuse: h=0.25"), "{text}");
+        assert!(text.contains("prefill replicas 2..2 / decode 1..1"),
+                "{text}");
+        assert!(text.contains("KV handoff:"), "{text}");
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        let d = v.get("disagg").unwrap();
+        assert_eq!(d.get("link").unwrap().as_str(), Some("nvlink4"));
+        assert_eq!(d.get("prefill").unwrap().get("replicas").unwrap()
+                   .as_usize(), Some(2));
+        assert_eq!(d.get("decode").unwrap().get("device").unwrap()
+                   .as_str(), Some("a6000"));
+        assert_eq!(v.get("kv_reuse").unwrap().as_f64(), Some(0.25));
+        assert!(v.get("kv_transfer_bytes").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(v.get("kv_transfer_joules").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(v.get("j_per_token_kv_transfer").unwrap().as_f64()
+                .unwrap() > 0.0);
+        let pool = &v.get("pools").unwrap().as_arr().unwrap()[0];
+        assert!(pool.get("decode_replica_timeline").is_some());
+        let b0 = &pool.get("batches").unwrap().as_arr().unwrap()[0];
+        assert_eq!(b0.get("stage").unwrap().as_str(), Some("prefill"));
+        assert_stream_matches_tree(&o);
+        // legacy artifacts stay free of every new key
+        let u = to_json(&quick_outcome(true)).to_string();
+        for key in ["disagg", "kv_reuse", "kv_transfer", "prefill_chunk",
+                    "\"stage\"", "decode_replica_timeline"] {
+            assert!(!u.contains(key), "legacy cluster JSON leaks {key}");
+        }
     }
 
     fn assert_stream_matches_tree(o: &ClusterOutcome) {

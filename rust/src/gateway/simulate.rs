@@ -20,8 +20,10 @@
 use anyhow::{Context, Result};
 
 use crate::backend::{ExecutionBackend, SimBackend};
-use crate::coordinator::simulate::{event_loop, LoopHooks,
+use crate::coordinator::simulate::{disagg_event_loop, event_loop,
+                                   resolve_ops, LoopHooks, PhaseShaping,
                                    ReplicaGovernor, ServedBatch};
+use crate::coordinator::ServeSpec;
 use crate::engine::TokenBatch;
 use crate::sweep::pool;
 use crate::util::{streams, Rng};
@@ -65,11 +67,17 @@ pub struct ClusterRequest {
 /// One replica pool's execution record.
 #[derive(Debug, Clone)]
 pub struct PoolOutcome {
-    /// Executed batches, in dequeue order (pool-local indices).
+    /// Executed batches, in dequeue order (pool-local indices). Under
+    /// disaggregation, prefill batches first (stage `"prefill"`), then
+    /// decode batches with offset indices (stage `"decode"`).
     pub batches: Vec<ServedBatch>,
     /// `(time_s, live_replicas)` scaling decisions, starting at
-    /// `(0.0, replicas)`.
+    /// `(0.0, replicas)`. Under disaggregation this is the *prefill*
+    /// phase pool's timeline.
     pub replica_timeline: Vec<(f64, usize)>,
+    /// The decode phase pool's scaling timeline; `None` on unified
+    /// pools.
+    pub decode_replica_timeline: Option<Vec<(f64, usize)>>,
     pub makespan_s: f64,
     pub busy_s: f64,
 }
@@ -124,8 +132,14 @@ pub struct ClusterOutcome {
     pub makespan_s: f64,
     /// Total batch execution time across all pools and replicas.
     pub busy_s: f64,
-    /// Fleet energy over the run, when the energy pass ran.
+    /// Fleet energy over the run, when the energy pass ran (includes
+    /// the analytic KV-handoff joules under disaggregation).
     pub total_joules: Option<f64>,
+    /// Fleet-wide KV bytes shipped prefill→decode, when disaggregated.
+    pub kv_transfer_bytes: Option<u64>,
+    /// Analytic link energy of the KV handoff (bytes × pJ/B), when
+    /// disaggregated — present even when the energy pass is off.
+    pub kv_transfer_joules: Option<f64>,
     /// Jain fairness index over the tenants' normalized goodput:
     /// `(Σx)² / (n·Σx²)`, 1.0 when every tenant gets the same share.
     pub jain_fairness: f64,
@@ -246,26 +260,69 @@ pub fn run(spec: &ClusterSpec) -> Result<ClusterOutcome> {
         prio_of.push(tenant.class.priority());
     }
 
-    // 4. drive each pool through the shared serving core
+    // 4. drive each pool through the shared serving core — the unified
+    // event loop, or the two-stage disaggregated core with per-phase
+    // autoscalers
     let prio = |id: u64| prio_of[id as usize];
     let policy = pool_spec.sim_policy();
+    let shaping = PhaseShaping::from_spec(&pool_spec);
     let mut requests: Vec<ClusterRequest> = Vec::with_capacity(meta.len());
     let mut pools: Vec<PoolOutcome> = Vec::with_capacity(spec.pools);
     let mut makespan_s = 0.0f64;
     let mut busy_s = 0.0;
+    let mut kv_bytes_total: u64 = 0;
+    let mut kv_joules_total = 0.0;
     for reqs in &pool_reqs {
-        let mut scaler = spec.autoscale.clone().map(PoolScaler::new);
-        let hooks = LoopHooks {
-            governor: scaler
-                .as_mut()
-                .map(|s| s as &mut dyn ReplicaGovernor),
-            priority: Some(&prio),
+        let (served, pool_out) = if let Some(d) = &spec.disagg {
+            let mut p_scaler = spec.autoscale.clone().map(PoolScaler::new);
+            let mut d_scaler = spec.autoscale.clone().map(PoolScaler::new);
+            let run = disagg_event_loop(
+                &pool_spec, d, reqs,
+                LoopHooks {
+                    governor: p_scaler
+                        .as_mut()
+                        .map(|s| s as &mut dyn ReplicaGovernor),
+                    priority: Some(&prio),
+                    shaping,
+                },
+                LoopHooks {
+                    governor: d_scaler
+                        .as_mut()
+                        .map(|s| s as &mut dyn ReplicaGovernor),
+                    priority: Some(&prio),
+                    shaping: PhaseShaping::none(),
+                })?;
+            kv_bytes_total += run.kv_transfer_bytes;
+            kv_joules_total += run.kv_transfer_joules;
+            (run.requests, PoolOutcome {
+                batches: run.batches,
+                replica_timeline: run.prefill_timeline,
+                decode_replica_timeline: Some(run.decode_timeline),
+                makespan_s: run.makespan_s,
+                busy_s: run.busy_s,
+            })
+        } else {
+            let mut scaler = spec.autoscale.clone().map(PoolScaler::new);
+            let hooks = LoopHooks {
+                governor: scaler
+                    .as_mut()
+                    .map(|s| s as &mut dyn ReplicaGovernor),
+                priority: Some(&prio),
+                shaping,
+            };
+            let run = event_loop(reqs, &policy, spec.replicas,
+                                 &mut backend, hooks)?;
+            (run.requests, PoolOutcome {
+                batches: run.batches,
+                replica_timeline: run.replica_timeline,
+                decode_replica_timeline: None,
+                makespan_s: run.makespan_s,
+                busy_s: run.busy_s,
+            })
         };
-        let run = event_loop(reqs, &policy, spec.replicas, &mut backend,
-                             hooks)?;
-        makespan_s = makespan_s.max(run.makespan_s);
-        busy_s += run.busy_s;
-        for r in &run.requests {
+        makespan_s = makespan_s.max(pool_out.makespan_s);
+        busy_s += pool_out.busy_s;
+        for r in &served {
             let (tenant, arrival_s, admit_s) = meta[r.id as usize];
             let gateway_wait_s = admit_s - arrival_s;
             let ttft_s = gateway_wait_s + r.ttft_s;
@@ -290,12 +347,7 @@ pub fn run(spec: &ClusterSpec) -> Result<ClusterOutcome> {
                     .attained(ttft_s, tpot_s, ttlt_s),
             });
         }
-        pools.push(PoolOutcome {
-            batches: run.batches,
-            replica_timeline: run.replica_timeline,
-            makespan_s: run.makespan_s,
-            busy_s: run.busy_s,
-        });
+        pools.push(pool_out);
     }
     requests.sort_by_key(|r| r.id);
 
@@ -326,6 +378,10 @@ pub fn run(spec: &ClusterSpec) -> Result<ClusterOutcome> {
         makespan_s,
         busy_s,
         total_joules: None,
+        kv_transfer_bytes: spec.disagg.as_ref()
+            .map(|_| kv_bytes_total),
+        kv_transfer_joules: spec.disagg.as_ref()
+            .map(|_| kv_joules_total),
         jain_fairness: jain_index(&shares),
     };
 
@@ -340,36 +396,83 @@ pub fn run(spec: &ClusterSpec) -> Result<ClusterOutcome> {
 /// order and replay each with a sensor keyed to
 /// `mix(mix(seed, CLUSTER_ENERGY), i)` — the result depends only on
 /// the flattened index, never on which worker replayed it.
+///
+/// Under disaggregation each batch replays on its phase pool's rig and
+/// keeps only that phase's joules (the serve-side split discipline:
+/// prefill joules discounted by the reused-prefix fraction, decode
+/// joules with the replayed warm-up prefill subtracted); the analytic
+/// KV-handoff joules seed the fleet total. On unified pools a non-zero
+/// `kv_reuse` scales each batch's prefill share down by `h`.
 fn attribute_energy(spec: &ClusterSpec,
                     scheme: Option<crate::models::QuantScheme>,
                     outcome: &mut ClusterOutcome) -> Result<()> {
-    let shapes: Vec<(usize, usize, usize)> = outcome
+    let pool_spec = spec.pool_serve_spec();
+    let phase_specs: Option<(ServeSpec, ServeSpec)> =
+        spec.disagg.as_ref().map(|d| {
+            (pool_spec.pool_spec(&d.prefill),
+             pool_spec.pool_spec(&d.decode))
+        });
+    let h = spec.kv_reuse.unwrap_or(0.0);
+    let metas: Vec<(usize, usize, usize, bool)> = outcome
         .pools
         .iter()
         .flat_map(|p| {
             p.batches
                 .iter()
-                .map(|b| (b.exec_batch, b.padded_prompt_len, b.gen_len))
+                .map(|b| (b.exec_batch, b.padded_prompt_len, b.gen_len,
+                          b.stage == Some("prefill")))
         })
         .collect();
     let base = Rng::mix(spec.seed, streams::CLUSTER_ENERGY);
     let results = pool::run_indexed(
-        spec.workers, shapes.len(),
+        spec.workers, metas.len(),
         |i| -> Result<(f64, f64, f64)> {
-            let (batch, prompt, gen) = shapes[i];
-            let mut b = SimBackend::new(&spec.model, &spec.device, true,
+            let (batch, prompt, gen, is_prefill) = metas[i];
+            let ps: &ServeSpec = match &phase_specs {
+                Some((pf, dc)) => if is_prefill { pf } else { dc },
+                None => &pool_spec,
+            };
+            let mut b = SimBackend::new(&ps.model, &ps.device, true,
                                         Rng::mix(base, i as u64))?
-                .with_max_seq_len(spec.max_seq_len);
+                .with_max_seq_len(ps.max_seq_len);
             if let Some(q) = scheme {
                 b = b.with_quant(q);
             }
+            if let Some(p) = ps.parallel {
+                b = b.with_parallel(p)?;
+            }
+            if let Some((p_op, d_op)) = resolve_ops(ps)? {
+                b = b.with_phase_ops(p_op, d_op);
+            }
             let tb = TokenBatch::new(batch, prompt,
                                      vec![0; batch * prompt])?;
-            let run = b.generate(&tb, gen)?;
-            Ok(b.run_energy(&run)?.triple())
+            let gen_steps = if phase_specs.is_some() && is_prefill {
+                // prefill batches only need the prompt phase priced;
+                // the single decode step is discarded below
+                1
+            } else {
+                gen
+            };
+            let run = b.generate(&tb, gen_steps)?;
+            let t = b.run_energy(&run)?.triple();
+            if phase_specs.is_some() {
+                if is_prefill {
+                    let jp = t.0 * (1.0 - h);
+                    Ok((jp, 0.0, jp))
+                } else {
+                    Ok((0.0, t.1, (t.2 - t.0).max(0.0)))
+                }
+            } else {
+                let mut j = t;
+                if h > 0.0 {
+                    j.2 -= j.0 * h;
+                    j.0 -= j.0 * h;
+                }
+                Ok(j)
+            }
         });
     let mut iter = results.into_iter();
-    let mut total = 0.0;
+    let mut total = outcome.kv_transfer_joules.unwrap_or(0.0);
     for (pi, p) in outcome.pools.iter_mut().enumerate() {
         for b in &mut p.batches {
             let joules = iter
@@ -527,6 +630,57 @@ mod tests {
         assert_eq!(misses[0].name, s.tenants[0].name);
         assert!(o.jain_fairness < 1.0,
                 "one starved tenant must dent fairness");
+    }
+
+    #[test]
+    fn disagg_cluster_splits_phases_and_ships_kv() {
+        let mut s = quick_spec();
+        s.replicas = 1;
+        s.energy = true;
+        s.kv_reuse = Some(0.25);
+        s.disagg = Some(crate::coordinator::DisaggSpec {
+            prefill: crate::coordinator::PhasePool {
+                replicas: 2,
+                ..crate::coordinator::PhasePool::inherit()
+            },
+            decode: crate::coordinator::PhasePool::inherit(),
+            link: "nvlink4".to_string(),
+        });
+        let o = run(&s).unwrap();
+        assert_eq!(o.requests.len(), 32);
+        let p0 = &o.pools[0];
+        assert!(p0.batches.iter().any(|b| b.stage == Some("prefill")));
+        assert!(p0.batches.iter().any(|b| b.stage == Some("decode")));
+        assert_eq!(p0.replica_timeline[0], (0.0, 2),
+                   "prefill phase timeline starts at its pool size");
+        assert_eq!(p0.decode_replica_timeline.as_ref().unwrap()[0],
+                   (0.0, 1));
+        assert!(o.kv_transfer_bytes.unwrap() > 0);
+        let kv_j = o.kv_transfer_joules.unwrap();
+        assert!(kv_j > 0.0);
+        // fleet total = per-batch phase shares + analytic handoff
+        let batch_sum: f64 = o.pools.iter()
+            .flat_map(|p| &p.batches)
+            .map(|b| b.joules.unwrap().2)
+            .sum();
+        let total = o.total_joules.unwrap();
+        assert!((total - (batch_sum + kv_j)).abs() <= total * 1e-9,
+                "{total} != {batch_sum} + {kv_j}");
+        for b in o.pools.iter().flat_map(|p| &p.batches) {
+            let j = b.joules.unwrap();
+            if b.stage == Some("prefill") {
+                assert_eq!(j.1, 0.0, "prefill batches carry no decode J");
+                assert_eq!(j.0, j.2);
+            } else {
+                assert_eq!(j.0, 0.0, "decode batches carry no prefill J");
+            }
+        }
+        // the unified fleet stays free of the disagg fields
+        let u = run(&quick_spec()).unwrap();
+        assert!(u.kv_transfer_bytes.is_none());
+        assert!(u.kv_transfer_joules.is_none());
+        assert!(u.pools[0].decode_replica_timeline.is_none());
+        assert!(u.pools[0].batches.iter().all(|b| b.stage.is_none()));
     }
 
     #[test]

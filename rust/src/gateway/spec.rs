@@ -41,7 +41,7 @@
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::coordinator::{Arrivals, ServeSpec};
+use crate::coordinator::{Arrivals, DisaggSpec, ServeSpec};
 use crate::util::json::Json;
 use crate::util::spec as fields;
 use crate::util::{streams, Rng};
@@ -324,6 +324,16 @@ pub struct ClusterSpec {
     /// Head-of-line co-batching wait, seconds (pool batcher knob).
     pub max_wait_s: f64,
     pub max_seq_len: usize,
+    /// Reused KV-prefix fraction `h ∈ [0, 1)`, fleet-wide (the serve
+    /// spec's `kv_reuse` knob applied to every pool).
+    pub kv_reuse: Option<f64>,
+    /// Chunked-prefill size in tokens, fleet-wide.
+    pub prefill_chunk: Option<usize>,
+    /// Disaggregated prefill/decode pools: every routing pool becomes a
+    /// prefill rank pool + decode rank pool pair joined by the declared
+    /// link. Requires top-level `replicas: 1` (phase pools carry their
+    /// own replica counts).
+    pub disagg: Option<DisaggSpec>,
 }
 
 impl Default for ClusterSpec {
@@ -371,6 +381,9 @@ impl Default for ClusterSpec {
             energy: true,
             max_wait_s: 0.05,
             max_seq_len: 4096,
+            kv_reuse: None,
+            prefill_chunk: None,
+            disagg: None,
         }
     }
 }
@@ -408,6 +421,9 @@ impl ClusterSpec {
             parallel: None,
             power_cap: None,
             phase_dvfs: false,
+            kv_reuse: self.kv_reuse,
+            prefill_chunk: self.prefill_chunk,
+            disagg: self.disagg.clone(),
         }
     }
 
@@ -431,16 +447,36 @@ impl ClusterSpec {
         for t in &self.tenants {
             self.validate_tenant(t)?;
         }
+        if let Some(d) = &self.disagg {
+            ensure!(self.replicas == 1,
+                    "with `disagg`, replicas are declared per phase pool \
+                     (set the top-level replicas to 1)");
+            for (name, pool) in [("prefill", &d.prefill),
+                                 ("decode", &d.decode)] {
+                ensure!(pool.replicas >= 1,
+                        "disagg {name} pool needs at least one replica");
+            }
+        }
         if let Some(a) = &self.autoscale {
             ensure!(a.min_replicas >= 1,
                     "autoscale min_replicas must be >= 1");
             ensure!(a.min_replicas <= a.max_replicas,
                     "autoscale bounds are inverted ({}..{})",
                     a.min_replicas, a.max_replicas);
-            ensure!((a.min_replicas..=a.max_replicas)
-                        .contains(&self.replicas),
-                    "initial replicas {} outside autoscale bounds {}..{}",
-                    self.replicas, a.min_replicas, a.max_replicas);
+            // with disagg the phase pools carry the scaled counts, so
+            // the bounds must bracket both of them instead
+            let initial: Vec<(&str, usize)> = match &self.disagg {
+                Some(d) => vec![("prefill pool replicas",
+                                 d.prefill.replicas),
+                                ("decode pool replicas",
+                                 d.decode.replicas)],
+                None => vec![("replicas", self.replicas)],
+            };
+            for (what, r) in initial {
+                ensure!((a.min_replicas..=a.max_replicas).contains(&r),
+                        "initial {what} {r} outside autoscale bounds \
+                         {}..{}", a.min_replicas, a.max_replicas);
+            }
             ensure!(a.down_queue_depth < a.up_queue_depth,
                     "autoscale queue thresholds are inverted \
                      (down {} >= up {})", a.down_queue_depth,
@@ -531,10 +567,11 @@ impl ClusterSpec {
 
     /// Parse the JSON schema documented in the module header.
     pub fn parse(text: &str) -> Result<ClusterSpec> {
-        const KNOWN_KEYS: [&str; 14] =
+        const KNOWN_KEYS: [&str; 17] =
             ["cluster", "model", "device", "quant", "pools", "replicas",
              "routing", "autoscale", "tenants", "workers", "seed",
-             "energy", "max_wait_s", "max_seq_len"];
+             "energy", "max_wait_s", "max_seq_len", "kv_reuse",
+             "prefill_chunk", "disagg"];
         let root = Json::parse(text).context("parsing cluster spec JSON")?;
         fields::require_known_keys(
             fields::root_obj(&root, "cluster spec")?, &KNOWN_KEYS,
@@ -594,6 +631,14 @@ impl ClusterSpec {
         }
         if let Some(v) = fields::usize_field(&root, "max_seq_len")? {
             spec.max_seq_len = v;
+        }
+        spec.kv_reuse = fields::fraction_field(&root, "kv_reuse")?;
+        if let Some(v) = fields::usize_field(&root, "prefill_chunk")? {
+            ensure!(v >= 1, "`prefill_chunk` must be >= 1 token");
+            spec.prefill_chunk = Some(v);
+        }
+        if let Some(v) = root.get("disagg") {
+            spec.disagg = Some(DisaggSpec::parse(v)?);
         }
         Ok(spec)
     }
@@ -1045,6 +1090,56 @@ mod tests {
         // untouched knobs keep their defaults
         assert_eq!(s.model, ClusterSpec::default().model);
         assert_eq!(s.pools, ClusterSpec::default().pools);
+    }
+
+    #[test]
+    fn parse_reads_disagg_and_prefill_shaping() {
+        let s = ClusterSpec::parse(
+            r#"{"replicas": 1, "kv_reuse": 0.4, "prefill_chunk": 64,
+                "disagg": {"prefill": {"replicas": 2, "device": "h100"},
+                           "decode": {"replicas": 1},
+                           "link": "nvlink4"}}"#)
+            .unwrap();
+        assert_eq!(s.kv_reuse, Some(0.4));
+        assert_eq!(s.prefill_chunk, Some(64));
+        let d = s.disagg.as_ref().unwrap();
+        assert_eq!(d.prefill.replicas, 2);
+        assert_eq!(d.prefill.device.as_deref(), Some("h100"));
+        assert_eq!(d.link, "nvlink4");
+        s.validate().unwrap();
+        // the projected pool serve spec carries the knobs through to
+        // the shared serving core
+        let ps = s.pool_serve_spec();
+        assert_eq!(ps.kv_reuse, Some(0.4));
+        assert_eq!(ps.prefill_chunk, Some(64));
+        assert!(ps.disagg.is_some());
+        ps.validate().unwrap();
+        // disagg conflicts with a top-level replica count
+        let mut bad = s.clone();
+        bad.replicas = 2;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("per phase pool"), "{err}");
+        // autoscale bounds must bracket the phase pool counts
+        let mut scaled = s.clone();
+        scaled.autoscale = Some(AutoscaleSpec {
+            min_replicas: 3,
+            max_replicas: 4,
+            ..AutoscaleSpec::default()
+        });
+        let err = format!("{:#}", scaled.validate().unwrap_err());
+        assert!(err.contains("outside autoscale bounds"), "{err}");
+        // bad shaping knobs are rejected at parse time
+        assert!(ClusterSpec::parse(r#"{"kv_reuse": 1.0}"#).is_err());
+        assert!(ClusterSpec::parse(r#"{"prefill_chunk": 0}"#).is_err());
+        let err = format!(
+            "{:#}",
+            ClusterSpec::parse(
+                r#"{"replicas": 1,
+                    "disagg": {"link": "string-and-cans"}}"#)
+                .unwrap()
+                .validate()
+                .unwrap_err());
+        assert!(err.contains("unknown link `string-and-cans`"), "{err}");
     }
 
     #[test]

@@ -535,6 +535,25 @@ pub fn rig_by_name(name: &str) -> Option<Rig> {
     }
 }
 
+/// Look up an interconnect preset by spec name — what a disaggregated
+/// deployment's `link` field resolves through for the prefill→decode
+/// KV handoff.
+pub fn link_by_name(name: &str) -> Option<Interconnect> {
+    match name.to_ascii_lowercase().as_str() {
+        "pcie4" => Some(Interconnect::pcie4()),
+        "nvlink3" => Some(Interconnect::nvlink3()),
+        "nvlink4" => Some(Interconnect::nvlink4()),
+        "unified" => Some(Interconnect::unified()),
+        _ => None,
+    }
+}
+
+/// Canonical names of every link `link_by_name` accepts. Disagg-spec
+/// validation lists these in its error messages.
+pub fn all_link_names() -> &'static [&'static str] {
+    &["pcie4", "nvlink3", "nvlink4", "unified"]
+}
+
 /// Canonical CLI names of every rig `rig_by_name` accepts (one spelling
 /// per rig). Sweep-spec validation lists these in its error messages.
 pub fn all_rig_names() -> &'static [&'static str] {
@@ -551,6 +570,17 @@ pub fn all_rigs() -> Vec<Rig> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn link_names_resolve() {
+        for name in all_link_names() {
+            assert!(link_by_name(name).is_some(), "{name}");
+        }
+        assert_eq!(link_by_name("PCIe4").unwrap(), Interconnect::pcie4());
+        assert_eq!(link_by_name("nvlink4").unwrap(),
+                   Interconnect::nvlink4());
+        assert!(link_by_name("infiniband").is_none());
+    }
 
     #[test]
     fn calibration_a6000_achieved_rates() {

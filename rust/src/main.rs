@@ -94,8 +94,8 @@ fn run(cmd: Command) -> Result<()> {
         Command::Trace { model, device, workload, out } => {
             cmd_trace(&model, &device, &workload, &out)?;
         }
-        Command::Serve { spec, json, out } => {
-            cmd_serve(spec, json, out)?;
+        Command::Serve { spec_path, overrides, json, out } => {
+            cmd_serve(spec_path, overrides, json, out)?;
         }
         Command::Cluster { spec_path, overrides, json, out,
                            assert_slo } => {
@@ -277,7 +277,7 @@ fn cmd_trace(model: &str, device: &str, workload: &hwsim::Workload,
 
     let title = format!("ELANA {} on {} [{}]", arch.display_name,
                         rig.name(), workload.label());
-    trace::perfetto::write_chrome_trace(&recorder, &title, out)?;
+    trace::chrome::write_chrome_trace(&recorder, &title, out)?;
     println!("wrote {out} ({} events) — open in https://ui.perfetto.dev",
              recorder.len());
     print!("{}", trace::analyze(&recorder).render(10));
@@ -321,8 +321,17 @@ fn cmd_cluster(spec_path: Option<String>,
     Ok(())
 }
 
-fn cmd_serve(spec: ServeSpec, json: bool, out: Option<String>)
-             -> Result<()> {
+fn cmd_serve(spec_path: Option<String>,
+             overrides: coordinator::spec::ServeOverrides, json: bool,
+             out: Option<String>) -> Result<()> {
+    // base scenario: the spec file if given (`disagg` pools live
+    // there), the defaults otherwise; every explicitly-passed flag then
+    // overrides the base value
+    let mut spec = match spec_path {
+        Some(p) => ServeSpec::load(&p)?,
+        None => ServeSpec::default(),
+    };
+    overrides.apply(&mut spec);
     let outcome = coordinator::simulate::run(&spec)?;
     emit_json(out.as_deref(), json, |w| {
         coordinator::report::write_json(&outcome, w)

@@ -36,4 +36,4 @@ pub use fleet::FleetEstimate;
 pub use report::{render_markdown, to_json};
 pub use runner::{run, PlanPoint, PlanResults};
 pub use solve::FitModel;
-pub use spec::PlanSpec;
+pub use spec::{PlanOverrides, PlanSpec};

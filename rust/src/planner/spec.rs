@@ -6,11 +6,14 @@
 //! the registries before any solver or worker starts, so a typo fails
 //! fast with the known names listed.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 pub use crate::hwsim::parallel::expand_parallelisms;
 use crate::hwsim::{device, ParallelSpec};
-use crate::models::{self, quant};
+use crate::models;
+use crate::util::json::Json;
+use crate::util::spec as fields;
+use crate::util::spec::AxisGrid;
 use crate::util::units::MemUnit;
 
 /// Default workloads the planner evaluates at each solved max-batch
@@ -92,13 +95,32 @@ impl Default for PlanSpec {
 }
 
 impl PlanSpec {
+    /// The shared grid-axis view of this spec — parsing, expansion,
+    /// and range checks all live in [`AxisGrid`].
+    pub fn axes(&self) -> AxisGrid {
+        AxisGrid {
+            quants: self.quants.clone(),
+            tps: self.tps.clone(),
+            pps: self.pps.clone(),
+            power_caps: self.power_caps.clone(),
+            ..AxisGrid::default()
+        }
+    }
+
+    fn set_axes(&mut self, a: AxisGrid) {
+        self.quants = a.quants;
+        self.tps = a.tps;
+        self.pps = a.pps;
+        self.power_caps = a.power_caps;
+    }
+
     /// The TP×PP mappings every (model, device, quant, len) cell
     /// expands over: `[None]` (legacy whole-rig) when no parallel axis
     /// was given, the pp-major cross product otherwise. The axis is
     /// innermost, so parallel-free specs keep the exact point indices
     /// (and thus per-point seeds) of the pre-parallelism planner.
     pub fn parallelisms(&self) -> Vec<Option<ParallelSpec>> {
-        expand_parallelisms(&self.tps, &self.pps)
+        self.axes().parallelisms()
     }
 
     /// The power-cap axis every point expands over: `[None]` (uncapped,
@@ -106,11 +128,7 @@ impl PlanSpec {
     /// axes, so cap-free specs keep the exact point indices (and thus
     /// per-point seeds) of the pre-DVFS planner.
     pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
-        if self.power_caps.is_empty() {
-            vec![None]
-        } else {
-            self.power_caps.iter().map(|&c| Some(c)).collect()
-        }
+        self.axes().power_cap_axis()
     }
 
     /// Number of operating points the plan expands to.
@@ -140,26 +158,143 @@ impl PlanSpec {
                       device::all_rig_names().join(", "));
             }
         }
-        for q in &self.quants {
-            quant::parse_token(q)?;
-        }
+        self.axes().validate()?;
         for &(p, g) in &self.lens {
             ensure!(p >= 1 && g >= 1,
                     "workload lengths must be >= 1 (got {p}+{g})");
         }
-        for &tp in &self.tps {
-            ensure!(tp >= 1, "tensor-parallel degrees must be >= 1");
-        }
-        for &pp in &self.pps {
-            ensure!(pp >= 1, "pipeline-parallel degrees must be >= 1");
-        }
-        for &cap in &self.power_caps {
-            ensure!(cap.is_finite() && cap > 0.0,
-                    "power caps must be positive watts (got {cap})");
-        }
         ensure!(self.target_rps > 0.0 && self.target_rps.is_finite(),
                 "target rate must be positive (got {})", self.target_rps);
         Ok(())
+    }
+
+    /// Parse a plan spec from JSON, built on the shared
+    /// [`crate::util::spec`] field readers. Missing keys keep the
+    /// defaults; present keys must have the right type; unknown keys
+    /// error with the known names listed.
+    ///
+    /// ```json
+    /// {
+    ///   "plan": "fleet",
+    ///   "models": ["llama-3.1-70b"],
+    ///   "devices": ["4xa6000"],
+    ///   "quants": ["native", "w4a16"],
+    ///   "lens": ["512+512"],
+    ///   "tps": [1, 2, 4],
+    ///   "target_rps": 25,
+    ///   "workers": 0
+    /// }
+    /// ```
+    pub fn parse(text: &str) -> Result<PlanSpec> {
+        const KNOWN_KEYS: [&str; 13] =
+            ["plan", "models", "devices", "quants", "lens", "tps",
+             "pps", "power_caps", "target_rps", "energy", "unit",
+             "seed", "workers"];
+        let root = Json::parse(text).context("parsing plan spec JSON")?;
+        fields::require_known_keys(fields::root_obj(&root, "plan spec")?,
+                                   &KNOWN_KEYS, "plan spec")?;
+        let mut spec = PlanSpec::default();
+        if let Some(v) = fields::string_field(&root, "plan")? {
+            spec.name = v;
+        }
+        if let Some(v) = fields::string_list(&root, "models")? {
+            spec.models = v;
+        }
+        if let Some(v) = fields::string_list(&root, "devices")? {
+            spec.devices = v;
+        }
+        if let Some(v) = fields::lens_list(&root, "lens")? {
+            spec.lens = v;
+        }
+        let mut axes = spec.axes();
+        axes.read(&root)?;
+        spec.set_axes(axes);
+        if let Some(v) = fields::f64_field(&root, "target_rps")? {
+            spec.target_rps = v;
+        }
+        if let Some(v) = fields::bool_field(&root, "energy")? {
+            spec.energy = v;
+        }
+        if let Some(u) = fields::string_field(&root, "unit")? {
+            spec.unit = MemUnit::parse(&u)
+                .ok_or_else(|| anyhow!("bad unit `{u}` (si|gib)"))?;
+        }
+        if let Some(v) = fields::seed_field(&root, "seed")? {
+            spec.seed = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "workers")? {
+            spec.workers = v;
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<PlanSpec> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading plan spec {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// Explicitly-given CLI flags, layered over a base spec (the defaults,
+/// or a `--spec` file). `None` means "flag not given; keep the base
+/// value".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanOverrides {
+    pub models: Option<Vec<String>>,
+    pub devices: Option<Vec<String>>,
+    pub quants: Option<Vec<String>>,
+    pub lens: Option<Vec<(usize, usize)>>,
+    pub tps: Option<Vec<usize>>,
+    pub pps: Option<Vec<usize>>,
+    pub power_caps: Option<Vec<f64>>,
+    pub target_rps: Option<f64>,
+    pub energy: Option<bool>,
+    pub unit: Option<MemUnit>,
+    pub seed: Option<u64>,
+    pub workers: Option<usize>,
+}
+
+impl PlanOverrides {
+    /// Apply every explicitly-given flag onto `spec`.
+    pub fn apply(self, spec: &mut PlanSpec) {
+        if let Some(v) = self.models {
+            spec.models = v;
+        }
+        if let Some(v) = self.devices {
+            spec.devices = v;
+        }
+        if let Some(v) = self.quants {
+            spec.quants = v;
+        }
+        if let Some(v) = self.lens {
+            spec.lens = v;
+        }
+        if let Some(v) = self.tps {
+            spec.tps = v;
+        }
+        if let Some(v) = self.pps {
+            spec.pps = v;
+        }
+        if let Some(v) = self.power_caps {
+            spec.power_caps = v;
+        }
+        if let Some(v) = self.target_rps {
+            spec.target_rps = v;
+        }
+        if let Some(v) = self.energy {
+            spec.energy = v;
+        }
+        if let Some(v) = self.unit {
+            spec.unit = v;
+        }
+        if let Some(v) = self.seed {
+            spec.seed = v;
+        }
+        if let Some(v) = self.workers {
+            spec.workers = v;
+        }
     }
 }
 
@@ -225,6 +360,52 @@ mod tests {
         ] {
             assert!(bad.validate().is_err());
         }
+    }
+
+    #[test]
+    fn parse_reads_the_shared_schema_and_overrides_layer() {
+        let s = PlanSpec::parse(
+            r#"{"plan": "fleet", "models": ["llama-3.1-70b"],
+                "devices": ["4xa6000"], "quants": ["native", "w4a16"],
+                "lens": ["512+512"], "tps": [1, 2, 4],
+                "target_rps": 25, "energy": false, "seed": 7,
+                "workers": 2}"#)
+            .unwrap();
+        assert_eq!(s.name, "fleet");
+        assert_eq!(s.models, vec!["llama-3.1-70b"]);
+        assert_eq!(s.quants, vec!["native", "w4a16"]);
+        assert_eq!(s.tps, vec![1, 2, 4]);
+        assert_eq!(s.target_rps, 25.0);
+        assert!(!s.energy);
+        assert_eq!(s.seed, 7);
+        s.validate().unwrap();
+        // missing keys keep the defaults
+        let s = PlanSpec::parse(r#"{"target_rps": 5}"#).unwrap();
+        assert_eq!(s.models.len(), 4);
+        assert_eq!(s.target_rps, 5.0);
+        // typo'd keys and wrong types error with uniform messages
+        let err = PlanSpec::parse(r#"{"model": ["x"]}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown key `model` in plan spec"), "{err}");
+        let err = PlanSpec::parse(r#"{"tps": "2"}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("`tps` must be an array"), "{err}");
+        assert!(PlanSpec::parse("not json").is_err());
+        assert!(PlanSpec::parse(r#"[1]"#).is_err());
+        // overrides layer over a parsed base
+        let mut spec = PlanSpec::parse(r#"{"plan": "file"}"#).unwrap();
+        PlanOverrides {
+            devices: Some(vec!["a6000".into()]),
+            workers: Some(3),
+            ..PlanOverrides::default()
+        }
+        .apply(&mut spec);
+        assert_eq!(spec.devices, vec!["a6000"]);
+        assert_eq!(spec.workers, 3);
+        assert_eq!(spec.name, "file");
+        let mut same = spec.clone();
+        PlanOverrides::default().apply(&mut same);
+        assert_eq!(same, spec);
     }
 
     #[test]

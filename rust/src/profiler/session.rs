@@ -51,6 +51,13 @@ pub struct ProfileOutcome {
     /// Quantization scheme key the row was simulated under (`None` =
     /// the model's native dtype).
     pub quant: Option<String>,
+    /// Prefix-KV-cache hit rate the row was profiled under (`None` =
+    /// no reuse; the key is then omitted from JSON so legacy artifacts
+    /// stay byte-identical).
+    pub kv_reuse: Option<f64>,
+    /// Chunked-prefill chunk size, tokens (`None` = monolithic
+    /// prefill; key omitted from JSON).
+    pub prefill_chunk: Option<usize>,
     /// Decode-step energy windows that were shorter than the sampling
     /// period and fell back to the nearest-before sensor sample, out of
     /// `energy_windows` total (0/0 on closed-form and statistical
@@ -72,7 +79,7 @@ impl ProfileOutcome {
     /// deterministic — sweep outputs must be byte-identical at any
     /// worker-thread count.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::str(self.model.clone())),
             ("device", Json::str(self.device.clone())),
             ("batch", Json::num(self.workload.batch as f64)),
@@ -91,7 +98,14 @@ impl ProfileOutcome {
                 Some(q) => Json::str(q.clone()),
                 None => Json::Null,
             }),
-        ])
+        ];
+        if let Some(h) = self.kv_reuse {
+            fields.push(("kv_reuse", Json::num(h)));
+        }
+        if let Some(c) = self.prefill_chunk {
+            fields.push(("prefill_chunk", Json::num(c as f64)));
+        }
+        Json::obj(fields)
     }
 
     /// Stream the same object into an open [`JsonWriter`] — byte-
@@ -107,7 +121,13 @@ impl ProfileOutcome {
             w.field_num("j_prompt", self.j_prompt)?;
             w.field_num("j_request", self.j_request)?;
             w.field_num("j_token", self.j_token)?;
+            if let Some(h) = self.kv_reuse {
+                w.field_num("kv_reuse", h)?;
+            }
             w.field_str("model", &self.model)?;
+            if let Some(c) = self.prefill_chunk {
+                w.field_num("prefill_chunk", c as f64)?;
+            }
             w.field_num("prompt_len", self.workload.prompt_len as f64)?;
             match &self.quant {
                 Some(q) => w.field_str("quant", q)?,
@@ -175,23 +195,47 @@ fn profile_deterministic(backend: &mut dyn ExecutionBackend,
                              vec![0; w.batch * w.prompt_len])?;
     let run = backend.generate(&tb, w.gen_len)?;
     let energy = backend.run_energy(&run)?;
-    let (j_prompt, j_token, j_request) = energy.triple();
+    let (mut j_prompt, j_token, mut j_request) = energy.triple();
     let steps = Summary::from_samples(&run.step_s);
+    let mut ttft_s = run.ttft_s;
+    let mut ttlt_s = run.ttlt_s;
+    // Chunked prefill: the telescoped chunk work sums to the monolithic
+    // prefill; what chunking adds is one weight-stream pass per extra
+    // chunk (latency-only — the extra passes re-read weights already
+    // priced into the energy model's roofline windows).
+    if let Some(chunk) = spec.prefill_chunk {
+        let extra = backend::chunked_prefill_extra_s(
+            backend, w.batch, w.prompt_len, chunk)?;
+        ttft_s += extra;
+        ttlt_s += extra;
+    }
+    // Prefix-KV reuse: a hit rate h skips h of the prefill compute —
+    // and h of its energy. h = 0 leaves every bit unchanged.
+    if let Some(h) = spec.kv_reuse {
+        if h > 0.0 {
+            ttlt_s -= ttft_s * h;
+            ttft_s -= ttft_s * h;
+            j_request -= j_prompt * h;
+            j_prompt -= j_prompt * h;
+        }
+    }
     Ok(ProfileOutcome {
         model: backend.model_name(),
         device: backend.device_name(),
         workload: w.clone(),
-        ttft_ms: run.ttft_s * 1e3,
+        ttft_ms: ttft_s * 1e3,
         j_prompt,
         tpot_ms: run.tpot_mean_s() * 1e3,
         j_token,
-        ttlt_ms: run.ttlt_s * 1e3,
+        ttlt_ms: ttlt_s * 1e3,
         j_request,
         ttft_std_ms: 0.0,
         tpot_p50_ms: steps.as_ref().map(|s| s.p50 * 1e3).unwrap_or(0.0),
         tpot_p99_ms: steps.as_ref().map(|s| s.p99 * 1e3).unwrap_or(0.0),
         simulated: true,
         quant: spec.quant.map(|q| q.key.to_string()),
+        kv_reuse: spec.kv_reuse,
+        prefill_chunk: spec.prefill_chunk,
         energy_fallback_steps: energy.fallback_step_windows,
         energy_windows: energy.step_windows,
     })
@@ -249,6 +293,8 @@ fn profile_statistical(backend: &mut dyn ExecutionBackend,
         tpot_p99_ms: tpot.summary.p99 * 1e3,
         simulated: false,
         quant: None,
+        kv_reuse: None,
+        prefill_chunk: None,
         // the statistical path windows the sampler log directly and
         // carries no per-window fallback counts
         energy_fallback_steps: 0,
@@ -314,6 +360,57 @@ mod tests {
         // the mean lies within the percentile envelope
         assert!(o.tpot_ms >= o.tpot_p50_ms * 0.5);
         assert!(o.tpot_ms <= o.tpot_p99_ms * 1.5);
+    }
+
+    #[test]
+    fn kv_reuse_scales_prefill_and_chunking_adds_overhead() {
+        let base_spec = ProfileSpec {
+            energy: false,
+            ..ProfileSpec::new("llama-3.1-8b", "a6000",
+                               Workload::new(1, 512, 128))
+        };
+        let base = profile_simulated(&base_spec).unwrap();
+        // h = 0 is bit-identical to no reuse (the legacy contract)
+        let zero = profile_simulated(&ProfileSpec {
+            kv_reuse: Some(0.0),
+            ..base_spec.clone()
+        })
+        .unwrap();
+        assert_eq!(zero.row(), base.row());
+        // rising hit rates monotonically shrink TTFT, TTLT, J/prompt
+        let mut last = base.clone();
+        for h in [0.25, 0.5, 0.75] {
+            let o = profile_simulated(&ProfileSpec {
+                kv_reuse: Some(h),
+                ..base_spec.clone()
+            })
+            .unwrap();
+            assert!(o.ttft_ms < last.ttft_ms, "h={h}");
+            assert!(o.ttlt_ms < last.ttlt_ms, "h={h}");
+            assert!(o.j_prompt < last.j_prompt, "h={h}");
+            assert!(o.j_request < last.j_request, "h={h}");
+            // decode is untouched
+            assert_eq!(o.tpot_ms, base.tpot_ms);
+            assert_eq!(o.j_token, base.j_token);
+            last = o;
+        }
+        // chunked prefill adds latency, monotonically in chunk count
+        let chunked = |c| {
+            profile_simulated(&ProfileSpec {
+                prefill_chunk: Some(c),
+                ..base_spec.clone()
+            })
+            .unwrap()
+        };
+        let c128 = chunked(128);
+        let c64 = chunked(64);
+        assert!(c128.ttft_ms > base.ttft_ms);
+        assert!(c64.ttft_ms > c128.ttft_ms, "more chunks, more overhead");
+        // a chunk covering the whole prompt is bit-identical to none
+        assert_eq!(chunked(512).row(), base.row());
+        assert_eq!(chunked(4096).row(), base.row());
+        // energy attribution is latency-only for chunking
+        assert_eq!(c64.j_prompt, base.j_prompt);
     }
 
     #[test]

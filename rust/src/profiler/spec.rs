@@ -1,8 +1,14 @@
-//! Profiling run specification (what the CLI builds from its flags).
+//! Profiling run specification (what the CLI builds from its flags, or
+//! parses from a `--spec` JSON file via the shared
+//! [`crate::util::spec`] field readers).
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::hwsim::{OperatingPoint, ParallelSpec, Workload};
 use crate::models::QuantScheme;
-use crate::util::units::MemUnit;
+use crate::util::json::Json;
+use crate::util::spec as fields;
+use crate::util::units::{parse_workload_len, MemUnit};
 
 /// How many runs each metric averages over — the paper's §2.3/§2.4
 /// defaults: 100 runs for TTFT/TPOT, 20 for TTLT.
@@ -40,6 +46,17 @@ pub struct ProfileSpec {
     /// to the pre-DVFS outputs. The engine has no modeled governor, so
     /// `backend::from_spec` rejects a point on `cpu`.
     pub op: Option<OperatingPoint>,
+    /// Prefix-KV-cache hit rate in `[0, 1)`: that fraction of the
+    /// prompt's prefill compute (and energy) is skipped. `None` = no
+    /// reuse, bit-identical to the pre-reuse profiler. Simulated rigs
+    /// only.
+    pub kv_reuse: Option<f64>,
+    /// Chunked-prefill chunk size in tokens: the prompt is prefilled
+    /// in chunks so decode batches can interleave, adding one
+    /// weight-stream pass per extra chunk to TTFT. `None` = monolithic
+    /// prefill, bit-identical to the pre-chunking profiler. Simulated
+    /// rigs only.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl ProfileSpec {
@@ -57,6 +74,8 @@ impl ProfileSpec {
             quant: None,
             parallel: None,
             op: None,
+            kv_reuse: None,
+            prefill_chunk: None,
         }
     }
 
@@ -72,6 +91,87 @@ impl ProfileSpec {
     pub fn is_simulated(&self) -> bool {
         self.device != "cpu"
     }
+
+    /// Parse a profile spec from JSON, built on the shared
+    /// [`crate::util::spec`] field readers. Missing keys keep the
+    /// defaults; present keys must have the right type; unknown keys
+    /// error with the known names listed.
+    ///
+    /// ```json
+    /// {
+    ///   "model": "llama-3.1-8b",
+    ///   "device": "a6000",
+    ///   "batch": 1,
+    ///   "len": "512+512",
+    ///   "quant": "w4a16",
+    ///   "kv_reuse": 0.5
+    /// }
+    /// ```
+    pub fn parse(text: &str) -> Result<ProfileSpec> {
+        const KNOWN_KEYS: [&str; 15] =
+            ["model", "device", "batch", "len", "latency_runs",
+             "ttlt_runs", "warmup", "energy", "unit", "seed", "quant",
+             "tp", "pp", "kv_reuse", "prefill_chunk"];
+        let root = Json::parse(text).context("parsing profile spec JSON")?;
+        fields::require_known_keys(
+            fields::root_obj(&root, "profile spec")?, &KNOWN_KEYS,
+            "profile spec")?;
+        let model = fields::string_field(&root, "model")?
+            .unwrap_or_else(|| "llama-3.1-8b".to_string());
+        let device = fields::string_field(&root, "device")?
+            .unwrap_or_else(|| "a6000".to_string());
+        let batch = fields::usize_field(&root, "batch")?.unwrap_or(1);
+        let (p, g) = match fields::string_field(&root, "len")? {
+            None => (512, 512),
+            Some(l) => parse_workload_len(&l).ok_or_else(|| {
+                anyhow!("bad lens entry `{l}` (want \"P+G\")")
+            })?,
+        };
+        let mut spec =
+            ProfileSpec::new(&model, &device, Workload::new(batch, p, g));
+        if let Some(v) = fields::usize_field(&root, "latency_runs")? {
+            spec.latency_runs = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "ttlt_runs")? {
+            spec.ttlt_runs = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "warmup")? {
+            spec.warmup = v;
+        }
+        if let Some(v) = fields::bool_field(&root, "energy")? {
+            spec.energy = v;
+        }
+        if let Some(u) = fields::string_field(&root, "unit")? {
+            spec.mem_unit = MemUnit::parse(&u)
+                .ok_or_else(|| anyhow!("bad unit `{u}` (si|gib)"))?;
+        }
+        if let Some(v) = fields::seed_field(&root, "seed")? {
+            spec.seed = v;
+        }
+        if let Some(q) = fields::string_field(&root, "quant")? {
+            spec.quant = crate::models::quant::parse_token(&q)?;
+        }
+        let tp = fields::usize_field(&root, "tp")?;
+        let pp = fields::usize_field(&root, "pp")?;
+        if tp.is_some() || pp.is_some() {
+            spec.parallel = Some(ParallelSpec::new(tp.unwrap_or(1),
+                                                   pp.unwrap_or(1)));
+        }
+        spec.kv_reuse = fields::fraction_field(&root, "kv_reuse")?;
+        if let Some(v) = fields::usize_field(&root, "prefill_chunk")? {
+            anyhow::ensure!(v >= 1, "prefill chunks must be >= 1 token");
+            spec.prefill_chunk = Some(v);
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ProfileSpec> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading profile spec {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +186,8 @@ mod tests {
         assert_eq!(s.ttlt_runs, 20);
         assert!(s.energy);
         assert_eq!(s.mem_unit, MemUnit::Si);
+        assert_eq!(s.kv_reuse, None);
+        assert_eq!(s.prefill_chunk, None);
     }
 
     #[test]
@@ -95,5 +197,41 @@ mod tests {
         assert_eq!(s.latency_runs, 5);
         assert_eq!(s.ttlt_runs, 2);
         assert!(!s.is_simulated());
+    }
+
+    #[test]
+    fn parse_reads_the_shared_schema() {
+        let s = ProfileSpec::parse(
+            r#"{"model": "qwen-2.5-7b", "device": "thor", "batch": 4,
+                "len": "256+64", "quant": "w4a16", "tp": 1,
+                "energy": false, "seed": 11, "kv_reuse": 0.5,
+                "prefill_chunk": 64}"#)
+            .unwrap();
+        assert_eq!(s.model, "qwen-2.5-7b");
+        assert_eq!(s.device, "thor");
+        assert_eq!(s.workload, Workload::new(4, 256, 64));
+        assert!(s.quant.is_some());
+        assert_eq!(s.parallel, Some(ParallelSpec::new(1, 1)));
+        assert!(!s.energy);
+        assert_eq!(s.seed, 11);
+        assert_eq!(s.kv_reuse, Some(0.5));
+        assert_eq!(s.prefill_chunk, Some(64));
+        // missing keys keep the paper defaults
+        let s = ProfileSpec::parse("{}").unwrap();
+        assert_eq!(s.model, "llama-3.1-8b");
+        assert_eq!(s.workload, Workload::new(1, 512, 512));
+        assert_eq!(s.latency_runs, DEFAULT_LATENCY_RUNS);
+        // typo'd keys and wrong types error with uniform messages
+        let err = ProfileSpec::parse(r#"{"modle": "x"}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown key `modle` in profile spec"),
+                "{err}");
+        let err = ProfileSpec::parse(r#"{"kv_reuse": 1.5}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("`kv_reuse` must be a fraction in [0, 1)"),
+                "{err}");
+        assert!(ProfileSpec::parse(r#"{"len": "512"}"#).is_err());
+        assert!(ProfileSpec::parse(r#"{"prefill_chunk": 0}"#).is_err());
+        assert!(ProfileSpec::parse("not json").is_err());
     }
 }

@@ -32,6 +32,12 @@ pub struct SweepCell {
     /// Per-device power cap of the cell, watts; `None` = uncapped (the
     /// legacy cell).
     pub power_cap: Option<f64>,
+    /// Prefix-KV-cache hit rate of the cell; `None` = no reuse (the
+    /// legacy cell).
+    pub kv_reuse: Option<f64>,
+    /// Chunked-prefill chunk size of the cell, tokens; `None` =
+    /// monolithic prefill (the legacy cell).
+    pub prefill_chunk: Option<usize>,
     /// Deterministic per-cell seed: `Rng::mix(spec.seed, index)`.
     pub seed: u64,
 }
@@ -49,6 +55,8 @@ impl SweepCell {
         s.quant = self.quant;
         s.parallel = self.parallel;
         s.op = self.power_cap.map(OperatingPoint::cap);
+        s.kv_reuse = self.kv_reuse;
+        s.prefill_chunk = self.prefill_chunk;
         s
     }
 
@@ -71,6 +79,24 @@ impl SweepCell {
     pub fn cap_label(&self) -> String {
         match self.power_cap {
             Some(c) => format!("{c} W"),
+            None => "—".to_string(),
+        }
+    }
+
+    /// Report label of the cell's prefix-KV-reuse axis (`h=0.5`, or
+    /// `—` for no-reuse cells).
+    pub fn reuse_label(&self) -> String {
+        match self.kv_reuse {
+            Some(h) => format!("h={h}"),
+            None => "—".to_string(),
+        }
+    }
+
+    /// Report label of the cell's chunked-prefill axis (`128 tok`, or
+    /// `—` for monolithic cells).
+    pub fn chunk_label(&self) -> String {
+        match self.prefill_chunk {
+            Some(c) => format!("{c} tok"),
             None => "—".to_string(),
         }
     }
@@ -101,6 +127,8 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
         .collect();
     let pars = spec.parallelisms();
     let caps = spec.power_cap_axis();
+    let reuses = spec.kv_reuse_axis();
+    let chunks = spec.prefill_chunk_axis();
     let mut cells = Vec::with_capacity(spec.n_cells());
     for m in &spec.models {
         for d in &spec.devices {
@@ -109,18 +137,26 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
                     for &q in &schemes {
                         for &par in &pars {
                             for &cap in &caps {
-                                let index = cells.len();
-                                cells.push(SweepCell {
-                                    index,
-                                    model: m.clone(),
-                                    device: d.clone(),
-                                    workload: Workload::new(b, p, g),
-                                    quant: q,
-                                    parallel: par,
-                                    power_cap: cap,
-                                    seed: Rng::mix(spec.seed,
-                                                   index as u64),
-                                });
+                                for &h in &reuses {
+                                    for &chunk in &chunks {
+                                        let index = cells.len();
+                                        cells.push(SweepCell {
+                                            index,
+                                            model: m.clone(),
+                                            device: d.clone(),
+                                            workload:
+                                                Workload::new(b, p, g),
+                                            quant: q,
+                                            parallel: par,
+                                            power_cap: cap,
+                                            kv_reuse: h,
+                                            prefill_chunk: chunk,
+                                            seed: Rng::mix(
+                                                spec.seed,
+                                                index as u64),
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -252,6 +288,33 @@ mod tests {
         assert_eq!(legacy[0].power_cap, None);
         assert_eq!(legacy[0].cap_label(), "—");
         assert_eq!(legacy[0].profile_spec(true, MemUnit::Si).op, None);
+    }
+
+    #[test]
+    fn reuse_and_chunk_axes_expand_innermost_of_all() {
+        let mut spec = small_spec();
+        spec.kv_reuse = vec![0.0, 0.5];
+        spec.prefill_chunks = vec![64];
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 16); // 2 models x 2 devices x 2 batches x 2 h
+        // innermost: adjacent cells alternate hit rates, same chunk
+        assert_eq!(cells[0].kv_reuse, Some(0.0));
+        assert_eq!(cells[1].kv_reuse, Some(0.5));
+        assert_eq!(cells[0].prefill_chunk, Some(64));
+        assert_eq!(cells[0].model, cells[1].model);
+        assert_eq!(cells[0].workload, cells[1].workload);
+        assert_eq!(cells[1].reuse_label(), "h=0.5");
+        assert_eq!(cells[0].chunk_label(), "64 tok");
+        // the axes flow into the cell's ProfileSpec
+        let ps = cells[1].profile_spec(true, MemUnit::Si);
+        assert_eq!(ps.kv_reuse, Some(0.5));
+        assert_eq!(ps.prefill_chunk, Some(64));
+        // legacy grids carry neither and keep their indices
+        let legacy = expand(&small_spec());
+        assert_eq!(legacy[0].kv_reuse, None);
+        assert_eq!(legacy[0].reuse_label(), "—");
+        assert_eq!(legacy[0].chunk_label(), "—");
+        assert_eq!(legacy.len(), 8);
     }
 
     #[test]

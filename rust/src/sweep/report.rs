@@ -30,6 +30,9 @@ pub fn render_markdown(r: &SweepResults) -> String {
     let worst = r.worst_j_token();
     let has_par = r.cells.iter().any(|c| c.cell.parallel.is_some());
     let has_cap = r.cells.iter().any(|c| c.cell.power_cap.is_some());
+    let has_reuse = r.cells.iter().any(|c| c.cell.kv_reuse.is_some());
+    let has_chunk =
+        r.cells.iter().any(|c| c.cell.prefill_chunk.is_some());
     let mut out = String::new();
     let _ = writeln!(out, "# elana sweep — {}", s.name);
     let _ = writeln!(out);
@@ -44,6 +47,14 @@ pub fn render_markdown(r: &SweepResults) -> String {
     }
     if has_cap {
         axes.push_str(&format!(" x {} power caps", s.power_caps.len()));
+    }
+    if has_reuse {
+        axes.push_str(&format!(" x {} KV reuse rates",
+                               s.kv_reuse.len()));
+    }
+    if has_chunk {
+        axes.push_str(&format!(" x {} prefill chunks",
+                               s.prefill_chunks.len()));
     }
     let _ = writeln!(out, "{axes} (seed {})", s.seed);
 
@@ -62,6 +73,14 @@ pub fn render_markdown(r: &SweepResults) -> String {
         }
         if has_cap {
             hdr.push_str(" Cap |");
+            sep.push_str("---|");
+        }
+        if has_reuse {
+            hdr.push_str(" Reuse |");
+            sep.push_str("---|");
+        }
+        if has_chunk {
+            hdr.push_str(" Chunk |");
             sep.push_str("---|");
         }
         hdr.push_str(" Workload | TTFT ms | J/Prompt | TPOT ms | p50 \
@@ -94,6 +113,14 @@ pub fn render_markdown(r: &SweepResults) -> String {
             }
             if has_cap {
                 axis_cells.push_str(&format!(" {} |", c.cell.cap_label()));
+            }
+            if has_reuse {
+                axis_cells.push_str(
+                    &format!(" {} |", c.cell.reuse_label()));
+            }
+            if has_chunk {
+                axis_cells.push_str(
+                    &format!(" {} |", c.cell.chunk_label()));
             }
             let _ = writeln!(
                 out,
@@ -156,6 +183,12 @@ pub fn to_json(r: &SweepResults) -> Json {
             if let Some(cap) = c.cell.power_cap {
                 fields.push(("power_cap_w", Json::num(cap)));
             }
+            if let Some(h) = c.cell.kv_reuse {
+                fields.push(("kv_reuse", Json::num(h)));
+            }
+            if let Some(chunk) = c.cell.prefill_chunk {
+                fields.push(("prefill_chunk", Json::num(chunk as f64)));
+            }
             Json::obj(fields)
         })
         .collect();
@@ -197,6 +230,15 @@ pub fn to_json(r: &SweepResults) -> Json {
         fields.push(("power_caps", Json::Arr(
             s.power_caps.iter().map(|&c| Json::num(c)).collect())));
     }
+    if !s.kv_reuse.is_empty() {
+        fields.push(("kv_reuse", Json::Arr(
+            s.kv_reuse.iter().map(|&h| Json::num(h)).collect())));
+    }
+    if !s.prefill_chunks.is_empty() {
+        fields.push(("prefill_chunks", Json::Arr(
+            s.prefill_chunks.iter()
+                .map(|&c| Json::num(c as f64)).collect())));
+    }
     Json::obj(fields)
 }
 
@@ -224,6 +266,9 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
             for c in &r.cells {
                 w.obj(|w| {
                     w.field_num("index", c.cell.index as f64)?;
+                    if let Some(h) = c.cell.kv_reuse {
+                        w.field_num("kv_reuse", h)?;
+                    }
                     w.key("outcome")?;
                     c.outcome.write_json(w)?;
                     if let Some(cap) = c.cell.power_cap {
@@ -231,6 +276,9 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
                     }
                     if let Some(p) = c.cell.parallel {
                         w.field_num("pp", p.pp as f64)?;
+                    }
+                    if let Some(chunk) = c.cell.prefill_chunk {
+                        w.field_num("prefill_chunk", chunk as f64)?;
                     }
                     w.field_str("quant", &c.cell.quant_token())?;
                     w.field_str("seed", &c.cell.seed.to_string())?;
@@ -249,6 +297,14 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
             Ok(())
         })?;
         w.field_bool("energy", s.energy)?;
+        if !s.kv_reuse.is_empty() {
+            w.field_arr("kv_reuse", |w| {
+                for &h in &s.kv_reuse {
+                    w.num(h)?;
+                }
+                Ok(())
+            })?;
+        }
         w.field_arr("lens", |w| {
             for &(p, g) in &s.lens {
                 w.str(&format!("{p}+{g}"))?;
@@ -274,6 +330,14 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
             w.field_arr("pps", |w| {
                 for &p in &s.pps {
                     w.num(p as f64)?;
+                }
+                Ok(())
+            })?;
+        }
+        if !s.prefill_chunks.is_empty() {
+            w.field_arr("prefill_chunks", |w| {
+                for &c in &s.prefill_chunks {
+                    w.num(c as f64)?;
                 }
                 Ok(())
             })?;
@@ -464,6 +528,52 @@ mod tests {
     }
 
     #[test]
+    fn reuse_and_chunk_columns_render_in_markdown_and_json() {
+        let s = SweepSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            kv_reuse: vec![0.0, 0.5],
+            prefill_chunks: vec![32],
+            ..SweepSpec::default()
+        };
+        let r = runner::run(&s).unwrap();
+        assert_eq!(r.len(), 2);
+        let text = render_markdown(&r);
+        assert!(text.contains("| Reuse |"), "{text}");
+        assert!(text.contains("| Chunk |"), "{text}");
+        assert!(text.contains("| h=0 |"), "{text}");
+        assert!(text.contains("| h=0.5 |"), "{text}");
+        assert!(text.contains("| 32 tok |"), "{text}");
+        assert!(text.contains("x 2 KV reuse rates"), "{text}");
+        assert!(text.contains("x 1 prefill chunks"), "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("kv_reuse").unwrap().as_f64(), Some(0.0));
+        assert_eq!(cells[1].get("kv_reuse").unwrap().as_f64(), Some(0.5));
+        assert_eq!(cells[0].get("prefill_chunk").unwrap().as_usize(),
+                   Some(32));
+        assert_eq!(v.get("kv_reuse").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("prefill_chunks").unwrap().as_arr().unwrap()
+                   .len(), 1);
+        // reusing half the prefix makes TTFT cheaper, not TPOT
+        let t = |i: usize, k: &str| cells[i].get("outcome").unwrap()
+            .get(k).unwrap().as_f64().unwrap();
+        assert!(t(1, "ttft_ms") < t(0, "ttft_ms"));
+        assert_eq!(t(1, "tpot_ms"), t(0, "tpot_ms"));
+        // legacy sweeps carry no reuse/chunk keys anywhere
+        let legacy = results();
+        let lv = Json::parse(&to_json(&legacy).to_string()).unwrap();
+        assert!(lv.get("kv_reuse").is_none());
+        assert!(lv.get("prefill_chunks").is_none());
+        let lc = lv.get("cells").unwrap().as_arr().unwrap();
+        assert!(lc[0].get("kv_reuse").is_none());
+        assert!(lc[0].get("prefill_chunk").is_none());
+        assert!(!render_markdown(&legacy).contains("| Reuse |"));
+    }
+
+    #[test]
     fn stream_json_matches_tree_across_axes() {
         // legacy, quant, parallel, and power-cap sweeps all hit
         // different optional-key paths in the sorted emission order
@@ -498,6 +608,15 @@ mod tests {
                 batches: vec![1],
                 lens: vec![(64, 32)],
                 power_caps: vec![150.0, 300.0],
+                ..SweepSpec::default()
+            },
+            SweepSpec {
+                models: vec!["llama-3.1-8b".into()],
+                devices: vec!["a6000".into()],
+                batches: vec![1],
+                lens: vec![(64, 32)],
+                kv_reuse: vec![0.0, 0.5],
+                prefill_chunks: vec![32],
                 ..SweepSpec::default()
             },
         ];

@@ -23,11 +23,11 @@
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::hwsim::parallel::expand_parallelisms;
 use crate::hwsim::{device, ParallelSpec};
 use crate::models;
 use crate::util::json::Json;
 use crate::util::spec as fields;
+use crate::util::spec::AxisGrid;
 use crate::util::units::MemUnit;
 
 /// Default grid: the paper's two headline 8B-class models on one cloud
@@ -59,10 +59,17 @@ pub struct SweepSpec {
     /// Pipeline-parallel degrees (`--pp 1,2`). Empty = legacy.
     pub pps: Vec<usize>,
     /// Per-device power caps in watts (`--power-cap 150,220`). Empty =
-    /// uncapped only — bit-identical to the pre-DVFS sweep. The axis is
-    /// innermost of all, so legacy grids keep their cell indices and
-    /// per-cell seeds.
+    /// uncapped only — bit-identical to the pre-DVFS sweep.
     pub power_caps: Vec<f64>,
+    /// Prefix-KV-cache hit rates in `[0, 1)` (`--kv-reuse 0.3,0.6`):
+    /// each skips that fraction of prefill compute. Empty = no reuse,
+    /// bit-identical to the pre-reuse sweep.
+    pub kv_reuse: Vec<f64>,
+    /// Chunked-prefill chunk sizes in tokens (`--prefill-chunk 128`).
+    /// Empty = monolithic prefill, the legacy cell. The reuse and
+    /// chunk axes are innermost of all, so legacy grids keep their
+    /// cell indices and per-cell seeds.
+    pub prefill_chunks: Vec<usize>,
     /// Measure energy through the sensor-playback pipeline (§2.4).
     pub energy: bool,
     pub unit: MemUnit,
@@ -85,6 +92,8 @@ impl Default for SweepSpec {
             tps: Vec::new(),
             pps: Vec::new(),
             power_caps: Vec::new(),
+            kv_reuse: Vec::new(),
+            prefill_chunks: Vec::new(),
             energy: true,
             unit: MemUnit::Si,
             seed: 0,
@@ -94,22 +103,50 @@ impl Default for SweepSpec {
 }
 
 impl SweepSpec {
+    /// The shared grid-axis view of this spec — parsing, expansion,
+    /// and range checks all live in [`AxisGrid`].
+    pub fn axes(&self) -> AxisGrid {
+        AxisGrid {
+            quants: self.quants.clone(),
+            tps: self.tps.clone(),
+            pps: self.pps.clone(),
+            power_caps: self.power_caps.clone(),
+            kv_reuse: self.kv_reuse.clone(),
+            prefill_chunks: self.prefill_chunks.clone(),
+        }
+    }
+
+    fn set_axes(&mut self, a: AxisGrid) {
+        self.quants = a.quants;
+        self.tps = a.tps;
+        self.pps = a.pps;
+        self.power_caps = a.power_caps;
+        self.kv_reuse = a.kv_reuse;
+        self.prefill_chunks = a.prefill_chunks;
+    }
+
     /// The TP×PP mappings every cell expands over (`[None]` when no
     /// parallel axis was given — grid indices and per-cell seeds then
     /// match the pre-parallelism sweep exactly).
     pub fn parallelisms(&self) -> Vec<Option<ParallelSpec>> {
-        expand_parallelisms(&self.tps, &self.pps)
+        self.axes().parallelisms()
     }
 
     /// The power-cap axis every cell expands over: `[None]` (uncapped,
     /// the legacy cell) when no caps were given, the given caps
     /// otherwise.
     pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
-        if self.power_caps.is_empty() {
-            vec![None]
-        } else {
-            self.power_caps.iter().map(|&c| Some(c)).collect()
-        }
+        self.axes().power_cap_axis()
+    }
+
+    /// The prefix-KV-reuse axis: `[None]` (no reuse) when empty.
+    pub fn kv_reuse_axis(&self) -> Vec<Option<f64>> {
+        self.axes().kv_reuse_axis()
+    }
+
+    /// The chunked-prefill axis: `[None]` (monolithic) when empty.
+    pub fn prefill_chunk_axis(&self) -> Vec<Option<usize>> {
+        self.axes().prefill_chunk_axis()
     }
 
     /// Number of cells the grid expands to.
@@ -117,6 +154,7 @@ impl SweepSpec {
         self.models.len() * self.devices.len() * self.batches.len()
             * self.lens.len() * self.quants.len()
             * self.parallelisms().len() * self.power_cap_axis().len()
+            * self.kv_reuse_axis().len() * self.prefill_chunk_axis().len()
     }
 
     /// Validate every axis against the registries before spawning
@@ -149,16 +187,12 @@ impl SweepSpec {
         }
         ensure!(!self.quants.is_empty(),
                 "sweep needs at least one quant scheme");
-        for q in &self.quants {
-            models::quant::parse_token(q)?;
-        }
+        self.axes().validate()?;
         // every requested mapping must be hostable on every device —
         // sweep cells all run, so an impossible cell is a spec error,
         // not a skipped row (the planner, by contrast, reports it as
         // infeasible)
         for par in self.parallelisms().into_iter().flatten() {
-            ensure!(par.tp >= 1 && par.pp >= 1,
-                    "parallel degrees must be >= 1");
             for d in &self.devices {
                 let rig = device::rig_by_name(d).expect("validated above");
                 ensure!(par.n_ranks() <= rig.n_devices,
@@ -174,10 +208,6 @@ impl SweepSpec {
                         arch.n_layers());
             }
         }
-        for &cap in &self.power_caps {
-            ensure!(cap.is_finite() && cap > 0.0,
-                    "power caps must be positive watts (got {cap})");
-        }
         Ok(())
     }
 
@@ -187,10 +217,10 @@ impl SweepSpec {
     /// type (a typo'd or wrong-typed key errors instead of silently
     /// running a different grid).
     pub fn parse(text: &str) -> Result<SweepSpec> {
-        const KNOWN_KEYS: [&str; 13] =
+        const KNOWN_KEYS: [&str; 15] =
             ["sweep", "models", "devices", "batches", "lens", "quants",
-             "tps", "pps", "power_caps", "energy", "unit", "seed",
-             "threads"];
+             "tps", "pps", "power_caps", "kv_reuse", "prefill_chunks",
+             "energy", "unit", "seed", "threads"];
         let root = Json::parse(text).context("parsing sweep spec JSON")?;
         fields::require_known_keys(fields::root_obj(&root, "sweep spec")?,
                                    &KNOWN_KEYS, "sweep spec")?;
@@ -210,18 +240,9 @@ impl SweepSpec {
         if let Some(v) = fields::lens_list(&root, "lens")? {
             spec.lens = v;
         }
-        if let Some(v) = fields::string_list(&root, "quants")? {
-            spec.quants = v;
-        }
-        if let Some(v) = fields::usize_list(&root, "tps")? {
-            spec.tps = v;
-        }
-        if let Some(v) = fields::usize_list(&root, "pps")? {
-            spec.pps = v;
-        }
-        if let Some(v) = fields::f64_list(&root, "power_caps", "watts")? {
-            spec.power_caps = v;
-        }
+        let mut axes = spec.axes();
+        axes.read(&root)?;
+        spec.set_axes(axes);
         if let Some(v) = fields::bool_field(&root, "energy")? {
             spec.energy = v;
         }
@@ -260,6 +281,8 @@ pub struct SweepOverrides {
     pub tps: Option<Vec<usize>>,
     pub pps: Option<Vec<usize>>,
     pub power_caps: Option<Vec<f64>>,
+    pub kv_reuse: Option<Vec<f64>>,
+    pub prefill_chunks: Option<Vec<usize>>,
     pub energy: Option<bool>,
     pub unit: Option<MemUnit>,
     pub seed: Option<u64>,
@@ -292,6 +315,12 @@ impl SweepOverrides {
         }
         if let Some(v) = self.power_caps {
             spec.power_caps = v;
+        }
+        if let Some(v) = self.kv_reuse {
+            spec.kv_reuse = v;
+        }
+        if let Some(v) = self.prefill_chunks {
+            spec.prefill_chunks = v;
         }
         if let Some(v) = self.energy {
             spec.energy = v;
@@ -471,6 +500,41 @@ mod tests {
         let mut spec = SweepSpec::default();
         ov.apply(&mut spec);
         assert_eq!(spec.power_caps, vec![180.0]);
+    }
+
+    #[test]
+    fn reuse_and_chunk_axes_parse_validate_and_multiply_the_grid() {
+        let s = SweepSpec::parse(
+            r#"{"models": ["llama-3.1-8b"], "devices": ["a6000"],
+                "batches": [1], "lens": ["64+32"],
+                "kv_reuse": [0.0, 0.5], "prefill_chunks": [16, 32]}"#)
+            .unwrap();
+        assert_eq!(s.kv_reuse, vec![0.0, 0.5]);
+        assert_eq!(s.prefill_chunks, vec![16, 32]);
+        assert_eq!(s.n_cells(), 4);
+        s.validate().unwrap();
+        // legacy grids expand to the single no-reuse/monolithic cell
+        assert_eq!(SweepSpec::default().kv_reuse_axis(), vec![None]);
+        assert_eq!(SweepSpec::default().prefill_chunk_axis(),
+                   vec![None]);
+        // out-of-range hit rates and zero chunks rejected
+        let bad = SweepSpec { kv_reuse: vec![1.0],
+                              ..SweepSpec::default() };
+        assert!(bad.validate().is_err());
+        let bad = SweepSpec { prefill_chunks: vec![0],
+                              ..SweepSpec::default() };
+        assert!(bad.validate().is_err());
+        assert!(SweepSpec::parse(r#"{"kv_reuse": "0.5"}"#).is_err());
+        // overrides layer the axes like every other flag
+        let ov = SweepOverrides {
+            kv_reuse: Some(vec![0.25]),
+            prefill_chunks: Some(vec![64]),
+            ..SweepOverrides::default()
+        };
+        let mut spec = SweepSpec::default();
+        ov.apply(&mut spec);
+        assert_eq!(spec.kv_reuse, vec![0.25]);
+        assert_eq!(spec.prefill_chunks, vec![64]);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Chrome Trace Event JSON export (Perfetto-loadable — Figure 1).
+//!
+//! Emits the legacy JSON trace format (`traceEvents` with "X" complete
+//! events) that https://ui.perfetto.dev and chrome://tracing both read.
+//! Track ids map to `tid`, categories to `cat`; a process-name metadata
+//! event labels the trace like the paper's screenshot.
+//!
+//! This code lived in `trace::perfetto` through PR 7 — a misnomer,
+//! since what is emitted is Chrome Trace Event JSON (which the Perfetto
+//! UI merely *reads*), not a Perfetto protobuf. `trace::perfetto`
+//! remains as a deprecated re-export of this module.
+
+use std::io;
+
+use crate::util::json::{Json, JsonWriter};
+
+use super::recorder::{TraceEvent, TraceRecorder};
+
+/// Serialize a recorder's events to Chrome Trace JSON.
+pub fn to_chrome_trace_json(recorder: &TraceRecorder,
+                            process_name: &str) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(recorder.len() + 1);
+
+    // process metadata (shows up as the track group title in Perfetto)
+    events.push(Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str(process_name))])),
+    ]));
+
+    for ev in recorder.events() {
+        events.push(event_json(&ev));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .to_string()
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(ev.name.clone())),
+        ("cat", Json::str(ev.category.clone())),
+        ("ph", Json::str("X")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(ev.track as f64)),
+        ("ts", Json::num(ev.start_us)),
+        ("dur", Json::num(ev.duration_us)),
+    ])
+}
+
+/// Stream the trace into any sink — byte-identical to
+/// [`to_chrome_trace_json`] (pinned by `stream_matches_tree`) without
+/// building a `Json` node per event; layer-level decode traces run to
+/// thousands of spans.
+pub fn write_chrome_trace_to<W: io::Write>(recorder: &TraceRecorder,
+                                           process_name: &str, out: W)
+                                           -> io::Result<()> {
+    let mut w = JsonWriter::new(out);
+    w.obj(|w| {
+        w.field_str("displayTimeUnit", "ms")?;
+        w.field_arr("traceEvents", |w| {
+            w.obj(|w| {
+                w.field_obj("args", |w| {
+                    w.field_str("name", process_name)
+                })?;
+                w.field_str("name", "process_name")?;
+                w.field_str("ph", "M")?;
+                w.field_num("pid", 1.0)?;
+                w.field_num("tid", 0.0)
+            })?;
+            for ev in recorder.events() {
+                w.obj(|w| {
+                    w.field_str("cat", &ev.category)?;
+                    w.field_num("dur", ev.duration_us)?;
+                    w.field_str("name", &ev.name)?;
+                    w.field_str("ph", "X")?;
+                    w.field_num("pid", 1.0)?;
+                    w.field_num("tid", ev.track as f64)?;
+                    w.field_num("ts", ev.start_us)
+                })?;
+            }
+            Ok(())
+        })
+    })?;
+    w.finish().map(|_| ())
+}
+
+/// Write the trace to a file (buffered, streamed).
+pub fn write_chrome_trace(recorder: &TraceRecorder, process_name: &str,
+                          path: impl AsRef<std::path::Path>)
+                          -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut buf = io::BufWriter::new(f);
+    write_chrome_trace_to(recorder, process_name, &mut buf)?;
+    io::Write::flush(&mut buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> TraceRecorder {
+        let r = TraceRecorder::new();
+        r.record("prefill", "phase", 0, 0.0, 94300.0);
+        r.record("layer00/qkv_proj", "gemm", 1, 0.0, 700.0);
+        r.record("layer00/flash_attn", "attention", 1, 700.0, 500.0);
+        r
+    }
+
+    #[test]
+    fn output_is_valid_json_with_trace_events() {
+        let s = to_chrome_trace_json(&sample_recorder(), "elana");
+        let v = Json::parse(&s).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4); // metadata + 3 spans
+        // metadata first
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        // complete events carry ts/dur in microseconds
+        let e = &events[1];
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("dur").unwrap().as_f64(), Some(94300.0));
+        assert_eq!(e.get("pid").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn categories_and_tracks_preserved() {
+        let s = to_chrome_trace_json(&sample_recorder(), "elana");
+        let v = Json::parse(&s).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let attn = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str())
+                  == Some("layer00/flash_attn"))
+            .unwrap();
+        assert_eq!(attn.get("cat").unwrap().as_str(), Some("attention"));
+        assert_eq!(attn.get("tid").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn process_name_in_metadata() {
+        let s = to_chrome_trace_json(&sample_recorder(), "elana decode b=1");
+        assert!(s.contains("elana decode b=1"));
+    }
+
+    #[test]
+    fn stream_matches_tree() {
+        // empty recorder (metadata-only) and a populated one with an
+        // escape-needing process name
+        for (r, name) in [(TraceRecorder::new(), "elana \"q\"\n"),
+                          (sample_recorder(), "elana decode b=1")] {
+            let mut buf = Vec::new();
+            write_chrome_trace_to(&r, name, &mut buf).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(),
+                       to_chrome_trace_json(&r, name));
+        }
+    }
+
+    #[test]
+    fn write_to_file_roundtrip() {
+        let dir = std::env::temp_dir().join("elana_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&sample_recorder(), "elana", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn deprecated_perfetto_alias_still_resolves() {
+        // old import paths keep compiling through the re-export
+        let s = crate::trace::perfetto::to_chrome_trace_json(
+            &sample_recorder(), "elana");
+        assert_eq!(s, to_chrome_trace_json(&sample_recorder(), "elana"));
+    }
+}

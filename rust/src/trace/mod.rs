@@ -1,16 +1,18 @@
-//! Kernel/phase trace recording + Perfetto export + HTA-style analysis.
+//! Kernel/phase trace recording + Chrome-trace export + HTA-style
+//! analysis.
 //!
 //! Reproduces ELANA §2.5 / Figure 1: profiling runs record spans (real
 //! engine phases, plus hwsim-synthesized kernel timelines) into a
-//! `TraceRecorder`; `perfetto` serializes the Chrome Trace Event JSON
-//! that https://ui.perfetto.dev renders; `hta` computes the Holistic
-//! Trace Analysis style summaries (top kernels, category breakdown,
-//! idle share).
+//! `TraceRecorder`; `chrome` serializes the Chrome Trace Event JSON
+//! that https://ui.perfetto.dev renders (`perfetto` remains as a
+//! deprecated alias); `hta` computes the Holistic Trace Analysis style
+//! summaries (top kernels, category breakdown, idle share).
 
+pub mod chrome;
 pub mod hta;
 pub mod perfetto;
 pub mod recorder;
 
+pub use chrome::to_chrome_trace_json;
 pub use hta::{analyze, HtaSummary};
-pub use perfetto::to_chrome_trace_json;
 pub use recorder::{SpanGuard, TraceEvent, TraceRecorder};

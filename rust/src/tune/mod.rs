@@ -23,4 +23,4 @@ pub mod runner;
 pub mod spec;
 
 pub use runner::{run, CombinedRec, TunePoint, TuneResults};
-pub use spec::TuneSpec;
+pub use spec::{TuneOverrides, TuneSpec};

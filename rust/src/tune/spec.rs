@@ -6,10 +6,14 @@
 //! fast with the known names listed; `workers` is an execution knob
 //! that never changes a byte of output.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::hwsim::{device, ParallelSpec, Workload};
-use crate::models::{self, quant};
+use crate::models;
+use crate::util::json::Json;
+use crate::util::spec as fields;
+use crate::util::spec::AxisGrid;
+use crate::util::units::parse_workload_len;
 
 /// Default clock grid, fractions of the nominal SM clock. Stock (1.0)
 /// is always included so "vs the uncapped default" comparisons are
@@ -85,13 +89,19 @@ impl TuneSpec {
         Workload::new(self.batch, self.prompt_len, self.gen_len)
     }
 
+    /// The shared grid-axis view of this spec: the single quant token
+    /// and the cap levels (the clock grid is tune-specific).
+    pub fn axes(&self) -> AxisGrid {
+        AxisGrid {
+            quants: vec![self.quant.clone()],
+            power_caps: self.power_caps.clone(),
+            ..AxisGrid::default()
+        }
+    }
+
     /// The power-cap axis: `[None]` (uncapped) when no caps were given.
     pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
-        if self.power_caps.is_empty() {
-            vec![None]
-        } else {
-            self.power_caps.iter().map(|&c| Some(c)).collect()
-        }
+        self.axes().power_cap_axis()
     }
 
     /// Grid size: caps major, clocks minor.
@@ -112,7 +122,7 @@ impl TuneSpec {
             bail!("unknown device `{}` (known: {})", self.device,
                   device::all_rig_names().join(", "));
         };
-        quant::parse_token(&self.quant)?;
+        self.axes().validate()?;
         ensure!(self.batch >= 1, "batch must be >= 1");
         ensure!(self.prompt_len >= 1 && self.gen_len >= 1,
                 "workload lengths must be >= 1 (got {}+{})",
@@ -122,10 +132,6 @@ impl TuneSpec {
         for &c in &self.clocks {
             ensure!(c.is_finite() && c > 0.0 && c <= 1.0,
                     "clock fractions must be in (0, 1] (got {c})");
-        }
-        for &cap in &self.power_caps {
-            ensure!(cap.is_finite() && cap > 0.0,
-                    "power caps must be positive watts (got {cap})");
         }
         for (name, slo) in [("slo-ttft", self.slo_ttft_ms),
                             ("slo-tpot", self.slo_tpot_ms)] {
@@ -140,6 +146,156 @@ impl TuneSpec {
             par.validate_for(&arch, &rig)?;
         }
         Ok(())
+    }
+
+    /// Parse a tune spec from JSON, built on the shared
+    /// [`crate::util::spec`] field readers. Missing keys keep the
+    /// defaults; present keys must have the right type; unknown keys
+    /// error with the known names listed.
+    ///
+    /// ```json
+    /// {
+    ///   "tune": "edge-caps",
+    ///   "model": "llama-3.2-1b",
+    ///   "device": "orin",
+    ///   "len": "256+256",
+    ///   "clocks": [0.6, 0.8, 1.0],
+    ///   "power_caps": [1, 1.2]
+    /// }
+    /// ```
+    pub fn parse(text: &str) -> Result<TuneSpec> {
+        const KNOWN_KEYS: [&str; 15] =
+            ["tune", "model", "device", "quant", "batch", "len", "tp",
+             "pp", "clocks", "power_caps", "slo_ttft_ms", "slo_tpot_ms",
+             "energy", "seed", "workers"];
+        let root = Json::parse(text).context("parsing tune spec JSON")?;
+        fields::require_known_keys(fields::root_obj(&root, "tune spec")?,
+                                   &KNOWN_KEYS, "tune spec")?;
+        let mut spec = TuneSpec::default();
+        if let Some(v) = fields::string_field(&root, "tune")? {
+            spec.name = v;
+        }
+        if let Some(v) = fields::string_field(&root, "model")? {
+            spec.model = v;
+        }
+        if let Some(v) = fields::string_field(&root, "device")? {
+            spec.device = v;
+        }
+        if let Some(v) = fields::string_field(&root, "quant")? {
+            spec.quant = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "batch")? {
+            spec.batch = v;
+        }
+        if let Some(l) = fields::string_field(&root, "len")? {
+            let (p, g) = parse_workload_len(&l).ok_or_else(|| {
+                anyhow!("bad lens entry `{l}` (want \"P+G\")")
+            })?;
+            spec.prompt_len = p;
+            spec.gen_len = g;
+        }
+        let tp = fields::usize_field(&root, "tp")?;
+        let pp = fields::usize_field(&root, "pp")?;
+        if tp.is_some() || pp.is_some() {
+            spec.parallel = Some(ParallelSpec::new(tp.unwrap_or(1),
+                                                   pp.unwrap_or(1)));
+        }
+        if let Some(v) = fields::f64_list(&root, "clocks", "fractions")? {
+            spec.clocks = v;
+        }
+        if let Some(v) = fields::f64_list(&root, "power_caps", "watts")? {
+            spec.power_caps = v;
+        }
+        if let Some(v) = fields::f64_field(&root, "slo_ttft_ms")? {
+            spec.slo_ttft_ms = Some(v);
+        }
+        if let Some(v) = fields::f64_field(&root, "slo_tpot_ms")? {
+            spec.slo_tpot_ms = Some(v);
+        }
+        if let Some(v) = fields::bool_field(&root, "energy")? {
+            spec.energy = v;
+        }
+        if let Some(v) = fields::seed_field(&root, "seed")? {
+            spec.seed = v;
+        }
+        if let Some(v) = fields::usize_field(&root, "workers")? {
+            spec.workers = v;
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TuneSpec> {
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading tune spec {}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// Explicitly-given CLI flags, layered over a base spec (the defaults,
+/// or a `--spec` file). `None` means "flag not given; keep the base
+/// value".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneOverrides {
+    pub model: Option<String>,
+    pub device: Option<String>,
+    pub quant: Option<String>,
+    pub batch: Option<usize>,
+    pub len: Option<(usize, usize)>,
+    pub parallel: Option<ParallelSpec>,
+    pub clocks: Option<Vec<f64>>,
+    pub power_caps: Option<Vec<f64>>,
+    pub slo_ttft_ms: Option<f64>,
+    pub slo_tpot_ms: Option<f64>,
+    pub energy: Option<bool>,
+    pub seed: Option<u64>,
+    pub workers: Option<usize>,
+}
+
+impl TuneOverrides {
+    /// Apply every explicitly-given flag onto `spec`.
+    pub fn apply(self, spec: &mut TuneSpec) {
+        if let Some(v) = self.model {
+            spec.model = v;
+        }
+        if let Some(v) = self.device {
+            spec.device = v;
+        }
+        if let Some(v) = self.quant {
+            spec.quant = v;
+        }
+        if let Some(v) = self.batch {
+            spec.batch = v;
+        }
+        if let Some((p, g)) = self.len {
+            spec.prompt_len = p;
+            spec.gen_len = g;
+        }
+        if let Some(v) = self.parallel {
+            spec.parallel = Some(v);
+        }
+        if let Some(v) = self.clocks {
+            spec.clocks = v;
+        }
+        if let Some(v) = self.power_caps {
+            spec.power_caps = v;
+        }
+        if let Some(v) = self.slo_ttft_ms {
+            spec.slo_ttft_ms = Some(v);
+        }
+        if let Some(v) = self.slo_tpot_ms {
+            spec.slo_tpot_ms = Some(v);
+        }
+        if let Some(v) = self.energy {
+            spec.energy = v;
+        }
+        if let Some(v) = self.seed {
+            spec.seed = v;
+        }
+        if let Some(v) = self.workers {
+            spec.workers = v;
+        }
     }
 }
 
@@ -169,6 +325,56 @@ mod tests {
         s.validate().unwrap();
         assert_eq!(s.n_points(), 14);
         assert_eq!(s.power_cap_axis(), vec![Some(150.0), Some(250.0)]);
+    }
+
+    #[test]
+    fn parse_reads_the_shared_schema_and_overrides_layer() {
+        let s = TuneSpec::parse(
+            r#"{"tune": "edge-caps", "model": "llama-3.2-1b",
+                "device": "orin", "quant": "w4a16", "batch": 2,
+                "len": "256+128", "clocks": [0.6, 1.0],
+                "power_caps": [1, 1.2], "slo_ttft_ms": 500,
+                "energy": true, "seed": 3, "workers": 4}"#)
+            .unwrap();
+        assert_eq!(s.name, "edge-caps");
+        assert_eq!(s.model, "llama-3.2-1b");
+        assert_eq!((s.prompt_len, s.gen_len), (256, 128));
+        assert_eq!(s.clocks, vec![0.6, 1.0]);
+        assert_eq!(s.power_caps, vec![1.0, 1.2]);
+        assert_eq!(s.slo_ttft_ms, Some(500.0));
+        assert!(s.energy);
+        s.validate().unwrap();
+        // tp/pp scalars build a mapping; either alone defaults to 1
+        let s = TuneSpec::parse(
+            r#"{"device": "4xa6000", "tp": 4}"#).unwrap();
+        assert_eq!(s.parallel, Some(ParallelSpec::new(4, 1)));
+        s.validate().unwrap();
+        // missing keys keep the acceptance defaults
+        let s = TuneSpec::parse("{}").unwrap();
+        assert_eq!(s, TuneSpec::default());
+        // typo'd keys and wrong types error with uniform messages
+        let err = TuneSpec::parse(r#"{"modle": "x"}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("unknown key `modle` in tune spec"), "{err}");
+        let err = TuneSpec::parse(r#"{"len": "512"}"#)
+            .unwrap_err().to_string();
+        assert!(err.contains("bad lens entry `512`"), "{err}");
+        assert!(TuneSpec::parse(r#"{"clocks": 0.5}"#).is_err());
+        assert!(TuneSpec::parse("not json").is_err());
+        // overrides layer over a parsed base
+        let mut spec = TuneSpec::parse(r#"{"tune": "file"}"#).unwrap();
+        TuneOverrides {
+            device: Some("4xa6000".into()),
+            parallel: Some(ParallelSpec::new(2, 1)),
+            ..TuneOverrides::default()
+        }
+        .apply(&mut spec);
+        assert_eq!(spec.device, "4xa6000");
+        assert_eq!(spec.parallel, Some(ParallelSpec::new(2, 1)));
+        assert_eq!(spec.name, "file");
+        let mut same = spec.clone();
+        TuneOverrides::default().apply(&mut same);
+        assert_eq!(same, spec);
     }
 
     #[test]

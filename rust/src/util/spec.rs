@@ -16,8 +16,10 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::hwsim::parallel::{expand_parallelisms, ParallelSpec};
+use crate::models::quant;
 use crate::util::json::Json;
 use crate::util::units::parse_workload_len;
 
@@ -161,6 +163,20 @@ pub fn f64_field(root: &Json, key: &str) -> Result<Option<f64>> {
     }
 }
 
+/// Optional fraction field, constrained to `[0, 1)` — the shape of a
+/// cache hit rate: 1.0 would mean "no work at all", which every
+/// consumer treats as degenerate.
+pub fn fraction_field(root: &Json, key: &str) -> Result<Option<f64>> {
+    match f64_field(root, key)? {
+        None => Ok(None),
+        Some(v) => {
+            ensure!((0.0..1.0).contains(&v),
+                    "`{key}` must be a fraction in [0, 1) (got {v})");
+            Ok(Some(v))
+        }
+    }
+}
+
 /// Optional seed field: a number, or a string for the full u64 range —
 /// `report::to_json` emits seeds as strings so 64-bit seeds survive
 /// the f64 number model, and specs must round-trip them.
@@ -177,12 +193,196 @@ pub fn seed_field(root: &Json, key: &str) -> Result<Option<u64>> {
     }
 }
 
+/// The shared scenario grid axes: quant schemes, TP×PP mappings,
+/// power caps, prefix-KV-reuse hit rates, and prefill chunk sizes.
+///
+/// Sweep, plan, and tune each expanded quant/tp/pp/power-cap grids with
+/// their own copies of the same parsing, expansion, and validation
+/// code; every new axis had to be threaded three times. This struct is
+/// the single implementation: specs hold their flat fields for
+/// compatibility but delegate JSON reading (`read`), innermost-axis
+/// expansion (`*_axis()`), and range checks (`validate`) here — so the
+/// `kv_reuse` / `prefill_chunks` axes are declared exactly once.
+///
+/// Every `*_axis()` accessor returns `[None]` when its axis is empty,
+/// keeping legacy grids' cell indices (and thus per-cell seeds)
+/// unchanged — the same innermost-axis discipline the sweep/plan
+/// grids have pinned since the parallelism and DVFS PRs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AxisGrid {
+    /// Quant tokens (`native` or a named scheme key).
+    pub quants: Vec<String>,
+    /// Tensor-parallel degrees.
+    pub tps: Vec<usize>,
+    /// Pipeline-parallel degrees.
+    pub pps: Vec<usize>,
+    /// Per-device power caps, watts.
+    pub power_caps: Vec<f64>,
+    /// Prefix-KV-cache hit rates, each in `[0, 1)`.
+    pub kv_reuse: Vec<f64>,
+    /// Chunked-prefill chunk sizes, tokens.
+    pub prefill_chunks: Vec<usize>,
+}
+
+impl AxisGrid {
+    /// The JSON keys this grid reads — splice into a spec's
+    /// `KNOWN_KEYS` listing.
+    pub const KEYS: [&'static str; 6] =
+        ["quants", "tps", "pps", "power_caps", "kv_reuse",
+         "prefill_chunks"];
+
+    /// Read every grid axis present in `root`; absent keys keep the
+    /// current (default) axis.
+    pub fn read(&mut self, root: &Json) -> Result<()> {
+        if let Some(v) = string_list(root, "quants")? {
+            self.quants = v;
+        }
+        if let Some(v) = usize_list(root, "tps")? {
+            self.tps = v;
+        }
+        if let Some(v) = usize_list(root, "pps")? {
+            self.pps = v;
+        }
+        if let Some(v) = f64_list(root, "power_caps", "watts")? {
+            self.power_caps = v;
+        }
+        if let Some(v) = f64_list(root, "kv_reuse", "hit rate")? {
+            self.kv_reuse = v;
+        }
+        if let Some(v) = usize_list(root, "prefill_chunks")? {
+            self.prefill_chunks = v;
+        }
+        Ok(())
+    }
+
+    /// The TP×PP mappings to expand over: `[None]` (legacy whole-rig)
+    /// when no parallel axis was given, the pp-major cross product
+    /// otherwise.
+    pub fn parallelisms(&self) -> Vec<Option<ParallelSpec>> {
+        expand_parallelisms(&self.tps, &self.pps)
+    }
+
+    /// The power-cap axis: `[None]` (uncapped) when no caps were given.
+    pub fn power_cap_axis(&self) -> Vec<Option<f64>> {
+        if self.power_caps.is_empty() {
+            vec![None]
+        } else {
+            self.power_caps.iter().map(|&c| Some(c)).collect()
+        }
+    }
+
+    /// The prefix-KV-reuse axis: `[None]` (no reuse) when empty.
+    pub fn kv_reuse_axis(&self) -> Vec<Option<f64>> {
+        if self.kv_reuse.is_empty() {
+            vec![None]
+        } else {
+            self.kv_reuse.iter().map(|&h| Some(h)).collect()
+        }
+    }
+
+    /// The chunked-prefill axis: `[None]` (monolithic prefill) when
+    /// empty.
+    pub fn prefill_chunk_axis(&self) -> Vec<Option<usize>> {
+        if self.prefill_chunks.is_empty() {
+            vec![None]
+        } else {
+            self.prefill_chunks.iter().map(|&c| Some(c)).collect()
+        }
+    }
+
+    /// Range-check every axis entry (registry lookups stay with the
+    /// owning spec, which knows its models/devices).
+    pub fn validate(&self) -> Result<()> {
+        for q in &self.quants {
+            quant::parse_token(q)?;
+        }
+        for &tp in &self.tps {
+            ensure!(tp >= 1, "tensor-parallel degrees must be >= 1");
+        }
+        for &pp in &self.pps {
+            ensure!(pp >= 1, "pipeline-parallel degrees must be >= 1");
+        }
+        for &cap in &self.power_caps {
+            ensure!(cap.is_finite() && cap > 0.0,
+                    "power caps must be positive watts (got {cap})");
+        }
+        for &h in &self.kv_reuse {
+            ensure!((0.0..1.0).contains(&h),
+                    "`kv_reuse` must be a fraction in [0, 1) (got {h})");
+        }
+        for &c in &self.prefill_chunks {
+            ensure!(c >= 1, "prefill chunks must be >= 1 token");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn parse(text: &str) -> Json {
         Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn axis_grid_reads_expands_and_validates() {
+        let mut g = AxisGrid::default();
+        // empty axes expand to the single legacy point
+        assert_eq!(g.parallelisms(), vec![None]);
+        assert_eq!(g.power_cap_axis(), vec![None]);
+        assert_eq!(g.kv_reuse_axis(), vec![None]);
+        assert_eq!(g.prefill_chunk_axis(), vec![None]);
+        g.validate().unwrap();
+
+        let root = parse(
+            r#"{"quants": ["native", "w4a16"], "tps": [1, 2],
+                "pps": [2], "power_caps": [150, 220],
+                "kv_reuse": [0.0, 0.5], "prefill_chunks": [128]}"#);
+        g.read(&root).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.quants, vec!["native", "w4a16"]);
+        assert_eq!(g.parallelisms().len(), 2);
+        assert_eq!(g.power_cap_axis(), vec![Some(150.0), Some(220.0)]);
+        assert_eq!(g.kv_reuse_axis(), vec![Some(0.0), Some(0.5)]);
+        assert_eq!(g.prefill_chunk_axis(), vec![Some(128)]);
+
+        // absent keys keep the current axes
+        let mut again = g.clone();
+        again.read(&parse(r#"{"tps": [4]}"#)).unwrap();
+        assert_eq!(again.tps, vec![4]);
+        assert_eq!(again.quants, g.quants);
+
+        for (bad, msg) in [
+            (r#"{"quants": ["int3"]}"#, "unknown quant scheme"),
+            (r#"{"tps": [0]}"#, "tensor-parallel degrees"),
+            (r#"{"pps": [0]}"#, "pipeline-parallel degrees"),
+            (r#"{"power_caps": [0]}"#, "positive watts"),
+            (r#"{"kv_reuse": [1.0]}"#, "fraction in [0, 1)"),
+            (r#"{"kv_reuse": [-0.1]}"#, "fraction in [0, 1)"),
+            (r#"{"prefill_chunks": [0]}"#, ">= 1 token"),
+        ] {
+            let mut g = AxisGrid::default();
+            g.read(&parse(bad)).unwrap();
+            let err = g.validate().unwrap_err().to_string();
+            assert!(err.contains(msg), "{bad}: {err}");
+        }
+        // wrong-typed axes fail at read time with the key name
+        let mut g = AxisGrid::default();
+        let err = g.read(&parse(r#"{"tps": "2"}"#))
+            .unwrap_err().to_string();
+        assert!(err.contains("`tps` must be an array"), "{err}");
+    }
+
+    #[test]
+    fn fraction_fields_are_range_checked() {
+        let root = parse(r#"{"h": 0.5, "bad": 1.0, "neg": -0.1}"#);
+        assert_eq!(fraction_field(&root, "h").unwrap(), Some(0.5));
+        assert_eq!(fraction_field(&root, "absent").unwrap(), None);
+        for key in ["bad", "neg"] {
+            let err = fraction_field(&root, key).unwrap_err().to_string();
+            assert!(err.contains("fraction in [0, 1)"), "{err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! Disaggregated serving + KV prefix reuse acceptance: a spec without
+//! the new knobs must render the exact legacy artifact, `kv_reuse: 0.0`
+//! must be bitwise inert, rising hit-rates must monotonically cut TTFT
+//! and J/token, shipped KV bytes must match the quant-aware closed
+//! form, and the unified spec parsers must never panic on hostile JSON.
+
+use elana::coordinator::{report, simulate, Arrivals, DisaggSpec,
+                         PhasePool, ServeSpec};
+use elana::gateway::{self, ClusterSpec};
+use elana::hwsim::device;
+use elana::models::{self, quant, EffectiveBytes, QuantScheme};
+use elana::testkit::property;
+use elana::util::json::Json;
+use elana::util::Rng;
+
+fn base_spec() -> ServeSpec {
+    ServeSpec {
+        requests: 24,
+        arrivals: Arrivals::Poisson { rate_rps: 20.0 },
+        prompt_lo: 16,
+        prompt_hi: 64,
+        gen_len: 16,
+        seed: 7,
+        ..ServeSpec::default()
+    }
+}
+
+fn disagg(prefill_replicas: usize, link: &str) -> DisaggSpec {
+    DisaggSpec {
+        prefill: PhasePool {
+            replicas: prefill_replicas,
+            ..PhasePool::inherit()
+        },
+        decode: PhasePool::inherit(),
+        link: link.to_string(),
+    }
+}
+
+fn mean_ttft(o: &simulate::ServeOutcome) -> f64 {
+    o.requests.iter().map(|r| r.ttft_s).sum::<f64>()
+        / o.requests.len() as f64
+}
+
+fn gen_tokens(o: &simulate::ServeOutcome) -> usize {
+    o.requests.iter().map(|r| r.gen_len).sum()
+}
+
+/// Bitwise equality of two serve outcomes (NaN-free by construction,
+/// so `to_bits` equality is exact equality), energy included.
+fn assert_outcomes_bit_identical(a: &simulate::ServeOutcome,
+                                 b: &simulate::ServeOutcome) {
+    assert_eq!(a.requests.len(), b.requests.len());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+        assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+        assert_eq!(x.tpot_s.to_bits(), y.tpot_s.to_bits());
+        assert_eq!(x.ttlt_s.to_bits(), y.ttlt_s.to_bits());
+        assert_eq!(x.batch, y.batch);
+        assert_eq!(x.prompt_len, y.prompt_len);
+        assert_eq!(x.gen_len, y.gen_len);
+        assert_eq!(x.phases, y.phases);
+    }
+    assert_eq!(a.batches.len(), b.batches.len());
+    for (x, y) in a.batches.iter().zip(&b.batches) {
+        assert_eq!(x.index, y.index);
+        assert_eq!(x.replica, y.replica);
+        assert_eq!(x.dequeue_s.to_bits(), y.dequeue_s.to_bits());
+        assert_eq!(x.service_s.to_bits(), y.service_s.to_bits());
+        assert_eq!(x.exec_batch, y.exec_batch);
+        assert_eq!(x.padded_prompt_len, y.padded_prompt_len);
+        assert_eq!(x.real_rows, y.real_rows);
+        assert_eq!(x.stage, y.stage);
+        assert_eq!(x.joules.map(|j| (j.0.to_bits(), j.1.to_bits(),
+                                     j.2.to_bits())),
+                   y.joules.map(|j| (j.0.to_bits(), j.1.to_bits(),
+                                     j.2.to_bits())));
+    }
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
+    assert_eq!(a.total_joules.map(f64::to_bits),
+               b.total_joules.map(f64::to_bits));
+    assert_eq!(a.kv_transfer_bytes, b.kv_transfer_bytes);
+    assert_eq!(a.kv_transfer_joules.map(f64::to_bits),
+               b.kv_transfer_joules.map(f64::to_bits));
+}
+
+// ---------------- legacy artifacts stay legacy ----------------
+
+/// A spec without `disagg`/`kv_reuse`/`prefill_chunk` renders the PR 8
+/// artifact: none of the new keys appear anywhere in the JSON, and the
+/// bytes are invariant across worker counts (streamed == tree emitter).
+#[test]
+fn serve_without_disagg_keys_renders_the_legacy_artifact() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 4]
+        .iter()
+        .map(|&workers| {
+            let spec = ServeSpec { workers, ..base_spec() };
+            let o = simulate::run(&spec).unwrap();
+            let mut buf = Vec::new();
+            report::write_json(&o, &mut buf).unwrap();
+            (buf, report::to_json(&o).to_string(),
+             report::render_markdown(&o))
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    for key in ["disagg", "kv_reuse", "kv_transfer", "prefill_chunk",
+                "stage", "prefill_s", "decode_wait_s"] {
+        assert!(!runs[0].1.contains(key),
+                "legacy serve JSON must not mention `{key}`");
+    }
+}
+
+/// `kv_reuse: 0.0` resolves to the no-op shaping: not one float
+/// operation differs from the knob-free run, unified or disaggregated.
+#[test]
+fn zero_hit_rate_is_bitwise_identical_to_no_reuse() {
+    for d in [None, Some(disagg(2, "nvlink4"))] {
+        let plain = ServeSpec { disagg: d.clone(), ..base_spec() };
+        let zero = ServeSpec { kv_reuse: Some(0.0), ..plain.clone() };
+        let a = simulate::run(&plain).unwrap();
+        let b = simulate::run(&zero).unwrap();
+        assert_outcomes_bit_identical(&a, &b);
+    }
+}
+
+// ---------------- monotone benefits of reuse ----------------
+
+/// Rising hit-rates monotonically cut mean TTFT, J/token, and (on a
+/// disagg deployment) the shipped KV bytes. A light arrival rate keeps
+/// queueing out of the picture so the per-request effect is strict.
+#[test]
+fn hit_rate_monotonically_cuts_ttft_joules_and_bytes() {
+    for d in [None, Some(disagg(1, "pcie4"))] {
+        let mut prev_ttft = f64::INFINITY;
+        let mut prev_jt = f64::INFINITY;
+        let mut prev_bytes = u64::MAX;
+        for h in [0.0, 0.25, 0.5, 0.75] {
+            let spec = ServeSpec {
+                requests: 16,
+                arrivals: Arrivals::Poisson { rate_rps: 2.0 },
+                kv_reuse: (h > 0.0).then_some(h),
+                disagg: d.clone(),
+                ..base_spec()
+            };
+            let o = simulate::run(&spec).unwrap();
+            let ttft = mean_ttft(&o);
+            let jt = o.total_joules.unwrap() / gen_tokens(&o) as f64;
+            assert!(ttft < prev_ttft,
+                    "h={h} disagg={}: TTFT {ttft} !< {prev_ttft}",
+                    d.is_some());
+            assert!(jt < prev_jt,
+                    "h={h} disagg={}: J/token {jt} !< {prev_jt}",
+                    d.is_some());
+            prev_ttft = ttft;
+            prev_jt = jt;
+            if d.is_some() {
+                let bytes = o.kv_transfer_bytes.unwrap();
+                assert!(bytes < prev_bytes,
+                        "h={h}: {bytes} B !< {prev_bytes} B");
+                prev_bytes = bytes;
+            } else {
+                assert!(o.kv_transfer_bytes.is_none());
+            }
+        }
+    }
+}
+
+// ---------------- the KV handoff closed form ----------------
+
+/// Shipped bytes are `round(prompt_len × kv_bytes/token × (1 − h))`
+/// summed over requests, at the *effective* (quant-aware) cache width;
+/// link joules are exactly `bytes × pJ/B`. Pinned across schemes whose
+/// KV widths differ (native bf16, weight-only, and kv4).
+#[test]
+fn kv_transfer_bytes_match_the_quant_aware_closed_form() {
+    let arch = models::lookup("llama-3.1-8b").unwrap();
+    let h = 0.25;
+    let link = device::link_by_name("nvlink4").unwrap();
+    for token in ["native", "w8a16", "w4a8kv4"] {
+        let scheme = quant::parse_token(token).unwrap()
+            .unwrap_or_else(|| QuantScheme::native(arch.dtype));
+        let kv_b = EffectiveBytes::new(&arch, scheme).kv_bytes_per_token();
+        let spec = ServeSpec {
+            quant: token.to_string(),
+            kv_reuse: Some(h),
+            disagg: Some(disagg(1, "nvlink4")),
+            ..base_spec()
+        };
+        let o = simulate::run(&spec).unwrap();
+        let expect: u64 = o.requests.iter()
+            .map(|r| {
+                (r.prompt_len as f64 * kv_b as f64 * (1.0 - h)).round()
+                    as u64
+            })
+            .sum();
+        assert_eq!(o.kv_transfer_bytes, Some(expect), "{token}");
+        // per-request decomposition carries the same bytes
+        let per_req: u64 = o.requests.iter()
+            .map(|r| r.phases.unwrap().kv_bytes)
+            .sum();
+        assert_eq!(per_req, expect, "{token}");
+        let want_j = expect as f64 * link.pj_per_byte * 1e-12;
+        let got_j = o.kv_transfer_joules.unwrap();
+        assert!((got_j - want_j).abs() <= 1e-12 * want_j.max(1e-30),
+                "{token}: {got_j} J vs {want_j} J");
+    }
+}
+
+// ---------------- artifacts under disagg ----------------
+
+/// Disagg serve artifacts are worker-invariant, stream == tree, and
+/// carry the phase-split schema (pools, handoff totals, per-request
+/// TTFT decomposition, stage-tagged batches).
+#[test]
+fn disagg_serve_report_is_worker_invariant_and_phase_split() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 3]
+        .iter()
+        .map(|&workers| {
+            let spec = ServeSpec {
+                workers,
+                kv_reuse: Some(0.25),
+                disagg: Some(disagg(2, "nvlink4")),
+                ..base_spec()
+            };
+            let o = simulate::run(&spec).unwrap();
+            let mut buf = Vec::new();
+            report::write_json(&o, &mut buf).unwrap();
+            (buf, report::to_json(&o).to_string(),
+             report::render_markdown(&o))
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    let v = Json::parse(&runs[0].1).unwrap();
+    let d = v.get("disagg").unwrap();
+    assert_eq!(d.get("link").unwrap().as_str(), Some("nvlink4"));
+    assert_eq!(d.get("prefill").unwrap().get("replicas")
+                   .unwrap().as_usize(), Some(2));
+    assert_eq!(v.get("kv_reuse").unwrap().as_f64(), Some(0.25));
+    assert!(v.get("kv_transfer_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("kv_transfer_joules").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("j_per_token_kv_transfer").unwrap().as_f64().unwrap()
+                > 0.0);
+    let reqs = v.get("requests").unwrap().as_arr().unwrap();
+    for key in ["prefill_s", "kv_transfer_s", "decode_wait_s"] {
+        assert!(reqs[0].get(key).unwrap().as_f64().is_some(),
+                "requests must decompose TTFT ({key})");
+    }
+    let batches = v.get("batches").unwrap().as_arr().unwrap();
+    assert!(batches.iter().any(|b| {
+        b.get("stage").and_then(|s| s.as_str()) == Some("prefill")
+    }));
+    assert!(batches.iter().any(|b| {
+        b.get("stage").and_then(|s| s.as_str()) == Some("decode")
+    }));
+}
+
+/// The same contract at the gateway: a disagg cluster's artifacts are
+/// worker-invariant and phase-split, while the default cluster's JSON
+/// stays free of every new key.
+#[test]
+fn disagg_cluster_report_is_worker_invariant_and_phase_split() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 4]
+        .iter()
+        .map(|&workers| {
+            let mut spec = ClusterSpec {
+                seed: 7,
+                workers,
+                replicas: 1,
+                kv_reuse: Some(0.25),
+                disagg: Some(disagg(2, "nvlink4")),
+                ..ClusterSpec::default()
+            };
+            for t in &mut spec.tenants {
+                t.requests = 12;
+                t.gen_len = 8;
+            }
+            let o = gateway::run(&spec).unwrap();
+            let mut buf = Vec::new();
+            gateway::report::write_json(&o, &mut buf).unwrap();
+            (buf, gateway::report::to_json(&o).to_string(),
+             gateway::report::render_markdown(&o))
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    let v = Json::parse(&runs[0].1).unwrap();
+    assert_eq!(v.get("disagg").unwrap().get("link").unwrap().as_str(),
+               Some("nvlink4"));
+    assert!(v.get("kv_transfer_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("kv_transfer_joules").unwrap().as_f64().unwrap() > 0.0);
+    let pool = &v.get("pools").unwrap().as_arr().unwrap()[0];
+    assert!(pool.get("decode_replica_timeline").is_some(),
+            "disagg pools expose both phase timelines");
+    assert!(pool.get("batches").unwrap().as_arr().unwrap().iter()
+                .all(|b| b.get("stage").is_some()));
+
+    // and the legacy cluster artifact stays untouched
+    let mut legacy = ClusterSpec { seed: 7, ..ClusterSpec::default() };
+    for t in &mut legacy.tenants {
+        t.requests = 12;
+        t.gen_len = 8;
+    }
+    let text =
+        gateway::report::to_json(&gateway::run(&legacy).unwrap())
+            .to_string();
+    for key in ["disagg", "kv_reuse", "kv_transfer", "prefill_chunk",
+                "\"stage\"", "decode_replica_timeline"] {
+        assert!(!text.contains(key),
+                "legacy cluster JSON must not mention `{key}`");
+    }
+}
+
+// ---------------- the unified parser under fire ----------------
+
+/// A valid serve spec exercising every new key; the fuzzers below
+/// mutate it, and the sanity check parses + validates it verbatim.
+const SERVE_TMPL: &str = r#"{
+    "model": "llama-3.1-8b", "device": "a6000", "requests": 24,
+    "rate_rps": 20, "prompt_lo": 16, "prompt_hi": 64, "gen_len": 16,
+    "seed": 7, "energy": true, "quant": "w4a16", "kv_reuse": 0.25,
+    "prefill_chunk": 32,
+    "disagg": {"prefill": {"replicas": 2}, "decode": {"device": "a6000"},
+               "link": "nvlink4"}
+}"#;
+
+const CLUSTER_TMPL: &str = r#"{
+    "replicas": 1, "seed": 3, "kv_reuse": 0.25,
+    "disagg": {"prefill": {"replicas": 2}, "decode": {},
+               "link": "pcie4"}
+}"#;
+
+#[test]
+fn templates_parse_and_validate_verbatim() {
+    ServeSpec::parse(SERVE_TMPL).unwrap().validate().unwrap();
+    ClusterSpec::parse(CLUSTER_TMPL).unwrap().validate().unwrap();
+}
+
+/// The shipped example specs stay loadable and disaggregated — the CI
+/// smoke jobs and the README quickstart both lean on them.
+#[test]
+fn example_disagg_specs_parse_and_validate() {
+    let s = ServeSpec::load("../examples/disagg_split.json").unwrap();
+    s.validate().unwrap();
+    let d = s.disagg.as_ref().unwrap();
+    assert_eq!(d.prefill.replicas, 2);
+    assert_eq!(d.link, "nvlink4");
+    assert_eq!(s.kv_reuse, Some(0.3));
+
+    let c = ClusterSpec::load("../examples/cluster_disagg.json").unwrap();
+    c.validate().unwrap();
+    assert!(c.disagg.is_some(), "the example is disaggregated");
+    assert!(c.autoscale.is_some(),
+            "the example exercises per-phase autoscaling");
+    assert_eq!(c.kv_reuse, Some(0.25));
+}
+
+/// Random byte-level damage: truncations, substitutions, insertions,
+/// deletions. Every mutant must come back as `Ok` or `Err` — a panic
+/// fails the test by unwinding.
+#[test]
+fn prop_spec_parsers_never_panic_on_mutated_json() {
+    const INSERTS: [&str; 10] =
+        ["{", "}", "\"", ":", ",", "[", "]", "null", "1e309", "-"];
+    property(400, |rng: &mut Rng| {
+        let tmpl = if rng.usize_in(0, 1) == 0 {
+            SERVE_TMPL
+        } else {
+            CLUSTER_TMPL
+        };
+        let mut bytes = tmpl.as_bytes().to_vec();
+        for _ in 0..rng.usize_in(1, 8) {
+            match rng.usize_in(0, 3) {
+                0 => bytes.truncate(rng.usize_in(0, bytes.len())),
+                1 if !bytes.is_empty() => {
+                    let i = rng.usize_in(0, bytes.len() - 1);
+                    bytes[i] = 32 + (rng.next_u64() % 95) as u8;
+                }
+                2 => {
+                    let tok = INSERTS[rng.usize_in(0, INSERTS.len() - 1)];
+                    let i = rng.usize_in(0, bytes.len());
+                    bytes.splice(i..i, tok.bytes());
+                }
+                _ if !bytes.is_empty() => {
+                    bytes.remove(rng.usize_in(0, bytes.len() - 1));
+                }
+                _ => {}
+            }
+        }
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        if let Ok(s) = ServeSpec::parse(&text) {
+            let _ = s.validate();
+        }
+        if let Ok(c) = ClusterSpec::parse(&text) {
+            let _ = c.validate();
+        }
+    });
+}
+
+/// Structurally valid but arbitrarily shaped JSON: random key/value
+/// trees mixing known and unknown keys, hostile numbers, and deep
+/// nesting. The parsers must reject or accept without panicking.
+#[test]
+fn prop_spec_parsers_never_panic_on_random_json_trees() {
+    const KEYS: [&str; 16] = ["model", "device", "requests", "rate_rps",
+                              "disagg", "kv_reuse", "prefill_chunk",
+                              "link", "prefill", "decode", "replicas",
+                              "seed", "energy", "quant", "tenants",
+                              "banana"];
+    const STRS: [&str; 6] = ["llama-3.1-8b", "a6000", "nvlink4", "",
+                             "native", "nope"];
+    fn value(rng: &mut Rng, depth: usize) -> String {
+        match rng.usize_in(0, if depth == 0 { 3 } else { 5 }) {
+            0 => format!("{}", rng.f64_in(-1e12, 1e12)),
+            1 => format!("{}", rng.usize_in(0, 1 << 20)),
+            2 => format!("\"{}\"", STRS[rng.usize_in(0, STRS.len() - 1)]),
+            3 => ["true", "false", "null"][rng.usize_in(0, 2)].to_string(),
+            4 => {
+                let items: Vec<String> = (0..rng.usize_in(0, 3))
+                    .map(|_| value(rng, depth - 1))
+                    .collect();
+                format!("[{}]", items.join(","))
+            }
+            _ => obj(rng, depth - 1),
+        }
+    }
+    fn obj(rng: &mut Rng, depth: usize) -> String {
+        let fields: Vec<String> = (0..rng.usize_in(0, 5))
+            .map(|_| {
+                format!("\"{}\":{}", KEYS[rng.usize_in(0, KEYS.len() - 1)],
+                        value(rng, depth))
+            })
+            .collect();
+        format!("{{{}}}", fields.join(","))
+    }
+    property(400, |rng: &mut Rng| {
+        let text = obj(rng, 3);
+        if let Ok(s) = ServeSpec::parse(&text) {
+            let _ = s.validate();
+        }
+        if let Ok(c) = ClusterSpec::parse(&text) {
+            let _ = c.validate();
+        }
+    });
+}

@@ -117,6 +117,7 @@ impl ExecutionBackend for EngineBackend {
             tokens: r.tokens,
             analytic_joules: None,
             interconnect_joules: 0.0,
+            spec_decode: None,
         })
     }
 

@@ -58,6 +58,28 @@ pub struct ExecRun {
     /// on the real engine — the serve coordinator uses this to split
     /// J/token into compute vs interconnect.
     pub interconnect_joules: f64,
+    /// Draft/verify decomposition when the run decoded speculatively
+    /// (`SimBackend::with_spec_decode`); `None` on every legacy path
+    /// and on the real engine.
+    pub spec_decode: Option<SpecDecodeRun>,
+}
+
+/// Amortized speculative-decoding decomposition of one run's decode
+/// phase: `draft_s + verify_s` equals the sum of the run's `step_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecDecodeRun {
+    /// Tokens drafted per verify step.
+    pub k: usize,
+    /// Expected tokens emitted per draft/verify round.
+    pub accepted_per_round: f64,
+    /// Amortized draft-model decode time, seconds.
+    pub draft_s: f64,
+    /// Amortized target-model verify time, seconds.
+    pub verify_s: f64,
+    /// Amortized draft-model decode energy, joules.
+    pub draft_j: f64,
+    /// Amortized target-model verify energy, joules.
+    pub verify_j: f64,
 }
 
 impl ExecRun {
@@ -207,6 +229,9 @@ pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
         if let Some(op) = spec.op {
             b = b.with_operating_point(op);
         }
+        if let Some(sd) = &spec.spec_decode {
+            b = b.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
+        }
         Ok(Box::new(b))
     } else {
         anyhow::ensure!(
@@ -225,6 +250,10 @@ pub fn from_spec(spec: &ProfileSpec) -> Result<Box<dyn ExecutionBackend>> {
             spec.kv_reuse.is_none() && spec.prefill_chunk.is_none(),
             "kv_reuse / prefill_chunk modeling applies to simulated \
              rigs only; the `cpu` engine executes the full prefill");
+        anyhow::ensure!(
+            spec.spec_decode.is_none(),
+            "speculative decoding applies to simulated rigs only; the \
+             `cpu` engine decodes autoregressively");
         let manifest = crate::runtime::Manifest::load_default()?;
         Ok(Box::new(EngineBackend::new(&manifest, &spec.model)?))
     }
@@ -317,6 +346,7 @@ mod tests {
             tokens: Vec::new(),
             analytic_joules: None,
             interconnect_joules: 0.0,
+            spec_decode: None,
         };
         assert!((run.tpot_mean_s() - 0.003).abs() < 1e-12);
         let (s0, s1) = run.span();
@@ -335,6 +365,7 @@ mod tests {
             tokens: Vec::new(),
             analytic_joules: None,
             interconnect_joules: 0.0,
+            spec_decode: None,
         };
         assert_eq!(run.tpot_mean_s(), 0.0);
         assert_eq!(run.span(), (0.0, 0.010));

@@ -40,6 +40,10 @@ pub struct SimBackend {
     /// clocks, uncapped (bit-identical to the pre-DVFS path). Serve's
     /// phase-aware downclock sets the two differently.
     ops: Option<(OperatingPoint, OperatingPoint)>,
+    /// Speculative-decoding configuration (draft arch, k, alpha);
+    /// `None` = plain autoregressive decode (bit-identical to the
+    /// pre-spec-decode path).
+    spec_decode: Option<hwsim::cache::SpecDecodeConf>,
     energy: bool,
     seed: u64,
     /// Virtual-time sensor log of the most recent replayed `generate`,
@@ -72,6 +76,7 @@ impl SimBackend {
             scheme,
             parallel: None,
             ops: None,
+            spec_decode: None,
             energy,
             seed,
             log: None,
@@ -125,6 +130,28 @@ impl SimBackend {
         self
     }
 
+    /// Decode speculatively: `k` tokens drafted by `draft` per
+    /// target-model verify pass, accepted at per-token rate `alpha`.
+    /// `k = 0` is the explicit "off" switch — the backend stays on the
+    /// plain autoregressive path, bit for bit.
+    pub fn with_spec_decode(mut self, draft: &str, k: usize, alpha: f64)
+                            -> Result<SimBackend> {
+        if k == 0 {
+            self.spec_decode = None;
+            return Ok(self);
+        }
+        let draft_arch = models::lookup(draft)
+            .ok_or_else(|| anyhow!("unknown draft model `{draft}`"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&alpha),
+                        "acceptance rate must be in [0, 1] (got {alpha})");
+        self.spec_decode = Some(hwsim::cache::SpecDecodeConf {
+            draft: draft_arch,
+            k,
+            alpha,
+        });
+        Ok(self)
+    }
+
     /// Power curve the simulated sensor replays: under DVFS, the
     /// higher-plateau derivation of the two phase operating points (the
     /// phased simulator inverts every phase's utilization against this
@@ -150,7 +177,8 @@ impl SimBackend {
         hwsim::cache::global().simulate(
             &self.arch, &self.rig, w, &self.scheme,
             self.parallel.as_ref(),
-            self.ops.as_ref().map(|(p, d)| (p, d)))
+            self.ops.as_ref().map(|(p, d)| (p, d)),
+            self.spec_decode.as_ref())
     }
 }
 
@@ -228,6 +256,16 @@ impl ExecutionBackend for SimBackend {
             analytic_joules: Some((sim.ttft.joules, sim.tpot.joules,
                                    sim.ttlt_joules)),
             interconnect_joules: sim.interconnect_joules,
+            spec_decode: sim.spec_decode.as_ref().map(|s| {
+                super::SpecDecodeRun {
+                    k: s.k,
+                    accepted_per_round: s.accepted_per_round,
+                    draft_s: s.draft_seconds,
+                    verify_s: s.verify_seconds,
+                    draft_j: s.draft_joules,
+                    verify_j: s.verify_joules,
+                }
+            }),
         })
     }
 
@@ -495,6 +533,46 @@ mod tests {
                 "playback {} analytic {ap}", measured.joules_per_prompt);
         assert!((measured.joules_per_request - ar).abs() / ar < 0.05,
                 "playback {} analytic {ar}", measured.joules_per_request);
+    }
+
+    #[test]
+    fn spec_decode_splits_tpot_and_k0_is_the_identity() {
+        let mut base = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap();
+        let b = base.generate(&zeros(1, 256), 64).unwrap();
+        assert!(b.spec_decode.is_none());
+        // k = 0 is the explicit off switch, bit for bit
+        let mut off = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap()
+            .with_spec_decode("llama-3.2-1b", 0, 0.7)
+            .unwrap();
+        let o = off.generate(&zeros(1, 256), 64).unwrap();
+        assert_eq!(o.ttft_s, b.ttft_s);
+        assert_eq!(o.step_s, b.step_s);
+        assert!(o.spec_decode.is_none());
+        // a high-acceptance draft speeds decode up and reports the split
+        let mut spec = SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+            .unwrap()
+            .with_spec_decode("llama-3.2-1b", 4, 0.9)
+            .unwrap();
+        let s = spec.generate(&zeros(1, 256), 64).unwrap();
+        let sd = s.spec_decode.expect("split present");
+        assert!(s.tpot_mean_s() < b.tpot_mean_s(),
+                "{} vs {}", s.tpot_mean_s(), b.tpot_mean_s());
+        assert!(sd.accepted_per_round > 4.0);
+        assert!(sd.draft_s > 0.0 && sd.verify_s > 0.0);
+        let decode_s: f64 = s.step_s.iter().sum();
+        assert!((sd.draft_s + sd.verify_s - decode_s).abs()
+                    < 1e-9 * decode_s);
+        // unknown draft and bad alpha fail at construction
+        assert!(SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+                    .unwrap()
+                    .with_spec_decode("nope", 4, 0.7)
+                    .is_err());
+        assert!(SimBackend::new("llama-3.1-8b", "a6000", false, 0)
+                    .unwrap()
+                    .with_spec_decode("llama-3.2-1b", 4, 1.5)
+                    .is_err());
     }
 
     #[test]

@@ -190,7 +190,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
         "suite" => Some(&[]),
         "sweep" => Some(&["spec", "models", "devices", "batches", "lens",
                           "quant", "tp", "pp", "power-cap", "kv-reuse",
-                          "prefill-chunks", "threads", "seed", "unit",
+                          "prefill-chunks", "draft-model", "spec-k",
+                          "accept-rate", "threads", "seed", "unit",
                           "no-energy", "out", "json"]),
         "plan" => Some(&["models", "devices", "quant", "lens", "tp", "pp",
                          "power-cap", "rate", "workers", "seed", "unit",
@@ -205,9 +206,11 @@ pub fn parse(args: &[String]) -> Result<Command> {
                           "trace", "prompts", "gen", "replicas", "workers",
                           "seed", "max-wait", "max-seq-len", "quant", "tp",
                           "pp", "power-cap", "phase-dvfs", "kv-reuse",
-                          "prefill-chunk", "no-energy", "json", "out"]),
+                          "prefill-chunk", "draft-model", "spec-k",
+                          "accept-rate", "no-energy", "json", "out"]),
         "cluster" => Some(&["spec", "model", "device", "quant", "pools",
                             "replicas", "routing", "workers", "seed",
+                            "draft-model", "spec-k", "accept-rate",
                             "no-energy", "json", "out", "assert-slo"]),
         "models" | "help" | "-h" | "--help" | "version" | "-V"
         | "--version" => Some(&[]),
@@ -321,6 +324,27 @@ pub fn parse(args: &[String]) -> Result<Command> {
                              > 0)")),
                     })
                     .collect::<Result<Vec<f64>>>()
+            })
+            .transpose()
+    };
+    // one speculative acceptance rate in [0, 1] (serve, cluster)
+    let accept_single = |name: &str| -> Result<Option<f64>> {
+        get(name)
+            .map(|v| match v.parse::<f64>() {
+                Ok(a) if a.is_finite() && (0.0..=1.0).contains(&a) => {
+                    Ok(a)
+                }
+                _ => Err(anyhow!(
+                    "bad --{name} (want an acceptance rate in [0, 1])")),
+            })
+            .transpose()
+    };
+    // one draft depth k >= 0 (k = 0 disables speculation)
+    let spec_k_single = |name: &str| -> Result<Option<usize>> {
+        get(name)
+            .map(|v| {
+                v.parse::<usize>().map_err(|_| anyhow!(
+                    "bad --{name} (want drafted tokens >= 0)"))
             })
             .transpose()
     };
@@ -445,6 +469,36 @@ pub fn parse(args: &[String]) -> Result<Command> {
                                      (want tokens >= 1)")),
                             })
                             .collect::<Result<Vec<usize>>>()
+                    })
+                    .transpose()?,
+                draft_models: get("draft-model").map(|ds| {
+                    ds.split(',')
+                        .map(|d| d.trim().to_string())
+                        .collect()
+                }),
+                spec_ks: get("spec-k")
+                    .map(|ks| {
+                        ks.split(',')
+                            .map(|k| {
+                                k.trim().parse::<usize>().map_err(|_| {
+                                    anyhow!("bad --spec-k entry `{k}` \
+                                             (want drafted tokens >= 0)")
+                                })
+                            })
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .transpose()?,
+                accept_rates: get("accept-rate")
+                    .map(|rs| {
+                        rs.split(',')
+                            .map(|a| match a.trim().parse::<f64>() {
+                                Ok(v) if v.is_finite()
+                                    && (0.0..=1.0).contains(&v) => Ok(v),
+                                _ => Err(anyhow!(
+                                    "bad --accept-rate entry `{a}` \
+                                     (want rates in [0, 1])")),
+                            })
+                            .collect::<Result<Vec<f64>>>()
                     })
                     .transpose()?,
                 energy: if has("no-energy") { Some(false) } else { None },
@@ -711,6 +765,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
                             "bad --prefill-chunk (want tokens >= 1)")),
                     })
                     .transpose()?,
+                draft_model: get("draft-model").map(str::to_string),
+                spec_k: spec_k_single("spec-k")?,
+                accept_rate: accept_single("accept-rate")?,
             };
             Ok(Command::Serve {
                 spec_path: get("spec").map(str::to_string),
@@ -753,6 +810,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     .map(|s| s.parse())
                     .transpose()
                     .map_err(|_| anyhow!("bad --seed"))?,
+                draft_model: get("draft-model").map(str::to_string),
+                spec_k: spec_k_single("spec-k")?,
+                accept_rate: accept_single("accept-rate")?,
                 energy: if has("no-energy") { Some(false) } else { None },
             };
             Ok(Command::Cluster {
@@ -785,8 +845,10 @@ USAGE:
                 [--batches 1,8] [--lens 256+256,512+512]
                 [--quant native,w4a16] [--tp 1,2,4] [--pp 1,2]
                 [--power-cap 150,220] [--kv-reuse 0.0,0.5]
-                [--prefill-chunks 64,128] [--threads N] [--seed S]
-                [--unit si|gib] [--no-energy] [--out sweep.json] [--json]
+                [--prefill-chunks 64,128] [--draft-model d1,d2]
+                [--spec-k 2,4] [--accept-rate 0.6,0.9] [--threads N]
+                [--seed S] [--unit si|gib] [--no-energy]
+                [--out sweep.json] [--json]
   elana plan    [--models m1,m2] [--devices d1,d2]
                 [--quant bf16,w8a16,w4a16,w4a8kv4]
                 [--lens 512+512,2048+2048] [--tp 1,2,4] [--pp 1,2]
@@ -807,11 +869,13 @@ USAGE:
                 [--seed S] [--max-wait MS] [--max-seq-len L]
                 [--quant SCHEME] [--tp N] [--pp N] [--power-cap W]
                 [--phase-dvfs] [--kv-reuse H] [--prefill-chunk T]
+                [--draft-model D] [--spec-k K] [--accept-rate A]
                 [--no-energy] [--out serve.json] [--json]
   elana cluster [--spec cluster.json] [--model MODEL] [--device RIG]
                 [--quant SCHEME] [--pools P] [--replicas R]
                 [--routing least-loaded|round-robin|session-affinity]
-                [--workers W] [--seed S] [--no-energy]
+                [--workers W] [--seed S] [--draft-model D] [--spec-k K]
+                [--accept-rate A] [--no-energy]
                 [--out cluster.json] [--json] [--assert-slo]
   elana models
   elana help | version
@@ -841,6 +905,13 @@ handoff through the named interconnect (pcie4 | nvlink3 | nvlink4 |
 unified); --kv-reuse H skips the resident prefix fraction of prefill
 compute and KV-transfer bytes, --prefill-chunk T interleaves prefill
 in fixed token chunks (see examples/disagg_split.json).
+Speculative decoding: --draft-model names a small registry model that
+drafts --spec-k tokens per target verify step; --accept-rate is the
+per-token acceptance probability alpha, so each verify step accepts
+(1 - alpha^(k+1)) / (1 - alpha) tokens in expectation. serve/cluster
+take one point (or a `spec_decode` spec block); sweep takes comma
+lists and crosses them as a grid axis. Reports split TPOT and J/token
+into draft and verify shares. --spec-k 0 disables speculation.
 Set ELANA_ARTIFACTS to point at a non-default artifacts directory.
 ";
 
@@ -1479,6 +1550,68 @@ mod tests {
         assert!(parse(&argv("sweep --kv-reuse 0.5,1.0")).is_err());
         assert!(parse(&argv("sweep --kv-reuse lots")).is_err());
         assert!(parse(&argv("sweep --prefill-chunks 64,0")).is_err());
+    }
+
+    #[test]
+    fn spec_decode_flags_parse_and_reject_bad_values() {
+        // serve: one draft point layered over the spec
+        match parse(&argv(
+            "serve --draft-model llama-3.2-1b --spec-k 6 \
+             --accept-rate 0.85")).unwrap()
+        {
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.draft_model.as_deref(),
+                           Some("llama-3.2-1b"));
+                assert_eq!(overrides.spec_k, Some(6));
+                assert_eq!(overrides.accept_rate, Some(0.85));
+            }
+            c => panic!("{c:?}"),
+        }
+        match parse(&argv("serve")).unwrap() {
+            Command::Serve { overrides, .. } => {
+                assert_eq!(overrides.draft_model, None);
+                assert_eq!(overrides.spec_k, None);
+                assert_eq!(overrides.accept_rate, None);
+            }
+            c => panic!("{c:?}"),
+        }
+        // alpha = 1 is a legal (always-accept) bound; above it is not
+        assert!(parse(&argv("serve --accept-rate 1.0")).is_ok());
+        assert!(parse(&argv("serve --accept-rate 1.5")).is_err());
+        assert!(parse(&argv("serve --accept-rate -0.1")).is_err());
+        assert!(parse(&argv("serve --spec-k minus")).is_err());
+        // cluster: the same single-point flags
+        match parse(&argv(
+            "cluster --draft-model qwen2.5-1.5b --accept-rate 0.6"))
+            .unwrap()
+        {
+            Command::Cluster { overrides, .. } => {
+                assert_eq!(overrides.draft_model.as_deref(),
+                           Some("qwen2.5-1.5b"));
+                assert_eq!(overrides.spec_k, None);
+                assert_eq!(overrides.accept_rate, Some(0.6));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("cluster --spec-k lots")).is_err());
+        // sweep: comma lists become grid axes
+        match parse(&argv(
+            "sweep --draft-model llama-3.2-1b,qwen2.5-1.5b \
+             --spec-k 2,4 --accept-rate 0.6,0.9")).unwrap()
+        {
+            Command::Sweep { overrides, .. } => {
+                assert_eq!(overrides.draft_models.as_deref(),
+                           Some(&["llama-3.2-1b".to_string(),
+                                  "qwen2.5-1.5b".to_string()][..]));
+                assert_eq!(overrides.spec_ks.as_deref(),
+                           Some(&[2, 4][..]));
+                assert_eq!(overrides.accept_rates.as_deref(),
+                           Some(&[0.6, 0.9][..]));
+            }
+            c => panic!("{c:?}"),
+        }
+        assert!(parse(&argv("sweep --spec-k 2,two")).is_err());
+        assert!(parse(&argv("sweep --accept-rate 0.5,1.1")).is_err());
     }
 
     #[test]

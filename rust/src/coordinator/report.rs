@@ -14,7 +14,32 @@ use crate::util::json::{Json, JsonWriter};
 use crate::util::stats::{Summary, SummaryBuilder};
 
 use super::simulate::ServeOutcome;
-use super::spec::{Arrivals, PhasePool};
+use super::spec::{Arrivals, PhasePool, ServeSpec};
+
+/// The active speculation block, if any (`k == 0` disables speculation
+/// entirely, so such specs render the legacy artifact byte for byte).
+fn active_spec_decode(s: &ServeSpec)
+                      -> Option<&crate::util::spec::SpecDecodeSpec> {
+    s.spec_decode.as_ref().filter(|sd| sd.k > 0)
+}
+
+/// Total (draft seconds, verify seconds, draft joules, verify joules)
+/// across batches that carry a speculation split. `None` when no batch
+/// does — disagg stages report the aggregate block only.
+fn spec_decode_totals(o: &ServeOutcome) -> Option<(f64, f64, f64, f64)> {
+    let mut any = false;
+    let (mut ds, mut vs, mut dj, mut vj) = (0.0, 0.0, 0.0, 0.0);
+    for b in &o.batches {
+        if let Some(sd) = b.spec_decode {
+            any = true;
+            ds += sd.draft_s;
+            vs += sd.verify_s;
+            dj += sd.draft_j;
+            vj += sd.verify_j;
+        }
+    }
+    if any { Some((ds, vs, dj, vj)) } else { None }
+}
 
 /// The four latency summaries the report renders, in render order,
 /// computed in one pass over the requests (no intermediate series — at
@@ -118,6 +143,14 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
     if let Some(c) = s.prefill_chunk {
         let _ = writeln!(out, "chunked prefill: {c}-token chunks");
     }
+    if let Some(sd) = active_spec_decode(s) {
+        let _ = writeln!(
+            out,
+            "speculative decoding: draft {}, k={}, alpha={} \
+             ({:.2} tokens accepted per target step)",
+            sd.draft, sd.k, sd.alpha,
+            crate::hwsim::expected_accepted(sd.k, sd.alpha));
+    }
     if let Some(d) = o.dvfs {
         let cap = match d.cap_w {
             Some(c) => format!("cap {c} W per device — "),
@@ -180,6 +213,13 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
         },
         o.mean_padding_waste() * 100.0);
     let _ = writeln!(out, "replica busy: {:.1}%", o.replica_busy() * 100.0);
+    if let Some((ds, vs, _, _)) = spec_decode_totals(o) {
+        let toks = o.generated_tokens().max(1) as f64;
+        let _ = writeln!(
+            out,
+            "TPOT split: {:.3} ms draft + {:.3} ms verify per token",
+            ds / toks * 1e3, vs / toks * 1e3);
+    }
     if let Some(total) = o.total_joules {
         let toks = o.generated_tokens().max(1) as f64;
         let n_req = o.requests.len().max(1) as f64;
@@ -194,6 +234,12 @@ pub fn render_markdown(o: &ServeOutcome) -> String {
                  ({:.1}% on the link)",
                 (total - link) / toks, link / toks,
                 link / total.max(f64::MIN_POSITIVE) * 100.0);
+        }
+        if let Some((_, _, dj, vj)) = spec_decode_totals(o) {
+            let _ = writeln!(
+                out,
+                "J/token split (spec decode): {:.3} draft + {:.3} verify",
+                dj / toks, vj / toks);
         }
         if let (Some(kv), Some(d)) = (o.kv_transfer_joules, &s.disagg) {
             let bytes = o.kv_transfer_bytes.unwrap_or(0);
@@ -279,6 +325,12 @@ pub fn to_json(o: &ServeOutcome) -> Json {
             }
             if let Some(link) = b.interconnect_j {
                 fields.push(("j_interconnect", Json::num(link)));
+            }
+            if let Some(sd) = b.spec_decode {
+                fields.push(("spec_decode_draft_s",
+                             Json::num(sd.draft_s)));
+                fields.push(("spec_decode_verify_s",
+                             Json::num(sd.verify_s)));
             }
             if let Some(st) = b.stage {
                 fields.push(("stage", Json::str(st)));
@@ -368,6 +420,27 @@ pub fn to_json(o: &ServeOutcome) -> Json {
     if let Some(kv) = o.kv_transfer_joules {
         root.push(("kv_transfer_joules", Json::num(kv)));
     }
+    if let Some(sd) = active_spec_decode(s) {
+        let mut f = vec![
+            ("accepted_per_target_step",
+             Json::num(crate::hwsim::expected_accepted(sd.k, sd.alpha))),
+            ("alpha", Json::num(sd.alpha)),
+            ("draft", Json::str(sd.draft.clone())),
+            ("k", Json::num(sd.k as f64)),
+        ];
+        if let Some((ds, vs, dj, vj)) = spec_decode_totals(o) {
+            f.push(("draft_seconds", Json::num(ds)));
+            f.push(("verify_seconds", Json::num(vs)));
+            if o.total_joules.is_some() {
+                let toks = o.generated_tokens().max(1) as f64;
+                f.push(("draft_joules", Json::num(dj)));
+                f.push(("verify_joules", Json::num(vj)));
+                f.push(("j_per_token_draft", Json::num(dj / toks)));
+                f.push(("j_per_token_verify", Json::num(vj / toks)));
+            }
+        }
+        root.push(("spec_decode", Json::obj(f)));
+    }
     if let Some(d) = o.dvfs {
         root.push(("dvfs", Json::obj(vec![
             ("cap_w", match d.cap_w {
@@ -445,6 +518,10 @@ pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
                     w.field_num("real_rows", b.real_rows as f64)?;
                     w.field_num("replica", b.replica as f64)?;
                     w.field_num("service_s", b.service_s)?;
+                    if let Some(sd) = b.spec_decode {
+                        w.field_num("spec_decode_draft_s", sd.draft_s)?;
+                        w.field_num("spec_decode_verify_s", sd.verify_s)?;
+                    }
                     if let Some(st) = b.stage {
                         w.field_str("stage", st)?;
                     }
@@ -591,6 +668,36 @@ pub fn write_json<W: io::Write>(o: &ServeOutcome, out: W)
             Ok(())
         })?;
         w.field_str("seed", &s.seed.to_string())?;
+        if let Some(sd) = active_spec_decode(s) {
+            let totals = spec_decode_totals(o);
+            let energy = o.total_joules.is_some();
+            let toks = o.generated_tokens().max(1) as f64;
+            w.field_obj("spec_decode", |w| {
+                w.field_num(
+                    "accepted_per_target_step",
+                    crate::hwsim::expected_accepted(sd.k, sd.alpha))?;
+                w.field_num("alpha", sd.alpha)?;
+                w.field_str("draft", &sd.draft)?;
+                if let Some((ds, _, dj, vj)) = totals {
+                    if energy {
+                        w.field_num("draft_joules", dj)?;
+                    }
+                    w.field_num("draft_seconds", ds)?;
+                    if energy {
+                        w.field_num("j_per_token_draft", dj / toks)?;
+                        w.field_num("j_per_token_verify", vj / toks)?;
+                    }
+                }
+                w.field_num("k", sd.k as f64)?;
+                if let Some((_, vs, _, vj)) = totals {
+                    if energy {
+                        w.field_num("verify_joules", vj)?;
+                    }
+                    w.field_num("verify_seconds", vs)?;
+                }
+                Ok(())
+            })?;
+        }
         w.field_num("throughput_rps", o.throughput_rps())?;
         w.field_num("tokens_per_s", o.tokens_per_s())?;
         if let Some(total) = o.total_joules {
@@ -764,6 +871,62 @@ mod tests {
         assert!(v.get("latency_ms").unwrap().get("TTLT ms").is_some());
         // execution details must not leak into the artifact
         assert!(v.get("workers").is_none());
+    }
+
+    #[test]
+    fn spec_decode_report_renders_split_and_streams_identically() {
+        let spec = ServeSpec::parse(
+            r#"{"rate_rps": 20.0, "requests": 12, "prompt_lo": 16,
+                "prompt_hi": 64, "gen_len": 8, "seed": 7,
+                "energy": true,
+                "spec_decode": {"draft": "llama-3.2-1b", "k": 4,
+                                "alpha": 0.8}}"#).unwrap();
+        let o = simulate::run(&spec).unwrap();
+        let text = render_markdown(&o);
+        assert!(text.contains(
+            "speculative decoding: draft llama-3.2-1b, k=4, alpha=0.8"),
+            "{text}");
+        assert!(text.contains("TPOT split:"), "{text}");
+        assert!(text.contains("J/token split (spec decode):"), "{text}");
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        let sd = v.get("spec_decode").expect("spec_decode block");
+        assert_eq!(sd.get("draft").unwrap().as_str(),
+                   Some("llama-3.2-1b"));
+        assert_eq!(sd.get("k").unwrap().as_usize(), Some(4));
+        assert_eq!(sd.get("alpha").unwrap().as_f64(), Some(0.8));
+        let e = sd.get("accepted_per_target_step").unwrap()
+            .as_f64().unwrap();
+        assert!(e > 1.0 && e < 5.0, "E[accepted] out of range: {e}");
+        assert!(sd.get("draft_seconds").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sd.get("verify_seconds").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(sd.get("j_per_token_draft").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(sd.get("j_per_token_verify").unwrap().as_f64().unwrap()
+                > 0.0);
+        let b0 = &v.get("batches").unwrap().as_arr().unwrap()[0];
+        assert!(b0.get("spec_decode_draft_s").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(b0.get("spec_decode_verify_s").unwrap().as_f64()
+                .unwrap() > 0.0);
+        assert_stream_matches_tree(&o);
+        // without the energy pass, the block keeps only timing keys
+        let mut quiet = spec.clone();
+        quiet.energy = false;
+        let qo = simulate::run(&quiet).unwrap();
+        let qv = Json::parse(&to_json(&qo).to_string()).unwrap();
+        let qsd = qv.get("spec_decode").unwrap();
+        assert!(qsd.get("draft_seconds").is_some());
+        assert!(qsd.get("draft_joules").is_none());
+        assert_stream_matches_tree(&qo);
+        // legacy artifacts carry none of the new keys
+        let lv = Json::parse(&to_json(&outcome(true)).to_string())
+            .unwrap();
+        assert!(lv.get("spec_decode").is_none());
+        let lb = &lv.get("batches").unwrap().as_arr().unwrap()[0];
+        assert!(lb.get("spec_decode_draft_s").is_none());
+        assert!(!render_markdown(&outcome(true))
+            .contains("speculative decoding"));
     }
 
     #[test]

@@ -146,6 +146,7 @@ pub fn serve_with_clock(backend: &mut dyn ExecutionBackend,
             joules: None,
             interconnect_j: None,
             stage: None,
+            spec_decode: None,
         });
     }
 

@@ -111,6 +111,11 @@ pub struct ServedBatch {
     /// Which disagg phase pool executed the batch (`"prefill"` /
     /// `"decode"`); `None` on unified serving.
     pub stage: Option<&'static str>,
+    /// Speculative-decoding decomposition of the batch's decode time
+    /// and analytic energy (draft vs verify), when the deployment runs
+    /// a draft model. `None` on plain autoregressive decode and on
+    /// disagg stages (the split is not per-batch observable there).
+    pub spec_decode: Option<crate::backend::SpecDecodeRun>,
 }
 
 /// Everything the serve report renders.
@@ -296,6 +301,9 @@ pub fn run(spec: &ServeSpec) -> Result<ServeOutcome> {
         }
         if let Some(p) = spec.parallel {
             backend = backend.with_parallel(p)?;
+        }
+        if let Some(sd) = &spec.spec_decode {
+            backend = backend.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
         }
         if let Some((p_op, d_op)) = &ops {
             backend = backend.with_phase_ops(*p_op, *d_op);
@@ -625,6 +633,7 @@ pub fn event_loop(reqs: &[Request], policy: &BatchPolicy, replicas: usize,
             joules: None,
             interconnect_j: None,
             stage: None,
+            spec_decode: run.spec_decode,
         });
 
         if let Some(gov) = hooks.governor.as_deref_mut() {
@@ -713,6 +722,9 @@ fn pool_backend(ps: &ServeSpec) -> Result<SimBackend> {
     if let Some(p) = ps.parallel {
         b = b.with_parallel(p)?;
     }
+    if let Some(sd) = &ps.spec_decode {
+        b = b.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
+    }
     if let Some((p_op, d_op)) = resolve_ops(ps)? {
         b = b.with_phase_ops(p_op, d_op);
     }
@@ -759,6 +771,7 @@ impl ExecutionBackend for PrefillPhase<'_> {
             tokens: Vec::new(),
             analytic_joules: None,
             interconnect_joules: 0.0,
+            spec_decode: None,
         })
     }
 
@@ -828,6 +841,7 @@ impl ExecutionBackend for DecodePhase<'_> {
             tokens: Vec::new(),
             analytic_joules: None,
             interconnect_joules: 0.0,
+            spec_decode: None,
         })
     }
 
@@ -1067,6 +1081,9 @@ fn attribute_energy_disagg(spec: &ServeSpec, d: &DisaggSpec,
             if let Some(p) = ps.parallel {
                 b = b.with_parallel(p)?;
             }
+            if let Some(sd) = &ps.spec_decode {
+                b = b.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
+            }
             if let Some((p_op, d_op)) = resolve_ops(ps)? {
                 b = b.with_phase_ops(p_op, d_op);
             }
@@ -1209,6 +1226,7 @@ fn simulate_reference(spec: &ServeSpec, backend: &mut dyn ExecutionBackend)
             joules: None,
             interconnect_j: None,
             stage: None,
+            spec_decode: run.spec_decode,
         });
     }
 
@@ -1257,6 +1275,9 @@ fn attribute_energy(spec: &ServeSpec,
             }
             if let Some(p) = spec.parallel {
                 b = b.with_parallel(p)?;
+            }
+            if let Some(sd) = &spec.spec_decode {
+                b = b.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
             }
             if let Some((p_op, d_op)) = ops {
                 b = b.with_phase_ops(*p_op, *d_op);

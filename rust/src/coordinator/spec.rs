@@ -185,6 +185,13 @@ pub struct ServeSpec {
     /// Disaggregated prefill/decode pools. `None` = the legacy unified
     /// deployment — bit-identical to the pre-disagg serving loop.
     pub disagg: Option<DisaggSpec>,
+    /// Speculative decoding: a draft model proposes `k` tokens per
+    /// round, the target verifies them in one batched step, and both
+    /// models' weights and KV count against the admission budget.
+    /// `None` (or `k == 0`) = plain autoregressive decode —
+    /// bit-identical to the pre-speculation serving loop. Simulated
+    /// rigs only.
+    pub spec_decode: Option<fields::SpecDecodeSpec>,
 }
 
 impl Default for ServeSpec {
@@ -210,6 +217,7 @@ impl Default for ServeSpec {
             kv_reuse: None,
             prefill_chunk: None,
             disagg: None,
+            spec_decode: None,
         }
     }
 }
@@ -243,6 +251,18 @@ impl ServeSpec {
         }
     }
 
+    /// The draft model's architecture when speculation is active
+    /// (`spec_decode` present with `k > 0` and a registry-known
+    /// draft); `None` otherwise. `validate` rejects unknown draft
+    /// names before any serving starts.
+    pub fn draft_arch(&self) -> Option<models::ModelArch> {
+        let sd = self.spec_decode.as_ref()?;
+        if sd.k == 0 {
+            return None;
+        }
+        models::lookup(&sd.draft)
+    }
+
     /// Smallest power-of-two prompt bucket ≥ `len` (min 16).
     fn bucket_ceil(len: usize) -> usize {
         let mut b = 16usize;
@@ -274,8 +294,13 @@ impl ServeSpec {
                                device::rig_by_name(&self.device),
                                self.scheme()) {
             (Some(arch), Some(rig), Ok(scheme)) => {
-                Some(FitModel::with_parallel(&arch, scheme, &rig,
-                                             self.parallel))
+                let mut fm = FitModel::with_parallel(&arch, scheme, &rig,
+                                                     self.parallel);
+                // both models' weights and KV count against the budget
+                if let Some(draft) = self.draft_arch() {
+                    fm = fm.with_draft(&draft, scheme, self.parallel);
+                }
+                Some(fm)
             }
             _ => None,
         };
@@ -375,6 +400,22 @@ impl ServeSpec {
                         && self.prefill_chunk.is_none()),
                 "kv_reuse / prefill_chunk modeling applies to simulated \
                  rigs only; the `cpu` engine executes the full prefill");
+        if let Some(sd) = &self.spec_decode {
+            ensure!(self.is_simulated(),
+                    "speculative decoding applies to simulated rigs \
+                     only; the `cpu` engine decodes autoregressively");
+            ensure!(!sd.draft.is_empty(),
+                    "speculative decoding needs a draft model \
+                     (--draft-model or `spec_decode.draft`)");
+            if models::lookup(&sd.draft).is_none() {
+                bail!("unknown draft model `{}` (known: {})", sd.draft,
+                      models::registry::model_names().join(", "));
+            }
+            ensure!(sd.alpha.is_finite()
+                        && (0.0..=1.0).contains(&sd.alpha),
+                    "`alpha` must be an acceptance rate in [0, 1] \
+                     (got {})", sd.alpha);
+        }
         if let Some(d) = &self.disagg {
             ensure!(self.is_simulated(),
                     "`disagg` applies to simulated rigs only; wall-clock \
@@ -414,13 +455,21 @@ impl ServeSpec {
             // a deployment that cannot hold even one request at the
             // workload's top prompt bucket must fail loudly before
             // serving starts (plan_batch would bail mid-run otherwise)
-            let fm = FitModel::with_parallel(&arch, self.scheme()?, &rig,
-                                             self.parallel);
+            let mut fm = FitModel::with_parallel(&arch, self.scheme()?,
+                                                 &rig, self.parallel);
+            let mut draft_note = String::new();
+            if let Some(draft) = self.draft_arch() {
+                // both models are resident: dual-model fit
+                fm = fm.with_draft(&draft, self.scheme()?, self.parallel);
+                draft_note = format!(
+                    " plus draft `{}`",
+                    self.spec_decode.as_ref().expect("draft_arch").draft);
+            }
             ensure!(fm.fits(1, top + 1),
-                    "{} under scheme `{}` does not fit {}: one \
+                    "{}{} under scheme `{}` does not fit {}: one \
                      {top}-token request needs {:.1} GB ({:.1} GB of \
                      weights) vs a {:.1} GB budget{}",
-                    self.model, self.quant, self.device,
+                    self.model, draft_note, self.quant, self.device,
                     fm.required_bytes(1, top + 1) as f64 / 1e9,
                     fm.weight_bytes as f64 / 1e9,
                     fm.budget_bytes as f64 / 1e9,
@@ -451,12 +500,12 @@ impl ServeSpec {
     /// }
     /// ```
     pub fn parse(text: &str) -> Result<ServeSpec> {
-        const KNOWN_KEYS: [&str; 22] =
+        const KNOWN_KEYS: [&str; 23] =
             ["model", "device", "rate_rps", "trace", "requests",
              "prompt_lo", "prompt_hi", "gen_len", "replicas", "workers",
              "seed", "energy", "max_wait_s", "max_seq_len", "quant",
              "tp", "pp", "power_cap", "phase_dvfs", "kv_reuse",
-             "prefill_chunk", "disagg"];
+             "prefill_chunk", "disagg", "spec_decode"];
         let root = Json::parse(text).context("parsing serve spec JSON")?;
         fields::require_known_keys(
             fields::root_obj(&root, "serve spec")?, &KNOWN_KEYS,
@@ -530,6 +579,7 @@ impl ServeSpec {
         if let Some(v) = root.get("disagg") {
             spec.disagg = Some(DisaggSpec::parse(v)?);
         }
+        spec.spec_decode = fields::spec_decode_block(&root)?;
         Ok(spec)
     }
 
@@ -566,6 +616,9 @@ pub struct ServeOverrides {
     pub phase_dvfs: Option<bool>,
     pub kv_reuse: Option<f64>,
     pub prefill_chunk: Option<usize>,
+    pub draft_model: Option<String>,
+    pub spec_k: Option<usize>,
+    pub accept_rate: Option<f64>,
 }
 
 impl ServeOverrides {
@@ -626,6 +679,28 @@ impl ServeOverrides {
         }
         if let Some(v) = self.prefill_chunk {
             spec.prefill_chunk = Some(v);
+        }
+        if self.draft_model.is_some() || self.spec_k.is_some()
+            || self.accept_rate.is_some()
+        {
+            // `--spec-k`/`--accept-rate` without a draft (flag or spec
+            // block) leave an empty draft name, which `validate`
+            // rejects with a pointer to `--draft-model`
+            let sd = spec.spec_decode.get_or_insert(
+                fields::SpecDecodeSpec {
+                    draft: String::new(),
+                    k: fields::DEFAULT_SPEC_K,
+                    alpha: fields::DEFAULT_ACCEPT_RATE,
+                });
+            if let Some(v) = self.draft_model {
+                sd.draft = v;
+            }
+            if let Some(v) = self.spec_k {
+                sd.k = v;
+            }
+            if let Some(v) = self.accept_rate {
+                sd.alpha = v;
+            }
         }
     }
 }
@@ -944,6 +1019,78 @@ mod tests {
         let ds = s.pool_spec(&d.decode);
         assert_eq!(ds.device, s.device);
         assert_eq!(ds.replicas, 1);
+    }
+
+    #[test]
+    fn spec_decode_parses_validates_and_overrides() {
+        let s = ServeSpec::parse(
+            r#"{"spec_decode": {"draft": "llama-3.2-1b", "k": 6,
+                "alpha": 0.9}}"#).unwrap();
+        let sd = s.spec_decode.clone().unwrap();
+        assert_eq!(sd.draft, "llama-3.2-1b");
+        assert_eq!((sd.k, sd.alpha), (6, 0.9));
+        s.validate().unwrap();
+        // unknown drafts are rejected before serving starts
+        let mut bad = s.clone();
+        bad.spec_decode.as_mut().unwrap().draft = "gpt-17".into();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown draft model `gpt-17`"), "{err}");
+        // the engine decodes autoregressively
+        let cpu = ServeSpec {
+            device: "cpu".into(),
+            model: "elana-tiny".into(),
+            spec_decode: s.spec_decode.clone(),
+            ..ServeSpec::default()
+        };
+        let err = cpu.validate().unwrap_err().to_string();
+        assert!(err.contains("decodes autoregressively"), "{err}");
+        // flags compose onto the block the way sweep overrides do
+        let mut s2 = ServeSpec::default();
+        ServeOverrides {
+            draft_model: Some("qwen2.5-1.5b".into()),
+            accept_rate: Some(0.5),
+            ..ServeOverrides::default()
+        }.apply(&mut s2);
+        let sd = s2.spec_decode.clone().unwrap();
+        assert_eq!(sd.draft, "qwen2.5-1.5b");
+        assert_eq!((sd.k, sd.alpha), (fields::DEFAULT_SPEC_K, 0.5));
+        s2.validate().unwrap();
+        // speculation knobs without any draft point at --draft-model
+        let mut s3 = ServeSpec::default();
+        ServeOverrides { spec_k: Some(2), ..ServeOverrides::default() }
+            .apply(&mut s3);
+        let err = s3.validate().unwrap_err().to_string();
+        assert!(err.contains("--draft-model"), "{err}");
+    }
+
+    #[test]
+    fn spec_decode_counts_the_draft_against_the_fit() {
+        // w4a16 Llama-8B fits the 8 GB Orin alone...
+        let fits = ServeSpec {
+            device: "orin".into(),
+            quant: "w4a16".into(),
+            ..ServeSpec::default()
+        };
+        fits.validate().unwrap();
+        // ...but not with a second resident 8B draft
+        let mut dual = fits.clone();
+        dual.spec_decode = Some(fields::SpecDecodeSpec {
+            draft: "llama-3.1-8b".into(), k: 4, alpha: 0.7 });
+        let err = dual.validate().unwrap_err().to_string();
+        assert!(err.contains("plus draft `llama-3.1-8b`"), "{err}");
+        assert!(err.contains("does not fit"), "{err}");
+        // k = 0 disables speculation, so the draft never counts
+        dual.spec_decode.as_mut().unwrap().k = 0;
+        dual.validate().unwrap();
+        // the admission budget carries the dual-model load
+        let mut spec = ServeSpec::default();
+        spec.spec_decode = Some(fields::SpecDecodeSpec {
+            draft: "llama-3.2-1b".into(), k: 4, alpha: 0.7 });
+        spec.validate().unwrap();
+        let base = ServeSpec::default().sim_policy().kv_budget.unwrap();
+        let fm = spec.sim_policy().kv_budget.unwrap();
+        assert!(fm.weight_bytes > base.weight_bytes);
+        assert!(fm.kv_bytes_per_token > base.kv_bytes_per_token);
     }
 
     #[test]

@@ -52,6 +52,32 @@ fn tenant_latency_summaries(o: &ClusterOutcome)
         .collect()
 }
 
+/// The active speculative-decoding config, when the fleet decodes
+/// speculatively (`k == 0` is inert and reports as plain decode).
+fn active_spec_decode(o: &ClusterOutcome)
+                      -> Option<&crate::util::spec::SpecDecodeSpec> {
+    o.spec.spec_decode.as_ref().filter(|sd| sd.k > 0)
+}
+
+/// Fleet draft/verify totals `(draft_s, verify_s, draft_j, verify_j)`
+/// summed over every pool's batches; `None` when no batch decoded
+/// speculatively.
+fn spec_decode_totals(o: &ClusterOutcome)
+                      -> Option<(f64, f64, f64, f64)> {
+    let mut any = false;
+    let (mut ds, mut vs, mut dj, mut vj) = (0.0, 0.0, 0.0, 0.0);
+    for b in o.pools.iter().flat_map(|p| &p.batches) {
+        if let Some(sd) = b.spec_decode {
+            any = true;
+            ds += sd.draft_s;
+            vs += sd.verify_s;
+            dj += sd.draft_j;
+            vj += sd.verify_j;
+        }
+    }
+    any.then_some((ds, vs, dj, vj))
+}
+
 fn class_line(class: &SloClass) -> String {
     match class {
         SloClass::Interactive { ttft_ms, tpot_ms } => {
@@ -109,6 +135,14 @@ pub fn render_markdown(o: &ClusterOutcome) -> String {
     }
     if let Some(c) = s.prefill_chunk {
         let _ = writeln!(out, "chunked prefill: {c}-token chunks");
+    }
+    if let Some(sd) = active_spec_decode(o) {
+        let _ = writeln!(
+            out,
+            "speculative decoding: draft {}, k={}, alpha={} ({:.2} \
+             tokens accepted per target step)",
+            sd.draft, sd.k, sd.alpha,
+            crate::hwsim::expected_accepted(sd.k, sd.alpha));
     }
     let _ = writeln!(out);
     let _ = writeln!(
@@ -175,12 +209,27 @@ pub fn render_markdown(o: &ClusterOutcome) -> String {
          Jain fairness {:.4}",
         o.tenants.iter().map(|t| t.offered).sum::<usize>(),
         o.makespan_s, o.jain_fairness);
+    if let Some((ds, vs, _, _)) = spec_decode_totals(o) {
+        let toks = o.generated_tokens().max(1) as f64;
+        let _ = writeln!(
+            out,
+            "TPOT split: {:.3} ms draft + {:.3} ms verify per token",
+            ds / toks * 1e3, vs / toks * 1e3);
+    }
     if let (Some(total), Some(jt)) =
         (o.total_joules, o.joules_per_token())
     {
         let _ = writeln!(
             out,
             "fleet energy: {:.1} J total, {:.3} J/token", total, jt);
+        if let Some((_, _, dj, vj)) = spec_decode_totals(o) {
+            let toks = o.generated_tokens().max(1) as f64;
+            let _ = writeln!(
+                out,
+                "J/token split (spec decode): {:.3} draft + {:.3} \
+                 verify",
+                dj / toks, vj / toks);
+        }
     }
     if let (Some(kv), Some(d)) = (o.kv_transfer_joules, &s.disagg) {
         let bytes = o.kv_transfer_bytes.unwrap_or(0);
@@ -283,6 +332,12 @@ pub fn to_json(o: &ClusterOutcome) -> Json {
                         fields.push(("j_prompt", Json::num(jp)));
                         fields.push(("j_token", Json::num(jt)));
                         fields.push(("j_request", Json::num(jr)));
+                    }
+                    if let Some(sd) = b.spec_decode {
+                        fields.push(("spec_decode_draft_s",
+                                     Json::num(sd.draft_s)));
+                        fields.push(("spec_decode_verify_s",
+                                     Json::num(sd.verify_s)));
                     }
                     if let Some(st) = b.stage {
                         fields.push(("stage", Json::str(st)));
@@ -393,6 +448,28 @@ pub fn to_json(o: &ClusterOutcome) -> Json {
     }
     if let Some(kv) = o.kv_transfer_joules {
         root.push(("kv_transfer_joules", Json::num(kv)));
+    }
+    if let Some(sd) = active_spec_decode(o) {
+        let mut fields = vec![
+            ("accepted_per_target_step",
+             Json::num(crate::hwsim::expected_accepted(sd.k, sd.alpha))),
+            ("alpha", Json::num(sd.alpha)),
+            ("draft", Json::str(sd.draft.clone())),
+            ("k", Json::num(sd.k as f64)),
+        ];
+        if let Some((ds, vs, dj, vj)) = spec_decode_totals(o) {
+            fields.push(("draft_seconds", Json::num(ds)));
+            fields.push(("verify_seconds", Json::num(vs)));
+            if o.total_joules.is_some() {
+                let toks = o.generated_tokens().max(1) as f64;
+                fields.push(("draft_joules", Json::num(dj)));
+                fields.push(("verify_joules", Json::num(vj)));
+                fields.push(("j_per_token_draft", Json::num(dj / toks)));
+                fields.push(("j_per_token_verify",
+                             Json::num(vj / toks)));
+            }
+        }
+        root.push(("spec_decode", Json::obj(fields)));
     }
     if let Some(total) = o.total_joules {
         root.push(("total_joules", Json::num(total)));
@@ -505,6 +582,12 @@ pub fn write_json<W: io::Write>(o: &ClusterOutcome, out: W)
                                 w.field_num("replica",
                                             b.replica as f64)?;
                                 w.field_num("service_s", b.service_s)?;
+                                if let Some(sd) = b.spec_decode {
+                                    w.field_num("spec_decode_draft_s",
+                                                sd.draft_s)?;
+                                    w.field_num("spec_decode_verify_s",
+                                                sd.verify_s)?;
+                                }
                                 if let Some(st) = b.stage {
                                     w.field_str("stage", st)?;
                                 }
@@ -568,6 +651,35 @@ pub fn write_json<W: io::Write>(o: &ClusterOutcome, out: W)
         })?;
         w.field_str("routing", s.routing.label())?;
         w.field_str("seed", &s.seed.to_string())?;
+        if let Some(sd) = active_spec_decode(o) {
+            let totals = spec_decode_totals(o);
+            let energy = o.total_joules.is_some();
+            let toks = o.generated_tokens().max(1) as f64;
+            w.field_obj("spec_decode", |w| {
+                w.field_num(
+                    "accepted_per_target_step",
+                    crate::hwsim::expected_accepted(sd.k, sd.alpha))?;
+                w.field_num("alpha", sd.alpha)?;
+                w.field_str("draft", &sd.draft)?;
+                if let Some((ds, vs, dj, vj)) = totals {
+                    if energy {
+                        w.field_num("draft_joules", dj)?;
+                    }
+                    w.field_num("draft_seconds", ds)?;
+                    if energy {
+                        w.field_num("j_per_token_draft", dj / toks)?;
+                        w.field_num("j_per_token_verify", vj / toks)?;
+                    }
+                    w.field_num("k", sd.k as f64)?;
+                    if energy {
+                        w.field_num("verify_joules", vj)?;
+                    }
+                    w.field_num("verify_seconds", vs)
+                } else {
+                    w.field_num("k", sd.k as f64)
+                }
+            })?;
+        }
         w.field_arr("tenants", |w| {
             for (t, lat) in o.tenants.iter().zip(&sums) {
                 w.obj(|w| {
@@ -750,6 +862,60 @@ mod tests {
                     "\"stage\"", "decode_replica_timeline"] {
             assert!(!u.contains(key), "legacy cluster JSON leaks {key}");
         }
+    }
+
+    #[test]
+    fn spec_decode_cluster_report_renders_split_and_streams() {
+        let mut s = ClusterSpec {
+            energy: true,
+            seed: 11,
+            ..ClusterSpec::default()
+        };
+        for t in &mut s.tenants {
+            t.requests = 12;
+            t.prompt_lo = 16;
+            t.prompt_hi = 64;
+            t.gen_len = 8;
+        }
+        s.spec_decode = Some(crate::util::spec::SpecDecodeSpec {
+            draft: "llama-3.2-1b".to_string(),
+            k: 4,
+            alpha: 0.8,
+        });
+        let o = simulate::run(&s).unwrap();
+        let text = render_markdown(&o);
+        assert!(text.contains(
+            "speculative decoding: draft llama-3.2-1b, k=4, alpha=0.8"),
+            "{text}");
+        assert!(text.contains("TPOT split:"), "{text}");
+        assert!(text.contains("J/token split (spec decode):"), "{text}");
+        let v = Json::parse(&to_json(&o).to_string()).unwrap();
+        let sd = v.get("spec_decode").expect("spec_decode block");
+        assert_eq!(sd.get("draft").unwrap().as_str(),
+                   Some("llama-3.2-1b"));
+        assert_eq!(sd.get("k").unwrap().as_usize(), Some(4));
+        assert!(sd.get("draft_seconds").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(sd.get("j_per_token_verify").unwrap().as_f64().unwrap()
+                > 0.0);
+        let pool = &v.get("pools").unwrap().as_arr().unwrap()[0];
+        let b0 = &pool.get("batches").unwrap().as_arr().unwrap()[0];
+        assert!(b0.get("spec_decode_draft_s").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert_stream_matches_tree(&o);
+        // and with the energy pass off, only the timing keys remain
+        s.energy = false;
+        let quiet = simulate::run(&s).unwrap();
+        let qv = Json::parse(&to_json(&quiet).to_string()).unwrap();
+        let qsd = qv.get("spec_decode").unwrap();
+        assert!(qsd.get("verify_seconds").is_some());
+        assert!(qsd.get("verify_joules").is_none());
+        assert_stream_matches_tree(&quiet);
+        // legacy artifacts stay free of the new keys
+        let u = to_json(&quick_outcome(true)).to_string();
+        assert!(!u.contains("spec_decode"), "{u}");
+        assert!(!render_markdown(&quick_outcome(true))
+            .contains("speculative decoding"));
     }
 
     fn assert_stream_matches_tree(o: &ClusterOutcome) {

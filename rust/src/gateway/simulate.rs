@@ -192,6 +192,9 @@ pub fn run(spec: &ClusterSpec) -> Result<ClusterOutcome> {
     if let Some(q) = scheme {
         backend = backend.with_quant(q);
     }
+    if let Some(sd) = &pool_spec.spec_decode {
+        backend = backend.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
+    }
     let vocab = backend.vocab_size();
 
     // 1. per-tenant traces through per-tenant admission
@@ -444,6 +447,9 @@ fn attribute_energy(spec: &ClusterSpec,
             if let Some((p_op, d_op)) = resolve_ops(ps)? {
                 b = b.with_phase_ops(p_op, d_op);
             }
+            if let Some(sd) = &ps.spec_decode {
+                b = b.with_spec_decode(&sd.draft, sd.k, sd.alpha)?;
+            }
             let tb = TokenBatch::new(batch, prompt,
                                      vec![0; batch * prompt])?;
             let gen_steps = if phase_specs.is_some() && is_prefill {
@@ -681,6 +687,32 @@ mod tests {
         assert!(u.kv_transfer_joules.is_none());
         assert!(u.pools[0].decode_replica_timeline.is_none());
         assert!(u.pools[0].batches.iter().all(|b| b.stage.is_none()));
+    }
+
+    #[test]
+    fn spec_decode_cluster_slows_decode_and_tags_batches() {
+        let mut s = quick_spec();
+        s.energy = true;
+        let base = run(&s).unwrap();
+        let mut sd = s.clone();
+        sd.spec_decode = Some(crate::util::spec::SpecDecodeSpec {
+            draft: "llama-3.2-1b".to_string(),
+            k: 4,
+            alpha: 0.05,
+        });
+        let o = run(&sd).unwrap();
+        assert_eq!(o.requests.len(), base.requests.len());
+        // every pool batch carries the draft/verify split
+        for b in o.pools.iter().flat_map(|p| &p.batches) {
+            let split = b.spec_decode.expect("spec decode split");
+            assert!(split.draft_s > 0.0 && split.verify_s > 0.0);
+        }
+        assert!(base.pools.iter().flat_map(|p| &p.batches)
+                .all(|b| b.spec_decode.is_none()));
+        // a nearly-always-rejected draft is pure overhead, so the
+        // fleet burns more time and energy than plain decode
+        assert!(o.busy_s > base.busy_s);
+        assert!(o.total_joules.unwrap() > base.total_joules.unwrap());
     }
 
     #[test]

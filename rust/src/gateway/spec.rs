@@ -334,6 +334,12 @@ pub struct ClusterSpec {
     /// link. Requires top-level `replicas: 1` (phase pools carry their
     /// own replica counts).
     pub disagg: Option<DisaggSpec>,
+    /// Speculative decoding, fleet-wide: every pool decodes with the
+    /// same draft model, `k`, and acceptance rate (the serve spec's
+    /// `spec_decode` block applied to every pool). `None` (or
+    /// `k == 0`) = plain autoregressive decode, bit-identical to the
+    /// pre-speculation cluster.
+    pub spec_decode: Option<fields::SpecDecodeSpec>,
 }
 
 impl Default for ClusterSpec {
@@ -384,6 +390,7 @@ impl Default for ClusterSpec {
             kv_reuse: None,
             prefill_chunk: None,
             disagg: None,
+            spec_decode: None,
         }
     }
 }
@@ -424,6 +431,7 @@ impl ClusterSpec {
             kv_reuse: self.kv_reuse,
             prefill_chunk: self.prefill_chunk,
             disagg: self.disagg.clone(),
+            spec_decode: self.spec_decode.clone(),
         }
     }
 
@@ -567,11 +575,11 @@ impl ClusterSpec {
 
     /// Parse the JSON schema documented in the module header.
     pub fn parse(text: &str) -> Result<ClusterSpec> {
-        const KNOWN_KEYS: [&str; 17] =
+        const KNOWN_KEYS: [&str; 18] =
             ["cluster", "model", "device", "quant", "pools", "replicas",
              "routing", "autoscale", "tenants", "workers", "seed",
              "energy", "max_wait_s", "max_seq_len", "kv_reuse",
-             "prefill_chunk", "disagg"];
+             "prefill_chunk", "disagg", "spec_decode"];
         let root = Json::parse(text).context("parsing cluster spec JSON")?;
         fields::require_known_keys(
             fields::root_obj(&root, "cluster spec")?, &KNOWN_KEYS,
@@ -640,6 +648,7 @@ impl ClusterSpec {
         if let Some(v) = root.get("disagg") {
             spec.disagg = Some(DisaggSpec::parse(v)?);
         }
+        spec.spec_decode = fields::spec_decode_block(&root)?;
         Ok(spec)
     }
 
@@ -665,6 +674,11 @@ pub struct ClusterOverrides {
     pub workers: Option<usize>,
     pub seed: Option<u64>,
     pub energy: Option<bool>,
+    /// `--draft-model`: enable speculative decoding fleet-wide (or
+    /// swap the spec file's draft).
+    pub draft_model: Option<String>,
+    pub spec_k: Option<usize>,
+    pub accept_rate: Option<f64>,
 }
 
 impl ClusterOverrides {
@@ -697,6 +711,28 @@ impl ClusterOverrides {
         }
         if let Some(v) = self.energy {
             spec.energy = v;
+        }
+        if self.draft_model.is_some() || self.spec_k.is_some()
+            || self.accept_rate.is_some()
+        {
+            // an empty draft only survives when no spec/flag named one;
+            // ClusterSpec::validate (via the pool serve spec) rejects
+            // it with a pointer at --draft-model
+            let sd = spec.spec_decode.get_or_insert(
+                fields::SpecDecodeSpec {
+                    draft: String::new(),
+                    k: fields::DEFAULT_SPEC_K,
+                    alpha: fields::DEFAULT_ACCEPT_RATE,
+                });
+            if let Some(v) = &self.draft_model {
+                sd.draft = v.clone();
+            }
+            if let Some(v) = self.spec_k {
+                sd.k = v;
+            }
+            if let Some(v) = self.accept_rate {
+                sd.alpha = v;
+            }
         }
     }
 }
@@ -1140,6 +1176,51 @@ mod tests {
                 .validate()
                 .unwrap_err());
         assert!(err.contains("unknown link `string-and-cans`"), "{err}");
+    }
+
+    #[test]
+    fn spec_decode_threads_to_every_pool() {
+        let s = ClusterSpec::parse(
+            r#"{"spec_decode": {"draft": "llama-3.2-1b", "k": 3,
+                                "alpha": 0.75}}"#)
+            .unwrap();
+        let sd = s.spec_decode.as_ref().unwrap();
+        assert_eq!(sd.draft, "llama-3.2-1b");
+        assert_eq!((sd.k, sd.alpha), (3, 0.75));
+        s.validate().unwrap();
+        // the projected pool serve spec carries the block, so every
+        // pool's event loop decodes speculatively
+        let ps = s.pool_serve_spec();
+        assert_eq!(ps.spec_decode, s.spec_decode);
+        assert!(ps.draft_arch().is_some());
+        // unknown drafts are caught before any pool runs
+        let bad = ClusterSpec::parse(
+            r#"{"spec_decode": {"draft": "gpt-17"}}"#)
+            .unwrap();
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("unknown draft model `gpt-17`"), "{err}");
+        // --draft-model / --spec-k / --accept-rate layer like serve's
+        let mut s = ClusterSpec::default();
+        ClusterOverrides {
+            draft_model: Some("qwen2.5-1.5b".to_string()),
+            accept_rate: Some(0.6),
+            ..ClusterOverrides::default()
+        }
+        .apply(&mut s);
+        let sd = s.spec_decode.as_ref().unwrap();
+        assert_eq!(sd.draft, "qwen2.5-1.5b");
+        assert_eq!((sd.k, sd.alpha), (fields::DEFAULT_SPEC_K, 0.6));
+        s.validate().unwrap();
+        // a bare --spec-k (no draft anywhere) is rejected, pointing at
+        // the missing flag
+        let mut s = ClusterSpec::default();
+        ClusterOverrides {
+            spec_k: Some(2),
+            ..ClusterOverrides::default()
+        }
+        .apply(&mut s);
+        let err = format!("{:#}", s.validate().unwrap_err());
+        assert!(err.contains("--draft-model"), "{err}");
     }
 
     #[test]

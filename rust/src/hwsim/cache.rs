@@ -27,7 +27,18 @@ use crate::models::{arch::ModelArch, QuantScheme};
 
 use super::latency::simulate_quant;
 use super::parallel::{simulate_at, simulate_parallel};
+use super::specdecode::simulate_spec_decode;
 use super::{OperatingPoint, ParallelSpec, Rig, SimResult, Workload};
+
+/// Fully-resolved speculative-decoding configuration threaded through
+/// the cache and [`crate::backend::SimBackend`]: the draft architecture
+/// plus `k` drafted tokens per verify step and the acceptance rate.
+#[derive(Debug, Clone)]
+pub struct SpecDecodeConf {
+    pub draft: ModelArch,
+    pub k: usize,
+    pub alpha: f64,
+}
 
 /// Capacity of the process-wide cache. Entries hold a per-step latency
 /// vector (`gen_len` f64s), so even pathological grids stay tens of MB.
@@ -49,6 +60,9 @@ struct CostKey {
     /// (clock_frac bits, power-cap bits) per phase; `None` = the legacy
     /// no-DVFS dispatch.
     ops: Option<((u64, Option<u64>), (u64, Option<u64>))>,
+    /// (draft name, draft arch fingerprint, k, alpha bits); `None` = no
+    /// speculative decoding.
+    spec: Option<(&'static str, u64, usize, u64)>,
     shape: (usize, usize, usize),
 }
 
@@ -92,7 +106,8 @@ fn op_bits(op: &OperatingPoint) -> (u64, Option<u64>) {
 impl CostKey {
     fn new(arch: &ModelArch, rig: &Rig, w: &Workload, scheme: &QuantScheme,
            parallel: Option<&ParallelSpec>,
-           ops: Option<(&OperatingPoint, &OperatingPoint)>) -> CostKey {
+           ops: Option<(&OperatingPoint, &OperatingPoint)>,
+           spec: Option<&SpecDecodeConf>) -> CostKey {
         CostKey {
             model: arch.name,
             rig: (rig.name(), rig_fingerprint(rig)),
@@ -101,6 +116,8 @@ impl CostKey {
                     scheme.overhead_bits_per_weight.to_bits()),
             parallel: parallel.map(|p| (p.tp, p.pp)),
             ops: ops.map(|(p, d)| (op_bits(p), op_bits(d))),
+            spec: spec.map(|s| (s.draft.name, arch_fingerprint(&s.draft),
+                                s.k, s.alpha.to_bits())),
             shape: (w.batch, w.prompt_len, w.gen_len),
         }
     }
@@ -142,15 +159,17 @@ impl CostCache {
     }
 
     /// Simulate `w` through the cache. The miss path runs exactly the
-    /// dispatch `SimBackend::sim` performs: `simulate_at` under DVFS
+    /// dispatch `SimBackend::sim` performs: `simulate_spec_decode` when
+    /// a draft model is configured, otherwise `simulate_at` under DVFS
     /// operating points, `simulate_parallel` under an explicit mapping,
-    /// `simulate_quant` otherwise — so hits are bit-identical to a
-    /// cold computation by construction.
+    /// `simulate_quant` — so hits are bit-identical to a cold
+    /// computation by construction.
     pub fn simulate(&self, arch: &ModelArch, rig: &Rig, w: &Workload,
                     scheme: &QuantScheme, parallel: Option<&ParallelSpec>,
-                    ops: Option<(&OperatingPoint, &OperatingPoint)>)
+                    ops: Option<(&OperatingPoint, &OperatingPoint)>,
+                    spec: Option<&SpecDecodeConf>)
                     -> Arc<SimResult> {
-        let key = CostKey::new(arch, rig, w, scheme, parallel, ops);
+        let key = CostKey::new(arch, rig, w, scheme, parallel, ops, spec);
         {
             let mut g = self.lock();
             if let Some(hit) = g.map.get(&key) {
@@ -161,13 +180,19 @@ impl CostCache {
         }
         // compute outside the lock: a racing duplicate computation is
         // wasted work, never a wrong answer (the simulator is pure)
-        let result = Arc::new(match ops {
-            Some((p_op, d_op)) => {
-                simulate_at(arch, rig, w, scheme, parallel, p_op, d_op)
-            }
-            None => match parallel {
-                Some(par) => simulate_parallel(arch, rig, w, scheme, par),
-                None => simulate_quant(arch, rig, w, scheme),
+        let result = Arc::new(match spec {
+            Some(s) => simulate_spec_decode(arch, &s.draft, rig, w, scheme,
+                                            parallel, ops, s.k, s.alpha),
+            None => match ops {
+                Some((p_op, d_op)) => {
+                    simulate_at(arch, rig, w, scheme, parallel, p_op, d_op)
+                }
+                None => match parallel {
+                    Some(par) => {
+                        simulate_parallel(arch, rig, w, scheme, par)
+                    }
+                    None => simulate_quant(arch, rig, w, scheme),
+                },
             },
         });
         let mut g = self.lock();
@@ -236,8 +261,8 @@ mod tests {
         let cache = CostCache::new(16);
         let w = Workload::new(2, 128, 32);
         let cold = simulate_quant(&arch, &rig, &w, &scheme);
-        let first = cache.simulate(&arch, &rig, &w, &scheme, None, None);
-        let second = cache.simulate(&arch, &rig, &w, &scheme, None, None);
+        let first = cache.simulate(&arch, &rig, &w, &scheme, None, None, None);
+        let second = cache.simulate(&arch, &rig, &w, &scheme, None, None, None);
         assert_eq!(*first, cold);
         assert_eq!(*second, cold);
         assert_eq!(cache.stats(), (1, 1));
@@ -251,13 +276,13 @@ mod tests {
         let w = Workload::new(1, 256, 16);
         let par = ParallelSpec::new(4, 1);
         let cache = CostCache::new(16);
-        let got = cache.simulate(&arch, &rig, &w, &scheme, Some(&par), None);
+        let got = cache.simulate(&arch, &rig, &w, &scheme, Some(&par), None, None);
         assert_eq!(*got, simulate_parallel(&arch, &rig, &w, &scheme, &par));
 
         let p_op = OperatingPoint::uncapped();
         let d_op = OperatingPoint { clock_frac: 0.6, power_cap_w: Some(220.0) };
         let got = cache.simulate(&arch, &rig, &w, &scheme, Some(&par),
-                                 Some((&p_op, &d_op)));
+                                 Some((&p_op, &d_op)), None);
         assert_eq!(*got, simulate_at(&arch, &rig, &w, &scheme, Some(&par),
                                      &p_op, &d_op));
         // distinct configurations occupy distinct entries
@@ -275,19 +300,45 @@ mod tests {
             .map(|w| simulate_quant(&arch, &rig, w, &scheme))
             .collect();
         for w in &shapes {
-            cache.simulate(&arch, &rig, w, &scheme, None, None);
+            cache.simulate(&arch, &rig, w, &scheme, None, None, None);
             assert!(cache.len() <= cache.capacity(),
                     "len {} > capacity {}", cache.len(), cache.capacity());
         }
         // the FIFO evicted the two oldest shapes; re-requesting every
         // shape (evicted or cached) still returns the cold-path bits
         for (w, want) in shapes.iter().zip(&cold) {
-            let got = cache.simulate(&arch, &rig, w, &scheme, None, None);
+            let got = cache.simulate(&arch, &rig, w, &scheme, None, None, None);
             assert_eq!(*got, *want);
         }
         let (_, misses) = cache.stats();
         assert!(misses > shapes.len() as u64,
                 "eviction must force recomputation (misses {misses})");
+    }
+
+    #[test]
+    fn spec_decode_gets_its_own_entry_and_matches_direct_call() {
+        let (arch, rig, scheme) = fixture();
+        let cache = CostCache::new(16);
+        let w = Workload::new(1, 128, 16);
+        let conf = SpecDecodeConf {
+            draft: models::lookup("llama-3.2-1b").unwrap(),
+            k: 4,
+            alpha: 0.7,
+        };
+        let plain = cache.simulate(&arch, &rig, &w, &scheme, None, None,
+                                   None);
+        let spec = cache.simulate(&arch, &rig, &w, &scheme, None, None,
+                                  Some(&conf));
+        assert_eq!(cache.len(), 2, "distinct keys");
+        assert!(plain.spec_decode.is_none());
+        assert_eq!(
+            *spec,
+            simulate_spec_decode(&arch, &conf.draft, &rig, &w, &scheme,
+                                 None, None, conf.k, conf.alpha));
+        // different alpha -> different entry
+        let conf2 = SpecDecodeConf { alpha: 0.9, ..conf.clone() };
+        cache.simulate(&arch, &rig, &w, &scheme, None, None, Some(&conf2));
+        assert_eq!(cache.len(), 3);
     }
 
     #[test]
@@ -297,8 +348,8 @@ mod tests {
         let w = Workload::new(1, 128, 16);
         let native = QuantScheme::native(arch.dtype);
         let q4 = crate::models::quant::w4a16();
-        let a = cache.simulate(&arch, &rig, &w, &native, None, None);
-        let b = cache.simulate(&arch, &rig, &w, &q4, None, None);
+        let a = cache.simulate(&arch, &rig, &w, &native, None, None, None);
+        let b = cache.simulate(&arch, &rig, &w, &q4, None, None, None);
         assert!(a.ttlt_seconds > b.ttlt_seconds,
                 "4-bit weights must beat native on a bandwidth-bound rig");
         assert_eq!(cache.len(), 2);

@@ -135,6 +135,37 @@ pub fn decode_cost_quant(eb: &EffectiveBytes, batch: usize, ctx: usize)
     c
 }
 
+/// One speculative-decoding verify step: the target model scores
+/// `n_new` tokens (the draft's k proposals plus the bonus token) in a
+/// single batched forward pass at context length `ctx` — a
+/// batched-prefill-shaped cost. FLOPs are dense over all `n_new`
+/// tokens; token `j` attends causally to `ctx + j` keys, so the average
+/// attention context is `ctx + (n_new−1)/2`. Bytes stream the weights
+/// once, read the whole KV prefix, write `n_new` fresh KV entries, and
+/// move the residual stream for every scored token. `n_new = 1`
+/// degenerates to one decode step plus its KV write.
+pub fn verify_cost_quant(eb: &EffectiveBytes, batch: usize, ctx: usize,
+                         n_new: usize) -> PhaseCost {
+    let arch = eb.arch();
+    let tokens = (batch * n_new) as f64;
+    let mut c = PhaseCost::default();
+    c.flops += 2.0 * matmul_params(arch) * tokens;
+    c.flops += attn_flops(arch, batch, n_new as f64,
+                          ctx as f64 + (n_new as f64 - 1.0) / 2.0);
+    c.flops += ssm_flops_per_token(arch) * tokens;
+
+    let dt = arch.dtype.bytes() as f64;
+    c.bytes += eb.weight_bytes() as f64;
+    // read the prefix KV per sequence, write n_new new entries
+    c.bytes += eb.kv_bytes_per_token() as f64
+        * batch as f64 * (ctx + n_new) as f64;
+    c.bytes += 2.0 * eb.state_bytes_per_seq() as f64 * batch as f64;
+    // residual stream read+write per layer per scored token
+    c.bytes += 2.0 * arch.n_layers() as f64 * tokens
+        * arch.d_model as f64 * dt;
+    c
+}
+
 /// Per-layer share of a phase's cost, used by the kernel-timeline
 /// synthesizer. Returns (layer_kind, flops, bytes) triples.
 pub fn layer_costs(arch: &ModelArch, phase: PhaseCost)
@@ -254,6 +285,24 @@ mod tests {
         // ~0.97B layer params)
         let min_flops = 2.0 * (0.97e9 + 0.26e9);
         assert!(c.flops > min_flops, "{:.3e}", c.flops);
+    }
+
+    #[test]
+    fn verify_step_sits_between_decode_and_prefill() {
+        let arch = llama31_8b();
+        let eb = EffectiveBytes::native(&arch);
+        let d = decode_cost(&arch, 1, 512);
+        let v = verify_cost_quant(&eb, 1, 512, 5);
+        // scoring 5 tokens costs ~5x the decode FLOPs but the byte
+        // stream is still dominated by the one weight pass
+        assert!(v.flops > 4.5 * d.flops, "{:.3e}", v.flops);
+        assert!(v.bytes < 1.2 * d.bytes, "{:.3e}", v.bytes);
+        // denser than a single decode step -> higher intensity
+        assert!(v.intensity() > d.intensity());
+        // n_new = 1 ≈ decode + the KV write for the new token
+        let v1 = verify_cost_quant(&eb, 1, 512, 1);
+        assert!((v1.flops - d.flops).abs() / d.flops < 1e-9);
+        assert!(v1.bytes >= d.bytes);
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub struct PhaseSim {
 }
 
 /// Full simulation of one workload.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
     pub ttft: PhaseSim,
     /// Mean decode step (the paper's TPOT).
@@ -68,6 +68,10 @@ pub struct SimResult {
     /// Energy spent moving bytes across the device-to-device link over
     /// the whole request, joules (0 on the unsharded path).
     pub interconnect_joules: f64,
+    /// Draft/verify decomposition when the workload ran under
+    /// speculative decoding ([`super::specdecode`]); `None` on every
+    /// legacy path.
+    pub spec_decode: Option<super::specdecode::SpecDecodeSplit>,
 }
 
 impl SimResult {
@@ -119,9 +123,9 @@ fn phase_power(rig: &Rig, cost: PhaseCost, seconds: f64) -> f64 {
     d.power.idle_w * n + dynamic
 }
 
-fn phase_sim(rig: &Rig, cost: PhaseCost, collective_bytes: f64,
-             n_collectives: usize, overhead_s: f64, is_decode: bool)
-             -> PhaseSim {
+pub(crate) fn phase_sim(rig: &Rig, cost: PhaseCost, collective_bytes: f64,
+                        n_collectives: usize, overhead_s: f64,
+                        is_decode: bool) -> PhaseSim {
     let (seconds, compute_bound) =
         phase_time(rig, cost, collective_bytes, n_collectives, overhead_s,
                    is_decode);
@@ -264,6 +268,7 @@ pub(crate) fn simulate_quant_phased(arch: &ModelArch, prefill_rig: &Rig,
         ttlt_joules: ttft.joules + decode_joules_total,
         interconnect_seconds: 0.0,
         interconnect_joules: 0.0,
+        spec_decode: None,
     }
 }
 

@@ -20,9 +20,18 @@
 //! * [`parallel`] — explicit TP×PP sharding: per-rank roofline, ring
 //!   all-reduces over the rig's interconnect, pipelined prefill with
 //!   bubble overhead.
+//! * [`specdecode`] — speculative decoding: draft-model steps plus
+//!   batched target-model verify passes, amortized by the expected
+//!   geometric acceptance.
 //! * [`cache`] — bounded per-shape memo table over the simulator;
 //!   `SimBackend` routes every evaluation through it so serve/tune/
 //!   plan/sweep pay for each distinct (config, shape) once.
+//!
+//! Determinism contract: every function here is a pure function of its
+//! arguments — no clocks, no RNG, no global state beyond the
+//! value-transparent memo [`cache`] — so identical (model, rig,
+//! workload, axis) inputs reproduce bit-identical results on any
+//! machine and at any parallelism.
 //!
 //! Consumers reach the simulator through `backend::SimBackend` (the
 //! `ExecutionBackend` implementation wrapping [`simulate`]); only the
@@ -34,11 +43,14 @@ pub mod device;
 pub mod kernels;
 pub mod latency;
 pub mod parallel;
+pub mod specdecode;
 
 pub use cost::{decode_cost, decode_cost_quant, prefill_cost,
-               prefill_cost_quant, PhaseCost};
+               prefill_cost_quant, verify_cost_quant, PhaseCost};
 pub use device::{DeviceSpec, FreqModel, Interconnect, OperatingPoint, Rig};
 pub use kernels::synthesize_kernels;
 pub use latency::{decode_memory_bound_frac, simulate, simulate_quant,
                   PhaseSim, SimResult, Workload};
 pub use parallel::{simulate_at, simulate_parallel, ParallelSpec};
+pub use specdecode::{expected_accepted, simulate_spec_decode,
+                     SpecDecodeSplit};

@@ -114,13 +114,13 @@ pub fn expand_parallelisms(tps: &[usize], pps: &[usize])
 }
 
 /// One phase's sharded timing decomposition.
-struct ShardedPhase {
-    seconds: f64,
-    compute_bound: bool,
+pub(crate) struct ShardedPhase {
+    pub(crate) seconds: f64,
+    pub(crate) compute_bound: bool,
     /// Exposed link time inside `seconds`.
-    link_s: f64,
+    pub(crate) link_s: f64,
     /// Bytes that crossed the device-to-device link.
-    link_bytes: f64,
+    pub(crate) link_bytes: f64,
 }
 
 /// Time one phase under a TP×PP mapping.
@@ -130,11 +130,12 @@ struct ShardedPhase {
 /// across PP stages); `coll_bytes` the per-layer all-reduce payload;
 /// `microbatches` the PP pipelining granularity (1 = no overlap).
 #[allow(clippy::too_many_arguments)]
-fn sharded_phase(rig: &Rig, par: &ParallelSpec, flops: f64, bytes: f64,
-                 act_bytes: f64, coll_bytes: f64, n_collectives: usize,
-                 boundary_bytes_per_hop: f64, microbatches: usize,
-                 flops_rate: f64, overhead_s: f64, pipelined: bool)
-                 -> ShardedPhase {
+pub(crate) fn sharded_phase(rig: &Rig, par: &ParallelSpec, flops: f64,
+                            bytes: f64, act_bytes: f64, coll_bytes: f64,
+                            n_collectives: usize,
+                            boundary_bytes_per_hop: f64, microbatches: usize,
+                            flops_rate: f64, overhead_s: f64,
+                            pipelined: bool) -> ShardedPhase {
     let tp = par.tp as f64;
     let pp = par.pp as f64;
     let ranks = par.n_ranks() as f64;
@@ -316,6 +317,7 @@ pub(crate) fn simulate_parallel_phased(arch: &ModelArch, prefill_rig: &Rig,
         ttlt_joules: ttft.joules + decode_joules_total,
         interconnect_seconds,
         interconnect_joules,
+        spec_decode: None,
     }
 }
 

@@ -1,0 +1,365 @@
+//! Speculative decoding on the roofline simulator: a small draft model
+//! proposes `k` tokens autoregressively, then the target model scores
+//! all `k+1` candidates in one batched-prefill-shaped verify pass
+//! ([`super::cost::verify_cost_quant`]).
+//!
+//! With per-token acceptance probability `alpha`, the expected tokens
+//! emitted per draft/verify round is the standard geometric sum
+//!
+//! ```text
+//! E[accepted] = (1 − alpha^(k+1)) / (1 − alpha)    (= k+1 at alpha = 1)
+//! ```
+//!
+//! so every emitted token costs `(k · draft_step + verify_step) / E` —
+//! the amortization applied to both latency and energy, step by step as
+//! the KV context grows. TTFT pays both prefills (the draft builds its
+//! own KV over the prompt). The decomposition lands in
+//! [`SimResult::spec_decode`] as a [`SpecDecodeSplit`]; `k = 0` never
+//! reaches this module (callers treat it as "off"), and absent
+//! `spec_decode` blocks leave every legacy artifact byte-identical.
+
+use crate::models::arch::ModelArch;
+use crate::models::quant::{EffectiveBytes, QuantScheme};
+
+use super::cost::verify_cost_quant;
+use super::device::{OperatingPoint, Rig};
+use super::latency::{collective_bytes, phase_from_energy, phase_sim,
+                     simulate_quant, PhaseSim, SimResult, Workload};
+use super::parallel::{sharded_phase, simulate_at, simulate_parallel,
+                      ParallelSpec};
+
+/// Draft/verify decomposition of a speculative-decoding run, carried on
+/// [`SimResult`] and surfaced by serve/cluster reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecDecodeSplit {
+    /// Registry key of the draft model.
+    pub draft: &'static str,
+    /// Tokens drafted per verify step.
+    pub k: usize,
+    /// Per-token acceptance probability.
+    pub alpha: f64,
+    /// Expected tokens emitted per draft/verify round,
+    /// [`expected_accepted`]`(k, alpha)` ∈ (1, k+1].
+    pub accepted_per_round: f64,
+    /// Amortized draft-model time over the generation, seconds.
+    pub draft_seconds: f64,
+    /// Amortized target-model verify time over the generation, seconds.
+    pub verify_seconds: f64,
+    /// Amortized draft-model energy over the generation, joules.
+    pub draft_joules: f64,
+    /// Amortized target-model verify energy, joules.
+    pub verify_joules: f64,
+}
+
+/// Expected tokens emitted per draft/verify round under geometric
+/// acceptance: `(1 − alpha^(k+1)) / (1 − alpha)`, continuously extended
+/// to `k + 1` at `alpha = 1`. Every round emits at least one token (the
+/// target's bonus token), so the value is always ≥ 1.
+pub fn expected_accepted(k: usize, alpha: f64) -> f64 {
+    let kp1 = (k + 1) as i32;
+    if alpha >= 1.0 {
+        return kp1 as f64;
+    }
+    if alpha <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - alpha.powi(kp1)) / (1.0 - alpha)
+}
+
+/// Dispatch one model through the same simulate paths the cost cache
+/// uses: operating points > explicit parallelism > plain quantized.
+fn simulate_inner(arch: &ModelArch, rig: &Rig, w: &Workload,
+                  scheme: &QuantScheme, par: Option<&ParallelSpec>,
+                  ops: Option<(&OperatingPoint, &OperatingPoint)>)
+                  -> SimResult {
+    match ops {
+        Some((p, d)) => simulate_at(arch, rig, w, scheme, par, p, d),
+        None => match par {
+            Some(p) => simulate_parallel(arch, rig, w, scheme, p),
+            None => simulate_quant(arch, rig, w, scheme),
+        },
+    }
+}
+
+/// Invert the rig's sensor power curve for a given average power —
+/// the same mapping `phase_sim` applies.
+fn utilization_for(rig: &Rig, watts: f64) -> f64 {
+    let n = rig.n_devices as f64;
+    let idle = rig.device.power.idle_w * n;
+    let sustain = rig.device.power.sustain_w * n;
+    let ratio = ((watts - idle) / (sustain - idle)).clamp(0.0, 1.0);
+    ratio.powf(1.0 / rig.device.power.alpha)
+}
+
+/// One target-model verify step over `k+1` candidate tokens at context
+/// `ctx`, priced on the (possibly DVFS-derived, possibly sharded)
+/// decode rig. Returns the phase plus its exposed link seconds.
+fn verify_step(arch: &ModelArch, eb: &EffectiveBytes, rig: &Rig,
+               par: Option<&ParallelSpec>, batch: usize, ctx: usize,
+               n_new: usize) -> (PhaseSim, f64) {
+    let vc = verify_cost_quant(eb, batch, ctx, n_new);
+    let n_coll = 2 * arch.n_layers();
+    match par {
+        Some(p) if !(p.is_single() && rig.n_devices == 1) => {
+            let d = &rig.device;
+            let dt = arch.dtype.bytes() as f64;
+            let tokens = (batch * n_new) as f64;
+            let act_bytes = 2.0 * arch.n_layers() as f64 * tokens
+                * arch.d_model as f64 * dt;
+            // verify is prefill-shaped (dense over n_new tokens) but
+            // runs inside the decode loop: stages in series, prefill
+            // FLOPs rate, decode launch overhead.
+            let sp = sharded_phase(
+                rig, p, vc.flops, vc.bytes, act_bytes,
+                collective_bytes(arch, batch, n_new), n_coll,
+                tokens * arch.d_model as f64 * dt, 1,
+                d.achieved_flops(), d.decode_overhead_s, false);
+            let dyn_j = (vc.flops * d.pj_per_flop
+                         + vc.bytes * d.pj_per_byte
+                         + sp.link_bytes * rig.link.pj_per_byte)
+                * 1e-12;
+            (phase_from_energy(rig, sp.seconds, dyn_j, sp.compute_bound),
+             sp.link_s)
+        }
+        _ => (phase_sim(rig, vc, collective_bytes(arch, batch, n_new),
+                        n_coll, rig.device.decode_overhead_s, false),
+              0.0),
+    }
+}
+
+/// Simulate one workload under speculative decoding: the target model's
+/// prefill plus, per emitted token, `k / E` draft steps and `1 / E`
+/// verify passes at the growing context. Latency and energy both
+/// amortize by the expected acceptance `E`; the draft model pays its
+/// own prompt prefill in TTFT and its per-step costs come from a full
+/// simulation of the draft architecture on the same rig, scheme,
+/// mapping, and operating points.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_spec_decode(arch: &ModelArch, draft: &ModelArch, rig: &Rig,
+                            w: &Workload, scheme: &QuantScheme,
+                            par: Option<&ParallelSpec>,
+                            ops: Option<(&OperatingPoint, &OperatingPoint)>,
+                            k: usize, alpha: f64) -> SimResult {
+    debug_assert!(k >= 1, "k = 0 is the legacy path");
+    let e = expected_accepted(k, alpha);
+
+    // target prefill only (gen_len = 0 skips the decode loop)
+    let prefill_w = Workload::new(w.batch, w.prompt_len, 0);
+    let tgt = simulate_inner(arch, rig, &prefill_w, scheme, par, ops);
+    // full draft run: its TTFT is the draft prefill, its step_seconds
+    // are the per-step draft latencies at each context length
+    let drf = simulate_inner(draft, rig, w, scheme, par, ops);
+    let draft_step_w = drf.tpot.watts;
+
+    // ---- TTFT: both models prefill the prompt -----------------------
+    let ttft_s = tgt.ttft.seconds + drf.ttft.seconds;
+    let ttft_j = tgt.ttft.joules + drf.ttft.joules;
+    let ttft = PhaseSim {
+        seconds: ttft_s,
+        watts: ttft_j / ttft_s,
+        joules: ttft_j,
+        utilization: (tgt.ttft.utilization * tgt.ttft.seconds
+                      + drf.ttft.utilization * drf.ttft.seconds)
+            / ttft_s,
+        compute_bound: tgt.ttft.compute_bound,
+    };
+
+    // ---- decode: k draft steps + one verify pass per round ----------
+    let eb = EffectiveBytes::new(arch, *scheme);
+    let decode_rig_owned;
+    let decode_rig = match ops {
+        Some((_, d)) => {
+            decode_rig_owned = rig.at(d);
+            &decode_rig_owned
+        }
+        None => rig,
+    };
+    let kf = k as f64;
+    let mut step_seconds = Vec::with_capacity(w.gen_len);
+    let mut decode_joules_total = 0.0;
+    let mut draft_seconds = 0.0;
+    let mut verify_seconds = 0.0;
+    let mut draft_joules = 0.0;
+    let mut verify_joules = 0.0;
+    let mut verify_link_s = 0.0;
+    let mut mid: Option<(f64, f64)> = None;
+    let mut mid_verify: Option<PhaseSim> = None;
+    for t in 0..w.gen_len {
+        let ctx = w.prompt_len + t;
+        let d_s = drf.step_seconds.get(t).copied().unwrap_or(0.0);
+        let (v, link_s) =
+            verify_step(arch, &eb, decode_rig, par, w.batch, ctx, k + 1);
+        let step_s = (kf * d_s + v.seconds) / e;
+        let step_j = (kf * draft_step_w * d_s + v.joules) / e;
+        step_seconds.push(step_s);
+        decode_joules_total += step_j;
+        draft_seconds += kf * d_s / e;
+        verify_seconds += v.seconds / e;
+        draft_joules += kf * draft_step_w * d_s / e;
+        verify_joules += v.joules / e;
+        verify_link_s += link_s / e;
+        if t == w.gen_len / 2 {
+            mid = Some((step_s, step_j));
+            mid_verify = Some(v);
+        }
+    }
+    let tpot_mean = step_seconds.iter().sum::<f64>()
+        / step_seconds.len().max(1) as f64;
+    let (mid_s, mid_j) = mid.unwrap_or((ttft.seconds, ttft.joules));
+    let mid_watts = if mid_s > 0.0 { mid_j / mid_s } else { ttft.watts };
+    let tpot = PhaseSim {
+        seconds: tpot_mean,
+        watts: mid_watts,
+        joules: mid_watts * tpot_mean,
+        utilization: utilization_for(decode_rig, mid_watts),
+        compute_bound: mid_verify.map_or(ttft.compute_bound,
+                                         |v| v.compute_bound),
+    };
+
+    let ttlt_seconds = ttft.seconds + step_seconds.iter().sum::<f64>();
+    SimResult {
+        ttft,
+        tpot,
+        step_seconds,
+        ttlt_seconds,
+        ttlt_joules: ttft.joules + decode_joules_total,
+        interconnect_seconds: tgt.interconnect_seconds
+            + drf.interconnect_seconds + verify_link_s,
+        interconnect_joules: tgt.interconnect_joules
+            + drf.interconnect_joules,
+        spec_decode: Some(SpecDecodeSplit {
+            draft: draft.name,
+            k,
+            alpha,
+            accepted_per_round: e,
+            draft_seconds,
+            verify_seconds,
+            draft_joules,
+            verify_joules,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::device::{a6000, a6000_x4, Rig};
+    use crate::models::registry::{llama31_8b, llama32_1b};
+
+    fn native(arch: &ModelArch) -> QuantScheme {
+        QuantScheme::native(arch.dtype)
+    }
+
+    #[test]
+    fn expected_accepted_formula() {
+        assert_eq!(expected_accepted(4, 0.0), 1.0);
+        assert_eq!(expected_accepted(4, 1.0), 5.0);
+        // geometric sum at alpha = 0.5, k = 2: 1 + 0.5 + 0.25
+        assert!((expected_accepted(2, 0.5) - 1.75).abs() < 1e-12);
+        // monotone in alpha and k
+        assert!(expected_accepted(4, 0.8) > expected_accepted(4, 0.5));
+        assert!(expected_accepted(8, 0.8) > expected_accepted(4, 0.8));
+    }
+
+    #[test]
+    fn high_acceptance_beats_plain_decode() {
+        let arch = llama31_8b();
+        let draft = llama32_1b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 512, 128);
+        let s = native(&arch);
+        let base = simulate_quant(&arch, &rig, &w, &s);
+        let spec = simulate_spec_decode(&arch, &draft, &rig, &w, &s, None,
+                                        None, 4, 0.9);
+        // alpha = 0.9, k = 4: E ≈ 4.1 emitted tokens per target pass —
+        // the 1B draft steps are cheap, so TPOT drops
+        assert!(spec.tpot.seconds < base.tpot.seconds,
+                "{} vs {}", spec.tpot.seconds, base.tpot.seconds);
+        let split = spec.spec_decode.as_ref().unwrap();
+        assert!(split.accepted_per_round > 4.0);
+        assert_eq!(split.draft, "llama-3.2-1b");
+        // the split partitions the decode time
+        let decode_s: f64 = spec.step_seconds.iter().sum();
+        assert!((split.draft_seconds + split.verify_seconds - decode_s)
+                    .abs() < 1e-9 * decode_s);
+    }
+
+    #[test]
+    fn tpot_monotone_in_alpha() {
+        let arch = llama31_8b();
+        let draft = llama32_1b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 256, 64);
+        let s = native(&arch);
+        let mut last = f64::INFINITY;
+        for alpha in [0.0, 0.3, 0.6, 0.9, 1.0] {
+            let r = simulate_spec_decode(&arch, &draft, &rig, &w, &s, None,
+                                         None, 4, alpha);
+            assert!(r.tpot.seconds < last, "alpha={alpha}");
+            last = r.tpot.seconds;
+        }
+    }
+
+    #[test]
+    fn ttft_pays_both_prefills() {
+        let arch = llama31_8b();
+        let draft = llama32_1b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 512, 32);
+        let s = native(&arch);
+        let base = simulate_quant(&arch, &rig, &w, &s);
+        let drf = simulate_quant(&draft, &rig, &w, &s);
+        let spec = simulate_spec_decode(&arch, &draft, &rig, &w, &s, None,
+                                        None, 4, 0.7);
+        assert!((spec.ttft.seconds
+                 - (base.ttft.seconds + drf.ttft.seconds))
+                    .abs() < 1e-12);
+        assert!(spec.ttft.joules > base.ttft.joules);
+    }
+
+    #[test]
+    fn composes_with_tensor_parallelism() {
+        let arch = llama31_8b();
+        let draft = llama32_1b();
+        let rig = a6000_x4();
+        let w = Workload::new(1, 256, 32);
+        let s = native(&arch);
+        let par = ParallelSpec::new(4, 1);
+        let r = simulate_spec_decode(&arch, &draft, &rig, &w, &s,
+                                     Some(&par), None, 4, 0.7);
+        assert!(r.interconnect_seconds > 0.0, "TP pays collectives");
+        assert!(r.spec_decode.is_some());
+        assert!(r.ttlt_seconds > 0.0 && r.ttlt_joules > 0.0);
+    }
+
+    #[test]
+    fn composes_with_operating_points() {
+        let arch = llama31_8b();
+        let draft = llama32_1b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(1, 256, 32);
+        let s = native(&arch);
+        let id = OperatingPoint::uncapped();
+        let slow = OperatingPoint::clock(0.6);
+        let base = simulate_spec_decode(&arch, &draft, &rig, &w, &s, None,
+                                        Some((&id, &id)), 4, 0.7);
+        let tuned = simulate_spec_decode(&arch, &draft, &rig, &w, &s, None,
+                                         Some((&id, &slow)), 4, 0.7);
+        // memory-bound draft steps don't slow down; energy drops
+        assert!(tuned.tpot.joules < base.tpot.joules);
+        assert_eq!(tuned.ttft.seconds, base.ttft.seconds);
+    }
+
+    #[test]
+    fn step_vector_shape_matches_legacy() {
+        let arch = llama31_8b();
+        let draft = llama32_1b();
+        let rig = Rig::single(a6000());
+        let w = Workload::new(2, 128, 48);
+        let r = simulate_spec_decode(&arch, &draft, &rig, &w,
+                                     &native(&arch), None, None, 2, 0.5);
+        assert_eq!(r.step_seconds.len(), 48);
+        let sum: f64 = r.step_seconds.iter().sum();
+        assert!((r.ttlt_seconds - r.ttft.seconds - sum).abs() < 1e-12);
+    }
+}

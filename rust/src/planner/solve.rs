@@ -113,6 +113,31 @@ impl FitModel {
         }
     }
 
+    /// Fold a speculative-decoding draft model into the fit: the draft
+    /// is co-resident on the same ranks, so its weights, per-token KV
+    /// (at the same quantized cache width) and per-sequence state add
+    /// to the target's — sharded identically when a mapping is active.
+    /// Activation bytes stay the target's (the two models never hold
+    /// their residual streams live at the same time, and the target's
+    /// is the larger).
+    pub fn with_draft(mut self, draft: &ModelArch,
+                      scheme: Option<QuantScheme>,
+                      par: Option<ParallelSpec>) -> FitModel {
+        let eb = EffectiveBytes::resolve(draft, scheme);
+        let ranks = self.ranks as u64;
+        let shard = |bytes: u64| -> u64 {
+            if par.is_some() {
+                bytes.div_euclid(ranks) + u64::from(bytes % ranks != 0)
+            } else {
+                bytes
+            }
+        };
+        self.weight_bytes += shard(eb.weight_bytes());
+        self.kv_bytes_per_token += shard(eb.kv_bytes_per_token());
+        self.state_bytes_per_seq += shard(eb.state_bytes_per_seq());
+        self
+    }
+
     /// Bytes one (batch, seq_len) operating point needs resident.
     pub fn required_bytes(&self, batch: usize, seq_len: usize) -> u64 {
         let b = batch as u64;
@@ -298,6 +323,34 @@ mod tests {
             assert!(req <= last, "tp={tp}: {req} > {last}");
             last = req;
         }
+    }
+
+    #[test]
+    fn draft_model_shrinks_the_feasible_region() {
+        let arch = llama31_8b();
+        let rig = Rig::single(a6000());
+        let base = FitModel::new(&arch, Some(bf16()), &rig);
+        let dual = FitModel::new(&arch, Some(bf16()), &rig)
+            .with_draft(&crate::models::registry::llama32_1b(),
+                        Some(bf16()), None);
+        // draft weights + KV are real bytes: strictly less headroom
+        assert!(dual.weight_bytes > base.weight_bytes);
+        assert!(dual.kv_bytes_per_token > base.kv_bytes_per_token);
+        assert!(dual.max_batch(1024) < base.max_batch(1024));
+        assert!(dual.max_ctx(8) < base.max_ctx(8));
+        // but an 8B + 1B pair still fits a 48 GB card comfortably
+        assert!(dual.fits(1, 1024));
+        // sharded: the draft shards across the same ranks
+        let rig4 = device::a6000_x4();
+        let par = Some(crate::hwsim::ParallelSpec::new(4, 1));
+        let tp4 = FitModel::with_parallel(&arch, Some(bf16()), &rig4, par)
+            .with_draft(&crate::models::registry::llama32_1b(),
+                        Some(bf16()), par);
+        let tp4_base =
+            FitModel::with_parallel(&arch, Some(bf16()), &rig4, par);
+        let extra = tp4.weight_bytes - tp4_base.weight_bytes;
+        let whole = dual.weight_bytes - base.weight_bytes;
+        assert!(extra < whole, "per-rank draft shard {extra} vs {whole}");
     }
 
     #[test]

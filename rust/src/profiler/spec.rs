@@ -57,6 +57,11 @@ pub struct ProfileSpec {
     /// prefill, bit-identical to the pre-chunking profiler. Simulated
     /// rigs only.
     pub prefill_chunk: Option<usize>,
+    /// Speculative decoding: a draft model proposes `k` tokens per
+    /// round and the target verifies them in one batched step. `None`
+    /// (or `k == 0`) = plain autoregressive decode, bit-identical to
+    /// the pre-speculation profiler. Simulated rigs only.
+    pub spec_decode: Option<crate::util::spec::SpecDecodeSpec>,
 }
 
 impl ProfileSpec {
@@ -76,6 +81,7 @@ impl ProfileSpec {
             op: None,
             kv_reuse: None,
             prefill_chunk: None,
+            spec_decode: None,
         }
     }
 
@@ -108,10 +114,10 @@ impl ProfileSpec {
     /// }
     /// ```
     pub fn parse(text: &str) -> Result<ProfileSpec> {
-        const KNOWN_KEYS: [&str; 15] =
+        const KNOWN_KEYS: [&str; 16] =
             ["model", "device", "batch", "len", "latency_runs",
              "ttlt_runs", "warmup", "energy", "unit", "seed", "quant",
-             "tp", "pp", "kv_reuse", "prefill_chunk"];
+             "tp", "pp", "kv_reuse", "prefill_chunk", "spec_decode"];
         let root = Json::parse(text).context("parsing profile spec JSON")?;
         fields::require_known_keys(
             fields::root_obj(&root, "profile spec")?, &KNOWN_KEYS,
@@ -162,6 +168,7 @@ impl ProfileSpec {
             anyhow::ensure!(v >= 1, "prefill chunks must be >= 1 token");
             spec.prefill_chunk = Some(v);
         }
+        spec.spec_decode = fields::spec_decode_block(&root)?;
         Ok(spec)
     }
 
@@ -216,6 +223,18 @@ mod tests {
         assert_eq!(s.seed, 11);
         assert_eq!(s.kv_reuse, Some(0.5));
         assert_eq!(s.prefill_chunk, Some(64));
+        assert_eq!(s.spec_decode, None);
+        // a spec_decode block parses via the shared reader
+        let s = ProfileSpec::parse(
+            r#"{"spec_decode":
+                {"draft": "llama-3.2-1b", "k": 3, "alpha": 0.8}}"#)
+            .unwrap();
+        let sd = s.spec_decode.unwrap();
+        assert_eq!(sd.draft, "llama-3.2-1b");
+        assert_eq!((sd.k, sd.alpha), (3, 0.8));
+        assert!(ProfileSpec::parse(
+            r#"{"spec_decode": {"draft": "d", "alpha": 2.0}}"#)
+            .is_err());
         // missing keys keep the paper defaults
         let s = ProfileSpec::parse("{}").unwrap();
         assert_eq!(s.model, "llama-3.1-8b");

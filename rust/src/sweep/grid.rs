@@ -38,6 +38,9 @@ pub struct SweepCell {
     /// Chunked-prefill chunk size of the cell, tokens; `None` =
     /// monolithic prefill (the legacy cell).
     pub prefill_chunk: Option<usize>,
+    /// Speculative-decoding point of the cell; `None` = plain
+    /// autoregressive decode (the legacy cell).
+    pub spec_decode: Option<crate::util::spec::SpecDecodeSpec>,
     /// Deterministic per-cell seed: `Rng::mix(spec.seed, index)`.
     pub seed: u64,
 }
@@ -57,6 +60,7 @@ impl SweepCell {
         s.op = self.power_cap.map(OperatingPoint::cap);
         s.kv_reuse = self.kv_reuse;
         s.prefill_chunk = self.prefill_chunk;
+        s.spec_decode = self.spec_decode.clone();
         s
     }
 
@@ -101,6 +105,16 @@ impl SweepCell {
         }
     }
 
+    /// Report label of the cell's speculative-decoding axis
+    /// (`llama-3.2-1b k=4 α=0.7`, or `—` for plain-decode cells).
+    pub fn spec_decode_label(&self) -> String {
+        match &self.spec_decode {
+            Some(sd) => format!("{} k={} α={}", sd.draft, sd.k,
+                                sd.alpha),
+            None => "—".to_string(),
+        }
+    }
+
     /// This cell's deterministic workload generator — what an
     /// engine-backed cell draws its random prompts from (§2.3). The
     /// hwsim path is analytic and never calls it, but the stream is
@@ -112,10 +126,10 @@ impl SweepCell {
 }
 
 /// Expand a spec into its full cell list. The quant axis sits inside
-/// the workload axes, the parallelism axis inside that, and the
-/// power-cap axis is innermost of all — so grids without the newer
-/// axes keep the exact cell indices (and thus per-cell seeds) of the
-/// earlier expansions.
+/// the workload axes, then parallelism, power caps, KV reuse, prefill
+/// chunks, and the speculative-decoding axis innermost of all — so
+/// grids without the newer axes keep the exact cell indices (and thus
+/// per-cell seeds) of the earlier expansions.
 pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
     let schemes: Vec<Option<QuantScheme>> = spec
         .quants
@@ -129,6 +143,7 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
     let caps = spec.power_cap_axis();
     let reuses = spec.kv_reuse_axis();
     let chunks = spec.prefill_chunk_axis();
+    let specs = spec.spec_decode_axis();
     let mut cells = Vec::with_capacity(spec.n_cells());
     for m in &spec.models {
         for d in &spec.devices {
@@ -139,22 +154,25 @@ pub fn expand(spec: &SweepSpec) -> Vec<SweepCell> {
                             for &cap in &caps {
                                 for &h in &reuses {
                                     for &chunk in &chunks {
-                                        let index = cells.len();
-                                        cells.push(SweepCell {
-                                            index,
-                                            model: m.clone(),
-                                            device: d.clone(),
-                                            workload:
-                                                Workload::new(b, p, g),
-                                            quant: q,
-                                            parallel: par,
-                                            power_cap: cap,
-                                            kv_reuse: h,
-                                            prefill_chunk: chunk,
-                                            seed: Rng::mix(
-                                                spec.seed,
-                                                index as u64),
-                                        });
+                                        for sd in &specs {
+                                            let index = cells.len();
+                                            cells.push(SweepCell {
+                                                index,
+                                                model: m.clone(),
+                                                device: d.clone(),
+                                                workload:
+                                                    Workload::new(b, p, g),
+                                                quant: q,
+                                                parallel: par,
+                                                power_cap: cap,
+                                                kv_reuse: h,
+                                                prefill_chunk: chunk,
+                                                spec_decode: sd.clone(),
+                                                seed: Rng::mix(
+                                                    spec.seed,
+                                                    index as u64),
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -315,6 +333,37 @@ mod tests {
         assert_eq!(legacy[0].reuse_label(), "—");
         assert_eq!(legacy[0].chunk_label(), "—");
         assert_eq!(legacy.len(), 8);
+    }
+
+    #[test]
+    fn spec_decode_axis_expands_innermost_of_all() {
+        let mut spec = small_spec();
+        spec.draft_models = vec!["llama-3.2-1b".into()];
+        spec.accept_rates = vec![0.5, 0.9];
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 16); // 2 models x 2 devices x 2 batches x 2 α
+        // innermost: adjacent cells alternate acceptance rates
+        let sd0 = cells[0].spec_decode.as_ref().unwrap();
+        let sd1 = cells[1].spec_decode.as_ref().unwrap();
+        assert_eq!((sd0.draft.as_str(), sd0.alpha),
+                   ("llama-3.2-1b", 0.5));
+        assert_eq!(sd1.alpha, 0.9);
+        assert_eq!(cells[0].model, cells[1].model);
+        assert_eq!(cells[0].workload, cells[1].workload);
+        assert_eq!(cells[1].spec_decode_label(),
+                   "llama-3.2-1b k=4 α=0.9");
+        // the point flows into the cell's ProfileSpec
+        let ps = cells[1].profile_spec(true, MemUnit::Si);
+        let sd = ps.spec_decode.unwrap();
+        assert_eq!((sd.draft.as_str(), sd.k, sd.alpha),
+                   ("llama-3.2-1b", 4, 0.9));
+        // legacy grids carry no speculation and keep their indices
+        let legacy = expand(&small_spec());
+        assert_eq!(legacy.len(), 8);
+        assert_eq!(legacy[0].spec_decode, None);
+        assert_eq!(legacy[0].spec_decode_label(), "—");
+        assert_eq!(legacy[0].profile_spec(true, MemUnit::Si).spec_decode,
+                   None);
     }
 
     #[test]

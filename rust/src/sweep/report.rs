@@ -33,6 +33,8 @@ pub fn render_markdown(r: &SweepResults) -> String {
     let has_reuse = r.cells.iter().any(|c| c.cell.kv_reuse.is_some());
     let has_chunk =
         r.cells.iter().any(|c| c.cell.prefill_chunk.is_some());
+    let has_spec =
+        r.cells.iter().any(|c| c.cell.spec_decode.is_some());
     let mut out = String::new();
     let _ = writeln!(out, "# elana sweep — {}", s.name);
     let _ = writeln!(out);
@@ -55,6 +57,10 @@ pub fn render_markdown(r: &SweepResults) -> String {
     if has_chunk {
         axes.push_str(&format!(" x {} prefill chunks",
                                s.prefill_chunks.len()));
+    }
+    if has_spec {
+        axes.push_str(&format!(" x {} spec-decode points",
+                               s.spec_decode_axis().len()));
     }
     let _ = writeln!(out, "{axes} (seed {})", s.seed);
 
@@ -81,6 +87,10 @@ pub fn render_markdown(r: &SweepResults) -> String {
         }
         if has_chunk {
             hdr.push_str(" Chunk |");
+            sep.push_str("---|");
+        }
+        if has_spec {
+            hdr.push_str(" Spec |");
             sep.push_str("---|");
         }
         hdr.push_str(" Workload | TTFT ms | J/Prompt | TPOT ms | p50 \
@@ -121,6 +131,10 @@ pub fn render_markdown(r: &SweepResults) -> String {
             if has_chunk {
                 axis_cells.push_str(
                     &format!(" {} |", c.cell.chunk_label()));
+            }
+            if has_spec {
+                axis_cells.push_str(
+                    &format!(" {} |", c.cell.spec_decode_label()));
             }
             let _ = writeln!(
                 out,
@@ -189,6 +203,11 @@ pub fn to_json(r: &SweepResults) -> Json {
             if let Some(chunk) = c.cell.prefill_chunk {
                 fields.push(("prefill_chunk", Json::num(chunk as f64)));
             }
+            if let Some(sd) = &c.cell.spec_decode {
+                fields.push(("draft_model", Json::str(sd.draft.clone())));
+                fields.push(("spec_k", Json::num(sd.k as f64)));
+                fields.push(("accept_rate", Json::num(sd.alpha)));
+            }
             Json::obj(fields)
         })
         .collect();
@@ -239,6 +258,15 @@ pub fn to_json(r: &SweepResults) -> Json {
             s.prefill_chunks.iter()
                 .map(|&c| Json::num(c as f64)).collect())));
     }
+    if !s.draft_models.is_empty() {
+        fields.push(("draft_models", Json::Arr(
+            s.draft_models.iter()
+                .map(|m| Json::str(m.clone())).collect())));
+        fields.push(("spec_ks", Json::Arr(
+            s.spec_ks.iter().map(|&k| Json::num(k as f64)).collect())));
+        fields.push(("accept_rates", Json::Arr(
+            s.accept_rates.iter().map(|&a| Json::num(a)).collect())));
+    }
     Json::obj(fields)
 }
 
@@ -250,8 +278,17 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
                                 -> io::Result<()> {
     let s = &r.spec;
     let has_par = !s.tps.is_empty() || !s.pps.is_empty();
+    let has_spec = !s.draft_models.is_empty();
     let mut w = JsonWriter::new(out);
     w.obj(|w| {
+        if has_spec {
+            w.field_arr("accept_rates", |w| {
+                for &a in &s.accept_rates {
+                    w.num(a)?;
+                }
+                Ok(())
+            })?;
+        }
         w.field_arr("batches", |w| {
             for &b in &s.batches {
                 w.num(b as f64)?;
@@ -265,6 +302,10 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
         w.field_arr("cells", |w| {
             for c in &r.cells {
                 w.obj(|w| {
+                    if let Some(sd) = &c.cell.spec_decode {
+                        w.field_num("accept_rate", sd.alpha)?;
+                        w.field_str("draft_model", &sd.draft)?;
+                    }
                     w.field_num("index", c.cell.index as f64)?;
                     if let Some(h) = c.cell.kv_reuse {
                         w.field_num("kv_reuse", h)?;
@@ -282,6 +323,9 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
                     }
                     w.field_str("quant", &c.cell.quant_token())?;
                     w.field_str("seed", &c.cell.seed.to_string())?;
+                    if let Some(sd) = &c.cell.spec_decode {
+                        w.field_num("spec_k", sd.k as f64)?;
+                    }
                     if let Some(p) = c.cell.parallel {
                         w.field_num("tp", p.tp as f64)?;
                     }
@@ -296,6 +340,14 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
             }
             Ok(())
         })?;
+        if has_spec {
+            w.field_arr("draft_models", |w| {
+                for m in &s.draft_models {
+                    w.str(m)?;
+                }
+                Ok(())
+            })?;
+        }
         w.field_bool("energy", s.energy)?;
         if !s.kv_reuse.is_empty() {
             w.field_arr("kv_reuse", |w| {
@@ -349,6 +401,14 @@ pub fn write_json<W: io::Write>(r: &SweepResults, out: W)
             Ok(())
         })?;
         w.field_str("seed", &s.seed.to_string())?;
+        if has_spec {
+            w.field_arr("spec_ks", |w| {
+                for &k in &s.spec_ks {
+                    w.num(k as f64)?;
+                }
+                Ok(())
+            })?;
+        }
         w.field_str("sweep", &s.name)?;
         if has_par {
             w.field_arr("tps", |w| {
@@ -574,6 +634,56 @@ mod tests {
     }
 
     #[test]
+    fn spec_decode_columns_render_in_markdown_and_json() {
+        let s = SweepSpec {
+            models: vec!["llama-3.1-8b".into()],
+            devices: vec!["a6000".into()],
+            batches: vec![1],
+            lens: vec![(64, 32)],
+            draft_models: vec!["llama-3.2-1b".into()],
+            accept_rates: vec![0.2, 0.9],
+            ..SweepSpec::default()
+        };
+        let r = runner::run(&s).unwrap();
+        assert_eq!(r.len(), 2);
+        let text = render_markdown(&r);
+        assert!(text.contains("| Spec |"), "{text}");
+        assert!(text.contains("| llama-3.2-1b k=4 α=0.2 |"), "{text}");
+        assert!(text.contains("| llama-3.2-1b k=4 α=0.9 |"), "{text}");
+        assert!(text.contains("x 2 spec-decode points"), "{text}");
+        let v = Json::parse(&to_json(&r).to_string()).unwrap();
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("draft_model").unwrap().as_str(),
+                   Some("llama-3.2-1b"));
+        assert_eq!(cells[0].get("spec_k").unwrap().as_usize(), Some(4));
+        assert_eq!(cells[0].get("accept_rate").unwrap().as_f64(),
+                   Some(0.2));
+        assert_eq!(cells[1].get("accept_rate").unwrap().as_f64(),
+                   Some(0.9));
+        assert_eq!(v.get("draft_models").unwrap().as_arr().unwrap()
+                   .len(), 1);
+        assert_eq!(v.get("spec_ks").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(v.get("accept_rates").unwrap().as_arr().unwrap()
+                   .len(), 2);
+        // a well-accepted draft makes decode faster per emitted token
+        let t = |i: usize, k: &str| cells[i].get("outcome").unwrap()
+            .get(k).unwrap().as_f64().unwrap();
+        assert!(t(1, "tpot_ms") < t(0, "tpot_ms"),
+                "alpha=0.9 must beat alpha=0.2 on TPOT");
+        // legacy sweeps carry no spec-decode keys anywhere
+        let legacy = results();
+        let lv = Json::parse(&to_json(&legacy).to_string()).unwrap();
+        assert!(lv.get("draft_models").is_none());
+        assert!(lv.get("spec_ks").is_none());
+        assert!(lv.get("accept_rates").is_none());
+        let lc = lv.get("cells").unwrap().as_arr().unwrap();
+        assert!(lc[0].get("draft_model").is_none());
+        assert!(lc[0].get("spec_k").is_none());
+        assert!(lc[0].get("accept_rate").is_none());
+        assert!(!render_markdown(&legacy).contains("| Spec |"));
+    }
+
+    #[test]
     fn stream_json_matches_tree_across_axes() {
         // legacy, quant, parallel, and power-cap sweeps all hit
         // different optional-key paths in the sorted emission order
@@ -617,6 +727,16 @@ mod tests {
                 lens: vec![(64, 32)],
                 kv_reuse: vec![0.0, 0.5],
                 prefill_chunks: vec![32],
+                ..SweepSpec::default()
+            },
+            SweepSpec {
+                models: vec!["llama-3.1-8b".into()],
+                devices: vec!["a6000".into()],
+                batches: vec![1],
+                lens: vec![(64, 32)],
+                draft_models: vec!["llama-3.2-1b".into()],
+                spec_ks: vec![2, 4],
+                accept_rates: vec![0.7],
                 ..SweepSpec::default()
             },
         ];

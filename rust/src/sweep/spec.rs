@@ -70,6 +70,16 @@ pub struct SweepSpec {
     /// chunk axes are innermost of all, so legacy grids keep their
     /// cell indices and per-cell seeds.
     pub prefill_chunks: Vec<usize>,
+    /// Draft models for speculative decoding
+    /// (`--draft-model llama-3.2-1b`). Empty = plain autoregressive
+    /// decode only, bit-identical to the pre-speculation sweep.
+    pub draft_models: Vec<String>,
+    /// Drafted tokens per verify round (`--spec-k 2,4`); defaults to
+    /// [`fields::DEFAULT_SPEC_K`] when drafts are given without it.
+    pub spec_ks: Vec<usize>,
+    /// Acceptance rates in `[0, 1]` (`--accept-rate 0.6,0.8`);
+    /// defaults to [`fields::DEFAULT_ACCEPT_RATE`].
+    pub accept_rates: Vec<f64>,
     /// Measure energy through the sensor-playback pipeline (§2.4).
     pub energy: bool,
     pub unit: MemUnit,
@@ -94,6 +104,9 @@ impl Default for SweepSpec {
             power_caps: Vec::new(),
             kv_reuse: Vec::new(),
             prefill_chunks: Vec::new(),
+            draft_models: Vec::new(),
+            spec_ks: Vec::new(),
+            accept_rates: Vec::new(),
             energy: true,
             unit: MemUnit::Si,
             seed: 0,
@@ -113,6 +126,9 @@ impl SweepSpec {
             power_caps: self.power_caps.clone(),
             kv_reuse: self.kv_reuse.clone(),
             prefill_chunks: self.prefill_chunks.clone(),
+            draft_models: self.draft_models.clone(),
+            spec_ks: self.spec_ks.clone(),
+            accept_rates: self.accept_rates.clone(),
         }
     }
 
@@ -123,6 +139,9 @@ impl SweepSpec {
         self.power_caps = a.power_caps;
         self.kv_reuse = a.kv_reuse;
         self.prefill_chunks = a.prefill_chunks;
+        self.draft_models = a.draft_models;
+        self.spec_ks = a.spec_ks;
+        self.accept_rates = a.accept_rates;
     }
 
     /// The TP×PP mappings every cell expands over (`[None]` when no
@@ -149,12 +168,22 @@ impl SweepSpec {
         self.axes().prefill_chunk_axis()
     }
 
+    /// The speculative-decoding axis, draft-major over
+    /// draft × k × alpha: `[None]` (plain decode) when no drafts were
+    /// given. Innermost of all, so legacy grids keep their cell
+    /// indices and per-cell seeds.
+    pub fn spec_decode_axis(&self)
+                            -> Vec<Option<fields::SpecDecodeSpec>> {
+        self.axes().spec_decode_axis()
+    }
+
     /// Number of cells the grid expands to.
     pub fn n_cells(&self) -> usize {
         self.models.len() * self.devices.len() * self.batches.len()
             * self.lens.len() * self.quants.len()
             * self.parallelisms().len() * self.power_cap_axis().len()
             * self.kv_reuse_axis().len() * self.prefill_chunk_axis().len()
+            * self.spec_decode_axis().len()
     }
 
     /// Validate every axis against the registries before spawning
@@ -187,6 +216,12 @@ impl SweepSpec {
         }
         ensure!(!self.quants.is_empty(),
                 "sweep needs at least one quant scheme");
+        for m in &self.draft_models {
+            if models::lookup(m).is_none() {
+                bail!("unknown draft model `{m}` (known: {})",
+                      models::registry::model_names().join(", "));
+            }
+        }
         self.axes().validate()?;
         // every requested mapping must be hostable on every device —
         // sweep cells all run, so an impossible cell is a spec error,
@@ -217,9 +252,10 @@ impl SweepSpec {
     /// type (a typo'd or wrong-typed key errors instead of silently
     /// running a different grid).
     pub fn parse(text: &str) -> Result<SweepSpec> {
-        const KNOWN_KEYS: [&str; 15] =
+        const KNOWN_KEYS: [&str; 18] =
             ["sweep", "models", "devices", "batches", "lens", "quants",
              "tps", "pps", "power_caps", "kv_reuse", "prefill_chunks",
+             "draft_models", "spec_ks", "accept_rates",
              "energy", "unit", "seed", "threads"];
         let root = Json::parse(text).context("parsing sweep spec JSON")?;
         fields::require_known_keys(fields::root_obj(&root, "sweep spec")?,
@@ -283,6 +319,9 @@ pub struct SweepOverrides {
     pub power_caps: Option<Vec<f64>>,
     pub kv_reuse: Option<Vec<f64>>,
     pub prefill_chunks: Option<Vec<usize>>,
+    pub draft_models: Option<Vec<String>>,
+    pub spec_ks: Option<Vec<usize>>,
+    pub accept_rates: Option<Vec<f64>>,
     pub energy: Option<bool>,
     pub unit: Option<MemUnit>,
     pub seed: Option<u64>,
@@ -321,6 +360,15 @@ impl SweepOverrides {
         }
         if let Some(v) = self.prefill_chunks {
             spec.prefill_chunks = v;
+        }
+        if let Some(v) = self.draft_models {
+            spec.draft_models = v;
+        }
+        if let Some(v) = self.spec_ks {
+            spec.spec_ks = v;
+        }
+        if let Some(v) = self.accept_rates {
+            spec.accept_rates = v;
         }
         if let Some(v) = self.energy {
             spec.energy = v;
@@ -535,6 +583,66 @@ mod tests {
         ov.apply(&mut spec);
         assert_eq!(spec.kv_reuse, vec![0.25]);
         assert_eq!(spec.prefill_chunks, vec![64]);
+    }
+
+    #[test]
+    fn spec_decode_axes_parse_validate_and_multiply_the_grid() {
+        let s = SweepSpec::parse(
+            r#"{"models": ["llama-3.1-8b"], "devices": ["a6000"],
+                "batches": [1], "lens": ["64+32"],
+                "draft_models": ["llama-3.2-1b"],
+                "spec_ks": [2, 4], "accept_rates": [0.6, 0.9]}"#)
+            .unwrap();
+        assert_eq!(s.draft_models, vec!["llama-3.2-1b"]);
+        assert_eq!(s.spec_ks, vec![2, 4]);
+        assert_eq!(s.accept_rates, vec![0.6, 0.9]);
+        assert_eq!(s.n_cells(), 4);
+        s.validate().unwrap();
+        // draft-major expansion with both sub-axes crossed
+        let axis = s.spec_decode_axis();
+        assert_eq!(axis.len(), 4);
+        let first = axis[0].as_ref().unwrap();
+        assert_eq!((first.draft.as_str(), first.k, first.alpha),
+                   ("llama-3.2-1b", 2, 0.6));
+        // legacy grids expand to the single plain-decode cell
+        assert_eq!(SweepSpec::default().spec_decode_axis(), vec![None]);
+        // unknown drafts are rejected with the registry listed
+        let bad = SweepSpec {
+            draft_models: vec!["gpt-17".into()],
+            ..SweepSpec::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown draft model `gpt-17`"), "{err}");
+        // k/alpha sub-axes without a draft are a spec error
+        let bad = SweepSpec {
+            spec_ks: vec![4],
+            ..SweepSpec::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("draft_models"), "{err}");
+        // out-of-range rates are rejected (1.0 itself is legal)
+        let bad = SweepSpec {
+            draft_models: vec!["llama-3.2-1b".into()],
+            accept_rates: vec![1.5],
+            ..SweepSpec::default()
+        };
+        assert!(bad.validate().is_err());
+        let ok = SweepSpec {
+            draft_models: vec!["llama-3.2-1b".into()],
+            accept_rates: vec![1.0],
+            ..SweepSpec::default()
+        };
+        ok.validate().unwrap();
+        // overrides layer the axes like every other flag
+        let ov = SweepOverrides {
+            draft_models: Some(vec!["qwen2.5-1.5b".into()]),
+            spec_ks: Some(vec![3]),
+            ..SweepOverrides::default()
+        };
+        let mut spec = SweepSpec::default();
+        ov.apply(&mut spec);
+        assert_eq!(spec.draft_models, vec!["qwen2.5-1.5b"]);
+        assert_eq!(spec.spec_ks, vec![3]);
     }
 
     #[test]

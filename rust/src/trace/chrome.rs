@@ -7,8 +7,7 @@
 //!
 //! This code lived in `trace::perfetto` through PR 7 — a misnomer,
 //! since what is emitted is Chrome Trace Event JSON (which the Perfetto
-//! UI merely *reads*), not a Perfetto protobuf. `trace::perfetto`
-//! remains as a deprecated re-export of this module.
+//! UI merely *reads*), not a Perfetto protobuf.
 
 use std::io;
 
@@ -170,13 +169,5 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_file(&path).unwrap();
-    }
-
-    #[test]
-    fn deprecated_perfetto_alias_still_resolves() {
-        // old import paths keep compiling through the re-export
-        let s = crate::trace::perfetto::to_chrome_trace_json(
-            &sample_recorder(), "elana");
-        assert_eq!(s, to_chrome_trace_json(&sample_recorder(), "elana"));
     }
 }

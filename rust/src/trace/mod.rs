@@ -4,13 +4,12 @@
 //! Reproduces ELANA §2.5 / Figure 1: profiling runs record spans (real
 //! engine phases, plus hwsim-synthesized kernel timelines) into a
 //! `TraceRecorder`; `chrome` serializes the Chrome Trace Event JSON
-//! that https://ui.perfetto.dev renders (`perfetto` remains as a
-//! deprecated alias); `hta` computes the Holistic Trace Analysis style
-//! summaries (top kernels, category breakdown, idle share).
+//! that https://ui.perfetto.dev renders; `hta` computes the Holistic
+//! Trace Analysis style summaries (top kernels, category breakdown,
+//! idle share).
 
 pub mod chrome;
 pub mod hta;
-pub mod perfetto;
 pub mod recorder;
 
 pub use chrome::to_chrome_trace_json;

@@ -193,8 +193,62 @@ pub fn seed_field(root: &Json, key: &str) -> Result<Option<u64>> {
     }
 }
 
+/// Default drafted tokens per verify step when a `spec_decode` block
+/// (or draft-model axis) omits `k`.
+pub const DEFAULT_SPEC_K: usize = 4;
+/// Default per-token acceptance rate when `alpha` is omitted.
+pub const DEFAULT_ACCEPT_RATE: f64 = 0.7;
+
+/// A speculative-decoding scenario: a small draft model proposes `k`
+/// tokens per round and the target model verifies them in one
+/// batched-prefill-shaped step, accepting each drafted token
+/// independently with probability `alpha`.
+///
+/// Parsed from a `"spec_decode"` object by [`spec_decode_block`];
+/// shared verbatim by ProfileSpec, ServeSpec, ClusterSpec, and the
+/// sweep grid so the block reads identically everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecDecodeSpec {
+    /// Draft model registry name (e.g. `"llama-3.2-1b"`).
+    pub draft: String,
+    /// Drafted tokens per verify step; `0` disables speculation
+    /// (byte-identical to omitting the block).
+    pub k: usize,
+    /// Per-token acceptance rate, in `[0, 1]` inclusive — `1.0` is the
+    /// every-draft-accepted limit, which is a meaningful bound (unlike
+    /// `kv_reuse`, where 1.0 would mean "no work").
+    pub alpha: f64,
+}
+
+/// Check an acceptance rate: finite and in `[0, 1]` inclusive.
+fn check_accept_rate(key: &str, v: f64) -> Result<()> {
+    ensure!(v.is_finite() && (0.0..=1.0).contains(&v),
+            "`{key}` must be an acceptance rate in [0, 1] (got {v})");
+    Ok(())
+}
+
+/// Optional `"spec_decode"` block: `{"draft": <model>, "k": <int>,
+/// "alpha": <rate>}`. `draft` is required; `k` defaults to
+/// [`DEFAULT_SPEC_K`] and `alpha` to [`DEFAULT_ACCEPT_RATE`].
+/// Registry lookup of the draft name stays with the owning spec.
+pub fn spec_decode_block(root: &Json) -> Result<Option<SpecDecodeSpec>> {
+    let Some(v) = root.get("spec_decode") else { return Ok(None) };
+    let obj = v.as_obj().ok_or_else(|| {
+        anyhow!("`spec_decode` must be a JSON object")
+    })?;
+    require_known_keys(obj, &["draft", "k", "alpha"], "`spec_decode`")?;
+    let draft = string_field(v, "draft")?.ok_or_else(|| {
+        anyhow!("`spec_decode` needs a `draft` model name")
+    })?;
+    let k = usize_field(v, "k")?.unwrap_or(DEFAULT_SPEC_K);
+    let alpha = f64_field(v, "alpha")?.unwrap_or(DEFAULT_ACCEPT_RATE);
+    check_accept_rate("alpha", alpha)?;
+    Ok(Some(SpecDecodeSpec { draft, k, alpha }))
+}
+
 /// The shared scenario grid axes: quant schemes, TP×PP mappings,
-/// power caps, prefix-KV-reuse hit rates, and prefill chunk sizes.
+/// power caps, prefix-KV-reuse hit rates, prefill chunk sizes, and
+/// speculative-decoding (draft × k × alpha) points.
 ///
 /// Sweep, plan, and tune each expanded quant/tp/pp/power-cap grids with
 /// their own copies of the same parsing, expansion, and validation
@@ -222,14 +276,22 @@ pub struct AxisGrid {
     pub kv_reuse: Vec<f64>,
     /// Chunked-prefill chunk sizes, tokens.
     pub prefill_chunks: Vec<usize>,
+    /// Speculative-decoding draft model names; empty disables the axis.
+    pub draft_models: Vec<String>,
+    /// Drafted tokens per verify step (`k`); empty defaults to
+    /// `[DEFAULT_SPEC_K]` when draft models are given.
+    pub spec_ks: Vec<usize>,
+    /// Per-token acceptance rates (`alpha`), each in `[0, 1]`; empty
+    /// defaults to `[DEFAULT_ACCEPT_RATE]` when draft models are given.
+    pub accept_rates: Vec<f64>,
 }
 
 impl AxisGrid {
     /// The JSON keys this grid reads — splice into a spec's
     /// `KNOWN_KEYS` listing.
-    pub const KEYS: [&'static str; 6] =
+    pub const KEYS: [&'static str; 9] =
         ["quants", "tps", "pps", "power_caps", "kv_reuse",
-         "prefill_chunks"];
+         "prefill_chunks", "draft_models", "spec_ks", "accept_rates"];
 
     /// Read every grid axis present in `root`; absent keys keep the
     /// current (default) axis.
@@ -251,6 +313,15 @@ impl AxisGrid {
         }
         if let Some(v) = usize_list(root, "prefill_chunks")? {
             self.prefill_chunks = v;
+        }
+        if let Some(v) = string_list(root, "draft_models")? {
+            self.draft_models = v;
+        }
+        if let Some(v) = usize_list(root, "spec_ks")? {
+            self.spec_ks = v;
+        }
+        if let Some(v) = f64_list(root, "accept_rates", "rate")? {
+            self.accept_rates = v;
         }
         Ok(())
     }
@@ -290,6 +361,40 @@ impl AxisGrid {
         }
     }
 
+    /// The speculative-decoding axis: `[None]` (plain autoregressive
+    /// decode) when no draft models were given, otherwise the
+    /// draft-major cross product draft × k × alpha, with `spec_ks`
+    /// defaulting to `[DEFAULT_SPEC_K]` and `accept_rates` to
+    /// `[DEFAULT_ACCEPT_RATE]`.
+    pub fn spec_decode_axis(&self) -> Vec<Option<SpecDecodeSpec>> {
+        if self.draft_models.is_empty() {
+            return vec![None];
+        }
+        let ks: Vec<usize> = if self.spec_ks.is_empty() {
+            vec![DEFAULT_SPEC_K]
+        } else {
+            self.spec_ks.clone()
+        };
+        let alphas: Vec<f64> = if self.accept_rates.is_empty() {
+            vec![DEFAULT_ACCEPT_RATE]
+        } else {
+            self.accept_rates.clone()
+        };
+        let mut axis = Vec::new();
+        for draft in &self.draft_models {
+            for &k in &ks {
+                for &alpha in &alphas {
+                    axis.push(Some(SpecDecodeSpec {
+                        draft: draft.clone(),
+                        k,
+                        alpha,
+                    }));
+                }
+            }
+        }
+        axis
+    }
+
     /// Range-check every axis entry (registry lookups stay with the
     /// owning spec, which knows its models/devices).
     pub fn validate(&self) -> Result<()> {
@@ -312,6 +417,14 @@ impl AxisGrid {
         }
         for &c in &self.prefill_chunks {
             ensure!(c >= 1, "prefill chunks must be >= 1 token");
+        }
+        if self.draft_models.is_empty() {
+            ensure!(self.spec_ks.is_empty() && self.accept_rates.is_empty(),
+                    "`spec_ks`/`accept_rates` need `draft_models` \
+                     (speculation has no effect without a draft model)");
+        }
+        for &a in &self.accept_rates {
+            check_accept_rate("accept_rates", a)?;
         }
         Ok(())
     }
@@ -372,6 +485,85 @@ mod tests {
         let err = g.read(&parse(r#"{"tps": "2"}"#))
             .unwrap_err().to_string();
         assert!(err.contains("`tps` must be an array"), "{err}");
+    }
+
+    #[test]
+    fn spec_decode_block_parses_defaults_and_rejects_bad_shapes() {
+        assert_eq!(spec_decode_block(&parse(r#"{"model": "x"}"#)).unwrap(),
+                   None);
+        let sd = spec_decode_block(&parse(
+            r#"{"spec_decode": {"draft": "llama-3.2-1b"}}"#))
+            .unwrap().unwrap();
+        assert_eq!(sd.draft, "llama-3.2-1b");
+        assert_eq!(sd.k, DEFAULT_SPEC_K);
+        assert_eq!(sd.alpha, DEFAULT_ACCEPT_RATE);
+        let sd = spec_decode_block(&parse(
+            r#"{"spec_decode":
+                {"draft": "d", "k": 6, "alpha": 1.0}}"#))
+            .unwrap().unwrap();
+        assert_eq!((sd.k, sd.alpha), (6, 1.0));
+
+        for (bad, msg) in [
+            (r#"{"spec_decode": "fast"}"#, "must be a JSON object"),
+            (r#"{"spec_decode": {}}"#, "needs a `draft`"),
+            (r#"{"spec_decode": {"draft": "d", "alpha": 1.5}}"#,
+             "acceptance rate in [0, 1]"),
+            (r#"{"spec_decode": {"draft": "d", "alpha": -0.1}}"#,
+             "acceptance rate in [0, 1]"),
+            (r#"{"spec_decode": {"draft": "d", "k": -1}}"#,
+             "non-negative integer"),
+            (r#"{"spec_decode": {"draft": "d", "kk": 4}}"#,
+             "unknown key `kk`"),
+        ] {
+            let err = spec_decode_block(&parse(bad))
+                .unwrap_err().to_string();
+            assert!(err.contains(msg), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn spec_decode_axis_expands_draft_major_with_defaults() {
+        let mut g = AxisGrid::default();
+        assert_eq!(g.spec_decode_axis(), vec![None]);
+
+        g.read(&parse(r#"{"draft_models": ["d1", "d2"]}"#)).unwrap();
+        g.validate().unwrap();
+        let axis = g.spec_decode_axis();
+        assert_eq!(axis.len(), 2);
+        let first = axis[0].as_ref().unwrap();
+        assert_eq!((first.k, first.alpha),
+                   (DEFAULT_SPEC_K, DEFAULT_ACCEPT_RATE));
+
+        g.read(&parse(
+            r#"{"spec_ks": [2, 4], "accept_rates": [0.5, 0.9]}"#))
+            .unwrap();
+        g.validate().unwrap();
+        let axis = g.spec_decode_axis();
+        assert_eq!(axis.len(), 8);
+        // draft-major, then k, alpha innermost
+        let labels: Vec<_> = axis.iter()
+            .map(|s| {
+                let s = s.as_ref().unwrap();
+                (s.draft.clone(), s.k, s.alpha)
+            })
+            .collect();
+        assert_eq!(labels[0], ("d1".into(), 2, 0.5));
+        assert_eq!(labels[1], ("d1".into(), 2, 0.9));
+        assert_eq!(labels[2], ("d1".into(), 4, 0.5));
+        assert_eq!(labels[4], ("d2".into(), 2, 0.5));
+
+        // speculation knobs without a draft model are a spec error
+        let mut bare = AxisGrid::default();
+        bare.read(&parse(r#"{"spec_ks": [4]}"#)).unwrap();
+        let err = bare.validate().unwrap_err().to_string();
+        assert!(err.contains("need `draft_models`"), "{err}");
+        // out-of-range acceptance rates are caught by validate
+        let mut bad = AxisGrid::default();
+        bad.read(&parse(
+            r#"{"draft_models": ["d"], "accept_rates": [1.5]}"#))
+            .unwrap();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("acceptance rate in [0, 1]"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Speculative-decoding acceptance: specs without a `spec_decode`
+//! block must render the exact pre-speculation artifact at any worker
+//! count, `k: 0` must be bitwise identical to omitting the block,
+//! raising the acceptance rate must monotonically improve TPOT, the
+//! dual-model KV footprint must respect the fit budget, and the spec
+//! parsers must never panic on hostile JSON around the new block.
+
+use elana::coordinator::{report, simulate, Arrivals, ServeSpec};
+use elana::gateway::{self, ClusterSpec};
+use elana::hwsim::device;
+use elana::models;
+use elana::planner::FitModel;
+use elana::sweep::SweepSpec;
+use elana::testkit::property;
+use elana::util::json::Json;
+use elana::util::spec::SpecDecodeSpec;
+use elana::util::Rng;
+
+fn base_spec() -> ServeSpec {
+    ServeSpec {
+        requests: 24,
+        arrivals: Arrivals::Poisson { rate_rps: 20.0 },
+        prompt_lo: 16,
+        prompt_hi: 64,
+        gen_len: 16,
+        seed: 7,
+        ..ServeSpec::default()
+    }
+}
+
+fn spec_decode(k: usize, alpha: f64) -> SpecDecodeSpec {
+    SpecDecodeSpec { draft: "llama-3.2-1b".to_string(), k, alpha }
+}
+
+fn small_cluster() -> ClusterSpec {
+    let mut spec = ClusterSpec { seed: 7, replicas: 1,
+                                 ..ClusterSpec::default() };
+    for t in &mut spec.tenants {
+        t.requests = 12;
+        t.gen_len = 8;
+    }
+    spec
+}
+
+/// (streamed JSON, tree JSON, markdown) of one serve run.
+fn serve_artifacts(spec: &ServeSpec) -> (Vec<u8>, String, String) {
+    let o = simulate::run(spec).unwrap();
+    let mut buf = Vec::new();
+    report::write_json(&o, &mut buf).unwrap();
+    (buf, report::to_json(&o).to_string(), report::render_markdown(&o))
+}
+
+/// (streamed JSON, tree JSON, markdown) of one cluster run.
+fn cluster_artifacts(spec: &ClusterSpec) -> (Vec<u8>, String, String) {
+    let o = gateway::run(spec).unwrap();
+    let mut buf = Vec::new();
+    gateway::report::write_json(&o, &mut buf).unwrap();
+    (buf, gateway::report::to_json(&o).to_string(),
+     gateway::report::render_markdown(&o))
+}
+
+// ---------------- legacy artifacts stay legacy ----------------
+
+/// A serve spec without `spec_decode` renders the PR 9 artifact: no
+/// speculative key appears anywhere, and the bytes are invariant
+/// across worker counts (streamed == tree emitter).
+#[test]
+fn serve_without_spec_decode_renders_the_legacy_artifact() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 4]
+        .iter()
+        .map(|&workers| {
+            serve_artifacts(&ServeSpec { workers, ..base_spec() })
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    for key in ["spec_decode", "draft", "verify", "accepted"] {
+        assert!(!runs[0].1.contains(key),
+                "legacy serve JSON must not mention `{key}`");
+    }
+    assert!(!runs[0].2.contains("speculative"));
+}
+
+/// The same contract at the gateway.
+#[test]
+fn cluster_without_spec_decode_renders_the_legacy_artifact() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 4]
+        .iter()
+        .map(|&workers| {
+            cluster_artifacts(&ClusterSpec { workers, ..small_cluster() })
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    for key in ["spec_decode", "draft", "verify", "accepted"] {
+        assert!(!runs[0].1.contains(key),
+                "legacy cluster JSON must not mention `{key}`");
+    }
+}
+
+/// `k: 0` disables speculation entirely: every artifact byte matches
+/// the block-free run, serve and cluster alike.
+#[test]
+fn k_zero_is_bitwise_identical_to_no_spec_decode() {
+    let plain = serve_artifacts(&base_spec());
+    let zero = serve_artifacts(&ServeSpec {
+        spec_decode: Some(spec_decode(0, 0.9)),
+        ..base_spec()
+    });
+    assert_eq!(plain.0, zero.0, "serve streamed JSON");
+    assert_eq!(plain.1, zero.1, "serve tree JSON");
+    assert_eq!(plain.2, zero.2, "serve markdown");
+
+    let plain = cluster_artifacts(&small_cluster());
+    let zero = cluster_artifacts(&ClusterSpec {
+        spec_decode: Some(spec_decode(0, 0.9)),
+        ..small_cluster()
+    });
+    assert_eq!(plain.0, zero.0, "cluster streamed JSON");
+    assert_eq!(plain.1, zero.1, "cluster tree JSON");
+    assert_eq!(plain.2, zero.2, "cluster markdown");
+}
+
+// ---------------- the speculative artifact ----------------
+
+/// A draft-model serve run is worker-invariant, stream == tree, and
+/// reports the TPOT draft/verify decomposition end to end: the root
+/// `spec_decode` block, per-batch draft/verify seconds, and the
+/// markdown split line.
+#[test]
+fn spec_decode_serve_report_is_worker_invariant_and_split() {
+    let runs: Vec<(Vec<u8>, String, String)> = [1usize, 3]
+        .iter()
+        .map(|&workers| {
+            serve_artifacts(&ServeSpec {
+                workers,
+                spec_decode: Some(spec_decode(4, 0.8)),
+                ..base_spec()
+            })
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0,
+               "streamed JSON must not depend on the worker count");
+    assert_eq!(runs[0].2, runs[1].2,
+               "markdown must not depend on the worker count");
+    assert_eq!(runs[0].0, runs[0].1.as_bytes(),
+               "streamed JSON must match the tree emitter byte for byte");
+    let v = Json::parse(&runs[0].1).unwrap();
+    let sd = v.get("spec_decode").expect("root spec_decode block");
+    assert_eq!(sd.get("draft").unwrap().as_str(), Some("llama-3.2-1b"));
+    assert_eq!(sd.get("k").unwrap().as_usize(), Some(4));
+    let acc = sd.get("accepted_per_target_step").unwrap()
+        .as_f64().unwrap();
+    let want = (1.0 - 0.8f64.powi(5)) / (1.0 - 0.8);
+    assert!((acc - want).abs() < 1e-12, "{acc} vs {want}");
+    assert!(sd.get("draft_seconds").unwrap().as_f64().unwrap() > 0.0);
+    assert!(sd.get("verify_seconds").unwrap().as_f64().unwrap() > 0.0);
+    assert!(sd.get("j_per_token_draft").unwrap().as_f64().unwrap() > 0.0);
+    assert!(sd.get("j_per_token_verify").unwrap().as_f64().unwrap()
+                > 0.0);
+    let batches = v.get("batches").unwrap().as_arr().unwrap();
+    assert!(batches.iter().any(|b| {
+        b.get("spec_decode_draft_s").and_then(|x| x.as_f64())
+            .is_some_and(|x| x > 0.0)
+    }));
+    assert!(runs[0].2.contains("TPOT split:"),
+            "markdown must print the draft/verify TPOT split");
+    assert!(runs[0].2.contains("speculative decoding: draft"));
+}
+
+// ---------------- acceptance-rate monotonicity ----------------
+
+/// At fixed k, raising alpha accepts more drafted tokens per verify
+/// round, so the mean client TPOT strictly falls — all the way to the
+/// alpha = 1 every-token-accepted limit. A light arrival rate keeps
+/// queueing out of the picture.
+#[test]
+fn alpha_monotonically_improves_tpot() {
+    let mut prev = f64::INFINITY;
+    for alpha in [0.2, 0.5, 0.8, 0.95, 1.0] {
+        let spec = ServeSpec {
+            requests: 16,
+            arrivals: Arrivals::Poisson { rate_rps: 2.0 },
+            spec_decode: Some(spec_decode(4, alpha)),
+            ..base_spec()
+        };
+        let o = simulate::run(&spec).unwrap();
+        let tpot = o.requests.iter().map(|r| r.tpot_s).sum::<f64>()
+            / o.requests.len() as f64;
+        assert!(tpot < prev, "alpha={alpha}: TPOT {tpot} !< {prev}");
+        prev = tpot;
+    }
+}
+
+// ---------------- dual-model KV vs the fit budget ----------------
+
+/// Folding the draft into the fit never lets a "fitting" operating
+/// point exceed the budget: the dual-model footprint is strictly
+/// larger, the solved max batch never grows, and whatever batch the
+/// dual fit reports still fits its own required-bytes accounting.
+#[test]
+fn dual_model_kv_respects_the_fit_budget() {
+    let target = models::lookup("llama-3.1-8b").unwrap();
+    let draft = models::lookup("llama-3.2-1b").unwrap();
+    let rig = device::rig_by_name("a6000").unwrap();
+    let solo = FitModel::with_parallel(&target, None, &rig, None);
+    let dual = FitModel::with_parallel(&target, None, &rig, None)
+        .with_draft(&draft, None, None);
+    for seq_len in [1024usize, 4096] {
+        assert!(dual.required_bytes(1, seq_len)
+                    > solo.required_bytes(1, seq_len),
+                "the draft must add resident bytes");
+        let b_solo = solo.max_batch(seq_len);
+        let b_dual = dual.max_batch(seq_len);
+        assert!(b_dual <= b_solo,
+                "dual-model max batch {b_dual} > solo {b_solo}");
+        assert!(b_dual >= 1, "the 1B draft still leaves room at {seq_len}");
+        assert!(dual.required_bytes(b_dual, seq_len)
+                    <= dual.budget_bytes,
+                "fitted batch must fit the budget");
+        assert!(!dual.fits(b_dual + 1, seq_len) || b_dual == b_solo,
+                "max_batch must be maximal");
+    }
+}
+
+/// A deployment whose draft + target weights cannot both fit is
+/// rejected up front by validation, while the same deployment without
+/// the draft passes: a w4a16 8B fits an 8 GB Orin alone, but a
+/// draft as large as the target blows the dual-model budget.
+#[test]
+fn unfittable_draft_pair_is_rejected() {
+    let solo = ServeSpec {
+        model: "llama-3.1-8b".to_string(),
+        device: "orin".to_string(),
+        quant: "w4a16".to_string(),
+        ..base_spec()
+    };
+    solo.validate().expect("the w4a16 8B fits an Orin alone");
+    let dual = ServeSpec {
+        spec_decode: Some(SpecDecodeSpec {
+            draft: "llama-3.1-8b".to_string(),
+            k: 4,
+            alpha: 0.8,
+        }),
+        ..solo
+    };
+    let err = dual.validate().expect_err(
+        "draft weights + KV must count against the same budget");
+    assert!(format!("{err:#}").contains("draft"),
+            "the error names the draft: {err:#}");
+
+    // a genuinely small draft keeps the same deployment feasible
+    let small = ServeSpec {
+        spec_decode: Some(spec_decode(4, 0.8)),
+        model: "llama-3.1-8b".to_string(),
+        device: "orin".to_string(),
+        quant: "w4a16".to_string(),
+        ..base_spec()
+    };
+    small.validate().expect("a 1B draft co-fits the Orin");
+}
+
+// ---------------- the parsers under fire ----------------
+
+/// Valid specs exercising the new block/axes; the fuzzers mutate them,
+/// and the sanity check parses + validates them verbatim.
+const SERVE_TMPL: &str = r#"{
+    "model": "llama-3.1-8b", "device": "a6000", "requests": 24,
+    "rate_rps": 20, "prompt_lo": 16, "prompt_hi": 64, "gen_len": 16,
+    "seed": 7, "energy": true, "quant": "w4a16",
+    "spec_decode": {"draft": "llama-3.2-1b", "k": 4, "alpha": 0.8}
+}"#;
+
+const CLUSTER_TMPL: &str = r#"{
+    "replicas": 1, "seed": 3, "kv_reuse": 0.25,
+    "spec_decode": {"draft": "llama-3.2-1b", "alpha": 1.0}
+}"#;
+
+const SWEEP_TMPL: &str = r#"{
+    "models": ["llama-3.1-8b"], "devices": ["a6000"], "batches": [1],
+    "lens": ["64+32"], "draft_models": ["llama-3.2-1b"],
+    "spec_ks": [2, 4], "accept_rates": [0.6, 0.9]
+}"#;
+
+#[test]
+fn templates_parse_and_validate_verbatim() {
+    ServeSpec::parse(SERVE_TMPL).unwrap().validate().unwrap();
+    ClusterSpec::parse(CLUSTER_TMPL).unwrap().validate().unwrap();
+    SweepSpec::parse(SWEEP_TMPL).unwrap().validate().unwrap();
+}
+
+/// Random byte-level damage around the new block: every mutant must
+/// come back as `Ok` or `Err` — a panic fails the test by unwinding.
+#[test]
+fn prop_spec_parsers_never_panic_on_mutated_json() {
+    const INSERTS: [&str; 10] =
+        ["{", "}", "\"", ":", ",", "[", "]", "null", "1e309", "-"];
+    property(400, |rng: &mut Rng| {
+        let tmpl = [SERVE_TMPL, CLUSTER_TMPL, SWEEP_TMPL]
+            [rng.usize_in(0, 2)];
+        let mut bytes = tmpl.as_bytes().to_vec();
+        for _ in 0..rng.usize_in(1, 8) {
+            match rng.usize_in(0, 3) {
+                0 => bytes.truncate(rng.usize_in(0, bytes.len())),
+                1 if !bytes.is_empty() => {
+                    let i = rng.usize_in(0, bytes.len() - 1);
+                    bytes[i] = 32 + (rng.next_u64() % 95) as u8;
+                }
+                2 => {
+                    let tok = INSERTS[rng.usize_in(0, INSERTS.len() - 1)];
+                    let i = rng.usize_in(0, bytes.len());
+                    bytes.splice(i..i, tok.bytes());
+                }
+                _ if !bytes.is_empty() => {
+                    bytes.remove(rng.usize_in(0, bytes.len() - 1));
+                }
+                _ => {}
+            }
+        }
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        if let Ok(s) = ServeSpec::parse(&text) {
+            let _ = s.validate();
+        }
+        if let Ok(c) = ClusterSpec::parse(&text) {
+            let _ = c.validate();
+        }
+        if let Ok(w) = SweepSpec::parse(&text) {
+            let _ = w.validate();
+        }
+    });
+}
+
+/// Structurally valid but arbitrarily shaped JSON mixing the
+/// speculative keys with hostile values: reject or accept, never
+/// panic.
+#[test]
+fn prop_spec_parsers_never_panic_on_random_json_trees() {
+    const KEYS: [&str; 14] = ["model", "device", "spec_decode", "draft",
+                              "k", "alpha", "draft_models", "spec_ks",
+                              "accept_rates", "seed", "requests",
+                              "replicas", "tenants", "banana"];
+    const STRS: [&str; 6] = ["llama-3.1-8b", "llama-3.2-1b", "a6000",
+                             "", "native", "nope"];
+    fn value(rng: &mut Rng, depth: usize) -> String {
+        match rng.usize_in(0, if depth == 0 { 3 } else { 5 }) {
+            0 => format!("{}", rng.f64_in(-1e12, 1e12)),
+            1 => format!("{}", rng.usize_in(0, 1 << 20)),
+            2 => format!("\"{}\"", STRS[rng.usize_in(0, STRS.len() - 1)]),
+            3 => ["true", "false", "null"][rng.usize_in(0, 2)].to_string(),
+            4 => {
+                let items: Vec<String> = (0..rng.usize_in(0, 3))
+                    .map(|_| value(rng, depth - 1))
+                    .collect();
+                format!("[{}]", items.join(","))
+            }
+            _ => obj(rng, depth - 1),
+        }
+    }
+    fn obj(rng: &mut Rng, depth: usize) -> String {
+        let fields: Vec<String> = (0..rng.usize_in(0, 5))
+            .map(|_| {
+                format!("\"{}\":{}", KEYS[rng.usize_in(0, KEYS.len() - 1)],
+                        value(rng, depth))
+            })
+            .collect();
+        format!("{{{}}}", fields.join(","))
+    }
+    property(400, |rng: &mut Rng| {
+        let text = obj(rng, 3);
+        if let Ok(s) = ServeSpec::parse(&text) {
+            let _ = s.validate();
+        }
+        if let Ok(c) = ClusterSpec::parse(&text) {
+            let _ = c.validate();
+        }
+        if let Ok(w) = SweepSpec::parse(&text) {
+            let _ = w.validate();
+        }
+    });
+}

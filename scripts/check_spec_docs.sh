@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Docs-consistency gate: every JSON key the spec parsers accept must be
+# documented in docs/SPECS.md as a backticked `key`.
+#
+# The accepted-key sets are read straight out of the source: the
+# `const KNOWN_KEYS` / `const KNOWN` arrays each parser validates
+# against, plus the inline `require_known_keys(.., &[..], ..)` lists
+# used by sub-block readers (spec_decode, arrivals, ...). Adding a spec
+# key without documenting it fails this script — and CI.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python3 - <<'PY'
+import re
+import sys
+from pathlib import Path
+
+SOURCES = [
+    "rust/src/profiler/spec.rs",
+    "rust/src/sweep/spec.rs",
+    "rust/src/planner/spec.rs",
+    "rust/src/tune/spec.rs",
+    "rust/src/coordinator/spec.rs",
+    "rust/src/gateway/spec.rs",
+    "rust/src/util/spec.rs",
+]
+
+CONST_RE = re.compile(
+    r"const\s+KNOWN(?:_KEYS)?\s*:\s*\[\s*&str\s*;\s*\d+\s*\]\s*=\s*"
+    r"\[(.*?)\]\s*;",
+    re.S,
+)
+# Inline lists: require_known_keys(obj, &["a", "b"], "what").
+# [^;]*? keeps the scan inside one statement, so calls that pass a
+# named const (no bracket before the `;`) simply don't match.
+INLINE_RE = re.compile(r"require_known_keys\s*\([^;]*?&\[([^\]]*)\]",
+                       re.S)
+STRING_RE = re.compile(r'"([^"]+)"')
+KEY_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+
+keys = {}
+for src in SOURCES:
+    text = Path(src).read_text()
+    bodies = [m.group(1) for m in CONST_RE.finditer(text)]
+    bodies += [m.group(1) for m in INLINE_RE.finditer(text)]
+    for body in bodies:
+        for key in STRING_RE.findall(body):
+            if KEY_RE.match(key):
+                keys.setdefault(key, src)
+
+if len(keys) < 50:
+    sys.exit(f"extracted only {len(keys)} spec keys — the extraction "
+             "regexes no longer match the source; fix the script")
+
+docs = Path("docs/SPECS.md").read_text()
+missing = sorted(k for k in keys if f"`{k}`" not in docs)
+if missing:
+    for k in missing:
+        print(f"MISSING: `{k}` (accepted by {keys[k]}) is not "
+              "documented in docs/SPECS.md", file=sys.stderr)
+    sys.exit(1)
+print(f"docs/SPECS.md documents all {len(keys)} spec keys accepted "
+      "by the parsers")
+PY
